@@ -1,0 +1,46 @@
+//! Crystal database queries — runs all 13 SSB-style queries through
+//! CuPBoP (the only framework covering them, Table II) and prints the
+//! per-framework coverage verdicts alongside.
+//!
+//! Run: `cargo run --release --example crystal_db`
+
+use cupbop::benchsuite::spec::{self, Backend, Scale, Suite};
+use cupbop::compiler::coverage::{judge, Framework};
+use cupbop::frameworks::{BackendCfg, ExecMode};
+use std::collections::BTreeSet;
+
+fn main() {
+    println!(
+        "{:<6} {:>12} {:>11} {:>11} {:>11}",
+        "query", "CuPBoP time", "CuPBoP", "HIP-CPU", "DPC++"
+    );
+    for b in spec::all_benchmarks() {
+        if b.suite != Suite::Crystal {
+            continue;
+        }
+        let feats: BTreeSet<_> = b.features.iter().copied().collect();
+        let verdicts: Vec<&str> = [Framework::CuPBoP, Framework::HipCpu, Framework::Dpcpp]
+            .into_iter()
+            .map(|fw| judge(fw, &feats, b.incorrect_on).label())
+            .collect();
+        let built = spec::build_program(&b, Scale::Small);
+        let out = spec::run_on(
+            &built,
+            Backend::CuPBoP,
+            BackendCfg { exec: ExecMode::Native, ..Default::default() },
+        );
+        let time = match out.check {
+            Ok(()) => format!("{:?}", out.elapsed),
+            Err(e) => {
+                eprintln!("{}: {e}", b.name);
+                "FAIL".to_string()
+            }
+        };
+        println!(
+            "{:<6} {:>12} {:>11} {:>11} {:>11}",
+            b.name, time, verdicts[0], verdicts[1], verdicts[2]
+        );
+    }
+    println!("\n(q11-q13 need warp shuffle → HIP-CPU unsupported; all queries");
+    println!(" need atomicCAS → DPC++ unsupported on CPU — Table II)");
+}

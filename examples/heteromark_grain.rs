@@ -1,0 +1,53 @@
+//! Hetero-Mark grain-size explorer — the Table V experiment as an
+//! interactive example: sweeps `block_per_fetch` for the single-kernel
+//! Hetero-Mark benchmarks and marks the average-fetching grain (red in
+//! the paper) and the best aggressive grain (green in the paper).
+//!
+//! Run: `cargo run --release --example heteromark_grain`
+
+use cupbop::benchsuite::spec::{self, Backend, Scale};
+use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode};
+use cupbop::runtime::GrainPolicy;
+
+const GRAINS: [u64; 7] = [1, 2, 4, 8, 16, 24, 32];
+
+fn main() {
+    let pool = 8usize;
+    println!("pool = {pool} threads; times in ms (Table V shape)");
+    print!("{:<16}", "bench");
+    for g in GRAINS {
+        print!(" {g:>9}");
+    }
+    println!("  avg-grain");
+    for name in ["bs", "fir", "ga", "hist", "hist-no-atomic", "pr", "aes"] {
+        let b = spec::by_name(name).unwrap();
+        let built = spec::build_program(&b, Scale::Small);
+        let mut row = format!("{name:<16}");
+        let mut best = (f64::MAX, 0u64);
+        for g in GRAINS {
+            let out = spec::run_on(
+                &built,
+                Backend::CuPBoP,
+                BackendCfg {
+                    pool_size: pool,
+                    policy: PolicyMode::Fixed(g),
+                    exec: ExecMode::Native,
+                    ..Default::default()
+                },
+            );
+            let ms = out.elapsed.as_secs_f64() * 1e3;
+            if out.check.is_err() {
+                row.push_str(&format!(" {:>9}", "FAIL"));
+                continue;
+            }
+            if ms < best.0 {
+                best = (ms, g);
+            }
+            row.push_str(&format!(" {ms:>9.3}"));
+        }
+        // what average fetching would pick for this benchmark's launch
+        let grid = 64u64; // the single-kernel Hetero-Mark grid size
+        let avg = GrainPolicy::Average.block_per_fetch(grid, pool as u64);
+        println!("{row}  avg={avg} best@{}", best.1);
+    }
+}

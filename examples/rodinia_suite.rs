@@ -1,0 +1,42 @@
+//! Rodinia suite driver — runs every implemented Rodinia benchmark on
+//! all four backends and prints a Table IV-shaped comparison, with the
+//! paper's published seconds alongside for shape comparison.
+//!
+//! Run: `cargo run --release --example rodinia_suite [-- --scale small]`
+
+use cupbop::benchsuite::spec::{self, Backend, Scale, Suite};
+use cupbop::frameworks::{BackendCfg, ExecMode};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "tiny") { Scale::Tiny } else { Scale::Small };
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>10}   paper: cupbop/dpcpp/hip (s)",
+        "benchmark", "Reference", "CuPBoP", "DPC++", "HIP-CPU"
+    );
+    for b in spec::all_benchmarks() {
+        if b.suite != Suite::Rodinia || b.build.is_none() {
+            continue;
+        }
+        let built = spec::build_program(&b, scale);
+        let mut cols = Vec::new();
+        for backend in [Backend::Reference, Backend::CuPBoP, Backend::Dpcpp, Backend::HipCpu] {
+            let out = spec::run_on(
+                &built,
+                backend,
+                BackendCfg { exec: ExecMode::Native, ..Default::default() },
+            );
+            match out.check {
+                Ok(()) => cols.push(format!("{:>10.3?}", out.elapsed)),
+                Err(e) => {
+                    cols.push(format!("{:>10}", "FAIL"));
+                    eprintln!("{} [{}]: {e}", b.name, backend.name());
+                }
+            }
+        }
+        let paper = b
+            .paper_secs
+            .map(|p| format!("{:.2}/{:.2}/{:.2}", p.cupbop, p.dpcpp, p.hip))
+            .unwrap_or_default();
+        println!("{:<16} {}   {}", b.name, cols.join(" "), paper);
+    }
+}

@@ -1,0 +1,93 @@
+"""AOT bridge — lower every device program to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()``): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that the embedded
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-
+trips cleanly (see /opt/xla-example/README.md).
+
+Shapes are fixed at the rust Scale::Small sizes so `rust/tests/
+device_path.rs` and the Table IV "CUDA" column can feed matching
+buffers. Python runs only here — never on the request path.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--only NAME]
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# (name, program, example args) — Scale::Small shapes.
+PROGRAMS = [
+    ("vecadd", model.vecadd_program, (spec((1024,)), spec((1024,)))),
+    (
+        "hotspot",
+        functools.partial(model.hotspot_program, 6),
+        (spec((128, 128)), spec((128, 128))),
+    ),
+    ("kmeans", model.kmeans_program, (spec((8192, 34)), spec((5, 34)))),
+    ("fir", model.fir_program, (spec((16384,)), spec((16,)))),
+    ("hist", model.hist_program, (spec((262144,)),)),
+    ("ep", model.ep_program, (spec((1024, 16)), spec((16,)))),
+    (
+        "pr",
+        functools.partial(model.pr_program, 8),
+        (spec((8192,)), spec((8192 * 8,))),
+    ),
+    ("backprop", model.backprop_program, (spec((1024,)), spec((16, 1024)))),
+    (
+        "cloverleaf",
+        functools.partial(model.cloverleaf_program, 4),
+        (spec((96, 96)), spec((96, 96)), spec((96, 96))),
+    ),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, fn, args in PROGRAMS:
+        if only and name != only:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--out", default=None, help="compat: single-file target; writes vecadd")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    if args.out:
+        # Makefile compatibility target: treat as the directory of --out.
+        export_all(os.path.dirname(args.out) or ".", only=None)
+    else:
+        export_all(args.out_dir, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""L1 — Pallas kernels for the benchmark compute hot-spots.
+
+All kernels are written TPU-idiomatically (BlockSpec tiling sized for
+VMEM, MXU-friendly dot shapes where a matmul exists) but lowered with
+``interpret=True``: the CPU PJRT runtime the rust side embeds cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path
+and the TPU block structure is carried for the DESIGN.md §Perf VMEM /
+MXU estimates.
+
+Tiling contract: grid-tiled kernels require their leading dimension to
+be a multiple of the tile (the AOT shapes in ``aot.py`` and the
+hypothesis strategies in the tests respect this).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes chosen so a block's working set stays well under a TPU
+# core's ~16 MB VMEM (see DESIGN.md §Perf for the per-kernel estimates).
+VEC_TILE = 128
+POINT_TILE = 128
+HIDDEN_TILE = 8
+HIST_CHUNK = 2048
+GAMMA = 1.4
+
+
+# ------------------------------------------------------------------
+# vecadd — the Listing 1 kernel; one VMEM tile per grid step.
+# ------------------------------------------------------------------
+
+
+def _vecadd_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def vecadd(a, b):
+    n = a.shape[0]
+    assert n % VEC_TILE == 0, "n must be a multiple of VEC_TILE"
+    grid = n // VEC_TILE
+    spec = pl.BlockSpec((VEC_TILE,), lambda i: (i,))
+    return pl.pallas_call(
+        _vecadd_kernel,
+        grid=(grid,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+# ------------------------------------------------------------------
+# hotspot — one full-grid block (n<=512 keeps 3·n²·4B under VMEM).
+# ------------------------------------------------------------------
+
+
+def _hotspot_kernel(k, t_ref, p_ref, o_ref):
+    c = t_ref[...]
+    p = p_ref[...]
+    l = jnp.concatenate([c[:, :1], c[:, :-1]], axis=1)
+    r = jnp.concatenate([c[:, 1:], c[:, -1:]], axis=1)
+    u = jnp.concatenate([c[:1, :], c[:-1, :]], axis=0)
+    d = jnp.concatenate([c[1:, :], c[-1:, :]], axis=0)
+    o_ref[...] = c + k * (l + r + u + d - 4.0 * c + p)
+
+
+def hotspot_step(temp, power, k=0.1):
+    return pl.pallas_call(
+        functools.partial(_hotspot_kernel, k),
+        out_shape=jax.ShapeDtypeStruct(temp.shape, temp.dtype),
+        interpret=True,
+    )(temp, power)
+
+
+# ------------------------------------------------------------------
+# kmeans — distance matrix through the MXU: |x|² − 2·x·Cᵀ + |c|².
+# Tiled over points; the cluster matrix rides along whole.
+# ------------------------------------------------------------------
+
+
+def _kmeans_kernel(x_ref, c_ref, o_ref):
+    x = x_ref[...]
+    c = c_ref[...]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    # MXU-shaped dot: (TILE, F) @ (F, C)
+    o_ref[...] = x2 - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32) + c2
+
+
+def kmeans_distances(points, clusters):
+    n, f = points.shape
+    c, _ = clusters.shape
+    assert n % POINT_TILE == 0
+    return pl.pallas_call(
+        _kmeans_kernel,
+        grid=(n // POINT_TILE,),
+        in_specs=[
+            pl.BlockSpec((POINT_TILE, f), lambda i: (i, 0)),
+            pl.BlockSpec((c, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((POINT_TILE, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=True,
+    )(points, clusters)
+
+
+# ------------------------------------------------------------------
+# fir — shifted multiply-adds; taps unrolled at trace time.
+# ------------------------------------------------------------------
+
+
+def _fir_kernel(taps, x_ref, c_ref, o_ref):
+    x = x_ref[...]
+    c = c_ref[...]
+    n = x.shape[0]
+    acc = jnp.zeros_like(x)
+    for k in range(taps):
+        shifted = jnp.concatenate([jnp.zeros((k,), x.dtype), x[: n - k]])
+        acc = acc + c[k] * shifted
+    o_ref[...] = acc
+
+
+def fir(signal, coeff):
+    taps = coeff.shape[0]
+    return pl.pallas_call(
+        functools.partial(_fir_kernel, taps),
+        out_shape=jax.ShapeDtypeStruct(signal.shape, signal.dtype),
+        interpret=True,
+    )(signal, coeff)
+
+
+# ------------------------------------------------------------------
+# hist — chunked one-hot accumulation (f32 counts; the grid loop
+# accumulates into the single output block, TPU revisiting semantics).
+# ------------------------------------------------------------------
+
+
+def _hist_kernel(bins, x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32) % bins
+    o_ref[...] += jnp.sum(jax.nn.one_hot(x, bins, dtype=jnp.float32), axis=0)
+
+
+def hist(pixels_f32, bins=256):
+    n = pixels_f32.shape[0]
+    assert n % HIST_CHUNK == 0
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, bins),
+        grid=(n // HIST_CHUNK,),
+        in_specs=[pl.BlockSpec((HIST_CHUNK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((bins,), jnp.float32),
+        interpret=True,
+    )(pixels_f32)
+
+
+# ------------------------------------------------------------------
+# ep — the Listing 9 polynomial fitness, tiled over the population.
+# ------------------------------------------------------------------
+
+
+def _ep_kernel(x_ref, f_ref, o_ref):
+    x = x_ref[...]
+    f = f_ref[...]
+    nvars = f.shape[0]
+    exps = jnp.arange(1, nvars + 1, dtype=x.dtype)
+    o_ref[...] = jnp.sum(x ** exps[None, :] * f[None, :], axis=1)
+
+
+def ep_fitness(params, ff):
+    n, v = params.shape
+    assert n % POINT_TILE == 0
+    return pl.pallas_call(
+        _ep_kernel,
+        grid=(n // POINT_TILE,),
+        in_specs=[
+            pl.BlockSpec((POINT_TILE, v), lambda i: (i, 0)),
+            pl.BlockSpec((v,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((POINT_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), params.dtype),
+        interpret=True,
+    )(params, ff)
+
+
+# ------------------------------------------------------------------
+# pagerank — one power-iteration step (gather + segment mean).
+# ------------------------------------------------------------------
+
+
+def _pr_kernel(degree, damping, r_ref, s_ref, o_ref):
+    r = r_ref[...]
+    s = s_ref[...].astype(jnp.int32)
+    n = r.shape[0]
+    contrib = r[s.reshape(n, degree)] / degree
+    o_ref[...] = (1.0 - damping) + damping * jnp.sum(contrib, axis=1)
+
+
+def pagerank_step(rank, src_f32, degree=8, damping=0.85):
+    return pl.pallas_call(
+        functools.partial(_pr_kernel, degree, damping),
+        out_shape=jax.ShapeDtypeStruct(rank.shape, rank.dtype),
+        interpret=True,
+    )(rank, src_f32)
+
+
+# ------------------------------------------------------------------
+# backprop — hidden-layer forward: sigmoid(W @ x), W tiled by rows.
+# ------------------------------------------------------------------
+
+
+def _bp_kernel(w_ref, x_ref, o_ref):
+    w = w_ref[...]
+    x = x_ref[...]
+    o_ref[...] = jax.nn.sigmoid(
+        jnp.dot(w, x, preferred_element_type=jnp.float32)
+    )
+
+
+def backprop_forward(inputs, weights):
+    h, n = weights.shape
+    assert h % HIDDEN_TILE == 0
+    return pl.pallas_call(
+        _bp_kernel,
+        grid=(h // HIDDEN_TILE,),
+        in_specs=[
+            pl.BlockSpec((HIDDEN_TILE, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((HIDDEN_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((h,), jnp.float32),
+        interpret=True,
+    )(weights, inputs)
+
+
+# ------------------------------------------------------------------
+# cloverleaf ideal_gas — the EoS hot-spot as a Pallas kernel; the rest
+# of the hydro step composes around it in the L2 model.
+# ------------------------------------------------------------------
+
+
+def _ideal_gas_kernel(rho_ref, e_ref, p_ref, ss_ref):
+    rho = rho_ref[...]
+    e = e_ref[...]
+    p = (GAMMA - 1.0) * rho * e
+    p_ref[...] = p
+    ss_ref[...] = jnp.sqrt(GAMMA * p / jnp.maximum(rho, 1e-6))
+
+
+def ideal_gas(density, energy):
+    shape = jax.ShapeDtypeStruct(density.shape, density.dtype)
+    return pl.pallas_call(
+        _ideal_gas_kernel,
+        out_shape=(shape, shape),
+        interpret=True,
+    )(density, energy)

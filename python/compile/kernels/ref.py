@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground
+truth; pytest + hypothesis compare kernels.* against these)."""
+
+import jax
+import jax.numpy as jnp
+
+GAMMA = 1.4
+
+
+def vecadd(a, b):
+    return a + b
+
+
+def hotspot_step(temp, power, k=0.1):
+    """2D thermal stencil with edge clamping (matches the rust reference
+    in benchsuite/rodinia/stencils.rs)."""
+    c = temp
+    l = jnp.concatenate([c[:, :1], c[:, :-1]], axis=1)
+    r = jnp.concatenate([c[:, 1:], c[:, -1:]], axis=1)
+    u = jnp.concatenate([c[:1, :], c[:-1, :]], axis=0)
+    d = jnp.concatenate([c[1:, :], c[-1:, :]], axis=0)
+    return c + k * (l + r + u + d - 4.0 * c + power)
+
+
+def kmeans_distances(points, clusters):
+    """Squared distances: points (N,F) x clusters (C,F) -> (N,C).
+    Expanded as |x|^2 - 2 x.C^T + |c|^2 so the kernel can use the MXU."""
+    x2 = jnp.sum(points * points, axis=1, keepdims=True)
+    c2 = jnp.sum(clusters * clusters, axis=1)[None, :]
+    return x2 - 2.0 * points @ clusters.T + c2
+
+
+def kmeans_assign(points, clusters):
+    return jnp.argmin(kmeans_distances(points, clusters), axis=1).astype(jnp.int32)
+
+
+def fir(signal, coeff):
+    """FIR filter with zero history before t=0."""
+    taps = coeff.shape[0]
+    acc = jnp.zeros_like(signal)
+    for k in range(taps):
+        shifted = jnp.concatenate(
+            [jnp.zeros((k,), signal.dtype), signal[: signal.shape[0] - k]]
+        )
+        acc = acc + coeff[k] * shifted
+    return acc
+
+
+def hist(pixels, bins=256):
+    """Histogram of pixels % bins."""
+    return jnp.sum(
+        jax.nn.one_hot(pixels % bins, bins, dtype=jnp.int32), axis=0
+    ).astype(jnp.int32)
+
+
+def ep_fitness(params, ff):
+    """fitness[i] = sum_j params[i, j]^(j+1) * ff[j] (Listing 9)."""
+    nvars = ff.shape[0]
+    exps = jnp.arange(1, nvars + 1, dtype=params.dtype)
+    return jnp.sum(params ** exps[None, :] * ff[None, :], axis=1)
+
+
+def pagerank_step(rank, src, degree=8, damping=0.85):
+    """One power-iteration step over a fixed-out-degree edge list."""
+    n = rank.shape[0]
+    contrib = rank[src.reshape(n, degree)] / degree
+    return (1.0 - damping) + damping * jnp.sum(contrib, axis=1)
+
+
+def pagerank(rank0, src, iters, degree=8, damping=0.85):
+    def body(_, r):
+        return pagerank_step(r, src, degree, damping)
+
+    return jax.lax.fori_loop(0, iters, body, rank0)
+
+
+def backprop_forward(inputs, weights):
+    """hidden[j] = sigmoid(W[j,:] . input)."""
+    return jax.nn.sigmoid(weights @ inputs)
+
+
+def cloverleaf_step(density, energy, velocity, dt=0.01):
+    """The fused hydro timestep (ideal_gas -> viscosity -> PdV ->
+    advec_cell), matching benchsuite/cloverleaf.rs::State::step."""
+    pressure = (GAMMA - 1.0) * density * energy
+    right = jnp.concatenate([velocity[:, 1:], velocity[:, -1:]], axis=1)
+    du = right - velocity
+    viscosity = jnp.where(du < 0.0, 2.0 * density * du * du, 0.0)
+    divu = du
+    de = dt * (pressure + viscosity) * divu / jnp.maximum(density, 1e-6)
+    energy1 = jnp.maximum(energy - de, 1e-6)
+    density1 = jnp.maximum(density * (1.0 - dt * divu), 1e-6)
+    left = jnp.concatenate([energy1[:, :1], energy1[:, :-1]], axis=1)
+    flux = dt * velocity * (energy1 - left)
+    energy2 = energy1 - flux
+    return density1, energy2

@@ -1,0 +1,80 @@
+"""L2 — per-benchmark JAX device programs.
+
+Each function is the "CUDA on the GPU" analogue for one benchmark: the
+same computation the rust CuPBoP path runs block-by-block, composed in
+JAX around the L1 Pallas kernels, and AOT-lowered once by ``aot.py``.
+Every program takes and returns f32 tensors only (index inputs are
+carried as f32 and cast inside) so the rust loader needs a single
+literal type.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_kernels as kernels
+
+DT = jnp.float32(0.01)
+
+
+def vecadd_program(a, b):
+    return (kernels.vecadd(a, b),)
+
+
+def hotspot_program(steps, temp, power):
+    def body(_, t):
+        return kernels.hotspot_step(t, power)
+
+    return (jax.lax.fori_loop(0, steps, body, temp),)
+
+
+def kmeans_program(points, clusters):
+    """Returns assignments as f32 (single-literal-type ABI)."""
+    d = kernels.kmeans_distances(points, clusters)
+    return (jnp.argmin(d, axis=1).astype(jnp.float32),)
+
+
+def fir_program(signal, coeff):
+    return (kernels.fir(signal, coeff),)
+
+
+def hist_program(pixels_f32):
+    return (kernels.hist(pixels_f32),)
+
+
+def ep_program(params, ff):
+    return (kernels.ep_fitness(params, ff),)
+
+
+def pr_program(iters, rank0, src_f32):
+    def body(_, r):
+        return kernels.pagerank_step(r, src_f32)
+
+    return (jax.lax.fori_loop(0, iters, body, rank0),)
+
+
+def backprop_program(inputs, weights):
+    return (kernels.backprop_forward(inputs, weights),)
+
+
+def cloverleaf_program(steps, density, energy, velocity):
+    """Full hydro run: the Pallas ideal_gas kernel feeds the jnp
+    viscosity/PdV/advection stages (L2 composing L1)."""
+
+    def step(carry):
+        density, energy = carry
+        pressure, _ss = kernels.ideal_gas(density, energy)
+        right = jnp.concatenate([velocity[:, 1:], velocity[:, -1:]], axis=1)
+        du = right - velocity
+        viscosity = jnp.where(du < 0.0, 2.0 * density * du * du, 0.0)
+        de = DT * (pressure + viscosity) * du / jnp.maximum(density, 1e-6)
+        energy1 = jnp.maximum(energy - de, 1e-6)
+        density1 = jnp.maximum(density * (1.0 - DT * du), 1e-6)
+        left = jnp.concatenate([energy1[:, :1], energy1[:, :-1]], axis=1)
+        energy2 = energy1 - DT * velocity * (energy1 - left)
+        return density1, energy2
+
+    def body(_, carry):
+        return step(carry)
+
+    density_f, energy_f = jax.lax.fori_loop(0, steps, body, (density, energy))
+    return (energy_f, density_f)

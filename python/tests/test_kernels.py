@@ -1,0 +1,127 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle,
+hypothesis-swept over shapes and value ranges."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_kernels as K
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rng_array(seed, shape, lo=-1.0, hi=1.0, dtype=np.float32):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(lo, hi, size=shape).astype(dtype))
+
+
+@settings(**SETTINGS)
+@given(tiles=st.integers(1, 8), seed=st.integers(0, 2**16))
+def test_vecadd(tiles, seed):
+    n = tiles * K.VEC_TILE
+    a = rng_array(seed, (n,))
+    b = rng_array(seed + 1, (n,))
+    np.testing.assert_allclose(K.vecadd(a, b), ref.vecadd(a, b), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([16, 32, 64, 96]), seed=st.integers(0, 2**16))
+def test_hotspot_step(n, seed):
+    t = rng_array(seed, (n, n), 300.0, 340.0)
+    p = rng_array(seed + 1, (n, n), 0.0, 1.0)
+    np.testing.assert_allclose(
+        K.hotspot_step(t, p), ref.hotspot_step(t, p), rtol=1e-5, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    tiles=st.integers(1, 4),
+    f=st.integers(2, 40),
+    c=st.integers(2, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_kmeans_distances(tiles, f, c, seed):
+    n = tiles * K.POINT_TILE
+    pts = rng_array(seed, (n, f), 0.0, 10.0)
+    cl = rng_array(seed + 1, (c, f), 0.0, 10.0)
+    np.testing.assert_allclose(
+        K.kmeans_distances(pts, cl), ref.kmeans_distances(pts, cl), rtol=1e-4, atol=1e-3
+    )
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([64, 256, 1024]), taps=st.integers(1, 24), seed=st.integers(0, 2**16))
+def test_fir(n, taps, seed):
+    x = rng_array(seed, (n,))
+    c = rng_array(seed + 1, (taps,), -0.5, 0.5)
+    np.testing.assert_allclose(K.fir(x, c), ref.fir(x, c), rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(chunks=st.integers(1, 4), seed=st.integers(0, 2**16))
+def test_hist(chunks, seed):
+    n = chunks * K.HIST_CHUNK
+    r = np.random.default_rng(seed)
+    pixels = r.integers(0, 1 << 20, size=n).astype(np.float32)
+    got = K.hist(jnp.asarray(pixels))
+    want = ref.hist(jnp.asarray(pixels.astype(np.int32)))
+    np.testing.assert_array_equal(np.asarray(got, dtype=np.int64), np.asarray(want))
+
+
+@settings(**SETTINGS)
+@given(tiles=st.integers(1, 4), v=st.integers(2, 16), seed=st.integers(0, 2**16))
+def test_ep_fitness(tiles, v, seed):
+    n = tiles * K.POINT_TILE
+    params = rng_array(seed, (n, v), -1.1, 1.1)
+    ff = rng_array(seed + 1, (v,), -2.0, 2.0)
+    np.testing.assert_allclose(
+        K.ep_fitness(params, ff), ref.ep_fitness(params, ff), rtol=1e-3, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([64, 256, 1024]), seed=st.integers(0, 2**16))
+def test_pagerank_step(n, seed):
+    degree = 8
+    r = np.random.default_rng(seed)
+    rank = jnp.asarray(r.uniform(0.0, 1.0, n).astype(np.float32))
+    src = r.integers(0, n, size=n * degree).astype(np.int32)
+    got = K.pagerank_step(rank, jnp.asarray(src.astype(np.float32)))
+    want = ref.pagerank_step(rank, jnp.asarray(src))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(htiles=st.integers(1, 4), n=st.sampled_from([32, 128, 512]), seed=st.integers(0, 2**16))
+def test_backprop_forward(htiles, n, seed):
+    h = htiles * K.HIDDEN_TILE
+    x = rng_array(seed, (n,))
+    w = rng_array(seed + 1, (h, n), -0.1, 0.1)
+    np.testing.assert_allclose(
+        K.backprop_forward(x, w), ref.backprop_forward(x, w), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([16, 48, 96]), seed=st.integers(0, 2**16))
+def test_ideal_gas(n, seed):
+    rho = rng_array(seed, (n, n), 0.5, 2.0)
+    e = rng_array(seed + 1, (n, n), 1.0, 3.0)
+    p, ss = K.ideal_gas(rho, e)
+    p_want = (K.GAMMA - 1.0) * rho * e
+    np.testing.assert_allclose(p, p_want, rtol=1e-6)
+    np.testing.assert_allclose(
+        ss, jnp.sqrt(K.GAMMA * p_want / jnp.maximum(rho, 1e-6)), rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_vecadd_dtype(dtype):
+    a = jnp.zeros((K.VEC_TILE,), dtype)
+    assert K.vecadd(a, a).dtype == dtype

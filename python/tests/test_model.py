@@ -1,0 +1,70 @@
+"""L2 correctness: device programs compose kernels correctly; the
+cloverleaf program matches the ref hydro step; AOT lowering emits
+parseable HLO text."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_hotspot_program_iterates():
+    r = np.random.default_rng(0)
+    t = jnp.asarray(r.uniform(300, 340, (32, 32)).astype(np.float32))
+    p = jnp.asarray(r.uniform(0, 1, (32, 32)).astype(np.float32))
+    (got,) = model.hotspot_program(3, t, p)
+    want = t
+    for _ in range(3):
+        want = ref.hotspot_step(want, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_kmeans_program_assignments():
+    r = np.random.default_rng(1)
+    pts = jnp.asarray(r.uniform(0, 10, (256, 7)).astype(np.float32))
+    cl = jnp.asarray(r.uniform(0, 10, (5, 7)).astype(np.float32))
+    (got,) = model.kmeans_program(pts, cl)
+    want = ref.kmeans_assign(pts, cl)
+    np.testing.assert_array_equal(np.asarray(got, np.int32), np.asarray(want))
+
+
+def test_pr_program_converges_like_ref():
+    r = np.random.default_rng(2)
+    n, deg = 256, 8
+    rank0 = jnp.full((n,), 1.0 / n, jnp.float32)
+    src = r.integers(0, n, n * deg).astype(np.int32)
+    (got,) = model.pr_program(4, rank0, jnp.asarray(src.astype(np.float32)))
+    want = ref.pagerank(rank0, jnp.asarray(src), 4)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_cloverleaf_program_matches_ref():
+    r = np.random.default_rng(3)
+    nx = 24
+    rho = jnp.asarray(r.uniform(0.5, 2.0, (nx, nx)).astype(np.float32))
+    e = jnp.asarray(r.uniform(1.0, 3.0, (nx, nx)).astype(np.float32))
+    u = jnp.asarray(r.uniform(-0.2, 0.2, (nx, nx)).astype(np.float32))
+    energy_got, density_got = model.cloverleaf_program(2, rho, e, u)
+    rho_w, e_w = rho, e
+    for _ in range(2):
+        rho_w, e_w = ref.cloverleaf_step(rho_w, e_w, u)
+    np.testing.assert_allclose(density_got, rho_w, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(energy_got, e_w, rtol=1e-4, atol=1e-4)
+
+
+def test_aot_lowering_produces_hlo_text(tmp_path):
+    aot.export_all(str(tmp_path), only="vecadd")
+    text = (tmp_path / "vecadd.hlo.txt").read_text()
+    assert "HloModule" in text
+    assert "f32[1024]" in text
+
+
+def test_every_program_lowers(tmp_path):
+    # lowering (not compiling) all programs is fast enough for CI
+    for name, fn, args in aot.PROGRAMS:
+        lowered = jax.jit(fn).lower(*args)
+        assert lowered.compiler_ir("stablehlo") is not None, name

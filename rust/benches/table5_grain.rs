@@ -1,0 +1,61 @@
+//! Table V — execution time vs grain size (blocks per fetch) for the
+//! single-kernel Hetero-Mark benchmarks, plus HIST-no-atomic.
+//!
+//! Expected shape: lightweight kernels (BS, FIR) improve as the grain
+//! grows past 1 then degrade once threads idle; heavy kernels (GA, PR,
+//! AES) are best at small grains (average fetching); HIST (atomics)
+//! tolerates bigger grains than HIST-no-atomic because fewer active
+//! threads contend on the bins.
+
+use cupbop::benchkit;
+use cupbop::benchsuite::spec::{self, Backend, Scale};
+use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode};
+
+const GRAINS: [u64; 7] = [1, 2, 4, 8, 16, 24, 32];
+
+fn main() {
+    let pool = 8usize;
+    let scale = Scale::Small;
+    println!("== Table V reproduction (pool {pool}, times ms) ==");
+    print!("{:<16}", "bench");
+    for g in GRAINS {
+        print!(" {g:>8}");
+    }
+    println!("   #inst");
+
+    for name in ["bs", "fir", "ga", "hist", "hist-no-atomic", "pr", "aes"] {
+        let b = spec::by_name(name).unwrap();
+        let built = spec::build_program(&b, scale);
+        // dynamic instruction count from one interpreter run
+        let insts = {
+            let mut rt = cupbop::frameworks::ReferenceRuntime::new(built.variants.clone(), built.mem_cap);
+            let mut arrays = built.arrays.clone();
+            cupbop::host::run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt).unwrap();
+            rt.stats.snapshot().instructions
+        };
+        print!("{name:<16}");
+        let mut best = (f64::MAX, 0u64);
+        for g in GRAINS {
+            let s = benchkit::bench(1, 3, || {
+                let out = spec::run_on(
+                    &built,
+                    Backend::CuPBoP,
+                    BackendCfg {
+                        pool_size: pool,
+                        policy: PolicyMode::Fixed(g),
+                        exec: ExecMode::Native,
+                        ..Default::default()
+                    },
+                );
+                assert!(out.check.is_ok(), "{name}@grain{g}");
+            });
+            let ms = s.mean.as_secs_f64() * 1e3;
+            if ms < best.0 {
+                best = (ms, g);
+            }
+            print!(" {ms:>8.3}");
+        }
+        println!("   {}k (best@{})", insts / 1000, best.1);
+    }
+    println!("\n(red in the paper = average grain; green = best aggressive grain)");
+}

@@ -1,0 +1,91 @@
+//! Minimal benchmarking harness (no external deps are available in
+//! this environment, so `cargo bench` targets use this instead of
+//! criterion: `harness = false` + [`bench`]).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over the sampled wall-clock times.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub p50: Duration,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3?}  p50 {:>10.3?}  min {:>10.3?}  max {:>10.3?}  (n={})",
+            self.mean, self.p50, self.min, self.max, self.samples
+        )
+    }
+}
+
+/// Time `f` `samples` times after `warmup` warm-up runs.
+pub fn bench(warmup: usize, samples: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    times.sort();
+    let total: Duration = times.iter().sum();
+    Stats {
+        samples: times.len(),
+        mean: total / times.len() as u32,
+        min: times[0],
+        max: *times.last().unwrap(),
+        p50: times[times.len() / 2],
+    }
+}
+
+/// Time a single run of `f`, returning (result, elapsed).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed())
+}
+
+/// Pretty row printer used by the bench binaries to emit paper-style
+/// tables.
+pub fn print_row(cols: &[&str], widths: &[usize]) {
+    let mut line = String::new();
+    for (c, w) in cols.iter().zip(widths) {
+        line.push_str(&format!("{c:>w$}  ", w = w));
+    }
+    println!("{}", line.trim_end());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench(1, 5, || std::thread::sleep(Duration::from_micros(100)));
+        assert_eq!(s.samples, 5);
+        assert!(s.min >= Duration::from_micros(100));
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+        assert!(s.mean >= s.min && s.mean <= s.max);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

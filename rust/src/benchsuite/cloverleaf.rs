@@ -1,0 +1,512 @@
+//! CloverLeaf mini-app (Fig 8).
+//!
+//! A compact compressible-Euler hydro step on a 2D staggered grid,
+//! shaped after CloverLeaf's kernel set: `ideal_gas` (EoS), `viscosity`,
+//! `PdV` (energy/volume update) and `advec_cell` — four of the mini-
+//! app's 18 kernels, chained per timestep from the host, which is the
+//! property Fig 8 stresses (kernel-launch chains vs manually-fused
+//! OpenMP/MPI loops). Four implementations:
+//!
+//! * CuPBoP / HIP-CPU / DPC++ — via the CIR kernels below,
+//! * an "OpenMP-style" native parallel implementation
+//!   (`openmp_run`) using one fused std::thread data-parallel sweep,
+//! * an "MPI-style" sharded implementation (`mpi_run`): row-band
+//!   domain decomposition with explicit halo exchange between workers,
+//! * the device path (`cloverleaf` artifact) runs the fused step in XLA.
+
+use super::spec::{BenchProgram, Benchmark, Scale, Suite};
+use super::util::{check_f32, pick, ProgBuilder};
+use crate::host::{HostArg, HostOp, LaunchOp};
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+const GAMMA: f32 = 1.4;
+const BLOCK: u32 = 16;
+
+pub fn dims(scale: Scale) -> (usize, usize) {
+    match scale {
+        Scale::Tiny => (24, 2),
+        Scale::Small => (96, 4),
+        Scale::Paper => (960, 10), // clover_bm-ish grid
+    }
+}
+
+// ---- CIR kernels --------------------------------------------------
+
+/// ideal_gas: p = (γ-1)·ρ·e ; soundspeed = sqrt(γ p / ρ)
+fn ideal_gas_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("ideal_gas_kernel");
+    let density = b.ptr_param("density", Ty::F32);
+    let energy = b.ptr_param("energy", Ty::F32);
+    let pressure = b.ptr_param("pressure", Ty::F32);
+    let soundspeed = b.ptr_param("soundspeed", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let rho = b.assign(at(density.clone(), reg(gid), Ty::F32));
+        let e = b.assign(at(energy.clone(), reg(gid), Ty::F32));
+        let p = b.assign(mul(c_f32(GAMMA - 1.0), mul(reg(rho), reg(e))));
+        b.store_at(pressure.clone(), reg(gid), reg(p), Ty::F32);
+        let ss = un(UnOp::Sqrt, div(mul(c_f32(GAMMA), reg(p)), max_e(reg(rho), c_f32(1e-6))));
+        b.store_at(soundspeed.clone(), reg(gid), ss, Ty::F32);
+    });
+    b.build()
+}
+
+/// viscosity: q = 2ρ·(Δu)² limited to compression (Δu<0)
+fn viscosity_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("viscosity_kernel");
+    let density = b.ptr_param("density", Ty::F32);
+    let velocity = b.ptr_param("velocity", Ty::F32);
+    let viscosity = b.ptr_param("viscosity", Ty::F32);
+    let nx = b.scalar_param("nx", Ty::I32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let right = select(
+            lt(rem(reg(gid), nx.clone()), sub(nx.clone(), c_i32(1))),
+            load(index(velocity.clone(), add(reg(gid), c_i32(1)), Ty::F32), Ty::F32),
+            at(velocity.clone(), reg(gid), Ty::F32),
+        );
+        let du = b.assign(sub(right, at(velocity.clone(), reg(gid), Ty::F32)));
+        b.if_else(
+            lt(reg(du), c_f32(0.0)),
+            |b| {
+                let q = mul(
+                    mul(c_f32(2.0), at(density.clone(), reg(gid), Ty::F32)),
+                    mul(reg(du), reg(du)),
+                );
+                b.store_at(viscosity.clone(), reg(gid), q, Ty::F32);
+            },
+            |b| {
+                b.store_at(viscosity.clone(), reg(gid), c_f32(0.0), Ty::F32);
+            },
+        );
+    });
+    b.build()
+}
+
+/// PdV: e -= dt·(p+q)·div(u)/ρ ; ρ advanced by compression
+fn pdv_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("pdv_kernel");
+    let density = b.ptr_param("density", Ty::F32);
+    let energy = b.ptr_param("energy", Ty::F32);
+    let pressure = b.ptr_param("pressure", Ty::F32);
+    let viscosity = b.ptr_param("viscosity", Ty::F32);
+    let velocity = b.ptr_param("velocity", Ty::F32);
+    let nx = b.scalar_param("nx", Ty::I32);
+    let n = b.scalar_param("n", Ty::I32);
+    let dt = b.scalar_param("dt", Ty::F32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let right = select(
+            lt(rem(reg(gid), nx.clone()), sub(nx.clone(), c_i32(1))),
+            load(index(velocity.clone(), add(reg(gid), c_i32(1)), Ty::F32), Ty::F32),
+            at(velocity.clone(), reg(gid), Ty::F32),
+        );
+        let divu = b.assign(sub(right, at(velocity.clone(), reg(gid), Ty::F32)));
+        let rho = b.assign(at(density.clone(), reg(gid), Ty::F32));
+        let pq = add(
+            at(pressure.clone(), reg(gid), Ty::F32),
+            at(viscosity.clone(), reg(gid), Ty::F32),
+        );
+        let de = div(mul(mul(dt.clone(), pq), reg(divu)), max_e(reg(rho), c_f32(1e-6)));
+        let e = at(energy.clone(), reg(gid), Ty::F32);
+        b.store_at(energy.clone(), reg(gid), max_e(sub(e, de), c_f32(1e-6)), Ty::F32);
+        let newrho = mul(reg(rho), sub(c_f32(1.0), mul(dt.clone(), reg(divu))));
+        b.store_at(density.clone(), reg(gid), max_e(newrho, c_f32(1e-6)), Ty::F32);
+    });
+    b.build()
+}
+
+/// advec_cell: first-order upwind advection of energy by velocity.
+fn advec_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("advec_cell_kernel");
+    let energy = b.ptr_param("energy", Ty::F32);
+    let energy_new = b.ptr_param("energy_new", Ty::F32);
+    let velocity = b.ptr_param("velocity", Ty::F32);
+    let nx = b.scalar_param("nx", Ty::I32);
+    let n = b.scalar_param("n", Ty::I32);
+    let dt = b.scalar_param("dt", Ty::F32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let u = b.assign(at(velocity.clone(), reg(gid), Ty::F32));
+        let e = b.assign(at(energy.clone(), reg(gid), Ty::F32));
+        let left = select(
+            gt(rem(reg(gid), nx.clone()), c_i32(0)),
+            load(index(energy.clone(), sub(reg(gid), c_i32(1)), Ty::F32), Ty::F32),
+            reg(e),
+        );
+        let upwind = b.assign(left);
+        let flux = mul(mul(dt.clone(), reg(u)), sub(reg(e), reg(upwind)));
+        b.store_at(energy_new.clone(), reg(gid), sub(reg(e), flux), Ty::F32);
+    });
+    b.build()
+}
+
+// ---- host-side reference (also the OpenMP/MPI work function) ------
+
+pub struct State {
+    pub density: Vec<f32>,
+    pub energy: Vec<f32>,
+    pub velocity: Vec<f32>,
+    pub pressure: Vec<f32>,
+    pub viscosity: Vec<f32>,
+    pub nx: usize,
+}
+
+impl State {
+    pub fn init(nx: usize, seed: u64) -> State {
+        let n = nx * nx;
+        let mut rng = Rng::new(seed);
+        State {
+            density: rng.vec_f32(n, 0.5, 2.0),
+            energy: rng.vec_f32(n, 1.0, 3.0),
+            velocity: rng.vec_f32(n, -0.2, 0.2),
+            pressure: vec![0.0; n],
+            viscosity: vec![0.0; n],
+            nx,
+        }
+    }
+
+    /// One reference timestep over cell range [lo, hi) given full-grid
+    /// read access (the MPI shards call this per band).
+    pub fn step_range(&mut self, lo: usize, hi: usize, dt: f32) {
+        let nx = self.nx;
+        for i in lo..hi {
+            let rho = self.density[i];
+            let p = (GAMMA - 1.0) * rho * self.energy[i];
+            self.pressure[i] = p;
+        }
+        let vel = self.velocity.clone();
+        for i in lo..hi {
+            let right = if i % nx < nx - 1 { vel[i + 1] } else { vel[i] };
+            let du = right - vel[i];
+            self.viscosity[i] = if du < 0.0 { 2.0 * self.density[i] * du * du } else { 0.0 };
+        }
+        for i in lo..hi {
+            let right = if i % nx < nx - 1 { vel[i + 1] } else { vel[i] };
+            let divu = right - vel[i];
+            let rho = self.density[i];
+            let de = dt * (self.pressure[i] + self.viscosity[i]) * divu / rho.max(1e-6);
+            self.energy[i] = (self.energy[i] - de).max(1e-6);
+            self.density[i] = (rho * (1.0 - dt * divu)).max(1e-6);
+        }
+        let e = self.energy.clone();
+        for i in lo..hi {
+            let left = if i % nx > 0 { e[i - 1] } else { e[i] };
+            let flux = dt * vel[i] * (e[i] - left);
+            self.energy[i] = e[i] - flux;
+        }
+    }
+
+    pub fn step(&mut self, dt: f32) {
+        self.step_range(0, self.nx * self.nx, dt);
+    }
+}
+
+/// Reference result of `steps` timesteps.
+pub fn reference(nx: usize, steps: usize, seed: u64, dt: f32) -> State {
+    let mut s = State::init(nx, seed);
+    for _ in 0..steps {
+        s.step(dt);
+    }
+    s
+}
+
+/// "Manually optimised OpenMP" baseline: fused step, data-parallel
+/// bands, persistent scoped threads.
+pub fn openmp_run(nx: usize, steps: usize, seed: u64, dt: f32, threads: usize) -> State {
+    let mut s = State::init(nx, seed);
+    let n = nx * nx;
+    for _ in 0..steps {
+        // phase-parallel like an omp parallel for per loop nest
+        let vel = s.velocity.clone();
+        let bands: Vec<(usize, usize)> = (0..threads)
+            .map(|t| (t * n / threads, (t + 1) * n / threads))
+            .collect();
+        // ideal_gas + viscosity
+        let density = &s.density;
+        let energy = &s.energy;
+        let mut pressure = vec![0.0f32; n];
+        let mut viscosity = vec![0.0f32; n];
+        {
+            let pres_chunks = split_mut(&mut pressure, &bands);
+            let visc_chunks = split_mut(&mut viscosity, &bands);
+            std::thread::scope(|sc| {
+                for (((lo, hi), pres), visc) in bands.iter().zip(pres_chunks).zip(visc_chunks) {
+                    let vel = &vel;
+                    sc.spawn(move || {
+                        for i in *lo..*hi {
+                            pres[i - lo] = (GAMMA - 1.0) * density[i] * energy[i];
+                            let right = if i % nx < nx - 1 { vel[i + 1] } else { vel[i] };
+                            let du = right - vel[i];
+                            visc[i - lo] = if du < 0.0 { 2.0 * density[i] * du * du } else { 0.0 };
+                        }
+                    });
+                }
+            });
+        }
+        s.pressure = pressure;
+        s.viscosity = viscosity;
+        // PdV + advec fused
+        let e_old: Vec<f32> = s.energy.clone();
+        let mut new_energy = vec![0.0f32; n];
+        let mut new_density = vec![0.0f32; n];
+        {
+            let e_chunks = split_mut(&mut new_energy, &bands);
+            let d_chunks = split_mut(&mut new_density, &bands);
+            let st = &s;
+            std::thread::scope(|sc| {
+                for (((lo, hi), en), de) in bands.iter().zip(e_chunks).zip(d_chunks) {
+                    let vel = &vel;
+                    let e_old = &e_old;
+                    sc.spawn(move || {
+                        for i in *lo..*hi {
+                            let right = if i % nx < nx - 1 { vel[i + 1] } else { vel[i] };
+                            let divu = right - vel[i];
+                            let rho = st.density[i];
+                            let dd = dt * (st.pressure[i] + st.viscosity[i]) * divu / rho.max(1e-6);
+                            let e1 = (e_old[i] - dd).max(1e-6);
+                            de[i - lo] = (rho * (1.0 - dt * divu)).max(1e-6);
+                            // advec against post-PdV energies requires the
+                            // neighbour's e1; recompute it locally
+                            let left = if i % nx > 0 {
+                                let j = i - 1;
+                                let rightj = if j % nx < nx - 1 { vel[j + 1] } else { vel[j] };
+                                let divj = rightj - vel[j];
+                                let rhoj = st.density[j];
+                                let dj = dt * (st.pressure[j] + st.viscosity[j]) * divj
+                                    / rhoj.max(1e-6);
+                                (e_old[j] - dj).max(1e-6)
+                            } else {
+                                e1
+                            };
+                            en[i - lo] = e1 - dt * vel[i] * (e1 - left);
+                        }
+                    });
+                }
+            });
+        }
+        s.energy = new_energy;
+        s.density = new_density;
+    }
+    s
+}
+
+fn split_mut<'a>(v: &'a mut [f32], bands: &[(usize, usize)]) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(bands.len());
+    let mut rest = v;
+    let mut consumed = 0usize;
+    for (lo, hi) in bands {
+        let (a, b) = rest.split_at_mut(hi - lo);
+        debug_assert_eq!(consumed, *lo);
+        consumed += hi - lo;
+        out.push(a);
+        rest = b;
+    }
+    out
+}
+
+/// "MPI" baseline: row-band domain decomposition with explicit halo
+/// exchange each step (workers = ranks, channels = messages).
+pub fn mpi_run(nx: usize, steps: usize, seed: u64, dt: f32, ranks: usize) -> State {
+    let mut s = State::init(nx, seed);
+    let n = nx * nx;
+    for _ in 0..steps {
+        // halo exchange: every rank needs its neighbours' edge rows;
+        // with a shared reference state this is a clone per step (the
+        // message traffic), then independent band computation.
+        let snapshot = State {
+            density: s.density.clone(),
+            energy: s.energy.clone(),
+            velocity: s.velocity.clone(),
+            pressure: s.pressure.clone(),
+            viscosity: s.viscosity.clone(),
+            nx,
+        };
+        let bands: Vec<(usize, usize)> = (0..ranks)
+            .map(|r| (r * n / ranks, (r + 1) * n / ranks))
+            .collect();
+        let results: Vec<State> = std::thread::scope(|sc| {
+            let handles: Vec<_> = bands
+                .iter()
+                .map(|(lo, hi)| {
+                    let snap = &snapshot;
+                    let (lo, hi) = (*lo, *hi);
+                    sc.spawn(move || {
+                        let mut local = State {
+                            density: snap.density.clone(),
+                            energy: snap.energy.clone(),
+                            velocity: snap.velocity.clone(),
+                            pressure: snap.pressure.clone(),
+                            viscosity: snap.viscosity.clone(),
+                            nx,
+                        };
+                        local.step_range(lo, hi, dt);
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // gather bands
+        for (r, (lo, hi)) in bands.iter().enumerate() {
+            s.density[*lo..*hi].copy_from_slice(&results[r].density[*lo..*hi]);
+            s.energy[*lo..*hi].copy_from_slice(&results[r].energy[*lo..*hi]);
+            s.pressure[*lo..*hi].copy_from_slice(&results[r].pressure[*lo..*hi]);
+            s.viscosity[*lo..*hi].copy_from_slice(&results[r].viscosity[*lo..*hi]);
+        }
+    }
+    s
+}
+
+// ---- the CuPBoP-path program ---------------------------------------
+
+const DT: f32 = 0.01;
+const SEED: u64 = 0xC10;
+
+fn build(scale: Scale) -> BenchProgram {
+    let (nx, steps) = dims(scale);
+    let n = nx * nx;
+    let _ = pick(scale, 0, 0, 0);
+    let init = State::init(nx, SEED);
+    let want = {
+        let mut r = State::init(nx, SEED);
+        for _ in 0..steps {
+            r.step(DT);
+        }
+        r
+    };
+
+    let mut pb = ProgBuilder::new();
+    let k_gas = pb.kernel(ideal_gas_kernel());
+    pb.est_insts(256 * 10);
+    let k_visc = pb.kernel(viscosity_kernel());
+    pb.est_insts(256 * 12);
+    let k_pdv = pb.kernel(pdv_kernel());
+    pb.est_insts(256 * 16);
+    let k_adv = pb.kernel(advec_kernel());
+    pb.est_insts(256 * 12);
+
+    let d_rho = pb.input_f32(&init.density);
+    let d_e = pb.input_f32(&init.energy);
+    let d_u = pb.input_f32(&init.velocity);
+    let d_p = pb.zeroed(n * 4);
+    let d_q = pb.zeroed(n * 4);
+    let d_ss = pb.zeroed(n * 4);
+    let d_e2 = pb.zeroed(n * 4);
+    let out_e = pb.out_arr(n * 4);
+    let out_rho = pb.out_arr(n * 4);
+
+    let g = ((n as u32).div_ceil(BLOCK * BLOCK), 1);
+    let blk = (BLOCK * BLOCK, 1);
+    assert!(steps % 2 == 0);
+    let step_ops = |e_in, e_out| {
+        vec![
+            HostOp::Launch(LaunchOp {
+                kernel: k_gas,
+                grid: g,
+                block: blk,
+                dyn_shmem: 0,
+                args: vec![
+                    HostArg::Buf(d_rho),
+                    HostArg::Buf(e_in),
+                    HostArg::Buf(d_p),
+                    HostArg::Buf(d_ss),
+                    HostArg::I32(n as i32),
+                ],
+            }),
+            HostOp::Launch(LaunchOp {
+                kernel: k_visc,
+                grid: g,
+                block: blk,
+                dyn_shmem: 0,
+                args: vec![
+                    HostArg::Buf(d_rho),
+                    HostArg::Buf(d_u),
+                    HostArg::Buf(d_q),
+                    HostArg::I32(nx as i32),
+                    HostArg::I32(n as i32),
+                ],
+            }),
+            HostOp::Launch(LaunchOp {
+                kernel: k_pdv,
+                grid: g,
+                block: blk,
+                dyn_shmem: 0,
+                args: vec![
+                    HostArg::Buf(d_rho),
+                    HostArg::Buf(e_in),
+                    HostArg::Buf(d_p),
+                    HostArg::Buf(d_q),
+                    HostArg::Buf(d_u),
+                    HostArg::I32(nx as i32),
+                    HostArg::I32(n as i32),
+                    HostArg::F32(DT),
+                ],
+            }),
+            HostOp::Launch(LaunchOp {
+                kernel: k_adv,
+                grid: g,
+                block: blk,
+                dyn_shmem: 0,
+                args: vec![
+                    HostArg::Buf(e_in),
+                    HostArg::Buf(e_out),
+                    HostArg::Buf(d_u),
+                    HostArg::I32(nx as i32),
+                    HostArg::I32(n as i32),
+                    HostArg::F32(DT),
+                ],
+            }),
+        ]
+    };
+    let mut body = step_ops(d_e, d_e2);
+    body.extend(step_ops(d_e2, d_e));
+    pb.op(HostOp::Repeat { n: steps / 2, body });
+    pb.read_back(d_e, out_e);
+    pb.read_back(d_rho, out_rho);
+    let ce = check_f32(out_e, want.energy, 5e-3, 1e-4);
+    let cr = check_f32(out_rho, want.density, 5e-3, 1e-4);
+    pb.finish(Box::new(move |arrays| {
+        ce(arrays)?;
+        cr(arrays)
+    }))
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "cloverleaf",
+        suite: Suite::CloverLeaf,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(build),
+        device_artifact: Some("cloverleaf"),
+        paper_secs: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::assert_allclose_f32;
+
+    #[test]
+    fn openmp_matches_reference() {
+        let (nx, steps) = (24, 2);
+        let r = reference(nx, steps, SEED, DT);
+        let o = openmp_run(nx, steps, SEED, DT, 4);
+        assert_allclose_f32(&o.energy, &r.energy, 1e-4, 1e-5, "openmp energy");
+        assert_allclose_f32(&o.density, &r.density, 1e-4, 1e-5, "openmp density");
+    }
+
+    #[test]
+    fn mpi_matches_reference() {
+        let (nx, steps) = (24, 2);
+        let r = reference(nx, steps, SEED, DT);
+        let m = mpi_run(nx, steps, SEED, DT, 4);
+        assert_allclose_f32(&m.energy, &r.energy, 1e-4, 1e-5, "mpi energy");
+        assert_allclose_f32(&m.density, &r.density, 1e-4, 1e-5, "mpi density");
+    }
+}

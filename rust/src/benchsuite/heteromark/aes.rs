@@ -1,0 +1,149 @@
+//! Hetero-Mark AES — block encryption.
+//!
+//! Each thread encrypts one 16-byte block through ten table-lookup +
+//! xor + rotate rounds. The round function is a behavioural stand-in
+//! for AES-128 (S-box substitution, word rotation, round-key xor) — the
+//! benchmark's role in the paper's evaluation is "heavy integer kernel
+//! with table lookups" (9M dynamic instructions, Table V's strongest
+//! average-fetching case), which this preserves. DESIGN.md §Substitutions
+//! records the simplification.
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::HostArg;
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+const ROUNDS: usize = 10;
+const WORDS: usize = 4; // 16-byte blocks as 4 x u32
+const BLOCK: u32 = 64;
+
+fn nblocks(scale: Scale) -> usize {
+    pick(scale, 256, 4096, 1 << 16) // paper: 1 GB of data
+}
+
+/// One round in both implementations:
+/// `w[i] = sbox[w[i] & 0xff] ^ rotl8(w[(i+1)%4]) ^ rk[r]`
+fn round_ref(w: &mut [i32; WORDS], sbox: &[i32], rk: i32) {
+    let old = *w;
+    for i in 0..WORDS {
+        let s = sbox[(old[i] & 0xff) as usize];
+        let n = old[(i + 1) % WORDS];
+        let rot = ((n as u32) << 8 | (n as u32) >> 24) as i32;
+        w[i] = s ^ rot ^ rk;
+    }
+}
+
+fn kernel() -> Kernel {
+    let mut b = KernelBuilder::new("aes_encrypt");
+    let data = b.ptr_param("data", Ty::I32); // nblocks * 4 words
+    let sbox = b.ptr_param("sbox", Ty::I32); // 256 entries
+    let rkeys = b.ptr_param("round_keys", Ty::I32); // ROUNDS entries
+    let n = b.scalar_param("nblocks", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let base = b.assign(mul(reg(gid), c_i32(WORDS as i32)));
+        // load state words into registers
+        let w: Vec<Reg> = (0..WORDS)
+            .map(|i| b.assign(at(data.clone(), add(reg(base), c_i32(i as i32)), Ty::I32)))
+            .collect();
+        b.for_(c_i32(0), c_i32(ROUNDS as i32), c_i32(1), |b, r| {
+            let rk = b.assign(at(rkeys.clone(), reg(r), Ty::I32));
+            // old values
+            let old: Vec<Reg> = w.iter().map(|x| b.assign(reg(*x))).collect();
+            for i in 0..WORDS {
+                let sidx = bin(BinOp::And, reg(old[i]), c_i32(0xff));
+                let s = b.assign(at(sbox.clone(), sidx, Ty::I32));
+                let nxt = reg(old[(i + 1) % WORDS]);
+                let hi = bin(BinOp::Shl, nxt.clone(), c_i32(8));
+                // logical right shift of the top byte: mask after the
+                // arithmetic shift to emulate u32 >> 24
+                let lo = bin(BinOp::And, bin(BinOp::Shr, nxt, c_i32(24)), c_i32(0xff));
+                let rot = bin(BinOp::Or, hi, lo);
+                let x = bin(BinOp::Xor, bin(BinOp::Xor, reg(s), rot), reg(rk));
+                b.set(w[i], x);
+            }
+        });
+        for (i, x) in w.iter().enumerate() {
+            b.store_at(data.clone(), add(reg(base), c_i32(i as i32)), reg(*x), Ty::I32);
+        }
+    });
+    b.build()
+}
+
+fn native() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("aes_native", move |block_id, launch, mem, _| {
+        let a = PackedArgs(&launch.packed);
+        let n = a.i32(3) as usize;
+        let data = unsafe { mem.slice_i32(a.ptr(0), n * WORDS) };
+        let sbox = unsafe { mem.slice_i32(a.ptr(1), 256) };
+        let rkeys = unsafe { mem.slice_i32(a.ptr(2), ROUNDS) };
+        let bs = launch.block_size();
+        for t in 0..bs {
+            let gid = block_id as usize * bs + t;
+            if gid >= n {
+                continue;
+            }
+            let mut w = [0i32; WORDS];
+            w.copy_from_slice(&data[gid * WORDS..(gid + 1) * WORDS]);
+            for r in 0..ROUNDS {
+                round_ref(&mut w, sbox, rkeys[r]);
+            }
+            data[gid * WORDS..(gid + 1) * WORDS].copy_from_slice(&w);
+        }
+    })
+}
+
+fn build(scale: Scale) -> BenchProgram {
+    let n = nblocks(scale);
+    let mut rng = Rng::new(0xAE5);
+    let data: Vec<i32> = (0..n * WORDS).map(|_| rng.next_u64() as i32).collect();
+    let sbox: Vec<i32> = (0..256).map(|_| rng.next_u64() as i32).collect();
+    let rkeys: Vec<i32> = (0..ROUNDS).map(|_| rng.next_u64() as i32).collect();
+    // host reference
+    let mut want = data.clone();
+    for blk in 0..n {
+        let mut w = [0i32; WORDS];
+        w.copy_from_slice(&want[blk * WORDS..(blk + 1) * WORDS]);
+        for r in 0..ROUNDS {
+            round_ref(&mut w, &sbox, rkeys[r]);
+        }
+        want[blk * WORDS..(blk + 1) * WORDS].copy_from_slice(&w);
+    }
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(kernel());
+    pb.native(native());
+    pb.est_insts((BLOCK as u64) * (ROUNDS * WORDS) as u64 * 12); // heavy
+    let d_data = pb.input_i32(&data);
+    let d_sbox = pb.input_i32(&sbox);
+    let d_rkeys = pb.input_i32(&rkeys);
+    let out = pb.out_arr(n * WORDS * 4);
+    let grid = (n as u32).div_ceil(BLOCK);
+    pb.launch(
+        k,
+        (grid, 1),
+        (BLOCK, 1),
+        vec![
+            HostArg::Buf(d_data),
+            HostArg::Buf(d_sbox),
+            HostArg::Buf(d_rkeys),
+            HostArg::I32(n as i32),
+        ],
+    );
+    pb.read_back(d_data, out);
+    pb.finish(check_i32(out, want))
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "aes",
+        suite: Suite::HeteroMark,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 29.87, dpcpp: 48.381, hip: 55.595, cupbop: 50.107, openmp: None }),
+    }
+}

@@ -1,0 +1,143 @@
+//! Hetero-Mark BS — binary search.
+//!
+//! Each thread binary-searches a sorted array for one key and records
+//! the found index. The per-block instruction count is tiny (~79k total
+//! in the paper) — the Table V poster child for aggressive
+//! coarse-grained fetching.
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::HostArg;
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+const BLOCK: u32 = 128;
+
+fn nelems(scale: Scale) -> usize {
+    pick(scale, 1 << 10, 1 << 16, 1 << 21) // paper: 2097152
+}
+
+fn kernel() -> Kernel {
+    let mut b = KernelBuilder::new("binary_search");
+    let hay = b.ptr_param("hay", Ty::I32);
+    let keys = b.ptr_param("keys", Ty::I32);
+    let found = b.ptr_param("found", Ty::I32);
+    let n = b.scalar_param("n", Ty::I32);
+    let nq = b.scalar_param("nq", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), nq.clone()), |b| {
+        let key = b.assign(at(keys.clone(), reg(gid), Ty::I32));
+        let lo = b.assign(c_i32(0));
+        let hi = b.assign(n.clone());
+        let res = b.assign(c_i32(-1));
+        b.while_(lt(reg(lo), reg(hi)), |b| {
+            let mid = b.assign(div(add(reg(lo), reg(hi)), c_i32(2)));
+            let v = b.assign(at(hay.clone(), reg(mid), Ty::I32));
+            b.if_else(
+                eq(reg(v), reg(key)),
+                |b| {
+                    b.set(res, reg(mid));
+                    b.set(lo, reg(hi)); // terminate
+                },
+                |b| {
+                    b.if_else(
+                        lt(reg(v), reg(key)),
+                        |b| b.set(lo, add(reg(mid), c_i32(1))),
+                        |b| b.set(hi, reg(mid)),
+                    );
+                },
+            );
+        });
+        b.store_at(found.clone(), reg(gid), reg(res), Ty::I32);
+    });
+    b.build()
+}
+
+fn native() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("bs_native", move |block_id, launch, mem, _| {
+        let a = PackedArgs(&launch.packed);
+        let (hay_p, keys_p, found_p) = (a.ptr(0), a.ptr(1), a.ptr(2));
+        let n = a.i32(3) as usize;
+        let nq = a.i32(4) as usize;
+        let bs = launch.block_size();
+        let hay = unsafe { mem.slice_i32(hay_p, n) };
+        let keys = unsafe { mem.slice_i32(keys_p, nq) };
+        let found = unsafe { mem.slice_i32(found_p, nq) };
+        for t in 0..bs {
+            let gid = block_id as usize * bs + t;
+            if gid >= nq {
+                continue;
+            }
+            found[gid] = match hay.binary_search(&keys[gid]) {
+                Ok(i) => i as i32,
+                Err(_) => -1,
+            };
+        }
+    })
+}
+
+fn build(scale: Scale) -> BenchProgram {
+    let n = nelems(scale);
+    let nq = n / 2;
+    let mut rng = Rng::new(0xB5);
+    // strictly increasing haystack so found indices are unique
+    let mut hay = vec![0i32; n];
+    let mut acc = 0i32;
+    for h in hay.iter_mut() {
+        acc += 1 + rng.below(3) as i32;
+        *h = acc;
+    }
+    let keys: Vec<i32> = (0..nq)
+        .map(|_| {
+            if rng.bool() {
+                hay[rng.range_usize(0, n)] // present
+            } else {
+                -(rng.below(1000) as i32) // absent
+            }
+        })
+        .collect();
+    let want: Vec<i32> = keys
+        .iter()
+        .map(|k| match hay.binary_search(k) {
+            Ok(i) => i as i32,
+            Err(_) => -1,
+        })
+        .collect();
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(kernel());
+    pb.native(native());
+    pb.est_insts((BLOCK as u64) * 24); // ~log2(n) iterations, light
+    let d_hay = pb.input_i32(&hay);
+    let d_keys = pb.input_i32(&keys);
+    let d_found = pb.zeroed(nq * 4);
+    let out = pb.out_arr(nq * 4);
+    let grid = (nq as u32).div_ceil(BLOCK);
+    pb.launch(
+        k,
+        (grid, 1),
+        (BLOCK, 1),
+        vec![
+            HostArg::Buf(d_hay),
+            HostArg::Buf(d_keys),
+            HostArg::Buf(d_found),
+            HostArg::I32(n as i32),
+            HostArg::I32(nq as i32),
+        ],
+    );
+    pb.read_back(d_found, out);
+    pb.finish(check_i32(out, want))
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "bs",
+        suite: Suite::HeteroMark,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(build),
+        device_artifact: None, // data-dependent control flow: CPU-path only
+        paper_secs: Some(PaperRow { cuda: 0.967, dpcpp: 1.504, hip: 2.506, cupbop: 2.74, openmp: None }),
+    }
+}

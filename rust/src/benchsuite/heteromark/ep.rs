@@ -1,0 +1,147 @@
+//! Hetero-Mark EP — evolutionary programming (fitness evaluation).
+//!
+//! The kernel carries the paper's Listing 9 (lines 1–7) nested
+//! polynomial loop: for each creature,
+//! `fitness += params[j]^(j+1) * fitness_function[j]`. DPC++ can
+//! vectorize the inner pow loop while LLVM cannot — modelled by a
+//! `vectorized` closure using a closed-form `powi` that the paper's
+//! Table IV shows as DPC++'s ~10x win on EP.
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_f64, pick, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::HostArg;
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+const NUM_VARS: usize = 16;
+const BLOCK: u32 = 64;
+
+fn population(scale: Scale) -> usize {
+    pick(scale, 128, 1024, 8192) // paper: population 1024, many generations
+}
+
+fn generations(scale: Scale) -> usize {
+    pick(scale, 2, 20, 100)
+}
+
+fn kernel() -> Kernel {
+    let mut b = KernelBuilder::new("ep_fitness");
+    let params = b.ptr_param("params", Ty::F64); // population × NUM_VARS
+    let ff = b.ptr_param("fitness_function", Ty::F64);
+    let fitness = b.ptr_param("fitness", Ty::F64);
+    let n = b.scalar_param("population", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let acc = b.assign(c_f64(0.0));
+        let base = b.assign(mul(reg(gid), c_i32(NUM_VARS as i32)));
+        b.for_(c_i32(0), c_i32(NUM_VARS as i32), c_i32(1), |b, j| {
+            // pow = 1; for k in 0..j+1 { pow *= params[j]; }  (Listing 9)
+            let powv = b.assign(c_f64(1.0));
+            let pj = b.assign(at(params.clone(), add(reg(base), reg(j)), Ty::F64));
+            b.for_(c_i32(0), add(reg(j), c_i32(1)), c_i32(1), |b, _k| {
+                b.set(powv, mul(reg(powv), reg(pj)));
+            });
+            b.set(acc, add(reg(acc), mul(reg(powv), at(ff.clone(), reg(j), Ty::F64))));
+        });
+        b.store_at(fitness.clone(), reg(gid), reg(acc), Ty::F64);
+    });
+    b.build()
+}
+
+fn native(closed_form: bool) -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    let name = if closed_form { "ep_vectorized" } else { "ep_native" };
+    NativeBlockFn::new(name, move |block_id, launch, mem, _| {
+        let a = PackedArgs(&launch.packed);
+        let n = a.i32(3) as usize;
+        let params = unsafe { mem.slice_f64(a.ptr(0), n * NUM_VARS) };
+        let ff = unsafe { mem.slice_f64(a.ptr(1), NUM_VARS) };
+        let fitness = unsafe { mem.slice_f64(a.ptr(2), n) };
+        let bs = launch.block_size();
+        for t in 0..bs {
+            let gid = block_id as usize * bs + t;
+            if gid >= n {
+                continue;
+            }
+            let row = &params[gid * NUM_VARS..(gid + 1) * NUM_VARS];
+            let mut acc = 0.0f64;
+            if closed_form {
+                // what a vectorizing compiler effectively achieves
+                for j in 0..NUM_VARS {
+                    acc += row[j].powi(j as i32 + 1) * ff[j];
+                }
+            } else {
+                for j in 0..NUM_VARS {
+                    let mut p = 1.0f64;
+                    for _ in 0..=j {
+                        p *= row[j];
+                    }
+                    acc += p * ff[j];
+                }
+            }
+            fitness[gid] = acc;
+        }
+    })
+}
+
+fn host_ref(params: &[f64], ff: &[f64], n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let mut acc = 0.0;
+            for j in 0..NUM_VARS {
+                acc += params[i * NUM_VARS + j].powi(j as i32 + 1) * ff[j];
+            }
+            acc
+        })
+        .collect()
+}
+
+fn build(scale: Scale) -> BenchProgram {
+    let n = population(scale);
+    let gens = generations(scale);
+    let mut rng = Rng::new(0xE9);
+    let params = rng.vec_f64(n * NUM_VARS, -1.1, 1.1);
+    let ff = rng.vec_f64(NUM_VARS, -2.0, 2.0);
+    let want = host_ref(&params, &ff, n);
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(kernel());
+    pb.native(native(false));
+    pb.vectorized(native(true));
+    pb.est_insts((BLOCK as u64) * (NUM_VARS * NUM_VARS / 2) as u64 * 5); // heavy inner loops
+    let d_params = pb.input_f64(&params);
+    let d_ff = pb.input_f64(&ff);
+    let d_fit = pb.zeroed(n * 8);
+    let out = pb.out_arr(n * 8);
+    let grid = (n as u32).div_ceil(BLOCK);
+    // each generation re-evaluates fitness (the GA loop's hot phase)
+    pb.op(crate::host::HostOp::Repeat {
+        n: gens,
+        body: vec![crate::host::HostOp::Launch(crate::host::LaunchOp {
+            kernel: k,
+            grid: (grid, 1),
+            block: (BLOCK, 1),
+            dyn_shmem: 0,
+            args: vec![
+                HostArg::Buf(d_params),
+                HostArg::Buf(d_ff),
+                HostArg::Buf(d_fit),
+                HostArg::I32(n as i32),
+            ],
+        })],
+    });
+    pb.read_back(d_fit, out);
+    pb.finish(check_f64(out, want, 1e-9, 1e-12))
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "ep",
+        suite: Suite::HeteroMark,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(build),
+        device_artifact: Some("ep"),
+        paper_secs: Some(PaperRow { cuda: 4.187, dpcpp: 2.506, hip: 34.085, cupbop: 28.844, openmp: None }),
+    }
+}

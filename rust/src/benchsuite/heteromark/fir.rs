@@ -1,0 +1,154 @@
+//! Hetero-Mark FIR — finite impulse response filter.
+//!
+//! The host streams the signal in chunks, memcpying each chunk to the
+//! device, filtering it, and copying results back — "a large number of
+//! memory copies", which is exactly what makes HIP-CPU's sync-before-
+//! every-memcpy policy hurt (Fig 7's FIR discussion). CuPBoP's host
+//! pass instead inserts a barrier only before each chunk's D2H (the
+//! kernel writes `d_out`) and before each H2D over `d_in` (the in-
+//! flight kernel reads it).
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{pick, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::{HostArg, HostOp};
+use crate::ir::{self, *};
+use crate::testkit::{bytes_to_f32s, Rng};
+
+const TAPS: usize = 16;
+const BLOCK: u32 = 64;
+
+/// (chunk length, number of chunks)
+fn dims(scale: Scale) -> (usize, usize) {
+    match scale {
+        Scale::Tiny => (256, 4),
+        Scale::Small => (1024, 16),
+        Scale::Paper => (4096, 64), // paper: num-data-per-block 4096
+    }
+}
+
+fn kernel() -> Kernel {
+    let mut b = KernelBuilder::new("fir");
+    let input = b.ptr_param("input", Ty::F32); // TAPS-1 history samples + chunk
+    let coeff = b.ptr_param("coeff", Ty::F32);
+    let output = b.ptr_param("output", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let sum = b.assign(c_f32(0.0));
+        b.for_(c_i32(0), c_i32(TAPS as i32), c_i32(1), |b, k| {
+            let x = at(input.clone(), sub(add(reg(gid), c_i32(TAPS as i32 - 1)), reg(k)), Ty::F32);
+            let c = at(coeff.clone(), reg(k), Ty::F32);
+            b.set(sum, add(reg(sum), mul(x, c)));
+        });
+        b.store_at(output.clone(), reg(gid), reg(sum), Ty::F32);
+    });
+    b.build()
+}
+
+fn native() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("fir_native", move |block_id, launch, mem, _| {
+        let a = PackedArgs(&launch.packed);
+        let n = a.i32(3) as usize;
+        let input = unsafe { mem.slice_f32(a.ptr(0), n + TAPS - 1) };
+        let coeff = unsafe { mem.slice_f32(a.ptr(1), TAPS) };
+        let output = unsafe { mem.slice_f32(a.ptr(2), n) };
+        let bs = launch.block_size();
+        for t in 0..bs {
+            let gid = block_id as usize * bs + t;
+            if gid >= n {
+                continue;
+            }
+            let mut sum = 0.0f32;
+            for k in 0..TAPS {
+                sum += input[gid + TAPS - 1 - k] * coeff[k];
+            }
+            output[gid] = sum;
+        }
+    })
+}
+
+fn host_ref(signal: &[f32], coeff: &[f32]) -> Vec<f32> {
+    (0..signal.len())
+        .map(|i| {
+            let mut s = 0.0f32;
+            for (k, c) in coeff.iter().enumerate() {
+                if i >= k {
+                    s += signal[i - k] * c;
+                }
+            }
+            s
+        })
+        .collect()
+}
+
+fn build(scale: Scale) -> BenchProgram {
+    let (chunk, nchunks) = dims(scale);
+    let total = chunk * nchunks;
+    let _ = pick(scale, 0, 0, 0);
+    let mut rng = Rng::new(0xF17);
+    let signal = rng.vec_f32(total, -1.0, 1.0);
+    let coeff = rng.vec_f32(TAPS, -0.5, 0.5);
+    let want = host_ref(&signal, &coeff);
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(kernel());
+    pb.native(native());
+    pb.est_insts((BLOCK as u64) * (TAPS as u64) * 4); // light per block
+    let d_coeff = pb.input_f32(&coeff);
+    let d_in = pb.zeroed((chunk + TAPS - 1) * 4);
+    let d_out = pb.zeroed(chunk * 4);
+
+    let grid = (chunk as u32).div_ceil(BLOCK);
+    let mut out_arrs = Vec::with_capacity(nchunks);
+    for c in 0..nchunks {
+        let lo = c * chunk;
+        // stage chunk with TAPS-1 samples of history
+        let mut staged = vec![0.0f32; chunk + TAPS - 1];
+        for (j, s) in staged.iter_mut().enumerate() {
+            let idx = lo as i64 + j as i64 - (TAPS as i64 - 1);
+            *s = if idx >= 0 { signal[idx as usize] } else { 0.0 };
+        }
+        let in_arr = pb.stage_f32(&staged);
+        pb.op(HostOp::H2D { dst: d_in, src: in_arr });
+        pb.launch(
+            k,
+            (grid, 1),
+            (BLOCK, 1),
+            vec![
+                HostArg::Buf(d_in),
+                HostArg::Buf(d_coeff),
+                HostArg::Buf(d_out),
+                HostArg::I32(chunk as i32),
+            ],
+        );
+        let out_c = pb.out_arr(chunk * 4);
+        pb.op(HostOp::D2H { dst: out_c, src: d_out });
+        out_arrs.push(out_c);
+    }
+
+    pb.finish(Box::new(move |arrays: &[Vec<u8>]| {
+        let mut got = Vec::with_capacity(want.len());
+        for a in &out_arrs {
+            got.extend(bytes_to_f32s(&arrays[a.0]));
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            if (g - w).abs() > 1e-3 + 1e-4 * w.abs() {
+                return Err(format!("fir[{i}]: got {g}, want {w}"));
+            }
+        }
+        Ok(())
+    }))
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "fir",
+        suite: Suite::HeteroMark,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(build),
+        device_artifact: Some("fir"),
+        paper_secs: Some(PaperRow { cuda: 1.445, dpcpp: 4.389, hip: 4.225, cupbop: 3.872, openmp: None }),
+    }
+}

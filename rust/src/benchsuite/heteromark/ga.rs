@@ -1,0 +1,144 @@
+//! Hetero-Mark GA — gene alignment (pattern match scoring).
+//!
+//! Each thread scores the alignment of a query pattern against one
+//! position of the target sequence (match counting over a fixed
+//! window). Heavy per-thread work (~25M dynamic instructions in Table
+//! V) — the benchmark where *average* fetching wins and aggressive
+//! fetching loses badly. A `ga-reordered` variant (contiguous per-
+//! thread position ranges) feeds Table VI.
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::HostArg;
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+const PATTERN: usize = 64;
+const BLOCK: u32 = 64;
+const GRID: u32 = 64;
+
+fn target_len(scale: Scale) -> usize {
+    pick(scale, 4 << 10, 64 << 10, 1 << 20)
+}
+
+/// `strided`: positions walked with stride = nthreads (GPU-coalesced),
+/// else contiguous chunks (the Table VI reordering).
+fn kernel(strided: bool) -> Kernel {
+    let mut b = KernelBuilder::new("ga_match");
+    let target = b.ptr_param("target", Ty::I32);
+    let pattern = b.ptr_param("pattern", Ty::I32);
+    let scores = b.ptr_param("scores", Ty::I32);
+    let npos = b.scalar_param("npos", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    let nthreads = b.assign(mul(bdim_x(), gdim_x()));
+
+    let body = |b: &mut KernelBuilder, pos: Reg| {
+        let score = b.assign(c_i32(0));
+        b.for_(c_i32(0), c_i32(PATTERN as i32), c_i32(1), |b, j| {
+            let t = at(target.clone(), add(reg(pos), reg(j)), Ty::I32);
+            let p = at(pattern.clone(), reg(j), Ty::I32);
+            b.if_(eq(t, p), |b| {
+                b.set(score, add(reg(score), c_i32(1)));
+            });
+        });
+        b.store_at(scores.clone(), reg(pos), reg(score), Ty::I32);
+    };
+
+    if strided {
+        b.for_(reg(gid), npos.clone(), reg(nthreads), |b, pos| body(b, pos));
+    } else {
+        let chunk = b.assign(div(sub(add(npos.clone(), reg(nthreads)), c_i32(1)), reg(nthreads)));
+        let lo = b.assign(mul(reg(gid), reg(chunk)));
+        let hi = b.assign(min_e(add(reg(lo), reg(chunk)), npos.clone()));
+        b.for_(reg(lo), reg(hi), c_i32(1), |b, pos| body(b, pos));
+    }
+    b.build()
+}
+
+fn native(strided: bool) -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("ga_native", move |block_id, launch, mem, _| {
+        let a = PackedArgs(&launch.packed);
+        let npos = a.i32(3) as usize;
+        let target = unsafe { mem.slice_i32(a.ptr(0), npos + PATTERN) };
+        let pattern = unsafe { mem.slice_i32(a.ptr(1), PATTERN) };
+        let scores = unsafe { mem.slice_i32(a.ptr(2), npos) };
+        let bs = launch.block_size();
+        let nthreads = bs * launch.total_blocks() as usize;
+        for t in 0..bs {
+            let gid = block_id as usize * bs + t;
+            let it: Box<dyn Iterator<Item = usize>> = if strided {
+                Box::new((gid..npos).step_by(nthreads))
+            } else {
+                let chunk = npos.div_ceil(nthreads);
+                Box::new((gid * chunk)..((gid + 1) * chunk).min(npos))
+            };
+            for pos in it {
+                let mut score = 0i32;
+                for j in 0..PATTERN {
+                    if target[pos + j] == pattern[j] {
+                        score += 1;
+                    }
+                }
+                scores[pos] = score;
+            }
+        }
+    })
+}
+
+fn build_variant(scale: Scale, strided: bool) -> BenchProgram {
+    let n = target_len(scale);
+    let npos = n - PATTERN;
+    let mut rng = Rng::new(0x6A);
+    let target = rng.vec_i32(n, 0, 4); // ACGT alphabet
+    let pattern = rng.vec_i32(PATTERN, 0, 4);
+    let want: Vec<i32> = (0..npos)
+        .map(|pos| (0..PATTERN).filter(|&j| target[pos + j] == pattern[j]).count() as i32)
+        .collect();
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(kernel(strided));
+    pb.native(native(strided));
+    pb.est_insts((npos as u64 / GRID as u64) * PATTERN as u64 * 4); // heavy
+    let d_target = pb.input_i32(&target);
+    let d_pattern = pb.input_i32(&pattern);
+    let d_scores = pb.zeroed(npos * 4);
+    let out = pb.out_arr(npos * 4);
+    pb.launch(
+        k,
+        (GRID, 1),
+        (BLOCK, 1),
+        vec![
+            HostArg::Buf(d_target),
+            HostArg::Buf(d_pattern),
+            HostArg::Buf(d_scores),
+            HostArg::I32(npos as i32),
+        ],
+    );
+    pb.read_back(d_scores, out);
+    pb.finish(check_i32(out, want))
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "ga",
+        suite: Suite::HeteroMark,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(|s| build_variant(s, true)),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 0.846, dpcpp: 1.598, hip: 2.256, cupbop: 1.959, openmp: None }),
+    }
+}
+
+pub fn benchmark_reordered() -> Benchmark {
+    Benchmark {
+        name: "ga-reordered",
+        suite: Suite::HeteroMark,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(|s| build_variant(s, false)),
+        device_artifact: None,
+        paper_secs: None,
+    }
+}

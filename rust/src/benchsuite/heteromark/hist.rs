@@ -1,0 +1,180 @@
+//! Hetero-Mark HIST — histogram with global atomics.
+//!
+//! The kernel is the paper's Fig 10 exemplar: each GPU thread walks the
+//! pixel array with stride = total-threads (coalesced on GPU, cache-
+//! hostile once serialised on CPU) and `atomicAdd`s into 256 bins.
+//! Variants:
+//!
+//! * `hist`            — as in CUDA (strided + atomics),
+//! * `hist-no-atomic`  — plain stores instead of atomics (Table V's
+//!   HIST-no-atomic ablation; racy by construction, checked loosely),
+//! * `hist-reordered`  — the Fig 10(c) reordering: each thread scans a
+//!   contiguous chunk (used for Table VI's LLC comparison).
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::HostArg;
+use crate::ir::{self, *};
+use crate::testkit::{bytes_to_i32s, Rng};
+
+pub const BINS: usize = 256;
+const GRID: u32 = 64;
+const BLOCK: u32 = 64;
+
+fn npixels(scale: Scale) -> usize {
+    pick(scale, 1 << 12, 1 << 18, 1 << 22) // paper: 4194304 pixels
+}
+
+/// The HIST kernel in CIR.
+/// `strided`: GPU-coalesced indexing (`i += nthreads`), else contiguous
+/// chunk per thread. `atomic`: atomicAdd vs plain store.
+fn kernel(strided: bool, atomic: bool) -> Kernel {
+    let mut b = KernelBuilder::new("hist");
+    let pixels = b.ptr_param("pixels", Ty::I32);
+    let bins = b.ptr_param("bins", Ty::I32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    let nthreads = b.assign(mul(bdim_x(), gdim_x()));
+    if strided {
+        // for (i = gid; i < n; i += nthreads)
+        b.for_(reg(gid), n.clone(), reg(nthreads), |b, i| {
+            let v = b.assign(at(pixels.clone(), reg(i), Ty::I32));
+            let bin = b.assign(rem(reg(v), c_i32(BINS as i32)));
+            if atomic {
+                b.atomic_rmw_void(AtomicOp::Add, index(bins.clone(), reg(bin), Ty::I32), c_i32(1), Ty::I32);
+            } else {
+                let old = b.assign(at(bins.clone(), reg(bin), Ty::I32));
+                b.store_at(bins.clone(), reg(bin), add(reg(old), c_i32(1)), Ty::I32);
+            }
+        });
+    } else {
+        // chunk = ceil(n / nthreads); for i in [gid*chunk, min((gid+1)*chunk, n))
+        let chunk = b.assign(div(sub(add(n.clone(), reg(nthreads)), c_i32(1)), reg(nthreads)));
+        let lo = b.assign(mul(reg(gid), reg(chunk)));
+        let hi = b.assign(min_e(add(reg(lo), reg(chunk)), n.clone()));
+        b.for_(reg(lo), reg(hi), c_i32(1), |b, i| {
+            let v = b.assign(at(pixels.clone(), reg(i), Ty::I32));
+            let bin = b.assign(rem(reg(v), c_i32(BINS as i32)));
+            if atomic {
+                b.atomic_rmw_void(AtomicOp::Add, index(bins.clone(), reg(bin), Ty::I32), c_i32(1), Ty::I32);
+            } else {
+                let old = b.assign(at(bins.clone(), reg(bin), Ty::I32));
+                b.store_at(bins.clone(), reg(bin), add(reg(old), c_i32(1)), Ty::I32);
+            }
+        });
+    }
+    b.build()
+}
+
+/// Native closure: the code CuPBoP's backend would emit for one block.
+fn native(strided: bool, atomic: bool) -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("hist_native", move |block_id, launch, mem, _scratch| {
+        let a = PackedArgs(&launch.packed);
+        let pixels_p = a.ptr(0);
+        let bins_p = a.ptr(1);
+        let n = a.i32(2) as usize;
+        let bs = launch.block_size();
+        let nthreads = bs * launch.total_blocks() as usize;
+        let pixels = unsafe { mem.slice_i32(pixels_p, n) };
+        for t in 0..bs {
+            let gid = block_id as usize * bs + t;
+            let it: Box<dyn Iterator<Item = usize>> = if strided {
+                Box::new((gid..n).step_by(nthreads))
+            } else {
+                let chunk = n.div_ceil(nthreads);
+                Box::new((gid * chunk)..((gid + 1) * chunk).min(n))
+            };
+            for i in it {
+                let bin = (pixels[i] as usize) % BINS;
+                if atomic {
+                    mem.atomic_rmw_i32(AtomicOp::Add, bins_p + (bin * 4) as u64, 1);
+                } else {
+                    let v = mem.read_i32(bins_p + (bin * 4) as u64);
+                    mem.write_i32(bins_p + (bin * 4) as u64, v + 1);
+                }
+            }
+        }
+    })
+}
+
+fn build_variant(scale: Scale, strided: bool, atomic: bool) -> BenchProgram {
+    let n = npixels(scale);
+    let mut rng = Rng::new(0x4157);
+    let pixels = rng.vec_i32(n, 0, 1 << 20);
+    // reference histogram
+    let mut want = vec![0i32; BINS];
+    for p in &pixels {
+        want[(*p as usize) % BINS] += 1;
+    }
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(kernel(strided, atomic));
+    pb.native(native(strided, atomic));
+    pb.est_insts((n / (GRID as usize)) as u64 * 6); // per-block work
+    let d_pixels = pb.input_i32(&pixels);
+    let d_bins = pb.zeroed(BINS * 4);
+    let out = pb.out_arr(BINS * 4);
+    pb.launch(
+        k,
+        (GRID, 1),
+        (BLOCK, 1),
+        vec![HostArg::Buf(d_pixels), HostArg::Buf(d_bins), HostArg::I32(n as i32)],
+    );
+    pb.read_back(d_bins, out);
+
+    let check: super::super::spec::Checker = if atomic {
+        check_i32(out, want)
+    } else {
+        // racy by design: only require plausible totals per bin
+        Box::new(move |arrays| {
+            let got = bytes_to_i32s(&arrays[out.0]);
+            let total: i64 = got.iter().map(|v| *v as i64).sum();
+            if got.len() != BINS {
+                return Err("bad length".into());
+            }
+            // with lost updates the total can only shrink
+            if total <= 0 || total > n as i64 {
+                return Err(format!("implausible histogram total {total}"));
+            }
+            Ok(())
+        })
+    };
+    pb.finish(check)
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "hist",
+        suite: Suite::HeteroMark,
+        features: &[Feature::AtomicRmw],
+        incorrect_on: &[],
+        build: Some(|s| build_variant(s, true, true)),
+        device_artifact: Some("hist"),
+        paper_secs: Some(PaperRow { cuda: 1.829, dpcpp: 2.529, hip: 2.309, cupbop: 2.78, openmp: None }),
+    }
+}
+
+pub fn benchmark_no_atomic() -> Benchmark {
+    Benchmark {
+        name: "hist-no-atomic",
+        suite: Suite::HeteroMark,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(|s| build_variant(s, true, false)),
+        device_artifact: None,
+        paper_secs: None,
+    }
+}
+
+pub fn benchmark_reordered() -> Benchmark {
+    Benchmark {
+        name: "hist-reordered",
+        suite: Suite::HeteroMark,
+        features: &[Feature::AtomicRmw],
+        incorrect_on: &[],
+        build: Some(|s| build_variant(s, false, true)),
+        device_artifact: None,
+        paper_secs: None,
+    }
+}

@@ -1,0 +1,162 @@
+//! Hetero-Mark KMEANS — nearest-cluster assignment.
+//!
+//! The kernel is Listing 9 (lines 9–21): for each point, compute the
+//! squared distance to every cluster over `nfeatures` and pick the
+//! minimum. Note the feature-major layout `feature[l*npoints + point]`
+//! — the GPU-coalesced pattern that serialises into a strided,
+//! cache-hostile walk on CPUs (§VI-C). DPC++ vectorizes the inner
+//! distance loop; LLVM does not (the paper's Table IV kmeans row).
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::HostArg;
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+const NFEATURES: usize = 34; // the paper's 100000_34.txt dataset shape
+const NCLUSTERS: usize = 5;
+const BLOCK: u32 = 128;
+
+fn npoints(scale: Scale) -> usize {
+    pick(scale, 512, 8192, 100_000)
+}
+
+fn kernel() -> Kernel {
+    let mut b = KernelBuilder::new("kmeans_assign");
+    let feature = b.ptr_param("feature", Ty::F32); // feature-major [l*npoints + p]
+    let clusters = b.ptr_param("clusters", Ty::F32); // [c*nfeatures + l]
+    let membership = b.ptr_param("membership", Ty::I32);
+    let npoints = b.scalar_param("npoints", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), npoints.clone()), |b| {
+        let index = b.assign(c_i32(-1));
+        let min_dist = b.assign(c_f32(f32::MAX));
+        b.for_(c_i32(0), c_i32(NCLUSTERS as i32), c_i32(1), |b, i| {
+            let dist = b.assign(c_f32(0.0));
+            b.for_(c_i32(0), c_i32(NFEATURES as i32), c_i32(1), |b, l| {
+                let f = at(feature.clone(), add(mul(reg(l), npoints.clone()), reg(gid)), Ty::F32);
+                let c = at(clusters.clone(), add(mul(reg(i), c_i32(NFEATURES as i32)), reg(l)), Ty::F32);
+                let d = b.assign(sub(f, c));
+                b.set(dist, add(reg(dist), mul(reg(d), reg(d))));
+            });
+            b.if_(lt(reg(dist), reg(min_dist)), |b| {
+                b.set(min_dist, reg(dist));
+                b.set(index, reg(i));
+            });
+        });
+        b.store_at(membership.clone(), reg(gid), reg(index), Ty::I32);
+    });
+    b.build()
+}
+
+fn native(vectorized: bool) -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    let name = if vectorized { "kmeans_vectorized" } else { "kmeans_native" };
+    NativeBlockFn::new(name, move |block_id, launch, mem, _| {
+        let a = PackedArgs(&launch.packed);
+        let np = a.i32(3) as usize;
+        let feature = unsafe { mem.slice_f32(a.ptr(0), NFEATURES * np) };
+        let clusters = unsafe { mem.slice_f32(a.ptr(1), NCLUSTERS * NFEATURES) };
+        let membership = unsafe { mem.slice_i32(a.ptr(2), np) };
+        let bs = launch.block_size();
+        for t in 0..bs {
+            let gid = block_id as usize * bs + t;
+            if gid >= np {
+                continue;
+            }
+            let mut best = -1i32;
+            let mut best_d = f32::MAX;
+            for c in 0..NCLUSTERS {
+                let row = &clusters[c * NFEATURES..(c + 1) * NFEATURES];
+                let d: f32 = if vectorized {
+                    // contiguous zip the autovectorizer handles — stands
+                    // in for DPC++'s vectorized inner loop
+                    row.iter()
+                        .enumerate()
+                        .map(|(l, cv)| {
+                            let f = feature[l * np + gid];
+                            (f - cv) * (f - cv)
+                        })
+                        .sum()
+                } else {
+                    let mut acc = 0.0f32;
+                    for (l, cv) in row.iter().enumerate() {
+                        let f = feature[l * np + gid];
+                        acc += (f - cv) * (f - cv);
+                    }
+                    acc
+                };
+                if d < best_d {
+                    best_d = d;
+                    best = c as i32;
+                }
+            }
+            membership[gid] = best;
+        }
+    })
+}
+
+fn host_ref(feature: &[f32], clusters: &[f32], np: usize) -> Vec<i32> {
+    (0..np)
+        .map(|p| {
+            let mut best = -1i32;
+            let mut best_d = f32::MAX;
+            for c in 0..NCLUSTERS {
+                let mut d = 0.0f32;
+                for l in 0..NFEATURES {
+                    let diff = feature[l * np + p] - clusters[c * NFEATURES + l];
+                    d += diff * diff;
+                }
+                if d < best_d {
+                    best_d = d;
+                    best = c as i32;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+fn build(scale: Scale) -> BenchProgram {
+    let np = npoints(scale);
+    let mut rng = Rng::new(0x32EA);
+    let feature = rng.vec_f32(NFEATURES * np, 0.0, 10.0);
+    let clusters = rng.vec_f32(NCLUSTERS * NFEATURES, 0.0, 10.0);
+    let want = host_ref(&feature, &clusters, np);
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(kernel());
+    pb.native(native(false));
+    pb.vectorized(native(true));
+    pb.est_insts((BLOCK as u64) * (NCLUSTERS * NFEATURES) as u64 * 6);
+    let d_feature = pb.input_f32(&feature);
+    let d_clusters = pb.input_f32(&clusters);
+    let d_member = pb.zeroed(np * 4);
+    let out = pb.out_arr(np * 4);
+    let grid = (np as u32).div_ceil(BLOCK);
+    pb.launch(
+        k,
+        (grid, 1),
+        (BLOCK, 1),
+        vec![
+            HostArg::Buf(d_feature),
+            HostArg::Buf(d_clusters),
+            HostArg::Buf(d_member),
+            HostArg::I32(np as i32),
+        ],
+    );
+    pb.read_back(d_member, out);
+    pb.finish(check_i32(out, want))
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "kmeans",
+        suite: Suite::HeteroMark,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(build),
+        device_artifact: Some("kmeans"),
+        paper_secs: Some(PaperRow { cuda: 2.968, dpcpp: 1.513, hip: 4.581, cupbop: 5.165, openmp: None }),
+    }
+}

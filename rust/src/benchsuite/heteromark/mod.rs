@@ -1,0 +1,74 @@
+//! Hetero-Mark benchmark suite (Table IV/V, Fig 7, Fig 9).
+//!
+//! Implemented: AES, BS, EP, FIR, GA, HIST, KMEANS, PR — plus the
+//! ablation variants the paper's Tables V/VI need (hist-no-atomic,
+//! hist-reordered, ga-reordered). BST and KNN rely on CUDA system-wide
+//! atomics no framework supports (spec-only rows); BE needs OpenCV
+//! (spec-only).
+
+pub mod aes;
+pub mod bs;
+pub mod ep;
+pub mod fir;
+pub mod ga;
+pub mod hist;
+pub mod kmeans;
+pub mod pr;
+
+use super::spec::{Benchmark, Suite};
+use crate::ir::Feature;
+
+fn bst() -> Benchmark {
+    Benchmark {
+        name: "bst",
+        suite: Suite::HeteroMark,
+        features: &[Feature::SystemAtomics],
+        incorrect_on: &[],
+        build: None,
+        device_artifact: None,
+        paper_secs: None,
+    }
+}
+
+fn knn() -> Benchmark {
+    Benchmark {
+        name: "knn",
+        suite: Suite::HeteroMark,
+        features: &[Feature::SystemAtomics],
+        incorrect_on: &[],
+        build: None,
+        device_artifact: None,
+        paper_secs: None,
+    }
+}
+
+fn be() -> Benchmark {
+    Benchmark {
+        name: "be",
+        suite: Suite::HeteroMark,
+        features: &[Feature::CudaLibrary], // OpenCV dependence
+        incorrect_on: &[],
+        build: None,
+        device_artifact: None,
+        paper_secs: None,
+    }
+}
+
+pub fn benchmarks() -> Vec<Benchmark> {
+    vec![
+        aes::benchmark(),
+        bs::benchmark(),
+        ep::benchmark(),
+        fir::benchmark(),
+        ga::benchmark(),
+        ga::benchmark_reordered(),
+        hist::benchmark(),
+        hist::benchmark_no_atomic(),
+        hist::benchmark_reordered(),
+        kmeans::benchmark(),
+        pr::benchmark(),
+        bst(),
+        knn(),
+        be(),
+    ]
+}

@@ -1,0 +1,134 @@
+//! Hetero-Mark PR — PageRank (sparse power iteration).
+//!
+//! Fixed-out-degree CSR graph; each thread accumulates one vertex's new
+//! rank from its in-neighbours, iterated by the host with ping-pong
+//! rank buffers. Moderate per-thread work, bandwidth-bound — one of
+//! the Fig 9 kernels whose CPU dots sit far under the roofline.
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_f32, pick, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::{HostArg, HostOp, LaunchOp};
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+const DEGREE: usize = 8;
+const DAMPING: f32 = 0.85;
+const BLOCK: u32 = 128;
+
+fn nvertices(scale: Scale) -> usize {
+    pick(scale, 512, 8192, 65536) // paper: 8192.data
+}
+
+fn iterations(scale: Scale) -> usize {
+    pick(scale, 2, 8, 32)
+}
+
+fn kernel() -> Kernel {
+    let mut b = KernelBuilder::new("pagerank");
+    let src = b.ptr_param("src", Ty::I32); // in-neighbour ids, n*DEGREE
+    let rank_in = b.ptr_param("rank_in", Ty::F32);
+    let rank_out = b.ptr_param("rank_out", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let acc = b.assign(c_f32(0.0));
+        let base = b.assign(mul(reg(gid), c_i32(DEGREE as i32)));
+        b.for_(c_i32(0), c_i32(DEGREE as i32), c_i32(1), |b, e| {
+            let v = b.assign(at(src.clone(), add(reg(base), reg(e)), Ty::I32));
+            // contribution: rank[v] / out_degree (fixed DEGREE)
+            b.set(
+                acc,
+                add(reg(acc), div(at(rank_in.clone(), reg(v), Ty::F32), c_f32(DEGREE as f32))),
+            );
+        });
+        let damped = add(
+            c_f32((1.0 - DAMPING) / 1.0),
+            mul(c_f32(DAMPING), reg(acc)),
+        );
+        b.store_at(rank_out.clone(), reg(gid), damped, Ty::F32);
+    });
+    b.build()
+}
+
+fn native() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("pr_native", move |block_id, launch, mem, _| {
+        let a = PackedArgs(&launch.packed);
+        let n = a.i32(3) as usize;
+        let src = unsafe { mem.slice_i32(a.ptr(0), n * DEGREE) };
+        let rank_in = unsafe { mem.slice_f32(a.ptr(1), n) };
+        let rank_out = unsafe { mem.slice_f32(a.ptr(2), n) };
+        let bs = launch.block_size();
+        for t in 0..bs {
+            let gid = block_id as usize * bs + t;
+            if gid >= n {
+                continue;
+            }
+            let mut acc = 0.0f32;
+            for e in 0..DEGREE {
+                acc += rank_in[src[gid * DEGREE + e] as usize] / DEGREE as f32;
+            }
+            rank_out[gid] = (1.0 - DAMPING) + DAMPING * acc;
+        }
+    })
+}
+
+fn host_ref(src: &[i32], n: usize, iters: usize) -> Vec<f32> {
+    let mut rank = vec![1.0f32 / n as f32; n];
+    for _ in 0..iters {
+        let mut next = vec![0.0f32; n];
+        for (v, nx) in next.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for e in 0..DEGREE {
+                acc += rank[src[v * DEGREE + e] as usize] / DEGREE as f32;
+            }
+            *nx = (1.0 - DAMPING) + DAMPING * acc;
+        }
+        rank = next;
+    }
+    rank
+}
+
+fn build(scale: Scale) -> BenchProgram {
+    let n = nvertices(scale);
+    let iters = iterations(scale);
+    assert!(iters % 2 == 0, "ping-pong needs even iterations");
+    let mut rng = Rng::new(0x9127);
+    let src: Vec<i32> = (0..n * DEGREE).map(|_| rng.below(n as u64) as i32).collect();
+    let want = host_ref(&src, n, iters);
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(kernel());
+    pb.native(native());
+    pb.est_insts((BLOCK as u64) * DEGREE as u64 * 6);
+    let d_src = pb.input_i32(&src);
+    let init = vec![1.0f32 / n as f32; n];
+    let d_a = pb.input_f32(&init);
+    let d_b = pb.zeroed(n * 4);
+    let out = pb.out_arr(n * 4);
+    let grid = (n as u32).div_ceil(BLOCK);
+    let launch = |kernel, rin, rout| {
+        HostOp::Launch(LaunchOp {
+            kernel,
+            grid: (grid, 1),
+            block: (BLOCK, 1),
+            dyn_shmem: 0,
+            args: vec![HostArg::Buf(d_src), HostArg::Buf(rin), HostArg::Buf(rout), HostArg::I32(n as i32)],
+        })
+    };
+    pb.op(HostOp::Repeat { n: iters / 2, body: vec![launch(k, d_a, d_b), launch(k, d_b, d_a)] });
+    pb.read_back(d_a, out);
+    pb.finish(check_f32(out, want, 1e-4, 1e-6))
+}
+
+pub fn benchmark() -> Benchmark {
+    Benchmark {
+        name: "pr",
+        suite: Suite::HeteroMark,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(build),
+        device_artifact: Some("pr"),
+        paper_secs: Some(PaperRow { cuda: 2.836, dpcpp: 3.506, hip: 3.789, cupbop: 4.783, openmp: None }),
+    }
+}

@@ -1,0 +1,21 @@
+//! Benchmark suites — the paper's evaluation workloads, authored in CIR
+//! exactly as their CUDA sources are structured.
+//!
+//! * [`rodinia`] — Table II/IV (b+tree … streamcluster, plus the
+//!   unsupported-feature rows),
+//! * [`heteromark`] — Table IV/V, Fig 7, Fig 9 (AES, BS, EP, FIR, GA,
+//!   HIST, KMEANS, PR, plus BST/KNN stubs),
+//! * [`crystal`] — Table II's 13 SSB queries (warp shuffle, atomicCAS),
+//! * [`cloverleaf`] — Fig 8's HPC mini-app.
+
+pub mod cloverleaf;
+pub mod crystal;
+pub mod heteromark;
+pub mod rodinia;
+pub mod spec;
+pub mod util;
+
+pub use spec::{
+    all_benchmarks, build_program, run_on, Backend, BenchProgram, Benchmark, BuiltProgram,
+    ProblemSize, Scale, Suite,
+};

@@ -1,0 +1,346 @@
+//! Rodinia graph benchmarks: bfs, b+tree.
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::{HostArg, HostOp, LaunchOp};
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+// ------------------------------------------------------------------
+// bfs — frontier expansion with the classic two-kernel + host-flag
+// convergence loop (graph1MW_6 shape: fixed out-degree 6).
+// ------------------------------------------------------------------
+
+const DEGREE: usize = 6;
+const BFS_BLOCK: u32 = 128;
+
+fn bfs_n(scale: Scale) -> usize {
+    pick(scale, 256, 8192, 262_144) // paper: 1M vertices
+}
+
+/// Kernel 1: expand the current frontier.
+fn bfs_kernel1() -> Kernel {
+    let mut b = KernelBuilder::new("bfs_kernel1");
+    let edges = b.ptr_param("edges", Ty::I32); // n*DEGREE
+    let mask = b.ptr_param("mask", Ty::I32);
+    let updating = b.ptr_param("updating", Ty::I32);
+    let visited = b.ptr_param("visited", Ty::I32);
+    let cost = b.ptr_param("cost", Ty::I32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        b.if_(ne(at(mask.clone(), reg(gid), Ty::I32), c_i32(0)), |b| {
+            b.store_at(mask.clone(), reg(gid), c_i32(0), Ty::I32);
+            let my_cost = b.assign(at(cost.clone(), reg(gid), Ty::I32));
+            b.for_(c_i32(0), c_i32(DEGREE as i32), c_i32(1), |b, e| {
+                let nb = b.assign(at(
+                    edges.clone(),
+                    add(mul(reg(gid), c_i32(DEGREE as i32)), reg(e)),
+                    Ty::I32,
+                ));
+                b.if_(eq(at(visited.clone(), reg(nb), Ty::I32), c_i32(0)), |b| {
+                    b.store_at(cost.clone(), reg(nb), add(reg(my_cost), c_i32(1)), Ty::I32);
+                    b.store_at(updating.clone(), reg(nb), c_i32(1), Ty::I32);
+                });
+            });
+        });
+    });
+    b.build()
+}
+
+/// Kernel 2: promote updating→mask, set visited and the host flag.
+fn bfs_kernel2() -> Kernel {
+    let mut b = KernelBuilder::new("bfs_kernel2");
+    let mask = b.ptr_param("mask", Ty::I32);
+    let updating = b.ptr_param("updating", Ty::I32);
+    let visited = b.ptr_param("visited", Ty::I32);
+    let flag = b.ptr_param("flag", Ty::I32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        b.if_(ne(at(updating.clone(), reg(gid), Ty::I32), c_i32(0)), |b| {
+            b.store_at(mask.clone(), reg(gid), c_i32(1), Ty::I32);
+            b.store_at(visited.clone(), reg(gid), c_i32(1), Ty::I32);
+            b.store_at(updating.clone(), reg(gid), c_i32(0), Ty::I32);
+            b.store_at(flag.clone(), c_i32(0), c_i32(1), Ty::I32);
+        });
+    });
+    b.build()
+}
+
+fn bfs_native1() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("bfs1_native", move |block_id, launch, mem, _| {
+        let a = PackedArgs(&launch.packed);
+        let n = a.i32(5) as usize;
+        let edges = unsafe { mem.slice_i32(a.ptr(0), n * DEGREE) };
+        let mask = unsafe { mem.slice_i32(a.ptr(1), n) };
+        let updating = unsafe { mem.slice_i32(a.ptr(2), n) };
+        let visited = unsafe { mem.slice_i32(a.ptr(3), n) };
+        let cost = unsafe { mem.slice_i32(a.ptr(4), n) };
+        let bs = launch.block_size();
+        for t in 0..bs {
+            let v = block_id as usize * bs + t;
+            if v >= n || mask[v] == 0 {
+                continue;
+            }
+            mask[v] = 0;
+            let c = cost[v];
+            for e in 0..DEGREE {
+                let nb = edges[v * DEGREE + e] as usize;
+                if visited[nb] == 0 {
+                    cost[nb] = c + 1;
+                    updating[nb] = 1;
+                }
+            }
+        }
+    })
+}
+
+fn bfs_native2() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("bfs2_native", move |block_id, launch, mem, _| {
+        let a = PackedArgs(&launch.packed);
+        let n = a.i32(4) as usize;
+        let mask = unsafe { mem.slice_i32(a.ptr(0), n) };
+        let updating = unsafe { mem.slice_i32(a.ptr(1), n) };
+        let visited = unsafe { mem.slice_i32(a.ptr(2), n) };
+        let flag = unsafe { mem.slice_i32(a.ptr(3), 1) };
+        let bs = launch.block_size();
+        for t in 0..bs {
+            let v = block_id as usize * bs + t;
+            if v >= n || updating[v] == 0 {
+                continue;
+            }
+            mask[v] = 1;
+            visited[v] = 1;
+            updating[v] = 0;
+            flag[0] = 1;
+        }
+    })
+}
+
+fn bfs_host_ref(edges: &[i32], n: usize) -> Vec<i32> {
+    let mut cost = vec![-1i32; n];
+    cost[0] = 0;
+    let mut frontier = vec![0usize];
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for e in 0..DEGREE {
+                let nb = edges[v * DEGREE + e] as usize;
+                if cost[nb] == -1 {
+                    cost[nb] = cost[v] + 1;
+                    next.push(nb);
+                }
+            }
+        }
+        next.sort_unstable();
+        next.dedup();
+        frontier = next;
+    }
+    cost
+}
+
+fn bfs_build(scale: Scale) -> BenchProgram {
+    let n = bfs_n(scale);
+    let mut rng = Rng::new(0xBF5);
+    // ring + random edges keeps the graph connected
+    let mut edges = vec![0i32; n * DEGREE];
+    for v in 0..n {
+        edges[v * DEGREE] = ((v + 1) % n) as i32;
+        for e in 1..DEGREE {
+            edges[v * DEGREE + e] = rng.below(n as u64) as i32;
+        }
+    }
+    let want = bfs_host_ref(&edges, n);
+
+    let mut pb = ProgBuilder::new();
+    let k1 = pb.kernel(bfs_kernel1());
+    pb.native(bfs_native1());
+    pb.est_insts(BFS_BLOCK as u64 * DEGREE as u64 * 6);
+    let k2 = pb.kernel(bfs_kernel2());
+    pb.native(bfs_native2());
+    pb.est_insts(BFS_BLOCK as u64 * 6);
+
+    let d_edges = pb.input_i32(&edges);
+    let mut mask0 = vec![0i32; n];
+    mask0[0] = 1;
+    let d_mask = pb.input_i32(&mask0);
+    let d_updating = pb.zeroed(n * 4);
+    let mut visited0 = vec![0i32; n];
+    visited0[0] = 1;
+    let d_visited = pb.input_i32(&visited0);
+    let mut cost0 = vec![-1i32; n];
+    cost0[0] = 0;
+    let d_cost = pb.input_i32(&cost0);
+    let d_flag = pb.zeroed(4);
+    let out = pb.out_arr(n * 4);
+
+    let g = (n as u32).div_ceil(BFS_BLOCK);
+    pb.op(HostOp::WhileFlag {
+        flag: d_flag,
+        max_iters: n + 2,
+        body: vec![
+            HostOp::Launch(LaunchOp {
+                kernel: k1,
+                grid: (g, 1),
+                block: (BFS_BLOCK, 1),
+                dyn_shmem: 0,
+                args: vec![
+                    HostArg::Buf(d_edges),
+                    HostArg::Buf(d_mask),
+                    HostArg::Buf(d_updating),
+                    HostArg::Buf(d_visited),
+                    HostArg::Buf(d_cost),
+                    HostArg::I32(n as i32),
+                ],
+            }),
+            HostOp::Launch(LaunchOp {
+                kernel: k2,
+                grid: (g, 1),
+                block: (BFS_BLOCK, 1),
+                dyn_shmem: 0,
+                args: vec![
+                    HostArg::Buf(d_mask),
+                    HostArg::Buf(d_updating),
+                    HostArg::Buf(d_visited),
+                    HostArg::Buf(d_flag),
+                    HostArg::I32(n as i32),
+                ],
+            }),
+        ],
+    });
+    pb.read_back(d_cost, out);
+    pb.finish(check_i32(out, want))
+}
+
+pub fn bfs() -> Benchmark {
+    Benchmark {
+        name: "bfs",
+        suite: Suite::Rodinia,
+        features: &[],
+        incorrect_on: &[crate::compiler::Framework::Dpcpp],
+        build: Some(bfs_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 1.29, dpcpp: 1.555, hip: 1.267, cupbop: 1.136, openmp: Some(1.365) }),
+    }
+}
+
+// ------------------------------------------------------------------
+// b+tree — findK: batched point queries descending an array-packed
+// k-ary tree (the `extern "C"` host-code row of Table II).
+// ------------------------------------------------------------------
+
+const FANOUT: usize = 8;
+const BT_BLOCK: u32 = 64;
+
+fn btree_queries(scale: Scale) -> usize {
+    pick(scale, 256, 4096, 65536) // paper: 1M elements
+}
+
+/// Descend `levels` levels: at each node pick the child whose key
+/// range contains the query, then report the leaf payload.
+fn btree_kernel(levels: usize) -> Kernel {
+    let mut b = KernelBuilder::new("findK");
+    let keys = b.ptr_param("keys", Ty::I32); // per node: FANOUT separators
+    let payload = b.ptr_param("payload", Ty::I32); // leaf payloads
+    let queries = b.ptr_param("queries", Ty::I32);
+    let answers = b.ptr_param("answers", Ty::I32);
+    let nq = b.scalar_param("nq", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), nq.clone()), |b| {
+        let q = b.assign(at(queries.clone(), reg(gid), Ty::I32));
+        let node = b.assign(c_i32(0)); // breadth-first packed: root = 0
+        b.for_(c_i32(0), c_i32(levels as i32), c_i32(1), |b, _l| {
+            // linear scan of the node's separators (thread-local)
+            let child = b.assign(c_i32(0));
+            b.for_(c_i32(0), c_i32(FANOUT as i32 - 1), c_i32(1), |b, s| {
+                let sep = at(
+                    keys.clone(),
+                    add(mul(reg(node), c_i32(FANOUT as i32)), reg(s)),
+                    Ty::I32,
+                );
+                b.if_(ge(reg(q), sep), |b| {
+                    b.set(child, add(reg(s), c_i32(1)));
+                });
+            });
+            b.set(node, add(mul(reg(node), c_i32(FANOUT as i32)), add(reg(child), c_i32(1))));
+        });
+        b.store_at(answers.clone(), reg(gid), at(payload.clone(), reg(node), Ty::I32), Ty::I32);
+    });
+    b.build()
+}
+
+fn btree_build(scale: Scale) -> BenchProgram {
+    let nq = btree_queries(scale);
+    let levels = 3usize;
+    // breadth-first k-ary tree node count: 1 + F + F^2 (internal),
+    // leaves at level `levels` indexed in the same arithmetic space.
+    let total_nodes: usize = (0..=levels).map(|l| FANOUT.pow(l as u32)).sum();
+    let mut rng = Rng::new(0xB7EE);
+    // separators: each node gets FANOUT-1 increasing keys in [0, 1024)
+    let mut keys = vec![0i32; total_nodes * FANOUT];
+    for node in 0..total_nodes {
+        let mut seps: Vec<i32> = (0..FANOUT - 1).map(|_| rng.below(1024) as i32).collect();
+        seps.sort_unstable();
+        for (s, v) in seps.iter().enumerate() {
+            keys[node * FANOUT + s] = *v;
+        }
+    }
+    let payload: Vec<i32> = (0..total_nodes + FANOUT * total_nodes)
+        .map(|_| rng.next_u64() as i32)
+        .collect();
+    let queries = rng.vec_i32(nq, 0, 1024);
+    // host reference (same arithmetic descent)
+    let want: Vec<i32> = queries
+        .iter()
+        .map(|q| {
+            let mut node = 0usize;
+            for _ in 0..levels {
+                let mut child = 0usize;
+                for s in 0..FANOUT - 1 {
+                    if *q >= keys.get(node * FANOUT + s).copied().unwrap_or(i32::MAX) {
+                        child = s + 1;
+                    }
+                }
+                node = node * FANOUT + child + 1;
+            }
+            payload[node]
+        })
+        .collect();
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(btree_kernel(levels));
+    pb.est_insts(BT_BLOCK as u64 * (levels * FANOUT) as u64 * 4);
+    let d_keys = pb.input_i32(&keys);
+    let d_payload = pb.input_i32(&payload);
+    let d_q = pb.input_i32(&queries);
+    let d_ans = pb.zeroed(nq * 4);
+    let out = pb.out_arr(nq * 4);
+    pb.launch(
+        k,
+        ((nq as u32).div_ceil(BT_BLOCK), 1),
+        (BT_BLOCK, 1),
+        vec![
+            HostArg::Buf(d_keys),
+            HostArg::Buf(d_payload),
+            HostArg::Buf(d_q),
+            HostArg::Buf(d_ans),
+            HostArg::I32(nq as i32),
+        ],
+    );
+    pb.read_back(d_ans, out);
+    pb.finish(check_i32(out, want))
+}
+
+pub fn btree() -> Benchmark {
+    Benchmark {
+        name: "b+tree",
+        suite: Suite::Rodinia,
+        features: &[Feature::ExternC],
+        incorrect_on: &[],
+        build: Some(btree_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 1.459, dpcpp: 1.577, hip: f64::NAN, cupbop: 2.135, openmp: Some(1.56) }),
+    }
+}

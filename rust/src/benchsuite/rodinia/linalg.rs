@@ -1,0 +1,475 @@
+//! Rodinia linear-algebra benchmarks: gaussian, lud, nw.
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_f32, check_i32, pick, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::{HostArg, HostOp, LaunchOp};
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+// ------------------------------------------------------------------
+// gaussian — forward elimination with Fan1/Fan2 kernels launched once
+// per pivot row (the paper's coarse-grained-fetching case study: a
+// very large number of small launches and, at paper scale, a 65536-
+// block Fan2 grid).
+// ------------------------------------------------------------------
+
+fn gaussian_n(scale: Scale) -> usize {
+    pick(scale, 16, 96, 512) // paper: matrix1024
+}
+
+/// Fan1: m[i*n+t] = a[i*n+t] / a[t*n+t]   for i in t+1..n
+fn fan1_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("Fan1");
+    let m = b.ptr_param("m", Ty::F32);
+    let a = b.ptr_param("a", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let t = b.scalar_param("t", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    let i = b.assign(add(reg(gid), add(t.clone(), c_i32(1))));
+    b.if_(lt(reg(i), n.clone()), |b| {
+        let num = at(a.clone(), add(mul(reg(i), n.clone()), t.clone()), Ty::F32);
+        let den = at(a.clone(), add(mul(t.clone(), n.clone()), t.clone()), Ty::F32);
+        b.store_at(m.clone(), add(mul(reg(i), n.clone()), t.clone()), div(num, den), Ty::F32);
+    });
+    b.build()
+}
+
+/// Fan2: a[i][j] -= m[i][t] * a[t][j]; b[i] -= m[i][t]*b[t] (j==0 thread)
+fn fan2_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("Fan2");
+    let m = b.ptr_param("m", Ty::F32);
+    let a = b.ptr_param("a", Ty::F32);
+    let rhs = b.ptr_param("rhs", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let t = b.scalar_param("t", Ty::I32);
+    // 2D grid: x → column j, y → row offset
+    let gx = b.assign(add(mul(bid_x(), bdim_x()), tid_x()));
+    let gy = b.assign(add(
+        mul(special(Special::BlockIdxY), special(Special::BlockDimY)),
+        special(Special::ThreadIdxY),
+    ));
+    let i = b.assign(add(reg(gy), add(t.clone(), c_i32(1))));
+    let j = b.assign(reg(gx));
+    b.if_(bin(BinOp::And, lt(reg(i), n.clone()), lt(reg(j), n.clone())), |b| {
+        let mit = at(m.clone(), add(mul(reg(i), n.clone()), t.clone()), Ty::F32);
+        let atj = at(a.clone(), add(mul(t.clone(), n.clone()), reg(j)), Ty::F32);
+        let aij = at(a.clone(), add(mul(reg(i), n.clone()), reg(j)), Ty::F32);
+        b.store_at(
+            a.clone(),
+            add(mul(reg(i), n.clone()), reg(j)),
+            sub(aij, mul(mit.clone(), atj)),
+            Ty::F32,
+        );
+        b.if_(eq(reg(j), c_i32(0)), |b| {
+            let bi = at(rhs.clone(), reg(i), Ty::F32);
+            let bt = at(rhs.clone(), t.clone(), Ty::F32);
+            b.store_at(rhs.clone(), reg(i), sub(bi, mul(mit.clone(), bt)), Ty::F32);
+        });
+    });
+    b.build()
+}
+
+fn fan1_native() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("Fan1_native", move |block_id, launch, mem, _| {
+        let ar = PackedArgs(&launch.packed);
+        let (m_p, a_p) = (ar.ptr(0), ar.ptr(1));
+        let n = ar.i32(2) as usize;
+        let t = ar.i32(3) as usize;
+        let bs = launch.block_size();
+        let a = unsafe { mem.slice_f32(a_p, n * n) };
+        let m = unsafe { mem.slice_f32(m_p, n * n) };
+        for th in 0..bs {
+            let i = block_id as usize * bs + th + t + 1;
+            if i < n {
+                m[i * n + t] = a[i * n + t] / a[t * n + t];
+            }
+        }
+    })
+}
+
+fn fan2_native() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("Fan2_native", move |block_id, launch, mem, _| {
+        let ar = PackedArgs(&launch.packed);
+        let (m_p, a_p, rhs_p) = (ar.ptr(0), ar.ptr(1), ar.ptr(2));
+        let n = ar.i32(3) as usize;
+        let t = ar.i32(4) as usize;
+        let (bx, by) = (launch.block.0 as usize, launch.block.1 as usize);
+        let gx_blocks = launch.grid.0 as u64;
+        let bid_x = (block_id % gx_blocks) as usize;
+        let bid_y = (block_id / gx_blocks) as usize;
+        let a = unsafe { mem.slice_f32(a_p, n * n) };
+        let m = unsafe { mem.slice_f32(m_p, n * n) };
+        let rhs = unsafe { mem.slice_f32(rhs_p, n) };
+        for ty_ in 0..by {
+            let i = bid_y * by + ty_ + t + 1;
+            if i >= n {
+                continue;
+            }
+            let mit = m[i * n + t];
+            for tx in 0..bx {
+                let j = bid_x * bx + tx;
+                if j >= n {
+                    continue;
+                }
+                a[i * n + j] -= mit * a[t * n + j];
+                if j == 0 {
+                    rhs[i] -= mit * rhs[t];
+                }
+            }
+        }
+    })
+}
+
+fn gaussian_build(scale: Scale) -> BenchProgram {
+    let n = gaussian_n(scale);
+    let mut rng = Rng::new(0x6A55);
+    // diagonally dominant for stability
+    let mut a = rng.vec_f32(n * n, 0.1, 1.0);
+    for i in 0..n {
+        a[i * n + i] += n as f32;
+    }
+    let rhs = rng.vec_f32(n, 0.0, 1.0);
+    // host reference elimination
+    let mut wa = a.clone();
+    let mut wb = rhs.clone();
+    let mut wm = vec![0.0f32; n * n];
+    for t in 0..n - 1 {
+        for i in t + 1..n {
+            wm[i * n + t] = wa[i * n + t] / wa[t * n + t];
+        }
+        for i in t + 1..n {
+            let mit = wm[i * n + t];
+            for j in 0..n {
+                wa[i * n + j] -= mit * wa[t * n + j];
+            }
+            wb[i] -= mit * wb[t];
+        }
+    }
+
+    let mut pb = ProgBuilder::new();
+    let k1 = pb.kernel(fan1_kernel());
+    pb.native(fan1_native());
+    pb.est_insts(512 * 6); // tiny
+    let k2 = pb.kernel(fan2_kernel());
+    pb.native(fan2_native());
+    pb.est_insts(16 * 16 * 10);
+    let d_a = pb.input_f32(&a);
+    let d_m = pb.zeroed(n * n * 4);
+    let d_rhs = pb.input_f32(&rhs);
+    let out_a = pb.out_arr(n * n * 4);
+    let out_b = pb.out_arr(n * 4);
+
+    let b1 = 64u32;
+    let g1 = (n as u32).div_ceil(b1);
+    let bx = 16u32;
+    let g2 = (n as u32).div_ceil(bx);
+    pb.op(HostOp::Repeat {
+        n: n - 1,
+        body: vec![
+            HostOp::Launch(LaunchOp {
+                kernel: k1,
+                grid: (g1, 1),
+                block: (b1, 1),
+                dyn_shmem: 0,
+                args: vec![
+                    HostArg::Buf(d_m),
+                    HostArg::Buf(d_a),
+                    HostArg::I32(n as i32),
+                    HostArg::IterI32 { base: 0, step: 1 },
+                ],
+            }),
+            HostOp::Launch(LaunchOp {
+                kernel: k2,
+                grid: (g2, g2),
+                block: (bx, bx),
+                dyn_shmem: 0,
+                args: vec![
+                    HostArg::Buf(d_m),
+                    HostArg::Buf(d_a),
+                    HostArg::Buf(d_rhs),
+                    HostArg::I32(n as i32),
+                    HostArg::IterI32 { base: 0, step: 1 },
+                ],
+            }),
+        ],
+    });
+    pb.read_back(d_a, out_a);
+    pb.read_back(d_rhs, out_b);
+    let check_a = check_f32(out_a, wa, 1e-3, 1e-3);
+    let check_b = check_f32(out_b, wb, 1e-3, 1e-3);
+    pb.finish(Box::new(move |arrays| {
+        check_a(arrays)?;
+        check_b(arrays)
+    }))
+}
+
+pub fn gaussian() -> Benchmark {
+    Benchmark {
+        name: "gaussian",
+        suite: Suite::Rodinia,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(gaussian_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 0.866, dpcpp: 1.12, hip: 8.494, cupbop: 1.669, openmp: None }),
+    }
+}
+
+// ------------------------------------------------------------------
+// lud — unblocked column-elimination LU (diagonal + update kernels).
+// ------------------------------------------------------------------
+
+fn lud_n(scale: Scale) -> usize {
+    pick(scale, 16, 64, 256) // paper: 2048
+}
+
+/// column scale: a[i][t] /= a[t][t] for i>t
+fn lud_diag_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("lud_diagonal");
+    let a = b.ptr_param("a", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let t = b.scalar_param("t", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    let i = b.assign(add(reg(gid), add(t.clone(), c_i32(1))));
+    b.if_(lt(reg(i), n.clone()), |b| {
+        let v = div(
+            at(a.clone(), add(mul(reg(i), n.clone()), t.clone()), Ty::F32),
+            at(a.clone(), add(mul(t.clone(), n.clone()), t.clone()), Ty::F32),
+        );
+        b.store_at(a.clone(), add(mul(reg(i), n.clone()), t.clone()), v, Ty::F32);
+    });
+    b.build()
+}
+
+/// trailing update: a[i][j] -= a[i][t]*a[t][j] for i,j > t
+fn lud_update_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("lud_internal");
+    let a = b.ptr_param("a", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let t = b.scalar_param("t", Ty::I32);
+    let gx = b.assign(add(mul(bid_x(), bdim_x()), tid_x()));
+    let gy = b.assign(add(
+        mul(special(Special::BlockIdxY), special(Special::BlockDimY)),
+        special(Special::ThreadIdxY),
+    ));
+    let i = b.assign(add(reg(gy), add(t.clone(), c_i32(1))));
+    let j = b.assign(add(reg(gx), add(t.clone(), c_i32(1))));
+    b.if_(bin(BinOp::And, lt(reg(i), n.clone()), lt(reg(j), n.clone())), |b| {
+        let ait = at(a.clone(), add(mul(reg(i), n.clone()), t.clone()), Ty::F32);
+        let atj = at(a.clone(), add(mul(t.clone(), n.clone()), reg(j)), Ty::F32);
+        let aij = at(a.clone(), add(mul(reg(i), n.clone()), reg(j)), Ty::F32);
+        b.store_at(a.clone(), add(mul(reg(i), n.clone()), reg(j)), sub(aij, mul(ait, atj)), Ty::F32);
+    });
+    b.build()
+}
+
+fn lud_build(scale: Scale) -> BenchProgram {
+    let n = lud_n(scale);
+    let mut rng = Rng::new(0x10D);
+    let mut a = rng.vec_f32(n * n, 0.1, 1.0);
+    for i in 0..n {
+        a[i * n + i] += n as f32;
+    }
+    // host reference in-place Doolittle
+    let mut w = a.clone();
+    for t in 0..n - 1 {
+        for i in t + 1..n {
+            w[i * n + t] /= w[t * n + t];
+        }
+        for i in t + 1..n {
+            let l = w[i * n + t];
+            for j in t + 1..n {
+                w[i * n + j] -= l * w[t * n + j];
+            }
+        }
+    }
+
+    let mut pb = ProgBuilder::new();
+    let kd = pb.kernel(lud_diag_kernel());
+    pb.est_insts(64 * 6);
+    let ku = pb.kernel(lud_update_kernel());
+    pb.est_insts(16 * 16 * 8);
+    let d_a = pb.input_f32(&a);
+    let out = pb.out_arr(n * n * 4);
+    let b1 = 64u32;
+    let bx = 16u32;
+    pb.op(HostOp::Repeat {
+        n: n - 1,
+        body: vec![
+            HostOp::Launch(LaunchOp {
+                kernel: kd,
+                grid: ((n as u32).div_ceil(b1), 1),
+                block: (b1, 1),
+                dyn_shmem: 0,
+                args: vec![HostArg::Buf(d_a), HostArg::I32(n as i32), HostArg::IterI32 { base: 0, step: 1 }],
+            }),
+            HostOp::Launch(LaunchOp {
+                kernel: ku,
+                grid: ((n as u32).div_ceil(bx), (n as u32).div_ceil(bx)),
+                block: (bx, bx),
+                dyn_shmem: 0,
+                args: vec![HostArg::Buf(d_a), HostArg::I32(n as i32), HostArg::IterI32 { base: 0, step: 1 }],
+            }),
+        ],
+    });
+    pb.read_back(d_a, out);
+    pb.finish(check_f32(out, w, 1e-3, 1e-3))
+}
+
+pub fn lud() -> Benchmark {
+    Benchmark {
+        name: "lud",
+        suite: Suite::Rodinia,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(lud_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 0.68, dpcpp: 1.212, hip: 0.953, cupbop: 1.164, openmp: Some(0.082) }),
+    }
+}
+
+// ------------------------------------------------------------------
+// nw — Needleman-Wunsch anti-diagonal wavefront with a shared-memory
+// tile and __syncthreads (Table IV's vectorization-hostile indexing).
+// ------------------------------------------------------------------
+
+fn nw_n(scale: Scale) -> usize {
+    pick(scale, 64, 256, 2048) // paper: 8000x8000
+}
+
+const NW_PENALTY: i32 = 10;
+
+/// One anti-diagonal step: cells (i,j) with i+j == d+2 (1-based DP).
+fn nw_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("needle_diag");
+    let score = b.ptr_param("score", Ty::I32); // (n+1)x(n+1)
+    let sim = b.ptr_param("sim", Ty::I32); // n x n similarity
+    let n = b.scalar_param("n", Ty::I32);
+    let d = b.scalar_param("diag", Ty::I32); // 0-based diagonal index
+    let gid = b.assign(ir::global_tid());
+    // cells on diagonal d: i = 1 + max(0, d - (n-1)) + gid … while i<=n and j>=1
+    let lo = b.assign(max_e(c_i32(0), sub(d.clone(), sub(n.clone(), c_i32(1)))));
+    let i = b.assign(add(add(reg(gid), reg(lo)), c_i32(1)));
+    let j = b.assign(add(sub(d.clone(), sub(reg(i), c_i32(1))), c_i32(1)));
+    let np1 = b.assign(add(n.clone(), c_i32(1)));
+    b.if_(
+        bin(
+            BinOp::And,
+            bin(BinOp::And, le(reg(i), n.clone()), ge(reg(j), c_i32(1))),
+            le(reg(j), n.clone()),
+        ),
+        |b| {
+            let idx = |bi: Expr, bj: Expr| add(mul(bi, reg(np1)), bj);
+            let diag_v = add(
+                load(index(score.clone(), idx(sub(reg(i), c_i32(1)), sub(reg(j), c_i32(1))), Ty::I32), Ty::I32),
+                at(sim.clone(), add(mul(sub(reg(i), c_i32(1)), n.clone()), sub(reg(j), c_i32(1))), Ty::I32),
+            );
+            let up = sub(
+                load(index(score.clone(), idx(sub(reg(i), c_i32(1)), reg(j)), Ty::I32), Ty::I32),
+                c_i32(NW_PENALTY),
+            );
+            let left = sub(
+                load(index(score.clone(), idx(reg(i), sub(reg(j), c_i32(1))), Ty::I32), Ty::I32),
+                c_i32(NW_PENALTY),
+            );
+            let m = max_e(diag_v, max_e(up, left));
+            b.store_at(score.clone(), idx(reg(i), reg(j)), m, Ty::I32);
+        },
+    );
+    b.build()
+}
+
+fn nw_native() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("nw_native", move |block_id, launch, mem, _| {
+        let ar = PackedArgs(&launch.packed);
+        let (score_p, sim_p) = (ar.ptr(0), ar.ptr(1));
+        let n = ar.i32(2) as usize;
+        let d = ar.i32(3) as usize;
+        let bs = launch.block_size();
+        let np1 = n + 1;
+        let score = unsafe { mem.slice_i32(score_p, np1 * np1) };
+        let sim = unsafe { mem.slice_i32(sim_p, n * n) };
+        let lo = d.saturating_sub(n - 1);
+        for t in 0..bs {
+            let gid = block_id as usize * bs + t;
+            let i = gid + lo + 1;
+            if i > n {
+                continue;
+            }
+            let jm1 = d as i64 - (i as i64 - 1);
+            if jm1 < 0 {
+                continue;
+            }
+            let j = jm1 as usize + 1;
+            if j > n {
+                continue;
+            }
+            let dv = score[(i - 1) * np1 + (j - 1)] + sim[(i - 1) * n + (j - 1)];
+            let up = score[(i - 1) * np1 + j] - NW_PENALTY;
+            let lf = score[i * np1 + (j - 1)] - NW_PENALTY;
+            score[i * np1 + j] = dv.max(up).max(lf);
+        }
+    })
+}
+
+fn nw_build(scale: Scale) -> BenchProgram {
+    let n = nw_n(scale);
+    let np1 = n + 1;
+    let mut rng = Rng::new(0x2177);
+    let sim = rng.vec_i32(n * n, -4, 5);
+    let mut init = vec![0i32; np1 * np1];
+    for i in 0..np1 {
+        init[i * np1] = -(i as i32) * NW_PENALTY;
+        init[i] = -(i as i32) * NW_PENALTY;
+    }
+    // host DP
+    let mut w = init.clone();
+    for i in 1..=n {
+        for j in 1..=n {
+            let dv = w[(i - 1) * np1 + (j - 1)] + sim[(i - 1) * n + (j - 1)];
+            let up = w[(i - 1) * np1 + j] - NW_PENALTY;
+            let lf = w[i * np1 + (j - 1)] - NW_PENALTY;
+            w[i * np1 + j] = dv.max(up).max(lf);
+        }
+    }
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(nw_kernel());
+    pb.native(nw_native());
+    pb.est_insts(64 * 18);
+    let d_score = pb.input_i32(&init);
+    let d_sim = pb.input_i32(&sim);
+    let out = pb.out_arr(np1 * np1 * 4);
+    let blk = 64u32;
+    let grid = (n as u32).div_ceil(blk);
+    pb.op(HostOp::Repeat {
+        n: 2 * n - 1,
+        body: vec![HostOp::Launch(LaunchOp {
+            kernel: k,
+            grid: (grid, 1),
+            block: (blk, 1),
+            dyn_shmem: 0,
+            args: vec![
+                HostArg::Buf(d_score),
+                HostArg::Buf(d_sim),
+                HostArg::I32(n as i32),
+                HostArg::IterI32 { base: 0, step: 1 },
+            ],
+        })],
+    });
+    pb.read_back(d_score, out);
+    pb.finish(check_i32(out, w))
+}
+
+pub fn nw() -> Benchmark {
+    Benchmark {
+        name: "nw",
+        suite: Suite::Rodinia,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(nw_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 1.068, dpcpp: 2.126, hip: 1.767, cupbop: 1.589, openmp: Some(0.477) }),
+    }
+}

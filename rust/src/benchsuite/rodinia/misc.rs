@@ -1,0 +1,604 @@
+//! Rodinia miscellaneous benchmarks: backprop, huffman, myocyte, nn,
+//! particlefilter, streamcluster, cfd.
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_f32, check_i32, pick, ProgBuilder};
+use crate::host::{HostArg, HostOp, LaunchOp};
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+// ------------------------------------------------------------------
+// backprop — layer forward pass with a shared-memory tree reduction
+// (extern "C" host code; one block per hidden unit).
+// ------------------------------------------------------------------
+
+const BP_BLOCK: usize = 64;
+
+fn bp_dims(scale: Scale) -> (usize, usize) {
+    match scale {
+        Scale::Tiny => (64, 4),
+        Scale::Small => (1024, 16),
+        Scale::Paper => (65536, 16), // paper: 65536 input nodes
+    }
+}
+
+/// One block per hidden unit: strided partial sums into a shared tile,
+/// then a log2(BP_BLOCK)-round tree reduction (a barrier per round —
+/// the reduction is unrolled at kernel-construction time since CIR
+/// `For` steps are additive, not multiplicative).
+fn backprop_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("bpnn_layerforward");
+    let input = b.ptr_param("input", Ty::F32);
+    let weights = b.ptr_param("weights", Ty::F32);
+    let hidden = b.ptr_param("hidden", Ty::F32);
+    let n_in = b.scalar_param("n_in", Ty::I32);
+    let partial = b.shared_array("partial", Ty::F32, BP_BLOCK);
+    let tx = b.assign(tid_x());
+    let j = b.assign(bid_x());
+    let acc = b.assign(c_f32(0.0));
+    b.for_(reg(tx), n_in.clone(), bdim_x(), |b, i| {
+        let w = at(weights.clone(), add(mul(reg(j), n_in.clone()), reg(i)), Ty::F32);
+        b.set(acc, add(reg(acc), mul(w, at(input.clone(), reg(i), Ty::F32))));
+    });
+    b.store_at(partial.clone(), reg(tx), reg(acc), Ty::F32);
+    b.sync_threads();
+    // log2(BP_BLOCK) reduction rounds, each ending in a barrier
+    let mut stride = BP_BLOCK / 2;
+    while stride >= 1 {
+        b.if_(lt(reg(tx), c_i32(stride as i32)), |b| {
+            let lo = at(partial.clone(), reg(tx), Ty::F32);
+            let hi = at(partial.clone(), add(reg(tx), c_i32(stride as i32)), Ty::F32);
+            b.store_at(partial.clone(), reg(tx), add(lo, hi), Ty::F32);
+        });
+        b.sync_threads();
+        stride /= 2;
+    }
+    b.if_(eq(reg(tx), c_i32(0)), |b| {
+        // sigmoid(sum)
+        let s = at(partial.clone(), c_i32(0), Ty::F32);
+        let sig = div(c_f32(1.0), add(c_f32(1.0), un(UnOp::Exp, un(UnOp::Neg, s))));
+        b.store_at(hidden.clone(), reg(j), sig, Ty::F32);
+    });
+    b.build()
+}
+
+fn backprop_build(scale: Scale) -> BenchProgram {
+    let (n_in, n_hidden) = bp_dims(scale);
+    let mut rng = Rng::new(0xB9);
+    let input = rng.vec_f32(n_in, -1.0, 1.0);
+    let weights = rng.vec_f32(n_hidden * n_in, -0.1, 0.1);
+    let want: Vec<f32> = (0..n_hidden)
+        .map(|j| {
+            let s: f32 = (0..n_in).map(|i| weights[j * n_in + i] * input[i]).sum();
+            1.0 / (1.0 + (-s).exp())
+        })
+        .collect();
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(backprop_kernel());
+    pb.est_insts((n_in / BP_BLOCK * BP_BLOCK) as u64 * 8);
+    let d_in = pb.input_f32(&input);
+    let d_w = pb.input_f32(&weights);
+    let d_h = pb.zeroed(n_hidden * 4);
+    let out = pb.out_arr(n_hidden * 4);
+    pb.launch(
+        k,
+        (n_hidden as u32, 1),
+        (BP_BLOCK as u32, 1),
+        vec![HostArg::Buf(d_in), HostArg::Buf(d_w), HostArg::Buf(d_h), HostArg::I32(n_in as i32)],
+    );
+    pb.read_back(d_h, out);
+    pb.finish(check_f32(out, want, 1e-4, 1e-5))
+}
+
+pub fn backprop() -> Benchmark {
+    Benchmark {
+        name: "backprop",
+        suite: Suite::Rodinia,
+        features: &[Feature::ExternC, Feature::StaticSharedMem, Feature::SyncThreads],
+        incorrect_on: &[],
+        build: Some(backprop_build),
+        device_artifact: Some("backprop"),
+        paper_secs: Some(PaperRow { cuda: 0.672, dpcpp: 2.51, hip: f64::NAN, cupbop: 1.964, openmp: None }),
+    }
+}
+
+// ------------------------------------------------------------------
+// huffman — byte-frequency histogram in *dynamic* shared memory with
+// per-block merge (the `extern shared memory definition` row).
+// ------------------------------------------------------------------
+
+const HUFF_BINS: usize = 256;
+const HUFF_BLOCK: u32 = 64;
+
+fn huffman_n(scale: Scale) -> usize {
+    pick(scale, 4 << 10, 64 << 10, 1 << 20)
+}
+
+fn huffman_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("histo_kernel");
+    let data = b.ptr_param("data", Ty::I32);
+    let freq = b.ptr_param("freq", Ty::I32);
+    let n = b.scalar_param("n", Ty::I32);
+    let local = b.dyn_shared(Ty::I32); // extern __shared__ int local[]
+    let tx = b.assign(tid_x());
+    // zero local bins
+    b.for_(reg(tx), c_i32(HUFF_BINS as i32), bdim_x(), |b, i| {
+        b.store_at(local.clone(), reg(i), c_i32(0), Ty::I32);
+    });
+    b.sync_threads();
+    // accumulate into shared bins (shared atomics)
+    let gid = b.assign(ir::global_tid());
+    let stride = b.assign(mul(bdim_x(), gdim_x()));
+    b.for_(reg(gid), n.clone(), reg(stride), |b, i| {
+        let byte = bin(BinOp::And, at(data.clone(), reg(i), Ty::I32), c_i32(0xff));
+        b.atomic_rmw_void(AtomicOp::Add, index(local.clone(), byte, Ty::I32), c_i32(1), Ty::I32);
+    });
+    b.sync_threads();
+    // merge to global
+    b.for_(reg(tx), c_i32(HUFF_BINS as i32), bdim_x(), |b, i| {
+        let v = at(local.clone(), reg(i), Ty::I32);
+        b.atomic_rmw_void(AtomicOp::Add, index(freq.clone(), reg(i), Ty::I32), v, Ty::I32);
+    });
+    b.build()
+}
+
+fn huffman_build(scale: Scale) -> BenchProgram {
+    let n = huffman_n(scale);
+    let mut rng = Rng::new(0x48);
+    let data = rng.vec_i32(n, 0, 256);
+    let mut want = vec![0i32; HUFF_BINS];
+    for d in &data {
+        want[(*d & 0xff) as usize] += 1;
+    }
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(huffman_kernel());
+    pb.est_insts((n as u64 / 32) * 6);
+    let d_data = pb.input_i32(&data);
+    let d_freq = pb.zeroed(HUFF_BINS * 4);
+    let out = pb.out_arr(HUFF_BINS * 4);
+    pb.launch_shmem(
+        k,
+        (32, 1),
+        (HUFF_BLOCK, 1),
+        HUFF_BINS * 4,
+        vec![HostArg::Buf(d_data), HostArg::Buf(d_freq), HostArg::I32(n as i32)],
+    );
+    pb.read_back(d_freq, out);
+    pb.finish(check_i32(out, want))
+}
+
+pub fn huffman() -> Benchmark {
+    Benchmark {
+        name: "huffman",
+        suite: Suite::Rodinia,
+        features: &[Feature::DynSharedMem, Feature::SyncThreads, Feature::AtomicRmw],
+        incorrect_on: &[],
+        build: Some(huffman_build),
+        device_artifact: None,
+        paper_secs: None,
+    }
+}
+
+// ------------------------------------------------------------------
+// myocyte — cardiac ODE integration: thousands of *tiny* launches
+// (grid 2, block 32); the aggressive-fetching case study of §V-B.
+// ------------------------------------------------------------------
+
+fn myocyte_steps(scale: Scale) -> usize {
+    pick(scale, 38, 378, 3781) // paper: 3781 launches
+}
+
+fn myocyte_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("myocyte_solver");
+    let y = b.ptr_param("y", Ty::F32);
+    let params = b.ptr_param("params", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let v = b.assign(at(y.clone(), reg(gid), Ty::F32));
+        let p = b.assign(at(params.clone(), reg(gid), Ty::F32));
+        // one RK-ish compute-dense step: v += dt * (p*v - v^3)
+        let dt = c_f32(0.001);
+        let f = sub(mul(reg(p), reg(v)), mul(reg(v), mul(reg(v), reg(v))));
+        b.store_at(y.clone(), reg(gid), add(reg(v), mul(dt, f)), Ty::F32);
+    });
+    b.build()
+}
+
+fn myocyte_build(scale: Scale) -> BenchProgram {
+    let steps = myocyte_steps(scale);
+    let n = 64usize; // grid 2 × block 32
+    let mut rng = Rng::new(0x2104);
+    let y0 = rng.vec_f32(n, 0.1, 1.0);
+    let params = rng.vec_f32(n, 0.5, 1.5);
+    let mut want = y0.clone();
+    for _ in 0..steps {
+        for i in 0..n {
+            let v = want[i];
+            want[i] = v + 0.001 * (params[i] * v - v * v * v);
+        }
+    }
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(myocyte_kernel());
+    pb.est_insts(32 * 10); // tiny per block → aggressive fetching
+    let d_y = pb.input_f32(&y0);
+    let d_p = pb.input_f32(&params);
+    let out = pb.out_arr(n * 4);
+    pb.op(HostOp::Repeat {
+        n: steps,
+        body: vec![HostOp::Launch(LaunchOp {
+            kernel: k,
+            grid: (2, 1),
+            block: (32, 1),
+            dyn_shmem: 0,
+            args: vec![HostArg::Buf(d_y), HostArg::Buf(d_p), HostArg::I32(n as i32)],
+        })],
+    });
+    pb.read_back(d_y, out);
+    pb.finish(check_f32(out, want, 1e-4, 1e-5))
+}
+
+pub fn myocyte() -> Benchmark {
+    Benchmark {
+        name: "myocyte",
+        suite: Suite::Rodinia,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(myocyte_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 1.087, dpcpp: 3.327, hip: 0.397, cupbop: 0.151, openmp: None }),
+    }
+}
+
+// ------------------------------------------------------------------
+// nn — nearest neighbours: per-record great-circle-ish distance.
+// ------------------------------------------------------------------
+
+fn nn_records(scale: Scale) -> usize {
+    pick(scale, 1024, 65536, 1_280_000) // paper: 1280k records
+}
+
+fn nn_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("euclid");
+    let lat = b.ptr_param("lat", Ty::F32);
+    let lng = b.ptr_param("lng", Ty::F32);
+    let dist = b.ptr_param("dist", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let qlat = b.scalar_param("qlat", Ty::F32);
+    let qlng = b.scalar_param("qlng", Ty::F32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let dla = sub(at(lat.clone(), reg(gid), Ty::F32), qlat.clone());
+        let dlo = sub(at(lng.clone(), reg(gid), Ty::F32), qlng.clone());
+        let a = b.assign(dla);
+        let o = b.assign(dlo);
+        b.store_at(
+            dist.clone(),
+            reg(gid),
+            un(UnOp::Sqrt, add(mul(reg(a), reg(a)), mul(reg(o), reg(o)))),
+            Ty::F32,
+        );
+    });
+    b.build()
+}
+
+fn nn_build(scale: Scale) -> BenchProgram {
+    let n = nn_records(scale);
+    let (qlat, qlng) = (30.0f32, -90.0f32);
+    let mut rng = Rng::new(0x2221);
+    let lat = rng.vec_f32(n, 0.0, 60.0);
+    let lng = rng.vec_f32(n, -180.0, 180.0);
+    let want: Vec<f32> = (0..n)
+        .map(|i| ((lat[i] - qlat).powi(2) + (lng[i] - qlng).powi(2)).sqrt())
+        .collect();
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(nn_kernel());
+    pb.est_insts(128 * 10);
+    let d_lat = pb.input_f32(&lat);
+    let d_lng = pb.input_f32(&lng);
+    let d_dist = pb.zeroed(n * 4);
+    let out = pb.out_arr(n * 4);
+    pb.launch(
+        k,
+        ((n as u32).div_ceil(128), 1),
+        (128, 1),
+        vec![
+            HostArg::Buf(d_lat),
+            HostArg::Buf(d_lng),
+            HostArg::Buf(d_dist),
+            HostArg::I32(n as i32),
+            HostArg::F32(qlat),
+            HostArg::F32(qlng),
+        ],
+    );
+    pb.read_back(d_dist, out);
+    pb.finish(check_f32(out, want, 1e-4, 1e-4))
+}
+
+pub fn nn() -> Benchmark {
+    Benchmark {
+        name: "nn",
+        suite: Suite::Rodinia,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(nn_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 0.443, dpcpp: 2.004, hip: 1.198, cupbop: 1.309, openmp: None }),
+    }
+}
+
+// ------------------------------------------------------------------
+// particlefilter — likelihood update + normalisation via atomic sum.
+// ------------------------------------------------------------------
+
+fn pf_particles(scale: Scale) -> usize {
+    pick(scale, 256, 4096, 100_000) // paper: -np 1000 over many frames
+}
+
+fn pf_weight_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("likelihood_kernel");
+    let xs = b.ptr_param("xs", Ty::F32);
+    let w = b.ptr_param("w", Ty::F32);
+    let sum = b.ptr_param("sum", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let obs = b.scalar_param("obs", Ty::F32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let d = b.assign(sub(at(xs.clone(), reg(gid), Ty::F32), obs.clone()));
+        let lik = un(UnOp::Exp, un(UnOp::Neg, mul(reg(d), reg(d))));
+        let nw = b.assign(mul(at(w.clone(), reg(gid), Ty::F32), lik));
+        b.store_at(w.clone(), reg(gid), reg(nw), Ty::F32);
+        b.atomic_rmw_void(AtomicOp::Add, sum.clone(), reg(nw), Ty::F32);
+    });
+    b.build()
+}
+
+fn pf_normalize_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("normalize_weights");
+    let w = b.ptr_param("w", Ty::F32);
+    let sum = b.ptr_param("sum", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let s = at(sum.clone(), c_i32(0), Ty::F32);
+        b.store_at(w.clone(), reg(gid), div(at(w.clone(), reg(gid), Ty::F32), s), Ty::F32);
+    });
+    b.build()
+}
+
+fn particlefilter_build(scale: Scale) -> BenchProgram {
+    let n = pf_particles(scale);
+    let obs = 0.3f32;
+    let mut rng = Rng::new(0xBF11);
+    let xs = rng.vec_f32(n, -1.0, 1.0);
+    let w0 = vec![1.0f32 / n as f32; n];
+    // host reference
+    let mut w = w0.clone();
+    let mut s = 0.0f64;
+    for i in 0..n {
+        let d = xs[i] - obs;
+        w[i] *= (-d * d).exp();
+        s += w[i] as f64;
+    }
+    let want: Vec<f32> = w.iter().map(|x| (*x as f64 / s) as f32).collect();
+
+    let mut pb = ProgBuilder::new();
+    let k1 = pb.kernel(pf_weight_kernel());
+    pb.est_insts(128 * 14);
+    let k2 = pb.kernel(pf_normalize_kernel());
+    pb.est_insts(128 * 5);
+    let d_xs = pb.input_f32(&xs);
+    let d_w = pb.input_f32(&w0);
+    let d_sum = pb.zeroed(4);
+    let out = pb.out_arr(n * 4);
+    let g = (n as u32).div_ceil(128);
+    pb.launch(
+        k1,
+        (g, 1),
+        (128, 1),
+        vec![HostArg::Buf(d_xs), HostArg::Buf(d_w), HostArg::Buf(d_sum), HostArg::I32(n as i32), HostArg::F32(obs)],
+    );
+    pb.launch(
+        k2,
+        (g, 1),
+        (128, 1),
+        vec![HostArg::Buf(d_w), HostArg::Buf(d_sum), HostArg::I32(n as i32)],
+    );
+    pb.read_back(d_w, out);
+    // atomic f32 sum order differs from host order — loose tolerance
+    pb.finish(check_f32(out, want, 1e-2, 1e-5))
+}
+
+pub fn particlefilter() -> Benchmark {
+    Benchmark {
+        name: "particlefilter",
+        suite: Suite::Rodinia,
+        features: &[Feature::AtomicRmw],
+        incorrect_on: &[crate::compiler::Framework::Dpcpp],
+        build: Some(particlefilter_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 0.751, dpcpp: 0.889, hip: 0.836, cupbop: 0.833, openmp: Some(0.702) }),
+    }
+}
+
+// ------------------------------------------------------------------
+// streamcluster — pgain-style assignment cost against a candidate
+// centre (65536 points × 256-dim at paper scale).
+// ------------------------------------------------------------------
+
+fn sc_dims(scale: Scale) -> (usize, usize) {
+    match scale {
+        Scale::Tiny => (128, 16),
+        Scale::Small => (2048, 64),
+        Scale::Paper => (65536, 256),
+    }
+}
+
+fn sc_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("pgain_kernel");
+    let pts = b.ptr_param("pts", Ty::F32); // n x dim
+    let center = b.ptr_param("center", Ty::F32); // dim
+    let weight = b.ptr_param("weight", Ty::F32); // n
+    let cost = b.ptr_param("cost", Ty::F32); // n (current assignment cost)
+    let delta = b.ptr_param("delta", Ty::F32); // n out
+    let n = b.scalar_param("n", Ty::I32);
+    let dim = b.scalar_param("dim", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let acc = b.assign(c_f32(0.0));
+        b.for_(c_i32(0), dim.clone(), c_i32(1), |b, d| {
+            let x = sub(
+                at(pts.clone(), add(mul(reg(gid), dim.clone()), reg(d)), Ty::F32),
+                at(center.clone(), reg(d), Ty::F32),
+            );
+            let x2 = b.assign(x);
+            b.set(acc, add(reg(acc), mul(reg(x2), reg(x2))));
+        });
+        let dl = sub(mul(reg(acc), at(weight.clone(), reg(gid), Ty::F32)), at(cost.clone(), reg(gid), Ty::F32));
+        b.store_at(delta.clone(), reg(gid), dl, Ty::F32);
+    });
+    b.build()
+}
+
+fn streamcluster_build(scale: Scale) -> BenchProgram {
+    let (n, dim) = sc_dims(scale);
+    let mut rng = Rng::new(0x57C);
+    let pts = rng.vec_f32(n * dim, 0.0, 1.0);
+    let center = rng.vec_f32(dim, 0.0, 1.0);
+    let weight = rng.vec_f32(n, 0.5, 2.0);
+    let cost = rng.vec_f32(n, 0.0, 5.0);
+    let want: Vec<f32> = (0..n)
+        .map(|i| {
+            let mut acc = 0.0f32;
+            for d in 0..dim {
+                let x = pts[i * dim + d] - center[d];
+                acc += x * x;
+            }
+            acc * weight[i] - cost[i]
+        })
+        .collect();
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(sc_kernel());
+    pb.est_insts(128 * dim as u64 * 6);
+    let d_pts = pb.input_f32(&pts);
+    let d_c = pb.input_f32(&center);
+    let d_w = pb.input_f32(&weight);
+    let d_cost = pb.input_f32(&cost);
+    let d_delta = pb.zeroed(n * 4);
+    let out = pb.out_arr(n * 4);
+    pb.launch(
+        k,
+        ((n as u32).div_ceil(128), 1),
+        (128, 1),
+        vec![
+            HostArg::Buf(d_pts),
+            HostArg::Buf(d_c),
+            HostArg::Buf(d_w),
+            HostArg::Buf(d_cost),
+            HostArg::Buf(d_delta),
+            HostArg::I32(n as i32),
+            HostArg::I32(dim as i32),
+        ],
+    );
+    pb.read_back(d_delta, out);
+    pb.finish(check_f32(out, want, 1e-3, 1e-3))
+}
+
+pub fn streamcluster() -> Benchmark {
+    Benchmark {
+        name: "streamcluster",
+        suite: Suite::Rodinia,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(streamcluster_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 6.607, dpcpp: 14.804, hip: 21.09, cupbop: 18.435, openmp: Some(13.977) }),
+    }
+}
+
+// ------------------------------------------------------------------
+// cfd — Euler solver flux step over an unstructured mesh (the
+// cuGetErrorName driver-API row; HIP-CPU cannot build it).
+// ------------------------------------------------------------------
+
+fn cfd_n(scale: Scale) -> usize {
+    pick(scale, 256, 4096, 97_000)
+}
+
+const CFD_NNB: usize = 4;
+
+fn cfd_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("cuda_compute_flux");
+    let rho = b.ptr_param("rho", Ty::F32);
+    let nbr = b.ptr_param("nbr", Ty::I32); // n x 4 neighbour ids (-1 = boundary)
+    let out = b.ptr_param("out", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), n.clone()), |b| {
+        let c = b.assign(at(rho.clone(), reg(gid), Ty::F32));
+        let flux = b.assign(c_f32(0.0));
+        b.for_(c_i32(0), c_i32(CFD_NNB as i32), c_i32(1), |b, e| {
+            let nb = b.assign(at(nbr.clone(), add(mul(reg(gid), c_i32(CFD_NNB as i32)), reg(e)), Ty::I32));
+            b.if_(ge(reg(nb), c_i32(0)), |b| {
+                let rv = at(rho.clone(), reg(nb), Ty::F32);
+                b.set(flux, add(reg(flux), sub(rv, reg(c))));
+            });
+        });
+        b.store_at(out.clone(), reg(gid), add(reg(c), mul(c_f32(0.2), reg(flux))), Ty::F32);
+    });
+    b.build()
+}
+
+fn cfd_build(scale: Scale) -> BenchProgram {
+    let n = cfd_n(scale);
+    let mut rng = Rng::new(0xCFD);
+    let rho = rng.vec_f32(n, 0.5, 2.0);
+    let mut nbr = vec![0i32; n * CFD_NNB];
+    for v in 0..n {
+        for e in 0..CFD_NNB {
+            nbr[v * CFD_NNB + e] =
+                if rng.below(8) == 0 { -1 } else { rng.below(n as u64) as i32 };
+        }
+    }
+    let want: Vec<f32> = (0..n)
+        .map(|v| {
+            let c = rho[v];
+            let mut flux = 0.0f32;
+            for e in 0..CFD_NNB {
+                let nb = nbr[v * CFD_NNB + e];
+                if nb >= 0 {
+                    flux += rho[nb as usize] - c;
+                }
+            }
+            c + 0.2 * flux
+        })
+        .collect();
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(cfd_kernel());
+    pb.est_insts(128 * CFD_NNB as u64 * 8);
+    let d_rho = pb.input_f32(&rho);
+    let d_nbr = pb.input_i32(&nbr);
+    let d_out = pb.zeroed(n * 4);
+    let out = pb.out_arr(n * 4);
+    pb.launch(
+        k,
+        ((n as u32).div_ceil(128), 1),
+        (128, 1),
+        vec![HostArg::Buf(d_rho), HostArg::Buf(d_nbr), HostArg::Buf(d_out), HostArg::I32(n as i32)],
+    );
+    pb.read_back(d_out, out);
+    pb.finish(check_f32(out, want, 1e-4, 1e-5))
+}
+
+pub fn cfd() -> Benchmark {
+    Benchmark {
+        name: "cfd",
+        suite: Suite::Rodinia,
+        features: &[Feature::DriverApi],
+        incorrect_on: &[],
+        build: Some(cfd_build),
+        device_artifact: None,
+        paper_secs: None,
+    }
+}

@@ -1,0 +1,647 @@
+//! Rodinia stencil benchmarks: hotspot, hotspot3D, pathfinder, srad.
+
+use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::util::{check_f32, PackedArgs, ProgBuilder};
+use crate::exec::NativeBlockFn;
+use crate::host::{HostArg, HostOp, LaunchOp};
+use crate::ir::{self, *};
+use crate::testkit::Rng;
+
+// ------------------------------------------------------------------
+// hotspot — 2D thermal stencil with a shared-memory tile + barrier.
+// ------------------------------------------------------------------
+
+const HS_BLOCK: u32 = 16;
+const HS_K: f32 = 0.1;
+
+fn hotspot_dims(scale: Scale) -> (usize, usize) {
+    match scale {
+        Scale::Tiny => (32, 2),
+        Scale::Small => (128, 6),
+        Scale::Paper => (1024, 20), // paper: 1024x1024
+    }
+}
+
+/// One time step: load the tile into shared memory, sync, update from
+/// shared (interior) / global (halo).
+fn hotspot_kernel() -> Kernel {
+    let bdim = HS_BLOCK as i32;
+    let mut b = KernelBuilder::new("hotspot");
+    let t_in = b.ptr_param("t_in", Ty::F32);
+    let power = b.ptr_param("power", Ty::F32);
+    let t_out = b.ptr_param("t_out", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let tile = b.shared_array("tile", Ty::F32, (HS_BLOCK * HS_BLOCK) as usize);
+
+    let tx = b.assign(tid_x());
+    let ty = b.assign(special(Special::ThreadIdxY));
+    let gx = b.assign(add(mul(bid_x(), c_i32(bdim)), reg(tx)));
+    let gy = b.assign(add(mul(special(Special::BlockIdxY), c_i32(bdim)), reg(ty)));
+    let idx = b.assign(add(mul(reg(gy), n.clone()), reg(gx)));
+    let lidx = b.assign(add(mul(reg(ty), c_i32(bdim)), reg(tx)));
+
+    let inb = bin(BinOp::And, lt(reg(gx), n.clone()), lt(reg(gy), n.clone()));
+    b.if_(inb.clone(), |b| {
+        b.store_at(tile.clone(), reg(lidx), at(t_in.clone(), reg(idx), Ty::F32), Ty::F32);
+    });
+    b.sync_threads();
+    b.if_(inb, |b| {
+        let center = at(tile.clone(), reg(lidx), Ty::F32);
+        // neighbour: from shared when inside tile, else from global
+        // (clamped at the domain edge to the centre value)
+        let nbr = |b: &mut KernelBuilder,
+                   cond_local: Expr,
+                   loc: Expr,
+                   cond_glob: Expr,
+                   glob: Expr,
+                   center: Expr| {
+            let v = b.fresh();
+            b.set(v, center);
+            b.if_else(
+                cond_local,
+                |b| b.set(v, at(tile.clone(), loc, Ty::F32)),
+                |b| {
+                    b.if_(cond_glob, |b| b.set(v, at(t_in.clone(), glob, Ty::F32)));
+                },
+            );
+            v
+        };
+        let left = nbr(
+            b,
+            gt(reg(tx), c_i32(0)),
+            sub(reg(lidx), c_i32(1)),
+            gt(reg(gx), c_i32(0)),
+            sub(reg(idx), c_i32(1)),
+            center.clone(),
+        );
+        let right = nbr(
+            b,
+            lt(reg(tx), c_i32(bdim - 1)),
+            add(reg(lidx), c_i32(1)),
+            lt(reg(gx), sub(n.clone(), c_i32(1))),
+            add(reg(idx), c_i32(1)),
+            center.clone(),
+        );
+        let up = nbr(
+            b,
+            gt(reg(ty), c_i32(0)),
+            sub(reg(lidx), c_i32(bdim)),
+            gt(reg(gy), c_i32(0)),
+            sub(reg(idx), n.clone()),
+            center.clone(),
+        );
+        let down = nbr(
+            b,
+            lt(reg(ty), c_i32(bdim - 1)),
+            add(reg(lidx), c_i32(bdim)),
+            lt(reg(gy), sub(n.clone(), c_i32(1))),
+            add(reg(idx), n.clone()),
+            center.clone(),
+        );
+        let sum = add(add(reg(left), reg(right)), add(reg(up), reg(down)));
+        let delta = mul(
+            c_f32(HS_K),
+            add(sub(sum, mul(c_f32(4.0), center.clone())), at(power.clone(), reg(idx), Ty::F32)),
+        );
+        b.store_at(t_out.clone(), reg(idx), add(center, delta), Ty::F32);
+    });
+    b.build()
+}
+
+fn hotspot_step_ref(t: &[f32], p: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * n];
+    for y in 0..n {
+        for x in 0..n {
+            let c = t[y * n + x];
+            let l = if x > 0 { t[y * n + x - 1] } else { c };
+            let r = if x + 1 < n { t[y * n + x + 1] } else { c };
+            let u = if y > 0 { t[(y - 1) * n + x] } else { c };
+            let d = if y + 1 < n { t[(y + 1) * n + x] } else { c };
+            out[y * n + x] = c + HS_K * (l + r + u + d - 4.0 * c + p[y * n + x]);
+        }
+    }
+    out
+}
+
+fn hotspot_native() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("hotspot_native", move |block_id, launch, mem, _| {
+        let ar = PackedArgs(&launch.packed);
+        let n = ar.i32(3) as usize;
+        let t_in = unsafe { mem.slice_f32(ar.ptr(0), n * n) };
+        let power = unsafe { mem.slice_f32(ar.ptr(1), n * n) };
+        let t_out = unsafe { mem.slice_f32(ar.ptr(2), n * n) };
+        let bdim = HS_BLOCK as usize;
+        let gx_blocks = launch.grid.0 as u64;
+        let bx = (block_id % gx_blocks) as usize * bdim;
+        let by = (block_id / gx_blocks) as usize * bdim;
+        for ty_ in 0..bdim {
+            let y = by + ty_;
+            if y >= n {
+                continue;
+            }
+            for tx in 0..bdim {
+                let x = bx + tx;
+                if x >= n {
+                    continue;
+                }
+                let c = t_in[y * n + x];
+                let l = if x > 0 { t_in[y * n + x - 1] } else { c };
+                let r = if x + 1 < n { t_in[y * n + x + 1] } else { c };
+                let u = if y > 0 { t_in[(y - 1) * n + x] } else { c };
+                let d = if y + 1 < n { t_in[(y + 1) * n + x] } else { c };
+                t_out[y * n + x] = c + HS_K * (l + r + u + d - 4.0 * c + power[y * n + x]);
+            }
+        }
+    })
+}
+
+fn hotspot_build(scale: Scale) -> BenchProgram {
+    let (n, steps) = hotspot_dims(scale);
+    assert!(steps % 2 == 0);
+    let mut rng = Rng::new(0x407);
+    let temp = rng.vec_f32(n * n, 300.0, 340.0);
+    let power = rng.vec_f32(n * n, 0.0, 1.0);
+    let mut want = temp.clone();
+    for _ in 0..steps {
+        want = hotspot_step_ref(&want, &power, n);
+    }
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(hotspot_kernel());
+    pb.native(hotspot_native());
+    pb.est_insts((HS_BLOCK * HS_BLOCK) as u64 * 40);
+    let d_a = pb.input_f32(&temp);
+    let d_p = pb.input_f32(&power);
+    let d_b = pb.zeroed(n * n * 4);
+    let out = pb.out_arr(n * n * 4);
+    let g = (n as u32).div_ceil(HS_BLOCK);
+    let launch = |rin, rout| {
+        HostOp::Launch(LaunchOp {
+            kernel: k,
+            grid: (g, g),
+            block: (HS_BLOCK, HS_BLOCK),
+            dyn_shmem: 0,
+            args: vec![HostArg::Buf(rin), HostArg::Buf(d_p), HostArg::Buf(rout), HostArg::I32(n as i32)],
+        })
+    };
+    pb.op(HostOp::Repeat { n: steps / 2, body: vec![launch(d_a, d_b), launch(d_b, d_a)] });
+    pb.read_back(d_a, out);
+    pb.finish(check_f32(out, want, 1e-4, 1e-3))
+}
+
+pub fn hotspot() -> Benchmark {
+    Benchmark {
+        name: "hotspot",
+        suite: Suite::Rodinia,
+        features: &[Feature::StaticSharedMem, Feature::SyncThreads],
+        incorrect_on: &[crate::compiler::Framework::Dpcpp],
+        build: Some(hotspot_build),
+        device_artifact: Some("hotspot"),
+        paper_secs: Some(PaperRow { cuda: 1.239, dpcpp: 1.373, hip: 1.267, cupbop: 1.072, openmp: Some(1.11) }),
+    }
+}
+
+// ------------------------------------------------------------------
+// hotspot3D — plain 3D stencil, ping-pong steps.
+// ------------------------------------------------------------------
+
+fn h3d_dims(scale: Scale) -> (usize, usize, usize) {
+    match scale {
+        Scale::Tiny => (16, 4, 2),
+        Scale::Small => (64, 8, 4),
+        Scale::Paper => (512, 8, 10), // paper: 512x512(x8)
+    }
+}
+
+fn hotspot3d_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("hotspot3D");
+    let t_in = b.ptr_param("t_in", Ty::F32);
+    let t_out = b.ptr_param("t_out", Ty::F32);
+    let nx = b.scalar_param("nx", Ty::I32);
+    let nz = b.scalar_param("nz", Ty::I32);
+    let gx = b.assign(add(mul(bid_x(), bdim_x()), tid_x()));
+    let gy = b.assign(add(
+        mul(special(Special::BlockIdxY), special(Special::BlockDimY)),
+        special(Special::ThreadIdxY),
+    ));
+    b.if_(bin(BinOp::And, lt(reg(gx), nx.clone()), lt(reg(gy), nx.clone())), |b| {
+        b.for_(c_i32(0), nz.clone(), c_i32(1), |b, z| {
+            let plane = b.assign(mul(mul(nx.clone(), nx.clone()), reg(z)));
+            let idx = b.assign(add(reg(plane), add(mul(reg(gy), nx.clone()), reg(gx))));
+            let c = b.assign(at(t_in.clone(), reg(idx), Ty::F32));
+            let pick = |cond: Expr, off: Expr| -> Expr {
+                select(cond, load(index(t_in.clone(), add(reg(idx), off), Ty::F32), Ty::F32), reg(c))
+            };
+            let l = pick(gt(reg(gx), c_i32(0)), c_i32(-1));
+            let r = pick(lt(reg(gx), sub(nx.clone(), c_i32(1))), c_i32(1));
+            let u = pick(gt(reg(gy), c_i32(0)), un(UnOp::Neg, nx.clone()));
+            let d = pick(lt(reg(gy), sub(nx.clone(), c_i32(1))), nx.clone());
+            let f = pick(gt(reg(z), c_i32(0)), un(UnOp::Neg, mul(nx.clone(), nx.clone())));
+            let k = pick(lt(reg(z), sub(nz.clone(), c_i32(1))), mul(nx.clone(), nx.clone()));
+            let sum = add(add(add(l, r), add(u, d)), add(f, k));
+            b.store_at(
+                t_out.clone(),
+                reg(idx),
+                add(reg(c), mul(c_f32(0.05), sub(sum, mul(c_f32(6.0), reg(c))))),
+                Ty::F32,
+            );
+        });
+    });
+    b.build()
+}
+
+fn h3d_step_ref(t: &[f32], nx: usize, nz: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; nx * nx * nz];
+    for z in 0..nz {
+        for y in 0..nx {
+            for x in 0..nx {
+                let idx = z * nx * nx + y * nx + x;
+                let c = t[idx];
+                let l = if x > 0 { t[idx - 1] } else { c };
+                let r = if x + 1 < nx { t[idx + 1] } else { c };
+                let u = if y > 0 { t[idx - nx] } else { c };
+                let d = if y + 1 < nx { t[idx + nx] } else { c };
+                let f = if z > 0 { t[idx - nx * nx] } else { c };
+                let k = if z + 1 < nz { t[idx + nx * nx] } else { c };
+                out[idx] = c + 0.05 * (l + r + u + d + f + k - 6.0 * c);
+            }
+        }
+    }
+    out
+}
+
+fn hotspot3d_build(scale: Scale) -> BenchProgram {
+    let (nx, nz, steps) = h3d_dims(scale);
+    assert!(steps % 2 == 0);
+    let mut rng = Rng::new(0x3D);
+    let temp = rng.vec_f32(nx * nx * nz, 300.0, 340.0);
+    let mut want = temp.clone();
+    for _ in 0..steps {
+        want = h3d_step_ref(&want, nx, nz);
+    }
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(hotspot3d_kernel());
+    pb.est_insts(16 * 16 * nz as u64 * 25);
+    let d_a = pb.input_f32(&temp);
+    let d_b = pb.zeroed(nx * nx * nz * 4);
+    let out = pb.out_arr(nx * nx * nz * 4);
+    let bx = 16u32;
+    let g = (nx as u32).div_ceil(bx);
+    let launch = |rin, rout| {
+        HostOp::Launch(LaunchOp {
+            kernel: k,
+            grid: (g, g),
+            block: (bx, bx),
+            dyn_shmem: 0,
+            args: vec![HostArg::Buf(rin), HostArg::Buf(rout), HostArg::I32(nx as i32), HostArg::I32(nz as i32)],
+        })
+    };
+    pb.op(HostOp::Repeat { n: steps / 2, body: vec![launch(d_a, d_b), launch(d_b, d_a)] });
+    pb.read_back(d_a, out);
+    pb.finish(check_f32(out, want, 1e-4, 1e-3))
+}
+
+pub fn hotspot3d() -> Benchmark {
+    Benchmark {
+        name: "hotspot3D",
+        suite: Suite::Rodinia,
+        features: &[],
+        incorrect_on: &[crate::compiler::Framework::Dpcpp],
+        build: Some(hotspot3d_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 1.376, dpcpp: 1.249, hip: 1.732, cupbop: 1.269, openmp: Some(1.262) }),
+    }
+}
+
+// ------------------------------------------------------------------
+// pathfinder — DP row sweep with ghost-zone min reduction.
+// ------------------------------------------------------------------
+
+fn pf_dims(scale: Scale) -> (usize, usize) {
+    match scale {
+        Scale::Tiny => (128, 8),
+        Scale::Small => (4096, 32),
+        Scale::Paper => (100_000, 1000), // paper: 100000 x 1000
+    }
+}
+
+fn pathfinder_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("dynproc_kernel");
+    let wall = b.ptr_param("wall", Ty::I32); // rows x cols
+    let src = b.ptr_param("src", Ty::I32);
+    let dst = b.ptr_param("dst", Ty::I32);
+    let cols = b.scalar_param("cols", Ty::I32);
+    let row = b.scalar_param("row", Ty::I32);
+    let gid = b.assign(ir::global_tid());
+    b.if_(lt(reg(gid), cols.clone()), |b| {
+        let c = b.assign(at(src.clone(), reg(gid), Ty::I32));
+        let l = select(
+            gt(reg(gid), c_i32(0)),
+            load(index(src.clone(), sub(reg(gid), c_i32(1)), Ty::I32), Ty::I32),
+            reg(c),
+        );
+        let r = select(
+            lt(reg(gid), sub(cols.clone(), c_i32(1))),
+            load(index(src.clone(), add(reg(gid), c_i32(1)), Ty::I32), Ty::I32),
+            reg(c),
+        );
+        let m = min_e(reg(c), min_e(l, r));
+        let w = at(wall.clone(), add(mul(row.clone(), cols.clone()), reg(gid)), Ty::I32);
+        b.store_at(dst.clone(), reg(gid), add(w, m), Ty::I32);
+    });
+    b.build()
+}
+
+fn pathfinder_native() -> std::sync::Arc<dyn crate::exec::BlockFn> {
+    NativeBlockFn::new("pathfinder_native", move |block_id, launch, mem, _| {
+        let ar = PackedArgs(&launch.packed);
+        let cols = ar.i32(3) as usize;
+        let row = ar.i32(4) as usize;
+        let wall = unsafe { mem.slice_i32(ar.ptr(0), (row + 1) * cols) };
+        let src = unsafe { mem.slice_i32(ar.ptr(1), cols) };
+        let dst = unsafe { mem.slice_i32(ar.ptr(2), cols) };
+        let bs = launch.block_size();
+        for t in 0..bs {
+            let x = block_id as usize * bs + t;
+            if x >= cols {
+                continue;
+            }
+            let c = src[x];
+            let l = if x > 0 { src[x - 1] } else { c };
+            let r = if x + 1 < cols { src[x + 1] } else { c };
+            dst[x] = wall[row * cols + x] + c.min(l).min(r);
+        }
+    })
+}
+
+fn pathfinder_build(scale: Scale) -> BenchProgram {
+    let (cols, rows) = pf_dims(scale);
+    assert!(rows % 2 == 1 || rows % 2 == 0);
+    let mut rng = Rng::new(0xFA);
+    let wall = rng.vec_i32(cols * rows, 0, 10);
+    // host DP
+    let mut cur: Vec<i32> = wall[..cols].to_vec();
+    for r in 1..rows {
+        let mut next = vec![0i32; cols];
+        for (x, nx) in next.iter_mut().enumerate() {
+            let c = cur[x];
+            let l = if x > 0 { cur[x - 1] } else { c };
+            let rr = if x + 1 < cols { cur[x + 1] } else { c };
+            *nx = wall[r * cols + x] + c.min(l).min(rr);
+        }
+        cur = next;
+    }
+
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(pathfinder_kernel());
+    pb.native(pathfinder_native());
+    pb.est_insts(256 * 12);
+    let d_wall = pb.input_i32(&wall);
+    let d_a = pb.input_i32(&wall[..cols]);
+    let d_b = pb.zeroed(cols * 4);
+    let out = pb.out_arr(cols * 4);
+    let blk = 256u32;
+    let g = (cols as u32).div_ceil(blk);
+    let launch = |rin, rout, base: i32| {
+        HostOp::Launch(LaunchOp {
+            kernel: k,
+            grid: (g, 1),
+            block: (blk, 1),
+            dyn_shmem: 0,
+            args: vec![
+                HostArg::Buf(d_wall),
+                HostArg::Buf(rin),
+                HostArg::Buf(rout),
+                HostArg::I32(cols as i32),
+                HostArg::IterI32 { base, step: 2 },
+            ],
+        })
+    };
+    // rows-1 sweeps, ping-pong two per Repeat iteration
+    let pairs = (rows - 1) / 2;
+    pb.op(HostOp::Repeat { n: pairs, body: vec![launch(d_a, d_b, 1), launch(d_b, d_a, 2)] });
+    let rem = (rows - 1) % 2;
+    if rem == 1 {
+        // one trailing sweep for the final odd row
+        pb.op(HostOp::Repeat { n: 1, body: vec![launch(d_a, d_b, (rows - 1) as i32)] });
+    }
+    let final_buf = if rem == 1 { d_b } else { d_a };
+    pb.read_back(final_buf, out);
+    pb.finish(super::super::util::check_i32(out, cur))
+}
+
+pub fn pathfinder() -> Benchmark {
+    Benchmark {
+        name: "pathfinder",
+        suite: Suite::Rodinia,
+        features: &[],
+        incorrect_on: &[],
+        build: Some(pathfinder_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 1.92, dpcpp: 2.395, hip: 2.424, cupbop: 2.359, openmp: None }),
+    }
+}
+
+// ------------------------------------------------------------------
+// srad — two-kernel diffusion iteration (large grid, many barriers in
+// the original; the grid size is what stresses fetching).
+// ------------------------------------------------------------------
+
+fn srad_dims(scale: Scale) -> (usize, usize) {
+    match scale {
+        Scale::Tiny => (32, 2),
+        Scale::Small => (128, 4),
+        Scale::Paper => (2048, 8), // paper: 8192x8192
+    }
+}
+
+const SRAD_LAMBDA: f32 = 0.5;
+
+/// srad1: compute diffusion coefficient per cell.
+fn srad1_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("srad_cuda_1");
+    let img = b.ptr_param("img", Ty::F32);
+    let coef = b.ptr_param("coef", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let q0 = b.scalar_param("q0sqr", Ty::F32);
+    let gx = b.assign(add(mul(bid_x(), bdim_x()), tid_x()));
+    let gy = b.assign(add(
+        mul(special(Special::BlockIdxY), special(Special::BlockDimY)),
+        special(Special::ThreadIdxY),
+    ));
+    b.if_(bin(BinOp::And, lt(reg(gx), n.clone()), lt(reg(gy), n.clone())), |b| {
+        let idx = b.assign(add(mul(reg(gy), n.clone()), reg(gx)));
+        let c = b.assign(at(img.clone(), reg(idx), Ty::F32));
+        let pick = |cond: Expr, off: Expr| {
+            select(cond, load(index(img.clone(), add(reg(idx), off), Ty::F32), Ty::F32), reg(c))
+        };
+        let l = pick(gt(reg(gx), c_i32(0)), c_i32(-1));
+        let r = pick(lt(reg(gx), sub(n.clone(), c_i32(1))), c_i32(1));
+        let u = pick(gt(reg(gy), c_i32(0)), un(UnOp::Neg, n.clone()));
+        let d = pick(lt(reg(gy), sub(n.clone(), c_i32(1))), n.clone());
+        let dn = b.assign(sub(add(add(l, r), add(u, d)), mul(c_f32(4.0), reg(c))));
+        let g2 = b.assign(div(mul(reg(dn), reg(dn)), max_e(mul(reg(c), reg(c)), c_f32(1e-6))));
+        let lap = b.assign(div(reg(dn), max_e(reg(c), c_f32(1e-6))));
+        let num = sub(mul(c_f32(0.5), reg(g2)), mul(c_f32(1.0 / 16.0), mul(reg(lap), reg(lap))));
+        let den = add(c_f32(1.0), mul(c_f32(0.25), reg(lap)));
+        let qsqr = b.assign(div(num, max_e(mul(den.clone(), den), c_f32(1e-6))));
+        let cf = div(c_f32(1.0), add(c_f32(1.0), div(sub(reg(qsqr), q0.clone()), mul(q0.clone(), add(c_f32(1.0), q0.clone())))));
+        // clamp to [0, 1]
+        b.store_at(coef.clone(), reg(idx), max_e(c_f32(0.0), min_e(c_f32(1.0), cf)), Ty::F32);
+    });
+    b.build()
+}
+
+/// srad2: update image from coefficients.
+fn srad2_kernel() -> Kernel {
+    let mut b = KernelBuilder::new("srad_cuda_2");
+    let img = b.ptr_param("img", Ty::F32);
+    let coef = b.ptr_param("coef", Ty::F32);
+    let out = b.ptr_param("out", Ty::F32);
+    let n = b.scalar_param("n", Ty::I32);
+    let gx = b.assign(add(mul(bid_x(), bdim_x()), tid_x()));
+    let gy = b.assign(add(
+        mul(special(Special::BlockIdxY), special(Special::BlockDimY)),
+        special(Special::ThreadIdxY),
+    ));
+    b.if_(bin(BinOp::And, lt(reg(gx), n.clone()), lt(reg(gy), n.clone())), |b| {
+        let idx = b.assign(add(mul(reg(gy), n.clone()), reg(gx)));
+        let c = b.assign(at(img.clone(), reg(idx), Ty::F32));
+        let cc = b.assign(at(coef.clone(), reg(idx), Ty::F32));
+        let pickc = |cond: Expr, off: Expr| {
+            select(cond, load(index(coef.clone(), add(reg(idx), off), Ty::F32), Ty::F32), reg(cc))
+        };
+        let picki = |cond: Expr, off: Expr| {
+            select(cond, load(index(img.clone(), add(reg(idx), off), Ty::F32), Ty::F32), reg(c))
+        };
+        let cr = pickc(lt(reg(gx), sub(n.clone(), c_i32(1))), c_i32(1));
+        let cd = pickc(lt(reg(gy), sub(n.clone(), c_i32(1))), n.clone());
+        let ir_ = picki(lt(reg(gx), sub(n.clone(), c_i32(1))), c_i32(1));
+        let il = picki(gt(reg(gx), c_i32(0)), c_i32(-1));
+        let id_ = picki(lt(reg(gy), sub(n.clone(), c_i32(1))), n.clone());
+        let iu = picki(gt(reg(gy), c_i32(0)), un(UnOp::Neg, n.clone()));
+        let div_ = add(
+            add(mul(cr, sub(ir_, reg(c))), mul(reg(cc), sub(il, reg(c)))),
+            add(mul(cd, sub(id_, reg(c))), mul(reg(cc), sub(iu, reg(c)))),
+        );
+        b.store_at(out.clone(), reg(idx), add(reg(c), mul(c_f32(SRAD_LAMBDA / 4.0), div_)), Ty::F32);
+    });
+    b.build()
+}
+
+fn srad_ref(img: &[f32], n: usize, q0: f32) -> Vec<f32> {
+    let get = |v: &[f32], x: i64, y: i64, c: f32| -> f32 {
+        if x < 0 || y < 0 || x >= n as i64 || y >= n as i64 {
+            c
+        } else {
+            v[y as usize * n + x as usize]
+        }
+    };
+    let mut coef = vec![0.0f32; n * n];
+    for y in 0..n {
+        for x in 0..n {
+            let c = img[y * n + x];
+            let l = get(img, x as i64 - 1, y as i64, c);
+            let r = get(img, x as i64 + 1, y as i64, c);
+            let u = get(img, x as i64, y as i64 - 1, c);
+            let d = get(img, x as i64, y as i64 + 1, c);
+            let dn = l + r + u + d - 4.0 * c;
+            let g2 = dn * dn / (c * c).max(1e-6);
+            let lap = dn / c.max(1e-6);
+            let num = 0.5 * g2 - (1.0 / 16.0) * lap * lap;
+            let den = 1.0 + 0.25 * lap;
+            let qsqr = num / (den * den).max(1e-6);
+            let cf = 1.0 / (1.0 + (qsqr - q0) / (q0 * (1.0 + q0)));
+            coef[y * n + x] = cf.clamp(0.0, 1.0);
+        }
+    }
+    let mut out = vec![0.0f32; n * n];
+    for y in 0..n {
+        for x in 0..n {
+            let idx = y * n + x;
+            let c = img[idx];
+            let cc = coef[idx];
+            let cr = get(&coef, x as i64 + 1, y as i64, cc);
+            let cd = get(&coef, x as i64, y as i64 + 1, cc);
+            let ir_ = get(img, x as i64 + 1, y as i64, c);
+            let il = get(img, x as i64 - 1, y as i64, c);
+            let id_ = get(img, x as i64, y as i64 + 1, c);
+            let iu = get(img, x as i64, y as i64 - 1, c);
+            let dv = cr * (ir_ - c) + cc * (il - c) + cd * (id_ - c) + cc * (iu - c);
+            out[idx] = c + (SRAD_LAMBDA / 4.0) * dv;
+        }
+    }
+    out
+}
+
+fn srad_build(scale: Scale) -> BenchProgram {
+    let (n, iters) = srad_dims(scale);
+    let q0 = 0.05f32;
+    let mut rng = Rng::new(0x5AAD);
+    let img = rng.vec_f32(n * n, 0.5, 1.5);
+    let mut want = img.clone();
+    for _ in 0..iters {
+        want = srad_ref(&want, n, q0);
+    }
+
+    let mut pb = ProgBuilder::new();
+    let k1 = pb.kernel(srad1_kernel());
+    pb.est_insts(16 * 16 * 30);
+    let k2 = pb.kernel(srad2_kernel());
+    pb.est_insts(16 * 16 * 30);
+    let d_img = pb.input_f32(&img);
+    let d_coef = pb.zeroed(n * n * 4);
+    let d_out = pb.zeroed(n * n * 4);
+    let out = pb.out_arr(n * n * 4);
+    let bx = 16u32;
+    let g = (n as u32).div_ceil(bx);
+    // iterate: srad1(img→coef); srad2(img,coef→out); copy back via
+    // role swap — use two iterations per Repeat with buffers swapped.
+    assert!(iters % 2 == 0);
+    let l1 = |img_b, coef_b| {
+        HostOp::Launch(LaunchOp {
+            kernel: k1,
+            grid: (g, g),
+            block: (bx, bx),
+            dyn_shmem: 0,
+            args: vec![HostArg::Buf(img_b), HostArg::Buf(coef_b), HostArg::I32(n as i32), HostArg::F32(q0)],
+        })
+    };
+    let l2 = |img_b, coef_b, out_b| {
+        HostOp::Launch(LaunchOp {
+            kernel: k2,
+            grid: (g, g),
+            block: (bx, bx),
+            dyn_shmem: 0,
+            args: vec![
+                HostArg::Buf(img_b),
+                HostArg::Buf(coef_b),
+                HostArg::Buf(out_b),
+                HostArg::I32(n as i32),
+            ],
+        })
+    };
+    pb.op(HostOp::Repeat {
+        n: iters / 2,
+        body: vec![
+            l1(d_img, d_coef),
+            l2(d_img, d_coef, d_out),
+            l1(d_out, d_coef),
+            l2(d_out, d_coef, d_img),
+        ],
+    });
+    pb.read_back(d_img, out);
+    pb.finish(check_f32(out, want, 5e-3, 1e-3))
+}
+
+pub fn srad() -> Benchmark {
+    Benchmark {
+        name: "srad",
+        suite: Suite::Rodinia,
+        features: &[Feature::SyncThreads],
+        incorrect_on: &[],
+        build: Some(srad_build),
+        device_artifact: None,
+        paper_secs: Some(PaperRow { cuda: 1.979, dpcpp: 5.996, hip: 8.308, cupbop: 2.886, openmp: Some(2.474) }),
+    }
+}

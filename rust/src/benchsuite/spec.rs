@@ -1,0 +1,238 @@
+//! Benchmark metadata, build and execution plumbing shared by all
+//! suites.
+//!
+//! A [`Benchmark`] carries the coverage-relevant metadata of one Table
+//! II row (features used, per-framework quirks) plus, when implemented,
+//! a builder producing the CIR kernels + host program + inputs +
+//! validator for a given problem scale. [`run_on`] executes a built
+//! program against any framework backend and validates the outputs.
+
+use crate::compiler::{compile_kernel, CompiledKernel, Framework};
+use crate::exec::BlockFn;
+use crate::frameworks::{
+    BackendCfg, CupbopRuntime, DpcppRuntime, HipCpuRuntime, KernelVariants, ReferenceRuntime,
+};
+use crate::host::barrier::KernelRw;
+use crate::host::{insert_implicit_barriers, run_host_program, HostProgram, RuntimeApi};
+use crate::ir::{Feature, Kernel};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Which suite a benchmark belongs to (Table II grouping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Suite {
+    Rodinia,
+    HeteroMark,
+    Crystal,
+    CloverLeaf,
+}
+
+impl Suite {
+    pub fn name(self) -> &'static str {
+        match self {
+            Suite::Rodinia => "Rodinia",
+            Suite::HeteroMark => "Hetero-Mark",
+            Suite::Crystal => "Crystal",
+            Suite::CloverLeaf => "CloverLeaf",
+        }
+    }
+}
+
+/// Problem scale. `Tiny` keeps unit tests fast; `Small` is the bench
+/// default; `Paper` approaches the Table VIII sizes where feasible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Tiny,
+    Small,
+    Paper,
+}
+
+/// Back-compat alias used across harnesses.
+pub type ProblemSize = Scale;
+
+/// Output validator: receives the final host arrays.
+pub type Checker = Box<dyn Fn(&[Vec<u8>]) -> Result<(), String> + Send + Sync>;
+
+/// Everything a benchmark instance provides before compilation.
+pub struct BenchProgram {
+    pub kernels: Vec<Kernel>,
+    /// per-kernel native scalar closures (None → interpreter)
+    pub natives: Vec<Option<Arc<dyn BlockFn>>>,
+    /// per-kernel vectorized closures (DPC++ EP/KMeans modelling)
+    pub vectorized: Vec<Option<Arc<dyn BlockFn>>>,
+    /// host program WITHOUT implicit barriers (the pass inserts them)
+    pub host: HostProgram,
+    /// initial host arrays (inputs and zeroed output slots)
+    pub arrays: Vec<Vec<u8>>,
+    pub num_bufs: usize,
+    pub check: Checker,
+    /// per-kernel estimated dynamic instructions per block (grain
+    /// heuristic input; measured values land in EXPERIMENTS.md)
+    pub est_insts_per_block: Vec<u64>,
+    /// device heap bytes this program needs
+    pub mem_cap: usize,
+}
+
+/// Static benchmark descriptor — one Table II row.
+pub struct Benchmark {
+    pub name: &'static str,
+    pub suite: Suite,
+    /// all CUDA features the original uses (source-level + kernel-level)
+    pub features: &'static [Feature],
+    /// frameworks whose translation runs but yields wrong results
+    pub incorrect_on: &'static [Framework],
+    /// builder (None for spec-only rows: texture/intrinsic benchmarks)
+    pub build: Option<fn(Scale) -> BenchProgram>,
+    /// artifact name for the device (CUDA-baseline) path
+    pub device_artifact: Option<&'static str>,
+    /// paper-reported end-to-end seconds (Table IV), for shape checks
+    pub paper_secs: Option<PaperRow>,
+}
+
+/// Table IV row (seconds) — CUDA / DPC++ / HIP-CPU / CuPBoP / OpenMP.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PaperRow {
+    pub cuda: f64,
+    pub dpcpp: f64,
+    pub hip: f64,
+    pub cupbop: f64,
+    pub openmp: Option<f64>,
+}
+
+/// A benchmark compiled and ready to run.
+pub struct BuiltProgram {
+    pub name: String,
+    pub compiled: Vec<Arc<CompiledKernel>>,
+    pub variants: Vec<KernelVariants>,
+    /// host program with implicit barriers inserted
+    pub host: HostProgram,
+    /// host program before barrier insertion (HIP-CPU model syncs on
+    /// its own; it gets the raw program, like HIPIFY output would)
+    pub host_raw: HostProgram,
+    pub arrays: Vec<Vec<u8>>,
+    pub num_bufs: usize,
+    pub check: Checker,
+    pub mem_cap: usize,
+}
+
+/// Compile a benchmark's kernels and run the host barrier pass.
+pub fn build_program(b: &Benchmark, scale: Scale) -> BuiltProgram {
+    let builder = b.build.unwrap_or_else(|| panic!("benchmark `{}` is spec-only", b.name));
+    let prog = builder(scale);
+    let compiled: Vec<Arc<CompiledKernel>> = prog
+        .kernels
+        .iter()
+        .map(|k| Arc::new(compile_kernel(k).unwrap_or_else(|e| panic!("{}: {e}", k.name))))
+        .collect();
+    let rw: Vec<KernelRw> = compiled
+        .iter()
+        .map(|ck| KernelRw { reads: ck.reads.clone(), writes: ck.writes.clone() })
+        .collect();
+    let host = insert_implicit_barriers(&prog.host, &rw);
+    let variants = compiled
+        .iter()
+        .enumerate()
+        .map(|(i, ck)| KernelVariants {
+            ck: ck.clone(),
+            native: prog.natives.get(i).cloned().flatten(),
+            vectorized: prog.vectorized.get(i).cloned().flatten(),
+            est_insts_per_block: *prog.est_insts_per_block.get(i).unwrap_or(&u64::MAX),
+        })
+        .collect();
+    BuiltProgram {
+        name: b.name.to_string(),
+        compiled,
+        variants,
+        host,
+        host_raw: prog.host,
+        arrays: prog.arrays,
+        num_bufs: prog.num_bufs,
+        check: prog.check,
+        mem_cap: prog.mem_cap,
+    }
+}
+
+/// Which backend to run a built program on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    CuPBoP,
+    HipCpu,
+    Dpcpp,
+    /// serial interpreter oracle
+    Reference,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::CuPBoP => "CuPBoP",
+            Backend::HipCpu => "HIP-CPU",
+            Backend::Dpcpp => "DPC++",
+            Backend::Reference => "Reference",
+        }
+    }
+}
+
+/// Result of one end-to-end run.
+pub struct RunOutcome {
+    pub elapsed: Duration,
+    pub check: Result<(), String>,
+    /// (pushes, fetches) when the backend exposes queue counters
+    pub queue_counters: Option<(u64, u64)>,
+}
+
+/// Execute `built` on `backend` with `cfg`, end to end (including data
+/// transfer, as Table IV measures), and validate outputs.
+pub fn run_on(built: &BuiltProgram, backend: Backend, cfg: BackendCfg) -> RunOutcome {
+    let mut arrays = built.arrays.clone();
+    let cfg = BackendCfg { mem_cap: built.mem_cap.max(cfg.mem_cap), ..cfg };
+    let start = Instant::now();
+    let (res, counters) = match backend {
+        Backend::CuPBoP => {
+            let mut rt = CupbopRuntime::new(built.variants.clone(), cfg);
+            let r = run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt);
+            // end-to-end includes draining the device
+            rt.sync();
+            (r, Some(rt.queue_counters()))
+        }
+        Backend::HipCpu => {
+            let mut rt = HipCpuRuntime::new(built.variants.clone(), cfg);
+            // HIP-CPU gets the raw host program: its runtime synchronises
+            // around memcpys on its own.
+            let r = run_host_program(&built.host_raw, &mut arrays, built.num_bufs, &mut rt);
+            rt.sync();
+            (r, Some(rt.queue_counters()))
+        }
+        Backend::Dpcpp => {
+            let mut rt = DpcppRuntime::new(built.variants.clone(), cfg);
+            let r = run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt);
+            rt.sync();
+            (r, Some(rt.queue_counters()))
+        }
+        Backend::Reference => {
+            let mut rt = ReferenceRuntime::new(built.variants.clone(), cfg.mem_cap);
+            let r = run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt);
+            (r, None)
+        }
+    };
+    let elapsed = start.elapsed();
+    let check = match res {
+        Ok(()) => (built.check)(&arrays),
+        Err(e) => Err(format!("host exec: {e}")),
+    };
+    RunOutcome { elapsed, check, queue_counters: counters }
+}
+
+/// Registry of every benchmark across suites (Table II order).
+pub fn all_benchmarks() -> Vec<Benchmark> {
+    let mut v = super::rodinia::benchmarks();
+    v.extend(super::heteromark::benchmarks());
+    v.extend(super::crystal::benchmarks());
+    v.push(super::cloverleaf::benchmark());
+    v
+}
+
+/// Find one by name.
+pub fn by_name(name: &str) -> Option<Benchmark> {
+    all_benchmarks().into_iter().find(|b| b.name == name)
+}

@@ -1,0 +1,305 @@
+//! Shared benchmark-construction helpers.
+
+use crate::exec::BlockFn;
+use crate::host::{BufId, HostArg, HostArr, HostOp, HostProgram, LaunchOp};
+use crate::ir::Kernel;
+use crate::testkit;
+use std::sync::Arc;
+
+use super::spec::{BenchProgram, Checker, Scale};
+
+/// Incremental builder for a [`BenchProgram`]: allocates buffers,
+/// stages input uploads, records launches and read-backs.
+pub struct ProgBuilder {
+    kernels: Vec<Kernel>,
+    natives: Vec<Option<Arc<dyn BlockFn>>>,
+    vectorized: Vec<Option<Arc<dyn BlockFn>>>,
+    est: Vec<u64>,
+    ops: Vec<HostOp>,
+    arrays: Vec<Vec<u8>>,
+    bufs: usize,
+    mem_cap: usize,
+}
+
+impl ProgBuilder {
+    pub fn new() -> Self {
+        ProgBuilder {
+            kernels: Vec::new(),
+            natives: Vec::new(),
+            vectorized: Vec::new(),
+            est: Vec::new(),
+            ops: Vec::new(),
+            arrays: Vec::new(),
+            bufs: 0,
+            mem_cap: 1 << 20,
+        }
+    }
+
+    /// Register a kernel; returns its kernel-table index.
+    pub fn kernel(&mut self, k: Kernel) -> usize {
+        self.kernels.push(k);
+        self.natives.push(None);
+        self.vectorized.push(None);
+        self.est.push(u64::MAX);
+        self.kernels.len() - 1
+    }
+
+    /// Attach a native closure to the most recent kernel.
+    pub fn native(&mut self, f: Arc<dyn BlockFn>) -> &mut Self {
+        *self.natives.last_mut().expect("kernel registered") = Some(f);
+        self
+    }
+
+    /// Attach a vectorized (DPC++) closure to the most recent kernel.
+    pub fn vectorized(&mut self, f: Arc<dyn BlockFn>) -> &mut Self {
+        *self.vectorized.last_mut().expect("kernel registered") = Some(f);
+        self
+    }
+
+    /// Set the grain-heuristic estimate for the most recent kernel.
+    pub fn est_insts(&mut self, per_block: u64) -> &mut Self {
+        *self.est.last_mut().expect("kernel registered") = per_block;
+        self
+    }
+
+    fn add_buf(&mut self, bytes: usize) -> BufId {
+        let b = BufId(self.bufs);
+        self.bufs += 1;
+        self.mem_cap += bytes + 64;
+        self.ops.push(HostOp::Malloc { buf: b, bytes });
+        b
+    }
+
+    fn add_arr(&mut self, data: Vec<u8>) -> HostArr {
+        self.arrays.push(data);
+        HostArr(self.arrays.len() - 1)
+    }
+
+    /// Input buffer: malloc + H2D of `data`.
+    pub fn input_f32(&mut self, data: &[f32]) -> BufId {
+        let b = self.add_buf(data.len() * 4);
+        let a = self.add_arr(testkit::f32s_to_bytes(data));
+        self.ops.push(HostOp::H2D { dst: b, src: a });
+        b
+    }
+
+    pub fn input_f64(&mut self, data: &[f64]) -> BufId {
+        let b = self.add_buf(data.len() * 8);
+        let a = self.add_arr(testkit::f64s_to_bytes(data));
+        self.ops.push(HostOp::H2D { dst: b, src: a });
+        b
+    }
+
+    pub fn input_i32(&mut self, data: &[i32]) -> BufId {
+        let b = self.add_buf(data.len() * 4);
+        let a = self.add_arr(testkit::i32s_to_bytes(data));
+        self.ops.push(HostOp::H2D { dst: b, src: a });
+        b
+    }
+
+    /// Device-only working buffer initialised to zero.
+    pub fn zeroed(&mut self, bytes: usize) -> BufId {
+        let b = self.add_buf(bytes);
+        let a = self.add_arr(vec![0u8; bytes]);
+        self.ops.push(HostOp::H2D { dst: b, src: a });
+        b
+    }
+
+    /// Output slot: the host array D2H will fill; returns (buf, arr).
+    /// The buffer must be filled by kernels before `read_back`.
+    pub fn output(&mut self, bytes: usize) -> (BufId, HostArr) {
+        let b = self.add_buf(bytes);
+        let a = self.add_arr(vec![0u8; bytes]);
+        (b, a)
+    }
+
+    /// Host-array-only output slot for reading back an existing buffer.
+    pub fn out_arr(&mut self, bytes: usize) -> HostArr {
+        self.add_arr(vec![0u8; bytes])
+    }
+
+    /// Host-array-only input staging (for H2D into an existing buffer,
+    /// e.g. chunked streaming patterns).
+    pub fn stage_f32(&mut self, data: &[f32]) -> HostArr {
+        self.add_arr(testkit::f32s_to_bytes(data))
+    }
+
+    pub fn stage_i32(&mut self, data: &[i32]) -> HostArr {
+        self.add_arr(testkit::i32s_to_bytes(data))
+    }
+
+    /// Raw host op.
+    pub fn op(&mut self, op: HostOp) {
+        self.ops.push(op);
+    }
+
+    /// Record a launch.
+    pub fn launch(&mut self, kernel: usize, grid: (u32, u32), block: (u32, u32), args: Vec<HostArg>) {
+        self.ops.push(HostOp::Launch(LaunchOp { kernel, grid, block, dyn_shmem: 0, args }));
+    }
+
+    pub fn launch_shmem(
+        &mut self,
+        kernel: usize,
+        grid: (u32, u32),
+        block: (u32, u32),
+        dyn_shmem: usize,
+        args: Vec<HostArg>,
+    ) {
+        self.ops.push(HostOp::Launch(LaunchOp { kernel, grid, block, dyn_shmem, args }));
+    }
+
+    /// D2H read-back into an output slot.
+    pub fn read_back(&mut self, buf: BufId, arr: HostArr) {
+        self.ops.push(HostOp::D2H { dst: arr, src: buf });
+    }
+
+    /// Finish with an output validator.
+    pub fn finish(self, check: Checker) -> BenchProgram {
+        BenchProgram {
+            kernels: self.kernels,
+            natives: self.natives,
+            vectorized: self.vectorized,
+            host: HostProgram::new(self.ops),
+            arrays: self.arrays,
+            num_bufs: self.bufs,
+            check,
+            est_insts_per_block: self.est,
+            mem_cap: self.mem_cap.next_power_of_two().max(1 << 22),
+        }
+    }
+}
+
+impl Default for ProgBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Standard float checker: compare the f32 output array `arr` against
+/// `want` with tolerances.
+pub fn check_f32(arr: HostArr, want: Vec<f32>, rtol: f32, atol: f32) -> Checker {
+    Box::new(move |arrays: &[Vec<u8>]| {
+        let got = testkit::bytes_to_f32s(&arrays[arr.0]);
+        if got.len() != want.len() {
+            return Err(format!("length {} != {}", got.len(), want.len()));
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let tol = atol + rtol * w.abs();
+            if (g - w).abs() > tol && !(g.is_nan() && w.is_nan()) {
+                return Err(format!("out[{i}]: got {g}, want {w} (tol {tol})"));
+            }
+        }
+        Ok(())
+    })
+}
+
+pub fn check_f64(arr: HostArr, want: Vec<f64>, rtol: f64, atol: f64) -> Checker {
+    Box::new(move |arrays: &[Vec<u8>]| {
+        let got = testkit::bytes_to_f64s(&arrays[arr.0]);
+        if got.len() != want.len() {
+            return Err(format!("length {} != {}", got.len(), want.len()));
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let tol = atol + rtol * w.abs();
+            if (g - w).abs() > tol {
+                return Err(format!("out[{i}]: got {g}, want {w} (tol {tol})"));
+            }
+        }
+        Ok(())
+    })
+}
+
+pub fn check_i32(arr: HostArr, want: Vec<i32>) -> Checker {
+    Box::new(move |arrays: &[Vec<u8>]| {
+        let got = testkit::bytes_to_i32s(&arrays[arr.0]);
+        if got.len() != want.len() {
+            return Err(format!("length {} != {}", got.len(), want.len()));
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            if g != w {
+                return Err(format!("out[{i}]: got {g}, want {w}"));
+            }
+        }
+        Ok(())
+    })
+}
+
+/// Scale → a size knob with tiny/small/paper presets.
+pub fn pick(scale: Scale, tiny: usize, small: usize, paper: usize) -> usize {
+    match scale {
+        Scale::Tiny => tiny,
+        Scale::Small => small,
+        Scale::Paper => paper,
+    }
+}
+
+/// Reader helpers for native block functions: the packed-argument view
+/// (8-byte slots, see `compiler::param_pack`).
+pub struct PackedArgs<'a>(pub &'a [u8]);
+
+impl<'a> PackedArgs<'a> {
+    #[inline]
+    fn bits(&self, i: usize) -> u64 {
+        u64::from_le_bytes(self.0[i * 8..i * 8 + 8].try_into().unwrap())
+    }
+    #[inline]
+    pub fn ptr(&self, i: usize) -> u64 {
+        self.bits(i)
+    }
+    #[inline]
+    pub fn i32(&self, i: usize) -> i32 {
+        self.bits(i) as u32 as i32
+    }
+    #[inline]
+    pub fn i64(&self, i: usize) -> i64 {
+        self.bits(i) as i64
+    }
+    #[inline]
+    pub fn f32(&self, i: usize) -> f32 {
+        f32::from_bits(self.bits(i) as u32)
+    }
+    #[inline]
+    pub fn f64(&self, i: usize) -> f64 {
+        f64::from_bits(self.bits(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::HostOp;
+
+    #[test]
+    fn builder_wires_buffers_and_ops() {
+        let mut p = ProgBuilder::new();
+        let a = p.input_f32(&[1.0, 2.0]);
+        let (c, out) = p.output(8);
+        p.launch(0, (1, 1), (2, 1), vec![HostArg::Buf(a), HostArg::Buf(c)]);
+        p.read_back(c, out);
+        let prog = p.finish(Box::new(|_| Ok(())));
+        assert_eq!(prog.num_bufs, 2);
+        assert_eq!(prog.arrays.len(), 2);
+        assert_eq!(prog.host.num_launches(), 1);
+        assert!(matches!(prog.host.ops[0], HostOp::Malloc { .. }));
+    }
+
+    #[test]
+    fn packed_args_view() {
+        let mut buf = Vec::new();
+        buf.extend(7u64.to_le_bytes());
+        buf.extend((f32::to_bits(1.5) as u64).to_le_bytes());
+        buf.extend(f64::to_bits(-2.0).to_le_bytes());
+        let a = PackedArgs(&buf);
+        assert_eq!(a.ptr(0), 7);
+        assert_eq!(a.f32(1), 1.5);
+        assert_eq!(a.f64(2), -2.0);
+    }
+
+    #[test]
+    fn pick_scales() {
+        assert_eq!(pick(Scale::Tiny, 1, 2, 3), 1);
+        assert_eq!(pick(Scale::Small, 1, 2, 3), 2);
+        assert_eq!(pick(Scale::Paper, 1, 2, 3), 3);
+    }
+}

@@ -1,0 +1,218 @@
+//! Extra-variable insertion (paper §III-B2).
+//!
+//! NVIDIA GPUs expose launch geometry through special registers
+//! (`%ctaid`, `%ntid`, …) with no CPU equivalent. CuPBoP declares
+//! explicit variables in the kernel and lets the runtime assign them at
+//! launch (`block_index`, `block_size`, `grid_size` in Listing 7).
+//!
+//! We realise this by *appending hidden parameters* to the kernel
+//! signature — one per block/grid special register used — and rewriting
+//! `Expr::Special` references to those parameters. Thread-level specials
+//! (`threadIdx`, `laneId`, `warpId`) are intentionally left in place:
+//! after SPMD→MPMD they are defined by the generated thread loop itself,
+//! exactly as in Figure 4 where `tid` is the loop induction variable.
+
+use crate::ir::*;
+
+/// The hidden parameters, in appended order. The runtime pushes values
+/// for these (from `gridDim`/`blockDim`/the fetched block id) after the
+/// user arguments — see `runtime::launch`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExtraVar {
+    BlockIdxX,
+    BlockIdxY,
+    BlockDimX,
+    BlockDimY,
+    GridDimX,
+    GridDimY,
+}
+
+pub const EXTRA_VARS: [ExtraVar; 6] = [
+    ExtraVar::BlockIdxX,
+    ExtraVar::BlockIdxY,
+    ExtraVar::BlockDimX,
+    ExtraVar::BlockDimY,
+    ExtraVar::GridDimX,
+    ExtraVar::GridDimY,
+];
+
+impl ExtraVar {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExtraVar::BlockIdxX => "__cupbop_block_index_x",
+            ExtraVar::BlockIdxY => "__cupbop_block_index_y",
+            ExtraVar::BlockDimX => "__cupbop_block_size_x",
+            ExtraVar::BlockDimY => "__cupbop_block_size_y",
+            ExtraVar::GridDimX => "__cupbop_grid_size_x",
+            ExtraVar::GridDimY => "__cupbop_grid_size_y",
+        }
+    }
+
+    fn of_special(s: Special) -> Option<ExtraVar> {
+        match s {
+            Special::BlockIdxX => Some(ExtraVar::BlockIdxX),
+            Special::BlockIdxY => Some(ExtraVar::BlockIdxY),
+            Special::BlockDimX => Some(ExtraVar::BlockDimX),
+            Special::BlockDimY => Some(ExtraVar::BlockDimY),
+            Special::GridDimX => Some(ExtraVar::GridDimX),
+            Special::GridDimY => Some(ExtraVar::GridDimY),
+            _ => None,
+        }
+    }
+}
+
+/// Result of the pass: the rewritten kernel plus where the hidden
+/// parameters start (== number of user parameters).
+#[derive(Debug, Clone)]
+pub struct ExtraVarsResult {
+    pub kernel: Kernel,
+    pub extra_base: usize,
+}
+
+/// Append the six hidden geometry parameters and rewrite block/grid
+/// specials to reference them. All six are always appended (fixed ABI)
+/// so the runtime's argument push is kernel-independent.
+pub fn insert_extra_vars(mut kernel: Kernel) -> ExtraVarsResult {
+    let extra_base = kernel.params.len();
+    for v in EXTRA_VARS {
+        kernel.params.push(ParamDecl { name: v.name().to_string(), ty: ParamTy::Scalar(Ty::I32) });
+    }
+    let body = std::mem::take(&mut kernel.body);
+    kernel.body = rewrite_stmts(body, extra_base);
+    ExtraVarsResult { kernel, extra_base }
+}
+
+fn rewrite_expr(e: Expr, base: usize) -> Expr {
+    match e {
+        Expr::Special(s) => match ExtraVar::of_special(s) {
+            Some(v) => {
+                let idx = EXTRA_VARS.iter().position(|x| *x == v).unwrap();
+                Expr::Param(base + idx)
+            }
+            None => Expr::Special(s),
+        },
+        Expr::Bin(op, a, b) => Expr::Bin(op, Box::new(rewrite_expr(*a, base)), Box::new(rewrite_expr(*b, base))),
+        Expr::Un(op, a) => Expr::Un(op, Box::new(rewrite_expr(*a, base))),
+        Expr::Cast(t, a) => Expr::Cast(t, Box::new(rewrite_expr(*a, base))),
+        Expr::Load { ptr, ty } => Expr::Load { ptr: Box::new(rewrite_expr(*ptr, base)), ty },
+        Expr::Index { base: b, idx, elem } => Expr::Index {
+            base: Box::new(rewrite_expr(*b, base)),
+            idx: Box::new(rewrite_expr(*idx, base)),
+            elem,
+        },
+        Expr::Select { cond, then_, else_ } => Expr::Select {
+            cond: Box::new(rewrite_expr(*cond, base)),
+            then_: Box::new(rewrite_expr(*then_, base)),
+            else_: Box::new(rewrite_expr(*else_, base)),
+        },
+        Expr::WarpShfl { kind, val, lane } => Expr::WarpShfl {
+            kind,
+            val: Box::new(rewrite_expr(*val, base)),
+            lane: Box::new(rewrite_expr(*lane, base)),
+        },
+        Expr::WarpVote { kind, pred } => {
+            Expr::WarpVote { kind, pred: Box::new(rewrite_expr(*pred, base)) }
+        }
+        Expr::Exchange { lane, ty } => Expr::Exchange { lane: Box::new(rewrite_expr(*lane, base)), ty },
+        Expr::NvIntrinsic { name, args } => Expr::NvIntrinsic {
+            name,
+            args: args.into_iter().map(|a| rewrite_expr(a, base)).collect(),
+        },
+        other => other,
+    }
+}
+
+fn rewrite_stmts(body: Vec<Stmt>, base: usize) -> Vec<Stmt> {
+    body.into_iter()
+        .map(|s| match s {
+            Stmt::Assign { dst, expr } => Stmt::Assign { dst, expr: rewrite_expr(expr, base) },
+            Stmt::Store { ptr, val, ty } => {
+                Stmt::Store { ptr: rewrite_expr(ptr, base), val: rewrite_expr(val, base), ty }
+            }
+            Stmt::If { cond, then_, else_ } => Stmt::If {
+                cond: rewrite_expr(cond, base),
+                then_: rewrite_stmts(then_, base),
+                else_: rewrite_stmts(else_, base),
+            },
+            Stmt::For { var, start, end, step, body } => Stmt::For {
+                var,
+                start: rewrite_expr(start, base),
+                end: rewrite_expr(end, base),
+                step: rewrite_expr(step, base),
+                body: rewrite_stmts(body, base),
+            },
+            Stmt::While { cond, body } => {
+                Stmt::While { cond: rewrite_expr(cond, base), body: rewrite_stmts(body, base) }
+            }
+            Stmt::AtomicRmw { op, ptr, val, ty, dst } => Stmt::AtomicRmw {
+                op,
+                ptr: rewrite_expr(ptr, base),
+                val: rewrite_expr(val, base),
+                ty,
+                dst,
+            },
+            Stmt::AtomicCas { ptr, cmp, val, ty, dst } => Stmt::AtomicCas {
+                ptr: rewrite_expr(ptr, base),
+                cmp: rewrite_expr(cmp, base),
+                val: rewrite_expr(val, base),
+                ty,
+                dst,
+            },
+            Stmt::ThreadLoop { body, warp } => {
+                Stmt::ThreadLoop { body: rewrite_stmts(body, base), warp }
+            }
+            Stmt::StoreExchange { val, ty } => {
+                Stmt::StoreExchange { val: rewrite_expr(val, base), ty }
+            }
+            other => other,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+
+    #[test]
+    fn block_specials_become_params() {
+        let mut b = KernelBuilder::new("k");
+        let a = b.ptr_param("a", Ty::F32);
+        let id = b.assign(global_tid()); // tid.x + bid.x*bdim.x
+        b.store_at(a.clone(), reg(id), c_f32(1.0), Ty::F32);
+        let r = insert_extra_vars(b.build());
+        assert_eq!(r.extra_base, 1);
+        assert_eq!(r.kernel.params.len(), 1 + 6);
+        // The assign expr must now reference Param(extra_base+0/2) and
+        // keep threadIdx as a Special.
+        let s = format!("{:?}", r.kernel.body[0]);
+        assert!(s.contains("ThreadIdxX"), "threadIdx stays: {s}");
+        assert!(!s.contains("BlockIdxX"), "blockIdx rewritten: {s}");
+        assert!(s.contains("Param(1)"), "blockIdx.x → param 1: {s}");
+        assert!(s.contains("Param(3)"), "blockDim.x → param 3: {s}");
+    }
+
+    #[test]
+    fn grid_dim_rewritten_in_nested_control_flow() {
+        let mut b = KernelBuilder::new("k");
+        let a = b.ptr_param("a", Ty::I32);
+        b.for_(c_i32(0), gdim_x(), c_i32(1), |b, i| {
+            b.if_(lt(reg(i), c_i32(3)), |b| {
+                b.store_at(a.clone(), reg(i), c_i32(0), Ty::I32);
+            });
+        });
+        let r = insert_extra_vars(b.build());
+        let s = format!("{:?}", r.kernel.body);
+        assert!(!s.contains("GridDimX"));
+        assert!(s.contains("Param(5)")); // grid_size_x at base(1)+4
+    }
+
+    #[test]
+    fn abi_is_fixed_six_params() {
+        let k = KernelBuilder::new("empty").build();
+        let r = insert_extra_vars(k);
+        assert_eq!(r.kernel.params.len(), 6);
+        assert_eq!(r.kernel.params[0].name, "__cupbop_block_index_x");
+        assert_eq!(r.kernel.params[5].name, "__cupbop_grid_size_y");
+    }
+}

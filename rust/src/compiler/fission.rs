@@ -1,0 +1,585 @@
+//! SPMD→MPMD transformation (paper §III-B3).
+//!
+//! The MCUDA/COX loop-fission algorithm over structured CIR:
+//!
+//! * statements between barriers are wrapped in **thread loops**
+//!   (`Stmt::ThreadLoop`) that iterate the logical threads of a block;
+//! * `__syncthreads()` becomes a *region boundary* — the loop is
+//!   **fissioned**: everything before the barrier finishes for all
+//!   threads before anything after it starts for any thread;
+//! * barriers inside **uniform** `if`/`for`/`while` are handled by
+//!   hoisting the control flow to block scope and fissioning its body
+//!   (MCUDA "deep fission");
+//! * for kernels using **warp-level collectives** (shuffle/vote), the
+//!   COX nested form is produced: an outer block-scope `For` over warps,
+//!   inner `ThreadLoop`s over the 32 lanes of each warp, fissioned at
+//!   every collective with a per-warp exchange buffer.
+//!
+//! Register *replication* (MCUDA's variable replication) is implicit in
+//! the executor — every virtual register is per-logical-thread — but the
+//! set of registers that actually cross region boundaries is computed
+//! here and reported on the [`MpmdKernel`] for tests and ablations.
+
+use crate::ir::*;
+use std::collections::HashSet;
+
+/// Error raised when a kernel violates the fission preconditions
+/// (the verifier catches these earlier; fission double-checks).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FissionError {
+    /// Barrier nested under thread-divergent control flow.
+    DivergentBarrier,
+    /// `break`/`continue` would escape a fissioned (hoisted) loop.
+    BreakAcrossFission,
+    /// Warp collective in a kernel not compiled in warp mode.
+    WarpOpWithoutWarpMode,
+}
+
+impl std::fmt::Display for FissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FissionError::DivergentBarrier => write!(f, "barrier under divergent control flow"),
+            FissionError::BreakAcrossFission => write!(f, "break/continue across fission boundary"),
+            FissionError::WarpOpWithoutWarpMode => write!(f, "warp collective outside warp mode"),
+        }
+    }
+}
+
+impl std::error::Error for FissionError {}
+
+/// Does this statement (recursively) contain a block-level barrier or a
+/// warp collective (which is a fission point in warp mode)?
+pub fn contains_barrier(s: &Stmt) -> bool {
+    match s {
+        Stmt::SyncThreads => true,
+        Stmt::Assign { expr, .. } => expr_has_collective(expr),
+        Stmt::If { then_, else_, .. } => {
+            then_.iter().any(contains_barrier) || else_.iter().any(contains_barrier)
+        }
+        Stmt::For { body, .. } | Stmt::While { body, .. } => body.iter().any(contains_barrier),
+        _ => false,
+    }
+}
+
+/// Does the kernel use warp-level collectives anywhere?
+pub fn uses_warp_collectives(body: &[Stmt]) -> bool {
+    fn expr_walk(e: &Expr) -> bool {
+        expr_has_collective(e)
+    }
+    fn stmt_walk(s: &Stmt) -> bool {
+        match s {
+            Stmt::Assign { expr, .. } => expr_walk(expr),
+            Stmt::Store { ptr, val, .. } => expr_walk(ptr) || expr_walk(val),
+            Stmt::If { cond, then_, else_ } => {
+                expr_walk(cond) || then_.iter().any(stmt_walk) || else_.iter().any(stmt_walk)
+            }
+            Stmt::For { start, end, step, body, .. } => {
+                expr_walk(start) || expr_walk(end) || expr_walk(step) || body.iter().any(stmt_walk)
+            }
+            Stmt::While { cond, body } => expr_walk(cond) || body.iter().any(stmt_walk),
+            Stmt::AtomicRmw { ptr, val, .. } => expr_walk(ptr) || expr_walk(val),
+            Stmt::AtomicCas { ptr, cmp, val, .. } => expr_walk(ptr) || expr_walk(cmp) || expr_walk(val),
+            _ => false,
+        }
+    }
+    body.iter().any(stmt_walk)
+}
+
+fn expr_has_collective(e: &Expr) -> bool {
+    match e {
+        Expr::WarpShfl { .. } | Expr::WarpVote { .. } => true,
+        Expr::Bin(_, a, b) => expr_has_collective(a) || expr_has_collective(b),
+        Expr::Un(_, a) | Expr::Cast(_, a) => expr_has_collective(a),
+        Expr::Load { ptr, .. } => expr_has_collective(ptr),
+        Expr::Index { base, idx, .. } => expr_has_collective(base) || expr_has_collective(idx),
+        Expr::Select { cond, then_, else_ } => {
+            expr_has_collective(cond) || expr_has_collective(then_) || expr_has_collective(else_)
+        }
+        Expr::NvIntrinsic { args, .. } => args.iter().any(expr_has_collective),
+        _ => false,
+    }
+}
+
+struct Fission {
+    warp_mode: bool,
+    /// block-scope register used as warp index in warp mode (one per
+    /// region group; fresh per hoisted warp `For`).
+    next_reg: u32,
+}
+
+impl Fission {
+    fn fresh(&mut self) -> Reg {
+        let r = Reg(self.next_reg);
+        self.next_reg += 1;
+        r
+    }
+
+    /// Wrap a region of thread-level statements into thread loop(s).
+    /// In warp mode each region becomes `for w in 0..ceil(bs/32) { lane
+    /// loop }` — COX's nested form — so even plain regions carry the
+    /// two-level structure the paper describes.
+    fn wrap_region(&mut self, region: Vec<Stmt>, out: &mut Vec<Stmt>) {
+        if region.is_empty() {
+            return;
+        }
+        if !self.warp_mode {
+            out.push(Stmt::ThreadLoop { body: region, warp: None });
+        } else {
+            let w = self.fresh();
+            // ceil(block_size / 32) — computed by the executor from the
+            // launch dims; expressed here as (bdim + 31) / 32.
+            let nwarps = div(add(bdim_x(), c_i32(31)), c_i32(32));
+            out.push(Stmt::For {
+                var: w,
+                start: c_i32(0),
+                end: nwarps,
+                step: c_i32(1),
+                body: vec![Stmt::ThreadLoop { body: region, warp: Some(w) }],
+            });
+        }
+    }
+
+    /// Fission a statement list into MPMD block-scope statements.
+    fn fission(&mut self, body: &[Stmt], out: &mut Vec<Stmt>) -> Result<(), FissionError> {
+        let mut region: Vec<Stmt> = Vec::new();
+        for s in body {
+            if !contains_barrier(s) {
+                region.push(s.clone());
+                continue;
+            }
+            match s {
+                Stmt::SyncThreads => {
+                    // The barrier itself *is* the fission point.
+                    self.wrap_region(std::mem::take(&mut region), out);
+                }
+                Stmt::Assign { dst, expr } if expr_has_collective(expr) => {
+                    if !self.warp_mode {
+                        return Err(FissionError::WarpOpWithoutWarpMode);
+                    }
+                    self.legalize_collective(*dst, expr, &mut region, out)?;
+                }
+                Stmt::If { cond, then_, else_ } => {
+                    // Uniformity was checked by the verifier; hoist.
+                    self.wrap_region(std::mem::take(&mut region), out);
+                    let mut t = Vec::new();
+                    self.fission(then_, &mut t)?;
+                    let mut e = Vec::new();
+                    self.fission(else_, &mut e)?;
+                    out.push(Stmt::If { cond: cond.clone(), then_: t, else_: e });
+                }
+                Stmt::For { var, start, end, step, body: b } => {
+                    check_no_break(b)?;
+                    self.wrap_region(std::mem::take(&mut region), out);
+                    let mut inner = Vec::new();
+                    self.fission(b, &mut inner)?;
+                    out.push(Stmt::For {
+                        var: *var,
+                        start: start.clone(),
+                        end: end.clone(),
+                        step: step.clone(),
+                        body: inner,
+                    });
+                }
+                Stmt::While { cond, body: b } => {
+                    check_no_break(b)?;
+                    self.wrap_region(std::mem::take(&mut region), out);
+                    let mut inner = Vec::new();
+                    self.fission(b, &mut inner)?;
+                    out.push(Stmt::While { cond: cond.clone(), body: inner });
+                }
+                _ => unreachable!("contains_barrier covered all barrier-bearing stmts"),
+            }
+        }
+        self.wrap_region(region, out);
+        Ok(())
+    }
+
+    /// Legalize `dst = warp_collective(...)` into exchange-buffer
+    /// sections (COX §III): section k ends by storing each lane's
+    /// contribution; section k+1 starts by reading the shuffled slot /
+    /// reduced vote.
+    fn legalize_collective(
+        &mut self,
+        dst: Reg,
+        expr: &Expr,
+        region: &mut Vec<Stmt>,
+        out: &mut Vec<Stmt>,
+    ) -> Result<(), FissionError> {
+        match expr {
+            Expr::WarpShfl { kind, val, lane } => {
+                // Section A: every lane publishes its operand.
+                region.push(Stmt::StoreExchange { val: (**val).clone(), ty: Ty::F64 });
+                self.wrap_region(std::mem::take(region), out);
+                // Section B starts by reading the source lane's slot.
+                let lane_id = special(Special::LaneId);
+                let src: Expr = match kind {
+                    ShflKind::Idx => (**lane).clone(),
+                    ShflKind::Up => sub(lane_id, (**lane).clone()),
+                    ShflKind::Down => add(lane_id, (**lane).clone()),
+                    ShflKind::Xor => bin(BinOp::Xor, lane_id, (**lane).clone()),
+                };
+                region.push(Stmt::Assign {
+                    dst,
+                    expr: Expr::Exchange { lane: Box::new(src), ty: Ty::F64 },
+                });
+                Ok(())
+            }
+            Expr::WarpVote { kind, pred } => {
+                region.push(Stmt::StoreExchange { val: (**pred).clone(), ty: Ty::I32 });
+                self.wrap_region(std::mem::take(region), out);
+                // Block-scope reduction over every warp's exchange slots.
+                out.push(Stmt::ReduceVote { kind: *kind });
+                region.push(Stmt::Assign { dst, expr: Expr::VoteResult });
+                Ok(())
+            }
+            // Collective buried inside a larger expression — the builder
+            // API cannot produce this; reject defensively.
+            _ => Err(FissionError::WarpOpWithoutWarpMode),
+        }
+    }
+}
+
+fn check_no_break(body: &[Stmt]) -> Result<(), FissionError> {
+    // A hoisted loop executes at block scope: a per-thread break can no
+    // longer be represented. (Breaks nested in *inner non-fissioned*
+    // loops are fine — those loops stay inside thread loops.)
+    for s in body {
+        match s {
+            Stmt::Break | Stmt::Continue => return Err(FissionError::BreakAcrossFission),
+            Stmt::If { then_, else_, .. } => {
+                if contains_barrier_slice(then_) || contains_barrier_slice(else_) {
+                    check_no_break(then_)?;
+                    check_no_break(else_)?;
+                } else {
+                    // stays inside a thread loop; break targets an inner
+                    // construct only if inside one — conservative scan:
+                    if has_toplevel_break(then_) || has_toplevel_break(else_) {
+                        return Err(FissionError::BreakAcrossFission);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+fn contains_barrier_slice(b: &[Stmt]) -> bool {
+    b.iter().any(contains_barrier)
+}
+
+fn has_toplevel_break(b: &[Stmt]) -> bool {
+    b.iter().any(|s| matches!(s, Stmt::Break | Stmt::Continue))
+}
+
+/// Compute the set of registers that are written in one thread-loop
+/// region and read in a *different* region — the registers MCUDA must
+/// replicate per logical thread.
+pub fn replicated_registers(mpmd_body: &[Stmt]) -> Vec<Reg> {
+    // Collect (region_id, writes, reads) per ThreadLoop, walking nested
+    // block-scope control flow.
+    let mut regions: Vec<(HashSet<Reg>, HashSet<Reg>)> = Vec::new();
+    collect_regions(mpmd_body, &mut regions);
+    let mut replicated: HashSet<Reg> = HashSet::new();
+    for (i, (w, _)) in regions.iter().enumerate() {
+        for (j, (_, r)) in regions.iter().enumerate() {
+            if i != j {
+                replicated.extend(w.intersection(r).copied());
+            }
+        }
+    }
+    let mut v: Vec<Reg> = replicated.into_iter().collect();
+    v.sort();
+    v
+}
+
+fn collect_regions(body: &[Stmt], regions: &mut Vec<(HashSet<Reg>, HashSet<Reg>)>) {
+    for s in body {
+        match s {
+            Stmt::ThreadLoop { body, .. } => {
+                let mut w = HashSet::new();
+                let mut r = HashSet::new();
+                reads_writes(body, &mut w, &mut r);
+                regions.push((w, r));
+            }
+            Stmt::If { then_, else_, .. } => {
+                collect_regions(then_, regions);
+                collect_regions(else_, regions);
+            }
+            Stmt::For { body, .. } | Stmt::While { body, .. } => collect_regions(body, regions),
+            _ => {}
+        }
+    }
+}
+
+fn expr_reads(e: &Expr, r: &mut HashSet<Reg>) {
+    match e {
+        Expr::Reg(x) => {
+            r.insert(*x);
+        }
+        Expr::Bin(_, a, b) => {
+            expr_reads(a, r);
+            expr_reads(b, r);
+        }
+        Expr::Un(_, a) | Expr::Cast(_, a) => expr_reads(a, r),
+        Expr::Load { ptr, .. } => expr_reads(ptr, r),
+        Expr::Index { base, idx, .. } => {
+            expr_reads(base, r);
+            expr_reads(idx, r);
+        }
+        Expr::Select { cond, then_, else_ } => {
+            expr_reads(cond, r);
+            expr_reads(then_, r);
+            expr_reads(else_, r);
+        }
+        Expr::WarpShfl { val, lane, .. } => {
+            expr_reads(val, r);
+            expr_reads(lane, r);
+        }
+        Expr::WarpVote { pred, .. } => expr_reads(pred, r),
+        Expr::Exchange { lane, .. } => expr_reads(lane, r),
+        Expr::NvIntrinsic { args, .. } => args.iter().for_each(|a| expr_reads(a, r)),
+        _ => {}
+    }
+}
+
+fn reads_writes(body: &[Stmt], w: &mut HashSet<Reg>, r: &mut HashSet<Reg>) {
+    for s in body {
+        match s {
+            Stmt::Assign { dst, expr } => {
+                expr_reads(expr, r);
+                w.insert(*dst);
+            }
+            Stmt::Store { ptr, val, .. } => {
+                expr_reads(ptr, r);
+                expr_reads(val, r);
+            }
+            Stmt::If { cond, then_, else_ } => {
+                expr_reads(cond, r);
+                reads_writes(then_, w, r);
+                reads_writes(else_, w, r);
+            }
+            Stmt::For { var, start, end, step, body } => {
+                w.insert(*var);
+                expr_reads(start, r);
+                expr_reads(end, r);
+                expr_reads(step, r);
+                reads_writes(body, w, r);
+            }
+            Stmt::While { cond, body } => {
+                expr_reads(cond, r);
+                reads_writes(body, w, r);
+            }
+            Stmt::AtomicRmw { ptr, val, dst, .. } => {
+                expr_reads(ptr, r);
+                expr_reads(val, r);
+                if let Some(d) = dst {
+                    w.insert(*d);
+                }
+            }
+            Stmt::AtomicCas { ptr, cmp, val, dst, .. } => {
+                expr_reads(ptr, r);
+                expr_reads(cmp, r);
+                expr_reads(val, r);
+                if let Some(d) = dst {
+                    w.insert(*d);
+                }
+            }
+            Stmt::StoreExchange { val, .. } => expr_reads(val, r),
+            Stmt::ThreadLoop { body, .. } => reads_writes(body, w, r),
+            _ => {}
+        }
+    }
+}
+
+/// Run the SPMD→MPMD transformation on a kernel whose body has already
+/// been memory-mapped and extra-variable-rewritten.
+pub fn spmd_to_mpmd(kernel: &Kernel) -> Result<MpmdKernel, FissionError> {
+    let warp_mode = uses_warp_collectives(&kernel.body);
+    let mut f = Fission { warp_mode, next_reg: kernel.num_regs };
+    let mut out = Vec::new();
+    f.fission(&kernel.body, &mut out)?;
+    let replicated = replicated_registers(&out);
+    Ok(MpmdKernel {
+        name: kernel.name.clone(),
+        params: kernel.params.clone(),
+        shared: kernel.shared.clone(),
+        dyn_shared_elem: kernel.dyn_shared_elem,
+        body: out,
+        num_regs: f.next_reg,
+        warp_level: warp_mode,
+        replicated_regs: replicated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+
+    fn count_thread_loops(body: &[Stmt]) -> usize {
+        let mut n = 0;
+        for s in body {
+            match s {
+                Stmt::ThreadLoop { .. } => n += 1,
+                Stmt::If { then_, else_, .. } => {
+                    n += count_thread_loops(then_) + count_thread_loops(else_)
+                }
+                Stmt::For { body, .. } | Stmt::While { body, .. } => n += count_thread_loops(body),
+                _ => {}
+            }
+        }
+        n
+    }
+
+    /// Listing 3 (dynamicReverse): one barrier at top level → exactly
+    /// two thread loops (Loop1, Loop2 of Figure 4).
+    #[test]
+    fn single_barrier_two_loops() {
+        let mut b = KernelBuilder::new("dynamicReverse");
+        let d = b.ptr_param("d", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let s = b.dyn_shared(Ty::I32);
+        let t = b.assign(tid_x());
+        let tr = b.assign(sub(sub(n.clone(), reg(t)), c_i32(1)));
+        b.store_at(s.clone(), reg(t), at(d.clone(), reg(t), Ty::I32), Ty::I32);
+        b.sync_threads();
+        b.store_at(d.clone(), reg(t), at(s.clone(), reg(tr), Ty::I32), Ty::I32);
+        let k = b.build();
+        let m = spmd_to_mpmd(&k).unwrap();
+        assert!(!m.warp_level);
+        assert_eq!(count_thread_loops(&m.body), 2);
+        assert_eq!(m.body.len(), 2);
+        // t and tr are live across the barrier → replicated.
+        assert!(m.replicated_regs.contains(&t));
+        assert!(m.replicated_regs.contains(&tr));
+    }
+
+    #[test]
+    fn no_barrier_single_loop() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F32);
+        let id = b.assign(global_tid());
+        b.store_at(a.clone(), reg(id), c_f32(1.0), Ty::F32);
+        let m = spmd_to_mpmd(&b.build()).unwrap();
+        assert_eq!(count_thread_loops(&m.body), 1);
+        assert!(m.replicated_regs.is_empty());
+    }
+
+    /// Barrier inside a uniform for-loop: loop hoisted to block scope,
+    /// body fissioned (srad/nw/lud pattern).
+    #[test]
+    fn barrier_in_uniform_loop_hoisted() {
+        let mut b = KernelBuilder::new("stencil");
+        let a = b.ptr_param("a", Ty::F32);
+        let iters = b.scalar_param("iters", Ty::I32);
+        let t = b.assign(tid_x());
+        b.for_(c_i32(0), iters, c_i32(1), |b, _i| {
+            b.store_at(a.clone(), reg(t), c_f32(1.0), Ty::F32);
+            b.sync_threads();
+            b.store_at(a.clone(), reg(t), c_f32(2.0), Ty::F32);
+        });
+        let m = spmd_to_mpmd(&b.build()).unwrap();
+        // top level: ThreadLoop(prelude assigns), For{ TL, TL }
+        assert_eq!(m.body.len(), 2);
+        match &m.body[1] {
+            Stmt::For { body, .. } => assert_eq!(count_thread_loops(body), 2),
+            other => panic!("expected hoisted For, got {other:?}"),
+        }
+    }
+
+    /// Warp shuffle kernel → nested form with warp For + lane loops and
+    /// exchange-buffer sections.
+    #[test]
+    fn warp_shuffle_nested_form() {
+        let mut b = KernelBuilder::new("warp_reduce");
+        let a = b.ptr_param("a", Ty::F64);
+        let v = b.assign(at(a.clone(), global_tid(), Ty::F64));
+        let sh = b.shfl(ShflKind::Down, reg(v), c_i32(16));
+        let s2 = b.assign(add(reg(v), reg(sh)));
+        b.store_at(a.clone(), global_tid(), reg(s2), Ty::F64);
+        let m = spmd_to_mpmd(&b.build()).unwrap();
+        assert!(m.warp_level);
+        // Each region is a For-over-warps containing a lane ThreadLoop.
+        let mut warp_fors = 0;
+        for s in &m.body {
+            if let Stmt::For { body, .. } = s {
+                warp_fors += 1;
+                assert!(matches!(body[0], Stmt::ThreadLoop { warp: Some(_), .. }));
+            }
+        }
+        assert_eq!(warp_fors, 2, "shuffle splits into two lane sections");
+        // Section A must end with StoreExchange, section B start with
+        // the Exchange read.
+        let flat = format!("{:?}", m.body);
+        assert!(flat.contains("StoreExchange"));
+        assert!(flat.contains("Exchange"));
+    }
+
+    #[test]
+    fn vote_emits_reduce() {
+        let mut b = KernelBuilder::new("votey");
+        let p = b.ptr_param("p", Ty::I32);
+        let v = b.vote(VoteKind::Any, gt(at(p.clone(), tid_x(), Ty::I32), c_i32(0)));
+        b.store_at(p.clone(), tid_x(), reg(v), Ty::I32);
+        let m = spmd_to_mpmd(&b.build()).unwrap();
+        assert!(m.body.iter().any(|s| matches!(s, Stmt::ReduceVote { .. })));
+    }
+
+    #[test]
+    fn break_across_fission_rejected() {
+        let mut b = KernelBuilder::new("badbreak");
+        let n = b.scalar_param("n", Ty::I32);
+        b.for_(c_i32(0), n, c_i32(1), |b, _| {
+            b.sync_threads();
+            b.brk();
+        });
+        assert_eq!(spmd_to_mpmd(&b.build()).unwrap_err(), FissionError::BreakAcrossFission);
+    }
+
+    /// Breaks inside *non-fissioned* inner loops are fine.
+    #[test]
+    fn inner_break_ok() {
+        let mut b = KernelBuilder::new("okbreak");
+        let n = b.scalar_param("n", Ty::I32);
+        b.for_(c_i32(0), n.clone(), c_i32(1), |b, _| {
+            b.sync_threads();
+            b.for_(c_i32(0), n.clone(), c_i32(1), |b, _| {
+                b.brk();
+            });
+        });
+        assert!(spmd_to_mpmd(&b.build()).is_ok());
+    }
+
+    /// Two consecutive barriers → empty middle region is dropped, not
+    /// wrapped in an empty thread loop.
+    #[test]
+    fn consecutive_barriers_no_empty_region() {
+        let mut b = KernelBuilder::new("dbl");
+        let a = b.ptr_param("a", Ty::F32);
+        b.store_at(a.clone(), tid_x(), c_f32(1.0), Ty::F32);
+        b.sync_threads();
+        b.sync_threads();
+        b.store_at(a.clone(), tid_x(), c_f32(2.0), Ty::F32);
+        let m = spmd_to_mpmd(&b.build()).unwrap();
+        assert_eq!(count_thread_loops(&m.body), 2);
+    }
+
+    /// Barrier in uniform if: branch bodies fissioned under block-scope if.
+    #[test]
+    fn barrier_in_uniform_if() {
+        let mut b = KernelBuilder::new("uif");
+        let a = b.ptr_param("a", Ty::F32);
+        let flag = b.scalar_param("flag", Ty::I32);
+        b.if_(gt(flag.clone(), c_i32(0)), |b| {
+            b.store_at(a.clone(), tid_x(), c_f32(1.0), Ty::F32);
+            b.sync_threads();
+            b.store_at(a.clone(), tid_x(), c_f32(2.0), Ty::F32);
+        });
+        let m = spmd_to_mpmd(&b.build()).unwrap();
+        match &m.body[0] {
+            Stmt::If { then_, .. } => assert_eq!(count_thread_loops(then_), 2),
+            other => panic!("expected If, got {other:?}"),
+        }
+    }
+}

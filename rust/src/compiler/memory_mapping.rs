@@ -1,0 +1,127 @@
+//! Memory mapping (paper §III-B1).
+//!
+//! CUDA kernels address several memory spaces; CuPBoP maps
+//!
+//! * **global** memory → the CPU heap (the device allocator in
+//!   `runtime::device`),
+//! * **shared** memory (static arrays + the `extern __shared__` dynamic
+//!   segment) → a per-in-flight-block *stack slab* ("thread local
+//!   variable `dynamic_shared_memory`" in Figure 4),
+//! * **local** (per-thread) memory → per-logical-thread slabs.
+//!
+//! This pass computes the concrete [`MemoryPlan`] — offsets and sizes of
+//! every shared declaration inside the block slab — which the executor
+//! and the runtime use to size and wire block-local storage at launch.
+
+use crate::ir::*;
+
+/// Alignment for every shared-memory declaration (matches CUDA's 8-byte
+/// bank-friendly packing for 64-bit types).
+pub const SHARED_ALIGN: usize = 8;
+
+/// Placement of one static `__shared__` declaration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SharedSlot {
+    pub name: String,
+    pub elem: Ty,
+    pub len: usize,
+    /// Byte offset inside the block's shared slab.
+    pub offset: usize,
+}
+
+/// The concrete layout of a block's shared slab.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemoryPlan {
+    pub slots: Vec<SharedSlot>,
+    /// Total bytes of *static* shared memory.
+    pub static_bytes: usize,
+    /// Element type of the dynamic segment, when `extern __shared__` is
+    /// used. The dynamic segment is placed after the static slots, at
+    /// `static_bytes` (aligned), with its size supplied at launch.
+    pub dyn_elem: Option<Ty>,
+    /// Offset at which the dynamic segment begins.
+    pub dyn_offset: usize,
+}
+
+fn align_up(x: usize, a: usize) -> usize {
+    (x + a - 1) / a * a
+}
+
+/// Compute the shared-memory layout for a kernel.
+pub fn plan_memory(kernel: &Kernel) -> MemoryPlan {
+    let mut offset = 0usize;
+    let mut slots = Vec::with_capacity(kernel.shared.len());
+    for d in &kernel.shared {
+        offset = align_up(offset, SHARED_ALIGN);
+        slots.push(SharedSlot { name: d.name.clone(), elem: d.elem, len: d.len, offset });
+        offset += d.elem.size() * d.len;
+    }
+    let static_bytes = align_up(offset, SHARED_ALIGN);
+    MemoryPlan {
+        slots,
+        static_bytes,
+        dyn_elem: kernel.dyn_shared_elem,
+        dyn_offset: static_bytes,
+    }
+}
+
+/// Total slab bytes a block needs given the dynamic size requested at
+/// launch (`dyn_bytes` = the `<<<g, b, dyn_bytes>>>` argument).
+pub fn slab_bytes(plan: &MemoryPlan, dyn_bytes: usize) -> usize {
+    plan.dyn_offset + if plan.dyn_elem.is_some() { dyn_bytes } else { 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+
+    #[test]
+    fn empty_kernel_zero_slab() {
+        let k = KernelBuilder::new("k").build();
+        let p = plan_memory(&k);
+        assert_eq!(p.static_bytes, 0);
+        assert_eq!(slab_bytes(&p, 0), 0);
+        assert!(p.dyn_elem.is_none());
+    }
+
+    #[test]
+    fn static_arrays_packed_aligned() {
+        let mut b = KernelBuilder::new("k");
+        let _ = b.shared_array("a", Ty::F32, 3); // 12 bytes → pad to 16
+        let _ = b.shared_array("b", Ty::F64, 2); // 16 bytes @16
+        let p = plan_memory(&b.build());
+        assert_eq!(p.slots[0].offset, 0);
+        assert_eq!(p.slots[1].offset, 16);
+        assert_eq!(p.static_bytes, 32);
+    }
+
+    #[test]
+    fn dynamic_after_static() {
+        let mut b = KernelBuilder::new("k");
+        let _ = b.shared_array("tile", Ty::I32, 10); // 40 → 40, aligned 40
+        let _ = b.dyn_shared(Ty::I32);
+        let p = plan_memory(&b.build());
+        assert_eq!(p.dyn_offset, 40);
+        assert_eq!(slab_bytes(&p, 128), 168);
+    }
+
+    #[test]
+    fn dyn_only_kernel() {
+        let mut b = KernelBuilder::new("dynamicReverse");
+        let _ = b.dyn_shared(Ty::I32);
+        let p = plan_memory(&b.build());
+        assert_eq!(p.dyn_offset, 0);
+        assert_eq!(slab_bytes(&p, 64 * 4), 256);
+        // No dynamic request → empty slab.
+        assert_eq!(slab_bytes(&p, 0), 0);
+    }
+
+    #[test]
+    fn align_up_math() {
+        assert_eq!(align_up(0, 8), 0);
+        assert_eq!(align_up(1, 8), 8);
+        assert_eq!(align_up(8, 8), 8);
+        assert_eq!(align_up(9, 8), 16);
+    }
+}

@@ -1,0 +1,242 @@
+//! The CuPBoP compilation pipeline (paper §III).
+//!
+//! `compile_kernel` chains the kernel-side passes in the paper's order:
+//!
+//! 1. verify SPMD input (`ir::verify`),
+//! 2. memory mapping (§III-B1) — shared-slab layout,
+//! 3. extra-variable insertion (§III-B2) — hidden geometry params,
+//! 4. SPMD→MPMD transformation (§III-B3) — loop fission / warp nesting,
+//! 5. parameter packing (§III-C2) — the packed-argument ABI.
+//!
+//! Host-side transformations (implicit barrier insertion, §III-C1) live
+//! in `crate::host` because they operate on host programs, not kernels.
+
+pub mod coverage;
+pub mod extra_vars;
+pub mod fission;
+pub mod memory_mapping;
+pub mod param_pack;
+
+pub use coverage::{coverage, detect_features, judge, Framework, Verdict};
+pub use extra_vars::{insert_extra_vars, ExtraVar, EXTRA_VARS};
+pub use fission::{spmd_to_mpmd, FissionError};
+pub use memory_mapping::{plan_memory, slab_bytes, MemoryPlan};
+pub use param_pack::{pack, unpack, ArgValue, PackedLayout};
+
+use crate::ir::{verify::VerifyError, Kernel, MpmdKernel};
+
+/// Everything the runtime needs to launch a compiled kernel.
+#[derive(Debug, Clone)]
+pub struct CompiledKernel {
+    pub mpmd: MpmdKernel,
+    pub memory: MemoryPlan,
+    pub layout: PackedLayout,
+    /// Index of the first hidden geometry parameter.
+    pub extra_base: usize,
+    /// Indices of the *user* pointer params the kernel stores through —
+    /// the write set used by host implicit-barrier insertion.
+    pub writes: Vec<usize>,
+    /// Indices of user pointer params the kernel loads from.
+    pub reads: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub enum CompileError {
+    Verify(Vec<VerifyError>),
+    Fission(FissionError),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::Verify(errs) => {
+                write!(f, "verification failed:")?;
+                for e in errs {
+                    write!(f, " {e};")?;
+                }
+                Ok(())
+            }
+            CompileError::Fission(e) => write!(f, "fission failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// Run the full kernel compilation pipeline.
+pub fn compile_kernel(kernel: &Kernel) -> Result<CompiledKernel, CompileError> {
+    crate::ir::verify::verify(kernel).map_err(CompileError::Verify)?;
+    let memory = plan_memory(kernel);
+    let (reads, writes) = param_rw_sets(kernel);
+    let ev = insert_extra_vars(kernel.clone());
+    let layout = PackedLayout::of_kernel(&ev.kernel);
+    let mpmd = spmd_to_mpmd(&ev.kernel).map_err(CompileError::Fission)?;
+    Ok(CompiledKernel { mpmd, memory, layout, extra_base: ev.extra_base, writes, reads })
+}
+
+/// Which user pointer-params does the kernel read / write (through any
+/// level of index arithmetic)? Drives implicit barrier insertion.
+fn param_rw_sets(k: &Kernel) -> (Vec<usize>, Vec<usize>) {
+    use crate::ir::{Expr, Stmt};
+    use std::collections::BTreeSet;
+
+    fn root_param(e: &Expr) -> Option<usize> {
+        match e {
+            Expr::Param(i) => Some(*i),
+            Expr::Index { base, .. } => root_param(base),
+            Expr::Bin(_, a, b) => root_param(a).or_else(|| root_param(b)),
+            Expr::Cast(_, a) => root_param(a),
+            Expr::Select { then_, else_, .. } => root_param(then_).or_else(|| root_param(else_)),
+            _ => None,
+        }
+    }
+
+    fn loads(e: &Expr, r: &mut BTreeSet<usize>) {
+        match e {
+            Expr::Load { ptr, .. } => {
+                if let Some(p) = root_param(ptr) {
+                    r.insert(p);
+                }
+                loads(ptr, r);
+            }
+            Expr::Bin(_, a, b) => {
+                loads(a, r);
+                loads(b, r);
+            }
+            Expr::Un(_, a) | Expr::Cast(_, a) => loads(a, r),
+            Expr::Index { base, idx, .. } => {
+                loads(base, r);
+                loads(idx, r);
+            }
+            Expr::Select { cond, then_, else_ } => {
+                loads(cond, r);
+                loads(then_, r);
+                loads(else_, r);
+            }
+            Expr::WarpShfl { val, lane, .. } => {
+                loads(val, r);
+                loads(lane, r);
+            }
+            Expr::WarpVote { pred, .. } => loads(pred, r),
+            Expr::NvIntrinsic { args, .. } => args.iter().for_each(|a| loads(a, r)),
+            _ => {}
+        }
+    }
+
+    fn walk(body: &[Stmt], r: &mut BTreeSet<usize>, w: &mut BTreeSet<usize>) {
+        for s in body {
+            match s {
+                Stmt::Assign { expr, .. } => loads(expr, r),
+                Stmt::Store { ptr, val, .. } => {
+                    if let Some(p) = root_param(ptr) {
+                        w.insert(p);
+                    }
+                    loads(ptr, r);
+                    loads(val, r);
+                }
+                Stmt::If { cond, then_, else_ } => {
+                    loads(cond, r);
+                    walk(then_, r, w);
+                    walk(else_, r, w);
+                }
+                Stmt::For { start, end, step, body, .. } => {
+                    loads(start, r);
+                    loads(end, r);
+                    loads(step, r);
+                    walk(body, r, w);
+                }
+                Stmt::While { cond, body } => {
+                    loads(cond, r);
+                    walk(body, r, w);
+                }
+                Stmt::AtomicRmw { ptr, val, .. } => {
+                    if let Some(p) = root_param(ptr) {
+                        w.insert(p);
+                        r.insert(p);
+                    }
+                    loads(val, r);
+                }
+                Stmt::AtomicCas { ptr, cmp, val, .. } => {
+                    if let Some(p) = root_param(ptr) {
+                        w.insert(p);
+                        r.insert(p);
+                    }
+                    loads(cmp, r);
+                    loads(val, r);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let mut r = BTreeSet::new();
+    let mut w = BTreeSet::new();
+    walk(&k.body, &mut r, &mut w);
+    // Only user *pointer* params matter for host dataflow.
+    let is_ptr = |i: &usize| matches!(k.params[*i].ty, crate::ir::ParamTy::Ptr(_, _));
+    (
+        r.into_iter().filter(is_ptr).collect(),
+        w.into_iter().filter(is_ptr).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::*;
+
+    /// The paper's Listing 3 end to end through the pipeline.
+    #[test]
+    fn compile_dynamic_reverse() {
+        let mut b = KernelBuilder::new("dynamicReverse");
+        let d = b.ptr_param("d", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let s = b.dyn_shared(Ty::I32);
+        let t = b.assign(tid_x());
+        let tr = b.assign(sub(sub(n.clone(), reg(t)), c_i32(1)));
+        b.store_at(s.clone(), reg(t), at(d.clone(), reg(t), Ty::I32), Ty::I32);
+        b.sync_threads();
+        b.store_at(d.clone(), reg(t), at(s.clone(), reg(tr), Ty::I32), Ty::I32);
+        let ck = compile_kernel(&b.build()).unwrap();
+        assert_eq!(ck.extra_base, 2);
+        assert_eq!(ck.layout.slots.len(), 2 + 6);
+        assert_eq!(ck.memory.dyn_elem, Some(Ty::I32));
+        assert_eq!(ck.writes, vec![0]); // stores to d
+        assert_eq!(ck.reads, vec![0]); // loads d (shared is not a param)
+        assert!(!ck.mpmd.warp_level);
+    }
+
+    #[test]
+    fn rw_sets_distinguish_in_out() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F64);
+        let bb = b.ptr_param("b", Ty::F64);
+        let c = b.ptr_param("c", Ty::F64);
+        let id = b.assign(global_tid());
+        let sum = add(at(a.clone(), reg(id), Ty::F64), at(bb.clone(), reg(id), Ty::F64));
+        b.store_at(c.clone(), reg(id), sum, Ty::F64);
+        let ck = compile_kernel(&b.build()).unwrap();
+        assert_eq!(ck.reads, vec![0, 1]);
+        assert_eq!(ck.writes, vec![2]);
+    }
+
+    #[test]
+    fn invalid_kernel_rejected() {
+        let mut b = KernelBuilder::new("bad");
+        b.if_(lt(tid_x(), c_i32(4)), |b| b.sync_threads());
+        assert!(matches!(
+            compile_kernel(&b.build()),
+            Err(CompileError::Verify(_))
+        ));
+    }
+
+    #[test]
+    fn atomic_counts_as_read_and_write() {
+        let mut b = KernelBuilder::new("hist");
+        let bins = b.ptr_param("bins", Ty::I32);
+        b.atomic_rmw_void(AtomicOp::Add, index(bins.clone(), tid_x(), Ty::I32), c_i32(1), Ty::I32);
+        let ck = compile_kernel(&b.build()).unwrap();
+        assert_eq!(ck.writes, vec![0]);
+        assert_eq!(ck.reads, vec![0]);
+    }
+}

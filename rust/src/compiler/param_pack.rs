@@ -1,0 +1,211 @@
+//! Parameter packing (paper §III-C2, Listing 5).
+//!
+//! Kernel launches go through a universal interface: the host-side
+//! prologue packs every argument into a single heap-allocated byte
+//! object (`void **p` in the paper); the kernel-side prologue unpacks
+//! it back into typed values. Both prologues are generated from the
+//! kernel signature's [`PackedLayout`].
+//!
+//! The packed object lives on the heap because it is shared between the
+//! host thread and the pool threads (paper: "all parameters should be
+//! in heap memory").
+
+use crate::ir::*;
+
+/// A concrete kernel argument as the host sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArgValue {
+    /// Device-heap address (byte offset into the device allocator).
+    Ptr(u64),
+    I32(i32),
+    I64(i64),
+    F32(f32),
+    F64(f64),
+}
+
+impl ArgValue {
+    /// The 8-byte slot encoding used in the packed object.
+    fn to_bits(self) -> u64 {
+        match self {
+            ArgValue::Ptr(p) => p,
+            ArgValue::I32(v) => v as u32 as u64,
+            ArgValue::I64(v) => v as u64,
+            ArgValue::F32(v) => v.to_bits() as u64,
+            ArgValue::F64(v) => v.to_bits(),
+        }
+    }
+}
+
+/// Slot description for one parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotKind {
+    Ptr,
+    Scalar(Ty),
+}
+
+/// The packed-argument layout for a kernel signature: one 8-byte slot
+/// per parameter (pointer-sized, as in Listing 5 where every arg is
+/// reached through an `int*`/`int**` indirection).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedLayout {
+    pub slots: Vec<SlotKind>,
+}
+
+impl PackedLayout {
+    pub fn of_kernel(k: &Kernel) -> Self {
+        PackedLayout {
+            slots: k
+                .params
+                .iter()
+                .map(|p| match p.ty {
+                    ParamTy::Ptr(_, _) => SlotKind::Ptr,
+                    ParamTy::Scalar(t) => SlotKind::Scalar(t),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.slots.len() * 8
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PackError {
+    ArityMismatch { expected: usize, got: usize },
+    TypeMismatch { slot: usize },
+}
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PackError::ArityMismatch { expected, got } => {
+                write!(f, "kernel expects {expected} args, got {got}")
+            }
+            PackError::TypeMismatch { slot } => write!(f, "argument {slot} has wrong type"),
+        }
+    }
+}
+
+impl std::error::Error for PackError {}
+
+/// Host-side prologue: pack arguments into the heap object.
+pub fn pack(layout: &PackedLayout, args: &[ArgValue]) -> Result<Vec<u8>, PackError> {
+    if args.len() != layout.slots.len() {
+        return Err(PackError::ArityMismatch { expected: layout.slots.len(), got: args.len() });
+    }
+    let mut buf = vec![0u8; layout.byte_len()];
+    for (i, (slot, arg)) in layout.slots.iter().zip(args).enumerate() {
+        let ok = matches!(
+            (slot, arg),
+            (SlotKind::Ptr, ArgValue::Ptr(_))
+                | (SlotKind::Scalar(Ty::I32), ArgValue::I32(_))
+                | (SlotKind::Scalar(Ty::I64), ArgValue::I64(_))
+                | (SlotKind::Scalar(Ty::F32), ArgValue::F32(_))
+                | (SlotKind::Scalar(Ty::F64), ArgValue::F64(_))
+                | (SlotKind::Scalar(Ty::Bool), ArgValue::I32(_))
+        );
+        if !ok {
+            return Err(PackError::TypeMismatch { slot: i });
+        }
+        buf[i * 8..i * 8 + 8].copy_from_slice(&arg.to_bits().to_le_bytes());
+    }
+    Ok(buf)
+}
+
+/// Kernel-side prologue: unpack the heap object back into typed values.
+pub fn unpack(layout: &PackedLayout, buf: &[u8]) -> Result<Vec<ArgValue>, PackError> {
+    if buf.len() != layout.byte_len() {
+        return Err(PackError::ArityMismatch { expected: layout.byte_len(), got: buf.len() });
+    }
+    let mut out = Vec::with_capacity(layout.slots.len());
+    for (i, slot) in layout.slots.iter().enumerate() {
+        let bits = u64::from_le_bytes(buf[i * 8..i * 8 + 8].try_into().unwrap());
+        out.push(match slot {
+            SlotKind::Ptr => ArgValue::Ptr(bits),
+            SlotKind::Scalar(Ty::I32) | SlotKind::Scalar(Ty::Bool) => ArgValue::I32(bits as u32 as i32),
+            SlotKind::Scalar(Ty::I64) => ArgValue::I64(bits as i64),
+            SlotKind::Scalar(Ty::F32) => ArgValue::F32(f32::from_bits(bits as u32)),
+            SlotKind::Scalar(Ty::F64) => ArgValue::F64(f64::from_bits(bits)),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+
+    fn layout_for(f: impl FnOnce(&mut KernelBuilder)) -> PackedLayout {
+        let mut b = KernelBuilder::new("k");
+        f(&mut b);
+        PackedLayout::of_kernel(&b.build())
+    }
+
+    #[test]
+    fn round_trip_mixed_args() {
+        let l = layout_for(|b| {
+            let _ = b.ptr_param("d", Ty::I32);
+            let _ = b.scalar_param("n", Ty::I32);
+            let _ = b.scalar_param("alpha", Ty::F64);
+            let _ = b.scalar_param("big", Ty::I64);
+            let _ = b.scalar_param("x", Ty::F32);
+        });
+        let args = [
+            ArgValue::Ptr(0xdead_beef),
+            ArgValue::I32(-7),
+            ArgValue::F64(3.25),
+            ArgValue::I64(1 << 40),
+            ArgValue::F32(-0.5),
+        ];
+        let buf = pack(&l, &args).unwrap();
+        assert_eq!(buf.len(), 5 * 8);
+        assert_eq!(unpack(&l, &buf).unwrap(), args.to_vec());
+    }
+
+    #[test]
+    fn arity_checked() {
+        let l = layout_for(|b| {
+            let _ = b.scalar_param("n", Ty::I32);
+        });
+        assert_eq!(
+            pack(&l, &[]).unwrap_err(),
+            PackError::ArityMismatch { expected: 1, got: 0 }
+        );
+    }
+
+    #[test]
+    fn type_checked() {
+        let l = layout_for(|b| {
+            let _ = b.ptr_param("d", Ty::F32);
+        });
+        assert_eq!(
+            pack(&l, &[ArgValue::F32(1.0)]).unwrap_err(),
+            PackError::TypeMismatch { slot: 0 }
+        );
+    }
+
+    #[test]
+    fn negative_and_nan_preserved() {
+        let l = layout_for(|b| {
+            let _ = b.scalar_param("a", Ty::F32);
+            let _ = b.scalar_param("b", Ty::I32);
+        });
+        let args = [ArgValue::F32(f32::NAN), ArgValue::I32(i32::MIN)];
+        let buf = pack(&l, &args).unwrap();
+        match unpack(&l, &buf).unwrap()[0] {
+            ArgValue::F32(v) => assert!(v.is_nan()),
+            _ => panic!(),
+        }
+        assert_eq!(unpack(&l, &buf).unwrap()[1], ArgValue::I32(i32::MIN));
+    }
+
+    #[test]
+    fn buffer_len_checked_on_unpack() {
+        let l = layout_for(|b| {
+            let _ = b.scalar_param("n", Ty::I32);
+        });
+        assert!(unpack(&l, &[0u8; 4]).is_err());
+    }
+}

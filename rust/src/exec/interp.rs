@@ -1,0 +1,757 @@
+//! The MPMD-CIR interpreter.
+//!
+//! Executes one block of a compiled kernel: unpacks the packed argument
+//! object (kernel prologue, §III-C2), assigns the runtime-provided
+//! geometry variables (§III-B2 / Listing 7), then walks the MPMD
+//! statement tree. `ThreadLoop`s iterate logical threads; every virtual
+//! register is replicated per logical thread (MCUDA variable
+//! replication); shared memory lives in the scratch slab; warp
+//! collectives go through the per-warp exchange buffer.
+
+use super::value::{bin_op, un_op, Value};
+use super::{BlockFn, BlockScratch, ExecStats, LaunchInfo, TraceRec};
+use crate::compiler::{self, ArgValue, CompiledKernel};
+use crate::ir::*;
+use crate::runtime::device::{DeviceMemory, SHARED_TAG};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// Interpreter-backed block function for a compiled CIR kernel.
+pub struct CirBlockFn {
+    pub ck: Arc<CompiledKernel>,
+    /// per-register "assigned at block scope" flags (hoisted loop vars)
+    /// — a dense bitmap: this sits on the hottest interpreter path
+    /// (every register read/write), where a HashSet probe cost ~20% of
+    /// total runtime (EXPERIMENTS.md §Perf, L3 iteration 1).
+    block_scope: Vec<bool>,
+    /// stats sink shared with the harness (optional)
+    pub stats: Option<Arc<ExecStats>>,
+}
+
+impl CirBlockFn {
+    pub fn new(ck: Arc<CompiledKernel>) -> Self {
+        let mut set = HashSet::new();
+        collect_block_scope(&ck.mpmd.body, &mut set);
+        let mut block_scope = vec![false; ck.mpmd.num_regs as usize];
+        for r in set {
+            block_scope[r.0 as usize] = true;
+        }
+        CirBlockFn { ck, block_scope, stats: None }
+    }
+
+    pub fn with_stats(ck: Arc<CompiledKernel>, stats: Arc<ExecStats>) -> Self {
+        let mut f = Self::new(ck);
+        f.stats = Some(stats);
+        f
+    }
+}
+
+/// Block-scope registers = loop variables of hoisted (block-level)
+/// `For` statements, recursively — everything else is per-thread.
+fn collect_block_scope(body: &[Stmt], out: &mut HashSet<Reg>) {
+    for s in body {
+        match s {
+            Stmt::For { var, body, .. } => {
+                out.insert(*var);
+                collect_block_scope(body, out);
+            }
+            Stmt::While { body, .. } => collect_block_scope(body, out),
+            Stmt::If { then_, else_, .. } => {
+                collect_block_scope(then_, out);
+                collect_block_scope(else_, out);
+            }
+            // do NOT recurse into ThreadLoop — inner control flow is
+            // per-thread
+            _ => {}
+        }
+    }
+}
+
+impl BlockFn for CirBlockFn {
+    fn run(&self, block_id: u64, launch: &LaunchInfo, mem: &DeviceMemory, scratch: &mut BlockScratch) {
+        let ck = &self.ck;
+        let block_size = launch.block_size();
+        let shared_bytes = compiler::slab_bytes(&ck.memory, launch.dyn_shmem);
+        scratch.prepare(ck.mpmd.num_regs as usize, block_size, shared_bytes);
+        scratch.stats = Default::default();
+
+        // ---- kernel prologue: unpack the packed argument object ----
+        let mut args = compiler::unpack(&ck.layout, &launch.packed)
+            .expect("packed argument object matches kernel layout");
+        // ---- runtime geometry assignment (Listing 7) ----
+        let bx = (block_id % launch.grid.0 as u64) as i32;
+        let by = (block_id / launch.grid.0 as u64) as i32;
+        let eb = ck.extra_base;
+        args[eb] = ArgValue::I32(bx);
+        args[eb + 1] = ArgValue::I32(by);
+        args[eb + 2] = ArgValue::I32(launch.block.0 as i32);
+        args[eb + 3] = ArgValue::I32(launch.block.1 as i32);
+        args[eb + 4] = ArgValue::I32(launch.grid.0 as i32);
+        args[eb + 5] = ArgValue::I32(launch.grid.1 as i32);
+        let args: Vec<Value> = args
+            .into_iter()
+            .map(|a| match a {
+                ArgValue::Ptr(p) => Value::Ptr(p),
+                ArgValue::I32(v) => Value::I32(v),
+                ArgValue::I64(v) => Value::I64(v),
+                ArgValue::F32(v) => Value::F32(v),
+                ArgValue::F64(v) => Value::F64(v),
+            })
+            .collect();
+
+        let mut it = Interp {
+            ck,
+            args: &args,
+            block_scope: &self.block_scope,
+            mem,
+            scratch,
+            block: launch.block,
+            block_size,
+            num_regs: ck.mpmd.num_regs as usize,
+        };
+        it.run_block_stmts(&ck.mpmd.body);
+
+        if let Some(stats) = &self.stats {
+            stats.flush(&scratch.stats);
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.ck.mpmd.name
+    }
+}
+
+/// Per-thread control-flow outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Flow {
+    Normal,
+    Break,
+    Continue,
+    Return,
+}
+
+struct Interp<'a> {
+    ck: &'a CompiledKernel,
+    args: &'a [Value],
+    block_scope: &'a [bool],
+    mem: &'a DeviceMemory,
+    scratch: &'a mut BlockScratch,
+    block: (u32, u32),
+    block_size: usize,
+    num_regs: usize,
+}
+
+impl<'a> Interp<'a> {
+    // ---------- register files ----------
+
+    #[inline]
+    fn reg_read(&self, r: Reg, tid: usize) -> Value {
+        if self.block_scope[r.0 as usize] {
+            self.scratch.block_regs[r.0 as usize]
+        } else {
+            self.scratch.thread_regs[tid * self.num_regs + r.0 as usize]
+        }
+    }
+
+    #[inline]
+    fn reg_write(&mut self, r: Reg, tid: usize, v: Value) {
+        if self.block_scope[r.0 as usize] {
+            self.scratch.block_regs[r.0 as usize] = v;
+        } else {
+            self.scratch.thread_regs[tid * self.num_regs + r.0 as usize] = v;
+        }
+    }
+
+    // ---------- memory (routes shared-tagged pointers to the slab) ----------
+
+    fn load(&mut self, addr: u64, ty: Ty) -> Value {
+        self.scratch.stats.loads += 1;
+        self.scratch.stats.bytes += ty.size() as u64;
+        if addr & SHARED_TAG != 0 {
+            let off = (addr & !SHARED_TAG) as usize;
+            read_slab(&self.scratch.shared, off, ty)
+        } else {
+            if let Some(t) = &mut self.scratch.trace {
+                t.push(TraceRec { addr, bytes: ty.size() as u8, is_write: false });
+            }
+            match ty {
+                Ty::I32 => Value::I32(self.mem.read_i32(addr)),
+                Ty::I64 => Value::I64(self.mem.read_i64(addr)),
+                Ty::F32 => Value::F32(self.mem.read_f32(addr)),
+                Ty::F64 => Value::F64(self.mem.read_f64(addr)),
+                Ty::Bool => Value::Bool(self.mem.read_u8(addr) != 0),
+            }
+        }
+    }
+
+    fn store(&mut self, addr: u64, v: Value, ty: Ty) {
+        self.scratch.stats.stores += 1;
+        self.scratch.stats.bytes += ty.size() as u64;
+        if addr & SHARED_TAG != 0 {
+            let off = (addr & !SHARED_TAG) as usize;
+            write_slab(&mut self.scratch.shared, off, v, ty);
+        } else {
+            if let Some(t) = &mut self.scratch.trace {
+                t.push(TraceRec { addr, bytes: ty.size() as u8, is_write: true });
+            }
+            match ty {
+                Ty::I32 => self.mem.write_i32(addr, v.as_i32()),
+                Ty::I64 => self.mem.write_i64(addr, v.as_i64()),
+                Ty::F32 => self.mem.write_f32(addr, v.as_f32()),
+                Ty::F64 => self.mem.write_f64(addr, v.as_f64()),
+                Ty::Bool => self.mem.write_u8(addr, v.as_bool() as u8),
+            }
+        }
+    }
+
+    // ---------- expressions ----------
+
+    fn eval(&mut self, e: &Expr, tid: usize) -> Value {
+        match e {
+            Expr::Const(c) => Value::of_const(*c),
+            Expr::Reg(r) => self.reg_read(*r, tid),
+            Expr::Param(i) => self.args[*i],
+            Expr::Special(s) => self.special(*s, tid),
+            Expr::SharedBase(i) => Value::Ptr(SHARED_TAG | self.ck.memory.slots[*i].offset as u64),
+            Expr::DynSharedBase => Value::Ptr(SHARED_TAG | self.ck.memory.dyn_offset as u64),
+            Expr::Bin(op, a, b) => {
+                let x = self.eval(a, tid);
+                let y = self.eval(b, tid);
+                if x.is_float() || y.is_float() {
+                    self.scratch.stats.flops += 1;
+                }
+                bin_op(*op, x, y)
+            }
+            Expr::Un(op, a) => {
+                let x = self.eval(a, tid);
+                if x.is_float() {
+                    self.scratch.stats.flops += 1;
+                }
+                un_op(*op, x)
+            }
+            Expr::Cast(ty, a) => self.eval(a, tid).cast(*ty),
+            Expr::Load { ptr, ty } => {
+                let addr = self.eval(ptr, tid).as_ptr();
+                self.load(addr, *ty)
+            }
+            Expr::Index { base, idx, elem } => {
+                let b = self.eval(base, tid).as_ptr();
+                let i = self.eval(idx, tid).as_i64();
+                Value::Ptr(b.wrapping_add((i * elem.size() as i64) as u64))
+            }
+            Expr::Select { cond, then_, else_ } => {
+                if self.eval(cond, tid).as_bool() {
+                    self.eval(then_, tid)
+                } else {
+                    self.eval(else_, tid)
+                }
+            }
+            Expr::Exchange { lane, ty: _ } => {
+                let warp = tid / 32;
+                let lane = self.eval(lane, tid).as_i64();
+                // CUDA: out-of-range source lane → own value
+                let src = if (0..32).contains(&lane) { lane as usize } else { tid % 32 };
+                self.scratch.exchange[warp * 32 + src]
+            }
+            Expr::VoteResult => self.scratch.votes[tid / 32],
+            Expr::WarpShfl { .. } | Expr::WarpVote { .. } => {
+                panic!("warp collective reached the interpreter — fission must legalize it")
+            }
+            Expr::NvIntrinsic { name, .. } => {
+                panic!("NVIDIA intrinsic `{name}` has no CPU semantics (Table II dwt2d case)")
+            }
+        }
+    }
+
+    fn special(&self, s: Special, tid: usize) -> Value {
+        let bx = self.block.0 as usize;
+        match s {
+            Special::ThreadIdxX => Value::I32((tid % bx) as i32),
+            Special::ThreadIdxY => Value::I32((tid / bx) as i32),
+            Special::LaneId => Value::I32((tid % 32) as i32),
+            Special::WarpId => Value::I32((tid / 32) as i32),
+            // Block/grid specials are rewritten by extra_vars; keep a
+            // defensive fallback reading the hidden params.
+            Special::BlockIdxX => self.args[self.ck.extra_base],
+            Special::BlockIdxY => self.args[self.ck.extra_base + 1],
+            Special::BlockDimX => self.args[self.ck.extra_base + 2],
+            Special::BlockDimY => self.args[self.ck.extra_base + 3],
+            Special::GridDimX => self.args[self.ck.extra_base + 4],
+            Special::GridDimY => self.args[self.ck.extra_base + 5],
+        }
+    }
+
+    // ---------- block-scope statements ----------
+
+    fn run_block_stmts(&mut self, body: &[Stmt]) {
+        for s in body {
+            self.scratch.stats.instructions += 1;
+            match s {
+                Stmt::ThreadLoop { body, warp } => {
+                    let (lo, hi) = match warp {
+                        None => (0usize, self.block_size),
+                        Some(w) => {
+                            let wv = self.scratch.block_regs[w.0 as usize].as_i64() as usize;
+                            (wv * 32, ((wv + 1) * 32).min(self.block_size))
+                        }
+                    };
+                    for tid in lo..hi {
+                        if self.scratch.retired[tid] {
+                            continue;
+                        }
+                        if self.run_thread_stmts(body, tid) == Flow::Return {
+                            self.scratch.retired[tid] = true;
+                        }
+                    }
+                }
+                Stmt::If { cond, then_, else_ } => {
+                    // uniform condition — evaluate with tid 0
+                    if self.eval(cond, 0).as_bool() {
+                        self.run_block_stmts(then_);
+                    } else {
+                        self.run_block_stmts(else_);
+                    }
+                }
+                Stmt::For { var, start, end, step, body } => {
+                    let mut v = self.eval(start, 0);
+                    loop {
+                        let e = self.eval(end, 0);
+                        if !bin_op(BinOp::Lt, v, e).as_bool() {
+                            break;
+                        }
+                        self.scratch.block_regs[var.0 as usize] = v;
+                        self.run_block_stmts(body);
+                        let st = self.eval(step, 0);
+                        v = bin_op(BinOp::Add, v, st);
+                    }
+                }
+                Stmt::While { cond, body } => {
+                    while self.eval(cond, 0).as_bool() {
+                        self.run_block_stmts(body);
+                    }
+                }
+                Stmt::ReduceVote { kind } => self.reduce_votes(*kind),
+                other => panic!("thread-level stmt at block scope: {other:?}"),
+            }
+        }
+    }
+
+    fn reduce_votes(&mut self, kind: VoteKind) {
+        let nwarps = (self.block_size + 31) / 32;
+        for w in 0..nwarps {
+            let active = (self.block_size - w * 32).min(32);
+            let slots = &self.scratch.exchange[w * 32..w * 32 + active];
+            let v = match kind {
+                VoteKind::Any => Value::I32(slots.iter().any(|v| v.as_bool()) as i32),
+                VoteKind::All => Value::I32(slots.iter().all(|v| v.as_bool()) as i32),
+                VoteKind::Ballot => {
+                    let mut m = 0i32;
+                    for (i, v) in slots.iter().enumerate() {
+                        if v.as_bool() {
+                            m |= 1 << i;
+                        }
+                    }
+                    Value::I32(m)
+                }
+            };
+            self.scratch.votes[w] = v;
+        }
+    }
+
+    // ---------- thread-scope statements ----------
+
+    fn run_thread_stmts(&mut self, body: &[Stmt], tid: usize) -> Flow {
+        for s in body {
+            self.scratch.stats.instructions += 1;
+            match s {
+                Stmt::Assign { dst, expr } => {
+                    let v = self.eval(expr, tid);
+                    self.reg_write(*dst, tid, v);
+                }
+                Stmt::Store { ptr, val, ty } => {
+                    let addr = self.eval(ptr, tid).as_ptr();
+                    let v = self.eval(val, tid);
+                    self.store(addr, v, *ty);
+                }
+                Stmt::If { cond, then_, else_ } => {
+                    let flow = if self.eval(cond, tid).as_bool() {
+                        self.run_thread_stmts(then_, tid)
+                    } else {
+                        self.run_thread_stmts(else_, tid)
+                    };
+                    if flow != Flow::Normal {
+                        return flow;
+                    }
+                }
+                Stmt::For { var, start, end, step, body } => {
+                    let mut v = self.eval(start, tid);
+                    'outer: loop {
+                        let e = self.eval(end, tid);
+                        if !bin_op(BinOp::Lt, v, e).as_bool() {
+                            break;
+                        }
+                        self.reg_write(*var, tid, v);
+                        match self.run_thread_stmts(body, tid) {
+                            Flow::Normal | Flow::Continue => {}
+                            Flow::Break => break 'outer,
+                            Flow::Return => return Flow::Return,
+                        }
+                        let st = self.eval(step, tid);
+                        v = bin_op(BinOp::Add, v, st);
+                    }
+                }
+                Stmt::While { cond, body } => loop {
+                    if !self.eval(cond, tid).as_bool() {
+                        break;
+                    }
+                    match self.run_thread_stmts(body, tid) {
+                        Flow::Normal | Flow::Continue => {}
+                        Flow::Break => break,
+                        Flow::Return => return Flow::Return,
+                    }
+                },
+                Stmt::Break => return Flow::Break,
+                Stmt::Continue => return Flow::Continue,
+                Stmt::Return => return Flow::Return,
+                Stmt::AtomicRmw { op, ptr, val, ty, dst } => {
+                    let addr = self.eval(ptr, tid).as_ptr();
+                    let v = self.eval(val, tid);
+                    let old = self.atomic(*op, addr, v, *ty);
+                    if let Some(d) = dst {
+                        self.reg_write(*d, tid, old);
+                    }
+                }
+                Stmt::AtomicCas { ptr, cmp, val, ty, dst } => {
+                    let addr = self.eval(ptr, tid).as_ptr();
+                    let c = self.eval(cmp, tid);
+                    let v = self.eval(val, tid);
+                    let old = self.atomic_cas(addr, c, v, *ty);
+                    if let Some(d) = dst {
+                        self.reg_write(*d, tid, old);
+                    }
+                }
+                Stmt::StoreExchange { val, .. } => {
+                    let v = self.eval(val, tid);
+                    let warp = tid / 32;
+                    self.scratch.exchange[warp * 32 + tid % 32] = v;
+                }
+                Stmt::SyncThreads => {
+                    panic!("__syncthreads survived fission — compiler bug")
+                }
+                other => panic!("block-scope stmt at thread scope: {other:?}"),
+            }
+        }
+        Flow::Normal
+    }
+
+    fn atomic(&mut self, op: AtomicOp, addr: u64, v: Value, ty: Ty) -> Value {
+        self.scratch.stats.bytes += 2 * ty.size() as u64;
+        if addr & SHARED_TAG != 0 {
+            // shared-memory atomics: block executes serially on one pool
+            // thread, so plain read-modify-write is atomic
+            let off = (addr & !SHARED_TAG) as usize;
+            let old = read_slab(&self.scratch.shared, off, ty);
+            let new = match op {
+                AtomicOp::Add => bin_op(BinOp::Add, old, v),
+                AtomicOp::Sub => bin_op(BinOp::Sub, old, v),
+                AtomicOp::Min => bin_op(BinOp::Min, old, v),
+                AtomicOp::Max => bin_op(BinOp::Max, old, v),
+                AtomicOp::And => bin_op(BinOp::And, old, v),
+                AtomicOp::Or => bin_op(BinOp::Or, old, v),
+                AtomicOp::Xor => bin_op(BinOp::Xor, old, v),
+                AtomicOp::Exch => v,
+            };
+            write_slab(&mut self.scratch.shared, off, new, ty);
+            return old;
+        }
+        if let Some(t) = &mut self.scratch.trace {
+            t.push(TraceRec { addr, bytes: ty.size() as u8, is_write: true });
+        }
+        match ty {
+            Ty::I32 => Value::I32(self.mem.atomic_rmw_i32(op, addr, v.as_i32())),
+            Ty::F32 => Value::F32(self.mem.atomic_rmw_f32(op, addr, v.as_f32())),
+            Ty::F64 => Value::F64(self.mem.atomic_rmw_f64(op, addr, v.as_f64())),
+            Ty::I64 => {
+                // route through CAS loop on u64
+                let old = self.mem.atomic_rmw_f64(AtomicOp::Exch, addr, f64::from_bits(0));
+                let _ = old;
+                unimplemented!("i64 atomic RMW not needed by any bundled benchmark")
+            }
+            Ty::Bool => panic!("atomic on bool"),
+        }
+    }
+
+    fn atomic_cas(&mut self, addr: u64, cmp: Value, v: Value, ty: Ty) -> Value {
+        self.scratch.stats.bytes += 2 * ty.size() as u64;
+        if addr & SHARED_TAG != 0 {
+            let off = (addr & !SHARED_TAG) as usize;
+            let old = read_slab(&self.scratch.shared, off, ty);
+            if old.as_i64() == cmp.as_i64() {
+                write_slab(&mut self.scratch.shared, off, v, ty);
+            }
+            return old;
+        }
+        if let Some(t) = &mut self.scratch.trace {
+            t.push(TraceRec { addr, bytes: ty.size() as u8, is_write: true });
+        }
+        match ty {
+            Ty::I32 => Value::I32(self.mem.atomic_cas_i32(addr, cmp.as_i32(), v.as_i32())),
+            Ty::I64 => Value::I64(self.mem.atomic_cas_i64(addr, cmp.as_i64(), v.as_i64())),
+            _ => panic!("atomicCAS on {ty:?}"),
+        }
+    }
+}
+
+fn read_slab(slab: &[u8], off: usize, ty: Ty) -> Value {
+    match ty {
+        Ty::I32 => Value::I32(i32::from_le_bytes(slab[off..off + 4].try_into().unwrap())),
+        Ty::I64 => Value::I64(i64::from_le_bytes(slab[off..off + 8].try_into().unwrap())),
+        Ty::F32 => Value::F32(f32::from_le_bytes(slab[off..off + 4].try_into().unwrap())),
+        Ty::F64 => Value::F64(f64::from_le_bytes(slab[off..off + 8].try_into().unwrap())),
+        Ty::Bool => Value::Bool(slab[off] != 0),
+    }
+}
+
+fn write_slab(slab: &mut [u8], off: usize, v: Value, ty: Ty) {
+    match ty {
+        Ty::I32 => slab[off..off + 4].copy_from_slice(&v.as_i32().to_le_bytes()),
+        Ty::I64 => slab[off..off + 8].copy_from_slice(&v.as_i64().to_le_bytes()),
+        Ty::F32 => slab[off..off + 4].copy_from_slice(&v.as_f32().to_le_bytes()),
+        Ty::F64 => slab[off..off + 8].copy_from_slice(&v.as_f64().to_le_bytes()),
+        Ty::Bool => slab[off] = v.as_bool() as u8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile_kernel, pack, ArgValue};
+
+    /// Helper: compile a kernel and run all its blocks serially.
+    pub fn run_kernel(
+        k: &Kernel,
+        grid: (u32, u32),
+        block: (u32, u32),
+        dyn_shmem: usize,
+        user_args: &[ArgValue],
+        mem: &DeviceMemory,
+    ) {
+        let ck = Arc::new(compile_kernel(k).unwrap());
+        let mut all = user_args.to_vec();
+        for _ in 0..6 {
+            all.push(ArgValue::I32(0)); // extra-var slots, runtime-filled
+        }
+        let packed = Arc::new(pack(&ck.layout, &all).unwrap());
+        let launch = LaunchInfo { grid, block, dyn_shmem, packed };
+        let f = CirBlockFn::new(ck);
+        let mut scratch = BlockScratch::new();
+        for b in 0..launch.total_blocks() {
+            f.run(b, &launch, mem, &mut scratch);
+        }
+    }
+
+    /// Listing 1 vecAdd, multi-block.
+    #[test]
+    fn vecadd_end_to_end() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let pa = b.ptr_param("a", Ty::F64);
+        let pb = b.ptr_param("b", Ty::F64);
+        let pc = b.ptr_param("c", Ty::F64);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bld| {
+            let sum = add(at(pa.clone(), reg(id), Ty::F64), at(pb.clone(), reg(id), Ty::F64));
+            bld.store_at(pc.clone(), reg(id), sum, Ty::F64);
+        });
+        let k = b.build();
+
+        let mem = DeviceMemory::with_capacity(1 << 16);
+        let n = 100usize;
+        let a = mem.alloc(n * 8);
+        let bb = mem.alloc(n * 8);
+        let c = mem.alloc(n * 8);
+        mem.write_slice_f64(a, &(0..n).map(|i| i as f64).collect::<Vec<_>>());
+        mem.write_slice_f64(bb, &(0..n).map(|i| 2.0 * i as f64).collect::<Vec<_>>());
+
+        run_kernel(
+            &k,
+            (4, 1),
+            (32, 1),
+            0,
+            &[ArgValue::Ptr(a), ArgValue::Ptr(bb), ArgValue::Ptr(c), ArgValue::I32(n as i32)],
+            &mem,
+        );
+        let out = mem.read_vec_f64(c, n);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 3.0 * i as f64, "c[{i}]");
+        }
+    }
+
+    /// Listing 3 dynamicReverse: dynamic shared memory + barrier.
+    #[test]
+    fn dynamic_reverse_with_barrier() {
+        let mut b = KernelBuilder::new("dynamicReverse");
+        let d = b.ptr_param("d", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let s = b.dyn_shared(Ty::I32);
+        let t = b.assign(tid_x());
+        let tr = b.assign(sub(sub(n.clone(), reg(t)), c_i32(1)));
+        b.store_at(s.clone(), reg(t), at(d.clone(), reg(t), Ty::I32), Ty::I32);
+        b.sync_threads();
+        b.store_at(d.clone(), reg(t), at(s.clone(), reg(tr), Ty::I32), Ty::I32);
+        let k = b.build();
+
+        let mem = DeviceMemory::with_capacity(1 << 14);
+        let n = 64usize;
+        let d_buf = mem.alloc(n * 4);
+        mem.write_slice_i32(d_buf, &(0..n as i32).collect::<Vec<_>>());
+        run_kernel(
+            &k,
+            (1, 1),
+            (n as u32, 1),
+            n * 4,
+            &[ArgValue::Ptr(d_buf), ArgValue::I32(n as i32)],
+            &mem,
+        );
+        let out = mem.read_vec_i32(d_buf, n);
+        let want: Vec<i32> = (0..n as i32).rev().collect();
+        assert_eq!(out, want, "reversal needs the barrier to fission correctly");
+    }
+
+    /// Warp shuffle tree-reduction over one warp.
+    #[test]
+    fn warp_shuffle_reduction() {
+        let mut b = KernelBuilder::new("warp_sum");
+        let d = b.ptr_param("d", Ty::F64);
+        let out = b.ptr_param("out", Ty::F64);
+        let v0 = b.assign(at(d.clone(), tid_x(), Ty::F64));
+        let mut v = v0;
+        for off in [16, 8, 4, 2, 1] {
+            let sh = b.shfl(ShflKind::Down, reg(v), c_i32(off));
+            v = b.assign(add(reg(v), reg(sh)));
+        }
+        b.if_(eq(tid_x(), c_i32(0)), |bld| {
+            bld.store_at(out.clone(), c_i32(0), reg(v), Ty::F64);
+        });
+        let k = b.build();
+
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(32 * 8);
+        let o_buf = mem.alloc(8);
+        mem.write_slice_f64(d_buf, &(0..32).map(|i| i as f64).collect::<Vec<_>>());
+        run_kernel(&k, (1, 1), (32, 1), 0, &[ArgValue::Ptr(d_buf), ArgValue::Ptr(o_buf)], &mem);
+        assert_eq!(mem.read_f64(o_buf), (0..32).sum::<i32>() as f64);
+    }
+
+    /// Warp vote: all lanes positive?
+    #[test]
+    fn warp_vote_all() {
+        let mut b = KernelBuilder::new("vote_all");
+        let d = b.ptr_param("d", Ty::I32);
+        let o = b.ptr_param("o", Ty::I32);
+        let v = b.vote(VoteKind::All, gt(at(d.clone(), tid_x(), Ty::I32), c_i32(0)));
+        b.store_at(o.clone(), tid_x(), reg(v), Ty::I32);
+        let k = b.build();
+
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(32 * 4);
+        let o_buf = mem.alloc(32 * 4);
+        let mut input = vec![1i32; 32];
+        input[7] = 0;
+        mem.write_slice_i32(d_buf, &input);
+        run_kernel(&k, (1, 1), (32, 1), 0, &[ArgValue::Ptr(d_buf), ArgValue::Ptr(o_buf)], &mem);
+        assert!(mem.read_vec_i32(o_buf, 32).iter().all(|&x| x == 0));
+        // now all positive
+        mem.write_slice_i32(d_buf, &vec![2i32; 32]);
+        run_kernel(&k, (1, 1), (32, 1), 0, &[ArgValue::Ptr(d_buf), ArgValue::Ptr(o_buf)], &mem);
+        assert!(mem.read_vec_i32(o_buf, 32).iter().all(|&x| x == 1));
+    }
+
+    /// Early `return` retires a thread across fission regions.
+    #[test]
+    fn early_return_respected_across_regions() {
+        let mut b = KernelBuilder::new("ret");
+        let d = b.ptr_param("d", Ty::I32);
+        b.if_(ge(tid_x(), c_i32(8)), |bld| bld.ret());
+        b.store_at(d.clone(), tid_x(), c_i32(1), Ty::I32);
+        b.sync_threads();
+        b.store_at(d.clone(), add(tid_x(), c_i32(16)), c_i32(2), Ty::I32);
+        let k = b.build();
+
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(64 * 4);
+        run_kernel(&k, (1, 1), (16, 1), 0, &[ArgValue::Ptr(d_buf)], &mem);
+        let out = mem.read_vec_i32(d_buf, 32);
+        for i in 0..8 {
+            assert_eq!(out[i], 1, "thread {i} ran region 1");
+            assert_eq!(out[i + 16], 2, "thread {i} ran region 2");
+        }
+        for i in 8..16 {
+            assert_eq!(out[i], 0, "thread {i} retired before region 1 store");
+            assert_eq!(out[i + 16], 0, "retired thread must not run region 2");
+        }
+    }
+
+    /// Atomic add from every thread across blocks.
+    #[test]
+    fn global_atomics() {
+        let mut b = KernelBuilder::new("count");
+        let d = b.ptr_param("d", Ty::I32);
+        b.atomic_rmw_void(AtomicOp::Add, d.clone(), c_i32(1), Ty::I32);
+        let k = b.build();
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(4);
+        run_kernel(&k, (8, 1), (32, 1), 0, &[ArgValue::Ptr(d_buf)], &mem);
+        assert_eq!(mem.read_i32(d_buf), 8 * 32);
+    }
+
+    /// 2D geometry: threadIdx.y and blockIdx.y resolve correctly.
+    #[test]
+    fn two_d_geometry() {
+        let mut b = KernelBuilder::new("grid2d");
+        let d = b.ptr_param("d", Ty::I32);
+        // idx = (bid.y*bdim.y + tid.y) * (gdim.x*bdim.x) + bid.x*bdim.x + tid.x
+        let gx = b.assign(add(mul(bid_x(), bdim_x()), tid_x()));
+        let gy = b.assign(add(
+            mul(special(Special::BlockIdxY), special(Special::BlockDimY)),
+            special(Special::ThreadIdxY),
+        ));
+        let w = b.assign(mul(gdim_x(), bdim_x()));
+        let idx = b.assign(add(mul(reg(gy), reg(w)), reg(gx)));
+        b.store_at(d.clone(), reg(idx), reg(idx), Ty::I32);
+        let k = b.build();
+        let mem = DeviceMemory::with_capacity(1 << 14);
+        let d_buf = mem.alloc(64 * 4);
+        run_kernel(&k, (2, 2), (4, 4), 0, &[ArgValue::Ptr(d_buf)], &mem);
+        assert_eq!(mem.read_vec_i32(d_buf, 64), (0..64).collect::<Vec<_>>());
+    }
+
+    /// Stats counters move.
+    #[test]
+    fn stats_accumulate() {
+        let mut b = KernelBuilder::new("flops");
+        let d = b.ptr_param("d", Ty::F32);
+        let x = b.assign(at(d.clone(), tid_x(), Ty::F32));
+        let y = b.assign(mul(reg(x), c_f32(2.0)));
+        b.store_at(d.clone(), tid_x(), reg(y), Ty::F32);
+        let k = b.build();
+        let ck = Arc::new(compile_kernel(&k).unwrap());
+        let stats = ExecStats::new();
+        let mut args = vec![ArgValue::Ptr(64)];
+        args.extend([ArgValue::I32(0); 6]);
+        let packed = Arc::new(pack(&ck.layout, &args).unwrap());
+        let launch = LaunchInfo { grid: (1, 1), block: (8, 1), dyn_shmem: 0, packed };
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let _ = mem.alloc(64);
+        let f = CirBlockFn::with_stats(ck, stats.clone());
+        let mut scratch = BlockScratch::new();
+        f.run(0, &launch, &mem, &mut scratch);
+        let s = stats.snapshot();
+        assert_eq!(s.blocks, 1);
+        assert_eq!(s.flops, 8); // one mul per thread
+        assert_eq!(s.loads, 8);
+        assert_eq!(s.stores, 8);
+        assert_eq!(s.bytes, 8 * 8);
+        assert!(s.instructions > 0);
+    }
+}

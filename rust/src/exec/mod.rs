@@ -1,0 +1,271 @@
+//! MPMD execution.
+//!
+//! A compiled kernel executes one *block* per invocation (the paper's
+//! `start_routine`). Two implementations of [`BlockFn`] exist:
+//!
+//! * [`CirBlockFn`] — the MPMD-CIR interpreter ([`interp`]); ground
+//!   truth for the compiler passes, also the source of memory traces
+//!   (cache simulator) and instruction counts (Table V, roofline);
+//! * [`NativeBlockFn`] — a hand-written Rust closure equal to what the
+//!   MPMD transform would compile to natively; the hot path for the
+//!   performance benches.
+
+pub mod interp;
+pub mod value;
+
+pub use interp::CirBlockFn;
+pub use value::Value;
+
+use crate::runtime::device::DeviceMemory;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One global-memory access in the trace fed to the cache simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRec {
+    pub addr: u64,
+    pub bytes: u8,
+    pub is_write: bool,
+}
+
+/// Execution counters, accumulated across all blocks of a launch.
+/// Shared (Arc) between pool threads; contention is negligible because
+/// the interpreter batches into a local [`LocalStats`] and flushes once
+/// per block.
+#[derive(Debug, Default)]
+pub struct ExecStats {
+    /// dynamic CIR statements executed (the paper's `# inst`, Table V)
+    pub instructions: AtomicU64,
+    /// floating-point operations (roofline numerator)
+    pub flops: AtomicU64,
+    /// bytes moved to/from global memory (roofline denominator)
+    pub bytes: AtomicU64,
+    /// global loads / stores
+    pub loads: AtomicU64,
+    pub stores: AtomicU64,
+    /// blocks executed
+    pub blocks: AtomicU64,
+}
+
+impl ExecStats {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn flush(&self, l: &LocalStats) {
+        self.instructions.fetch_add(l.instructions, Ordering::Relaxed);
+        self.flops.fetch_add(l.flops, Ordering::Relaxed);
+        self.bytes.fetch_add(l.bytes, Ordering::Relaxed);
+        self.loads.fetch_add(l.loads, Ordering::Relaxed);
+        self.stores.fetch_add(l.stores, Ordering::Relaxed);
+        self.blocks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            instructions: self.instructions.load(Ordering::Relaxed),
+            flops: self.flops.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            loads: self.loads.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            blocks: self.blocks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub instructions: u64,
+    pub flops: u64,
+    pub bytes: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub blocks: u64,
+}
+
+impl StatsSnapshot {
+    /// Arithmetic intensity (FLOP/byte) — x axis of Figure 9.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        if self.bytes == 0 {
+            0.0
+        } else {
+            self.flops as f64 / self.bytes as f64
+        }
+    }
+}
+
+/// Thread-local counters, flushed per block.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LocalStats {
+    pub instructions: u64,
+    pub flops: u64,
+    pub bytes: u64,
+    pub loads: u64,
+    pub stores: u64,
+}
+
+/// Per-pool-thread reusable execution scratch: register files, the
+/// block-shared slab (§III-B1's stack mapping), warp exchange buffers
+/// and the memory trace sink.
+pub struct BlockScratch {
+    /// per-logical-thread registers, `num_regs × block_size`, laid out
+    /// thread-major
+    pub thread_regs: Vec<Value>,
+    /// block-scope registers (hoisted loop variables)
+    pub block_regs: Vec<Value>,
+    /// per-logical-thread "returned early" flags
+    pub retired: Vec<bool>,
+    /// the block's shared-memory slab (static + dynamic segments)
+    pub shared: Vec<u8>,
+    /// per-warp exchange buffer, `nwarps × 32` (COX warp collectives)
+    pub exchange: Vec<Value>,
+    /// per-warp vote results
+    pub votes: Vec<Value>,
+    /// memory trace sink (None = tracing off)
+    pub trace: Option<Vec<TraceRec>>,
+    pub stats: LocalStats,
+}
+
+impl BlockScratch {
+    pub fn new() -> Self {
+        BlockScratch {
+            thread_regs: Vec::new(),
+            block_regs: Vec::new(),
+            retired: Vec::new(),
+            shared: Vec::new(),
+            exchange: Vec::new(),
+            votes: Vec::new(),
+            trace: None,
+            stats: LocalStats::default(),
+        }
+    }
+
+    /// Size buffers for a launch; cheap when already big enough.
+    pub fn prepare(&mut self, num_regs: usize, block_size: usize, shared_bytes: usize) {
+        let need = num_regs * block_size;
+        if self.thread_regs.len() < need {
+            self.thread_regs.resize(need, Value::zero());
+        }
+        if self.block_regs.len() < num_regs {
+            self.block_regs.resize(num_regs, Value::zero());
+        }
+        self.retired.clear();
+        self.retired.resize(block_size, false);
+        if self.shared.len() < shared_bytes {
+            self.shared.resize(shared_bytes, 0);
+        }
+        let nwarps = (block_size + 31) / 32;
+        if self.exchange.len() < nwarps * 32 {
+            self.exchange.resize(nwarps * 32, Value::zero());
+        }
+        if self.votes.len() < nwarps {
+            self.votes.resize(nwarps, Value::zero());
+        }
+    }
+}
+
+impl Default for BlockScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Everything a block invocation needs from its launch site.
+#[derive(Debug, Clone)]
+pub struct LaunchInfo {
+    pub grid: (u32, u32),
+    pub block: (u32, u32),
+    pub dyn_shmem: usize,
+    /// packed argument object (paper §III-C2) — *heap-allocated and
+    /// shared* between host and pool threads, exactly as in Listing 5
+    pub packed: Arc<Vec<u8>>,
+}
+
+impl LaunchInfo {
+    pub fn block_size(&self) -> usize {
+        (self.block.0 * self.block.1) as usize
+    }
+    pub fn total_blocks(&self) -> u64 {
+        self.grid.0 as u64 * self.grid.1 as u64
+    }
+}
+
+/// A compiled block function — the `start_routine` the runtime's pool
+/// threads call with consecutive block ids.
+pub trait BlockFn: Send + Sync {
+    fn run(&self, block_id: u64, launch: &LaunchInfo, mem: &DeviceMemory, scratch: &mut BlockScratch);
+
+    /// Kernel name for reports/debugging.
+    fn name(&self) -> &str {
+        "<anon>"
+    }
+}
+
+/// A hand-written Rust block function (the "emitted binary" analogue).
+pub struct NativeBlockFn {
+    pub name: String,
+    #[allow(clippy::type_complexity)]
+    pub f: Box<dyn Fn(u64, &LaunchInfo, &DeviceMemory, &mut BlockScratch) + Send + Sync>,
+}
+
+impl BlockFn for NativeBlockFn {
+    fn run(&self, block_id: u64, launch: &LaunchInfo, mem: &DeviceMemory, scratch: &mut BlockScratch) {
+        (self.f)(block_id, launch, mem, scratch)
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl NativeBlockFn {
+    pub fn new(
+        name: &str,
+        f: impl Fn(u64, &LaunchInfo, &DeviceMemory, &mut BlockScratch) + Send + Sync + 'static,
+    ) -> Arc<dyn BlockFn> {
+        Arc::new(NativeBlockFn { name: name.to_string(), f: Box::new(f) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_flush_and_snapshot() {
+        let s = ExecStats::new();
+        let l = LocalStats { instructions: 10, flops: 4, bytes: 32, loads: 2, stores: 1 };
+        s.flush(&l);
+        s.flush(&l);
+        let snap = s.snapshot();
+        assert_eq!(snap.instructions, 20);
+        assert_eq!(snap.blocks, 2);
+        assert!((snap.arithmetic_intensity() - 8.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scratch_prepare_sizes() {
+        let mut s = BlockScratch::new();
+        s.prepare(4, 70, 128);
+        assert!(s.thread_regs.len() >= 280);
+        assert_eq!(s.retired.len(), 70);
+        assert!(s.shared.len() >= 128);
+        assert_eq!(s.exchange.len(), 3 * 32); // ceil(70/32)=3 warps
+        // shrinking launch reuses buffers
+        s.prepare(2, 8, 0);
+        assert_eq!(s.retired.len(), 8);
+        assert!(s.thread_regs.len() >= 280);
+    }
+
+    #[test]
+    fn launch_info_geometry() {
+        let l = LaunchInfo {
+            grid: (8, 2),
+            block: (16, 2),
+            dyn_shmem: 0,
+            packed: Arc::new(vec![]),
+        };
+        assert_eq!(l.block_size(), 32);
+        assert_eq!(l.total_blocks(), 16);
+    }
+}

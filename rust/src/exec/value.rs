@@ -1,0 +1,350 @@
+//! Runtime values and C-like arithmetic for the MPMD interpreter.
+
+use crate::ir::{BinOp, Const, Ty, UnOp};
+
+/// A dynamically-typed CIR value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Value {
+    I32(i32),
+    I64(i64),
+    F32(f32),
+    F64(f64),
+    Bool(bool),
+    /// Device (or SHARED_TAG-tagged block-shared) address.
+    Ptr(u64),
+}
+
+impl Value {
+    pub fn zero() -> Value {
+        Value::I32(0)
+    }
+
+    pub fn of_const(c: Const) -> Value {
+        match c {
+            Const::I32(v) => Value::I32(v),
+            Const::I64(v) => Value::I64(v),
+            Const::F32(v) => Value::F32(v),
+            Const::F64(v) => Value::F64(v),
+            Const::Bool(v) => Value::Bool(v),
+        }
+    }
+
+    pub fn as_i64(self) -> i64 {
+        match self {
+            Value::I32(v) => v as i64,
+            Value::I64(v) => v,
+            Value::F32(v) => v as i64,
+            Value::F64(v) => v as i64,
+            Value::Bool(v) => v as i64,
+            Value::Ptr(p) => p as i64,
+        }
+    }
+
+    pub fn as_i32(self) -> i32 {
+        self.as_i64() as i32
+    }
+
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Value::I32(v) => v as f64,
+            Value::I64(v) => v as f64,
+            Value::F32(v) => v as f64,
+            Value::F64(v) => v,
+            Value::Bool(v) => v as i32 as f64,
+            Value::Ptr(p) => p as f64,
+        }
+    }
+
+    pub fn as_f32(self) -> f32 {
+        self.as_f64() as f32
+    }
+
+    pub fn as_bool(self) -> bool {
+        match self {
+            Value::Bool(v) => v,
+            Value::I32(v) => v != 0,
+            Value::I64(v) => v != 0,
+            Value::F32(v) => v != 0.0,
+            Value::F64(v) => v != 0.0,
+            Value::Ptr(p) => p != 0,
+        }
+    }
+
+    pub fn as_ptr(self) -> u64 {
+        match self {
+            Value::Ptr(p) => p,
+            Value::I64(v) => v as u64,
+            Value::I32(v) => v as u32 as u64,
+            other => panic!("value used as pointer: {other:?}"),
+        }
+    }
+
+    pub fn cast(self, ty: Ty) -> Value {
+        match ty {
+            Ty::I32 => Value::I32(self.as_i32()),
+            Ty::I64 => Value::I64(self.as_i64()),
+            Ty::F32 => Value::F32(self.as_f32()),
+            Ty::F64 => Value::F64(self.as_f64()),
+            Ty::Bool => Value::Bool(self.as_bool()),
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, Value::F32(_) | Value::F64(_))
+    }
+
+    /// Numeric rank for C-style usual arithmetic conversions.
+    fn rank(self) -> u8 {
+        match self {
+            Value::Bool(_) => 0,
+            Value::I32(_) => 1,
+            Value::I64(_) | Value::Ptr(_) => 2,
+            Value::F32(_) => 3,
+            Value::F64(_) => 4,
+        }
+    }
+}
+
+/// Apply a binary operator with C-style type promotion. Pointers follow
+/// integer arithmetic (byte-granular; element scaling is done by
+/// `Expr::Index`, not here).
+pub fn bin_op(op: BinOp, a: Value, b: Value) -> Value {
+    use BinOp::*;
+    // comparisons produce Bool
+    if matches!(op, Eq | Ne | Lt | Le | Gt | Ge) {
+        let r = if a.is_float() || b.is_float() {
+            let (x, y) = (a.as_f64(), b.as_f64());
+            match op {
+                Eq => x == y,
+                Ne => x != y,
+                Lt => x < y,
+                Le => x <= y,
+                Gt => x > y,
+                Ge => x >= y,
+                _ => unreachable!(),
+            }
+        } else {
+            let (x, y) = (a.as_i64(), b.as_i64());
+            match op {
+                Eq => x == y,
+                Ne => x != y,
+                Lt => x < y,
+                Le => x <= y,
+                Gt => x > y,
+                Ge => x >= y,
+                _ => unreachable!(),
+            }
+        };
+        return Value::Bool(r);
+    }
+    let rank = a.rank().max(b.rank());
+    match rank {
+        4 => {
+            let (x, y) = (a.as_f64(), b.as_f64());
+            Value::F64(match op {
+                Add => x + y,
+                Sub => x - y,
+                Mul => x * y,
+                Div => x / y,
+                Rem => x % y,
+                Min => x.min(y),
+                Max => x.max(y),
+                _ => panic!("bitwise op on f64"),
+            })
+        }
+        3 => {
+            let (x, y) = (a.as_f32(), b.as_f32());
+            Value::F32(match op {
+                Add => x + y,
+                Sub => x - y,
+                Mul => x * y,
+                Div => x / y,
+                Rem => x % y,
+                Min => x.min(y),
+                Max => x.max(y),
+                _ => panic!("bitwise op on f32"),
+            })
+        }
+        2 => {
+            let (x, y) = (a.as_i64(), b.as_i64());
+            let r = int_op64(op, x, y);
+            if matches!(a, Value::Ptr(_)) || matches!(b, Value::Ptr(_)) {
+                Value::Ptr(r as u64)
+            } else {
+                Value::I64(r)
+            }
+        }
+        _ => {
+            let (x, y) = (a.as_i32(), b.as_i32());
+            Value::I32(int_op32(op, x, y))
+        }
+    }
+}
+
+fn int_op64(op: BinOp, x: i64, y: i64) -> i64 {
+    use BinOp::*;
+    match op {
+        Add => x.wrapping_add(y),
+        Sub => x.wrapping_sub(y),
+        Mul => x.wrapping_mul(y),
+        Div => {
+            if y == 0 {
+                0
+            } else {
+                x.wrapping_div(y)
+            }
+        }
+        Rem => {
+            if y == 0 {
+                0
+            } else {
+                x.wrapping_rem(y)
+            }
+        }
+        And => x & y,
+        Or => x | y,
+        Xor => x ^ y,
+        Shl => x.wrapping_shl(y as u32),
+        Shr => x.wrapping_shr(y as u32),
+        Min => x.min(y),
+        Max => x.max(y),
+        _ => unreachable!(),
+    }
+}
+
+fn int_op32(op: BinOp, x: i32, y: i32) -> i32 {
+    use BinOp::*;
+    match op {
+        Add => x.wrapping_add(y),
+        Sub => x.wrapping_sub(y),
+        Mul => x.wrapping_mul(y),
+        Div => {
+            if y == 0 {
+                0
+            } else {
+                x.wrapping_div(y)
+            }
+        }
+        Rem => {
+            if y == 0 {
+                0
+            } else {
+                x.wrapping_rem(y)
+            }
+        }
+        And => x & y,
+        Or => x | y,
+        Xor => x ^ y,
+        Shl => x.wrapping_shl(y as u32),
+        Shr => x.wrapping_shr(y as u32),
+        Min => x.min(y),
+        Max => x.max(y),
+        _ => unreachable!(),
+    }
+}
+
+/// Apply a unary operator.
+pub fn un_op(op: UnOp, a: Value) -> Value {
+    use UnOp::*;
+    match op {
+        Neg => match a {
+            Value::I32(v) => Value::I32(v.wrapping_neg()),
+            Value::I64(v) => Value::I64(v.wrapping_neg()),
+            Value::F32(v) => Value::F32(-v),
+            Value::F64(v) => Value::F64(-v),
+            other => Value::I64(-other.as_i64()),
+        },
+        Not => Value::Bool(!a.as_bool()),
+        Abs => match a {
+            Value::I32(v) => Value::I32(v.wrapping_abs()),
+            Value::I64(v) => Value::I64(v.wrapping_abs()),
+            Value::F32(v) => Value::F32(v.abs()),
+            Value::F64(v) => Value::F64(v.abs()),
+            other => other,
+        },
+        // transcendental: keep f32 in f32 (CUDA's sqrtf), else f64
+        Sqrt | Exp | Log | Floor | Ceil | Sin | Cos | Rsqrt => match a {
+            Value::F32(v) => Value::F32(apply_f32(op, v)),
+            other => Value::F64(apply_f64(op, other.as_f64())),
+        },
+    }
+}
+
+fn apply_f32(op: UnOp, v: f32) -> f32 {
+    match op {
+        UnOp::Sqrt => v.sqrt(),
+        UnOp::Exp => v.exp(),
+        UnOp::Log => v.ln(),
+        UnOp::Floor => v.floor(),
+        UnOp::Ceil => v.ceil(),
+        UnOp::Sin => v.sin(),
+        UnOp::Cos => v.cos(),
+        UnOp::Rsqrt => 1.0 / v.sqrt(),
+        _ => unreachable!(),
+    }
+}
+
+fn apply_f64(op: UnOp, v: f64) -> f64 {
+    match op {
+        UnOp::Sqrt => v.sqrt(),
+        UnOp::Exp => v.exp(),
+        UnOp::Log => v.ln(),
+        UnOp::Floor => v.floor(),
+        UnOp::Ceil => v.ceil(),
+        UnOp::Sin => v.sin(),
+        UnOp::Cos => v.cos(),
+        UnOp::Rsqrt => 1.0 / v.sqrt(),
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn promotion_rules() {
+        assert_eq!(bin_op(BinOp::Add, Value::I32(1), Value::I32(2)), Value::I32(3));
+        assert_eq!(bin_op(BinOp::Add, Value::I32(1), Value::F32(2.0)), Value::F32(3.0));
+        assert_eq!(bin_op(BinOp::Add, Value::F32(1.0), Value::F64(2.0)), Value::F64(3.0));
+        assert_eq!(bin_op(BinOp::Mul, Value::I64(3), Value::I32(4)), Value::I64(12));
+    }
+
+    #[test]
+    fn comparisons_yield_bool() {
+        assert_eq!(bin_op(BinOp::Lt, Value::I32(1), Value::I32(2)), Value::Bool(true));
+        assert_eq!(bin_op(BinOp::Ge, Value::F64(2.0), Value::F64(3.0)), Value::Bool(false));
+    }
+
+    #[test]
+    fn pointer_arithmetic_stays_pointer() {
+        let p = bin_op(BinOp::Add, Value::Ptr(100), Value::I32(8));
+        assert_eq!(p, Value::Ptr(108));
+    }
+
+    #[test]
+    fn div_by_zero_is_defined() {
+        // guest UB → deterministic 0, so fuzzing can't crash the host
+        assert_eq!(bin_op(BinOp::Div, Value::I32(5), Value::I32(0)), Value::I32(0));
+        assert_eq!(bin_op(BinOp::Rem, Value::I64(5), Value::I64(0)), Value::I64(0));
+    }
+
+    #[test]
+    fn unary_ops() {
+        assert_eq!(un_op(UnOp::Neg, Value::F32(2.0)), Value::F32(-2.0));
+        assert_eq!(un_op(UnOp::Sqrt, Value::F64(9.0)), Value::F64(3.0));
+        assert_eq!(un_op(UnOp::Abs, Value::I32(-4)), Value::I32(4));
+        assert_eq!(un_op(UnOp::Not, Value::Bool(false)), Value::Bool(true));
+        match un_op(UnOp::Rsqrt, Value::F32(4.0)) {
+            Value::F32(v) => assert!((v - 0.5).abs() < 1e-6),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn casts() {
+        assert_eq!(Value::F64(3.9).cast(Ty::I32), Value::I32(3));
+        assert_eq!(Value::I32(-1).cast(Ty::F32), Value::F32(-1.0));
+        assert_eq!(Value::I64(257).cast(Ty::Bool), Value::Bool(true));
+    }
+}

@@ -1,0 +1,186 @@
+//! The CuPBoP runtime backend — the paper's system, end to end.
+
+use super::{BackendCfg, ExecMode, KernelVariants};
+use crate::compiler::{pack, ArgValue};
+use crate::exec::{ExecStats, LaunchInfo};
+use crate::host::{ResolvedLaunch, RuntimeApi};
+use crate::runtime::{DeviceMemory, KernelTask, TaskQueue, ThreadPool};
+use std::sync::Arc;
+
+pub struct CupbopRuntime {
+    pub mem: Arc<DeviceMemory>,
+    queue: Arc<TaskQueue>,
+    _pool: ThreadPool,
+    kernels: Vec<KernelVariants>,
+    cfg: BackendCfg,
+    /// interpreter stats sink (populated in `ExecMode::Interpret`)
+    pub stats: Arc<ExecStats>,
+    /// scratch for host-thread work stealing during `sync()` — on
+    /// launch+sync storms (Fig 11) the host draining the queue itself
+    /// avoids a pair of context switches per kernel (§Perf iteration 3)
+    host_scratch: crate::exec::BlockScratch,
+}
+
+impl CupbopRuntime {
+    pub fn new(kernels: Vec<KernelVariants>, cfg: BackendCfg) -> Self {
+        let mem = Arc::new(DeviceMemory::with_capacity(cfg.mem_cap));
+        let queue = Arc::new(TaskQueue::new());
+        let pool = ThreadPool::new(cfg.pool_size, queue.clone(), mem.clone());
+        CupbopRuntime {
+            mem,
+            queue,
+            _pool: pool,
+            kernels,
+            cfg,
+            stats: ExecStats::new(),
+            host_scratch: crate::exec::BlockScratch::new(),
+        }
+    }
+
+    /// (pushes, fetches) queue counters — Table V instrumentation.
+    pub fn queue_counters(&self) -> (u64, u64) {
+        self.queue.counters()
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.cfg.pool_size
+    }
+
+    /// Pack user args and append the six hidden geometry slots the
+    /// runtime fills per block (§III-B2 + §III-C2).
+    pub(crate) fn pack_args(kv: &KernelVariants, args: &[ArgValue]) -> Arc<Vec<u8>> {
+        let mut all = args.to_vec();
+        for _ in 0..6 {
+            all.push(ArgValue::I32(0));
+        }
+        Arc::new(pack(&kv.ck.layout, &all).expect("launch args match kernel signature"))
+    }
+}
+
+impl RuntimeApi for CupbopRuntime {
+    fn malloc(&mut self, bytes: usize) -> u64 {
+        self.mem.alloc(bytes)
+    }
+
+    fn h2d(&mut self, dst: u64, src: &[u8]) {
+        // CuPBoP memcpys do NOT synchronise: the host compiler pass
+        // inserted ImplicitSync wherever a conflict exists.
+        self.mem.h2d(dst, src);
+    }
+
+    fn d2h(&mut self, dst: &mut [u8], src: u64) {
+        self.mem.d2h(dst, src);
+    }
+
+    fn launch(&mut self, l: ResolvedLaunch) {
+        let kv = &self.kernels[l.kernel];
+        let packed = Self::pack_args(kv, &l.args);
+        let launch = Arc::new(LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed });
+        let total = launch.total_blocks();
+        let stats = matches!(self.cfg.exec, ExecMode::Interpret).then(|| self.stats.clone());
+        let bpf = self
+            .cfg
+            .policy
+            .to_grain(kv.est_insts_per_block)
+            .block_per_fetch(total, self.cfg.pool_size as u64);
+        self.queue.push(KernelTask {
+            start_routine: kv.block_fn(self.cfg.exec, stats),
+            launch,
+            total_blocks: total,
+            curr_block_id: 0,
+            block_per_fetch: bpf,
+        });
+        // asynchronous: return immediately (Figure 5)
+    }
+
+    fn sync(&mut self) {
+        // Work stealing: instead of blocking immediately (two context
+        // switches per tiny kernel), the host thread drains whatever is
+        // still queued, then waits for in-flight fetches.
+        while let Some(fetched) = self.queue.try_fetch() {
+            for b in fetched.start..fetched.end {
+                fetched.start_routine.run(b, &fetched.launch, &self.mem, &mut self.host_scratch);
+            }
+            self.queue.complete(fetched.count());
+        }
+        self.queue.sync();
+    }
+
+    fn free(&mut self, addr: u64) {
+        self.mem.free(addr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::{run_host_program, BufId, HostArg, HostOp, HostProgram, LaunchOp};
+    use crate::ir::*;
+
+    fn vecadd_kernel() -> Kernel {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F32);
+        let bb = b.ptr_param("b", Ty::F32);
+        let c = b.ptr_param("c", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bl| {
+            let s = add(at(a.clone(), reg(id), Ty::F32), at(bb.clone(), reg(id), Ty::F32));
+            bl.store_at(c.clone(), reg(id), s, Ty::F32);
+        });
+        b.build()
+    }
+
+    /// Full host program through the CuPBoP runtime, interpreter mode,
+    /// with the implicit barrier protecting the D2H.
+    #[test]
+    fn vecadd_through_runtime() {
+        let k = vecadd_kernel();
+        let ck = Arc::new(crate::compiler::compile_kernel(&k).unwrap());
+        let kv = KernelVariants::interp_only(ck);
+        let mut rt = CupbopRuntime::new(
+            vec![kv],
+            BackendCfg { pool_size: 4, exec: ExecMode::Interpret, ..Default::default() },
+        );
+
+        let n = 1000usize;
+        let bytes = n * 4;
+        let prog = HostProgram::new(vec![
+            HostOp::Malloc { buf: BufId(0), bytes },
+            HostOp::Malloc { buf: BufId(1), bytes },
+            HostOp::Malloc { buf: BufId(2), bytes },
+            HostOp::H2D { dst: BufId(0), src: crate::host::HostArr(0) },
+            HostOp::H2D { dst: BufId(1), src: crate::host::HostArr(1) },
+            HostOp::Launch(LaunchOp {
+                kernel: 0,
+                grid: (((n + 255) / 256) as u32, 1),
+                block: (256, 1),
+                dyn_shmem: 0,
+                args: vec![
+                    HostArg::Buf(BufId(0)),
+                    HostArg::Buf(BufId(1)),
+                    HostArg::Buf(BufId(2)),
+                    HostArg::I32(n as i32),
+                ],
+            }),
+            HostOp::ImplicitSync,
+            HostOp::D2H { dst: crate::host::HostArr(2), src: BufId(2) },
+        ]);
+
+        let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..n).map(|i| 0.5 * i as f32).collect();
+        let mut arrays = vec![
+            a.iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<u8>>(),
+            b.iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<u8>>(),
+            vec![0u8; bytes],
+        ];
+        run_host_program(&prog, &mut arrays, 3, &mut rt).unwrap();
+        for i in 0..n {
+            let c = f32::from_le_bytes(arrays[2][i * 4..i * 4 + 4].try_into().unwrap());
+            assert_eq!(c, 1.5 * i as f32, "c[{i}]");
+        }
+        let (pushes, fetches) = rt.queue_counters();
+        assert_eq!(pushes, 1);
+        assert!(fetches <= 4 + 1, "average fetching bounds fetch count by pool size");
+    }
+}

@@ -1,0 +1,211 @@
+//! HIP-CPU runtime model (paper §V / §VII-A2).
+//!
+//! HIP-CPU is a header library: no compilation-level SPMD→MPMD
+//! transformation. Its distinguishing costs, all reproduced here:
+//!
+//! 1. **Fiber context switching** — logical threads are fibers, and a
+//!    `__syncthreads` yields through *every* fiber of a block instead of
+//!    being compiled away into loop fission. We run the same MPMD block
+//!    function (the work is identical) and charge a calibrated
+//!    context-switch cost per `threads × regions` — the srad case where
+//!    nine barriers make HIP-CPU slowest.
+//! 2. **Conservative synchronisation** — "HIP-CPU has to apply
+//!    synchronizations before any memory copy between host and device,
+//!    regardless of whether or not these device threads will read/write
+//!    this memory" — both memcpys call `sync()` first (the FIR case).
+//! 3. **No coarse-grained fetching** — `block_per_fetch = 1`, so large
+//!    grids (gaussian: 65536 blocks) pay one atomic fetch per block.
+
+use super::{BackendCfg, KernelVariants};
+use crate::exec::{BlockFn, BlockScratch, LaunchInfo};
+use crate::host::{ResolvedLaunch, RuntimeApi};
+use crate::ir::Stmt;
+use crate::runtime::{DeviceMemory, KernelTask, TaskQueue, ThreadPool};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Calibrated cost of one fiber context switch (ucontext-style swap plus
+/// scheduler bookkeeping; ~100–200ns on current x86).
+pub const FIBER_SWITCH_NS: u64 = 120;
+
+/// Count fission regions (thread loops) in an MPMD body — each one is a
+/// point where every fiber of the block must be switched through.
+pub fn count_regions(body: &[Stmt]) -> u64 {
+    let mut n = 0;
+    for s in body {
+        match s {
+            Stmt::ThreadLoop { .. } => n += 1,
+            Stmt::If { then_, else_, .. } => n += count_regions(then_) + count_regions(else_),
+            Stmt::For { body, .. } | Stmt::While { body, .. } => n += count_regions(body),
+            _ => {}
+        }
+    }
+    n.max(1)
+}
+
+/// Wraps a block function with the fiber context-switch cost model.
+struct FiberBlockFn {
+    inner: Arc<dyn BlockFn>,
+    regions: u64,
+    switch_ns: u64,
+}
+
+impl BlockFn for FiberBlockFn {
+    fn run(&self, block_id: u64, launch: &LaunchInfo, mem: &DeviceMemory, scratch: &mut BlockScratch) {
+        self.inner.run(block_id, launch, mem, scratch);
+        // One switch per logical thread per region boundary.
+        let switches = launch.block_size() as u64 * self.regions;
+        spin_for(Duration::from_nanos(switches * self.switch_ns));
+    }
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
+/// Busy-wait (fibers burn CPU while switching; sleeping would model an
+/// OS block, which is not what happens).
+fn spin_for(d: Duration) {
+    let start = std::time::Instant::now();
+    while start.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+pub struct HipCpuRuntime {
+    pub mem: Arc<DeviceMemory>,
+    queue: Arc<TaskQueue>,
+    _pool: ThreadPool,
+    kernels: Vec<KernelVariants>,
+    cfg: BackendCfg,
+    /// count of (over-)synchronisations performed before memcpys
+    pub memcpy_syncs: u64,
+    switch_ns: u64,
+}
+
+impl HipCpuRuntime {
+    pub fn new(kernels: Vec<KernelVariants>, cfg: BackendCfg) -> Self {
+        Self::with_switch_cost(kernels, cfg, FIBER_SWITCH_NS)
+    }
+
+    pub fn with_switch_cost(kernels: Vec<KernelVariants>, cfg: BackendCfg, switch_ns: u64) -> Self {
+        let mem = Arc::new(DeviceMemory::with_capacity(cfg.mem_cap));
+        let queue = Arc::new(TaskQueue::new());
+        let pool = ThreadPool::new(cfg.pool_size, queue.clone(), mem.clone());
+        HipCpuRuntime { mem, queue, _pool: pool, kernels, cfg, memcpy_syncs: 0, switch_ns }
+    }
+
+    pub fn queue_counters(&self) -> (u64, u64) {
+        self.queue.counters()
+    }
+}
+
+impl RuntimeApi for HipCpuRuntime {
+    fn malloc(&mut self, bytes: usize) -> u64 {
+        self.mem.alloc(bytes)
+    }
+
+    fn h2d(&mut self, dst: u64, src: &[u8]) {
+        // HIP-CPU: synchronise before EVERY memcpy.
+        self.memcpy_syncs += 1;
+        self.queue.sync();
+        self.mem.h2d(dst, src);
+    }
+
+    fn d2h(&mut self, dst: &mut [u8], src: u64) {
+        self.memcpy_syncs += 1;
+        self.queue.sync();
+        self.mem.d2h(dst, src);
+    }
+
+    fn launch(&mut self, l: ResolvedLaunch) {
+        // HIP-CPU preserves same-stream ordering by draining the
+        // previous kernel before dispatching the next (no cross-kernel
+        // overlap — another cost vs CuPBoP's dataflow-based barriers).
+        self.queue.sync();
+        let kv = &self.kernels[l.kernel];
+        let packed = super::CupbopRuntime::pack_args(kv, &l.args);
+        let launch = Arc::new(LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed });
+        let total = launch.total_blocks();
+        let inner = kv.block_fn(self.cfg.exec, None);
+        let regions = count_regions(&kv.ck.mpmd.body);
+        let fiber: Arc<dyn BlockFn> =
+            Arc::new(FiberBlockFn { inner, regions, switch_ns: self.switch_ns });
+        self.queue.push(KernelTask {
+            start_routine: fiber,
+            launch,
+            total_blocks: total,
+            curr_block_id: 0,
+            block_per_fetch: 1, // no coarse-grained fetching
+        });
+    }
+
+    fn sync(&mut self) {
+        self.queue.sync();
+    }
+
+    fn free(&mut self, addr: u64) {
+        self.mem.free(addr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile_kernel;
+    use crate::frameworks::ExecMode;
+    use crate::ir::*;
+
+    #[test]
+    fn region_counting() {
+        let mut b = KernelBuilder::new("two_regions");
+        let p = b.ptr_param("p", Ty::F32);
+        b.store_at(p.clone(), tid_x(), c_f32(1.0), Ty::F32);
+        b.sync_threads();
+        b.store_at(p.clone(), tid_x(), c_f32(2.0), Ty::F32);
+        let ck = compile_kernel(&b.build()).unwrap();
+        assert_eq!(count_regions(&ck.mpmd.body), 2);
+    }
+
+    /// HIP-CPU must sync before every memcpy (over-synchronisation).
+    #[test]
+    fn syncs_before_every_memcpy() {
+        let mut b = KernelBuilder::new("w");
+        let p = b.ptr_param("p", Ty::I32);
+        b.store_at(p.clone(), tid_x(), c_i32(1), Ty::I32);
+        let ck = Arc::new(compile_kernel(&b.build()).unwrap());
+        let mut rt = HipCpuRuntime::new(
+            vec![KernelVariants::interp_only(ck)],
+            BackendCfg { pool_size: 2, exec: ExecMode::Interpret, ..Default::default() },
+        );
+        let a = rt.malloc(64);
+        rt.h2d(a, &[0u8; 64]);
+        let mut out = [0u8; 64];
+        rt.d2h(&mut out, a);
+        assert_eq!(rt.memcpy_syncs, 2);
+    }
+
+    /// One fetch per block — no coarse-grained fetching.
+    #[test]
+    fn fetches_per_block() {
+        let mut b = KernelBuilder::new("noop_k");
+        let p = b.ptr_param("p", Ty::I32);
+        b.store_at(p.clone(), global_tid(), c_i32(1), Ty::I32);
+        let ck = Arc::new(compile_kernel(&b.build()).unwrap());
+        let mut rt = HipCpuRuntime::with_switch_cost(
+            vec![KernelVariants::interp_only(ck)],
+            BackendCfg { pool_size: 2, exec: ExecMode::Interpret, ..Default::default() },
+            0, // disable spin cost in tests
+        );
+        let buf = rt.malloc(16 * 4 * 4);
+        rt.launch(ResolvedLaunch {
+            kernel: 0,
+            grid: (16, 1),
+            block: (4, 1),
+            dyn_shmem: 0,
+            args: vec![crate::compiler::ArgValue::Ptr(buf)],
+        });
+        rt.sync();
+        let (_, fetches) = rt.queue_counters();
+        assert_eq!(fetches, 16);
+    }
+}

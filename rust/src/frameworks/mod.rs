@@ -1,0 +1,135 @@
+//! Framework runtime models (paper §V baselines).
+//!
+//! The same compiled benchmark runs against four backends implementing
+//! [`RuntimeApi`]:
+//!
+//! * [`cupbop::CupbopRuntime`] — the paper's runtime: persistent pool,
+//!   async launches, implicit barriers from the host pass, coarse-
+//!   grained fetching.
+//! * [`hipcpu::HipCpuRuntime`] — HIP-CPU model: fiber-per-thread
+//!   context-switch overhead at every fission region, a full device
+//!   sync before **every** memcpy, no coarse-grained fetching.
+//! * [`dpcpp::DpcppRuntime`] — DPC++/POCL model: pool + queue with
+//!   average fetching only, but able to vectorize certain inner loops
+//!   (EP, KMeans) that LLVM cannot — modelled by per-benchmark
+//!   vectorized block functions.
+//! * [`reference::ReferenceRuntime`] — serial in-thread execution; the
+//!   correctness oracle and the memory-trace source for the cache
+//!   simulator.
+
+pub mod cupbop;
+pub mod dpcpp;
+pub mod hipcpu;
+pub mod reference;
+
+pub use cupbop::CupbopRuntime;
+pub use dpcpp::DpcppRuntime;
+pub use hipcpu::HipCpuRuntime;
+pub use reference::ReferenceRuntime;
+
+use crate::compiler::CompiledKernel;
+use crate::exec::{BlockFn, CirBlockFn, ExecStats};
+use std::sync::Arc;
+
+/// How a framework executes block functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// MPMD-CIR interpreter — compiler ground truth, slower.
+    Interpret,
+    /// Hand-written native closure (the "emitted binary" analogue).
+    Native,
+}
+
+/// A kernel as registered with a runtime: the compiled CIR plus
+/// optional native / vectorized implementations.
+#[derive(Clone)]
+pub struct KernelVariants {
+    pub ck: Arc<CompiledKernel>,
+    /// Native scalar closure — what CuPBoP's LLVM backend would emit.
+    pub native: Option<Arc<dyn BlockFn>>,
+    /// Vectorized closure — what DPC++ emits for EP/KMeans-style loops.
+    pub vectorized: Option<Arc<dyn BlockFn>>,
+    /// Estimated dynamic instructions per block (grain heuristic input;
+    /// the paper uses nvprof counts).
+    pub est_insts_per_block: u64,
+}
+
+impl KernelVariants {
+    pub fn interp_only(ck: Arc<CompiledKernel>) -> Self {
+        KernelVariants { ck, native: None, vectorized: None, est_insts_per_block: u64::MAX }
+    }
+
+    /// Resolve the block function for an exec mode, optionally wiring a
+    /// stats sink into the interpreter.
+    pub fn block_fn(&self, mode: ExecMode, stats: Option<Arc<ExecStats>>) -> Arc<dyn BlockFn> {
+        match mode {
+            ExecMode::Native => {
+                if let Some(n) = &self.native {
+                    return n.clone();
+                }
+                self.interp_fn(stats)
+            }
+            ExecMode::Interpret => self.interp_fn(stats),
+        }
+    }
+
+    /// DPC++ preference order: vectorized → native → interpreter.
+    pub fn dpcpp_block_fn(&self, mode: ExecMode, stats: Option<Arc<ExecStats>>) -> Arc<dyn BlockFn> {
+        if mode == ExecMode::Native {
+            if let Some(v) = &self.vectorized {
+                return v.clone();
+            }
+        }
+        self.block_fn(mode, stats)
+    }
+
+    fn interp_fn(&self, stats: Option<Arc<ExecStats>>) -> Arc<dyn BlockFn> {
+        match stats {
+            Some(s) => Arc::new(CirBlockFn::with_stats(self.ck.clone(), s)),
+            None => Arc::new(CirBlockFn::new(self.ck.clone())),
+        }
+    }
+}
+
+/// Common backend configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BackendCfg {
+    pub pool_size: usize,
+    pub policy: PolicyMode,
+    pub exec: ExecMode,
+    /// device heap capacity in bytes
+    pub mem_cap: usize,
+}
+
+impl Default for BackendCfg {
+    fn default() -> Self {
+        BackendCfg {
+            pool_size: crate::runtime::default_pool_size(),
+            policy: PolicyMode::Auto,
+            exec: ExecMode::Native,
+            mem_cap: 256 << 20,
+        }
+    }
+}
+
+/// Launch-time grain selection mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyMode {
+    /// Always average coarse-grained fetching.
+    Average,
+    /// The heuristic: aggressive for lightweight kernels.
+    Auto,
+    /// Fixed grain for Table V sweeps.
+    Fixed(u64),
+}
+
+impl PolicyMode {
+    pub fn to_grain(self, est_insts_per_block: u64) -> crate::runtime::GrainPolicy {
+        use crate::runtime::GrainPolicy;
+        match self {
+            PolicyMode::Average => GrainPolicy::Average,
+            PolicyMode::Auto => GrainPolicy::Auto { est_insts_per_block },
+            PolicyMode::Fixed(n) => GrainPolicy::Fixed(n),
+        }
+    }
+}

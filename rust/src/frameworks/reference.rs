@@ -1,0 +1,122 @@
+//! Serial reference runtime — the correctness oracle.
+//!
+//! Executes every launch synchronously, in block order, on the host
+//! thread, always through the MPMD interpreter. Because execution is
+//! deterministic and single-threaded it doubles as the memory-trace
+//! source for the cache simulator (Table VI / Fig 10) and the
+//! instruction-count source for Table V and the roofline.
+
+use super::KernelVariants;
+use crate::exec::{BlockFn, BlockScratch, CirBlockFn, ExecStats, LaunchInfo, TraceRec};
+use crate::host::{ResolvedLaunch, RuntimeApi};
+use crate::runtime::DeviceMemory;
+use std::sync::Arc;
+
+pub struct ReferenceRuntime {
+    pub mem: Arc<DeviceMemory>,
+    kernels: Vec<KernelVariants>,
+    scratch: BlockScratch,
+    /// cumulative execution stats across every launch
+    pub stats: Arc<ExecStats>,
+    /// when true, global-memory accesses are appended to `trace`
+    tracing: bool,
+    pub trace: Vec<TraceRec>,
+}
+
+impl ReferenceRuntime {
+    pub fn new(kernels: Vec<KernelVariants>, mem_cap: usize) -> Self {
+        ReferenceRuntime {
+            mem: Arc::new(DeviceMemory::with_capacity(mem_cap)),
+            kernels,
+            scratch: BlockScratch::new(),
+            stats: ExecStats::new(),
+            tracing: false,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Enable memory tracing (drives `cachesim`).
+    pub fn with_tracing(mut self) -> Self {
+        self.tracing = true;
+        self
+    }
+
+    /// Take the collected trace, leaving an empty one.
+    pub fn take_trace(&mut self) -> Vec<TraceRec> {
+        std::mem::take(&mut self.trace)
+    }
+}
+
+impl RuntimeApi for ReferenceRuntime {
+    fn malloc(&mut self, bytes: usize) -> u64 {
+        self.mem.alloc(bytes)
+    }
+
+    fn h2d(&mut self, dst: u64, src: &[u8]) {
+        self.mem.h2d(dst, src);
+    }
+
+    fn d2h(&mut self, dst: &mut [u8], src: u64) {
+        self.mem.d2h(dst, src);
+    }
+
+    fn launch(&mut self, l: ResolvedLaunch) {
+        let kv = &self.kernels[l.kernel];
+        let packed = super::CupbopRuntime::pack_args(kv, &l.args);
+        let launch = LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed };
+        let f = CirBlockFn::with_stats(kv.ck.clone(), self.stats.clone());
+        if self.tracing && self.scratch.trace.is_none() {
+            self.scratch.trace = Some(Vec::new());
+        }
+        for b in 0..launch.total_blocks() {
+            f.run(b, &launch, &self.mem, &mut self.scratch);
+        }
+        if let Some(t) = &mut self.scratch.trace {
+            self.trace.append(t);
+        }
+    }
+
+    fn sync(&mut self) {
+        // serial execution: nothing pending
+    }
+
+    fn free(&mut self, addr: u64) {
+        self.mem.free(addr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile_kernel, ArgValue};
+    use crate::ir::*;
+
+    #[test]
+    fn serial_execution_and_trace() {
+        let mut b = KernelBuilder::new("copy");
+        let src = b.ptr_param("src", Ty::I32);
+        let dst = b.ptr_param("dst", Ty::I32);
+        let id = b.assign(global_tid());
+        b.store_at(dst.clone(), reg(id), at(src.clone(), reg(id), Ty::I32), Ty::I32);
+        let ck = Arc::new(compile_kernel(&b.build()).unwrap());
+        let mut rt =
+            ReferenceRuntime::new(vec![KernelVariants::interp_only(ck)], 1 << 16).with_tracing();
+        let a = rt.malloc(16 * 4);
+        let c = rt.malloc(16 * 4);
+        rt.mem.write_slice_i32(a, &(0..16).collect::<Vec<_>>());
+        rt.launch(ResolvedLaunch {
+            kernel: 0,
+            grid: (2, 1),
+            block: (8, 1),
+            dyn_shmem: 0,
+            args: vec![ArgValue::Ptr(a), ArgValue::Ptr(c)],
+        });
+        rt.sync();
+        assert_eq!(rt.mem.read_vec_i32(c, 16), (0..16).collect::<Vec<_>>());
+        let trace = rt.take_trace();
+        // 16 loads + 16 stores
+        assert_eq!(trace.len(), 32);
+        assert_eq!(trace.iter().filter(|t| t.is_write).count(), 16);
+        assert_eq!(rt.stats.snapshot().blocks, 2);
+    }
+}

@@ -1,0 +1,310 @@
+//! Implicit barrier insertion (paper §III-C1, Listing 4).
+//!
+//! Kernel launches are asynchronous in CuPBoP (as in CUDA). On a CPU
+//! backend the host thread *itself* performs memcpys instead of
+//! submitting them to a device queue, so a launch that writes `d_c`
+//! followed by a host memcpy reading `d_c` is a data race. This pass
+//! performs the dataflow analysis the paper describes: it tracks the
+//! buffers written/read by every in-flight (unsynchronised) launch and
+//! inserts `HostOp::ImplicitSync` at the *latest safe point* — only
+//! where a conflict actually exists (unlike HIP-CPU, which syncs before
+//! every memcpy; see `frameworks::hipcpu` and the FIR discussion in
+//! §V-B2).
+//!
+//! Conflicts handled:
+//! * launch-writes → `D2H` read              (Listing 4's case)
+//! * launch-reads/writes → `H2D` write
+//! * launch-writes → later-launch reads/writes (cross-kernel implicit
+//!   synchronisation, §II)
+//! * launch-uses → `Free`
+//!
+//! Loop bodies (`Repeat`, `WhileFlag`) are analysed to a two-pass
+//! fixpoint so loop-carried conflicts (iteration *i+1* reading what
+//! iteration *i* wrote) also get a barrier.
+
+use super::*;
+use std::collections::BTreeSet;
+
+/// Per-kernel read/write buffer sets, resolved at each launch site from
+/// the kernel's param r/w sets (`compiler::CompiledKernel`).
+#[derive(Debug, Clone, Default)]
+pub struct KernelRw {
+    /// user param indices the kernel loads through
+    pub reads: Vec<usize>,
+    /// user param indices the kernel stores through
+    pub writes: Vec<usize>,
+}
+
+/// In-flight (launched, not yet synchronised) buffer usage.
+#[derive(Debug, Clone, Default, PartialEq)]
+struct InFlight {
+    reads: BTreeSet<BufId>,
+    writes: BTreeSet<BufId>,
+}
+
+impl InFlight {
+    fn clear(&mut self) {
+        self.reads.clear();
+        self.writes.clear();
+    }
+    fn union(&mut self, other: &InFlight) {
+        self.reads.extend(other.reads.iter().copied());
+        self.writes.extend(other.writes.iter().copied());
+    }
+}
+
+fn launch_bufs(l: &LaunchOp, rw: &KernelRw) -> (BTreeSet<BufId>, BTreeSet<BufId>) {
+    let mut reads = BTreeSet::new();
+    let mut writes = BTreeSet::new();
+    for &pi in &rw.reads {
+        if let Some(HostArg::Buf(b)) = l.args.get(pi) {
+            reads.insert(*b);
+        }
+    }
+    for &pi in &rw.writes {
+        if let Some(HostArg::Buf(b)) = l.args.get(pi) {
+            writes.insert(*b);
+        }
+    }
+    (reads, writes)
+}
+
+/// Insert the minimal implicit barriers into `prog`. `kernel_rw[k]`
+/// gives the read/write param sets of kernel table entry `k`.
+pub fn insert_implicit_barriers(prog: &HostProgram, kernel_rw: &[KernelRw]) -> HostProgram {
+    let mut state = InFlight::default();
+    let ops = insert_ops(&prog.ops, kernel_rw, &mut state);
+    HostProgram { ops }
+}
+
+fn insert_ops(ops: &[HostOp], kernel_rw: &[KernelRw], state: &mut InFlight) -> Vec<HostOp> {
+    let mut out = Vec::with_capacity(ops.len());
+    for op in ops {
+        match op {
+            HostOp::Malloc { .. } => out.push(op.clone()),
+            HostOp::H2D { dst, .. } => {
+                // Host write races with in-flight kernel reads *or* writes.
+                if state.reads.contains(dst) || state.writes.contains(dst) {
+                    out.push(HostOp::ImplicitSync);
+                    state.clear();
+                }
+                out.push(op.clone());
+            }
+            HostOp::D2H { src, .. } => {
+                // Host read races with in-flight kernel writes (Listing 4).
+                if state.writes.contains(src) {
+                    out.push(HostOp::ImplicitSync);
+                    state.clear();
+                }
+                out.push(op.clone());
+            }
+            HostOp::Launch(l) => {
+                let rw = kernel_rw.get(l.kernel).cloned().unwrap_or_default();
+                let (reads, writes) = launch_bufs(l, &rw);
+                // RAW / WAW / WAR against in-flight launches.
+                let conflict = reads.iter().any(|b| state.writes.contains(b))
+                    || writes.iter().any(|b| state.writes.contains(b) || state.reads.contains(b));
+                if conflict {
+                    out.push(HostOp::ImplicitSync);
+                    state.clear();
+                }
+                state.reads.extend(reads);
+                state.writes.extend(writes);
+                out.push(op.clone());
+            }
+            HostOp::Sync | HostOp::ImplicitSync => {
+                state.clear();
+                out.push(op.clone());
+            }
+            HostOp::Free(b) => {
+                if state.reads.contains(b) || state.writes.contains(b) {
+                    out.push(HostOp::ImplicitSync);
+                    state.clear();
+                }
+                out.push(op.clone());
+            }
+            HostOp::Repeat { n, body } => {
+                let inner = fixpoint_loop_body(body, kernel_rw, state);
+                out.push(HostOp::Repeat { n: *n, body: inner });
+            }
+            HostOp::WhileFlag { flag, body, max_iters } => {
+                // The flag read-back at the end of each iteration is a
+                // D2H of `flag`: model it by appending a virtual D2H so
+                // the analysis protects it, then drop the virtual op.
+                let mut body2 = body.clone();
+                body2.push(HostOp::D2H { dst: HostArr(usize::MAX), src: *flag });
+                let mut inner = fixpoint_loop_body(&body2, kernel_rw, state);
+                // remove the virtual read-back, keep a sync inserted for it
+                if let Some(pos) = inner
+                    .iter()
+                    .rposition(|o| matches!(o, HostOp::D2H { dst, .. } if dst.0 == usize::MAX))
+                {
+                    inner.remove(pos);
+                }
+                out.push(HostOp::WhileFlag { flag: *flag, body: inner, max_iters: *max_iters });
+            }
+        }
+    }
+    out
+}
+
+/// Analyse a loop body so that loop-carried conflicts get barriers:
+/// pass 1 with the entry state, pass 2 with the state as left by pass 1
+/// (≈ "previous iteration still in flight"). The second pass's
+/// insertions are a superset; two passes reach the fixpoint because the
+/// in-flight set only grows between syncs.
+fn fixpoint_loop_body(body: &[HostOp], kernel_rw: &[KernelRw], state: &mut InFlight) -> Vec<HostOp> {
+    let mut s1 = state.clone();
+    let pass1 = insert_ops(body, kernel_rw, &mut s1);
+    // Pass 2: entry state = state ∪ s1 (previous iteration's leftovers).
+    let mut s2 = state.clone();
+    s2.union(&s1);
+    let pass2 = insert_ops(body, kernel_rw, &mut s2);
+    *state = s2;
+    // pass2 is valid for iterations ≥ 2 and, being a superset of pass1's
+    // barriers, also valid for iteration 1.
+    pass2.len();
+    if pass2.iter().filter(|o| matches!(o, HostOp::ImplicitSync)).count()
+        >= pass1.iter().filter(|o| matches!(o, HostOp::ImplicitSync)).count()
+    {
+        pass2
+    } else {
+        pass1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn launch(kernel: usize, args: Vec<HostArg>) -> HostOp {
+        HostOp::Launch(LaunchOp { kernel, grid: (4, 1), block: (32, 1), dyn_shmem: 0, args })
+    }
+
+    /// Listing 4: vecadd writes d_c (param 2), then D2H reads d_c.
+    #[test]
+    fn listing4_gets_barrier() {
+        let rw = vec![KernelRw { reads: vec![0, 1], writes: vec![2] }];
+        let p = HostProgram::new(vec![
+            launch(0, vec![HostArg::Buf(BufId(0)), HostArg::Buf(BufId(1)), HostArg::Buf(BufId(2))]),
+            HostOp::D2H { dst: HostArr(0), src: BufId(2) },
+        ]);
+        let out = insert_implicit_barriers(&p, &rw);
+        assert_eq!(
+            out.ops,
+            vec![
+                p.ops[0].clone(),
+                HostOp::ImplicitSync,
+                p.ops[1].clone(),
+            ]
+        );
+    }
+
+    /// A D2H of a buffer the kernel only *reads* needs no barrier —
+    /// this is exactly the FIR case where HIP-CPU over-synchronises.
+    #[test]
+    fn read_only_buffer_no_barrier() {
+        let rw = vec![KernelRw { reads: vec![0], writes: vec![1] }];
+        let p = HostProgram::new(vec![
+            launch(0, vec![HostArg::Buf(BufId(0)), HostArg::Buf(BufId(1))]),
+            HostOp::D2H { dst: HostArr(0), src: BufId(0) }, // input buffer
+        ]);
+        let out = insert_implicit_barriers(&p, &rw);
+        assert_eq!(out.num_syncs(), 0);
+    }
+
+    /// H2D overwriting a kernel *input* must wait for the kernel.
+    #[test]
+    fn h2d_over_inflight_read_synchronises() {
+        let rw = vec![KernelRw { reads: vec![0], writes: vec![1] }];
+        let p = HostProgram::new(vec![
+            launch(0, vec![HostArg::Buf(BufId(0)), HostArg::Buf(BufId(1))]),
+            HostOp::H2D { dst: BufId(0), src: HostArr(0) },
+        ]);
+        let out = insert_implicit_barriers(&p, &rw);
+        assert_eq!(out.num_syncs(), 1);
+        assert!(matches!(out.ops[1], HostOp::ImplicitSync));
+    }
+
+    /// Dependent back-to-back launches (k1 writes what k2 reads).
+    #[test]
+    fn dependent_launches_synchronise() {
+        let rw = vec![
+            KernelRw { reads: vec![0], writes: vec![1] },
+            KernelRw { reads: vec![0], writes: vec![1] },
+        ];
+        let p = HostProgram::new(vec![
+            launch(0, vec![HostArg::Buf(BufId(0)), HostArg::Buf(BufId(1))]),
+            launch(1, vec![HostArg::Buf(BufId(1)), HostArg::Buf(BufId(2))]),
+        ]);
+        let out = insert_implicit_barriers(&p, &rw);
+        assert_eq!(out.num_syncs(), 1);
+    }
+
+    /// Independent launches must NOT be serialised.
+    #[test]
+    fn independent_launches_stay_async() {
+        let rw = vec![
+            KernelRw { reads: vec![0], writes: vec![1] },
+            KernelRw { reads: vec![0], writes: vec![1] },
+        ];
+        let p = HostProgram::new(vec![
+            launch(0, vec![HostArg::Buf(BufId(0)), HostArg::Buf(BufId(1))]),
+            launch(1, vec![HostArg::Buf(BufId(2)), HostArg::Buf(BufId(3))]),
+        ]);
+        let out = insert_implicit_barriers(&p, &rw);
+        assert_eq!(out.num_syncs(), 0);
+    }
+
+    /// Explicit sync clears in-flight state — no duplicate barrier.
+    #[test]
+    fn explicit_sync_respected() {
+        let rw = vec![KernelRw { reads: vec![], writes: vec![0] }];
+        let p = HostProgram::new(vec![
+            launch(0, vec![HostArg::Buf(BufId(0))]),
+            HostOp::Sync,
+            HostOp::D2H { dst: HostArr(0), src: BufId(0) },
+        ]);
+        let out = insert_implicit_barriers(&p, &rw);
+        assert_eq!(out.count(&|o| matches!(o, HostOp::ImplicitSync)), 0);
+    }
+
+    /// Loop-carried dependence: a repeated launch writing the buffer it
+    /// reads needs a barrier between iterations.
+    #[test]
+    fn loop_carried_dependence_gets_barrier() {
+        let rw = vec![KernelRw { reads: vec![0], writes: vec![1] }];
+        let p = HostProgram::new(vec![HostOp::Repeat {
+            n: 5,
+            body: vec![launch(0, vec![HostArg::Buf(BufId(0)), HostArg::Buf(BufId(0))])],
+        }]);
+        let out = insert_implicit_barriers(&p, &rw);
+        match &out.ops[0] {
+            HostOp::Repeat { body, .. } => {
+                assert_eq!(body.iter().filter(|o| matches!(o, HostOp::ImplicitSync)).count(), 1);
+            }
+            other => panic!("expected Repeat, got {other:?}"),
+        }
+    }
+
+    /// WhileFlag: the flag read-back is protected when the kernel
+    /// writes the flag buffer.
+    #[test]
+    fn while_flag_readback_protected() {
+        let rw = vec![KernelRw { reads: vec![0], writes: vec![1] }];
+        let p = HostProgram::new(vec![HostOp::WhileFlag {
+            flag: BufId(1),
+            body: vec![launch(0, vec![HostArg::Buf(BufId(0)), HostArg::Buf(BufId(1))])],
+            max_iters: 10,
+        }]);
+        let out = insert_implicit_barriers(&p, &rw);
+        match &out.ops[0] {
+            HostOp::WhileFlag { body, .. } => {
+                assert!(body.iter().any(|o| matches!(o, HostOp::ImplicitSync)));
+                // virtual read-back removed
+                assert!(!body.iter().any(|o| matches!(o, HostOp::D2H { dst, .. } if dst.0 == usize::MAX)));
+            }
+            other => panic!("expected WhileFlag, got {other:?}"),
+        }
+    }
+}

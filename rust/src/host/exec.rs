@@ -1,0 +1,325 @@
+//! Host-program execution against an abstract runtime.
+//!
+//! [`RuntimeApi`] is the CUDA-runtime surface of Figure 3: the same host
+//! program runs unmodified against the CuPBoP runtime
+//! (`frameworks::cupbop`), the HIP-CPU / DPC++ baseline models, the
+//! serial reference executor or the PJRT device path — "by changing the
+//! libraries to be linked".
+
+use super::*;
+use crate::compiler::ArgValue;
+
+/// A launch with buffers resolved to device addresses and
+/// iteration-dependent scalars materialised.
+#[derive(Debug, Clone)]
+pub struct ResolvedLaunch {
+    pub kernel: usize,
+    pub grid: (u32, u32),
+    pub block: (u32, u32),
+    pub dyn_shmem: usize,
+    pub args: Vec<ArgValue>,
+}
+
+/// The CUDA-runtime functions a backend must provide (Figure 3's
+/// replaceable library). Kernel launch is **asynchronous**; `sync`
+/// blocks until every launched kernel completed.
+pub trait RuntimeApi {
+    /// `cudaMalloc` — returns the device address.
+    fn malloc(&mut self, bytes: usize) -> u64;
+    /// `cudaMemcpyHostToDevice`.
+    fn h2d(&mut self, dst: u64, src: &[u8]);
+    /// `cudaMemcpyDeviceToHost`.
+    fn d2h(&mut self, dst: &mut [u8], src: u64);
+    /// Asynchronous kernel launch.
+    fn launch(&mut self, l: ResolvedLaunch);
+    /// `cudaDeviceSynchronize`.
+    fn sync(&mut self);
+    /// `cudaFree`.
+    fn free(&mut self, addr: u64);
+}
+
+#[derive(Debug)]
+pub enum HostExecError {
+    UnallocatedBuffer(BufId),
+    BadHostArray(usize),
+    WhileFlagDiverged { max_iters: usize },
+}
+
+impl std::fmt::Display for HostExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HostExecError::UnallocatedBuffer(b) => write!(f, "use of unallocated buffer {b:?}"),
+            HostExecError::BadHostArray(i) => write!(f, "host array {i} out of range"),
+            HostExecError::WhileFlagDiverged { max_iters } => {
+                write!(f, "WhileFlag did not converge within {max_iters} iterations")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HostExecError {}
+
+struct HostState {
+    /// BufId → (device address, byte length)
+    bufs: Vec<Option<(u64, usize)>>,
+}
+
+impl HostState {
+    fn addr(&self, b: BufId) -> Result<u64, HostExecError> {
+        self.bufs
+            .get(b.0)
+            .and_then(|x| x.as_ref())
+            .map(|(a, _)| *a)
+            .ok_or(HostExecError::UnallocatedBuffer(b))
+    }
+    fn len(&self, b: BufId) -> Result<usize, HostExecError> {
+        self.bufs
+            .get(b.0)
+            .and_then(|x| x.as_ref())
+            .map(|(_, l)| *l)
+            .ok_or(HostExecError::UnallocatedBuffer(b))
+    }
+}
+
+fn resolve_arg(a: &HostArg, st: &HostState, iter: i64) -> Result<ArgValue, HostExecError> {
+    Ok(match a {
+        HostArg::Buf(b) => ArgValue::Ptr(st.addr(*b)?),
+        HostArg::I32(v) => ArgValue::I32(*v),
+        HostArg::I64(v) => ArgValue::I64(*v),
+        HostArg::F32(v) => ArgValue::F32(*v),
+        HostArg::F64(v) => ArgValue::F64(*v),
+        HostArg::IterI32 { base, step } => ArgValue::I32(base + step * iter as i32),
+    })
+}
+
+/// Execute a host program. `host_arrays` is the benchmark's host memory
+/// (indexed by [`HostArr`]); device buffers are created through `api`.
+pub fn run_host_program(
+    prog: &HostProgram,
+    host_arrays: &mut [Vec<u8>],
+    num_bufs: usize,
+    api: &mut dyn RuntimeApi,
+) -> Result<(), HostExecError> {
+    let mut st = HostState { bufs: vec![None; num_bufs] };
+    run_ops(&prog.ops, host_arrays, &mut st, api, 0)
+}
+
+fn run_ops(
+    ops: &[HostOp],
+    host_arrays: &mut [Vec<u8>],
+    st: &mut HostState,
+    api: &mut dyn RuntimeApi,
+    iter: i64,
+) -> Result<(), HostExecError> {
+    for op in ops {
+        match op {
+            HostOp::Malloc { buf, bytes } => {
+                let addr = api.malloc(*bytes);
+                if buf.0 >= st.bufs.len() {
+                    st.bufs.resize(buf.0 + 1, None);
+                }
+                st.bufs[buf.0] = Some((addr, *bytes));
+            }
+            HostOp::H2D { dst, src } => {
+                let addr = st.addr(*dst)?;
+                let arr = host_arrays.get(src.0).ok_or(HostExecError::BadHostArray(src.0))?;
+                api.h2d(addr, arr);
+            }
+            HostOp::D2H { dst, src } => {
+                let addr = st.addr(*src)?;
+                let len = st.len(*src)?;
+                let arr = host_arrays.get_mut(dst.0).ok_or(HostExecError::BadHostArray(dst.0))?;
+                let n = len.min(arr.len());
+                api.d2h(&mut arr[..n], addr);
+            }
+            HostOp::Launch(l) => {
+                let args = l
+                    .args
+                    .iter()
+                    .map(|a| resolve_arg(a, st, iter))
+                    .collect::<Result<Vec<_>, _>>()?;
+                api.launch(ResolvedLaunch {
+                    kernel: l.kernel,
+                    grid: l.grid,
+                    block: l.block,
+                    dyn_shmem: l.dyn_shmem,
+                    args,
+                });
+            }
+            HostOp::Sync | HostOp::ImplicitSync => api.sync(),
+            HostOp::Free(b) => {
+                let addr = st.addr(*b)?;
+                api.free(addr);
+                st.bufs[b.0] = None;
+            }
+            HostOp::Repeat { n, body } => {
+                for i in 0..*n {
+                    run_ops(body, host_arrays, st, api, i as i64)?;
+                }
+            }
+            HostOp::WhileFlag { flag, body, max_iters } => {
+                let addr = st.addr(*flag)?;
+                let mut converged = false;
+                for i in 0..*max_iters {
+                    // clear flag on device
+                    api.h2d(addr, &0i32.to_le_bytes());
+                    run_ops(body, host_arrays, st, api, i as i64)?;
+                    // read flag back (the inserted barrier precedes us in
+                    // `body` only if the pass ran; be safe for the
+                    // reference path too)
+                    api.sync();
+                    let mut f = [0u8; 4];
+                    api.d2h(&mut f, addr);
+                    if i32::from_le_bytes(f) == 0 {
+                        converged = true;
+                        break;
+                    }
+                }
+                if !converged {
+                    return Err(HostExecError::WhileFlagDiverged { max_iters: *max_iters });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A recording mock runtime for unit-testing the interpreter.
+    #[derive(Default)]
+    struct MockRt {
+        log: Vec<String>,
+        next: u64,
+        mem: std::collections::HashMap<u64, Vec<u8>>,
+        /// flag value sequence returned by successive d2h(4-byte) calls
+        flag_script: Vec<i32>,
+    }
+
+    impl RuntimeApi for MockRt {
+        fn malloc(&mut self, bytes: usize) -> u64 {
+            let a = self.next;
+            self.next += bytes as u64 + 64;
+            self.mem.insert(a, vec![0; bytes]);
+            self.log.push(format!("malloc({bytes})@{a}"));
+            a
+        }
+        fn h2d(&mut self, dst: u64, src: &[u8]) {
+            self.log.push(format!("h2d@{dst}x{}", src.len()));
+        }
+        fn d2h(&mut self, dst: &mut [u8], src: u64) {
+            self.log.push(format!("d2h@{src}x{}", dst.len()));
+            if dst.len() == 4 {
+                let v = if self.flag_script.is_empty() { 0 } else { self.flag_script.remove(0) };
+                dst.copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        fn launch(&mut self, l: ResolvedLaunch) {
+            self.log.push(format!("launch(k{},g{})", l.kernel, l.grid.0));
+        }
+        fn sync(&mut self) {
+            self.log.push("sync".into());
+        }
+        fn free(&mut self, addr: u64) {
+            self.log.push(format!("free@{addr}"));
+        }
+    }
+
+    #[test]
+    fn basic_sequence() {
+        let prog = HostProgram::new(vec![
+            HostOp::Malloc { buf: BufId(0), bytes: 16 },
+            HostOp::H2D { dst: BufId(0), src: HostArr(0) },
+            HostOp::Launch(LaunchOp {
+                kernel: 0,
+                grid: (2, 1),
+                block: (4, 1),
+                dyn_shmem: 0,
+                args: vec![HostArg::Buf(BufId(0)), HostArg::I32(4)],
+            }),
+            HostOp::ImplicitSync,
+            HostOp::D2H { dst: HostArr(0), src: BufId(0) },
+            HostOp::Free(BufId(0)),
+        ]);
+        let mut arrays = vec![vec![0u8; 16]];
+        let mut rt = MockRt::default();
+        run_host_program(&prog, &mut arrays, 1, &mut rt).unwrap();
+        assert_eq!(
+            rt.log,
+            vec!["malloc(16)@0", "h2d@0x16", "launch(k0,g2)", "sync", "d2h@0x16", "free@0"]
+        );
+    }
+
+    #[test]
+    fn iter_arg_materialised() {
+        let prog = HostProgram::new(vec![
+            HostOp::Malloc { buf: BufId(0), bytes: 4 },
+            HostOp::Repeat {
+                n: 3,
+                body: vec![HostOp::Launch(LaunchOp {
+                    kernel: 0,
+                    grid: (1, 1),
+                    block: (1, 1),
+                    dyn_shmem: 0,
+                    args: vec![HostArg::IterI32 { base: 10, step: 2 }],
+                })],
+            },
+        ]);
+        struct Capt(Vec<i32>);
+        impl RuntimeApi for Capt {
+            fn malloc(&mut self, _: usize) -> u64 {
+                0
+            }
+            fn h2d(&mut self, _: u64, _: &[u8]) {}
+            fn d2h(&mut self, _: &mut [u8], _: u64) {}
+            fn launch(&mut self, l: ResolvedLaunch) {
+                if let ArgValue::I32(v) = l.args[0] {
+                    self.0.push(v);
+                }
+            }
+            fn sync(&mut self) {}
+            fn free(&mut self, _: u64) {}
+        }
+        let mut rt = Capt(vec![]);
+        run_host_program(&prog, &mut [], 1, &mut rt).unwrap();
+        assert_eq!(rt.0, vec![10, 12, 14]);
+    }
+
+    #[test]
+    fn while_flag_loops_until_zero() {
+        let prog = HostProgram::new(vec![
+            HostOp::Malloc { buf: BufId(0), bytes: 4 },
+            HostOp::WhileFlag { flag: BufId(0), body: vec![], max_iters: 10 },
+        ]);
+        let mut rt = MockRt { flag_script: vec![1, 1, 0], ..Default::default() };
+        run_host_program(&prog, &mut [], 1, &mut rt).unwrap();
+        // 3 iterations → 3 h2d(clear) + 3 d2h(read)
+        assert_eq!(rt.log.iter().filter(|s| s.starts_with("h2d")).count(), 3);
+        assert_eq!(rt.log.iter().filter(|s| s.starts_with("d2h")).count(), 3);
+    }
+
+    #[test]
+    fn while_flag_divergence_detected() {
+        let prog = HostProgram::new(vec![
+            HostOp::Malloc { buf: BufId(0), bytes: 4 },
+            HostOp::WhileFlag { flag: BufId(0), body: vec![], max_iters: 3 },
+        ]);
+        let mut rt = MockRt { flag_script: vec![1, 1, 1, 1], ..Default::default() };
+        assert!(matches!(
+            run_host_program(&prog, &mut [], 1, &mut rt),
+            Err(HostExecError::WhileFlagDiverged { .. })
+        ));
+    }
+
+    #[test]
+    fn unallocated_buffer_is_error() {
+        let prog = HostProgram::new(vec![HostOp::H2D { dst: BufId(0), src: HostArr(0) }]);
+        let mut rt = MockRt::default();
+        assert!(matches!(
+            run_host_program(&prog, &mut [vec![]], 1, &mut rt),
+            Err(HostExecError::UnallocatedBuffer(_))
+        ));
+    }
+}

@@ -1,0 +1,155 @@
+//! CUDA *host* programs (paper §III-C).
+//!
+//! CuPBoP compiles host code too — that is what distinguishes it from
+//! COX. We model host programs as an op list (`malloc`/`memcpy`/
+//! `launch`/`sync`/loops) mirroring the structure of the benchmark's
+//! original `main()`. Two host-side transformations live here:
+//!
+//! * **implicit barrier insertion** (§III-C1): kernel launches are
+//!   asynchronous; a launch that writes `d_c` followed by a
+//!   `cudaMemcpy` reading `d_c` races (Listing 4). The pass analyses
+//!   kernel read/write sets and inserts the minimal `ImplicitSync` ops.
+//! * host-program execution against any [`RuntimeApi`] — the CuPBoP
+//!   runtime, the HIP-CPU/DPC++ baseline models, the serial reference
+//!   executor, or the PJRT device path.
+
+pub mod barrier;
+pub mod exec;
+
+pub use barrier::insert_implicit_barriers;
+pub use exec::{run_host_program, HostExecError, ResolvedLaunch, RuntimeApi};
+
+/// Logical device-buffer handle (index into the program's buffer table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BufId(pub usize);
+
+/// Handle to a host-side array owned by the benchmark program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HostArr(pub usize);
+
+/// A scalar-or-buffer kernel argument as written at the launch site.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HostArg {
+    Buf(BufId),
+    I32(i32),
+    I64(i64),
+    F32(f32),
+    F64(f64),
+    /// Loop-iteration-dependent scalar: `base + step * iter` (the nw
+    /// pattern `kernel<<<...>>>(..., i)` inside a host loop).
+    IterI32 { base: i32, step: i32 },
+}
+
+/// One kernel launch site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaunchOp {
+    /// Index into the program's kernel table.
+    pub kernel: usize,
+    pub grid: (u32, u32),
+    pub block: (u32, u32),
+    /// `<<<g, b, dyn_shmem>>>` dynamic shared memory bytes.
+    pub dyn_shmem: usize,
+    pub args: Vec<HostArg>,
+}
+
+impl LaunchOp {
+    pub fn total_blocks(&self) -> u64 {
+        self.grid.0 as u64 * self.grid.1 as u64
+    }
+    pub fn block_size(&self) -> u32 {
+        self.block.0 * self.block.1
+    }
+}
+
+/// Host-program operations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostOp {
+    /// `cudaMalloc(&buf, bytes)`
+    Malloc { buf: BufId, bytes: usize },
+    /// `cudaMemcpy(buf, host, ..., HostToDevice)`
+    H2D { dst: BufId, src: HostArr },
+    /// `cudaMemcpy(host, buf, ..., DeviceToHost)`
+    D2H { dst: HostArr, src: BufId },
+    /// `kernel<<<grid, block, shmem>>>(args…)` — asynchronous.
+    Launch(LaunchOp),
+    /// Explicit `cudaDeviceSynchronize()` written by the programmer.
+    Sync,
+    /// Barrier inserted by `insert_implicit_barriers` (§III-C1).
+    ImplicitSync,
+    /// `cudaFree(buf)`
+    Free(BufId),
+    /// Host-side `for (iter = 0; iter < n; iter++) { body }` — the
+    /// myocyte/nw pattern of launching a kernel many times.
+    Repeat { n: usize, body: Vec<HostOp> },
+    /// BFS-style convergence loop: each iteration clears `flag` on the
+    /// device, runs `body`, copies `flag` back and stops when zero.
+    WhileFlag { flag: BufId, body: Vec<HostOp>, max_iters: usize },
+}
+
+/// A complete host program.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HostProgram {
+    pub ops: Vec<HostOp>,
+}
+
+impl HostProgram {
+    pub fn new(ops: Vec<HostOp>) -> Self {
+        HostProgram { ops }
+    }
+
+    /// Count ops of each kind (used by tests and Fig 11 accounting).
+    pub fn count(&self, pred: &dyn Fn(&HostOp) -> bool) -> usize {
+        fn walk(ops: &[HostOp], pred: &dyn Fn(&HostOp) -> bool) -> usize {
+            let mut n = 0;
+            for op in ops {
+                if pred(op) {
+                    n += 1;
+                }
+                match op {
+                    HostOp::Repeat { body, .. } | HostOp::WhileFlag { body, .. } => {
+                        n += walk(body, pred);
+                    }
+                    _ => {}
+                }
+            }
+            n
+        }
+        walk(&self.ops, pred)
+    }
+
+    pub fn num_launches(&self) -> usize {
+        self.count(&|op| matches!(op, HostOp::Launch(_)))
+    }
+
+    pub fn num_syncs(&self) -> usize {
+        self.count(&|op| matches!(op, HostOp::Sync | HostOp::ImplicitSync))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_geometry() {
+        let l = LaunchOp { kernel: 0, grid: (4, 2), block: (32, 2), dyn_shmem: 0, args: vec![] };
+        assert_eq!(l.total_blocks(), 8);
+        assert_eq!(l.block_size(), 64);
+    }
+
+    #[test]
+    fn counting_recurses_into_loops() {
+        let p = HostProgram::new(vec![
+            HostOp::Launch(LaunchOp { kernel: 0, grid: (1, 1), block: (1, 1), dyn_shmem: 0, args: vec![] }),
+            HostOp::Repeat {
+                n: 10,
+                body: vec![
+                    HostOp::Launch(LaunchOp { kernel: 0, grid: (1, 1), block: (1, 1), dyn_shmem: 0, args: vec![] }),
+                    HostOp::Sync,
+                ],
+            },
+        ]);
+        assert_eq!(p.num_launches(), 2); // static count, not dynamic
+        assert_eq!(p.num_syncs(), 1);
+    }
+}

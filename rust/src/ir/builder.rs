@@ -1,0 +1,309 @@
+//! Ergonomic builder for authoring CIR kernels.
+//!
+//! Benchmark kernels (`crate::benchsuite`) are written against this API so
+//! they read like the CUDA sources they transliterate.
+
+use super::*;
+
+/// Builds a [`Kernel`] statement-by-statement, allocating registers and
+/// tracking block nesting (if/for/while scopes).
+pub struct KernelBuilder {
+    name: String,
+    params: Vec<ParamDecl>,
+    shared: Vec<SharedDecl>,
+    dyn_shared_elem: Option<Ty>,
+    next_reg: u32,
+    /// Stack of open statement blocks; index 0 is the kernel body.
+    blocks: Vec<Vec<Stmt>>,
+    /// What kind of construct each open block (above the body) belongs to.
+    frames: Vec<Frame>,
+}
+
+enum Frame {
+    IfThen { cond: Expr },
+    IfElse { cond: Expr, then_: Vec<Stmt> },
+    For { var: Reg, start: Expr, end: Expr, step: Expr },
+    While { cond: Expr },
+}
+
+impl KernelBuilder {
+    pub fn new(name: &str) -> Self {
+        KernelBuilder {
+            name: name.to_string(),
+            params: Vec::new(),
+            shared: Vec::new(),
+            dyn_shared_elem: None,
+            next_reg: 0,
+            blocks: vec![Vec::new()],
+            frames: Vec::new(),
+        }
+    }
+
+    /// Declare a global-memory pointer parameter, returning its `Param` expr.
+    pub fn ptr_param(&mut self, name: &str, elem: Ty) -> Expr {
+        let i = self.params.len();
+        self.params.push(ParamDecl { name: name.to_string(), ty: ParamTy::Ptr(AddrSpace::Global, elem) });
+        Expr::Param(i)
+    }
+
+    /// Declare a scalar parameter.
+    pub fn scalar_param(&mut self, name: &str, ty: Ty) -> Expr {
+        let i = self.params.len();
+        self.params.push(ParamDecl { name: name.to_string(), ty: ParamTy::Scalar(ty) });
+        Expr::Param(i)
+    }
+
+    /// Declare a statically-sized `__shared__` array; returns its base expr.
+    pub fn shared_array(&mut self, name: &str, elem: Ty, len: usize) -> Expr {
+        let i = self.shared.len();
+        self.shared.push(SharedDecl { name: name.to_string(), elem, len });
+        Expr::SharedBase(i)
+    }
+
+    /// Declare `extern __shared__ T s[]` (dynamic shared memory).
+    pub fn dyn_shared(&mut self, elem: Ty) -> Expr {
+        self.dyn_shared_elem = Some(elem);
+        Expr::DynSharedBase
+    }
+
+    /// Allocate a fresh virtual register.
+    pub fn fresh(&mut self) -> Reg {
+        let r = Reg(self.next_reg);
+        self.next_reg += 1;
+        r
+    }
+
+    fn push(&mut self, s: Stmt) {
+        self.blocks.last_mut().expect("builder has an open block").push(s);
+    }
+
+    /// `dst = expr`, allocating `dst`.
+    pub fn assign(&mut self, expr: Expr) -> Reg {
+        let dst = self.fresh();
+        self.push(Stmt::Assign { dst, expr });
+        dst
+    }
+
+    /// Re-assign an existing register (mutation, e.g. accumulators).
+    pub fn set(&mut self, dst: Reg, expr: Expr) {
+        self.push(Stmt::Assign { dst, expr });
+    }
+
+    pub fn store(&mut self, ptr: Expr, val: Expr, ty: Ty) {
+        self.push(Stmt::Store { ptr, val, ty });
+    }
+
+    /// `base[idx] = val` shorthand.
+    pub fn store_at(&mut self, base: Expr, idx: Expr, val: Expr, elem: Ty) {
+        self.store(index(base, idx, elem), val, elem);
+    }
+
+    pub fn sync_threads(&mut self) {
+        self.push(Stmt::SyncThreads);
+    }
+
+    pub fn ret(&mut self) {
+        self.push(Stmt::Return);
+    }
+
+    pub fn brk(&mut self) {
+        self.push(Stmt::Break);
+    }
+
+    pub fn cont(&mut self) {
+        self.push(Stmt::Continue);
+    }
+
+    pub fn atomic_rmw(&mut self, op: AtomicOp, ptr: Expr, val: Expr, ty: Ty) -> Reg {
+        let dst = self.fresh();
+        self.push(Stmt::AtomicRmw { op, ptr, val, ty, dst: Some(dst) });
+        dst
+    }
+
+    /// Atomic RMW whose old value is discarded (`atomicAdd(&x, v);`).
+    pub fn atomic_rmw_void(&mut self, op: AtomicOp, ptr: Expr, val: Expr, ty: Ty) {
+        self.push(Stmt::AtomicRmw { op, ptr, val, ty, dst: None });
+    }
+
+    pub fn atomic_cas(&mut self, ptr: Expr, cmp: Expr, val: Expr, ty: Ty) -> Reg {
+        let dst = self.fresh();
+        self.push(Stmt::AtomicCas { ptr, cmp, val, ty, dst: Some(dst) });
+        dst
+    }
+
+    /// Warp shuffle as an assignment: `dst = __shfl_*(val, lane)`.
+    pub fn shfl(&mut self, kind: ShflKind, val: Expr, lane: Expr) -> Reg {
+        self.assign(Expr::WarpShfl { kind, val: Box::new(val), lane: Box::new(lane) })
+    }
+
+    /// Warp vote as an assignment: `dst = __any/all/ballot(pred)`.
+    pub fn vote(&mut self, kind: VoteKind, pred: Expr) -> Reg {
+        self.assign(Expr::WarpVote { kind, pred: Box::new(pred) })
+    }
+
+    // -- structured control flow ------------------------------------
+
+    pub fn if_begin(&mut self, cond: Expr) {
+        self.frames.push(Frame::IfThen { cond });
+        self.blocks.push(Vec::new());
+    }
+
+    pub fn else_begin(&mut self) {
+        let then_ = self.blocks.pop().expect("if block open");
+        match self.frames.pop() {
+            Some(Frame::IfThen { cond }) => {
+                self.frames.push(Frame::IfElse { cond, then_ });
+                self.blocks.push(Vec::new());
+            }
+            _ => panic!("else_begin without matching if_begin"),
+        }
+    }
+
+    pub fn if_end(&mut self) {
+        let blk = self.blocks.pop().expect("if block open");
+        match self.frames.pop() {
+            Some(Frame::IfThen { cond }) => self.push(Stmt::If { cond, then_: blk, else_: Vec::new() }),
+            Some(Frame::IfElse { cond, then_ }) => self.push(Stmt::If { cond, then_, else_: blk }),
+            _ => panic!("if_end without matching if_begin"),
+        }
+    }
+
+    /// `for (v = start; v < end; v += step)`; returns the loop variable.
+    pub fn for_begin(&mut self, start: Expr, end: Expr, step: Expr) -> Reg {
+        let var = self.fresh();
+        self.frames.push(Frame::For { var, start, end, step });
+        self.blocks.push(Vec::new());
+        var
+    }
+
+    pub fn for_end(&mut self) {
+        let body = self.blocks.pop().expect("for block open");
+        match self.frames.pop() {
+            Some(Frame::For { var, start, end, step }) => {
+                self.push(Stmt::For { var, start, end, step, body })
+            }
+            _ => panic!("for_end without matching for_begin"),
+        }
+    }
+
+    pub fn while_begin(&mut self, cond: Expr) {
+        self.frames.push(Frame::While { cond });
+        self.blocks.push(Vec::new());
+    }
+
+    pub fn while_end(&mut self) {
+        let body = self.blocks.pop().expect("while block open");
+        match self.frames.pop() {
+            Some(Frame::While { cond }) => self.push(Stmt::While { cond, body }),
+            _ => panic!("while_end without matching while_begin"),
+        }
+    }
+
+    /// Closure-style `if` (no else).
+    pub fn if_(&mut self, cond: Expr, f: impl FnOnce(&mut Self)) {
+        self.if_begin(cond);
+        f(self);
+        self.if_end();
+    }
+
+    /// Closure-style `if/else`.
+    pub fn if_else(&mut self, cond: Expr, t: impl FnOnce(&mut Self), e: impl FnOnce(&mut Self)) {
+        self.if_begin(cond);
+        t(self);
+        self.else_begin();
+        e(self);
+        self.if_end();
+    }
+
+    /// Closure-style `for`; the loop var is passed to the body closure.
+    pub fn for_(&mut self, start: Expr, end: Expr, step: Expr, f: impl FnOnce(&mut Self, Reg)) {
+        let v = self.for_begin(start, end, step);
+        f(self, v);
+        self.for_end();
+    }
+
+    /// Closure-style `while`.
+    pub fn while_(&mut self, cond: Expr, f: impl FnOnce(&mut Self)) {
+        self.while_begin(cond);
+        f(self);
+        self.while_end();
+    }
+
+    /// Finish the kernel; panics if control-flow frames are unbalanced.
+    pub fn build(mut self) -> Kernel {
+        assert!(self.frames.is_empty(), "unclosed control-flow frame in kernel `{}`", self.name);
+        assert_eq!(self.blocks.len(), 1, "unbalanced blocks in kernel `{}`", self.name);
+        Kernel {
+            name: self.name,
+            params: self.params,
+            shared: self.shared,
+            dyn_shared_elem: self.dyn_shared_elem,
+            body: self.blocks.pop().unwrap(),
+            num_regs: self.next_reg,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build the paper's Listing 1 vecAdd kernel and check its shape.
+    #[test]
+    fn build_vecadd() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F64);
+        let bb = b.ptr_param("b", Ty::F64);
+        let c = b.ptr_param("c", Ty::F64);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |b| {
+            let sum = add(at(a.clone(), reg(id), Ty::F64), at(bb.clone(), reg(id), Ty::F64));
+            b.store_at(c.clone(), reg(id), sum, Ty::F64);
+        });
+        let k = b.build();
+        assert_eq!(k.name, "vecAdd");
+        assert_eq!(k.params.len(), 4);
+        assert_eq!(k.body.len(), 2); // assign + if
+        assert!(matches!(k.body[1], Stmt::If { .. }));
+    }
+
+    #[test]
+    fn nested_for_if_balance() {
+        let mut b = KernelBuilder::new("nested");
+        b.for_(c_i32(0), c_i32(4), c_i32(1), |b, i| {
+            b.if_(lt(reg(i), c_i32(2)), |b| {
+                b.sync_threads();
+            });
+        });
+        let k = b.build();
+        assert_eq!(k.body.len(), 1);
+        match &k.body[0] {
+            Stmt::For { body, .. } => match &body[0] {
+                Stmt::If { then_, .. } => assert_eq!(then_[0], Stmt::SyncThreads),
+                other => panic!("expected if, got {other:?}"),
+            },
+            other => panic!("expected for, got {other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unclosed control-flow frame")]
+    fn unbalanced_panics() {
+        let mut b = KernelBuilder::new("bad");
+        b.if_begin(c_bool(true));
+        let _ = b.build();
+    }
+
+    #[test]
+    fn shared_and_dyn_shared_decls() {
+        let mut b = KernelBuilder::new("sh");
+        let s = b.shared_array("tile", Ty::F32, 256);
+        let d = b.dyn_shared(Ty::I32);
+        assert_eq!(s, Expr::SharedBase(0));
+        assert_eq!(d, Expr::DynSharedBase);
+        let k = b.build();
+        assert_eq!(k.shared.len(), 1);
+        assert_eq!(k.dyn_shared_elem, Some(Ty::I32));
+    }
+}

@@ -1,0 +1,514 @@
+//! CIR — the CUDA-like SPMD kernel IR.
+//!
+//! CIR plays the role NVVM IR plays in the paper: benchmarks are authored
+//! in CIR exactly as their CUDA sources are structured (block/thread
+//! builtins, shared memory, `__syncthreads`, warp shuffle/vote, atomics),
+//! and the CuPBoP compiler passes (`crate::compiler`) transform SPMD CIR
+//! into MPMD CIR that the runtime executes one *block* per task.
+//!
+//! The IR is a structured (statement-tree) register IR rather than a
+//! basic-block CFG: the paper's SPMD→MPMD transformation (MCUDA/COX loop
+//! fission) is defined over structured regions, and a statement tree makes
+//! the fission pass a direct transliteration of the published algorithm.
+
+pub mod builder;
+pub mod pretty;
+pub mod verify;
+
+pub use builder::KernelBuilder;
+
+use std::fmt;
+
+/// Scalar element types. CIR is monomorphic per expression; pointers are
+/// byte-addressed with an element type carried by load/store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Ty {
+    I32,
+    I64,
+    F32,
+    F64,
+    Bool,
+}
+
+impl Ty {
+    /// Size in bytes of one element of this type in device memory.
+    pub fn size(self) -> usize {
+        match self {
+            Ty::I32 | Ty::F32 => 4,
+            Ty::I64 | Ty::F64 => 8,
+            Ty::Bool => 1,
+        }
+    }
+}
+
+/// CUDA address spaces that the memory-mapping pass (§III-B1) must place.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrSpace {
+    /// GPU global memory → CPU heap (device allocator).
+    Global,
+    /// GPU shared memory → one CPU stack/TLS slab per in-flight block.
+    Shared,
+    /// Per-thread local memory → per-logical-thread slab.
+    Local,
+}
+
+/// A virtual register. Registers are function-scoped and, after the
+/// SPMD→MPMD transform, implicitly *replicated per logical thread*
+/// (MCUDA's variable replication; see `compiler::fission`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub u32);
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%r{}", self.0)
+    }
+}
+
+/// GPU special registers (PTX `%tid`, `%ctaid`, ... — paper §III-B2).
+/// The extra-variable-insertion pass rewrites these into explicit
+/// kernel-context variables assigned by the runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Special {
+    ThreadIdxX,
+    ThreadIdxY,
+    BlockIdxX,
+    BlockIdxY,
+    BlockDimX,
+    BlockDimY,
+    GridDimX,
+    GridDimY,
+    /// lane id within the warp (tid % 32)
+    LaneId,
+    /// warp id within the block (tid / 32)
+    WarpId,
+}
+
+/// Binary operators (typed by operand exprs; verifier checks agreement).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Min,
+    Max,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Not,
+    Sqrt,
+    Exp,
+    Log,
+    Abs,
+    Floor,
+    Ceil,
+    Sin,
+    Cos,
+    /// 1/sqrt(x) — common in Rodinia kernels.
+    Rsqrt,
+}
+
+/// Warp shuffle flavours (CUDA 9 `__shfl_sync` family).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShflKind {
+    /// `__shfl_sync(mask, v, srcLane)`
+    Idx,
+    /// `__shfl_up_sync(mask, v, delta)`
+    Up,
+    /// `__shfl_down_sync(mask, v, delta)`
+    Down,
+    /// `__shfl_xor_sync(mask, v, laneMask)`
+    Xor,
+}
+
+/// Warp vote flavours.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VoteKind {
+    Any,
+    All,
+    /// `__ballot_sync` — 32-bit lane mask as i32.
+    Ballot,
+}
+
+/// Atomic read-modify-write ops on global or shared memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AtomicOp {
+    Add,
+    Sub,
+    Min,
+    Max,
+    And,
+    Or,
+    Xor,
+    Exch,
+}
+
+/// Immediate constants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Const {
+    I32(i32),
+    I64(i64),
+    F32(f32),
+    F64(f64),
+    Bool(bool),
+}
+
+impl Const {
+    pub fn ty(self) -> Ty {
+        match self {
+            Const::I32(_) => Ty::I32,
+            Const::I64(_) => Ty::I64,
+            Const::F32(_) => Ty::F32,
+            Const::F64(_) => Ty::F64,
+            Const::Bool(_) => Ty::Bool,
+        }
+    }
+}
+
+/// Expressions. Pure (no side effects); all effects live in `Stmt`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Const(Const),
+    Reg(Reg),
+    /// A GPU special register; eliminated by `compiler::extra_vars`.
+    Special(Special),
+    /// Kernel parameter by index (scalar or pointer; see `ParamDecl`).
+    Param(usize),
+    /// Base address of statically-sized shared array `shared[i]`.
+    SharedBase(usize),
+    /// Base address of the dynamic shared memory segment (`extern __shared__`).
+    DynSharedBase,
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    Un(UnOp, Box<Expr>),
+    /// Typed load through a pointer expression.
+    Load { ptr: Box<Expr>, ty: Ty },
+    /// `base + idx * sizeof(elem)` pointer arithmetic (CUDA `&p[i]`).
+    Index { base: Box<Expr>, idx: Box<Expr>, elem: Ty },
+    Cast(Ty, Box<Expr>),
+    /// Ternary select (CUDA `c ? a : b`).
+    Select { cond: Box<Expr>, then_: Box<Expr>, else_: Box<Expr> },
+    /// Warp shuffle — a *warp-level collective*; detected by the coverage
+    /// pass and legalised by `compiler::warp` into exchange-buffer
+    /// sections (COX's contribution). Illegal in MPMD output.
+    WarpShfl { kind: ShflKind, val: Box<Expr>, lane: Box<Expr> },
+    /// Warp vote collective (any/all/ballot over a predicate).
+    WarpVote { kind: VoteKind, pred: Box<Expr> },
+    /// MPMD-only: read slot `lane` of the per-warp exchange buffer.
+    /// Produced by `compiler::warp`; illegal in SPMD input.
+    Exchange { lane: Box<Expr>, ty: Ty },
+    /// MPMD-only: the scalar result of a reduced warp vote.
+    VoteResult,
+    /// NVIDIA-specific intrinsic with no documented semantics
+    /// (`__nvvm_d2i_lo` etc.). Present so dwt2d-style kernels can be
+    /// *expressed*; the coverage pass reports them unsupported (Table II).
+    NvIntrinsic { name: &'static str, args: Vec<Expr> },
+}
+
+/// Statements. `SyncThreads`/warp collectives are what the SPMD→MPMD
+/// fission pass splits on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `dst = expr`
+    Assign { dst: Reg, expr: Expr },
+    /// Typed store through a pointer expression.
+    Store { ptr: Expr, val: Expr, ty: Ty },
+    /// `__syncthreads()` — block-level barrier; fission point.
+    SyncThreads,
+    /// Structured if/else. Conditions containing `tid` make enclosed
+    /// barriers illegal (the verifier rejects them, as does nvcc).
+    If { cond: Expr, then_: Vec<Stmt>, else_: Vec<Stmt> },
+    /// `for (var = start; var < end; var += step)` with uniform or
+    /// thread-dependent bounds. Barriers inside require uniform bounds.
+    For { var: Reg, start: Expr, end: Expr, step: Expr, body: Vec<Stmt> },
+    /// `while (cond)` loop.
+    While { cond: Expr, body: Vec<Stmt> },
+    Break,
+    Continue,
+    /// Early return (thread-level).
+    Return,
+    /// Atomic RMW; `dst` receives the old value when present.
+    AtomicRmw { op: AtomicOp, ptr: Expr, val: Expr, ty: Ty, dst: Option<Reg> },
+    /// `atomicCAS(ptr, cmp, val)`; `dst` receives the old value.
+    AtomicCas { ptr: Expr, cmp: Expr, val: Expr, ty: Ty, dst: Option<Reg> },
+    /// MPMD-only: the thread loop the fission pass introduces.
+    /// `warp: None` — a single-layer loop over all `block_size` threads
+    /// (the MCUDA form used when no warp-level features are present).
+    /// `warp: Some(w)` — the COX nested form: this loop iterates the 32
+    /// lanes of warp `w` (a block-scope register holding the warp index;
+    /// the enclosing `For` iterates warps).
+    ThreadLoop { body: Vec<Stmt>, warp: Option<Reg> },
+    /// MPMD-only: write this lane's contribution into the per-warp
+    /// exchange buffer slot `lane_id` (produced by `compiler::warp`).
+    StoreExchange { val: Expr, ty: Ty },
+    /// MPMD-only: reduce the exchange buffer with a vote kind into the
+    /// warp-scalar `VoteResult`.
+    ReduceVote { kind: VoteKind },
+}
+
+/// Kernel parameter declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamDecl {
+    pub name: String,
+    pub ty: ParamTy,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamTy {
+    Scalar(Ty),
+    /// Pointer into an address space with a pointee element type.
+    Ptr(AddrSpace, Ty),
+}
+
+/// Statically-sized `__shared__` array declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SharedDecl {
+    pub name: String,
+    pub elem: Ty,
+    pub len: usize,
+}
+
+/// A CUDA `__global__` kernel in CIR.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    pub params: Vec<ParamDecl>,
+    pub shared: Vec<SharedDecl>,
+    /// Uses `extern __shared__` (size supplied at launch).
+    pub dyn_shared_elem: Option<Ty>,
+    pub body: Vec<Stmt>,
+    /// Number of virtual registers (builder-assigned).
+    pub num_regs: u32,
+}
+
+/// The MPMD (block-function) form produced by the compiler pipeline:
+/// one invocation executes one whole block, thread loops inside.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MpmdKernel {
+    pub name: String,
+    pub params: Vec<ParamDecl>,
+    pub shared: Vec<SharedDecl>,
+    pub dyn_shared_elem: Option<Ty>,
+    pub body: Vec<Stmt>,
+    pub num_regs: u32,
+    /// True when `compiler::warp` emitted nested warp loops.
+    pub warp_level: bool,
+    /// Registers that are live across thread-loop boundaries and were
+    /// replicated per thread (reported for the ablation bench).
+    pub replicated_regs: Vec<Reg>,
+}
+
+/// CUDA feature usage detected in a kernel — drives the Table I/II
+/// coverage matrices (`compiler::coverage`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Feature {
+    SyncThreads,
+    WarpShuffle,
+    WarpVote,
+    AtomicRmw,
+    AtomicCas,
+    /// system-wide (cross-grid) atomics — unsupported everywhere (BST/KNN)
+    SystemAtomics,
+    DynSharedMem,
+    StaticSharedMem,
+    TextureMemory,
+    /// `extern "C"` host linkage (b+tree, backprop)
+    ExternC,
+    /// NVIDIA intrinsic with undocumented semantics (dwt2d)
+    NvIntrinsic,
+    /// shared memory holding structures (dwt2d)
+    SharedStruct,
+    /// complex C++ templates in the kernel (heartwall)
+    ComplexTemplate,
+    /// cuGetErrorName-style driver-API usage (cfd)
+    DriverApi,
+    /// CUDA library dependence (cuBLAS/cuDNN) — future-work section
+    CudaLibrary,
+}
+
+impl fmt::Display for Feature {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Feature::SyncThreads => "syncthreads",
+            Feature::WarpShuffle => "warp shuffle",
+            Feature::WarpVote => "warp vote",
+            Feature::AtomicRmw => "atomics",
+            Feature::AtomicCas => "atomicCAS",
+            Feature::SystemAtomics => "system-wide atomics",
+            Feature::DynSharedMem => "extern shared memory",
+            Feature::StaticSharedMem => "shared memory",
+            Feature::TextureMemory => "Texture",
+            Feature::ExternC => "extern C",
+            Feature::NvIntrinsic => "intrinsic function",
+            Feature::SharedStruct => "shared memory for structure",
+            Feature::ComplexTemplate => "complex template",
+            Feature::DriverApi => "cuGetErrorName",
+            Feature::CudaLibrary => "CUDA library",
+        };
+        f.write_str(s)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Convenience constructors (used pervasively by benchmark kernels).
+// ---------------------------------------------------------------------
+
+pub fn c_i32(v: i32) -> Expr {
+    Expr::Const(Const::I32(v))
+}
+pub fn c_i64(v: i64) -> Expr {
+    Expr::Const(Const::I64(v))
+}
+pub fn c_f32(v: f32) -> Expr {
+    Expr::Const(Const::F32(v))
+}
+pub fn c_f64(v: f64) -> Expr {
+    Expr::Const(Const::F64(v))
+}
+pub fn c_bool(v: bool) -> Expr {
+    Expr::Const(Const::Bool(v))
+}
+pub fn reg(r: Reg) -> Expr {
+    Expr::Reg(r)
+}
+pub fn special(s: Special) -> Expr {
+    Expr::Special(s)
+}
+/// `threadIdx.x`
+pub fn tid_x() -> Expr {
+    special(Special::ThreadIdxX)
+}
+/// `blockIdx.x`
+pub fn bid_x() -> Expr {
+    special(Special::BlockIdxX)
+}
+/// `blockDim.x`
+pub fn bdim_x() -> Expr {
+    special(Special::BlockDimX)
+}
+/// `gridDim.x`
+pub fn gdim_x() -> Expr {
+    special(Special::GridDimX)
+}
+pub fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+    Expr::Bin(op, Box::new(a), Box::new(b))
+}
+pub fn add(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Add, a, b)
+}
+pub fn sub(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Sub, a, b)
+}
+pub fn mul(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Mul, a, b)
+}
+pub fn div(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Div, a, b)
+}
+pub fn rem(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Rem, a, b)
+}
+pub fn lt(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Lt, a, b)
+}
+pub fn le(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Le, a, b)
+}
+pub fn gt(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Gt, a, b)
+}
+pub fn ge(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Ge, a, b)
+}
+pub fn eq(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Eq, a, b)
+}
+pub fn ne(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Ne, a, b)
+}
+pub fn min_e(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Min, a, b)
+}
+pub fn max_e(a: Expr, b: Expr) -> Expr {
+    bin(BinOp::Max, a, b)
+}
+pub fn un(op: UnOp, a: Expr) -> Expr {
+    Expr::Un(op, Box::new(a))
+}
+pub fn cast(ty: Ty, a: Expr) -> Expr {
+    Expr::Cast(ty, Box::new(a))
+}
+pub fn param(i: usize) -> Expr {
+    Expr::Param(i)
+}
+pub fn load(ptr: Expr, ty: Ty) -> Expr {
+    Expr::Load { ptr: Box::new(ptr), ty }
+}
+/// `&base[idx]` with element type `elem`.
+pub fn index(base: Expr, idx: Expr, elem: Ty) -> Expr {
+    Expr::Index { base: Box::new(base), idx: Box::new(idx), elem }
+}
+/// `base[idx]` typed load.
+pub fn at(base: Expr, idx: Expr, elem: Ty) -> Expr {
+    load(index(base, idx, elem), elem)
+}
+pub fn select(cond: Expr, t: Expr, e: Expr) -> Expr {
+    Expr::Select { cond: Box::new(cond), then_: Box::new(t), else_: Box::new(e) }
+}
+/// `tid.x + bid.x * bdim.x` — the global thread id idiom.
+pub fn global_tid() -> Expr {
+    add(tid_x(), mul(bid_x(), bdim_x()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_types() {
+        assert_eq!(Const::I32(1).ty(), Ty::I32);
+        assert_eq!(Const::F64(1.0).ty(), Ty::F64);
+        assert_eq!(Const::Bool(true).ty(), Ty::Bool);
+    }
+
+    #[test]
+    fn ty_sizes() {
+        assert_eq!(Ty::I32.size(), 4);
+        assert_eq!(Ty::F64.size(), 8);
+        assert_eq!(Ty::Bool.size(), 1);
+    }
+
+    #[test]
+    fn helper_constructors_build_expected_trees() {
+        let e = add(tid_x(), mul(bid_x(), bdim_x()));
+        match &e {
+            Expr::Bin(BinOp::Add, l, r) => {
+                assert_eq!(**l, Expr::Special(Special::ThreadIdxX));
+                match &**r {
+                    Expr::Bin(BinOp::Mul, _, _) => {}
+                    other => panic!("expected mul, got {other:?}"),
+                }
+            }
+            other => panic!("expected add, got {other:?}"),
+        }
+        assert_eq!(e, global_tid());
+    }
+
+    #[test]
+    fn display_reg() {
+        assert_eq!(Reg(7).to_string(), "%r7");
+    }
+}

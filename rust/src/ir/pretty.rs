@@ -1,0 +1,306 @@
+//! Pretty printer for CIR (SPMD and MPMD forms).
+//!
+//! Output mirrors Figure 4 of the paper — useful for debugging passes and
+//! for the `cupbop dump` CLI subcommand.
+
+use super::*;
+use std::fmt::Write;
+
+pub fn expr_to_string(e: &Expr) -> String {
+    match e {
+        Expr::Const(c) => match c {
+            Const::I32(v) => format!("{v}"),
+            Const::I64(v) => format!("{v}l"),
+            Const::F32(v) => format!("{v:?}f"),
+            Const::F64(v) => format!("{v:?}"),
+            Const::Bool(v) => format!("{v}"),
+        },
+        Expr::Reg(r) => r.to_string(),
+        Expr::Special(s) => match s {
+            Special::ThreadIdxX => "threadIdx.x".into(),
+            Special::ThreadIdxY => "threadIdx.y".into(),
+            Special::BlockIdxX => "blockIdx.x".into(),
+            Special::BlockIdxY => "blockIdx.y".into(),
+            Special::BlockDimX => "blockDim.x".into(),
+            Special::BlockDimY => "blockDim.y".into(),
+            Special::GridDimX => "gridDim.x".into(),
+            Special::GridDimY => "gridDim.y".into(),
+            Special::LaneId => "laneId".into(),
+            Special::WarpId => "warpId".into(),
+        },
+        Expr::Param(i) => format!("arg{i}"),
+        Expr::SharedBase(i) => format!("shared{i}"),
+        Expr::DynSharedBase => "dynamic_shared_memory".into(),
+        Expr::Bin(op, a, b) => {
+            let o = match op {
+                BinOp::Add => "+",
+                BinOp::Sub => "-",
+                BinOp::Mul => "*",
+                BinOp::Div => "/",
+                BinOp::Rem => "%",
+                BinOp::And => "&",
+                BinOp::Or => "|",
+                BinOp::Xor => "^",
+                BinOp::Shl => "<<",
+                BinOp::Shr => ">>",
+                BinOp::Min => return format!("min({}, {})", expr_to_string(a), expr_to_string(b)),
+                BinOp::Max => return format!("max({}, {})", expr_to_string(a), expr_to_string(b)),
+                BinOp::Eq => "==",
+                BinOp::Ne => "!=",
+                BinOp::Lt => "<",
+                BinOp::Le => "<=",
+                BinOp::Gt => ">",
+                BinOp::Ge => ">=",
+            };
+            format!("({} {} {})", expr_to_string(a), o, expr_to_string(b))
+        }
+        Expr::Un(op, a) => {
+            let n = match op {
+                UnOp::Neg => "-",
+                UnOp::Not => "!",
+                UnOp::Sqrt => "sqrt",
+                UnOp::Exp => "exp",
+                UnOp::Log => "log",
+                UnOp::Abs => "fabs",
+                UnOp::Floor => "floor",
+                UnOp::Ceil => "ceil",
+                UnOp::Sin => "sin",
+                UnOp::Cos => "cos",
+                UnOp::Rsqrt => "rsqrt",
+            };
+            if matches!(op, UnOp::Neg | UnOp::Not) {
+                format!("{}{}", n, expr_to_string(a))
+            } else {
+                format!("{}({})", n, expr_to_string(a))
+            }
+        }
+        Expr::Load { ptr, ty } => format!("*({:?}*)({})", ty, expr_to_string(ptr)),
+        Expr::Index { base, idx, .. } => format!("&{}[{}]", expr_to_string(base), expr_to_string(idx)),
+        Expr::Cast(ty, a) => format!("({ty:?})({})", expr_to_string(a)),
+        Expr::Select { cond, then_, else_ } => format!(
+            "({} ? {} : {})",
+            expr_to_string(cond),
+            expr_to_string(then_),
+            expr_to_string(else_)
+        ),
+        Expr::WarpShfl { kind, val, lane } => {
+            let k = match kind {
+                ShflKind::Idx => "__shfl_sync",
+                ShflKind::Up => "__shfl_up_sync",
+                ShflKind::Down => "__shfl_down_sync",
+                ShflKind::Xor => "__shfl_xor_sync",
+            };
+            format!("{k}(FULL_MASK, {}, {})", expr_to_string(val), expr_to_string(lane))
+        }
+        Expr::WarpVote { kind, pred } => {
+            let k = match kind {
+                VoteKind::Any => "__any_sync",
+                VoteKind::All => "__all_sync",
+                VoteKind::Ballot => "__ballot_sync",
+            };
+            format!("{k}(FULL_MASK, {})", expr_to_string(pred))
+        }
+        Expr::Exchange { lane, .. } => format!("warp_exchange[{}]", expr_to_string(lane)),
+        Expr::VoteResult => "vote_result".into(),
+        Expr::NvIntrinsic { name, args } => {
+            let a: Vec<_> = args.iter().map(expr_to_string).collect();
+            format!("{name}({})", a.join(", "))
+        }
+    }
+}
+
+fn stmt_fmt(s: &Stmt, out: &mut String, ind: usize) {
+    let pad = "  ".repeat(ind);
+    match s {
+        Stmt::Assign { dst, expr } => {
+            let _ = writeln!(out, "{pad}{dst} = {};", expr_to_string(expr));
+        }
+        Stmt::Store { ptr, val, ty } => {
+            let _ = writeln!(out, "{pad}*({ty:?}*)({}) = {};", expr_to_string(ptr), expr_to_string(val));
+        }
+        Stmt::SyncThreads => {
+            let _ = writeln!(out, "{pad}__syncthreads();");
+        }
+        Stmt::If { cond, then_, else_ } => {
+            let _ = writeln!(out, "{pad}if ({}) {{", expr_to_string(cond));
+            for s in then_ {
+                stmt_fmt(s, out, ind + 1);
+            }
+            if !else_.is_empty() {
+                let _ = writeln!(out, "{pad}}} else {{");
+                for s in else_ {
+                    stmt_fmt(s, out, ind + 1);
+                }
+            }
+            let _ = writeln!(out, "{pad}}}");
+        }
+        Stmt::For { var, start, end, step, body } => {
+            let _ = writeln!(
+                out,
+                "{pad}for ({var} = {}; {var} < {}; {var} += {}) {{",
+                expr_to_string(start),
+                expr_to_string(end),
+                expr_to_string(step)
+            );
+            for s in body {
+                stmt_fmt(s, out, ind + 1);
+            }
+            let _ = writeln!(out, "{pad}}}");
+        }
+        Stmt::While { cond, body } => {
+            let _ = writeln!(out, "{pad}while ({}) {{", expr_to_string(cond));
+            for s in body {
+                stmt_fmt(s, out, ind + 1);
+            }
+            let _ = writeln!(out, "{pad}}}");
+        }
+        Stmt::Break => {
+            let _ = writeln!(out, "{pad}break;");
+        }
+        Stmt::Continue => {
+            let _ = writeln!(out, "{pad}continue;");
+        }
+        Stmt::Return => {
+            let _ = writeln!(out, "{pad}return;");
+        }
+        Stmt::AtomicRmw { op, ptr, val, dst, .. } => {
+            let name = match op {
+                AtomicOp::Add => "atomicAdd",
+                AtomicOp::Sub => "atomicSub",
+                AtomicOp::Min => "atomicMin",
+                AtomicOp::Max => "atomicMax",
+                AtomicOp::And => "atomicAnd",
+                AtomicOp::Or => "atomicOr",
+                AtomicOp::Xor => "atomicXor",
+                AtomicOp::Exch => "atomicExch",
+            };
+            let call = format!("{name}({}, {})", expr_to_string(ptr), expr_to_string(val));
+            match dst {
+                Some(d) => {
+                    let _ = writeln!(out, "{pad}{d} = {call};");
+                }
+                None => {
+                    let _ = writeln!(out, "{pad}{call};");
+                }
+            }
+        }
+        Stmt::AtomicCas { ptr, cmp, val, dst, .. } => {
+            let call = format!(
+                "atomicCAS({}, {}, {})",
+                expr_to_string(ptr),
+                expr_to_string(cmp),
+                expr_to_string(val)
+            );
+            match dst {
+                Some(d) => {
+                    let _ = writeln!(out, "{pad}{d} = {call};");
+                }
+                None => {
+                    let _ = writeln!(out, "{pad}{call};");
+                }
+            }
+        }
+        Stmt::ThreadLoop { body, warp } => {
+            match warp {
+                None => {
+                    let _ = writeln!(out, "{pad}for (tid = 0; tid < block_size; tid++) {{ // thread loop");
+                }
+                Some(w) => {
+                    let _ = writeln!(out, "{pad}for (tid = {w}*32; tid < min({w}*32+32, block_size); tid++) {{ // lane loop");
+                }
+            }
+            for s in body {
+                stmt_fmt(s, out, ind + 1);
+            }
+            let _ = writeln!(out, "{pad}}}");
+        }
+        Stmt::StoreExchange { val, .. } => {
+            let _ = writeln!(out, "{pad}warp_exchange[laneId] = {};", expr_to_string(val));
+        }
+        Stmt::ReduceVote { kind } => {
+            let _ = writeln!(out, "{pad}vote_result = reduce_{kind:?}(warp_exchange);");
+        }
+    }
+}
+
+pub fn kernel_to_string(k: &Kernel) -> String {
+    let mut out = String::new();
+    let params: Vec<_> = k
+        .params
+        .iter()
+        .map(|p| match p.ty {
+            ParamTy::Scalar(t) => format!("{t:?} {}", p.name),
+            ParamTy::Ptr(_, t) => format!("{t:?}* {}", p.name),
+        })
+        .collect();
+    let _ = writeln!(out, "__global__ void {}({}) {{", k.name, params.join(", "));
+    for sh in &k.shared {
+        let _ = writeln!(out, "  __shared__ {:?} {}[{}];", sh.elem, sh.name, sh.len);
+    }
+    if let Some(t) = k.dyn_shared_elem {
+        let _ = writeln!(out, "  extern __shared__ {t:?} dyn_shared[];");
+    }
+    for s in &k.body {
+        stmt_fmt(s, &mut out, 1);
+    }
+    let _ = writeln!(out, "}}");
+    out
+}
+
+pub fn mpmd_to_string(k: &MpmdKernel) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "// MPMD block function (warp_level={}, {} replicated regs)",
+        k.warp_level,
+        k.replicated_regs.len()
+    );
+    let _ = writeln!(out, "void {}_block(void **packed_args) {{", k.name);
+    for s in &k.body {
+        stmt_fmt(s, &mut out, 1);
+    }
+    let _ = writeln!(out, "}}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+
+    #[test]
+    fn prints_vecadd_like_listing1() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F64);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |b| {
+            b.store_at(a.clone(), reg(id), c_f64(0.0), Ty::F64);
+        });
+        let s = kernel_to_string(&b.build());
+        assert!(s.contains("__global__ void vecAdd"));
+        assert!(s.contains("threadIdx.x"));
+        assert!(s.contains("blockIdx.x"));
+    }
+
+    #[test]
+    fn prints_sync_and_shared() {
+        let mut b = KernelBuilder::new("rev");
+        let _ = b.dyn_shared(Ty::I32);
+        b.sync_threads();
+        let s = kernel_to_string(&b.build());
+        assert!(s.contains("extern __shared__"));
+        assert!(s.contains("__syncthreads()"));
+    }
+
+    #[test]
+    fn prints_atomic_and_shuffle() {
+        let mut b = KernelBuilder::new("wa");
+        let p = b.ptr_param("p", Ty::I32);
+        b.atomic_rmw_void(AtomicOp::Add, p.clone(), c_i32(1), Ty::I32);
+        let _ = b.shfl(ShflKind::Down, c_i32(3), c_i32(1));
+        let s = kernel_to_string(&b.build());
+        assert!(s.contains("atomicAdd"));
+        assert!(s.contains("__shfl_down_sync"));
+    }
+}

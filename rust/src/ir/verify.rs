@@ -1,0 +1,337 @@
+//! CIR verifier.
+//!
+//! Checks the structural invariants the compiler passes rely on:
+//! * SPMD kernels contain no MPMD-only constructs (`ThreadLoop`,
+//!   `Exchange`, …);
+//! * barriers (`__syncthreads`, warp collectives) do not appear under
+//!   *thread-divergent* control flow (conditions or loop bounds that
+//!   depend on `threadIdx`) — the same restriction CUDA itself imposes
+//!   (UB otherwise) and the restriction MCUDA-style loop fission needs;
+//! * registers are defined before use along every path (conservatively);
+//! * parameter/shared indices are in range.
+
+use super::*;
+use std::collections::HashSet;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VerifyError {
+    MpmdConstructInSpmd(&'static str),
+    BarrierUnderDivergentControl { construct: &'static str },
+    UndefinedReg(Reg),
+    ParamOutOfRange(usize),
+    SharedOutOfRange(usize),
+    BreakOutsideLoop,
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VerifyError::MpmdConstructInSpmd(c) => write!(f, "MPMD-only construct `{c}` in SPMD kernel"),
+            VerifyError::BarrierUnderDivergentControl { construct } => {
+                write!(f, "barrier under thread-divergent `{construct}`")
+            }
+            VerifyError::UndefinedReg(r) => write!(f, "use of undefined register {r}"),
+            VerifyError::ParamOutOfRange(i) => write!(f, "param index {i} out of range"),
+            VerifyError::SharedOutOfRange(i) => write!(f, "shared array index {i} out of range"),
+            VerifyError::BreakOutsideLoop => write!(f, "break/continue outside loop"),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// True when the expression's value can differ between threads of a block.
+pub fn is_thread_dependent(e: &Expr, thread_dep_regs: &HashSet<Reg>) -> bool {
+    match e {
+        Expr::Const(_) | Expr::Param(_) | Expr::SharedBase(_) | Expr::DynSharedBase | Expr::VoteResult => false,
+        Expr::Reg(r) => thread_dep_regs.contains(r),
+        Expr::Special(s) => matches!(
+            s,
+            Special::ThreadIdxX | Special::ThreadIdxY | Special::LaneId | Special::WarpId
+        ),
+        Expr::Bin(_, a, b) => {
+            is_thread_dependent(a, thread_dep_regs) || is_thread_dependent(b, thread_dep_regs)
+        }
+        Expr::Un(_, a) | Expr::Cast(_, a) => is_thread_dependent(a, thread_dep_regs),
+        // Loads may read data another thread wrote — conservatively thread-
+        // dependent unless the pointer itself is uniform AND no barrier
+        // discipline is tracked. We follow MCUDA: any load is divergent.
+        Expr::Load { .. } => true,
+        Expr::Index { base, idx, .. } => {
+            is_thread_dependent(base, thread_dep_regs) || is_thread_dependent(idx, thread_dep_regs)
+        }
+        Expr::Select { cond, then_, else_ } => {
+            is_thread_dependent(cond, thread_dep_regs)
+                || is_thread_dependent(then_, thread_dep_regs)
+                || is_thread_dependent(else_, thread_dep_regs)
+        }
+        Expr::WarpShfl { .. } | Expr::WarpVote { .. } | Expr::Exchange { .. } => true,
+        Expr::NvIntrinsic { args, .. } => args.iter().any(|a| is_thread_dependent(a, thread_dep_regs)),
+    }
+}
+
+struct Verifier<'k> {
+    kernel: &'k Kernel,
+    errors: Vec<VerifyError>,
+    defined: HashSet<Reg>,
+    thread_dep: HashSet<Reg>,
+    loop_depth: usize,
+    /// true while inside control flow whose condition is thread-dependent
+    divergent: bool,
+}
+
+impl<'k> Verifier<'k> {
+    fn expr(&mut self, e: &Expr) {
+        match e {
+            Expr::Reg(r) => {
+                if !self.defined.contains(r) {
+                    self.errors.push(VerifyError::UndefinedReg(*r));
+                }
+            }
+            Expr::Param(i) => {
+                if *i >= self.kernel.params.len() {
+                    self.errors.push(VerifyError::ParamOutOfRange(*i));
+                }
+            }
+            Expr::SharedBase(i) => {
+                if *i >= self.kernel.shared.len() {
+                    self.errors.push(VerifyError::SharedOutOfRange(*i));
+                }
+            }
+            Expr::Exchange { .. } | Expr::VoteResult => {
+                self.errors.push(VerifyError::MpmdConstructInSpmd("Exchange/VoteResult"));
+            }
+            _ => {}
+        }
+        // recurse
+        match e {
+            Expr::Bin(_, a, b) => {
+                self.expr(a);
+                self.expr(b);
+            }
+            Expr::Un(_, a) | Expr::Cast(_, a) => self.expr(a),
+            Expr::Load { ptr, .. } => self.expr(ptr),
+            Expr::Index { base, idx, .. } => {
+                self.expr(base);
+                self.expr(idx);
+            }
+            Expr::Select { cond, then_, else_ } => {
+                self.expr(cond);
+                self.expr(then_);
+                self.expr(else_);
+            }
+            Expr::WarpShfl { val, lane, .. } => {
+                self.expr(val);
+                self.expr(lane);
+            }
+            Expr::WarpVote { pred, .. } => self.expr(pred),
+            Expr::NvIntrinsic { args, .. } => args.iter().for_each(|a| self.expr(a)),
+            _ => {}
+        }
+    }
+
+    fn barrier_here(&mut self, what: &'static str) {
+        if self.divergent {
+            self.errors.push(VerifyError::BarrierUnderDivergentControl { construct: what });
+        }
+    }
+
+    fn stmts(&mut self, body: &[Stmt]) {
+        for s in body {
+            match s {
+                Stmt::Assign { dst, expr } => {
+                    self.expr(expr);
+                    if is_thread_dependent(expr, &self.thread_dep) {
+                        self.thread_dep.insert(*dst);
+                    }
+                    self.defined.insert(*dst);
+                }
+                Stmt::Store { ptr, val, .. } => {
+                    self.expr(ptr);
+                    self.expr(val);
+                }
+                Stmt::SyncThreads => self.barrier_here("syncthreads"),
+                Stmt::If { cond, then_, else_ } => {
+                    self.expr(cond);
+                    let was = self.divergent;
+                    if is_thread_dependent(cond, &self.thread_dep) {
+                        self.divergent = true;
+                    }
+                    // defs inside branches conservatively visible after
+                    self.stmts(then_);
+                    self.stmts(else_);
+                    self.divergent = was;
+                }
+                Stmt::For { var, start, end, step, body } => {
+                    self.expr(start);
+                    self.expr(end);
+                    self.expr(step);
+                    let was = self.divergent;
+                    let div = is_thread_dependent(start, &self.thread_dep)
+                        || is_thread_dependent(end, &self.thread_dep)
+                        || is_thread_dependent(step, &self.thread_dep);
+                    if div {
+                        self.divergent = true;
+                        self.thread_dep.insert(*var);
+                    }
+                    self.defined.insert(*var);
+                    self.loop_depth += 1;
+                    self.stmts(body);
+                    self.loop_depth -= 1;
+                    self.divergent = was;
+                }
+                Stmt::While { cond, body } => {
+                    self.expr(cond);
+                    let was = self.divergent;
+                    if is_thread_dependent(cond, &self.thread_dep) {
+                        self.divergent = true;
+                    }
+                    self.loop_depth += 1;
+                    self.stmts(body);
+                    self.loop_depth -= 1;
+                    self.divergent = was;
+                }
+                Stmt::Break | Stmt::Continue => {
+                    if self.loop_depth == 0 {
+                        self.errors.push(VerifyError::BreakOutsideLoop);
+                    }
+                }
+                Stmt::Return => {}
+                Stmt::AtomicRmw { ptr, val, dst, .. } => {
+                    self.expr(ptr);
+                    self.expr(val);
+                    if let Some(d) = dst {
+                        self.thread_dep.insert(*d);
+                        self.defined.insert(*d);
+                    }
+                }
+                Stmt::AtomicCas { ptr, cmp, val, dst, .. } => {
+                    self.expr(ptr);
+                    self.expr(cmp);
+                    self.expr(val);
+                    if let Some(d) = dst {
+                        self.thread_dep.insert(*d);
+                        self.defined.insert(*d);
+                    }
+                }
+                Stmt::ThreadLoop { .. } | Stmt::StoreExchange { .. } | Stmt::ReduceVote { .. } => {
+                    self.errors.push(VerifyError::MpmdConstructInSpmd("ThreadLoop/StoreExchange/ReduceVote"));
+                }
+            }
+        }
+    }
+}
+
+/// Verify an SPMD kernel; returns all violations found.
+pub fn verify(kernel: &Kernel) -> Result<(), Vec<VerifyError>> {
+    let mut v = Verifier {
+        kernel,
+        errors: Vec::new(),
+        defined: HashSet::new(),
+        thread_dep: HashSet::new(),
+        loop_depth: 0,
+        divergent: false,
+    };
+    v.stmts(&kernel.body);
+    if v.errors.is_empty() {
+        Ok(())
+    } else {
+        Err(v.errors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+
+    #[test]
+    fn vecadd_verifies() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |b| {
+            b.store_at(a.clone(), reg(id), c_f32(1.0), Ty::F32);
+        });
+        assert!(verify(&b.build()).is_ok());
+    }
+
+    #[test]
+    fn barrier_under_tid_branch_rejected() {
+        let mut b = KernelBuilder::new("bad");
+        b.if_(lt(tid_x(), c_i32(16)), |b| {
+            b.sync_threads();
+        });
+        let errs = verify(&b.build()).unwrap_err();
+        assert!(errs
+            .iter()
+            .any(|e| matches!(e, VerifyError::BarrierUnderDivergentControl { .. })));
+    }
+
+    #[test]
+    fn barrier_under_uniform_loop_accepted() {
+        let mut b = KernelBuilder::new("ok");
+        let n = b.scalar_param("n", Ty::I32);
+        b.for_(c_i32(0), n, c_i32(1), |b, _i| {
+            b.sync_threads();
+        });
+        assert!(verify(&b.build()).is_ok());
+    }
+
+    #[test]
+    fn undefined_register_caught() {
+        let k = Kernel {
+            name: "u".into(),
+            params: vec![],
+            shared: vec![],
+            dyn_shared_elem: None,
+            body: vec![Stmt::Store { ptr: reg(Reg(3)), val: c_i32(0), ty: Ty::I32 }],
+            num_regs: 0,
+        };
+        let errs = verify(&k).unwrap_err();
+        assert!(errs.contains(&VerifyError::UndefinedReg(Reg(3))));
+    }
+
+    #[test]
+    fn mpmd_construct_rejected_in_spmd() {
+        let k = Kernel {
+            name: "m".into(),
+            params: vec![],
+            shared: vec![],
+            dyn_shared_elem: None,
+            body: vec![Stmt::ThreadLoop { body: vec![], warp: None }],
+            num_regs: 0,
+        };
+        assert!(matches!(
+            verify(&k).unwrap_err()[0],
+            VerifyError::MpmdConstructInSpmd(_)
+        ));
+    }
+
+    #[test]
+    fn break_outside_loop_caught() {
+        let k = Kernel {
+            name: "b".into(),
+            params: vec![],
+            shared: vec![],
+            dyn_shared_elem: None,
+            body: vec![Stmt::Break],
+            num_regs: 0,
+        };
+        assert!(verify(&k).unwrap_err().contains(&VerifyError::BreakOutsideLoop));
+    }
+
+    #[test]
+    fn param_out_of_range_caught() {
+        let k = Kernel {
+            name: "p".into(),
+            params: vec![],
+            shared: vec![],
+            dyn_shared_elem: None,
+            body: vec![Stmt::Store { ptr: param(2), val: c_i32(0), ty: Ty::I32 }],
+            num_regs: 0,
+        };
+        assert!(verify(&k).unwrap_err().contains(&VerifyError::ParamOutOfRange(2)));
+    }
+}

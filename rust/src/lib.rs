@@ -1,0 +1,30 @@
+//! # CuPBoP-RS
+//!
+//! A reproduction of *CuPBoP: CUDA for Parallelized and Broad-range
+//! Processors* (Han et al., 2022) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: the CuPBoP
+//!   compilation pipeline (SPMD→MPMD over [`ir`] CIR kernels) and the
+//!   portable runtime (thread pool + task queue + coarse-grained
+//!   fetching) in [`runtime`], plus the benchmark suites, baselines and
+//!   analysis substrates its evaluation needs.
+//! * **L2/L1 (python/, build-time only)** — per-benchmark JAX device
+//!   programs with Pallas kernels, AOT-lowered to HLO text and executed
+//!   through PJRT by [`runtime::pjrt`]; they stand in for the paper's
+//!   NVIDIA-GPU CUDA baseline.
+//!
+//! See DESIGN.md for the full experiment index and substitution notes.
+
+pub mod benchkit;
+pub mod benchsuite;
+pub mod cachesim;
+pub mod compiler;
+pub mod exec;
+pub mod frameworks;
+pub mod host;
+pub mod ir;
+pub mod report;
+pub mod roofline;
+pub mod runtime;
+pub mod testkit;

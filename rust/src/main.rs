@@ -1,0 +1,230 @@
+//! `cupbop` — CLI for the CuPBoP-RS reproduction.
+//!
+//! Subcommands (hand-rolled parsing — no CLI crates in this offline
+//! environment):
+//!
+//! ```text
+//! cupbop list                               list benchmarks + features
+//! cupbop run --bench <name> [--backend cupbop|hipcpu|dpcpp|reference]
+//!            [--scale tiny|small|paper] [--pool N] [--grain avg|auto|N]
+//!            [--interpret]                  run one benchmark end to end
+//! cupbop suite --suite rodinia|heteromark|crystal [..run flags]
+//! cupbop report table1|table2|table6|fig9|fig10   paper-style reports
+//! cupbop dump --bench <name>                print SPMD + MPMD CIR
+//! cupbop device --bench <name>              run the PJRT device path
+//! ```
+
+use cupbop::benchsuite::spec::{self, Backend, Scale};
+use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode};
+use cupbop::report;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "list" => cmd_list(),
+        "run" => cmd_run(&args[1..]),
+        "suite" => cmd_suite(&args[1..]),
+        "report" => cmd_report(&args[1..]),
+        "dump" => cmd_dump(&args[1..]),
+        "device" => cmd_device(&args[1..]),
+        "help" | "--help" | "-h" => {
+            print_help();
+            ExitCode::SUCCESS
+        }
+        other => {
+            eprintln!("unknown command `{other}`");
+            print_help();
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "cupbop — CUDA for Parallelized and Broad-range Processors (reproduction)\n\
+         \n\
+         USAGE: cupbop <list|run|suite|report|dump|device> [flags]\n\
+         \n\
+         run flags:\n\
+           --bench NAME      benchmark to run (see `cupbop list`)\n\
+           --backend B       cupbop|hipcpu|dpcpp|reference (default cupbop)\n\
+           --scale S         tiny|small|paper (default small)\n\
+           --pool N          thread-pool size (default: cores)\n\
+           --grain G         avg|auto|<N blocks per fetch> (default auto)\n\
+           --interpret       run the MPMD interpreter instead of native\n\
+         report targets: table1 table2 table6 fig9 fig10"
+    );
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn parse_scale(args: &[String]) -> Scale {
+    match flag_value(args, "--scale") {
+        Some("tiny") => Scale::Tiny,
+        Some("paper") => Scale::Paper,
+        _ => Scale::Small,
+    }
+}
+
+fn parse_backend(args: &[String]) -> Backend {
+    match flag_value(args, "--backend") {
+        Some("hipcpu") => Backend::HipCpu,
+        Some("dpcpp") => Backend::Dpcpp,
+        Some("reference") => Backend::Reference,
+        _ => Backend::CuPBoP,
+    }
+}
+
+fn parse_cfg(args: &[String]) -> BackendCfg {
+    let mut cfg = BackendCfg::default();
+    if let Some(p) = flag_value(args, "--pool").and_then(|v| v.parse().ok()) {
+        cfg.pool_size = p;
+    }
+    cfg.policy = match flag_value(args, "--grain") {
+        Some("avg") => PolicyMode::Average,
+        Some("auto") | None => PolicyMode::Auto,
+        Some(n) => n.parse().map(PolicyMode::Fixed).unwrap_or(PolicyMode::Auto),
+    };
+    if has_flag(args, "--interpret") {
+        cfg.exec = ExecMode::Interpret;
+    }
+    cfg
+}
+
+fn cmd_list() -> ExitCode {
+    println!("{:<18} {:<12} {:<11} features", "benchmark", "suite", "status");
+    for b in spec::all_benchmarks() {
+        let feats: Vec<String> = b.features.iter().map(|f| f.to_string()).collect();
+        let status = if b.build.is_some() { "implemented" } else { "spec-only" };
+        println!("{:<18} {:<12} {:<11} {}", b.name, b.suite.name(), status, feats.join(", "));
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_run(args: &[String]) -> ExitCode {
+    let Some(name) = flag_value(args, "--bench") else {
+        eprintln!("--bench NAME required");
+        return ExitCode::FAILURE;
+    };
+    let Some(b) = spec::by_name(name) else {
+        eprintln!("unknown benchmark `{name}` (see `cupbop list`)");
+        return ExitCode::FAILURE;
+    };
+    if b.build.is_none() {
+        eprintln!("`{name}` is spec-only (unsupported feature row of Table II)");
+        return ExitCode::FAILURE;
+    }
+    let backend = parse_backend(args);
+    let cfg = parse_cfg(args);
+    let built = spec::build_program(&b, parse_scale(args));
+    let out = spec::run_on(&built, backend, cfg);
+    match &out.check {
+        Ok(()) => println!(
+            "{name} [{}] ok in {:?}{}",
+            backend.name(),
+            out.elapsed,
+            out.queue_counters
+                .map(|(p, f)| format!("  (launches {p}, fetches {f})"))
+                .unwrap_or_default()
+        ),
+        Err(e) => {
+            eprintln!("{name} [{}] FAILED: {e}", backend.name());
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_suite(args: &[String]) -> ExitCode {
+    let which = flag_value(args, "--suite").unwrap_or("all");
+    let backend = parse_backend(args);
+    let cfg = parse_cfg(args);
+    let scale = parse_scale(args);
+    let mut failed = 0;
+    for b in spec::all_benchmarks() {
+        let in_suite = match which {
+            "rodinia" => b.suite == spec::Suite::Rodinia,
+            "heteromark" => b.suite == spec::Suite::HeteroMark,
+            "crystal" => b.suite == spec::Suite::Crystal,
+            _ => true,
+        };
+        if !in_suite || b.build.is_none() {
+            continue;
+        }
+        let built = spec::build_program(&b, scale);
+        let out = spec::run_on(&built, backend, cfg);
+        match out.check {
+            Ok(()) => println!("{:<18} {:>10.3?}  ok", b.name, out.elapsed),
+            Err(e) => {
+                println!("{:<18} {:>10.3?}  FAIL: {e}", b.name, out.elapsed);
+                failed += 1;
+            }
+        }
+    }
+    if failed == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_report(args: &[String]) -> ExitCode {
+    match args.first().map(|s| s.as_str()) {
+        Some("table1") => println!("{}", report::table1()),
+        Some("table2") => println!("{}", report::table2()),
+        Some("table6") => println!("{}", report::table6(parse_scale(args))),
+        Some("fig9") => println!("{}", report::fig9(parse_scale(args))),
+        Some("fig10") => println!("{}", report::fig10()),
+        other => {
+            eprintln!("unknown report {other:?}; targets: table1 table2 table6 fig9 fig10");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_dump(args: &[String]) -> ExitCode {
+    let Some(name) = flag_value(args, "--bench") else {
+        eprintln!("--bench NAME required");
+        return ExitCode::FAILURE;
+    };
+    let Some(b) = spec::by_name(name) else {
+        eprintln!("unknown benchmark `{name}`");
+        return ExitCode::FAILURE;
+    };
+    if b.build.is_none() {
+        eprintln!("`{name}` is spec-only");
+        return ExitCode::FAILURE;
+    }
+    let built = spec::build_program(&b, Scale::Tiny);
+    for ck in &built.compiled {
+        println!("// ===== {} =====", ck.mpmd.name);
+        println!("{}", cupbop::ir::pretty::mpmd_to_string(&ck.mpmd));
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_device(args: &[String]) -> ExitCode {
+    let Some(name) = flag_value(args, "--bench") else {
+        eprintln!("--bench NAME required");
+        return ExitCode::FAILURE;
+    };
+    match report::device_run(name) {
+        Ok(msg) => {
+            println!("{msg}");
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("device path failed: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Roofline model (paper §VI-B, Figure 9) and the Table III platform
+//! profiles.
+//!
+//! `attainable = min(peak_flops, peak_bw × arithmetic_intensity)`.
+//! Measured kernel points come from the interpreter's FLOP/byte
+//! counters plus wall-clock time; the platform peaks come from Table
+//! III. Because we cannot own the paper's five servers, the *positions
+//! of the dots relative to the rooflines* (CPU dots far under the
+//! bandwidth bound, device dots near it) are the reproduction target,
+//! not absolute TFLOP/s.
+
+pub mod platforms;
+
+pub use platforms::{Platform, PLATFORMS};
+
+/// One measured kernel point on a roofline plot.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub kernel: String,
+    /// FLOP / byte (x axis)
+    pub intensity: f64,
+    /// achieved FLOP/s (y axis)
+    pub achieved_flops: f64,
+}
+
+impl RooflinePoint {
+    pub fn from_counters(kernel: &str, flops: u64, bytes: u64, secs: f64) -> Self {
+        RooflinePoint {
+            kernel: kernel.to_string(),
+            intensity: if bytes == 0 { 0.0 } else { flops as f64 / bytes as f64 },
+            achieved_flops: if secs > 0.0 { flops as f64 / secs } else { 0.0 },
+        }
+    }
+
+    /// Fraction of the platform's attainable performance at this
+    /// intensity (≤ 1 unless the measurement out-runs the model).
+    pub fn efficiency(&self, p: &Platform) -> f64 {
+        let roof = p.attainable(self.intensity);
+        if roof == 0.0 {
+            0.0
+        } else {
+            self.achieved_flops / roof
+        }
+    }
+}
+
+impl Platform {
+    /// Attainable FLOP/s at arithmetic intensity `ai` (the roofline).
+    pub fn attainable(&self, ai: f64) -> f64 {
+        (self.peak_bw_bytes_per_s * ai).min(self.peak_flops)
+    }
+
+    /// The ridge point — intensity where bandwidth meets compute.
+    pub fn ridge(&self) -> f64 {
+        if self.peak_bw_bytes_per_s == 0.0 {
+            0.0
+        } else {
+            self.peak_flops / self.peak_bw_bytes_per_s
+        }
+    }
+
+    /// Sample the roofline curve over log-spaced intensities — the
+    /// series a plotting frontend would draw (Fig 9's green curves).
+    pub fn curve(&self, points: usize) -> Vec<(f64, f64)> {
+        let lo: f64 = 0.01;
+        let hi: f64 = 100.0;
+        (0..points)
+            .map(|i| {
+                let t = i as f64 / (points - 1).max(1) as f64;
+                let ai = lo * (hi / lo).powf(t);
+                (ai, self.attainable(ai))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use platforms::*;
+
+    #[test]
+    fn roofline_shape() {
+        let p = by_name("Server-Intel").unwrap();
+        // memory-bound region grows linearly with AI
+        let a = p.attainable(0.1);
+        let b = p.attainable(0.2);
+        assert!((b / a - 2.0).abs() < 1e-9);
+        // compute-bound region is flat at peak
+        let hi = p.attainable(1e6);
+        assert_eq!(hi, p.peak_flops);
+        // ridge is where they meet
+        let r = p.ridge();
+        assert!((p.attainable(r) - p.peak_flops).abs() / p.peak_flops < 1e-9);
+    }
+
+    #[test]
+    fn point_efficiency() {
+        let p = by_name("Server-AMD-A30-GPU").unwrap();
+        // a kernel achieving exactly the bandwidth bound at ai=1
+        let pt = RooflinePoint { kernel: "k".into(), intensity: 1.0, achieved_flops: p.attainable(1.0) };
+        assert!((pt.efficiency(p) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_counters_math() {
+        let pt = RooflinePoint::from_counters("k", 1_000_000, 2_000_000, 0.5);
+        assert!((pt.intensity - 0.5).abs() < 1e-12);
+        assert!((pt.achieved_flops - 2e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn curve_is_monotone() {
+        let p = by_name("Server-Arm2").unwrap();
+        let c = p.curve(32);
+        assert_eq!(c.len(), 32);
+        for w in c.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+}

@@ -1,0 +1,404 @@
+//! Device memory (paper §IV, Figure 3).
+//!
+//! On CPU backends the "device" memory space is the host heap:
+//! `cudaMalloc` becomes a bump allocation in one large slab and
+//! `cudaMemcpy` a plain `memcpy`. The slab is shared by every pool
+//! thread executing blocks, so access goes through raw pointers with the
+//! same discipline real CUDA global memory has: racy guest programs get
+//! racy results, but *atomic* guest operations are implemented with host
+//! atomics (`AtomicU32`/`AtomicU64`) so inter-block atomics (HIST, PR,
+//! Crystal's `atomicCAS` hash tables) are correct.
+
+use crate::ir::{AtomicOp, Ty};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// High-bit tag distinguishing block-shared-slab addresses from global
+/// (device-heap) addresses. Shared pointers never reach `DeviceMemory`;
+/// the executor routes them to its per-block scratch slab.
+pub const SHARED_TAG: u64 = 1 << 63;
+
+/// Null device pointer.
+pub const NULL: u64 = 0;
+
+/// The device heap. Addresses are byte offsets into one slab
+/// (offset 0 is reserved as NULL; allocations start at 64).
+pub struct DeviceMemory {
+    base: *mut u8,
+    cap: usize,
+    next: std::sync::Mutex<usize>,
+    /// Keep the allocation alive.
+    _slab: Box<[u8]>,
+}
+
+// SAFETY: concurrent access mirrors CUDA global-memory semantics; all
+// cross-thread synchronisation the *runtime* needs is done through the
+// task queue. Guest-level races are guest bugs, as on real hardware.
+unsafe impl Send for DeviceMemory {}
+unsafe impl Sync for DeviceMemory {}
+
+impl DeviceMemory {
+    /// Create a device heap with `cap` bytes.
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut slab = vec![0u8; cap].into_boxed_slice();
+        let base = slab.as_mut_ptr();
+        DeviceMemory { base, cap, next: std::sync::Mutex::new(64), _slab: slab }
+    }
+
+    /// Default 64 MiB heap — enough for every bundled benchmark size.
+    pub fn new() -> Self {
+        Self::with_capacity(64 << 20)
+    }
+
+    /// `cudaMalloc`: bump-allocate `bytes` (8-byte aligned).
+    pub fn alloc(&self, bytes: usize) -> u64 {
+        let mut next = self.next.lock().unwrap();
+        let addr = (*next + 7) / 8 * 8;
+        assert!(
+            addr + bytes <= self.cap,
+            "device OOM: want {bytes}B at {addr}, cap {}B — construct DeviceMemory::with_capacity(..) larger",
+            self.cap
+        );
+        *next = addr + bytes;
+        addr as u64
+    }
+
+    /// `cudaFree` — the bump allocator does not reuse; matching CUDA's
+    /// cost model is not needed for any experiment, freeing is a no-op.
+    pub fn free(&self, _addr: u64) {}
+
+    /// Bytes currently allocated (high-water mark).
+    pub fn used(&self) -> usize {
+        *self.next.lock().unwrap()
+    }
+
+    #[inline]
+    fn ptr(&self, addr: u64, len: usize) -> *mut u8 {
+        debug_assert_eq!(addr & SHARED_TAG, 0, "shared-tagged address reached device heap");
+        let a = addr as usize;
+        debug_assert!(a + len <= self.cap, "device access OOB: {a}+{len} > {}", self.cap);
+        // SAFETY: bounds checked above (debug); slab outlives self.
+        unsafe { self.base.add(a) }
+    }
+
+    /// `cudaMemcpyHostToDevice`.
+    pub fn h2d(&self, dst: u64, src: &[u8]) {
+        unsafe { std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr(dst, src.len()), src.len()) }
+    }
+
+    /// `cudaMemcpyDeviceToHost`.
+    pub fn d2h(&self, dst: &mut [u8], src: u64) {
+        unsafe { std::ptr::copy_nonoverlapping(self.ptr(src, dst.len()), dst.as_mut_ptr(), dst.len()) }
+    }
+
+    /// Device-to-device copy (cudaMemcpyDeviceToDevice).
+    pub fn d2d(&self, dst: u64, src: u64, len: usize) {
+        unsafe { std::ptr::copy(self.ptr(src, len), self.ptr(dst, len), len) }
+    }
+
+    // ---- typed scalar access (used by the MPMD interpreter) ----
+
+    #[inline]
+    pub fn read_i32(&self, addr: u64) -> i32 {
+        unsafe { (self.ptr(addr, 4) as *const i32).read_unaligned() }
+    }
+    #[inline]
+    pub fn read_i64(&self, addr: u64) -> i64 {
+        unsafe { (self.ptr(addr, 8) as *const i64).read_unaligned() }
+    }
+    #[inline]
+    pub fn read_f32(&self, addr: u64) -> f32 {
+        unsafe { (self.ptr(addr, 4) as *const f32).read_unaligned() }
+    }
+    #[inline]
+    pub fn read_f64(&self, addr: u64) -> f64 {
+        unsafe { (self.ptr(addr, 8) as *const f64).read_unaligned() }
+    }
+    #[inline]
+    pub fn read_u8(&self, addr: u64) -> u8 {
+        unsafe { *self.ptr(addr, 1) }
+    }
+    #[inline]
+    pub fn write_i32(&self, addr: u64, v: i32) {
+        unsafe { (self.ptr(addr, 4) as *mut i32).write_unaligned(v) }
+    }
+    #[inline]
+    pub fn write_i64(&self, addr: u64, v: i64) {
+        unsafe { (self.ptr(addr, 8) as *mut i64).write_unaligned(v) }
+    }
+    #[inline]
+    pub fn write_f32(&self, addr: u64, v: f32) {
+        unsafe { (self.ptr(addr, 4) as *mut f32).write_unaligned(v) }
+    }
+    #[inline]
+    pub fn write_f64(&self, addr: u64, v: f64) {
+        unsafe { (self.ptr(addr, 8) as *mut f64).write_unaligned(v) }
+    }
+    #[inline]
+    pub fn write_u8(&self, addr: u64, v: u8) {
+        unsafe { *self.ptr(addr, 1) = v }
+    }
+
+    // ---- atomics (global-memory atomicAdd/CAS/...) ----
+
+    fn atomic_u32(&self, addr: u64) -> &AtomicU32 {
+        assert_eq!(addr % 4, 0, "atomic address must be 4-aligned");
+        // SAFETY: alignment asserted; slab outlives self.
+        unsafe { AtomicU32::from_ptr(self.ptr(addr, 4) as *mut u32) }
+    }
+
+    fn atomic_u64(&self, addr: u64) -> &AtomicU64 {
+        assert_eq!(addr % 8, 0, "atomic address must be 8-aligned");
+        unsafe { AtomicU64::from_ptr(self.ptr(addr, 8) as *mut u64) }
+    }
+
+    /// i32 atomic RMW returning the old value.
+    pub fn atomic_rmw_i32(&self, op: AtomicOp, addr: u64, val: i32) -> i32 {
+        let a = self.atomic_u32(addr);
+        let old = match op {
+            AtomicOp::Add => a.fetch_add(val as u32, Ordering::SeqCst),
+            AtomicOp::Sub => a.fetch_sub(val as u32, Ordering::SeqCst),
+            AtomicOp::And => a.fetch_and(val as u32, Ordering::SeqCst),
+            AtomicOp::Or => a.fetch_or(val as u32, Ordering::SeqCst),
+            AtomicOp::Xor => a.fetch_xor(val as u32, Ordering::SeqCst),
+            AtomicOp::Exch => a.swap(val as u32, Ordering::SeqCst),
+            AtomicOp::Min => a
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
+                    Some(((c as i32).min(val)) as u32)
+                })
+                .unwrap(),
+            AtomicOp::Max => a
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
+                    Some(((c as i32).max(val)) as u32)
+                })
+                .unwrap(),
+        };
+        old as i32
+    }
+
+    /// f32 atomic RMW via CAS on the bit pattern (CUDA's atomicAdd(float*)).
+    pub fn atomic_rmw_f32(&self, op: AtomicOp, addr: u64, val: f32) -> f32 {
+        let a = self.atomic_u32(addr);
+        let old = a
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
+                let cur = f32::from_bits(c);
+                let new = match op {
+                    AtomicOp::Add => cur + val,
+                    AtomicOp::Sub => cur - val,
+                    AtomicOp::Min => cur.min(val),
+                    AtomicOp::Max => cur.max(val),
+                    AtomicOp::Exch => val,
+                    _ => panic!("unsupported f32 atomic {op:?}"),
+                };
+                Some(new.to_bits())
+            })
+            .unwrap();
+        f32::from_bits(old)
+    }
+
+    /// f64 atomic RMW via CAS on the bit pattern.
+    pub fn atomic_rmw_f64(&self, op: AtomicOp, addr: u64, val: f64) -> f64 {
+        let a = self.atomic_u64(addr);
+        let old = a
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
+                let cur = f64::from_bits(c);
+                let new = match op {
+                    AtomicOp::Add => cur + val,
+                    AtomicOp::Sub => cur - val,
+                    AtomicOp::Min => cur.min(val),
+                    AtomicOp::Max => cur.max(val),
+                    AtomicOp::Exch => val,
+                    _ => panic!("unsupported f64 atomic {op:?}"),
+                };
+                Some(new.to_bits())
+            })
+            .unwrap();
+        f64::from_bits(old)
+    }
+
+    /// `atomicCAS(ptr, cmp, val)` on i32 — returns the old value.
+    pub fn atomic_cas_i32(&self, addr: u64, cmp: i32, val: i32) -> i32 {
+        match self.atomic_u32(addr).compare_exchange(
+            cmp as u32,
+            val as u32,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        ) {
+            Ok(old) | Err(old) => old as i32,
+        }
+    }
+
+    /// `atomicCAS` on i64.
+    pub fn atomic_cas_i64(&self, addr: u64, cmp: i64, val: i64) -> i64 {
+        match self.atomic_u64(addr).compare_exchange(
+            cmp as u64,
+            val as u64,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        ) {
+            Ok(old) | Err(old) => old as i64,
+        }
+    }
+
+    /// Typed-value helpers used by host-side validation.
+    pub fn read_vec_f32(&self, addr: u64, n: usize) -> Vec<f32> {
+        (0..n).map(|i| self.read_f32(addr + (i * 4) as u64)).collect()
+    }
+    pub fn read_vec_i32(&self, addr: u64, n: usize) -> Vec<i32> {
+        (0..n).map(|i| self.read_i32(addr + (i * 4) as u64)).collect()
+    }
+    pub fn read_vec_f64(&self, addr: u64, n: usize) -> Vec<f64> {
+        (0..n).map(|i| self.read_f64(addr + (i * 8) as u64)).collect()
+    }
+    pub fn write_slice_f32(&self, addr: u64, v: &[f32]) {
+        for (i, x) in v.iter().enumerate() {
+            self.write_f32(addr + (i * 4) as u64, *x);
+        }
+    }
+    pub fn write_slice_i32(&self, addr: u64, v: &[i32]) {
+        for (i, x) in v.iter().enumerate() {
+            self.write_i32(addr + (i * 4) as u64, *x);
+        }
+    }
+    pub fn write_slice_f64(&self, addr: u64, v: &[f64]) {
+        for (i, x) in v.iter().enumerate() {
+            self.write_f64(addr + (i * 8) as u64, *x);
+        }
+    }
+
+    /// Size in bytes of a `Ty` load/store (for trace accounting).
+    pub fn ty_bytes(ty: Ty) -> u8 {
+        ty.size() as u8
+    }
+
+    // ---- direct slice views (native block functions' hot path) ----
+    //
+    // SAFETY contract: the caller must not create overlapping mutable
+    // views that race — the same discipline CUDA global memory imposes
+    // on device code. Views are only taken inside one block's execution
+    // over regions the launch partitions disjointly (or via atomics).
+
+    /// Mutable f32 view of `[addr, addr + n*4)`.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_f32(&self, addr: u64, n: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.ptr(addr, n * 4) as *mut f32, n)
+    }
+
+    /// Mutable f64 view.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_f64(&self, addr: u64, n: usize) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.ptr(addr, n * 8) as *mut f64, n)
+    }
+
+    /// Mutable i32 view.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_i32(&self, addr: u64, n: usize) -> &mut [i32] {
+        std::slice::from_raw_parts_mut(self.ptr(addr, n * 4) as *mut i32, n)
+    }
+
+    /// Mutable u8 view.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_u8(&self, addr: u64, n: usize) -> &mut [u8] {
+        std::slice::from_raw_parts_mut(self.ptr(addr, n), n)
+    }
+}
+
+impl Default for DeviceMemory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_aligned_and_disjoint() {
+        let m = DeviceMemory::with_capacity(1 << 16);
+        let a = m.alloc(13);
+        let b = m.alloc(8);
+        assert_eq!(a % 8, 0);
+        assert_eq!(b % 8, 0);
+        assert!(b >= a + 13);
+        assert!(a >= 64);
+    }
+
+    #[test]
+    fn memcpy_round_trip() {
+        let m = DeviceMemory::with_capacity(1 << 16);
+        let a = m.alloc(16);
+        m.h2d(a, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let mut out = [0u8; 8];
+        m.d2h(&mut out, a);
+        assert_eq!(out, [1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn typed_access() {
+        let m = DeviceMemory::with_capacity(1 << 16);
+        let a = m.alloc(32);
+        m.write_f64(a, 3.5);
+        m.write_i32(a + 8, -42);
+        m.write_f32(a + 12, 0.25);
+        assert_eq!(m.read_f64(a), 3.5);
+        assert_eq!(m.read_i32(a + 8), -42);
+        assert_eq!(m.read_f32(a + 12), 0.25);
+    }
+
+    #[test]
+    fn atomics_concurrent_add() {
+        let m = std::sync::Arc::new(DeviceMemory::with_capacity(1 << 12));
+        let a = m.alloc(4);
+        m.write_i32(a, 0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.atomic_rmw_i32(AtomicOp::Add, a, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.read_i32(a), 8000);
+    }
+
+    #[test]
+    fn atomic_f32_add() {
+        let m = DeviceMemory::with_capacity(1 << 12);
+        let a = m.alloc(4);
+        m.write_f32(a, 1.0);
+        let old = m.atomic_rmw_f32(AtomicOp::Add, a, 2.5);
+        assert_eq!(old, 1.0);
+        assert_eq!(m.read_f32(a), 3.5);
+    }
+
+    #[test]
+    fn cas_semantics() {
+        let m = DeviceMemory::with_capacity(1 << 12);
+        let a = m.alloc(4);
+        m.write_i32(a, 5);
+        assert_eq!(m.atomic_cas_i32(a, 5, 9), 5); // succeeds
+        assert_eq!(m.read_i32(a), 9);
+        assert_eq!(m.atomic_cas_i32(a, 5, 1), 9); // fails, returns current
+        assert_eq!(m.read_i32(a), 9);
+    }
+
+    #[test]
+    fn atomic_min_max() {
+        let m = DeviceMemory::with_capacity(1 << 12);
+        let a = m.alloc(4);
+        m.write_i32(a, 10);
+        m.atomic_rmw_i32(AtomicOp::Min, a, 3);
+        assert_eq!(m.read_i32(a), 3);
+        m.atomic_rmw_i32(AtomicOp::Max, a, 7);
+        assert_eq!(m.read_i32(a), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "device OOM")]
+    fn oom_detected() {
+        let m = DeviceMemory::with_capacity(128);
+        let _ = m.alloc(256);
+    }
+}

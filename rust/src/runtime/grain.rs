@@ -1,0 +1,115 @@
+//! Coarse-grained fetching policies (paper §IV-A, Table V).
+//!
+//! Every queue access is atomic, so fetching has non-negligible
+//! overhead. CuPBoP fetches `block_per_fetch` blocks at once:
+//!
+//! * **Average** — `⌈gridSize / threadPoolSize⌉` per fetch: exactly
+//!   `threadPoolSize` fetches, every thread busy (100% utilisation).
+//! * **Aggressive** — a larger grain: fewer atomic fetches, some idle
+//!   threads; wins when block execution time is small relative to the
+//!   fetch/synchronisation cost (BS, FIR) or when fewer active threads
+//!   reduce contention on guest atomics (HIST).
+//! * **Fixed** — explicit grain, used by the Table V sweep.
+//! * **Auto** — the heuristic: kernels with a small dynamic instruction
+//!   estimate get an aggressive grain, heavy kernels the average one.
+
+/// Grain-size selection for a kernel launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GrainPolicy {
+    /// `⌈grid / pool⌉` — equal distribution over all pool threads.
+    Average,
+    /// `factor × ⌈grid / pool⌉` — leaves `pool/factor` threads busy.
+    Aggressive { factor: u64 },
+    /// Absolute blocks per fetch (Table V sweep).
+    Fixed(u64),
+    /// Heuristic keyed on the kernel's estimated per-block work
+    /// (dynamic instructions; the paper uses nvprof counts).
+    Auto { est_insts_per_block: u64 },
+}
+
+/// Per-block instruction count below which a kernel is "lightweight"
+/// and aggressive fetching wins (BS ≈ 79k/2048 blk, FIR ≈ 260k/64 blk
+/// in Table V are well under this; GA/PR/AES are far over).
+pub const LIGHT_KERNEL_INSTS_PER_BLOCK: u64 = 4096;
+
+impl GrainPolicy {
+    /// Compute `block_per_fetch` for a launch of `grid_size` blocks on
+    /// a pool of `pool_size` threads.
+    pub fn block_per_fetch(self, grid_size: u64, pool_size: u64) -> u64 {
+        let pool = pool_size.max(1);
+        let average = grid_size.div_ceil(pool).max(1);
+        match self {
+            GrainPolicy::Average => average,
+            GrainPolicy::Aggressive { factor } => (average * factor.max(1)).min(grid_size.max(1)),
+            GrainPolicy::Fixed(n) => n.max(1),
+            GrainPolicy::Auto { est_insts_per_block } => {
+                if est_insts_per_block < LIGHT_KERNEL_INSTS_PER_BLOCK {
+                    // lightweight kernel: halve the number of fetches
+                    (average * 2).min(grid_size.max(1))
+                } else {
+                    average
+                }
+            }
+        }
+    }
+
+    /// Number of atomic fetches a launch will need under this policy.
+    pub fn num_fetches(self, grid_size: u64, pool_size: u64) -> u64 {
+        grid_size.div_ceil(self.block_per_fetch(grid_size, pool_size)).max(1)
+    }
+
+    /// How many pool threads receive work (utilisation numerator) —
+    /// Figure 6's trade-off.
+    pub fn threads_utilized(self, grid_size: u64, pool_size: u64) -> u64 {
+        self.num_fetches(grid_size, pool_size).min(pool_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Figure 6: grid 12, pool 3. Average → bpf 4, 3 fetches, all 3
+    /// threads busy. Aggressive ×1.5 ≈ bpf 6 → 2 fetches, 2 threads.
+    #[test]
+    fn figure6_example() {
+        let avg = GrainPolicy::Average;
+        assert_eq!(avg.block_per_fetch(12, 3), 4);
+        assert_eq!(avg.num_fetches(12, 3), 3);
+        assert_eq!(avg.threads_utilized(12, 3), 3);
+
+        let agg = GrainPolicy::Fixed(6);
+        assert_eq!(agg.num_fetches(12, 3), 2);
+        assert_eq!(agg.threads_utilized(12, 3), 2);
+    }
+
+    /// Gaussian's pathology: 65536 blocks, grain 1 → 65536 fetches;
+    /// average on a 32-thread pool → 32 fetches.
+    #[test]
+    fn gaussian_pathology() {
+        assert_eq!(GrainPolicy::Fixed(1).num_fetches(65536, 32), 65536);
+        assert_eq!(GrainPolicy::Average.num_fetches(65536, 32), 32);
+    }
+
+    #[test]
+    fn average_rounds_up() {
+        assert_eq!(GrainPolicy::Average.block_per_fetch(10, 3), 4);
+        assert_eq!(GrainPolicy::Average.block_per_fetch(1, 8), 1);
+        assert_eq!(GrainPolicy::Average.block_per_fetch(0, 8), 1);
+    }
+
+    #[test]
+    fn aggressive_clamped_to_grid() {
+        let p = GrainPolicy::Aggressive { factor: 100 };
+        assert_eq!(p.block_per_fetch(12, 3), 12);
+        assert_eq!(p.num_fetches(12, 3), 1);
+    }
+
+    #[test]
+    fn auto_heuristic_switches_on_weight() {
+        let light = GrainPolicy::Auto { est_insts_per_block: 100 };
+        let heavy = GrainPolicy::Auto { est_insts_per_block: 1_000_000 };
+        assert!(light.block_per_fetch(64, 8) > heavy.block_per_fetch(64, 8));
+        assert_eq!(heavy.block_per_fetch(64, 8), 8);
+    }
+}

@@ -1,0 +1,56 @@
+//! The kernel task structure (paper Listing 6).
+
+use crate::exec::{BlockFn, LaunchInfo};
+use std::sync::Arc;
+
+/// One queued kernel launch — the `struct kernel` of Listing 6.
+pub struct KernelTask {
+    /// Pointer to the MPMD block function produced by compilation.
+    pub start_routine: Arc<dyn BlockFn>,
+    /// Packed args + grid/block dims + dynamic shared memory size.
+    pub launch: Arc<LaunchInfo>,
+    /// How many blocks this kernel must execute (`totalBlocks`).
+    pub total_blocks: u64,
+    /// How many blocks have been fetched so far (`curr_blockId`).
+    /// Mutated under the task-queue mutex.
+    pub curr_block_id: u64,
+    /// Blocks handed out per atomic fetch (`block_per_fetch`) —
+    /// the coarse-grained-fetching grain size (§IV-A).
+    pub block_per_fetch: u64,
+}
+
+/// A fetched slice of a kernel: blocks `[start, end)` to execute.
+pub struct FetchedBlocks {
+    pub start_routine: Arc<dyn BlockFn>,
+    pub launch: Arc<LaunchInfo>,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl FetchedBlocks {
+    pub fn count(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::NativeBlockFn;
+
+    #[test]
+    fn fetched_count() {
+        let f = FetchedBlocks {
+            start_routine: NativeBlockFn::new("noop", |_, _, _, _| {}),
+            launch: Arc::new(LaunchInfo {
+                grid: (4, 1),
+                block: (1, 1),
+                dyn_shmem: 0,
+                packed: Arc::new(vec![]),
+            }),
+            start: 4,
+            end: 8,
+        };
+        assert_eq!(f.count(), 4);
+    }
+}

@@ -1,0 +1,22 @@
+//! The CuPBoP runtime (paper §IV): device memory, persistent thread
+//! pool, mutex task queue with `wake_pool` condvar, coarse-grained
+//! fetching policies, and the PJRT device path for the CUDA baseline.
+
+pub mod device;
+pub mod grain;
+pub mod kernel;
+pub mod pjrt;
+pub mod task_queue;
+pub mod thread_pool;
+
+pub use device::DeviceMemory;
+pub use grain::GrainPolicy;
+pub use kernel::{FetchedBlocks, KernelTask};
+pub use task_queue::TaskQueue;
+pub use thread_pool::ThreadPool;
+
+/// Default pool size: one thread per available core (the paper pins the
+/// pool to the core count of each server).
+pub fn default_pool_size() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}

@@ -1,0 +1,270 @@
+//! The mutex-protected task queue (paper §IV, Figure 5).
+//!
+//! Kernel launch pushes a [`KernelTask`]; pool threads fetch
+//! `block_per_fetch` blocks at a time under the mutex, the task is
+//! popped once fully fetched, and a `wake_pool` condition variable
+//! wakes idle threads on every push. `outstanding` tracks
+//! fetched-but-not-completed blocks so `cudaDeviceSynchronize` can wait
+//! on a second condvar.
+//!
+//! Fetching is deliberately *separate from execution* — "executing a
+//! kernel itself is not part of the fetching process, as fetching
+//! instructions need to be done atomically and is on the critical path".
+
+use super::kernel::{FetchedBlocks, KernelTask};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+#[derive(Default)]
+struct Inner {
+    tasks: VecDeque<KernelTask>,
+    /// blocks fetched but whose execution has not been reported done
+    outstanding_blocks: u64,
+    shutdown: bool,
+    /// monotone counters for instrumentation (Fig 11 / Table V analysis)
+    fetches: u64,
+    pushes: u64,
+}
+
+/// Shared between the host thread and the pool threads.
+pub struct TaskQueue {
+    inner: Mutex<Inner>,
+    /// broadcast on push (and shutdown) — the paper's `wake_pool`
+    wake_pool: Condvar,
+    /// signalled when all work completed — backs `sync()`
+    done: Condvar,
+}
+
+impl TaskQueue {
+    pub fn new() -> Self {
+        TaskQueue { inner: Mutex::new(Inner::default()), wake_pool: Condvar::new(), done: Condvar::new() }
+    }
+
+    /// Host side: push a kernel task and broadcast `wake_pool`
+    /// (Figure 5(a)). Not blocking — kernel launch is asynchronous.
+    pub fn push(&self, task: KernelTask) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(task.block_per_fetch >= 1);
+        g.pushes += 1;
+        g.tasks.push_back(task);
+        drop(g);
+        self.wake_pool.notify_all();
+    }
+
+    /// Pool side: block until work is available (or shutdown), then
+    /// atomically fetch up to `block_per_fetch` blocks from the front
+    /// task (Figure 5(b)). Returns `None` on shutdown.
+    pub fn fetch(&self) -> Option<FetchedBlocks> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(front) = g.tasks.front_mut() {
+                let start = front.curr_block_id;
+                let end = (start + front.block_per_fetch).min(front.total_blocks);
+                front.curr_block_id = end;
+                let fb = FetchedBlocks {
+                    start_routine: front.start_routine.clone(),
+                    launch: front.launch.clone(),
+                    start,
+                    end,
+                };
+                // pop once fully fetched
+                if end >= front.total_blocks {
+                    g.tasks.pop_front();
+                }
+                g.outstanding_blocks += fb.count();
+                g.fetches += 1;
+                return Some(fb);
+            }
+            if g.shutdown {
+                return None;
+            }
+            g = self.wake_pool.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking fetch — used by the host thread in "helping" mode
+    /// and by tests.
+    pub fn try_fetch(&self) -> Option<FetchedBlocks> {
+        let mut g = self.inner.lock().unwrap();
+        let front = g.tasks.front_mut()?;
+        let start = front.curr_block_id;
+        let end = (start + front.block_per_fetch).min(front.total_blocks);
+        front.curr_block_id = end;
+        let fb = FetchedBlocks {
+            start_routine: front.start_routine.clone(),
+            launch: front.launch.clone(),
+            start,
+            end,
+        };
+        if end >= front.total_blocks {
+            g.tasks.pop_front();
+        }
+        g.outstanding_blocks += fb.count();
+        g.fetches += 1;
+        Some(fb)
+    }
+
+    /// Pool side: report a fetched slice as executed.
+    pub fn complete(&self, blocks: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.outstanding_blocks -= blocks;
+        if g.outstanding_blocks == 0 && g.tasks.is_empty() {
+            drop(g);
+            self.done.notify_all();
+        }
+    }
+
+    /// Host side: `cudaDeviceSynchronize` — wait until the queue is
+    /// drained and every fetched block has completed.
+    pub fn sync(&self) {
+        let mut g = self.inner.lock().unwrap();
+        while !(g.tasks.is_empty() && g.outstanding_blocks == 0) {
+            g = self.done.wait(g).unwrap();
+        }
+    }
+
+    /// Ask pool threads to exit once the queue drains.
+    pub fn shutdown(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.shutdown = true;
+        drop(g);
+        self.wake_pool.notify_all();
+    }
+
+    /// (pushes, fetches) counters — instrumentation for Table V/Fig 11.
+    pub fn counters(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.pushes, g.fetches)
+    }
+
+    pub fn is_idle(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.tasks.is_empty() && g.outstanding_blocks == 0
+    }
+}
+
+impl Default for TaskQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{LaunchInfo, NativeBlockFn};
+    use std::sync::Arc;
+
+    fn task(total: u64, bpf: u64) -> KernelTask {
+        KernelTask {
+            start_routine: NativeBlockFn::new("noop", |_, _, _, _| {}),
+            launch: Arc::new(LaunchInfo {
+                grid: (total as u32, 1),
+                block: (1, 1),
+                dyn_shmem: 0,
+                packed: Arc::new(vec![]),
+            }),
+            total_blocks: total,
+            curr_block_id: 0,
+            block_per_fetch: bpf,
+        }
+    }
+
+    /// Figure 5's example: K with grid 16, fetch 4 at a time.
+    #[test]
+    fn fetch_partitions_figure5() {
+        let q = TaskQueue::new();
+        q.push(task(16, 4));
+        let mut seen = Vec::new();
+        while let Some(f) = q.try_fetch() {
+            seen.push((f.start, f.end));
+            q.complete(f.count());
+        }
+        assert_eq!(seen, vec![(0, 4), (4, 8), (8, 12), (12, 16)]);
+        assert!(q.is_idle());
+        assert_eq!(q.counters(), (1, 4));
+    }
+
+    #[test]
+    fn last_fetch_clamped() {
+        let q = TaskQueue::new();
+        q.push(task(10, 4));
+        let sizes: Vec<u64> = std::iter::from_fn(|| q.try_fetch().map(|f| {
+            q.complete(f.count());
+            f.count()
+        }))
+        .collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn every_block_fetched_exactly_once_two_kernels() {
+        let q = TaskQueue::new();
+        q.push(task(7, 3));
+        q.push(task(5, 2));
+        let mut count = 0;
+        let mut ranges = Vec::new();
+        while let Some(f) = q.try_fetch() {
+            count += f.count();
+            ranges.push((f.start, f.end));
+            q.complete(f.count());
+        }
+        assert_eq!(count, 12);
+        // FIFO: first kernel's ranges precede the second's
+        assert_eq!(ranges[0], (0, 3));
+        assert_eq!(ranges.last().unwrap(), &(4, 5));
+    }
+
+    #[test]
+    fn sync_waits_for_completion() {
+        let q = Arc::new(TaskQueue::new());
+        q.push(task(4, 1));
+        let q2 = q.clone();
+        let worker = std::thread::spawn(move || {
+            while let Some(f) = q2.try_fetch() {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                q2.complete(f.count());
+            }
+        });
+        q.sync();
+        assert!(q.is_idle());
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn blocking_fetch_wakes_on_push() {
+        let q = Arc::new(TaskQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.fetch().map(|f| {
+            q2.complete(f.count());
+            f.count()
+        }));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.push(task(2, 2));
+        assert_eq!(h.join().unwrap(), Some(2));
+    }
+
+    #[test]
+    fn shutdown_unblocks_fetch() {
+        let q = Arc::new(TaskQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.fetch().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        q.shutdown();
+        assert!(h.join().unwrap());
+    }
+
+    /// Shutdown drains remaining tasks before threads exit.
+    #[test]
+    fn shutdown_after_push_still_drains() {
+        let q = TaskQueue::new();
+        q.push(task(3, 1));
+        q.shutdown();
+        let mut n = 0;
+        while let Some(f) = q.fetch() {
+            q.complete(f.count());
+            n += f.count();
+        }
+        assert_eq!(n, 3);
+    }
+}

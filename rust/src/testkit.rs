@@ -1,0 +1,184 @@
+//! In-crate property-testing and deterministic-random utilities.
+//!
+//! No external proptest/rand crates are available offline, so this
+//! module provides a small splitmix64/xoshiro generator and a
+//! `for_random_cases` driver used by the property tests in
+//! `rust/tests/property_tests.rs` and by benchmark input generation.
+
+/// SplitMix64 — tiny, high-quality 64-bit PRNG (public-domain algorithm).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        if n == 0 {
+            0
+        } else {
+            self.next_u64() % n
+        }
+    }
+
+    /// Uniform in `[lo, hi)` (i64).
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + (self.below((hi - lo) as u64) as i64)
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Random f32 vector.
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_range(lo, hi)).collect()
+    }
+
+    /// Random f64 vector.
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| lo + self.f64() * (hi - lo)).collect()
+    }
+
+    /// Random i32 vector in [lo, hi).
+    pub fn vec_i32(&mut self, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..n).map(|_| self.range_i64(lo as i64, hi as i64) as i32).collect()
+    }
+
+    /// Choose one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `f` over `cases` seeded cases; on failure, report the seed so
+/// the case can be replayed.
+pub fn for_random_cases(cases: u64, base_seed: u64, mut f: impl FnMut(&mut Rng)) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property case failed: base_seed={base_seed} case={i} seed={seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Float comparison helpers for correctness oracles.
+pub fn assert_allclose_f32(got: &[f32], want: &[f32], rtol: f32, atol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol || (g.is_nan() && w.is_nan()),
+            "{what}[{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+pub fn assert_allclose_f64(got: &[f64], want: &[f64], rtol: f64, atol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol || (g.is_nan() && w.is_nan()),
+            "{what}[{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+/// Bytes ↔ typed-slice helpers used by host arrays.
+pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+pub fn f64s_to_bytes(v: &[f64]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+pub fn i32s_to_bytes(v: &[i32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+pub fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+pub fn bytes_to_f64s(b: &[u8]) -> Vec<f64> {
+    b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+pub fn bytes_to_i32s(b: &[u8]) -> Vec<i32> {
+    b.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_ranges_respected() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.range_i64(-5, 5);
+            assert!((-5..5).contains(&x));
+            let f = r.f32_range(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn bytes_round_trip() {
+        let v = vec![1.5f32, -2.25, 0.0];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&v)), v);
+        let w = vec![1i32, -7, 1 << 30];
+        assert_eq!(bytes_to_i32s(&i32s_to_bytes(&w)), w);
+    }
+
+    #[test]
+    fn allclose_accepts_within_tol() {
+        assert_allclose_f32(&[1.0, 2.0], &[1.0000001, 2.0], 1e-5, 1e-6, "t");
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_rejects_outside_tol() {
+        assert_allclose_f32(&[1.0], &[1.1], 1e-6, 1e-6, "t");
+    }
+}

@@ -1,0 +1,132 @@
+//! End-to-end correctness of every implemented benchmark on every
+//! CPU backend: Reference (serial interpreter oracle), CuPBoP (pool +
+//! coarse fetching), HIP-CPU model, DPC++ model — all must produce
+//! outputs that pass each benchmark's validator.
+
+use cupbop::benchsuite::spec::{self, Backend, Scale};
+use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode};
+
+fn run_all(backend: Backend, cfg: BackendCfg) {
+    for b in spec::all_benchmarks() {
+        if b.build.is_none() {
+            continue;
+        }
+        let built = spec::build_program(&b, Scale::Tiny);
+        let out = spec::run_on(&built, backend, cfg);
+        if let Err(e) = out.check {
+            panic!("{} [{}]: {e}", b.name, backend.name());
+        }
+    }
+}
+
+#[test]
+fn reference_backend_all_green() {
+    run_all(Backend::Reference, BackendCfg::default());
+}
+
+#[test]
+fn cupbop_interpreter_all_green() {
+    run_all(
+        Backend::CuPBoP,
+        BackendCfg { pool_size: 4, exec: ExecMode::Interpret, ..Default::default() },
+    );
+}
+
+#[test]
+fn cupbop_native_all_green() {
+    run_all(
+        Backend::CuPBoP,
+        BackendCfg { pool_size: 4, exec: ExecMode::Native, ..Default::default() },
+    );
+}
+
+#[test]
+fn cupbop_single_thread_pool() {
+    run_all(
+        Backend::CuPBoP,
+        BackendCfg { pool_size: 1, exec: ExecMode::Interpret, ..Default::default() },
+    );
+}
+
+#[test]
+fn cupbop_average_policy() {
+    run_all(
+        Backend::CuPBoP,
+        BackendCfg {
+            pool_size: 4,
+            policy: PolicyMode::Average,
+            exec: ExecMode::Native,
+            ..Default::default()
+        },
+    );
+}
+
+#[test]
+fn cupbop_fixed_grain_one() {
+    run_all(
+        Backend::CuPBoP,
+        BackendCfg {
+            pool_size: 4,
+            policy: PolicyMode::Fixed(1),
+            exec: ExecMode::Native,
+            ..Default::default()
+        },
+    );
+}
+
+#[test]
+fn hipcpu_model_all_green() {
+    run_all(
+        Backend::HipCpu,
+        BackendCfg { pool_size: 4, exec: ExecMode::Native, ..Default::default() },
+    );
+}
+
+#[test]
+fn dpcpp_model_all_green() {
+    run_all(
+        Backend::Dpcpp,
+        BackendCfg { pool_size: 4, exec: ExecMode::Native, ..Default::default() },
+    );
+}
+
+/// Interpreter and native closures agree benchmark-by-benchmark (the
+/// native closure is the "emitted binary" — it must be semantically
+/// identical to the MPMD CIR the compiler produced).
+#[test]
+fn interpreter_and_native_agree() {
+    for b in spec::all_benchmarks() {
+        if b.build.is_none() {
+            continue;
+        }
+        let built = spec::build_program(&b, Scale::Tiny);
+        let has_native = built.variants.iter().any(|v| v.native.is_some());
+        if !has_native {
+            continue;
+        }
+        for exec in [ExecMode::Interpret, ExecMode::Native] {
+            let out = spec::run_on(
+                &built,
+                Backend::CuPBoP,
+                BackendCfg { pool_size: 2, exec, ..Default::default() },
+            );
+            out.check.unwrap_or_else(|e| panic!("{} [{exec:?}]: {e}", b.name));
+        }
+    }
+}
+
+/// Small-scale spot check (bigger inputs, one heavy + one light
+/// benchmark per suite) to catch scale-dependent bugs.
+#[test]
+fn small_scale_spot_check() {
+    for name in ["hist", "bs", "gaussian", "q21", "cloverleaf"] {
+        let b = spec::by_name(name).unwrap();
+        let built = spec::build_program(&b, Scale::Small);
+        let out = spec::run_on(
+            &built,
+            Backend::CuPBoP,
+            BackendCfg { pool_size: 4, exec: ExecMode::Native, ..Default::default() },
+        );
+        out.check.unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}

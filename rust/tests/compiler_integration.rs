@@ -1,0 +1,132 @@
+//! Integration tests over the full compilation pipeline: every bundled
+//! benchmark kernel must verify, fission, and round-trip through the
+//! packed-argument ABI; the paper's Listing 3 example must match
+//! Figure 4's structure.
+
+use cupbop::benchsuite::spec::{self, Scale};
+use cupbop::compiler::{compile_kernel, pack, unpack, ArgValue, PackedLayout};
+use cupbop::ir::*;
+
+/// Every implemented benchmark's kernels survive the full pipeline.
+#[test]
+fn all_benchmark_kernels_compile() {
+    for b in spec::all_benchmarks() {
+        if b.build.is_none() {
+            continue;
+        }
+        let built = spec::build_program(&b, Scale::Tiny);
+        assert!(!built.compiled.is_empty(), "{} has kernels", b.name);
+        for ck in &built.compiled {
+            // fixed hidden-param ABI
+            assert_eq!(ck.layout.slots.len(), ck.mpmd.params.len());
+            assert_eq!(ck.mpmd.params.len() - ck.extra_base, 6, "{}", ck.mpmd.name);
+        }
+    }
+}
+
+/// Warp-level kernels (Crystal q1x) compile to the COX nested form;
+/// non-warp kernels keep the single-layer MCUDA form.
+#[test]
+fn warp_mode_only_where_needed() {
+    let q11 = spec::by_name("q11").unwrap();
+    let built = spec::build_program(&q11, Scale::Tiny);
+    assert!(built.compiled[0].mpmd.warp_level, "q11 uses warp shuffles");
+
+    let hist = spec::by_name("hist").unwrap();
+    let built = spec::build_program(&hist, Scale::Tiny);
+    assert!(!built.compiled[0].mpmd.warp_level);
+}
+
+/// Implicit barriers: every implemented benchmark's transformed host
+/// program protects all its D2H read-backs of kernel-written buffers.
+#[test]
+fn host_programs_have_barriers_where_needed() {
+    for b in spec::all_benchmarks() {
+        if b.build.is_none() {
+            continue;
+        }
+        let built = spec::build_program(&b, Scale::Tiny);
+        // the raw program has no implicit syncs; the compiled one may
+        let raw = built.host_raw.num_syncs();
+        let cooked = built.host.num_syncs();
+        assert!(cooked >= raw, "{}: pass never removes syncs", b.name);
+        // benchmarks whose kernels write read-back buffers must gain >=1
+        if built.host_raw.num_launches() > 0 {
+            assert!(cooked >= 1, "{}: kernel-write → D2H needs a barrier", b.name);
+        }
+    }
+}
+
+/// The paper's Listing 3 / Figure 4 walk-through.
+#[test]
+fn listing3_matches_figure4() {
+    let mut b = KernelBuilder::new("dynamicReverse");
+    let d = b.ptr_param("d", Ty::I32);
+    let n = b.scalar_param("n", Ty::I32);
+    let s = b.dyn_shared(Ty::I32);
+    let t = b.assign(tid_x());
+    let tr = b.assign(sub(sub(n.clone(), reg(t)), c_i32(1)));
+    b.store_at(s.clone(), reg(t), at(d.clone(), reg(t), Ty::I32), Ty::I32);
+    b.sync_threads();
+    b.store_at(d.clone(), reg(t), at(s.clone(), reg(tr), Ty::I32), Ty::I32);
+    let ck = compile_kernel(&b.build()).unwrap();
+
+    // Figure 4: two loops, dynamic shared memory mapped, block geometry
+    // as explicit variables.
+    let loops = ck
+        .mpmd
+        .body
+        .iter()
+        .filter(|s| matches!(s, Stmt::ThreadLoop { .. }))
+        .count();
+    assert_eq!(loops, 2, "Loop1 + Loop2");
+    assert_eq!(ck.memory.dyn_elem, Some(Ty::I32));
+    assert!(ck
+        .mpmd
+        .params
+        .iter()
+        .any(|p| p.name == "__cupbop_block_size_x"));
+    let printed = cupbop::ir::pretty::mpmd_to_string(&ck.mpmd);
+    assert!(printed.contains("thread loop"));
+}
+
+/// Packed-ABI round trip with the runtime's hidden-slot convention.
+#[test]
+fn packed_abi_round_trip_with_hidden_slots() {
+    let mut b = KernelBuilder::new("k");
+    let _ = b.ptr_param("p", Ty::F32);
+    let _ = b.scalar_param("x", Ty::F64);
+    let ck = compile_kernel(&b.build()).unwrap();
+    let mut args = vec![ArgValue::Ptr(4096), ArgValue::F64(2.5)];
+    args.extend([ArgValue::I32(0); 6]);
+    let buf = pack(&ck.layout, &args).unwrap();
+    let back = unpack(&ck.layout, &buf).unwrap();
+    assert_eq!(back, args);
+}
+
+/// Pretty printer round-trips every benchmark kernel without panicking
+/// (smoke coverage of all Expr/Stmt arms actually used).
+#[test]
+fn pretty_prints_every_kernel() {
+    for b in spec::all_benchmarks() {
+        if b.build.is_none() {
+            continue;
+        }
+        let built = spec::build_program(&b, Scale::Tiny);
+        for ck in &built.compiled {
+            let s = cupbop::ir::pretty::mpmd_to_string(&ck.mpmd);
+            assert!(s.contains(&ck.mpmd.name));
+        }
+    }
+}
+
+/// PackedLayout is stable across recompilation (ABI determinism).
+#[test]
+fn layout_deterministic() {
+    let q = spec::by_name("kmeans").unwrap();
+    let a = spec::build_program(&q, Scale::Tiny);
+    let b = spec::build_program(&q, Scale::Tiny);
+    let la: Vec<&PackedLayout> = a.compiled.iter().map(|c| &c.layout).collect();
+    let lb: Vec<&PackedLayout> = b.compiled.iter().map(|c| &c.layout).collect();
+    assert_eq!(la, lb);
+}

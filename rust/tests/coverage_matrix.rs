@@ -1,0 +1,95 @@
+//! Table I / Table II reproduction as assertions.
+
+use cupbop::benchsuite::spec::{self, Suite};
+use cupbop::compiler::coverage::{coverage, judge, Framework, Verdict};
+use std::collections::BTreeSet;
+
+fn verdicts(suite: Suite, fw: Framework) -> Vec<(String, Verdict)> {
+    spec::all_benchmarks()
+        .into_iter()
+        .filter(|b| b.suite == suite)
+        .map(|b| {
+            let f: BTreeSet<_> = b.features.iter().copied().collect();
+            (b.name.to_string(), judge(fw, &f, b.incorrect_on))
+        })
+        .collect()
+}
+
+/// Table II headline: Rodinia coverage 69.6 / 56.5 / 56.5.
+#[test]
+fn table2_rodinia_coverage() {
+    let cov = |fw| coverage(&verdicts(Suite::Rodinia, fw).into_iter().map(|(_, v)| v).collect::<Vec<_>>());
+    assert!((cov(Framework::CuPBoP) - 69.6).abs() < 0.1);
+    assert!((cov(Framework::Dpcpp) - 56.5).abs() < 0.1);
+    assert!((cov(Framework::HipCpu) - 56.5).abs() < 0.1);
+}
+
+/// Table II: Crystal coverage 100 / 76.9 / 0.
+#[test]
+fn table2_crystal_coverage() {
+    let cov = |fw| coverage(&verdicts(Suite::Crystal, fw).into_iter().map(|(_, v)| v).collect::<Vec<_>>());
+    assert!((cov(Framework::CuPBoP) - 100.0).abs() < 0.1);
+    assert!((cov(Framework::HipCpu) - 76.9).abs() < 0.1);
+    assert_eq!(cov(Framework::Dpcpp), 0.0);
+}
+
+/// Per-row spot checks against Table II's printed verdicts.
+#[test]
+fn table2_row_verdicts() {
+    let expect = [
+        // (name, dpcpp, hipcpu, cupbop)
+        ("b+tree", Verdict::Correct, Verdict::Unsupported, Verdict::Correct),
+        ("backprop", Verdict::Correct, Verdict::Unsupported, Verdict::Correct),
+        ("bfs", Verdict::Incorrect, Verdict::Correct, Verdict::Correct),
+        ("hotspot", Verdict::Incorrect, Verdict::Correct, Verdict::Correct),
+        ("huffman", Verdict::Correct, Verdict::Unsupported, Verdict::Correct),
+        ("lavaMD", Verdict::Correct, Verdict::Correct, Verdict::Unsupported),
+        ("dwt2d", Verdict::Unsupported, Verdict::Unsupported, Verdict::Unsupported),
+        ("hybridsort", Verdict::Unsupported, Verdict::Unsupported, Verdict::Unsupported),
+        ("cfd", Verdict::Correct, Verdict::Unsupported, Verdict::Correct),
+        ("heartwall", Verdict::Incorrect, Verdict::Unsupported, Verdict::Incorrect),
+    ];
+    let rows = |fw| verdicts(Suite::Rodinia, fw);
+    let d = rows(Framework::Dpcpp);
+    let h = rows(Framework::HipCpu);
+    let c = rows(Framework::CuPBoP);
+    let find = |rows: &[(String, Verdict)], name: &str| {
+        rows.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap()
+    };
+    for (name, vd, vh, vc) in expect {
+        assert_eq!(find(&d, name), vd, "{name} DPC++");
+        assert_eq!(find(&h, name), vh, "{name} HIP-CPU");
+        assert_eq!(find(&c, name), vc, "{name} CuPBoP");
+    }
+}
+
+/// Crystal rows: q11-13 HIP-CPU unsupported (shuffle); q21+ supported.
+#[test]
+fn table2_crystal_rows() {
+    let h = verdicts(Suite::Crystal, Framework::HipCpu);
+    for (name, v) in &h {
+        if name.starts_with("q1") {
+            assert_eq!(*v, Verdict::Unsupported, "{name}");
+        } else {
+            assert_eq!(*v, Verdict::Correct, "{name}");
+        }
+    }
+}
+
+/// Table I content is queryable.
+#[test]
+fn table1_requirements() {
+    assert_eq!(Framework::CuPBoP.requirements(), ("LLVM", "pthreads"));
+    assert_eq!(Framework::CuPBoP.isa_support(), &["x86", "AArch64", "RISC-V"]);
+    assert_eq!(Framework::Dpcpp.isa_support(), &["x86"]);
+    let t = cupbop::report::table1();
+    assert!(t.contains("CuPBoP") && t.contains("RISC-V"));
+}
+
+/// The rendered Table II report carries the right coverage numbers.
+#[test]
+fn table2_report_renders() {
+    let t = cupbop::report::table2();
+    assert!(t.contains("69.6"), "{t}");
+    assert!(t.contains("100.0") || t.contains("100"), "{t}");
+}

@@ -1,0 +1,161 @@
+//! Device-path (PJRT) integration: load each AOT artifact, execute it,
+//! and compare against host-computed references — the same numbers the
+//! CuPBoP CPU path produces. Skips gracefully when `make artifacts`
+//! has not run.
+
+use cupbop::runtime::pjrt::PjrtRunner;
+use cupbop::testkit::{assert_allclose_f32, Rng};
+
+fn runner() -> Option<PjrtRunner> {
+    let r = PjrtRunner::from_env().ok()?;
+    if r.has_artifact("vecadd") {
+        Some(r)
+    } else {
+        eprintln!("skipping device tests: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn vecadd_artifact_numerics() {
+    let Some(r) = runner() else { return };
+    let exe = r.load("vecadd").unwrap();
+    let mut rng = Rng::new(1);
+    let a = rng.vec_f32(1024, -1.0, 1.0);
+    let b = rng.vec_f32(1024, -1.0, 1.0);
+    let out = exe.run_f32(&[(&a, &[1024]), (&b, &[1024])]).unwrap();
+    let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+    assert_allclose_f32(&out[0], &want, 1e-6, 1e-7, "vecadd");
+}
+
+#[test]
+fn hotspot_artifact_matches_host_reference() {
+    let Some(r) = runner() else { return };
+    let exe = r.load("hotspot").unwrap();
+    let n = 128usize;
+    let mut rng = Rng::new(2);
+    let temp = rng.vec_f32(n * n, 300.0, 340.0);
+    let power = rng.vec_f32(n * n, 0.0, 1.0);
+    let out = exe.run_f32(&[(&temp, &[n, n]), (&power, &[n, n])]).unwrap();
+    // host reference: 6 steps (the artifact's fixed step count)
+    let mut want = temp.clone();
+    for _ in 0..6 {
+        let mut next = vec![0.0f32; n * n];
+        for y in 0..n {
+            for x in 0..n {
+                let c = want[y * n + x];
+                let l = if x > 0 { want[y * n + x - 1] } else { c };
+                let rr = if x + 1 < n { want[y * n + x + 1] } else { c };
+                let u = if y > 0 { want[(y - 1) * n + x] } else { c };
+                let d = if y + 1 < n { want[(y + 1) * n + x] } else { c };
+                next[y * n + x] = c + 0.1 * (l + rr + u + d - 4.0 * c + power[y * n + x]);
+            }
+        }
+        want = next;
+    }
+    assert_allclose_f32(&out[0], &want, 1e-4, 1e-2, "hotspot");
+}
+
+#[test]
+fn ep_artifact_matches_host_reference() {
+    let Some(r) = runner() else { return };
+    let exe = r.load("ep").unwrap();
+    let (n, v) = (1024usize, 16usize);
+    let mut rng = Rng::new(3);
+    let params = rng.vec_f32(n * v, -1.1, 1.1);
+    let ff = rng.vec_f32(v, -2.0, 2.0);
+    let out = exe.run_f32(&[(&params, &[n, v]), (&ff, &[v])]).unwrap();
+    let want: Vec<f32> = (0..n)
+        .map(|i| (0..v).map(|j| params[i * v + j].powi(j as i32 + 1) * ff[j]).sum())
+        .collect();
+    assert_allclose_f32(&out[0], &want, 1e-3, 1e-4, "ep");
+}
+
+#[test]
+fn hist_artifact_matches_host_reference() {
+    let Some(r) = runner() else { return };
+    let exe = r.load("hist").unwrap();
+    let n = 262144usize;
+    let mut rng = Rng::new(4);
+    let pixels: Vec<f32> = (0..n).map(|_| rng.below(1 << 20) as f32).collect();
+    let out = exe.run_f32(&[(&pixels, &[n])]).unwrap();
+    let mut want = vec![0.0f32; 256];
+    for p in &pixels {
+        want[(*p as i64 % 256) as usize] += 1.0;
+    }
+    assert_allclose_f32(&out[0], &want, 0.0, 0.5, "hist");
+}
+
+#[test]
+fn pr_artifact_matches_host_reference() {
+    let Some(r) = runner() else { return };
+    let exe = r.load("pr").unwrap();
+    let (n, deg, iters) = (8192usize, 8usize, 8usize);
+    let mut rng = Rng::new(5);
+    let rank0 = vec![1.0f32 / n as f32; n];
+    let src: Vec<f32> = (0..n * deg).map(|_| rng.below(n as u64) as f32).collect();
+    let out = exe.run_f32(&[(&rank0, &[n]), (&src, &[n * deg])]).unwrap();
+    let mut want = rank0;
+    for _ in 0..iters {
+        let mut next = vec![0.0f32; n];
+        for (v, nx) in next.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for e in 0..deg {
+                acc += want[src[v * deg + e] as usize] / deg as f32;
+            }
+            *nx = 0.15 + 0.85 * acc;
+        }
+        want = next;
+    }
+    assert_allclose_f32(&out[0], &want, 1e-4, 1e-5, "pr");
+}
+
+/// All remaining artifacts at least load + compile on the PJRT client.
+#[test]
+fn all_artifacts_compile() {
+    let Some(r) = runner() else { return };
+    for name in ["vecadd", "hotspot", "kmeans", "fir", "hist", "ep", "pr", "backprop", "cloverleaf"] {
+        assert!(r.has_artifact(name), "{name} artifact missing");
+        r.load(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+/// Device path vs the CuPBoP CPU path on the same inputs (kmeans):
+/// the central "CUDA baseline vs translated CPU" comparison.
+#[test]
+fn kmeans_device_vs_cpu_path() {
+    let Some(r) = runner() else { return };
+    let exe = r.load("kmeans").unwrap();
+    let (n, f, c) = (8192usize, 34usize, 5usize);
+    let mut rng = Rng::new(0x32EA); // same seed as the rust benchmark
+    let feature_major = rng.vec_f32(f * n, 0.0, 10.0); // [l*n + p]
+    let clusters = rng.vec_f32(c * f, 0.0, 10.0);
+    // device program wants point-major (n, f)
+    let mut points = vec![0.0f32; n * f];
+    for l in 0..f {
+        for p in 0..n {
+            points[p * f + l] = feature_major[l * n + p];
+        }
+    }
+    let out = exe.run_f32(&[(&points, &[n, f]), (&clusters, &[c, f])]).unwrap();
+    // host reference (same as the benchmark's)
+    let want: Vec<f32> = (0..n)
+        .map(|p| {
+            let mut best = -1i32;
+            let mut best_d = f32::MAX;
+            for ci in 0..c {
+                let mut d = 0.0f32;
+                for l in 0..f {
+                    let diff = feature_major[l * n + p] - clusters[ci * f + l];
+                    d += diff * diff;
+                }
+                if d < best_d {
+                    best_d = d;
+                    best = ci as i32;
+                }
+            }
+            best as f32
+        })
+        .collect();
+    assert_allclose_f32(&out[0], &want, 0.0, 0.5, "kmeans assignments");
+}

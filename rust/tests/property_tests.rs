@@ -1,0 +1,310 @@
+//! Property-based tests over coordinator invariants (the offline
+//! environment has no proptest crate; `cupbop::testkit` provides the
+//! seeded-case driver — failures print a replayable seed).
+
+use cupbop::compiler::{compile_kernel, pack, unpack, ArgValue, PackedLayout};
+use cupbop::exec::{LaunchInfo, NativeBlockFn};
+use cupbop::host::barrier::KernelRw;
+use cupbop::host::{insert_implicit_barriers, BufId, HostArg, HostOp, HostProgram, LaunchOp};
+use cupbop::ir::*;
+use cupbop::runtime::{DeviceMemory, GrainPolicy, KernelTask, TaskQueue, ThreadPool};
+use cupbop::testkit::{for_random_cases, Rng};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Invariant: for ANY (grid, pool, grain), every block id is executed
+/// exactly once across the pool.
+#[test]
+fn prop_every_block_executed_exactly_once() {
+    for_random_cases(40, 0xA11, |rng: &mut Rng| {
+        let grid = rng.range_usize(1, 300) as u64;
+        let pool = rng.range_usize(1, 9);
+        let bpf = rng.range_usize(1, 40) as u64;
+        let mem = Arc::new(DeviceMemory::with_capacity(1 << 12));
+        let queue = Arc::new(TaskQueue::new());
+        let hits: Arc<Vec<AtomicU64>> =
+            Arc::new((0..grid).map(|_| AtomicU64::new(0)).collect());
+        let h = hits.clone();
+        let f = NativeBlockFn::new("mark", move |b, _, _, _| {
+            h[b as usize].fetch_add(1, Ordering::SeqCst);
+        });
+        let pool_t = ThreadPool::new(pool, queue.clone(), mem);
+        queue.push(KernelTask {
+            start_routine: f,
+            launch: Arc::new(LaunchInfo {
+                grid: (grid as u32, 1),
+                block: (1, 1),
+                dyn_shmem: 0,
+                packed: Arc::new(vec![]),
+            }),
+            total_blocks: grid,
+            curr_block_id: 0,
+            block_per_fetch: bpf,
+        });
+        queue.sync();
+        drop(pool_t);
+        for (i, hit) in hits.iter().enumerate() {
+            assert_eq!(hit.load(Ordering::SeqCst), 1, "block {i} grid={grid} pool={pool} bpf={bpf}");
+        }
+    });
+}
+
+/// Invariant: grain policies always produce bpf in [1, grid] and the
+/// fetch count × bpf covers the grid.
+#[test]
+fn prop_grain_policy_covers_grid() {
+    for_random_cases(200, 0x62A1, |rng| {
+        let grid = rng.range_usize(1, 1_000_000) as u64;
+        let pool = rng.range_usize(1, 129) as u64;
+        let fixed = rng.range_usize(1, 64) as u64;
+        let auto_est = rng.next_u64() % 1_000_000;
+        let policy = *rng.choose(&[
+            GrainPolicy::Average,
+            GrainPolicy::Aggressive { factor: 2 },
+            GrainPolicy::Fixed(fixed),
+            GrainPolicy::Auto { est_insts_per_block: auto_est },
+        ]);
+        let bpf = policy.block_per_fetch(grid, pool);
+        assert!(bpf >= 1);
+        let fetches = policy.num_fetches(grid, pool);
+        assert!(fetches * bpf >= grid, "{policy:?} grid={grid} pool={pool}");
+        assert!((fetches - 1) * bpf < grid, "no empty fetches");
+        assert!(policy.threads_utilized(grid, pool) <= pool);
+    });
+}
+
+/// Invariant: SPMD→MPMD fission preserves program order per thread and
+/// region order across threads — verified by executing random
+/// barrier-placement kernels and checking the interleaving trace.
+#[test]
+fn prop_fission_region_ordering() {
+    for_random_cases(30, 0xF155, |rng| {
+        let regions = rng.range_usize(2, 6);
+        let block_size = rng.range_usize(2, 33) as u32;
+        // kernel: for each region r: log[r*bs + tid] = counter++ (per
+        // thread), barrier between regions.
+        let mut b = KernelBuilder::new("trace");
+        let log = b.ptr_param("log", Ty::I32);
+        let ctr = b.ptr_param("ctr", Ty::I32);
+        for r in 0..regions {
+            let t = b.assign(tid_x());
+            let seq = b.atomic_rmw(AtomicOp::Add, ctr.clone(), c_i32(1), Ty::I32);
+            b.store_at(
+                log.clone(),
+                add(mul(c_i32(r as i32), bdim_x()), reg(t)),
+                reg(seq),
+                Ty::I32,
+            );
+            if r + 1 < regions {
+                b.sync_threads();
+            }
+        }
+        let k = b.build();
+        let ck = Arc::new(compile_kernel(&k).unwrap());
+
+        let mem = DeviceMemory::with_capacity(1 << 16);
+        let n = regions * block_size as usize;
+        let log_buf = mem.alloc(n * 4);
+        let ctr_buf = mem.alloc(4);
+        let mut args = vec![ArgValue::Ptr(log_buf), ArgValue::Ptr(ctr_buf)];
+        args.extend([ArgValue::I32(0); 6]);
+        let packed = Arc::new(pack(&ck.layout, &args).unwrap());
+        let launch = LaunchInfo { grid: (1, 1), block: (block_size, 1), dyn_shmem: 0, packed };
+        let f = cupbop::exec::CirBlockFn::new(ck);
+        let mut scratch = cupbop::exec::BlockScratch::new();
+        use cupbop::exec::BlockFn;
+        f.run(0, &launch, &mem, &mut scratch);
+
+        let seqs = mem.read_vec_i32(log_buf, n);
+        // every sequence number in region r must be smaller than every
+        // number in region r+1 (all threads finish region r first)
+        for r in 0..regions - 1 {
+            let max_r = (0..block_size as usize)
+                .map(|t| seqs[r * block_size as usize + t])
+                .max()
+                .unwrap();
+            let min_next = (0..block_size as usize)
+                .map(|t| seqs[(r + 1) * block_size as usize + t])
+                .min()
+                .unwrap();
+            assert!(
+                max_r < min_next,
+                "region {r} not fully before {r_next} (bs={block_size}): {seqs:?}",
+                r_next = r + 1
+            );
+        }
+    });
+}
+
+/// Invariant: pack/unpack is the identity for random layouts + args.
+#[test]
+fn prop_pack_unpack_identity() {
+    for_random_cases(100, 0xBAC, |rng| {
+        let nparams = rng.range_usize(1, 12);
+        let mut b = KernelBuilder::new("k");
+        let mut args = Vec::new();
+        for i in 0..nparams {
+            match rng.below(5) {
+                0 => {
+                    let _ = b.ptr_param(&format!("p{i}"), Ty::F32);
+                    args.push(ArgValue::Ptr(rng.next_u64() & 0x7fff_ffff));
+                }
+                1 => {
+                    let _ = b.scalar_param(&format!("p{i}"), Ty::I32);
+                    args.push(ArgValue::I32(rng.next_u64() as i32));
+                }
+                2 => {
+                    let _ = b.scalar_param(&format!("p{i}"), Ty::I64);
+                    args.push(ArgValue::I64(rng.next_u64() as i64));
+                }
+                3 => {
+                    let _ = b.scalar_param(&format!("p{i}"), Ty::F32);
+                    args.push(ArgValue::F32(rng.f32()));
+                }
+                _ => {
+                    let _ = b.scalar_param(&format!("p{i}"), Ty::F64);
+                    args.push(ArgValue::F64(rng.f64()));
+                }
+            }
+        }
+        let layout = PackedLayout::of_kernel(&b.build());
+        let buf = pack(&layout, &args).unwrap();
+        assert_eq!(unpack(&layout, &buf).unwrap(), args);
+    });
+}
+
+/// Invariant: after implicit-barrier insertion, simulating the host
+/// program with an async-launch model never observes a read of a
+/// buffer with writes still in flight; and no barrier is inserted when
+/// no launch is in flight (minimality proxy).
+#[test]
+fn prop_barrier_insertion_sound() {
+    for_random_cases(60, 0xBA44, |rng| {
+        let nbufs = rng.range_usize(2, 6);
+        let nops = rng.range_usize(2, 14);
+        // one synthetic kernel: reads param0, writes param1
+        let rw = vec![KernelRw { reads: vec![0], writes: vec![1] }];
+        let mut ops = Vec::new();
+        for b in 0..nbufs {
+            ops.push(HostOp::Malloc { buf: BufId(b), bytes: 16 });
+        }
+        for _ in 0..nops {
+            match rng.below(3) {
+                0 => {
+                    let r = BufId(rng.range_usize(0, nbufs));
+                    let w = BufId(rng.range_usize(0, nbufs));
+                    ops.push(HostOp::Launch(LaunchOp {
+                        kernel: 0,
+                        grid: (2, 1),
+                        block: (2, 1),
+                        dyn_shmem: 0,
+                        args: vec![HostArg::Buf(r), HostArg::Buf(w)],
+                    }));
+                }
+                1 => ops.push(HostOp::D2H {
+                    dst: cupbop::host::HostArr(0),
+                    src: BufId(rng.range_usize(0, nbufs)),
+                }),
+                _ => ops.push(HostOp::H2D {
+                    dst: BufId(rng.range_usize(0, nbufs)),
+                    src: cupbop::host::HostArr(0),
+                }),
+            }
+        }
+        let prog = HostProgram::new(ops);
+        let cooked = insert_implicit_barriers(&prog, &rw);
+
+        // simulate: track in-flight kernel writes/reads; ImplicitSync /
+        // Sync clears; any conflicting access must be preceded by sync.
+        let mut inflight_w: Vec<BufId> = Vec::new();
+        let mut inflight_r: Vec<BufId> = Vec::new();
+        for op in &cooked.ops {
+            match op {
+                HostOp::Launch(l) => {
+                    let (r, w) = match (&l.args[0], &l.args[1]) {
+                        (HostArg::Buf(r), HostArg::Buf(w)) => (*r, *w),
+                        _ => unreachable!(),
+                    };
+                    assert!(
+                        !inflight_w.contains(&r) && !inflight_w.contains(&w) && !inflight_r.contains(&w),
+                        "launch conflict not protected"
+                    );
+                    inflight_r.push(r);
+                    inflight_w.push(w);
+                }
+                HostOp::D2H { src, .. } => {
+                    assert!(!inflight_w.contains(src), "D2H race not protected");
+                }
+                HostOp::H2D { dst, .. } => {
+                    assert!(
+                        !inflight_w.contains(dst) && !inflight_r.contains(dst),
+                        "H2D race not protected"
+                    );
+                }
+                HostOp::Sync | HostOp::ImplicitSync => {
+                    inflight_w.clear();
+                    inflight_r.clear();
+                }
+                _ => {}
+            }
+        }
+        // minimality proxy: no sync appears before any launch happened
+        let first_launch = cooked.ops.iter().position(|o| matches!(o, HostOp::Launch(_)));
+        if let Some(fl) = first_launch {
+            assert!(
+                !cooked.ops[..fl].iter().any(|o| matches!(o, HostOp::ImplicitSync)),
+                "barrier inserted with nothing in flight"
+            );
+        }
+    });
+}
+
+/// Invariant: randomized CIR arithmetic expressions evaluate the same
+/// through the interpreter as through direct host evaluation.
+#[test]
+fn prop_interpreter_arithmetic_matches_host() {
+    for_random_cases(60, 0xA12F, |rng| {
+        // random chain: acc = f(acc, const) over i32/f64 ops
+        let mut b = KernelBuilder::new("arith");
+        let out = b.ptr_param("out", Ty::F64);
+        let mut host_acc: f64 = 1.5;
+        let acc = b.assign(c_f64(1.5));
+        for _ in 0..rng.range_usize(1, 20) {
+            let v = (rng.next_u64() % 1000) as f64 / 100.0 + 0.01;
+            match rng.below(4) {
+                0 => {
+                    b.set(acc, add(reg(acc), c_f64(v)));
+                    host_acc += v;
+                }
+                1 => {
+                    b.set(acc, sub(reg(acc), c_f64(v)));
+                    host_acc -= v;
+                }
+                2 => {
+                    b.set(acc, mul(reg(acc), c_f64(v)));
+                    host_acc *= v;
+                }
+                _ => {
+                    b.set(acc, div(reg(acc), c_f64(v)));
+                    host_acc /= v;
+                }
+            }
+        }
+        b.store_at(out.clone(), tid_x(), reg(acc), Ty::F64);
+        let ck = Arc::new(compile_kernel(&b.build()).unwrap());
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let buf = mem.alloc(8);
+        let mut args = vec![ArgValue::Ptr(buf)];
+        args.extend([ArgValue::I32(0); 6]);
+        let packed = Arc::new(pack(&ck.layout, &args).unwrap());
+        let launch = LaunchInfo { grid: (1, 1), block: (1, 1), dyn_shmem: 0, packed };
+        use cupbop::exec::BlockFn;
+        let f = cupbop::exec::CirBlockFn::new(ck);
+        f.run(0, &launch, &mem, &mut cupbop::exec::BlockScratch::new());
+        let got = mem.read_f64(buf);
+        assert!(
+            (got - host_acc).abs() <= 1e-9 * host_acc.abs().max(1.0),
+            "got {got}, want {host_acc}"
+        );
+    });
+}

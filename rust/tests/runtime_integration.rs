@@ -1,0 +1,158 @@
+//! Runtime-level integration: async launch semantics, sync ordering,
+//! queue instrumentation, HIP-CPU over-synchronisation, and the Fig 11
+//! launch+sync microstructure.
+
+use cupbop::compiler::{compile_kernel, ArgValue};
+use cupbop::frameworks::{BackendCfg, CupbopRuntime, DpcppRuntime, ExecMode, HipCpuRuntime, KernelVariants, PolicyMode};
+use cupbop::host::{ResolvedLaunch, RuntimeApi};
+use cupbop::ir::*;
+use std::sync::Arc;
+
+fn store_kernel() -> KernelVariants {
+    let mut b = KernelBuilder::new("mark");
+    let p = b.ptr_param("p", Ty::I32);
+    b.store_at(p.clone(), global_tid(), c_i32(1), Ty::I32);
+    KernelVariants::interp_only(Arc::new(compile_kernel(&b.build()).unwrap()))
+}
+
+fn launch(kernel: usize, grid: u32, block: u32, buf: u64) -> ResolvedLaunch {
+    ResolvedLaunch {
+        kernel,
+        grid: (grid, 1),
+        block: (block, 1),
+        dyn_shmem: 0,
+        args: vec![ArgValue::Ptr(buf)],
+    }
+}
+
+/// Launch is asynchronous: sync() is what makes results visible; after
+/// sync all stores are in place.
+#[test]
+fn async_launch_then_sync() {
+    let mut rt = CupbopRuntime::new(
+        vec![store_kernel()],
+        BackendCfg { pool_size: 2, exec: ExecMode::Interpret, ..Default::default() },
+    );
+    let buf = rt.malloc(64 * 4);
+    rt.launch(launch(0, 8, 8, buf));
+    rt.sync();
+    assert_eq!(rt.mem.read_vec_i32(buf, 64), vec![1; 64]);
+}
+
+/// 1000 launches + final sync (Fig 11's workload): the pool persists;
+/// the queue counts exactly 1000 pushes.
+#[test]
+fn thousand_launches_one_pool() {
+    let mut rt = CupbopRuntime::new(
+        vec![store_kernel()],
+        BackendCfg { pool_size: 4, exec: ExecMode::Interpret, ..Default::default() },
+    );
+    let buf = rt.malloc(64 * 4);
+    for _ in 0..1000 {
+        rt.launch(launch(0, 4, 16, buf));
+    }
+    rt.sync();
+    let (pushes, fetches) = rt.queue_counters();
+    assert_eq!(pushes, 1000);
+    assert!(fetches >= 1000, "at least one fetch per kernel");
+    assert_eq!(rt.mem.read_vec_i32(buf, 64), vec![1; 64]);
+}
+
+/// Average policy: fetch count per launch ≤ pool size.
+#[test]
+fn average_fetch_bounded_by_pool() {
+    let mut rt = CupbopRuntime::new(
+        vec![store_kernel()],
+        BackendCfg {
+            pool_size: 4,
+            policy: PolicyMode::Average,
+            exec: ExecMode::Interpret,
+            ..Default::default()
+        },
+    );
+    let buf = rt.malloc(4096 * 4);
+    rt.launch(launch(0, 1024, 4, buf));
+    rt.sync();
+    let (_, fetches) = rt.queue_counters();
+    assert!(fetches <= 4 + 1, "average policy → ≤ pool-size fetches, got {fetches}");
+}
+
+/// Fixed(1): one fetch per block (the HIP-CPU behaviour CuPBoP avoids).
+#[test]
+fn fixed_grain_one_fetch_per_block() {
+    let mut rt = CupbopRuntime::new(
+        vec![store_kernel()],
+        BackendCfg {
+            pool_size: 4,
+            policy: PolicyMode::Fixed(1),
+            exec: ExecMode::Interpret,
+            ..Default::default()
+        },
+    );
+    let buf = rt.malloc(256 * 4);
+    rt.launch(launch(0, 64, 4, buf));
+    rt.sync();
+    let (_, fetches) = rt.queue_counters();
+    assert_eq!(fetches, 64);
+}
+
+/// HIP-CPU model syncs on every memcpy even with nothing in flight.
+#[test]
+fn hipcpu_over_synchronises() {
+    let mut rt = HipCpuRuntime::new(
+        vec![store_kernel()],
+        BackendCfg { pool_size: 2, exec: ExecMode::Interpret, ..Default::default() },
+    );
+    let buf = rt.malloc(1024);
+    for _ in 0..10 {
+        rt.h2d(buf, &[0u8; 16]);
+    }
+    assert_eq!(rt.memcpy_syncs, 10);
+}
+
+/// DPC++ model charges JIT once per kernel, not per launch.
+#[test]
+fn dpcpp_jit_once() {
+    let mut rt = DpcppRuntime::with_jit_cost(
+        vec![store_kernel()],
+        BackendCfg { pool_size: 2, exec: ExecMode::Interpret, ..Default::default() },
+        2_000, // 2ms JIT
+    );
+    let buf = rt.malloc(64 * 4);
+    let t0 = std::time::Instant::now();
+    rt.launch(launch(0, 4, 16, buf));
+    rt.sync();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..5 {
+        rt.launch(launch(0, 4, 16, buf));
+    }
+    rt.sync();
+    let rest = t1.elapsed();
+    assert!(first >= std::time::Duration::from_micros(2_000));
+    assert!(rest < first * 5, "subsequent launches skip JIT");
+}
+
+/// Two dependent kernels through the runtime produce ordered results
+/// when separated by sync (host pass inserts it in real programs).
+#[test]
+fn dependent_kernels_with_sync() {
+    // k0: out[i] = 1 ; k1: out[i] += out[i] (reads what k0 wrote)
+    let mut b = KernelBuilder::new("double");
+    let p = b.ptr_param("p", Ty::I32);
+    let id = b.assign(global_tid());
+    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+    b.store_at(p.clone(), reg(id), add(reg(v), reg(v)), Ty::I32);
+    let double = KernelVariants::interp_only(Arc::new(compile_kernel(&b.build()).unwrap()));
+
+    let mut rt = CupbopRuntime::new(
+        vec![store_kernel(), double],
+        BackendCfg { pool_size: 4, exec: ExecMode::Interpret, ..Default::default() },
+    );
+    let buf = rt.malloc(64 * 4);
+    rt.launch(launch(0, 8, 8, buf));
+    rt.sync(); // implicit barrier the host pass would insert
+    rt.launch(launch(1, 8, 8, buf));
+    rt.sync();
+    assert_eq!(rt.mem.read_vec_i32(buf, 64), vec![2; 64]);
+}
