@@ -1,0 +1,136 @@
+//! Fig 11 extension — mutex task queue vs work-stealing scheduler.
+//!
+//! Two launch-overhead workloads, swept over pool sizes, on both
+//! CuPBoP schedulers (`BackendCfg::sched`):
+//!
+//! * **storm** — 200 asynchronous launches of a 256-block kernel at
+//!   grain 1, then one sync. Every block is a separate fetch, so this
+//!   measures the fetch path under contention: the mutex queue takes
+//!   one global lock per block (51 200 acquisitions), the stealing
+//!   scheduler one `fetch_add` on the launch's chunk cursor.
+//! * **ping** — 300 × (launch + sync), the paper's Fig 11 shape, where
+//!   per-launch queue/wakeup/sync handshake overhead dominates.
+//!
+//! Expected shape: near parity at pool 1 (no contention to remove);
+//! the work-stealing scheduler pulls ahead as the pool grows, and at
+//! ≥ 4 threads the storm's per-launch overhead should be clearly lower.
+
+use cupbop::benchkit;
+use cupbop::compiler::{compile_kernel, ArgValue};
+use cupbop::exec::NativeBlockFn;
+use cupbop::frameworks::{BackendCfg, CupbopRuntime, ExecMode, KernelVariants, PolicyMode, SchedKind};
+use cupbop::host::{ResolvedLaunch, RuntimeApi};
+use cupbop::ir::*;
+use std::sync::Arc;
+
+const STORM_LAUNCHES: usize = 200;
+const STORM_GRID: u32 = 256;
+const PING_LAUNCHES: usize = 300;
+const PING_GRID: u32 = 32;
+
+/// Near-empty kernel: one store per block via a native closure, so the
+/// measurement is scheduling overhead, not kernel work.
+fn tiny_kernel() -> KernelVariants {
+    let mut b = KernelBuilder::new("tiny");
+    let p = b.ptr_param("p", Ty::F32);
+    b.store_at(p.clone(), bid_x(), c_f32(1.0), Ty::F32);
+    let ck = Arc::new(compile_kernel(&b.build()).unwrap());
+    let native = NativeBlockFn::new("tiny_native", |block_id, launch, mem, _| {
+        let ptr = cupbop::benchsuite::util::PackedArgs(&launch.packed).ptr(0);
+        mem.write_f32(ptr + block_id * 4, 1.0);
+    });
+    KernelVariants { ck, native: Some(native), vectorized: None, est_insts_per_block: 4 }
+}
+
+fn launch(buf: u64, grid: u32) -> ResolvedLaunch {
+    ResolvedLaunch {
+        kernel: 0,
+        grid: (grid, 1),
+        block: (1, 1),
+        dyn_shmem: 0,
+        args: vec![ArgValue::Ptr(buf)],
+    }
+}
+
+fn storm(sched: SchedKind, pool: usize) -> std::time::Duration {
+    let cfg = BackendCfg {
+        pool_size: pool,
+        exec: ExecMode::Native,
+        policy: PolicyMode::Fixed(1),
+        sched,
+        mem_cap: 1 << 20,
+        ..Default::default()
+    };
+    // runtime construction (pool spawn, heap zeroing) outside the
+    // measured region: this bench times the launch/fetch path only
+    let mut rt = CupbopRuntime::new(vec![tiny_kernel()], cfg);
+    let buf = rt.malloc(STORM_GRID as usize * 4);
+    benchkit::bench(1, 5, || {
+        for _ in 0..STORM_LAUNCHES {
+            rt.launch(launch(buf, STORM_GRID));
+        }
+        rt.sync();
+    })
+    .mean
+}
+
+fn ping(sched: SchedKind, pool: usize) -> std::time::Duration {
+    let cfg = BackendCfg {
+        pool_size: pool,
+        exec: ExecMode::Native,
+        sched,
+        mem_cap: 1 << 20,
+        ..Default::default()
+    };
+    let mut rt = CupbopRuntime::new(vec![tiny_kernel()], cfg);
+    let buf = rt.malloc(PING_GRID as usize * 4);
+    benchkit::bench(1, 5, || {
+        for _ in 0..PING_LAUNCHES {
+            rt.launch(launch(buf, PING_GRID));
+            rt.sync();
+        }
+    })
+    .mean
+}
+
+fn main() {
+    println!("== fig11_steal: mutex queue vs work-stealing scheduler ==");
+    println!(
+        "storm: {STORM_LAUNCHES} async launches x {STORM_GRID} blocks @ grain 1, one sync"
+    );
+    println!("ping : {PING_LAUNCHES} x (launch {PING_GRID} blocks + sync)\n");
+
+    println!(
+        "{:<6} {:>14} {:>14} {:>8}   {:>14} {:>14} {:>8}",
+        "pool", "storm/mutex", "storm/steal", "speedup", "ping/mutex", "ping/steal", "speedup"
+    );
+    let mut steal_wins_storm_at_4plus = true;
+    for pool in [1usize, 2, 4, 8] {
+        let sm = storm(SchedKind::MutexQueue, pool);
+        let ss = storm(SchedKind::WorkStealing, pool);
+        let pm = ping(SchedKind::MutexQueue, pool);
+        let ps = ping(SchedKind::WorkStealing, pool);
+        if pool >= 4 && ss > sm {
+            steal_wins_storm_at_4plus = false;
+        }
+        println!(
+            "{:<6} {:>14.3?} {:>14.3?} {:>7.2}x   {:>14.3?} {:>14.3?} {:>7.2}x",
+            pool,
+            sm,
+            ss,
+            sm.as_secs_f64() / ss.as_secs_f64().max(1e-12),
+            pm,
+            ps,
+            pm.as_secs_f64() / ps.as_secs_f64().max(1e-12),
+        );
+    }
+    println!(
+        "\nper-launch storm overhead = column / {STORM_LAUNCHES}; \
+         per-launch ping overhead = column / {PING_LAUNCHES}"
+    );
+    if steal_wins_storm_at_4plus {
+        println!("work-stealing beats the mutex queue on the storm at every pool >= 4");
+    } else {
+        println!("WARNING: mutex queue won a storm config at pool >= 4 — investigate");
+    }
+}

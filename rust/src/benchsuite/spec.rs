@@ -184,6 +184,18 @@ pub struct RunOutcome {
 /// Execute `built` on `backend` with `cfg`, end to end (including data
 /// transfer, as Table IV measures), and validate outputs.
 pub fn run_on(built: &BuiltProgram, backend: Backend, cfg: BackendCfg) -> RunOutcome {
+    run_with_arrays(built, backend, cfg).0
+}
+
+/// Like [`run_on`], but also returns the final host arrays so callers
+/// can compare backends against each other (the differential sweep in
+/// `tests/benchsuite_correctness.rs` bit-compares every backend's
+/// arrays against the `Reference` oracle's).
+pub fn run_with_arrays(
+    built: &BuiltProgram,
+    backend: Backend,
+    cfg: BackendCfg,
+) -> (RunOutcome, Vec<Vec<u8>>) {
     let mut arrays = built.arrays.clone();
     let cfg = BackendCfg { mem_cap: built.mem_cap.max(cfg.mem_cap), ..cfg };
     let start = Instant::now();
@@ -220,7 +232,7 @@ pub fn run_on(built: &BuiltProgram, backend: Backend, cfg: BackendCfg) -> RunOut
         Ok(()) => (built.check)(&arrays),
         Err(e) => Err(format!("host exec: {e}")),
     };
-    RunOutcome { elapsed, check, queue_counters: counters }
+    (RunOutcome { elapsed, check, queue_counters: counters }, arrays)
 }
 
 /// Registry of every benchmark across suites (Table II order).

@@ -14,7 +14,8 @@
 use super::{BackendCfg, KernelVariants};
 use crate::exec::LaunchInfo;
 use crate::host::{ResolvedLaunch, RuntimeApi};
-use crate::runtime::{DeviceMemory, GrainPolicy, KernelTask, TaskQueue, ThreadPool};
+use crate::runtime::{DeviceMemory, GrainPolicy, KernelTask, StreamId, TaskQueue, ThreadPool};
+use std::collections::HashSet;
 use std::sync::Arc;
 
 /// One-time JIT cost charged at a kernel's first launch (POCL-style).
@@ -28,6 +29,10 @@ pub struct DpcppRuntime {
     cfg: BackendCfg,
     jitted: Vec<bool>,
     jit_us: u64,
+    next_stream: StreamId,
+    /// explicit streams with a launch in flight since the last sync —
+    /// backs the in-order-queue model in `launch_on`
+    inflight_streams: HashSet<StreamId>,
 }
 
 impl DpcppRuntime {
@@ -40,7 +45,17 @@ impl DpcppRuntime {
         let queue = Arc::new(TaskQueue::new());
         let pool = ThreadPool::new(cfg.pool_size, queue.clone(), mem.clone());
         let n = kernels.len();
-        DpcppRuntime { mem, queue, _pool: pool, kernels, cfg, jitted: vec![false; n], jit_us }
+        DpcppRuntime {
+            mem,
+            queue,
+            _pool: pool,
+            kernels,
+            cfg,
+            jitted: vec![false; n],
+            jit_us,
+            next_stream: 0,
+            inflight_streams: HashSet::new(),
+        }
     }
 
     pub fn queue_counters(&self) -> (u64, u64) {
@@ -84,10 +99,36 @@ impl RuntimeApi for DpcppRuntime {
 
     fn sync(&mut self) {
         self.queue.sync();
+        self.inflight_streams.clear();
     }
 
     fn free(&mut self, addr: u64) {
         self.mem.free(addr);
+    }
+
+    // DPC++ adopts the stream API as SYCL *in-order queues*: a launch
+    // on a stream that already has work in flight must wait for it.
+    // With one shared pool queue the narrowest wait available is a
+    // device sync — conservative but faithful to the single-queue POCL
+    // model. Stream-less `launch()` keeps the SYCL buffer/DAG model
+    // (dependences tracked like CuPBoP's host pass: no blanket sync).
+    fn stream_create(&mut self) -> StreamId {
+        self.next_stream += 1;
+        self.next_stream
+    }
+
+    fn launch_on(&mut self, l: ResolvedLaunch, stream: StreamId) {
+        if stream != 0 && self.inflight_streams.contains(&stream) {
+            self.sync();
+        }
+        self.launch(l);
+        if stream != 0 {
+            self.inflight_streams.insert(stream);
+        }
+    }
+
+    fn stream_sync(&mut self, _stream: StreamId) {
+        self.sync()
     }
 }
 

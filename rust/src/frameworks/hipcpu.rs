@@ -20,7 +20,7 @@ use super::{BackendCfg, KernelVariants};
 use crate::exec::{BlockFn, BlockScratch, LaunchInfo};
 use crate::host::{ResolvedLaunch, RuntimeApi};
 use crate::ir::Stmt;
-use crate::runtime::{DeviceMemory, KernelTask, TaskQueue, ThreadPool};
+use crate::runtime::{DeviceMemory, KernelTask, StreamId, TaskQueue, ThreadPool};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -80,6 +80,7 @@ pub struct HipCpuRuntime {
     /// count of (over-)synchronisations performed before memcpys
     pub memcpy_syncs: u64,
     switch_ns: u64,
+    next_stream: StreamId,
 }
 
 impl HipCpuRuntime {
@@ -91,7 +92,16 @@ impl HipCpuRuntime {
         let mem = Arc::new(DeviceMemory::with_capacity(cfg.mem_cap));
         let queue = Arc::new(TaskQueue::new());
         let pool = ThreadPool::new(cfg.pool_size, queue.clone(), mem.clone());
-        HipCpuRuntime { mem, queue, _pool: pool, kernels, cfg, memcpy_syncs: 0, switch_ns }
+        HipCpuRuntime {
+            mem,
+            queue,
+            _pool: pool,
+            kernels,
+            cfg,
+            memcpy_syncs: 0,
+            switch_ns,
+            next_stream: 0,
+        }
     }
 
     pub fn queue_counters(&self) -> (u64, u64) {
@@ -145,6 +155,25 @@ impl RuntimeApi for HipCpuRuntime {
 
     fn free(&mut self, addr: u64) {
         self.mem.free(addr);
+    }
+
+    // HIP-CPU adopts the stream *API* but not stream concurrency: its
+    // fiber runtime drains the previous kernel before dispatching the
+    // next (see `launch`), so every stream ordering requirement is
+    // trivially satisfied by full serialisation — consistent with its
+    // conservative-synchronisation cost model. Events keep the trait's
+    // full-sync defaults for the same reason.
+    fn stream_create(&mut self) -> StreamId {
+        self.next_stream += 1;
+        self.next_stream
+    }
+
+    fn launch_on(&mut self, l: ResolvedLaunch, _stream: StreamId) {
+        self.launch(l)
+    }
+
+    fn stream_sync(&mut self, _stream: StreamId) {
+        self.sync()
     }
 }
 

@@ -91,6 +91,18 @@ impl KernelVariants {
     }
 }
 
+/// Which scheduler the CuPBoP backend runs launches through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    /// The paper's Figure 5 scheduler: one mutex-protected queue +
+    /// `wake_pool` condvar. Kept for fidelity and as the `fig11_steal`
+    /// baseline.
+    MutexQueue,
+    /// Per-worker deques + global injector + lock-free chunk cursors,
+    /// with CUDA stream/event semantics (`runtime::stealing`).
+    WorkStealing,
+}
+
 /// Common backend configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct BackendCfg {
@@ -99,6 +111,17 @@ pub struct BackendCfg {
     pub exec: ExecMode,
     /// device heap capacity in bytes
     pub mem_cap: usize,
+    /// scheduler for the CuPBoP backend (other backends keep their
+    /// modelled queues regardless)
+    pub sched: SchedKind,
+    /// number of streams stream-less `launch()` calls are round-robined
+    /// across (CLI `--streams N`). 1 = legacy behaviour: launches are
+    /// released immediately and ordering comes from the host pass's
+    /// implicit barriers, which also makes round-robin > 1 safe — every
+    /// cross-launch dependence already has a barrier between the
+    /// launches. Only the work-stealing scheduler distinguishes
+    /// streams.
+    pub streams: usize,
 }
 
 impl Default for BackendCfg {
@@ -108,6 +131,8 @@ impl Default for BackendCfg {
             policy: PolicyMode::Auto,
             exec: ExecMode::Native,
             mem_cap: 256 << 20,
+            sched: SchedKind::WorkStealing,
+            streams: 1,
         }
     }
 }

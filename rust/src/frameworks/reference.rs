@@ -21,6 +21,7 @@ pub struct ReferenceRuntime {
     /// when true, global-memory accesses are appended to `trace`
     tracing: bool,
     pub trace: Vec<TraceRec>,
+    next_stream: crate::runtime::StreamId,
 }
 
 impl ReferenceRuntime {
@@ -32,6 +33,7 @@ impl ReferenceRuntime {
             stats: ExecStats::new(),
             tracing: false,
             trace: Vec::new(),
+            next_stream: 0,
         }
     }
 
@@ -82,6 +84,19 @@ impl RuntimeApi for ReferenceRuntime {
 
     fn free(&mut self, addr: u64) {
         self.mem.free(addr);
+    }
+
+    // Streams on the serial oracle: every launch executes synchronously
+    // in issue order, which is a legal schedule for ANY stream/event
+    // program — same-stream order is issue order, and an event can only
+    // be waited on after the work it records has already run. That is
+    // exactly what makes this backend the differential-testing oracle
+    // for the work-stealing scheduler. Only `stream_create` needs an
+    // override (real handles, so oracle programs can share code with
+    // the concurrent backends); the trait defaults do the rest.
+    fn stream_create(&mut self) -> crate::runtime::StreamId {
+        self.next_stream += 1;
+        self.next_stream
     }
 }
 

@@ -8,6 +8,7 @@
 
 use super::*;
 use crate::compiler::ArgValue;
+use crate::runtime::{EventId, StreamId, DEFAULT_STREAM};
 
 /// A launch with buffers resolved to device addresses and
 /// iteration-dependent scalars materialised.
@@ -23,6 +24,14 @@ pub struct ResolvedLaunch {
 /// The CUDA-runtime functions a backend must provide (Figure 3's
 /// replaceable library). Kernel launch is **asynchronous**; `sync`
 /// blocks until every launched kernel completed.
+///
+/// The stream/event surface has conservative defaults so backends
+/// without a real stream implementation stay correct: `launch_on`
+/// ignores the stream, every narrower wait widens to a full device
+/// sync, and `stream_create` hands back the legacy stream 0 (on which
+/// ordering is the paper's implicit-barrier dataflow model, not CUDA
+/// stream serialisation). The work-stealing CuPBoP backend overrides
+/// all of them with true `cudaStream`/`cudaEvent` semantics.
 pub trait RuntimeApi {
     /// `cudaMalloc` — returns the device address.
     fn malloc(&mut self, bytes: usize) -> u64;
@@ -36,6 +45,38 @@ pub trait RuntimeApi {
     fn sync(&mut self);
     /// `cudaFree`.
     fn free(&mut self, addr: u64);
+
+    /// `cudaStreamCreate`. Backends without streams return stream 0.
+    fn stream_create(&mut self) -> StreamId {
+        DEFAULT_STREAM
+    }
+    /// `cudaStreamDestroy`.
+    fn stream_destroy(&mut self, _stream: StreamId) {}
+    /// Asynchronous launch on a stream: launches on one stream
+    /// serialise, launches on different streams may run concurrently.
+    fn launch_on(&mut self, l: ResolvedLaunch, _stream: StreamId) {
+        self.launch(l)
+    }
+    /// `cudaStreamSynchronize` (default: full device sync).
+    fn stream_sync(&mut self, _stream: StreamId) {
+        self.sync()
+    }
+    /// `cudaEventCreate`.
+    fn event_create(&mut self) -> EventId {
+        0
+    }
+    /// `cudaEventRecord` on a stream (default: no-op — paired with the
+    /// conservative `event_sync`/`stream_wait_event` defaults below).
+    fn event_record(&mut self, _event: EventId, _stream: StreamId) {}
+    /// `cudaEventSynchronize` (default: full device sync).
+    fn event_sync(&mut self, _event: EventId) {
+        self.sync()
+    }
+    /// `cudaStreamWaitEvent` (default: full device sync — a barrier is
+    /// always a sound over-approximation of the event dependence).
+    fn stream_wait_event(&mut self, _stream: StreamId, _event: EventId) {
+        self.sync()
+    }
 }
 
 #[derive(Debug)]

@@ -15,7 +15,7 @@
 //! ```
 
 use cupbop::benchsuite::spec::{self, Backend, Scale};
-use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode};
+use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode, SchedKind};
 use cupbop::report;
 use std::process::ExitCode;
 
@@ -53,6 +53,11 @@ fn print_help() {
            --scale S         tiny|small|paper (default small)\n\
            --pool N          thread-pool size (default: cores)\n\
            --grain G         avg|auto|<N blocks per fetch> (default auto)\n\
+           --sched S         steal|mutex scheduler (default steal: work-\n\
+                             stealing deques + CUDA stream semantics;\n\
+                             mutex: the paper's Figure 5 queue)\n\
+           --streams N       round-robin launches over N CUDA streams\n\
+                             (work-stealing scheduler only; default 1)\n\
            --interpret       run the MPMD interpreter instead of native\n\
          report targets: table1 table2 table6 fig9 fig10"
     );
@@ -95,6 +100,13 @@ fn parse_cfg(args: &[String]) -> BackendCfg {
     };
     if has_flag(args, "--interpret") {
         cfg.exec = ExecMode::Interpret;
+    }
+    cfg.sched = match flag_value(args, "--sched") {
+        Some("mutex") => SchedKind::MutexQueue,
+        _ => SchedKind::WorkStealing,
+    };
+    if let Some(n) = flag_value(args, "--streams").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.streams = n.max(1);
     }
     cfg
 }

@@ -1,17 +1,21 @@
 //! The CuPBoP runtime (paper §IV): device memory, persistent thread
-//! pool, mutex task queue with `wake_pool` condvar, coarse-grained
-//! fetching policies, and the PJRT device path for the CUDA baseline.
+//! pool, the legacy mutex task queue with `wake_pool` condvar, the
+//! work-stealing scheduler with CUDA stream/event semantics,
+//! coarse-grained fetching policies, and the PJRT device path for the
+//! CUDA baseline.
 
 pub mod device;
 pub mod grain;
 pub mod kernel;
 pub mod pjrt;
+pub mod stealing;
 pub mod task_queue;
 pub mod thread_pool;
 
 pub use device::DeviceMemory;
 pub use grain::GrainPolicy;
 pub use kernel::{FetchedBlocks, KernelTask};
+pub use stealing::{EventId, StealScheduler, StreamId, DEFAULT_STREAM};
 pub use task_queue::TaskQueue;
 pub use thread_pool::ThreadPool;
 

@@ -2,6 +2,14 @@
 //! CPU backend: Reference (serial interpreter oracle), CuPBoP (pool +
 //! coarse fetching), HIP-CPU model, DPC++ model — all must produce
 //! outputs that pass each benchmark's validator.
+//!
+//! The `differential` module goes further: one generated test per
+//! (benchmark × backend) runs the benchmark at `Scale::Tiny` and
+//! **bit-compares** every final host array against the serial
+//! `Reference` oracle, falling back to an epsilon comparison only where
+//! bits differ and the bytes decode as floats (reductions whose
+//! accumulation order is schedule-dependent). A guard test keeps the
+//! generated list in lock-step with `spec::all_benchmarks()`.
 
 use cupbop::benchsuite::spec::{self, Backend, Scale};
 use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode};
@@ -129,4 +137,201 @@ fn small_scale_spot_check() {
         );
         out.check.unwrap_or_else(|e| panic!("{name}: {e}"));
     }
+}
+
+// ===================== differential sweep ==========================
+
+/// Relative/absolute tolerances for the epsilon fallback. Tight enough
+/// to catch real divergence at `Scale::Tiny`, loose enough to absorb
+/// reassociated float reductions (atomics, vectorized variants).
+const F32_RTOL: f32 = 1e-3;
+const F32_ATOL: f32 = 1e-5;
+// f64 tolerances are deliberately much tighter than the f32 ones:
+// genuine f64 reduction reorder error is ~n·eps (≲1e-12 relative at
+// Tiny scale), and a loose f64 tolerance would let a real f32
+// divergence hide in the mantissa low bits of a chunk whose high half
+// happens to decode as a plausible f64.
+const F64_RTOL: f64 = 1e-9;
+const F64_ATOL: f64 = 1e-12;
+
+/// The host arrays carry no element-type tags, so the epsilon fallback
+/// guesses float-ness from the bytes. To keep that guess from masking
+/// integer corruption (small ints reinterpret as subnormal f32s whose
+/// difference is far below any atol), a *differing* lane only qualifies
+/// for the epsilon path when both sides decode to a plausible float:
+/// exact zero, NaN on both sides, or a finite magnitude in a range no
+/// benchmark's integer data lands in when reinterpreted.
+fn plausible_f32(x: f32) -> bool {
+    x == 0.0 || (x.is_finite() && (1e-15..=1e15).contains(&x.abs()))
+}
+
+fn plausible_f64(x: f64) -> bool {
+    x == 0.0 || (x.is_finite() && (1e-30..=1e30).contains(&x.abs()))
+}
+
+fn allclose_f32(got: &[u8], want: &[u8]) -> bool {
+    got.chunks_exact(4).zip(want.chunks_exact(4)).all(|(g, w)| {
+        if g == w {
+            return true; // bit-equal lane: no float interpretation needed
+        }
+        let g = f32::from_le_bytes(g.try_into().unwrap());
+        let w = f32::from_le_bytes(w.try_into().unwrap());
+        (g.is_nan() && w.is_nan())
+            || (plausible_f32(g)
+                && plausible_f32(w)
+                && (g - w).abs() <= F32_ATOL + F32_RTOL * w.abs())
+    })
+}
+
+fn allclose_f64(got: &[u8], want: &[u8]) -> bool {
+    got.chunks_exact(8).zip(want.chunks_exact(8)).all(|(g, w)| {
+        if g == w {
+            return true;
+        }
+        let g = f64::from_le_bytes(g.try_into().unwrap());
+        let w = f64::from_le_bytes(w.try_into().unwrap());
+        (g.is_nan() && w.is_nan())
+            || (plausible_f64(g)
+                && plausible_f64(w)
+                && (g - w).abs() <= F64_ATOL + F64_RTOL * w.abs())
+    })
+}
+
+/// Run `name` on `backend` and compare every final host array against
+/// the serial Reference oracle: bitwise first, epsilon as fallback.
+fn diff_one(name: &str, backend: Backend) {
+    let b = spec::by_name(name).unwrap_or_else(|| panic!("unknown benchmark `{name}`"));
+    let built = spec::build_program(&b, Scale::Tiny);
+
+    let (oracle_out, oracle_arrays) =
+        spec::run_with_arrays(&built, Backend::Reference, BackendCfg::default());
+    oracle_out.check.unwrap_or_else(|e| panic!("{name} [oracle]: {e}"));
+
+    // Interpreter on both sides: the oracle always interprets, so this
+    // isolates *scheduling* divergence (ordering, races, stream bugs)
+    // from native-closure numeric differences, which have their own
+    // coverage (`cupbop_native_all_green`, `interpreter_and_native_agree`,
+    // `prop_interp_native_parity_under_stealing`). Bits then only differ
+    // where accumulation order legitimately differs — float atomics —
+    // and the epsilon fallback absorbs exactly that.
+    let cfg = BackendCfg { pool_size: 4, exec: ExecMode::Interpret, ..Default::default() };
+    let (out, arrays) = spec::run_with_arrays(&built, backend, cfg);
+    out.check.unwrap_or_else(|e| panic!("{name} [{}]: {e}", backend.name()));
+
+    assert_eq!(arrays.len(), oracle_arrays.len());
+    for (i, (got, want)) in arrays.iter().zip(&oracle_arrays).enumerate() {
+        if got == want {
+            continue;
+        }
+        assert_eq!(
+            got.len(),
+            want.len(),
+            "{name} [{}]: array {i} length differs from oracle",
+            backend.name()
+        );
+        let close = (got.len() % 4 == 0 && allclose_f32(got, want))
+            || (got.len() % 8 == 0 && allclose_f64(got, want));
+        assert!(
+            close,
+            "{name} [{}]: array {i} differs from the Reference oracle \
+             bitwise AND beyond float tolerance",
+            backend.name()
+        );
+    }
+}
+
+/// Generates `differential::<bench>::{cupbop,hipcpu,dpcpp}` — one test
+/// per (benchmark × backend) — plus a guard asserting the list covers
+/// exactly the implemented benchmarks.
+macro_rules! diff_tests {
+    ($($modname:ident => $bench:literal),+ $(,)?) => {
+        mod differential {
+            use super::*;
+            $(
+                mod $modname {
+                    use super::*;
+                    #[test]
+                    fn cupbop() {
+                        diff_one($bench, Backend::CuPBoP);
+                    }
+                    #[test]
+                    fn hipcpu() {
+                        diff_one($bench, Backend::HipCpu);
+                    }
+                    #[test]
+                    fn dpcpp() {
+                        diff_one($bench, Backend::Dpcpp);
+                    }
+                }
+            )+
+
+            /// The macro list above must equal the set of implemented
+            /// benchmarks — adding a benchmark without extending the
+            /// sweep (or vice versa) fails here.
+            #[test]
+            fn sweep_covers_every_implemented_benchmark() {
+                let listed: std::collections::BTreeSet<&str> =
+                    [$($bench),+].into_iter().collect();
+                let implemented: std::collections::BTreeSet<String> = spec::all_benchmarks()
+                    .into_iter()
+                    .filter(|b| b.build.is_some())
+                    .map(|b| b.name.to_string())
+                    .collect();
+                let listed: std::collections::BTreeSet<String> =
+                    listed.into_iter().map(|s| s.to_string()).collect();
+                assert_eq!(
+                    listed, implemented,
+                    "differential sweep out of sync with spec::all_benchmarks()"
+                );
+            }
+        }
+    };
+}
+
+diff_tests! {
+    // Rodinia (16 implemented rows of Table II)
+    b_tree => "b+tree",
+    backprop => "backprop",
+    bfs => "bfs",
+    cfd => "cfd",
+    gaussian => "gaussian",
+    hotspot => "hotspot",
+    hotspot3d => "hotspot3D",
+    huffman => "huffman",
+    lud => "lud",
+    myocyte => "myocyte",
+    nn => "nn",
+    nw => "nw",
+    particlefilter => "particlefilter",
+    pathfinder => "pathfinder",
+    srad => "srad",
+    streamcluster => "streamcluster",
+    // Hetero-Mark (8 + the Table V/VI ablation variants)
+    aes => "aes",
+    bs => "bs",
+    ep => "ep",
+    fir => "fir",
+    ga => "ga",
+    ga_reordered => "ga-reordered",
+    hist => "hist",
+    hist_no_atomic => "hist-no-atomic",
+    hist_reordered => "hist-reordered",
+    kmeans => "kmeans",
+    pr => "pr",
+    // Crystal (the 13 SSB queries)
+    q11 => "q11",
+    q12 => "q12",
+    q13 => "q13",
+    q21 => "q21",
+    q22 => "q22",
+    q23 => "q23",
+    q31 => "q31",
+    q32 => "q32",
+    q33 => "q33",
+    q34 => "q34",
+    q41 => "q41",
+    q42 => "q42",
+    q43 => "q43",
+    // CloverLeaf
+    cloverleaf => "cloverleaf",
 }

@@ -259,6 +259,163 @@ fn prop_barrier_insertion_sound() {
     });
 }
 
+/// Invariant: for random structured CIR kernels (barriers under
+/// uniform control flow, shared-memory exchange between regions),
+/// `ExecMode::Interpret` and `ExecMode::Native` produce bit-identical
+/// memory states when executed through the CuPBoP runtime on the
+/// work-stealing scheduler — random pool sizes, chained on one stream.
+///
+/// The native closure is built from the same random recipe the CIR is,
+/// mirroring what the MPMD transform would compile to, so a divergence
+/// pins a fission/interpreter bug (or a scheduler ordering bug: the
+/// per-stream chain is order-sensitive).
+#[test]
+fn prop_interp_native_parity_under_stealing() {
+    use cupbop::benchsuite::util::PackedArgs;
+    use cupbop::frameworks::{BackendCfg, CupbopRuntime, ExecMode, KernelVariants};
+    use cupbop::host::{ResolvedLaunch, RuntimeApi};
+
+    #[derive(Clone, Copy)]
+    enum Step {
+        AddC(i32),
+        MulC(i32),
+        /// reverse the block's slice through shared memory (needs the
+        /// barrier: every lane publishes before any lane reads back)
+        RevBlock,
+    }
+
+    fn build_kernel(steps: &[Step], bs: usize) -> cupbop::ir::Kernel {
+        let mut b = KernelBuilder::new("rand_structured");
+        let p = b.ptr_param("p", Ty::I32);
+        let tile = b.shared_array("tile", Ty::I32, bs);
+        for (i, step) in steps.iter().enumerate() {
+            if i > 0 {
+                b.sync_threads();
+            }
+            match step {
+                Step::AddC(c) => {
+                    let id = b.assign(global_tid());
+                    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+                    b.store_at(p.clone(), reg(id), add(reg(v), c_i32(*c)), Ty::I32);
+                }
+                Step::MulC(c) => {
+                    let id = b.assign(global_tid());
+                    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+                    b.store_at(p.clone(), reg(id), mul(reg(v), c_i32(*c)), Ty::I32);
+                }
+                Step::RevBlock => {
+                    let t = b.assign(tid_x());
+                    let base = b.assign(mul(bid_x(), bdim_x()));
+                    b.store_at(
+                        tile.clone(),
+                        reg(t),
+                        at(p.clone(), add(reg(base), reg(t)), Ty::I32),
+                        Ty::I32,
+                    );
+                    b.sync_threads();
+                    let rev = sub(sub(bdim_x(), c_i32(1)), reg(t));
+                    b.store_at(
+                        p.clone(),
+                        add(reg(base), reg(t)),
+                        at(tile.clone(), rev, Ty::I32),
+                        Ty::I32,
+                    );
+                }
+            }
+        }
+        b.build()
+    }
+
+    fn native_fn(steps: Vec<Step>) -> std::sync::Arc<dyn cupbop::exec::BlockFn> {
+        NativeBlockFn::new("rand_structured_native", move |block_id, launch, mem, _| {
+            let a = PackedArgs(&launch.packed);
+            let p = a.ptr(0);
+            let bs = launch.block_size();
+            let base = block_id as usize * bs;
+            let addr = |i: usize| p + (i as u64) * 4;
+            for step in &steps {
+                match step {
+                    Step::AddC(c) => {
+                        for t in 0..bs {
+                            mem.write_i32(addr(base + t), mem.read_i32(addr(base + t)) + c);
+                        }
+                    }
+                    Step::MulC(c) => {
+                        for t in 0..bs {
+                            mem.write_i32(addr(base + t), mem.read_i32(addr(base + t)) * c);
+                        }
+                    }
+                    Step::RevBlock => {
+                        let vals: Vec<i32> =
+                            (0..bs).map(|t| mem.read_i32(addr(base + t))).collect();
+                        for t in 0..bs {
+                            mem.write_i32(addr(base + t), vals[bs - 1 - t]);
+                        }
+                    }
+                }
+            }
+        })
+    }
+
+    for_random_cases(25, 0xF15C, |rng| {
+        let bs = rng.range_usize(2, 33);
+        let grid = rng.range_usize(1, 7) as u32;
+        let n = grid as usize * bs;
+        let nsteps = rng.range_usize(1, 6);
+        let steps: Vec<Step> = (0..nsteps)
+            .map(|_| match rng.below(3) {
+                0 => Step::AddC(rng.range_i64(-20, 20) as i32),
+                1 => Step::MulC(rng.range_i64(1, 4) as i32),
+                _ => Step::RevBlock,
+            })
+            .collect();
+        let nlaunches = rng.range_usize(1, 4);
+        let pool = rng.range_usize(1, 9);
+        let init = rng.vec_i32(n, -10, 10);
+
+        let ck = Arc::new(compile_kernel(&build_kernel(&steps, bs)).unwrap());
+        let mut results = Vec::new();
+        for exec in [ExecMode::Interpret, ExecMode::Native] {
+            let kv = KernelVariants {
+                ck: ck.clone(),
+                native: Some(native_fn(steps.clone())),
+                vectorized: None,
+                est_insts_per_block: 64,
+            };
+            let mut rt = CupbopRuntime::new(
+                vec![kv],
+                BackendCfg { pool_size: pool, exec, mem_cap: 1 << 20, ..Default::default() },
+            );
+            let buf = rt.malloc(n * 4);
+            let bytes: Vec<u8> = init.iter().flat_map(|v| v.to_le_bytes()).collect();
+            rt.h2d(buf, &bytes);
+            // chain the launches on one explicit stream: the scheduler
+            // must serialise them for the result to be deterministic
+            let s = rt.stream_create();
+            for _ in 0..nlaunches {
+                rt.launch_on(
+                    ResolvedLaunch {
+                        kernel: 0,
+                        grid: (grid, 1),
+                        block: (bs as u32, 1),
+                        dyn_shmem: 0,
+                        args: vec![ArgValue::Ptr(buf)],
+                    },
+                    s,
+                );
+            }
+            rt.stream_sync(s);
+            rt.sync();
+            results.push(rt.mem.read_vec_i32(buf, n));
+        }
+        assert_eq!(
+            results[0], results[1],
+            "interp vs native diverged: bs={bs} grid={grid} steps={nsteps} \
+             launches={nlaunches} pool={pool}"
+        );
+    });
+}
+
 /// Invariant: randomized CIR arithmetic expressions evaluate the same
 /// through the interpreter as through direct host evaluation.
 #[test]

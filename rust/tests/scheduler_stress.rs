@@ -1,0 +1,392 @@
+//! Work-stealing scheduler stress tests: randomized kernel mixes over
+//! 1–8 pool threads and 1–4 streams, checking completion counts,
+//! no-deadlock under `sync()`/`stream_sync()`, and deterministic output
+//! equality with the serial `ReferenceRuntime` oracle.
+//!
+//! Every test arms a watchdog that aborts the process if the scheduler
+//! wedges — a deadlock must fail CI, not hang it.
+
+use cupbop::compiler::{compile_kernel, ArgValue};
+use cupbop::frameworks::{
+    BackendCfg, CupbopRuntime, ExecMode, KernelVariants, ReferenceRuntime,
+};
+use cupbop::host::{ResolvedLaunch, RuntimeApi};
+use cupbop::ir::*;
+use cupbop::testkit::{for_random_cases, Rng};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Aborts the process if not disarmed (dropped) within `secs`.
+struct Watchdog {
+    tx: mpsc::Sender<()>,
+}
+
+impl Watchdog {
+    fn arm(name: &'static str, secs: u64) -> Self {
+        let (tx, rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            if rx.recv_timeout(Duration::from_secs(secs)) == Err(mpsc::RecvTimeoutError::Timeout) {
+                eprintln!("watchdog: `{name}` still running after {secs}s — scheduler deadlock?");
+                std::process::abort();
+            }
+        });
+        Watchdog { tx }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        let _ = self.tx.send(());
+    }
+}
+
+// ---- kernels -------------------------------------------------------
+
+/// Every thread atomically bumps `p[0]` — schedule-independent count.
+fn atomic_inc_kernel() -> KernelVariants {
+    let mut b = KernelBuilder::new("atomic_inc");
+    let p = b.ptr_param("p", Ty::I32);
+    b.atomic_rmw_void(AtomicOp::Add, p.clone(), c_i32(1), Ty::I32);
+    KernelVariants::interp_only(Arc::new(compile_kernel(&b.build()).unwrap()))
+}
+
+/// `p[gid] = p[gid] * a + c` — non-commutative across launches, so any
+/// same-stream reordering changes the result.
+fn affine_kernel() -> KernelVariants {
+    let mut b = KernelBuilder::new("affine");
+    let p = b.ptr_param("p", Ty::I32);
+    let a = b.scalar_param("a", Ty::I32);
+    let c = b.scalar_param("c", Ty::I32);
+    let id = b.assign(global_tid());
+    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+    b.store_at(p.clone(), reg(id), add(mul(reg(v), a.clone()), c.clone()), Ty::I32);
+    KernelVariants::interp_only(Arc::new(compile_kernel(&b.build()).unwrap()))
+}
+
+/// `dst[gid] += src[gid]` — the cross-stream handoff payload.
+fn acc_kernel() -> KernelVariants {
+    let mut b = KernelBuilder::new("acc");
+    let s = b.ptr_param("src", Ty::I32);
+    let d = b.ptr_param("dst", Ty::I32);
+    let id = b.assign(global_tid());
+    let v = b.assign(add(at(s.clone(), reg(id), Ty::I32), at(d.clone(), reg(id), Ty::I32)));
+    b.store_at(d.clone(), reg(id), reg(v), Ty::I32);
+    KernelVariants::interp_only(Arc::new(compile_kernel(&b.build()).unwrap()))
+}
+
+fn kernels() -> Vec<KernelVariants> {
+    vec![atomic_inc_kernel(), affine_kernel(), acc_kernel()]
+}
+
+const K_ATOMIC: usize = 0;
+const K_AFFINE: usize = 1;
+const K_ACC: usize = 2;
+
+fn cfg(pool: usize) -> BackendCfg {
+    // small heap: the stress buffers are tiny and runtimes are created
+    // per random case
+    BackendCfg { pool_size: pool, exec: ExecMode::Interpret, mem_cap: 1 << 20, ..Default::default() }
+}
+
+// ---- replayable scripts -------------------------------------------
+//
+// A script references buffers/streams by index so the same launch
+// sequence replays against the work-stealing runtime and the serial
+// oracle, whose device addresses and stream handles differ.
+
+enum SOp {
+    Launch { kernel: usize, grid: u32, block: u32, args: Vec<SArg>, stream: usize },
+    StreamSync(usize),
+    DeviceSync,
+    /// record event `event` on stream `stream`
+    Record { event: usize, stream: usize },
+    /// make stream `stream` wait for event `event`
+    Wait { stream: usize, event: usize },
+}
+
+enum SArg {
+    Buf(usize),
+    I32(i32),
+}
+
+/// Replay a script on any backend: mallocs, uploads, ops, final sync,
+/// then read every buffer back.
+fn replay(
+    rt: &mut dyn RuntimeApi,
+    ops: &[SOp],
+    buf_init: &[Vec<i32>],
+    nstreams: usize,
+    nevents: usize,
+) -> Vec<Vec<i32>> {
+    let bufs: Vec<u64> = buf_init
+        .iter()
+        .map(|init| {
+            let addr = rt.malloc(init.len() * 4);
+            let bytes: Vec<u8> = init.iter().flat_map(|v| v.to_le_bytes()).collect();
+            rt.h2d(addr, &bytes);
+            addr
+        })
+        .collect();
+    let streams: Vec<_> = (0..nstreams).map(|_| rt.stream_create()).collect();
+    let events: Vec<_> = (0..nevents).map(|_| rt.event_create()).collect();
+    for op in ops {
+        match op {
+            SOp::Launch { kernel, grid, block, args, stream } => {
+                let args = args
+                    .iter()
+                    .map(|a| match a {
+                        SArg::Buf(i) => ArgValue::Ptr(bufs[*i]),
+                        SArg::I32(v) => ArgValue::I32(*v),
+                    })
+                    .collect();
+                rt.launch_on(
+                    ResolvedLaunch {
+                        kernel: *kernel,
+                        grid: (*grid, 1),
+                        block: (*block, 1),
+                        dyn_shmem: 0,
+                        args,
+                    },
+                    streams[*stream],
+                );
+            }
+            SOp::StreamSync(s) => rt.stream_sync(streams[*s]),
+            SOp::DeviceSync => rt.sync(),
+            SOp::Record { event, stream } => rt.event_record(events[*event], streams[*stream]),
+            SOp::Wait { stream, event } => rt.stream_wait_event(streams[*stream], events[*event]),
+        }
+    }
+    rt.sync();
+    bufs.iter()
+        .zip(buf_init)
+        .map(|(addr, init)| {
+            let mut bytes = vec![0u8; init.len() * 4];
+            rt.d2h(&mut bytes, *addr);
+            bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        })
+        .collect()
+}
+
+// ---- tests ---------------------------------------------------------
+
+/// Randomized launch mixes across pools and streams: the atomic
+/// completion count is schedule-independent, so it must land exactly,
+/// and every interleaved sync must return (watchdog-checked).
+#[test]
+fn randomized_mix_completion_counts() {
+    let _wd = Watchdog::arm("randomized_mix_completion_counts", 180);
+    for_random_cases(12, 0x57E55, |rng: &mut Rng| {
+        let pool = rng.range_usize(1, 9);
+        let nstreams = rng.range_usize(1, 5);
+        let nlaunches = rng.range_usize(10, 61);
+        let mut ops = Vec::new();
+        let mut expected: i64 = 0;
+        for _ in 0..nlaunches {
+            let grid = rng.range_usize(1, 5) as u32;
+            let block = rng.range_usize(1, 33) as u32;
+            expected += grid as i64 * block as i64;
+            ops.push(SOp::Launch {
+                kernel: K_ATOMIC,
+                grid,
+                block,
+                args: vec![SArg::Buf(0)],
+                stream: rng.range_usize(0, nstreams),
+            });
+            if rng.below(5) == 0 {
+                ops.push(SOp::StreamSync(rng.range_usize(0, nstreams)));
+            }
+            if rng.below(11) == 0 {
+                ops.push(SOp::DeviceSync);
+            }
+        }
+        let mut rt = CupbopRuntime::new(kernels(), cfg(pool));
+        let out = replay(&mut rt, &ops, &[vec![0]], nstreams, 0);
+        assert_eq!(
+            out[0][0] as i64, expected,
+            "pool={pool} streams={nstreams} launches={nlaunches}"
+        );
+        let (pushes, fetches) = rt.queue_counters();
+        assert_eq!(pushes, nlaunches as u64);
+        assert!(fetches >= nlaunches as u64, "every launch needs ≥1 chunk claim");
+    });
+}
+
+/// Per-stream affine chains (order-sensitive!) interleaved across
+/// random streams, bit-compared against the serial oracle. Any
+/// violation of same-stream serialisation changes the polynomial the
+/// chain computes and fails the comparison.
+#[test]
+fn stream_chains_match_serial_oracle() {
+    let _wd = Watchdog::arm("stream_chains_match_serial_oracle", 180);
+    for_random_cases(10, 0xC4A1, |rng: &mut Rng| {
+        let pool = rng.range_usize(1, 9);
+        let nstreams = rng.range_usize(1, 5);
+        let grid = rng.range_usize(1, 5) as u32;
+        let block = rng.range_usize(1, 33) as u32;
+        let n = (grid * block) as usize;
+
+        // stream s owns buffer s; chains stay disjoint
+        let buf_init: Vec<Vec<i32>> =
+            (0..nstreams).map(|_| rng.vec_i32(n, 0, 10)).collect();
+
+        // per-stream chains of random length, emitted in random
+        // interleaving (the global order is what the oracle replays)
+        let mut remaining: Vec<usize> =
+            (0..nstreams).map(|_| rng.range_usize(2, 9)).collect();
+        let mut ops = Vec::new();
+        while remaining.iter().any(|&r| r > 0) {
+            let s = rng.range_usize(0, nstreams);
+            if remaining[s] == 0 {
+                continue;
+            }
+            remaining[s] -= 1;
+            ops.push(SOp::Launch {
+                kernel: K_AFFINE,
+                grid,
+                block,
+                args: vec![
+                    SArg::Buf(s),
+                    SArg::I32(rng.range_i64(1, 4) as i32),
+                    SArg::I32(rng.range_i64(0, 50) as i32),
+                ],
+                stream: s,
+            });
+            if rng.below(7) == 0 {
+                ops.push(SOp::StreamSync(s));
+            }
+        }
+
+        let mut oracle = ReferenceRuntime::new(kernels(), 1 << 20);
+        let want = replay(&mut oracle, &ops, &buf_init, nstreams, 0);
+
+        let mut rt = CupbopRuntime::new(kernels(), cfg(pool));
+        let got = replay(&mut rt, &ops, &buf_init, nstreams, 0);
+
+        assert_eq!(got, want, "pool={pool} streams={nstreams} grid={grid} block={block}");
+    });
+}
+
+/// Cross-stream handoff through events: stream A runs an affine chain
+/// on its buffer, records an event; stream B runs its own chain, waits
+/// on the event, folds A's buffer in, and keeps going. Output must
+/// equal the serial oracle's bit for bit.
+#[test]
+fn event_handoff_matches_serial_oracle() {
+    let _wd = Watchdog::arm("event_handoff_matches_serial_oracle", 180);
+    for_random_cases(10, 0xE7E27, |rng: &mut Rng| {
+        let pool = rng.range_usize(1, 9);
+        let grid = rng.range_usize(1, 5) as u32;
+        let block = rng.range_usize(1, 33) as u32;
+        let n = (grid * block) as usize;
+        let buf_init = vec![rng.vec_i32(n, 0, 10), rng.vec_i32(n, 0, 10)];
+
+        let mut ops = Vec::new();
+        let affine = |rng: &mut Rng, stream: usize| SOp::Launch {
+            kernel: K_AFFINE,
+            grid,
+            block,
+            args: vec![
+                SArg::Buf(stream),
+                SArg::I32(rng.range_i64(1, 4) as i32),
+                SArg::I32(rng.range_i64(0, 50) as i32),
+            ],
+            stream,
+        };
+        // producer chain on stream 0, then record; stream 0 stays
+        // quiet afterwards so the handoff value is well-defined
+        for _ in 0..rng.range_usize(1, 7) {
+            ops.push(affine(rng, 0));
+        }
+        ops.push(SOp::Record { event: 0, stream: 0 });
+        // consumer prefix runs concurrently with the producer (its own
+        // buffer only), then waits, folds in, and continues
+        for _ in 0..rng.range_usize(1, 5) {
+            ops.push(affine(rng, 1));
+        }
+        ops.push(SOp::Wait { stream: 1, event: 0 });
+        ops.push(SOp::Launch {
+            kernel: K_ACC,
+            grid,
+            block,
+            args: vec![SArg::Buf(0), SArg::Buf(1)],
+            stream: 1,
+        });
+        for _ in 0..rng.range_usize(0, 4) {
+            ops.push(affine(rng, 1));
+        }
+
+        let mut oracle = ReferenceRuntime::new(kernels(), 1 << 20);
+        let want = replay(&mut oracle, &ops, &buf_init, 2, 1);
+
+        let mut rt = CupbopRuntime::new(kernels(), cfg(pool));
+        let got = replay(&mut rt, &ops, &buf_init, 2, 1);
+
+        assert_eq!(got, want, "pool={pool} grid={grid} block={block}");
+    });
+}
+
+/// Launch+sync ping-pong (the Fig 11 storm) on the stealing scheduler:
+/// completes, and counters stay coherent.
+#[test]
+fn launch_sync_storm_no_deadlock() {
+    let _wd = Watchdog::arm("launch_sync_storm_no_deadlock", 180);
+    let mut rt = CupbopRuntime::new(kernels(), cfg(8));
+    let buf = rt.malloc(4);
+    rt.h2d(buf, &0i32.to_le_bytes());
+    const N: u64 = 500;
+    for _ in 0..N {
+        rt.launch(ResolvedLaunch {
+            kernel: K_ATOMIC,
+            grid: (2, 1),
+            block: (16, 1),
+            dyn_shmem: 0,
+            args: vec![ArgValue::Ptr(buf)],
+        });
+        rt.sync();
+    }
+    let mut out = [0u8; 4];
+    rt.d2h(&mut out, buf);
+    assert_eq!(i32::from_le_bytes(out), (N * 32) as i32);
+    let (pushes, fetches) = rt.queue_counters();
+    assert_eq!(pushes, N);
+    assert!(fetches >= N);
+}
+
+/// The stress mixes must also pass with stream-less launches round-
+/// robined over streams (`--streams N` path): the atomic workload is
+/// order-independent, so distribution must not change the count.
+#[test]
+fn round_robin_streams_complete() {
+    let _wd = Watchdog::arm("round_robin_streams_complete", 180);
+    for streams in [2usize, 4] {
+        let mut rt = CupbopRuntime::new(
+            kernels(),
+            BackendCfg {
+                pool_size: 4,
+                exec: ExecMode::Interpret,
+                streams,
+                mem_cap: 1 << 20,
+                ..Default::default()
+            },
+        );
+        let buf = rt.malloc(4);
+        rt.h2d(buf, &0i32.to_le_bytes());
+        for _ in 0..100 {
+            rt.launch(ResolvedLaunch {
+                kernel: K_ATOMIC,
+                grid: (2, 1),
+                block: (8, 1),
+                dyn_shmem: 0,
+                args: vec![ArgValue::Ptr(buf)],
+            });
+        }
+        rt.sync();
+        let mut out = [0u8; 4];
+        rt.d2h(&mut out, buf);
+        assert_eq!(i32::from_le_bytes(out), 1600, "streams={streams}");
+    }
+}

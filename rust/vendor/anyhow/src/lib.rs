@@ -1,0 +1,119 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this
+//! path dependency provides the small API surface the repository uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros and the
+//! [`Context`] extension trait. Errors are message strings — no
+//! backtraces, no downcasting. Swap in the real crate by deleting the
+//! `[patch]`-free path dependency in `rust/Cargo.toml` if the registry
+//! ever becomes reachable.
+
+use std::fmt;
+
+/// A message-carrying error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; that is
+// what keeps this blanket `From` coherent (same trick as real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt", args…)` / `anyhow!(expr)` — build an [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `bail!(…)` — early-return an error from a `Result` function.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macros_and_conversions() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        let s = String::from("boom");
+        assert_eq!(anyhow!(s).to_string(), "boom");
+
+        fn io_fail() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "io"))?;
+            Ok(())
+        }
+        assert!(io_fail().is_err());
+
+        let r: std::result::Result<(), &str> = Err("inner");
+        let c = r.context("outer");
+        assert_eq!(c.unwrap_err().to_string(), "outer: inner");
+
+        fn bails() -> Result<u8> {
+            bail!("no {}", "way");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "no way");
+    }
+}
