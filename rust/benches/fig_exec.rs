@@ -1,0 +1,62 @@
+//! fig_exec — execution-engine comparison: tree interpreter vs the
+//! lane-vectorized bytecode VM vs hand-written native closures.
+//!
+//! Every implemented benchmark runs end to end at `Scale::Tiny` on the
+//! serial reference executor (no pool, no scheduler noise) once per
+//! `ExecMode`; the table reports p50 wall-clock per engine and the
+//! per-benchmark bytecode-over-interpreter speedup, with the geomean at
+//! the bottom. Expected shape: bytecode ≥ 2× geomean over the
+//! interpreter (per-instruction lane batching removes the per-thread
+//! tree-dispatch overhead); native (where present) faster still.
+
+use cupbop::benchkit;
+use cupbop::benchsuite::spec::{self, Scale};
+use cupbop::frameworks::{ExecMode, ReferenceRuntime};
+use cupbop::host::run_host_program;
+
+const WARMUP: usize = 1;
+const SAMPLES: usize = 5;
+
+fn main() {
+    println!("fig_exec — exec-engine comparison (Scale::Tiny, serial reference executor)");
+    println!();
+    benchkit::print_row(
+        &["benchmark", "interp p50", "bytecode p50", "native p50", "bc/interp"],
+        &[18, 12, 12, 12, 9],
+    );
+    let mut speedups: Vec<f64> = Vec::new();
+    for b in spec::all_benchmarks() {
+        if b.build.is_none() {
+            continue;
+        }
+        let built = spec::build_program(&b, Scale::Tiny);
+        let mem_cap = built.mem_cap.max(64 << 20);
+        let time = |mode: ExecMode| {
+            benchkit::bench(WARMUP, SAMPLES, || {
+                let mut arrays = built.arrays.clone();
+                let mut rt =
+                    ReferenceRuntime::new(built.variants.clone(), mem_cap).with_exec(mode);
+                run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
+                    .expect("host program runs");
+            })
+        };
+        let ti = time(ExecMode::Interpret);
+        let tb = time(ExecMode::Bytecode);
+        let tn = time(ExecMode::Native);
+        let sp = ti.p50.as_secs_f64() / tb.p50.as_secs_f64().max(1e-12);
+        speedups.push(sp);
+        // `*` marks Native runs where some kernel had no closure and
+        // fell back to the bytecode VM — don't read those as codegen.
+        let fell_back = built.variants.iter().any(|v| v.native.is_none());
+        let c_i = format!("{:.3?}", ti.p50);
+        let c_b = format!("{:.3?}", tb.p50);
+        let c_n = format!("{:.3?}{}", tn.p50, if fell_back { "*" } else { "" });
+        let c_s = format!("{sp:.2}x");
+        benchkit::print_row(&[b.name, &c_i, &c_b, &c_n, &c_s], &[18, 12, 12, 12, 9]);
+    }
+    let geomean =
+        (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len().max(1) as f64).exp();
+    println!();
+    println!("geomean bytecode speedup over interpreter: {geomean:.2}x (n={})", speedups.len());
+    println!("(* = no native closure for >=1 kernel; Native fell back to the bytecode VM)");
+}

@@ -179,6 +179,33 @@ pub struct RunOutcome {
     pub check: Result<(), String>,
     /// (pushes, fetches) when the backend exposes queue counters
     pub queue_counters: Option<(u64, u64)>,
+    /// Resolved execution engine(s), e.g. `"bytecode"` or
+    /// `"bytecode+native"` when kernels fall back differently.
+    pub exec: String,
+}
+
+/// Summarize which engine each kernel of `built` resolves to under
+/// `exec` on `backend` (native → bytecode fallback makes this
+/// per-kernel; DPC++ additionally prefers its vectorized closures).
+pub fn resolved_exec_summary(
+    built: &BuiltProgram,
+    backend: Backend,
+    exec: crate::frameworks::ExecMode,
+) -> String {
+    let modes: std::collections::BTreeSet<&str> = built
+        .variants
+        .iter()
+        .map(|v| match backend {
+            Backend::Dpcpp => v.dpcpp_resolved_exec(exec),
+            _ => v.resolved_exec(exec),
+        })
+        .collect();
+    let v: Vec<&str> = modes.into_iter().collect();
+    if v.is_empty() {
+        exec.name().to_string()
+    } else {
+        v.join("+")
+    }
 }
 
 /// Execute `built` on `backend` with `cfg`, end to end (including data
@@ -222,7 +249,8 @@ pub fn run_with_arrays(
             (r, Some(rt.queue_counters()))
         }
         Backend::Reference => {
-            let mut rt = ReferenceRuntime::new(built.variants.clone(), cfg.mem_cap);
+            let mut rt =
+                ReferenceRuntime::new(built.variants.clone(), cfg.mem_cap).with_exec(cfg.exec);
             let r = run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt);
             (r, None)
         }
@@ -232,7 +260,8 @@ pub fn run_with_arrays(
         Ok(()) => (built.check)(&arrays),
         Err(e) => Err(format!("host exec: {e}")),
     };
-    (RunOutcome { elapsed, check, queue_counters: counters }, arrays)
+    let exec = resolved_exec_summary(built, backend, cfg.exec);
+    (RunOutcome { elapsed, check, queue_counters: counters, exec }, arrays)
 }
 
 /// Registry of every benchmark across suites (Table II order).

@@ -1,0 +1,708 @@
+//! CIR→bytecode lowering — the "codegen" stage of the bytecode
+//! execution engine (`exec::bytecode`).
+//!
+//! Flattens verified MPMD CIR (statement trees with `ThreadLoop`
+//! regions, hoisted uniform control flow and warp nests) into a flat
+//! register-machine bytecode with resolved jump targets. The lowered
+//! program bakes in everything the tree interpreter re-derives per
+//! block:
+//!
+//! * **packed-arg prologue** — `Expr::Param` reads become [`Inst::Param`]
+//!   slots decoded straight from the packed argument object (no per-block
+//!   unpack allocation); the six hidden geometry parameters become
+//!   [`Inst::Geom`] reads filled from the launch descriptor;
+//! * **shared-memory bases** — `SharedBase`/`DynSharedBase` resolve to
+//!   tagged-pointer constants using the kernel's [`MemoryPlan`];
+//! * **register classes** — the block-scope-vs-per-thread split the
+//!   interpreter computes per `CirBlockFn` is captured once in
+//!   [`LoweredProgram::block_scope`] (expression temporaries are
+//!   appended above `MpmdKernel::num_regs` and are always per-thread).
+//!
+//! Control flow comes in two flavours, mirroring the executor's two
+//! scopes:
+//!
+//! * **uniform** (block scope) — real jumps ([`Inst::Jump`],
+//!   [`Inst::JumpIfZero`]), evaluated once per block (lane 0);
+//! * **lane-divergent** (inside a `ThreadLoop` region) — SIMT-style
+//!   mask instructions ([`Inst::IfBegin`]/[`Inst::Else`]/[`Inst::IfEnd`],
+//!   [`Inst::LoopBegin`]/[`Inst::LoopTest`]/[`Inst::LoopEnd`], plus
+//!   `Break`/`Continue`/`Return`) that partition the active-lane set so
+//!   the VM can execute every instruction across all live lanes of the
+//!   region before advancing.
+//!
+//! Stats parity with the interpreter is structural: every source
+//! statement lowers to one [`Inst::Acct`] (counted once at block scope,
+//! once per active lane at thread scope), expression operators carry a
+//! `flops` flag, and the `Lt`/`Add` glue of lowered `For` loops clears
+//! it — exactly the places the interpreter does (not) count.
+
+use super::memory_mapping::MemoryPlan;
+use super::param_pack::{PackedLayout, SlotKind};
+use crate::exec::Value;
+use crate::ir::*;
+use crate::runtime::device::SHARED_TAG;
+use std::collections::HashSet;
+
+/// Virtual register id in the lowered program. Kernel registers keep
+/// their CIR numbering; expression temporaries are appended above
+/// `MpmdKernel::num_regs`.
+pub type RegId = u32;
+
+/// Bytecode instruction index (jump target).
+pub type Pc = u32;
+
+/// One flat-bytecode instruction. Data instructions execute across
+/// every *active lane* (a single lane 0 in uniform sections); control
+/// instructions manipulate the program counter or the active-lane set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Inst {
+    /// dst ← immediate (also carries resolved shared-base pointers)
+    Const { dst: RegId, val: Value },
+    /// dst ← src
+    Mov { dst: RegId, src: RegId },
+    /// dst ← user argument `idx`, decoded from the packed object
+    Param { dst: RegId, idx: u16 },
+    /// dst ← hidden geometry value (ABI order: bidx/bidy/bdimx/bdimy/
+    /// gdimx/gdimy), filled by the VM from the launch descriptor
+    Geom { dst: RegId, which: u8 },
+    /// dst ← thread-level special register (per lane)
+    Special { dst: RegId, sr: Special },
+    /// dst ← a op b; `flops` marks operators the interpreter counts
+    /// (evaluated expressions yes, lowered loop glue no)
+    Bin { op: BinOp, dst: RegId, a: RegId, b: RegId, flops: bool },
+    Un { op: UnOp, dst: RegId, a: RegId, flops: bool },
+    Cast { ty: Ty, dst: RegId, a: RegId },
+    /// dst ← base + idx * sizeof(elem)
+    Index { dst: RegId, base: RegId, idx: RegId, elem: Ty },
+    Load { dst: RegId, ptr: RegId, ty: Ty },
+    Store { ptr: RegId, val: RegId, ty: Ty },
+    AtomicRmw { op: AtomicOp, dst: Option<RegId>, ptr: RegId, val: RegId, ty: Ty },
+    AtomicCas { dst: Option<RegId>, ptr: RegId, cmp: RegId, val: RegId, ty: Ty },
+    /// write this lane's slot of the per-warp exchange buffer
+    StoreExchange { val: RegId },
+    /// dst ← exchange slot `lane` of this lane's warp
+    ReadExchange { dst: RegId, lane: RegId },
+    /// dst ← this lane's warp vote result
+    VoteResult { dst: RegId },
+    /// block-scope reduction of the exchange buffer into the vote slots
+    ReduceVote { kind: VoteKind },
+    /// stats: `instructions += active lanes` (`lanes`) or `+= 1`
+    Acct { lanes: bool },
+    Jump { t: Pc },
+    /// uniform branch: jump when the lane-0 value of `cond` is false
+    JumpIfZero { cond: RegId, t: Pc },
+    /// enter a thread-loop region: activate its non-retired lanes, or
+    /// jump to the matching [`Inst::RegionEnd`] when none remain
+    RegionBegin { warp: Option<RegId>, end: Pc },
+    RegionEnd,
+    /// partition active lanes by `cond`; jump to `else_t` (the matching
+    /// `Else`/`IfEnd`) when no lane takes the then-branch
+    IfBegin { cond: RegId, else_t: Pc },
+    /// switch to the else-partition; jump to `end_t` when it is empty
+    Else { end_t: Pc },
+    IfEnd,
+    LoopBegin,
+    /// drop lanes whose `cond` is false; jump to `exit_t` (the matching
+    /// `LoopEnd`) when none remain
+    LoopTest { cond: RegId, exit_t: Pc },
+    /// re-admit lanes parked by `Continue` (For: before the step
+    /// instructions; While: at the loop head)
+    ContinueMerge,
+    LoopEnd,
+    Break,
+    Continue,
+    Return,
+}
+
+/// A lowered kernel: flat bytecode plus the register-file metadata the
+/// VM needs to execute it.
+#[derive(Debug, Clone)]
+pub struct LoweredProgram {
+    pub insts: Vec<Inst>,
+    /// total registers, including expression temporaries
+    pub num_regs: usize,
+    /// register class bitmap: `true` = block-scope scalar
+    pub block_scope: Vec<bool>,
+    /// packed-argument slot kinds (slot `i` lives at byte `i * 8`)
+    pub arg_slots: Vec<SlotKind>,
+}
+
+/// Block-scope registers = loop variables of hoisted (block-level)
+/// `For` statements, recursively — everything else is per-thread.
+/// Shared with the interpreter so both executors agree on the split.
+pub fn block_scope_regs(body: &[Stmt], out: &mut HashSet<Reg>) {
+    for s in body {
+        match s {
+            Stmt::For { var, body, .. } => {
+                out.insert(*var);
+                block_scope_regs(body, out);
+            }
+            Stmt::While { body, .. } => block_scope_regs(body, out),
+            Stmt::If { then_, else_, .. } => {
+                block_scope_regs(then_, out);
+                block_scope_regs(else_, out);
+            }
+            // do NOT recurse into ThreadLoop — inner control flow is
+            // per-thread
+            _ => {}
+        }
+    }
+}
+
+/// Lower an MPMD kernel to bytecode.
+pub fn lower(
+    mpmd: &MpmdKernel,
+    memory: &MemoryPlan,
+    layout: &PackedLayout,
+    extra_base: usize,
+) -> LoweredProgram {
+    let mut lw = Lower {
+        insts: Vec::new(),
+        temp_base: mpmd.num_regs,
+        next_temp: mpmd.num_regs,
+        max_reg: mpmd.num_regs,
+        memory,
+        extra_base,
+    };
+    for s in &mpmd.body {
+        lw.stmt_block(s);
+    }
+    let num_regs = lw.max_reg as usize;
+    let mut block_scope = vec![false; num_regs];
+    let mut set = HashSet::new();
+    block_scope_regs(&mpmd.body, &mut set);
+    for r in set {
+        block_scope[r.0 as usize] = true;
+    }
+    LoweredProgram { insts: lw.insts, num_regs, block_scope, arg_slots: layout.slots.clone() }
+}
+
+struct Lower<'a> {
+    insts: Vec<Inst>,
+    /// first register id usable as a temporary; bumped when a register
+    /// must stay live across nested statements (loop-carried values)
+    temp_base: u32,
+    next_temp: u32,
+    max_reg: u32,
+    memory: &'a MemoryPlan,
+    extra_base: usize,
+}
+
+impl<'a> Lower<'a> {
+    fn emit(&mut self, i: Inst) -> usize {
+        self.insts.push(i);
+        self.insts.len() - 1
+    }
+
+    fn here(&self) -> Pc {
+        self.insts.len() as Pc
+    }
+
+    fn patch_jump(&mut self, at: usize, target: Pc) {
+        match &mut self.insts[at] {
+            Inst::Jump { t }
+            | Inst::JumpIfZero { t, .. }
+            | Inst::RegionBegin { end: t, .. }
+            | Inst::IfBegin { else_t: t, .. }
+            | Inst::Else { end_t: t }
+            | Inst::LoopTest { exit_t: t, .. } => *t = target,
+            other => panic!("patching non-jump instruction {other:?}"),
+        }
+    }
+
+    /// Scratch register valid within the current statement only; the
+    /// pool rewinds at every statement boundary. Values a lowered
+    /// construct consumes before its next statement boundary (operands,
+    /// branch conditions) live here.
+    fn temp(&mut self) -> RegId {
+        let r = self.next_temp;
+        self.next_temp += 1;
+        if self.max_reg < self.next_temp {
+            self.max_reg = self.next_temp;
+        }
+        r
+    }
+
+    /// Register that must survive nested statements (a lowered loop's
+    /// carried induction value): permanently reserved, never rewound.
+    fn persist(&mut self) -> RegId {
+        let r = self.temp_base;
+        self.temp_base += 1;
+        if self.next_temp < self.temp_base {
+            self.next_temp = self.temp_base;
+        }
+        if self.max_reg < self.temp_base {
+            self.max_reg = self.temp_base;
+        }
+        r
+    }
+
+    fn reset_temps(&mut self) {
+        self.next_temp = self.temp_base;
+    }
+
+    // ---------- block-scope (uniform) statements ----------
+
+    fn stmt_block(&mut self, s: &Stmt) {
+        self.reset_temps();
+        self.emit(Inst::Acct { lanes: false });
+        match s {
+            Stmt::ThreadLoop { body, warp } => {
+                let rb = self.emit(Inst::RegionBegin { warp: warp.map(|r| r.0), end: 0 });
+                for st in body {
+                    self.stmt_thread(st);
+                }
+                let end = self.emit(Inst::RegionEnd);
+                self.patch_jump(rb, end as Pc);
+            }
+            Stmt::If { cond, then_, else_ } => {
+                let c = self.expr(cond);
+                let j = self.emit(Inst::JumpIfZero { cond: c, t: 0 });
+                for st in then_ {
+                    self.stmt_block(st);
+                }
+                if else_.is_empty() {
+                    let end = self.here();
+                    self.patch_jump(j, end);
+                } else {
+                    let j2 = self.emit(Inst::Jump { t: 0 });
+                    let else_at = self.here();
+                    self.patch_jump(j, else_at);
+                    for st in else_ {
+                        self.stmt_block(st);
+                    }
+                    let end = self.here();
+                    self.patch_jump(j2, end);
+                }
+            }
+            Stmt::For { var, start, end, step, body } => {
+                // Mirror the interpreter exactly: the carried value `v`
+                // is distinct from the loop register (which is re-assigned
+                // from `v` at each iteration head), and the `Lt`/`Add`
+                // glue does not count flops.
+                let v = self.persist();
+                let s0 = self.expr(start);
+                self.emit(Inst::Mov { dst: v, src: s0 });
+                let head = self.here();
+                let e = self.expr(end);
+                let c = self.temp();
+                self.emit(Inst::Bin { op: BinOp::Lt, dst: c, a: v, b: e, flops: false });
+                let jexit = self.emit(Inst::JumpIfZero { cond: c, t: 0 });
+                self.emit(Inst::Mov { dst: var.0, src: v });
+                for st in body {
+                    self.stmt_block(st);
+                }
+                self.reset_temps();
+                let stp = self.expr(step);
+                self.emit(Inst::Bin { op: BinOp::Add, dst: v, a: v, b: stp, flops: false });
+                self.emit(Inst::Jump { t: head });
+                let exit = self.here();
+                self.patch_jump(jexit, exit);
+            }
+            Stmt::While { cond, body } => {
+                let head = self.here();
+                let c = self.expr(cond);
+                let jexit = self.emit(Inst::JumpIfZero { cond: c, t: 0 });
+                for st in body {
+                    self.stmt_block(st);
+                }
+                self.emit(Inst::Jump { t: head });
+                let exit = self.here();
+                self.patch_jump(jexit, exit);
+            }
+            Stmt::ReduceVote { kind } => {
+                self.emit(Inst::ReduceVote { kind: *kind });
+            }
+            other => panic!("thread-level stmt at block scope: {other:?}"),
+        }
+    }
+
+    // ---------- thread-scope (lane-divergent) statements ----------
+
+    fn stmt_thread(&mut self, s: &Stmt) {
+        self.reset_temps();
+        self.emit(Inst::Acct { lanes: true });
+        match s {
+            Stmt::Assign { dst, expr } => self.expr_to(expr, dst.0),
+            Stmt::Store { ptr, val, ty } => {
+                let p = self.expr(ptr);
+                let v = self.expr(val);
+                self.emit(Inst::Store { ptr: p, val: v, ty: *ty });
+            }
+            Stmt::If { cond, then_, else_ } => {
+                let c = self.expr(cond);
+                let ib = self.emit(Inst::IfBegin { cond: c, else_t: 0 });
+                for st in then_ {
+                    self.stmt_thread(st);
+                }
+                if else_.is_empty() {
+                    let end = self.emit(Inst::IfEnd);
+                    self.patch_jump(ib, end as Pc);
+                } else {
+                    let el = self.emit(Inst::Else { end_t: 0 });
+                    self.patch_jump(ib, el as Pc);
+                    for st in else_ {
+                        self.stmt_thread(st);
+                    }
+                    let end = self.emit(Inst::IfEnd);
+                    self.patch_jump(el, end as Pc);
+                }
+            }
+            Stmt::For { var, start, end, step, body } => {
+                let v = self.persist();
+                self.expr_to(start, v);
+                self.emit(Inst::LoopBegin);
+                let head = self.here();
+                let e = self.expr(end);
+                let c = self.temp();
+                self.emit(Inst::Bin { op: BinOp::Lt, dst: c, a: v, b: e, flops: false });
+                let lt = self.emit(Inst::LoopTest { cond: c, exit_t: 0 });
+                self.emit(Inst::Mov { dst: var.0, src: v });
+                for st in body {
+                    self.stmt_thread(st);
+                }
+                self.emit(Inst::ContinueMerge);
+                self.reset_temps();
+                let stp = self.expr(step);
+                self.emit(Inst::Bin { op: BinOp::Add, dst: v, a: v, b: stp, flops: false });
+                self.emit(Inst::Jump { t: head });
+                let le = self.emit(Inst::LoopEnd);
+                self.patch_jump(lt, le as Pc);
+            }
+            Stmt::While { cond, body } => {
+                self.emit(Inst::LoopBegin);
+                let head = self.here();
+                self.emit(Inst::ContinueMerge);
+                let c = self.expr(cond);
+                let lt = self.emit(Inst::LoopTest { cond: c, exit_t: 0 });
+                for st in body {
+                    self.stmt_thread(st);
+                }
+                self.emit(Inst::Jump { t: head });
+                let le = self.emit(Inst::LoopEnd);
+                self.patch_jump(lt, le as Pc);
+            }
+            Stmt::Break => {
+                self.emit(Inst::Break);
+            }
+            Stmt::Continue => {
+                self.emit(Inst::Continue);
+            }
+            Stmt::Return => {
+                self.emit(Inst::Return);
+            }
+            Stmt::AtomicRmw { op, ptr, val, ty, dst } => {
+                let p = self.expr(ptr);
+                let v = self.expr(val);
+                self.emit(Inst::AtomicRmw {
+                    op: *op,
+                    dst: dst.map(|r| r.0),
+                    ptr: p,
+                    val: v,
+                    ty: *ty,
+                });
+            }
+            Stmt::AtomicCas { ptr, cmp, val, ty, dst } => {
+                let p = self.expr(ptr);
+                let c = self.expr(cmp);
+                let v = self.expr(val);
+                self.emit(Inst::AtomicCas {
+                    dst: dst.map(|r| r.0),
+                    ptr: p,
+                    cmp: c,
+                    val: v,
+                    ty: *ty,
+                });
+            }
+            Stmt::StoreExchange { val, .. } => {
+                let v = self.expr(val);
+                self.emit(Inst::StoreExchange { val: v });
+            }
+            Stmt::SyncThreads => panic!("__syncthreads survived fission — compiler bug"),
+            other => panic!("block-scope stmt at thread scope: {other:?}"),
+        }
+    }
+
+    // ---------- expressions ----------
+
+    /// Lower `e`, returning the register holding its value. Plain
+    /// register reads are returned in place (no copy).
+    fn expr(&mut self, e: &Expr) -> RegId {
+        if let Expr::Reg(r) = e {
+            return r.0;
+        }
+        let t = self.temp();
+        self.expr_to(e, t);
+        t
+    }
+
+    /// Lower `e` with its result written to `dst`.
+    fn expr_to(&mut self, e: &Expr, dst: RegId) {
+        match e {
+            Expr::Const(c) => {
+                self.emit(Inst::Const { dst, val: Value::of_const(*c) });
+            }
+            Expr::Reg(r) => {
+                self.emit(Inst::Mov { dst, src: r.0 });
+            }
+            Expr::Param(i) => {
+                if *i >= self.extra_base {
+                    self.emit(Inst::Geom { dst, which: (*i - self.extra_base) as u8 });
+                } else {
+                    self.emit(Inst::Param { dst, idx: *i as u16 });
+                }
+            }
+            Expr::Special(sr) => match sr {
+                Special::BlockIdxX => {
+                    self.emit(Inst::Geom { dst, which: 0 });
+                }
+                Special::BlockIdxY => {
+                    self.emit(Inst::Geom { dst, which: 1 });
+                }
+                Special::BlockDimX => {
+                    self.emit(Inst::Geom { dst, which: 2 });
+                }
+                Special::BlockDimY => {
+                    self.emit(Inst::Geom { dst, which: 3 });
+                }
+                Special::GridDimX => {
+                    self.emit(Inst::Geom { dst, which: 4 });
+                }
+                Special::GridDimY => {
+                    self.emit(Inst::Geom { dst, which: 5 });
+                }
+                Special::ThreadIdxX | Special::ThreadIdxY | Special::LaneId | Special::WarpId => {
+                    self.emit(Inst::Special { dst, sr: *sr });
+                }
+            },
+            Expr::SharedBase(i) => {
+                let off = self.memory.slots[*i].offset as u64;
+                self.emit(Inst::Const { dst, val: Value::Ptr(SHARED_TAG | off) });
+            }
+            Expr::DynSharedBase => {
+                let off = self.memory.dyn_offset as u64;
+                self.emit(Inst::Const { dst, val: Value::Ptr(SHARED_TAG | off) });
+            }
+            Expr::Bin(op, a, b) => {
+                let ra = self.expr(a);
+                let rb = self.expr(b);
+                self.emit(Inst::Bin { op: *op, dst, a: ra, b: rb, flops: true });
+            }
+            Expr::Un(op, a) => {
+                let ra = self.expr(a);
+                self.emit(Inst::Un { op: *op, dst, a: ra, flops: true });
+            }
+            Expr::Cast(ty, a) => {
+                let ra = self.expr(a);
+                self.emit(Inst::Cast { ty: *ty, dst, a: ra });
+            }
+            Expr::Load { ptr, ty } => {
+                let rp = self.expr(ptr);
+                self.emit(Inst::Load { dst, ptr: rp, ty: *ty });
+            }
+            Expr::Index { base, idx, elem } => {
+                let rb = self.expr(base);
+                let ri = self.expr(idx);
+                self.emit(Inst::Index { dst, base: rb, idx: ri, elem: *elem });
+            }
+            Expr::Select { cond, then_, else_ } => {
+                // The interpreter evaluates only the taken side per
+                // lane (guarded loads!), so lower a full divergence
+                // diamond rather than evaluating both sides.
+                let rc = self.expr(cond);
+                let ib = self.emit(Inst::IfBegin { cond: rc, else_t: 0 });
+                self.expr_to(then_, dst);
+                let el = self.emit(Inst::Else { end_t: 0 });
+                self.patch_jump(ib, el as Pc);
+                self.expr_to(else_, dst);
+                let end = self.emit(Inst::IfEnd);
+                self.patch_jump(el, end as Pc);
+            }
+            Expr::Exchange { lane, .. } => {
+                let rl = self.expr(lane);
+                self.emit(Inst::ReadExchange { dst, lane: rl });
+            }
+            Expr::VoteResult => {
+                self.emit(Inst::VoteResult { dst });
+            }
+            Expr::WarpShfl { .. } | Expr::WarpVote { .. } => {
+                panic!("warp collective reached lowering — fission must legalize it")
+            }
+            Expr::NvIntrinsic { name, .. } => {
+                panic!("NVIDIA intrinsic `{name}` has no CPU semantics (Table II dwt2d case)")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile_kernel;
+
+    fn lowered_of(k: &Kernel) -> LoweredProgram {
+        compile_kernel(k).unwrap().lowered
+    }
+
+    /// Structural sanity: every begin has a matching end, every jump
+    /// target is in range, every register id is within `num_regs`.
+    fn check_well_formed(p: &LoweredProgram) {
+        let n = p.insts.len() as Pc;
+        let mut regions = 0i32;
+        let mut ifs = 0i32;
+        let mut loops = 0i32;
+        let reg_ok = |r: RegId| (r as usize) < p.num_regs;
+        for inst in &p.insts {
+            match *inst {
+                Inst::RegionBegin { end, warp } => {
+                    regions += 1;
+                    assert!(end < n);
+                    if let Some(w) = warp {
+                        assert!(reg_ok(w));
+                    }
+                }
+                Inst::RegionEnd => regions -= 1,
+                Inst::IfBegin { cond, else_t } => {
+                    ifs += 1;
+                    assert!(else_t < n);
+                    assert!(reg_ok(cond));
+                }
+                Inst::IfEnd => ifs -= 1,
+                Inst::LoopBegin => loops += 1,
+                Inst::LoopEnd => loops -= 1,
+                Inst::Jump { t } | Inst::JumpIfZero { t, .. } => assert!(t <= n),
+                Inst::LoopTest { cond, exit_t } => {
+                    assert!(exit_t < n);
+                    assert!(reg_ok(cond));
+                }
+                Inst::Else { end_t } => assert!(end_t < n),
+                Inst::Bin { dst, a, b, .. } => {
+                    assert!(reg_ok(dst) && reg_ok(a) && reg_ok(b));
+                }
+                Inst::Load { dst, ptr, .. } => assert!(reg_ok(dst) && reg_ok(ptr)),
+                Inst::Store { ptr, val, .. } => assert!(reg_ok(ptr) && reg_ok(val)),
+                _ => {}
+            }
+            assert!(regions >= 0 && ifs >= 0 && loops >= 0);
+        }
+        assert_eq!(regions, 0, "unbalanced regions");
+        assert_eq!(ifs, 0, "unbalanced lane ifs");
+        assert_eq!(loops, 0, "unbalanced lane loops");
+    }
+
+    #[test]
+    fn vecadd_lowers_well_formed() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F32);
+        let bb = b.ptr_param("b", Ty::F32);
+        let c = b.ptr_param("c", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bl| {
+            let s = add(at(a.clone(), reg(id), Ty::F32), at(bb.clone(), reg(id), Ty::F32));
+            bl.store_at(c.clone(), reg(id), s, Ty::F32);
+        });
+        let p = lowered_of(&b.build());
+        check_well_formed(&p);
+        // one region, one lane-if, loads/stores present
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::RegionBegin { .. })));
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::IfBegin { .. })));
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::Load { .. })));
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::Store { .. })));
+        // blockIdx/blockDim rewritten to hidden params → Geom reads
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::Geom { .. })));
+    }
+
+    #[test]
+    fn barrier_kernel_has_two_regions() {
+        let mut b = KernelBuilder::new("dynamicReverse");
+        let d = b.ptr_param("d", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let s = b.dyn_shared(Ty::I32);
+        let t = b.assign(tid_x());
+        let tr = b.assign(sub(sub(n.clone(), reg(t)), c_i32(1)));
+        b.store_at(s.clone(), reg(t), at(d.clone(), reg(t), Ty::I32), Ty::I32);
+        b.sync_threads();
+        b.store_at(d.clone(), reg(t), at(s.clone(), reg(tr), Ty::I32), Ty::I32);
+        let p = lowered_of(&b.build());
+        check_well_formed(&p);
+        let regions =
+            p.insts.iter().filter(|i| matches!(i, Inst::RegionBegin { .. })).count();
+        assert_eq!(regions, 2);
+        // dyn shared base resolved to a tagged-pointer constant
+        assert!(p.insts.iter().any(|i| matches!(
+            i,
+            Inst::Const { val: Value::Ptr(pv), .. } if pv & SHARED_TAG != 0
+        )));
+    }
+
+    #[test]
+    fn hoisted_loop_uses_uniform_jumps() {
+        let mut b = KernelBuilder::new("stencil");
+        let a = b.ptr_param("a", Ty::F32);
+        let iters = b.scalar_param("iters", Ty::I32);
+        let t = b.assign(tid_x());
+        b.for_(c_i32(0), iters, c_i32(1), |b, _i| {
+            b.store_at(a.clone(), reg(t), c_f32(1.0), Ty::F32);
+            b.sync_threads();
+            b.store_at(a.clone(), reg(t), c_f32(2.0), Ty::F32);
+        });
+        let p = lowered_of(&b.build());
+        check_well_formed(&p);
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::JumpIfZero { .. })));
+        // the hoisted For's variable is block-scope
+        assert!(p.block_scope.iter().any(|&x| x));
+    }
+
+    #[test]
+    fn thread_loop_glue_does_not_count_flops() {
+        let mut b = KernelBuilder::new("ramp");
+        let a = b.ptr_param("a", Ty::F32);
+        b.for_(c_i32(0), c_i32(4), c_i32(1), |b, i| {
+            b.store_at(a.clone(), reg(i), c_f32(0.0), Ty::F32);
+        });
+        let p = lowered_of(&b.build());
+        check_well_formed(&p);
+        for inst in &p.insts {
+            if let Inst::Bin { op: BinOp::Lt, flops, .. } = inst {
+                assert!(!flops, "loop glue must not count flops");
+            }
+        }
+    }
+
+    #[test]
+    fn select_lowers_to_diamond() {
+        let mut b = KernelBuilder::new("sel");
+        let a = b.ptr_param("a", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let v = b.assign(select(
+            lt(tid_x(), n.clone()),
+            at(a.clone(), tid_x(), Ty::I32),
+            c_i32(0),
+        ));
+        b.store_at(a.clone(), tid_x(), reg(v), Ty::I32);
+        let p = lowered_of(&b.build());
+        check_well_formed(&p);
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::IfBegin { .. })));
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::Else { .. })));
+    }
+
+    #[test]
+    fn warp_kernel_lowers_exchange_ops() {
+        let mut b = KernelBuilder::new("warp_sum");
+        let d = b.ptr_param("d", Ty::F64);
+        let v0 = b.assign(at(d.clone(), tid_x(), Ty::F64));
+        let sh = b.shfl(ShflKind::Down, reg(v0), c_i32(16));
+        let s = b.assign(add(reg(v0), reg(sh)));
+        b.store_at(d.clone(), tid_x(), reg(s), Ty::F64);
+        let p = lowered_of(&b.build());
+        check_well_formed(&p);
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::StoreExchange { .. })));
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::ReadExchange { .. })));
+        // warp regions carry the warp register
+        assert!(p
+            .insts
+            .iter()
+            .any(|i| matches!(i, Inst::RegionBegin { warp: Some(_), .. })));
+    }
+}

@@ -6,7 +6,9 @@
 //! 2. memory mapping (§III-B1) — shared-slab layout,
 //! 3. extra-variable insertion (§III-B2) — hidden geometry params,
 //! 4. SPMD→MPMD transformation (§III-B3) — loop fission / warp nesting,
-//! 5. parameter packing (§III-C2) — the packed-argument ABI.
+//! 5. parameter packing (§III-C2) — the packed-argument ABI,
+//! 6. bytecode lowering (`lower`) — the flat register-machine program
+//!    the lane-vectorized VM (`exec::bytecode`) executes.
 //!
 //! Host-side transformations (implicit barrier insertion, §III-C1) live
 //! in `crate::host` because they operate on host programs, not kernels.
@@ -14,12 +16,14 @@
 pub mod coverage;
 pub mod extra_vars;
 pub mod fission;
+pub mod lower;
 pub mod memory_mapping;
 pub mod param_pack;
 
 pub use coverage::{coverage, detect_features, judge, Framework, Verdict};
 pub use extra_vars::{insert_extra_vars, ExtraVar, EXTRA_VARS};
 pub use fission::{spmd_to_mpmd, FissionError};
+pub use lower::LoweredProgram;
 pub use memory_mapping::{plan_memory, slab_bytes, MemoryPlan};
 pub use param_pack::{pack, unpack, ArgValue, PackedLayout};
 
@@ -31,6 +35,9 @@ pub struct CompiledKernel {
     pub mpmd: MpmdKernel,
     pub memory: MemoryPlan,
     pub layout: PackedLayout,
+    /// The flat bytecode the lane-vectorized VM executes
+    /// (`ExecMode::Bytecode`, the default engine).
+    pub lowered: LoweredProgram,
     /// Index of the first hidden geometry parameter.
     pub extra_base: usize,
     /// Indices of the *user* pointer params the kernel stores through —
@@ -71,7 +78,8 @@ pub fn compile_kernel(kernel: &Kernel) -> Result<CompiledKernel, CompileError> {
     let ev = insert_extra_vars(kernel.clone());
     let layout = PackedLayout::of_kernel(&ev.kernel);
     let mpmd = spmd_to_mpmd(&ev.kernel).map_err(CompileError::Fission)?;
-    Ok(CompiledKernel { mpmd, memory, layout, extra_base: ev.extra_base, writes, reads })
+    let lowered = lower::lower(&mpmd, &memory, &layout, ev.extra_base);
+    Ok(CompiledKernel { mpmd, memory, layout, lowered, extra_base: ev.extra_base, writes, reads })
 }
 
 /// Which user pointer-params does the kernel read / write (through any

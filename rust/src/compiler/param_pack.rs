@@ -43,6 +43,23 @@ pub enum SlotKind {
     Scalar(Ty),
 }
 
+impl SlotKind {
+    /// Decode one 8-byte slot's bit pattern. Shared by [`unpack`] and
+    /// the bytecode VM's baked-in kernel prologue so the packed ABI's
+    /// decoding lives in exactly one place.
+    pub fn decode(self, bits: u64) -> ArgValue {
+        match self {
+            SlotKind::Ptr => ArgValue::Ptr(bits),
+            SlotKind::Scalar(Ty::I32) | SlotKind::Scalar(Ty::Bool) => {
+                ArgValue::I32(bits as u32 as i32)
+            }
+            SlotKind::Scalar(Ty::I64) => ArgValue::I64(bits as i64),
+            SlotKind::Scalar(Ty::F32) => ArgValue::F32(f32::from_bits(bits as u32)),
+            SlotKind::Scalar(Ty::F64) => ArgValue::F64(f64::from_bits(bits)),
+        }
+    }
+}
+
 /// The packed-argument layout for a kernel signature: one 8-byte slot
 /// per parameter (pointer-sized, as in Listing 5 where every arg is
 /// reached through an `int*`/`int**` indirection).
@@ -121,13 +138,7 @@ pub fn unpack(layout: &PackedLayout, buf: &[u8]) -> Result<Vec<ArgValue>, PackEr
     let mut out = Vec::with_capacity(layout.slots.len());
     for (i, slot) in layout.slots.iter().enumerate() {
         let bits = u64::from_le_bytes(buf[i * 8..i * 8 + 8].try_into().unwrap());
-        out.push(match slot {
-            SlotKind::Ptr => ArgValue::Ptr(bits),
-            SlotKind::Scalar(Ty::I32) | SlotKind::Scalar(Ty::Bool) => ArgValue::I32(bits as u32 as i32),
-            SlotKind::Scalar(Ty::I64) => ArgValue::I64(bits as i64),
-            SlotKind::Scalar(Ty::F32) => ArgValue::F32(f32::from_bits(bits as u32)),
-            SlotKind::Scalar(Ty::F64) => ArgValue::F64(f64::from_bits(bits)),
-        });
+        out.push(slot.decode(bits));
     }
     Ok(out)
 }

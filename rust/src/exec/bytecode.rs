@@ -1,0 +1,1326 @@
+//! The lane-vectorized bytecode VM — the default execution engine.
+//!
+//! Executes the flat register-machine bytecode produced by
+//! `compiler::lower` ([`BytecodeBlockFn`], the third [`BlockFn`] next
+//! to the tree interpreter and the hand-written native closures).
+//!
+//! Where the interpreter dispatches the statement tree once *per
+//! logical thread*, the VM dispatches each instruction once and applies
+//! it across **all active lanes** of the current thread-loop region
+//! through a structure-of-arrays register file (`reg * block_size +
+//! lane`), turning per-thread dispatch overhead into per-instruction
+//! overhead and making the inner lane loops tight and branch-free.
+//! Divergent lane control flow (`if`/`for`/`while`/`break`/`continue`/
+//! `return` inside a region) is handled SIMT-style: the active-lane set
+//! is partitioned by mask instructions and restored from a frame stack.
+//!
+//! **Stats and trace parity** — the VM flushes the same [`ExecStats`]
+//! counters as the interpreter (per-statement `Acct` instructions,
+//! per-lane flop/load/store accounting on exactly the expressions the
+//! interpreter counts) and emits an identical `TraceRec` stream: region
+//! accesses are buffered per lane and flushed in thread order at region
+//! end, reproducing the interpreter's thread-serial trace, so Table V,
+//! the roofline and the cache simulator stay valid on the fast path.
+
+use super::interp::{read_slab, write_slab};
+use super::value::{bin_op, un_op, Value};
+use super::{BlockFn, BlockScratch, ExecStats, LaunchInfo, TraceRec};
+use crate::compiler::lower::{Inst, LoweredProgram, RegId};
+use crate::compiler::{self, ArgValue, CompiledKernel};
+use crate::ir::{AtomicOp, BinOp, Special, Ty, VoteKind};
+use crate::runtime::device::{DeviceMemory, SHARED_TAG};
+use std::sync::Arc;
+
+/// Bytecode-backed block function for a compiled CIR kernel.
+pub struct BytecodeBlockFn {
+    pub ck: Arc<CompiledKernel>,
+    /// stats sink shared with the harness (optional)
+    pub stats: Option<Arc<ExecStats>>,
+}
+
+impl BytecodeBlockFn {
+    pub fn new(ck: Arc<CompiledKernel>) -> Self {
+        BytecodeBlockFn { ck, stats: None }
+    }
+
+    pub fn with_stats(ck: Arc<CompiledKernel>, stats: Arc<ExecStats>) -> Self {
+        BytecodeBlockFn { ck, stats: Some(stats) }
+    }
+}
+
+impl BlockFn for BytecodeBlockFn {
+    fn run(&self, block_id: u64, launch: &LaunchInfo, mem: &DeviceMemory, scratch: &mut BlockScratch) {
+        let ck = &self.ck;
+        let prog = &ck.lowered;
+        let block_size = launch.block_size();
+        let shared_bytes = compiler::slab_bytes(&ck.memory, launch.dyn_shmem);
+        scratch.prepare(prog.num_regs, block_size, shared_bytes);
+        scratch.stats = Default::default();
+        let tracing = scratch.trace.is_some();
+        scratch.vm.prepare(block_size, tracing);
+
+        // Geometry values the interpreter receives through the hidden
+        // params (Listing 7) — here filled straight from the launch.
+        let bx = (block_id % launch.grid.0 as u64) as i32;
+        let by = (block_id / launch.grid.0 as u64) as i32;
+        let geom = [
+            Value::I32(bx),
+            Value::I32(by),
+            Value::I32(launch.block.0 as i32),
+            Value::I32(launch.block.1 as i32),
+            Value::I32(launch.grid.0 as i32),
+            Value::I32(launch.grid.1 as i32),
+        ];
+
+        let mut vm = Vm {
+            prog,
+            mem,
+            launch,
+            scratch: &mut *scratch,
+            geom,
+            block_x: launch.block.0 as usize,
+            block_size,
+            tracing,
+            in_region: false,
+            region_lo: 0,
+            region_hi: 0,
+        };
+        vm.exec();
+
+        if let Some(stats) = &self.stats {
+            stats.flush(&scratch.stats);
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.ck.mpmd.name
+    }
+}
+
+/// Which divergence construct a frame belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FrameKind {
+    If,
+    Loop,
+}
+
+/// One divergence frame: the lane set to restore on exit plus the
+/// construct's parked set (else-partition for `If`, continued lanes for
+/// `Loop`).
+#[derive(Debug)]
+struct Frame {
+    kind: FrameKind,
+    saved: Vec<u32>,
+    other: Vec<u32>,
+}
+
+/// Reusable VM lane bookkeeping, pooled inside [`BlockScratch`] so
+/// per-block execution allocates nothing on the steady state.
+#[derive(Default)]
+pub struct VmScratch {
+    /// currently-active lanes, ascending
+    active: Vec<u32>,
+    /// divergence frame pool; `nframes` are live
+    frames: Vec<Frame>,
+    nframes: usize,
+    /// per-lane scratch bitmap for mask partitions/removals
+    inset: Vec<bool>,
+    /// per-lane trace buffers (sized only when tracing)
+    lane_trace: Vec<Vec<TraceRec>>,
+}
+
+impl VmScratch {
+    pub(crate) fn prepare(&mut self, block_size: usize, tracing: bool) {
+        self.inset.clear();
+        self.inset.resize(block_size.max(1), false);
+        self.active.clear();
+        self.active.push(0);
+        self.nframes = 0;
+        if tracing && self.lane_trace.len() < block_size {
+            self.lane_trace.resize_with(block_size, Vec::new);
+        }
+    }
+
+    fn alloc_frame(&mut self, kind: FrameKind) -> usize {
+        if self.nframes == self.frames.len() {
+            self.frames.push(Frame { kind, saved: Vec::new(), other: Vec::new() });
+        } else {
+            let f = &mut self.frames[self.nframes];
+            f.kind = kind;
+            f.saved.clear();
+            f.other.clear();
+        }
+        self.nframes += 1;
+        self.nframes - 1
+    }
+
+    /// Partition the active set by the per-lane predicate in `inset`:
+    /// active ← true-lanes, frame.other ← false-lanes. Consumes the
+    /// predicate bits (clears them), upholding the invariant that
+    /// `inset` is all-false between instructions — `park_active`/
+    /// `lane_return` retain-passes read bits for *other* frames' lanes
+    /// and would misfire on stale ones.
+    fn if_begin(&mut self) {
+        let fi = self.alloc_frame(FrameKind::If);
+        let (frames, active, inset) = (&mut self.frames, &mut self.active, &mut self.inset);
+        let f = &mut frames[fi];
+        std::mem::swap(&mut f.saved, active);
+        for &l in f.saved.iter() {
+            let c = inset[l as usize];
+            inset[l as usize] = false;
+            if c {
+                active.push(l);
+            } else {
+                f.other.push(l);
+            }
+        }
+    }
+
+    /// Switch to the else-partition of the top `If` frame.
+    fn if_else(&mut self) {
+        let fi = self.nframes - 1;
+        let f = &mut self.frames[fi];
+        self.active.clear();
+        self.active.append(&mut f.other);
+    }
+
+    /// Pop the top frame, restoring the lanes that entered it (minus
+    /// any removed by `Return`, or parked past it by `Break`/`Continue`).
+    fn pop_frame(&mut self) {
+        let fi = self.nframes - 1;
+        let f = &mut self.frames[fi];
+        std::mem::swap(&mut self.active, &mut f.saved);
+        self.nframes -= 1;
+    }
+
+    fn loop_begin(&mut self) {
+        let fi = self.alloc_frame(FrameKind::Loop);
+        let (frames, active) = (&mut self.frames, &self.active);
+        frames[fi].saved.extend_from_slice(active);
+    }
+
+    /// Keep only lanes whose per-lane predicate in `inset` is true,
+    /// consuming (clearing) the predicate bits — see [`Self::if_begin`].
+    fn loop_test(&mut self) {
+        let inset = &mut self.inset;
+        self.active.retain(|&l| {
+            let keep = inset[l as usize];
+            inset[l as usize] = false;
+            keep
+        });
+    }
+
+    /// Re-admit lanes parked by `Continue` on the innermost loop.
+    fn continue_merge(&mut self) {
+        let fi = self.nframes - 1;
+        debug_assert_eq!(self.frames[fi].kind, FrameKind::Loop);
+        let (frames, active) = (&mut self.frames, &mut self.active);
+        let f = &mut frames[fi];
+        if !f.other.is_empty() {
+            active.append(&mut f.other);
+            active.sort_unstable();
+        }
+    }
+
+    /// Remove the active lanes from every frame above (not including)
+    /// the innermost loop frame — or from every frame when no loop is
+    /// open. Returns the innermost loop frame index, if any.
+    fn park_active(&mut self) -> Option<usize> {
+        let n = self.nframes;
+        let mut li = None;
+        for fi in (0..n).rev() {
+            if self.frames[fi].kind == FrameKind::Loop {
+                li = Some(fi);
+                break;
+            }
+        }
+        let start = li.map_or(0, |i| i + 1);
+        for &l in &self.active {
+            self.inset[l as usize] = true;
+        }
+        {
+            let (frames, inset) = (&mut self.frames, &self.inset);
+            for f in frames[start..n].iter_mut() {
+                f.saved.retain(|&l| !inset[l as usize]);
+                f.other.retain(|&l| !inset[l as usize]);
+            }
+        }
+        for &l in &self.active {
+            self.inset[l as usize] = false;
+        }
+        li
+    }
+
+    /// `break`: active lanes skip to just after the innermost loop
+    /// (they stay in its `saved` set and rejoin at `LoopEnd`).
+    fn lane_break(&mut self) {
+        self.park_active();
+        self.active.clear();
+    }
+
+    /// `continue`: active lanes skip to the loop's merge point.
+    fn lane_continue(&mut self) {
+        if let Some(li) = self.park_active() {
+            let (frames, active) = (&mut self.frames, &mut self.active);
+            frames[li].other.extend_from_slice(active);
+        }
+        self.active.clear();
+    }
+
+    /// `return`: active lanes leave every open frame for good (the VM
+    /// additionally marks them retired for later regions).
+    fn lane_return(&mut self) {
+        let n = self.nframes;
+        for &l in &self.active {
+            self.inset[l as usize] = true;
+        }
+        {
+            let (frames, inset) = (&mut self.frames, &self.inset);
+            for f in frames[..n].iter_mut() {
+                f.saved.retain(|&l| !inset[l as usize]);
+                f.other.retain(|&l| !inset[l as usize]);
+            }
+        }
+        for &l in &self.active {
+            self.inset[l as usize] = false;
+        }
+        self.active.clear();
+    }
+
+    fn set_uniform(&mut self) {
+        self.active.clear();
+        self.active.push(0);
+    }
+}
+
+struct Vm<'a> {
+    prog: &'a LoweredProgram,
+    mem: &'a DeviceMemory,
+    launch: &'a LaunchInfo,
+    scratch: &'a mut BlockScratch,
+    /// hidden-geometry values in ABI order
+    geom: [Value; 6],
+    block_x: usize,
+    block_size: usize,
+    tracing: bool,
+    in_region: bool,
+    region_lo: usize,
+    region_hi: usize,
+}
+
+impl<'a> Vm<'a> {
+    // ---------- register file (SoA, reg-major) ----------
+
+    #[inline]
+    fn rd(&self, r: RegId, lane: usize) -> Value {
+        let ri = r as usize;
+        if self.prog.block_scope[ri] {
+            self.scratch.block_regs[ri]
+        } else {
+            self.scratch.thread_regs[ri * self.block_size + lane]
+        }
+    }
+
+    #[inline]
+    fn wr(&mut self, r: RegId, lane: usize, v: Value) {
+        let ri = r as usize;
+        if self.prog.block_scope[ri] {
+            self.scratch.block_regs[ri] = v;
+        } else {
+            self.scratch.thread_regs[ri * self.block_size + lane] = v;
+        }
+    }
+
+    #[inline]
+    fn nactive(&self) -> usize {
+        self.scratch.vm.active.len()
+    }
+
+    #[inline]
+    fn lane(&self, i: usize) -> usize {
+        self.scratch.vm.active[i] as usize
+    }
+
+    /// Decode user argument `idx` from the packed object (the baked-in
+    /// kernel prologue of §III-C2; shares `SlotKind::decode` with the
+    /// interpreter's `unpack` path so the ABI lives in one place).
+    fn arg(&self, idx: usize) -> Value {
+        let off = idx * 8;
+        let bits = u64::from_le_bytes(self.launch.packed[off..off + 8].try_into().unwrap());
+        match self.prog.arg_slots[idx].decode(bits) {
+            ArgValue::Ptr(p) => Value::Ptr(p),
+            ArgValue::I32(v) => Value::I32(v),
+            ArgValue::I64(v) => Value::I64(v),
+            ArgValue::F32(v) => Value::F32(v),
+            ArgValue::F64(v) => Value::F64(v),
+        }
+    }
+
+    // ---------- memory (identical accounting to the interpreter) ----------
+
+    #[inline]
+    fn trace_rec(&mut self, lane: usize, rec: TraceRec) {
+        if self.in_region {
+            self.scratch.vm.lane_trace[lane].push(rec);
+        } else if let Some(t) = &mut self.scratch.trace {
+            t.push(rec);
+        }
+    }
+
+    fn load(&mut self, addr: u64, ty: Ty, lane: usize) -> Value {
+        self.scratch.stats.loads += 1;
+        self.scratch.stats.bytes += ty.size() as u64;
+        if addr & SHARED_TAG != 0 {
+            let off = (addr & !SHARED_TAG) as usize;
+            read_slab(&self.scratch.shared, off, ty)
+        } else {
+            if self.tracing {
+                self.trace_rec(lane, TraceRec { addr, bytes: ty.size() as u8, is_write: false });
+            }
+            match ty {
+                Ty::I32 => Value::I32(self.mem.read_i32(addr)),
+                Ty::I64 => Value::I64(self.mem.read_i64(addr)),
+                Ty::F32 => Value::F32(self.mem.read_f32(addr)),
+                Ty::F64 => Value::F64(self.mem.read_f64(addr)),
+                Ty::Bool => Value::Bool(self.mem.read_u8(addr) != 0),
+            }
+        }
+    }
+
+    fn store(&mut self, addr: u64, v: Value, ty: Ty, lane: usize) {
+        self.scratch.stats.stores += 1;
+        self.scratch.stats.bytes += ty.size() as u64;
+        if addr & SHARED_TAG != 0 {
+            let off = (addr & !SHARED_TAG) as usize;
+            write_slab(&mut self.scratch.shared, off, v, ty);
+        } else {
+            if self.tracing {
+                self.trace_rec(lane, TraceRec { addr, bytes: ty.size() as u8, is_write: true });
+            }
+            match ty {
+                Ty::I32 => self.mem.write_i32(addr, v.as_i32()),
+                Ty::I64 => self.mem.write_i64(addr, v.as_i64()),
+                Ty::F32 => self.mem.write_f32(addr, v.as_f32()),
+                Ty::F64 => self.mem.write_f64(addr, v.as_f64()),
+                Ty::Bool => self.mem.write_u8(addr, v.as_bool() as u8),
+            }
+        }
+    }
+
+    fn atomic(&mut self, op: AtomicOp, addr: u64, v: Value, ty: Ty, lane: usize) -> Value {
+        self.scratch.stats.bytes += 2 * ty.size() as u64;
+        if addr & SHARED_TAG != 0 {
+            // shared-memory atomics: a block executes on one pool
+            // thread, so plain read-modify-write is atomic
+            let off = (addr & !SHARED_TAG) as usize;
+            let old = read_slab(&self.scratch.shared, off, ty);
+            let new = match op {
+                AtomicOp::Add => bin_op(BinOp::Add, old, v),
+                AtomicOp::Sub => bin_op(BinOp::Sub, old, v),
+                AtomicOp::Min => bin_op(BinOp::Min, old, v),
+                AtomicOp::Max => bin_op(BinOp::Max, old, v),
+                AtomicOp::And => bin_op(BinOp::And, old, v),
+                AtomicOp::Or => bin_op(BinOp::Or, old, v),
+                AtomicOp::Xor => bin_op(BinOp::Xor, old, v),
+                AtomicOp::Exch => v,
+            };
+            write_slab(&mut self.scratch.shared, off, new, ty);
+            return old;
+        }
+        if self.tracing {
+            self.trace_rec(lane, TraceRec { addr, bytes: ty.size() as u8, is_write: true });
+        }
+        match ty {
+            Ty::I32 => Value::I32(self.mem.atomic_rmw_i32(op, addr, v.as_i32())),
+            Ty::I64 => Value::I64(self.mem.atomic_rmw_i64(op, addr, v.as_i64())),
+            Ty::F32 => Value::F32(self.mem.atomic_rmw_f32(op, addr, v.as_f32())),
+            Ty::F64 => Value::F64(self.mem.atomic_rmw_f64(op, addr, v.as_f64())),
+            Ty::Bool => panic!("atomic on bool"),
+        }
+    }
+
+    fn atomic_cas(&mut self, addr: u64, cmp: Value, v: Value, ty: Ty, lane: usize) -> Value {
+        self.scratch.stats.bytes += 2 * ty.size() as u64;
+        if addr & SHARED_TAG != 0 {
+            let off = (addr & !SHARED_TAG) as usize;
+            let old = read_slab(&self.scratch.shared, off, ty);
+            if old.as_i64() == cmp.as_i64() {
+                write_slab(&mut self.scratch.shared, off, v, ty);
+            }
+            return old;
+        }
+        if self.tracing {
+            self.trace_rec(lane, TraceRec { addr, bytes: ty.size() as u8, is_write: true });
+        }
+        match ty {
+            Ty::I32 => Value::I32(self.mem.atomic_cas_i32(addr, cmp.as_i32(), v.as_i32())),
+            Ty::I64 => Value::I64(self.mem.atomic_cas_i64(addr, cmp.as_i64(), v.as_i64())),
+            _ => panic!("atomicCAS on {ty:?}"),
+        }
+    }
+
+    fn reduce_votes(&mut self, kind: VoteKind) {
+        let nwarps = (self.block_size + 31) / 32;
+        for w in 0..nwarps {
+            let active = (self.block_size - w * 32).min(32);
+            let slots = &self.scratch.exchange[w * 32..w * 32 + active];
+            let v = match kind {
+                VoteKind::Any => Value::I32(slots.iter().any(|v| v.as_bool()) as i32),
+                VoteKind::All => Value::I32(slots.iter().all(|v| v.as_bool()) as i32),
+                VoteKind::Ballot => {
+                    let mut m = 0i32;
+                    for (i, v) in slots.iter().enumerate() {
+                        if v.as_bool() {
+                            m |= 1 << i;
+                        }
+                    }
+                    Value::I32(m)
+                }
+            };
+            self.scratch.votes[w] = v;
+        }
+    }
+
+    // ---------- the dispatch loop ----------
+
+    fn exec(&mut self) {
+        let n = self.prog.insts.len();
+        let mut pc = 0usize;
+        while pc < n {
+            let inst = self.prog.insts[pc];
+            match inst {
+                Inst::Const { dst, val } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        self.wr(dst, l, val);
+                    }
+                }
+                Inst::Mov { dst, src } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let v = self.rd(src, l);
+                        self.wr(dst, l, v);
+                    }
+                }
+                Inst::Param { dst, idx } => {
+                    let v = self.arg(idx as usize);
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        self.wr(dst, l, v);
+                    }
+                }
+                Inst::Geom { dst, which } => {
+                    let v = self.geom[which as usize];
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        self.wr(dst, l, v);
+                    }
+                }
+                Inst::Special { dst, sr } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let v = match sr {
+                            Special::ThreadIdxX => Value::I32((l % self.block_x) as i32),
+                            Special::ThreadIdxY => Value::I32((l / self.block_x) as i32),
+                            Special::LaneId => Value::I32((l % 32) as i32),
+                            Special::WarpId => Value::I32((l / 32) as i32),
+                            _ => unreachable!("block/grid specials lower to Geom"),
+                        };
+                        self.wr(dst, l, v);
+                    }
+                }
+                Inst::Bin { op, dst, a, b, flops } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let x = self.rd(a, l);
+                        let y = self.rd(b, l);
+                        if flops && (x.is_float() || y.is_float()) {
+                            self.scratch.stats.flops += 1;
+                        }
+                        self.wr(dst, l, bin_op(op, x, y));
+                    }
+                }
+                Inst::Un { op, dst, a, flops } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let x = self.rd(a, l);
+                        if flops && x.is_float() {
+                            self.scratch.stats.flops += 1;
+                        }
+                        self.wr(dst, l, un_op(op, x));
+                    }
+                }
+                Inst::Cast { ty, dst, a } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let v = self.rd(a, l).cast(ty);
+                        self.wr(dst, l, v);
+                    }
+                }
+                Inst::Index { dst, base, idx, elem } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let b = self.rd(base, l).as_ptr();
+                        let ix = self.rd(idx, l).as_i64();
+                        let p = b.wrapping_add((ix * elem.size() as i64) as u64);
+                        self.wr(dst, l, Value::Ptr(p));
+                    }
+                }
+                Inst::Load { dst, ptr, ty } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let addr = self.rd(ptr, l).as_ptr();
+                        let v = self.load(addr, ty, l);
+                        self.wr(dst, l, v);
+                    }
+                }
+                Inst::Store { ptr, val, ty } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let addr = self.rd(ptr, l).as_ptr();
+                        let v = self.rd(val, l);
+                        self.store(addr, v, ty, l);
+                    }
+                }
+                Inst::AtomicRmw { op, dst, ptr, val, ty } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let addr = self.rd(ptr, l).as_ptr();
+                        let v = self.rd(val, l);
+                        let old = self.atomic(op, addr, v, ty, l);
+                        if let Some(d) = dst {
+                            self.wr(d, l, old);
+                        }
+                    }
+                }
+                Inst::AtomicCas { dst, ptr, cmp, val, ty } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let addr = self.rd(ptr, l).as_ptr();
+                        let c = self.rd(cmp, l);
+                        let v = self.rd(val, l);
+                        let old = self.atomic_cas(addr, c, v, ty, l);
+                        if let Some(d) = dst {
+                            self.wr(d, l, old);
+                        }
+                    }
+                }
+                Inst::StoreExchange { val } => {
+                    // slot (l/32)*32 + l%32 is just l: the buffer is
+                    // indexed directly by lane id
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let v = self.rd(val, l);
+                        self.scratch.exchange[l] = v;
+                    }
+                }
+                Inst::ReadExchange { dst, lane } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let warp = l / 32;
+                        let src = self.rd(lane, l).as_i64();
+                        // CUDA: out-of-range source lane → own value
+                        let src = if (0..32).contains(&src) { src as usize } else { l % 32 };
+                        let v = self.scratch.exchange[warp * 32 + src];
+                        self.wr(dst, l, v);
+                    }
+                }
+                Inst::VoteResult { dst } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let v = self.scratch.votes[l / 32];
+                        self.wr(dst, l, v);
+                    }
+                }
+                Inst::ReduceVote { kind } => self.reduce_votes(kind),
+                Inst::Acct { lanes } => {
+                    self.scratch.stats.instructions +=
+                        if lanes { self.nactive() as u64 } else { 1 };
+                }
+                Inst::Jump { t } => {
+                    pc = t as usize;
+                    continue;
+                }
+                Inst::JumpIfZero { cond, t } => {
+                    if !self.rd(cond, 0).as_bool() {
+                        pc = t as usize;
+                        continue;
+                    }
+                }
+                Inst::RegionBegin { warp, end } => {
+                    let (lo, hi) = match warp {
+                        None => (0usize, self.block_size),
+                        Some(w) => {
+                            let wv = self.rd(w, 0).as_i64() as usize;
+                            (wv * 32, ((wv + 1) * 32).min(self.block_size))
+                        }
+                    };
+                    self.in_region = true;
+                    self.region_lo = lo;
+                    self.region_hi = hi;
+                    let scratch = &mut *self.scratch;
+                    scratch.vm.active.clear();
+                    for l in lo..hi {
+                        if !scratch.retired[l] {
+                            scratch.vm.active.push(l as u32);
+                        }
+                    }
+                    if scratch.vm.active.is_empty() {
+                        pc = end as usize;
+                        continue;
+                    }
+                }
+                Inst::RegionEnd => {
+                    if self.tracing {
+                        let (lo, hi) = (self.region_lo, self.region_hi);
+                        let scratch = &mut *self.scratch;
+                        if let Some(t) = scratch.trace.as_mut() {
+                            for l in lo..hi {
+                                t.append(&mut scratch.vm.lane_trace[l]);
+                            }
+                        }
+                    }
+                    self.in_region = false;
+                    self.scratch.vm.set_uniform();
+                }
+                Inst::IfBegin { cond, else_t } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let c = self.rd(cond, l).as_bool();
+                        self.scratch.vm.inset[l] = c;
+                    }
+                    self.scratch.vm.if_begin();
+                    if self.scratch.vm.active.is_empty() {
+                        pc = else_t as usize;
+                        continue;
+                    }
+                }
+                Inst::Else { end_t } => {
+                    self.scratch.vm.if_else();
+                    if self.scratch.vm.active.is_empty() {
+                        pc = end_t as usize;
+                        continue;
+                    }
+                }
+                Inst::IfEnd => self.scratch.vm.pop_frame(),
+                Inst::LoopBegin => self.scratch.vm.loop_begin(),
+                Inst::LoopTest { cond, exit_t } => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let c = self.rd(cond, l).as_bool();
+                        self.scratch.vm.inset[l] = c;
+                    }
+                    self.scratch.vm.loop_test();
+                    if self.scratch.vm.active.is_empty() {
+                        pc = exit_t as usize;
+                        continue;
+                    }
+                }
+                Inst::ContinueMerge => self.scratch.vm.continue_merge(),
+                Inst::LoopEnd => self.scratch.vm.pop_frame(),
+                Inst::Break => self.scratch.vm.lane_break(),
+                Inst::Continue => self.scratch.vm.lane_continue(),
+                Inst::Return => {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        self.scratch.retired[l] = true;
+                    }
+                    self.scratch.vm.lane_return();
+                }
+            }
+            pc += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile_kernel, pack, ArgValue};
+    use crate::exec::CirBlockFn;
+    use crate::ir::*;
+    use crate::testkit::for_random_cases;
+
+    /// Compile `k` and run all its blocks serially through the VM.
+    fn run_kernel_bc(
+        k: &Kernel,
+        grid: (u32, u32),
+        block: (u32, u32),
+        dyn_shmem: usize,
+        user_args: &[ArgValue],
+        mem: &DeviceMemory,
+    ) {
+        let ck = Arc::new(compile_kernel(k).unwrap());
+        let mut all = user_args.to_vec();
+        for _ in 0..6 {
+            all.push(ArgValue::I32(0));
+        }
+        let packed = Arc::new(pack(&ck.layout, &all).unwrap());
+        let launch = LaunchInfo { grid, block, dyn_shmem, packed };
+        let f = BytecodeBlockFn::new(ck);
+        let mut scratch = BlockScratch::new();
+        for b in 0..launch.total_blocks() {
+            f.run(b, &launch, mem, &mut scratch);
+        }
+    }
+
+    /// Run `k` through both engines on identical fresh memories and
+    /// assert final memory images and ExecStats agree bit-for-bit.
+    fn assert_engines_agree(
+        k: &Kernel,
+        grid: (u32, u32),
+        block: (u32, u32),
+        dyn_shmem: usize,
+        mem_init: &[i32],
+        user_args_of: impl Fn(u64) -> Vec<ArgValue>,
+    ) {
+        let ck = Arc::new(compile_kernel(k).unwrap());
+        let mut images = Vec::new();
+        let mut snaps = Vec::new();
+        for engine in 0..2 {
+            let mem = DeviceMemory::with_capacity(1 << 16);
+            let buf = mem.alloc(mem_init.len().max(1) * 4);
+            mem.write_slice_i32(buf, mem_init);
+            let mut args = user_args_of(buf);
+            args.extend([ArgValue::I32(0); 6]);
+            let packed = Arc::new(pack(&ck.layout, &args).unwrap());
+            let launch = LaunchInfo { grid, block, dyn_shmem, packed };
+            let stats = ExecStats::new();
+            let f: Box<dyn BlockFn> = if engine == 0 {
+                Box::new(CirBlockFn::with_stats(ck.clone(), stats.clone()))
+            } else {
+                Box::new(BytecodeBlockFn::with_stats(ck.clone(), stats.clone()))
+            };
+            let mut scratch = BlockScratch::new();
+            for b in 0..launch.total_blocks() {
+                f.run(b, &launch, &mem, &mut scratch);
+            }
+            images.push(mem.read_vec_i32(buf, mem_init.len()));
+            snaps.push(stats.snapshot());
+        }
+        assert_eq!(images[0], images[1], "memory image diverged");
+        assert_eq!(snaps[0], snaps[1], "ExecStats diverged");
+    }
+
+    /// Listing 1 vecAdd through the VM, multi-block.
+    #[test]
+    fn vecadd_end_to_end() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let pa = b.ptr_param("a", Ty::F64);
+        let pb = b.ptr_param("b", Ty::F64);
+        let pc = b.ptr_param("c", Ty::F64);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bld| {
+            let sum = add(at(pa.clone(), reg(id), Ty::F64), at(pb.clone(), reg(id), Ty::F64));
+            bld.store_at(pc.clone(), reg(id), sum, Ty::F64);
+        });
+        let k = b.build();
+
+        let mem = DeviceMemory::with_capacity(1 << 16);
+        let n = 100usize;
+        let a = mem.alloc(n * 8);
+        let bb = mem.alloc(n * 8);
+        let c = mem.alloc(n * 8);
+        mem.write_slice_f64(a, &(0..n).map(|i| i as f64).collect::<Vec<_>>());
+        mem.write_slice_f64(bb, &(0..n).map(|i| 2.0 * i as f64).collect::<Vec<_>>());
+        run_kernel_bc(
+            &k,
+            (4, 1),
+            (32, 1),
+            0,
+            &[ArgValue::Ptr(a), ArgValue::Ptr(bb), ArgValue::Ptr(c), ArgValue::I32(n as i32)],
+            &mem,
+        );
+        let out = mem.read_vec_f64(c, n);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 3.0 * i as f64, "c[{i}]");
+        }
+    }
+
+    /// Listing 3 dynamicReverse: dynamic shared memory + barrier → two
+    /// regions that must fully fission.
+    #[test]
+    fn dynamic_reverse_with_barrier() {
+        let mut b = KernelBuilder::new("dynamicReverse");
+        let d = b.ptr_param("d", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let s = b.dyn_shared(Ty::I32);
+        let t = b.assign(tid_x());
+        let tr = b.assign(sub(sub(n.clone(), reg(t)), c_i32(1)));
+        b.store_at(s.clone(), reg(t), at(d.clone(), reg(t), Ty::I32), Ty::I32);
+        b.sync_threads();
+        b.store_at(d.clone(), reg(t), at(s.clone(), reg(tr), Ty::I32), Ty::I32);
+        let k = b.build();
+
+        let mem = DeviceMemory::with_capacity(1 << 14);
+        let n = 64usize;
+        let d_buf = mem.alloc(n * 4);
+        mem.write_slice_i32(d_buf, &(0..n as i32).collect::<Vec<_>>());
+        run_kernel_bc(
+            &k,
+            (1, 1),
+            (n as u32, 1),
+            n * 4,
+            &[ArgValue::Ptr(d_buf), ArgValue::I32(n as i32)],
+            &mem,
+        );
+        let out = mem.read_vec_i32(d_buf, n);
+        let want: Vec<i32> = (0..n as i32).rev().collect();
+        assert_eq!(out, want);
+    }
+
+    /// Warp shuffle tree-reduction over one warp (COX nested regions).
+    #[test]
+    fn warp_shuffle_reduction() {
+        let mut b = KernelBuilder::new("warp_sum");
+        let d = b.ptr_param("d", Ty::F64);
+        let out = b.ptr_param("out", Ty::F64);
+        let v0 = b.assign(at(d.clone(), tid_x(), Ty::F64));
+        let mut v = v0;
+        for off in [16, 8, 4, 2, 1] {
+            let sh = b.shfl(ShflKind::Down, reg(v), c_i32(off));
+            v = b.assign(add(reg(v), reg(sh)));
+        }
+        b.if_(eq(tid_x(), c_i32(0)), |bld| {
+            bld.store_at(out.clone(), c_i32(0), reg(v), Ty::F64);
+        });
+        let k = b.build();
+
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(32 * 8);
+        let o_buf = mem.alloc(8);
+        mem.write_slice_f64(d_buf, &(0..32).map(|i| i as f64).collect::<Vec<_>>());
+        run_kernel_bc(&k, (1, 1), (32, 1), 0, &[ArgValue::Ptr(d_buf), ArgValue::Ptr(o_buf)], &mem);
+        assert_eq!(mem.read_f64(o_buf), (0..32).sum::<i32>() as f64);
+    }
+
+    /// Warp vote through ReduceVote/VoteResult.
+    #[test]
+    fn warp_vote_all() {
+        let mut b = KernelBuilder::new("vote_all");
+        let d = b.ptr_param("d", Ty::I32);
+        let o = b.ptr_param("o", Ty::I32);
+        let v = b.vote(VoteKind::All, gt(at(d.clone(), tid_x(), Ty::I32), c_i32(0)));
+        b.store_at(o.clone(), tid_x(), reg(v), Ty::I32);
+        let k = b.build();
+
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(32 * 4);
+        let o_buf = mem.alloc(32 * 4);
+        let mut input = vec![1i32; 32];
+        input[7] = 0;
+        mem.write_slice_i32(d_buf, &input);
+        run_kernel_bc(&k, (1, 1), (32, 1), 0, &[ArgValue::Ptr(d_buf), ArgValue::Ptr(o_buf)], &mem);
+        assert!(mem.read_vec_i32(o_buf, 32).iter().all(|&x| x == 0));
+        mem.write_slice_i32(d_buf, &vec![2i32; 32]);
+        run_kernel_bc(&k, (1, 1), (32, 1), 0, &[ArgValue::Ptr(d_buf), ArgValue::Ptr(o_buf)], &mem);
+        assert!(mem.read_vec_i32(o_buf, 32).iter().all(|&x| x == 1));
+    }
+
+    /// Early `return` retires a lane across fission regions.
+    #[test]
+    fn early_return_respected_across_regions() {
+        let mut b = KernelBuilder::new("ret");
+        let d = b.ptr_param("d", Ty::I32);
+        b.if_(ge(tid_x(), c_i32(8)), |bld| bld.ret());
+        b.store_at(d.clone(), tid_x(), c_i32(1), Ty::I32);
+        b.sync_threads();
+        b.store_at(d.clone(), add(tid_x(), c_i32(16)), c_i32(2), Ty::I32);
+        let k = b.build();
+
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(64 * 4);
+        run_kernel_bc(&k, (1, 1), (16, 1), 0, &[ArgValue::Ptr(d_buf)], &mem);
+        let out = mem.read_vec_i32(d_buf, 32);
+        for i in 0..8 {
+            assert_eq!(out[i], 1, "thread {i} ran region 1");
+            assert_eq!(out[i + 16], 2, "thread {i} ran region 2");
+        }
+        for i in 8..16 {
+            assert_eq!(out[i], 0, "thread {i} retired before region 1 store");
+            assert_eq!(out[i + 16], 0, "retired lane must not run region 2");
+        }
+    }
+
+    /// Divergent thread-level loops with break and continue.
+    #[test]
+    fn divergent_break_and_continue() {
+        // per thread t: acc = 0; for j in 0..t { if j % 2 == 1 continue;
+        // if j >= 6 break; acc += j } ; d[t] = acc
+        let mut b = KernelBuilder::new("divloop");
+        let d = b.ptr_param("d", Ty::I32);
+        let t = b.assign(tid_x());
+        let acc = b.assign(c_i32(0));
+        b.for_(c_i32(0), reg(t), c_i32(1), |bb, j| {
+            bb.if_(eq(rem(reg(j), c_i32(2)), c_i32(1)), |bb2| bb2.cont());
+            bb.if_(ge(reg(j), c_i32(6)), |bb2| bb2.brk());
+            bb.set(acc, add(reg(acc), reg(j)));
+        });
+        b.store_at(d.clone(), reg(t), reg(acc), Ty::I32);
+        let k = b.build();
+
+        let bs = 12usize;
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(bs * 4);
+        run_kernel_bc(&k, (1, 1), (bs as u32, 1), 0, &[ArgValue::Ptr(d_buf)], &mem);
+        let out = mem.read_vec_i32(d_buf, bs);
+        for t in 0..bs {
+            let mut want = 0i32;
+            for j in 0..t as i32 {
+                if j % 2 == 1 {
+                    continue;
+                }
+                if j >= 6 {
+                    break;
+                }
+                want += j;
+            }
+            assert_eq!(out[t], want, "thread {t}");
+        }
+    }
+
+    /// Regression: `break` in an *else* branch must not disturb the
+    /// then-lanes (stale IfBegin predicate bits once made
+    /// `park_active` strip them from the enclosing If frame, so they
+    /// skipped the rest of the loop).
+    #[test]
+    fn break_in_else_branch_keeps_then_lanes() {
+        // for j in 0..3 { if t % 2 == 0 { d[t] += 1 } else { break } }
+        let mut b = KernelBuilder::new("elsebreak");
+        let d = b.ptr_param("d", Ty::I32);
+        let t = b.assign(tid_x());
+        b.for_(c_i32(0), c_i32(3), c_i32(1), |bb, _j| {
+            bb.if_else(
+                eq(rem(reg(t), c_i32(2)), c_i32(0)),
+                |bb2| {
+                    let v = bb2.assign(at(d.clone(), reg(t), Ty::I32));
+                    bb2.store_at(d.clone(), reg(t), add(reg(v), c_i32(1)), Ty::I32);
+                },
+                |bb2| bb2.brk(),
+            );
+        });
+        let k = b.build();
+
+        let bs = 8usize;
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(bs * 4);
+        run_kernel_bc(&k, (1, 1), (bs as u32, 1), 0, &[ArgValue::Ptr(d_buf)], &mem);
+        let out = mem.read_vec_i32(d_buf, bs);
+        for t in 0..bs {
+            let want = if t % 2 == 0 { 3 } else { 0 };
+            assert_eq!(out[t], want, "thread {t}");
+        }
+        // and bit-parity with the interpreter, stats included
+        assert_engines_agree(&k, (1, 1), (bs as u32, 1), 0, &[0; 8], |buf| {
+            vec![ArgValue::Ptr(buf)]
+        });
+    }
+
+    /// Regression sibling: `return` in an else branch must not retire
+    /// or deactivate the then-lanes for the rest of the region.
+    #[test]
+    fn return_in_else_branch_keeps_then_lanes() {
+        // if t % 2 == 0 { d[t] += 1 } else { return } ; d[t] += 10
+        let mut b = KernelBuilder::new("elsereturn");
+        let d = b.ptr_param("d", Ty::I32);
+        let t = b.assign(tid_x());
+        b.if_else(
+            eq(rem(reg(t), c_i32(2)), c_i32(0)),
+            |bb| {
+                let v = bb.assign(at(d.clone(), reg(t), Ty::I32));
+                bb.store_at(d.clone(), reg(t), add(reg(v), c_i32(1)), Ty::I32);
+            },
+            |bb| bb.ret(),
+        );
+        let v = b.assign(at(d.clone(), reg(t), Ty::I32));
+        b.store_at(d.clone(), reg(t), add(reg(v), c_i32(10)), Ty::I32);
+        let k = b.build();
+
+        let bs = 8usize;
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(bs * 4);
+        run_kernel_bc(&k, (1, 1), (bs as u32, 1), 0, &[ArgValue::Ptr(d_buf)], &mem);
+        let out = mem.read_vec_i32(d_buf, bs);
+        for t in 0..bs {
+            let want = if t % 2 == 0 { 11 } else { 0 };
+            assert_eq!(out[t], want, "thread {t}");
+        }
+        assert_engines_agree(&k, (1, 1), (bs as u32, 1), 0, &[0; 8], |buf| {
+            vec![ArgValue::Ptr(buf)]
+        });
+    }
+
+    /// `Select` must evaluate only the taken side per lane (the
+    /// interpreter is lazy; the VM lowers a diamond): count the loads.
+    #[test]
+    fn select_is_lazy_per_lane() {
+        let mut b = KernelBuilder::new("sel");
+        let d = b.ptr_param("d", Ty::I32);
+        let o = b.ptr_param("o", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let v = b.assign(select(
+            lt(tid_x(), n.clone()),
+            at(d.clone(), tid_x(), Ty::I32),
+            c_i32(-1),
+        ));
+        b.store_at(o.clone(), tid_x(), reg(v), Ty::I32);
+        let k = b.build();
+        let ck = Arc::new(compile_kernel(&k).unwrap());
+
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(8 * 4);
+        let o_buf = mem.alloc(32 * 4);
+        mem.write_slice_i32(d_buf, &(10..18).collect::<Vec<_>>());
+        let mut args =
+            vec![ArgValue::Ptr(d_buf), ArgValue::Ptr(o_buf), ArgValue::I32(8)];
+        args.extend([ArgValue::I32(0); 6]);
+        let packed = Arc::new(pack(&ck.layout, &args).unwrap());
+        let launch = LaunchInfo { grid: (1, 1), block: (32, 1), dyn_shmem: 0, packed };
+        let stats = ExecStats::new();
+        let f = BytecodeBlockFn::with_stats(ck, stats.clone());
+        f.run(0, &launch, &mem, &mut BlockScratch::new());
+        let out = mem.read_vec_i32(o_buf, 32);
+        for t in 0..32 {
+            assert_eq!(out[t], if t < 8 { 10 + t as i32 } else { -1 });
+        }
+        // exactly 8 guarded loads + 32 stores — no speculative loads
+        assert_eq!(stats.snapshot().loads, 8);
+        assert_eq!(stats.snapshot().stores, 32);
+    }
+
+    /// i64 atomic RMW (satellite regression: interp panicked here).
+    #[test]
+    fn i64_atomic_rmw() {
+        let mut b = KernelBuilder::new("count64");
+        let d = b.ptr_param("d", Ty::I64);
+        b.atomic_rmw_void(
+            AtomicOp::Add,
+            d.clone(),
+            cast(Ty::I64, add(tid_x(), c_i32(1))),
+            Ty::I64,
+        );
+        b.atomic_rmw_void(
+            AtomicOp::Max,
+            index(d.clone(), c_i32(1), Ty::I64),
+            cast(Ty::I64, tid_x()),
+            Ty::I64,
+        );
+        let k = b.build();
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(2 * 8);
+        run_kernel_bc(&k, (2, 1), (16, 1), 0, &[ArgValue::Ptr(d_buf)], &mem);
+        // sum over both blocks of (t+1) for t in 0..16
+        assert_eq!(mem.read_i64(d_buf), 2 * (1..=16).sum::<i64>());
+        assert_eq!(mem.read_i64(d_buf + 8), 15);
+    }
+
+    /// Stats and flops parity with the interpreter on a divergent
+    /// float kernel.
+    #[test]
+    fn stats_match_interpreter_on_divergence() {
+        let mut b = KernelBuilder::new("divstats");
+        let d = b.ptr_param("d", Ty::I32);
+        let t = b.assign(tid_x());
+        b.for_(c_i32(0), rem(reg(t), c_i32(5)), c_i32(1), |bb, _j| {
+            let v = bb.assign(at(d.clone(), reg(t), Ty::I32));
+            bb.store_at(d.clone(), reg(t), add(reg(v), c_i32(1)), Ty::I32);
+        });
+        let k = b.build();
+        let init: Vec<i32> = (0..24).collect();
+        assert_engines_agree(&k, (2, 1), (12, 1), 0, &init, |buf| vec![ArgValue::Ptr(buf)]);
+    }
+
+    /// The VM must emit the same TraceRec stream as the interpreter:
+    /// region accesses buffered per lane, flushed in thread order.
+    #[test]
+    fn trace_matches_interpreter() {
+        let mut b = KernelBuilder::new("tracecmp");
+        let d = b.ptr_param("d", Ty::I32);
+        let s = b.dyn_shared(Ty::I32);
+        let t = b.assign(tid_x());
+        b.store_at(s.clone(), reg(t), at(d.clone(), reg(t), Ty::I32), Ty::I32);
+        b.sync_threads();
+        let rv = sub(sub(bdim_x(), c_i32(1)), reg(t));
+        b.store_at(d.clone(), reg(t), at(s.clone(), rv, Ty::I32), Ty::I32);
+        let k = b.build();
+        let ck = Arc::new(compile_kernel(&k).unwrap());
+
+        let mut traces = Vec::new();
+        for engine in 0..2 {
+            let mem = DeviceMemory::with_capacity(1 << 12);
+            let d_buf = mem.alloc(16 * 4);
+            mem.write_slice_i32(d_buf, &(0..16).collect::<Vec<_>>());
+            let mut args = vec![ArgValue::Ptr(d_buf)];
+            args.extend([ArgValue::I32(0); 6]);
+            let packed = Arc::new(pack(&ck.layout, &args).unwrap());
+            let launch = LaunchInfo { grid: (1, 1), block: (16, 1), dyn_shmem: 16 * 4, packed };
+            let f: Box<dyn BlockFn> = if engine == 0 {
+                Box::new(CirBlockFn::new(ck.clone()))
+            } else {
+                Box::new(BytecodeBlockFn::new(ck.clone()))
+            };
+            let mut scratch = BlockScratch::new();
+            scratch.trace = Some(Vec::new());
+            f.run(0, &launch, &mem, &mut scratch);
+            traces.push(scratch.trace.take().unwrap());
+        }
+        assert_eq!(traces[0], traces[1], "TraceRec streams differ");
+    }
+
+    /// Randomized divergence fuzz: guarded stores, data-dependent loop
+    /// trip counts, while+break, continue, lazy selects, barriers and
+    /// early returns — interpreter and VM must agree bit-for-bit on
+    /// memory and stats.
+    #[test]
+    fn random_divergent_kernels_match_interpreter() {
+        #[derive(Clone, Copy)]
+        enum Op {
+            GuardedAdd { modk: i32, r: i32, c: i32 },
+            RampLoop { modk: i32 },
+            WhileBreak { modk: i32 },
+            ContinueSkip { c: i32 },
+            SelectScale { thresh: i32 },
+            Barrier,
+            EarlyReturn { cutoff: i32 },
+            /// loop whose *else* branch breaks — regression shape for
+            /// stale-predicate frame corruption
+            ElseBreakLoop { modk: i32 },
+            /// *else* branch continues, then-lanes keep accumulating
+            ElseContinueLoop { modk: i32, c: i32 },
+            /// *else* branch returns, then-lanes must keep running
+            ElseReturn { cutoff: i32, c: i32 },
+        }
+
+        fn build(ops: &[Op]) -> Kernel {
+            let mut b = KernelBuilder::new("rand_div");
+            let p = b.ptr_param("p", Ty::I32);
+            let id = b.assign(global_tid());
+            let t = b.assign(tid_x());
+            for op in ops {
+                match *op {
+                    Op::Barrier => b.sync_threads(),
+                    Op::GuardedAdd { modk, r, c } => {
+                        let p = p.clone();
+                        b.if_(eq(rem(reg(t), c_i32(modk)), c_i32(r)), |bb| {
+                            let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                            bb.store_at(p, reg(id), add(reg(v), c_i32(c)), Ty::I32);
+                        });
+                    }
+                    Op::RampLoop { modk } => {
+                        let p = p.clone();
+                        b.for_(c_i32(0), rem(reg(t), c_i32(modk)), c_i32(1), |bb, j| {
+                            let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                            bb.store_at(p.clone(), reg(id), add(reg(v), add(reg(j), c_i32(1))), Ty::I32);
+                        });
+                    }
+                    Op::WhileBreak { modk } => {
+                        let p = p.clone();
+                        let jj = b.assign(c_i32(0));
+                        b.while_(c_bool(true), |bb| {
+                            bb.if_(ge(reg(jj), rem(reg(t), c_i32(modk))), |bb2| bb2.brk());
+                            let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                            bb.store_at(p.clone(), reg(id), add(reg(v), c_i32(1)), Ty::I32);
+                            bb.set(jj, add(reg(jj), c_i32(1)));
+                        });
+                    }
+                    Op::ContinueSkip { c } => {
+                        let p = p.clone();
+                        b.for_(c_i32(0), c_i32(4), c_i32(1), |bb, j| {
+                            bb.if_(eq(rem(reg(j), c_i32(2)), c_i32(1)), |bb2| bb2.cont());
+                            let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                            bb.store_at(p.clone(), reg(id), add(reg(v), c_i32(c)), Ty::I32);
+                        });
+                    }
+                    Op::SelectScale { thresh } => {
+                        let v = b.assign(select(
+                            lt(reg(t), c_i32(thresh)),
+                            at(p.clone(), reg(id), Ty::I32),
+                            c_i32(7),
+                        ));
+                        b.store_at(p.clone(), reg(id), reg(v), Ty::I32);
+                    }
+                    Op::EarlyReturn { cutoff } => {
+                        b.if_(ge(reg(t), c_i32(cutoff)), |bb| bb.ret());
+                    }
+                    Op::ElseBreakLoop { modk } => {
+                        let p = p.clone();
+                        b.for_(c_i32(0), c_i32(3), c_i32(1), |bb, _j| {
+                            bb.if_else(
+                                eq(rem(reg(t), c_i32(modk)), c_i32(0)),
+                                |bb2| {
+                                    let v = bb2.assign(at(p.clone(), reg(id), Ty::I32));
+                                    bb2.store_at(p.clone(), reg(id), add(reg(v), c_i32(1)), Ty::I32);
+                                },
+                                |bb2| bb2.brk(),
+                            );
+                        });
+                    }
+                    Op::ElseContinueLoop { modk, c } => {
+                        let p = p.clone();
+                        b.for_(c_i32(0), c_i32(4), c_i32(1), |bb, j| {
+                            bb.if_else(
+                                eq(rem(add(reg(j), reg(t)), c_i32(modk)), c_i32(0)),
+                                |_bb2| {},
+                                |bb2| bb2.cont(),
+                            );
+                            let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                            bb.store_at(p.clone(), reg(id), add(reg(v), c_i32(c)), Ty::I32);
+                        });
+                    }
+                    Op::ElseReturn { cutoff, c } => {
+                        let p = p.clone();
+                        b.if_else(
+                            lt(reg(t), c_i32(cutoff)),
+                            |bb| {
+                                let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                                bb.store_at(p.clone(), reg(id), add(reg(v), c_i32(c)), Ty::I32);
+                            },
+                            |bb| bb.ret(),
+                        );
+                    }
+                }
+            }
+            b.build()
+        }
+
+        for_random_cases(25, 0xB17EC0DE, |rng| {
+            let bs = rng.range_usize(1, 33);
+            let grid = rng.range_usize(1, 4) as u32;
+            let nops = rng.range_usize(1, 6);
+            let ops: Vec<Op> = (0..nops)
+                .map(|_| match rng.below(10) {
+                    0 => {
+                        let m = rng.range_i64(2, 5) as i32;
+                        Op::GuardedAdd {
+                            modk: m,
+                            r: rng.range_i64(0, m as i64) as i32,
+                            c: rng.range_i64(-9, 9) as i32,
+                        }
+                    }
+                    1 => Op::RampLoop { modk: rng.range_i64(2, 5) as i32 },
+                    2 => Op::WhileBreak { modk: rng.range_i64(2, 5) as i32 },
+                    3 => Op::ContinueSkip { c: rng.range_i64(1, 5) as i32 },
+                    4 => Op::SelectScale { thresh: rng.range_i64(0, 33) as i32 },
+                    5 => Op::Barrier,
+                    6 => Op::EarlyReturn { cutoff: rng.range_i64(0, 33) as i32 },
+                    7 => Op::ElseBreakLoop { modk: rng.range_i64(2, 4) as i32 },
+                    8 => Op::ElseContinueLoop {
+                        modk: rng.range_i64(2, 4) as i32,
+                        c: rng.range_i64(1, 5) as i32,
+                    },
+                    _ => Op::ElseReturn {
+                        cutoff: rng.range_i64(0, 33) as i32,
+                        c: rng.range_i64(1, 5) as i32,
+                    },
+                })
+                .collect();
+            let k = build(&ops);
+            let n = grid as usize * bs;
+            let init = rng.vec_i32(n, -20, 20);
+            assert_engines_agree(&k, (grid, 1), (bs as u32, 1), 0, &init, |buf| {
+                vec![ArgValue::Ptr(buf)]
+            });
+        });
+    }
+}

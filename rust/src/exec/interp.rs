@@ -10,6 +10,7 @@
 
 use super::value::{bin_op, un_op, Value};
 use super::{BlockFn, BlockScratch, ExecStats, LaunchInfo, TraceRec};
+use crate::compiler::lower::block_scope_regs;
 use crate::compiler::{self, ArgValue, CompiledKernel};
 use crate::ir::*;
 use crate::runtime::device::{DeviceMemory, SHARED_TAG};
@@ -30,8 +31,10 @@ pub struct CirBlockFn {
 
 impl CirBlockFn {
     pub fn new(ck: Arc<CompiledKernel>) -> Self {
+        // Shared with the bytecode lowering so both executors agree on
+        // the block-scope-vs-per-thread register split.
         let mut set = HashSet::new();
-        collect_block_scope(&ck.mpmd.body, &mut set);
+        block_scope_regs(&ck.mpmd.body, &mut set);
         let mut block_scope = vec![false; ck.mpmd.num_regs as usize];
         for r in set {
             block_scope[r.0 as usize] = true;
@@ -43,27 +46,6 @@ impl CirBlockFn {
         let mut f = Self::new(ck);
         f.stats = Some(stats);
         f
-    }
-}
-
-/// Block-scope registers = loop variables of hoisted (block-level)
-/// `For` statements, recursively — everything else is per-thread.
-fn collect_block_scope(body: &[Stmt], out: &mut HashSet<Reg>) {
-    for s in body {
-        match s {
-            Stmt::For { var, body, .. } => {
-                out.insert(*var);
-                collect_block_scope(body, out);
-            }
-            Stmt::While { body, .. } => collect_block_scope(body, out),
-            Stmt::If { then_, else_, .. } => {
-                collect_block_scope(then_, out);
-                collect_block_scope(else_, out);
-            }
-            // do NOT recurse into ThreadLoop — inner control flow is
-            // per-thread
-            _ => {}
-        }
     }
 }
 
@@ -104,7 +86,7 @@ impl BlockFn for CirBlockFn {
             args: &args,
             block_scope: &self.block_scope,
             mem,
-            scratch,
+            scratch: &mut *scratch,
             block: launch.block,
             block_size,
             num_regs: ck.mpmd.num_regs as usize,
@@ -469,14 +451,9 @@ impl<'a> Interp<'a> {
         }
         match ty {
             Ty::I32 => Value::I32(self.mem.atomic_rmw_i32(op, addr, v.as_i32())),
+            Ty::I64 => Value::I64(self.mem.atomic_rmw_i64(op, addr, v.as_i64())),
             Ty::F32 => Value::F32(self.mem.atomic_rmw_f32(op, addr, v.as_f32())),
             Ty::F64 => Value::F64(self.mem.atomic_rmw_f64(op, addr, v.as_f64())),
-            Ty::I64 => {
-                // route through CAS loop on u64
-                let old = self.mem.atomic_rmw_f64(AtomicOp::Exch, addr, f64::from_bits(0));
-                let _ = old;
-                unimplemented!("i64 atomic RMW not needed by any bundled benchmark")
-            }
             Ty::Bool => panic!("atomic on bool"),
         }
     }
@@ -502,7 +479,7 @@ impl<'a> Interp<'a> {
     }
 }
 
-fn read_slab(slab: &[u8], off: usize, ty: Ty) -> Value {
+pub(crate) fn read_slab(slab: &[u8], off: usize, ty: Ty) -> Value {
     match ty {
         Ty::I32 => Value::I32(i32::from_le_bytes(slab[off..off + 4].try_into().unwrap())),
         Ty::I64 => Value::I64(i64::from_le_bytes(slab[off..off + 8].try_into().unwrap())),
@@ -512,7 +489,7 @@ fn read_slab(slab: &[u8], off: usize, ty: Ty) -> Value {
     }
 }
 
-fn write_slab(slab: &mut [u8], off: usize, v: Value, ty: Ty) {
+pub(crate) fn write_slab(slab: &mut [u8], off: usize, v: Value, ty: Ty) {
     match ty {
         Ty::I32 => slab[off..off + 4].copy_from_slice(&v.as_i32().to_le_bytes()),
         Ty::I64 => slab[off..off + 8].copy_from_slice(&v.as_i64().to_le_bytes()),
@@ -703,6 +680,32 @@ mod tests {
         let d_buf = mem.alloc(4);
         run_kernel(&k, (8, 1), (32, 1), 0, &[ArgValue::Ptr(d_buf)], &mem);
         assert_eq!(mem.read_i32(d_buf), 8 * 32);
+    }
+
+    /// i64 atomic RMW — regression for the `unimplemented!()` this arm
+    /// used to hit (sum + signed max across blocks).
+    #[test]
+    fn global_atomics_i64() {
+        let mut b = KernelBuilder::new("count64");
+        let d = b.ptr_param("d", Ty::I64);
+        b.atomic_rmw_void(
+            AtomicOp::Add,
+            d.clone(),
+            cast(Ty::I64, add(tid_x(), c_i32(1))),
+            Ty::I64,
+        );
+        b.atomic_rmw_void(
+            AtomicOp::Max,
+            index(d.clone(), c_i32(1), Ty::I64),
+            cast(Ty::I64, tid_x()),
+            Ty::I64,
+        );
+        let k = b.build();
+        let mem = DeviceMemory::with_capacity(1 << 12);
+        let d_buf = mem.alloc(2 * 8);
+        run_kernel(&k, (2, 1), (16, 1), 0, &[ArgValue::Ptr(d_buf)], &mem);
+        assert_eq!(mem.read_i64(d_buf), 2 * (1..=16).sum::<i64>());
+        assert_eq!(mem.read_i64(d_buf + 8), 15);
     }
 
     /// 2D geometry: threadIdx.y and blockIdx.y resolve correctly.

@@ -1,18 +1,25 @@
 //! MPMD execution.
 //!
 //! A compiled kernel executes one *block* per invocation (the paper's
-//! `start_routine`). Two implementations of [`BlockFn`] exist:
+//! `start_routine`). Three implementations of [`BlockFn`] exist:
 //!
-//! * [`CirBlockFn`] — the MPMD-CIR interpreter ([`interp`]); ground
-//!   truth for the compiler passes, also the source of memory traces
-//!   (cache simulator) and instruction counts (Table V, roofline);
+//! * [`CirBlockFn`] — the MPMD-CIR tree interpreter ([`interp`]);
+//!   ground truth for the compiler passes, also the source of memory
+//!   traces (cache simulator) and instruction counts (Table V,
+//!   roofline);
+//! * [`BytecodeBlockFn`] — the lane-vectorized register-bytecode VM
+//!   ([`bytecode`], program from `compiler::lower`); the default
+//!   engine: runs every kernel with the interpreter's exact stats and
+//!   trace semantics at a fraction of its dispatch cost;
 //! * [`NativeBlockFn`] — a hand-written Rust closure equal to what the
 //!   MPMD transform would compile to natively; the hot path for the
-//!   performance benches.
+//!   performance benches where one exists.
 
+pub mod bytecode;
 pub mod interp;
 pub mod value;
 
+pub use bytecode::BytecodeBlockFn;
 pub use interp::CirBlockFn;
 pub use value::Value;
 
@@ -125,6 +132,10 @@ pub struct BlockScratch {
     /// memory trace sink (None = tracing off)
     pub trace: Option<Vec<TraceRec>>,
     pub stats: LocalStats,
+    /// bytecode-VM lane bookkeeping (active-lane set, divergence
+    /// frames, per-lane trace buffers) — pooled here so the VM
+    /// allocates nothing per block on the steady state
+    pub vm: bytecode::VmScratch,
 }
 
 impl BlockScratch {
@@ -138,6 +149,7 @@ impl BlockScratch {
             votes: Vec::new(),
             trace: None,
             stats: LocalStats::default(),
+            vm: bytecode::VmScratch::default(),
         }
     }
 

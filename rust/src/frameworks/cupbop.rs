@@ -39,7 +39,8 @@ pub struct CupbopRuntime {
     engine: Engine,
     kernels: Vec<KernelVariants>,
     cfg: BackendCfg,
-    /// interpreter stats sink (populated in `ExecMode::Interpret`)
+    /// execution stats sink (populated in `Interpret` and `Bytecode`
+    /// modes; native closures do not count)
     pub stats: Arc<ExecStats>,
     /// scratch for host-thread work stealing during `sync()` — on
     /// launch+sync storms (Fig 11) the host draining the queue itself
@@ -127,7 +128,10 @@ impl CupbopRuntime {
         let launch =
             Arc::new(LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed });
         let total = launch.total_blocks();
-        let stats = matches!(self.cfg.exec, ExecMode::Interpret).then(|| self.stats.clone());
+        // interpreter and bytecode VM both flush ExecStats; native
+        // closures do not (they model the compiled binary)
+        let stats = matches!(self.cfg.exec, ExecMode::Interpret | ExecMode::Bytecode)
+            .then(|| self.stats.clone());
         let bpf = self
             .cfg
             .policy

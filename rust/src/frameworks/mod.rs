@@ -28,20 +28,36 @@ pub use hipcpu::HipCpuRuntime;
 pub use reference::ReferenceRuntime;
 
 use crate::compiler::CompiledKernel;
-use crate::exec::{BlockFn, CirBlockFn, ExecStats};
+use crate::exec::{BlockFn, BytecodeBlockFn, CirBlockFn, ExecStats};
 use std::sync::Arc;
 
 /// How a framework executes block functions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
-    /// MPMD-CIR interpreter — compiler ground truth, slower.
+    /// MPMD-CIR tree interpreter — compiler ground truth, slowest.
     Interpret,
-    /// Hand-written native closure (the "emitted binary" analogue).
+    /// Lane-vectorized register-bytecode VM (`compiler::lower` +
+    /// `exec::bytecode`) — the default: runs every kernel with the
+    /// interpreter's exact stats/trace semantics, much faster.
+    Bytecode,
+    /// Hand-written native closure (the "emitted binary" analogue);
+    /// kernels without one fall back to the bytecode VM.
     Native,
 }
 
-/// A kernel as registered with a runtime: the compiled CIR plus
-/// optional native / vectorized implementations.
+impl ExecMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Interpret => "interpret",
+            ExecMode::Bytecode => "bytecode",
+            ExecMode::Native => "native",
+        }
+    }
+}
+
+/// A kernel as registered with a runtime: the compiled CIR (which
+/// always carries its lowered bytecode) plus optional native /
+/// vectorized implementations.
 #[derive(Clone)]
 pub struct KernelVariants {
     pub ck: Arc<CompiledKernel>,
@@ -60,20 +76,32 @@ impl KernelVariants {
     }
 
     /// Resolve the block function for an exec mode, optionally wiring a
-    /// stats sink into the interpreter.
+    /// stats sink into the interpreter / bytecode VM. Resolution order
+    /// in `Native` mode: native → bytecode (never the interpreter —
+    /// the VM is semantically identical and strictly faster).
     pub fn block_fn(&self, mode: ExecMode, stats: Option<Arc<ExecStats>>) -> Arc<dyn BlockFn> {
         match mode {
             ExecMode::Native => {
                 if let Some(n) = &self.native {
                     return n.clone();
                 }
-                self.interp_fn(stats)
+                self.bytecode_fn(stats)
             }
+            ExecMode::Bytecode => self.bytecode_fn(stats),
             ExecMode::Interpret => self.interp_fn(stats),
         }
     }
 
-    /// DPC++ preference order: vectorized → native → interpreter.
+    /// The engine `mode` actually resolves to for this kernel.
+    pub fn resolved_exec(&self, mode: ExecMode) -> &'static str {
+        match mode {
+            ExecMode::Native if self.native.is_some() => "native",
+            ExecMode::Native | ExecMode::Bytecode => "bytecode",
+            ExecMode::Interpret => "interpret",
+        }
+    }
+
+    /// DPC++ preference order: vectorized → native → bytecode VM.
     pub fn dpcpp_block_fn(&self, mode: ExecMode, stats: Option<Arc<ExecStats>>) -> Arc<dyn BlockFn> {
         if mode == ExecMode::Native {
             if let Some(v) = &self.vectorized {
@@ -83,10 +111,26 @@ impl KernelVariants {
         self.block_fn(mode, stats)
     }
 
+    /// The engine [`Self::dpcpp_block_fn`] actually resolves to.
+    pub fn dpcpp_resolved_exec(&self, mode: ExecMode) -> &'static str {
+        if mode == ExecMode::Native && self.vectorized.is_some() {
+            "vectorized"
+        } else {
+            self.resolved_exec(mode)
+        }
+    }
+
     fn interp_fn(&self, stats: Option<Arc<ExecStats>>) -> Arc<dyn BlockFn> {
         match stats {
             Some(s) => Arc::new(CirBlockFn::with_stats(self.ck.clone(), s)),
             None => Arc::new(CirBlockFn::new(self.ck.clone())),
+        }
+    }
+
+    fn bytecode_fn(&self, stats: Option<Arc<ExecStats>>) -> Arc<dyn BlockFn> {
+        match stats {
+            Some(s) => Arc::new(BytecodeBlockFn::with_stats(self.ck.clone(), s)),
+            None => Arc::new(BytecodeBlockFn::new(self.ck.clone())),
         }
     }
 }
@@ -129,7 +173,7 @@ impl Default for BackendCfg {
         BackendCfg {
             pool_size: crate::runtime::default_pool_size(),
             policy: PolicyMode::Auto,
-            exec: ExecMode::Native,
+            exec: ExecMode::Bytecode,
             mem_cap: 256 << 20,
             sched: SchedKind::WorkStealing,
             streams: 1,

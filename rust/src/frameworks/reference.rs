@@ -1,13 +1,17 @@
 //! Serial reference runtime — the correctness oracle.
 //!
 //! Executes every launch synchronously, in block order, on the host
-//! thread, always through the MPMD interpreter. Because execution is
-//! deterministic and single-threaded it doubles as the memory-trace
-//! source for the cache simulator (Table VI / Fig 10) and the
-//! instruction-count source for Table V and the roofline.
+//! thread — through the MPMD interpreter by default ([`with_exec`]
+//! selects the bytecode VM or native closures instead). Because
+//! execution is deterministic and single-threaded it doubles as the
+//! memory-trace source for the cache simulator (Table VI / Fig 10) and
+//! the instruction-count source for Table V and the roofline; the
+//! bytecode VM preserves both streams bit-for-bit.
+//!
+//! [`with_exec`]: ReferenceRuntime::with_exec
 
-use super::KernelVariants;
-use crate::exec::{BlockFn, BlockScratch, CirBlockFn, ExecStats, LaunchInfo, TraceRec};
+use super::{ExecMode, KernelVariants};
+use crate::exec::{BlockFn, BlockScratch, ExecStats, LaunchInfo, TraceRec};
 use crate::host::{ResolvedLaunch, RuntimeApi};
 use crate::runtime::DeviceMemory;
 use std::sync::Arc;
@@ -18,6 +22,8 @@ pub struct ReferenceRuntime {
     scratch: BlockScratch,
     /// cumulative execution stats across every launch
     pub stats: Arc<ExecStats>,
+    /// execution engine (default: the interpreter — the oracle)
+    exec: ExecMode,
     /// when true, global-memory accesses are appended to `trace`
     tracing: bool,
     pub trace: Vec<TraceRec>,
@@ -31,10 +37,19 @@ impl ReferenceRuntime {
             kernels,
             scratch: BlockScratch::new(),
             stats: ExecStats::new(),
+            exec: ExecMode::Interpret,
             tracing: false,
             trace: Vec::new(),
             next_stream: 0,
         }
+    }
+
+    /// Select the execution engine. The default (`Interpret`) is the
+    /// differential-testing oracle; `Bytecode` keeps identical stats
+    /// and trace semantics, `Native` uses closures where provided.
+    pub fn with_exec(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
+        self
     }
 
     /// Enable memory tracing (drives `cachesim`).
@@ -66,7 +81,7 @@ impl RuntimeApi for ReferenceRuntime {
         let kv = &self.kernels[l.kernel];
         let packed = super::CupbopRuntime::pack_args(kv, &l.args);
         let launch = LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed };
-        let f = CirBlockFn::with_stats(kv.ck.clone(), self.stats.clone());
+        let f = kv.block_fn(self.exec, Some(self.stats.clone()));
         if self.tracing && self.scratch.trace.is_none() {
             self.scratch.trace = Some(Vec::new());
         }

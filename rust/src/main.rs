@@ -7,7 +7,7 @@
 //! cupbop list                               list benchmarks + features
 //! cupbop run --bench <name> [--backend cupbop|hipcpu|dpcpp|reference]
 //!            [--scale tiny|small|paper] [--pool N] [--grain avg|auto|N]
-//!            [--interpret]                  run one benchmark end to end
+//!            [--exec interpret|bytecode|native]   run one benchmark
 //! cupbop suite --suite rodinia|heteromark|crystal [..run flags]
 //! cupbop report table1|table2|table6|fig9|fig10   paper-style reports
 //! cupbop dump --bench <name>                print SPMD + MPMD CIR
@@ -58,7 +58,10 @@ fn print_help() {
                              mutex: the paper's Figure 5 queue)\n\
            --streams N       round-robin launches over N CUDA streams\n\
                              (work-stealing scheduler only; default 1)\n\
-           --interpret       run the MPMD interpreter instead of native\n\
+           --exec E          interpret|bytecode|native execution engine\n\
+                             (default bytecode: the lane-vectorized VM;\n\
+                             native falls back to bytecode per kernel)\n\
+           --interpret       deprecated alias for --exec interpret\n\
          report targets: table1 table2 table6 fig9 fig10"
     );
 }
@@ -98,9 +101,23 @@ fn parse_cfg(args: &[String]) -> BackendCfg {
         Some("auto") | None => PolicyMode::Auto,
         Some(n) => n.parse().map(PolicyMode::Fixed).unwrap_or(PolicyMode::Auto),
     };
-    if has_flag(args, "--interpret") {
-        cfg.exec = ExecMode::Interpret;
-    }
+    cfg.exec = match flag_value(args, "--exec") {
+        Some("interpret") | Some("interp") => ExecMode::Interpret,
+        Some("native") => ExecMode::Native,
+        Some("bytecode") => ExecMode::Bytecode,
+        Some(other) => {
+            eprintln!("unknown --exec `{other}` (interpret|bytecode|native); using bytecode");
+            ExecMode::Bytecode
+        }
+        None => {
+            if has_flag(args, "--interpret") {
+                eprintln!("warning: --interpret is deprecated; use --exec interpret");
+                ExecMode::Interpret
+            } else {
+                ExecMode::Bytecode
+            }
+        }
+    };
     cfg.sched = match flag_value(args, "--sched") {
         Some("mutex") => SchedKind::MutexQueue,
         _ => SchedKind::WorkStealing,
@@ -140,9 +157,10 @@ fn cmd_run(args: &[String]) -> ExitCode {
     let out = spec::run_on(&built, backend, cfg);
     match &out.check {
         Ok(()) => println!(
-            "{name} [{}] ok in {:?}{}",
+            "{name} [{}] ok in {:?}  exec={}{}",
             backend.name(),
             out.elapsed,
+            out.exec,
             out.queue_counters
                 .map(|(p, f)| format!("  (launches {p}, fetches {f})"))
                 .unwrap_or_default()
@@ -174,7 +192,9 @@ fn cmd_suite(args: &[String]) -> ExitCode {
         let built = spec::build_program(&b, scale);
         let out = spec::run_on(&built, backend, cfg);
         match out.check {
-            Ok(()) => println!("{:<18} {:>10.3?}  ok", b.name, out.elapsed),
+            Ok(()) => {
+                println!("{:<18} {:>10.3?}  ok  exec={}", b.name, out.elapsed, out.exec)
+            }
             Err(e) => {
                 println!("{:<18} {:>10.3?}  FAIL: {e}", b.name, out.elapsed);
                 failed += 1;

@@ -175,6 +175,32 @@ impl DeviceMemory {
         old as i32
     }
 
+    /// i64 atomic RMW returning the old value (CUDA's
+    /// `atomicAdd(unsigned long long*)` family; Min/Max compare signed
+    /// like `atomicMin(long long*)`).
+    pub fn atomic_rmw_i64(&self, op: AtomicOp, addr: u64, val: i64) -> i64 {
+        let a = self.atomic_u64(addr);
+        let old = match op {
+            AtomicOp::Add => a.fetch_add(val as u64, Ordering::SeqCst),
+            AtomicOp::Sub => a.fetch_sub(val as u64, Ordering::SeqCst),
+            AtomicOp::And => a.fetch_and(val as u64, Ordering::SeqCst),
+            AtomicOp::Or => a.fetch_or(val as u64, Ordering::SeqCst),
+            AtomicOp::Xor => a.fetch_xor(val as u64, Ordering::SeqCst),
+            AtomicOp::Exch => a.swap(val as u64, Ordering::SeqCst),
+            AtomicOp::Min => a
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
+                    Some(((c as i64).min(val)) as u64)
+                })
+                .unwrap(),
+            AtomicOp::Max => a
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
+                    Some(((c as i64).max(val)) as u64)
+                })
+                .unwrap(),
+        };
+        old as i64
+    }
+
     /// f32 atomic RMW via CAS on the bit pattern (CUDA's atomicAdd(float*)).
     pub fn atomic_rmw_f32(&self, op: AtomicOp, addr: u64, val: f32) -> f32 {
         let a = self.atomic_u32(addr);
@@ -393,6 +419,45 @@ mod tests {
         assert_eq!(m.read_i32(a), 3);
         m.atomic_rmw_i32(AtomicOp::Max, a, 7);
         assert_eq!(m.read_i32(a), 7);
+    }
+
+    #[test]
+    fn atomic_i64_rmw_ops() {
+        let m = DeviceMemory::with_capacity(1 << 12);
+        let a = m.alloc(8);
+        m.write_i64(a, 1 << 40);
+        let old = m.atomic_rmw_i64(AtomicOp::Add, a, 5);
+        assert_eq!(old, 1 << 40);
+        assert_eq!(m.read_i64(a), (1 << 40) + 5);
+        // signed min/max on negative values
+        m.write_i64(a, -10);
+        m.atomic_rmw_i64(AtomicOp::Min, a, -20);
+        assert_eq!(m.read_i64(a), -20);
+        m.atomic_rmw_i64(AtomicOp::Max, a, -5);
+        assert_eq!(m.read_i64(a), -5);
+        // sub wraps like the hardware would
+        m.write_i64(a, 3);
+        m.atomic_rmw_i64(AtomicOp::Sub, a, 10);
+        assert_eq!(m.read_i64(a), -7);
+        assert_eq!(m.atomic_rmw_i64(AtomicOp::Exch, a, 99), -7);
+        assert_eq!(m.read_i64(a), 99);
+    }
+
+    #[test]
+    fn atomic_i64_concurrent_add() {
+        let m = std::sync::Arc::new(DeviceMemory::with_capacity(1 << 12));
+        let a = m.alloc(8);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.atomic_rmw_i64(AtomicOp::Add, a, 1 << 33);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.read_i64(a), 8000 * (1 << 33));
     }
 
     #[test]

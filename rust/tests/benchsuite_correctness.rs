@@ -4,12 +4,13 @@
 //! outputs that pass each benchmark's validator.
 //!
 //! The `differential` module goes further: one generated test per
-//! (benchmark × backend) runs the benchmark at `Scale::Tiny` and
-//! **bit-compares** every final host array against the serial
-//! `Reference` oracle, falling back to an epsilon comparison only where
-//! bits differ and the bytes decode as floats (reductions whose
-//! accumulation order is schedule-dependent). A guard test keeps the
-//! generated list in lock-step with `spec::all_benchmarks()`.
+//! (benchmark × backend × ExecMode) runs the benchmark at `Scale::Tiny`
+//! and **bit-compares** every final host array against the serial
+//! `Reference` oracle (always interpreting), falling back to an epsilon
+//! comparison only where bits differ and the bytes decode as floats
+//! (reductions whose accumulation order is schedule-dependent). A guard
+//! test keeps the generated list in lock-step with
+//! `spec::all_benchmarks()`.
 
 use cupbop::benchsuite::spec::{self, Backend, Scale};
 use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode};
@@ -29,7 +30,18 @@ fn run_all(backend: Backend, cfg: BackendCfg) {
 
 #[test]
 fn reference_backend_all_green() {
-    run_all(Backend::Reference, BackendCfg::default());
+    run_all(
+        Backend::Reference,
+        BackendCfg { exec: ExecMode::Interpret, ..Default::default() },
+    );
+}
+
+#[test]
+fn reference_bytecode_all_green() {
+    run_all(
+        Backend::Reference,
+        BackendCfg { exec: ExecMode::Bytecode, ..Default::default() },
+    );
 }
 
 #[test]
@@ -37,6 +49,14 @@ fn cupbop_interpreter_all_green() {
     run_all(
         Backend::CuPBoP,
         BackendCfg { pool_size: 4, exec: ExecMode::Interpret, ..Default::default() },
+    );
+}
+
+#[test]
+fn cupbop_bytecode_all_green() {
+    run_all(
+        Backend::CuPBoP,
+        BackendCfg { pool_size: 4, exec: ExecMode::Bytecode, ..Default::default() },
     );
 }
 
@@ -98,21 +118,18 @@ fn dpcpp_model_all_green() {
     );
 }
 
-/// Interpreter and native closures agree benchmark-by-benchmark (the
-/// native closure is the "emitted binary" — it must be semantically
-/// identical to the MPMD CIR the compiler produced).
+/// All three execution engines agree benchmark-by-benchmark (the
+/// native closure is the "emitted binary", the bytecode VM the lowered
+/// program — both must be semantically identical to the MPMD CIR the
+/// compiler produced).
 #[test]
-fn interpreter_and_native_agree() {
+fn exec_engines_agree() {
     for b in spec::all_benchmarks() {
         if b.build.is_none() {
             continue;
         }
         let built = spec::build_program(&b, Scale::Tiny);
-        let has_native = built.variants.iter().any(|v| v.native.is_some());
-        if !has_native {
-            continue;
-        }
-        for exec in [ExecMode::Interpret, ExecMode::Native] {
+        for exec in [ExecMode::Interpret, ExecMode::Bytecode, ExecMode::Native] {
             let out = spec::run_on(
                 &built,
                 Backend::CuPBoP,
@@ -120,6 +137,58 @@ fn interpreter_and_native_agree() {
             );
             out.check.unwrap_or_else(|e| panic!("{} [{exec:?}]: {e}", b.name));
         }
+    }
+}
+
+/// The bytecode VM must flush ExecStats counters identical to the
+/// interpreter's on every bundled benchmark (Table V, the roofline and
+/// the grain heuristic inputs stay valid on the fast path).
+#[test]
+fn bytecode_stats_match_interpreter() {
+    use cupbop::frameworks::ReferenceRuntime;
+    use cupbop::host::run_host_program;
+    for b in spec::all_benchmarks() {
+        if b.build.is_none() {
+            continue;
+        }
+        let built = spec::build_program(&b, Scale::Tiny);
+        let mem_cap = built.mem_cap.max(64 << 20);
+        let mut snaps = Vec::new();
+        for exec in [ExecMode::Interpret, ExecMode::Bytecode] {
+            let mut arrays = built.arrays.clone();
+            let mut rt =
+                ReferenceRuntime::new(built.variants.clone(), mem_cap).with_exec(exec);
+            run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
+                .unwrap_or_else(|e| panic!("{} [{exec:?}]: {e}", b.name));
+            snaps.push(rt.stats.snapshot());
+        }
+        assert_eq!(snaps[0], snaps[1], "{}: interp vs bytecode ExecStats", b.name);
+    }
+}
+
+/// The bytecode VM must emit the interpreter's exact TraceRec stream
+/// (cache simulator input) — spot-checked on a shared-memory-heavy, an
+/// atomic-heavy and a multi-kernel benchmark.
+#[test]
+fn bytecode_trace_matches_interpreter() {
+    use cupbop::frameworks::ReferenceRuntime;
+    use cupbop::host::run_host_program;
+    for name in ["nw", "hist", "bs"] {
+        let b = spec::by_name(name).unwrap();
+        let built = spec::build_program(&b, Scale::Tiny);
+        let mem_cap = built.mem_cap.max(64 << 20);
+        let mut traces = Vec::new();
+        for exec in [ExecMode::Interpret, ExecMode::Bytecode] {
+            let mut arrays = built.arrays.clone();
+            let mut rt = ReferenceRuntime::new(built.variants.clone(), mem_cap)
+                .with_exec(exec)
+                .with_tracing();
+            run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
+                .unwrap_or_else(|e| panic!("{name} [{exec:?}]: {e}"));
+            traces.push(rt.take_trace());
+        }
+        assert_eq!(traces[0].len(), traces[1].len(), "{name}: trace length differs");
+        assert_eq!(traces[0], traces[1], "{name}: TraceRec streams differ");
     }
 }
 
@@ -197,24 +266,27 @@ fn allclose_f64(got: &[u8], want: &[u8]) -> bool {
     })
 }
 
-/// Run `name` on `backend` and compare every final host array against
-/// the serial Reference oracle: bitwise first, epsilon as fallback.
-fn diff_one(name: &str, backend: Backend) {
+/// Run `name` on `backend` under `exec` and compare every final host
+/// array against the serial Reference oracle: bitwise first, epsilon
+/// as fallback.
+fn diff_one(name: &str, backend: Backend, exec: ExecMode) {
     let b = spec::by_name(name).unwrap_or_else(|| panic!("unknown benchmark `{name}`"));
     let built = spec::build_program(&b, Scale::Tiny);
 
+    let oracle_cfg = BackendCfg { exec: ExecMode::Interpret, ..Default::default() };
     let (oracle_out, oracle_arrays) =
-        spec::run_with_arrays(&built, Backend::Reference, BackendCfg::default());
+        spec::run_with_arrays(&built, Backend::Reference, oracle_cfg);
     oracle_out.check.unwrap_or_else(|e| panic!("{name} [oracle]: {e}"));
 
-    // Interpreter on both sides: the oracle always interprets, so this
+    // The oracle always interprets. The `Interpret` column then
     // isolates *scheduling* divergence (ordering, races, stream bugs)
-    // from native-closure numeric differences, which have their own
-    // coverage (`cupbop_native_all_green`, `interpreter_and_native_agree`,
-    // `prop_interp_native_parity_under_stealing`). Bits then only differ
-    // where accumulation order legitimately differs — float atomics —
-    // and the epsilon fallback absorbs exactly that.
-    let cfg = BackendCfg { pool_size: 4, exec: ExecMode::Interpret, ..Default::default() };
+    // from engine differences; the `Bytecode` column additionally pins
+    // VM lowering/execution bugs end to end. Native-closure numeric
+    // differences have their own coverage (`cupbop_native_all_green`,
+    // `exec_engines_agree`, the exec-mode parity property test). Bits
+    // then only differ where accumulation order legitimately differs —
+    // float atomics — and the epsilon fallback absorbs exactly that.
+    let cfg = BackendCfg { pool_size: 4, exec, ..Default::default() };
     let (out, arrays) = spec::run_with_arrays(&built, backend, cfg);
     out.check.unwrap_or_else(|e| panic!("{name} [{}]: {e}", backend.name()));
 
@@ -240,9 +312,10 @@ fn diff_one(name: &str, backend: Backend) {
     }
 }
 
-/// Generates `differential::<bench>::{cupbop,hipcpu,dpcpp}` — one test
-/// per (benchmark × backend) — plus a guard asserting the list covers
-/// exactly the implemented benchmarks.
+/// Generates `differential::<bench>::{cupbop,hipcpu,dpcpp}` (interpret)
+/// and `::{cupbop,hipcpu,dpcpp}_bytecode` — one test per (benchmark ×
+/// backend × ExecMode) — plus a guard asserting the list covers exactly
+/// the implemented benchmarks.
 macro_rules! diff_tests {
     ($($modname:ident => $bench:literal),+ $(,)?) => {
         mod differential {
@@ -252,15 +325,27 @@ macro_rules! diff_tests {
                     use super::*;
                     #[test]
                     fn cupbop() {
-                        diff_one($bench, Backend::CuPBoP);
+                        diff_one($bench, Backend::CuPBoP, ExecMode::Interpret);
+                    }
+                    #[test]
+                    fn cupbop_bytecode() {
+                        diff_one($bench, Backend::CuPBoP, ExecMode::Bytecode);
                     }
                     #[test]
                     fn hipcpu() {
-                        diff_one($bench, Backend::HipCpu);
+                        diff_one($bench, Backend::HipCpu, ExecMode::Interpret);
+                    }
+                    #[test]
+                    fn hipcpu_bytecode() {
+                        diff_one($bench, Backend::HipCpu, ExecMode::Bytecode);
                     }
                     #[test]
                     fn dpcpp() {
-                        diff_one($bench, Backend::Dpcpp);
+                        diff_one($bench, Backend::Dpcpp, ExecMode::Interpret);
+                    }
+                    #[test]
+                    fn dpcpp_bytecode() {
+                        diff_one($bench, Backend::Dpcpp, ExecMode::Bytecode);
                     }
                 }
             )+

@@ -260,17 +260,18 @@ fn prop_barrier_insertion_sound() {
 }
 
 /// Invariant: for random structured CIR kernels (barriers under
-/// uniform control flow, shared-memory exchange between regions),
-/// `ExecMode::Interpret` and `ExecMode::Native` produce bit-identical
-/// memory states when executed through the CuPBoP runtime on the
-/// work-stealing scheduler — random pool sizes, chained on one stream.
+/// uniform control flow, shared-memory exchange between regions,
+/// thread-divergent guards), all three `ExecMode`s — `Interpret`,
+/// `Bytecode` and `Native` — produce bit-identical memory states when
+/// executed through the CuPBoP runtime on the work-stealing scheduler
+/// — random pool sizes, chained on one stream.
 ///
 /// The native closure is built from the same random recipe the CIR is,
 /// mirroring what the MPMD transform would compile to, so a divergence
-/// pins a fission/interpreter bug (or a scheduler ordering bug: the
-/// per-stream chain is order-sensitive).
+/// pins a fission/interpreter/lowering bug (or a scheduler ordering
+/// bug: the per-stream chain is order-sensitive).
 #[test]
-fn prop_interp_native_parity_under_stealing() {
+fn prop_exec_mode_parity_under_stealing() {
     use cupbop::benchsuite::util::PackedArgs;
     use cupbop::frameworks::{BackendCfg, CupbopRuntime, ExecMode, KernelVariants};
     use cupbop::host::{ResolvedLaunch, RuntimeApi};
@@ -282,6 +283,9 @@ fn prop_interp_native_parity_under_stealing() {
         /// reverse the block's slice through shared memory (needs the
         /// barrier: every lane publishes before any lane reads back)
         RevBlock,
+        /// thread-divergent guard: only odd global ids add `c` (mask
+        /// partitioning in the bytecode VM)
+        OddAdd(i32),
     }
 
     fn build_kernel(steps: &[Step], bs: usize) -> cupbop::ir::Kernel {
@@ -321,6 +325,14 @@ fn prop_interp_native_parity_under_stealing() {
                         Ty::I32,
                     );
                 }
+                Step::OddAdd(c) => {
+                    let id = b.assign(global_tid());
+                    let p = p.clone();
+                    b.if_(eq(rem(reg(id), c_i32(2)), c_i32(1)), |bb| {
+                        let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                        bb.store_at(p, reg(id), add(reg(v), c_i32(*c)), Ty::I32);
+                    });
+                }
             }
         }
         b.build()
@@ -352,6 +364,16 @@ fn prop_interp_native_parity_under_stealing() {
                             mem.write_i32(addr(base + t), vals[bs - 1 - t]);
                         }
                     }
+                    Step::OddAdd(c) => {
+                        for t in 0..bs {
+                            if (base + t) % 2 == 1 {
+                                mem.write_i32(
+                                    addr(base + t),
+                                    mem.read_i32(addr(base + t)) + c,
+                                );
+                            }
+                        }
+                    }
                 }
             }
         })
@@ -363,9 +385,10 @@ fn prop_interp_native_parity_under_stealing() {
         let n = grid as usize * bs;
         let nsteps = rng.range_usize(1, 6);
         let steps: Vec<Step> = (0..nsteps)
-            .map(|_| match rng.below(3) {
+            .map(|_| match rng.below(4) {
                 0 => Step::AddC(rng.range_i64(-20, 20) as i32),
                 1 => Step::MulC(rng.range_i64(1, 4) as i32),
+                2 => Step::OddAdd(rng.range_i64(-10, 10) as i32),
                 _ => Step::RevBlock,
             })
             .collect();
@@ -375,7 +398,7 @@ fn prop_interp_native_parity_under_stealing() {
 
         let ck = Arc::new(compile_kernel(&build_kernel(&steps, bs)).unwrap());
         let mut results = Vec::new();
-        for exec in [ExecMode::Interpret, ExecMode::Native] {
+        for exec in [ExecMode::Interpret, ExecMode::Bytecode, ExecMode::Native] {
             let kv = KernelVariants {
                 ck: ck.clone(),
                 native: Some(native_fn(steps.clone())),
@@ -410,6 +433,11 @@ fn prop_interp_native_parity_under_stealing() {
         }
         assert_eq!(
             results[0], results[1],
+            "interp vs bytecode diverged: bs={bs} grid={grid} steps={nsteps} \
+             launches={nlaunches} pool={pool}"
+        );
+        assert_eq!(
+            results[0], results[2],
             "interp vs native diverged: bs={bs} grid={grid} steps={nsteps} \
              launches={nlaunches} pool={pool}"
         );
