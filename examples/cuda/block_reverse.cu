@@ -1,0 +1,19 @@
+// Per-block reversal through dynamic shared memory — the classic
+// `extern __shared__` demo kernel. Exercises dynamic shared memory,
+// a barrier and 2D-free geometry through the frontend; the synthetic
+// `run --cu` harness sizes the segment as block * sizeof(int).
+#include <cuda_runtime.h>
+
+__global__ void block_reverse(const int* data, int* out, int n) {
+    extern __shared__ int tmp[];
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        tmp[threadIdx.x] = data[gid];
+    }
+    __syncthreads();
+    int j = blockDim.x - 1 - threadIdx.x;
+    int src = blockIdx.x * blockDim.x + j;
+    if (gid < n && src < n) {
+        out[gid] = tmp[j];
+    }
+}

@@ -1,0 +1,31 @@
+// Hetero-Mark BS — each thread binary-searches a sorted array for one
+// key and records the found index (or -1). Transliterates
+// benchsuite::heteromark::bs exactly, including the `lo = hi`
+// termination idiom.
+#include <cuda_runtime.h>
+
+__global__ void binary_search(const int* hay, const int* keys, int* found,
+                              int n, int nq) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < nq) {
+        int key = keys[gid];
+        int lo = 0;
+        int hi = n;
+        int res = -1;
+        while (lo < hi) {
+            int mid = (lo + hi) / 2;
+            int v = hay[mid];
+            if (v == key) {
+                res = mid;
+                lo = hi;
+            } else {
+                if (v < key) {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+        }
+        found[gid] = res;
+    }
+}

@@ -1,0 +1,16 @@
+// Hetero-Mark FIR — finite impulse response filter over one streamed
+// chunk; `input` carries TAPS-1 = 15 history samples before the chunk.
+// Transliterates benchsuite::heteromark::fir exactly (TAPS = 16).
+#include <cuda_runtime.h>
+
+__global__ void fir(const float* input, const float* coeff, float* output,
+                    int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        float sum = 0.0f;
+        for (int k = 0; k < 16; k += 1) {
+            sum += input[gid + 15 - k] * coeff[k];
+        }
+        output[gid] = sum;
+    }
+}

@@ -1,0 +1,14 @@
+// Hetero-Mark HIST (paper Fig 10 exemplar): each thread walks the
+// pixel array with stride = total threads and atomicAdds into 256
+// bins. Transliterates benchsuite::heteromark::hist (strided+atomic).
+#include <cuda_runtime.h>
+
+__global__ void hist(const int* pixels, int* bins, int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    int nthreads = blockDim.x * gridDim.x;
+    for (int i = gid; i < n; i += nthreads) {
+        int v = pixels[i];
+        int bin = v % 256;
+        atomicAdd(&bins[bin], 1);
+    }
+}

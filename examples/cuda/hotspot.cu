@@ -1,0 +1,58 @@
+// Rodinia hotspot — one time step of the 2D thermal stencil with a
+// 16x16 shared-memory tile and a block barrier. Neighbours come from
+// shared memory inside the tile, from global memory across the tile
+// edge, and clamp to the centre value at the domain edge.
+// Transliterates benchsuite::rodinia::stencils::hotspot_kernel exactly
+// (HS_BLOCK = 16, HS_K = 0.1f).
+#include <cuda_runtime.h>
+
+__global__ void hotspot(const float* t_in, const float* power, float* t_out,
+                        int n) {
+    __shared__ float tile[256];
+    int tx = threadIdx.x;
+    int ty = threadIdx.y;
+    int gx = blockIdx.x * 16 + tx;
+    int gy = blockIdx.y * 16 + ty;
+    int idx = gy * n + gx;
+    int lidx = ty * 16 + tx;
+    if (gx < n && gy < n) {
+        tile[lidx] = t_in[idx];
+    }
+    __syncthreads();
+    if (gx < n && gy < n) {
+        float left = tile[lidx];
+        if (tx > 0) {
+            left = tile[lidx - 1];
+        } else {
+            if (gx > 0) {
+                left = t_in[idx - 1];
+            }
+        }
+        float right = tile[lidx];
+        if (tx < 15) {
+            right = tile[lidx + 1];
+        } else {
+            if (gx < n - 1) {
+                right = t_in[idx + 1];
+            }
+        }
+        float up = tile[lidx];
+        if (ty > 0) {
+            up = tile[lidx - 16];
+        } else {
+            if (gy > 0) {
+                up = t_in[idx - n];
+            }
+        }
+        float down = tile[lidx];
+        if (ty < 15) {
+            down = tile[lidx + 16];
+        } else {
+            if (gy < n - 1) {
+                down = t_in[idx + n];
+            }
+        }
+        t_out[idx] = tile[lidx]
+            + 0.1f * (left + right + (up + down) - 4.0f * tile[lidx] + power[idx]);
+    }
+}

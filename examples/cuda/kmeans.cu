@@ -1,0 +1,28 @@
+// Hetero-Mark KMEANS nearest-cluster assignment (paper Listing 9,
+// lines 9-21). Feature-major layout feature[l * npoints + point] — the
+// GPU-coalesced pattern that serialises into a strided walk on CPUs.
+// Transliterates benchsuite::heteromark::kmeans exactly (NFEATURES=34,
+// NCLUSTERS=5).
+#include <cuda_runtime.h>
+#include <float.h>
+
+__global__ void kmeans_assign(const float* feature, const float* clusters,
+                              int* membership, int npoints) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < npoints) {
+        int index = -1;
+        float min_dist = FLT_MAX;
+        for (int i = 0; i < 5; i += 1) {
+            float dist = 0.0f;
+            for (int l = 0; l < 34; l += 1) {
+                float d = feature[l * npoints + gid] - clusters[i * 34 + l];
+                dist += d * d;
+            }
+            if (dist < min_dist) {
+                min_dist = dist;
+                index = i;
+            }
+        }
+        membership[gid] = index;
+    }
+}

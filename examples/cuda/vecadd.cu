@@ -1,0 +1,10 @@
+// The paper's Listing 1 vecAdd kernel — the quickstart example,
+// now parsed from real CUDA source by the frontend.
+#include <cuda_runtime.h>
+
+__global__ void vecAdd(float* a, float* b, float* c, int n) {
+    int id = threadIdx.x + blockIdx.x * blockDim.x;
+    if (id < n) {
+        c[id] = a[id] + b[id];
+    }
+}

@@ -1,0 +1,26 @@
+// Warp-shuffle tree reduction with a per-block atomic — the Crystal
+// q1x aggregation idiom (COX's warp-level-collective contribution).
+// Exercises __shfl_down_sync and atomicAdd through the frontend; the
+// coverage verdicts show HIP-CPU rejecting it (warp shuffle, Table II).
+#include <cuda_runtime.h>
+
+__global__ void warp_sum(const int* revenue, int* result, int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    int v = 0;
+    if (gid < n) {
+        v = revenue[gid];
+    }
+    int s0 = __shfl_down_sync(0xffffffff, v, 16);
+    int a0 = v + s0;
+    int s1 = __shfl_down_sync(0xffffffff, a0, 8);
+    int a1 = a0 + s1;
+    int s2 = __shfl_down_sync(0xffffffff, a1, 4);
+    int a2 = a1 + s2;
+    int s3 = __shfl_down_sync(0xffffffff, a2, 2);
+    int a3 = a2 + s3;
+    int s4 = __shfl_down_sync(0xffffffff, a3, 1);
+    int a4 = a3 + s4;
+    if (threadIdx.x % 32 == 0) {
+        atomicAdd(&result[blockIdx.x], a4);
+    }
+}

@@ -16,6 +16,6 @@ pub mod spec;
 pub mod util;
 
 pub use spec::{
-    all_benchmarks, build_program, run_on, run_with_arrays, Backend, BenchProgram, Benchmark,
-    BuiltProgram, ProblemSize, Scale, Suite,
+    all_benchmarks, build_prepared, build_program, run_on, run_with_arrays, Backend, BenchProgram,
+    Benchmark, BuiltProgram, ProblemSize, Scale, Suite,
 };

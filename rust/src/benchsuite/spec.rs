@@ -118,7 +118,13 @@ pub struct BuiltProgram {
 /// Compile a benchmark's kernels and run the host barrier pass.
 pub fn build_program(b: &Benchmark, scale: Scale) -> BuiltProgram {
     let builder = b.build.unwrap_or_else(|| panic!("benchmark `{}` is spec-only", b.name));
-    let prog = builder(scale);
+    build_prepared(b.name, builder(scale))
+}
+
+/// Compile an already-constructed [`BenchProgram`] (kernels possibly
+/// swapped for frontend-parsed ones, or synthesised by
+/// `frontend::harness`) and run the host barrier pass.
+pub fn build_prepared(name: &str, prog: BenchProgram) -> BuiltProgram {
     let compiled: Vec<Arc<CompiledKernel>> = prog
         .kernels
         .iter()
@@ -140,7 +146,7 @@ pub fn build_program(b: &Benchmark, scale: Scale) -> BuiltProgram {
         })
         .collect();
     BuiltProgram {
-        name: b.name.to_string(),
+        name: name.to_string(),
         compiled,
         variants,
         host,

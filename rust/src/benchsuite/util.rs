@@ -97,6 +97,15 @@ impl ProgBuilder {
         b
     }
 
+    /// Input buffer from raw little-endian bytes (element types the
+    /// typed helpers don't cover, e.g. i64): malloc + H2D.
+    pub fn input_bytes(&mut self, data: Vec<u8>) -> BufId {
+        let b = self.add_buf(data.len());
+        let a = self.add_arr(data);
+        self.ops.push(HostOp::H2D { dst: b, src: a });
+        b
+    }
+
     /// Device-only working buffer initialised to zero.
     pub fn zeroed(&mut self, bytes: usize) -> BufId {
         let b = self.add_buf(bytes);

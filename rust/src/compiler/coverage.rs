@@ -202,6 +202,20 @@ pub fn judge(fw: Framework, feats: &BTreeSet<Feature>, incorrect_on: &[Framework
     }
 }
 
+/// Feature-set diff helper: one human-readable line per IR-detected
+/// feature of `kernel` that `fw` cannot execute on a CPU backend
+/// (empty ⇒ the kernel is executable under `fw`). Ordering follows
+/// `Feature`'s `Ord` (via the `BTreeSet` walk) so output is
+/// deterministic — the `cupbop compile` subcommand prints these lines
+/// under each framework's Table II verdict.
+pub fn explain_unsupported(kernel: &Kernel, fw: Framework) -> Vec<String> {
+    detect_features(kernel)
+        .into_iter()
+        .filter(|f| !fw.supports(*f))
+        .map(|f| format!("{} cannot execute `{f}` on a CPU backend", fw.name()))
+        .collect()
+}
+
 /// Coverage = fraction of benchmarks judged `Correct` (the paper counts
 /// correct-only as covered: 16/23 = 69.6% for CuPBoP on Rodinia).
 pub fn coverage(verdicts: &[Verdict]) -> f64 {
@@ -263,6 +277,38 @@ mod tests {
         assert!(!Framework::CuPBoP.supports(NvIntrinsic));
         assert!(Framework::HipCpu.supports(NvIntrinsic));
         assert!(Framework::Dpcpp.supports(NvIntrinsic));
+    }
+
+    #[test]
+    fn explain_unsupported_diffs_features_per_framework() {
+        // warp shuffle: blocks HIP-CPU only (Crystal q11-q13 rows).
+        let mut b = KernelBuilder::new("shufy");
+        let _ = b.shfl(ShflKind::Down, c_f32(1.0), c_i32(4));
+        let k = b.build();
+        assert!(explain_unsupported(&k, Framework::CuPBoP).is_empty());
+        assert!(explain_unsupported(&k, Framework::Dpcpp).is_empty());
+        let hip = explain_unsupported(&k, Framework::HipCpu);
+        assert_eq!(hip, vec!["HIP-CPU cannot execute `warp shuffle` on a CPU backend".to_string()]);
+
+        // atomicCAS: blocks DPC++ only (all Crystal join queries).
+        let mut b = KernelBuilder::new("casy");
+        let p = b.ptr_param("p", Ty::I32);
+        let c = b.atomic_cas(p.clone(), c_i32(0), c_i32(1), Ty::I32);
+        b.store_at(p, c_i32(0), reg(c), Ty::I32);
+        let k = b.build();
+        assert!(explain_unsupported(&k, Framework::CuPBoP).is_empty());
+        let d = explain_unsupported(&k, Framework::Dpcpp);
+        assert_eq!(d, vec!["DPC++ cannot execute `atomicCAS` on a CPU backend".to_string()]);
+
+        // multiple unsupported features come out in Feature order.
+        let mut b = KernelBuilder::new("both");
+        let _ = b.dyn_shared(Ty::I32);
+        let _ = b.shfl(ShflKind::Down, c_f32(1.0), c_i32(4));
+        let k = b.build();
+        let hip = explain_unsupported(&k, Framework::HipCpu);
+        assert_eq!(hip.len(), 2);
+        assert!(hip[0].contains("warp shuffle"));
+        assert!(hip[1].contains("extern shared memory"));
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod lower;
 pub mod memory_mapping;
 pub mod param_pack;
 
-pub use coverage::{coverage, detect_features, judge, Framework, Verdict};
+pub use coverage::{coverage, detect_features, explain_unsupported, judge, Framework, Verdict};
 pub use extra_vars::{insert_extra_vars, ExtraVar, EXTRA_VARS};
 pub use fission::{spmd_to_mpmd, FissionError};
 pub use lower::LoweredProgram;

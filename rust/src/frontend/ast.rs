@@ -1,0 +1,158 @@
+//! AST for the CUDA-C subset, with a span on every node so sema/emit
+//! diagnostics always point at real source.
+
+use super::lex::Span;
+use crate::ir::{Special, Ty};
+
+/// Source-level scalar types. `unsigned`/`signed int` are modelled as
+/// `int` (the IR is two's-complement i32 either way).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CTy {
+    Int,
+    Long,
+    Float,
+    Double,
+    Bool,
+}
+
+impl CTy {
+    pub fn to_ir(self) -> Ty {
+        match self {
+            CTy::Int => Ty::I32,
+            CTy::Long => Ty::I64,
+            CTy::Float => Ty::F32,
+            CTy::Double => Ty::F64,
+            CTy::Bool => Ty::Bool,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CBinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Shl,
+    Shr,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    BitAnd,
+    BitOr,
+    BitXor,
+    LAnd,
+    LOr,
+}
+
+impl CBinOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            CBinOp::Add => "+",
+            CBinOp::Sub => "-",
+            CBinOp::Mul => "*",
+            CBinOp::Div => "/",
+            CBinOp::Rem => "%",
+            CBinOp::Shl => "<<",
+            CBinOp::Shr => ">>",
+            CBinOp::Lt => "<",
+            CBinOp::Le => "<=",
+            CBinOp::Gt => ">",
+            CBinOp::Ge => ">=",
+            CBinOp::Eq => "==",
+            CBinOp::Ne => "!=",
+            CBinOp::BitAnd => "&",
+            CBinOp::BitOr => "|",
+            CBinOp::BitXor => "^",
+            CBinOp::LAnd => "&&",
+            CBinOp::LOr => "||",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CUnOp {
+    Neg,
+    /// logical `!`
+    Not,
+    /// `&` — only legal as an atomic operand (`&p[i]`)
+    AddrOf,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExprAst {
+    Ident { name: String, span: Span },
+    Int { value: i64, long: bool, span: Span },
+    Float { value: f64, f32: bool, span: Span },
+    /// `threadIdx.x`, `blockDim.y`, … resolved at parse time.
+    Special { which: Special, span: Span },
+    Bin { op: CBinOp, lhs: Box<ExprAst>, rhs: Box<ExprAst>, span: Span },
+    Un { op: CUnOp, arg: Box<ExprAst>, span: Span },
+    Index { base: Box<ExprAst>, idx: Box<ExprAst>, span: Span },
+    Call { name: String, args: Vec<ExprAst>, span: Span },
+    Cast { ty: CTy, arg: Box<ExprAst>, span: Span },
+    Ternary { cond: Box<ExprAst>, then_: Box<ExprAst>, else_: Box<ExprAst>, span: Span },
+}
+
+impl ExprAst {
+    pub fn span(&self) -> Span {
+        match self {
+            ExprAst::Ident { span, .. }
+            | ExprAst::Int { span, .. }
+            | ExprAst::Float { span, .. }
+            | ExprAst::Special { span, .. }
+            | ExprAst::Bin { span, .. }
+            | ExprAst::Un { span, .. }
+            | ExprAst::Index { span, .. }
+            | ExprAst::Call { span, .. }
+            | ExprAst::Cast { span, .. }
+            | ExprAst::Ternary { span, .. } => *span,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum StmtAst {
+    Decl { ty: CTy, name: String, init: Option<ExprAst>, span: Span },
+    /// `__shared__ T name[N];` / `extern __shared__ T name[];`
+    SharedDecl { ty: CTy, name: String, len: usize, dynamic: bool, span: Span },
+    /// `x = e` / `x += e` / `p[i] = e` / `p[i] += e` (op = compound op)
+    Assign { target: ExprAst, op: Option<CBinOp>, value: ExprAst, span: Span },
+    /// Expression statement — must be a void-returning builtin call
+    /// (`__syncthreads()`, value-discarding atomics).
+    Call { call: ExprAst, span: Span },
+    If { cond: ExprAst, then_: Vec<StmtAst>, else_: Vec<StmtAst>, span: Span },
+    For {
+        init: Option<Box<StmtAst>>,
+        cond: Option<ExprAst>,
+        step: Option<Box<StmtAst>>,
+        body: Vec<StmtAst>,
+        span: Span,
+    },
+    While { cond: ExprAst, body: Vec<StmtAst>, span: Span },
+    /// Bare `{ … }` — a C scope; flattened into the enclosing CIR body.
+    Block { body: Vec<StmtAst>, span: Span },
+    Break { span: Span },
+    Continue { span: Span },
+    Return { span: Span },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamAst {
+    pub ty: CTy,
+    pub is_ptr: bool,
+    pub name: String,
+    pub span: Span,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelAst {
+    pub name: String,
+    pub params: Vec<ParamAst>,
+    pub body: Vec<StmtAst>,
+    pub span: Span,
+}

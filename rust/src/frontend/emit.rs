@@ -1,0 +1,661 @@
+//! AST → CIR emission: statement lowering, `for` canonicalisation and
+//! the `ir::verify` output contract.
+//!
+//! Emission mirrors how `ir::builder` kernels are hand-written so a
+//! faithfully-transliterated `.cu` source produces *structurally
+//! identical* CIR (same statement tree, same expression shapes, same
+//! register allocation order) — the property the differential tests in
+//! `tests/frontend_roundtrip.rs` rely on for bit-equal outputs and
+//! identical ExecStats.
+
+use super::ast::*;
+use super::lex::Span;
+use super::sema::{is_atomic_name, shfl_kind, vote_kind, Sema, Sym, VTy};
+use super::Diagnostic;
+use crate::ir::{
+    self, AddrSpace, AtomicOp, Expr, Kernel, ParamDecl, ParamTy, Reg, SharedDecl, Stmt, Ty,
+    VoteKind,
+};
+
+/// Lower one parsed kernel to verified CIR.
+pub fn emit_kernel(src: &str, k: &KernelAst) -> Result<Kernel, Diagnostic> {
+    let mut em = Emitter {
+        sema: Sema::new(src),
+        shared: Vec::new(),
+        dyn_shared: None,
+        params: Vec::new(),
+    };
+    for (i, p) in k.params.iter().enumerate() {
+        let t = p.ty.to_ir();
+        let (vty, pty) = if p.is_ptr {
+            (VTy::Ptr(t), ParamTy::Ptr(AddrSpace::Global, t))
+        } else {
+            (VTy::Scalar(t), ParamTy::Scalar(t))
+        };
+        em.params.push(ParamDecl { name: p.name.clone(), ty: pty });
+        em.sema.declare(&p.name, Sym::Param { index: i, vty }, p.span)?;
+    }
+    let mut body = Vec::new();
+    for s in &k.body {
+        em.stmt(s, &mut body)?;
+    }
+    let kernel = Kernel {
+        name: k.name.clone(),
+        params: em.params,
+        shared: em.shared,
+        dyn_shared_elem: em.dyn_shared,
+        body,
+        num_regs: em.sema.num_regs(),
+    };
+    if let Err(errs) = ir::verify::verify(&kernel) {
+        let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+        return Err(Diagnostic::at(
+            format!("kernel `{}` failed CIR verification: {}", kernel.name, msgs.join("; ")),
+            k.span,
+            src,
+        ));
+    }
+    Ok(kernel)
+}
+
+struct Emitter<'a> {
+    sema: Sema<'a>,
+    shared: Vec<SharedDecl>,
+    dyn_shared: Option<Ty>,
+    params: Vec<ParamDecl>,
+}
+
+impl<'a> Emitter<'a> {
+    fn scoped_stmts(&mut self, body: &[StmtAst]) -> Result<Vec<Stmt>, Diagnostic> {
+        self.sema.push_scope();
+        let mut out = Vec::new();
+        let r = body.iter().try_for_each(|s| self.stmt(s, &mut out));
+        self.sema.pop_scope();
+        r?;
+        Ok(out)
+    }
+
+    fn stmt(&mut self, s: &StmtAst, out: &mut Vec<Stmt>) -> Result<(), Diagnostic> {
+        match s {
+            StmtAst::SharedDecl { ty, name, len, dynamic, span } => {
+                let elem = ty.to_ir();
+                if *dynamic {
+                    if self.dyn_shared.is_some() {
+                        return Err(self
+                            .sema
+                            .diag("only one `extern __shared__` array is supported", *span));
+                    }
+                    self.dyn_shared = Some(elem);
+                    self.sema.declare_function_scope(name, Sym::DynShared { elem }, *span)?;
+                } else {
+                    let index = self.shared.len();
+                    self.shared.push(SharedDecl { name: name.clone(), elem, len: *len });
+                    self.sema.declare_function_scope(name, Sym::SharedArr { index, elem }, *span)?;
+                }
+                Ok(())
+            }
+            StmtAst::Decl { ty, name, init, span } => {
+                let t = ty.to_ir();
+                let reg = self.sema.alloc_reg();
+                if let Some(init) = init {
+                    self.assign_rhs(reg, t, init, out)?;
+                }
+                self.sema.declare(name, Sym::Local { reg, ty: t }, *span)
+            }
+            StmtAst::Assign { target, op, value, span } => {
+                self.assign(target, *op, value, *span, out)
+            }
+            StmtAst::Call { call, span } => {
+                let ExprAst::Call { name, args, .. } = call else {
+                    return Err(self.sema.diag("expected a call statement", *span));
+                };
+                if name == "__syncthreads" {
+                    if !args.is_empty() {
+                        return Err(self.sema.diag("`__syncthreads()` takes no arguments", *span));
+                    }
+                    out.push(Stmt::SyncThreads);
+                    return Ok(());
+                }
+                if is_atomic_name(name) {
+                    return self.atomic(name, args, None, *span, out);
+                }
+                Err(self
+                    .sema
+                    .diag(format!("call to `{name}` cannot be used as a statement"), *span))
+            }
+            StmtAst::If { cond, then_, else_, .. } => {
+                let c = self.sema.lower_cond(cond)?;
+                let t = self.scoped_stmts(then_)?;
+                let e = self.scoped_stmts(else_)?;
+                out.push(Stmt::If { cond: c, then_: t, else_: e });
+                Ok(())
+            }
+            StmtAst::While { cond, body, .. } => {
+                let c = self.sema.lower_cond(cond)?;
+                let b = self.scoped_stmts(body)?;
+                out.push(Stmt::While { cond: c, body: b });
+                Ok(())
+            }
+            StmtAst::For { init, cond, step, body, span } => {
+                self.for_stmt(init.as_deref(), cond.as_ref(), step.as_deref(), body, *span, out)
+            }
+            StmtAst::Block { body, .. } => {
+                let b = self.scoped_stmts(body)?;
+                out.extend(b);
+                Ok(())
+            }
+            StmtAst::Break { .. } => {
+                out.push(Stmt::Break);
+                Ok(())
+            }
+            StmtAst::Continue { .. } => {
+                out.push(Stmt::Continue);
+                Ok(())
+            }
+            StmtAst::Return { .. } => {
+                out.push(Stmt::Return);
+                Ok(())
+            }
+        }
+    }
+
+    /// Emit `dst = rhs` where rhs may be a warp collective or an atomic
+    /// (which are statements in CIR), or any ordinary expression.
+    fn assign_rhs(
+        &mut self,
+        dst: Reg,
+        dst_ty: Ty,
+        rhs: &ExprAst,
+        out: &mut Vec<Stmt>,
+    ) -> Result<(), Diagnostic> {
+        if let ExprAst::Call { name, args, span } = rhs {
+            if let Some(kind) = shfl_kind(name) {
+                let (e, vt) = self.sema.lower_shfl(kind, args, *span)?;
+                if vt != dst_ty {
+                    return Err(self.sema.diag(
+                        format!(
+                            "shuffle of `{}` cannot initialise a `{}` variable",
+                            vt.c_name(),
+                            dst_ty.c_name()
+                        ),
+                        *span,
+                    ));
+                }
+                out.push(Stmt::Assign { dst, expr: e });
+                return Ok(());
+            }
+            if let Some(kind) = vote_kind(name) {
+                let (e, vt) = self.sema.lower_vote(kind, args, *span)?;
+                if vt != dst_ty {
+                    let want = if kind == VoteKind::Ballot { "int" } else { "bool" };
+                    return Err(self.sema.diag(
+                        format!("`{name}` result must be assigned to a `{want}` variable"),
+                        *span,
+                    ));
+                }
+                out.push(Stmt::Assign { dst, expr: e });
+                return Ok(());
+            }
+            if is_atomic_name(name) {
+                return self.atomic(name, args, Some((dst, dst_ty)), *span, out);
+            }
+        }
+        let e = self.sema.lower_typed(rhs, dst_ty)?;
+        out.push(Stmt::Assign { dst, expr: e });
+        Ok(())
+    }
+
+    fn assign(
+        &mut self,
+        target: &ExprAst,
+        op: Option<CBinOp>,
+        value: &ExprAst,
+        span: Span,
+        out: &mut Vec<Stmt>,
+    ) -> Result<(), Diagnostic> {
+        match target {
+            ExprAst::Ident { name, span: tspan } => {
+                let Some(sym) = self.sema.lookup(name) else {
+                    return Err(self.sema.diag(format!("undeclared identifier `{name}`"), *tspan));
+                };
+                match sym {
+                    Sym::Local { reg, ty } => {
+                        if let Some(op) = op {
+                            let rhs = self.sema.lower_typed(value, ty)?;
+                            let o = self.sema.map_arith(op, ty, span)?;
+                            out.push(Stmt::Assign {
+                                dst: reg,
+                                expr: Expr::Bin(o, Box::new(Expr::Reg(reg)), Box::new(rhs)),
+                            });
+                            Ok(())
+                        } else {
+                            self.assign_rhs(reg, ty, value, out)
+                        }
+                    }
+                    Sym::Param { .. } => Err(self.sema.diag(
+                        format!("cannot assign to parameter `{name}`; copy it into a local first"),
+                        *tspan,
+                    )),
+                    Sym::SharedArr { .. } | Sym::DynShared { .. } => Err(self.sema.diag(
+                        format!(
+                            "cannot assign to array `{name}` itself; assign to an element `{name}[i]`"
+                        ),
+                        *tspan,
+                    )),
+                }
+            }
+            ExprAst::Index { .. } => {
+                let (ptr, elem) = self.sema.lower_place(target)?;
+                let val = if let Some(op) = op {
+                    let rhs = self.sema.lower_typed(value, elem)?;
+                    let o = self.sema.map_arith(op, elem, span)?;
+                    Expr::Bin(
+                        o,
+                        Box::new(Expr::Load { ptr: Box::new(ptr.clone()), ty: elem }),
+                        Box::new(rhs),
+                    )
+                } else {
+                    self.sema.lower_typed(value, elem)?
+                };
+                out.push(Stmt::Store { ptr, val, ty: elem });
+                Ok(())
+            }
+            other => Err(self
+                .sema
+                .diag("invalid assignment target (expected a variable or `p[i]`)", other.span())),
+        }
+    }
+
+    fn atomic(
+        &mut self,
+        name: &str,
+        args: &[ExprAst],
+        dst: Option<(Reg, Ty)>,
+        span: Span,
+        out: &mut Vec<Stmt>,
+    ) -> Result<(), Diagnostic> {
+        let want_args = if name == "atomicCAS" { 3 } else { 2 };
+        if args.len() != want_args {
+            return Err(self.sema.diag(
+                format!("`{name}` takes exactly {want_args} arguments"),
+                span,
+            ));
+        }
+        let (ptr, elem) = self.sema.lower_place(&args[0])?;
+        if let Some((_, dty)) = dst {
+            if dty != elem {
+                return Err(self.sema.diag(
+                    format!(
+                        "atomic on `{}` cannot initialise a `{}` variable",
+                        elem.c_name(),
+                        dty.c_name()
+                    ),
+                    span,
+                ));
+            }
+        }
+        if name == "atomicCAS" {
+            if !matches!(elem, Ty::I32 | Ty::I64) {
+                return Err(self.sema.diag("`atomicCAS` requires an integer location", span));
+            }
+            let cmp = self.sema.lower_typed(&args[1], elem)?;
+            let val = self.sema.lower_typed(&args[2], elem)?;
+            out.push(Stmt::AtomicCas { ptr, cmp, val, ty: elem, dst: dst.map(|d| d.0) });
+            return Ok(());
+        }
+        let op = match name {
+            "atomicAdd" => AtomicOp::Add,
+            "atomicSub" => AtomicOp::Sub,
+            "atomicMin" => AtomicOp::Min,
+            "atomicMax" => AtomicOp::Max,
+            "atomicAnd" => AtomicOp::And,
+            "atomicOr" => AtomicOp::Or,
+            "atomicXor" => AtomicOp::Xor,
+            "atomicExch" => AtomicOp::Exch,
+            _ => unreachable!("is_atomic_name covered the set"),
+        };
+        let int_only = matches!(op, AtomicOp::And | AtomicOp::Or | AtomicOp::Xor);
+        if int_only && !matches!(elem, Ty::I32 | Ty::I64) {
+            return Err(self.sema.diag(
+                format!("`{name}` requires an integer location"),
+                span,
+            ));
+        }
+        let val = self.sema.lower_typed(&args[1], elem)?;
+        out.push(Stmt::AtomicRmw { op, ptr, val, ty: elem, dst: dst.map(|d| d.0) });
+        Ok(())
+    }
+
+    /// Canonical `for (int i = start; i < end; i += step)` becomes
+    /// `Stmt::For` (the form the SPMD→MPMD fission pass reasons about);
+    /// anything else desugars to init + `While` with the step appended
+    /// to the body (in which case `continue` is rejected, since it
+    /// would skip the step).
+    fn for_stmt(
+        &mut self,
+        init: Option<&StmtAst>,
+        cond: Option<&ExprAst>,
+        step: Option<&StmtAst>,
+        body: &[StmtAst],
+        span: Span,
+        out: &mut Vec<Stmt>,
+    ) -> Result<(), Diagnostic> {
+        if let (
+            Some(StmtAst::Decl { ty, name, init: Some(start_ast), span: dspan }),
+            Some(c),
+            Some(st),
+        ) = (init, cond, step)
+        {
+            let t = ty.to_ir();
+            // `Stmt::For` owns its iteration count: body writes to the
+            // loop variable would not affect progression. Any body
+            // assignment (or shadowing) of the variable bails to the
+            // while-desugar, which has exact C semantics.
+            if matches!(t, Ty::I32 | Ty::I64) && !body_assigns_to(body, name) {
+                if let ExprAst::Bin { op: CBinOp::Lt, lhs, rhs, .. } = c {
+                    let lhs_is_var = matches!(&**lhs, ExprAst::Ident { name: n, .. } if n == name);
+                    if lhs_is_var {
+                        if let Some(step_value) = canonical_step(st, name) {
+                            self.sema.push_scope();
+                            let var = self.sema.alloc_reg();
+                            let start = self.sema.lower_typed(start_ast, t)?;
+                            self.sema.declare(name, Sym::Local { reg: var, ty: t }, *dspan)?;
+                            let end = self.sema.lower_typed(rhs, t)?;
+                            let step_e = self.sema.lower_typed(step_value, t)?;
+                            let body_s = self.scoped_stmts(body);
+                            self.sema.pop_scope();
+                            let body_s = body_s?;
+                            out.push(Stmt::For { var, start, end, step: step_e, body: body_s });
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+        }
+        // Non-canonical: desugar to while.
+        if contains_continue(body) {
+            return Err(self.sema.diag(
+                "`continue` inside a non-canonical `for` is not supported \
+                 (use `for (int i = a; i < b; i += c)`)",
+                span,
+            ));
+        }
+        self.sema.push_scope();
+        let result = (|| {
+            if let Some(i) = init {
+                self.stmt(i, out)?;
+            }
+            let c = match cond {
+                Some(c) => self.sema.lower_cond(c)?,
+                None => ir::c_bool(true),
+            };
+            // The body gets its own scope (so it may shadow the loop
+            // variable); the step runs in the header scope after it.
+            let mut b = self.scoped_stmts(body)?;
+            if let Some(st) = step {
+                self.stmt(st, &mut b)?;
+            }
+            out.push(Stmt::While { cond: c, body: b });
+            Ok(())
+        })();
+        self.sema.pop_scope();
+        result
+    }
+}
+
+/// `i += e` / `i = i + e` / `i++` (already desugared to `i += 1` by the
+/// parser) with `i` the loop variable → the step expression.
+fn canonical_step<'s>(step: &'s StmtAst, var: &str) -> Option<&'s ExprAst> {
+    match step {
+        StmtAst::Assign { target: ExprAst::Ident { name, .. }, op: Some(CBinOp::Add), value, .. }
+            if name == var =>
+        {
+            Some(value)
+        }
+        StmtAst::Assign { target: ExprAst::Ident { name, .. }, op: None, value, .. }
+            if name == var =>
+        {
+            match value {
+                ExprAst::Bin { op: CBinOp::Add, lhs, rhs, .. }
+                    if matches!(&**lhs, ExprAst::Ident { name: n, .. } if n == var) =>
+                {
+                    Some(&**rhs)
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Does `body` assign to (or shadow) variable `name` anywhere?
+/// Conservative — a hit only demotes the loop from `Stmt::For` to the
+/// exact-C while-desugar, never the other way.
+fn body_assigns_to(body: &[StmtAst], name: &str) -> bool {
+    body.iter().any(|s| match s {
+        StmtAst::Assign { target: ExprAst::Ident { name: n, .. }, .. } => n == name,
+        StmtAst::Decl { name: n, .. } => n == name,
+        StmtAst::If { then_, else_, .. } => {
+            body_assigns_to(then_, name) || body_assigns_to(else_, name)
+        }
+        StmtAst::Block { body, .. } | StmtAst::While { body, .. } => body_assigns_to(body, name),
+        StmtAst::For { init, step, body, .. } => {
+            init.as_deref().is_some_and(|s| body_assigns_to(std::slice::from_ref(s), name))
+                || step.as_deref().is_some_and(|s| body_assigns_to(std::slice::from_ref(s), name))
+                || body_assigns_to(body, name)
+        }
+        _ => false,
+    })
+}
+
+/// Does `body` contain a `continue` belonging to this loop level
+/// (i.e. not inside a nested loop)?
+fn contains_continue(body: &[StmtAst]) -> bool {
+    body.iter().any(|s| match s {
+        StmtAst::Continue { .. } => true,
+        StmtAst::If { then_, else_, .. } => contains_continue(then_) || contains_continue(else_),
+        StmtAst::Block { body, .. } => contains_continue(body),
+        _ => false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse_kernels;
+    use crate::ir::*;
+
+    fn one(src: &str) -> Kernel {
+        let ks = parse_kernels(src).unwrap_or_else(|d| panic!("{}", d.render("test.cu")));
+        assert_eq!(ks.len(), 1);
+        ks.into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn vecadd_matches_hand_built_cir_exactly() {
+        let parsed = one(
+            "__global__ void vecAdd(float* a, float* b, float* c, int n) {\n\
+             \x20   int id = threadIdx.x + blockIdx.x * blockDim.x;\n\
+             \x20   if (id < n) {\n\
+             \x20       c[id] = a[id] + b[id];\n\
+             \x20   }\n\
+             }",
+        );
+        let mut b = KernelBuilder::new("vecAdd");
+        let pa = b.ptr_param("a", Ty::F32);
+        let pb = b.ptr_param("b", Ty::F32);
+        let pc = b.ptr_param("c", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bl| {
+            let sum = add(at(pa.clone(), reg(id), Ty::F32), at(pb.clone(), reg(id), Ty::F32));
+            bl.store_at(pc.clone(), reg(id), sum, Ty::F32);
+        });
+        assert_eq!(parsed, b.build());
+    }
+
+    #[test]
+    fn canonical_for_lowers_to_stmt_for() {
+        let k = one(
+            "__global__ void k(int* p, int n) {\n\
+             for (int i = 0; i < n; i += 2) { p[i] = i; }\n\
+             }",
+        );
+        match &k.body[0] {
+            Stmt::For { var, start, end, step, body } => {
+                assert_eq!(*var, Reg(0));
+                assert_eq!(*start, c_i32(0));
+                assert_eq!(*end, param(1));
+                assert_eq!(*step, c_i32(2));
+                assert_eq!(body.len(), 1);
+            }
+            other => panic!("expected For, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn noncanonical_for_desugars_to_while() {
+        // `i > 0` direction is non-canonical → init + while + step.
+        let k = one(
+            "__global__ void k(int* p) {\n\
+             for (int i = 8; i > 0; i /= 2) { p[i] = i; }\n\
+             }",
+        );
+        assert_eq!(k.body.len(), 2); // Assign(init) + While
+        assert!(matches!(k.body[0], Stmt::Assign { .. }));
+        match &k.body[1] {
+            Stmt::While { body, .. } => {
+                assert_eq!(body.len(), 2); // store + step
+                assert!(matches!(body[1], Stmt::Assign { .. }));
+            }
+            other => panic!("expected While, got {other:?}"),
+        }
+    }
+
+    /// A body write to the loop variable must demote the loop to the
+    /// while-desugar — `Stmt::For` owns its counter, so body writes
+    /// would silently not affect progression (C says they do).
+    #[test]
+    fn for_with_body_write_to_loop_var_desugars() {
+        let k = one(
+            "__global__ void k(int* p, int n) {\n\
+             for (int i = 0; i < n; i += 1) { p[i] = 1; i += 1; }\n\
+             }",
+        );
+        assert_eq!(k.body.len(), 2); // init assign + while
+        assert!(matches!(k.body[0], Stmt::Assign { .. }));
+        match &k.body[1] {
+            Stmt::While { body, .. } => assert_eq!(body.len(), 3), // store + i+=1 + step
+            other => panic!("expected While, got {other:?}"),
+        }
+    }
+
+    /// The for body is a nested C scope: shadowing the loop variable is
+    /// legal (and also demotes to the desugar, conservatively).
+    #[test]
+    fn for_body_may_shadow_loop_var() {
+        let k = one(
+            "__global__ void k(int* p, int n) {\n\
+             for (int i = 0; i < n; i += 1) { int i = 5; p[i] = i; }\n\
+             }",
+        );
+        assert!(matches!(k.body[1], Stmt::While { .. }));
+    }
+
+    #[test]
+    fn continue_in_noncanonical_for_rejected() {
+        let e = parse_kernels(
+            "__global__ void k(int* p) {\n\
+             for (int i = 8; i > 0; i /= 2) { continue; }\n\
+             }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("`continue` inside a non-canonical `for`"));
+    }
+
+    #[test]
+    fn atomics_and_sync_lower() {
+        let k = one(
+            "__global__ void k(int* bins, int n) {\n\
+             int gid = threadIdx.x + blockIdx.x * blockDim.x;\n\
+             atomicAdd(&bins[gid], 1);\n\
+             int old = atomicCAS(&bins[0], 0, gid);\n\
+             __syncthreads();\n\
+             bins[1] = old;\n\
+             }",
+        );
+        assert!(matches!(k.body[1], Stmt::AtomicRmw { op: AtomicOp::Add, dst: None, .. }));
+        assert!(matches!(k.body[2], Stmt::AtomicCas { dst: Some(_), .. }));
+        assert_eq!(k.body[3], Stmt::SyncThreads);
+    }
+
+    #[test]
+    fn shfl_assignment_form_lowers() {
+        let k = one(
+            "__global__ void k(int* p, int n) {\n\
+             int v = p[0];\n\
+             int s = __shfl_down_sync(0xffffffff, v, 16);\n\
+             p[1] = v + s;\n\
+             }",
+        );
+        match &k.body[1] {
+            Stmt::Assign { expr: Expr::WarpShfl { kind: ShflKind::Down, .. }, .. } => {}
+            other => panic!("expected shfl assign, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nested_shfl_rejected() {
+        let e = parse_kernels(
+            "__global__ void k(int* p) {\n\
+             int v = p[0] + __shfl_down_sync(0xffffffff, p[0], 1);\n\
+             }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("entire right-hand side"));
+    }
+
+    #[test]
+    fn param_assignment_rejected() {
+        let e = parse_kernels("__global__ void k(int n) { n = 1; }").unwrap_err();
+        assert!(e.msg.contains("cannot assign to parameter `n`"));
+    }
+
+    #[test]
+    fn divergent_barrier_fails_verification() {
+        let e = parse_kernels(
+            "__global__ void k(int n) {\n\
+             if (threadIdx.x < 16) { __syncthreads(); }\n\
+             }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("failed CIR verification"));
+        assert!(e.msg.contains("barrier under thread-divergent"));
+    }
+
+    #[test]
+    fn dyn_shared_and_static_shared_decls() {
+        let k = one(
+            "__global__ void k(float* a) {\n\
+             __shared__ float tile[64];\n\
+             extern __shared__ int dyn[];\n\
+             tile[threadIdx.x] = a[threadIdx.x];\n\
+             dyn[threadIdx.x] = 0;\n\
+             }",
+        );
+        assert_eq!(k.shared.len(), 1);
+        assert_eq!(k.shared[0].elem, Ty::F32);
+        assert_eq!(k.shared[0].len, 64);
+        assert_eq!(k.dyn_shared_elem, Some(Ty::I32));
+    }
+
+    #[test]
+    fn compound_store_desugars_to_load_modify_store() {
+        let k = one("__global__ void k(int* p) { p[0] += 2; }");
+        match &k.body[0] {
+            Stmt::Store { val: Expr::Bin(BinOp::Add, l, _), .. } => {
+                assert!(matches!(&**l, Expr::Load { .. }));
+            }
+            other => panic!("expected compound store, got {other:?}"),
+        }
+    }
+}

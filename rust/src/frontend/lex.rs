@@ -1,0 +1,331 @@
+//! CUDA-C lexer: source text → tokens with 1-based line/col spans.
+//!
+//! Preprocessor lines (`#include`, `#define`, …) are skipped whole so
+//! real-world `.cu` headers tokenize; the subset never expands macros.
+
+use super::Diagnostic;
+use std::fmt;
+
+/// A 1-based source position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    /// Integer literal (decimal or hex). `long` = had an `l`/`L` suffix.
+    Int { value: i64, long: bool },
+    /// Floating literal. `f32` = had an `f`/`F` suffix.
+    Float { value: f64, f32: bool },
+    Str(String),
+    Punct(&'static str),
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "`{s}`"),
+            Tok::Int { value, .. } => write!(f, "integer literal `{value}`"),
+            Tok::Float { value, .. } => write!(f, "float literal `{value}`"),
+            Tok::Str(_) => write!(f, "string literal"),
+            Tok::Punct(p) => write!(f, "`{p}`"),
+            Tok::Eof => write!(f, "end of file"),
+        }
+    }
+}
+
+/// Multi-char puncts first so maximal munch works.
+const PUNCTS: &[&str] = &[
+    "<<=", ">>=", "<<", ">>", "<=", ">=", "==", "!=", "&&", "||", "+=", "-=", "*=", "/=", "%=",
+    "&=", "|=", "^=", "++", "--", "+", "-", "*", "/", "%", "<", ">", "=", "!", "&", "|", "^", "~",
+    "(", ")", "{", "}", "[", "]", ";", ",", "?", ":", ".",
+];
+
+pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, Diagnostic> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut col = 1u32;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            col = 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            col += 1;
+            i += 1;
+            continue;
+        }
+        // Preprocessor directive: skip the whole line.
+        if c == '#' {
+            while i < chars.len() && chars[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < chars.len() && chars[i + 1] == '/' {
+            while i < chars.len() && chars[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < chars.len() && chars[i + 1] == '*' {
+            let open = Span { line, col };
+            i += 2;
+            col += 2;
+            loop {
+                if i + 1 >= chars.len() {
+                    return Err(Diagnostic::at("unterminated block comment", open, src));
+                }
+                if chars[i] == '*' && chars[i + 1] == '/' {
+                    i += 2;
+                    col += 2;
+                    break;
+                }
+                if chars[i] == '\n' {
+                    line += 1;
+                    col = 1;
+                } else {
+                    col += 1;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        let span = Span { line, col };
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            while i < chars.len() && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                i += 1;
+                col += 1;
+            }
+            let s: String = chars[start..i].iter().collect();
+            toks.push((Tok::Ident(s), span));
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (tok, ni, ncol) = lex_number(&chars, i, col, span, src)?;
+            i = ni;
+            col = ncol;
+            toks.push((tok, span));
+            continue;
+        }
+        if c == '"' {
+            i += 1;
+            col += 1;
+            let start = i;
+            while i < chars.len() && chars[i] != '"' && chars[i] != '\n' {
+                i += 1;
+                col += 1;
+            }
+            if i >= chars.len() || chars[i] == '\n' {
+                return Err(Diagnostic::at("unterminated string literal", span, src));
+            }
+            let s: String = chars[start..i].iter().collect();
+            i += 1;
+            col += 1;
+            toks.push((Tok::Str(s), span));
+            continue;
+        }
+        let mut matched = false;
+        for p in PUNCTS {
+            // PUNCTS are ASCII, so byte length == char count.
+            if punct_at(&chars, i, p) {
+                toks.push((Tok::Punct(p), span));
+                i += p.len();
+                col += p.len() as u32;
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            return Err(Diagnostic::at(format!("unexpected character `{c}`"), span, src));
+        }
+    }
+    toks.push((Tok::Eof, Span { line, col }));
+    Ok(toks)
+}
+
+/// Does the punct `p` start at `chars[i]`? Allocation-free comparison
+/// on the per-token hot path.
+fn punct_at(chars: &[char], i: usize, p: &str) -> bool {
+    let mut j = i;
+    for pc in p.chars() {
+        if j >= chars.len() || chars[j] != pc {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// Lex one numeric literal starting at `chars[i]`; returns the token
+/// and the updated (index, column).
+fn lex_number(
+    chars: &[char],
+    mut i: usize,
+    mut col: u32,
+    span: Span,
+    src: &str,
+) -> Result<(Tok, usize, u32), Diagnostic> {
+    // Hex.
+    if chars[i] == '0' && i + 1 < chars.len() && (chars[i + 1] == 'x' || chars[i + 1] == 'X') {
+        i += 2;
+        col += 2;
+        let start = i;
+        while i < chars.len() && chars[i].is_ascii_hexdigit() {
+            i += 1;
+            col += 1;
+        }
+        let digits: String = chars[start..i].iter().collect();
+        if digits.is_empty() {
+            return Err(Diagnostic::at("invalid hex literal", span, src));
+        }
+        let value = u64::from_str_radix(&digits, 16)
+            .map_err(|_| Diagnostic::at("hex literal out of range", span, src))?
+            as i64;
+        let mut long = false;
+        while i < chars.len() && matches!(chars[i], 'l' | 'L' | 'u' | 'U') {
+            if chars[i] == 'l' || chars[i] == 'L' {
+                long = true;
+            }
+            i += 1;
+            col += 1;
+        }
+        return Ok((Tok::Int { value, long }, i, col));
+    }
+    let start = i;
+    let mut is_float = false;
+    while i < chars.len() && chars[i].is_ascii_digit() {
+        i += 1;
+        col += 1;
+    }
+    if i < chars.len() && chars[i] == '.' {
+        is_float = true;
+        i += 1;
+        col += 1;
+        while i < chars.len() && chars[i].is_ascii_digit() {
+            i += 1;
+            col += 1;
+        }
+    }
+    if i < chars.len() && (chars[i] == 'e' || chars[i] == 'E') {
+        let mut j = i + 1;
+        if j < chars.len() && (chars[j] == '+' || chars[j] == '-') {
+            j += 1;
+        }
+        if j < chars.len() && chars[j].is_ascii_digit() {
+            while j < chars.len() && chars[j].is_ascii_digit() {
+                j += 1;
+            }
+            is_float = true;
+            col += (j - i) as u32;
+            i = j;
+        }
+    }
+    let text: String = chars[start..i].iter().collect();
+    // Suffixes.
+    let mut f32_suffix = false;
+    let mut long = false;
+    while i < chars.len() && matches!(chars[i], 'f' | 'F' | 'l' | 'L' | 'u' | 'U') {
+        match chars[i] {
+            'f' | 'F' => f32_suffix = true,
+            'l' | 'L' => long = true,
+            _ => {}
+        }
+        i += 1;
+        col += 1;
+    }
+    if is_float || f32_suffix {
+        let value: f64 = text
+            .parse()
+            .map_err(|_| Diagnostic::at(format!("invalid float literal `{text}`"), span, src))?;
+        Ok((Tok::Float { value, f32: f32_suffix }, i, col))
+    } else {
+        let value: i64 = text.parse().map_err(|_| {
+            Diagnostic::at(format!("integer literal `{text}` out of range"), span, src)
+        })?;
+        Ok((Tok::Int { value, long }, i, col))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|(t, _)| t).collect()
+    }
+
+    #[test]
+    fn idents_numbers_puncts() {
+        let t = kinds("int x = 42 + 0x1f;");
+        assert_eq!(t[0], Tok::Ident("int".into()));
+        assert_eq!(t[1], Tok::Ident("x".into()));
+        assert_eq!(t[2], Tok::Punct("="));
+        assert_eq!(t[3], Tok::Int { value: 42, long: false });
+        assert_eq!(t[4], Tok::Punct("+"));
+        assert_eq!(t[5], Tok::Int { value: 31, long: false });
+        assert_eq!(t[6], Tok::Punct(";"));
+        assert_eq!(t[7], Tok::Eof);
+    }
+
+    #[test]
+    fn float_literals_and_suffixes() {
+        let t = kinds("0.5f 2.0 1e-3 3.402823466e+38f 7l");
+        assert_eq!(t[0], Tok::Float { value: 0.5, f32: true });
+        assert_eq!(t[1], Tok::Float { value: 2.0, f32: false });
+        assert_eq!(t[2], Tok::Float { value: 1e-3, f32: false });
+        match t[3] {
+            Tok::Float { value, f32: true } => assert_eq!(value as f32, f32::MAX),
+            ref other => panic!("expected f32 literal, got {other:?}"),
+        }
+        assert_eq!(t[4], Tok::Int { value: 7, long: true });
+    }
+
+    #[test]
+    fn maximal_munch_and_spans() {
+        let toks = lex("a <<= b << c <= d").unwrap();
+        assert_eq!(toks[1].0, Tok::Punct("<<="));
+        assert_eq!(toks[3].0, Tok::Punct("<<"));
+        assert_eq!(toks[5].0, Tok::Punct("<="));
+        assert_eq!(toks[0].1, Span { line: 1, col: 1 });
+        assert_eq!(toks[1].1, Span { line: 1, col: 3 });
+    }
+
+    #[test]
+    fn comments_and_preprocessor_skipped() {
+        let t = kinds("#include <cuda.h>\n// line\n/* blk\nblk */ x");
+        assert_eq!(t[0], Tok::Ident("x".into()));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn line_col_tracking_across_lines() {
+        let toks = lex("ab\n  cd").unwrap();
+        assert_eq!(toks[0].1, Span { line: 1, col: 1 });
+        assert_eq!(toks[1].1, Span { line: 2, col: 3 });
+    }
+
+    #[test]
+    fn unterminated_block_comment_errors() {
+        let e = lex("x /* never closed").unwrap_err();
+        assert_eq!(e.msg, "unterminated block comment");
+        assert_eq!((e.line, e.col), (1, 3));
+    }
+
+    #[test]
+    fn unexpected_character_errors() {
+        let e = lex("a @ b").unwrap_err();
+        assert_eq!(e.msg, "unexpected character `@`");
+        assert_eq!((e.line, e.col), (1, 3));
+    }
+}

@@ -1,0 +1,118 @@
+//! CUDA-C frontend: parse `.cu` source into CIR kernels.
+//!
+//! The paper's headline claim is running *unmodified CUDA source* on
+//! non-NVIDIA devices; this module closes the source gap for the
+//! reproduction. A self-contained CUDA-C subset compiler:
+//!
+//! * [`lex`] — tokens with 1-based line/col spans,
+//! * [`parse`] — recursive descent over `__global__` kernels
+//!   (params, locals, `if`/`for`/`while`/`break`/`continue`/`return`,
+//!   `__shared__` (static + `extern` dynamic), geometry builtins,
+//!   `__syncthreads()`, the `atomicAdd`/`atomicCAS` family,
+//!   `__shfl_*`/`__ballot_sync`, math builtins, casts, ternary),
+//! * [`sema`] — scoped symbol table, C-style type checking/promotion,
+//!   register allocation,
+//! * [`emit`] — AST → [`crate::ir::Kernel`], with the existing
+//!   `ir::verify` pass as the output contract.
+//!
+//! The result feeds `compiler::compile_kernel` unchanged: the fission →
+//! param-pack → bytecode-lowering pipeline and every backend/ExecMode
+//! just work. `examples/cuda/` ships `.cu` sources for the bundled
+//! benchmarks, differentially tested against the hand-built CIR specs
+//! in `tests/frontend_roundtrip.rs`. The supported grammar and the
+//! deliberate exclusions (templates, textures, host code) are
+//! documented in DESIGN.md §Frontend.
+
+pub mod ast;
+pub mod emit;
+pub mod harness;
+pub mod lex;
+pub mod parse;
+pub mod sema;
+
+use lex::Span;
+use std::fmt;
+
+/// A frontend diagnostic: message, 1-based line/col, and the offending
+/// source line (so [`Diagnostic::render`] can show a caret excerpt).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub msg: String,
+    pub line: u32,
+    pub col: u32,
+    /// The full text of the source line the span points into.
+    pub source_line: String,
+}
+
+impl Diagnostic {
+    pub fn at(msg: impl Into<String>, span: Span, src: &str) -> Self {
+        let source_line =
+            src.lines().nth(span.line.saturating_sub(1) as usize).unwrap_or("").to_string();
+        Diagnostic { msg: msg.into(), line: span.line, col: span.col, source_line }
+    }
+
+    /// Compiler-style rendering: message, `file:line:col`, source
+    /// excerpt with a caret under the offending column.
+    pub fn render(&self, file: &str) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let g = self.line.to_string();
+        let pad = " ".repeat(g.len());
+        let _ = writeln!(out, "error: {}", self.msg);
+        let _ = writeln!(out, " --> {file}:{}:{}", self.line, self.col);
+        let _ = writeln!(out, " {pad} |");
+        let _ = writeln!(out, " {g} | {}", self.source_line);
+        let _ = writeln!(out, " {pad} | {}^", " ".repeat(self.col.saturating_sub(1) as usize));
+        out
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} at {}:{}", self.msg, self.line, self.col)
+    }
+}
+
+impl std::error::Error for Diagnostic {}
+
+/// Parse every `__global__` kernel in `src` into verified CIR.
+pub fn parse_kernels(src: &str) -> Result<Vec<crate::ir::Kernel>, Diagnostic> {
+    let ast = parse::parse_translation_unit(src)?;
+    ast.iter().map(|k| emit::emit_kernel(src, k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagnostic_render_shape() {
+        let src = "line one\nint x = ;\n";
+        let d = Diagnostic::at("expected an expression, found `;`", Span { line: 2, col: 9 }, src);
+        assert_eq!(d.line, 2);
+        assert_eq!(d.col, 9);
+        assert_eq!(d.source_line, "int x = ;");
+        let r = d.render("t.cu");
+        assert!(r.contains("error: expected an expression, found `;`"));
+        assert!(r.contains(" --> t.cu:2:9"));
+        assert!(r.contains(" 2 | int x = ;"));
+        assert!(r.contains(" | ^") || r.contains("        ^"));
+    }
+
+    #[test]
+    fn parse_kernels_end_to_end() {
+        let src = r#"
+__global__ void vecAdd(float* a, float* b, float* c, int n) {
+    int id = threadIdx.x + blockIdx.x * blockDim.x;
+    if (id < n) {
+        c[id] = a[id] + b[id];
+    }
+}
+"#;
+        let ks = parse_kernels(src).expect("vecAdd parses");
+        assert_eq!(ks.len(), 1);
+        assert_eq!(ks[0].name, "vecAdd");
+        assert_eq!(ks[0].params.len(), 4);
+        assert_eq!(ks[0].num_regs, 1);
+    }
+}

@@ -1,0 +1,722 @@
+//! Recursive-descent parser for the CUDA-C subset.
+//!
+//! The grammar is a strict subset of CUDA C: a translation unit is a
+//! sequence of `__global__ void` kernel definitions (optionally under
+//! `extern "C"`); statements cover declarations, assignments
+//! (including compound `+=`-style and `++`/`--`), `if`/`for`/`while`/
+//! `break`/`continue`/`return`, `__shared__` declarations and builtin
+//! calls. Expressions use C precedence. Everything else — templates,
+//! textures, host code, `__device__` helpers — is rejected with a
+//! spanned diagnostic (see DESIGN.md §Frontend for the rationale).
+
+use super::ast::*;
+use super::lex::{lex, Span, Tok};
+use super::Diagnostic;
+use crate::ir::Special;
+
+/// Parse a whole `.cu` source into kernel ASTs.
+pub fn parse_translation_unit(src: &str) -> Result<Vec<KernelAst>, Diagnostic> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0, src };
+    let mut kernels = Vec::new();
+    while !p.at_eof() {
+        kernels.push(p.kernel()?);
+    }
+    if kernels.is_empty() {
+        return Err(Diagnostic::at(
+            "no `__global__` kernel found in source",
+            Span { line: 1, col: 1 },
+            src,
+        ));
+    }
+    Ok(kernels)
+}
+
+fn is_type_name(s: &str) -> bool {
+    matches!(s, "int" | "long" | "float" | "double" | "bool" | "unsigned" | "signed" | "const")
+}
+
+fn geom_special(base: &str, field: &str) -> Option<Special> {
+    match (base, field) {
+        ("threadIdx", "x") => Some(Special::ThreadIdxX),
+        ("threadIdx", "y") => Some(Special::ThreadIdxY),
+        ("blockIdx", "x") => Some(Special::BlockIdxX),
+        ("blockIdx", "y") => Some(Special::BlockIdxY),
+        ("blockDim", "x") => Some(Special::BlockDimX),
+        ("blockDim", "y") => Some(Special::BlockDimY),
+        ("gridDim", "x") => Some(Special::GridDimX),
+        ("gridDim", "y") => Some(Special::GridDimY),
+        _ => None,
+    }
+}
+
+fn is_geom_base(s: &str) -> bool {
+    matches!(s, "threadIdx" | "blockIdx" | "blockDim" | "gridDim")
+}
+
+struct Parser<'a> {
+    toks: Vec<(Tok, Span)>,
+    pos: usize,
+    src: &'a str,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].0
+    }
+
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].0
+    }
+
+    fn span(&self) -> Span {
+        self.toks[self.pos].1
+    }
+
+    fn bump(&mut self) -> (Tok, Span) {
+        let t = self.toks[self.pos].clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn at_eof(&self) -> bool {
+        matches!(self.peek(), Tok::Eof)
+    }
+
+    fn err(&self, msg: impl Into<String>, span: Span) -> Diagnostic {
+        Diagnostic::at(msg, span, self.src)
+    }
+
+    fn is_punct(&self, p: &str) -> bool {
+        matches!(self.peek(), Tok::Punct(q) if *q == p)
+    }
+
+    fn eat_punct(&mut self, p: &str) -> bool {
+        if self.is_punct(p) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_punct(&mut self, p: &str, ctx: &str) -> Result<Span, Diagnostic> {
+        let span = self.span();
+        if self.eat_punct(p) {
+            Ok(span)
+        } else {
+            Err(self.err(format!("expected `{p}` {ctx}, found {}", self.peek()), span))
+        }
+    }
+
+    fn is_ident(&self, s: &str) -> bool {
+        matches!(self.peek(), Tok::Ident(t) if t == s)
+    }
+
+    fn eat_ident(&mut self, s: &str) -> bool {
+        if self.is_ident(s) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_any_ident(&mut self, ctx: &str) -> Result<(String, Span), Diagnostic> {
+        let span = self.span();
+        match self.bump().0 {
+            Tok::Ident(s) => Ok((s, span)),
+            t => Err(self.err(format!("expected {ctx}, found {t}"), span)),
+        }
+    }
+
+    fn peek_is_type(&self) -> bool {
+        matches!(self.peek(), Tok::Ident(s) if is_type_name(s))
+    }
+
+    /// Parse a type name (`const` qualifiers are accepted and ignored).
+    fn parse_type(&mut self) -> Result<(CTy, Span), Diagnostic> {
+        while self.eat_ident("const") {}
+        let (name, span) = self.expect_any_ident("a type name")?;
+        let ty = match name.as_str() {
+            "int" => CTy::Int,
+            "unsigned" | "signed" => {
+                // `unsigned`/`signed` [`int`|`long`] — modelled as the base.
+                if self.eat_ident("long") {
+                    self.eat_ident("long");
+                    self.eat_ident("int");
+                    CTy::Long
+                } else {
+                    self.eat_ident("int");
+                    CTy::Int
+                }
+            }
+            "long" => {
+                self.eat_ident("long");
+                self.eat_ident("int");
+                CTy::Long
+            }
+            "float" => CTy::Float,
+            "double" => CTy::Double,
+            "bool" => CTy::Bool,
+            other => return Err(self.err(format!("unknown type `{other}`"), span)),
+        };
+        Ok((ty, span))
+    }
+
+    // -- top level ----------------------------------------------------
+
+    fn kernel(&mut self) -> Result<KernelAst, Diagnostic> {
+        let span = self.span();
+        if self.eat_ident("extern") {
+            // `extern "C"` linkage wrapper around a kernel.
+            if matches!(self.peek(), Tok::Str(_)) {
+                self.bump();
+            }
+        }
+        if !self.eat_ident("__global__") {
+            return Err(self.err(
+                format!(
+                    "expected a `__global__` kernel definition at top level, found {} \
+                     (host code and `__device__` helpers are out of scope)",
+                    self.peek()
+                ),
+                self.span(),
+            ));
+        }
+        if !self.eat_ident("void") {
+            return Err(self.err("kernel return type must be `void`", self.span()));
+        }
+        let (name, _) = self.expect_any_ident("a kernel name")?;
+        self.expect_punct("(", "after the kernel name")?;
+        let mut params = Vec::new();
+        if !self.is_punct(")") && !self.is_ident("void") {
+            loop {
+                params.push(self.param()?);
+                if !self.eat_punct(",") {
+                    break;
+                }
+            }
+        } else {
+            self.eat_ident("void");
+        }
+        self.expect_punct(")", "after the parameter list")?;
+        let body = self.block()?;
+        Ok(KernelAst { name, params, body, span })
+    }
+
+    fn param(&mut self) -> Result<ParamAst, Diagnostic> {
+        let (ty, tspan) = self.parse_type()?;
+        let mut is_ptr = false;
+        if self.eat_punct("*") {
+            is_ptr = true;
+            if self.is_punct("*") {
+                let span = self.span();
+                return Err(self.err("pointer-to-pointer parameters are not supported", span));
+            }
+        }
+        self.eat_ident("__restrict__");
+        let (name, _) = self.expect_any_ident("a parameter name")?;
+        Ok(ParamAst { ty, is_ptr, name, span: tspan })
+    }
+
+    // -- statements ---------------------------------------------------
+
+    fn block(&mut self) -> Result<Vec<StmtAst>, Diagnostic> {
+        let open = self.expect_punct("{", "to open a block")?;
+        let mut body = Vec::new();
+        loop {
+            if self.eat_punct("}") {
+                return Ok(body);
+            }
+            if self.at_eof() {
+                return Err(self.err("unterminated block: missing `}` for `{` opened here", open));
+            }
+            body.push(self.stmt()?);
+        }
+    }
+
+    fn stmt(&mut self) -> Result<StmtAst, Diagnostic> {
+        let span = self.span();
+        if self.is_punct("{") {
+            let body = self.block()?;
+            return Ok(StmtAst::Block { body, span });
+        }
+        if self.is_ident("if") {
+            return self.if_stmt();
+        }
+        if self.is_ident("for") {
+            return self.for_stmt();
+        }
+        if self.is_ident("while") {
+            return self.while_stmt();
+        }
+        if self.eat_ident("break") {
+            self.expect_punct(";", "after `break`")?;
+            return Ok(StmtAst::Break { span });
+        }
+        if self.eat_ident("continue") {
+            self.expect_punct(";", "after `continue`")?;
+            return Ok(StmtAst::Continue { span });
+        }
+        if self.eat_ident("return") {
+            if !self.eat_punct(";") {
+                return Err(self.err("kernels are `void`: `return` takes no value", self.span()));
+            }
+            return Ok(StmtAst::Return { span });
+        }
+        if self.is_ident("__shared__") || self.is_ident("extern") {
+            return self.shared_decl();
+        }
+        if self.peek_is_type() {
+            let d = self.decl()?;
+            self.expect_punct(";", "after the declaration")?;
+            return Ok(d);
+        }
+        // `ident ident …` at statement position can only be a
+        // declaration whose type we don't know.
+        if let (Tok::Ident(a), Tok::Ident(_)) = (self.peek(), self.peek2()) {
+            if !is_geom_base(a) {
+                return Err(self.err(format!("unknown type `{a}`"), span));
+            }
+        }
+        let s = self.simple_stmt()?;
+        self.expect_punct(";", "after the statement")?;
+        Ok(s)
+    }
+
+    fn decl(&mut self) -> Result<StmtAst, Diagnostic> {
+        let span = self.span();
+        let (ty, _) = self.parse_type()?;
+        if self.is_punct("*") {
+            return Err(self.err("pointer-typed locals are not supported", self.span()));
+        }
+        let (name, _) = self.expect_any_ident("a variable name")?;
+        let init = if self.eat_punct("=") { Some(self.expr()?) } else { None };
+        Ok(StmtAst::Decl { ty, name, init, span })
+    }
+
+    fn shared_decl(&mut self) -> Result<StmtAst, Diagnostic> {
+        let span = self.span();
+        let dynamic = self.eat_ident("extern");
+        if !self.eat_ident("__shared__") {
+            return Err(self.err("expected `__shared__` after `extern`", self.span()));
+        }
+        let (ty, _) = self.parse_type()?;
+        let (name, _) = self.expect_any_ident("a shared array name")?;
+        self.expect_punct("[", "after the shared array name")?;
+        let len = if dynamic {
+            0
+        } else {
+            let lspan = self.span();
+            match self.bump().0 {
+                Tok::Int { value, .. } if value > 0 => value as usize,
+                t => {
+                    return Err(self.err(
+                        format!("expected a positive constant array length, found {t}"),
+                        lspan,
+                    ))
+                }
+            }
+        };
+        self.expect_punct("]", "after the array length")?;
+        self.expect_punct(";", "after the shared declaration")?;
+        Ok(StmtAst::SharedDecl { ty, name, len, dynamic, span })
+    }
+
+    /// Assignment / builtin call / `++`/`--`, WITHOUT the trailing `;`
+    /// (shared between statement position and `for` init/step clauses).
+    fn simple_stmt(&mut self) -> Result<StmtAst, Diagnostic> {
+        let span = self.span();
+        if self.is_punct("++") || self.is_punct("--") {
+            let dec = self.is_punct("--");
+            self.bump();
+            let (name, nspan) = self.expect_any_ident("a variable after `++`/`--`")?;
+            return Ok(incdec(name, nspan, dec, span));
+        }
+        let e = self.expr()?;
+        if self.is_punct("++") || self.is_punct("--") {
+            let dec = self.is_punct("--");
+            self.bump();
+            if let ExprAst::Ident { name, span: nspan } = &e {
+                return Ok(incdec(name.clone(), *nspan, dec, span));
+            }
+            return Err(self.err("`++`/`--` target must be a variable", e.span()));
+        }
+        let compound = match self.peek() {
+            Tok::Punct("=") => Some(None),
+            Tok::Punct("+=") => Some(Some(CBinOp::Add)),
+            Tok::Punct("-=") => Some(Some(CBinOp::Sub)),
+            Tok::Punct("*=") => Some(Some(CBinOp::Mul)),
+            Tok::Punct("/=") => Some(Some(CBinOp::Div)),
+            Tok::Punct("%=") => Some(Some(CBinOp::Rem)),
+            Tok::Punct("&=") => Some(Some(CBinOp::BitAnd)),
+            Tok::Punct("|=") => Some(Some(CBinOp::BitOr)),
+            Tok::Punct("^=") => Some(Some(CBinOp::BitXor)),
+            Tok::Punct("<<=") => Some(Some(CBinOp::Shl)),
+            Tok::Punct(">>=") => Some(Some(CBinOp::Shr)),
+            _ => None,
+        };
+        if let Some(op) = compound {
+            self.bump();
+            let value = self.expr()?;
+            return Ok(StmtAst::Assign { target: e, op, value, span });
+        }
+        if matches!(e, ExprAst::Call { .. }) {
+            return Ok(StmtAst::Call { call: e, span });
+        }
+        Err(self.err("expected a statement (assignment or call)", span))
+    }
+
+    fn if_stmt(&mut self) -> Result<StmtAst, Diagnostic> {
+        let span = self.span();
+        self.bump(); // `if`
+        self.expect_punct("(", "after `if`")?;
+        let cond = self.expr()?;
+        self.expect_punct(")", "after the `if` condition")?;
+        let then_ = self.branch_body()?;
+        let else_ = if self.eat_ident("else") { self.branch_body()? } else { Vec::new() };
+        Ok(StmtAst::If { cond, then_, else_, span })
+    }
+
+    fn while_stmt(&mut self) -> Result<StmtAst, Diagnostic> {
+        let span = self.span();
+        self.bump(); // `while`
+        self.expect_punct("(", "after `while`")?;
+        let cond = self.expr()?;
+        self.expect_punct(")", "after the `while` condition")?;
+        let body = self.branch_body()?;
+        Ok(StmtAst::While { cond, body, span })
+    }
+
+    fn for_stmt(&mut self) -> Result<StmtAst, Diagnostic> {
+        let span = self.span();
+        self.bump(); // `for`
+        self.expect_punct("(", "after `for`")?;
+        let init = if self.is_punct(";") {
+            None
+        } else if self.peek_is_type() {
+            Some(Box::new(self.decl()?))
+        } else {
+            Some(Box::new(self.simple_stmt()?))
+        };
+        self.expect_punct(";", "after the `for` initializer")?;
+        let cond = if self.is_punct(";") { None } else { Some(self.expr()?) };
+        self.expect_punct(";", "after the `for` condition")?;
+        let step = if self.is_punct(")") { None } else { Some(Box::new(self.simple_stmt()?)) };
+        self.expect_punct(")", "after the `for` header")?;
+        let body = self.branch_body()?;
+        Ok(StmtAst::For { init, cond, step, body, span })
+    }
+
+    /// `{ … }` or a single statement (for unbraced `if`/`else`/loops).
+    fn branch_body(&mut self) -> Result<Vec<StmtAst>, Diagnostic> {
+        if self.is_punct("{") {
+            self.block()
+        } else {
+            Ok(vec![self.stmt()?])
+        }
+    }
+
+    // -- expressions (C precedence) -----------------------------------
+
+    fn expr(&mut self) -> Result<ExprAst, Diagnostic> {
+        self.ternary()
+    }
+
+    fn ternary(&mut self) -> Result<ExprAst, Diagnostic> {
+        let cond = self.binary(0)?;
+        if self.eat_punct("?") {
+            let span = cond.span();
+            let t = self.expr()?;
+            self.expect_punct(":", "in the ternary expression")?;
+            let e = self.ternary()?;
+            return Ok(ExprAst::Ternary {
+                cond: Box::new(cond),
+                then_: Box::new(t),
+                else_: Box::new(e),
+                span,
+            });
+        }
+        Ok(cond)
+    }
+
+    fn bin_op_at(&self, level: usize) -> Option<CBinOp> {
+        let p = match self.peek() {
+            Tok::Punct(p) => *p,
+            _ => return None,
+        };
+        let (op, l) = match p {
+            "||" => (CBinOp::LOr, 0),
+            "&&" => (CBinOp::LAnd, 1),
+            "|" => (CBinOp::BitOr, 2),
+            "^" => (CBinOp::BitXor, 3),
+            "&" => (CBinOp::BitAnd, 4),
+            "==" => (CBinOp::Eq, 5),
+            "!=" => (CBinOp::Ne, 5),
+            "<" => (CBinOp::Lt, 6),
+            "<=" => (CBinOp::Le, 6),
+            ">" => (CBinOp::Gt, 6),
+            ">=" => (CBinOp::Ge, 6),
+            "<<" => (CBinOp::Shl, 7),
+            ">>" => (CBinOp::Shr, 7),
+            "+" => (CBinOp::Add, 8),
+            "-" => (CBinOp::Sub, 8),
+            "*" => (CBinOp::Mul, 9),
+            "/" => (CBinOp::Div, 9),
+            "%" => (CBinOp::Rem, 9),
+            _ => return None,
+        };
+        if l == level {
+            Some(op)
+        } else {
+            None
+        }
+    }
+
+    fn binary(&mut self, level: usize) -> Result<ExprAst, Diagnostic> {
+        if level > 9 {
+            return self.unary();
+        }
+        let mut lhs = self.binary(level + 1)?;
+        while let Some(op) = self.bin_op_at(level) {
+            let span = self.span();
+            self.bump();
+            let rhs = self.binary(level + 1)?;
+            lhs = ExprAst::Bin { op, lhs: Box::new(lhs), rhs: Box::new(rhs), span };
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<ExprAst, Diagnostic> {
+        let span = self.span();
+        if self.eat_punct("-") {
+            return Ok(ExprAst::Un { op: CUnOp::Neg, arg: Box::new(self.unary()?), span });
+        }
+        if self.eat_punct("!") {
+            return Ok(ExprAst::Un { op: CUnOp::Not, arg: Box::new(self.unary()?), span });
+        }
+        if self.eat_punct("&") {
+            return Ok(ExprAst::Un { op: CUnOp::AddrOf, arg: Box::new(self.unary()?), span });
+        }
+        if self.eat_punct("+") {
+            return self.unary();
+        }
+        // `(type) expr` cast — distinguished from a parenthesised
+        // expression by one token of lookahead.
+        if self.is_punct("(") {
+            if let Tok::Ident(s) = self.peek2() {
+                if is_type_name(s) {
+                    self.bump(); // `(`
+                    let (ty, _) = self.parse_type()?;
+                    if self.is_punct("*") {
+                        return Err(self.err("pointer casts are not supported", self.span()));
+                    }
+                    self.expect_punct(")", "after the cast type")?;
+                    let arg = self.unary()?;
+                    return Ok(ExprAst::Cast { ty, arg: Box::new(arg), span });
+                }
+            }
+        }
+        self.postfix()
+    }
+
+    fn postfix(&mut self) -> Result<ExprAst, Diagnostic> {
+        let mut e = self.primary()?;
+        while self.is_punct("[") {
+            let span = self.span();
+            self.bump();
+            let idx = self.expr()?;
+            self.expect_punct("]", "after the index expression")?;
+            e = ExprAst::Index { base: Box::new(e), idx: Box::new(idx), span };
+        }
+        Ok(e)
+    }
+
+    fn primary(&mut self) -> Result<ExprAst, Diagnostic> {
+        let span = self.span();
+        match self.bump().0 {
+            Tok::Int { value, long } => Ok(ExprAst::Int { value, long, span }),
+            Tok::Float { value, f32 } => Ok(ExprAst::Float { value, f32, span }),
+            Tok::Punct("(") => {
+                let e = self.expr()?;
+                self.expect_punct(")", "to close the parenthesised expression")?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                if name == "__shared__" {
+                    return Err(self.err(
+                        "`__shared__` is a declaration qualifier and cannot appear in an expression",
+                        span,
+                    ));
+                }
+                if is_geom_base(&name) {
+                    self.expect_punct(".", &format!("after `{name}`"))?;
+                    let (field, fspan) = self.expect_any_ident("`x` or `y`")?;
+                    return match geom_special(&name, &field) {
+                        Some(which) => Ok(ExprAst::Special { which, span }),
+                        None if field == "z" => Err(self.err(
+                            "3D geometry (`.z`) is not supported; grids and blocks are 2D",
+                            fspan,
+                        )),
+                        None => {
+                            Err(self.err(format!("expected `.x` or `.y` after `{name}`"), fspan))
+                        }
+                    };
+                }
+                if self.is_punct("(") {
+                    self.bump();
+                    let mut args = Vec::new();
+                    if !self.is_punct(")") {
+                        loop {
+                            args.push(self.expr()?);
+                            if !self.eat_punct(",") {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect_punct(")", "after the call arguments")?;
+                    return Ok(ExprAst::Call { name, args, span });
+                }
+                Ok(ExprAst::Ident { name, span })
+            }
+            t => Err(self.err(format!("expected an expression, found {t}"), span)),
+        }
+    }
+}
+
+fn incdec(name: String, nspan: Span, dec: bool, span: Span) -> StmtAst {
+    StmtAst::Assign {
+        target: ExprAst::Ident { name, span: nspan },
+        op: Some(if dec { CBinOp::Sub } else { CBinOp::Add }),
+        value: ExprAst::Int { value: 1, long: false, span },
+        span,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(src: &str) -> Vec<KernelAst> {
+        parse_translation_unit(src).unwrap_or_else(|d| panic!("{}", d.render("test.cu")))
+    }
+
+    #[test]
+    fn parses_vecadd_shape() {
+        let ks = parse_ok(
+            "__global__ void vecAdd(float* a, float* b, float* c, int n) {\n\
+             int id = threadIdx.x + blockIdx.x * blockDim.x;\n\
+             if (id < n) { c[id] = a[id] + b[id]; }\n}",
+        );
+        assert_eq!(ks.len(), 1);
+        assert_eq!(ks[0].name, "vecAdd");
+        assert_eq!(ks[0].params.len(), 4);
+        assert!(ks[0].params[0].is_ptr);
+        assert!(!ks[0].params[3].is_ptr);
+        assert_eq!(ks[0].body.len(), 2);
+        assert!(matches!(ks[0].body[1], StmtAst::If { .. }));
+    }
+
+    #[test]
+    fn precedence_mul_binds_tighter_than_add() {
+        let ks = parse_ok("__global__ void k(int n) { int a = 1 + 2 * 3; }");
+        let StmtAst::Decl { init: Some(e), .. } = &ks[0].body[0] else { panic!() };
+        let ExprAst::Bin { op: CBinOp::Add, rhs, .. } = e else { panic!("expected add: {e:?}") };
+        assert!(matches!(&**rhs, ExprAst::Bin { op: CBinOp::Mul, .. }));
+    }
+
+    #[test]
+    fn else_if_chain_and_unbraced_bodies() {
+        let ks = parse_ok(
+            "__global__ void k(int* p, int n) {\n\
+             int v = p[0];\n\
+             if (v == n) v = 0; else if (v < n) v = 1; else v = 2;\n}",
+        );
+        let StmtAst::If { else_, .. } = &ks[0].body[1] else { panic!() };
+        assert_eq!(else_.len(), 1);
+        assert!(matches!(else_[0], StmtAst::If { .. }));
+    }
+
+    #[test]
+    fn for_header_variants() {
+        let ks = parse_ok(
+            "__global__ void k(int n) {\n\
+             for (int i = 0; i < n; i++) { int x = i; }\n\
+             for (int j = 0; j < n; j += 2) { int y = j; }\n}",
+        );
+        let StmtAst::For { step: Some(s), .. } = &ks[0].body[0] else { panic!() };
+        assert!(matches!(
+            &**s,
+            StmtAst::Assign { op: Some(CBinOp::Add), .. }
+        ));
+        assert!(matches!(ks[0].body[1], StmtAst::For { .. }));
+    }
+
+    #[test]
+    fn shared_and_extern_shared() {
+        let ks = parse_ok(
+            "__global__ void k(float* a) {\n\
+             __shared__ float tile[256];\n\
+             extern __shared__ int dyn[];\n\
+             tile[0] = a[0];\n}",
+        );
+        assert!(matches!(
+            ks[0].body[0],
+            StmtAst::SharedDecl { len: 256, dynamic: false, .. }
+        ));
+        assert!(matches!(ks[0].body[1], StmtAst::SharedDecl { dynamic: true, .. }));
+    }
+
+    #[test]
+    fn cast_vs_paren() {
+        let ks = parse_ok("__global__ void k(int n) { float f = (float)n + (1.0f + 2.0f); }");
+        let StmtAst::Decl { init: Some(e), .. } = &ks[0].body[0] else { panic!() };
+        let ExprAst::Bin { lhs, .. } = e else { panic!() };
+        assert!(matches!(&**lhs, ExprAst::Cast { ty: CTy::Float, .. }));
+    }
+
+    #[test]
+    fn geometry_builtins_resolved() {
+        let ks = parse_ok("__global__ void k(int* p) { p[0] = threadIdx.y + gridDim.x; }");
+        let StmtAst::Assign { value, .. } = &ks[0].body[0] else { panic!() };
+        let ExprAst::Bin { lhs, rhs, .. } = value else { panic!() };
+        assert!(matches!(&**lhs, ExprAst::Special { which: Special::ThreadIdxY, .. }));
+        assert!(matches!(&**rhs, ExprAst::Special { which: Special::GridDimX, .. }));
+    }
+
+    #[test]
+    fn unknown_type_diagnostic_line_col() {
+        let e = parse_translation_unit("__global__ void k(floot* a) { }").unwrap_err();
+        assert_eq!(e.msg, "unknown type `floot`");
+        assert_eq!((e.line, e.col), (1, 19));
+    }
+
+    #[test]
+    fn unterminated_block_diagnostic_points_at_open_brace() {
+        let e = parse_translation_unit("__global__ void k(int n) {\n    int x = n;\n").unwrap_err();
+        assert_eq!(e.msg, "unterminated block: missing `}` for `{` opened here");
+        assert_eq!((e.line, e.col), (1, 26));
+    }
+
+    #[test]
+    fn shared_in_expression_position_diagnostic() {
+        let e = parse_translation_unit(
+            "__global__ void k(float* a) {\n    float x = __shared__ + 1.0f;\n}",
+        )
+        .unwrap_err();
+        assert_eq!(
+            e.msg,
+            "`__shared__` is a declaration qualifier and cannot appear in an expression"
+        );
+        assert_eq!((e.line, e.col), (2, 15));
+    }
+
+    #[test]
+    fn top_level_host_code_rejected() {
+        let e = parse_translation_unit("int main() { return 0; }").unwrap_err();
+        assert!(e.msg.contains("expected a `__global__` kernel definition"));
+    }
+}

@@ -1,0 +1,702 @@
+//! Semantic analysis: scoped symbol table, C-style type checking and
+//! promotion, register allocation, and expression lowering to CIR.
+//!
+//! Typing follows C with one deliberate deviation that keeps parsed
+//! kernels bit-identical to their hand-built CIR counterparts: a
+//! *literal* operand adopts the type of the non-literal side (so
+//! `sum + 1` over `float sum` lowers to `c_f32(1.0)` with no cast,
+//! exactly as `ir::builder` kernels are written) instead of C's
+//! promote-to-double dance. Non-literal mixed operands get an explicit
+//! [`Expr::Cast`] inserted by rank promotion
+//! (`int < long long < float < double`).
+
+use super::ast::*;
+use super::lex::Span;
+use super::Diagnostic;
+use crate::ir::{BinOp, Const, Expr, Reg, ShflKind, Ty, UnOp, VoteKind};
+use std::collections::HashMap;
+
+/// A value's type: scalar or pointer-to-element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VTy {
+    Scalar(Ty),
+    Ptr(Ty),
+}
+
+impl VTy {
+    pub fn name(self) -> String {
+        match self {
+            VTy::Scalar(t) => t.c_name().to_string(),
+            VTy::Ptr(t) => format!("{}*", t.c_name()),
+        }
+    }
+}
+
+/// What a name resolves to.
+#[derive(Debug, Clone, Copy)]
+pub enum Sym {
+    Param { index: usize, vty: VTy },
+    Local { reg: Reg, ty: Ty },
+    SharedArr { index: usize, elem: Ty },
+    DynShared { elem: Ty },
+}
+
+pub struct Sema<'a> {
+    src: &'a str,
+    scopes: Vec<HashMap<String, Sym>>,
+    next_reg: u32,
+}
+
+fn rank(t: Ty) -> u32 {
+    match t {
+        Ty::Bool => 0,
+        Ty::I32 => 1,
+        Ty::I64 => 2,
+        Ty::F32 => 3,
+        Ty::F64 => 4,
+    }
+}
+
+/// Re-type a constant to `to` exactly (no cast node). `None` when the
+/// conversion crosses the bool/number boundary.
+fn retype_const(c: Const, to: Ty) -> Option<Const> {
+    let v: f64 = match c {
+        Const::I32(v) => v as f64,
+        Const::I64(v) => v as f64,
+        Const::F32(v) => v as f64,
+        Const::F64(v) => v,
+        Const::Bool(_) => return None,
+    };
+    let iv: i64 = match c {
+        Const::I32(v) => v as i64,
+        Const::I64(v) => v,
+        Const::F32(v) => v as i64,
+        Const::F64(v) => v as i64,
+        Const::Bool(_) => return None,
+    };
+    match to {
+        Ty::I32 => Some(Const::I32(iv as i32)),
+        Ty::I64 => Some(Const::I64(iv)),
+        Ty::F32 => Some(Const::F32(v as f32)),
+        Ty::F64 => Some(Const::F64(v)),
+        Ty::Bool => None,
+    }
+}
+
+impl<'a> Sema<'a> {
+    pub fn new(src: &'a str) -> Self {
+        Sema { src, scopes: vec![HashMap::new()], next_reg: 0 }
+    }
+
+    pub fn diag(&self, msg: impl Into<String>, span: Span) -> Diagnostic {
+        Diagnostic::at(msg, span, self.src)
+    }
+
+    pub fn num_regs(&self) -> u32 {
+        self.next_reg
+    }
+
+    pub fn alloc_reg(&mut self) -> Reg {
+        let r = Reg(self.next_reg);
+        self.next_reg += 1;
+        r
+    }
+
+    pub fn push_scope(&mut self) {
+        self.scopes.push(HashMap::new());
+    }
+
+    pub fn pop_scope(&mut self) {
+        self.scopes.pop();
+    }
+
+    /// Declare in the innermost scope; rejects same-scope redeclaration.
+    pub fn declare(&mut self, name: &str, sym: Sym, span: Span) -> Result<(), Diagnostic> {
+        let scope = self.scopes.last_mut().expect("sema has an open scope");
+        if scope.contains_key(name) {
+            return Err(Diagnostic::at(format!("redeclaration of `{name}`"), span, self.src));
+        }
+        scope.insert(name.to_string(), sym);
+        Ok(())
+    }
+
+    /// Declare at function scope (shared arrays have function lifetime
+    /// in CUDA regardless of where the declaration appears).
+    pub fn declare_function_scope(
+        &mut self,
+        name: &str,
+        sym: Sym,
+        span: Span,
+    ) -> Result<(), Diagnostic> {
+        if self.scopes.iter().any(|s| s.contains_key(name)) {
+            return Err(Diagnostic::at(format!("redeclaration of `{name}`"), span, self.src));
+        }
+        self.scopes[0].insert(name.to_string(), sym);
+        Ok(())
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<Sym> {
+        for scope in self.scopes.iter().rev() {
+            if let Some(s) = scope.get(name) {
+                return Some(*s);
+            }
+        }
+        None
+    }
+
+    // -- expression lowering ------------------------------------------
+
+    /// Lower to CIR, yielding the value expression and its type.
+    pub fn lower_expr(&mut self, e: &ExprAst) -> Result<(Expr, VTy), Diagnostic> {
+        match e {
+            ExprAst::Int { value, long, .. } => {
+                if *long || i32::try_from(*value).is_err() {
+                    Ok((Expr::Const(Const::I64(*value)), VTy::Scalar(Ty::I64)))
+                } else {
+                    Ok((Expr::Const(Const::I32(*value as i32)), VTy::Scalar(Ty::I32)))
+                }
+            }
+            ExprAst::Float { value, f32, .. } => {
+                if *f32 {
+                    Ok((Expr::Const(Const::F32(*value as f32)), VTy::Scalar(Ty::F32)))
+                } else {
+                    Ok((Expr::Const(Const::F64(*value)), VTy::Scalar(Ty::F64)))
+                }
+            }
+            ExprAst::Special { which, .. } => {
+                Ok((Expr::Special(*which), VTy::Scalar(Ty::I32)))
+            }
+            ExprAst::Ident { name, span } => self.lower_ident(name, *span),
+            ExprAst::Index { .. } => {
+                let (ptr, elem) = self.lower_place(e)?;
+                Ok((Expr::Load { ptr: Box::new(ptr), ty: elem }, VTy::Scalar(elem)))
+            }
+            ExprAst::Un { op, arg, span } => self.lower_unary(*op, arg, *span),
+            ExprAst::Bin { op, lhs, rhs, span } => self.lower_binary(*op, lhs, rhs, *span),
+            ExprAst::Cast { ty, arg, span } => {
+                let (a, at) = self.lower_scalar(arg, *span)?;
+                let to = ty.to_ir();
+                if at == to {
+                    return Ok((a, VTy::Scalar(to)));
+                }
+                if at == Ty::Bool || to == Ty::Bool {
+                    let msg = "casts between `bool` and numbers are not supported";
+                    return Err(self.diag(msg, *span));
+                }
+                Ok((Expr::Cast(to, Box::new(a)), VTy::Scalar(to)))
+            }
+            ExprAst::Ternary { cond, then_, else_, span } => {
+                let c = self.lower_cond(cond)?;
+                let t = self.lower_scalar(then_, *span)?;
+                let f = self.lower_scalar(else_, *span)?;
+                let (t, f, ty) = self.unify(t, f, *span, "?:")?;
+                Ok((
+                    Expr::Select { cond: Box::new(c), then_: Box::new(t), else_: Box::new(f) },
+                    VTy::Scalar(ty),
+                ))
+            }
+            ExprAst::Call { name, args, span } => self.lower_call(name, args, *span),
+        }
+    }
+
+    fn lower_ident(&mut self, name: &str, span: Span) -> Result<(Expr, VTy), Diagnostic> {
+        if let Some(sym) = self.lookup(name) {
+            return Ok(match sym {
+                Sym::Param { index, vty } => (Expr::Param(index), vty),
+                Sym::Local { reg, ty } => (Expr::Reg(reg), VTy::Scalar(ty)),
+                Sym::SharedArr { index, elem } => (Expr::SharedBase(index), VTy::Ptr(elem)),
+                Sym::DynShared { elem } => (Expr::DynSharedBase, VTy::Ptr(elem)),
+            });
+        }
+        // Builtin constants (usable unless shadowed).
+        match name {
+            "true" => Ok((Expr::Const(Const::Bool(true)), VTy::Scalar(Ty::Bool))),
+            "false" => Ok((Expr::Const(Const::Bool(false)), VTy::Scalar(Ty::Bool))),
+            "FLT_MAX" => Ok((Expr::Const(Const::F32(f32::MAX)), VTy::Scalar(Ty::F32))),
+            "FLT_MIN" => Ok((Expr::Const(Const::F32(f32::MIN_POSITIVE)), VTy::Scalar(Ty::F32))),
+            "DBL_MAX" => Ok((Expr::Const(Const::F64(f64::MAX)), VTy::Scalar(Ty::F64))),
+            "INT_MAX" => Ok((Expr::Const(Const::I32(i32::MAX)), VTy::Scalar(Ty::I32))),
+            "INT_MIN" => Ok((Expr::Const(Const::I32(i32::MIN)), VTy::Scalar(Ty::I32))),
+            _ => Err(self.diag(format!("undeclared identifier `{name}`"), span)),
+        }
+    }
+
+    /// Lower and require a scalar (non-pointer) value.
+    pub fn lower_scalar(&mut self, e: &ExprAst, _ctx: Span) -> Result<(Expr, Ty), Diagnostic> {
+        let (v, vty) = self.lower_expr(e)?;
+        match vty {
+            VTy::Scalar(t) => Ok((v, t)),
+            VTy::Ptr(_) => Err(self.diag(
+                format!("expected a scalar value, found pointer of type `{}`", vty.name()),
+                e.span(),
+            )),
+        }
+    }
+
+    /// Lower and coerce to exactly `want` (literals re-typed, numerics
+    /// cast, bool mismatches rejected).
+    pub fn lower_typed(&mut self, e: &ExprAst, want: Ty) -> Result<Expr, Diagnostic> {
+        let (v, t) = self.lower_scalar(e, e.span())?;
+        self.coerce(v, t, want, e.span())
+    }
+
+    /// Lower a condition: comparisons/logical ops pass through, numeric
+    /// values are wrapped in `!= 0` (C truthiness).
+    pub fn lower_cond(&mut self, e: &ExprAst) -> Result<Expr, Diagnostic> {
+        let (v, t) = self.lower_scalar(e, e.span())?;
+        if t == Ty::Bool {
+            return Ok(v);
+        }
+        let zero = retype_const(Const::I32(0), t).expect("numeric zero");
+        Ok(Expr::Bin(BinOp::Ne, Box::new(v), Box::new(Expr::Const(zero))))
+    }
+
+    /// Lower an lvalue/address expression: `p[i]`, `&p[i]`, or a bare
+    /// pointer. Returns the address expression and the element type.
+    pub fn lower_place(&mut self, e: &ExprAst) -> Result<(Expr, Ty), Diagnostic> {
+        match e {
+            ExprAst::Index { base, idx, span } => {
+                let (b, bty) = self.lower_expr(base)?;
+                let elem = match bty {
+                    VTy::Ptr(t) => t,
+                    VTy::Scalar(t) => {
+                        return Err(self.diag(
+                            format!("cannot index a value of type `{}`", t.c_name()),
+                            base.span(),
+                        ))
+                    }
+                };
+                let (i, ity) = self.lower_scalar(idx, *span)?;
+                if !matches!(ity, Ty::I32 | Ty::I64) {
+                    return Err(self.diag(
+                        format!("array index must be an integer, found `{}`", ity.c_name()),
+                        idx.span(),
+                    ));
+                }
+                Ok((Expr::Index { base: Box::new(b), idx: Box::new(i), elem }, elem))
+            }
+            ExprAst::Un { op: CUnOp::AddrOf, arg, .. } => self.lower_place(arg),
+            ExprAst::Ident { name, span } => {
+                let (v, vty) = self.lower_ident(name, *span)?;
+                match vty {
+                    VTy::Ptr(t) => Ok((v, t)),
+                    VTy::Scalar(_) => Err(self.diag(
+                        format!("`{name}` is not a pointer; expected `&{name}[i]` or a pointer"),
+                        *span,
+                    )),
+                }
+            }
+            other => Err(self.diag(
+                "expected a memory location (`p[i]`, `&p[i]` or a pointer)",
+                other.span(),
+            )),
+        }
+    }
+
+    fn lower_unary(
+        &mut self,
+        op: CUnOp,
+        arg: &ExprAst,
+        span: Span,
+    ) -> Result<(Expr, VTy), Diagnostic> {
+        match op {
+            CUnOp::Neg => {
+                let (a, t) = self.lower_scalar(arg, span)?;
+                // Fold negated literals so `-1` lowers to `c_i32(-1)`,
+                // matching hand-built CIR (and keeping stats identical).
+                if let Expr::Const(c) = &a {
+                    let folded = match c {
+                        Const::I32(v) => Some(Const::I32(v.wrapping_neg())),
+                        Const::I64(v) => Some(Const::I64(v.wrapping_neg())),
+                        Const::F32(v) => Some(Const::F32(-v)),
+                        Const::F64(v) => Some(Const::F64(-v)),
+                        Const::Bool(_) => None,
+                    };
+                    if let Some(f) = folded {
+                        return Ok((Expr::Const(f), VTy::Scalar(t)));
+                    }
+                }
+                if t == Ty::Bool {
+                    return Err(self.diag("cannot negate a `bool`", span));
+                }
+                Ok((Expr::Un(UnOp::Neg, Box::new(a)), VTy::Scalar(t)))
+            }
+            CUnOp::Not => {
+                let c = self.lower_cond(arg)?;
+                Ok((Expr::Un(UnOp::Not, Box::new(c)), VTy::Scalar(Ty::Bool)))
+            }
+            CUnOp::AddrOf => Err(self.diag(
+                "`&` (address-of) is only supported as an atomic operand (`atomicAdd(&p[i], v)`)",
+                span,
+            )),
+        }
+    }
+
+    fn lower_binary(
+        &mut self,
+        op: CBinOp,
+        lhs: &ExprAst,
+        rhs: &ExprAst,
+        span: Span,
+    ) -> Result<(Expr, VTy), Diagnostic> {
+        match op {
+            CBinOp::LAnd | CBinOp::LOr => {
+                let a = self.lower_cond(lhs)?;
+                let b = self.lower_cond(rhs)?;
+                let o = if op == CBinOp::LAnd { BinOp::And } else { BinOp::Or };
+                Ok((Expr::Bin(o, Box::new(a), Box::new(b)), VTy::Scalar(Ty::Bool)))
+            }
+            CBinOp::Lt | CBinOp::Le | CBinOp::Gt | CBinOp::Ge | CBinOp::Eq | CBinOp::Ne => {
+                let a = self.lower_scalar(lhs, span)?;
+                let b = self.lower_scalar(rhs, span)?;
+                let (a, b, _) = self.unify(a, b, span, op.symbol())?;
+                let o = match op {
+                    CBinOp::Lt => BinOp::Lt,
+                    CBinOp::Le => BinOp::Le,
+                    CBinOp::Gt => BinOp::Gt,
+                    CBinOp::Ge => BinOp::Ge,
+                    CBinOp::Eq => BinOp::Eq,
+                    CBinOp::Ne => BinOp::Ne,
+                    _ => unreachable!(),
+                };
+                Ok((Expr::Bin(o, Box::new(a), Box::new(b)), VTy::Scalar(Ty::Bool)))
+            }
+            _ => {
+                let a = self.lower_scalar(lhs, span)?;
+                let b = self.lower_scalar(rhs, span)?;
+                let (a, b, ty) = self.unify(a, b, span, op.symbol())?;
+                let o = self.map_arith(op, ty, span)?;
+                Ok((Expr::Bin(o, Box::new(a), Box::new(b)), VTy::Scalar(ty)))
+            }
+        }
+    }
+
+    /// Map an arithmetic/bitwise AST op onto a CIR [`BinOp`], checking
+    /// the operand type is legal for it.
+    pub fn map_arith(&self, op: CBinOp, ty: Ty, span: Span) -> Result<BinOp, Diagnostic> {
+        let int_only = matches!(
+            op,
+            CBinOp::Shl | CBinOp::Shr | CBinOp::BitAnd | CBinOp::BitOr | CBinOp::BitXor
+        );
+        if ty == Ty::Bool && !matches!(op, CBinOp::BitAnd | CBinOp::BitOr | CBinOp::BitXor) {
+            return Err(self.diag(
+                format!("operands of `{}` cannot be `bool`", op.symbol()),
+                span,
+            ));
+        }
+        if int_only && matches!(ty, Ty::F32 | Ty::F64) {
+            return Err(self.diag(
+                format!("operands of `{}` must be integers, found `{}`", op.symbol(), ty.c_name()),
+                span,
+            ));
+        }
+        Ok(match op {
+            CBinOp::Add => BinOp::Add,
+            CBinOp::Sub => BinOp::Sub,
+            CBinOp::Mul => BinOp::Mul,
+            CBinOp::Div => BinOp::Div,
+            CBinOp::Rem => BinOp::Rem,
+            CBinOp::Shl => BinOp::Shl,
+            CBinOp::Shr => BinOp::Shr,
+            CBinOp::BitAnd => BinOp::And,
+            CBinOp::BitOr => BinOp::Or,
+            CBinOp::BitXor => BinOp::Xor,
+            other => {
+                return Err(self.diag(
+                    format!("`{}` is not an arithmetic operator", other.symbol()),
+                    span,
+                ))
+            }
+        })
+    }
+
+    /// Coerce `e: from` to `to`: literals are re-typed exactly, numeric
+    /// mismatches get a [`Expr::Cast`], bool mismatches are rejected.
+    pub fn coerce(&self, e: Expr, from: Ty, to: Ty, span: Span) -> Result<Expr, Diagnostic> {
+        if from == to {
+            return Ok(e);
+        }
+        if let Expr::Const(c) = &e {
+            if let Some(c2) = retype_const(*c, to) {
+                return Ok(Expr::Const(c2));
+            }
+        }
+        if from == Ty::Bool || to == Ty::Bool {
+            return Err(self.diag(
+                format!("cannot convert `{}` to `{}`", from.c_name(), to.c_name()),
+                span,
+            ));
+        }
+        Ok(Expr::Cast(to, Box::new(e)))
+    }
+
+    /// Unify two operands to a common type. A literal side adopts the
+    /// non-literal side's type; otherwise the lower-ranked side is cast
+    /// up (`int < long long < float < double`).
+    fn unify(
+        &self,
+        a: (Expr, Ty),
+        b: (Expr, Ty),
+        span: Span,
+        what: &str,
+    ) -> Result<(Expr, Expr, Ty), Diagnostic> {
+        let (ae, at) = a;
+        let (be, bt) = b;
+        if at == bt {
+            return Ok((ae, be, at));
+        }
+        if let Expr::Const(c) = &ae {
+            if !matches!(be, Expr::Const(_)) {
+                if let Some(c2) = retype_const(*c, bt) {
+                    return Ok((Expr::Const(c2), be, bt));
+                }
+            }
+        }
+        if let Expr::Const(c) = &be {
+            if !matches!(ae, Expr::Const(_)) {
+                if let Some(c2) = retype_const(*c, at) {
+                    return Ok((ae, Expr::Const(c2), at));
+                }
+            }
+        }
+        if at == Ty::Bool || bt == Ty::Bool {
+            return Err(self.diag(
+                format!(
+                    "type mismatch in `{what}`: `{}` vs `{}`",
+                    at.c_name(),
+                    bt.c_name()
+                ),
+                span,
+            ));
+        }
+        let ty = if rank(at) >= rank(bt) { at } else { bt };
+        Ok((self.coerce(ae, at, ty, span)?, self.coerce(be, bt, ty, span)?, ty))
+    }
+
+    // -- builtin calls ------------------------------------------------
+
+    fn lower_call(
+        &mut self,
+        name: &str,
+        args: &[ExprAst],
+        span: Span,
+    ) -> Result<(Expr, VTy), Diagnostic> {
+        if let Some(un) = math_unop(name) {
+            if args.len() != 1 {
+                return Err(self.diag(format!("`{name}` takes exactly one argument"), span));
+            }
+            let (a, t) = self.lower_scalar(&args[0], span)?;
+            let (a, t) = match t {
+                Ty::F32 | Ty::F64 => (a, t),
+                Ty::I32 | Ty::I64 => {
+                    let to = if name.ends_with('f') { Ty::F32 } else { Ty::F64 };
+                    (self.coerce(a, t, to, span)?, to)
+                }
+                Ty::Bool => return Err(self.diag(format!("`{name}` requires a number"), span)),
+            };
+            return Ok((Expr::Un(un, Box::new(a)), VTy::Scalar(t)));
+        }
+        if matches!(name, "min" | "max" | "fminf" | "fmaxf" | "fmin" | "fmax") {
+            if args.len() != 2 {
+                return Err(self.diag(format!("`{name}` takes exactly two arguments"), span));
+            }
+            let a = self.lower_scalar(&args[0], span)?;
+            let b = self.lower_scalar(&args[1], span)?;
+            let (a, b, ty) = self.unify(a, b, span, name)?;
+            let o = if matches!(name, "min" | "fminf" | "fmin") { BinOp::Min } else { BinOp::Max };
+            return Ok((Expr::Bin(o, Box::new(a), Box::new(b)), VTy::Scalar(ty)));
+        }
+        if shfl_kind(name).is_some() || vote_kind(name).is_some() || is_atomic_name(name) {
+            return Err(self.diag(
+                format!("`{name}` must be the entire right-hand side of an assignment"),
+                span,
+            ));
+        }
+        if name == "__syncthreads" {
+            return Err(self.diag("`__syncthreads()` is a statement and has no value", span));
+        }
+        Err(self.diag(format!("unknown function `{name}`"), span))
+    }
+
+    /// Lower a warp shuffle call; caller guarantees `shfl_kind` matched.
+    pub fn lower_shfl(
+        &mut self,
+        kind: ShflKind,
+        args: &[ExprAst],
+        span: Span,
+    ) -> Result<(Expr, Ty), Diagnostic> {
+        if args.len() != 3 {
+            return Err(self.diag(
+                "warp shuffles take (mask, value, lane) — three arguments",
+                span,
+            ));
+        }
+        // The mask is type-checked but discarded: CIR shuffles are
+        // full-warp (the pretty printer prints FULL_MASK).
+        let _ = self.lower_scalar(&args[0], span)?;
+        let (val, vt) = self.lower_scalar(&args[1], span)?;
+        let lane = self.lower_typed(&args[2], Ty::I32)?;
+        Ok((Expr::WarpShfl { kind, val: Box::new(val), lane: Box::new(lane) }, vt))
+    }
+
+    /// Lower a warp vote call; caller guarantees `vote_kind` matched.
+    pub fn lower_vote(
+        &mut self,
+        kind: VoteKind,
+        args: &[ExprAst],
+        span: Span,
+    ) -> Result<(Expr, Ty), Diagnostic> {
+        if args.len() != 2 {
+            return Err(self.diag("warp votes take (mask, predicate) — two arguments", span));
+        }
+        let _ = self.lower_scalar(&args[0], span)?;
+        let pred = self.lower_cond(&args[1])?;
+        let ty = if kind == VoteKind::Ballot { Ty::I32 } else { Ty::Bool };
+        Ok((Expr::WarpVote { kind, pred: Box::new(pred) }, ty))
+    }
+}
+
+pub fn math_unop(name: &str) -> Option<UnOp> {
+    Some(match name {
+        "sqrtf" | "sqrt" => UnOp::Sqrt,
+        "expf" | "exp" => UnOp::Exp,
+        "logf" | "log" => UnOp::Log,
+        "fabsf" | "fabs" | "abs" => UnOp::Abs,
+        "floorf" | "floor" => UnOp::Floor,
+        "ceilf" | "ceil" => UnOp::Ceil,
+        "sinf" | "sin" => UnOp::Sin,
+        "cosf" | "cos" => UnOp::Cos,
+        "rsqrtf" | "rsqrt" => UnOp::Rsqrt,
+        _ => return None,
+    })
+}
+
+pub fn shfl_kind(name: &str) -> Option<ShflKind> {
+    Some(match name {
+        "__shfl_sync" => ShflKind::Idx,
+        "__shfl_up_sync" => ShflKind::Up,
+        "__shfl_down_sync" => ShflKind::Down,
+        "__shfl_xor_sync" => ShflKind::Xor,
+        _ => return None,
+    })
+}
+
+pub fn vote_kind(name: &str) -> Option<VoteKind> {
+    Some(match name {
+        "__any_sync" => VoteKind::Any,
+        "__all_sync" => VoteKind::All,
+        "__ballot_sync" => VoteKind::Ballot,
+        _ => return None,
+    })
+}
+
+pub fn is_atomic_name(name: &str) -> bool {
+    matches!(
+        name,
+        "atomicAdd"
+            | "atomicSub"
+            | "atomicMin"
+            | "atomicMax"
+            | "atomicAnd"
+            | "atomicOr"
+            | "atomicXor"
+            | "atomicExch"
+            | "atomicCAS"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{c_f32, c_i32};
+
+    fn sema() -> Sema<'static> {
+        Sema::new("")
+    }
+
+    fn span() -> Span {
+        Span { line: 1, col: 1 }
+    }
+
+    #[test]
+    fn literal_adopts_nonliteral_type() {
+        let mut s = sema();
+        let r = s.alloc_reg();
+        s.declare("sum", Sym::Local { reg: r, ty: Ty::F32 }, span()).unwrap();
+        let ast = ExprAst::Bin {
+            op: CBinOp::Add,
+            lhs: Box::new(ExprAst::Ident { name: "sum".into(), span: span() }),
+            rhs: Box::new(ExprAst::Int { value: 1, long: false, span: span() }),
+            span: span(),
+        };
+        let (e, vty) = s.lower_expr(&ast).unwrap();
+        assert_eq!(vty, VTy::Scalar(Ty::F32));
+        assert_eq!(e, crate::ir::add(crate::ir::reg(r), c_f32(1.0)));
+    }
+
+    #[test]
+    fn nonliteral_mismatch_inserts_cast() {
+        let mut s = sema();
+        let ri = s.alloc_reg();
+        let rf = s.alloc_reg();
+        s.declare("i", Sym::Local { reg: ri, ty: Ty::I32 }, span()).unwrap();
+        s.declare("f", Sym::Local { reg: rf, ty: Ty::F32 }, span()).unwrap();
+        let ast = ExprAst::Bin {
+            op: CBinOp::Mul,
+            lhs: Box::new(ExprAst::Ident { name: "i".into(), span: span() }),
+            rhs: Box::new(ExprAst::Ident { name: "f".into(), span: span() }),
+            span: span(),
+        };
+        let (e, vty) = s.lower_expr(&ast).unwrap();
+        assert_eq!(vty, VTy::Scalar(Ty::F32));
+        match e {
+            Expr::Bin(BinOp::Mul, l, _) => assert!(matches!(*l, Expr::Cast(Ty::F32, _))),
+            other => panic!("expected mul, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_literal_folds() {
+        let mut s = sema();
+        let ast = ExprAst::Un {
+            op: CUnOp::Neg,
+            arg: Box::new(ExprAst::Int { value: 1, long: false, span: span() }),
+            span: span(),
+        };
+        let (e, _) = s.lower_expr(&ast).unwrap();
+        assert_eq!(e, c_i32(-1));
+    }
+
+    #[test]
+    fn scopes_shadow_and_pop() {
+        let mut s = sema();
+        let r0 = s.alloc_reg();
+        s.declare("x", Sym::Local { reg: r0, ty: Ty::I32 }, span()).unwrap();
+        s.push_scope();
+        let r1 = s.alloc_reg();
+        s.declare("x", Sym::Local { reg: r1, ty: Ty::F32 }, span()).unwrap();
+        assert!(matches!(s.lookup("x"), Some(Sym::Local { ty: Ty::F32, .. })));
+        s.pop_scope();
+        assert!(matches!(s.lookup("x"), Some(Sym::Local { ty: Ty::I32, .. })));
+        // same-scope redeclaration rejected
+        let e = s.declare("x", Sym::Local { reg: r1, ty: Ty::I32 }, span()).unwrap_err();
+        assert_eq!(e.msg, "redeclaration of `x`");
+    }
+
+    #[test]
+    fn undeclared_identifier_diag() {
+        let mut s = sema();
+        let ast = ExprAst::Ident { name: "nope".into(), span: Span { line: 3, col: 7 } };
+        let e = s.lower_expr(&ast).unwrap_err();
+        assert_eq!(e.msg, "undeclared identifier `nope`");
+        assert_eq!((e.line, e.col), (3, 7));
+    }
+
+    #[test]
+    fn flt_max_is_exact() {
+        let mut s = sema();
+        let ast = ExprAst::Ident { name: "FLT_MAX".into(), span: span() };
+        let (e, _) = s.lower_expr(&ast).unwrap();
+        assert_eq!(e, Expr::Const(Const::F32(f32::MAX)));
+    }
+}

@@ -39,6 +39,18 @@ impl Ty {
             Ty::Bool => 1,
         }
     }
+
+    /// C-style spelling — used by the pretty printer (so listings read
+    /// like CUDA) and by frontend diagnostics.
+    pub fn c_name(self) -> &'static str {
+        match self {
+            Ty::I32 => "int",
+            Ty::I64 => "long long",
+            Ty::F32 => "float",
+            Ty::F64 => "double",
+            Ty::Bool => "bool",
+        }
+    }
 }
 
 /// CUDA address spaces that the memory-mapping pass (§III-B1) must place.

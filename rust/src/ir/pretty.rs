@@ -74,9 +74,9 @@ pub fn expr_to_string(e: &Expr) -> String {
                 format!("{}({})", n, expr_to_string(a))
             }
         }
-        Expr::Load { ptr, ty } => format!("*({:?}*)({})", ty, expr_to_string(ptr)),
+        Expr::Load { ptr, ty } => format!("*({}*)({})", ty.c_name(), expr_to_string(ptr)),
         Expr::Index { base, idx, .. } => format!("&{}[{}]", expr_to_string(base), expr_to_string(idx)),
-        Expr::Cast(ty, a) => format!("({ty:?})({})", expr_to_string(a)),
+        Expr::Cast(ty, a) => format!("({})({})", ty.c_name(), expr_to_string(a)),
         Expr::Select { cond, then_, else_ } => format!(
             "({} ? {} : {})",
             expr_to_string(cond),
@@ -116,7 +116,13 @@ fn stmt_fmt(s: &Stmt, out: &mut String, ind: usize) {
             let _ = writeln!(out, "{pad}{dst} = {};", expr_to_string(expr));
         }
         Stmt::Store { ptr, val, ty } => {
-            let _ = writeln!(out, "{pad}*({ty:?}*)({}) = {};", expr_to_string(ptr), expr_to_string(val));
+            let _ = writeln!(
+                out,
+                "{pad}*({}*)({}) = {};",
+                ty.c_name(),
+                expr_to_string(ptr),
+                expr_to_string(val)
+            );
         }
         Stmt::SyncThreads => {
             let _ = writeln!(out, "{pad}__syncthreads();");
@@ -223,22 +229,29 @@ fn stmt_fmt(s: &Stmt, out: &mut String, ind: usize) {
     }
 }
 
+/// One parameter as CUDA-C source: `float* a`, `int n`. Non-global
+/// address spaces (possible only in hand-constructed IR) are annotated.
+fn param_to_string(p: &ParamDecl) -> String {
+    match p.ty {
+        ParamTy::Scalar(t) => format!("{} {}", t.c_name(), p.name),
+        ParamTy::Ptr(AddrSpace::Global, t) => format!("{}* {}", t.c_name(), p.name),
+        ParamTy::Ptr(AddrSpace::Shared, t) => format!("__shared__ {}* {}", t.c_name(), p.name),
+        ParamTy::Ptr(AddrSpace::Local, t) => format!("__local__ {}* {}", t.c_name(), p.name),
+    }
+}
+
+/// Complete SPMD listing: parameter types, static `__shared__` arrays
+/// with element types and lengths, and the `extern __shared__` element
+/// type — golden-file output for the `cupbop compile` tests.
 pub fn kernel_to_string(k: &Kernel) -> String {
     let mut out = String::new();
-    let params: Vec<_> = k
-        .params
-        .iter()
-        .map(|p| match p.ty {
-            ParamTy::Scalar(t) => format!("{t:?} {}", p.name),
-            ParamTy::Ptr(_, t) => format!("{t:?}* {}", p.name),
-        })
-        .collect();
+    let params: Vec<_> = k.params.iter().map(param_to_string).collect();
     let _ = writeln!(out, "__global__ void {}({}) {{", k.name, params.join(", "));
     for sh in &k.shared {
-        let _ = writeln!(out, "  __shared__ {:?} {}[{}];", sh.elem, sh.name, sh.len);
+        let _ = writeln!(out, "  __shared__ {} {}[{}];", sh.elem.c_name(), sh.name, sh.len);
     }
     if let Some(t) = k.dyn_shared_elem {
-        let _ = writeln!(out, "  extern __shared__ {t:?} dyn_shared[];");
+        let _ = writeln!(out, "  extern __shared__ {} dyn_shared[];", t.c_name());
     }
     for s in &k.body {
         stmt_fmt(s, &mut out, 1);
@@ -255,6 +268,14 @@ pub fn mpmd_to_string(k: &MpmdKernel) -> String {
         k.warp_level,
         k.replicated_regs.len()
     );
+    let params: Vec<_> = k.params.iter().map(param_to_string).collect();
+    let _ = writeln!(out, "// packed args: ({})", params.join(", "));
+    for sh in &k.shared {
+        let _ = writeln!(out, "// shared slab: {} {}[{}]", sh.elem.c_name(), sh.name, sh.len);
+    }
+    if let Some(t) = k.dyn_shared_elem {
+        let _ = writeln!(out, "// dynamic shared: {} dyn_shared[]", t.c_name());
+    }
     let _ = writeln!(out, "void {}_block(void **packed_args) {{", k.name);
     for s in &k.body {
         stmt_fmt(s, &mut out, 1);
@@ -291,6 +312,35 @@ mod tests {
         let s = kernel_to_string(&b.build());
         assert!(s.contains("extern __shared__"));
         assert!(s.contains("__syncthreads()"));
+    }
+
+    /// Golden test: the listing is complete (C-style param types,
+    /// shared element types, dyn-shared element type) and stable —
+    /// `cupbop compile` output is built from exactly this string.
+    #[test]
+    fn golden_complete_listing() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F32);
+        let bb = b.ptr_param("b", Ty::F32);
+        let c = b.ptr_param("c", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let _tile = b.shared_array("tile", Ty::F64, 32);
+        let _dynsh = b.dyn_shared(Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bl| {
+            let sum = add(at(a.clone(), reg(id), Ty::F32), at(bb.clone(), reg(id), Ty::F32));
+            bl.store_at(c.clone(), reg(id), sum, Ty::F32);
+        });
+        let got = kernel_to_string(&b.build());
+        let want = "__global__ void vecAdd(float* a, float* b, float* c, int n) {\n\
+                    \x20 __shared__ double tile[32];\n\
+                    \x20 extern __shared__ int dyn_shared[];\n\
+                    \x20 %r0 = (threadIdx.x + (blockIdx.x * blockDim.x));\n\
+                    \x20 if ((%r0 < arg3)) {\n\
+                    \x20   *(float*)(&arg2[%r0]) = (*(float*)(&arg0[%r0]) + *(float*)(&arg1[%r0]));\n\
+                    \x20 }\n\
+                    }\n";
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod cachesim;
 pub mod compiler;
 pub mod exec;
 pub mod frameworks;
+pub mod frontend;
 pub mod host;
 pub mod ir;
 pub mod report;

@@ -1,0 +1,120 @@
+//! Golden diagnostics tests for the CUDA-C frontend: every parse/sema
+//! error carries an exact (line, col), an exact message, and renders a
+//! compiler-style excerpt with a caret. These strings are load-bearing
+//! — `cupbop compile` prints them verbatim, and CI greps nothing: the
+//! assertions here are the contract.
+
+use cupbop::frontend::parse_kernels;
+
+fn err(src: &str) -> cupbop::frontend::Diagnostic {
+    parse_kernels(src).expect_err("source should not parse")
+}
+
+#[test]
+fn golden_bad_type() {
+    let d = err("__global__ void k(floot* a) {\n    a[0] = 1.0f;\n}");
+    assert_eq!(d.msg, "unknown type `floot`");
+    assert_eq!((d.line, d.col), (1, 19));
+    assert_eq!(
+        d.render("bad_type.cu"),
+        "error: unknown type `floot`\n\
+         \x20--> bad_type.cu:1:19\n\
+         \x20  |\n\
+         \x201 | __global__ void k(floot* a) {\n\
+         \x20  |                   ^\n"
+    );
+}
+
+#[test]
+fn golden_bad_type_in_local_decl() {
+    let d = err("__global__ void k(float* a) {\n    floot x = a[0];\n}");
+    assert_eq!(d.msg, "unknown type `floot`");
+    assert_eq!((d.line, d.col), (2, 5));
+}
+
+#[test]
+fn golden_undeclared_identifier() {
+    let d = err("__global__ void k(float* a, int n) {\n    int id = tid + 1;\n}");
+    assert_eq!(d.msg, "undeclared identifier `tid`");
+    assert_eq!((d.line, d.col), (2, 14));
+    assert_eq!(
+        d.render("undeclared.cu"),
+        "error: undeclared identifier `tid`\n\
+         \x20--> undeclared.cu:2:14\n\
+         \x20  |\n\
+         \x202 |     int id = tid + 1;\n\
+         \x20  |              ^\n"
+    );
+}
+
+#[test]
+fn golden_unterminated_block() {
+    let d = err("__global__ void k(int n) {\n    int x = n;\n");
+    assert_eq!(d.msg, "unterminated block: missing `}` for `{` opened here");
+    assert_eq!((d.line, d.col), (1, 26));
+    assert_eq!(
+        d.render("open.cu"),
+        "error: unterminated block: missing `}` for `{` opened here\n\
+         \x20--> open.cu:1:26\n\
+         \x20  |\n\
+         \x201 | __global__ void k(int n) {\n\
+         \x20  |                          ^\n"
+    );
+}
+
+#[test]
+fn golden_shared_in_expression_position() {
+    let d = err("__global__ void k(float* a) {\n    float x = __shared__ + 1.0f;\n}");
+    assert_eq!(
+        d.msg,
+        "`__shared__` is a declaration qualifier and cannot appear in an expression"
+    );
+    assert_eq!((d.line, d.col), (2, 15));
+}
+
+#[test]
+fn golden_assignment_to_parameter() {
+    let d = err("__global__ void k(int n) {\n    n = n + 1;\n}");
+    assert_eq!(d.msg, "cannot assign to parameter `n`; copy it into a local first");
+    assert_eq!((d.line, d.col), (2, 5));
+}
+
+#[test]
+fn golden_divergent_barrier_verification() {
+    let d = err(
+        "__global__ void k(int n) {\n    if (threadIdx.x < 16) {\n        __syncthreads();\n    }\n}",
+    );
+    assert_eq!(
+        d.msg,
+        "kernel `k` failed CIR verification: barrier under thread-divergent `syncthreads`"
+    );
+    assert_eq!((d.line, d.col), (1, 1));
+}
+
+#[test]
+fn golden_missing_semicolon() {
+    let d = err("__global__ void k(int* p) {\n    p[0] = 1\n}");
+    assert_eq!(d.msg, "expected `;` after the statement, found `}`");
+    assert_eq!((d.line, d.col), (3, 1));
+}
+
+#[test]
+fn golden_redeclaration() {
+    let d = err("__global__ void k(int n) {\n    int x = 0;\n    float x = 1.0f;\n}");
+    assert_eq!(d.msg, "redeclaration of `x`");
+    assert_eq!((d.line, d.col), (3, 5));
+}
+
+#[test]
+fn golden_pointer_scalar_misuse() {
+    let d = err("__global__ void k(float* a, int n) {\n    float x = a + 1.0f;\n}");
+    assert_eq!(d.msg, "expected a scalar value, found pointer of type `float*`");
+    assert_eq!((d.line, d.col), (2, 15));
+}
+
+#[test]
+fn golden_3d_geometry_rejected() {
+    let d = err("__global__ void k(int* p) {\n    p[0] = threadIdx.z;\n}");
+    assert_eq!(d.msg, "3D geometry (`.z`) is not supported; grids and blocks are 2D");
+    assert_eq!((d.line, d.col), (2, 22));
+}
