@@ -38,7 +38,10 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 2. compile ---------------------------------------------------
     let ck = Arc::new(compile_kernel(&kernel)?);
-    println!("== MPMD (after SPMD→MPMD fission) ==\n{}", cupbop::ir::pretty::mpmd_to_string(&ck.mpmd));
+    println!(
+        "== MPMD (after SPMD→MPMD fission) ==\n{}",
+        cupbop::ir::pretty::mpmd_to_string(&ck.mpmd)
+    );
 
     // ---- 3. host program + barrier insertion -------------------------
     const N: usize = 1024;
@@ -62,7 +65,10 @@ fn main() -> anyhow::Result<()> {
     let want: Vec<f32> = a.iter().zip(&bb).map(|(x, y)| x + y).collect();
     let bench = prog.finish(util::check_f32(out, want.clone(), 1e-6, 1e-7));
 
-    let rw: Vec<_> = vec![cupbop::host::barrier::KernelRw { reads: ck.reads.clone(), writes: ck.writes.clone() }];
+    let rw: Vec<_> = vec![cupbop::host::barrier::KernelRw {
+        reads: ck.reads.clone(),
+        writes: ck.writes.clone(),
+    }];
     let host = cupbop::host::insert_implicit_barriers(&bench.host, &rw);
     println!(
         "host program: {} launches, {} implicit barrier(s) inserted",
@@ -95,7 +101,10 @@ fn main() -> anyhow::Result<()> {
                 .zip(&want)
                 .map(|(g, w)| (g - w).abs())
                 .fold(0.0f32, f32::max);
-            println!("device (XLA/PJRT) path: OK on {} (max |err| = {max_err:e})", runner.platform());
+            println!(
+                "device (XLA/PJRT) path: OK on {} (max |err| = {max_err:e})",
+                runner.platform()
+            );
         }
         _ => println!("device path skipped (run `make artifacts` to enable)"),
     }

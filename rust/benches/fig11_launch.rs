@@ -10,7 +10,9 @@
 
 use cupbop::benchkit;
 use cupbop::compiler::{compile_kernel, ArgValue};
-use cupbop::frameworks::{BackendCfg, CupbopRuntime, DpcppRuntime, ExecMode, HipCpuRuntime, KernelVariants};
+use cupbop::frameworks::{
+    BackendCfg, CupbopRuntime, DpcppRuntime, ExecMode, HipCpuRuntime, KernelVariants,
+};
 use cupbop::host::{ResolvedLaunch, RuntimeApi};
 use cupbop::ir::*;
 use std::sync::Arc;

@@ -18,7 +18,9 @@
 use cupbop::benchkit;
 use cupbop::compiler::{compile_kernel, ArgValue};
 use cupbop::exec::NativeBlockFn;
-use cupbop::frameworks::{BackendCfg, CupbopRuntime, ExecMode, KernelVariants, PolicyMode, SchedKind};
+use cupbop::frameworks::{
+    BackendCfg, CupbopRuntime, ExecMode, KernelVariants, PolicyMode, SchedKind,
+};
 use cupbop::host::{ResolvedLaunch, RuntimeApi};
 use cupbop::ir::*;
 use std::sync::Arc;

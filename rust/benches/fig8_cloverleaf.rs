@@ -42,7 +42,8 @@ fn main() {
     println!("{:<28} {:>14.3?}", "OpenMP-style", omp_t.mean);
     println!("{:<28} {:>14.3?}", "MPI-style", mpi_t.mean);
     println!(
-        "\nCuPBoP / OpenMP = {:.2}x (paper's Fig 8: CuPBoP slower than both\nmanual ports — translated kernel chains don't reach CPU peak)",
+        "\nCuPBoP / OpenMP = {:.2}x (paper's Fig 8: CuPBoP slower than both\nmanual \
+         ports — translated kernel chains don't reach CPU peak)",
         cupbop_t.mean.as_secs_f64() / omp_t.mean.as_secs_f64()
     );
 }

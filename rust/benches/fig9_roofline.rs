@@ -48,7 +48,10 @@ fn main() {
             p.peak_bw_bytes_per_s,
             p.ridge()
         );
-        println!("{:<8} {:>8} {:>12} {:>12} {:>8}", "kernel", "AI", "attainable", "achieved", "eff");
+        println!(
+            "{:<8} {:>8} {:>12} {:>12} {:>8}",
+            "kernel", "AI", "attainable", "achieved", "eff"
+        );
         for pt in &points {
             let attain = p.attainable(pt.intensity);
             // device points run near the roof; CPU points carry the

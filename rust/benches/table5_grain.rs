@@ -28,9 +28,11 @@ fn main() {
         let built = spec::build_program(&b, scale);
         // dynamic instruction count from one interpreter run
         let insts = {
-            let mut rt = cupbop::frameworks::ReferenceRuntime::new(built.variants.clone(), built.mem_cap);
+            let mut rt =
+                cupbop::frameworks::ReferenceRuntime::new(built.variants.clone(), built.mem_cap);
             let mut arrays = built.arrays.clone();
-            cupbop::host::run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt).unwrap();
+            cupbop::host::run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
+                .unwrap();
             rt.stats.snapshot().instructions
         };
         print!("{name:<16}");

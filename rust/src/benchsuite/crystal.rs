@@ -121,7 +121,8 @@ fn probe_agg_kernel(table_size: i32, ngroups: i32) -> Kernel {
             b.if_else(
                 eq(reg(hk), reg(key)),
                 |b| {
-                    let grp = b.assign(rem(at(ht_vals.clone(), reg(slot), Ty::I32), c_i32(ngroups)));
+                    let grp =
+                        b.assign(rem(at(ht_vals.clone(), reg(slot), Ty::I32), c_i32(ngroups)));
                     b.atomic_rmw_void(
                         AtomicOp::Add,
                         index(agg.clone(), reg(grp), Ty::I32),
@@ -184,7 +185,12 @@ fn build_filter_agg(scale: Scale, lo: i32, hi: i32) -> BenchProgram {
         k,
         ((n as u32).div_ceil(BLOCK), 1),
         (BLOCK, 1),
-        vec![HostArg::Buf(d_keys), HostArg::Buf(d_rev), HostArg::Buf(d_res), HostArg::I32(n as i32)],
+        vec![
+            HostArg::Buf(d_keys),
+            HostArg::Buf(d_rev),
+            HostArg::Buf(d_res),
+            HostArg::I32(n as i32),
+        ],
     );
     pb.read_back(d_res, out);
     pb.finish(Box::new(move |arrays| {

@@ -144,6 +144,12 @@ pub fn benchmark() -> Benchmark {
         incorrect_on: &[],
         build: Some(build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 29.87, dpcpp: 48.381, hip: 55.595, cupbop: 50.107, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 29.87,
+            dpcpp: 48.381,
+            hip: 55.595,
+            cupbop: 50.107,
+            openmp: None,
+        }),
     }
 }

@@ -138,6 +138,12 @@ pub fn benchmark() -> Benchmark {
         incorrect_on: &[],
         build: Some(build),
         device_artifact: None, // data-dependent control flow: CPU-path only
-        paper_secs: Some(PaperRow { cuda: 0.967, dpcpp: 1.504, hip: 2.506, cupbop: 2.74, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 0.967,
+            dpcpp: 1.504,
+            hip: 2.506,
+            cupbop: 2.74,
+            openmp: None,
+        }),
     }
 }

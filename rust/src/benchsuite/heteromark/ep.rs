@@ -142,6 +142,12 @@ pub fn benchmark() -> Benchmark {
         incorrect_on: &[],
         build: Some(build),
         device_artifact: Some("ep"),
-        paper_secs: Some(PaperRow { cuda: 4.187, dpcpp: 2.506, hip: 34.085, cupbop: 28.844, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 4.187,
+            dpcpp: 2.506,
+            hip: 34.085,
+            cupbop: 28.844,
+            openmp: None,
+        }),
     }
 }

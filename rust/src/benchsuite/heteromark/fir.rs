@@ -149,6 +149,12 @@ pub fn benchmark() -> Benchmark {
         incorrect_on: &[],
         build: Some(build),
         device_artifact: Some("fir"),
-        paper_secs: Some(PaperRow { cuda: 1.445, dpcpp: 4.389, hip: 4.225, cupbop: 3.872, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 1.445,
+            dpcpp: 4.389,
+            hip: 4.225,
+            cupbop: 3.872,
+            openmp: None,
+        }),
     }
 }

@@ -127,7 +127,13 @@ pub fn benchmark() -> Benchmark {
         incorrect_on: &[],
         build: Some(|s| build_variant(s, true)),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 0.846, dpcpp: 1.598, hip: 2.256, cupbop: 1.959, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 0.846,
+            dpcpp: 1.598,
+            hip: 2.256,
+            cupbop: 1.959,
+            openmp: None,
+        }),
     }
 }
 

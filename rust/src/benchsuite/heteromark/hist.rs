@@ -42,7 +42,12 @@ fn kernel(strided: bool, atomic: bool) -> Kernel {
             let v = b.assign(at(pixels.clone(), reg(i), Ty::I32));
             let bin = b.assign(rem(reg(v), c_i32(BINS as i32)));
             if atomic {
-                b.atomic_rmw_void(AtomicOp::Add, index(bins.clone(), reg(bin), Ty::I32), c_i32(1), Ty::I32);
+                b.atomic_rmw_void(
+                    AtomicOp::Add,
+                    index(bins.clone(), reg(bin), Ty::I32),
+                    c_i32(1),
+                    Ty::I32,
+                );
             } else {
                 let old = b.assign(at(bins.clone(), reg(bin), Ty::I32));
                 b.store_at(bins.clone(), reg(bin), add(reg(old), c_i32(1)), Ty::I32);
@@ -57,7 +62,12 @@ fn kernel(strided: bool, atomic: bool) -> Kernel {
             let v = b.assign(at(pixels.clone(), reg(i), Ty::I32));
             let bin = b.assign(rem(reg(v), c_i32(BINS as i32)));
             if atomic {
-                b.atomic_rmw_void(AtomicOp::Add, index(bins.clone(), reg(bin), Ty::I32), c_i32(1), Ty::I32);
+                b.atomic_rmw_void(
+                    AtomicOp::Add,
+                    index(bins.clone(), reg(bin), Ty::I32),
+                    c_i32(1),
+                    Ty::I32,
+                );
             } else {
                 let old = b.assign(at(bins.clone(), reg(bin), Ty::I32));
                 b.store_at(bins.clone(), reg(bin), add(reg(old), c_i32(1)), Ty::I32);
@@ -151,7 +161,13 @@ pub fn benchmark() -> Benchmark {
         incorrect_on: &[],
         build: Some(|s| build_variant(s, true, true)),
         device_artifact: Some("hist"),
-        paper_secs: Some(PaperRow { cuda: 1.829, dpcpp: 2.529, hip: 2.309, cupbop: 2.78, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 1.829,
+            dpcpp: 2.529,
+            hip: 2.309,
+            cupbop: 2.78,
+            openmp: None,
+        }),
     }
 }
 

@@ -36,7 +36,11 @@ fn kernel() -> Kernel {
             let dist = b.assign(c_f32(0.0));
             b.for_(c_i32(0), c_i32(NFEATURES as i32), c_i32(1), |b, l| {
                 let f = at(feature.clone(), add(mul(reg(l), npoints.clone()), reg(gid)), Ty::F32);
-                let c = at(clusters.clone(), add(mul(reg(i), c_i32(NFEATURES as i32)), reg(l)), Ty::F32);
+                let c = at(
+                    clusters.clone(),
+                    add(mul(reg(i), c_i32(NFEATURES as i32)), reg(l)),
+                    Ty::F32,
+                );
                 let d = b.assign(sub(f, c));
                 b.set(dist, add(reg(dist), mul(reg(d), reg(d))));
             });
@@ -157,6 +161,12 @@ pub fn benchmark() -> Benchmark {
         incorrect_on: &[],
         build: Some(build),
         device_artifact: Some("kmeans"),
-        paper_secs: Some(PaperRow { cuda: 2.968, dpcpp: 1.513, hip: 4.581, cupbop: 5.165, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 2.968,
+            dpcpp: 1.513,
+            hip: 4.581,
+            cupbop: 5.165,
+            openmp: None,
+        }),
     }
 }

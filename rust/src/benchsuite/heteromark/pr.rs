@@ -113,7 +113,12 @@ fn build(scale: Scale) -> BenchProgram {
             grid: (grid, 1),
             block: (BLOCK, 1),
             dyn_shmem: 0,
-            args: vec![HostArg::Buf(d_src), HostArg::Buf(rin), HostArg::Buf(rout), HostArg::I32(n as i32)],
+            args: vec![
+                HostArg::Buf(d_src),
+                HostArg::Buf(rin),
+                HostArg::Buf(rout),
+                HostArg::I32(n as i32),
+            ],
         })
     };
     pb.op(HostOp::Repeat { n: iters / 2, body: vec![launch(k, d_a, d_b), launch(k, d_b, d_a)] });
@@ -129,6 +134,12 @@ pub fn benchmark() -> Benchmark {
         incorrect_on: &[],
         build: Some(build),
         device_artifact: Some("pr"),
-        paper_secs: Some(PaperRow { cuda: 2.836, dpcpp: 3.506, hip: 3.789, cupbop: 4.783, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 2.836,
+            dpcpp: 3.506,
+            hip: 3.789,
+            cupbop: 4.783,
+            openmp: None,
+        }),
     }
 }

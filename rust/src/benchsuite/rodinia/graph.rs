@@ -222,7 +222,13 @@ pub fn bfs() -> Benchmark {
         incorrect_on: &[crate::compiler::Framework::Dpcpp],
         build: Some(bfs_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 1.29, dpcpp: 1.555, hip: 1.267, cupbop: 1.136, openmp: Some(1.365) }),
+        paper_secs: Some(PaperRow {
+            cuda: 1.29,
+            dpcpp: 1.555,
+            hip: 1.267,
+            cupbop: 1.136,
+            openmp: Some(1.365),
+        }),
     }
 }
 
@@ -341,6 +347,12 @@ pub fn btree() -> Benchmark {
         incorrect_on: &[],
         build: Some(btree_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 1.459, dpcpp: 1.577, hip: f64::NAN, cupbop: 2.135, openmp: Some(1.56) }),
+        paper_secs: Some(PaperRow {
+            cuda: 1.459,
+            dpcpp: 1.577,
+            hip: f64::NAN,
+            cupbop: 2.135,
+            openmp: Some(1.56),
+        }),
     }
 }

@@ -212,7 +212,13 @@ pub fn gaussian() -> Benchmark {
         incorrect_on: &[],
         build: Some(gaussian_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 0.866, dpcpp: 1.12, hip: 8.494, cupbop: 1.669, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 0.866,
+            dpcpp: 1.12,
+            hip: 8.494,
+            cupbop: 1.669,
+            openmp: None,
+        }),
     }
 }
 
@@ -259,7 +265,12 @@ fn lud_update_kernel() -> Kernel {
         let ait = at(a.clone(), add(mul(reg(i), n.clone()), t.clone()), Ty::F32);
         let atj = at(a.clone(), add(mul(t.clone(), n.clone()), reg(j)), Ty::F32);
         let aij = at(a.clone(), add(mul(reg(i), n.clone()), reg(j)), Ty::F32);
-        b.store_at(a.clone(), add(mul(reg(i), n.clone()), reg(j)), sub(aij, mul(ait, atj)), Ty::F32);
+        b.store_at(
+            a.clone(),
+            add(mul(reg(i), n.clone()), reg(j)),
+            sub(aij, mul(ait, atj)),
+            Ty::F32,
+        );
     });
     b.build()
 }
@@ -302,14 +313,22 @@ fn lud_build(scale: Scale) -> BenchProgram {
                 grid: ((n as u32).div_ceil(b1), 1),
                 block: (b1, 1),
                 dyn_shmem: 0,
-                args: vec![HostArg::Buf(d_a), HostArg::I32(n as i32), HostArg::IterI32 { base: 0, step: 1 }],
+                args: vec![
+                    HostArg::Buf(d_a),
+                    HostArg::I32(n as i32),
+                    HostArg::IterI32 { base: 0, step: 1 },
+                ],
             }),
             HostOp::Launch(LaunchOp {
                 kernel: ku,
                 grid: ((n as u32).div_ceil(bx), (n as u32).div_ceil(bx)),
                 block: (bx, bx),
                 dyn_shmem: 0,
-                args: vec![HostArg::Buf(d_a), HostArg::I32(n as i32), HostArg::IterI32 { base: 0, step: 1 }],
+                args: vec![
+                    HostArg::Buf(d_a),
+                    HostArg::I32(n as i32),
+                    HostArg::IterI32 { base: 0, step: 1 },
+                ],
             }),
         ],
     });
@@ -325,7 +344,13 @@ pub fn lud() -> Benchmark {
         incorrect_on: &[],
         build: Some(lud_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 0.68, dpcpp: 1.212, hip: 0.953, cupbop: 1.164, openmp: Some(0.082) }),
+        paper_secs: Some(PaperRow {
+            cuda: 0.68,
+            dpcpp: 1.212,
+            hip: 0.953,
+            cupbop: 1.164,
+            openmp: Some(0.082),
+        }),
     }
 }
 
@@ -362,8 +387,19 @@ fn nw_kernel() -> Kernel {
         |b| {
             let idx = |bi: Expr, bj: Expr| add(mul(bi, reg(np1)), bj);
             let diag_v = add(
-                load(index(score.clone(), idx(sub(reg(i), c_i32(1)), sub(reg(j), c_i32(1))), Ty::I32), Ty::I32),
-                at(sim.clone(), add(mul(sub(reg(i), c_i32(1)), n.clone()), sub(reg(j), c_i32(1))), Ty::I32),
+                load(
+                    index(
+                        score.clone(),
+                        idx(sub(reg(i), c_i32(1)), sub(reg(j), c_i32(1))),
+                        Ty::I32,
+                    ),
+                    Ty::I32,
+                ),
+                at(
+                    sim.clone(),
+                    add(mul(sub(reg(i), c_i32(1)), n.clone()), sub(reg(j), c_i32(1))),
+                    Ty::I32,
+                ),
             );
             let up = sub(
                 load(index(score.clone(), idx(sub(reg(i), c_i32(1)), reg(j)), Ty::I32), Ty::I32),
@@ -470,6 +506,12 @@ pub fn nw() -> Benchmark {
         incorrect_on: &[],
         build: Some(nw_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 1.068, dpcpp: 2.126, hip: 1.767, cupbop: 1.589, openmp: Some(0.477) }),
+        paper_secs: Some(PaperRow {
+            cuda: 1.068,
+            dpcpp: 2.126,
+            hip: 1.767,
+            cupbop: 1.589,
+            openmp: Some(0.477),
+        }),
     }
 }

@@ -99,7 +99,13 @@ pub fn backprop() -> Benchmark {
         incorrect_on: &[],
         build: Some(backprop_build),
         device_artifact: Some("backprop"),
-        paper_secs: Some(PaperRow { cuda: 0.672, dpcpp: 2.51, hip: f64::NAN, cupbop: 1.964, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 0.672,
+            dpcpp: 2.51,
+            hip: f64::NAN,
+            cupbop: 1.964,
+            openmp: None,
+        }),
     }
 }
 
@@ -247,7 +253,13 @@ pub fn myocyte() -> Benchmark {
         incorrect_on: &[],
         build: Some(myocyte_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 1.087, dpcpp: 3.327, hip: 0.397, cupbop: 0.151, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 1.087,
+            dpcpp: 3.327,
+            hip: 0.397,
+            cupbop: 0.151,
+            openmp: None,
+        }),
     }
 }
 
@@ -324,7 +336,13 @@ pub fn nn() -> Benchmark {
         incorrect_on: &[],
         build: Some(nn_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 0.443, dpcpp: 2.004, hip: 1.198, cupbop: 1.309, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 0.443,
+            dpcpp: 2.004,
+            hip: 1.198,
+            cupbop: 1.309,
+            openmp: None,
+        }),
     }
 }
 
@@ -397,7 +415,13 @@ fn particlefilter_build(scale: Scale) -> BenchProgram {
         k1,
         (g, 1),
         (128, 1),
-        vec![HostArg::Buf(d_xs), HostArg::Buf(d_w), HostArg::Buf(d_sum), HostArg::I32(n as i32), HostArg::F32(obs)],
+        vec![
+            HostArg::Buf(d_xs),
+            HostArg::Buf(d_w),
+            HostArg::Buf(d_sum),
+            HostArg::I32(n as i32),
+            HostArg::F32(obs),
+        ],
     );
     pb.launch(
         k2,
@@ -418,7 +442,13 @@ pub fn particlefilter() -> Benchmark {
         incorrect_on: &[crate::compiler::Framework::Dpcpp],
         build: Some(particlefilter_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 0.751, dpcpp: 0.889, hip: 0.836, cupbop: 0.833, openmp: Some(0.702) }),
+        paper_secs: Some(PaperRow {
+            cuda: 0.751,
+            dpcpp: 0.889,
+            hip: 0.836,
+            cupbop: 0.833,
+            openmp: Some(0.702),
+        }),
     }
 }
 
@@ -455,7 +485,10 @@ fn sc_kernel() -> Kernel {
             let x2 = b.assign(x);
             b.set(acc, add(reg(acc), mul(reg(x2), reg(x2))));
         });
-        let dl = sub(mul(reg(acc), at(weight.clone(), reg(gid), Ty::F32)), at(cost.clone(), reg(gid), Ty::F32));
+        let dl = sub(
+            mul(reg(acc), at(weight.clone(), reg(gid), Ty::F32)),
+            at(cost.clone(), reg(gid), Ty::F32),
+        );
         b.store_at(delta.clone(), reg(gid), dl, Ty::F32);
     });
     b.build()
@@ -513,7 +546,13 @@ pub fn streamcluster() -> Benchmark {
         incorrect_on: &[],
         build: Some(streamcluster_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 6.607, dpcpp: 14.804, hip: 21.09, cupbop: 18.435, openmp: Some(13.977) }),
+        paper_secs: Some(PaperRow {
+            cuda: 6.607,
+            dpcpp: 14.804,
+            hip: 21.09,
+            cupbop: 18.435,
+            openmp: Some(13.977),
+        }),
     }
 }
 
@@ -539,7 +578,11 @@ fn cfd_kernel() -> Kernel {
         let c = b.assign(at(rho.clone(), reg(gid), Ty::F32));
         let flux = b.assign(c_f32(0.0));
         b.for_(c_i32(0), c_i32(CFD_NNB as i32), c_i32(1), |b, e| {
-            let nb = b.assign(at(nbr.clone(), add(mul(reg(gid), c_i32(CFD_NNB as i32)), reg(e)), Ty::I32));
+            let nb = b.assign(at(
+                nbr.clone(),
+                add(mul(reg(gid), c_i32(CFD_NNB as i32)), reg(e)),
+                Ty::I32,
+            ));
             b.if_(ge(reg(nb), c_i32(0)), |b| {
                 let rv = at(rho.clone(), reg(nb), Ty::F32);
                 b.set(flux, add(reg(flux), sub(rv, reg(c))));

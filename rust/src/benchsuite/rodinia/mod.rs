@@ -15,7 +15,11 @@ use super::spec::{Benchmark, Suite};
 use crate::compiler::Framework;
 use crate::ir::Feature;
 
-fn spec_only(name: &'static str, features: &'static [Feature], incorrect_on: &'static [Framework]) -> Benchmark {
+fn spec_only(
+    name: &'static str,
+    features: &'static [Feature],
+    incorrect_on: &'static [Framework],
+) -> Benchmark {
     Benchmark {
         name,
         suite: Suite::Rodinia,

@@ -181,7 +181,12 @@ fn hotspot_build(scale: Scale) -> BenchProgram {
             grid: (g, g),
             block: (HS_BLOCK, HS_BLOCK),
             dyn_shmem: 0,
-            args: vec![HostArg::Buf(rin), HostArg::Buf(d_p), HostArg::Buf(rout), HostArg::I32(n as i32)],
+            args: vec![
+                HostArg::Buf(rin),
+                HostArg::Buf(d_p),
+                HostArg::Buf(rout),
+                HostArg::I32(n as i32),
+            ],
         })
     };
     pb.op(HostOp::Repeat { n: steps / 2, body: vec![launch(d_a, d_b), launch(d_b, d_a)] });
@@ -197,7 +202,13 @@ pub fn hotspot() -> Benchmark {
         incorrect_on: &[crate::compiler::Framework::Dpcpp],
         build: Some(hotspot_build),
         device_artifact: Some("hotspot"),
-        paper_secs: Some(PaperRow { cuda: 1.239, dpcpp: 1.373, hip: 1.267, cupbop: 1.072, openmp: Some(1.11) }),
+        paper_secs: Some(PaperRow {
+            cuda: 1.239,
+            dpcpp: 1.373,
+            hip: 1.267,
+            cupbop: 1.072,
+            openmp: Some(1.11),
+        }),
     }
 }
 
@@ -230,7 +241,11 @@ fn hotspot3d_kernel() -> Kernel {
             let idx = b.assign(add(reg(plane), add(mul(reg(gy), nx.clone()), reg(gx))));
             let c = b.assign(at(t_in.clone(), reg(idx), Ty::F32));
             let pick = |cond: Expr, off: Expr| -> Expr {
-                select(cond, load(index(t_in.clone(), add(reg(idx), off), Ty::F32), Ty::F32), reg(c))
+                select(
+                    cond,
+                    load(index(t_in.clone(), add(reg(idx), off), Ty::F32), Ty::F32),
+                    reg(c),
+                )
             };
             let l = pick(gt(reg(gx), c_i32(0)), c_i32(-1));
             let r = pick(lt(reg(gx), sub(nx.clone(), c_i32(1))), c_i32(1));
@@ -293,7 +308,12 @@ fn hotspot3d_build(scale: Scale) -> BenchProgram {
             grid: (g, g),
             block: (bx, bx),
             dyn_shmem: 0,
-            args: vec![HostArg::Buf(rin), HostArg::Buf(rout), HostArg::I32(nx as i32), HostArg::I32(nz as i32)],
+            args: vec![
+                HostArg::Buf(rin),
+                HostArg::Buf(rout),
+                HostArg::I32(nx as i32),
+                HostArg::I32(nz as i32),
+            ],
         })
     };
     pb.op(HostOp::Repeat { n: steps / 2, body: vec![launch(d_a, d_b), launch(d_b, d_a)] });
@@ -309,7 +329,13 @@ pub fn hotspot3d() -> Benchmark {
         incorrect_on: &[crate::compiler::Framework::Dpcpp],
         build: Some(hotspot3d_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 1.376, dpcpp: 1.249, hip: 1.732, cupbop: 1.269, openmp: Some(1.262) }),
+        paper_secs: Some(PaperRow {
+            cuda: 1.376,
+            dpcpp: 1.249,
+            hip: 1.732,
+            cupbop: 1.269,
+            openmp: Some(1.262),
+        }),
     }
 }
 
@@ -438,7 +464,13 @@ pub fn pathfinder() -> Benchmark {
         incorrect_on: &[],
         build: Some(pathfinder_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 1.92, dpcpp: 2.395, hip: 2.424, cupbop: 2.359, openmp: None }),
+        paper_secs: Some(PaperRow {
+            cuda: 1.92,
+            dpcpp: 2.395,
+            hip: 2.424,
+            cupbop: 2.359,
+            openmp: None,
+        }),
     }
 }
 
@@ -485,7 +517,13 @@ fn srad1_kernel() -> Kernel {
         let num = sub(mul(c_f32(0.5), reg(g2)), mul(c_f32(1.0 / 16.0), mul(reg(lap), reg(lap))));
         let den = add(c_f32(1.0), mul(c_f32(0.25), reg(lap)));
         let qsqr = b.assign(div(num, max_e(mul(den.clone(), den), c_f32(1e-6))));
-        let cf = div(c_f32(1.0), add(c_f32(1.0), div(sub(reg(qsqr), q0.clone()), mul(q0.clone(), add(c_f32(1.0), q0.clone())))));
+        let cf = div(
+            c_f32(1.0),
+            add(
+                c_f32(1.0),
+                div(sub(reg(qsqr), q0.clone()), mul(q0.clone(), add(c_f32(1.0), q0.clone()))),
+            ),
+        );
         // clamp to [0, 1]
         b.store_at(coef.clone(), reg(idx), max_e(c_f32(0.0), min_e(c_f32(1.0), cf)), Ty::F32);
     });
@@ -524,7 +562,12 @@ fn srad2_kernel() -> Kernel {
             add(mul(cr, sub(ir_, reg(c))), mul(reg(cc), sub(il, reg(c)))),
             add(mul(cd, sub(id_, reg(c))), mul(reg(cc), sub(iu, reg(c)))),
         );
-        b.store_at(out.clone(), reg(idx), add(reg(c), mul(c_f32(SRAD_LAMBDA / 4.0), div_)), Ty::F32);
+        b.store_at(
+            out.clone(),
+            reg(idx),
+            add(reg(c), mul(c_f32(SRAD_LAMBDA / 4.0), div_)),
+            Ty::F32,
+        );
     });
     b.build()
 }
@@ -604,7 +647,12 @@ fn srad_build(scale: Scale) -> BenchProgram {
             grid: (g, g),
             block: (bx, bx),
             dyn_shmem: 0,
-            args: vec![HostArg::Buf(img_b), HostArg::Buf(coef_b), HostArg::I32(n as i32), HostArg::F32(q0)],
+            args: vec![
+                HostArg::Buf(img_b),
+                HostArg::Buf(coef_b),
+                HostArg::I32(n as i32),
+                HostArg::F32(q0),
+            ],
         })
     };
     let l2 = |img_b, coef_b, out_b| {
@@ -642,6 +690,12 @@ pub fn srad() -> Benchmark {
         incorrect_on: &[],
         build: Some(srad_build),
         device_artifact: None,
-        paper_secs: Some(PaperRow { cuda: 1.979, dpcpp: 5.996, hip: 8.308, cupbop: 2.886, openmp: Some(2.474) }),
+        paper_secs: Some(PaperRow {
+            cuda: 1.979,
+            dpcpp: 5.996,
+            hip: 8.308,
+            cupbop: 2.886,
+            openmp: Some(2.474),
+        }),
     }
 }

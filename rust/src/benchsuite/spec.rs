@@ -7,7 +7,7 @@
 //! validator for a given problem scale. [`run_on`] executes a built
 //! program against any framework backend and validates the outputs.
 
-use crate::compiler::{compile_kernel, CompiledKernel, Framework};
+use crate::compiler::{compile_kernel_opt, CompiledKernel, Framework, OptLevel};
 use crate::exec::BlockFn;
 use crate::frameworks::{
     BackendCfg, CupbopRuntime, DpcppRuntime, HipCpuRuntime, KernelVariants, ReferenceRuntime,
@@ -115,20 +115,37 @@ pub struct BuiltProgram {
     pub mem_cap: usize,
 }
 
-/// Compile a benchmark's kernels and run the host barrier pass.
+/// Compile a benchmark's kernels at the default opt level (`-O2`) and
+/// run the host barrier pass.
 pub fn build_program(b: &Benchmark, scale: Scale) -> BuiltProgram {
+    build_program_opt(b, scale, OptLevel::default())
+}
+
+/// Compile a benchmark's kernels at an explicit opt level and run the
+/// host barrier pass (the differential sweep and `fig_opt` build every
+/// benchmark at `-O0/-O1/-O2`).
+pub fn build_program_opt(b: &Benchmark, scale: Scale, opt: OptLevel) -> BuiltProgram {
     let builder = b.build.unwrap_or_else(|| panic!("benchmark `{}` is spec-only", b.name));
-    build_prepared(b.name, builder(scale))
+    build_prepared_opt(b.name, builder(scale), opt)
+}
+
+/// Compile an already-constructed [`BenchProgram`] at the default opt
+/// level and run the host barrier pass.
+pub fn build_prepared(name: &str, prog: BenchProgram) -> BuiltProgram {
+    build_prepared_opt(name, prog, OptLevel::default())
 }
 
 /// Compile an already-constructed [`BenchProgram`] (kernels possibly
 /// swapped for frontend-parsed ones, or synthesised by
-/// `frontend::harness`) and run the host barrier pass.
-pub fn build_prepared(name: &str, prog: BenchProgram) -> BuiltProgram {
+/// `frontend::harness`) at an explicit opt level and run the host
+/// barrier pass.
+pub fn build_prepared_opt(name: &str, prog: BenchProgram, opt: OptLevel) -> BuiltProgram {
     let compiled: Vec<Arc<CompiledKernel>> = prog
         .kernels
         .iter()
-        .map(|k| Arc::new(compile_kernel(k).unwrap_or_else(|e| panic!("{}: {e}", k.name))))
+        .map(|k| {
+            Arc::new(compile_kernel_opt(k, opt).unwrap_or_else(|e| panic!("{}: {e}", k.name)))
+        })
         .collect();
     let rw: Vec<KernelRw> = compiled
         .iter()

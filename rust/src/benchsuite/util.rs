@@ -143,7 +143,13 @@ impl ProgBuilder {
     }
 
     /// Record a launch.
-    pub fn launch(&mut self, kernel: usize, grid: (u32, u32), block: (u32, u32), args: Vec<HostArg>) {
+    pub fn launch(
+        &mut self,
+        kernel: usize,
+        grid: (u32, u32),
+        block: (u32, u32),
+        args: Vec<HostArg>,
+    ) {
         self.ops.push(HostOp::Launch(LaunchOp { kernel, grid, block, dyn_shmem: 0, args }));
     }
 

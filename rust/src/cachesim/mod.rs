@@ -67,7 +67,12 @@ pub struct Cache {
 
 impl Cache {
     pub fn new(cfg: CacheCfg) -> Self {
-        Cache { cfg, sets: vec![Vec::new(); cfg.num_sets()], clock: 0, stats: CacheStats::default() }
+        Cache {
+            cfg,
+            sets: vec![Vec::new(); cfg.num_sets()],
+            clock: 0,
+            stats: CacheStats::default(),
+        }
     }
 
     /// Access one address; returns true on hit. Write-allocate.

@@ -322,7 +322,12 @@ mod tests {
         );
         feats.insert(Feature::TextureMemory);
         assert_eq!(judge(Framework::CuPBoP, &feats, &[]), Verdict::Unsupported);
-        let cov = coverage(&[Verdict::Correct, Verdict::Incorrect, Verdict::Unsupported, Verdict::Correct]);
+        let cov = coverage(&[
+            Verdict::Correct,
+            Verdict::Incorrect,
+            Verdict::Unsupported,
+            Verdict::Correct,
+        ]);
         assert!((cov - 50.0).abs() < 1e-9);
     }
 }

@@ -91,7 +91,9 @@ fn rewrite_expr(e: Expr, base: usize) -> Expr {
             }
             None => Expr::Special(s),
         },
-        Expr::Bin(op, a, b) => Expr::Bin(op, Box::new(rewrite_expr(*a, base)), Box::new(rewrite_expr(*b, base))),
+        Expr::Bin(op, a, b) => {
+            Expr::Bin(op, Box::new(rewrite_expr(*a, base)), Box::new(rewrite_expr(*b, base)))
+        }
         Expr::Un(op, a) => Expr::Un(op, Box::new(rewrite_expr(*a, base))),
         Expr::Cast(t, a) => Expr::Cast(t, Box::new(rewrite_expr(*a, base))),
         Expr::Load { ptr, ty } => Expr::Load { ptr: Box::new(rewrite_expr(*ptr, base)), ty },
@@ -113,7 +115,9 @@ fn rewrite_expr(e: Expr, base: usize) -> Expr {
         Expr::WarpVote { kind, pred } => {
             Expr::WarpVote { kind, pred: Box::new(rewrite_expr(*pred, base)) }
         }
-        Expr::Exchange { lane, ty } => Expr::Exchange { lane: Box::new(rewrite_expr(*lane, base)), ty },
+        Expr::Exchange { lane, ty } => {
+            Expr::Exchange { lane: Box::new(rewrite_expr(*lane, base)), ty }
+        }
         Expr::NvIntrinsic { name, args } => Expr::NvIntrinsic {
             name,
             args: args.into_iter().map(|a| rewrite_expr(a, base)).collect(),

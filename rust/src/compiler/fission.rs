@@ -78,7 +78,9 @@ pub fn uses_warp_collectives(body: &[Stmt]) -> bool {
             }
             Stmt::While { cond, body } => expr_walk(cond) || body.iter().any(stmt_walk),
             Stmt::AtomicRmw { ptr, val, .. } => expr_walk(ptr) || expr_walk(val),
-            Stmt::AtomicCas { ptr, cmp, val, .. } => expr_walk(ptr) || expr_walk(cmp) || expr_walk(val),
+            Stmt::AtomicCas { ptr, cmp, val, .. } => {
+                expr_walk(ptr) || expr_walk(cmp) || expr_walk(val)
+            }
             _ => false,
         }
     }

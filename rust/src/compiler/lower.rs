@@ -13,10 +13,25 @@
 //!   [`Inst::Geom`] reads filled from the launch descriptor;
 //! * **shared-memory bases** — `SharedBase`/`DynSharedBase` resolve to
 //!   tagged-pointer constants using the kernel's [`MemoryPlan`];
-//! * **register classes** — the block-scope-vs-per-thread split the
-//!   interpreter computes per `CirBlockFn` is captured once in
-//!   [`LoweredProgram::block_scope`] (expression temporaries are
-//!   appended above `MpmdKernel::num_regs` and are always per-thread).
+//! * **register classes** — the register file is split into a
+//!   **scalar** class (one slot per block) and a **vector** class (one
+//!   slot per lane). At `-O0` the scalar class holds exactly the
+//!   hoisted block-scope loop variables ([`block_scope_regs`], shared
+//!   with the interpreter); at `-O2` it additionally holds every
+//!   register the uniformity analysis
+//!   (`compiler::passes::uniformity`) proves block-uniform, including
+//!   expression temporaries.
+//!
+//! **Scalarization** (`-O2`): instructions whose operands and result
+//! are all scalar-class carry a `scalar` execution flag — the VM runs
+//! them once per dispatch instead of once per active lane, multiplying
+//! their stats contribution by the active-lane count so `ExecStats`
+//! and traces stay bit-identical to `-O0`. At a uniform→varying
+//! assignment boundary the value crosses classes through an explicit
+//! [`Inst::Broadcast`]; uniform *operands* of varying instructions are
+//! read in place (the class-split register file makes that broadcast
+//! free). LICM (`compiler::passes::licm`) hoists invariant, stats-free
+//! `For` bounds/steps into the loop preheader.
 //!
 //! Control flow comes in two flavours, mirroring the executor's two
 //! scopes:
@@ -38,6 +53,8 @@
 
 use super::memory_mapping::MemoryPlan;
 use super::param_pack::{PackedLayout, SlotKind};
+use super::passes::uniformity::UniformInfo;
+use super::passes::{licm, types};
 use crate::exec::Value;
 use crate::ir::*;
 use crate::runtime::device::SHARED_TAG;
@@ -51,15 +68,20 @@ pub type RegId = u32;
 /// Bytecode instruction index (jump target).
 pub type Pc = u32;
 
-/// One flat-bytecode instruction. Data instructions execute across
-/// every *active lane* (a single lane 0 in uniform sections); control
-/// instructions manipulate the program counter or the active-lane set.
+/// One flat-bytecode instruction. Vector instructions execute across
+/// every *active lane* (a single lane 0 in uniform sections); scalar-
+/// flagged instructions execute once per dispatch with lane-multiplied
+/// accounting; control instructions manipulate the program counter or
+/// the active-lane set.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Inst {
     /// dst ← immediate (also carries resolved shared-base pointers)
     Const { dst: RegId, val: Value },
     /// dst ← src
     Mov { dst: RegId, src: RegId },
+    /// vector dst ← scalar src, replicated across active lanes — the
+    /// explicit uniform→varying boundary
+    Broadcast { dst: RegId, src: RegId },
     /// dst ← user argument `idx`, decoded from the packed object
     Param { dst: RegId, idx: u16 },
     /// dst ← hidden geometry value (ABI order: bidx/bidy/bdimx/bdimy/
@@ -119,12 +141,25 @@ pub enum Inst {
 #[derive(Debug, Clone)]
 pub struct LoweredProgram {
     pub insts: Vec<Inst>,
+    /// parallel to `insts`: true = execute once per dispatch (scalar),
+    /// with stats multiplied by the active-lane count
+    pub scalar: Vec<bool>,
     /// total registers, including expression temporaries
     pub num_regs: usize,
-    /// register class bitmap: `true` = block-scope scalar
-    pub block_scope: Vec<bool>,
+    /// register class bitmap: `true` = scalar (one block-wide slot in
+    /// `block_regs`), `false` = vector (one slot per lane)
+    pub scalar_reg: Vec<bool>,
     /// packed-argument slot kinds (slot `i` lives at byte `i * 8`)
     pub arg_slots: Vec<SlotKind>,
+    /// loop bounds/steps hoisted by LICM (pipeline reporting)
+    pub licm_hoisted: usize,
+}
+
+impl LoweredProgram {
+    /// How many instructions carry the scalar (once-per-block) flag.
+    pub fn scalar_inst_count(&self) -> usize {
+        self.scalar.iter().filter(|&&s| s).count()
+    }
 }
 
 /// Block-scope registers = loop variables of hoisted (block-level)
@@ -149,36 +184,75 @@ pub fn block_scope_regs(body: &[Stmt], out: &mut HashSet<Reg>) {
     }
 }
 
-/// Lower an MPMD kernel to bytecode.
+/// Lower an MPMD kernel to bytecode with no optimization (`-O0`).
 pub fn lower(
     mpmd: &MpmdKernel,
     memory: &MemoryPlan,
     layout: &PackedLayout,
     extra_base: usize,
 ) -> LoweredProgram {
+    lower_opt(mpmd, memory, layout, extra_base, None, false)
+}
+
+/// Lower an MPMD kernel to bytecode. `uniform` enables uniformity-driven
+/// scalarization; `licm_on` enables invariant bound/step hoisting.
+pub fn lower_opt(
+    mpmd: &MpmdKernel,
+    memory: &MemoryPlan,
+    layout: &PackedLayout,
+    extra_base: usize,
+    uniform: Option<&UniformInfo>,
+    licm_on: bool,
+) -> LoweredProgram {
+    let mut bs = HashSet::new();
+    block_scope_regs(&mpmd.body, &mut bs);
+    let mut class: Vec<Option<bool>> = Vec::with_capacity(mpmd.num_regs as usize);
+    for r in 0..mpmd.num_regs {
+        let scalar = bs.contains(&Reg(r))
+            || uniform.is_some_and(|u| u.uniform.get(r as usize).copied().unwrap_or(false));
+        class.push(Some(scalar));
+    }
+    let ty = licm_on.then(|| types::infer(&mpmd.params, &mpmd.body));
     let mut lw = Lower {
         insts: Vec::new(),
+        scalar_flags: Vec::new(),
+        class,
         temp_base: mpmd.num_regs,
         next_temp: mpmd.num_regs,
         max_reg: mpmd.num_regs,
         memory,
         extra_base,
+        scalarize: uniform.is_some(),
+        licm: licm_on,
+        types: ty,
+        licm_hoisted: 0,
     };
     for s in &mpmd.body {
         lw.stmt_block(s);
     }
     let num_regs = lw.max_reg as usize;
-    let mut block_scope = vec![false; num_regs];
-    let mut set = HashSet::new();
-    block_scope_regs(&mpmd.body, &mut set);
-    for r in set {
-        block_scope[r.0 as usize] = true;
+    let mut scalar_reg = vec![false; num_regs];
+    for (r, sr) in scalar_reg.iter_mut().enumerate() {
+        *sr = lw.class.get(r).copied().flatten().unwrap_or(false);
     }
-    LoweredProgram { insts: lw.insts, num_regs, block_scope, arg_slots: layout.slots.clone() }
+    LoweredProgram {
+        insts: lw.insts,
+        scalar: lw.scalar_flags,
+        num_regs,
+        scalar_reg,
+        arg_slots: layout.slots.clone(),
+        licm_hoisted: lw.licm_hoisted,
+    }
 }
 
 struct Lower<'a> {
     insts: Vec<Inst>,
+    /// parallel to `insts`: the scalar execution flag
+    scalar_flags: Vec<bool>,
+    /// per-register class (`Some(true)` = scalar); temps lock their
+    /// class on first allocation — a slot wanted in the other class is
+    /// skipped (deterministically), never re-classed
+    class: Vec<Option<bool>>,
     /// first register id usable as a temporary; bumped when a register
     /// must stay live across nested statements (loop-carried values)
     temp_base: u32,
@@ -186,12 +260,23 @@ struct Lower<'a> {
     max_reg: u32,
     memory: &'a MemoryPlan,
     extra_base: usize,
+    /// `-O2`: place uniform values in the scalar class
+    scalarize: bool,
+    /// `-O2`: hoist invariant loop bounds/steps
+    licm: bool,
+    types: Option<types::Types>,
+    licm_hoisted: usize,
 }
 
 impl<'a> Lower<'a> {
-    fn emit(&mut self, i: Inst) -> usize {
+    fn emit_s(&mut self, i: Inst, scalar: bool) -> usize {
         self.insts.push(i);
+        self.scalar_flags.push(scalar);
         self.insts.len() - 1
+    }
+
+    fn emit(&mut self, i: Inst) -> usize {
+        self.emit_s(i, false)
     }
 
     fn here(&self) -> Pc {
@@ -210,24 +295,52 @@ impl<'a> Lower<'a> {
         }
     }
 
+    fn is_scalar(&self, r: RegId) -> bool {
+        self.class.get(r as usize).copied().flatten().unwrap_or(false)
+    }
+
+    /// Advance `cursor` to the next register slot compatible with the
+    /// requested class, locking unclassed slots on first use. Slots
+    /// locked to the other class are skipped (deterministically) so a
+    /// register id never changes storage class once assigned.
+    fn alloc_slot(class: &mut Vec<Option<bool>>, cursor: &mut u32, scalar: bool) -> RegId {
+        loop {
+            let r = *cursor as usize;
+            *cursor += 1;
+            if class.len() <= r {
+                class.resize(r + 1, None);
+            }
+            match class[r] {
+                None => {
+                    class[r] = Some(scalar);
+                    return r as u32;
+                }
+                Some(c) if c == scalar => return r as u32,
+                _ => {}
+            }
+        }
+    }
+
     /// Scratch register valid within the current statement only; the
     /// pool rewinds at every statement boundary. Values a lowered
     /// construct consumes before its next statement boundary (operands,
     /// branch conditions) live here.
-    fn temp(&mut self) -> RegId {
-        let r = self.next_temp;
-        self.next_temp += 1;
+    fn temp_c(&mut self, scalar: bool) -> RegId {
+        let r = Self::alloc_slot(&mut self.class, &mut self.next_temp, scalar);
         if self.max_reg < self.next_temp {
             self.max_reg = self.next_temp;
         }
         r
     }
 
+    fn temp(&mut self) -> RegId {
+        self.temp_c(false)
+    }
+
     /// Register that must survive nested statements (a lowered loop's
     /// carried induction value): permanently reserved, never rewound.
-    fn persist(&mut self) -> RegId {
-        let r = self.temp_base;
-        self.temp_base += 1;
+    fn persist_c(&mut self, scalar: bool) -> RegId {
+        let r = Self::alloc_slot(&mut self.class, &mut self.temp_base, scalar);
         if self.next_temp < self.temp_base {
             self.next_temp = self.temp_base;
         }
@@ -237,8 +350,57 @@ impl<'a> Lower<'a> {
         r
     }
 
+    fn persist(&mut self) -> RegId {
+        self.persist_c(false)
+    }
+
     fn reset_temps(&mut self) {
         self.next_temp = self.temp_base;
+    }
+
+    /// Is the value of `e` block-uniform under the current classes?
+    /// (`false` whenever scalarization is off — `-O0` lowering is then
+    /// bit-identical to the pre-PassManager output.)
+    fn expr_uniform(&self, e: &Expr) -> bool {
+        if !self.scalarize {
+            return false;
+        }
+        match e {
+            Expr::Const(_) | Expr::Param(_) | Expr::SharedBase(_) | Expr::DynSharedBase => true,
+            Expr::Reg(r) => self.is_scalar(r.0),
+            Expr::Special(s) => !super::passes::uniformity::is_lane_special(*s),
+            Expr::Bin(_, a, b) => self.expr_uniform(a) && self.expr_uniform(b),
+            Expr::Un(_, a) | Expr::Cast(_, a) => self.expr_uniform(a),
+            Expr::Index { base, idx, .. } => self.expr_uniform(base) && self.expr_uniform(idx),
+            Expr::Load { ptr, .. } => self.expr_uniform(ptr),
+            // Select lowers to a divergence diamond — never scalarized
+            // as a whole (its subtrees still are)
+            _ => false,
+        }
+    }
+
+    /// Hoist a loop bound/step into a preheader register when LICM is
+    /// on and the expression is invariant + stats-free.
+    fn hoist_bound(&mut self, e: &Expr, assigned: &HashSet<Reg>) -> Option<RegId> {
+        if !self.licm {
+            return None;
+        }
+        let ty = self.types.as_ref()?;
+        if !licm::hoistable(e, assigned, ty) {
+            return None;
+        }
+        self.licm_hoisted += 1;
+        let uni = self.expr_uniform(e);
+        let t = self.persist_c(uni);
+        self.expr_emit(e, t, uni);
+        Some(t)
+    }
+
+    fn loop_assigned(var: Reg, body: &[Stmt]) -> HashSet<Reg> {
+        let mut assigned = HashSet::new();
+        assigned.insert(var);
+        licm::assigned_regs(body, &mut assigned);
+        assigned
     }
 
     // ---------- block-scope (uniform) statements ----------
@@ -283,8 +445,11 @@ impl<'a> Lower<'a> {
                 let v = self.persist();
                 let s0 = self.expr(start);
                 self.emit(Inst::Mov { dst: v, src: s0 });
+                let assigned = self.licm.then(|| Self::loop_assigned(*var, body));
+                let e_h = assigned.as_ref().and_then(|a| self.hoist_bound(end, a));
+                let s_h = assigned.as_ref().and_then(|a| self.hoist_bound(step, a));
                 let head = self.here();
-                let e = self.expr(end);
+                let e = e_h.unwrap_or_else(|| self.expr(end));
                 let c = self.temp();
                 self.emit(Inst::Bin { op: BinOp::Lt, dst: c, a: v, b: e, flops: false });
                 let jexit = self.emit(Inst::JumpIfZero { cond: c, t: 0 });
@@ -293,7 +458,7 @@ impl<'a> Lower<'a> {
                     self.stmt_block(st);
                 }
                 self.reset_temps();
-                let stp = self.expr(step);
+                let stp = s_h.unwrap_or_else(|| self.expr(step));
                 self.emit(Inst::Bin { op: BinOp::Add, dst: v, a: v, b: stp, flops: false });
                 self.emit(Inst::Jump { t: head });
                 let exit = self.here();
@@ -349,22 +514,34 @@ impl<'a> Lower<'a> {
                 }
             }
             Stmt::For { var, start, end, step, body } => {
-                let v = self.persist();
+                let var_s = self.is_scalar(var.0);
+                let v = self.persist_c(var_s);
                 self.expr_to(start, v);
+                let assigned = self.licm.then(|| Self::loop_assigned(*var, body));
+                let e_h = assigned.as_ref().and_then(|a| self.hoist_bound(end, a));
+                let s_h = assigned.as_ref().and_then(|a| self.hoist_bound(step, a));
                 self.emit(Inst::LoopBegin);
                 let head = self.here();
-                let e = self.expr(end);
-                let c = self.temp();
-                self.emit(Inst::Bin { op: BinOp::Lt, dst: c, a: v, b: e, flops: false });
+                let e = e_h.unwrap_or_else(|| self.expr(end));
+                let cond_s = self.is_scalar(v) && self.is_scalar(e);
+                let c = self.temp_c(cond_s);
+                self.emit_s(
+                    Inst::Bin { op: BinOp::Lt, dst: c, a: v, b: e, flops: false },
+                    cond_s,
+                );
                 let lt = self.emit(Inst::LoopTest { cond: c, exit_t: 0 });
-                self.emit(Inst::Mov { dst: var.0, src: v });
+                self.emit_s(Inst::Mov { dst: var.0, src: v }, var_s);
                 for st in body {
                     self.stmt_thread(st);
                 }
                 self.emit(Inst::ContinueMerge);
                 self.reset_temps();
-                let stp = self.expr(step);
-                self.emit(Inst::Bin { op: BinOp::Add, dst: v, a: v, b: stp, flops: false });
+                let stp = s_h.unwrap_or_else(|| self.expr(step));
+                let add_s = self.is_scalar(v) && self.is_scalar(stp);
+                self.emit_s(
+                    Inst::Bin { op: BinOp::Add, dst: v, a: v, b: stp, flops: false },
+                    add_s,
+                );
                 self.emit(Inst::Jump { t: head });
                 let le = self.emit(Inst::LoopEnd);
                 self.patch_jump(lt, le as Pc);
@@ -426,50 +603,90 @@ impl<'a> Lower<'a> {
     // ---------- expressions ----------
 
     /// Lower `e`, returning the register holding its value. Plain
-    /// register reads are returned in place (no copy).
+    /// register reads are returned in place (no copy); uniform
+    /// subtrees land in scalar temporaries.
     fn expr(&mut self, e: &Expr) -> RegId {
         if let Expr::Reg(r) = e {
             return r.0;
         }
-        let t = self.temp();
-        self.expr_to(e, t);
+        let uni = self.expr_uniform(e);
+        let t = self.temp_c(uni);
+        self.expr_emit(e, t, uni);
         t
     }
 
-    /// Lower `e` with its result written to `dst`.
+    /// True for expressions that lower to a single instruction — a
+    /// `Broadcast` detour would not save any per-lane work.
+    fn trivial(e: &Expr) -> bool {
+        matches!(
+            e,
+            Expr::Const(_)
+                | Expr::Reg(_)
+                | Expr::Param(_)
+                | Expr::Special(_)
+                | Expr::SharedBase(_)
+                | Expr::DynSharedBase
+        )
+    }
+
+    /// Lower `e` with its result written to `dst` (whose class is
+    /// already fixed). A compound uniform value assigned to a vector
+    /// register is computed once in a scalar temp and crosses the
+    /// class boundary through an explicit `Broadcast`.
     fn expr_to(&mut self, e: &Expr, dst: RegId) {
+        let dst_scalar = self.is_scalar(dst);
+        let uni = self.expr_uniform(e);
+        if uni && !dst_scalar && !Self::trivial(e) {
+            let t = self.temp_c(true);
+            self.expr_emit(e, t, true);
+            self.emit(Inst::Broadcast { dst, src: t });
+        } else {
+            self.expr_emit(e, dst, uni && dst_scalar);
+        }
+    }
+
+    /// Emit the instructions for `e` into `dst`. `scalar` marks the
+    /// emitted data instructions for once-per-dispatch execution and
+    /// requires `e` uniform and `dst` scalar-class.
+    fn expr_emit(&mut self, e: &Expr, dst: RegId, scalar: bool) {
         match e {
             Expr::Const(c) => {
-                self.emit(Inst::Const { dst, val: Value::of_const(*c) });
+                self.emit_s(Inst::Const { dst, val: Value::of_const(*c) }, scalar);
             }
             Expr::Reg(r) => {
-                self.emit(Inst::Mov { dst, src: r.0 });
+                let src_s = self.is_scalar(r.0);
+                let dst_s = self.is_scalar(dst);
+                if src_s && !dst_s {
+                    self.emit(Inst::Broadcast { dst, src: r.0 });
+                } else {
+                    self.emit_s(Inst::Mov { dst, src: r.0 }, src_s && dst_s);
+                }
             }
             Expr::Param(i) => {
                 if *i >= self.extra_base {
-                    self.emit(Inst::Geom { dst, which: (*i - self.extra_base) as u8 });
+                    self.emit_s(Inst::Geom { dst, which: (*i - self.extra_base) as u8 }, scalar);
                 } else {
-                    self.emit(Inst::Param { dst, idx: *i as u16 });
+                    self.emit_s(Inst::Param { dst, idx: *i as u16 }, scalar);
                 }
             }
             Expr::Special(sr) => match sr {
                 Special::BlockIdxX => {
-                    self.emit(Inst::Geom { dst, which: 0 });
+                    self.emit_s(Inst::Geom { dst, which: 0 }, scalar);
                 }
                 Special::BlockIdxY => {
-                    self.emit(Inst::Geom { dst, which: 1 });
+                    self.emit_s(Inst::Geom { dst, which: 1 }, scalar);
                 }
                 Special::BlockDimX => {
-                    self.emit(Inst::Geom { dst, which: 2 });
+                    self.emit_s(Inst::Geom { dst, which: 2 }, scalar);
                 }
                 Special::BlockDimY => {
-                    self.emit(Inst::Geom { dst, which: 3 });
+                    self.emit_s(Inst::Geom { dst, which: 3 }, scalar);
                 }
                 Special::GridDimX => {
-                    self.emit(Inst::Geom { dst, which: 4 });
+                    self.emit_s(Inst::Geom { dst, which: 4 }, scalar);
                 }
                 Special::GridDimY => {
-                    self.emit(Inst::Geom { dst, which: 5 });
+                    self.emit_s(Inst::Geom { dst, which: 5 }, scalar);
                 }
                 Special::ThreadIdxX | Special::ThreadIdxY | Special::LaneId | Special::WarpId => {
                     self.emit(Inst::Special { dst, sr: *sr });
@@ -477,33 +694,33 @@ impl<'a> Lower<'a> {
             },
             Expr::SharedBase(i) => {
                 let off = self.memory.slots[*i].offset as u64;
-                self.emit(Inst::Const { dst, val: Value::Ptr(SHARED_TAG | off) });
+                self.emit_s(Inst::Const { dst, val: Value::Ptr(SHARED_TAG | off) }, scalar);
             }
             Expr::DynSharedBase => {
                 let off = self.memory.dyn_offset as u64;
-                self.emit(Inst::Const { dst, val: Value::Ptr(SHARED_TAG | off) });
+                self.emit_s(Inst::Const { dst, val: Value::Ptr(SHARED_TAG | off) }, scalar);
             }
             Expr::Bin(op, a, b) => {
                 let ra = self.expr(a);
                 let rb = self.expr(b);
-                self.emit(Inst::Bin { op: *op, dst, a: ra, b: rb, flops: true });
+                self.emit_s(Inst::Bin { op: *op, dst, a: ra, b: rb, flops: true }, scalar);
             }
             Expr::Un(op, a) => {
                 let ra = self.expr(a);
-                self.emit(Inst::Un { op: *op, dst, a: ra, flops: true });
+                self.emit_s(Inst::Un { op: *op, dst, a: ra, flops: true }, scalar);
             }
             Expr::Cast(ty, a) => {
                 let ra = self.expr(a);
-                self.emit(Inst::Cast { ty: *ty, dst, a: ra });
+                self.emit_s(Inst::Cast { ty: *ty, dst, a: ra }, scalar);
             }
             Expr::Load { ptr, ty } => {
                 let rp = self.expr(ptr);
-                self.emit(Inst::Load { dst, ptr: rp, ty: *ty });
+                self.emit_s(Inst::Load { dst, ptr: rp, ty: *ty }, scalar);
             }
             Expr::Index { base, idx, elem } => {
                 let rb = self.expr(base);
                 let ri = self.expr(idx);
-                self.emit(Inst::Index { dst, base: rb, idx: ri, elem: *elem });
+                self.emit_s(Inst::Index { dst, base: rb, idx: ri, elem: *elem }, scalar);
             }
             Expr::Select { cond, then_, else_ } => {
                 // The interpreter evaluates only the taken side per
@@ -535,24 +752,109 @@ impl<'a> Lower<'a> {
     }
 }
 
+/// Disassemble a lowered program — the `cupbop compile --emit bytecode`
+/// debugging aid. One line per instruction: pc, execution class
+/// (`s` scalar / `.` vector), mnemonic.
+pub fn disasm(p: &LoweredProgram) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "// {} instructions ({} scalar), {} registers ({} scalar), {} hoisted bound(s)\n",
+        p.insts.len(),
+        p.scalar_inst_count(),
+        p.num_regs,
+        p.scalar_reg.iter().filter(|&&s| s).count(),
+        p.licm_hoisted,
+    ));
+    for (pc, inst) in p.insts.iter().enumerate() {
+        let cls = if p.scalar[pc] { 's' } else { '.' };
+        out.push_str(&format!("{pc:5} {cls}  {}\n", fmt_inst(inst)));
+    }
+    out
+}
+
+fn fmt_inst(i: &Inst) -> String {
+    const GEOM: [&str; 6] = ["bidx", "bidy", "bdimx", "bdimy", "gdimx", "gdimy"];
+    match i {
+        Inst::Const { dst, val } => format!("r{dst} <- const {val:?}"),
+        Inst::Mov { dst, src } => format!("r{dst} <- r{src}"),
+        Inst::Broadcast { dst, src } => format!("r{dst} <- broadcast r{src}"),
+        Inst::Param { dst, idx } => format!("r{dst} <- arg[{idx}]"),
+        Inst::Geom { dst, which } => {
+            format!("r{dst} <- geom.{}", GEOM.get(*which as usize).unwrap_or(&"?"))
+        }
+        Inst::Special { dst, sr } => format!("r{dst} <- {sr:?}"),
+        Inst::Bin { op, dst, a, b, flops } => format!(
+            "r{dst} <- r{a} {op:?} r{b}{}",
+            if *flops { "" } else { "  ; glue" }
+        ),
+        Inst::Un { op, dst, a, .. } => format!("r{dst} <- {op:?} r{a}"),
+        Inst::Cast { ty, dst, a } => format!("r{dst} <- ({}) r{a}", ty.c_name()),
+        Inst::Index { dst, base, idx, elem } => {
+            format!("r{dst} <- r{base} + r{idx}*{}", elem.size())
+        }
+        Inst::Load { dst, ptr, ty } => format!("r{dst} <- load.{} [r{ptr}]", ty.c_name()),
+        Inst::Store { ptr, val, ty } => format!("store.{} [r{ptr}] <- r{val}", ty.c_name()),
+        Inst::AtomicRmw { op, dst, ptr, val, .. } => match dst {
+            Some(d) => format!("r{d} <- atomic.{op:?} [r{ptr}], r{val}"),
+            None => format!("atomic.{op:?} [r{ptr}], r{val}"),
+        },
+        Inst::AtomicCas { dst, ptr, cmp, val, .. } => match dst {
+            Some(d) => format!("r{d} <- cas [r{ptr}], r{cmp}, r{val}"),
+            None => format!("cas [r{ptr}], r{cmp}, r{val}"),
+        },
+        Inst::StoreExchange { val } => format!("exchange[lane] <- r{val}"),
+        Inst::ReadExchange { dst, lane } => format!("r{dst} <- exchange[r{lane}]"),
+        Inst::VoteResult { dst } => format!("r{dst} <- vote-result"),
+        Inst::ReduceVote { kind } => format!("reduce-vote {kind:?}"),
+        Inst::Acct { lanes } => {
+            format!("acct {}", if *lanes { "+lanes" } else { "+1" })
+        }
+        Inst::Jump { t } => format!("jump @{t}"),
+        Inst::JumpIfZero { cond, t } => format!("jz r{cond} @{t}"),
+        Inst::RegionBegin { warp, end } => match warp {
+            Some(w) => format!("region.begin warp=r{w} end=@{end}"),
+            None => format!("region.begin end=@{end}"),
+        },
+        Inst::RegionEnd => "region.end".into(),
+        Inst::IfBegin { cond, else_t } => format!("if.begin r{cond} else=@{else_t}"),
+        Inst::Else { end_t } => format!("if.else end=@{end_t}"),
+        Inst::IfEnd => "if.end".into(),
+        Inst::LoopBegin => "loop.begin".into(),
+        Inst::LoopTest { cond, exit_t } => format!("loop.test r{cond} exit=@{exit_t}"),
+        Inst::ContinueMerge => "continue.merge".into(),
+        Inst::LoopEnd => "loop.end".into(),
+        Inst::Break => "break".into(),
+        Inst::Continue => "continue".into(),
+        Inst::Return => "return".into(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::compile_kernel;
+    use crate::compiler::passes::OptLevel;
+    use crate::compiler::{compile_kernel, compile_kernel_opt};
 
     fn lowered_of(k: &Kernel) -> LoweredProgram {
         compile_kernel(k).unwrap().lowered
     }
 
+    fn lowered_at(k: &Kernel, opt: OptLevel) -> LoweredProgram {
+        compile_kernel_opt(k, opt).unwrap().lowered
+    }
+
     /// Structural sanity: every begin has a matching end, every jump
-    /// target is in range, every register id is within `num_regs`.
+    /// target is in range, every register id is within `num_regs`, the
+    /// scalar flag vector is in lock-step with the code.
     fn check_well_formed(p: &LoweredProgram) {
         let n = p.insts.len() as Pc;
+        assert_eq!(p.insts.len(), p.scalar.len(), "scalar flags out of sync");
+        assert_eq!(p.scalar_reg.len(), p.num_regs);
         let mut regions = 0i32;
         let mut ifs = 0i32;
         let mut loops = 0i32;
         let reg_ok = |r: RegId| (r as usize) < p.num_regs;
-        for inst in &p.insts {
+        for (pc, inst) in p.insts.iter().enumerate() {
             match *inst {
                 Inst::RegionBegin { end, warp } => {
                     regions += 1;
@@ -581,7 +883,44 @@ mod tests {
                 }
                 Inst::Load { dst, ptr, .. } => assert!(reg_ok(dst) && reg_ok(ptr)),
                 Inst::Store { ptr, val, .. } => assert!(reg_ok(ptr) && reg_ok(val)),
+                Inst::Broadcast { dst, src } => {
+                    assert!(reg_ok(dst) && reg_ok(src));
+                    assert!(
+                        p.scalar_reg[src as usize] && !p.scalar_reg[dst as usize],
+                        "broadcast must cross scalar→vector"
+                    );
+                    assert!(!p.scalar[pc], "broadcast executes per lane");
+                }
                 _ => {}
+            }
+            // a scalar-flagged data instruction may only touch scalar regs
+            if p.scalar[pc] {
+                let ok = match *inst {
+                    Inst::Const { dst, .. } | Inst::Param { dst, .. } | Inst::Geom { dst, .. } => {
+                        p.scalar_reg[dst as usize]
+                    }
+                    Inst::Mov { dst, src } => {
+                        p.scalar_reg[dst as usize] && p.scalar_reg[src as usize]
+                    }
+                    Inst::Bin { dst, a, b, .. } => {
+                        p.scalar_reg[dst as usize]
+                            && p.scalar_reg[a as usize]
+                            && p.scalar_reg[b as usize]
+                    }
+                    Inst::Un { dst, a, .. } | Inst::Cast { dst, a, .. } => {
+                        p.scalar_reg[dst as usize] && p.scalar_reg[a as usize]
+                    }
+                    Inst::Index { dst, base, idx, .. } => {
+                        p.scalar_reg[dst as usize]
+                            && p.scalar_reg[base as usize]
+                            && p.scalar_reg[idx as usize]
+                    }
+                    Inst::Load { dst, ptr, .. } => {
+                        p.scalar_reg[dst as usize] && p.scalar_reg[ptr as usize]
+                    }
+                    _ => false,
+                };
+                assert!(ok, "scalar-flagged inst touches vector regs: {inst:?}");
             }
             assert!(regions >= 0 && ifs >= 0 && loops >= 0);
         }
@@ -602,15 +941,30 @@ mod tests {
             let s = add(at(a.clone(), reg(id), Ty::F32), at(bb.clone(), reg(id), Ty::F32));
             bl.store_at(c.clone(), reg(id), s, Ty::F32);
         });
-        let p = lowered_of(&b.build());
-        check_well_formed(&p);
-        // one region, one lane-if, loads/stores present
-        assert!(p.insts.iter().any(|i| matches!(i, Inst::RegionBegin { .. })));
-        assert!(p.insts.iter().any(|i| matches!(i, Inst::IfBegin { .. })));
-        assert!(p.insts.iter().any(|i| matches!(i, Inst::Load { .. })));
-        assert!(p.insts.iter().any(|i| matches!(i, Inst::Store { .. })));
-        // blockIdx/blockDim rewritten to hidden params → Geom reads
-        assert!(p.insts.iter().any(|i| matches!(i, Inst::Geom { .. })));
+        let k = b.build();
+        for opt in OptLevel::ALL {
+            let p = lowered_at(&k, opt);
+            check_well_formed(&p);
+            // one region, one lane-if, loads/stores present
+            assert!(p.insts.iter().any(|i| matches!(i, Inst::RegionBegin { .. })));
+            assert!(p.insts.iter().any(|i| matches!(i, Inst::IfBegin { .. })));
+            assert!(p.insts.iter().any(|i| matches!(i, Inst::Load { .. })));
+            assert!(p.insts.iter().any(|i| matches!(i, Inst::Store { .. })));
+            // blockIdx/blockDim rewritten to hidden params → Geom reads
+            assert!(p.insts.iter().any(|i| matches!(i, Inst::Geom { .. })));
+        }
+        // -O2: the Param read of `n` and the bid*bdim half of the
+        // global-tid idiom execute once per block
+        let p2 = lowered_at(&k, OptLevel::O2);
+        assert!(p2.scalar_inst_count() > 0, "scalarization found uniform work");
+        assert!(p2
+            .insts
+            .iter()
+            .zip(&p2.scalar)
+            .any(|(i, s)| matches!(i, Inst::Param { .. }) && *s));
+        // -O0 lowering has no scalar-flagged instructions at all
+        let p0 = lowered_at(&k, OptLevel::O0);
+        assert_eq!(p0.scalar_inst_count(), 0);
     }
 
     #[test]
@@ -650,8 +1004,8 @@ mod tests {
         let p = lowered_of(&b.build());
         check_well_formed(&p);
         assert!(p.insts.iter().any(|i| matches!(i, Inst::JumpIfZero { .. })));
-        // the hoisted For's variable is block-scope
-        assert!(p.block_scope.iter().any(|&x| x));
+        // the hoisted For's variable is scalar-class
+        assert!(p.scalar_reg.iter().any(|&x| x));
     }
 
     #[test]
@@ -661,11 +1015,14 @@ mod tests {
         b.for_(c_i32(0), c_i32(4), c_i32(1), |b, i| {
             b.store_at(a.clone(), reg(i), c_f32(0.0), Ty::F32);
         });
-        let p = lowered_of(&b.build());
-        check_well_formed(&p);
-        for inst in &p.insts {
-            if let Inst::Bin { op: BinOp::Lt, flops, .. } = inst {
-                assert!(!flops, "loop glue must not count flops");
+        let k = b.build();
+        for opt in OptLevel::ALL {
+            let p = lowered_at(&k, opt);
+            check_well_formed(&p);
+            for inst in &p.insts {
+                if let Inst::Bin { op: BinOp::Lt, flops, .. } = inst {
+                    assert!(!flops, "loop glue must not count flops");
+                }
             }
         }
     }
@@ -695,14 +1052,82 @@ mod tests {
         let sh = b.shfl(ShflKind::Down, reg(v0), c_i32(16));
         let s = b.assign(add(reg(v0), reg(sh)));
         b.store_at(d.clone(), tid_x(), reg(s), Ty::F64);
-        let p = lowered_of(&b.build());
-        check_well_formed(&p);
-        assert!(p.insts.iter().any(|i| matches!(i, Inst::StoreExchange { .. })));
-        assert!(p.insts.iter().any(|i| matches!(i, Inst::ReadExchange { .. })));
-        // warp regions carry the warp register
-        assert!(p
+        let k = b.build();
+        for opt in OptLevel::ALL {
+            let p = lowered_at(&k, opt);
+            check_well_formed(&p);
+            assert!(p.insts.iter().any(|i| matches!(i, Inst::StoreExchange { .. })));
+            assert!(p.insts.iter().any(|i| matches!(i, Inst::ReadExchange { .. })));
+            // warp regions carry the warp register
+            assert!(p
+                .insts
+                .iter()
+                .any(|i| matches!(i, Inst::RegionBegin { warp: Some(_), .. })));
+        }
+    }
+
+    /// `-O2` hoists the invariant bound of a uniform thread loop and
+    /// scalarizes its induction glue.
+    #[test]
+    fn licm_hoists_uniform_bound() {
+        let mut b = KernelBuilder::new("feat_loop");
+        let p = b.ptr_param("p", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let acc = b.assign(c_i32(0));
+        b.for_(c_i32(0), mul(n.clone(), c_i32(2)), c_i32(1), |bl, i| {
+            bl.set(acc, add(reg(acc), reg(i)));
+        });
+        b.store_at(p.clone(), tid_x(), reg(acc), Ty::I32);
+        let k = b.build();
+        let p0 = lowered_at(&k, OptLevel::O0);
+        let p2 = lowered_at(&k, OptLevel::O2);
+        check_well_formed(&p0);
+        check_well_formed(&p2);
+        assert_eq!(p0.licm_hoisted, 0);
+        assert!(p2.licm_hoisted >= 1, "n*2 bound (and const step) hoisted");
+        // the hoisted loop's Lt glue is scalar at -O2
+        assert!(p2
             .insts
             .iter()
-            .any(|i| matches!(i, Inst::RegionBegin { warp: Some(_), .. })));
+            .zip(&p2.scalar)
+            .any(|(i, s)| matches!(i, Inst::Bin { op: BinOp::Lt, .. }) && *s));
+    }
+
+    /// A compound uniform RHS assigned to a lane-varying register
+    /// crosses the class boundary through an explicit Broadcast.
+    #[test]
+    fn uniform_to_varying_boundary_broadcasts() {
+        let mut b = KernelBuilder::new("bcast");
+        let p = b.ptr_param("p", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let x = b.fresh();
+        b.set(x, c_i32(0));
+        // divergent taint: x is assigned under a tid-branch → vector
+        b.if_(lt(tid_x(), c_i32(4)), |bl| bl.set(x, c_i32(1)));
+        // uniform compound RHS into the vector register x → Broadcast
+        b.set(x, mul(n.clone(), c_i32(3)));
+        b.store_at(p.clone(), tid_x(), reg(x), Ty::I32);
+        let p2 = lowered_at(&b.build(), OptLevel::O2);
+        check_well_formed(&p2);
+        assert!(p2.insts.iter().any(|i| matches!(i, Inst::Broadcast { .. })));
+    }
+
+    #[test]
+    fn disasm_round_trips_every_opcode_shape() {
+        let mut b = KernelBuilder::new("dis");
+        let d = b.ptr_param("d", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let t = b.assign(tid_x());
+        b.for_(c_i32(0), n.clone(), c_i32(1), |bl, i| {
+            bl.if_(lt(reg(t), reg(i)), |bl2| bl2.brk());
+            bl.store_at(d.clone(), reg(t), reg(i), Ty::I32);
+        });
+        b.atomic_rmw_void(AtomicOp::Add, d.clone(), c_i32(1), Ty::I32);
+        let p = lowered_of(&b.build());
+        let text = disasm(&p);
+        assert_eq!(text.lines().count(), p.insts.len() + 1, "one line per inst + header");
+        assert!(text.contains("acct"));
+        assert!(text.contains("loop.test"));
+        assert!(text.contains("atomic.Add"));
     }
 }

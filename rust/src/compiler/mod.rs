@@ -1,14 +1,29 @@
-//! The CuPBoP compilation pipeline (paper §III).
+//! The CuPBoP compilation pipeline (paper §III) — an optimizing
+//! middle-end since the PassManager refactor.
 //!
-//! `compile_kernel` chains the kernel-side passes in the paper's order:
+//! `compile_kernel_opt` runs an explicit [`passes::PassManager`]
+//! pipeline, verified between passes:
 //!
 //! 1. verify SPMD input (`ir::verify`),
-//! 2. memory mapping (§III-B1) — shared-slab layout,
-//! 3. extra-variable insertion (§III-B2) — hidden geometry params,
-//! 4. SPMD→MPMD transformation (§III-B3) — loop fission / warp nesting,
-//! 5. parameter packing (§III-C2) — the packed-argument ABI,
-//! 6. bytecode lowering (`lower`) — the flat register-machine program
-//!    the lane-vectorized VM (`exec::bytecode`) executes.
+//! 2. `-O1`+: constant folding + algebraic simplification
+//!    (`passes::fold`), accounting-transparent DCE (`passes::dce`) —
+//!    each re-verified,
+//! 3. memory mapping (§III-B1) — shared-slab layout,
+//! 4. extra-variable insertion (§III-B2) — hidden geometry params,
+//! 5. SPMD→MPMD transformation (§III-B3) — loop fission / warp nesting,
+//!    checked with `ir::verify::verify_mpmd`,
+//! 6. parameter packing (§III-C2) — the packed-argument ABI,
+//! 7. `-O2`: uniformity analysis (`passes::uniformity`) classifying
+//!    every register block-uniform vs lane-varying,
+//! 8. bytecode lowering (`lower`) — the flat register-machine program
+//!    the lane-vectorized VM (`exec::bytecode`) executes; at `-O2` it
+//!    consumes the uniformity lattice (scalar/vector register split +
+//!    `Broadcast` boundaries) and hoists invariant loop bounds
+//!    (`passes::licm`).
+//!
+//! Optimization is **accounting-transparent**: every opt level produces
+//! bit-identical outputs, `ExecStats` and memory traces (see
+//! `passes` module docs for the per-pass argument).
 //!
 //! Host-side transformations (implicit barrier insertion, §III-C1) live
 //! in `crate::host` because they operate on host programs, not kernels.
@@ -19,6 +34,7 @@ pub mod fission;
 pub mod lower;
 pub mod memory_mapping;
 pub mod param_pack;
+pub mod passes;
 
 pub use coverage::{coverage, detect_features, explain_unsupported, judge, Framework, Verdict};
 pub use extra_vars::{insert_extra_vars, ExtraVar, EXTRA_VARS};
@@ -26,6 +42,7 @@ pub use fission::{spmd_to_mpmd, FissionError};
 pub use lower::LoweredProgram;
 pub use memory_mapping::{plan_memory, slab_bytes, MemoryPlan};
 pub use param_pack::{pack, unpack, ArgValue, PackedLayout};
+pub use passes::{OptLevel, PassInfo, PassManager};
 
 use crate::ir::{verify::VerifyError, Kernel, MpmdKernel};
 
@@ -45,11 +62,17 @@ pub struct CompiledKernel {
     pub writes: Vec<usize>,
     /// Indices of user pointer params the kernel loads from.
     pub reads: Vec<usize>,
+    /// Opt level this kernel was compiled at.
+    pub opt: OptLevel,
+    /// The resolved pass pipeline (per-pass stmt/register deltas).
+    pub pipeline: Vec<PassInfo>,
 }
 
 #[derive(Debug)]
 pub enum CompileError {
     Verify(Vec<VerifyError>),
+    /// A pass broke an IR invariant (pass name + violations).
+    PassVerify(&'static str, Vec<VerifyError>),
     Fission(FissionError),
 }
 
@@ -63,6 +86,13 @@ impl std::fmt::Display for CompileError {
                 }
                 Ok(())
             }
+            CompileError::PassVerify(pass, errs) => {
+                write!(f, "pass `{pass}` broke IR invariants:")?;
+                for e in errs {
+                    write!(f, " {e};")?;
+                }
+                Ok(())
+            }
             CompileError::Fission(e) => write!(f, "fission failed: {e}"),
         }
     }
@@ -70,16 +100,96 @@ impl std::fmt::Display for CompileError {
 
 impl std::error::Error for CompileError {}
 
-/// Run the full kernel compilation pipeline.
+/// Run the full kernel compilation pipeline at the default opt level
+/// (`-O2`).
 pub fn compile_kernel(kernel: &Kernel) -> Result<CompiledKernel, CompileError> {
+    compile_kernel_opt(kernel, OptLevel::default())
+}
+
+/// Run the full kernel compilation pipeline at an explicit opt level.
+pub fn compile_kernel_opt(kernel: &Kernel, opt: OptLevel) -> Result<CompiledKernel, CompileError> {
+    let mut pm = PassManager::new(opt);
+
+    // Input contract + analyses that must see the *user's* kernel: the
+    // read/write sets drive host implicit-barrier insertion and stay
+    // conservative w.r.t. any later rewrite.
     crate::ir::verify::verify(kernel).map_err(CompileError::Verify)?;
+    pm.record_spmd("verify", kernel, String::new());
     let memory = plan_memory(kernel);
     let (reads, writes) = param_rw_sets(kernel);
-    let ev = insert_extra_vars(kernel.clone());
+
+    // -O1+: SPMD-level optimization passes, each re-verified.
+    let mut k = kernel.clone();
+    if opt >= OptLevel::O1 {
+        let (folded, nf) = passes::fold::run(k);
+        k = folded;
+        crate::ir::verify::verify(&k).map_err(|e| CompileError::PassVerify("const-fold", e))?;
+        let note = if nf > 0 { format!("folded {nf}") } else { String::new() };
+        pm.record_spmd("const-fold", &k, note);
+
+        let (dced, nd) = passes::dce::run(k);
+        k = dced;
+        crate::ir::verify::verify(&k).map_err(|e| CompileError::PassVerify("dce", e))?;
+        pm.record_spmd("dce", &k, if nd > 0 { format!("neutralized {nd}") } else { String::new() });
+    }
+
+    // Translation passes (paper order).
+    pm.record(
+        "memory-map",
+        passes::count_stmts(&k.body),
+        k.num_regs as usize,
+        format!("slab {} B", memory.static_bytes),
+    );
+    let ev = insert_extra_vars(k);
+    pm.record_spmd("extra-vars", &ev.kernel, format!("+{} hidden params", EXTRA_VARS.len()));
     let layout = PackedLayout::of_kernel(&ev.kernel);
     let mpmd = spmd_to_mpmd(&ev.kernel).map_err(CompileError::Fission)?;
-    let lowered = lower::lower(&mpmd, &memory, &layout, ev.extra_base);
-    Ok(CompiledKernel { mpmd, memory, layout, lowered, extra_base: ev.extra_base, writes, reads })
+    crate::ir::verify::verify_mpmd(&mpmd).map_err(|e| CompileError::PassVerify("fission", e))?;
+    pm.record_mpmd(
+        "fission",
+        &mpmd,
+        format!(
+            "{} replicated regs{}",
+            mpmd.replicated_regs.len(),
+            if mpmd.warp_level { ", warp nests" } else { "" }
+        ),
+    );
+
+    // -O2: uniformity analysis feeding scalarized lowering + LICM.
+    let uniform = (opt >= OptLevel::O2).then(|| passes::uniformity::analyze(&mpmd));
+    if let Some(u) = &uniform {
+        pm.record_mpmd(
+            "uniformity",
+            &mpmd,
+            format!("uniform {}/{} regs", u.count_uniform(), mpmd.num_regs),
+        );
+    }
+    let licm = opt >= OptLevel::O2;
+    let lowered = lower::lower_opt(&mpmd, &memory, &layout, ev.extra_base, uniform.as_ref(), licm);
+    pm.record(
+        "lower",
+        lowered.insts.len(),
+        lowered.num_regs,
+        format!(
+            "{} insts, scalar {}/{}, licm {}",
+            lowered.insts.len(),
+            lowered.scalar_inst_count(),
+            lowered.insts.len(),
+            lowered.licm_hoisted
+        ),
+    );
+
+    Ok(CompiledKernel {
+        mpmd,
+        memory,
+        layout,
+        lowered,
+        extra_base: ev.extra_base,
+        writes,
+        reads,
+        opt,
+        pipeline: pm.passes,
+    })
 }
 
 /// Which user pointer-params does the kernel read / write (through any

@@ -1,0 +1,183 @@
+//! Dead-code elimination (SPMD CIR, `-O1`+), accounting-transparent.
+//!
+//! A register assigned but never read is dead — but the statement
+//! itself still **accounts**: the interpreter bumps `instructions` once
+//! per executed statement, so removing the `Assign` outright would
+//! break the `-O0` vs `-O2` ExecStats contract. Instead the dead
+//! expression is *neutralized*: replaced by `Const(0)`, keeping the
+//! statement (and its dynamic `Acct`) in place while deleting the
+//! computation behind it. Neutralization additionally requires the
+//! expression to be stats-free (no loads, no float flops, no
+//! collectives) — a dead `Load` still moves counted (and traced) bytes
+//! and must survive.
+
+use super::types;
+use crate::ir::*;
+use std::collections::HashSet;
+
+/// Neutralize dead pure assignments; returns the rewritten kernel and
+/// how many were neutralized.
+pub fn run(kernel: Kernel) -> (Kernel, usize) {
+    let ty = types::infer(&kernel.params, &kernel.body);
+    let mut read = HashSet::new();
+    collect_reads(&kernel.body, &mut read);
+    let mut n = 0;
+    let mut k = kernel;
+    let body = std::mem::take(&mut k.body);
+    k.body = rewrite(body, &read, &ty, &mut n);
+    (k, n)
+}
+
+fn expr_reads(e: &Expr, out: &mut HashSet<Reg>) {
+    match e {
+        Expr::Reg(r) => {
+            out.insert(*r);
+        }
+        Expr::Bin(_, a, b) => {
+            expr_reads(a, out);
+            expr_reads(b, out);
+        }
+        Expr::Un(_, a) | Expr::Cast(_, a) => expr_reads(a, out),
+        Expr::Load { ptr, .. } => expr_reads(ptr, out),
+        Expr::Index { base, idx, .. } => {
+            expr_reads(base, out);
+            expr_reads(idx, out);
+        }
+        Expr::Select { cond, then_, else_ } => {
+            expr_reads(cond, out);
+            expr_reads(then_, out);
+            expr_reads(else_, out);
+        }
+        Expr::WarpShfl { val, lane, .. } => {
+            expr_reads(val, out);
+            expr_reads(lane, out);
+        }
+        Expr::WarpVote { pred, .. } => expr_reads(pred, out),
+        Expr::Exchange { lane, .. } => expr_reads(lane, out),
+        Expr::NvIntrinsic { args, .. } => args.iter().for_each(|a| expr_reads(a, out)),
+        _ => {}
+    }
+}
+
+fn collect_reads(body: &[Stmt], out: &mut HashSet<Reg>) {
+    for s in body {
+        match s {
+            Stmt::Assign { expr, .. } => expr_reads(expr, out),
+            Stmt::Store { ptr, val, .. } => {
+                expr_reads(ptr, out);
+                expr_reads(val, out);
+            }
+            Stmt::If { cond, then_, else_ } => {
+                expr_reads(cond, out);
+                collect_reads(then_, out);
+                collect_reads(else_, out);
+            }
+            Stmt::For { start, end, step, body, .. } => {
+                expr_reads(start, out);
+                expr_reads(end, out);
+                expr_reads(step, out);
+                collect_reads(body, out);
+            }
+            Stmt::While { cond, body } => {
+                expr_reads(cond, out);
+                collect_reads(body, out);
+            }
+            Stmt::AtomicRmw { ptr, val, .. } => {
+                expr_reads(ptr, out);
+                expr_reads(val, out);
+            }
+            Stmt::AtomicCas { ptr, cmp, val, .. } => {
+                expr_reads(ptr, out);
+                expr_reads(cmp, out);
+                expr_reads(val, out);
+            }
+            Stmt::ThreadLoop { body, warp } => {
+                if let Some(w) = warp {
+                    out.insert(*w);
+                }
+                collect_reads(body, out);
+            }
+            Stmt::StoreExchange { val, .. } => expr_reads(val, out),
+            _ => {}
+        }
+    }
+}
+
+fn rewrite(body: Vec<Stmt>, read: &HashSet<Reg>, ty: &types::Types, n: &mut usize) -> Vec<Stmt> {
+    body.into_iter()
+        .map(|s| match s {
+            Stmt::Assign { dst, expr }
+                if !read.contains(&dst)
+                    && !matches!(expr, Expr::Const(_))
+                    && ty.stats_free(&expr) =>
+            {
+                *n += 1;
+                Stmt::Assign { dst, expr: c_i32(0) }
+            }
+            Stmt::If { cond, then_, else_ } => Stmt::If {
+                cond,
+                then_: rewrite(then_, read, ty, n),
+                else_: rewrite(else_, read, ty, n),
+            },
+            Stmt::For { var, start, end, step, body } => Stmt::For {
+                var,
+                start,
+                end,
+                step,
+                body: rewrite(body, read, ty, n),
+            },
+            Stmt::While { cond, body } => Stmt::While { cond, body: rewrite(body, read, ty, n) },
+            Stmt::ThreadLoop { body, warp } => {
+                Stmt::ThreadLoop { body: rewrite(body, read, ty, n), warp }
+            }
+            other => other,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dead_int_assign_neutralized() {
+        let mut b = KernelBuilder::new("d");
+        let p = b.ptr_param("p", Ty::I32);
+        let dead = b.assign(mul(tid_x(), c_i32(7)));
+        let live = b.assign(tid_x());
+        b.store_at(p.clone(), reg(live), reg(live), Ty::I32);
+        let (k, n) = run(b.build());
+        assert_eq!(n, 1);
+        assert!(matches!(
+            &k.body[0],
+            Stmt::Assign { dst, expr: Expr::Const(Const::I32(0)) } if *dst == dead
+        ));
+        assert!(matches!(&k.body[1], Stmt::Assign { expr: Expr::Special(_), .. }));
+    }
+
+    #[test]
+    fn dead_load_and_dead_float_survive() {
+        let mut b = KernelBuilder::new("d");
+        let p = b.ptr_param("p", Ty::F32);
+        let _dead_load = b.assign(at(p.clone(), tid_x(), Ty::F32));
+        let _dead_flop = b.assign(mul(c_f32(1.0), c_f32(2.0)));
+        b.store_at(p.clone(), tid_x(), c_f32(0.0), Ty::F32);
+        let (k, n) = run(b.build());
+        assert_eq!(n, 0, "counted work must not be eliminated");
+        assert!(matches!(&k.body[0], Stmt::Assign { expr: Expr::Load { .. }, .. }));
+        assert!(matches!(&k.body[1], Stmt::Assign { expr: Expr::Bin(..), .. }));
+    }
+
+    #[test]
+    fn statement_count_is_preserved() {
+        let mut b = KernelBuilder::new("d");
+        let p = b.ptr_param("p", Ty::I32);
+        let _dead = b.assign(add(tid_x(), c_i32(1)));
+        b.store_at(p.clone(), tid_x(), c_i32(1), Ty::I32);
+        let k = b.build();
+        let before = k.body.len();
+        let (after, n) = run(k);
+        assert_eq!(n, 1);
+        assert_eq!(after.body.len(), before, "Acct stream must be unchanged");
+    }
+}

@@ -1,0 +1,382 @@
+//! Constant folding + algebraic simplification (SPMD CIR, `-O1`+).
+//!
+//! Folds are **accounting-transparent**: the interpreter counts a flop
+//! only when an operand value is a float, so integer-only folds change
+//! no `ExecStats` counter, `Cast` never counts, and a constant-condition
+//! `Select` evaluates exactly the taken side either way (the untaken
+//! side was never evaluated — CIR `Select` is lazy). Float constant
+//! arithmetic is deliberately **not** folded: it would remove counted
+//! flops and break the `-O0` vs `-O2` stats-parity contract.
+//!
+//! Folding evaluates through `exec::value::bin_op`/`un_op`, so folded
+//! results are bit-identical to what the VM would have computed
+//! (wrapping arithmetic, div-by-zero → 0, C-style promotion).
+
+use super::types::Types;
+use crate::exec::value::{bin_op, un_op, Value};
+use crate::ir::*;
+
+/// Fold the kernel body; returns the rewritten kernel and how many
+/// expressions were simplified.
+pub fn run(kernel: Kernel) -> (Kernel, usize) {
+    let types = super::types::infer(&kernel.params, &kernel.body);
+    let mut n = 0;
+    let mut k = kernel;
+    let body = std::mem::take(&mut k.body);
+    k.body = fold_stmts(body, &types, &mut n);
+    (k, n)
+}
+
+fn value_to_const(v: Value) -> Option<Const> {
+    match v {
+        Value::I32(x) => Some(Const::I32(x)),
+        Value::I64(x) => Some(Const::I64(x)),
+        Value::F32(x) => Some(Const::F32(x)),
+        Value::F64(x) => Some(Const::F64(x)),
+        Value::Bool(x) => Some(Const::Bool(x)),
+        Value::Ptr(_) => None,
+    }
+}
+
+fn is_int_zero(c: Const) -> bool {
+    matches!(c, Const::I32(0) | Const::I64(0))
+}
+
+fn is_int_one(c: Const) -> bool {
+    matches!(c, Const::I32(1) | Const::I64(1))
+}
+
+fn const_vty(c: Const) -> super::types::VTy {
+    super::types::VTy::Scalar(c.ty())
+}
+
+/// `x op c → x` is only sound when dropping the constant cannot change
+/// the C-promoted result type: rank(x) ≥ rank(c) and x is not a float
+/// (float identities like `x + 0.0` also drop a counted flop).
+fn identity_ok(x: &Expr, c: Const, types: &Types) -> bool {
+    match types.expr_ty(x) {
+        Some(tx) => !tx.is_float() && tx.rank() >= const_vty(c).rank(),
+        None => false,
+    }
+}
+
+fn fold_expr(e: Expr, types: &Types, n: &mut usize) -> Expr {
+    // fold children first
+    let e = match e {
+        Expr::Bin(op, a, b) => Expr::Bin(
+            op,
+            Box::new(fold_expr(*a, types, n)),
+            Box::new(fold_expr(*b, types, n)),
+        ),
+        Expr::Un(op, a) => Expr::Un(op, Box::new(fold_expr(*a, types, n))),
+        Expr::Cast(t, a) => Expr::Cast(t, Box::new(fold_expr(*a, types, n))),
+        Expr::Load { ptr, ty } => Expr::Load { ptr: Box::new(fold_expr(*ptr, types, n)), ty },
+        Expr::Index { base, idx, elem } => Expr::Index {
+            base: Box::new(fold_expr(*base, types, n)),
+            idx: Box::new(fold_expr(*idx, types, n)),
+            elem,
+        },
+        Expr::Select { cond, then_, else_ } => Expr::Select {
+            cond: Box::new(fold_expr(*cond, types, n)),
+            then_: Box::new(fold_expr(*then_, types, n)),
+            else_: Box::new(fold_expr(*else_, types, n)),
+        },
+        Expr::WarpShfl { kind, val, lane } => Expr::WarpShfl {
+            kind,
+            val: Box::new(fold_expr(*val, types, n)),
+            lane: Box::new(fold_expr(*lane, types, n)),
+        },
+        Expr::WarpVote { kind, pred } => {
+            Expr::WarpVote { kind, pred: Box::new(fold_expr(*pred, types, n)) }
+        }
+        Expr::Exchange { lane, ty } => {
+            Expr::Exchange { lane: Box::new(fold_expr(*lane, types, n)), ty }
+        }
+        other => other,
+    };
+
+    match e {
+        // ---- integer constant arithmetic (exact VM semantics) ----
+        Expr::Bin(op, a, b) => {
+            if let (Expr::Const(ca), Expr::Const(cb)) = (&*a, &*b) {
+                if !Value::of_const(*ca).is_float() && !Value::of_const(*cb).is_float() {
+                    if let Some(c) =
+                        value_to_const(bin_op(op, Value::of_const(*ca), Value::of_const(*cb)))
+                    {
+                        *n += 1;
+                        return Expr::Const(c);
+                    }
+                }
+            }
+            // ---- promotion-safe algebraic identities ----
+            #[derive(Clone, Copy)]
+            enum Simpl {
+                KeepLeft,
+                KeepRight,
+                IntZero(u8),
+                No,
+            }
+            let can_zero = |x: &Expr, c: Const| {
+                is_int_zero(c)
+                    && types.stats_free(x)
+                    && matches!(types.expr_ty(x),
+                        Some(t) if !t.is_float() && t != super::types::VTy::Ptr)
+            };
+            let decision = match (op, &*a, &*b) {
+                (BinOp::Add | BinOp::Sub, x, Expr::Const(c))
+                    if is_int_zero(*c) && identity_ok(x, *c, types) =>
+                {
+                    Simpl::KeepLeft
+                }
+                (BinOp::Add, Expr::Const(c), x)
+                    if is_int_zero(*c) && identity_ok(x, *c, types) =>
+                {
+                    Simpl::KeepRight
+                }
+                (BinOp::Mul | BinOp::Div, x, Expr::Const(c))
+                    if is_int_one(*c) && identity_ok(x, *c, types) =>
+                {
+                    Simpl::KeepLeft
+                }
+                (BinOp::Mul, Expr::Const(c), x) if is_int_one(*c) && identity_ok(x, *c, types) => {
+                    Simpl::KeepRight
+                }
+                (BinOp::Shl | BinOp::Shr, x, Expr::Const(c))
+                    if is_int_zero(*c) && identity_ok(x, *c, types) =>
+                {
+                    Simpl::KeepLeft
+                }
+                // x * 0 → 0 in the promoted type; x must be accounting-
+                // free since it is no longer evaluated
+                (BinOp::Mul, x, Expr::Const(c)) | (BinOp::Mul, Expr::Const(c), x)
+                    if can_zero(x, *c) =>
+                {
+                    let rank = types
+                        .expr_ty(x)
+                        .map(|t| t.rank().max(const_vty(*c).rank()))
+                        .unwrap_or(1);
+                    Simpl::IntZero(rank)
+                }
+                _ => Simpl::No,
+            };
+            match decision {
+                Simpl::KeepLeft => {
+                    *n += 1;
+                    *a
+                }
+                Simpl::KeepRight => {
+                    *n += 1;
+                    *b
+                }
+                Simpl::IntZero(rank) => {
+                    *n += 1;
+                    if rank == 2 {
+                        Expr::Const(Const::I64(0))
+                    } else {
+                        Expr::Const(Const::I32(0))
+                    }
+                }
+                Simpl::No => Expr::Bin(op, a, b),
+            }
+        }
+        Expr::Un(op, a) => {
+            if let Expr::Const(c) = &*a {
+                if !Value::of_const(*c).is_float() {
+                    if let Some(f) = value_to_const(un_op(op, Value::of_const(*c))) {
+                        *n += 1;
+                        return Expr::Const(f);
+                    }
+                }
+            }
+            Expr::Un(op, a)
+        }
+        // Cast of any constant: Cast never counts stats.
+        Expr::Cast(ty, a) => {
+            if let Expr::Const(c) = &*a {
+                if let Some(f) = value_to_const(Value::of_const(*c).cast(ty)) {
+                    *n += 1;
+                    return Expr::Const(f);
+                }
+            }
+            Expr::Cast(ty, a)
+        }
+        // Constant-condition Select: the untaken side was never
+        // evaluated (lazy), so dropping it is stats-neutral.
+        Expr::Select { cond, then_, else_ } => {
+            if let Expr::Const(c) = &*cond {
+                *n += 1;
+                return if Value::of_const(*c).as_bool() { *then_ } else { *else_ };
+            }
+            Expr::Select { cond, then_, else_ }
+        }
+        other => other,
+    }
+}
+
+fn fold_stmts(body: Vec<Stmt>, types: &Types, n: &mut usize) -> Vec<Stmt> {
+    body.into_iter()
+        .map(|s| match s {
+            Stmt::Assign { dst, expr } => Stmt::Assign { dst, expr: fold_expr(expr, types, n) },
+            Stmt::Store { ptr, val, ty } => Stmt::Store {
+                ptr: fold_expr(ptr, types, n),
+                val: fold_expr(val, types, n),
+                ty,
+            },
+            Stmt::If { cond, then_, else_ } => Stmt::If {
+                cond: fold_expr(cond, types, n),
+                then_: fold_stmts(then_, types, n),
+                else_: fold_stmts(else_, types, n),
+            },
+            Stmt::For { var, start, end, step, body } => Stmt::For {
+                var,
+                start: fold_expr(start, types, n),
+                end: fold_expr(end, types, n),
+                step: fold_expr(step, types, n),
+                body: fold_stmts(body, types, n),
+            },
+            Stmt::While { cond, body } => Stmt::While {
+                cond: fold_expr(cond, types, n),
+                body: fold_stmts(body, types, n),
+            },
+            Stmt::AtomicRmw { op, ptr, val, ty, dst } => Stmt::AtomicRmw {
+                op,
+                ptr: fold_expr(ptr, types, n),
+                val: fold_expr(val, types, n),
+                ty,
+                dst,
+            },
+            Stmt::AtomicCas { ptr, cmp, val, ty, dst } => Stmt::AtomicCas {
+                ptr: fold_expr(ptr, types, n),
+                cmp: fold_expr(cmp, types, n),
+                val: fold_expr(val, types, n),
+                ty,
+                dst,
+            },
+            Stmt::ThreadLoop { body, warp } => {
+                Stmt::ThreadLoop { body: fold_stmts(body, types, n), warp }
+            }
+            Stmt::StoreExchange { val, ty } => {
+                Stmt::StoreExchange { val: fold_expr(val, types, n), ty }
+            }
+            other => other,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fold_kernel(k: Kernel) -> (Kernel, usize) {
+        run(k)
+    }
+
+    #[test]
+    fn folds_integer_constants() {
+        let mut b = KernelBuilder::new("f");
+        let p = b.ptr_param("p", Ty::I32);
+        let x = b.assign(add(mul(c_i32(3), c_i32(4)), c_i32(1)));
+        b.store_at(p.clone(), tid_x(), reg(x), Ty::I32);
+        let (k, n) = fold_kernel(b.build());
+        assert_eq!(n, 2);
+        assert!(matches!(
+            &k.body[0],
+            Stmt::Assign { expr: Expr::Const(Const::I32(13)), .. }
+        ));
+    }
+
+    #[test]
+    fn float_constants_not_folded() {
+        let mut b = KernelBuilder::new("f");
+        let p = b.ptr_param("p", Ty::F32);
+        let x = b.assign(mul(c_f32(2.0), c_f32(3.0)));
+        b.store_at(p.clone(), tid_x(), reg(x), Ty::F32);
+        let (k, n) = fold_kernel(b.build());
+        assert_eq!(n, 0, "float fold would drop a counted flop");
+        assert!(matches!(&k.body[0], Stmt::Assign { expr: Expr::Bin(..), .. }));
+    }
+
+    #[test]
+    fn algebraic_identities_preserve_type() {
+        let mut b = KernelBuilder::new("f");
+        let p = b.ptr_param("p", Ty::I32);
+        // tid + 0 → tid (same i32 rank)
+        let x = b.assign(add(tid_x(), c_i32(0)));
+        // tid + 0i64 must NOT drop the promotion to i64
+        let y = b.assign(add(tid_x(), c_i64(0)));
+        b.store_at(p.clone(), reg(x), reg(y), Ty::I32);
+        let (k, n) = fold_kernel(b.build());
+        assert_eq!(n, 1);
+        assert!(matches!(&k.body[0], Stmt::Assign { expr: Expr::Special(_), .. }));
+        assert!(matches!(&k.body[1], Stmt::Assign { expr: Expr::Bin(..), .. }));
+    }
+
+    #[test]
+    fn mul_by_zero_requires_stats_free_operand() {
+        let mut b = KernelBuilder::new("f");
+        let p = b.ptr_param("p", Ty::I32);
+        // (load) * 0: the load is counted — must survive
+        let x = b.assign(mul(at(p.clone(), tid_x(), Ty::I32), c_i32(0)));
+        // (tid*2) * 0 → 0
+        let y = b.assign(mul(mul(tid_x(), c_i32(2)), c_i32(0)));
+        b.store_at(p.clone(), reg(x), reg(y), Ty::I32);
+        let (k, _) = fold_kernel(b.build());
+        assert!(matches!(&k.body[0], Stmt::Assign { expr: Expr::Bin(..), .. }));
+        assert!(matches!(
+            &k.body[1],
+            Stmt::Assign { expr: Expr::Const(Const::I32(0)), .. }
+        ));
+    }
+
+    #[test]
+    fn const_select_takes_branch_lazily() {
+        let mut b = KernelBuilder::new("f");
+        let p = b.ptr_param("p", Ty::I32);
+        let x = b.assign(select(c_bool(true), tid_x(), at(p.clone(), tid_x(), Ty::I32)));
+        b.store_at(p.clone(), tid_x(), reg(x), Ty::I32);
+        let (k, n) = fold_kernel(b.build());
+        assert_eq!(n, 1);
+        assert!(matches!(&k.body[0], Stmt::Assign { expr: Expr::Special(_), .. }));
+    }
+
+    #[test]
+    fn div_by_zero_folds_to_vm_semantics() {
+        let mut b = KernelBuilder::new("f");
+        let p = b.ptr_param("p", Ty::I32);
+        let x = b.assign(div(c_i32(5), c_i32(0)));
+        b.store_at(p.clone(), tid_x(), reg(x), Ty::I32);
+        let (k, _) = fold_kernel(b.build());
+        // value.rs defines guest div-by-zero as 0
+        assert!(matches!(
+            &k.body[0],
+            Stmt::Assign { expr: Expr::Const(Const::I32(0)), .. }
+        ));
+    }
+
+    #[test]
+    fn casts_of_constants_fold() {
+        let mut b = KernelBuilder::new("f");
+        let p = b.ptr_param("p", Ty::I64);
+        let x = b.assign(cast(Ty::I64, c_i32(7)));
+        b.store_at(p.clone(), tid_x(), reg(x), Ty::I64);
+        let (k, n) = fold_kernel(b.build());
+        assert_eq!(n, 1);
+        assert!(matches!(
+            &k.body[0],
+            Stmt::Assign { expr: Expr::Const(Const::I64(7)), .. }
+        ));
+    }
+
+    #[test]
+    fn features_unchanged_by_folding() {
+        let mut b = KernelBuilder::new("f");
+        let p = b.ptr_param("p", Ty::I32);
+        b.atomic_rmw_void(AtomicOp::Add, p.clone(), add(c_i32(1), c_i32(2)), Ty::I32);
+        b.sync_threads();
+        b.store_at(p.clone(), tid_x(), c_i32(0), Ty::I32);
+        let k = b.build();
+        let before = crate::compiler::detect_features(&k);
+        let (folded, _) = fold_kernel(k);
+        assert_eq!(before, crate::compiler::detect_features(&folded));
+    }
+}

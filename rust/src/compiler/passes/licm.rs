@@ -1,0 +1,113 @@
+//! Loop-invariant code motion for lowered loops (`-O2`).
+//!
+//! The classic LICM target in this pipeline is the **bound/step
+//! re-evaluation** of `For` loops: both the interpreter and the `-O0`
+//! bytecode re-evaluate `end` (per iteration, per lane for thread
+//! loops) and `step` on every trip. When the expression is invariant —
+//! it reads no register assigned inside the loop body — lowering
+//! evaluates it once into a persistent register in the loop preheader.
+//!
+//! Accounting transparency makes this narrower than textbook LICM:
+//! hoisting may only move expressions whose evaluation never bumps
+//! `ExecStats` (`types::stats_free`) — no loads, no float flops — since
+//! the interpreter still evaluates the original expression once per
+//! trip. Integer bounds over parameters and registers (the common case
+//! across the benchsuite: feature counts, row widths, trip counts) all
+//! qualify.
+//!
+//! This module provides the analysis; the rewrite itself lives in
+//! `compiler::lower`, which owns the only representation (flat
+//! bytecode) with a place to put a preheader without disturbing the
+//! per-statement `Acct` stream.
+
+use super::types::Types;
+use crate::ir::*;
+use std::collections::HashSet;
+
+/// Every register assigned anywhere inside `body` (including nested
+/// loop variables and atomic result registers).
+pub fn assigned_regs(body: &[Stmt], out: &mut HashSet<Reg>) {
+    for s in body {
+        match s {
+            Stmt::Assign { dst, .. } => {
+                out.insert(*dst);
+            }
+            Stmt::If { then_, else_, .. } => {
+                assigned_regs(then_, out);
+                assigned_regs(else_, out);
+            }
+            Stmt::For { var, body, .. } => {
+                out.insert(*var);
+                assigned_regs(body, out);
+            }
+            Stmt::While { body, .. } => assigned_regs(body, out),
+            Stmt::AtomicRmw { dst: Some(d), .. } | Stmt::AtomicCas { dst: Some(d), .. } => {
+                out.insert(*d);
+            }
+            Stmt::ThreadLoop { body, .. } => assigned_regs(body, out),
+            _ => {}
+        }
+    }
+}
+
+fn reads_only_outside(e: &Expr, assigned: &HashSet<Reg>) -> bool {
+    match e {
+        Expr::Reg(r) => !assigned.contains(r),
+        Expr::Bin(_, a, b) => reads_only_outside(a, assigned) && reads_only_outside(b, assigned),
+        Expr::Un(_, a) | Expr::Cast(_, a) => reads_only_outside(a, assigned),
+        Expr::Index { base, idx, .. } => {
+            reads_only_outside(base, assigned) && reads_only_outside(idx, assigned)
+        }
+        Expr::Select { cond, then_, else_ } => {
+            reads_only_outside(cond, assigned)
+                && reads_only_outside(then_, assigned)
+                && reads_only_outside(else_, assigned)
+        }
+        // Load/collectives are rejected by stats_free anyway
+        Expr::Load { ptr, .. } => reads_only_outside(ptr, assigned),
+        _ => !matches!(
+            e,
+            Expr::Exchange { .. } | Expr::VoteResult | Expr::WarpShfl { .. } | Expr::WarpVote { .. }
+        ),
+    }
+}
+
+/// Can `e` be hoisted out of a loop whose body assigns `assigned`?
+/// Requires invariance *and* accounting-freedom, and only pays off for
+/// compound expressions (a bare `Reg` already costs nothing per trip).
+pub fn hoistable(e: &Expr, assigned: &HashSet<Reg>, types: &Types) -> bool {
+    !matches!(e, Expr::Reg(_))
+        && reads_only_outside(e, assigned)
+        && types.stats_free(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::types;
+
+    #[test]
+    fn param_bound_hoistable_loop_carried_not() {
+        let mut b = KernelBuilder::new("l");
+        let p = b.ptr_param("p", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let acc = b.assign(c_i32(0));
+        b.for_(c_i32(0), mul(n.clone(), c_i32(2)), c_i32(1), |bl, i| {
+            bl.set(acc, add(reg(acc), reg(i)));
+        });
+        b.store_at(p.clone(), tid_x(), reg(acc), Ty::I32);
+        let k = b.build();
+        let ty = types::infer(&k.params, &k.body);
+        let Stmt::For { end, body, var, .. } = &k.body[1] else { panic!("expected For") };
+        let mut assigned = HashSet::new();
+        assigned.insert(*var);
+        assigned_regs(body, &mut assigned);
+        assert!(hoistable(end, &assigned, &ty), "n*2 is invariant + stats-free");
+        assert!(!hoistable(&add(reg(acc), c_i32(1)), &assigned, &ty), "acc is loop-carried");
+        assert!(
+            !hoistable(&at(p.clone(), c_i32(0), Ty::I32), &assigned, &ty),
+            "loads are counted per trip"
+        );
+        assert!(!hoistable(&reg(acc), &assigned, &ty), "bare reg never pays off");
+    }
+}

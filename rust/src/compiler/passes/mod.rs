@@ -1,0 +1,184 @@
+//! The optimizing middle-end: pass manager + passes (`-O0/-O1/-O2`).
+//!
+//! `compile_kernel` used to chain five translation passes with no
+//! optimization; this module turns the pipeline into an explicit
+//! [`PassManager`] run:
+//!
+//! * every pass is verified (`ir::verify` on SPMD stages,
+//!   `ir::verify::verify_mpmd` after fission) so a miscompiling pass
+//!   fails at compile time, not as a wrong answer three layers later;
+//! * every pass records a [`PassInfo`] row (statement/register counts
+//!   plus a pass-specific note) that `cupbop compile` prints as the
+//!   resolved pipeline;
+//! * the opt level gates which passes run:
+//!   - `-O0` — translation only (the pre-PassManager pipeline);
+//!   - `-O1` — + constant folding/algebraic simplification ([`fold`])
+//!     and accounting-transparent DCE ([`dce`]);
+//!   - `-O2` (default) — + loop-invariant bound hoisting ([`licm`]) and
+//!     uniformity-driven scalarization ([`uniformity`]) in the lowered
+//!     bytecode.
+//!
+//! **The accounting contract.** Optimization must not be observable in
+//! `ExecStats` or memory traces: the differential suite asserts `-O0`
+//! and `-O2` produce bit-identical outputs, counters and `TraceRec`
+//! streams. Each pass documents how it honours this (integer-only
+//! folds, neutralized-not-removed dead statements, stats-free hoists,
+//! lane-multiplied scalar accounting in the VM).
+
+pub mod dce;
+pub mod fold;
+pub mod licm;
+pub mod types;
+pub mod uniformity;
+
+use crate::ir::{Kernel, MpmdKernel, Stmt};
+
+/// Optimization level (CLI `--opt {0,1,2}`; default `-O2`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum OptLevel {
+    O0,
+    O1,
+    #[default]
+    O2,
+}
+
+impl OptLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            OptLevel::O0 => "-O0",
+            OptLevel::O1 => "-O1",
+            OptLevel::O2 => "-O2",
+        }
+    }
+
+    /// Parse a CLI spelling: `0`/`1`/`2` or `O0`/`o1`/`-O2`.
+    pub fn parse(s: &str) -> Option<OptLevel> {
+        match s.trim_start_matches('-').trim_start_matches(['O', 'o']) {
+            "0" => Some(OptLevel::O0),
+            "1" => Some(OptLevel::O1),
+            "2" => Some(OptLevel::O2),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [OptLevel; 3] = [OptLevel::O0, OptLevel::O1, OptLevel::O2];
+}
+
+/// One row of the resolved pipeline report.
+#[derive(Debug, Clone)]
+pub struct PassInfo {
+    pub name: &'static str,
+    /// statement count after the pass (recursive)
+    pub stmts: usize,
+    /// register count after the pass
+    pub regs: usize,
+    /// pass-specific delta note ("folded 4", "uniform 7/12 regs", …)
+    pub note: String,
+}
+
+/// Collects the pipeline report while `compile_kernel` runs.
+#[derive(Debug, Clone)]
+pub struct PassManager {
+    pub level: OptLevel,
+    pub passes: Vec<PassInfo>,
+}
+
+impl PassManager {
+    pub fn new(level: OptLevel) -> Self {
+        PassManager { level, passes: Vec::new() }
+    }
+
+    pub fn record_spmd(&mut self, name: &'static str, k: &Kernel, note: String) {
+        self.passes.push(PassInfo {
+            name,
+            stmts: count_stmts(&k.body),
+            regs: k.num_regs as usize,
+            note,
+        });
+    }
+
+    pub fn record_mpmd(&mut self, name: &'static str, m: &MpmdKernel, note: String) {
+        self.passes.push(PassInfo {
+            name,
+            stmts: count_stmts(&m.body),
+            regs: m.num_regs as usize,
+            note,
+        });
+    }
+
+    pub fn record(&mut self, name: &'static str, stmts: usize, regs: usize, note: String) {
+        self.passes.push(PassInfo { name, stmts, regs, note });
+    }
+
+    /// Render the pipeline for `cupbop compile` / debugging: one line
+    /// per pass with stmt/reg deltas against the previous row.
+    pub fn render(&self) -> String {
+        let mut out = format!("pass pipeline ({}):\n", self.level.name());
+        let mut prev: Option<(usize, usize)> = None;
+        for p in &self.passes {
+            let delta = match prev {
+                Some((s, r)) if (s, r) != (p.stmts, p.regs) => format!(
+                    "  [{}{} stmts, {}{} regs]",
+                    if p.stmts >= s { "+" } else { "" },
+                    p.stmts as i64 - s as i64,
+                    if p.regs >= r { "+" } else { "" },
+                    p.regs as i64 - r as i64
+                ),
+                _ => String::new(),
+            };
+            out.push_str(&format!(
+                "  {:<14} {:>4} stmts {:>4} regs{}{}{}\n",
+                p.name,
+                p.stmts,
+                p.regs,
+                delta,
+                if p.note.is_empty() { "" } else { "  " },
+                p.note
+            ));
+            prev = Some((p.stmts, p.regs));
+        }
+        out
+    }
+}
+
+/// Recursive statement count (every `Stmt` node).
+pub fn count_stmts(body: &[Stmt]) -> usize {
+    body.iter()
+        .map(|s| {
+            1 + match s {
+                Stmt::If { then_, else_, .. } => count_stmts(then_) + count_stmts(else_),
+                Stmt::For { body, .. }
+                | Stmt::While { body, .. }
+                | Stmt::ThreadLoop { body, .. } => count_stmts(body),
+                _ => 0,
+            }
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt_level_parse_and_order() {
+        assert_eq!(OptLevel::parse("0"), Some(OptLevel::O0));
+        assert_eq!(OptLevel::parse("O1"), Some(OptLevel::O1));
+        assert_eq!(OptLevel::parse("-O2"), Some(OptLevel::O2));
+        assert_eq!(OptLevel::parse("3"), None);
+        assert!(OptLevel::O0 < OptLevel::O1 && OptLevel::O1 < OptLevel::O2);
+        assert_eq!(OptLevel::default(), OptLevel::O2);
+    }
+
+    #[test]
+    fn report_renders_deltas() {
+        let mut pm = PassManager::new(OptLevel::O2);
+        pm.record("verify", 10, 4, String::new());
+        pm.record("const-fold", 10, 4, "folded 3".into());
+        pm.record("fission", 13, 5, String::new());
+        let r = pm.render();
+        assert!(r.contains("-O2"));
+        assert!(r.contains("folded 3"));
+        assert!(r.contains("[+3 stmts, +1 regs]"));
+    }
+}

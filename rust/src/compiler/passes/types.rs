@@ -1,0 +1,287 @@
+//! Lightweight forward type inference over CIR.
+//!
+//! The optimization passes must stay **accounting-transparent**: the
+//! interpreter counts a flop whenever a `Bin`/`Un` operand *value* is a
+//! float, and counts loads/bytes/trace records on every `Load`. Since
+//! CIR is monomorphic per expression, operand value types are static,
+//! so a forward walk over the assignments recovers them — and with
+//! them, whether evaluating an expression can ever bump `ExecStats`.
+//! Const folding uses the same map for C-promotion-safe algebraic
+//! identities (`x + 0 → x` is only sound when it cannot change the
+//! promoted result type).
+
+use crate::ir::*;
+use std::collections::HashMap;
+
+/// The value type of an expression: a scalar or a (byte-addressed)
+/// pointer. Mirrors `exec::value::Value`'s promotion ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VTy {
+    Scalar(Ty),
+    Ptr,
+}
+
+impl VTy {
+    pub fn is_float(self) -> bool {
+        matches!(self, VTy::Scalar(Ty::F32 | Ty::F64))
+    }
+
+    /// C-style promotion rank, matching `exec::value::Value::rank`.
+    pub fn rank(self) -> u8 {
+        match self {
+            VTy::Ptr => 2,
+            VTy::Scalar(Ty::Bool) => 0,
+            VTy::Scalar(Ty::I32) => 1,
+            VTy::Scalar(Ty::I64) => 2,
+            VTy::Scalar(Ty::F32) => 3,
+            VTy::Scalar(Ty::F64) => 4,
+        }
+    }
+}
+
+/// Per-register (and per-expression) type information for one kernel.
+pub struct Types {
+    params: Vec<ParamTy>,
+    /// `None` = reassigned with conflicting types (treat as unknown).
+    regs: HashMap<Reg, Option<VTy>>,
+}
+
+/// Infer register types with a forward walk (registers are defined
+/// before use along every path, so one pass suffices; conflicting
+/// reassignments poison the register to "unknown").
+pub fn infer(params: &[ParamDecl], body: &[Stmt]) -> Types {
+    let mut t = Types { params: params.iter().map(|p| p.ty).collect(), regs: HashMap::new() };
+    walk(body, &mut t);
+    t
+}
+
+fn record(t: &mut Types, r: Reg, ty: Option<VTy>) {
+    match t.regs.get(&r) {
+        None => {
+            t.regs.insert(r, ty);
+        }
+        Some(prev) if *prev == ty => {}
+        _ => {
+            t.regs.insert(r, None);
+        }
+    }
+}
+
+fn walk(body: &[Stmt], t: &mut Types) {
+    for s in body {
+        match s {
+            Stmt::Assign { dst, expr } => {
+                let ty = t.expr_ty(expr);
+                record(t, *dst, ty);
+            }
+            Stmt::If { then_, else_, .. } => {
+                walk(then_, t);
+                walk(else_, t);
+            }
+            Stmt::For { var, start, step, body, .. } => {
+                // The engines carry `v = bin_op(Add, v, step)` between
+                // iterations, so from iteration 1 on the induction
+                // value lives in the C-promoted type of (start, step).
+                // Only keep the type when the step cannot widen it;
+                // otherwise the var's dynamic type differs across
+                // iterations — poison to unknown.
+                let ty = match (t.expr_ty(start), t.expr_ty(step)) {
+                    (Some(a), Some(b)) if promote(a, b) == a => Some(a),
+                    _ => None,
+                };
+                record(t, *var, ty);
+                walk(body, t);
+            }
+            Stmt::While { body, .. } | Stmt::ThreadLoop { body, .. } => walk(body, t),
+            Stmt::AtomicRmw { ty, dst: Some(d), .. } | Stmt::AtomicCas { ty, dst: Some(d), .. } => {
+                record(t, *d, Some(VTy::Scalar(*ty)));
+            }
+            _ => {}
+        }
+    }
+}
+
+impl Types {
+    /// Static value type of `e`, or `None` when unknown.
+    pub fn expr_ty(&self, e: &Expr) -> Option<VTy> {
+        match e {
+            Expr::Const(c) => Some(VTy::Scalar(c.ty())),
+            Expr::Reg(r) => self.regs.get(r).copied().flatten(),
+            Expr::Param(i) => match self.params.get(*i)? {
+                ParamTy::Scalar(t) => Some(VTy::Scalar(*t)),
+                ParamTy::Ptr(_, _) => Some(VTy::Ptr),
+            },
+            Expr::Special(_) => Some(VTy::Scalar(Ty::I32)),
+            Expr::SharedBase(_) | Expr::DynSharedBase | Expr::Index { .. } => Some(VTy::Ptr),
+            Expr::Load { ty, .. } => Some(VTy::Scalar(*ty)),
+            Expr::Cast(ty, _) => Some(VTy::Scalar(*ty)),
+            Expr::Bin(op, a, b) => {
+                let cmp = matches!(
+                    op,
+                    BinOp::Eq | BinOp::Ne | BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge
+                );
+                if cmp {
+                    return Some(VTy::Scalar(Ty::Bool));
+                }
+                let (ta, tb) = (self.expr_ty(a)?, self.expr_ty(b)?);
+                Some(promote(ta, tb))
+            }
+            Expr::Un(op, a) => {
+                let ta = self.expr_ty(a)?;
+                match op {
+                    UnOp::Neg | UnOp::Abs => Some(ta),
+                    UnOp::Not => Some(VTy::Scalar(Ty::Bool)),
+                    // transcendentals: f32 stays f32, everything else f64
+                    _ => Some(if ta == VTy::Scalar(Ty::F32) {
+                        VTy::Scalar(Ty::F32)
+                    } else {
+                        VTy::Scalar(Ty::F64)
+                    }),
+                }
+            }
+            Expr::Select { then_, else_, .. } => {
+                let (tt, te) = (self.expr_ty(then_)?, self.expr_ty(else_)?);
+                if tt == te {
+                    Some(tt)
+                } else {
+                    None
+                }
+            }
+            Expr::WarpShfl { val, .. } => self.expr_ty(val),
+            Expr::WarpVote { .. } | Expr::VoteResult => Some(VTy::Scalar(Ty::I32)),
+            Expr::Exchange { ty, .. } => Some(VTy::Scalar(*ty)),
+            Expr::NvIntrinsic { .. } => None,
+        }
+    }
+
+    /// Is `e` certainly known to be of non-float value type?
+    fn non_float(&self, e: &Expr) -> bool {
+        matches!(self.expr_ty(e), Some(t) if !t.is_float())
+    }
+
+    /// True when evaluating `e` can never bump `ExecStats`: no loads
+    /// (loads/bytes/trace), no float operands on counted operators
+    /// (flops), and no collectives. This is the gate every
+    /// accounting-transparent rewrite (DCE, LICM) must pass.
+    pub fn stats_free(&self, e: &Expr) -> bool {
+        match e {
+            Expr::Const(_)
+            | Expr::Reg(_)
+            | Expr::Param(_)
+            | Expr::Special(_)
+            | Expr::SharedBase(_)
+            | Expr::DynSharedBase => true,
+            Expr::Load { .. } => false,
+            Expr::Bin(_, a, b) => {
+                self.non_float(a) && self.non_float(b) && self.stats_free(a) && self.stats_free(b)
+            }
+            Expr::Un(_, a) => self.non_float(a) && self.stats_free(a),
+            Expr::Cast(_, a) => self.stats_free(a),
+            Expr::Index { base, idx, .. } => self.stats_free(base) && self.stats_free(idx),
+            Expr::Select { cond, then_, else_ } => {
+                self.stats_free(cond) && self.stats_free(then_) && self.stats_free(else_)
+            }
+            // collectives / exchange reads: never removed or re-scheduled
+            Expr::WarpShfl { .. }
+            | Expr::WarpVote { .. }
+            | Expr::Exchange { .. }
+            | Expr::VoteResult
+            | Expr::NvIntrinsic { .. } => false,
+        }
+    }
+}
+
+fn promote(a: VTy, b: VTy) -> VTy {
+    if a == VTy::Ptr || b == VTy::Ptr {
+        return VTy::Ptr;
+    }
+    // value.rs: rank ≤ 1 computes in i32, 2 in i64, 3 in f32, 4 in f64
+    match a.rank().max(b.rank()) {
+        0 | 1 => VTy::Scalar(Ty::I32),
+        2 => VTy::Scalar(Ty::I64),
+        3 => VTy::Scalar(Ty::F32),
+        _ => VTy::Scalar(Ty::F64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_follows_promotion() {
+        let mut b = KernelBuilder::new("t");
+        let p = b.ptr_param("p", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        let w = b.assign(cast(Ty::I64, reg(id)));
+        let f = b.assign(at(p.clone(), reg(id), Ty::F32));
+        let g = b.assign(add(reg(f), c_f64(1.0)));
+        b.store_at(p.clone(), reg(id), reg(g), Ty::F32);
+        let k = b.build();
+        let t = infer(&k.params, &k.body);
+        assert_eq!(t.expr_ty(&reg(id)), Some(VTy::Scalar(Ty::I32)));
+        assert_eq!(t.expr_ty(&reg(w)), Some(VTy::Scalar(Ty::I64)));
+        assert_eq!(t.expr_ty(&reg(f)), Some(VTy::Scalar(Ty::F32)));
+        assert_eq!(t.expr_ty(&reg(g)), Some(VTy::Scalar(Ty::F64)));
+        assert_eq!(t.expr_ty(&n), Some(VTy::Scalar(Ty::I32)));
+        assert_eq!(t.expr_ty(&p), Some(VTy::Ptr));
+        assert_eq!(t.expr_ty(&lt(reg(id), n.clone())), Some(VTy::Scalar(Ty::Bool)));
+    }
+
+    #[test]
+    fn stats_free_rejects_loads_and_float_ops() {
+        let mut b = KernelBuilder::new("t");
+        let p = b.ptr_param("p", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        let f = b.assign(at(p.clone(), reg(id), Ty::F32));
+        b.store_at(p.clone(), reg(id), reg(f), Ty::F32);
+        let k = b.build();
+        let t = infer(&k.params, &k.body);
+        // pure int arithmetic: free
+        assert!(t.stats_free(&add(reg(id), mul(n.clone(), c_i32(2)))));
+        // a load is counted
+        assert!(!t.stats_free(&at(p.clone(), reg(id), Ty::F32)));
+        // float arithmetic is counted
+        assert!(!t.stats_free(&add(reg(f), c_f32(1.0))));
+        // but casting a float register is not (Cast never counts)
+        assert!(t.stats_free(&cast(Ty::I32, reg(f))));
+    }
+
+    #[test]
+    fn widening_loop_step_poisons_induction_var() {
+        // for (i = 0i32; ...; i += 1i64): the carried value promotes to
+        // i64 from iteration 1, so the var's type must be unknown — a
+        // confident I32 here would let fold emit a too-narrow zero.
+        let mut b = KernelBuilder::new("t");
+        let p = b.ptr_param("p", Ty::I64);
+        let mut wide = None;
+        b.for_(c_i32(0), c_i32(4), c_i64(1), |bl, i| {
+            wide = Some(i);
+            bl.store_at(p.clone(), reg(i), reg(i), Ty::I64);
+        });
+        let mut narrow = None;
+        b.for_(c_i32(0), c_i32(4), c_i32(1), |bl, i| {
+            narrow = Some(i);
+            bl.store_at(p.clone(), reg(i), reg(i), Ty::I64);
+        });
+        let k = b.build();
+        let t = infer(&k.params, &k.body);
+        assert_eq!(t.expr_ty(&reg(wide.unwrap())), None);
+        assert_eq!(t.expr_ty(&reg(narrow.unwrap())), Some(VTy::Scalar(Ty::I32)));
+    }
+
+    #[test]
+    fn conflicting_reassignment_poisons() {
+        let mut b = KernelBuilder::new("t");
+        let x = b.assign(c_i32(1));
+        b.set(x, c_f64(1.0));
+        b.store(index(param(0), reg(x), Ty::I32), c_i32(0), Ty::I32);
+        let mut k = b.build();
+        k.params.push(ParamDecl { name: "p".into(), ty: ParamTy::Ptr(AddrSpace::Global, Ty::I32) });
+        let t = infer(&k.params, &k.body);
+        assert_eq!(t.expr_ty(&reg(x)), None);
+        assert!(!t.stats_free(&add(reg(x), c_i32(1))));
+    }
+}

@@ -1,0 +1,392 @@
+//! Uniformity analysis over MPMD CIR (`-O2`).
+//!
+//! Classifies every virtual register as **block-uniform** (all lanes of
+//! a block observe the same value at every read) or **lane-varying**.
+//! The lattice is the two-point chain `Uniform < Varying`; the transfer
+//! functions are monotone, so the fixed point exists and the iteration
+//! terminates (a register only ever moves Uniform → Varying).
+//!
+//! Sources of variance:
+//! * thread-level special registers (`threadIdx`, `laneId`, `warpId`);
+//! * warp exchange/vote reads and atomic result registers;
+//! * **divergent control dependence** — any assignment under a
+//!   varying branch condition, a loop with varying bounds, or a loop
+//!   whose body contains `break`/`continue` (parked lanes miss
+//!   assignments and later rejoin, so even a uniform right-hand side
+//!   yields per-lane values). `return` does *not* taint: retired lanes
+//!   never become active again, so a single block-wide slot still
+//!   serves every lane that can ever read it.
+//!
+//! Loads from a uniform address are uniform: within one VM dispatch the
+//! lanes would all read the same location with no store interleaved, so
+//! one architectural load (with lane-multiplied accounting) is
+//! indistinguishable.
+//!
+//! Lowering (`compiler::lower`) consumes the result to place uniform
+//! registers in the scalar (once-per-block) register class and mark
+//! their defining instructions for once-per-dispatch execution.
+
+use crate::ir::*;
+
+/// Result of the analysis: `uniform[r]` for every MPMD register.
+#[derive(Debug, Clone)]
+pub struct UniformInfo {
+    pub uniform: Vec<bool>,
+}
+
+impl UniformInfo {
+    pub fn count_uniform(&self) -> usize {
+        self.uniform.iter().filter(|&&u| u).count()
+    }
+}
+
+/// Run the fixed-point analysis on an MPMD kernel.
+pub fn analyze(m: &MpmdKernel) -> UniformInfo {
+    let mut varying = vec![false; m.num_regs as usize];
+    loop {
+        let mut changed = false;
+        walk_block(&m.body, &mut varying, &mut changed);
+        if !changed {
+            break;
+        }
+    }
+    UniformInfo { uniform: varying.iter().map(|v| !v).collect() }
+}
+
+/// Is this special register lane-dependent? Shared between the
+/// analysis and `compiler::lower`'s scalarization so the two can never
+/// disagree on the base case of the lattice.
+pub fn is_lane_special(s: Special) -> bool {
+    matches!(
+        s,
+        Special::ThreadIdxX | Special::ThreadIdxY | Special::LaneId | Special::WarpId
+    )
+}
+
+/// Is the value of `e` possibly lane-dependent, given the current
+/// varying set?
+pub fn expr_varying(e: &Expr, varying: &[bool]) -> bool {
+    match e {
+        Expr::Const(_) | Expr::Param(_) | Expr::SharedBase(_) | Expr::DynSharedBase => false,
+        Expr::Reg(r) => varying.get(r.0 as usize).copied().unwrap_or(true),
+        Expr::Special(s) => is_lane_special(*s),
+        Expr::Bin(_, a, b) => expr_varying(a, varying) || expr_varying(b, varying),
+        Expr::Un(_, a) | Expr::Cast(_, a) => expr_varying(a, varying),
+        Expr::Load { ptr, .. } => expr_varying(ptr, varying),
+        Expr::Index { base, idx, .. } => {
+            expr_varying(base, varying) || expr_varying(idx, varying)
+        }
+        Expr::Select { cond, then_, else_ } => {
+            expr_varying(cond, varying)
+                || expr_varying(then_, varying)
+                || expr_varying(else_, varying)
+        }
+        // per-lane by construction
+        Expr::WarpShfl { .. }
+        | Expr::WarpVote { .. }
+        | Expr::Exchange { .. }
+        | Expr::VoteResult
+        | Expr::NvIntrinsic { .. } => true,
+    }
+}
+
+fn mark(r: Reg, varying: &mut [bool], changed: &mut bool) {
+    let i = r.0 as usize;
+    if !varying[i] {
+        varying[i] = true;
+        *changed = true;
+    }
+}
+
+/// Does the body contain `break`/`continue` at any depth? (Parked
+/// lanes rejoin later — everything assigned in such a loop body is
+/// control-divergent.)
+fn has_break_or_continue(body: &[Stmt]) -> bool {
+    body.iter().any(|s| match s {
+        Stmt::Break | Stmt::Continue => true,
+        Stmt::If { then_, else_, .. } => {
+            has_break_or_continue(then_) || has_break_or_continue(else_)
+        }
+        Stmt::For { body, .. } | Stmt::While { body, .. } => has_break_or_continue(body),
+        _ => false,
+    })
+}
+
+fn walk_block(body: &[Stmt], varying: &mut [bool], changed: &mut bool) {
+    for s in body {
+        match s {
+            Stmt::ThreadLoop { body, warp } => walk_thread(body, false, *warp, varying, changed),
+            Stmt::If { then_, else_, .. } => {
+                // block-scope control flow is uniform by construction
+                walk_block(then_, varying, changed);
+                walk_block(else_, varying, changed);
+            }
+            Stmt::For { body, .. } | Stmt::While { body, .. } => {
+                // hoisted loops have uniform bounds (verifier + fission
+                // guarantee); their variables stay uniform
+                walk_block(body, varying, changed);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `expr_varying` plus the warp-region rule: inside a COX warp-nested
+/// `ThreadLoop`, the warp index register is only *warp*-uniform — a
+/// value derived from it differs between warps, and a later region
+/// reading it back per lane would observe the wrong warp's value if it
+/// lived in a single block-wide slot. Treat it as varying for
+/// assignment classification (lowering still reads the register itself
+/// from its block slot, which is correct *within* the dispatch).
+fn varies(e: &Expr, varying: &[bool], warp: Option<Reg>) -> bool {
+    if let Some(w) = warp {
+        if reads_reg(e, w) {
+            return true;
+        }
+    }
+    expr_varying(e, varying)
+}
+
+fn reads_reg(e: &Expr, r: Reg) -> bool {
+    match e {
+        Expr::Reg(x) => *x == r,
+        Expr::Bin(_, a, b) => reads_reg(a, r) || reads_reg(b, r),
+        Expr::Un(_, a) | Expr::Cast(_, a) => reads_reg(a, r),
+        Expr::Load { ptr, .. } => reads_reg(ptr, r),
+        Expr::Index { base, idx, .. } => reads_reg(base, r) || reads_reg(idx, r),
+        Expr::Select { cond, then_, else_ } => {
+            reads_reg(cond, r) || reads_reg(then_, r) || reads_reg(else_, r)
+        }
+        Expr::Exchange { lane, .. } => reads_reg(lane, r),
+        Expr::WarpShfl { val, lane, .. } => reads_reg(val, r) || reads_reg(lane, r),
+        Expr::WarpVote { pred, .. } => reads_reg(pred, r),
+        Expr::NvIntrinsic { args, .. } => args.iter().any(|a| reads_reg(a, r)),
+        _ => false,
+    }
+}
+
+fn walk_thread(
+    body: &[Stmt],
+    div: bool,
+    warp: Option<Reg>,
+    varying: &mut [bool],
+    changed: &mut bool,
+) {
+    for s in body {
+        match s {
+            Stmt::Assign { dst, expr } => {
+                if div || varies(expr, varying, warp) {
+                    mark(*dst, varying, changed);
+                }
+            }
+            Stmt::If { cond, then_, else_ } => {
+                let d2 = div || varies(cond, varying, warp);
+                walk_thread(then_, d2, warp, varying, changed);
+                walk_thread(else_, d2, warp, varying, changed);
+            }
+            Stmt::For { var, start, end, step, body } => {
+                let bounds_vary = varies(start, varying, warp)
+                    || varies(end, varying, warp)
+                    || varies(step, varying, warp);
+                let d2 = div || bounds_vary || has_break_or_continue(body);
+                if d2 {
+                    mark(*var, varying, changed);
+                }
+                walk_thread(body, d2, warp, varying, changed);
+            }
+            Stmt::While { cond, body } => {
+                let d2 = div || varies(cond, varying, warp) || has_break_or_continue(body);
+                walk_thread(body, d2, warp, varying, changed);
+            }
+            Stmt::AtomicRmw { dst: Some(d), .. } | Stmt::AtomicCas { dst: Some(d), .. } => {
+                mark(*d, varying, changed);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::spmd_to_mpmd;
+    use crate::compiler::{insert_extra_vars, plan_memory};
+
+    fn analyze_kernel(k: &Kernel) -> (MpmdKernel, UniformInfo) {
+        let _ = plan_memory(k);
+        let ev = insert_extra_vars(k.clone());
+        let m = spmd_to_mpmd(&ev.kernel).unwrap();
+        let u = analyze(&m);
+        (m, u)
+    }
+
+    #[test]
+    fn vecadd_classification() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid()); // tid + bid*bdim → varying
+        let base = b.assign(mul(bid_x(), bdim_x())); // uniform
+        b.if_(lt(reg(id), n.clone()), |bl| {
+            bl.store_at(a.clone(), reg(id), c_f32(1.0), Ty::F32);
+        });
+        let (_, u) = analyze_kernel(&b.build());
+        assert!(!u.uniform[id.0 as usize], "global tid is lane-varying");
+        assert!(u.uniform[base.0 as usize], "bid*bdim is block-uniform");
+    }
+
+    #[test]
+    fn divergent_assignment_tainted() {
+        let mut b = KernelBuilder::new("div");
+        let p = b.ptr_param("p", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let x = b.fresh();
+        // x = n under a tid-dependent branch: inactive lanes keep the
+        // old per-lane value, so x is varying despite the uniform RHS
+        b.set(x, c_i32(0));
+        b.if_(lt(tid_x(), n.clone()), |bl| {
+            bl.set(x, c_i32(5));
+        });
+        b.store_at(p.clone(), tid_x(), reg(x), Ty::I32);
+        let (_, u) = analyze_kernel(&b.build());
+        assert!(!u.uniform[x.0 as usize]);
+    }
+
+    #[test]
+    fn uniform_branch_keeps_uniform() {
+        let mut b = KernelBuilder::new("ub");
+        let p = b.ptr_param("p", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let x = b.fresh();
+        b.set(x, c_i32(0));
+        b.if_(gt(n.clone(), c_i32(0)), |bl| {
+            bl.set(x, c_i32(5));
+        });
+        b.store_at(p.clone(), tid_x(), reg(x), Ty::I32);
+        let (_, u) = analyze_kernel(&b.build());
+        assert!(u.uniform[x.0 as usize], "uniform-branch assign stays uniform");
+    }
+
+    #[test]
+    fn uniform_loop_var_uniform_varying_loop_var_not() {
+        let mut b = KernelBuilder::new("loops");
+        let p = b.ptr_param("p", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let mut uvar = None;
+        b.for_(c_i32(0), n.clone(), c_i32(1), |bl, i| {
+            uvar = Some(i);
+            bl.store_at(p.clone(), add(reg(i), tid_x()), c_i32(1), Ty::I32);
+        });
+        let mut vvar = None;
+        b.for_(c_i32(0), tid_x(), c_i32(1), |bl, i| {
+            vvar = Some(i);
+            bl.store_at(p.clone(), reg(i), c_i32(2), Ty::I32);
+        });
+        let (_, u) = analyze_kernel(&b.build());
+        assert!(u.uniform[uvar.unwrap().0 as usize]);
+        assert!(!u.uniform[vvar.unwrap().0 as usize]);
+    }
+
+    #[test]
+    fn break_taints_uniform_loop() {
+        let mut b = KernelBuilder::new("brk");
+        let p = b.ptr_param("p", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let mut var = None;
+        let mut acc = None;
+        b.for_(c_i32(0), n.clone(), c_i32(1), |bl, i| {
+            var = Some(i);
+            bl.if_(gt(tid_x(), reg(i)), |bl2| bl2.brk());
+            let a = bl.assign(c_i32(1)); // after a lane-divergent break
+            acc = Some(a);
+        });
+        b.store_at(p.clone(), tid_x(), reg(acc.unwrap()), Ty::I32);
+        let (_, u) = analyze_kernel(&b.build());
+        assert!(!u.uniform[var.unwrap().0 as usize], "break parks lanes mid-loop");
+        assert!(!u.uniform[acc.unwrap().0 as usize]);
+    }
+
+    #[test]
+    fn uniform_load_is_uniform() {
+        let mut b = KernelBuilder::new("ul");
+        let p = b.ptr_param("p", Ty::I32);
+        let first = b.assign(at(p.clone(), c_i32(0), Ty::I32)); // p[0]
+        let mine = b.assign(at(p.clone(), tid_x(), Ty::I32)); // p[tid]
+        b.store_at(p.clone(), tid_x(), add(reg(first), reg(mine)), Ty::I32);
+        let (_, u) = analyze_kernel(&b.build());
+        assert!(u.uniform[first.0 as usize]);
+        assert!(!u.uniform[mine.0 as usize]);
+    }
+
+    #[test]
+    fn atomic_result_varying() {
+        let mut b = KernelBuilder::new("at");
+        let p = b.ptr_param("p", Ty::I32);
+        let old = b.atomic_rmw(AtomicOp::Add, p.clone(), c_i32(1), Ty::I32);
+        b.store_at(p.clone(), add(tid_x(), c_i32(1)), reg(old), Ty::I32);
+        let (_, u) = analyze_kernel(&b.build());
+        assert!(!u.uniform[old.0 as usize]);
+    }
+
+    /// Inside a COX warp nest the warp index is only warp-uniform: a
+    /// register derived from it must NOT be classified block-uniform
+    /// (a later region would read the wrong warp's value out of a
+    /// single block slot).
+    #[test]
+    fn warp_index_derivation_is_not_block_uniform() {
+        let m = MpmdKernel {
+            name: "warpx".into(),
+            params: vec![ParamDecl {
+                name: "p".into(),
+                ty: ParamTy::Ptr(AddrSpace::Global, Ty::I32),
+            }],
+            shared: vec![],
+            dyn_shared_elem: None,
+            body: vec![
+                Stmt::For {
+                    var: Reg(0),
+                    start: c_i32(0),
+                    end: c_i32(2),
+                    step: c_i32(1),
+                    body: vec![Stmt::ThreadLoop {
+                        warp: Some(Reg(0)),
+                        body: vec![Stmt::Assign {
+                            dst: Reg(1),
+                            expr: mul(reg(Reg(0)), c_i32(2)),
+                        }],
+                    }],
+                },
+                Stmt::ThreadLoop {
+                    warp: None,
+                    body: vec![Stmt::Store {
+                        ptr: index(param(0), tid_x(), Ty::I32),
+                        val: reg(Reg(1)),
+                        ty: Ty::I32,
+                    }],
+                },
+            ],
+            num_regs: 2,
+            warp_level: true,
+            replicated_regs: vec![],
+        };
+        let u = analyze(&m);
+        assert!(u.uniform[0], "the warp loop variable itself is block-scope");
+        assert!(!u.uniform[1], "w-derived values are only warp-uniform");
+    }
+
+    #[test]
+    fn fixpoint_propagates_through_cycles() {
+        // x starts uniform, loop re-assigns x = x + tid: must converge
+        // to varying even though the first walk sees x as uniform at
+        // the read.
+        let mut b = KernelBuilder::new("cyc");
+        let p = b.ptr_param("p", Ty::I32);
+        let x = b.assign(c_i32(0));
+        b.for_(c_i32(0), c_i32(4), c_i32(1), |bl, _i| {
+            bl.set(x, add(reg(x), tid_x()));
+        });
+        b.store_at(p.clone(), tid_x(), reg(x), Ty::I32);
+        let (_, u) = analyze_kernel(&b.build());
+        assert!(!u.uniform[x.0 as usize]);
+    }
+}

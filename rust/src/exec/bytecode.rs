@@ -21,6 +21,15 @@
 //! accesses are buffered per lane and flushed in thread order at region
 //! end, reproducing the interpreter's thread-serial trace, so Table V,
 //! the roofline and the cache simulator stay valid on the fast path.
+//!
+//! **Scalarization** (`-O2` programs) — instructions the lowering
+//! flagged scalar execute **once per dispatch** instead of once per
+//! active lane; their stats contributions (flops, loads, bytes) are
+//! multiplied by the active-lane count and scalar loads replicate
+//! their trace record into every active lane's buffer, so optimized
+//! programs remain bit-identical to `-O0` in every observable counter.
+//! Uniform branch/loop conditions (scalar-class registers) short-
+//! circuit the per-lane mask partitioning entirely.
 
 use super::interp::{read_slab, write_slab};
 use super::value::{bin_op, un_op, Value};
@@ -49,7 +58,13 @@ impl BytecodeBlockFn {
 }
 
 impl BlockFn for BytecodeBlockFn {
-    fn run(&self, block_id: u64, launch: &LaunchInfo, mem: &DeviceMemory, scratch: &mut BlockScratch) {
+    fn run(
+        &self,
+        block_id: u64,
+        launch: &LaunchInfo,
+        mem: &DeviceMemory,
+        scratch: &mut BlockScratch,
+    ) {
         let ck = &self.ck;
         let prog = &ck.lowered;
         let block_size = launch.block_size();
@@ -152,6 +167,20 @@ impl VmScratch {
         }
         self.nframes += 1;
         self.nframes - 1
+    }
+
+    /// Uniform-condition `IfBegin`: all lanes take the same side, so
+    /// partition wholesale without touching the `inset` bitmap.
+    fn if_begin_uniform(&mut self, c: bool) {
+        let fi = self.alloc_frame(FrameKind::If);
+        let (frames, active) = (&mut self.frames, &mut self.active);
+        let f = &mut frames[fi];
+        std::mem::swap(&mut f.saved, active);
+        if c {
+            active.extend_from_slice(&f.saved);
+        } else {
+            f.other.extend_from_slice(&f.saved);
+        }
     }
 
     /// Partition the active set by the per-lane predicate in `inset`:
@@ -314,7 +343,7 @@ impl<'a> Vm<'a> {
     #[inline]
     fn rd(&self, r: RegId, lane: usize) -> Value {
         let ri = r as usize;
-        if self.prog.block_scope[ri] {
+        if self.prog.scalar_reg[ri] {
             self.scratch.block_regs[ri]
         } else {
             self.scratch.thread_regs[ri * self.block_size + lane]
@@ -324,7 +353,7 @@ impl<'a> Vm<'a> {
     #[inline]
     fn wr(&mut self, r: RegId, lane: usize, v: Value) {
         let ri = r as usize;
-        if self.prog.block_scope[ri] {
+        if self.prog.scalar_reg[ri] {
             self.scratch.block_regs[ri] = v;
         } else {
             self.scratch.thread_regs[ri * self.block_size + lane] = v;
@@ -339,6 +368,31 @@ impl<'a> Vm<'a> {
     #[inline]
     fn lane(&self, i: usize) -> usize {
         self.scratch.vm.active[i] as usize
+    }
+
+    /// How many lane iterations a data instruction dispatches: every
+    /// active lane for vector instructions, one (the first active lane)
+    /// for scalar-flagged ones — and zero when no lane is active (the
+    /// VM still walks dead stretches after `Break` empties the set).
+    #[inline]
+    fn span(&self, once: bool) -> usize {
+        let n = self.nactive();
+        if once {
+            n.min(1)
+        } else {
+            n
+        }
+    }
+
+    /// Stats multiplier for a scalar-flagged instruction: its single
+    /// execution stands in for every active lane.
+    #[inline]
+    fn mult(&self, once: bool) -> u64 {
+        if once {
+            self.nactive() as u64
+        } else {
+            1
+        }
     }
 
     /// Decode user argument `idx` from the packed object (the baked-in
@@ -367,24 +421,53 @@ impl<'a> Vm<'a> {
         }
     }
 
+    /// The one guest-load core both the vector and scalar load paths
+    /// share (routing and value semantics must never diverge between
+    /// `-O0` and `-O2`): shared-tagged addresses read the block slab,
+    /// everything else device memory.
+    fn read_addr(&self, addr: u64, ty: Ty) -> Value {
+        if addr & SHARED_TAG != 0 {
+            let off = (addr & !SHARED_TAG) as usize;
+            return read_slab(&self.scratch.shared, off, ty);
+        }
+        match ty {
+            Ty::I32 => Value::I32(self.mem.read_i32(addr)),
+            Ty::I64 => Value::I64(self.mem.read_i64(addr)),
+            Ty::F32 => Value::F32(self.mem.read_f32(addr)),
+            Ty::F64 => Value::F64(self.mem.read_f64(addr)),
+            Ty::Bool => Value::Bool(self.mem.read_u8(addr) != 0),
+        }
+    }
+
     fn load(&mut self, addr: u64, ty: Ty, lane: usize) -> Value {
         self.scratch.stats.loads += 1;
         self.scratch.stats.bytes += ty.size() as u64;
-        if addr & SHARED_TAG != 0 {
-            let off = (addr & !SHARED_TAG) as usize;
-            read_slab(&self.scratch.shared, off, ty)
-        } else {
-            if self.tracing {
-                self.trace_rec(lane, TraceRec { addr, bytes: ty.size() as u8, is_write: false });
-            }
-            match ty {
-                Ty::I32 => Value::I32(self.mem.read_i32(addr)),
-                Ty::I64 => Value::I64(self.mem.read_i64(addr)),
-                Ty::F32 => Value::F32(self.mem.read_f32(addr)),
-                Ty::F64 => Value::F64(self.mem.read_f64(addr)),
-                Ty::Bool => Value::Bool(self.mem.read_u8(addr) != 0),
+        if self.tracing && addr & SHARED_TAG == 0 {
+            self.trace_rec(lane, TraceRec { addr, bytes: ty.size() as u8, is_write: false });
+        }
+        self.read_addr(addr, ty)
+    }
+
+    /// One architectural load standing in for every active lane
+    /// (scalar-flagged `Load`): counts `active` loads/bytes and
+    /// replicates the trace record into each active lane's buffer,
+    /// exactly what the interpreter would have recorded lane by lane.
+    fn load_uniform(&mut self, addr: u64, ty: Ty) -> Value {
+        let n = self.nactive() as u64;
+        self.scratch.stats.loads += n;
+        self.scratch.stats.bytes += n * ty.size() as u64;
+        if self.tracing && addr & SHARED_TAG == 0 {
+            let rec = TraceRec { addr, bytes: ty.size() as u8, is_write: false };
+            if self.in_region {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    self.scratch.vm.lane_trace[l].push(rec);
+                }
+            } else if let Some(t) = &mut self.scratch.trace {
+                t.push(rec);
             }
         }
+        self.read_addr(addr, ty)
     }
 
     fn store(&mut self, addr: u64, v: Value, ty: Ty, lane: usize) {
@@ -488,30 +571,42 @@ impl<'a> Vm<'a> {
         let mut pc = 0usize;
         while pc < n {
             let inst = self.prog.insts[pc];
+            // scalar-flagged instructions execute once per dispatch
+            // with lane-multiplied accounting
+            let once = self.prog.scalar[pc];
             match inst {
                 Inst::Const { dst, val } => {
-                    for i in 0..self.nactive() {
+                    for i in 0..self.span(once) {
                         let l = self.lane(i);
                         self.wr(dst, l, val);
                     }
                 }
                 Inst::Mov { dst, src } => {
-                    for i in 0..self.nactive() {
+                    for i in 0..self.span(once) {
                         let l = self.lane(i);
                         let v = self.rd(src, l);
                         self.wr(dst, l, v);
                     }
                 }
+                Inst::Broadcast { dst, src } => {
+                    if self.nactive() > 0 {
+                        let v = self.rd(src, self.lane(0));
+                        for i in 0..self.nactive() {
+                            let l = self.lane(i);
+                            self.wr(dst, l, v);
+                        }
+                    }
+                }
                 Inst::Param { dst, idx } => {
                     let v = self.arg(idx as usize);
-                    for i in 0..self.nactive() {
+                    for i in 0..self.span(once) {
                         let l = self.lane(i);
                         self.wr(dst, l, v);
                     }
                 }
                 Inst::Geom { dst, which } => {
                     let v = self.geom[which as usize];
-                    for i in 0..self.nactive() {
+                    for i in 0..self.span(once) {
                         let l = self.lane(i);
                         self.wr(dst, l, v);
                     }
@@ -530,35 +625,37 @@ impl<'a> Vm<'a> {
                     }
                 }
                 Inst::Bin { op, dst, a, b, flops } => {
-                    for i in 0..self.nactive() {
+                    let mult = self.mult(once);
+                    for i in 0..self.span(once) {
                         let l = self.lane(i);
                         let x = self.rd(a, l);
                         let y = self.rd(b, l);
                         if flops && (x.is_float() || y.is_float()) {
-                            self.scratch.stats.flops += 1;
+                            self.scratch.stats.flops += mult;
                         }
                         self.wr(dst, l, bin_op(op, x, y));
                     }
                 }
                 Inst::Un { op, dst, a, flops } => {
-                    for i in 0..self.nactive() {
+                    let mult = self.mult(once);
+                    for i in 0..self.span(once) {
                         let l = self.lane(i);
                         let x = self.rd(a, l);
                         if flops && x.is_float() {
-                            self.scratch.stats.flops += 1;
+                            self.scratch.stats.flops += mult;
                         }
                         self.wr(dst, l, un_op(op, x));
                     }
                 }
                 Inst::Cast { ty, dst, a } => {
-                    for i in 0..self.nactive() {
+                    for i in 0..self.span(once) {
                         let l = self.lane(i);
                         let v = self.rd(a, l).cast(ty);
                         self.wr(dst, l, v);
                     }
                 }
                 Inst::Index { dst, base, idx, elem } => {
-                    for i in 0..self.nactive() {
+                    for i in 0..self.span(once) {
                         let l = self.lane(i);
                         let b = self.rd(base, l).as_ptr();
                         let ix = self.rd(idx, l).as_i64();
@@ -567,11 +664,20 @@ impl<'a> Vm<'a> {
                     }
                 }
                 Inst::Load { dst, ptr, ty } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let addr = self.rd(ptr, l).as_ptr();
-                        let v = self.load(addr, ty, l);
-                        self.wr(dst, l, v);
+                    if once {
+                        if self.nactive() > 0 {
+                            let l = self.lane(0);
+                            let addr = self.rd(ptr, l).as_ptr();
+                            let v = self.load_uniform(addr, ty);
+                            self.wr(dst, l, v);
+                        }
+                    } else {
+                        for i in 0..self.nactive() {
+                            let l = self.lane(i);
+                            let addr = self.rd(ptr, l).as_ptr();
+                            let v = self.load(addr, ty, l);
+                            self.wr(dst, l, v);
+                        }
                     }
                 }
                 Inst::Store { ptr, val, ty } => {
@@ -684,12 +790,18 @@ impl<'a> Vm<'a> {
                     self.scratch.vm.set_uniform();
                 }
                 Inst::IfBegin { cond, else_t } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let c = self.rd(cond, l).as_bool();
-                        self.scratch.vm.inset[l] = c;
+                    if self.prog.scalar_reg[cond as usize] {
+                        // uniform condition: partition wholesale
+                        let c = self.nactive() > 0 && self.rd(cond, self.lane(0)).as_bool();
+                        self.scratch.vm.if_begin_uniform(c);
+                    } else {
+                        for i in 0..self.nactive() {
+                            let l = self.lane(i);
+                            let c = self.rd(cond, l).as_bool();
+                            self.scratch.vm.inset[l] = c;
+                        }
+                        self.scratch.vm.if_begin();
                     }
-                    self.scratch.vm.if_begin();
                     if self.scratch.vm.active.is_empty() {
                         pc = else_t as usize;
                         continue;
@@ -705,12 +817,20 @@ impl<'a> Vm<'a> {
                 Inst::IfEnd => self.scratch.vm.pop_frame(),
                 Inst::LoopBegin => self.scratch.vm.loop_begin(),
                 Inst::LoopTest { cond, exit_t } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let c = self.rd(cond, l).as_bool();
-                        self.scratch.vm.inset[l] = c;
+                    if self.prog.scalar_reg[cond as usize] {
+                        // uniform condition: all active lanes continue
+                        // or exit together
+                        if self.nactive() == 0 || !self.rd(cond, self.lane(0)).as_bool() {
+                            self.scratch.vm.active.clear();
+                        }
+                    } else {
+                        for i in 0..self.nactive() {
+                            let l = self.lane(i);
+                            let c = self.rd(cond, l).as_bool();
+                            self.scratch.vm.inset[l] = c;
+                        }
+                        self.scratch.vm.loop_test();
                     }
-                    self.scratch.vm.loop_test();
                     if self.scratch.vm.active.is_empty() {
                         pc = exit_t as usize;
                         continue;
@@ -1211,7 +1331,12 @@ mod tests {
                         let p = p.clone();
                         b.for_(c_i32(0), rem(reg(t), c_i32(modk)), c_i32(1), |bb, j| {
                             let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
-                            bb.store_at(p.clone(), reg(id), add(reg(v), add(reg(j), c_i32(1))), Ty::I32);
+                            bb.store_at(
+                                p.clone(),
+                                reg(id),
+                                add(reg(v), add(reg(j), c_i32(1))),
+                                Ty::I32,
+                            );
                         });
                     }
                     Op::WhileBreak { modk } => {
@@ -1250,7 +1375,12 @@ mod tests {
                                 eq(rem(reg(t), c_i32(modk)), c_i32(0)),
                                 |bb2| {
                                     let v = bb2.assign(at(p.clone(), reg(id), Ty::I32));
-                                    bb2.store_at(p.clone(), reg(id), add(reg(v), c_i32(1)), Ty::I32);
+                                    bb2.store_at(
+                                        p.clone(),
+                                        reg(id),
+                                        add(reg(v), c_i32(1)),
+                                        Ty::I32,
+                                    );
                                 },
                                 |bb2| bb2.brk(),
                             );

@@ -50,7 +50,13 @@ impl CirBlockFn {
 }
 
 impl BlockFn for CirBlockFn {
-    fn run(&self, block_id: u64, launch: &LaunchInfo, mem: &DeviceMemory, scratch: &mut BlockScratch) {
+    fn run(
+        &self,
+        block_id: u64,
+        launch: &LaunchInfo,
+        mem: &DeviceMemory,
+        scratch: &mut BlockScratch,
+    ) {
         let ck = &self.ck;
         let block_size = launch.block_size();
         let shared_bytes = compiler::slab_bytes(&ck.memory, launch.dyn_shmem);

@@ -206,7 +206,13 @@ impl LaunchInfo {
 /// A compiled block function — the `start_routine` the runtime's pool
 /// threads call with consecutive block ids.
 pub trait BlockFn: Send + Sync {
-    fn run(&self, block_id: u64, launch: &LaunchInfo, mem: &DeviceMemory, scratch: &mut BlockScratch);
+    fn run(
+        &self,
+        block_id: u64,
+        launch: &LaunchInfo,
+        mem: &DeviceMemory,
+        scratch: &mut BlockScratch,
+    );
 
     /// Kernel name for reports/debugging.
     fn name(&self) -> &str {
@@ -222,7 +228,13 @@ pub struct NativeBlockFn {
 }
 
 impl BlockFn for NativeBlockFn {
-    fn run(&self, block_id: u64, launch: &LaunchInfo, mem: &DeviceMemory, scratch: &mut BlockScratch) {
+    fn run(
+        &self,
+        block_id: u64,
+        launch: &LaunchInfo,
+        mem: &DeviceMemory,
+        scratch: &mut BlockScratch,
+    ) {
         (self.f)(block_id, launch, mem, scratch)
     }
     fn name(&self) -> &str {

@@ -412,8 +412,12 @@ mod tests {
         let v = b1.assign(at(p1.clone(), reg(id), Ty::I32));
         b1.store_at(p1.clone(), reg(id), add(reg(v), reg(v)), Ty::I32);
         let kvs = vec![
-            KernelVariants::interp_only(Arc::new(crate::compiler::compile_kernel(&b0.build()).unwrap())),
-            KernelVariants::interp_only(Arc::new(crate::compiler::compile_kernel(&b1.build()).unwrap())),
+            KernelVariants::interp_only(Arc::new(
+                crate::compiler::compile_kernel(&b0.build()).unwrap(),
+            )),
+            KernelVariants::interp_only(Arc::new(
+                crate::compiler::compile_kernel(&b1.build()).unwrap(),
+            )),
         ];
         let mut rt = CupbopRuntime::new(
             kvs,

@@ -85,7 +85,8 @@ impl RuntimeApi for DpcppRuntime {
         }
         let kv = &self.kernels[l.kernel];
         let packed = super::CupbopRuntime::pack_args(kv, &l.args);
-        let launch = Arc::new(LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed });
+        let launch =
+            Arc::new(LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed });
         let total = launch.total_blocks();
         let bpf = GrainPolicy::Average.block_per_fetch(total, self.cfg.pool_size as u64);
         self.queue.push(KernelTask {

@@ -51,7 +51,13 @@ struct FiberBlockFn {
 }
 
 impl BlockFn for FiberBlockFn {
-    fn run(&self, block_id: u64, launch: &LaunchInfo, mem: &DeviceMemory, scratch: &mut BlockScratch) {
+    fn run(
+        &self,
+        block_id: u64,
+        launch: &LaunchInfo,
+        mem: &DeviceMemory,
+        scratch: &mut BlockScratch,
+    ) {
         self.inner.run(block_id, launch, mem, scratch);
         // One switch per logical thread per region boundary.
         let switches = launch.block_size() as u64 * self.regions;
@@ -134,7 +140,8 @@ impl RuntimeApi for HipCpuRuntime {
         self.queue.sync();
         let kv = &self.kernels[l.kernel];
         let packed = super::CupbopRuntime::pack_args(kv, &l.args);
-        let launch = Arc::new(LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed });
+        let launch =
+            Arc::new(LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed });
         let total = launch.total_blocks();
         let inner = kv.block_fn(self.cfg.exec, None);
         let regions = count_regions(&kv.ck.mpmd.body);

@@ -102,7 +102,11 @@ impl KernelVariants {
     }
 
     /// DPC++ preference order: vectorized → native → bytecode VM.
-    pub fn dpcpp_block_fn(&self, mode: ExecMode, stats: Option<Arc<ExecStats>>) -> Arc<dyn BlockFn> {
+    pub fn dpcpp_block_fn(
+        &self,
+        mode: ExecMode,
+        stats: Option<Arc<ExecStats>>,
+    ) -> Arc<dyn BlockFn> {
         if mode == ExecMode::Native {
             if let Some(v) = &self.vectorized {
                 return v.clone();

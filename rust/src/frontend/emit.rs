@@ -238,7 +238,8 @@ impl<'a> Emitter<'a> {
                     )),
                     Sym::SharedArr { .. } | Sym::DynShared { .. } => Err(self.sema.diag(
                         format!(
-                            "cannot assign to array `{name}` itself; assign to an element `{name}[i]`"
+                            "cannot assign to array `{name}` itself; \
+                             assign to an element `{name}[i]`"
                         ),
                         *tspan,
                     )),

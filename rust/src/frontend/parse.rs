@@ -548,7 +548,8 @@ impl<'a> Parser<'a> {
             Tok::Ident(name) => {
                 if name == "__shared__" {
                     return Err(self.err(
-                        "`__shared__` is a declaration qualifier and cannot appear in an expression",
+                        "`__shared__` is a declaration qualifier and cannot appear in an \
+                         expression",
                         span,
                     ));
                 }

@@ -153,7 +153,11 @@ fn insert_ops(ops: &[HostOp], kernel_rw: &[KernelRw], state: &mut InFlight) -> V
 /// (≈ "previous iteration still in flight"). The second pass's
 /// insertions are a superset; two passes reach the fixpoint because the
 /// in-flight set only grows between syncs.
-fn fixpoint_loop_body(body: &[HostOp], kernel_rw: &[KernelRw], state: &mut InFlight) -> Vec<HostOp> {
+fn fixpoint_loop_body(
+    body: &[HostOp],
+    kernel_rw: &[KernelRw],
+    state: &mut InFlight,
+) -> Vec<HostOp> {
     let mut s1 = state.clone();
     let pass1 = insert_ops(body, kernel_rw, &mut s1);
     // Pass 2: entry state = state ∪ s1 (previous iteration's leftovers).
@@ -302,7 +306,9 @@ mod tests {
             HostOp::WhileFlag { body, .. } => {
                 assert!(body.iter().any(|o| matches!(o, HostOp::ImplicitSync)));
                 // virtual read-back removed
-                assert!(!body.iter().any(|o| matches!(o, HostOp::D2H { dst, .. } if dst.0 == usize::MAX)));
+                assert!(!body
+                    .iter()
+                    .any(|o| matches!(o, HostOp::D2H { dst, .. } if dst.0 == usize::MAX)));
             }
             other => panic!("expected WhileFlag, got {other:?}"),
         }

@@ -140,11 +140,23 @@ mod tests {
     #[test]
     fn counting_recurses_into_loops() {
         let p = HostProgram::new(vec![
-            HostOp::Launch(LaunchOp { kernel: 0, grid: (1, 1), block: (1, 1), dyn_shmem: 0, args: vec![] }),
+            HostOp::Launch(LaunchOp {
+                kernel: 0,
+                grid: (1, 1),
+                block: (1, 1),
+                dyn_shmem: 0,
+                args: vec![],
+            }),
             HostOp::Repeat {
                 n: 10,
                 body: vec![
-                    HostOp::Launch(LaunchOp { kernel: 0, grid: (1, 1), block: (1, 1), dyn_shmem: 0, args: vec![] }),
+                    HostOp::Launch(LaunchOp {
+                        kernel: 0,
+                        grid: (1, 1),
+                        block: (1, 1),
+                        dyn_shmem: 0,
+                        args: vec![],
+                    }),
                     HostOp::Sync,
                 ],
             },

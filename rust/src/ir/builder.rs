@@ -42,7 +42,10 @@ impl KernelBuilder {
     /// Declare a global-memory pointer parameter, returning its `Param` expr.
     pub fn ptr_param(&mut self, name: &str, elem: Ty) -> Expr {
         let i = self.params.len();
-        self.params.push(ParamDecl { name: name.to_string(), ty: ParamTy::Ptr(AddrSpace::Global, elem) });
+        self.params.push(ParamDecl {
+            name: name.to_string(),
+            ty: ParamTy::Ptr(AddrSpace::Global, elem),
+        });
         Expr::Param(i)
     }
 
@@ -162,7 +165,9 @@ impl KernelBuilder {
     pub fn if_end(&mut self) {
         let blk = self.blocks.pop().expect("if block open");
         match self.frames.pop() {
-            Some(Frame::IfThen { cond }) => self.push(Stmt::If { cond, then_: blk, else_: Vec::new() }),
+            Some(Frame::IfThen { cond }) => {
+                self.push(Stmt::If { cond, then_: blk, else_: Vec::new() })
+            }
             Some(Frame::IfElse { cond, then_ }) => self.push(Stmt::If { cond, then_, else_: blk }),
             _ => panic!("if_end without matching if_begin"),
         }

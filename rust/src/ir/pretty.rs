@@ -75,7 +75,9 @@ pub fn expr_to_string(e: &Expr) -> String {
             }
         }
         Expr::Load { ptr, ty } => format!("*({}*)({})", ty.c_name(), expr_to_string(ptr)),
-        Expr::Index { base, idx, .. } => format!("&{}[{}]", expr_to_string(base), expr_to_string(idx)),
+        Expr::Index { base, idx, .. } => {
+            format!("&{}[{}]", expr_to_string(base), expr_to_string(idx))
+        }
         Expr::Cast(ty, a) => format!("({})({})", ty.c_name(), expr_to_string(a)),
         Expr::Select { cond, then_, else_ } => format!(
             "({} ? {} : {})",
@@ -209,10 +211,17 @@ fn stmt_fmt(s: &Stmt, out: &mut String, ind: usize) {
         Stmt::ThreadLoop { body, warp } => {
             match warp {
                 None => {
-                    let _ = writeln!(out, "{pad}for (tid = 0; tid < block_size; tid++) {{ // thread loop");
+                    let _ = writeln!(
+                        out,
+                        "{pad}for (tid = 0; tid < block_size; tid++) {{ // thread loop"
+                    );
                 }
                 Some(w) => {
-                    let _ = writeln!(out, "{pad}for (tid = {w}*32; tid < min({w}*32+32, block_size); tid++) {{ // lane loop");
+                    let _ = writeln!(
+                        out,
+                        "{pad}for (tid = {w}*32; tid < min({w}*32+32, block_size); tid++) \
+                         {{ // lane loop"
+                    );
                 }
             }
             for s in body {
@@ -337,7 +346,8 @@ mod tests {
                     \x20 extern __shared__ int dyn_shared[];\n\
                     \x20 %r0 = (threadIdx.x + (blockIdx.x * blockDim.x));\n\
                     \x20 if ((%r0 < arg3)) {\n\
-                    \x20   *(float*)(&arg2[%r0]) = (*(float*)(&arg0[%r0]) + *(float*)(&arg1[%r0]));\n\
+                    \x20   *(float*)(&arg2[%r0]) = \
+                     (*(float*)(&arg0[%r0]) + *(float*)(&arg1[%r0]));\n\
                     \x20 }\n\
                     }\n";
         assert_eq!(got, want);

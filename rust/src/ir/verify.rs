@@ -21,12 +21,21 @@ pub enum VerifyError {
     ParamOutOfRange(usize),
     SharedOutOfRange(usize),
     BreakOutsideLoop,
+    /// MPMD check: a construct fission must eliminate survived.
+    SpmdConstructInMpmd(&'static str),
+    /// MPMD check: a thread-level statement appeared at block scope (or
+    /// vice versa).
+    MisplacedStmt(&'static str),
+    /// MPMD check: register id ≥ `num_regs`.
+    RegOutOfRange(Reg),
 }
 
 impl std::fmt::Display for VerifyError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            VerifyError::MpmdConstructInSpmd(c) => write!(f, "MPMD-only construct `{c}` in SPMD kernel"),
+            VerifyError::MpmdConstructInSpmd(c) => {
+                write!(f, "MPMD-only construct `{c}` in SPMD kernel")
+            }
             VerifyError::BarrierUnderDivergentControl { construct } => {
                 write!(f, "barrier under thread-divergent `{construct}`")
             }
@@ -34,6 +43,11 @@ impl std::fmt::Display for VerifyError {
             VerifyError::ParamOutOfRange(i) => write!(f, "param index {i} out of range"),
             VerifyError::SharedOutOfRange(i) => write!(f, "shared array index {i} out of range"),
             VerifyError::BreakOutsideLoop => write!(f, "break/continue outside loop"),
+            VerifyError::SpmdConstructInMpmd(c) => {
+                write!(f, "SPMD-only construct `{c}` survived into MPMD")
+            }
+            VerifyError::MisplacedStmt(c) => write!(f, "statement `{c}` at the wrong scope"),
+            VerifyError::RegOutOfRange(r) => write!(f, "register {r} out of range"),
         }
     }
 }
@@ -43,7 +57,11 @@ impl std::error::Error for VerifyError {}
 /// True when the expression's value can differ between threads of a block.
 pub fn is_thread_dependent(e: &Expr, thread_dep_regs: &HashSet<Reg>) -> bool {
     match e {
-        Expr::Const(_) | Expr::Param(_) | Expr::SharedBase(_) | Expr::DynSharedBase | Expr::VoteResult => false,
+        Expr::Const(_)
+        | Expr::Param(_)
+        | Expr::SharedBase(_)
+        | Expr::DynSharedBase
+        | Expr::VoteResult => false,
         Expr::Reg(r) => thread_dep_regs.contains(r),
         Expr::Special(s) => matches!(
             s,
@@ -66,7 +84,9 @@ pub fn is_thread_dependent(e: &Expr, thread_dep_regs: &HashSet<Reg>) -> bool {
                 || is_thread_dependent(else_, thread_dep_regs)
         }
         Expr::WarpShfl { .. } | Expr::WarpVote { .. } | Expr::Exchange { .. } => true,
-        Expr::NvIntrinsic { args, .. } => args.iter().any(|a| is_thread_dependent(a, thread_dep_regs)),
+        Expr::NvIntrinsic { args, .. } => {
+            args.iter().any(|a| is_thread_dependent(a, thread_dep_regs))
+        }
     }
 }
 
@@ -215,10 +235,198 @@ impl<'k> Verifier<'k> {
                     }
                 }
                 Stmt::ThreadLoop { .. } | Stmt::StoreExchange { .. } | Stmt::ReduceVote { .. } => {
-                    self.errors.push(VerifyError::MpmdConstructInSpmd("ThreadLoop/StoreExchange/ReduceVote"));
+                    self.errors.push(VerifyError::MpmdConstructInSpmd(
+                        "ThreadLoop/StoreExchange/ReduceVote",
+                    ));
                 }
             }
         }
+    }
+}
+
+/// Verify an MPMD kernel — the contract every post-fission pass (and
+/// the PassManager, between passes) re-checks:
+/// * no `__syncthreads` / warp collectives (fission must eliminate them);
+/// * `ThreadLoop` only at block scope, never nested;
+/// * thread-level effect statements only inside `ThreadLoop` regions;
+/// * register and parameter indices in range.
+pub fn verify_mpmd(m: &MpmdKernel) -> Result<(), Vec<VerifyError>> {
+    let mut errors = Vec::new();
+    mpmd_block_stmts(&m.body, m, &mut errors);
+    if errors.is_empty() {
+        Ok(())
+    } else {
+        Err(errors)
+    }
+}
+
+fn mpmd_expr(e: &Expr, m: &MpmdKernel, errors: &mut Vec<VerifyError>) {
+    match e {
+        Expr::WarpShfl { .. } | Expr::WarpVote { .. } => {
+            errors.push(VerifyError::SpmdConstructInMpmd("warp collective"));
+        }
+        Expr::Reg(r) => {
+            if r.0 >= m.num_regs {
+                errors.push(VerifyError::RegOutOfRange(*r));
+            }
+        }
+        Expr::Param(i) => {
+            if *i >= m.params.len() {
+                errors.push(VerifyError::ParamOutOfRange(*i));
+            }
+        }
+        Expr::SharedBase(i) => {
+            if *i >= m.shared.len() {
+                errors.push(VerifyError::SharedOutOfRange(*i));
+            }
+        }
+        _ => {}
+    }
+    match e {
+        Expr::Bin(_, a, b) => {
+            mpmd_expr(a, m, errors);
+            mpmd_expr(b, m, errors);
+        }
+        Expr::Un(_, a) | Expr::Cast(_, a) => mpmd_expr(a, m, errors),
+        Expr::Load { ptr, .. } => mpmd_expr(ptr, m, errors),
+        Expr::Index { base, idx, .. } => {
+            mpmd_expr(base, m, errors);
+            mpmd_expr(idx, m, errors);
+        }
+        Expr::Select { cond, then_, else_ } => {
+            mpmd_expr(cond, m, errors);
+            mpmd_expr(then_, m, errors);
+            mpmd_expr(else_, m, errors);
+        }
+        Expr::Exchange { lane, .. } => mpmd_expr(lane, m, errors),
+        Expr::WarpShfl { val, lane, .. } => {
+            mpmd_expr(val, m, errors);
+            mpmd_expr(lane, m, errors);
+        }
+        Expr::WarpVote { pred, .. } => mpmd_expr(pred, m, errors),
+        Expr::NvIntrinsic { args, .. } => args.iter().for_each(|a| mpmd_expr(a, m, errors)),
+        _ => {}
+    }
+}
+
+fn mpmd_block_stmts(body: &[Stmt], m: &MpmdKernel, errors: &mut Vec<VerifyError>) {
+    for s in body {
+        match s {
+            Stmt::ThreadLoop { body, warp } => {
+                if let Some(w) = warp {
+                    if w.0 >= m.num_regs {
+                        errors.push(VerifyError::RegOutOfRange(*w));
+                    }
+                }
+                mpmd_thread_stmts(body, m, errors);
+            }
+            Stmt::If { cond, then_, else_ } => {
+                mpmd_expr(cond, m, errors);
+                mpmd_block_stmts(then_, m, errors);
+                mpmd_block_stmts(else_, m, errors);
+            }
+            Stmt::For { var, start, end, step, body } => {
+                if var.0 >= m.num_regs {
+                    errors.push(VerifyError::RegOutOfRange(*var));
+                }
+                mpmd_expr(start, m, errors);
+                mpmd_expr(end, m, errors);
+                mpmd_expr(step, m, errors);
+                mpmd_block_stmts(body, m, errors);
+            }
+            Stmt::While { cond, body } => {
+                mpmd_expr(cond, m, errors);
+                mpmd_block_stmts(body, m, errors);
+            }
+            Stmt::ReduceVote { .. } => {}
+            Stmt::SyncThreads => {
+                errors.push(VerifyError::SpmdConstructInMpmd("syncthreads"));
+            }
+            other => {
+                errors.push(VerifyError::MisplacedStmt(stmt_name(other)));
+            }
+        }
+    }
+}
+
+fn mpmd_thread_stmts(body: &[Stmt], m: &MpmdKernel, errors: &mut Vec<VerifyError>) {
+    for s in body {
+        match s {
+            Stmt::Assign { dst, expr } => {
+                if dst.0 >= m.num_regs {
+                    errors.push(VerifyError::RegOutOfRange(*dst));
+                }
+                mpmd_expr(expr, m, errors);
+            }
+            Stmt::Store { ptr, val, .. } => {
+                mpmd_expr(ptr, m, errors);
+                mpmd_expr(val, m, errors);
+            }
+            Stmt::If { cond, then_, else_ } => {
+                mpmd_expr(cond, m, errors);
+                mpmd_thread_stmts(then_, m, errors);
+                mpmd_thread_stmts(else_, m, errors);
+            }
+            Stmt::For { var, start, end, step, body } => {
+                if var.0 >= m.num_regs {
+                    errors.push(VerifyError::RegOutOfRange(*var));
+                }
+                mpmd_expr(start, m, errors);
+                mpmd_expr(end, m, errors);
+                mpmd_expr(step, m, errors);
+                mpmd_thread_stmts(body, m, errors);
+            }
+            Stmt::While { cond, body } => {
+                mpmd_expr(cond, m, errors);
+                mpmd_thread_stmts(body, m, errors);
+            }
+            Stmt::Break | Stmt::Continue | Stmt::Return => {}
+            Stmt::AtomicRmw { ptr, val, dst, .. } => {
+                mpmd_expr(ptr, m, errors);
+                mpmd_expr(val, m, errors);
+                if let Some(d) = dst {
+                    if d.0 >= m.num_regs {
+                        errors.push(VerifyError::RegOutOfRange(*d));
+                    }
+                }
+            }
+            Stmt::AtomicCas { ptr, cmp, val, dst, .. } => {
+                mpmd_expr(ptr, m, errors);
+                mpmd_expr(cmp, m, errors);
+                mpmd_expr(val, m, errors);
+                if let Some(d) = dst {
+                    if d.0 >= m.num_regs {
+                        errors.push(VerifyError::RegOutOfRange(*d));
+                    }
+                }
+            }
+            Stmt::StoreExchange { val, .. } => mpmd_expr(val, m, errors),
+            Stmt::SyncThreads => {
+                errors.push(VerifyError::SpmdConstructInMpmd("syncthreads"));
+            }
+            other => {
+                errors.push(VerifyError::MisplacedStmt(stmt_name(other)));
+            }
+        }
+    }
+}
+
+fn stmt_name(s: &Stmt) -> &'static str {
+    match s {
+        Stmt::Assign { .. } => "assign",
+        Stmt::Store { .. } => "store",
+        Stmt::SyncThreads => "syncthreads",
+        Stmt::If { .. } => "if",
+        Stmt::For { .. } => "for",
+        Stmt::While { .. } => "while",
+        Stmt::Break => "break",
+        Stmt::Continue => "continue",
+        Stmt::Return => "return",
+        Stmt::AtomicRmw { .. } => "atomic-rmw",
+        Stmt::AtomicCas { .. } => "atomic-cas",
+        Stmt::ThreadLoop { .. } => "thread-loop",
+        Stmt::StoreExchange { .. } => "store-exchange",
+        Stmt::ReduceVote { .. } => "reduce-vote",
     }
 }
 
@@ -320,6 +528,43 @@ mod tests {
             num_regs: 0,
         };
         assert!(verify(&k).unwrap_err().contains(&VerifyError::BreakOutsideLoop));
+    }
+
+    #[test]
+    fn mpmd_verifier_accepts_fissioned_kernel() {
+        let mut b = KernelBuilder::new("ok");
+        let d = b.ptr_param("d", Ty::I32);
+        let t = b.assign(tid_x());
+        b.store_at(d.clone(), reg(t), reg(t), Ty::I32);
+        b.sync_threads();
+        b.store_at(d.clone(), reg(t), c_i32(0), Ty::I32);
+        let m = crate::compiler::spmd_to_mpmd(&b.build()).unwrap();
+        assert!(verify_mpmd(&m).is_ok());
+    }
+
+    #[test]
+    fn mpmd_verifier_rejects_surviving_barrier_and_bad_scope() {
+        let m = MpmdKernel {
+            name: "bad".into(),
+            params: vec![],
+            shared: vec![],
+            dyn_shared_elem: None,
+            body: vec![
+                Stmt::SyncThreads,
+                Stmt::Assign { dst: Reg(9), expr: c_i32(0) },
+                Stmt::ThreadLoop {
+                    body: vec![Stmt::Assign { dst: Reg(4), expr: c_i32(0) }],
+                    warp: None,
+                },
+            ],
+            num_regs: 1,
+            warp_level: false,
+            replicated_regs: vec![],
+        };
+        let errs = verify_mpmd(&m).unwrap_err();
+        assert!(errs.iter().any(|e| matches!(e, VerifyError::SpmdConstructInMpmd(_))));
+        assert!(errs.iter().any(|e| matches!(e, VerifyError::MisplacedStmt("assign"))));
+        assert!(errs.iter().any(|e| matches!(e, VerifyError::RegOutOfRange(Reg(4)))));
     }
 
     #[test]

@@ -19,7 +19,10 @@
 //! ```
 
 use cupbop::benchsuite::spec::{self, Backend, Scale};
-use cupbop::compiler::{compile_kernel, detect_features, explain_unsupported, judge, Framework};
+use cupbop::compiler::{
+    compile_kernel_opt, detect_features, explain_unsupported, judge, lower, Framework, OptLevel,
+    PassManager,
+};
 use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode, SchedKind};
 use cupbop::frontend::{self, harness};
 use cupbop::ir::pretty;
@@ -58,9 +61,16 @@ fn print_help() {
          compile:\n\
            cupbop compile <file.cu> [more.cu ...]\n\
                              parse CUDA-C kernels into CIR; print the\n\
-                             listing, detected features and per-framework\n\
-                             Table II verdicts; non-zero exit on any\n\
+                             listing, detected features, per-framework\n\
+                             Table II verdicts and the resolved pass\n\
+                             pipeline; non-zero exit on any\n\
                              parse/sema/verify diagnostic\n\
+           --emit E          cir|mpmd|bytecode — which form to print\n\
+                             (default cir; bytecode = disassembled\n\
+                             register-machine program)\n\
+           --opt N           optimization level 0|1|2 (default 2:\n\
+                             fold+DCE+LICM+uniformity scalarization;\n\
+                             also accepted by run/suite/dump)\n\
          \n\
          run flags:\n\
            --bench NAME      benchmark to run (see `cupbop list`)\n\
@@ -101,6 +111,16 @@ fn parse_scale(args: &[String]) -> Scale {
         Some("tiny") => Scale::Tiny,
         Some("paper") => Scale::Paper,
         _ => Scale::Small,
+    }
+}
+
+fn parse_opt(args: &[String]) -> OptLevel {
+    match flag_value(args, "--opt") {
+        Some(s) => OptLevel::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown --opt `{s}` (0|1|2); using the default -O2");
+            OptLevel::default()
+        }),
+        None => OptLevel::default(),
     }
 }
 
@@ -178,7 +198,7 @@ fn cmd_run(args: &[String]) -> ExitCode {
     }
     let backend = parse_backend(args);
     let cfg = parse_cfg(args);
-    let built = spec::build_program(&b, parse_scale(args));
+    let built = spec::build_program_opt(&b, parse_scale(args), parse_opt(args));
     let out = spec::run_on(&built, backend, cfg);
     match &out.check {
         Ok(()) => println!(
@@ -249,7 +269,7 @@ fn cmd_run_cu(path: &str, args: &[String]) -> ExitCode {
     };
     let backend = parse_backend(args);
     let cfg = parse_cfg(args);
-    let built = spec::build_prepared(&kernel.name, prog);
+    let built = spec::build_prepared_opt(&kernel.name, prog, parse_opt(args));
     let (out, arrays) = spec::run_with_arrays(&built, backend, cfg);
     if let Err(e) = out.check {
         eprintln!("{} [{}] FAILED: {e}", kernel.name, backend.name());
@@ -271,17 +291,57 @@ fn cmd_run_cu(path: &str, args: &[String]) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+/// What `cupbop compile` prints for each kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EmitKind {
+    /// the CIR listing (default — CUDA-like source view)
+    Cir,
+    /// the MPMD (block-function) form after fission
+    Mpmd,
+    /// the lowered register-machine bytecode, disassembled
+    Bytecode,
+}
+
 /// `cupbop compile file.cu ...` — the Table II workflow from source:
-/// CIR listing, detected features and per-framework verdicts.
+/// listing (`--emit {cir,mpmd,bytecode}`), detected features,
+/// per-framework verdicts and the resolved pass pipeline (`--opt N`).
 fn cmd_compile(args: &[String]) -> ExitCode {
-    let files: Vec<&String> = args.iter().filter(|a| !a.starts_with("--")).collect();
+    let files: Vec<&String> = {
+        // skip flag values ("--emit cir" must not be read as a file)
+        let mut fs = Vec::new();
+        let mut skip = false;
+        for a in args {
+            if skip {
+                skip = false;
+                continue;
+            }
+            if a.starts_with("--") {
+                skip = matches!(a.as_str(), "--emit" | "--opt");
+                continue;
+            }
+            fs.push(a);
+        }
+        fs
+    };
     if files.is_empty() {
-        eprintln!("usage: cupbop compile <file.cu> [more.cu ...]");
+        eprintln!(
+            "usage: cupbop compile <file.cu> [more.cu ...] [--emit cir|mpmd|bytecode] [--opt 0|1|2]"
+        );
         return ExitCode::FAILURE;
     }
+    let emit = match flag_value(args, "--emit") {
+        Some("cir") | None => EmitKind::Cir,
+        Some("mpmd") => EmitKind::Mpmd,
+        Some("bytecode") | Some("bc") => EmitKind::Bytecode,
+        Some(other) => {
+            eprintln!("unknown --emit `{other}` (cir|mpmd|bytecode)");
+            return ExitCode::FAILURE;
+        }
+    };
+    let opt = parse_opt(args);
     let mut failed = false;
     for f in files {
-        if compile_file(f).is_err() {
+        if compile_file(f, emit, opt).is_err() {
             failed = true;
         }
     }
@@ -292,7 +352,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     }
 }
 
-fn compile_file(path: &str) -> Result<(), ()> {
+fn compile_file(path: &str, emit: EmitKind, opt: OptLevel) -> Result<(), ()> {
     let src = std::fs::read_to_string(path).map_err(|e| {
         eprintln!("cannot read `{path}`: {e}");
     })?;
@@ -302,11 +362,18 @@ fn compile_file(path: &str) -> Result<(), ()> {
     println!("// {path}: {} kernel(s)", kernels.len());
     for k in &kernels {
         // The full pipeline must accept frontend output unchanged.
-        let ck = compile_kernel(k).map_err(|e| {
+        let ck = compile_kernel_opt(k, opt).map_err(|e| {
             eprintln!("{path}: kernel `{}`: {e}", k.name);
         })?;
         println!();
-        print!("{}", pretty::kernel_to_string(k));
+        match emit {
+            EmitKind::Cir => print!("{}", pretty::kernel_to_string(k)),
+            EmitKind::Mpmd => print!("{}", pretty::mpmd_to_string(&ck.mpmd)),
+            EmitKind::Bytecode => {
+                println!("// ===== {} bytecode =====", ck.mpmd.name);
+                print!("{}", lower::disasm(&ck.lowered));
+            }
+        }
         let feats = detect_features(k);
         let fl: Vec<String> = feats.iter().map(|f| f.to_string()).collect();
         println!(
@@ -320,9 +387,12 @@ fn compile_file(path: &str) -> Result<(), ()> {
                 println!("           - {line}");
             }
         }
+        let pm = PassManager { level: ck.opt, passes: ck.pipeline.clone() };
+        print!("{}", pm.render());
         println!(
-            "  bytecode: {} instructions, {} registers (warp_level={})",
+            "  bytecode: {} instructions ({} scalar), {} registers (warp_level={})",
             ck.lowered.insts.len(),
+            ck.lowered.scalar_inst_count(),
             ck.lowered.num_regs,
             ck.mpmd.warp_level
         );
@@ -346,7 +416,7 @@ fn cmd_suite(args: &[String]) -> ExitCode {
         if !in_suite || b.build.is_none() {
             continue;
         }
-        let built = spec::build_program(&b, scale);
+        let built = spec::build_program_opt(&b, scale, parse_opt(args));
         let out = spec::run_on(&built, backend, cfg);
         match out.check {
             Ok(()) => {
@@ -393,7 +463,7 @@ fn cmd_dump(args: &[String]) -> ExitCode {
         eprintln!("`{name}` is spec-only");
         return ExitCode::FAILURE;
     }
-    let built = spec::build_program(&b, Scale::Tiny);
+    let built = spec::build_program_opt(&b, Scale::Tiny, parse_opt(args));
     for ck in &built.compiled {
         println!("// ===== {} =====", ck.mpmd.name);
         println!("{}", cupbop::ir::pretty::mpmd_to_string(&ck.mpmd));

@@ -23,7 +23,14 @@ pub fn table1() -> String {
     );
     for fw in [Framework::Dpcpp, Framework::HipCpu, Framework::CuPBoP] {
         let (comp, run) = fw.requirements();
-        let _ = writeln!(out, "{:<10} {:<26} {:<30} {:<20}", fw.name(), comp, run, fw.isa_support().join(", "));
+        let _ = writeln!(
+            out,
+            "{:<10} {:<26} {:<30} {:<20}",
+            fw.name(),
+            comp,
+            run,
+            fw.isa_support().join(", ")
+        );
     }
     out
 }
@@ -98,7 +105,8 @@ pub fn table6(scale: Scale) -> String {
                 continue;
             };
             let built = spec::build_program(&b, scale);
-            let mut rt = ReferenceRuntime::new(built.variants.clone(), built.mem_cap).with_tracing();
+            let mut rt =
+                ReferenceRuntime::new(built.variants.clone(), built.mem_cap).with_tracing();
             let mut arrays = built.arrays.clone();
             run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
                 .expect("reference run");
@@ -197,7 +205,10 @@ pub fn fig10() -> String {
     let reord = patterns::reordered_contiguous(threads, iters, 4);
     let s1 = simulate(&gpu, cfg);
     let s2 = simulate(&reord, cfg);
-    let _ = writeln!(out, "Fig 10 — access-pattern LLC behaviour ({threads} threads x {iters} iters)");
+    let _ = writeln!(
+        out,
+        "Fig 10 — access-pattern LLC behaviour ({threads} threads x {iters} iters)"
+    );
     let _ = writeln!(
         out,
         "(b) GPU-coalesced pattern serialised on CPU: loads {} misses {} (hit rate {:.1}%)",

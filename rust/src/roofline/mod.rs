@@ -98,7 +98,11 @@ mod tests {
     fn point_efficiency() {
         let p = by_name("Server-AMD-A30-GPU").unwrap();
         // a kernel achieving exactly the bandwidth bound at ai=1
-        let pt = RooflinePoint { kernel: "k".into(), intensity: 1.0, achieved_flops: p.attainable(1.0) };
+        let pt = RooflinePoint {
+            kernel: "k".into(),
+            intensity: 1.0,
+            achieved_flops: p.attainable(1.0),
+        };
         assert!((pt.efficiency(p) - 1.0).abs() < 1e-9);
     }
 

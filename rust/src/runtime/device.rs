@@ -55,7 +55,8 @@ impl DeviceMemory {
         let addr = (*next + 7) / 8 * 8;
         assert!(
             addr + bytes <= self.cap,
-            "device OOM: want {bytes}B at {addr}, cap {}B — construct DeviceMemory::with_capacity(..) larger",
+            "device OOM: want {bytes}B at {addr}, cap {}B — construct \
+             DeviceMemory::with_capacity(..) larger",
             self.cap
         );
         *next = addr + bytes;
@@ -87,7 +88,9 @@ impl DeviceMemory {
 
     /// `cudaMemcpyDeviceToHost`.
     pub fn d2h(&self, dst: &mut [u8], src: u64) {
-        unsafe { std::ptr::copy_nonoverlapping(self.ptr(src, dst.len()), dst.as_mut_ptr(), dst.len()) }
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.ptr(src, dst.len()), dst.as_mut_ptr(), dst.len())
+        }
     }
 
     /// Device-to-device copy (cudaMemcpyDeviceToDevice).

@@ -37,7 +37,11 @@ pub struct TaskQueue {
 
 impl TaskQueue {
     pub fn new() -> Self {
-        TaskQueue { inner: Mutex::new(Inner::default()), wake_pool: Condvar::new(), done: Condvar::new() }
+        TaskQueue {
+            inner: Mutex::new(Inner::default()),
+            wake_pool: Condvar::new(),
+            done: Condvar::new(),
+        }
     }
 
     /// Host side: push a kernel task and broadcast `wake_pool`

@@ -88,7 +88,12 @@ mod tests {
     use std::sync::atomic::{AtomicU64, Ordering};
 
     fn launch(grid: u32) -> Arc<LaunchInfo> {
-        Arc::new(LaunchInfo { grid: (grid, 1), block: (1, 1), dyn_shmem: 0, packed: Arc::new(vec![]) })
+        Arc::new(LaunchInfo {
+            grid: (grid, 1),
+            block: (1, 1),
+            dyn_shmem: 0,
+            packed: Arc::new(vec![]),
+        })
     }
 
     /// All blocks of a launch execute exactly once across the pool.

@@ -4,15 +4,16 @@
 //! outputs that pass each benchmark's validator.
 //!
 //! The `differential` module goes further: one generated test per
-//! (benchmark × backend × ExecMode) runs the benchmark at `Scale::Tiny`
-//! and **bit-compares** every final host array against the serial
-//! `Reference` oracle (always interpreting), falling back to an epsilon
-//! comparison only where bits differ and the bytes decode as floats
-//! (reductions whose accumulation order is schedule-dependent). A guard
-//! test keeps the generated list in lock-step with
-//! `spec::all_benchmarks()`.
+//! (benchmark × backend × ExecMode × opt-level) runs the benchmark at
+//! `Scale::Tiny` and **bit-compares** every final host array against
+//! the serial `Reference` oracle (always interpreting at `-O0`),
+//! falling back to an epsilon comparison only where bits differ and the
+//! bytes decode as floats (reductions whose accumulation order is
+//! schedule-dependent). A guard test keeps the generated list in
+//! lock-step with `spec::all_benchmarks()`.
 
 use cupbop::benchsuite::spec::{self, Backend, Scale};
+use cupbop::compiler::OptLevel;
 use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode};
 
 fn run_all(backend: Backend, cfg: BackendCfg) {
@@ -140,55 +141,80 @@ fn exec_engines_agree() {
     }
 }
 
-/// The bytecode VM must flush ExecStats counters identical to the
-/// interpreter's on every bundled benchmark (Table V, the roofline and
-/// the grain heuristic inputs stay valid on the fast path).
+/// Every (engine × opt-level) combination must flush ExecStats
+/// counters identical to the `-O0` interpreter's on every bundled
+/// benchmark: optimization is accounting-transparent by contract
+/// (Table V, the roofline and the grain heuristic inputs stay valid on
+/// every fast path).
 #[test]
-fn bytecode_stats_match_interpreter() {
+fn exec_stats_identical_across_engines_and_opt_levels() {
     use cupbop::frameworks::ReferenceRuntime;
     use cupbop::host::run_host_program;
     for b in spec::all_benchmarks() {
         if b.build.is_none() {
             continue;
         }
-        let built = spec::build_program(&b, Scale::Tiny);
-        let mem_cap = built.mem_cap.max(64 << 20);
-        let mut snaps = Vec::new();
-        for exec in [ExecMode::Interpret, ExecMode::Bytecode] {
-            let mut arrays = built.arrays.clone();
-            let mut rt =
-                ReferenceRuntime::new(built.variants.clone(), mem_cap).with_exec(exec);
-            run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
-                .unwrap_or_else(|e| panic!("{} [{exec:?}]: {e}", b.name));
-            snaps.push(rt.stats.snapshot());
+        let mut baseline = None;
+        for opt in OptLevel::ALL {
+            let built = spec::build_program_opt(&b, Scale::Tiny, opt);
+            let mem_cap = built.mem_cap.max(64 << 20);
+            for exec in [ExecMode::Interpret, ExecMode::Bytecode] {
+                let mut arrays = built.arrays.clone();
+                let mut rt =
+                    ReferenceRuntime::new(built.variants.clone(), mem_cap).with_exec(exec);
+                run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
+                    .unwrap_or_else(|e| panic!("{} [{exec:?} {opt:?}]: {e}", b.name));
+                let snap = rt.stats.snapshot();
+                match &baseline {
+                    None => baseline = Some(snap),
+                    Some(base) => assert_eq!(
+                        *base, snap,
+                        "{}: ExecStats diverged at [{exec:?} {opt:?}] vs interp -O0",
+                        b.name
+                    ),
+                }
+            }
         }
-        assert_eq!(snaps[0], snaps[1], "{}: interp vs bytecode ExecStats", b.name);
     }
 }
 
 /// The bytecode VM must emit the interpreter's exact TraceRec stream
-/// (cache simulator input) — spot-checked on a shared-memory-heavy, an
-/// atomic-heavy and a multi-kernel benchmark.
+/// (cache simulator input) at every opt level — spot-checked on a
+/// shared-memory-heavy, an atomic-heavy and a multi-kernel benchmark.
 #[test]
-fn bytecode_trace_matches_interpreter() {
+fn bytecode_trace_matches_interpreter_at_every_opt_level() {
     use cupbop::frameworks::ReferenceRuntime;
     use cupbop::host::run_host_program;
     for name in ["nw", "hist", "bs"] {
         let b = spec::by_name(name).unwrap();
-        let built = spec::build_program(&b, Scale::Tiny);
-        let mem_cap = built.mem_cap.max(64 << 20);
-        let mut traces = Vec::new();
-        for exec in [ExecMode::Interpret, ExecMode::Bytecode] {
-            let mut arrays = built.arrays.clone();
-            let mut rt = ReferenceRuntime::new(built.variants.clone(), mem_cap)
-                .with_exec(exec)
-                .with_tracing();
-            run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
-                .unwrap_or_else(|e| panic!("{name} [{exec:?}]: {e}"));
-            traces.push(rt.take_trace());
+        let mut baseline: Option<Vec<cupbop::exec::TraceRec>> = None;
+        for opt in OptLevel::ALL {
+            let built = spec::build_program_opt(&b, Scale::Tiny, opt);
+            let mem_cap = built.mem_cap.max(64 << 20);
+            for exec in [ExecMode::Interpret, ExecMode::Bytecode] {
+                let mut arrays = built.arrays.clone();
+                let mut rt = ReferenceRuntime::new(built.variants.clone(), mem_cap)
+                    .with_exec(exec)
+                    .with_tracing();
+                run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
+                    .unwrap_or_else(|e| panic!("{name} [{exec:?} {opt:?}]: {e}"));
+                let trace = rt.take_trace();
+                match &baseline {
+                    None => baseline = Some(trace),
+                    Some(base) => {
+                        assert_eq!(
+                            base.len(),
+                            trace.len(),
+                            "{name} [{exec:?} {opt:?}]: trace length differs"
+                        );
+                        assert_eq!(
+                            *base, trace,
+                            "{name} [{exec:?} {opt:?}]: TraceRec streams differ"
+                        );
+                    }
+                }
+            }
         }
-        assert_eq!(traces[0].len(), traces[1].len(), "{name}: trace length differs");
-        assert_eq!(traces[0], traces[1], "{name}: TraceRec streams differ");
     }
 }
 
@@ -266,26 +292,30 @@ fn allclose_f64(got: &[u8], want: &[u8]) -> bool {
     })
 }
 
-/// Run `name` on `backend` under `exec` and compare every final host
-/// array against the serial Reference oracle: bitwise first, epsilon
-/// as fallback.
-fn diff_one(name: &str, backend: Backend, exec: ExecMode) {
+/// Run `name` on `backend` under `exec`, compiled at `opt`, and
+/// compare every final host array against the serial Reference oracle
+/// (interpreting, `-O0`): bitwise first, epsilon as fallback.
+fn diff_one_opt(name: &str, backend: Backend, exec: ExecMode, opt: OptLevel) {
     let b = spec::by_name(name).unwrap_or_else(|| panic!("unknown benchmark `{name}`"));
-    let built = spec::build_program(&b, Scale::Tiny);
+    let oracle = spec::build_program_opt(&b, Scale::Tiny, OptLevel::O0);
 
     let oracle_cfg = BackendCfg { exec: ExecMode::Interpret, ..Default::default() };
     let (oracle_out, oracle_arrays) =
-        spec::run_with_arrays(&built, Backend::Reference, oracle_cfg);
+        spec::run_with_arrays(&oracle, Backend::Reference, oracle_cfg);
     oracle_out.check.unwrap_or_else(|e| panic!("{name} [oracle]: {e}"));
 
-    // The oracle always interprets. The `Interpret` column then
+    // The oracle always interprets at -O0. The `Interpret` column then
     // isolates *scheduling* divergence (ordering, races, stream bugs)
     // from engine differences; the `Bytecode` column additionally pins
-    // VM lowering/execution bugs end to end. Native-closure numeric
-    // differences have their own coverage (`cupbop_native_all_green`,
-    // `exec_engines_agree`, the exec-mode parity property test). Bits
-    // then only differ where accumulation order legitimately differs —
-    // float atomics — and the epsilon fallback absorbs exactly that.
+    // VM lowering/execution bugs end to end; the -O0/-O1 rows pin the
+    // optimizer (any fold/DCE/LICM/scalarization miscompile shows up as
+    // a bit difference against the unoptimized oracle). Native-closure
+    // numeric differences have their own coverage
+    // (`cupbop_native_all_green`, `exec_engines_agree`, the exec-mode
+    // parity property test). Bits then only differ where accumulation
+    // order legitimately differs — float atomics — and the epsilon
+    // fallback absorbs exactly that.
+    let built = spec::build_program_opt(&b, Scale::Tiny, opt);
     let cfg = BackendCfg { pool_size: 4, exec, ..Default::default() };
     let (out, arrays) = spec::run_with_arrays(&built, backend, cfg);
     out.check.unwrap_or_else(|e| panic!("{name} [{}]: {e}", backend.name()));
@@ -312,10 +342,12 @@ fn diff_one(name: &str, backend: Backend, exec: ExecMode) {
     }
 }
 
-/// Generates `differential::<bench>::{cupbop,hipcpu,dpcpp}` (interpret)
-/// and `::{cupbop,hipcpu,dpcpp}_bytecode` — one test per (benchmark ×
-/// backend × ExecMode) — plus a guard asserting the list covers exactly
-/// the implemented benchmarks.
+/// Generates, per benchmark, one test per (backend × ExecMode ×
+/// opt-level) slice: `{cupbop,hipcpu,dpcpp}[_bytecode]` run the
+/// default `-O2` compile on both engines, `cupbop[_bytecode]_o{0,1}`
+/// pin the lower opt levels (backend-independent compiler dimension —
+/// one backend suffices), plus a guard asserting the list covers
+/// exactly the implemented benchmarks.
 macro_rules! diff_tests {
     ($($modname:ident => $bench:literal),+ $(,)?) => {
         mod differential {
@@ -325,27 +357,39 @@ macro_rules! diff_tests {
                     use super::*;
                     #[test]
                     fn cupbop() {
-                        diff_one($bench, Backend::CuPBoP, ExecMode::Interpret);
+                        diff_one_opt($bench, Backend::CuPBoP, ExecMode::Interpret, OptLevel::O2);
                     }
                     #[test]
                     fn cupbop_bytecode() {
-                        diff_one($bench, Backend::CuPBoP, ExecMode::Bytecode);
+                        diff_one_opt($bench, Backend::CuPBoP, ExecMode::Bytecode, OptLevel::O2);
+                    }
+                    #[test]
+                    fn cupbop_o0() {
+                        diff_one_opt($bench, Backend::CuPBoP, ExecMode::Interpret, OptLevel::O0);
+                    }
+                    #[test]
+                    fn cupbop_bytecode_o0() {
+                        diff_one_opt($bench, Backend::CuPBoP, ExecMode::Bytecode, OptLevel::O0);
+                    }
+                    #[test]
+                    fn cupbop_bytecode_o1() {
+                        diff_one_opt($bench, Backend::CuPBoP, ExecMode::Bytecode, OptLevel::O1);
                     }
                     #[test]
                     fn hipcpu() {
-                        diff_one($bench, Backend::HipCpu, ExecMode::Interpret);
+                        diff_one_opt($bench, Backend::HipCpu, ExecMode::Interpret, OptLevel::O2);
                     }
                     #[test]
                     fn hipcpu_bytecode() {
-                        diff_one($bench, Backend::HipCpu, ExecMode::Bytecode);
+                        diff_one_opt($bench, Backend::HipCpu, ExecMode::Bytecode, OptLevel::O2);
                     }
                     #[test]
                     fn dpcpp() {
-                        diff_one($bench, Backend::Dpcpp, ExecMode::Interpret);
+                        diff_one_opt($bench, Backend::Dpcpp, ExecMode::Interpret, OptLevel::O2);
                     }
                     #[test]
                     fn dpcpp_bytecode() {
-                        diff_one($bench, Backend::Dpcpp, ExecMode::Bytecode);
+                        diff_one_opt($bench, Backend::Dpcpp, ExecMode::Bytecode, OptLevel::O2);
                     }
                 }
             )+

@@ -18,7 +18,9 @@ fn verdicts(suite: Suite, fw: Framework) -> Vec<(String, Verdict)> {
 /// Table II headline: Rodinia coverage 69.6 / 56.5 / 56.5.
 #[test]
 fn table2_rodinia_coverage() {
-    let cov = |fw| coverage(&verdicts(Suite::Rodinia, fw).into_iter().map(|(_, v)| v).collect::<Vec<_>>());
+    let cov = |fw| {
+        coverage(&verdicts(Suite::Rodinia, fw).into_iter().map(|(_, v)| v).collect::<Vec<_>>())
+    };
     assert!((cov(Framework::CuPBoP) - 69.6).abs() < 0.1);
     assert!((cov(Framework::Dpcpp) - 56.5).abs() < 0.1);
     assert!((cov(Framework::HipCpu) - 56.5).abs() < 0.1);
@@ -27,7 +29,9 @@ fn table2_rodinia_coverage() {
 /// Table II: Crystal coverage 100 / 76.9 / 0.
 #[test]
 fn table2_crystal_coverage() {
-    let cov = |fw| coverage(&verdicts(Suite::Crystal, fw).into_iter().map(|(_, v)| v).collect::<Vec<_>>());
+    let cov = |fw| {
+        coverage(&verdicts(Suite::Crystal, fw).into_iter().map(|(_, v)| v).collect::<Vec<_>>())
+    };
     assert!((cov(Framework::CuPBoP) - 100.0).abs() < 0.1);
     assert!((cov(Framework::HipCpu) - 76.9).abs() < 0.1);
     assert_eq!(cov(Framework::Dpcpp), 0.0);

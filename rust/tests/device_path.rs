@@ -114,7 +114,9 @@ fn pr_artifact_matches_host_reference() {
 #[test]
 fn all_artifacts_compile() {
     let Some(r) = runner() else { return };
-    for name in ["vecadd", "hotspot", "kmeans", "fir", "hist", "ep", "pr", "backprop", "cloverleaf"] {
+    for name in
+        ["vecadd", "hotspot", "kmeans", "fir", "hist", "ep", "pr", "backprop", "cloverleaf"]
+    {
         assert!(r.has_artifact(name), "{name} artifact missing");
         r.load(name).unwrap_or_else(|e| panic!("{name}: {e}"));
     }

@@ -82,7 +82,8 @@ fn golden_assignment_to_parameter() {
 #[test]
 fn golden_divergent_barrier_verification() {
     let d = err(
-        "__global__ void k(int n) {\n    if (threadIdx.x < 16) {\n        __syncthreads();\n    }\n}",
+        "__global__ void k(int n) {\n    if (threadIdx.x < 16) {\n        __syncthreads();\n    \
+         }\n}",
     );
     assert_eq!(
         d.msg,

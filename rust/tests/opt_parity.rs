@@ -1,0 +1,327 @@
+//! The optimizer's accounting contract, end to end: `-O0`, `-O1` and
+//! `-O2` must be **observably identical** — bit-equal outputs,
+//! bit-equal `ExecStats`, bit-equal `TraceRec` streams, identical
+//! detected features — on the `examples/cuda/` frontend corpus and on
+//! randomized divergent kernels. Only wall-clock (and the pipeline
+//! report) may differ. `fig_opt` measures the former; this file pins
+//! the latter.
+
+use cupbop::benchsuite::spec::{self, Backend, BuiltProgram};
+use cupbop::compiler::passes::{dce, fold};
+use cupbop::compiler::{compile_kernel_opt, detect_features, pack, ArgValue, OptLevel};
+use cupbop::exec::{
+    BlockFn, BlockScratch, BytecodeBlockFn, CirBlockFn, ExecStats, LaunchInfo, StatsSnapshot,
+    TraceRec,
+};
+use cupbop::frameworks::{BackendCfg, ExecMode, ReferenceRuntime};
+use cupbop::frontend;
+use cupbop::frontend::harness::{synth_program, SynthCfg};
+use cupbop::host::run_host_program;
+use cupbop::ir::Kernel;
+use cupbop::runtime::device::DeviceMemory;
+use cupbop::testkit::for_random_cases;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const CORPUS: &[&str] = &[
+    "vecadd.cu",
+    "kmeans.cu",
+    "hist.cu",
+    "bs.cu",
+    "fir.cu",
+    "hotspot.cu",
+    "warp_sum.cu",
+    "block_reverse.cu",
+];
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("examples").join("cuda")
+}
+
+fn parse_file(name: &str) -> Vec<Kernel> {
+    let path = corpus_dir().join(name);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+    frontend::parse_kernels(&src).unwrap_or_else(|d| panic!("{}", d.render(name)))
+}
+
+struct RefRun {
+    arrays: Vec<Vec<u8>>,
+    stats: StatsSnapshot,
+    trace: Vec<TraceRec>,
+}
+
+fn run_reference_traced(built: &BuiltProgram, exec: ExecMode) -> RefRun {
+    let mut arrays = built.arrays.clone();
+    let mem_cap = built.mem_cap.max(64 << 20);
+    let mut rt = ReferenceRuntime::new(built.variants.clone(), mem_cap)
+        .with_exec(exec)
+        .with_tracing();
+    run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
+        .unwrap_or_else(|e| panic!("[{exec:?}] host exec: {e}"));
+    RefRun { arrays, stats: rt.stats.snapshot(), trace: rt.take_trace() }
+}
+
+/// Every `.cu` kernel in the corpus, synthesized into a host program:
+/// the `-O0` interpreter run is the ground truth; every (engine ×
+/// opt-level) combination must match it bit for bit — arrays, stats
+/// and trace.
+#[test]
+fn corpus_opt_levels_observably_identical() {
+    for file in CORPUS {
+        for kernel in parse_file(file) {
+            // Small but multi-block and warp-heavy enough to exercise
+            // divergence, shared memory and the scalarized loop heads.
+            let cfg = SynthCfg { n: 192, block: 64, grid: None };
+            let build = |opt: OptLevel| {
+                let (prog, _) = synth_program(&kernel, &cfg)
+                    .unwrap_or_else(|e| panic!("{file}/{}: {e}", kernel.name));
+                spec::build_prepared_opt(&kernel.name, prog, opt)
+            };
+            let baseline = run_reference_traced(&build(OptLevel::O0), ExecMode::Interpret);
+            for opt in OptLevel::ALL {
+                let built = build(opt);
+                for exec in [ExecMode::Interpret, ExecMode::Bytecode] {
+                    let run = run_reference_traced(&built, exec);
+                    assert_eq!(
+                        baseline.arrays, run.arrays,
+                        "{file}/{}: arrays diverged at [{exec:?} {opt:?}]",
+                        kernel.name
+                    );
+                    assert_eq!(
+                        baseline.stats, run.stats,
+                        "{file}/{}: ExecStats diverged at [{exec:?} {opt:?}]",
+                        kernel.name
+                    );
+                    assert_eq!(
+                        baseline.trace, run.trace,
+                        "{file}/{}: TraceRec stream diverged at [{exec:?} {opt:?}]",
+                        kernel.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The SPMD rewrite passes must not disturb feature detection (the
+/// Table I/II coverage matrices are computed from the same kernel).
+#[test]
+fn corpus_passes_preserve_detected_features() {
+    for file in CORPUS {
+        for kernel in parse_file(file) {
+            let before = detect_features(&kernel);
+            let (folded, _) = fold::run(kernel.clone());
+            assert_eq!(before, detect_features(&folded), "{file}/{}: fold", kernel.name);
+            let (dced, _) = dce::run(folded);
+            assert_eq!(before, detect_features(&dced), "{file}/{}: dce", kernel.name);
+        }
+    }
+}
+
+/// The pipeline report reflects the requested level, and `-O2` finds
+/// scalar work on every corpus kernel (they all read parameters or
+/// geometry inside their thread loops).
+#[test]
+fn corpus_o2_scalarizes_and_reports_pipeline() {
+    for file in CORPUS {
+        for kernel in parse_file(file) {
+            let ck0 = compile_kernel_opt(&kernel, OptLevel::O0).unwrap();
+            let ck2 = compile_kernel_opt(&kernel, OptLevel::O2).unwrap();
+            assert_eq!(ck0.opt, OptLevel::O0);
+            assert_eq!(ck2.opt, OptLevel::O2);
+            assert_eq!(ck0.lowered.scalar_inst_count(), 0, "{file}/{}", kernel.name);
+            assert!(
+                ck2.lowered.scalar_inst_count() > 0,
+                "{file}/{}: -O2 found no uniform work",
+                kernel.name
+            );
+            assert!(ck0.pipeline.iter().all(|p| p.name != "uniformity"));
+            assert!(ck2.pipeline.iter().any(|p| p.name == "uniformity"));
+            assert!(ck2.pipeline.iter().any(|p| p.name == "const-fold"));
+        }
+    }
+}
+
+/// Run every block of `k` serially through the bytecode VM compiled at
+/// `opt` (or the `-O0` interpreter when `interp`). The kernel takes
+/// `(int* p, const int* q, int n)`: `p` is the mutated data buffer
+/// (returned), `q` a read-only side buffer (uniform-load bait — kept
+/// store-free so lane-serial interpretation and instruction-serial VM
+/// execution cannot legally observe different values).
+fn run_blocks(
+    k: &Kernel,
+    opt: OptLevel,
+    interp: bool,
+    grid: u32,
+    block: u32,
+    init: &[i32],
+    ro: &[i32],
+) -> (Vec<i32>, StatsSnapshot) {
+    let ck = Arc::new(compile_kernel_opt(k, opt).unwrap());
+    let mem = DeviceMemory::with_capacity(1 << 18);
+    let buf = mem.alloc(init.len().max(1) * 4);
+    mem.write_slice_i32(buf, init);
+    let qbuf = mem.alloc(ro.len().max(1) * 4);
+    mem.write_slice_i32(qbuf, ro);
+    let mut args = vec![ArgValue::Ptr(buf), ArgValue::Ptr(qbuf), ArgValue::I32(init.len() as i32)];
+    args.extend([ArgValue::I32(0); 6]);
+    let packed = Arc::new(pack(&ck.layout, &args).unwrap());
+    let launch = LaunchInfo { grid: (grid, 1), block: (block, 1), dyn_shmem: 0, packed };
+    let stats = ExecStats::new();
+    let f: Box<dyn BlockFn> = if interp {
+        Box::new(CirBlockFn::with_stats(ck.clone(), stats.clone()))
+    } else {
+        Box::new(BytecodeBlockFn::with_stats(ck.clone(), stats.clone()))
+    };
+    let mut scratch = BlockScratch::new();
+    for b in 0..launch.total_blocks() {
+        f.run(b, &launch, &mem, &mut scratch);
+    }
+    (mem.read_vec_i32(buf, init.len()), stats.snapshot())
+}
+
+/// Randomized kernels mixing uniform work (scalarization bait: loop
+/// bounds over params, block-uniform guards, uniform loads) with lane
+/// divergence (tid guards, break/continue, early return): the bytecode
+/// VM at every opt level must match the `-O0` interpreter bit for bit
+/// on memory and stats.
+#[test]
+fn random_kernels_opt_levels_agree() {
+    use cupbop::ir::*;
+
+    #[derive(Clone, Copy)]
+    enum Op {
+        /// uniform trip count over the n param — scalar loop head
+        UniformLoopAdd { c: i32 },
+        /// q[0] read by every lane — scalar load (q is never stored)
+        UniformLoadAdd,
+        /// block-uniform guard (bidx % 2 == r)
+        UniformGuard { r: i32, c: i32 },
+        /// tid guard — divergence
+        TidGuard { modk: i32, c: i32 },
+        /// varying trip count with continue — parked lanes
+        DivergentLoop { modk: i32 },
+        /// uniform loop containing a tid break — taints the loop var
+        UniformLoopTidBreak,
+        Barrier,
+        EarlyReturn { cutoff: i32 },
+    }
+
+    fn build(ops: &[Op]) -> Kernel {
+        let mut b = KernelBuilder::new("rand_opt");
+        let p = b.ptr_param("p", Ty::I32);
+        let q = b.ptr_param("q", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        let t = b.assign(tid_x());
+        for op in ops {
+            match *op {
+                Op::Barrier => b.sync_threads(),
+                Op::UniformLoopAdd { c } => {
+                    let p = p.clone();
+                    b.for_(c_i32(0), rem(n.clone(), c_i32(5)), c_i32(1), |bb, j| {
+                        let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                        bb.store_at(
+                            p.clone(),
+                            reg(id),
+                            add(reg(v), add(reg(j), c_i32(c))),
+                            Ty::I32,
+                        );
+                    });
+                }
+                Op::UniformLoadAdd => {
+                    let first = b.assign(at(q.clone(), c_i32(0), Ty::I32));
+                    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+                    b.store_at(p.clone(), reg(id), add(reg(v), reg(first)), Ty::I32);
+                }
+                Op::UniformGuard { r, c } => {
+                    let p = p.clone();
+                    b.if_(eq(rem(bid_x(), c_i32(2)), c_i32(r)), |bb| {
+                        let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                        bb.store_at(p.clone(), reg(id), add(reg(v), c_i32(c)), Ty::I32);
+                    });
+                }
+                Op::TidGuard { modk, c } => {
+                    let p = p.clone();
+                    b.if_(eq(rem(reg(t), c_i32(modk)), c_i32(0)), |bb| {
+                        let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                        bb.store_at(p.clone(), reg(id), add(reg(v), c_i32(c)), Ty::I32);
+                    });
+                }
+                Op::DivergentLoop { modk } => {
+                    let p = p.clone();
+                    b.for_(c_i32(0), rem(reg(t), c_i32(modk)), c_i32(1), |bb, j| {
+                        bb.if_(eq(rem(reg(j), c_i32(2)), c_i32(1)), |bb2| bb2.cont());
+                        let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                        bb.store_at(p.clone(), reg(id), add(reg(v), c_i32(1)), Ty::I32);
+                    });
+                }
+                Op::UniformLoopTidBreak => {
+                    let p = p.clone();
+                    b.for_(c_i32(0), c_i32(4), c_i32(1), |bb, j| {
+                        bb.if_(lt(reg(j), rem(reg(t), c_i32(3))), |bb2| bb2.brk());
+                        let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                        bb.store_at(p.clone(), reg(id), add(reg(v), c_i32(2)), Ty::I32);
+                    });
+                }
+                Op::EarlyReturn { cutoff } => {
+                    b.if_(ge(reg(t), c_i32(cutoff)), |bb| bb.ret());
+                }
+            }
+        }
+        b.build()
+    }
+
+    for_random_cases(20, 0x0CCF10A7, |rng| {
+        let bs = rng.range_usize(1, 33) as u32;
+        let grid = rng.range_usize(1, 4) as u32;
+        let nops = rng.range_usize(1, 6);
+        let ops: Vec<Op> = (0..nops)
+            .map(|_| match rng.below(8) {
+                0 => Op::UniformLoopAdd { c: rng.range_i64(-3, 4) as i32 },
+                1 => Op::UniformLoadAdd,
+                2 => Op::UniformGuard {
+                    r: rng.range_i64(0, 2) as i32,
+                    c: rng.range_i64(1, 5) as i32,
+                },
+                3 => Op::TidGuard {
+                    modk: rng.range_i64(2, 5) as i32,
+                    c: rng.range_i64(-5, 6) as i32,
+                },
+                4 => Op::DivergentLoop { modk: rng.range_i64(2, 5) as i32 },
+                5 => Op::UniformLoopTidBreak,
+                6 => Op::Barrier,
+                _ => Op::EarlyReturn { cutoff: rng.range_i64(0, 33) as i32 },
+            })
+            .collect();
+        let k = build(&ops);
+        let n = (grid * bs) as usize;
+        let init = rng.vec_i32(n, -30, 30);
+        let ro = rng.vec_i32(n.max(1), -10, 10);
+        let (base_mem, base_stats) = run_blocks(&k, OptLevel::O0, true, grid, bs, &init, &ro);
+        for opt in OptLevel::ALL {
+            let (m, s) = run_blocks(&k, opt, false, grid, bs, &init, &ro);
+            assert_eq!(base_mem, m, "memory diverged at {opt:?}");
+            assert_eq!(base_stats, s, "ExecStats diverged at {opt:?}");
+        }
+    });
+}
+
+/// `cupbop run --opt` surface: the backends accept every opt level on
+/// a real benchmark end to end (validator green).
+#[test]
+fn backends_green_at_every_opt_level() {
+    for name in ["fir", "nw", "hist"] {
+        let b = spec::by_name(name).unwrap();
+        for opt in OptLevel::ALL {
+            let built = spec::build_program_opt(&b, spec::Scale::Tiny, opt);
+            let out = spec::run_on(
+                &built,
+                Backend::CuPBoP,
+                BackendCfg { pool_size: 2, exec: ExecMode::Bytecode, ..Default::default() },
+            );
+            out.check.unwrap_or_else(|e| panic!("{name} [{opt:?}]: {e}"));
+        }
+    }
+}

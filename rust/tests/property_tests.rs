@@ -44,7 +44,11 @@ fn prop_every_block_executed_exactly_once() {
         queue.sync();
         drop(pool_t);
         for (i, hit) in hits.iter().enumerate() {
-            assert_eq!(hit.load(Ordering::SeqCst), 1, "block {i} grid={grid} pool={pool} bpf={bpf}");
+            assert_eq!(
+                hit.load(Ordering::SeqCst),
+                1,
+                "block {i} grid={grid} pool={pool} bpf={bpf}"
+            );
         }
     });
 }
@@ -226,7 +230,9 @@ fn prop_barrier_insertion_sound() {
                         _ => unreachable!(),
                     };
                     assert!(
-                        !inflight_w.contains(&r) && !inflight_w.contains(&w) && !inflight_r.contains(&w),
+                        !inflight_w.contains(&r)
+                            && !inflight_w.contains(&w)
+                            && !inflight_r.contains(&w),
                         "launch conflict not protected"
                     );
                     inflight_r.push(r);

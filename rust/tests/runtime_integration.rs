@@ -3,7 +3,9 @@
 //! launch+sync microstructure.
 
 use cupbop::compiler::{compile_kernel, ArgValue};
-use cupbop::frameworks::{BackendCfg, CupbopRuntime, DpcppRuntime, ExecMode, HipCpuRuntime, KernelVariants, PolicyMode};
+use cupbop::frameworks::{
+    BackendCfg, CupbopRuntime, DpcppRuntime, ExecMode, HipCpuRuntime, KernelVariants, PolicyMode,
+};
 use cupbop::host::{ResolvedLaunch, RuntimeApi};
 use cupbop::ir::*;
 use std::sync::Arc;

@@ -86,7 +86,12 @@ const K_ACC: usize = 2;
 fn cfg(pool: usize) -> BackendCfg {
     // small heap: the stress buffers are tiny and runtimes are created
     // per random case
-    BackendCfg { pool_size: pool, exec: ExecMode::Interpret, mem_cap: 1 << 20, ..Default::default() }
+    BackendCfg {
+        pool_size: pool,
+        exec: ExecMode::Interpret,
+        mem_cap: 1 << 20,
+        ..Default::default()
+    }
 }
 
 // ---- replayable scripts -------------------------------------------
