@@ -1,0 +1,40 @@
+// Hetero-Mark AES — each thread encrypts one 16-byte block (4 words)
+// through ten S-box + rotate + round-key-xor rounds. The word rotation
+// is a `__device__` helper the frontend inlines. Transliterates
+// benchsuite::heteromark::aes::kernel exactly (ROUNDS = 10).
+#include <cuda_runtime.h>
+
+#define ROUNDS 10
+
+__device__ int rotl8(int w) { return (w << 8) | ((w >> 24) & 0xff); }
+
+__global__ void aes_encrypt(int* data, int* sbox, int* round_keys,
+                            int nblocks) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < nblocks) {
+        int base = gid * 4;
+        int w0 = data[base + 0];
+        int w1 = data[base + 1];
+        int w2 = data[base + 2];
+        int w3 = data[base + 3];
+        for (int r = 0; r < ROUNDS; r += 1) {
+            int rk = round_keys[r];
+            int o0 = w0;
+            int o1 = w1;
+            int o2 = w2;
+            int o3 = w3;
+            int s0 = sbox[o0 & 0xff];
+            w0 = (s0 ^ rotl8(o1)) ^ rk;
+            int s1 = sbox[o1 & 0xff];
+            w1 = (s1 ^ rotl8(o2)) ^ rk;
+            int s2 = sbox[o2 & 0xff];
+            w2 = (s2 ^ rotl8(o3)) ^ rk;
+            int s3 = sbox[o3 & 0xff];
+            w3 = (s3 ^ rotl8(o0)) ^ rk;
+        }
+        data[base + 0] = w0;
+        data[base + 1] = w1;
+        data[base + 2] = w2;
+        data[base + 3] = w3;
+    }
+}

@@ -1,0 +1,25 @@
+// Hetero-Mark EP — evolutionary-programming fitness evaluation
+// (Listing 9, lines 1-7): nested polynomial loop where the power is
+// accumulated by repeated multiplication. Transliterates
+// benchsuite::heteromark::ep::kernel exactly (NUM_VARS = 16).
+#include <cuda_runtime.h>
+
+#define NUM_VARS 16
+
+__global__ void ep_fitness(double* params, double* fitness_function,
+                           double* fitness, int population) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < population) {
+        double acc = 0.0;
+        int base = gid * NUM_VARS;
+        for (int j = 0; j < NUM_VARS; j += 1) {
+            double powv = 1.0;
+            double pj = params[base + j];
+            for (int k = 0; k < j + 1; k += 1) {
+                powv = powv * pj;
+            }
+            acc = acc + powv * fitness_function[j];
+        }
+        fitness[gid] = acc;
+    }
+}

@@ -1,0 +1,21 @@
+// Hetero-Mark GA — gene alignment: each thread scores the query
+// pattern against positions walked with stride = total threads (the
+// GPU-coalesced layout). Transliterates benchsuite::heteromark::ga::
+// kernel(strided = true) exactly (PATTERN = 64).
+#include <cuda_runtime.h>
+
+#define PATTERN 64
+
+__global__ void ga_match(int* target, int* pattern, int* scores, int npos) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    int nthreads = blockDim.x * gridDim.x;
+    for (int pos = gid; pos < npos; pos += nthreads) {
+        int score = 0;
+        for (int j = 0; j < PATTERN; j += 1) {
+            if (target[pos + j] == pattern[j]) {
+                score = score + 1;
+            }
+        }
+        scores[pos] = score;
+    }
+}

@@ -1,0 +1,23 @@
+// Hetero-Mark GA, reordered variant (Table VI): contiguous per-thread
+// position ranges instead of the strided walk. Transliterates
+// benchsuite::heteromark::ga::kernel(strided = false) exactly.
+#include <cuda_runtime.h>
+
+#define PATTERN 64
+
+__global__ void ga_match(int* target, int* pattern, int* scores, int npos) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    int nthreads = blockDim.x * gridDim.x;
+    int chunk = (npos + nthreads - 1) / nthreads;
+    int lo = gid * chunk;
+    int hi = min(lo + chunk, npos);
+    for (int pos = lo; pos < hi; pos += 1) {
+        int score = 0;
+        for (int j = 0; j < PATTERN; j += 1) {
+            if (target[pos + j] == pattern[j]) {
+                score = score + 1;
+            }
+        }
+        scores[pos] = score;
+    }
+}

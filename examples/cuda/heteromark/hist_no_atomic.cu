@@ -1,0 +1,18 @@
+// Hetero-Mark HIST, no-atomic ablation (Table V): plain load/store
+// instead of atomicAdd — racy by construction, the benchmark's checker
+// only validates plausibility. Transliterates benchsuite::heteromark::
+// hist::kernel(strided = true, atomic = false) exactly.
+#include <cuda_runtime.h>
+
+#define BINS 256
+
+__global__ void hist(int* pixels, int* bins, int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    int nthreads = blockDim.x * gridDim.x;
+    for (int i = gid; i < n; i += nthreads) {
+        int v = pixels[i];
+        int bin = v % BINS;
+        int old = bins[bin];
+        bins[bin] = old + 1;
+    }
+}

@@ -1,0 +1,20 @@
+// Hetero-Mark HIST, reordered variant (Fig 10(c), Table VI): each
+// thread scans a contiguous chunk instead of the strided walk.
+// Transliterates benchsuite::heteromark::hist::kernel(strided = false,
+// atomic = true) exactly.
+#include <cuda_runtime.h>
+
+#define BINS 256
+
+__global__ void hist(int* pixels, int* bins, int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    int nthreads = blockDim.x * gridDim.x;
+    int chunk = (n + nthreads - 1) / nthreads;
+    int lo = gid * chunk;
+    int hi = min(lo + chunk, n);
+    for (int i = lo; i < hi; i += 1) {
+        int v = pixels[i];
+        int bin = v % BINS;
+        atomicAdd(&bins[bin], 1);
+    }
+}

@@ -1,0 +1,22 @@
+// Hetero-Mark PR — PageRank power iteration over a fixed-out-degree
+// graph; the host ping-pongs rank buffers. Transliterates
+// benchsuite::heteromark::pr::kernel exactly. Note the damping
+// complement literal: the spec computes (1.0f - 0.85f) in f32, which
+// is 0.14999998f, not 0.15f — bit-equal outputs require the exact
+// constant.
+#include <cuda_runtime.h>
+
+#define DEGREE 8
+
+__global__ void pagerank(int* src, float* rank_in, float* rank_out, int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        float acc = 0.0f;
+        int base = gid * DEGREE;
+        for (int e = 0; e < DEGREE; e += 1) {
+            int v = src[base + e];
+            acc = acc + rank_in[v] / 8.0f;
+        }
+        rank_out[gid] = 0.14999998f + 0.85f * acc;
+    }
+}

@@ -1,0 +1,51 @@
+// Rodinia backprop — layer forward pass: one block per hidden unit,
+// strided partial sums into a shared tile, then an unrolled
+// log2(64)-round tree reduction with a barrier per round, and a
+// sigmoid on thread 0 (a `__device__` helper, inlined by the
+// frontend). Transliterates benchsuite::rodinia::misc::
+// backprop_kernel exactly (BP_BLOCK = 64).
+#include <cuda_runtime.h>
+
+#define BP_BLOCK 64
+
+__device__ float sigmoidf(float x) { return 1.0f / (1.0f + expf(-x)); }
+
+extern "C" __global__ void bpnn_layerforward(float* input, float* weights,
+                                             float* hidden, int n_in) {
+    __shared__ float partial[BP_BLOCK];
+    int tx = threadIdx.x;
+    int j = blockIdx.x;
+    float acc = 0.0f;
+    for (int i = tx; i < n_in; i += blockDim.x) {
+        acc = acc + weights[j * n_in + i] * input[i];
+    }
+    partial[tx] = acc;
+    __syncthreads();
+    if (tx < 32) {
+        partial[tx] = partial[tx] + partial[tx + 32];
+    }
+    __syncthreads();
+    if (tx < 16) {
+        partial[tx] = partial[tx] + partial[tx + 16];
+    }
+    __syncthreads();
+    if (tx < 8) {
+        partial[tx] = partial[tx] + partial[tx + 8];
+    }
+    __syncthreads();
+    if (tx < 4) {
+        partial[tx] = partial[tx] + partial[tx + 4];
+    }
+    __syncthreads();
+    if (tx < 2) {
+        partial[tx] = partial[tx] + partial[tx + 2];
+    }
+    __syncthreads();
+    if (tx < 1) {
+        partial[tx] = partial[tx] + partial[tx + 1];
+    }
+    __syncthreads();
+    if (tx == 0) {
+        hidden[j] = sigmoidf(partial[0]);
+    }
+}

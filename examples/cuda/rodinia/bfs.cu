@@ -1,0 +1,38 @@
+// Rodinia BFS — frontier expansion with the classic two-kernel +
+// host-flag convergence loop (graph1MW_6 shape: fixed out-degree 6).
+// Transliterates benchsuite::rodinia::graph::{bfs_kernel1,bfs_kernel2}
+// exactly; the host driver launches both in a while-flag loop.
+#include <cuda_runtime.h>
+
+#define DEGREE 6
+
+__global__ void bfs_kernel1(int* edges, int* mask, int* updating,
+                            int* visited, int* cost, int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        if (mask[gid] != 0) {
+            mask[gid] = 0;
+            int my_cost = cost[gid];
+            for (int e = 0; e < DEGREE; e += 1) {
+                int nb = edges[gid * DEGREE + e];
+                if (visited[nb] == 0) {
+                    cost[nb] = my_cost + 1;
+                    updating[nb] = 1;
+                }
+            }
+        }
+    }
+}
+
+__global__ void bfs_kernel2(int* mask, int* updating, int* visited,
+                            int* flag, int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        if (updating[gid] != 0) {
+            mask[gid] = 1;
+            visited[gid] = 1;
+            updating[gid] = 0;
+            flag[0] = 1;
+        }
+    }
+}

@@ -1,0 +1,27 @@
+// Rodinia b+tree findK — batched point queries descending an
+// array-packed k-ary tree (the `extern "C"` host-code row of Table
+// II). Transliterates benchsuite::rodinia::graph::btree_kernel exactly
+// (FANOUT = 8, three levels).
+#include <cuda_runtime.h>
+
+#define FANOUT 8
+#define LEVELS 3
+
+extern "C" __global__ void findK(int* keys, int* payload, int* queries,
+                                 int* answers, int nq) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < nq) {
+        int q = queries[gid];
+        int node = 0;
+        for (int l = 0; l < LEVELS; l += 1) {
+            int child = 0;
+            for (int s = 0; s < FANOUT - 1; s += 1) {
+                if (q >= keys[node * FANOUT + s]) {
+                    child = s + 1;
+                }
+            }
+            node = node * FANOUT + (child + 1);
+        }
+        answers[gid] = payload[node];
+    }
+}

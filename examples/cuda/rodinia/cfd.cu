@@ -1,0 +1,21 @@
+// Rodinia cfd — Euler solver flux step over an unstructured mesh with
+// fixed neighbour count (the cuGetErrorName driver-API row of Table
+// II). Transliterates benchsuite::rodinia::misc::cfd_kernel exactly.
+#include <cuda_runtime.h>
+
+#define NNB 4
+
+__global__ void cuda_compute_flux(float* rho, int* nbr, float* out, int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        float c = rho[gid];
+        float flux = 0.0f;
+        for (int e = 0; e < NNB; e += 1) {
+            int nb = nbr[gid * NNB + e];
+            if (nb >= 0) {
+                flux = flux + (rho[nb] - c);
+            }
+        }
+        out[gid] = c + 0.2f * flux;
+    }
+}

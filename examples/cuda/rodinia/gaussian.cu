@@ -1,0 +1,26 @@
+// Rodinia gaussian — forward elimination with Fan1/Fan2 kernels
+// launched once per pivot row (the paper's coarse-grained-fetching
+// case study). Transliterates benchsuite::rodinia::linalg::
+// {fan1_kernel,fan2_kernel} exactly (Fan2 runs on a 2-D grid).
+#include <cuda_runtime.h>
+
+__global__ void Fan1(float* m, float* a, int n, int t) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    int i = gid + (t + 1);
+    if (i < n) {
+        m[i * n + t] = a[i * n + t] / a[t * n + t];
+    }
+}
+
+__global__ void Fan2(float* m, float* a, float* rhs, int n, int t) {
+    int gx = blockIdx.x * blockDim.x + threadIdx.x;
+    int gy = blockIdx.y * blockDim.y + threadIdx.y;
+    int i = gy + (t + 1);
+    int j = gx;
+    if (i < n && j < n) {
+        a[i * n + j] = a[i * n + j] - m[i * n + t] * a[t * n + j];
+        if (j == 0) {
+            rhs[i] = rhs[i] - m[i * n + t] * rhs[t];
+        }
+    }
+}

@@ -1,0 +1,26 @@
+// Rodinia hotspot3D — plain 3-D thermal stencil walking z planes in a
+// thread-local loop, neighbours clamped to the centre at the domain
+// boundary via ternaries. Transliterates benchsuite::rodinia::
+// stencils::hotspot3d_kernel exactly.
+#include <cuda_runtime.h>
+
+__global__ void hotspot3D(float* t_in, float* t_out, int nx, int nz) {
+    int gx = blockIdx.x * blockDim.x + threadIdx.x;
+    int gy = blockIdx.y * blockDim.y + threadIdx.y;
+    if (gx < nx && gy < nx) {
+        for (int z = 0; z < nz; z += 1) {
+            int plane = nx * nx * z;
+            int idx = plane + (gy * nx + gx);
+            float c = t_in[idx];
+            t_out[idx] = c
+                + 0.05f
+                    * ((gx > 0 ? t_in[idx + (-1)] : c)
+                        + (gx < nx - 1 ? t_in[idx + 1] : c)
+                        + ((gy > 0 ? t_in[idx + (-nx)] : c)
+                            + (gy < nx - 1 ? t_in[idx + nx] : c))
+                        + ((z > 0 ? t_in[idx + (-(nx * nx))] : c)
+                            + (z < nz - 1 ? t_in[idx + nx * nx] : c))
+                        - 6.0f * c);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+// Rodinia huffman — byte-frequency histogram in *dynamic* shared
+// memory with a per-block merge (the `extern shared memory
+// definition` row of Table II). Transliterates benchsuite::rodinia::
+// misc::huffman_kernel exactly (256 bins).
+#include <cuda_runtime.h>
+
+#define BINS 256
+
+__global__ void histo_kernel(int* data, int* freq, int n) {
+    extern __shared__ int local[];
+    int tx = threadIdx.x;
+    for (int i = tx; i < BINS; i += blockDim.x) {
+        local[i] = 0;
+    }
+    __syncthreads();
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    int stride = blockDim.x * gridDim.x;
+    for (int i = gid; i < n; i += stride) {
+        atomicAdd(&local[data[i] & 0xff], 1);
+    }
+    __syncthreads();
+    for (int i = tx; i < BINS; i += blockDim.x) {
+        atomicAdd(&freq[i], local[i]);
+    }
+}

@@ -1,0 +1,22 @@
+// Rodinia LUD — unblocked column-elimination LU: per-pivot diagonal
+// scale + 2-D trailing update. Transliterates benchsuite::rodinia::
+// linalg::{lud_diag_kernel,lud_update_kernel} exactly.
+#include <cuda_runtime.h>
+
+__global__ void lud_diagonal(float* a, int n, int t) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    int i = gid + (t + 1);
+    if (i < n) {
+        a[i * n + t] = a[i * n + t] / a[t * n + t];
+    }
+}
+
+__global__ void lud_internal(float* a, int n, int t) {
+    int gx = blockIdx.x * blockDim.x + threadIdx.x;
+    int gy = blockIdx.y * blockDim.y + threadIdx.y;
+    int i = gy + (t + 1);
+    int j = gx + (t + 1);
+    if (i < n && j < n) {
+        a[i * n + j] = a[i * n + j] - a[i * n + t] * a[t * n + j];
+    }
+}

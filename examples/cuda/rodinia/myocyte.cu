@@ -1,0 +1,14 @@
+// Rodinia myocyte — cardiac ODE integration: thousands of *tiny*
+// launches (grid 2, block 32); the aggressive-fetching case study of
+// §V-B. Transliterates benchsuite::rodinia::misc::myocyte_kernel
+// exactly (one v += dt * (p*v - v^3) step per launch).
+#include <cuda_runtime.h>
+
+__global__ void myocyte_solver(float* y, float* params, int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        float v = y[gid];
+        float p = params[gid];
+        y[gid] = v + 0.001f * (p * v - v * (v * v));
+    }
+}

@@ -1,0 +1,14 @@
+// Rodinia nn — nearest neighbours: per-record euclidean-ish distance
+// against a query point. Transliterates benchsuite::rodinia::misc::
+// nn_kernel exactly.
+#include <cuda_runtime.h>
+
+__global__ void euclid(float* lat, float* lng, float* dist, int n,
+                       float qlat, float qlng) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        float a = lat[gid] - qlat;
+        float o = lng[gid] - qlng;
+        dist[gid] = sqrtf(a * a + o * o);
+    }
+}

@@ -1,0 +1,20 @@
+// Rodinia Needleman-Wunsch — one anti-diagonal DP step per launch
+// (cells with i+j == diag+2 in 1-based indexing). Transliterates
+// benchsuite::rodinia::linalg::nw_kernel exactly (penalty 10).
+#include <cuda_runtime.h>
+
+#define PENALTY 10
+
+__global__ void needle_diag(int* score, int* sim, int n, int diag) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    int lo = max(0, diag - (n - 1));
+    int i = gid + lo + 1;
+    int j = diag - (i - 1) + 1;
+    int np1 = n + 1;
+    if (i <= n && j >= 1 && j <= n) {
+        score[i * np1 + j] =
+            max(score[(i - 1) * np1 + (j - 1)] + sim[(i - 1) * n + (j - 1)],
+                max(score[(i - 1) * np1 + j] - PENALTY,
+                    score[i * np1 + (j - 1)] - PENALTY));
+    }
+}

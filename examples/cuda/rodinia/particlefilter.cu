@@ -1,0 +1,23 @@
+// Rodinia particlefilter — likelihood update with a global atomic
+// weight sum, then normalisation. Transliterates benchsuite::rodinia::
+// misc::{pf_weight_kernel,pf_normalize_kernel} exactly (the atomicAdd
+// target is the bare `sum` pointer, as in the original).
+#include <cuda_runtime.h>
+
+__global__ void likelihood_kernel(float* xs, float* w, float* sum, int n,
+                                  float obs) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        float d = xs[gid] - obs;
+        float nw = w[gid] * expf(-(d * d));
+        w[gid] = nw;
+        atomicAdd(sum, nw);
+    }
+}
+
+__global__ void normalize_weights(float* w, float* sum, int n) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        w[gid] = w[gid] / sum[0];
+    }
+}

@@ -1,0 +1,17 @@
+// Rodinia pathfinder — DP row sweep: each cell takes the min of its
+// three upper neighbours (clamped at the edges) plus the wall cost.
+// Transliterates benchsuite::rodinia::stencils::pathfinder_kernel
+// exactly.
+#include <cuda_runtime.h>
+
+__global__ void dynproc_kernel(int* wall, int* src, int* dst, int cols,
+                               int row) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < cols) {
+        int c = src[gid];
+        dst[gid] = wall[row * cols + gid]
+            + min(c,
+                  min((gid > 0 ? src[gid - 1] : c),
+                      (gid < cols - 1 ? src[gid + 1] : c)));
+    }
+}

@@ -1,0 +1,47 @@
+// Rodinia srad — speckle-reducing anisotropic diffusion: srad_cuda_1
+// computes the per-cell diffusion coefficient, srad_cuda_2 applies the
+// divergence update; the host ping-pongs image buffers between
+// launches. Transliterates benchsuite::rodinia::stencils::
+// {srad1_kernel,srad2_kernel} exactly (lambda/4 = 0.125).
+#include <cuda_runtime.h>
+
+__global__ void srad_cuda_1(float* img, float* coef, int n, float q0sqr) {
+    int gx = blockIdx.x * blockDim.x + threadIdx.x;
+    int gy = blockIdx.y * blockDim.y + threadIdx.y;
+    if (gx < n && gy < n) {
+        int idx = gy * n + gx;
+        float c = img[idx];
+        float dn = (gx > 0 ? img[idx + (-1)] : c)
+            + (gx < n - 1 ? img[idx + 1] : c)
+            + ((gy > 0 ? img[idx + (-n)] : c) + (gy < n - 1 ? img[idx + n] : c))
+            - 4.0f * c;
+        float g2 = dn * dn / max(c * c, 1e-6f);
+        float lap = dn / max(c, 1e-6f);
+        float qsqr = (0.5f * g2 - 0.0625f * (lap * lap))
+            / max((1.0f + 0.25f * lap) * (1.0f + 0.25f * lap), 1e-6f);
+        coef[idx] = max(0.0f,
+                        min(1.0f,
+                            1.0f
+                                / (1.0f
+                                    + (qsqr - q0sqr)
+                                        / (q0sqr * (1.0f + q0sqr)))));
+    }
+}
+
+__global__ void srad_cuda_2(float* img, float* coef, float* out, int n) {
+    int gx = blockIdx.x * blockDim.x + threadIdx.x;
+    int gy = blockIdx.y * blockDim.y + threadIdx.y;
+    if (gx < n && gy < n) {
+        int idx = gy * n + gx;
+        float c = img[idx];
+        float cc = coef[idx];
+        out[idx] = c
+            + 0.125f
+                * ((gx < n - 1 ? coef[idx + 1] : cc)
+                        * ((gx < n - 1 ? img[idx + 1] : c) - c)
+                    + cc * ((gx > 0 ? img[idx + (-1)] : c) - c)
+                    + ((gy < n - 1 ? coef[idx + n] : cc)
+                            * ((gy < n - 1 ? img[idx + n] : c) - c)
+                        + cc * ((gy > 0 ? img[idx + (-n)] : c) - c)));
+    }
+}

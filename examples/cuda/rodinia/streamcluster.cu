@@ -1,0 +1,17 @@
+// Rodinia streamcluster — pgain-style assignment cost against a
+// candidate centre. Transliterates benchsuite::rodinia::misc::
+// sc_kernel exactly.
+#include <cuda_runtime.h>
+
+__global__ void pgain_kernel(float* pts, float* center, float* weight,
+                             float* cost, float* delta, int n, int dim) {
+    int gid = threadIdx.x + blockIdx.x * blockDim.x;
+    if (gid < n) {
+        float acc = 0.0f;
+        for (int d = 0; d < dim; d += 1) {
+            float x2 = pts[gid * dim + d] - center[d];
+            acc = acc + x2 * x2;
+        }
+        delta[gid] = acc * weight[gid] - cost[gid];
+    }
+}

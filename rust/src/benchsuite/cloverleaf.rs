@@ -484,6 +484,7 @@ pub fn benchmark() -> Benchmark {
         build: Some(build),
         device_artifact: Some("cloverleaf"),
         paper_secs: None,
+        frontend_source: None,
     }
 }
 

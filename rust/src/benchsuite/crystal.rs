@@ -274,6 +274,7 @@ pub fn benchmarks() -> Vec<Benchmark> {
         build: Some(query_build(Plan::FilterAgg { lo, hi })),
         device_artifact: None,
         paper_secs: None,
+        frontend_source: None,
     };
     let qj = |name, groups| Benchmark {
         name,
@@ -283,6 +284,7 @@ pub fn benchmarks() -> Vec<Benchmark> {
         build: Some(query_build(Plan::JoinAgg { groups })),
         device_artifact: None,
         paper_secs: None,
+        frontend_source: None,
     };
     vec![
         q1("q11", 0, 64),

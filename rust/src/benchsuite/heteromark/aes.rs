@@ -8,7 +8,7 @@
 //! average-fetching case), which this preserves. DESIGN.md §Substitutions
 //! records the simplification.
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::HostArg;
@@ -151,5 +151,6 @@ pub fn benchmark() -> Benchmark {
             cupbop: 50.107,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/aes.cu")),
     }
 }

@@ -5,7 +5,7 @@
 //! in the paper) — the Table V poster child for aggressive
 //! coarse-grained fetching.
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::HostArg;
@@ -145,5 +145,6 @@ pub fn benchmark() -> Benchmark {
             cupbop: 2.74,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/bs.cu")),
     }
 }

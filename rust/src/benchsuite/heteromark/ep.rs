@@ -7,7 +7,7 @@
 //! `vectorized` closure using a closed-form `powi` that the paper's
 //! Table IV shows as DPC++'s ~10x win on EP.
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_f64, pick, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::HostArg;
@@ -149,5 +149,6 @@ pub fn benchmark() -> Benchmark {
             cupbop: 28.844,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/ep.cu")),
     }
 }

@@ -8,7 +8,7 @@
 //! kernel writes `d_out`) and before each H2D over `d_in` (the in-
 //! flight kernel reads it).
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{pick, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::{HostArg, HostOp};
@@ -156,5 +156,6 @@ pub fn benchmark() -> Benchmark {
             cupbop: 3.872,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/fir.cu")),
     }
 }

@@ -7,7 +7,7 @@
 //! fetching loses badly. A `ga-reordered` variant (contiguous per-
 //! thread position ranges) feeds Table VI.
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::HostArg;
@@ -134,6 +134,7 @@ pub fn benchmark() -> Benchmark {
             cupbop: 1.959,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/ga.cu")),
     }
 }
 
@@ -146,5 +147,6 @@ pub fn benchmark_reordered() -> Benchmark {
         build: Some(|s| build_variant(s, false)),
         device_artifact: None,
         paper_secs: None,
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/ga_reordered.cu")),
     }
 }

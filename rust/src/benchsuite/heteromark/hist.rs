@@ -11,7 +11,7 @@
 //! * `hist-reordered`  — the Fig 10(c) reordering: each thread scans a
 //!   contiguous chunk (used for Table VI's LLC comparison).
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::HostArg;
@@ -168,6 +168,7 @@ pub fn benchmark() -> Benchmark {
             cupbop: 2.78,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/hist.cu")),
     }
 }
 
@@ -180,6 +181,7 @@ pub fn benchmark_no_atomic() -> Benchmark {
         build: Some(|s| build_variant(s, true, false)),
         device_artifact: None,
         paper_secs: None,
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/hist_no_atomic.cu")),
     }
 }
 
@@ -192,5 +194,6 @@ pub fn benchmark_reordered() -> Benchmark {
         build: Some(|s| build_variant(s, false, true)),
         device_artifact: None,
         paper_secs: None,
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/hist_reordered.cu")),
     }
 }

@@ -7,7 +7,7 @@
 //! cache-hostile walk on CPUs (§VI-C). DPC++ vectorizes the inner
 //! distance loop; LLVM does not (the paper's Table IV kmeans row).
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::HostArg;
@@ -168,5 +168,6 @@ pub fn benchmark() -> Benchmark {
             cupbop: 5.165,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/kmeans.cu")),
     }
 }

@@ -27,6 +27,7 @@ fn bst() -> Benchmark {
         build: None,
         device_artifact: None,
         paper_secs: None,
+        frontend_source: None,
     }
 }
 
@@ -39,6 +40,7 @@ fn knn() -> Benchmark {
         build: None,
         device_artifact: None,
         paper_secs: None,
+        frontend_source: None,
     }
 }
 
@@ -51,6 +53,7 @@ fn be() -> Benchmark {
         build: None,
         device_artifact: None,
         paper_secs: None,
+        frontend_source: None,
     }
 }
 

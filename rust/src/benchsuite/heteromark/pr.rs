@@ -5,7 +5,7 @@
 //! rank buffers. Moderate per-thread work, bandwidth-bound — one of
 //! the Fig 9 kernels whose CPU dots sit far under the roofline.
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_f32, pick, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::{HostArg, HostOp, LaunchOp};
@@ -141,5 +141,6 @@ pub fn benchmark() -> Benchmark {
             cupbop: 4.783,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/heteromark/pr.cu")),
     }
 }

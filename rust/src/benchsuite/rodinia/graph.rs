@@ -1,6 +1,6 @@
 //! Rodinia graph benchmarks: bfs, b+tree.
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_i32, pick, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::{HostArg, HostOp, LaunchOp};
@@ -229,6 +229,7 @@ pub fn bfs() -> Benchmark {
             cupbop: 1.136,
             openmp: Some(1.365),
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/bfs.cu")),
     }
 }
 
@@ -354,5 +355,6 @@ pub fn btree() -> Benchmark {
             cupbop: 2.135,
             openmp: Some(1.56),
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/btree.cu")),
     }
 }

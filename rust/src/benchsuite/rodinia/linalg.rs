@@ -1,6 +1,6 @@
 //! Rodinia linear-algebra benchmarks: gaussian, lud, nw.
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_f32, check_i32, pick, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::{HostArg, HostOp, LaunchOp};
@@ -219,6 +219,7 @@ pub fn gaussian() -> Benchmark {
             cupbop: 1.669,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/gaussian.cu")),
     }
 }
 
@@ -351,6 +352,7 @@ pub fn lud() -> Benchmark {
             cupbop: 1.164,
             openmp: Some(0.082),
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/lud.cu")),
     }
 }
 
@@ -513,5 +515,6 @@ pub fn nw() -> Benchmark {
             cupbop: 1.589,
             openmp: Some(0.477),
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/nw.cu")),
     }
 }

@@ -1,7 +1,7 @@
 //! Rodinia miscellaneous benchmarks: backprop, huffman, myocyte, nn,
 //! particlefilter, streamcluster, cfd.
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_f32, check_i32, pick, ProgBuilder};
 use crate::host::{HostArg, HostOp, LaunchOp};
 use crate::ir::{self, *};
@@ -106,6 +106,7 @@ pub fn backprop() -> Benchmark {
             cupbop: 1.964,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/backprop.cu")),
     }
 }
 
@@ -183,6 +184,7 @@ pub fn huffman() -> Benchmark {
         build: Some(huffman_build),
         device_artifact: None,
         paper_secs: None,
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/huffman.cu")),
     }
 }
 
@@ -260,6 +262,7 @@ pub fn myocyte() -> Benchmark {
             cupbop: 0.151,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/myocyte.cu")),
     }
 }
 
@@ -343,6 +346,7 @@ pub fn nn() -> Benchmark {
             cupbop: 1.309,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/nn.cu")),
     }
 }
 
@@ -449,6 +453,7 @@ pub fn particlefilter() -> Benchmark {
             cupbop: 0.833,
             openmp: Some(0.702),
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/particlefilter.cu")),
     }
 }
 
@@ -553,6 +558,7 @@ pub fn streamcluster() -> Benchmark {
             cupbop: 18.435,
             openmp: Some(13.977),
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/streamcluster.cu")),
     }
 }
 
@@ -643,5 +649,6 @@ pub fn cfd() -> Benchmark {
         build: Some(cfd_build),
         device_artifact: None,
         paper_secs: None,
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/cfd.cu")),
     }
 }

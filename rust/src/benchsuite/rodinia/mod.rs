@@ -28,6 +28,7 @@ fn spec_only(
         build: None,
         device_artifact: None,
         paper_secs: None,
+        frontend_source: None,
     }
 }
 

@@ -1,6 +1,6 @@
 //! Rodinia stencil benchmarks: hotspot, hotspot3D, pathfinder, srad.
 
-use super::super::spec::{BenchProgram, Benchmark, PaperRow, Scale, Suite};
+use super::super::spec::{BenchProgram, Benchmark, FrontendSource, PaperRow, Scale, Suite};
 use super::super::util::{check_f32, PackedArgs, ProgBuilder};
 use crate::exec::NativeBlockFn;
 use crate::host::{HostArg, HostOp, LaunchOp};
@@ -209,6 +209,7 @@ pub fn hotspot() -> Benchmark {
             cupbop: 1.072,
             openmp: Some(1.11),
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/hotspot.cu")),
     }
 }
 
@@ -336,6 +337,7 @@ pub fn hotspot3d() -> Benchmark {
             cupbop: 1.269,
             openmp: Some(1.262),
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/hotspot3d.cu")),
     }
 }
 
@@ -471,6 +473,7 @@ pub fn pathfinder() -> Benchmark {
             cupbop: 2.359,
             openmp: None,
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/pathfinder.cu")),
     }
 }
 
@@ -697,5 +700,6 @@ pub fn srad() -> Benchmark {
             cupbop: 2.886,
             openmp: Some(2.474),
         }),
+        frontend_source: Some(FrontendSource("examples/cuda/rodinia/srad.cu")),
     }
 }

@@ -73,6 +73,23 @@ pub struct BenchProgram {
     pub mem_cap: usize,
 }
 
+/// Repo-relative path of a benchmark's real-CUDA source twin under
+/// `examples/cuda/`. The conformance sweep
+/// (`tests/frontend_conformance.rs`) compiles the `.cu` through the
+/// frontend, swaps the parsed kernels into the benchmark (matched by
+/// kernel name) and demands bit-equal Reference outputs plus identical
+/// `ExecStats` vs the hand-built CIR spec — the paper's "unmodified
+/// CUDA source" claim as an executable artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrontendSource(pub &'static str);
+
+impl FrontendSource {
+    /// Absolute path, anchored at the workspace root above `rust/`.
+    pub fn resolve(&self) -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(self.0)
+    }
+}
+
 /// Static benchmark descriptor — one Table II row.
 pub struct Benchmark {
     pub name: &'static str,
@@ -87,6 +104,8 @@ pub struct Benchmark {
     pub device_artifact: Option<&'static str>,
     /// paper-reported end-to-end seconds (Table IV), for shape checks
     pub paper_secs: Option<PaperRow>,
+    /// the benchmark's `.cu` source twin, when one is bundled
+    pub frontend_source: Option<FrontendSource>,
 }
 
 /// Table IV row (seconds) — CUDA / DPC++ / HIP-CPU / CuPBoP / OpenMP.

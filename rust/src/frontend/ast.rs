@@ -118,8 +118,17 @@ impl ExprAst {
 #[derive(Debug, Clone, PartialEq)]
 pub enum StmtAst {
     Decl { ty: CTy, name: String, init: Option<ExprAst>, span: Span },
-    /// `__shared__ T name[N];` / `extern __shared__ T name[];`
-    SharedDecl { ty: CTy, name: String, len: usize, dynamic: bool, span: Span },
+    /// `__shared__ T name[N];` / `__shared__ T name[R][C];` /
+    /// `extern __shared__ T name[];` — `cols` is `Some` for the 2-D
+    /// form (`len` then counts rows; storage is flattened row-major).
+    SharedDecl {
+        ty: CTy,
+        name: String,
+        len: usize,
+        cols: Option<usize>,
+        dynamic: bool,
+        span: Span,
+    },
     /// `x = e` / `x += e` / `p[i] = e` / `p[i] += e` (op = compound op)
     Assign { target: ExprAst, op: Option<CBinOp>, value: ExprAst, span: Span },
     /// Expression statement — must be a void-returning builtin call
@@ -155,4 +164,27 @@ pub struct KernelAst {
     pub params: Vec<ParamAst>,
     pub body: Vec<StmtAst>,
     pub span: Span,
+}
+
+/// A `__device__` helper function. The supported shape is a pure
+/// expression function — `__device__ T name(params) { return expr; }`
+/// — which sema type-checks against the declared signature and the
+/// emitter inlines at every call site (tree substitution, so the
+/// inlined CIR is identical to writing the expression out by hand).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceFnAst {
+    pub name: String,
+    pub params: Vec<ParamAst>,
+    pub ret: CTy,
+    /// The single `return` expression.
+    pub body: ExprAst,
+    pub span: Span,
+}
+
+/// A parsed translation unit: `__device__` helpers + `__global__`
+/// kernels, in source order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnitAst {
+    pub device_fns: Vec<DeviceFnAst>,
+    pub kernels: Vec<KernelAst>,
 }

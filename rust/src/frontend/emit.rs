@@ -77,7 +77,7 @@ impl<'a> Emitter<'a> {
 
     fn stmt(&mut self, s: &StmtAst, out: &mut Vec<Stmt>) -> Result<(), Diagnostic> {
         match s {
-            StmtAst::SharedDecl { ty, name, len, dynamic, span } => {
+            StmtAst::SharedDecl { ty, name, len, cols, dynamic, span } => {
                 let elem = ty.to_ir();
                 if *dynamic {
                     if self.dyn_shared.is_some() {
@@ -89,8 +89,15 @@ impl<'a> Emitter<'a> {
                     self.sema.declare_function_scope(name, Sym::DynShared { elem }, *span)?;
                 } else {
                     let index = self.shared.len();
-                    self.shared.push(SharedDecl { name: name.clone(), elem, len: *len });
-                    self.sema.declare_function_scope(name, Sym::SharedArr { index, elem }, *span)?;
+                    // 2-D arrays are stored flattened row-major; sema
+                    // rewrites `a[i][j]` into `&a[i * C + j]`.
+                    let flat = len * cols.unwrap_or(1);
+                    self.shared.push(SharedDecl { name: name.clone(), elem, len: flat });
+                    self.sema.declare_function_scope(
+                        name,
+                        Sym::SharedArr { index, elem, cols: cols.map(|c| c as u32) },
+                        *span,
+                    )?;
                 }
                 Ok(())
             }
@@ -647,6 +654,42 @@ mod tests {
         assert_eq!(k.shared[0].elem, Ty::F32);
         assert_eq!(k.shared[0].len, 64);
         assert_eq!(k.dyn_shared_elem, Some(Ty::I32));
+    }
+
+    /// `tile[ty][tx]` on `__shared__ float tile[R][C]` flattens
+    /// row-major — identical CIR to a hand-built flat tile with
+    /// `tile[ty * C + tx]`.
+    #[test]
+    fn shared_2d_flattens_row_major() {
+        let k = one(
+            "__global__ void k(float* a, int n) {\n\
+             __shared__ float tile[8][9];\n\
+             tile[threadIdx.y][threadIdx.x] = a[0];\n\
+             a[1] = tile[threadIdx.y][threadIdx.x];\n\
+             }",
+        );
+        assert_eq!(k.shared.len(), 1);
+        assert_eq!(k.shared[0].len, 72);
+        let mut b = KernelBuilder::new("k");
+        let a = b.ptr_param("a", Ty::F32);
+        let _n = b.scalar_param("n", Ty::I32);
+        let tile = b.shared_array("tile", Ty::F32, 72);
+        let flat = add(mul(special(Special::ThreadIdxY), c_i32(9)), tid_x());
+        b.store_at(tile.clone(), flat.clone(), at(a.clone(), c_i32(0), Ty::F32), Ty::F32);
+        b.store_at(a.clone(), c_i32(1), at(tile.clone(), flat, Ty::F32), Ty::F32);
+        assert_eq!(k, b.build());
+    }
+
+    #[test]
+    fn shared_2d_single_index_rejected() {
+        let e = parse_kernels(
+            "__global__ void k(float* a) {\n\
+             __shared__ float tile[8][8];\n\
+             a[0] = tile[3];\n\
+             }",
+        )
+        .unwrap_err();
+        assert_eq!(e.msg, "2-D shared array `tile` must be indexed as `tile[i][j]`");
     }
 
     #[test]

@@ -1,0 +1,441 @@
+//! `__device__` helper inlining.
+//!
+//! Helpers are expression functions (`__device__ T f(args) { return
+//! expr; }`). Each is type-checked standalone against its declared
+//! signature, then every call site — in kernels and in other helpers —
+//! is replaced by the helper's return expression with the argument
+//! ASTs substituted for the parameters (tree substitution, so the
+//! inlined CIR is *identical* to writing the expression out by hand:
+//! same loads, same flops, same statement count — the property the
+//! conformance sweep's ExecStats equality relies on). Recursion,
+//! direct or mutual, cannot be inlined and is rejected with a spanned
+//! diagnostic; so are arity mismatches and helpers shadowing builtins.
+
+use super::ast::*;
+use super::sema::{is_builtin_call, is_builtin_constant, Sema, Sym, VTy};
+use super::Diagnostic;
+use std::collections::HashMap;
+
+/// Validate every `__device__` helper and return the unit's kernels
+/// with all helper calls inlined.
+pub fn expand_unit(unit: &UnitAst, src: &str) -> Result<Vec<KernelAst>, Diagnostic> {
+    let mut fns: HashMap<&str, &DeviceFnAst> = HashMap::new();
+    for f in &unit.device_fns {
+        if is_builtin_call(&f.name) || is_builtin_constant(&f.name) {
+            return Err(Diagnostic::at(
+                format!(
+                    "cannot define `__device__` function `{}`: the name is a builtin",
+                    f.name
+                ),
+                f.span,
+                src,
+            ));
+        }
+        if fns.insert(f.name.as_str(), f).is_some() {
+            return Err(Diagnostic::at(
+                format!("duplicate `__device__` function `{}`", f.name),
+                f.span,
+                src,
+            ));
+        }
+    }
+    // Expand nested helper calls inside each helper body (recursion —
+    // direct or mutual — is rejected here, whether or not the helper
+    // is ever called), then type-check against the declared signature.
+    for f in &unit.device_fns {
+        let mut active = vec![f.name.clone()];
+        let body = expand_expr(&f.body, &fns, &mut active, src)?;
+        check_signature(f, &body, src)?;
+    }
+    let mut kernels = Vec::with_capacity(unit.kernels.len());
+    for k in &unit.kernels {
+        let mut body = Vec::with_capacity(k.body.len());
+        for s in &k.body {
+            body.push(expand_stmt(s, &fns, src)?);
+        }
+        kernels.push(KernelAst { body, ..k.clone() });
+    }
+    Ok(kernels)
+}
+
+/// Type-check one helper's (already expanded) body against its
+/// declared signature: parameters typed as declared, body type equal
+/// to the declared return type.
+fn check_signature(f: &DeviceFnAst, body: &ExprAst, src: &str) -> Result<(), Diagnostic> {
+    let mut sema = Sema::new(src);
+    for (i, p) in f.params.iter().enumerate() {
+        let t = p.ty.to_ir();
+        let vty = if p.is_ptr { VTy::Ptr(t) } else { VTy::Scalar(t) };
+        sema.declare(&p.name, Sym::Param { index: i, vty }, p.span)?;
+    }
+    let (_, vty) = sema.lower_expr(body)?;
+    let want = f.ret.to_ir();
+    match vty {
+        VTy::Scalar(t) if t == want => Ok(()),
+        got => Err(Diagnostic::at(
+            format!(
+                "`__device__` function `{}` is declared `{}` but returns `{}`",
+                f.name,
+                want.c_name(),
+                got.name()
+            ),
+            f.span,
+            src,
+        )),
+    }
+}
+
+fn expand_stmt(
+    s: &StmtAst,
+    fns: &HashMap<&str, &DeviceFnAst>,
+    src: &str,
+) -> Result<StmtAst, Diagnostic> {
+    let ex = |e: &ExprAst| -> Result<ExprAst, Diagnostic> {
+        let mut active = Vec::new();
+        expand_expr(e, fns, &mut active, src)
+    };
+    let body = |b: &[StmtAst]| -> Result<Vec<StmtAst>, Diagnostic> {
+        b.iter().map(|s| expand_stmt(s, fns, src)).collect()
+    };
+    Ok(match s {
+        StmtAst::Decl { ty, name, init, span } => StmtAst::Decl {
+            ty: *ty,
+            name: name.clone(),
+            init: init.as_ref().map(&ex).transpose()?,
+            span: *span,
+        },
+        StmtAst::SharedDecl { .. } | StmtAst::Break { .. } | StmtAst::Continue { .. }
+        | StmtAst::Return { .. } => s.clone(),
+        StmtAst::Assign { target, op, value, span } => StmtAst::Assign {
+            target: ex(target)?,
+            op: *op,
+            value: ex(value)?,
+            span: *span,
+        },
+        StmtAst::Call { call, span } => {
+            if let ExprAst::Call { name, .. } = call {
+                if fns.contains_key(name.as_str()) {
+                    return Err(Diagnostic::at(
+                        format!(
+                            "`__device__` function `{name}` returns a value; a call to it \
+                             cannot be a statement"
+                        ),
+                        *span,
+                        src,
+                    ));
+                }
+            }
+            StmtAst::Call { call: ex(call)?, span: *span }
+        }
+        StmtAst::If { cond, then_, else_, span } => StmtAst::If {
+            cond: ex(cond)?,
+            then_: body(then_)?,
+            else_: body(else_)?,
+            span: *span,
+        },
+        StmtAst::For { init, cond, step, body: b, span } => StmtAst::For {
+            init: init.as_deref().map(|s| expand_stmt(s, fns, src)).transpose()?.map(Box::new),
+            cond: cond.as_ref().map(&ex).transpose()?,
+            step: step.as_deref().map(|s| expand_stmt(s, fns, src)).transpose()?.map(Box::new),
+            body: body(b)?,
+            span: *span,
+        },
+        StmtAst::While { cond, body: b, span } => {
+            StmtAst::While { cond: ex(cond)?, body: body(b)?, span: *span }
+        }
+        StmtAst::Block { body: b, span } => StmtAst::Block { body: body(b)?, span: *span },
+    })
+}
+
+/// Expand every `__device__` call in `e`. `active` is the stack of
+/// helpers currently being inlined — re-entering one is recursion.
+fn expand_expr(
+    e: &ExprAst,
+    fns: &HashMap<&str, &DeviceFnAst>,
+    active: &mut Vec<String>,
+    src: &str,
+) -> Result<ExprAst, Diagnostic> {
+    Ok(match e {
+        ExprAst::Ident { .. }
+        | ExprAst::Int { .. }
+        | ExprAst::Float { .. }
+        | ExprAst::Special { .. } => e.clone(),
+        ExprAst::Bin { op, lhs, rhs, span } => ExprAst::Bin {
+            op: *op,
+            lhs: Box::new(expand_expr(lhs, fns, active, src)?),
+            rhs: Box::new(expand_expr(rhs, fns, active, src)?),
+            span: *span,
+        },
+        ExprAst::Un { op, arg, span } => ExprAst::Un {
+            op: *op,
+            arg: Box::new(expand_expr(arg, fns, active, src)?),
+            span: *span,
+        },
+        ExprAst::Index { base, idx, span } => ExprAst::Index {
+            base: Box::new(expand_expr(base, fns, active, src)?),
+            idx: Box::new(expand_expr(idx, fns, active, src)?),
+            span: *span,
+        },
+        ExprAst::Cast { ty, arg, span } => ExprAst::Cast {
+            ty: *ty,
+            arg: Box::new(expand_expr(arg, fns, active, src)?),
+            span: *span,
+        },
+        ExprAst::Ternary { cond, then_, else_, span } => ExprAst::Ternary {
+            cond: Box::new(expand_expr(cond, fns, active, src)?),
+            then_: Box::new(expand_expr(then_, fns, active, src)?),
+            else_: Box::new(expand_expr(else_, fns, active, src)?),
+            span: *span,
+        },
+        ExprAst::Call { name, args, span } => {
+            let Some(f) = fns.get(name.as_str()).copied() else {
+                // Builtin (or unknown — sema diagnoses that later):
+                // expand inside the arguments only.
+                let args = args
+                    .iter()
+                    .map(|a| expand_expr(a, fns, active, src))
+                    .collect::<Result<Vec<_>, _>>()?;
+                return Ok(ExprAst::Call { name: name.clone(), args, span: *span });
+            };
+            if active.iter().any(|n| n == name) {
+                return Err(Diagnostic::at(
+                    format!(
+                        "`__device__` function `{name}` is recursive (cycle: {} -> {name}); \
+                         recursion cannot be inlined",
+                        active.join(" -> ")
+                    ),
+                    *span,
+                    src,
+                ));
+            }
+            if args.len() != f.params.len() {
+                return Err(Diagnostic::at(
+                    format!(
+                        "`__device__` function `{name}` takes exactly {} argument(s), found {}",
+                        f.params.len(),
+                        args.len()
+                    ),
+                    *span,
+                    src,
+                ));
+            }
+            let args = args
+                .iter()
+                .map(|a| expand_expr(a, fns, active, src))
+                .collect::<Result<Vec<_>, _>>()?;
+            active.push(name.clone());
+            let body = expand_expr(&f.body, fns, active, src)?;
+            active.pop();
+            let map: HashMap<&str, &ExprAst> = f
+                .params
+                .iter()
+                .zip(args.iter())
+                .map(|(p, a)| (p.name.as_str(), a))
+                .collect();
+            subst(&body, &map)
+        }
+    })
+}
+
+/// Replace parameter identifiers with the (already expanded) argument
+/// expressions. The helper body was validated to reference only its
+/// parameters and builtin constants, and builtin-constant names are
+/// reserved (`Sema::declare` rejects locals/params named `FLT_MAX`,
+/// `true`, …), so no call-site name can capture a body identifier.
+fn subst(e: &ExprAst, map: &HashMap<&str, &ExprAst>) -> ExprAst {
+    match e {
+        ExprAst::Ident { name, .. } => match map.get(name.as_str()) {
+            Some(rep) => (*rep).clone(),
+            None => e.clone(),
+        },
+        ExprAst::Int { .. } | ExprAst::Float { .. } | ExprAst::Special { .. } => e.clone(),
+        ExprAst::Bin { op, lhs, rhs, span } => ExprAst::Bin {
+            op: *op,
+            lhs: Box::new(subst(lhs, map)),
+            rhs: Box::new(subst(rhs, map)),
+            span: *span,
+        },
+        ExprAst::Un { op, arg, span } => {
+            ExprAst::Un { op: *op, arg: Box::new(subst(arg, map)), span: *span }
+        }
+        ExprAst::Index { base, idx, span } => ExprAst::Index {
+            base: Box::new(subst(base, map)),
+            idx: Box::new(subst(idx, map)),
+            span: *span,
+        },
+        ExprAst::Cast { ty, arg, span } => {
+            ExprAst::Cast { ty: *ty, arg: Box::new(subst(arg, map)), span: *span }
+        }
+        ExprAst::Ternary { cond, then_, else_, span } => ExprAst::Ternary {
+            cond: Box::new(subst(cond, map)),
+            then_: Box::new(subst(then_, map)),
+            else_: Box::new(subst(else_, map)),
+            span: *span,
+        },
+        ExprAst::Call { name, args, span } => ExprAst::Call {
+            name: name.clone(),
+            args: args.iter().map(|a| subst(a, map)).collect(),
+            span: *span,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse_kernels;
+    use crate::ir::*;
+
+    #[test]
+    fn device_fn_inlines_to_hand_built_tree() {
+        let parsed = parse_kernels(
+            "__device__ float sq(float x) { return x * x; }\n\
+             __global__ void k(float* p, int n) {\n\
+             \x20   int id = threadIdx.x + blockIdx.x * blockDim.x;\n\
+             \x20   if (id < n) {\n\
+             \x20       p[id] = sq(p[id]);\n\
+             \x20   }\n\
+             }",
+        )
+        .unwrap();
+        let mut b = KernelBuilder::new("k");
+        let p = b.ptr_param("p", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bl| {
+            let v = at(p.clone(), reg(id), Ty::F32);
+            bl.store_at(p.clone(), reg(id), mul(v.clone(), v), Ty::F32);
+        });
+        assert_eq!(parsed[0], b.build(), "inlined tree is identical to hand-built CIR");
+    }
+
+    #[test]
+    fn nested_device_fns_inline() {
+        let parsed = parse_kernels(
+            "__device__ float sq(float x) { return x * x; }\n\
+             __device__ float quart(float x) { return sq(sq(x)); }\n\
+             __global__ void k(float* p) { p[0] = quart(p[1]); }",
+        )
+        .unwrap();
+        // ((p[1]*p[1]) * (p[1]*p[1])) — 3 muls, 4 loads, one store
+        let mut b = KernelBuilder::new("k");
+        let p = b.ptr_param("p", Ty::F32);
+        let v = at(p.clone(), c_i32(1), Ty::F32);
+        let inner = mul(v.clone(), v);
+        b.store_at(p.clone(), c_i32(0), mul(inner.clone(), inner), Ty::F32);
+        assert_eq!(parsed[0], b.build());
+    }
+
+    #[test]
+    fn recursion_golden_diagnostic() {
+        let e = parse_kernels(
+            "__device__ int fact(int n) { return n * fact(n - 1); }\n\
+             __global__ void k(int* p) { p[0] = fact(4); }",
+        )
+        .unwrap_err();
+        assert_eq!(
+            e.msg,
+            "`__device__` function `fact` is recursive (cycle: fact -> fact); \
+             recursion cannot be inlined"
+        );
+        assert_eq!((e.line, e.col), (1, 41));
+    }
+
+    #[test]
+    fn mutual_recursion_diagnosed() {
+        let e = parse_kernels(
+            "__device__ int f(int n) { return g(n); }\n\
+             __device__ int g(int n) { return f(n); }\n\
+             __global__ void k(int* p) { p[0] = f(1); }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("is recursive (cycle: f -> g -> f)"), "{}", e.msg);
+    }
+
+    #[test]
+    fn arity_mismatch_diagnosed() {
+        let e = parse_kernels(
+            "__device__ float sq(float x) { return x * x; }\n\
+             __global__ void k(float* p) { p[0] = sq(1.0f, 2.0f); }",
+        )
+        .unwrap_err();
+        assert_eq!(e.msg, "`__device__` function `sq` takes exactly 1 argument(s), found 2");
+    }
+
+    #[test]
+    fn return_type_mismatch_diagnosed() {
+        let e = parse_kernels(
+            "__device__ float one() { return 1; }\n\
+             __global__ void k(float* p) { p[0] = one(); }",
+        )
+        .unwrap_err();
+        assert_eq!(e.msg, "`__device__` function `one` is declared `float` but returns `int`");
+    }
+
+    /// The capture hole is closed structurally: a kernel local cannot
+    /// shadow a builtin constant a helper body references, because the
+    /// name is reserved at declaration (as under real nvcc, where
+    /// `FLT_MAX` is a macro and `true` a keyword).
+    #[test]
+    fn builtin_constant_capture_impossible() {
+        let e = parse_kernels(
+            "__device__ float big() { return FLT_MAX; }\n\
+             __global__ void k(float* p) {\n\
+             \x20   float FLT_MAX = 0.0f;\n\
+             \x20   p[0] = big();\n\
+             }",
+        )
+        .unwrap_err();
+        assert_eq!(e.msg, "cannot declare `FLT_MAX`: the name is a reserved builtin constant");
+        assert_eq!((e.line, e.col), (3, 5));
+    }
+
+    #[test]
+    fn builtin_shadowing_diagnosed() {
+        let e = parse_kernels(
+            "__device__ float expf(float x) { return x; }\n\
+             __global__ void k(float* p) { p[0] = expf(p[0]); }",
+        )
+        .unwrap_err();
+        assert_eq!(e.msg, "cannot define `__device__` function `expf`: the name is a builtin");
+    }
+
+    #[test]
+    fn device_call_as_statement_diagnosed() {
+        let e = parse_kernels(
+            "__device__ int f(int x) { return x; }\n\
+             __global__ void k(int* p) { f(1); }",
+        )
+        .unwrap_err();
+        assert_eq!(
+            e.msg,
+            "`__device__` function `f` returns a value; a call to it cannot be a statement"
+        );
+    }
+
+    #[test]
+    fn pointer_param_helpers_inline() {
+        let parsed = parse_kernels(
+            "__device__ float get2(const float* p, int i) { return p[i] + p[i + 1]; }\n\
+             __global__ void k(float* a, float* o, int n) {\n\
+             \x20   int id = threadIdx.x + blockIdx.x * blockDim.x;\n\
+             \x20   if (id < n) {\n\
+             \x20       o[id] = get2(a, id);\n\
+             \x20   }\n\
+             }",
+        )
+        .unwrap();
+        let mut b = KernelBuilder::new("k");
+        let a = b.ptr_param("a", Ty::F32);
+        let o = b.ptr_param("o", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bl| {
+            let sum = add(
+                at(a.clone(), reg(id), Ty::F32),
+                at(a.clone(), add(reg(id), c_i32(1)), Ty::F32),
+            );
+            bl.store_at(o.clone(), reg(id), sum, Ty::F32);
+        });
+        assert_eq!(parsed[0], b.build());
+    }
+}

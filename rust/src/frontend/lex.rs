@@ -1,9 +1,14 @@
 //! CUDA-C lexer: source text → tokens with 1-based line/col spans.
 //!
-//! Preprocessor lines (`#include`, `#define`, …) are skipped whole so
-//! real-world `.cu` headers tokenize; the subset never expands macros.
+//! Object-like `#define NAME tokens…` constants are collected and
+//! expanded at use sites (recursively, with cycle rejection), and
+//! `#undef` removes them; every other preprocessor line (`#include`,
+//! `#ifdef`, …) is skipped whole so real-world `.cu` headers tokenize.
+//! Function-like macros (`#define F(x) …`) are diagnosed, not silently
+//! dropped.
 
 use super::Diagnostic;
+use std::collections::HashMap;
 use std::fmt;
 
 /// A 1-based source position.
@@ -48,6 +53,8 @@ const PUNCTS: &[&str] = &[
 pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, Diagnostic> {
     let chars: Vec<char> = src.chars().collect();
     let mut toks = Vec::new();
+    let mut defines: HashMap<String, Vec<Tok>> = HashMap::new();
+    let mut cond_depth = 0u32;
     let mut i = 0usize;
     let mut line = 1u32;
     let mut col = 1u32;
@@ -64,11 +71,15 @@ pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, Diagnostic> {
             i += 1;
             continue;
         }
-        // Preprocessor directive: skip the whole line.
+        // Preprocessor directive: `#define`/`#undef` are interpreted
+        // (object-like only); every other directive line is skipped.
         if c == '#' {
+            let start = i;
+            let start_col = col;
             while i < chars.len() && chars[i] != '\n' {
                 i += 1;
             }
+            directive(&chars[start..i], line, start_col, &mut defines, &mut cond_depth, src)?;
             continue;
         }
         if c == '/' && i + 1 < chars.len() && chars[i + 1] == '/' {
@@ -108,7 +119,8 @@ pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, Diagnostic> {
                 col += 1;
             }
             let s: String = chars[start..i].iter().collect();
-            toks.push((Tok::Ident(s), span));
+            let mut active = Vec::new();
+            expand_ident(&mut toks, &s, span, &defines, &mut active, src)?;
             continue;
         }
         if c.is_ascii_digit() {
@@ -152,6 +164,136 @@ pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, Diagnostic> {
     }
     toks.push((Tok::Eof, Span { line, col }));
     Ok(toks)
+}
+
+/// Handle one preprocessor directive line (without the trailing
+/// newline). `#define NAME tokens…` and `#undef NAME` are interpreted;
+/// conditional-compilation directives track nesting only (conditions
+/// are never evaluated, so a meaningful `#define`/`#undef` *inside* a
+/// conditional region would be applied whether or not its branch is
+/// live — that is diagnosed, with an include-guard exception);
+/// anything else (`#include`, `#pragma`, …) is ignored.
+fn directive(
+    chars: &[char],
+    line: u32,
+    start_col: u32,
+    defines: &mut HashMap<String, Vec<Tok>>,
+    cond_depth: &mut u32,
+    src: &str,
+) -> Result<(), Diagnostic> {
+    let col_at = |j: usize| start_col + j as u32;
+    let mut j = 1; // past `#`
+    while j < chars.len() && (chars[j] == ' ' || chars[j] == '\t') {
+        j += 1;
+    }
+    let word_start = j;
+    while j < chars.len() && chars[j].is_ascii_alphabetic() {
+        j += 1;
+    }
+    let word: String = chars[word_start..j].iter().collect();
+    match word.as_str() {
+        "if" | "ifdef" | "ifndef" => {
+            *cond_depth += 1;
+            return Ok(());
+        }
+        "endif" => {
+            *cond_depth = cond_depth.saturating_sub(1);
+            return Ok(());
+        }
+        "define" | "undef" => {}
+        _ => return Ok(()),
+    }
+    while j < chars.len() && (chars[j] == ' ' || chars[j] == '\t') {
+        j += 1;
+    }
+    let name_start = j;
+    while j < chars.len() && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+        j += 1;
+    }
+    let name: String = chars[name_start..j].iter().collect();
+    let name_span = Span { line, col: col_at(name_start) };
+    if name.is_empty() || name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        let msg = format!("expected a macro name after `#{word}`");
+        return Err(Diagnostic::at(msg, name_span, src));
+    }
+    if *cond_depth > 0 {
+        // Conditions are never evaluated, so applying this define/undef
+        // could be wrong for the dead branch. The one safe, common shape
+        // is an include guard: an empty `#define NAME` that no code can
+        // observe — ignore it; diagnose everything else.
+        let guard = word == "define"
+            && chars.get(j) != Some(&'(')
+            && chars[j..].iter().all(|c| *c == ' ' || *c == '\t' || *c == '\r');
+        if guard {
+            return Ok(());
+        }
+        return Err(Diagnostic::at(
+            format!(
+                "`#{word} {name}` under `#if`/`#ifdef` is not supported \
+                 (conditions are not evaluated)"
+            ),
+            name_span,
+            src,
+        ));
+    }
+    if word == "undef" {
+        defines.remove(&name);
+        return Ok(());
+    }
+    if chars.get(j) == Some(&'(') {
+        return Err(Diagnostic::at(
+            format!(
+                "function-like macro `{name}(…)` is not supported \
+                 (only object-like `#define NAME tokens`)"
+            ),
+            name_span,
+            src,
+        ));
+    }
+    // Lex the replacement token list by reusing the main lexer on the
+    // remainder of the line (it cannot itself contain a directive).
+    let rest: String = chars[j..].iter().collect();
+    let body = lex(&rest)
+        .map_err(|d| Diagnostic::at(format!("in `#define {name}`: {}", d.msg), name_span, src))?
+        .into_iter()
+        .map(|(t, _)| t)
+        .filter(|t| !matches!(t, Tok::Eof))
+        .collect();
+    defines.insert(name, body);
+    Ok(())
+}
+
+/// Push identifier `name` at `span`, expanding it (recursively) when it
+/// names an object-like macro. `active` carries the expansion stack so
+/// cycles are rejected instead of looping.
+fn expand_ident(
+    toks: &mut Vec<(Tok, Span)>,
+    name: &str,
+    span: Span,
+    defines: &HashMap<String, Vec<Tok>>,
+    active: &mut Vec<String>,
+    src: &str,
+) -> Result<(), Diagnostic> {
+    let Some(body) = defines.get(name) else {
+        toks.push((Tok::Ident(name.to_string()), span));
+        return Ok(());
+    };
+    if active.iter().any(|n| n == name) {
+        return Err(Diagnostic::at(
+            format!("recursive expansion of macro `{name}`"),
+            span,
+            src,
+        ));
+    }
+    active.push(name.to_string());
+    for t in body {
+        match t {
+            Tok::Ident(inner) => expand_ident(toks, inner, span, defines, active, src)?,
+            other => toks.push((other.clone(), span)),
+        }
+    }
+    active.pop();
+    Ok(())
 }
 
 /// Does the punct `p` start at `chars[i]`? Allocation-free comparison
@@ -313,6 +455,105 @@ mod tests {
         let toks = lex("ab\n  cd").unwrap();
         assert_eq!(toks[0].1, Span { line: 1, col: 1 });
         assert_eq!(toks[1].1, Span { line: 2, col: 3 });
+    }
+
+    #[test]
+    fn object_like_define_expands_at_use_site() {
+        let t = kinds("#define BINS 256\n#define HALF (BINS / 2)\nx % BINS + HALF");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Ident("x".into()),
+                Tok::Punct("%"),
+                Tok::Int { value: 256, long: false },
+                Tok::Punct("+"),
+                Tok::Punct("("),
+                Tok::Int { value: 256, long: false },
+                Tok::Punct("/"),
+                Tok::Int { value: 2, long: false },
+                Tok::Punct(")"),
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn define_use_site_spans_and_undef() {
+        let toks = lex("#define N 8\n  N\n#undef N\nN").unwrap();
+        // expanded use keeps the use-site span…
+        assert_eq!(toks[0].0, Tok::Int { value: 8, long: false });
+        assert_eq!(toks[0].1, Span { line: 2, col: 3 });
+        // …and after #undef the name is an ordinary identifier again
+        assert_eq!(toks[1].0, Tok::Ident("N".into()));
+    }
+
+    #[test]
+    fn define_before_use_only() {
+        // C preprocessor semantics: a use before the #define is literal.
+        let t = kinds("N\n#define N 8\nN");
+        assert_eq!(t[0], Tok::Ident("N".into()));
+        assert_eq!(t[1], Tok::Int { value: 8, long: false });
+    }
+
+    #[test]
+    fn recursive_macro_diagnosed() {
+        let e = lex("#define A B\n#define B A\nA").unwrap_err();
+        assert_eq!(e.msg, "recursive expansion of macro `A`");
+        assert_eq!((e.line, e.col), (3, 1));
+    }
+
+    #[test]
+    fn function_like_macro_diagnosed() {
+        let e = lex("#define SQ(x) ((x) * (x))\n").unwrap_err();
+        assert_eq!(
+            e.msg,
+            "function-like macro `SQ(…)` is not supported \
+             (only object-like `#define NAME tokens`)"
+        );
+        assert_eq!((e.line, e.col), (1, 9));
+    }
+
+    #[test]
+    fn define_without_name_diagnosed() {
+        let e = lex("#define\n").unwrap_err();
+        assert_eq!(e.msg, "expected a macro name after `#define`");
+    }
+
+    #[test]
+    fn include_guard_shape_is_ignored_not_applied() {
+        // The classic guard: empty define under #ifndef — tokenizes,
+        // and GUARD does not become a macro.
+        let t = kinds("#ifndef GUARD_H\n#define GUARD_H\n#endif\nGUARD_H x");
+        assert_eq!(t[0], Tok::Ident("GUARD_H".into()));
+        assert_eq!(t[1], Tok::Ident("x".into()));
+    }
+
+    #[test]
+    fn meaningful_define_under_conditional_diagnosed() {
+        // Applying this blindly would be wrong whenever SMALL is not
+        // "defined" — diagnosed instead of silently overriding N.
+        let e = lex("#define N 512\n#ifdef SMALL\n#define N 64\n#endif\nN").unwrap_err();
+        assert_eq!(
+            e.msg,
+            "`#define N` under `#if`/`#ifdef` is not supported (conditions are not evaluated)"
+        );
+        assert_eq!((e.line, e.col), (3, 9));
+    }
+
+    #[test]
+    fn undef_under_conditional_diagnosed() {
+        let e = lex("#define N 1\n#if 0\n#undef N\n#endif\n").unwrap_err();
+        assert_eq!(
+            e.msg,
+            "`#undef N` under `#if`/`#ifdef` is not supported (conditions are not evaluated)"
+        );
+    }
+
+    #[test]
+    fn endif_closes_the_conditional_region() {
+        // after #endif, defines are interpreted again
+        let t = kinds("#ifdef X\n#endif\n#define N 7\nN");
+        assert_eq!(t[0], Tok::Int { value: 7, long: false });
     }
 
     #[test]

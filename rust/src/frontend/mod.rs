@@ -26,8 +26,10 @@
 pub mod ast;
 pub mod emit;
 pub mod harness;
+pub mod inline;
 pub mod lex;
 pub mod parse;
+pub mod printer;
 pub mod sema;
 
 use lex::Span;
@@ -75,10 +77,13 @@ impl fmt::Display for Diagnostic {
 
 impl std::error::Error for Diagnostic {}
 
-/// Parse every `__global__` kernel in `src` into verified CIR.
+/// Parse every `__global__` kernel in `src` into verified CIR:
+/// lex (with `#define` expansion) → parse → `__device__` helper
+/// validation + inlining → sema/emit → `ir::verify`.
 pub fn parse_kernels(src: &str) -> Result<Vec<crate::ir::Kernel>, Diagnostic> {
-    let ast = parse::parse_translation_unit(src)?;
-    ast.iter().map(|k| emit::emit_kernel(src, k)).collect()
+    let unit = parse::parse_translation_unit(src)?;
+    let kernels = inline::expand_unit(&unit, src)?;
+    kernels.iter().map(|k| emit::emit_kernel(src, k)).collect()
 }
 
 #[cfg(test)]

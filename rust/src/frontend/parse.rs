@@ -2,25 +2,31 @@
 //!
 //! The grammar is a strict subset of CUDA C: a translation unit is a
 //! sequence of `__global__ void` kernel definitions (optionally under
-//! `extern "C"`); statements cover declarations, assignments
-//! (including compound `+=`-style and `++`/`--`), `if`/`for`/`while`/
-//! `break`/`continue`/`return`, `__shared__` declarations and builtin
-//! calls. Expressions use C precedence. Everything else — templates,
-//! textures, host code, `__device__` helpers — is rejected with a
-//! spanned diagnostic (see DESIGN.md §Frontend for the rationale).
+//! `extern "C"`) and `__device__` expression helpers; statements cover
+//! declarations, assignments (including compound `+=`-style and
+//! `++`/`--`), `if`/`for`/`while`/`break`/`continue`/`return`,
+//! `__shared__` declarations (1-D and 2-D static, `extern` dynamic)
+//! and builtin calls. Expressions use C precedence. Everything else —
+//! templates, textures, host code — is rejected with a spanned
+//! diagnostic (see DESIGN.md §Frontend for the rationale).
 
 use super::ast::*;
 use super::lex::{lex, Span, Tok};
 use super::Diagnostic;
 use crate::ir::Special;
 
-/// Parse a whole `.cu` source into kernel ASTs.
-pub fn parse_translation_unit(src: &str) -> Result<Vec<KernelAst>, Diagnostic> {
+/// Parse a whole `.cu` source into `__device__` helper + kernel ASTs.
+pub fn parse_translation_unit(src: &str) -> Result<UnitAst, Diagnostic> {
     let toks = lex(src)?;
     let mut p = Parser { toks, pos: 0, src };
+    let mut device_fns = Vec::new();
     let mut kernels = Vec::new();
     while !p.at_eof() {
-        kernels.push(p.kernel()?);
+        if p.is_ident("__device__") {
+            device_fns.push(p.device_fn()?);
+        } else {
+            kernels.push(p.kernel()?);
+        }
     }
     if kernels.is_empty() {
         return Err(Diagnostic::at(
@@ -29,7 +35,7 @@ pub fn parse_translation_unit(src: &str) -> Result<Vec<KernelAst>, Diagnostic> {
             src,
         ));
     }
-    Ok(kernels)
+    Ok(UnitAst { device_fns, kernels })
 }
 
 fn is_type_name(s: &str) -> bool {
@@ -179,8 +185,8 @@ impl<'a> Parser<'a> {
         if !self.eat_ident("__global__") {
             return Err(self.err(
                 format!(
-                    "expected a `__global__` kernel definition at top level, found {} \
-                     (host code and `__device__` helpers are out of scope)",
+                    "expected a `__global__` kernel or `__device__` function at top level, \
+                     found {} (host code is out of scope)",
                     self.peek()
                 ),
                 self.span(),
@@ -205,6 +211,52 @@ impl<'a> Parser<'a> {
         self.expect_punct(")", "after the parameter list")?;
         let body = self.block()?;
         Ok(KernelAst { name, params, body, span })
+    }
+
+    /// `__device__ [inline|__forceinline__] T name(params) { return expr; }`
+    fn device_fn(&mut self) -> Result<DeviceFnAst, Diagnostic> {
+        let span = self.span();
+        self.bump(); // `__device__`
+        while self.eat_ident("inline") || self.eat_ident("__forceinline__") {}
+        if self.is_ident("void") {
+            return Err(self.err(
+                "`__device__` functions must return a value (`void` helpers have nothing \
+                 to inline)",
+                self.span(),
+            ));
+        }
+        let (ret, _) = self.parse_type()?;
+        if self.is_punct("*") {
+            return Err(self.err("`__device__` functions cannot return a pointer", self.span()));
+        }
+        let (name, _) = self.expect_any_ident("a function name")?;
+        self.expect_punct("(", "after the function name")?;
+        let mut params = Vec::new();
+        if !self.is_punct(")") && !self.is_ident("void") {
+            loop {
+                params.push(self.param()?);
+                if !self.eat_punct(",") {
+                    break;
+                }
+            }
+        } else {
+            self.eat_ident("void");
+        }
+        self.expect_punct(")", "after the parameter list")?;
+        self.expect_punct("{", "to open the function body")?;
+        if !self.eat_ident("return") {
+            return Err(self.err(
+                format!(
+                    "`__device__` function `{name}` body must be a single \
+                     `return <expr>;` statement"
+                ),
+                self.span(),
+            ));
+        }
+        let body = self.expr()?;
+        self.expect_punct(";", "after the `return` expression")?;
+        self.expect_punct("}", "to close the function body")?;
+        Ok(DeviceFnAst { name, params, ret, body, span })
     }
 
     fn param(&mut self) -> Result<ParamAst, Diagnostic> {
@@ -322,8 +374,34 @@ impl<'a> Parser<'a> {
             }
         };
         self.expect_punct("]", "after the array length")?;
+        // Optional second dimension: `__shared__ T name[R][C];`
+        let cols = if !dynamic && self.is_punct("[") {
+            self.bump();
+            let cspan = self.span();
+            let c = match self.bump().0 {
+                Tok::Int { value, .. } if value > 0 => value as usize,
+                t => {
+                    return Err(self.err(
+                        format!("expected a positive constant array length, found {t}"),
+                        cspan,
+                    ))
+                }
+            };
+            self.expect_punct("]", "after the second array length")?;
+            Some(c)
+        } else if dynamic && self.is_punct("[") {
+            return Err(self.err(
+                "`extern __shared__` arrays are 1-D (size comes from the launch)",
+                self.span(),
+            ));
+        } else {
+            None
+        };
+        if self.is_punct("[") {
+            return Err(self.err("shared arrays support at most two dimensions", self.span()));
+        }
         self.expect_punct(";", "after the shared declaration")?;
-        Ok(StmtAst::SharedDecl { ty, name, len, dynamic, span })
+        Ok(StmtAst::SharedDecl { ty, name, len, cols, dynamic, span })
     }
 
     /// Assignment / builtin call / `++`/`--`, WITHOUT the trailing `;`
@@ -602,7 +680,7 @@ mod tests {
     use super::*;
 
     fn parse_ok(src: &str) -> Vec<KernelAst> {
-        parse_translation_unit(src).unwrap_or_else(|d| panic!("{}", d.render("test.cu")))
+        parse_translation_unit(src).unwrap_or_else(|d| panic!("{}", d.render("test.cu"))).kernels
     }
 
     #[test]
@@ -718,6 +796,60 @@ mod tests {
     #[test]
     fn top_level_host_code_rejected() {
         let e = parse_translation_unit("int main() { return 0; }").unwrap_err();
-        assert!(e.msg.contains("expected a `__global__` kernel definition"));
+        assert!(e.msg.contains("expected a `__global__` kernel or `__device__` function"));
+    }
+
+    #[test]
+    fn device_fn_and_multi_kernel_unit() {
+        let unit = parse_translation_unit(
+            "__device__ float sq(float x) { return x * x; }\n\
+             __global__ void a(float* p) { p[0] = sq(p[0]); }\n\
+             __global__ void b(float* p) { p[1] = 2.0f; }",
+        )
+        .unwrap();
+        assert_eq!(unit.device_fns.len(), 1);
+        assert_eq!(unit.device_fns[0].name, "sq");
+        assert_eq!(unit.device_fns[0].ret, CTy::Float);
+        assert_eq!(unit.device_fns[0].params.len(), 1);
+        assert_eq!(unit.kernels.len(), 2);
+        assert_eq!(unit.kernels[0].name, "a");
+        assert_eq!(unit.kernels[1].name, "b");
+    }
+
+    #[test]
+    fn device_fn_multi_statement_body_rejected() {
+        let e = parse_translation_unit(
+            "__device__ int f(int x) { int y = x; return y; }\n\
+             __global__ void k(int* p) { p[0] = f(1); }",
+        )
+        .unwrap_err();
+        assert_eq!(
+            e.msg,
+            "`__device__` function `f` body must be a single `return <expr>;` statement"
+        );
+    }
+
+    #[test]
+    fn shared_2d_parses_with_rows_and_cols() {
+        let ks = parse_ok(
+            "__global__ void k(float* a) {\n\
+             __shared__ float tile[16][17];\n\
+             tile[threadIdx.y][threadIdx.x] = a[0];\n}",
+        );
+        assert!(matches!(
+            ks[0].body[0],
+            StmtAst::SharedDecl { len: 16, cols: Some(17), dynamic: false, .. }
+        ));
+    }
+
+    #[test]
+    fn extern_shared_2d_rejected() {
+        let e = parse_translation_unit(
+            "__global__ void k(float* a) {\n\
+             extern __shared__ float t[][8];\n\
+             a[0] = 1.0f;\n}",
+        )
+        .unwrap_err();
+        assert_eq!(e.msg, "`extern __shared__` arrays are 1-D (size comes from the launch)");
     }
 }

@@ -1,0 +1,554 @@
+//! CIR → CUDA-C source.
+//!
+//! Prints a frontend-subset [`Kernel`] as real CUDA source that
+//! [`super::parse_kernels`] accepts — the inverse of the frontend, used
+//! by the `prop_frontend_roundtrip` fuzz test (random kernel →
+//! source → re-parse → identical outputs/ExecStats). Printing is
+//! *stats-faithful*: every statement prints as exactly one statement
+//! and every expression tree re-lowers to a tree with the same loads,
+//! stores and float ops. Registers become pre-declared locals (`int
+//! r3;` — declarations without initialisers emit no CIR statement), so
+//! instruction counts survive the trip. Kernels using post-fission or
+//! non-frontend forms (`ThreadLoop`, warp exchange, `laneId`,
+//! non-`Bool` loop conditions, …) are rejected with a message rather
+//! than printed wrong.
+
+use crate::ir::*;
+use std::fmt::Write;
+
+/// Scalar-or-pointer inferred type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum VK {
+    S(Ty),
+    P(Ty),
+}
+
+struct Printer<'a> {
+    k: &'a Kernel,
+    /// inferred scalar type per register (None = never assigned)
+    reg_ty: Vec<Option<Ty>>,
+    /// registers that are `for`-loop variables (declared by the loop)
+    for_var: Vec<bool>,
+}
+
+/// Render `k` as CUDA-C source, or explain why it is outside the
+/// printable subset.
+pub fn kernel_to_cuda(k: &Kernel) -> Result<String, String> {
+    let mut p = Printer {
+        k,
+        reg_ty: vec![None; k.num_regs as usize],
+        for_var: vec![false; k.num_regs as usize],
+    };
+    p.scan_stmts(&k.body)?;
+
+    let mut out = String::new();
+    let params: Vec<String> = k
+        .params
+        .iter()
+        .map(|pd| match pd.ty {
+            ParamTy::Scalar(t) => Ok(format!("{} {}", t.c_name(), pd.name)),
+            ParamTy::Ptr(AddrSpace::Global, t) => Ok(format!("{}* {}", t.c_name(), pd.name)),
+            ParamTy::Ptr(_, _) => Err(format!("param `{}`: non-global pointer", pd.name)),
+        })
+        .collect::<Result<_, String>>()?;
+    let _ = writeln!(out, "__global__ void {}({}) {{", k.name, params.join(", "));
+    for sh in &k.shared {
+        let _ = writeln!(out, "    __shared__ {} {}[{}];", sh.elem.c_name(), sh.name, sh.len);
+    }
+    if let Some(t) = k.dyn_shared_elem {
+        let _ = writeln!(out, "    extern __shared__ {} dyn_shared[];", t.c_name());
+    }
+    // Pre-declare every non-loop register at function scope: an
+    // initialiser-less declaration allocates the register without
+    // emitting a statement, so instruction counts are preserved even
+    // for registers first assigned inside a branch.
+    for (r, ty) in p.reg_ty.iter().enumerate() {
+        if p.for_var[r] {
+            continue;
+        }
+        if let Some(t) = ty {
+            let _ = writeln!(out, "    {} r{r};", t.c_name());
+        }
+    }
+    for s in &k.body {
+        p.stmt(s, &mut out, 1)?;
+    }
+    let _ = writeln!(out, "}}");
+    Ok(out)
+}
+
+impl<'a> Printer<'a> {
+    // ---------- type inference over the statement walk ----------
+
+    fn record(&mut self, r: Reg, t: Ty) -> Result<(), String> {
+        let slot = &mut self.reg_ty[r.0 as usize];
+        match slot {
+            None => {
+                *slot = Some(t);
+                Ok(())
+            }
+            Some(prev) if *prev == t => Ok(()),
+            Some(prev) => {
+                Err(format!("%r{} assigned both `{}` and `{}`", r.0, prev.c_name(), t.c_name()))
+            }
+        }
+    }
+
+    fn scan_stmts(&mut self, body: &[Stmt]) -> Result<(), String> {
+        for s in body {
+            match s {
+                Stmt::Assign { dst, expr } => {
+                    let t = self.scalar_ty(expr)?;
+                    self.record(*dst, t)?;
+                }
+                Stmt::Store { .. } | Stmt::SyncThreads | Stmt::Break | Stmt::Continue
+                | Stmt::Return => {}
+                Stmt::If { then_, else_, .. } => {
+                    self.scan_stmts(then_)?;
+                    self.scan_stmts(else_)?;
+                }
+                Stmt::For { var, start, body, .. } => {
+                    let t = self.scalar_ty(start)?;
+                    if !matches!(t, Ty::I32 | Ty::I64) {
+                        return Err("`for` variable must be an integer".into());
+                    }
+                    self.record(*var, t)?;
+                    self.for_var[var.0 as usize] = true;
+                    self.scan_stmts(body)?;
+                }
+                Stmt::While { body, .. } => self.scan_stmts(body)?,
+                Stmt::AtomicRmw { ty, dst, .. } | Stmt::AtomicCas { ty, dst, .. } => {
+                    if let Some(d) = dst {
+                        self.record(*d, *ty)?;
+                    }
+                }
+                other => return Err(format!("unprintable statement: {other:?}")),
+            }
+        }
+        Ok(())
+    }
+
+    fn scalar_ty(&self, e: &Expr) -> Result<Ty, String> {
+        match self.vk(e)? {
+            VK::S(t) => Ok(t),
+            VK::P(t) => Err(format!("pointer of `{}` in scalar position", t.c_name())),
+        }
+    }
+
+    fn vk(&self, e: &Expr) -> Result<VK, String> {
+        Ok(match e {
+            Expr::Const(c) => VK::S(c.ty()),
+            Expr::Reg(r) => {
+                let t = self.reg_ty[r.0 as usize]
+                    .ok_or_else(|| format!("%r{} read before assignment", r.0))?;
+                VK::S(t)
+            }
+            Expr::Param(i) => match self.k.params[*i].ty {
+                ParamTy::Scalar(t) => VK::S(t),
+                ParamTy::Ptr(_, t) => VK::P(t),
+            },
+            Expr::Special(s) => match s {
+                Special::LaneId | Special::WarpId => {
+                    return Err("laneId/warpId are not frontend syntax".into())
+                }
+                _ => VK::S(Ty::I32),
+            },
+            Expr::SharedBase(i) => VK::P(self.k.shared[*i].elem),
+            Expr::DynSharedBase => VK::P(
+                self.k.dyn_shared_elem.ok_or("DynSharedBase without dyn_shared_elem")?,
+            ),
+            Expr::Bin(op, a, b) => match op {
+                BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne => {
+                    VK::S(Ty::Bool)
+                }
+                _ => {
+                    let ta = self.scalar_ty(a)?;
+                    let tb = self.scalar_ty(b)?;
+                    if ta == tb {
+                        VK::S(ta)
+                    } else if matches!(**a, Expr::Const(_)) {
+                        VK::S(tb)
+                    } else if matches!(**b, Expr::Const(_)) {
+                        VK::S(ta)
+                    } else {
+                        return Err(format!(
+                            "mixed operand types `{}` vs `{}`",
+                            ta.c_name(),
+                            tb.c_name()
+                        ));
+                    }
+                }
+            },
+            Expr::Un(op, a) => match op {
+                UnOp::Not => VK::S(Ty::Bool),
+                _ => VK::S(self.scalar_ty(a)?),
+            },
+            Expr::Cast(t, _) => VK::S(*t),
+            Expr::Load { ty, .. } => VK::S(*ty),
+            Expr::Index { elem, .. } => VK::P(*elem),
+            Expr::Select { then_, .. } => VK::S(self.scalar_ty(then_)?),
+            Expr::WarpShfl { val, .. } => VK::S(self.scalar_ty(val)?),
+            Expr::WarpVote { kind, .. } => {
+                VK::S(if *kind == VoteKind::Ballot { Ty::I32 } else { Ty::Bool })
+            }
+            other => return Err(format!("unprintable expression: {other:?}")),
+        })
+    }
+
+    // ---------- printing ----------
+
+    fn reg_name(&self, r: Reg) -> String {
+        if self.for_var[r.0 as usize] {
+            format!("i{}", r.0)
+        } else {
+            format!("r{}", r.0)
+        }
+    }
+
+    /// Print the pointer base of an `Index` (only named bases are
+    /// representable in source).
+    fn base(&self, e: &Expr) -> Result<String, String> {
+        match e {
+            Expr::Param(i) => Ok(self.k.params[*i].name.clone()),
+            Expr::SharedBase(i) => Ok(self.k.shared[*i].name.clone()),
+            Expr::DynSharedBase => Ok("dyn_shared".into()),
+            other => Err(format!("unprintable pointer base: {other:?}")),
+        }
+    }
+
+    /// `p[i]` for an address (`Index` or a bare pointer → `p[0]`,
+    /// which re-lowers stats-identically).
+    fn place(&self, ptr: &Expr) -> Result<String, String> {
+        match ptr {
+            Expr::Index { base, idx, .. } => {
+                Ok(format!("{}[{}]", self.base(base)?, self.expr(idx)?))
+            }
+            Expr::Param(_) | Expr::SharedBase(_) | Expr::DynSharedBase => {
+                Ok(format!("{}[0]", self.base(ptr)?))
+            }
+            other => Err(format!("unprintable address: {other:?}")),
+        }
+    }
+
+    fn const_str(c: &Const) -> Result<String, String> {
+        Ok(match c {
+            Const::I32(v) => format!("{v}"),
+            Const::I64(v) => format!("{v}l"),
+            Const::F32(v) => {
+                if !v.is_finite() {
+                    return Err(format!("non-finite f32 constant {v}"));
+                }
+                format!("{v:?}f")
+            }
+            Const::F64(v) => {
+                if !v.is_finite() {
+                    return Err(format!("non-finite f64 constant {v}"));
+                }
+                format!("{v:?}")
+            }
+            Const::Bool(v) => format!("{v}"),
+        })
+    }
+
+    fn expr(&self, e: &Expr) -> Result<String, String> {
+        Ok(match e {
+            Expr::Const(c) => Self::const_str(c)?,
+            Expr::Reg(r) => self.reg_name(*r),
+            Expr::Param(i) => match self.k.params[*i].ty {
+                ParamTy::Scalar(_) => self.k.params[*i].name.clone(),
+                ParamTy::Ptr(_, _) => {
+                    return Err(format!("pointer `{}` in scalar position", self.k.params[*i].name))
+                }
+            },
+            Expr::Special(s) => match s {
+                Special::ThreadIdxX => "threadIdx.x".into(),
+                Special::ThreadIdxY => "threadIdx.y".into(),
+                Special::BlockIdxX => "blockIdx.x".into(),
+                Special::BlockIdxY => "blockIdx.y".into(),
+                Special::BlockDimX => "blockDim.x".into(),
+                Special::BlockDimY => "blockDim.y".into(),
+                Special::GridDimX => "gridDim.x".into(),
+                Special::GridDimY => "gridDim.y".into(),
+                Special::LaneId | Special::WarpId => {
+                    return Err("laneId/warpId are not frontend syntax".into())
+                }
+            },
+            Expr::Bin(op, a, b) => {
+                let bool_ops = matches!(self.vk(a)?, VK::S(Ty::Bool));
+                let sym = match op {
+                    BinOp::Add => "+",
+                    BinOp::Sub => "-",
+                    BinOp::Mul => "*",
+                    BinOp::Div => "/",
+                    BinOp::Rem => "%",
+                    BinOp::And => {
+                        if bool_ops {
+                            "&&"
+                        } else {
+                            "&"
+                        }
+                    }
+                    BinOp::Or => {
+                        if bool_ops {
+                            "||"
+                        } else {
+                            "|"
+                        }
+                    }
+                    BinOp::Xor => "^",
+                    BinOp::Shl => "<<",
+                    BinOp::Shr => ">>",
+                    BinOp::Lt => "<",
+                    BinOp::Le => "<=",
+                    BinOp::Gt => ">",
+                    BinOp::Ge => ">=",
+                    BinOp::Eq => "==",
+                    BinOp::Ne => "!=",
+                    BinOp::Min | BinOp::Max => {
+                        let f = if *op == BinOp::Min { "min" } else { "max" };
+                        return Ok(format!("{f}({}, {})", self.expr(a)?, self.expr(b)?));
+                    }
+                };
+                format!("({} {} {})", self.expr(a)?, sym, self.expr(b)?)
+            }
+            Expr::Un(op, a) => {
+                let at = self.scalar_ty(a)?;
+                let name = |f32n: &str, f64n: &str| -> Result<String, String> {
+                    match at {
+                        Ty::F32 => Ok(f32n.into()),
+                        Ty::F64 => Ok(f64n.into()),
+                        other => Err(format!("math builtin over `{}`", other.c_name())),
+                    }
+                };
+                match op {
+                    UnOp::Neg => format!("(-{})", self.expr(a)?),
+                    UnOp::Not => format!("(!{})", self.expr(a)?),
+                    UnOp::Sqrt => format!("{}({})", name("sqrtf", "sqrt")?, self.expr(a)?),
+                    UnOp::Exp => format!("{}({})", name("expf", "exp")?, self.expr(a)?),
+                    UnOp::Log => format!("{}({})", name("logf", "log")?, self.expr(a)?),
+                    UnOp::Abs => format!("{}({})", name("fabsf", "fabs")?, self.expr(a)?),
+                    UnOp::Floor => format!("{}({})", name("floorf", "floor")?, self.expr(a)?),
+                    UnOp::Ceil => format!("{}({})", name("ceilf", "ceil")?, self.expr(a)?),
+                    UnOp::Sin => format!("{}({})", name("sinf", "sin")?, self.expr(a)?),
+                    UnOp::Cos => format!("{}({})", name("cosf", "cos")?, self.expr(a)?),
+                    UnOp::Rsqrt => format!("{}({})", name("rsqrtf", "rsqrt")?, self.expr(a)?),
+                }
+            }
+            Expr::Cast(t, a) => format!("({})({})", t.c_name(), self.expr(a)?),
+            Expr::Load { ptr, .. } => self.place(ptr)?,
+            Expr::Select { cond, then_, else_ } => format!(
+                "({} ? {} : {})",
+                self.expr(cond)?,
+                self.expr(then_)?,
+                self.expr(else_)?
+            ),
+            other => return Err(format!("unprintable expression: {other:?}")),
+        })
+    }
+
+    fn stmt(&self, s: &Stmt, out: &mut String, ind: usize) -> Result<(), String> {
+        let pad = "    ".repeat(ind);
+        match s {
+            Stmt::Assign { dst, expr } => {
+                let rhs = match expr {
+                    Expr::WarpShfl { kind, val, lane } => {
+                        let f = match kind {
+                            ShflKind::Idx => "__shfl_sync",
+                            ShflKind::Up => "__shfl_up_sync",
+                            ShflKind::Down => "__shfl_down_sync",
+                            ShflKind::Xor => "__shfl_xor_sync",
+                        };
+                        format!("{f}(0xffffffff, {}, {})", self.expr(val)?, self.expr(lane)?)
+                    }
+                    Expr::WarpVote { kind, pred } => {
+                        let f = match kind {
+                            VoteKind::Any => "__any_sync",
+                            VoteKind::All => "__all_sync",
+                            VoteKind::Ballot => "__ballot_sync",
+                        };
+                        format!("{f}(0xffffffff, {})", self.expr(pred)?)
+                    }
+                    _ => self.expr(expr)?,
+                };
+                let _ = writeln!(out, "{pad}{} = {rhs};", self.reg_name(*dst));
+            }
+            Stmt::Store { ptr, val, .. } => {
+                let _ = writeln!(out, "{pad}{} = {};", self.place(ptr)?, self.expr(val)?);
+            }
+            Stmt::SyncThreads => {
+                let _ = writeln!(out, "{pad}__syncthreads();");
+            }
+            Stmt::If { cond, then_, else_ } => {
+                if self.scalar_ty(cond)? != Ty::Bool {
+                    return Err("non-bool `if` condition".into());
+                }
+                let _ = writeln!(out, "{pad}if ({}) {{", self.expr(cond)?);
+                for s in then_ {
+                    self.stmt(s, out, ind + 1)?;
+                }
+                if !else_.is_empty() {
+                    let _ = writeln!(out, "{pad}}} else {{");
+                    for s in else_ {
+                        self.stmt(s, out, ind + 1)?;
+                    }
+                }
+                let _ = writeln!(out, "{pad}}}");
+            }
+            Stmt::For { var, start, end, step, body } => {
+                if body_writes_reg(body, *var) {
+                    return Err("`for` body writes the loop variable".into());
+                }
+                let t = self.reg_ty[var.0 as usize].ok_or("for var untyped")?;
+                let v = self.reg_name(*var);
+                let cty = if t == Ty::I64 { "long long" } else { "int" };
+                let _ = writeln!(
+                    out,
+                    "{pad}for ({cty} {v} = {}; {v} < {}; {v} += {}) {{",
+                    self.expr(start)?,
+                    self.expr(end)?,
+                    self.expr(step)?
+                );
+                for s in body {
+                    self.stmt(s, out, ind + 1)?;
+                }
+                let _ = writeln!(out, "{pad}}}");
+            }
+            Stmt::While { cond, body } => {
+                if self.scalar_ty(cond)? != Ty::Bool {
+                    return Err("non-bool `while` condition".into());
+                }
+                let _ = writeln!(out, "{pad}while ({}) {{", self.expr(cond)?);
+                for s in body {
+                    self.stmt(s, out, ind + 1)?;
+                }
+                let _ = writeln!(out, "{pad}}}");
+            }
+            Stmt::Break => {
+                let _ = writeln!(out, "{pad}break;");
+            }
+            Stmt::Continue => {
+                let _ = writeln!(out, "{pad}continue;");
+            }
+            Stmt::Return => {
+                let _ = writeln!(out, "{pad}return;");
+            }
+            Stmt::AtomicRmw { op, ptr, val, dst, .. } => {
+                let f = match op {
+                    AtomicOp::Add => "atomicAdd",
+                    AtomicOp::Sub => "atomicSub",
+                    AtomicOp::Min => "atomicMin",
+                    AtomicOp::Max => "atomicMax",
+                    AtomicOp::And => "atomicAnd",
+                    AtomicOp::Or => "atomicOr",
+                    AtomicOp::Xor => "atomicXor",
+                    AtomicOp::Exch => "atomicExch",
+                };
+                let call = format!("{f}(&{}, {})", self.place(ptr)?, self.expr(val)?);
+                match dst {
+                    Some(d) => {
+                        let _ = writeln!(out, "{pad}{} = {call};", self.reg_name(*d));
+                    }
+                    None => {
+                        let _ = writeln!(out, "{pad}{call};");
+                    }
+                }
+            }
+            Stmt::AtomicCas { ptr, cmp, val, dst, .. } => {
+                let call = format!(
+                    "atomicCAS(&{}, {}, {})",
+                    self.place(ptr)?,
+                    self.expr(cmp)?,
+                    self.expr(val)?
+                );
+                match dst {
+                    Some(d) => {
+                        let _ = writeln!(out, "{pad}{} = {call};", self.reg_name(*d));
+                    }
+                    None => {
+                        let _ = writeln!(out, "{pad}{call};");
+                    }
+                }
+            }
+            other => return Err(format!("unprintable statement: {other:?}")),
+        }
+        Ok(())
+    }
+}
+
+/// Does `body` assign `var` (directly or in a nested construct)?
+fn body_writes_reg(body: &[Stmt], var: Reg) -> bool {
+    body.iter().any(|s| match s {
+        Stmt::Assign { dst, .. } => *dst == var,
+        Stmt::AtomicRmw { dst, .. } | Stmt::AtomicCas { dst, .. } => *dst == Some(var),
+        Stmt::If { then_, else_, .. } => {
+            body_writes_reg(then_, var) || body_writes_reg(else_, var)
+        }
+        Stmt::For { var: v, body, .. } => *v == var || body_writes_reg(body, var),
+        Stmt::While { body, .. } => body_writes_reg(body, var),
+        _ => false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernels;
+
+    /// vecAdd round-trips to the identical CIR tree.
+    #[test]
+    fn vecadd_prints_and_reparses_identically() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F32);
+        let bb = b.ptr_param("b", Ty::F32);
+        let c = b.ptr_param("c", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bl| {
+            let sum = add(at(a.clone(), reg(id), Ty::F32), at(bb.clone(), reg(id), Ty::F32));
+            bl.store_at(c.clone(), reg(id), sum, Ty::F32);
+        });
+        let k = b.build();
+        let src = kernel_to_cuda(&k).unwrap();
+        let re = parse_kernels(&src).unwrap_or_else(|d| panic!("{}\n{src}", d.render("rt.cu")));
+        assert_eq!(re.len(), 1);
+        assert_eq!(re[0], k, "round-tripped CIR differs:\n{src}");
+    }
+
+    /// A kernel exercising for/shared/sync/atomics/select round-trips
+    /// to structurally identical CIR (registers may renumber, but this
+    /// shape allocates in the same order).
+    #[test]
+    fn structured_kernel_reparses_identically() {
+        let mut b = KernelBuilder::new("k");
+        let p = b.ptr_param("p", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let tile = b.shared_array("tile", Ty::I32, 64);
+        let t = b.assign(tid_x());
+        b.store_at(tile.clone(), reg(t), at(p.clone(), reg(t), Ty::I32), Ty::I32);
+        b.sync_threads();
+        let acc = b.assign(c_i32(0));
+        b.for_(c_i32(0), n.clone(), c_i32(1), |b, i| {
+            let pick = select(lt(reg(i), c_i32(32)), at(tile.clone(), reg(i), Ty::I32), c_i32(1));
+            b.set(acc, add(reg(acc), pick));
+        });
+        b.atomic_rmw_void(AtomicOp::Add, index(p.clone(), c_i32(0), Ty::I32), reg(acc), Ty::I32);
+        let k = b.build();
+        let src = kernel_to_cuda(&k).unwrap();
+        let re = parse_kernels(&src).unwrap_or_else(|d| panic!("{}\n{src}", d.render("rt.cu")));
+        assert_eq!(re[0], k, "round-tripped CIR differs:\n{src}");
+    }
+
+    #[test]
+    fn post_fission_forms_are_rejected() {
+        let mut b = KernelBuilder::new("w");
+        let p = b.ptr_param("p", Ty::I32);
+        let _ = b.shfl(ShflKind::Down, at(p.clone(), c_i32(0), Ty::I32), c_i32(1));
+        // shuffles are printable (assignment form)…
+        assert!(kernel_to_cuda(&b.build()).is_ok());
+        // …but laneId is not frontend syntax.
+        let mut b = KernelBuilder::new("w2");
+        let p = b.ptr_param("p", Ty::I32);
+        b.store_at(p.clone(), c_i32(0), special(Special::LaneId), Ty::I32);
+        assert!(kernel_to_cuda(&b.build()).unwrap_err().contains("laneId"));
+    }
+}

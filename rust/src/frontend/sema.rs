@@ -37,7 +37,9 @@ impl VTy {
 pub enum Sym {
     Param { index: usize, vty: VTy },
     Local { reg: Reg, ty: Ty },
-    SharedArr { index: usize, elem: Ty },
+    /// Static shared array; `cols` is `Some(C)` for the 2-D
+    /// `__shared__ T a[R][C]` form (flattened row-major at emit).
+    SharedArr { index: usize, elem: Ty, cols: Option<u32> },
     DynShared { elem: Ty },
 }
 
@@ -110,8 +112,10 @@ impl<'a> Sema<'a> {
         self.scopes.pop();
     }
 
-    /// Declare in the innermost scope; rejects same-scope redeclaration.
+    /// Declare in the innermost scope; rejects same-scope redeclaration
+    /// and reserved builtin-constant names.
     pub fn declare(&mut self, name: &str, sym: Sym, span: Span) -> Result<(), Diagnostic> {
+        self.check_reserved(name, span)?;
         let scope = self.scopes.last_mut().expect("sema has an open scope");
         if scope.contains_key(name) {
             return Err(Diagnostic::at(format!("redeclaration of `{name}`"), span, self.src));
@@ -128,10 +132,27 @@ impl<'a> Sema<'a> {
         sym: Sym,
         span: Span,
     ) -> Result<(), Diagnostic> {
+        self.check_reserved(name, span)?;
         if self.scopes.iter().any(|s| s.contains_key(name)) {
             return Err(Diagnostic::at(format!("redeclaration of `{name}`"), span, self.src));
         }
         self.scopes[0].insert(name.to_string(), sym);
+        Ok(())
+    }
+
+    /// `true`/`FLT_MAX`/… are keywords or `<float.h>` macros in real
+    /// CUDA — a declaration of that name would not compile under nvcc
+    /// either. Rejecting them here also guarantees a `__device__`
+    /// helper body that references one can never be captured by a
+    /// call-site local after inlining.
+    fn check_reserved(&self, name: &str, span: Span) -> Result<(), Diagnostic> {
+        if is_builtin_constant(name) {
+            return Err(Diagnostic::at(
+                format!("cannot declare `{name}`: the name is a reserved builtin constant"),
+                span,
+                self.src,
+            ));
+        }
         Ok(())
     }
 
@@ -201,12 +222,18 @@ impl<'a> Sema<'a> {
 
     fn lower_ident(&mut self, name: &str, span: Span) -> Result<(Expr, VTy), Diagnostic> {
         if let Some(sym) = self.lookup(name) {
-            return Ok(match sym {
-                Sym::Param { index, vty } => (Expr::Param(index), vty),
-                Sym::Local { reg, ty } => (Expr::Reg(reg), VTy::Scalar(ty)),
-                Sym::SharedArr { index, elem } => (Expr::SharedBase(index), VTy::Ptr(elem)),
-                Sym::DynShared { elem } => (Expr::DynSharedBase, VTy::Ptr(elem)),
-            });
+            return match sym {
+                Sym::Param { index, vty } => Ok((Expr::Param(index), vty)),
+                Sym::Local { reg, ty } => Ok((Expr::Reg(reg), VTy::Scalar(ty))),
+                Sym::SharedArr { cols: Some(_), .. } => Err(self.diag(
+                    format!("2-D shared array `{name}` must be indexed as `{name}[i][j]`"),
+                    span,
+                )),
+                Sym::SharedArr { index, elem, cols: None } => {
+                    Ok((Expr::SharedBase(index), VTy::Ptr(elem)))
+                }
+                Sym::DynShared { elem } => Ok((Expr::DynSharedBase, VTy::Ptr(elem))),
+            };
         }
         // Builtin constants (usable unless shadowed).
         match name {
@@ -256,6 +283,57 @@ impl<'a> Sema<'a> {
     pub fn lower_place(&mut self, e: &ExprAst) -> Result<(Expr, Ty), Diagnostic> {
         match e {
             ExprAst::Index { base, idx, span } => {
+                // `tile[i][j]` on a 2-D shared array flattens row-major
+                // to `&tile[i * C + j]`.
+                if let ExprAst::Index { base: inner, idx: row, .. } = &**base {
+                    if let ExprAst::Ident { name, .. } = &**inner {
+                        if let Some(Sym::SharedArr { index, elem, cols: Some(c) }) =
+                            self.lookup(name)
+                        {
+                            let (ri, rt) = self.lower_scalar(row, *span)?;
+                            if !matches!(rt, Ty::I32 | Ty::I64) {
+                                return Err(self.diag(
+                                    format!(
+                                        "array index must be an integer, found `{}`",
+                                        rt.c_name()
+                                    ),
+                                    row.span(),
+                                ));
+                            }
+                            let (ci, ct) = self.lower_scalar(idx, *span)?;
+                            if !matches!(ct, Ty::I32 | Ty::I64) {
+                                return Err(self.diag(
+                                    format!(
+                                        "array index must be an integer, found `{}`",
+                                        ct.c_name()
+                                    ),
+                                    idx.span(),
+                                ));
+                            }
+                            let t = if rt == Ty::I64 || ct == Ty::I64 { Ty::I64 } else { Ty::I32 };
+                            let ri = self.coerce(ri, rt, t, *span)?;
+                            let ci = self.coerce(ci, ct, t, *span)?;
+                            let width = Expr::Const(if t == Ty::I64 {
+                                Const::I64(c as i64)
+                            } else {
+                                Const::I32(c as i32)
+                            });
+                            let flat = Expr::Bin(
+                                BinOp::Add,
+                                Box::new(Expr::Bin(BinOp::Mul, Box::new(ri), Box::new(width))),
+                                Box::new(ci),
+                            );
+                            return Ok((
+                                Expr::Index {
+                                    base: Box::new(Expr::SharedBase(index)),
+                                    idx: Box::new(flat),
+                                    elem,
+                                },
+                                elem,
+                            ));
+                        }
+                    }
+                }
                 let (b, bty) = self.lower_expr(base)?;
                 let elem = match bty {
                     VTy::Ptr(t) => t,
@@ -496,7 +574,7 @@ impl<'a> Sema<'a> {
             };
             return Ok((Expr::Un(un, Box::new(a)), VTy::Scalar(t)));
         }
-        if matches!(name, "min" | "max" | "fminf" | "fmaxf" | "fmin" | "fmax") {
+        if is_minmax_name(name) {
             if args.len() != 2 {
                 return Err(self.diag(format!("`{name}` takes exactly two arguments"), span));
             }
@@ -556,17 +634,44 @@ impl<'a> Sema<'a> {
     }
 }
 
+/// Builtin constants `lower_ident` resolves when the name is not
+/// declared; reserved by [`Sema::declare`].
+pub fn is_builtin_constant(name: &str) -> bool {
+    matches!(
+        name,
+        "true" | "false" | "FLT_MAX" | "FLT_MIN" | "DBL_MAX" | "INT_MAX" | "INT_MIN"
+    )
+}
+
+/// The two-argument min/max builtin family `lower_call` maps onto
+/// `BinOp::Min`/`BinOp::Max`.
+pub fn is_minmax_name(name: &str) -> bool {
+    matches!(name, "min" | "max" | "fminf" | "fmaxf" | "fmin" | "fmax")
+}
+
+/// Any callable builtin name the frontend owns (math, min/max, warp
+/// collectives, atomics, the barrier) — the set `__device__` helpers
+/// may not shadow.
+pub fn is_builtin_call(name: &str) -> bool {
+    math_unop(name).is_some()
+        || shfl_kind(name).is_some()
+        || vote_kind(name).is_some()
+        || is_atomic_name(name)
+        || is_minmax_name(name)
+        || name == "__syncthreads"
+}
+
 pub fn math_unop(name: &str) -> Option<UnOp> {
     Some(match name {
-        "sqrtf" | "sqrt" => UnOp::Sqrt,
-        "expf" | "exp" => UnOp::Exp,
-        "logf" | "log" => UnOp::Log,
+        "sqrtf" | "sqrt" | "__fsqrt_rn" => UnOp::Sqrt,
+        "expf" | "exp" | "__expf" => UnOp::Exp,
+        "logf" | "log" | "__logf" => UnOp::Log,
         "fabsf" | "fabs" | "abs" => UnOp::Abs,
         "floorf" | "floor" => UnOp::Floor,
         "ceilf" | "ceil" => UnOp::Ceil,
-        "sinf" | "sin" => UnOp::Sin,
-        "cosf" | "cos" => UnOp::Cos,
-        "rsqrtf" | "rsqrt" => UnOp::Rsqrt,
+        "sinf" | "sin" | "__sinf" => UnOp::Sin,
+        "cosf" | "cos" | "__cosf" => UnOp::Cos,
+        "rsqrtf" | "rsqrt" | "__frsqrt_rn" => UnOp::Rsqrt,
         _ => return None,
     })
 }
@@ -690,6 +795,17 @@ mod tests {
         let e = s.lower_expr(&ast).unwrap_err();
         assert_eq!(e.msg, "undeclared identifier `nope`");
         assert_eq!((e.line, e.col), (3, 7));
+    }
+
+    #[test]
+    fn reserved_builtin_constant_names_cannot_be_declared() {
+        let mut s = sema();
+        let r = s.alloc_reg();
+        for name in ["true", "false", "FLT_MAX", "INT_MIN"] {
+            let e = s.declare(name, Sym::Local { reg: r, ty: Ty::I32 }, span()).unwrap_err();
+            let want = format!("cannot declare `{name}`: the name is a reserved builtin constant");
+            assert_eq!(e.msg, want);
+        }
     }
 
     #[test]

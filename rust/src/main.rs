@@ -65,6 +65,9 @@ fn print_help() {
                              Table II verdicts and the resolved pass\n\
                              pipeline; non-zero exit on any\n\
                              parse/sema/verify diagnostic\n\
+           --kernel NAME     restrict the dump to one kernel of a\n\
+                             multi-kernel file (all kernels still\n\
+                             compile; unknown names are diagnosed)\n\
            --emit E          cir|mpmd|bytecode — which form to print\n\
                              (default cir; bytecode = disassembled\n\
                              register-machine program)\n\
@@ -100,6 +103,20 @@ fn print_help() {
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+/// Resolve `--kernel NAME` against a parsed translation unit: a
+/// diagnostic (not a panic) for an unknown name, listing what the file
+/// does define. Shared by `run --cu` and `compile`.
+fn find_kernel<'a>(
+    kernels: &'a [cupbop::ir::Kernel],
+    name: &str,
+    path: &str,
+) -> Result<&'a cupbop::ir::Kernel, ()> {
+    kernels.iter().find(|k| k.name == name).ok_or_else(|| {
+        let names: Vec<&str> = kernels.iter().map(|k| k.name.as_str()).collect();
+        eprintln!("no kernel `{name}` in {path} (found: {})", names.join(", "));
+    })
 }
 
 fn has_flag(args: &[String], name: &str) -> bool {
@@ -236,13 +253,9 @@ fn cmd_run_cu(path: &str, args: &[String]) -> ExitCode {
         }
     };
     let kernel = match flag_value(args, "--kernel") {
-        Some(n) => match kernels.iter().find(|k| k.name == n) {
-            Some(k) => k.clone(),
-            None => {
-                let names: Vec<&str> = kernels.iter().map(|k| k.name.as_str()).collect();
-                eprintln!("no kernel `{n}` in {path} (found: {})", names.join(", "));
-                return ExitCode::FAILURE;
-            }
+        Some(n) => match find_kernel(&kernels, n, path) {
+            Ok(k) => k.clone(),
+            Err(()) => return ExitCode::FAILURE,
         },
         None => kernels[0].clone(),
     };
@@ -316,7 +329,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
                 continue;
             }
             if a.starts_with("--") {
-                skip = matches!(a.as_str(), "--emit" | "--opt");
+                skip = matches!(a.as_str(), "--emit" | "--opt" | "--kernel");
                 continue;
             }
             fs.push(a);
@@ -325,7 +338,8 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     };
     if files.is_empty() {
         eprintln!(
-            "usage: cupbop compile <file.cu> [more.cu ...] [--emit cir|mpmd|bytecode] [--opt 0|1|2]"
+            "usage: cupbop compile <file.cu> [more.cu ...] [--kernel NAME] \
+             [--emit cir|mpmd|bytecode] [--opt 0|1|2]"
         );
         return ExitCode::FAILURE;
     }
@@ -339,9 +353,10 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         }
     };
     let opt = parse_opt(args);
+    let only = flag_value(args, "--kernel");
     let mut failed = false;
     for f in files {
-        if compile_file(f, emit, opt).is_err() {
+        if compile_file(f, emit, opt, only).is_err() {
             failed = true;
         }
     }
@@ -352,13 +367,20 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     }
 }
 
-fn compile_file(path: &str, emit: EmitKind, opt: OptLevel) -> Result<(), ()> {
+fn compile_file(path: &str, emit: EmitKind, opt: OptLevel, only: Option<&str>) -> Result<(), ()> {
     let src = std::fs::read_to_string(path).map_err(|e| {
         eprintln!("cannot read `{path}`: {e}");
     })?;
     let kernels = frontend::parse_kernels(&src).map_err(|d| {
         eprint!("{}", d.render(path));
     })?;
+    // `--kernel NAME` restricts the dump to one kernel of a
+    // multi-kernel translation unit; an unknown name is a diagnostic,
+    // not a panic (and not silence).
+    let kernels: Vec<_> = match only {
+        Some(n) => vec![find_kernel(&kernels, n, path)?.clone()],
+        None => kernels,
+    };
     println!("// {path}: {} kernel(s)", kernels.len());
     for k in &kernels {
         // The full pipeline must accept frontend output unchanged.

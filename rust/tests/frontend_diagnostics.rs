@@ -119,3 +119,59 @@ fn golden_3d_geometry_rejected() {
     assert_eq!(d.msg, "3D geometry (`.z`) is not supported; grids and blocks are 2D");
     assert_eq!((d.line, d.col), (2, 22));
 }
+
+#[test]
+fn golden_recursive_device_fn() {
+    let d = err(
+        "__device__ int fact(int n) { return n * fact(n - 1); }\n\
+         __global__ void k(int* p) { p[0] = fact(4); }",
+    );
+    assert_eq!(
+        d.msg,
+        "`__device__` function `fact` is recursive (cycle: fact -> fact); \
+         recursion cannot be inlined"
+    );
+    assert_eq!((d.line, d.col), (1, 41));
+    assert_eq!(
+        d.render("fact.cu"),
+        "error: `__device__` function `fact` is recursive (cycle: fact -> fact); \
+         recursion cannot be inlined\n\
+         \x20--> fact.cu:1:41\n\
+         \x20  |\n\
+         \x201 | __device__ int fact(int n) { return n * fact(n - 1); }\n\
+         \x20  |                                         ^\n"
+    );
+}
+
+#[test]
+fn golden_function_like_macro() {
+    let d = err("#define SQ(x) ((x) * (x))\n__global__ void k(int* p) { p[0] = 1; }");
+    assert_eq!(
+        d.msg,
+        "function-like macro `SQ(…)` is not supported \
+         (only object-like `#define NAME tokens`)"
+    );
+    assert_eq!((d.line, d.col), (1, 9));
+}
+
+#[test]
+fn golden_2d_shared_single_index() {
+    let d = err(
+        "__global__ void k(float* a) {\n    __shared__ float tile[4][4];\n    a[0] = tile[1];\n}",
+    );
+    assert_eq!(d.msg, "2-D shared array `tile` must be indexed as `tile[i][j]`");
+    assert_eq!((d.line, d.col), (3, 12));
+}
+
+#[test]
+fn golden_device_fn_bad_body() {
+    let d = err(
+        "__device__ int f(int x) { int y = x; return y; }\n\
+         __global__ void k(int* p) { p[0] = f(1); }",
+    );
+    assert_eq!(
+        d.msg,
+        "`__device__` function `f` body must be a single `return <expr>;` statement"
+    );
+    assert_eq!((d.line, d.col), (1, 27));
+}

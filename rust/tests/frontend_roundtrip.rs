@@ -91,27 +91,27 @@ fn roundtrip_registry(bench: &str, cu_file: &str) {
 
 #[test]
 fn kmeans_roundtrip() {
-    roundtrip_registry("kmeans", "kmeans.cu");
+    roundtrip_registry("kmeans", "heteromark/kmeans.cu");
 }
 
 #[test]
 fn hist_roundtrip() {
-    roundtrip_registry("hist", "hist.cu");
+    roundtrip_registry("hist", "heteromark/hist.cu");
 }
 
 #[test]
 fn bs_roundtrip() {
-    roundtrip_registry("bs", "bs.cu");
+    roundtrip_registry("bs", "heteromark/bs.cu");
 }
 
 #[test]
 fn fir_roundtrip() {
-    roundtrip_registry("fir", "fir.cu");
+    roundtrip_registry("fir", "heteromark/fir.cu");
 }
 
 #[test]
 fn hotspot_roundtrip() {
-    roundtrip_registry("hotspot", "hotspot.cu");
+    roundtrip_registry("hotspot", "rodinia/hotspot.cu");
 }
 
 /// vecAdd has no registry row (it is the quickstart example), so the
@@ -150,20 +150,28 @@ fn vecadd_roundtrip() {
     }
 }
 
-/// Every corpus file parses, verifies and is accepted by the full
+/// Every corpus file — including the per-suite `rodinia/` and
+/// `heteromark/` twins — parses, verifies and is accepted by the full
 /// `compile_kernel` pipeline unchanged (fission, param packing,
-/// bytecode lowering) — including the warp-collective and
+/// bytecode lowering), including the warp-collective and
 /// dynamic-shared kernels that have no registry counterpart.
 #[test]
 fn whole_corpus_compiles() {
     let dir = corpus_dir();
-    let mut files: Vec<_> = std::fs::read_dir(&dir)
-        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
-        .map(|e| e.unwrap().path())
-        .filter(|p| p.extension().and_then(|s| s.to_str()) == Some("cu"))
-        .collect();
+    let mut files = Vec::new();
+    let mut pending = vec![dir.clone()];
+    while let Some(d) = pending.pop() {
+        for e in std::fs::read_dir(&d).unwrap_or_else(|e| panic!("{}: {e}", d.display())) {
+            let p = e.unwrap().path();
+            if p.is_dir() {
+                pending.push(p);
+            } else if p.extension().and_then(|s| s.to_str()) == Some("cu") {
+                files.push(p);
+            }
+        }
+    }
     files.sort();
-    assert!(files.len() >= 6, "expected ≥6 corpus files, found {}", files.len());
+    assert!(files.len() >= 30, "expected ≥30 corpus files, found {}", files.len());
     for f in files {
         let src = std::fs::read_to_string(&f).unwrap();
         let kernels = frontend::parse_kernels(&src)

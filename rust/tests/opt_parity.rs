@@ -25,11 +25,11 @@ use std::sync::Arc;
 
 const CORPUS: &[&str] = &[
     "vecadd.cu",
-    "kmeans.cu",
-    "hist.cu",
-    "bs.cu",
-    "fir.cu",
-    "hotspot.cu",
+    "heteromark/kmeans.cu",
+    "heteromark/hist.cu",
+    "heteromark/bs.cu",
+    "heteromark/fir.cu",
+    "rodinia/hotspot.cu",
     "warp_sum.cu",
     "block_reverse.cu",
 ];

@@ -450,6 +450,124 @@ fn prop_exec_mode_parity_under_stealing() {
     });
 }
 
+/// Invariant: a random well-typed kernel, pretty-printed to CUDA
+/// source (`frontend::printer`) and recompiled through the frontend,
+/// produces bit-identical outputs and identical ExecStats on the
+/// Reference oracle — under both CIR engines at `-O0` and `-O2`. This
+/// fuzzes the frontend against the printer's inverse claim: the
+/// emitter's trees are exactly the trees the source notation denotes.
+#[test]
+fn prop_frontend_roundtrip() {
+    use cupbop::benchsuite::spec;
+    use cupbop::compiler::OptLevel;
+    use cupbop::frameworks::{ExecMode, ReferenceRuntime};
+    use cupbop::frontend::harness::{synth_program, SynthCfg};
+    use cupbop::frontend::printer::kernel_to_cuda;
+    use cupbop::frontend::parse_kernels;
+
+    fn run(
+        built: &spec::BuiltProgram,
+        exec: ExecMode,
+    ) -> (Vec<Vec<u8>>, cupbop::exec::StatsSnapshot) {
+        let mut arrays = built.arrays.clone();
+        let mut rt = ReferenceRuntime::new(built.variants.clone(), built.mem_cap.max(1 << 22))
+            .with_exec(exec);
+        cupbop::host::run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
+            .unwrap_or_else(|e| panic!("[{exec:?}] host exec: {e}"));
+        (arrays, rt.stats.snapshot())
+    }
+
+    for_random_cases(20, 0xF80, |rng| {
+        let mut b = KernelBuilder::new("fuzzed");
+        let a = b.ptr_param("a", Ty::F32);
+        let q = b.ptr_param("q", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let gid = b.assign(global_tid());
+        let nsteps = rng.range_usize(1, 8);
+        // pre-draw the random step recipe so no RNG call happens inside
+        // nested builder closures
+        #[derive(Clone, Copy)]
+        enum St {
+            FAdd(f32),
+            FMul(f32),
+            FSqrtAbs,
+            IAdd(i32),
+            IRem(i32),
+            Branch(i32, f32),
+            Loop(i32),
+            Sel(f32),
+        }
+        let steps: Vec<St> = (0..nsteps)
+            .map(|_| match rng.below(8) {
+                0 => St::FAdd((rng.below(100) as f32) / 10.0 + 0.5),
+                1 => St::FMul((rng.below(50) as f32) / 25.0 + 0.25),
+                2 => St::FSqrtAbs,
+                3 => St::IAdd(rng.range_i64(-50, 50) as i32),
+                4 => St::IRem(rng.range_i64(2, 9) as i32),
+                5 => St::Branch(rng.range_i64(-20, 20) as i32, (rng.below(40) as f32) / 8.0),
+                6 => St::Loop(rng.range_i64(1, 5) as i32),
+                _ => St::Sel((rng.below(60) as f32) / 6.0),
+            })
+            .collect();
+        b.if_(lt(reg(gid), n.clone()), |b| {
+            let f = b.assign(at(a.clone(), reg(gid), Ty::F32));
+            let x = b.assign(at(q.clone(), reg(gid), Ty::I32));
+            for st in &steps {
+                match *st {
+                    St::FAdd(c) => b.set(f, add(reg(f), c_f32(c))),
+                    St::FMul(c) => b.set(f, mul(reg(f), c_f32(c))),
+                    St::FSqrtAbs => b.set(f, un(UnOp::Sqrt, un(UnOp::Abs, reg(f)))),
+                    St::IAdd(c) => b.set(x, add(reg(x), c_i32(c))),
+                    St::IRem(c) => b.set(x, rem(reg(x), c_i32(c))),
+                    St::Branch(c, c2) => b.if_else(
+                        lt(reg(x), c_i32(c)),
+                        |bb| bb.set(f, add(reg(f), c_f32(c2))),
+                        |bb| bb.set(x, mul(reg(x), c_i32(3))),
+                    ),
+                    St::Loop(k) => b.for_(c_i32(0), c_i32(k), c_i32(1), |bb, _i| {
+                        bb.set(f, mul(reg(f), c_f32(1.5)));
+                        bb.set(x, add(reg(x), c_i32(1)));
+                    }),
+                    St::Sel(c) => b.set(
+                        f,
+                        select(
+                            eq(rem(reg(x), c_i32(2)), c_i32(0)),
+                            add(reg(f), c_f32(c)),
+                            reg(f),
+                        ),
+                    ),
+                }
+            }
+            b.store_at(a.clone(), reg(gid), reg(f), Ty::F32);
+            b.store_at(q.clone(), reg(gid), reg(x), Ty::I32);
+        });
+        let k = b.build();
+
+        let src = kernel_to_cuda(&k).unwrap_or_else(|e| panic!("unprintable kernel: {e}"));
+        let re = parse_kernels(&src)
+            .unwrap_or_else(|d| panic!("{}\nsource:\n{src}", d.render("fuzz.cu")));
+        assert_eq!(re.len(), 1, "one kernel in, one kernel out");
+
+        let cfg = SynthCfg {
+            n: rng.range_usize(16, 600),
+            block: rng.range_usize(1, 65) as u32,
+            grid: None,
+        };
+        for opt in [OptLevel::O0, OptLevel::O2] {
+            let (pa, _) = synth_program(&k, &cfg).unwrap();
+            let (pb, _) = synth_program(&re[0], &cfg).unwrap();
+            let b0 = spec::build_prepared_opt("fuzzed", pa, opt);
+            let b1 = spec::build_prepared_opt("fuzzed", pb, opt);
+            for exec in [ExecMode::Interpret, ExecMode::Bytecode] {
+                let (a0, s0) = run(&b0, exec);
+                let (a1, s1) = run(&b1, exec);
+                assert_eq!(a0, a1, "arrays differ [{opt:?} {exec:?}]; source:\n{src}");
+                assert_eq!(s0, s1, "ExecStats differ [{opt:?} {exec:?}]; source:\n{src}");
+            }
+        }
+    });
+}
+
 /// Invariant: randomized CIR arithmetic expressions evaluate the same
 /// through the interpreter as through direct host evaluation.
 #[test]
