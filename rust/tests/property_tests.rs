@@ -462,8 +462,8 @@ fn prop_frontend_roundtrip() {
     use cupbop::compiler::OptLevel;
     use cupbop::frameworks::{ExecMode, ReferenceRuntime};
     use cupbop::frontend::harness::{synth_program, SynthCfg};
-    use cupbop::frontend::printer::kernel_to_cuda;
     use cupbop::frontend::parse_kernels;
+    use cupbop::frontend::printer::kernel_to_cuda;
 
     fn run(
         built: &spec::BuiltProgram,
