@@ -1,38 +1,127 @@
 //! fig_exec — execution-engine comparison: tree interpreter vs the
-//! lane-vectorized bytecode VM vs hand-written native closures.
+//! lane-vectorized bytecode VM (with and without superinstruction
+//! fusion) vs hand-written native closures.
 //!
 //! Every implemented benchmark runs end to end at `Scale::Tiny` on the
 //! serial reference executor (no pool, no scheduler noise) once per
-//! `ExecMode`; the table reports p50 wall-clock per engine and the
+//! engine; the table reports p50 wall-clock per engine and the
 //! per-benchmark bytecode-over-interpreter speedup, with the geomean at
 //! the bottom. Expected shape: bytecode ≥ 2× geomean over the
 //! interpreter (per-instruction lane batching removes the per-thread
 //! tree-dispatch overhead); native (where present) faster still.
+//!
+//! Trajectory mode (CI): `--json PATH` writes the table as a
+//! `BENCH_fig_exec.json` artifact; `--min-geomean X` fails the run if
+//! the bytecode/interp geomean drops below `X`; `--baseline PATH`
+//! fails if it regresses below 90% of a previously committed artifact
+//! (a `null` geomean in the baseline — the placeholder — skips the
+//! check). `--samples N` overrides the per-engine sample count.
 
 use cupbop::benchkit;
 use cupbop::benchsuite::spec::{self, Scale};
+use cupbop::compiler::{CompileCfg, OptLevel};
 use cupbop::frameworks::{ExecMode, ReferenceRuntime};
 use cupbop::host::run_host_program;
+use std::process::ExitCode;
 
 const WARMUP: usize = 1;
-const SAMPLES: usize = 5;
 
-fn main() {
+struct Row {
+    name: &'static str,
+    interp_ns: u128,
+    unfused_ns: u128,
+    fused_ns: u128,
+    native_ns: u128,
+    fell_back: bool,
+}
+
+fn arg_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn geomean(xs: &[f64]) -> f64 {
+    (xs.iter().map(|s| s.ln()).sum::<f64>() / xs.len().max(1) as f64).exp()
+}
+
+/// Pull a named geomean out of a previously committed artifact with a
+/// plain string scan (no JSON crates in this offline environment). A
+/// missing file, a missing key or a `null` value all yield `None`.
+fn read_baseline(path: &str, key: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let pat = format!("\"{key}\":");
+    let i = text.find(&pat)? + pat.len();
+    let rest = text[i..].trim_start();
+    let end = rest.find([',', '}', '\n']).unwrap_or(rest.len());
+    rest[..end].trim().parse::<f64>().ok()
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_json(path: &str, samples: usize, rows: &[Row], geo_bi: f64, geo_fu: f64) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"fig_exec\",\n");
+    s.push_str("  \"scale\": \"tiny\",\n");
+    s.push_str(&format!("  \"samples\": {samples},\n"));
+    s.push_str(&format!("  \"geomean_bytecode_over_interp\": {},\n", json_num(geo_bi)));
+    s.push_str(&format!("  \"geomean_fused_over_unfused\": {},\n", json_num(geo_fu)));
+    s.push_str("  \"benchmarks\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let bi = r.interp_ns as f64 / (r.fused_ns as f64).max(1.0);
+        let fu = r.unfused_ns as f64 / (r.fused_ns as f64).max(1.0);
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"interp_p50_ns\": {}, \"bytecode_unfused_p50_ns\": {}, \
+             \"bytecode_p50_ns\": {}, \"native_p50_ns\": {}, \"native_fell_back\": {}, \
+             \"bc_over_interp\": {}, \"fused_over_unfused\": {}}}{}\n",
+            r.name,
+            r.interp_ns,
+            r.unfused_ns,
+            r.fused_ns,
+            r.native_ns,
+            r.fell_back,
+            json_num(bi),
+            json_num(fu),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(path, s) {
+        eprintln!("fig_exec: cannot write {path}: {e}");
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let samples: usize =
+        arg_value(&args, "--samples").and_then(|v| v.parse().ok()).unwrap_or(5).max(1);
+    let json_path = arg_value(&args, "--json");
+    let min_geomean = arg_value(&args, "--min-geomean").and_then(|v| v.parse::<f64>().ok());
+    let baseline = arg_value(&args, "--baseline")
+        .and_then(|p| read_baseline(&p, "geomean_bytecode_over_interp"));
+
     println!("fig_exec — exec-engine comparison (Scale::Tiny, serial reference executor)");
     println!();
     benchkit::print_row(
-        &["benchmark", "interp p50", "bytecode p50", "native p50", "bc/interp"],
-        &[18, 12, 12, 12, 9],
+        &["benchmark", "interp p50", "bc-nofuse", "bytecode p50", "native p50", "bc/interp"],
+        &[18, 12, 12, 12, 12, 9],
     );
-    let mut speedups: Vec<f64> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
     for b in spec::all_benchmarks() {
         if b.build.is_none() {
             continue;
         }
         let built = spec::build_program(&b, Scale::Tiny);
-        let mem_cap = built.mem_cap.max(64 << 20);
-        let time = |mode: ExecMode| {
-            benchkit::bench(WARMUP, SAMPLES, || {
+        let unfused_cfg = CompileCfg { opt: OptLevel::default(), fuse: Some(false) };
+        let built_unfused = spec::build_program_cfg(&b, Scale::Tiny, unfused_cfg);
+        let time = |built: &spec::BuiltProgram, mode: ExecMode| {
+            let mem_cap = built.mem_cap.max(64 << 20);
+            benchkit::bench(WARMUP, samples, || {
                 let mut arrays = built.arrays.clone();
                 let mut rt =
                     ReferenceRuntime::new(built.variants.clone(), mem_cap).with_exec(mode);
@@ -40,23 +129,64 @@ fn main() {
                     .expect("host program runs");
             })
         };
-        let ti = time(ExecMode::Interpret);
-        let tb = time(ExecMode::Bytecode);
-        let tn = time(ExecMode::Native);
+        let ti = time(&built, ExecMode::Interpret);
+        let tu = time(&built_unfused, ExecMode::Bytecode);
+        let tb = time(&built, ExecMode::Bytecode);
+        let tn = time(&built, ExecMode::Native);
         let sp = ti.p50.as_secs_f64() / tb.p50.as_secs_f64().max(1e-12);
-        speedups.push(sp);
         // `*` marks Native runs where some kernel had no closure and
         // fell back to the bytecode VM — don't read those as codegen.
         let fell_back = built.variants.iter().any(|v| v.native.is_none());
         let c_i = format!("{:.3?}", ti.p50);
+        let c_u = format!("{:.3?}", tu.p50);
         let c_b = format!("{:.3?}", tb.p50);
         let c_n = format!("{:.3?}{}", tn.p50, if fell_back { "*" } else { "" });
         let c_s = format!("{sp:.2}x");
-        benchkit::print_row(&[b.name, &c_i, &c_b, &c_n, &c_s], &[18, 12, 12, 12, 9]);
+        benchkit::print_row(&[b.name, &c_i, &c_u, &c_b, &c_n, &c_s], &[18, 12, 12, 12, 12, 9]);
+        rows.push(Row {
+            name: b.name,
+            interp_ns: ti.p50.as_nanos(),
+            unfused_ns: tu.p50.as_nanos(),
+            fused_ns: tb.p50.as_nanos(),
+            native_ns: tn.p50.as_nanos(),
+            fell_back,
+        });
     }
-    let geomean =
-        (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len().max(1) as f64).exp();
+    let bi: Vec<f64> =
+        rows.iter().map(|r| r.interp_ns as f64 / (r.fused_ns as f64).max(1.0)).collect();
+    let fu: Vec<f64> =
+        rows.iter().map(|r| r.unfused_ns as f64 / (r.fused_ns as f64).max(1.0)).collect();
+    let geo_bi = geomean(&bi);
+    let geo_fu = geomean(&fu);
     println!();
-    println!("geomean bytecode speedup over interpreter: {geomean:.2}x (n={})", speedups.len());
+    println!("geomean bytecode speedup over interpreter: {geo_bi:.2}x (n={})", rows.len());
+    println!("geomean fusion speedup over unfused bytecode: {geo_fu:.2}x");
     println!("(* = no native closure for >=1 kernel; Native fell back to the bytecode VM)");
+    if let Some(path) = &json_path {
+        write_json(path, samples, &rows, geo_bi, geo_fu);
+        println!("wrote {path}");
+    }
+    let mut ok = true;
+    if let Some(min) = min_geomean {
+        if geo_bi < min {
+            eprintln!("FAIL: geomean bytecode/interp {geo_bi:.2}x below the floor {min:.2}x");
+            ok = false;
+        }
+    }
+    if let Some(base) = baseline {
+        // 10% tolerance absorbs shared-runner timing noise while still
+        // catching real regressions against the committed artifact.
+        if geo_bi < base * 0.9 {
+            eprintln!(
+                "FAIL: geomean bytecode/interp {geo_bi:.2}x regressed below 90% of the \
+                 committed baseline {base:.2}x"
+            );
+            ok = false;
+        }
+    }
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
 }

@@ -1,6 +1,6 @@
 //! fig_opt — optimizing middle-end comparison: the bytecode VM at
 //! `-O0` (translation only) vs `-O1` (fold + DCE) vs `-O2` (LICM +
-//! uniformity-driven scalarization).
+//! uniformity-driven scalarization + superinstruction fusion).
 //!
 //! Every implemented benchmark runs end to end on the serial reference
 //! executor (no pool, no scheduler noise) once per opt level; the table
@@ -12,17 +12,94 @@
 //! (fir, kmeans, stencils) gain the most. Outputs, ExecStats and
 //! traces are bit-identical across levels by construction (the
 //! differential suite enforces it); only wall-clock may move.
+//!
+//! Trajectory mode (CI): `--json PATH` writes the table as a
+//! `BENCH_fig_opt.json` artifact; `--min-geomean X` fails the run if
+//! the `-O2`/`-O0` geomean drops below `X`; `--baseline PATH` fails if
+//! it regresses below 90% of a previously committed artifact (a `null`
+//! geomean in the baseline — the placeholder — skips the check).
+//! `--samples N` overrides the per-level sample count.
 
 use cupbop::benchkit;
 use cupbop::benchsuite::spec::{self, Scale};
 use cupbop::compiler::OptLevel;
 use cupbop::frameworks::{ExecMode, ReferenceRuntime};
 use cupbop::host::run_host_program;
+use std::process::ExitCode;
 
 const WARMUP: usize = 1;
-const SAMPLES: usize = 5;
 
-fn main() {
+struct Row {
+    name: &'static str,
+    o0_ns: u128,
+    o1_ns: u128,
+    o2_ns: u128,
+}
+
+fn arg_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn geomean(xs: &[f64]) -> f64 {
+    (xs.iter().map(|s| s.ln()).sum::<f64>() / xs.len().max(1) as f64).exp()
+}
+
+/// Pull a named geomean out of a previously committed artifact with a
+/// plain string scan (no JSON crates in this offline environment). A
+/// missing file, a missing key or a `null` value all yield `None`.
+fn read_baseline(path: &str, key: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let pat = format!("\"{key}\":");
+    let i = text.find(&pat)? + pat.len();
+    let rest = text[i..].trim_start();
+    let end = rest.find([',', '}', '\n']).unwrap_or(rest.len());
+    rest[..end].trim().parse::<f64>().ok()
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_json(path: &str, samples: usize, rows: &[Row], geo: f64) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"fig_opt\",\n");
+    s.push_str("  \"scale\": \"small\",\n");
+    s.push_str(&format!("  \"samples\": {samples},\n"));
+    s.push_str(&format!("  \"geomean_o2_over_o0\": {},\n", json_num(geo)));
+    s.push_str("  \"benchmarks\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sp = r.o0_ns as f64 / (r.o2_ns as f64).max(1.0);
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"o0_p50_ns\": {}, \"o1_p50_ns\": {}, \
+             \"o2_p50_ns\": {}, \"o2_over_o0\": {}}}{}\n",
+            r.name,
+            r.o0_ns,
+            r.o1_ns,
+            r.o2_ns,
+            json_num(sp),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(path, s) {
+        eprintln!("fig_opt: cannot write {path}: {e}");
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let samples: usize =
+        arg_value(&args, "--samples").and_then(|v| v.parse().ok()).unwrap_or(5).max(1);
+    let json_path = arg_value(&args, "--json");
+    let min_geomean = arg_value(&args, "--min-geomean").and_then(|v| v.parse::<f64>().ok());
+    let baseline =
+        arg_value(&args, "--baseline").and_then(|p| read_baseline(&p, "geomean_o2_over_o0"));
+
     println!(
         "fig_opt — opt-level comparison (bytecode VM, Scale::Small, serial reference executor)"
     );
@@ -31,7 +108,7 @@ fn main() {
         &["benchmark", "-O0 p50", "-O1 p50", "-O2 p50", "O2/O0"],
         &[18, 12, 12, 12, 9],
     );
-    let mut speedups: Vec<f64> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
     for b in spec::all_benchmarks() {
         if b.build.is_none() {
             continue;
@@ -39,7 +116,7 @@ fn main() {
         let time = |opt: OptLevel| {
             let built = spec::build_program_opt(&b, Scale::Small, opt);
             let mem_cap = built.mem_cap.max(64 << 20);
-            benchkit::bench(WARMUP, SAMPLES, || {
+            benchkit::bench(WARMUP, samples, || {
                 let mut arrays = built.arrays.clone();
                 let mut rt = ReferenceRuntime::new(built.variants.clone(), mem_cap)
                     .with_exec(ExecMode::Bytecode);
@@ -51,16 +128,48 @@ fn main() {
         let t1 = time(OptLevel::O1);
         let t2 = time(OptLevel::O2);
         let sp = t0.p50.as_secs_f64() / t2.p50.as_secs_f64().max(1e-12);
-        speedups.push(sp);
         let c0 = format!("{:.3?}", t0.p50);
         let c1 = format!("{:.3?}", t1.p50);
         let c2 = format!("{:.3?}", t2.p50);
         let cs = format!("{sp:.2}x");
         benchkit::print_row(&[b.name, &c0, &c1, &c2, &cs], &[18, 12, 12, 12, 9]);
+        rows.push(Row {
+            name: b.name,
+            o0_ns: t0.p50.as_nanos(),
+            o1_ns: t1.p50.as_nanos(),
+            o2_ns: t2.p50.as_nanos(),
+        });
     }
-    let geomean =
-        (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len().max(1) as f64).exp();
+    let sp: Vec<f64> = rows.iter().map(|r| r.o0_ns as f64 / (r.o2_ns as f64).max(1.0)).collect();
+    let geo = geomean(&sp);
     println!();
-    println!("geomean -O2 speedup over -O0: {geomean:.2}x (n={})", speedups.len());
+    println!("geomean -O2 speedup over -O0: {geo:.2}x (n={})", rows.len());
     println!("(acceptance floor: 1.2x; outputs/stats/traces are bit-identical across levels)");
+    if let Some(path) = &json_path {
+        write_json(path, samples, &rows, geo);
+        println!("wrote {path}");
+    }
+    let mut ok = true;
+    if let Some(min) = min_geomean {
+        if geo < min {
+            eprintln!("FAIL: geomean -O2/-O0 {geo:.2}x below the floor {min:.2}x");
+            ok = false;
+        }
+    }
+    if let Some(base) = baseline {
+        // 10% tolerance absorbs shared-runner timing noise while still
+        // catching real regressions against the committed artifact.
+        if geo < base * 0.9 {
+            eprintln!(
+                "FAIL: geomean -O2/-O0 {geo:.2}x regressed below 90% of the committed \
+                 baseline {base:.2}x"
+            );
+            ok = false;
+        }
+    }
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
 }

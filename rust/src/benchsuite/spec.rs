@@ -7,7 +7,7 @@
 //! validator for a given problem scale. [`run_on`] executes a built
 //! program against any framework backend and validates the outputs.
 
-use crate::compiler::{compile_kernel_opt, CompiledKernel, Framework, OptLevel};
+use crate::compiler::{compile_kernel_cfg, CompileCfg, CompiledKernel, Framework, OptLevel};
 use crate::exec::BlockFn;
 use crate::frameworks::{
     BackendCfg, CupbopRuntime, DpcppRuntime, HipCpuRuntime, KernelVariants, ReferenceRuntime,
@@ -144,8 +144,15 @@ pub fn build_program(b: &Benchmark, scale: Scale) -> BuiltProgram {
 /// host barrier pass (the differential sweep and `fig_opt` build every
 /// benchmark at `-O0/-O1/-O2`).
 pub fn build_program_opt(b: &Benchmark, scale: Scale, opt: OptLevel) -> BuiltProgram {
+    build_program_cfg(b, scale, CompileCfg::opt(opt))
+}
+
+/// Compile a benchmark's kernels with explicit compile knobs (opt level
+/// plus the fusion toggle — `fig_exec`'s trajectory mode measures
+/// fused vs unfused bytecode this way).
+pub fn build_program_cfg(b: &Benchmark, scale: Scale, cfg: CompileCfg) -> BuiltProgram {
     let builder = b.build.unwrap_or_else(|| panic!("benchmark `{}` is spec-only", b.name));
-    build_prepared_opt(b.name, builder(scale), opt)
+    build_prepared_cfg(b.name, builder(scale), cfg)
 }
 
 /// Compile an already-constructed [`BenchProgram`] at the default opt
@@ -159,11 +166,17 @@ pub fn build_prepared(name: &str, prog: BenchProgram) -> BuiltProgram {
 /// `frontend::harness`) at an explicit opt level and run the host
 /// barrier pass.
 pub fn build_prepared_opt(name: &str, prog: BenchProgram, opt: OptLevel) -> BuiltProgram {
+    build_prepared_cfg(name, prog, CompileCfg::opt(opt))
+}
+
+/// Compile an already-constructed [`BenchProgram`] with explicit
+/// compile knobs and run the host barrier pass.
+pub fn build_prepared_cfg(name: &str, prog: BenchProgram, cfg: CompileCfg) -> BuiltProgram {
     let compiled: Vec<Arc<CompiledKernel>> = prog
         .kernels
         .iter()
         .map(|k| {
-            Arc::new(compile_kernel_opt(k, opt).unwrap_or_else(|e| panic!("{}: {e}", k.name)))
+            Arc::new(compile_kernel_cfg(k, cfg).unwrap_or_else(|e| panic!("{}: {e}", k.name)))
         })
         .collect();
     let rw: Vec<KernelRw> = compiled

@@ -56,6 +56,7 @@ use super::param_pack::{PackedLayout, SlotKind};
 use super::passes::uniformity::UniformInfo;
 use super::passes::{licm, types};
 use crate::exec::Value;
+use crate::ir::verify::stmt_name;
 use crate::ir::*;
 use crate::runtime::device::SHARED_TAG;
 use std::collections::HashSet;
@@ -98,6 +99,44 @@ pub enum Inst {
     Index { dst: RegId, base: RegId, idx: RegId, elem: Ty },
     Load { dst: RegId, ptr: RegId, ty: Ty },
     Store { ptr: RegId, val: RegId, ty: Ty },
+    /// superinstruction (`passes::fuse`): `t ← a op1 b; dst ← t op2 c`
+    /// (or `c op2 t` when `!t_left`). The intermediate `t` is still
+    /// written, so the pair is observationally identical to the unfused
+    /// sequence; `f1`/`f2` carry each half's flops flag.
+    FusedBin {
+        op1: BinOp,
+        t: RegId,
+        a: RegId,
+        b: RegId,
+        op2: BinOp,
+        dst: RegId,
+        c: RegId,
+        t_left: bool,
+        f1: bool,
+        f2: bool,
+    },
+    /// superinstruction: `t ← base + idx*sizeof(elem); dst ← load.ty [t]`
+    /// — the `p[i]` read idiom collapsed into one dispatch
+    IndexLoad { t: RegId, base: RegId, idx: RegId, elem: Ty, dst: RegId, ty: Ty },
+    /// superinstruction: `t ← base + idx*sizeof(elem); store.ty [t] ← val`
+    IndexStore { t: RegId, base: RegId, idx: RegId, elem: Ty, val: RegId, ty: Ty },
+    /// superinstruction: `t ← load.lty [ptr]; dst ← t op c` (or `c op t`)
+    LoadBin {
+        t: RegId,
+        ptr: RegId,
+        lty: Ty,
+        op: BinOp,
+        dst: RegId,
+        c: RegId,
+        t_left: bool,
+        f2: bool,
+    },
+    /// superinstruction: `dst ← a op b` then [`Inst::LoopTest`] on `dst`
+    /// (vector-class compare glue only — uniform conditions keep the
+    /// scalar short-circuit path)
+    CmpLoopTest { op: BinOp, a: RegId, b: RegId, dst: RegId, exit_t: Pc, f: bool },
+    /// superinstruction: `dst ← a op b` then [`Inst::IfBegin`] on `dst`
+    CmpIfBegin { op: BinOp, a: RegId, b: RegId, dst: RegId, else_t: Pc, f: bool },
     AtomicRmw { op: AtomicOp, dst: Option<RegId>, ptr: RegId, val: RegId, ty: Ty },
     AtomicCas { dst: Option<RegId>, ptr: RegId, cmp: RegId, val: RegId, ty: Ty },
     /// write this lane's slot of the per-warp exchange buffer
@@ -136,6 +175,134 @@ pub enum Inst {
     Return,
 }
 
+impl Inst {
+    /// Visit every register id the instruction mentions (defs and
+    /// uses), mutably. Exhaustive over variants — register compaction
+    /// and the lowered-program verifier rely on no register escaping
+    /// this walk, so there is deliberately no wildcard arm.
+    pub fn for_each_reg_mut(&mut self, mut f: impl FnMut(&mut RegId)) {
+        match self {
+            Inst::Const { dst, .. }
+            | Inst::Param { dst, .. }
+            | Inst::Geom { dst, .. }
+            | Inst::Special { dst, .. }
+            | Inst::VoteResult { dst } => f(dst),
+            Inst::Mov { dst, src } | Inst::Broadcast { dst, src } => {
+                f(dst);
+                f(src);
+            }
+            Inst::Bin { dst, a, b, .. } => {
+                f(dst);
+                f(a);
+                f(b);
+            }
+            Inst::Un { dst, a, .. } | Inst::Cast { dst, a, .. } => {
+                f(dst);
+                f(a);
+            }
+            Inst::Index { dst, base, idx, .. } => {
+                f(dst);
+                f(base);
+                f(idx);
+            }
+            Inst::Load { dst, ptr, .. } => {
+                f(dst);
+                f(ptr);
+            }
+            Inst::Store { ptr, val, .. } => {
+                f(ptr);
+                f(val);
+            }
+            Inst::FusedBin { t, a, b, dst, c, .. } => {
+                f(t);
+                f(a);
+                f(b);
+                f(dst);
+                f(c);
+            }
+            Inst::IndexLoad { t, base, idx, dst, .. } => {
+                f(t);
+                f(base);
+                f(idx);
+                f(dst);
+            }
+            Inst::IndexStore { t, base, idx, val, .. } => {
+                f(t);
+                f(base);
+                f(idx);
+                f(val);
+            }
+            Inst::LoadBin { t, ptr, dst, c, .. } => {
+                f(t);
+                f(ptr);
+                f(dst);
+                f(c);
+            }
+            Inst::CmpLoopTest { a, b, dst, .. } | Inst::CmpIfBegin { a, b, dst, .. } => {
+                f(a);
+                f(b);
+                f(dst);
+            }
+            Inst::AtomicRmw { dst, ptr, val, .. } => {
+                if let Some(d) = dst {
+                    f(d);
+                }
+                f(ptr);
+                f(val);
+            }
+            Inst::AtomicCas { dst, ptr, cmp, val, .. } => {
+                if let Some(d) = dst {
+                    f(d);
+                }
+                f(ptr);
+                f(cmp);
+                f(val);
+            }
+            Inst::StoreExchange { val } => f(val),
+            Inst::ReadExchange { dst, lane } => {
+                f(dst);
+                f(lane);
+            }
+            Inst::JumpIfZero { cond, .. }
+            | Inst::IfBegin { cond, .. }
+            | Inst::LoopTest { cond, .. } => f(cond),
+            Inst::RegionBegin { warp, .. } => {
+                if let Some(w) = warp {
+                    f(w);
+                }
+            }
+            Inst::ReduceVote { .. }
+            | Inst::Acct { .. }
+            | Inst::Jump { .. }
+            | Inst::RegionEnd
+            | Inst::Else { .. }
+            | Inst::IfEnd
+            | Inst::LoopBegin
+            | Inst::ContinueMerge
+            | Inst::LoopEnd
+            | Inst::Break
+            | Inst::Continue
+            | Inst::Return => {}
+        }
+    }
+
+    /// Visit every jump-target pc the instruction carries, mutably
+    /// (fusion renumbers instruction indices through this).
+    pub fn for_each_target_mut(&mut self, mut f: impl FnMut(&mut Pc)) {
+        match self {
+            Inst::Jump { t }
+            | Inst::JumpIfZero { t, .. }
+            | Inst::RegionBegin { end: t, .. }
+            | Inst::IfBegin { else_t: t, .. }
+            | Inst::Else { end_t: t }
+            | Inst::LoopTest { exit_t: t, .. }
+            | Inst::CmpLoopTest { exit_t: t, .. }
+            | Inst::CmpIfBegin { else_t: t, .. } => f(t),
+            _ => {}
+        }
+    }
+}
+
 /// A lowered kernel: flat bytecode plus the register-file metadata the
 /// VM needs to execute it.
 #[derive(Debug, Clone)]
@@ -146,6 +313,11 @@ pub struct LoweredProgram {
     pub scalar: Vec<bool>,
     /// total registers, including expression temporaries
     pub num_regs: usize,
+    /// SoA columns the VM must size per lane. Straight out of lowering
+    /// this equals `num_regs`; `passes::fuse::compact` renumbers the
+    /// vector class densely into `0..num_vec_regs` so the per-lane
+    /// register file shrinks to the live columns only.
+    pub num_vec_regs: usize,
     /// register class bitmap: `true` = scalar (one block-wide slot in
     /// `block_regs`), `false` = vector (one slot per lane)
     pub scalar_reg: Vec<bool>,
@@ -184,13 +356,60 @@ pub fn block_scope_regs(body: &[Stmt], out: &mut HashSet<Reg>) {
     }
 }
 
+/// Internal legality violation found while lowering. These are
+/// compiler bugs (fission/verify should have legalized or rejected the
+/// construct), surfaced `ir::verify`-style as a structured error with
+/// statement context instead of a process abort.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LowerError {
+    /// a backpatch landed on an instruction with no jump target
+    PatchNonJump(String),
+    /// a thread-scope statement appeared outside every `ThreadLoop`
+    ThreadStmtAtBlockScope(&'static str),
+    /// a block-scope statement appeared inside a `ThreadLoop`
+    BlockStmtAtThreadScope(&'static str),
+    /// `__syncthreads` survived fission
+    BarrierSurvivedFission,
+    /// a raw warp collective survived fission
+    WarpCollectiveSurvivedFission,
+    /// an NVIDIA intrinsic with no CPU semantics (Table II dwt2d case)
+    NvIntrinsic(String),
+}
+
+impl std::fmt::Display for LowerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LowerError::PatchNonJump(i) => {
+                write!(f, "lowering bug: patching non-jump instruction {i}")
+            }
+            LowerError::ThreadStmtAtBlockScope(s) => {
+                write!(f, "lowering bug: thread-level `{s}` at block scope")
+            }
+            LowerError::BlockStmtAtThreadScope(s) => {
+                write!(f, "lowering bug: block-scope `{s}` at thread scope")
+            }
+            LowerError::BarrierSurvivedFission => {
+                write!(f, "lowering bug: `__syncthreads` survived fission")
+            }
+            LowerError::WarpCollectiveSurvivedFission => {
+                write!(f, "lowering bug: warp collective survived fission")
+            }
+            LowerError::NvIntrinsic(name) => {
+                write!(f, "NVIDIA intrinsic `{name}` has no CPU semantics (Table II dwt2d case)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LowerError {}
+
 /// Lower an MPMD kernel to bytecode with no optimization (`-O0`).
 pub fn lower(
     mpmd: &MpmdKernel,
     memory: &MemoryPlan,
     layout: &PackedLayout,
     extra_base: usize,
-) -> LoweredProgram {
+) -> Result<LoweredProgram, LowerError> {
     lower_opt(mpmd, memory, layout, extra_base, None, false)
 }
 
@@ -203,7 +422,7 @@ pub fn lower_opt(
     extra_base: usize,
     uniform: Option<&UniformInfo>,
     licm_on: bool,
-) -> LoweredProgram {
+) -> Result<LoweredProgram, LowerError> {
     let mut bs = HashSet::new();
     block_scope_regs(&mpmd.body, &mut bs);
     let mut class: Vec<Option<bool>> = Vec::with_capacity(mpmd.num_regs as usize);
@@ -228,21 +447,22 @@ pub fn lower_opt(
         licm_hoisted: 0,
     };
     for s in &mpmd.body {
-        lw.stmt_block(s);
+        lw.stmt_block(s)?;
     }
     let num_regs = lw.max_reg as usize;
     let mut scalar_reg = vec![false; num_regs];
     for (r, sr) in scalar_reg.iter_mut().enumerate() {
         *sr = lw.class.get(r).copied().flatten().unwrap_or(false);
     }
-    LoweredProgram {
+    Ok(LoweredProgram {
         insts: lw.insts,
         scalar: lw.scalar_flags,
         num_regs,
+        num_vec_regs: num_regs,
         scalar_reg,
         arg_slots: layout.slots.clone(),
         licm_hoisted: lw.licm_hoisted,
-    }
+    })
 }
 
 struct Lower<'a> {
@@ -283,15 +503,18 @@ impl<'a> Lower<'a> {
         self.insts.len() as Pc
     }
 
-    fn patch_jump(&mut self, at: usize, target: Pc) {
+    fn patch_jump(&mut self, at: usize, target: Pc) -> Result<(), LowerError> {
         match &mut self.insts[at] {
             Inst::Jump { t }
             | Inst::JumpIfZero { t, .. }
             | Inst::RegionBegin { end: t, .. }
             | Inst::IfBegin { else_t: t, .. }
             | Inst::Else { end_t: t }
-            | Inst::LoopTest { exit_t: t, .. } => *t = target,
-            other => panic!("patching non-jump instruction {other:?}"),
+            | Inst::LoopTest { exit_t: t, .. } => {
+                *t = target;
+                Ok(())
+            }
+            other => Err(LowerError::PatchNonJump(format!("{other:?}"))),
         }
     }
 
@@ -381,19 +604,22 @@ impl<'a> Lower<'a> {
 
     /// Hoist a loop bound/step into a preheader register when LICM is
     /// on and the expression is invariant + stats-free.
-    fn hoist_bound(&mut self, e: &Expr, assigned: &HashSet<Reg>) -> Option<RegId> {
-        if !self.licm {
-            return None;
-        }
-        let ty = self.types.as_ref()?;
-        if !licm::hoistable(e, assigned, ty) {
-            return None;
+    fn hoist_bound(
+        &mut self,
+        e: &Expr,
+        assigned: Option<&HashSet<Reg>>,
+    ) -> Result<Option<RegId>, LowerError> {
+        let (Some(assigned), Some(ty)) = (assigned, self.types.as_ref()) else {
+            return Ok(None);
+        };
+        if !self.licm || !licm::hoistable(e, assigned, ty) {
+            return Ok(None);
         }
         self.licm_hoisted += 1;
         let uni = self.expr_uniform(e);
         let t = self.persist_c(uni);
-        self.expr_emit(e, t, uni);
-        Some(t)
+        self.expr_emit(e, t, uni)?;
+        Ok(Some(t))
     }
 
     fn loop_assigned(var: Reg, body: &[Stmt]) -> HashSet<Reg> {
@@ -405,36 +631,36 @@ impl<'a> Lower<'a> {
 
     // ---------- block-scope (uniform) statements ----------
 
-    fn stmt_block(&mut self, s: &Stmt) {
+    fn stmt_block(&mut self, s: &Stmt) -> Result<(), LowerError> {
         self.reset_temps();
         self.emit(Inst::Acct { lanes: false });
         match s {
             Stmt::ThreadLoop { body, warp } => {
                 let rb = self.emit(Inst::RegionBegin { warp: warp.map(|r| r.0), end: 0 });
                 for st in body {
-                    self.stmt_thread(st);
+                    self.stmt_thread(st)?;
                 }
                 let end = self.emit(Inst::RegionEnd);
-                self.patch_jump(rb, end as Pc);
+                self.patch_jump(rb, end as Pc)?;
             }
             Stmt::If { cond, then_, else_ } => {
-                let c = self.expr(cond);
+                let c = self.expr(cond)?;
                 let j = self.emit(Inst::JumpIfZero { cond: c, t: 0 });
                 for st in then_ {
-                    self.stmt_block(st);
+                    self.stmt_block(st)?;
                 }
                 if else_.is_empty() {
                     let end = self.here();
-                    self.patch_jump(j, end);
+                    self.patch_jump(j, end)?;
                 } else {
                     let j2 = self.emit(Inst::Jump { t: 0 });
                     let else_at = self.here();
-                    self.patch_jump(j, else_at);
+                    self.patch_jump(j, else_at)?;
                     for st in else_ {
-                        self.stmt_block(st);
+                        self.stmt_block(st)?;
                     }
                     let end = self.here();
-                    self.patch_jump(j2, end);
+                    self.patch_jump(j2, end)?;
                 }
             }
             Stmt::For { var, start, end, step, body } => {
@@ -443,86 +669,96 @@ impl<'a> Lower<'a> {
                 // from `v` at each iteration head), and the `Lt`/`Add`
                 // glue does not count flops.
                 let v = self.persist();
-                let s0 = self.expr(start);
+                let s0 = self.expr(start)?;
                 self.emit(Inst::Mov { dst: v, src: s0 });
                 let assigned = self.licm.then(|| Self::loop_assigned(*var, body));
-                let e_h = assigned.as_ref().and_then(|a| self.hoist_bound(end, a));
-                let s_h = assigned.as_ref().and_then(|a| self.hoist_bound(step, a));
+                let e_h = self.hoist_bound(end, assigned.as_ref())?;
+                let s_h = self.hoist_bound(step, assigned.as_ref())?;
                 let head = self.here();
-                let e = e_h.unwrap_or_else(|| self.expr(end));
+                let e = match e_h {
+                    Some(r) => r,
+                    None => self.expr(end)?,
+                };
                 let c = self.temp();
                 self.emit(Inst::Bin { op: BinOp::Lt, dst: c, a: v, b: e, flops: false });
                 let jexit = self.emit(Inst::JumpIfZero { cond: c, t: 0 });
                 self.emit(Inst::Mov { dst: var.0, src: v });
                 for st in body {
-                    self.stmt_block(st);
+                    self.stmt_block(st)?;
                 }
                 self.reset_temps();
-                let stp = s_h.unwrap_or_else(|| self.expr(step));
+                let stp = match s_h {
+                    Some(r) => r,
+                    None => self.expr(step)?,
+                };
                 self.emit(Inst::Bin { op: BinOp::Add, dst: v, a: v, b: stp, flops: false });
                 self.emit(Inst::Jump { t: head });
                 let exit = self.here();
-                self.patch_jump(jexit, exit);
+                self.patch_jump(jexit, exit)?;
             }
             Stmt::While { cond, body } => {
                 let head = self.here();
-                let c = self.expr(cond);
+                let c = self.expr(cond)?;
                 let jexit = self.emit(Inst::JumpIfZero { cond: c, t: 0 });
                 for st in body {
-                    self.stmt_block(st);
+                    self.stmt_block(st)?;
                 }
                 self.emit(Inst::Jump { t: head });
                 let exit = self.here();
-                self.patch_jump(jexit, exit);
+                self.patch_jump(jexit, exit)?;
             }
             Stmt::ReduceVote { kind } => {
                 self.emit(Inst::ReduceVote { kind: *kind });
             }
-            other => panic!("thread-level stmt at block scope: {other:?}"),
+            other => return Err(LowerError::ThreadStmtAtBlockScope(stmt_name(other))),
         }
+        Ok(())
     }
 
     // ---------- thread-scope (lane-divergent) statements ----------
 
-    fn stmt_thread(&mut self, s: &Stmt) {
+    fn stmt_thread(&mut self, s: &Stmt) -> Result<(), LowerError> {
         self.reset_temps();
         self.emit(Inst::Acct { lanes: true });
         match s {
-            Stmt::Assign { dst, expr } => self.expr_to(expr, dst.0),
+            Stmt::Assign { dst, expr } => self.expr_to(expr, dst.0)?,
             Stmt::Store { ptr, val, ty } => {
-                let p = self.expr(ptr);
-                let v = self.expr(val);
+                let p = self.expr(ptr)?;
+                let v = self.expr(val)?;
                 self.emit(Inst::Store { ptr: p, val: v, ty: *ty });
             }
             Stmt::If { cond, then_, else_ } => {
-                let c = self.expr(cond);
+                let c = self.expr(cond)?;
                 let ib = self.emit(Inst::IfBegin { cond: c, else_t: 0 });
                 for st in then_ {
-                    self.stmt_thread(st);
+                    self.stmt_thread(st)?;
                 }
                 if else_.is_empty() {
                     let end = self.emit(Inst::IfEnd);
-                    self.patch_jump(ib, end as Pc);
+                    self.patch_jump(ib, end as Pc)?;
                 } else {
                     let el = self.emit(Inst::Else { end_t: 0 });
-                    self.patch_jump(ib, el as Pc);
+                    self.patch_jump(ib, el as Pc)?;
                     for st in else_ {
-                        self.stmt_thread(st);
+                        self.stmt_thread(st)?;
                     }
                     let end = self.emit(Inst::IfEnd);
-                    self.patch_jump(el, end as Pc);
+                    self.patch_jump(el, end as Pc)?;
                 }
             }
             Stmt::For { var, start, end, step, body } => {
                 let var_s = self.is_scalar(var.0);
                 let v = self.persist_c(var_s);
-                self.expr_to(start, v);
+                self.expr_to(start, v)?;
                 let assigned = self.licm.then(|| Self::loop_assigned(*var, body));
-                let e_h = assigned.as_ref().and_then(|a| self.hoist_bound(end, a));
-                let s_h = assigned.as_ref().and_then(|a| self.hoist_bound(step, a));
+                let e_h = self.hoist_bound(end, assigned.as_ref())?;
+                let s_h = self.hoist_bound(step, assigned.as_ref())?;
                 self.emit(Inst::LoopBegin);
                 let head = self.here();
-                let e = e_h.unwrap_or_else(|| self.expr(end));
+                let e = match e_h {
+                    Some(r) => r,
+                    None => self.expr(end)?,
+                };
                 let cond_s = self.is_scalar(v) && self.is_scalar(e);
                 let c = self.temp_c(cond_s);
                 self.emit_s(
@@ -532,11 +768,14 @@ impl<'a> Lower<'a> {
                 let lt = self.emit(Inst::LoopTest { cond: c, exit_t: 0 });
                 self.emit_s(Inst::Mov { dst: var.0, src: v }, var_s);
                 for st in body {
-                    self.stmt_thread(st);
+                    self.stmt_thread(st)?;
                 }
                 self.emit(Inst::ContinueMerge);
                 self.reset_temps();
-                let stp = s_h.unwrap_or_else(|| self.expr(step));
+                let stp = match s_h {
+                    Some(r) => r,
+                    None => self.expr(step)?,
+                };
                 let add_s = self.is_scalar(v) && self.is_scalar(stp);
                 self.emit_s(
                     Inst::Bin { op: BinOp::Add, dst: v, a: v, b: stp, flops: false },
@@ -544,20 +783,20 @@ impl<'a> Lower<'a> {
                 );
                 self.emit(Inst::Jump { t: head });
                 let le = self.emit(Inst::LoopEnd);
-                self.patch_jump(lt, le as Pc);
+                self.patch_jump(lt, le as Pc)?;
             }
             Stmt::While { cond, body } => {
                 self.emit(Inst::LoopBegin);
                 let head = self.here();
                 self.emit(Inst::ContinueMerge);
-                let c = self.expr(cond);
+                let c = self.expr(cond)?;
                 let lt = self.emit(Inst::LoopTest { cond: c, exit_t: 0 });
                 for st in body {
-                    self.stmt_thread(st);
+                    self.stmt_thread(st)?;
                 }
                 self.emit(Inst::Jump { t: head });
                 let le = self.emit(Inst::LoopEnd);
-                self.patch_jump(lt, le as Pc);
+                self.patch_jump(lt, le as Pc)?;
             }
             Stmt::Break => {
                 self.emit(Inst::Break);
@@ -569,8 +808,8 @@ impl<'a> Lower<'a> {
                 self.emit(Inst::Return);
             }
             Stmt::AtomicRmw { op, ptr, val, ty, dst } => {
-                let p = self.expr(ptr);
-                let v = self.expr(val);
+                let p = self.expr(ptr)?;
+                let v = self.expr(val)?;
                 self.emit(Inst::AtomicRmw {
                     op: *op,
                     dst: dst.map(|r| r.0),
@@ -580,9 +819,9 @@ impl<'a> Lower<'a> {
                 });
             }
             Stmt::AtomicCas { ptr, cmp, val, ty, dst } => {
-                let p = self.expr(ptr);
-                let c = self.expr(cmp);
-                let v = self.expr(val);
+                let p = self.expr(ptr)?;
+                let c = self.expr(cmp)?;
+                let v = self.expr(val)?;
                 self.emit(Inst::AtomicCas {
                     dst: dst.map(|r| r.0),
                     ptr: p,
@@ -592,12 +831,13 @@ impl<'a> Lower<'a> {
                 });
             }
             Stmt::StoreExchange { val, .. } => {
-                let v = self.expr(val);
+                let v = self.expr(val)?;
                 self.emit(Inst::StoreExchange { val: v });
             }
-            Stmt::SyncThreads => panic!("__syncthreads survived fission — compiler bug"),
-            other => panic!("block-scope stmt at thread scope: {other:?}"),
+            Stmt::SyncThreads => return Err(LowerError::BarrierSurvivedFission),
+            other => return Err(LowerError::BlockStmtAtThreadScope(stmt_name(other))),
         }
+        Ok(())
     }
 
     // ---------- expressions ----------
@@ -605,14 +845,14 @@ impl<'a> Lower<'a> {
     /// Lower `e`, returning the register holding its value. Plain
     /// register reads are returned in place (no copy); uniform
     /// subtrees land in scalar temporaries.
-    fn expr(&mut self, e: &Expr) -> RegId {
+    fn expr(&mut self, e: &Expr) -> Result<RegId, LowerError> {
         if let Expr::Reg(r) = e {
-            return r.0;
+            return Ok(r.0);
         }
         let uni = self.expr_uniform(e);
         let t = self.temp_c(uni);
-        self.expr_emit(e, t, uni);
-        t
+        self.expr_emit(e, t, uni)?;
+        Ok(t)
     }
 
     /// True for expressions that lower to a single instruction — a
@@ -633,22 +873,23 @@ impl<'a> Lower<'a> {
     /// already fixed). A compound uniform value assigned to a vector
     /// register is computed once in a scalar temp and crosses the
     /// class boundary through an explicit `Broadcast`.
-    fn expr_to(&mut self, e: &Expr, dst: RegId) {
+    fn expr_to(&mut self, e: &Expr, dst: RegId) -> Result<(), LowerError> {
         let dst_scalar = self.is_scalar(dst);
         let uni = self.expr_uniform(e);
         if uni && !dst_scalar && !Self::trivial(e) {
             let t = self.temp_c(true);
-            self.expr_emit(e, t, true);
+            self.expr_emit(e, t, true)?;
             self.emit(Inst::Broadcast { dst, src: t });
+            Ok(())
         } else {
-            self.expr_emit(e, dst, uni && dst_scalar);
+            self.expr_emit(e, dst, uni && dst_scalar)
         }
     }
 
     /// Emit the instructions for `e` into `dst`. `scalar` marks the
     /// emitted data instructions for once-per-dispatch execution and
     /// requires `e` uniform and `dst` scalar-class.
-    fn expr_emit(&mut self, e: &Expr, dst: RegId, scalar: bool) {
+    fn expr_emit(&mut self, e: &Expr, dst: RegId, scalar: bool) -> Result<(), LowerError> {
         match e {
             Expr::Const(c) => {
                 self.emit_s(Inst::Const { dst, val: Value::of_const(*c) }, scalar);
@@ -701,54 +942,55 @@ impl<'a> Lower<'a> {
                 self.emit_s(Inst::Const { dst, val: Value::Ptr(SHARED_TAG | off) }, scalar);
             }
             Expr::Bin(op, a, b) => {
-                let ra = self.expr(a);
-                let rb = self.expr(b);
+                let ra = self.expr(a)?;
+                let rb = self.expr(b)?;
                 self.emit_s(Inst::Bin { op: *op, dst, a: ra, b: rb, flops: true }, scalar);
             }
             Expr::Un(op, a) => {
-                let ra = self.expr(a);
+                let ra = self.expr(a)?;
                 self.emit_s(Inst::Un { op: *op, dst, a: ra, flops: true }, scalar);
             }
             Expr::Cast(ty, a) => {
-                let ra = self.expr(a);
+                let ra = self.expr(a)?;
                 self.emit_s(Inst::Cast { ty: *ty, dst, a: ra }, scalar);
             }
             Expr::Load { ptr, ty } => {
-                let rp = self.expr(ptr);
+                let rp = self.expr(ptr)?;
                 self.emit_s(Inst::Load { dst, ptr: rp, ty: *ty }, scalar);
             }
             Expr::Index { base, idx, elem } => {
-                let rb = self.expr(base);
-                let ri = self.expr(idx);
+                let rb = self.expr(base)?;
+                let ri = self.expr(idx)?;
                 self.emit_s(Inst::Index { dst, base: rb, idx: ri, elem: *elem }, scalar);
             }
             Expr::Select { cond, then_, else_ } => {
                 // The interpreter evaluates only the taken side per
                 // lane (guarded loads!), so lower a full divergence
                 // diamond rather than evaluating both sides.
-                let rc = self.expr(cond);
+                let rc = self.expr(cond)?;
                 let ib = self.emit(Inst::IfBegin { cond: rc, else_t: 0 });
-                self.expr_to(then_, dst);
+                self.expr_to(then_, dst)?;
                 let el = self.emit(Inst::Else { end_t: 0 });
-                self.patch_jump(ib, el as Pc);
-                self.expr_to(else_, dst);
+                self.patch_jump(ib, el as Pc)?;
+                self.expr_to(else_, dst)?;
                 let end = self.emit(Inst::IfEnd);
-                self.patch_jump(el, end as Pc);
+                self.patch_jump(el, end as Pc)?;
             }
             Expr::Exchange { lane, .. } => {
-                let rl = self.expr(lane);
+                let rl = self.expr(lane)?;
                 self.emit(Inst::ReadExchange { dst, lane: rl });
             }
             Expr::VoteResult => {
                 self.emit(Inst::VoteResult { dst });
             }
             Expr::WarpShfl { .. } | Expr::WarpVote { .. } => {
-                panic!("warp collective reached lowering — fission must legalize it")
+                return Err(LowerError::WarpCollectiveSurvivedFission);
             }
             Expr::NvIntrinsic { name, .. } => {
-                panic!("NVIDIA intrinsic `{name}` has no CPU semantics (Table II dwt2d case)")
+                return Err(LowerError::NvIntrinsic(name.clone()));
             }
         }
+        Ok(())
     }
 }
 
@@ -758,11 +1000,12 @@ impl<'a> Lower<'a> {
 pub fn disasm(p: &LoweredProgram) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "// {} instructions ({} scalar), {} registers ({} scalar), {} hoisted bound(s)\n",
+        "// {} instructions ({} scalar), {} registers ({} scalar, {} vector cols), {} hoisted bound(s)\n",
         p.insts.len(),
         p.scalar_inst_count(),
         p.num_regs,
         p.scalar_reg.iter().filter(|&&s| s).count(),
+        p.num_vec_regs,
         p.licm_hoisted,
     ));
     for (pc, inst) in p.insts.iter().enumerate() {
@@ -794,6 +1037,30 @@ fn fmt_inst(i: &Inst) -> String {
         }
         Inst::Load { dst, ptr, ty } => format!("r{dst} <- load.{} [r{ptr}]", ty.c_name()),
         Inst::Store { ptr, val, ty } => format!("store.{} [r{ptr}] <- r{val}", ty.c_name()),
+        Inst::FusedBin { op1, t, a, b, op2, dst, c, t_left, .. } => {
+            let pair = if *t_left { format!("t {op2:?} r{c}") } else { format!("r{c} {op2:?} t") };
+            format!("r{t} <- r{a} {op1:?} r{b}; r{dst} <- {pair}")
+        }
+        Inst::IndexLoad { t, base, idx, elem, dst, ty } => format!(
+            "r{t} <- r{base} + r{idx}*{}; r{dst} <- load.{} [r{t}]",
+            elem.size(),
+            ty.c_name()
+        ),
+        Inst::IndexStore { t, base, idx, elem, val, ty } => format!(
+            "r{t} <- r{base} + r{idx}*{}; store.{} [r{t}] <- r{val}",
+            elem.size(),
+            ty.c_name()
+        ),
+        Inst::LoadBin { t, ptr, lty, op, dst, c, t_left, .. } => {
+            let pair = if *t_left { format!("t {op:?} r{c}") } else { format!("r{c} {op:?} t") };
+            format!("r{t} <- load.{} [r{ptr}]; r{dst} <- {pair}", lty.c_name())
+        }
+        Inst::CmpLoopTest { op, a, b, dst, exit_t, .. } => {
+            format!("r{dst} <- r{a} {op:?} r{b}; loop.test r{dst} exit=@{exit_t}")
+        }
+        Inst::CmpIfBegin { op, a, b, dst, else_t, .. } => {
+            format!("r{dst} <- r{a} {op:?} r{b}; if.begin r{dst} else=@{else_t}")
+        }
         Inst::AtomicRmw { op, dst, ptr, val, .. } => match dst {
             Some(d) => format!("r{d} <- atomic.{op:?} [r{ptr}], r{val}"),
             None => format!("atomic.{op:?} [r{ptr}], r{val}"),
@@ -850,6 +1117,16 @@ mod tests {
         let n = p.insts.len() as Pc;
         assert_eq!(p.insts.len(), p.scalar.len(), "scalar flags out of sync");
         assert_eq!(p.scalar_reg.len(), p.num_regs);
+        assert!(p.num_vec_regs <= p.num_regs);
+        if p.num_vec_regs < p.num_regs {
+            // compacted: the vector class is densely renumbered below
+            // the column count
+            for (r, &s) in p.scalar_reg.iter().enumerate() {
+                if !s {
+                    assert!(r < p.num_vec_regs, "vector reg r{r} above column count");
+                }
+            }
+        }
         let mut regions = 0i32;
         let mut ifs = 0i32;
         let mut loops = 0i32;
@@ -883,6 +1160,33 @@ mod tests {
                 }
                 Inst::Load { dst, ptr, .. } => assert!(reg_ok(dst) && reg_ok(ptr)),
                 Inst::Store { ptr, val, .. } => assert!(reg_ok(ptr) && reg_ok(val)),
+                Inst::FusedBin { t, a, b, dst, c, .. } => {
+                    assert!(reg_ok(t) && reg_ok(a) && reg_ok(b) && reg_ok(dst) && reg_ok(c));
+                    assert!(!p.scalar[pc], "superinstructions are vector-only");
+                }
+                Inst::IndexLoad { t, base, idx, dst, .. } => {
+                    assert!(reg_ok(t) && reg_ok(base) && reg_ok(idx) && reg_ok(dst));
+                    assert!(!p.scalar[pc], "superinstructions are vector-only");
+                }
+                Inst::IndexStore { t, base, idx, val, .. } => {
+                    assert!(reg_ok(t) && reg_ok(base) && reg_ok(idx) && reg_ok(val));
+                    assert!(!p.scalar[pc], "superinstructions are vector-only");
+                }
+                Inst::LoadBin { t, ptr, dst, c, .. } => {
+                    assert!(reg_ok(t) && reg_ok(ptr) && reg_ok(dst) && reg_ok(c));
+                    assert!(!p.scalar[pc], "superinstructions are vector-only");
+                }
+                Inst::CmpLoopTest { a, b, dst, exit_t, .. } => {
+                    assert!(exit_t < n);
+                    assert!(reg_ok(a) && reg_ok(b) && reg_ok(dst));
+                    assert!(!p.scalar[pc], "superinstructions are vector-only");
+                }
+                Inst::CmpIfBegin { a, b, dst, else_t, .. } => {
+                    ifs += 1;
+                    assert!(else_t < n);
+                    assert!(reg_ok(a) && reg_ok(b) && reg_ok(dst));
+                    assert!(!p.scalar[pc], "superinstructions are vector-only");
+                }
                 Inst::Broadcast { dst, src } => {
                     assert!(reg_ok(dst) && reg_ok(src));
                     assert!(
@@ -945,11 +1249,21 @@ mod tests {
         for opt in OptLevel::ALL {
             let p = lowered_at(&k, opt);
             check_well_formed(&p);
-            // one region, one lane-if, loads/stores present
+            // one region, one lane-if, loads/stores present (possibly
+            // fused into superinstructions at -O2)
             assert!(p.insts.iter().any(|i| matches!(i, Inst::RegionBegin { .. })));
-            assert!(p.insts.iter().any(|i| matches!(i, Inst::IfBegin { .. })));
-            assert!(p.insts.iter().any(|i| matches!(i, Inst::Load { .. })));
-            assert!(p.insts.iter().any(|i| matches!(i, Inst::Store { .. })));
+            let has_if = p
+                .insts
+                .iter()
+                .any(|i| matches!(i, Inst::IfBegin { .. } | Inst::CmpIfBegin { .. }));
+            let has_load = p.insts.iter().any(|i| {
+                matches!(i, Inst::Load { .. } | Inst::IndexLoad { .. } | Inst::LoadBin { .. })
+            });
+            let has_store = p
+                .insts
+                .iter()
+                .any(|i| matches!(i, Inst::Store { .. } | Inst::IndexStore { .. }));
+            assert!(has_if && has_load && has_store);
             // blockIdx/blockDim rewritten to hidden params → Geom reads
             assert!(p.insts.iter().any(|i| matches!(i, Inst::Geom { .. })));
         }
@@ -1023,6 +1337,9 @@ mod tests {
                 if let Inst::Bin { op: BinOp::Lt, flops, .. } = inst {
                     assert!(!flops, "loop glue must not count flops");
                 }
+                if let Inst::CmpLoopTest { f, .. } = inst {
+                    assert!(!f, "fused loop glue must not count flops");
+                }
             }
         }
     }
@@ -1040,7 +1357,10 @@ mod tests {
         b.store_at(a.clone(), tid_x(), reg(v), Ty::I32);
         let p = lowered_of(&b.build());
         check_well_formed(&p);
-        assert!(p.insts.iter().any(|i| matches!(i, Inst::IfBegin { .. })));
+        assert!(p
+            .insts
+            .iter()
+            .any(|i| matches!(i, Inst::IfBegin { .. } | Inst::CmpIfBegin { .. })));
         assert!(p.insts.iter().any(|i| matches!(i, Inst::Else { .. })));
     }
 

@@ -74,6 +74,11 @@ pub enum CompileError {
     /// A pass broke an IR invariant (pass name + violations).
     PassVerify(&'static str, Vec<VerifyError>),
     Fission(FissionError),
+    /// Lowering hit an internal legality violation (kernel + cause) —
+    /// a compiler bug surfaced as a structured error, not an abort.
+    Lower { kernel: String, err: lower::LowerError },
+    /// The post-lowering structural verifier rejected the bytecode.
+    LoweredVerify(Vec<String>),
 }
 
 impl std::fmt::Display for CompileError {
@@ -94,11 +99,42 @@ impl std::fmt::Display for CompileError {
                 Ok(())
             }
             CompileError::Fission(e) => write!(f, "fission failed: {e}"),
+            CompileError::Lower { kernel, err } => {
+                write!(f, "lowering `{kernel}` failed: {err}")
+            }
+            CompileError::LoweredVerify(errs) => {
+                write!(f, "lowered-program verification failed:")?;
+                for e in errs {
+                    write!(f, " {e};")?;
+                }
+                Ok(())
+            }
         }
     }
 }
 
 impl std::error::Error for CompileError {}
+
+/// Compilation knobs beyond the opt level.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CompileCfg {
+    pub opt: OptLevel,
+    /// Superinstruction fusion + register compaction (`passes::fuse`).
+    /// `None` follows the opt level (on at `-O2`); `Some(_)` forces it.
+    pub fuse: Option<bool>,
+}
+
+impl CompileCfg {
+    /// The configuration implied by a bare opt level.
+    pub fn opt(opt: OptLevel) -> Self {
+        CompileCfg { opt, fuse: None }
+    }
+
+    /// Is fusion enabled under this configuration?
+    pub fn fuse_enabled(&self) -> bool {
+        self.fuse.unwrap_or(self.opt >= OptLevel::O2)
+    }
+}
 
 /// Run the full kernel compilation pipeline at the default opt level
 /// (`-O2`).
@@ -108,6 +144,12 @@ pub fn compile_kernel(kernel: &Kernel) -> Result<CompiledKernel, CompileError> {
 
 /// Run the full kernel compilation pipeline at an explicit opt level.
 pub fn compile_kernel_opt(kernel: &Kernel, opt: OptLevel) -> Result<CompiledKernel, CompileError> {
+    compile_kernel_cfg(kernel, CompileCfg::opt(opt))
+}
+
+/// Run the full kernel compilation pipeline with explicit knobs.
+pub fn compile_kernel_cfg(kernel: &Kernel, cfg: CompileCfg) -> Result<CompiledKernel, CompileError> {
+    let opt = cfg.opt;
     let mut pm = PassManager::new(opt);
 
     // Input contract + analyses that must see the *user's* kernel: the
@@ -165,7 +207,9 @@ pub fn compile_kernel_opt(kernel: &Kernel, opt: OptLevel) -> Result<CompiledKern
         );
     }
     let licm = opt >= OptLevel::O2;
-    let lowered = lower::lower_opt(&mpmd, &memory, &layout, ev.extra_base, uniform.as_ref(), licm);
+    let mut lowered =
+        lower::lower_opt(&mpmd, &memory, &layout, ev.extra_base, uniform.as_ref(), licm)
+            .map_err(|err| CompileError::Lower { kernel: kernel.name.clone(), err })?;
     pm.record(
         "lower",
         lowered.insts.len(),
@@ -178,6 +222,21 @@ pub fn compile_kernel_opt(kernel: &Kernel, opt: OptLevel) -> Result<CompiledKern
             lowered.licm_hoisted
         ),
     );
+
+    // Superinstruction fusion + SoA column compaction (on at -O2,
+    // forceable either way via `CompileCfg::fuse`). Observationally
+    // invisible — see `passes::fuse` for the transparency argument.
+    if cfg.fuse_enabled() {
+        let nfused = passes::fuse::run(&mut lowered);
+        let (cols_before, cols_after) = passes::fuse::compact(&mut lowered);
+        pm.record(
+            "fuse",
+            lowered.insts.len(),
+            lowered.num_regs,
+            format!("{nfused} fused, vec cols {cols_before}->{cols_after}"),
+        );
+    }
+    passes::fuse::verify_lowered(&lowered).map_err(CompileError::LoweredVerify)?;
 
     Ok(CompiledKernel {
         mpmd,
@@ -346,6 +405,27 @@ mod tests {
             compile_kernel(&b.build()),
             Err(CompileError::Verify(_))
         ));
+    }
+
+    /// Builder kernels bypass the frontend, so the pipeline's own
+    /// `ir::verify` stage must reject bool atomics before they can
+    /// reach the engines' (now debug-assert-guarded) atomic arms.
+    #[test]
+    fn bool_atomic_rejected_at_verify() {
+        let mut b = KernelBuilder::new("badatomic");
+        let flags = b.ptr_param("flags", Ty::Bool);
+        b.atomic_rmw_void(
+            AtomicOp::Add,
+            index(flags.clone(), tid_x(), Ty::Bool),
+            c_bool(true),
+            Ty::Bool,
+        );
+        match compile_kernel(&b.build()) {
+            Err(CompileError::Verify(errs)) => {
+                assert!(errs.contains(&VerifyError::AtomicOnBool), "{errs:?}");
+            }
+            other => panic!("expected Verify(AtomicOnBool), got {other:?}"),
+        }
     }
 
     #[test]

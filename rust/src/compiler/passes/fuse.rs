@@ -1,0 +1,339 @@
+//! Post-lowering superinstruction fusion + register-file compaction.
+//!
+//! The bytecode VM pays one dispatch (match arm + pc bump + active-lane
+//! loop setup) per instruction. The hot CIR idioms — `p[i]` loads and
+//! stores (`Index`+`Load`/`Store`), load-feeds-arithmetic
+//! (`Load`+`Bin`), arithmetic chains (`Bin`+`Bin`) and compare-branch
+//! glue (`Bin`+`LoopTest`/`IfBegin`) — each cost two dispatches for
+//! what one tight per-lane loop can do. This pass collapses adjacent
+//! pairs into the superinstruction variants of
+//! [`Inst`](crate::compiler::lower::Inst).
+//!
+//! **Transparency contract.** Fusion must be observationally invisible:
+//! bit-identical outputs, `ExecStats` and `TraceRec` streams at every
+//! opt level × engine. Three rules keep it so:
+//!
+//! * the intermediate register of a pair is still written by the fused
+//!   form, so every architectural register holds the same value after
+//!   the superinstruction as after the unfused pair;
+//! * only *vector-flagged* pairs fuse, and every register the pair
+//!   writes must be vector-class. Per-lane slots are disjoint across
+//!   lanes, so interleaving the two halves per lane (fused) instead of
+//!   running each half across all lanes (unfused) reads and writes the
+//!   exact same slot values. Scalar-flagged instructions (and uniform
+//!   branch conditions, which the VM short-circuits once per block)
+//!   never fuse;
+//! * a pair whose second instruction is a jump target does not fuse,
+//!   and all surviving jump targets are renumbered through an
+//!   old-pc → new-pc map. [`Inst::Acct`] never fuses, so instruction
+//!   accounting is untouched.
+//!
+//! **Compaction.** Lowering numbers registers sparsely (CIR numbering
+//! plus temporaries, classes interleaved). The VM sizes its SoA
+//! register file as `columns × block_size`, so dead columns cost cache
+//! footprint on every launch. [`compact`] renumbers the registers that
+//! are actually referenced: vector class densely into
+//! `0..num_vec_regs`, scalar class above it. Register ids are not
+//! observable (stats count instructions, traces record addresses), so
+//! renumbering preserves the contract trivially.
+
+use crate::compiler::lower::{Inst, LoweredProgram, Pc, RegId};
+
+/// Collapse adjacent fusible pairs into superinstructions, renumbering
+/// jump targets. Returns the number of pairs fused. Idempotent in the
+/// sense that a second run can only fuse pairs the first run created
+/// no opportunity for (superinstructions themselves never re-fuse).
+pub fn run(p: &mut LoweredProgram) -> usize {
+    let n = p.insts.len();
+    // pc's that are jump targets: the second half of a fused pair must
+    // not be directly reachable (`t == n` marks jump-to-end)
+    let mut target = vec![false; n + 1];
+    for inst in &p.insts {
+        let mut i = *inst;
+        i.for_each_target_mut(|t| target[*t as usize] = true);
+    }
+    let scalar_reg = p.scalar_reg.clone();
+    let vec_reg = |r: RegId| !scalar_reg[r as usize];
+    let mut out: Vec<Inst> = Vec::with_capacity(n);
+    let mut out_scalar: Vec<bool> = Vec::with_capacity(n);
+    let mut new_index = vec![0u32; n + 1];
+    let mut fused = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        new_index[i] = out.len() as u32;
+        let pair = if i + 1 < n && !target[i + 1] && !p.scalar[i] && !p.scalar[i + 1] {
+            fuse_pair(p.insts[i], p.insts[i + 1], &vec_reg)
+        } else {
+            None
+        };
+        if let Some(f) = pair {
+            // the consumed slot maps to the fused instruction; nothing
+            // can jump there (checked above)
+            new_index[i + 1] = out.len() as u32;
+            out.push(f);
+            out_scalar.push(false);
+            fused += 1;
+            i += 2;
+        } else {
+            out.push(p.insts[i]);
+            out_scalar.push(p.scalar[i]);
+            i += 1;
+        }
+    }
+    new_index[n] = out.len() as u32;
+    for inst in &mut out {
+        inst.for_each_target_mut(|t| *t = new_index[*t as usize]);
+    }
+    p.insts = out;
+    p.scalar = out_scalar;
+    fused
+}
+
+/// Try to fuse the adjacent pair `a; b`. Both carry the vector
+/// execution flag (checked by the caller); every written register must
+/// additionally be vector-class so per-lane interleaving is safe.
+fn fuse_pair(a: Inst, b: Inst, vec_reg: &impl Fn(RegId) -> bool) -> Option<Inst> {
+    match (a, b) {
+        // compare + branch: the branch condition is exactly the
+        // compare result, and it is lane-varying (uniform conditions
+        // keep the VM's once-per-block short-circuit path)
+        (Inst::Bin { op, dst, a: x, b: y, flops }, Inst::LoopTest { cond, exit_t })
+            if cond == dst && vec_reg(dst) =>
+        {
+            Some(Inst::CmpLoopTest { op, a: x, b: y, dst, exit_t, f: flops })
+        }
+        (Inst::Bin { op, dst, a: x, b: y, flops }, Inst::IfBegin { cond, else_t })
+            if cond == dst && vec_reg(dst) =>
+        {
+            Some(Inst::CmpIfBegin { op, a: x, b: y, dst, else_t, f: flops })
+        }
+        // affine index chain + memory access: the `p[i]` idiom
+        (Inst::Index { dst: t, base, idx, elem }, Inst::Load { dst, ptr, ty })
+            if ptr == t && vec_reg(t) && vec_reg(dst) =>
+        {
+            Some(Inst::IndexLoad { t, base, idx, elem, dst, ty })
+        }
+        (Inst::Index { dst: t, base, idx, elem }, Inst::Store { ptr, val, ty })
+            if ptr == t && vec_reg(t) =>
+        {
+            Some(Inst::IndexStore { t, base, idx, elem, val, ty })
+        }
+        // load + arithmetic on the loaded value
+        (Inst::Load { dst: t, ptr, ty }, Inst::Bin { op, dst, a: x, b: y, flops })
+            if (x == t || y == t) && vec_reg(t) && vec_reg(dst) =>
+        {
+            Some(Inst::LoadBin {
+                t,
+                ptr,
+                lty: ty,
+                op,
+                dst,
+                c: if x == t { y } else { x },
+                t_left: x == t,
+                f2: flops,
+            })
+        }
+        // arithmetic chain (mul feeding add, index affine math, …);
+        // load+mul+add collapses to LoadBin followed by FusedBin
+        (
+            Inst::Bin { op: op1, dst: t, a: x1, b: y1, flops: f1 },
+            Inst::Bin { op: op2, dst, a: x2, b: y2, flops: f2 },
+        ) if (x2 == t || y2 == t) && vec_reg(t) && vec_reg(dst) => Some(Inst::FusedBin {
+            op1,
+            t,
+            a: x1,
+            b: y1,
+            op2,
+            dst,
+            c: if x2 == t { y2 } else { x2 },
+            t_left: x2 == t,
+            f1,
+            f2,
+        }),
+        _ => None,
+    }
+}
+
+/// Renumber the register file so referenced vector registers occupy
+/// dense column ids `0..num_vec_regs` and referenced scalar registers
+/// sit above them; unreferenced registers are dropped. Returns
+/// `(columns before, columns after)` for pipeline reporting.
+pub fn compact(p: &mut LoweredProgram) -> (usize, usize) {
+    let old_cols = p.num_vec_regs;
+    let mut used = vec![false; p.num_regs];
+    for inst in &p.insts {
+        let mut i = *inst;
+        i.for_each_reg_mut(|r| used[*r as usize] = true);
+    }
+    let mut remap = vec![u32::MAX; p.num_regs];
+    let mut nv: u32 = 0;
+    for (r, &u) in used.iter().enumerate() {
+        if u && !p.scalar_reg[r] {
+            remap[r] = nv;
+            nv += 1;
+        }
+    }
+    let mut next = nv;
+    for (r, &u) in used.iter().enumerate() {
+        if u && p.scalar_reg[r] {
+            remap[r] = next;
+            next += 1;
+        }
+    }
+    for inst in &mut p.insts {
+        inst.for_each_reg_mut(|r| *r = remap[*r as usize]);
+    }
+    p.num_regs = next as usize;
+    p.num_vec_regs = nv as usize;
+    p.scalar_reg = (0..next).map(|r| r >= nv).collect();
+    (old_cols, nv as usize)
+}
+
+/// Structural verifier for lowered programs, run after every lowering
+/// pipeline (`ir::verify`-style: collect all violations, never abort).
+/// Catches the register/target renumbering bugs fusion or compaction
+/// could introduce before the VM turns them into out-of-bounds reads.
+pub fn verify_lowered(p: &LoweredProgram) -> Result<(), Vec<String>> {
+    let mut errs = Vec::new();
+    let n = p.insts.len() as Pc;
+    if p.scalar.len() != p.insts.len() {
+        errs.push("scalar-flag vector out of sync with code".into());
+    }
+    if p.scalar_reg.len() != p.num_regs {
+        errs.push("register-class bitmap out of sync with register count".into());
+    }
+    if p.num_vec_regs > p.num_regs {
+        errs.push("vector column count exceeds register count".into());
+    }
+    let mut regions = 0i64;
+    let mut ifs = 0i64;
+    let mut loops = 0i64;
+    for (pc, inst) in p.insts.iter().enumerate() {
+        let mut i = *inst;
+        i.for_each_reg_mut(|r| {
+            let ri = *r as usize;
+            if ri >= p.num_regs {
+                errs.push(format!("pc {pc}: register r{ri} out of range"));
+            } else if !p.scalar_reg[ri] && ri >= p.num_vec_regs {
+                errs.push(format!("pc {pc}: vector register r{ri} above column count"));
+            }
+        });
+        i.for_each_target_mut(|t| {
+            if *t > n {
+                errs.push(format!("pc {pc}: jump target @{t} out of range"));
+            }
+        });
+        match inst {
+            Inst::RegionBegin { .. } => regions += 1,
+            Inst::RegionEnd => regions -= 1,
+            Inst::IfBegin { .. } | Inst::CmpIfBegin { .. } => ifs += 1,
+            Inst::IfEnd => ifs -= 1,
+            Inst::LoopBegin => loops += 1,
+            Inst::LoopEnd => loops -= 1,
+            _ => {}
+        }
+        let is_super = matches!(
+            inst,
+            Inst::FusedBin { .. }
+                | Inst::IndexLoad { .. }
+                | Inst::IndexStore { .. }
+                | Inst::LoadBin { .. }
+                | Inst::CmpLoopTest { .. }
+                | Inst::CmpIfBegin { .. }
+        );
+        if is_super && p.scalar[pc] {
+            errs.push(format!("pc {pc}: scalar-flagged superinstruction"));
+        }
+    }
+    if regions != 0 {
+        errs.push(format!("unbalanced regions ({regions})"));
+    }
+    if ifs != 0 {
+        errs.push(format!("unbalanced lane ifs ({ifs})"));
+    }
+    if loops != 0 {
+        errs.push(format!("unbalanced lane loops ({loops})"));
+    }
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::OptLevel;
+    use crate::compiler::{compile_kernel_cfg, compile_kernel_opt, CompileCfg};
+    use crate::ir::*;
+
+    fn vecadd() -> Kernel {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F32);
+        let bb = b.ptr_param("b", Ty::F32);
+        let c = b.ptr_param("c", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bl| {
+            let s = add(at(a.clone(), reg(id), Ty::F32), at(bb.clone(), reg(id), Ty::F32));
+            bl.store_at(c.clone(), reg(id), s, Ty::F32);
+        });
+        b.build()
+    }
+
+    fn count_super(p: &LoweredProgram) -> usize {
+        p.insts
+            .iter()
+            .filter(|i| {
+                matches!(
+                    i,
+                    Inst::FusedBin { .. }
+                        | Inst::IndexLoad { .. }
+                        | Inst::IndexStore { .. }
+                        | Inst::LoadBin { .. }
+                        | Inst::CmpLoopTest { .. }
+                        | Inst::CmpIfBegin { .. }
+                )
+            })
+            .count()
+    }
+
+    #[test]
+    fn o2_fuses_memory_idioms_and_verifies() {
+        let ck = compile_kernel_opt(&vecadd(), OptLevel::O2).unwrap();
+        let p = &ck.lowered;
+        assert!(count_super(p) > 0, "vecadd has fusible pairs");
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::IndexStore { .. })));
+        verify_lowered(p).unwrap();
+    }
+
+    #[test]
+    fn fuse_off_keeps_unfused_shape() {
+        let cfg = CompileCfg { opt: OptLevel::O2, fuse: Some(false) };
+        let ck = compile_kernel_cfg(&vecadd(), cfg).unwrap();
+        assert_eq!(count_super(&ck.lowered), 0);
+        assert_eq!(ck.lowered.num_vec_regs, ck.lowered.num_regs);
+        verify_lowered(&ck.lowered).unwrap();
+    }
+
+    #[test]
+    fn compaction_drops_dead_columns() {
+        let ck = compile_kernel_opt(&vecadd(), OptLevel::O2).unwrap();
+        let p = &ck.lowered;
+        // compacted: vector columns dense and no larger than the
+        // register count; every scalar reg renumbered above them
+        assert!(p.num_vec_regs <= p.num_regs);
+        for (r, &s) in p.scalar_reg.iter().enumerate() {
+            assert_eq!(s, r >= p.num_vec_regs);
+        }
+    }
+
+    #[test]
+    fn fuse_at_o0_is_well_formed() {
+        let cfg = CompileCfg { opt: OptLevel::O0, fuse: Some(true) };
+        let ck = compile_kernel_cfg(&vecadd(), cfg).unwrap();
+        assert!(count_super(&ck.lowered) > 0);
+        verify_lowered(&ck.lowered).unwrap();
+    }
+}

@@ -27,6 +27,7 @@
 
 pub mod dce;
 pub mod fold;
+pub mod fuse;
 pub mod licm;
 pub mod types;
 pub mod uniformity;

@@ -155,7 +155,21 @@ impl BlockScratch {
 
     /// Size buffers for a launch; cheap when already big enough.
     pub fn prepare(&mut self, num_regs: usize, block_size: usize, shared_bytes: usize) {
-        let need = num_regs * block_size;
+        self.prepare_cols(num_regs, num_regs, block_size, shared_bytes);
+    }
+
+    /// Size buffers for a launch with a compacted register file: the
+    /// per-lane SoA store holds only `vec_regs` columns (the bytecode
+    /// compiler's `num_vec_regs`), while block-scope slots still index
+    /// by full register id. Cheap when already big enough.
+    pub fn prepare_cols(
+        &mut self,
+        vec_regs: usize,
+        num_regs: usize,
+        block_size: usize,
+        shared_bytes: usize,
+    ) {
+        let need = vec_regs * block_size;
         if self.thread_regs.len() < need {
             self.thread_regs.resize(need, Value::zero());
         }

@@ -290,6 +290,15 @@ impl<'a> Emitter<'a> {
             ));
         }
         let (ptr, elem) = self.sema.lower_place(&args[0])?;
+        if elem == Ty::Bool {
+            // no bool atomic exists on any target; rejecting here (and
+            // re-checking in `ir::verify`) is what lets the engines
+            // treat their bool-atomic arms as unreachable
+            return Err(self.sema.diag(
+                format!("`{name}` on a `bool` location is not a valid atomic operation"),
+                span,
+            ));
+        }
         if let Some((_, dty)) = dst {
             if dty != elem {
                 return Err(self.sema.diag(
@@ -578,6 +587,20 @@ mod tests {
         )
         .unwrap_err();
         assert!(e.msg.contains("`continue` inside a non-canonical `for`"));
+    }
+
+    /// Regression: bool atomics used to panic inside the execution
+    /// engines; they must die here with a spanned diagnostic instead.
+    #[test]
+    fn bool_atomic_rejected_with_diagnostic() {
+        let e = parse_kernels(
+            "__global__ void k(bool* flags) {\n\
+             atomicAdd(&flags[threadIdx.x], true);\n\
+             }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("`atomicAdd` on a `bool` location"), "{}", e.msg);
+        assert_eq!(e.line, 2);
     }
 
     #[test]

@@ -28,6 +28,13 @@ pub enum VerifyError {
     MisplacedStmt(&'static str),
     /// MPMD check: register id ≥ `num_regs`.
     RegOutOfRange(Reg),
+    /// Atomic read-modify-write on a `bool` element — no memory
+    /// instruction exists for it (checked in both SPMD and MPMD form
+    /// so builder kernels can't smuggle one past the frontend).
+    AtomicOnBool,
+    /// `atomicCAS` on a non-integer element type (CUDA only defines
+    /// integer CAS; float emulation goes through `AtomicOp` RMW).
+    AtomicCasNonInt(Ty),
 }
 
 impl std::fmt::Display for VerifyError {
@@ -48,6 +55,10 @@ impl std::fmt::Display for VerifyError {
             }
             VerifyError::MisplacedStmt(c) => write!(f, "statement `{c}` at the wrong scope"),
             VerifyError::RegOutOfRange(r) => write!(f, "register {r} out of range"),
+            VerifyError::AtomicOnBool => write!(f, "atomic operation on bool element"),
+            VerifyError::AtomicCasNonInt(ty) => {
+                write!(f, "atomicCAS on non-integer element type {ty:?}")
+            }
         }
     }
 }
@@ -217,18 +228,24 @@ impl<'k> Verifier<'k> {
                     }
                 }
                 Stmt::Return => {}
-                Stmt::AtomicRmw { ptr, val, dst, .. } => {
+                Stmt::AtomicRmw { ptr, val, dst, ty, .. } => {
                     self.expr(ptr);
                     self.expr(val);
+                    if *ty == Ty::Bool {
+                        self.errors.push(VerifyError::AtomicOnBool);
+                    }
                     if let Some(d) = dst {
                         self.thread_dep.insert(*d);
                         self.defined.insert(*d);
                     }
                 }
-                Stmt::AtomicCas { ptr, cmp, val, dst, .. } => {
+                Stmt::AtomicCas { ptr, cmp, val, dst, ty } => {
                     self.expr(ptr);
                     self.expr(cmp);
                     self.expr(val);
+                    if !matches!(ty, Ty::I32 | Ty::I64) {
+                        self.errors.push(VerifyError::AtomicCasNonInt(*ty));
+                    }
                     if let Some(d) = dst {
                         self.thread_dep.insert(*d);
                         self.defined.insert(*d);
@@ -381,19 +398,25 @@ fn mpmd_thread_stmts(body: &[Stmt], m: &MpmdKernel, errors: &mut Vec<VerifyError
                 mpmd_thread_stmts(body, m, errors);
             }
             Stmt::Break | Stmt::Continue | Stmt::Return => {}
-            Stmt::AtomicRmw { ptr, val, dst, .. } => {
+            Stmt::AtomicRmw { ptr, val, dst, ty, .. } => {
                 mpmd_expr(ptr, m, errors);
                 mpmd_expr(val, m, errors);
+                if *ty == Ty::Bool {
+                    errors.push(VerifyError::AtomicOnBool);
+                }
                 if let Some(d) = dst {
                     if d.0 >= m.num_regs {
                         errors.push(VerifyError::RegOutOfRange(*d));
                     }
                 }
             }
-            Stmt::AtomicCas { ptr, cmp, val, dst, .. } => {
+            Stmt::AtomicCas { ptr, cmp, val, dst, ty } => {
                 mpmd_expr(ptr, m, errors);
                 mpmd_expr(cmp, m, errors);
                 mpmd_expr(val, m, errors);
+                if !matches!(ty, Ty::I32 | Ty::I64) {
+                    errors.push(VerifyError::AtomicCasNonInt(*ty));
+                }
                 if let Some(d) = dst {
                     if d.0 >= m.num_regs {
                         errors.push(VerifyError::RegOutOfRange(*d));
@@ -411,7 +434,9 @@ fn mpmd_thread_stmts(body: &[Stmt], m: &MpmdKernel, errors: &mut Vec<VerifyError
     }
 }
 
-fn stmt_name(s: &Stmt) -> &'static str {
+/// Short statement-kind label for diagnostics (shared with the
+/// lowering-stage legality errors in `compiler::lower`).
+pub fn stmt_name(s: &Stmt) -> &'static str {
     match s {
         Stmt::Assign { .. } => "assign",
         Stmt::Store { .. } => "store",
@@ -565,6 +590,39 @@ mod tests {
         assert!(errs.iter().any(|e| matches!(e, VerifyError::SpmdConstructInMpmd(_))));
         assert!(errs.iter().any(|e| matches!(e, VerifyError::MisplacedStmt("assign"))));
         assert!(errs.iter().any(|e| matches!(e, VerifyError::RegOutOfRange(Reg(4)))));
+    }
+
+    #[test]
+    fn bool_atomic_and_float_cas_rejected() {
+        let k = Kernel {
+            name: "ba".into(),
+            params: vec![ParamDecl {
+                name: "p".into(),
+                ty: ParamTy::Ptr(AddrSpace::Global, Ty::Bool),
+            }],
+            shared: vec![],
+            dyn_shared_elem: None,
+            body: vec![
+                Stmt::AtomicRmw {
+                    op: AtomicOp::Add,
+                    ptr: param(0),
+                    val: c_bool(true),
+                    ty: Ty::Bool,
+                    dst: None,
+                },
+                Stmt::AtomicCas {
+                    ptr: param(0),
+                    cmp: c_f32(0.0),
+                    val: c_f32(1.0),
+                    ty: Ty::F32,
+                    dst: None,
+                },
+            ],
+            num_regs: 0,
+        };
+        let errs = verify(&k).unwrap_err();
+        assert!(errs.contains(&VerifyError::AtomicOnBool));
+        assert!(errs.contains(&VerifyError::AtomicCasNonInt(Ty::F32)));
     }
 
     #[test]

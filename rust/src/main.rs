@@ -20,8 +20,8 @@
 
 use cupbop::benchsuite::spec::{self, Backend, Scale};
 use cupbop::compiler::{
-    compile_kernel_opt, detect_features, explain_unsupported, judge, lower, Framework, OptLevel,
-    PassManager,
+    compile_kernel_cfg, detect_features, explain_unsupported, judge, lower, CompileCfg, Framework,
+    OptLevel, PassManager,
 };
 use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode, SchedKind};
 use cupbop::frontend::{self, harness};
@@ -74,6 +74,10 @@ fn print_help() {
            --opt N           optimization level 0|1|2 (default 2:\n\
                              fold+DCE+LICM+uniformity scalarization;\n\
                              also accepted by run/suite/dump)\n\
+           --fuse F          on|off — superinstruction fusion +\n\
+                             register-file compaction (default: on at\n\
+                             -O2, off below; also accepted by\n\
+                             run/suite/dump)\n\
          \n\
          run flags:\n\
            --bench NAME      benchmark to run (see `cupbop list`)\n\
@@ -139,6 +143,22 @@ fn parse_opt(args: &[String]) -> OptLevel {
         }),
         None => OptLevel::default(),
     }
+}
+
+fn parse_fuse(args: &[String]) -> Option<bool> {
+    match flag_value(args, "--fuse") {
+        Some("on") | Some("1") | Some("true") => Some(true),
+        Some("off") | Some("0") | Some("false") => Some(false),
+        Some(other) => {
+            eprintln!("unknown --fuse `{other}` (on|off); using the -O default");
+            None
+        }
+        None => None,
+    }
+}
+
+fn parse_compile_cfg(args: &[String]) -> CompileCfg {
+    CompileCfg { opt: parse_opt(args), fuse: parse_fuse(args) }
 }
 
 fn parse_backend(args: &[String]) -> Backend {
@@ -215,7 +235,7 @@ fn cmd_run(args: &[String]) -> ExitCode {
     }
     let backend = parse_backend(args);
     let cfg = parse_cfg(args);
-    let built = spec::build_program_opt(&b, parse_scale(args), parse_opt(args));
+    let built = spec::build_program_cfg(&b, parse_scale(args), parse_compile_cfg(args));
     let out = spec::run_on(&built, backend, cfg);
     match &out.check {
         Ok(()) => println!(
@@ -282,7 +302,7 @@ fn cmd_run_cu(path: &str, args: &[String]) -> ExitCode {
     };
     let backend = parse_backend(args);
     let cfg = parse_cfg(args);
-    let built = spec::build_prepared_opt(&kernel.name, prog, parse_opt(args));
+    let built = spec::build_prepared_cfg(&kernel.name, prog, parse_compile_cfg(args));
     let (out, arrays) = spec::run_with_arrays(&built, backend, cfg);
     if let Err(e) = out.check {
         eprintln!("{} [{}] FAILED: {e}", kernel.name, backend.name());
@@ -329,7 +349,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
                 continue;
             }
             if a.starts_with("--") {
-                skip = matches!(a.as_str(), "--emit" | "--opt" | "--kernel");
+                skip = matches!(a.as_str(), "--emit" | "--opt" | "--fuse" | "--kernel");
                 continue;
             }
             fs.push(a);
@@ -339,7 +359,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     if files.is_empty() {
         eprintln!(
             "usage: cupbop compile <file.cu> [more.cu ...] [--kernel NAME] \
-             [--emit cir|mpmd|bytecode] [--opt 0|1|2]"
+             [--emit cir|mpmd|bytecode] [--opt 0|1|2] [--fuse on|off]"
         );
         return ExitCode::FAILURE;
     }
@@ -352,11 +372,11 @@ fn cmd_compile(args: &[String]) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
-    let opt = parse_opt(args);
+    let ccfg = parse_compile_cfg(args);
     let only = flag_value(args, "--kernel");
     let mut failed = false;
     for f in files {
-        if compile_file(f, emit, opt, only).is_err() {
+        if compile_file(f, emit, ccfg, only).is_err() {
             failed = true;
         }
     }
@@ -367,7 +387,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     }
 }
 
-fn compile_file(path: &str, emit: EmitKind, opt: OptLevel, only: Option<&str>) -> Result<(), ()> {
+fn compile_file(path: &str, emit: EmitKind, cfg: CompileCfg, only: Option<&str>) -> Result<(), ()> {
     let src = std::fs::read_to_string(path).map_err(|e| {
         eprintln!("cannot read `{path}`: {e}");
     })?;
@@ -384,7 +404,7 @@ fn compile_file(path: &str, emit: EmitKind, opt: OptLevel, only: Option<&str>) -
     println!("// {path}: {} kernel(s)", kernels.len());
     for k in &kernels {
         // The full pipeline must accept frontend output unchanged.
-        let ck = compile_kernel_opt(k, opt).map_err(|e| {
+        let ck = compile_kernel_cfg(k, cfg).map_err(|e| {
             eprintln!("{path}: kernel `{}`: {e}", k.name);
         })?;
         println!();
@@ -438,7 +458,7 @@ fn cmd_suite(args: &[String]) -> ExitCode {
         if !in_suite || b.build.is_none() {
             continue;
         }
-        let built = spec::build_program_opt(&b, scale, parse_opt(args));
+        let built = spec::build_program_cfg(&b, scale, parse_compile_cfg(args));
         let out = spec::run_on(&built, backend, cfg);
         match out.check {
             Ok(()) => {
@@ -485,7 +505,7 @@ fn cmd_dump(args: &[String]) -> ExitCode {
         eprintln!("`{name}` is spec-only");
         return ExitCode::FAILURE;
     }
-    let built = spec::build_program_opt(&b, Scale::Tiny, parse_opt(args));
+    let built = spec::build_program_cfg(&b, Scale::Tiny, parse_compile_cfg(args));
     for ck in &built.compiled {
         println!("// ===== {} =====", ck.mpmd.name);
         println!("{}", cupbop::ir::pretty::mpmd_to_string(&ck.mpmd));

@@ -8,7 +8,9 @@
 
 use cupbop::benchsuite::spec::{self, Backend, BuiltProgram};
 use cupbop::compiler::passes::{dce, fold};
-use cupbop::compiler::{compile_kernel_opt, detect_features, pack, ArgValue, OptLevel};
+use cupbop::compiler::{
+    compile_kernel_cfg, compile_kernel_opt, detect_features, pack, ArgValue, CompileCfg, OptLevel,
+};
 use cupbop::exec::{
     BlockFn, BlockScratch, BytecodeBlockFn, CirBlockFn, ExecStats, LaunchInfo, StatsSnapshot,
     TraceRec,
@@ -151,14 +153,14 @@ fn corpus_o2_scalarizes_and_reports_pipeline() {
 /// execution cannot legally observe different values).
 fn run_blocks(
     k: &Kernel,
-    opt: OptLevel,
+    cfg: CompileCfg,
     interp: bool,
     grid: u32,
     block: u32,
     init: &[i32],
     ro: &[i32],
 ) -> (Vec<i32>, StatsSnapshot) {
-    let ck = Arc::new(compile_kernel_opt(k, opt).unwrap());
+    let ck = Arc::new(compile_kernel_cfg(k, cfg).unwrap());
     let mem = DeviceMemory::with_capacity(1 << 18);
     let buf = mem.alloc(init.len().max(1) * 4);
     mem.write_slice_i32(buf, init);
@@ -299,13 +301,166 @@ fn random_kernels_opt_levels_agree() {
         let n = (grid * bs) as usize;
         let init = rng.vec_i32(n, -30, 30);
         let ro = rng.vec_i32(n.max(1), -10, 10);
-        let (base_mem, base_stats) = run_blocks(&k, OptLevel::O0, true, grid, bs, &init, &ro);
+        let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: None };
+        let (base_mem, base_stats) = run_blocks(&k, base_cfg, true, grid, bs, &init, &ro);
         for opt in OptLevel::ALL {
-            let (m, s) = run_blocks(&k, opt, false, grid, bs, &init, &ro);
+            let cfg = CompileCfg { opt, fuse: None };
+            let (m, s) = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
             assert_eq!(base_mem, m, "memory diverged at {opt:?}");
             assert_eq!(base_stats, s, "ExecStats diverged at {opt:?}");
         }
     });
+}
+
+/// Superinstruction fusion must be invisible: randomized kernels built
+/// around the fusible shapes (load→mul→add chains, affine
+/// `base + i*scale` gathers, compare-driven guards and loops) plus
+/// divergent masks (tid guards, early returns) must produce bit-equal
+/// memory and `ExecStats` with fusion forced on and forced off, at
+/// `-O0` and `-O2`, against the `-O0` interpreter ground truth.
+#[test]
+fn random_kernels_fused_unfused_agree() {
+    use cupbop::ir::*;
+
+    #[derive(Clone, Copy)]
+    enum Op {
+        /// v = p[id]; p[id] = v*c1 + c2  — LoadBin/FusedBin bait
+        MulAddChain { c1: i32, c2: i32 },
+        /// p[id] += q[(t*s) % n]  — affine IndexLoad bait
+        AffineGather { s: i32 },
+        /// compare+if guard on tid — CmpIfBegin bait, divergent
+        CmpGuard { modk: i32, c: i32 },
+        /// counted loop with a compare head — CmpLoopTest bait
+        CmpLoop { trips: i32, c: i32 },
+        /// divergent early return — partial masks over everything after
+        EarlyReturn { cutoff: i32 },
+    }
+
+    fn build(ops: &[Op]) -> Kernel {
+        let mut b = KernelBuilder::new("rand_fuse");
+        let p = b.ptr_param("p", Ty::I32);
+        let q = b.ptr_param("q", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        let t = b.assign(tid_x());
+        for op in ops {
+            match *op {
+                Op::MulAddChain { c1, c2 } => {
+                    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+                    b.store_at(
+                        p.clone(),
+                        reg(id),
+                        add(mul(reg(v), c_i32(c1)), c_i32(c2)),
+                        Ty::I32,
+                    );
+                }
+                Op::AffineGather { s } => {
+                    let ix = rem(mul(reg(t), c_i32(s)), n.clone());
+                    let g = b.assign(at(q.clone(), ix, Ty::I32));
+                    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+                    b.store_at(p.clone(), reg(id), add(reg(v), reg(g)), Ty::I32);
+                }
+                Op::CmpGuard { modk, c } => {
+                    let p = p.clone();
+                    b.if_(lt(rem(reg(t), c_i32(modk)), c_i32(1)), |bb| {
+                        let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                        bb.store_at(p.clone(), reg(id), add(reg(v), c_i32(c)), Ty::I32);
+                    });
+                }
+                Op::CmpLoop { trips, c } => {
+                    let p = p.clone();
+                    b.for_(c_i32(0), c_i32(trips), c_i32(1), |bb, j| {
+                        let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                        bb.store_at(
+                            p.clone(),
+                            reg(id),
+                            add(reg(v), mul(reg(j), c_i32(c))),
+                            Ty::I32,
+                        );
+                    });
+                }
+                Op::EarlyReturn { cutoff } => {
+                    b.if_(ge(reg(t), c_i32(cutoff)), |bb| bb.ret());
+                }
+            }
+        }
+        b.build()
+    }
+
+    for_random_cases(24, 0x0F05EF05, |rng| {
+        let bs = rng.range_usize(1, 33) as u32;
+        let grid = rng.range_usize(1, 4) as u32;
+        let nops = rng.range_usize(1, 6);
+        let ops: Vec<Op> = (0..nops)
+            .map(|_| match rng.below(5) {
+                0 => Op::MulAddChain {
+                    c1: rng.range_i64(-3, 4) as i32,
+                    c2: rng.range_i64(-5, 6) as i32,
+                },
+                1 => Op::AffineGather { s: rng.range_i64(1, 5) as i32 },
+                2 => Op::CmpGuard {
+                    modk: rng.range_i64(2, 5) as i32,
+                    c: rng.range_i64(1, 7) as i32,
+                },
+                3 => Op::CmpLoop {
+                    trips: rng.range_i64(1, 5) as i32,
+                    c: rng.range_i64(-2, 3) as i32,
+                },
+                _ => Op::EarlyReturn { cutoff: rng.range_i64(0, 33) as i32 },
+            })
+            .collect();
+        let k = build(&ops);
+        let n = (grid * bs) as usize;
+        let init = rng.vec_i32(n, -40, 40);
+        let ro = rng.vec_i32(n.max(1), -10, 10);
+        let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: Some(false) };
+        let (base_mem, base_stats) = run_blocks(&k, base_cfg, true, grid, bs, &init, &ro);
+        for opt in [OptLevel::O0, OptLevel::O2] {
+            for fuse in [false, true] {
+                let cfg = CompileCfg { opt, fuse: Some(fuse) };
+                let (m, s) = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
+                assert_eq!(base_mem, m, "memory diverged at {opt:?} fuse={fuse}");
+                assert_eq!(base_stats, s, "ExecStats diverged at {opt:?} fuse={fuse}");
+            }
+        }
+    });
+}
+
+/// Fusion at the reference-runtime level: fused and unfused `-O2`
+/// builds of every corpus kernel are observably identical — arrays,
+/// `ExecStats` and the `TraceRec` stream — on both engines.
+#[test]
+fn corpus_fused_unfused_observably_identical() {
+    for file in CORPUS {
+        for kernel in parse_file(file) {
+            let cfg = SynthCfg { n: 192, block: 64, grid: None };
+            let build = |fuse: bool| {
+                let (prog, _) = synth_program(&kernel, &cfg)
+                    .unwrap_or_else(|e| panic!("{file}/{}: {e}", kernel.name));
+                let ccfg = CompileCfg { opt: OptLevel::O2, fuse: Some(fuse) };
+                spec::build_prepared_cfg(&kernel.name, prog, ccfg)
+            };
+            let baseline = run_reference_traced(&build(false), ExecMode::Bytecode);
+            for exec in [ExecMode::Interpret, ExecMode::Bytecode] {
+                let run = run_reference_traced(&build(true), exec);
+                assert_eq!(
+                    baseline.arrays, run.arrays,
+                    "{file}/{}: arrays diverged fused [{exec:?}]",
+                    kernel.name
+                );
+                assert_eq!(
+                    baseline.stats, run.stats,
+                    "{file}/{}: ExecStats diverged fused [{exec:?}]",
+                    kernel.name
+                );
+                assert_eq!(
+                    baseline.trace, run.trace,
+                    "{file}/{}: TraceRec stream diverged fused [{exec:?}]",
+                    kernel.name
+                );
+            }
+        }
+    }
 }
 
 /// `cupbop run --opt` surface: the backends accept every opt level on
