@@ -1,6 +1,7 @@
 //! fig_opt — optimizing middle-end comparison: the bytecode VM at
 //! `-O0` (translation only) vs `-O1` (fold + DCE) vs `-O2` (LICM +
-//! uniformity-driven scalarization + superinstruction fusion).
+//! uniformity-driven scalarization + superinstruction fusion) vs `-O3`
+//! (sync-free block coarsening on top of `-O2`).
 //!
 //! Every implemented benchmark runs end to end on the serial reference
 //! executor (no pool, no scheduler noise) once per opt level; the table
@@ -9,19 +10,26 @@
 //! ≥ 1.2× geomean — uniform work (geometry math, parameter reads, loop
 //! bounds, uniform addresses) executes once per block instead of
 //! `block_size` times, and kernels dominated by uniform loop heads
-//! (fir, kmeans, stencils) gain the most. Outputs, ExecStats and
-//! traces are bit-identical across levels by construction (the
-//! differential suite enforces it); only wall-clock may move.
+//! (fir, kmeans, stencils) gain the most. The `coarse` column marks
+//! benchmarks whose every kernel dropped the mask machinery at `-O3`
+//! (coarse jump nests, zero divergence frames); the `-O3`/`-O2`
+//! geomean over that subset is the coarsening win and must stay above
+//! 1.0. Outputs, ExecStats and traces are bit-identical across levels
+//! by construction (the differential suite enforces it); only
+//! wall-clock may move.
 //!
 //! Trajectory mode (CI): `--json PATH` writes the table as a
 //! `BENCH_fig_opt.json` artifact; `--min-geomean X` fails the run if
-//! the `-O2`/`-O0` geomean drops below `X`; `--baseline PATH` fails if
-//! it regresses below 90% of a previously committed artifact (a `null`
-//! geomean in the baseline — the placeholder — skips the check).
-//! `--samples N` overrides the per-level sample count.
+//! the `-O2`/`-O0` geomean drops below `X`; `--min-o3-geomean X` does
+//! the same for the `-O3`/`-O2` geomean over the coarsened subset;
+//! `--baseline PATH` fails if either geomean regresses below 90% of a
+//! previously committed artifact (a `null` geomean in the baseline —
+//! the placeholder — skips that check). `--samples N` overrides the
+//! per-level sample count.
 
 use cupbop::benchkit;
 use cupbop::benchsuite::spec::{self, Scale};
+use cupbop::compiler::lower::Inst;
 use cupbop::compiler::OptLevel;
 use cupbop::frameworks::{ExecMode, ReferenceRuntime};
 use cupbop::host::run_host_program;
@@ -34,6 +42,9 @@ struct Row {
     o0_ns: u128,
     o1_ns: u128,
     o2_ns: u128,
+    o3_ns: u128,
+    /// every kernel lowered fully coarse at `-O3` (no mask regions)
+    coarsened: bool,
 }
 
 fn arg_value(args: &[String], name: &str) -> Option<String> {
@@ -64,24 +75,30 @@ fn json_num(v: f64) -> String {
     }
 }
 
-fn write_json(path: &str, samples: usize, rows: &[Row], geo: f64) {
+fn write_json(path: &str, samples: usize, rows: &[Row], geo: f64, geo_o3: f64) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"fig_opt\",\n");
     s.push_str("  \"scale\": \"small\",\n");
     s.push_str(&format!("  \"samples\": {samples},\n"));
     s.push_str(&format!("  \"geomean_o2_over_o0\": {},\n", json_num(geo)));
+    s.push_str(&format!("  \"geomean_o3_over_o2_coarse\": {},\n", json_num(geo_o3)));
     s.push_str("  \"benchmarks\": [\n");
     for (i, r) in rows.iter().enumerate() {
         let sp = r.o0_ns as f64 / (r.o2_ns as f64).max(1.0);
+        let sp3 = r.o2_ns as f64 / (r.o3_ns as f64).max(1.0);
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"o0_p50_ns\": {}, \"o1_p50_ns\": {}, \
-             \"o2_p50_ns\": {}, \"o2_over_o0\": {}}}{}\n",
+             \"o2_p50_ns\": {}, \"o3_p50_ns\": {}, \"o2_over_o0\": {}, \
+             \"o3_over_o2\": {}, \"coarsened\": {}}}{}\n",
             r.name,
             r.o0_ns,
             r.o1_ns,
             r.o2_ns,
+            r.o3_ns,
             json_num(sp),
+            json_num(sp3),
+            r.coarsened,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -97,22 +114,34 @@ fn main() -> ExitCode {
         arg_value(&args, "--samples").and_then(|v| v.parse().ok()).unwrap_or(5).max(1);
     let json_path = arg_value(&args, "--json");
     let min_geomean = arg_value(&args, "--min-geomean").and_then(|v| v.parse::<f64>().ok());
-    let baseline =
-        arg_value(&args, "--baseline").and_then(|p| read_baseline(&p, "geomean_o2_over_o0"));
+    let min_o3 = arg_value(&args, "--min-o3-geomean").and_then(|v| v.parse::<f64>().ok());
+    let baseline_path = arg_value(&args, "--baseline");
+    let baseline = baseline_path.as_ref().and_then(|p| read_baseline(p, "geomean_o2_over_o0"));
+    let baseline_o3 =
+        baseline_path.as_ref().and_then(|p| read_baseline(p, "geomean_o3_over_o2_coarse"));
 
     println!(
         "fig_opt — opt-level comparison (bytecode VM, Scale::Small, serial reference executor)"
     );
     println!();
     benchkit::print_row(
-        &["benchmark", "-O0 p50", "-O1 p50", "-O2 p50", "O2/O0"],
-        &[18, 12, 12, 12, 9],
+        &["benchmark", "-O0 p50", "-O1 p50", "-O2 p50", "-O3 p50", "O2/O0", "O3/O2", "coarse"],
+        &[18, 12, 12, 12, 12, 9, 9, 7],
     );
     let mut rows: Vec<Row> = Vec::new();
     for b in spec::all_benchmarks() {
         if b.build.is_none() {
             continue;
         }
+        // Static eligibility scan: "coarsened" means every kernel of
+        // the benchmark lowered with no mask region left at -O3.
+        let coarsened = spec::build_program_opt(&b, Scale::Small, OptLevel::O3)
+            .compiled
+            .iter()
+            .all(|ck| {
+                ck.lowered.insts.iter().any(|i| matches!(i, Inst::CoarseBegin { .. }))
+                    && !ck.lowered.insts.iter().any(|i| matches!(i, Inst::RegionBegin { .. }))
+            });
         let time = |opt: OptLevel| {
             let built = spec::build_program_opt(&b, Scale::Small, opt);
             let mem_cap = built.mem_cap.max(64 << 20);
@@ -127,32 +156,61 @@ fn main() -> ExitCode {
         let t0 = time(OptLevel::O0);
         let t1 = time(OptLevel::O1);
         let t2 = time(OptLevel::O2);
+        let t3 = time(OptLevel::O3);
         let sp = t0.p50.as_secs_f64() / t2.p50.as_secs_f64().max(1e-12);
+        let sp3 = t2.p50.as_secs_f64() / t3.p50.as_secs_f64().max(1e-12);
         let c0 = format!("{:.3?}", t0.p50);
         let c1 = format!("{:.3?}", t1.p50);
         let c2 = format!("{:.3?}", t2.p50);
+        let c3 = format!("{:.3?}", t3.p50);
         let cs = format!("{sp:.2}x");
-        benchkit::print_row(&[b.name, &c0, &c1, &c2, &cs], &[18, 12, 12, 12, 9]);
+        let cs3 = format!("{sp3:.2}x");
+        let cc = if coarsened { "yes" } else { "-" };
+        benchkit::print_row(
+            &[b.name, &c0, &c1, &c2, &c3, &cs, &cs3, cc],
+            &[18, 12, 12, 12, 12, 9, 9, 7],
+        );
         rows.push(Row {
             name: b.name,
             o0_ns: t0.p50.as_nanos(),
             o1_ns: t1.p50.as_nanos(),
             o2_ns: t2.p50.as_nanos(),
+            o3_ns: t3.p50.as_nanos(),
+            coarsened,
         });
     }
     let sp: Vec<f64> = rows.iter().map(|r| r.o0_ns as f64 / (r.o2_ns as f64).max(1.0)).collect();
     let geo = geomean(&sp);
+    let sp3: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.coarsened)
+        .map(|r| r.o2_ns as f64 / (r.o3_ns as f64).max(1.0))
+        .collect();
+    let geo_o3 = geomean(&sp3);
     println!();
     println!("geomean -O2 speedup over -O0: {geo:.2}x (n={})", rows.len());
-    println!("(acceptance floor: 1.2x; outputs/stats/traces are bit-identical across levels)");
+    println!(
+        "geomean -O3 speedup over -O2 on the coarsened subset: {geo_o3:.2}x (n={})",
+        sp3.len()
+    );
+    println!("(acceptance floors: 1.2x and 1.0x; outputs/stats/traces are bit-identical)");
     if let Some(path) = &json_path {
-        write_json(path, samples, &rows, geo);
+        write_json(path, samples, &rows, geo, geo_o3);
         println!("wrote {path}");
     }
     let mut ok = true;
     if let Some(min) = min_geomean {
         if geo < min {
             eprintln!("FAIL: geomean -O2/-O0 {geo:.2}x below the floor {min:.2}x");
+            ok = false;
+        }
+    }
+    if let Some(min) = min_o3 {
+        if sp3.is_empty() {
+            eprintln!("FAIL: no benchmark coarsened at -O3, nothing to hold to {min:.2}x");
+            ok = false;
+        } else if geo_o3 < min {
+            eprintln!("FAIL: coarse geomean -O3/-O2 {geo_o3:.2}x below the floor {min:.2}x");
             ok = false;
         }
     }
@@ -163,6 +221,15 @@ fn main() -> ExitCode {
             eprintln!(
                 "FAIL: geomean -O2/-O0 {geo:.2}x regressed below 90% of the committed \
                  baseline {base:.2}x"
+            );
+            ok = false;
+        }
+    }
+    if let Some(base) = baseline_o3 {
+        if geo_o3 < base * 0.9 {
+            eprintln!(
+                "FAIL: coarse geomean -O3/-O2 {geo_o3:.2}x regressed below 90% of the \
+                 committed baseline {base:.2}x"
             );
             ok = false;
         }

@@ -53,6 +53,7 @@
 
 use super::memory_mapping::MemoryPlan;
 use super::param_pack::{PackedLayout, SlotKind};
+use super::passes::syncfree::SyncFreeInfo;
 use super::passes::uniformity::UniformInfo;
 use super::passes::{licm, types};
 use crate::exec::Value;
@@ -173,6 +174,15 @@ pub enum Inst {
     Break,
     Continue,
     Return,
+    /// enter a sync-free region lowered as a coarse nest (`-O3`): the
+    /// VM walks `begin+1..end` group-lockstep with real jumps — no
+    /// divergence frames, no mask bookkeeping — splitting the lane
+    /// group only at a mixed [`Inst::JumpIfZero`]. Jumps to the
+    /// matching [`Inst::CoarseEnd`] when no lane remains unretired.
+    CoarseBegin { end: Pc },
+    /// close a coarse region: flush the per-lane trace buffers in lane
+    /// order (bit-identical to [`Inst::RegionEnd`])
+    CoarseEnd,
 }
 
 impl Inst {
@@ -282,7 +292,9 @@ impl Inst {
             | Inst::LoopEnd
             | Inst::Break
             | Inst::Continue
-            | Inst::Return => {}
+            | Inst::Return
+            | Inst::CoarseBegin { .. }
+            | Inst::CoarseEnd => {}
         }
     }
 
@@ -293,6 +305,7 @@ impl Inst {
             Inst::Jump { t }
             | Inst::JumpIfZero { t, .. }
             | Inst::RegionBegin { end: t, .. }
+            | Inst::CoarseBegin { end: t }
             | Inst::IfBegin { else_t: t, .. }
             | Inst::Else { end_t: t }
             | Inst::LoopTest { exit_t: t, .. }
@@ -374,6 +387,9 @@ pub enum LowerError {
     WarpCollectiveSurvivedFission,
     /// an NVIDIA intrinsic with no CPU semantics (Table II dwt2d case)
     NvIntrinsic(String),
+    /// `break`/`continue` with no enclosing loop inside a coarse region
+    /// (`ir::verify` rejects this in source, so reaching it is a bug)
+    CoarseLoopStack(&'static str),
 }
 
 impl std::fmt::Display for LowerError {
@@ -397,6 +413,9 @@ impl std::fmt::Display for LowerError {
             LowerError::NvIntrinsic(name) => {
                 write!(f, "NVIDIA intrinsic `{name}` has no CPU semantics (Table II dwt2d case)")
             }
+            LowerError::CoarseLoopStack(s) => {
+                write!(f, "lowering bug: `{s}` with no enclosing loop in a coarse region")
+            }
         }
     }
 }
@@ -410,11 +429,12 @@ pub fn lower(
     layout: &PackedLayout,
     extra_base: usize,
 ) -> Result<LoweredProgram, LowerError> {
-    lower_opt(mpmd, memory, layout, extra_base, None, false)
+    lower_opt(mpmd, memory, layout, extra_base, None, false, None)
 }
 
 /// Lower an MPMD kernel to bytecode. `uniform` enables uniformity-driven
-/// scalarization; `licm_on` enables invariant bound/step hoisting.
+/// scalarization; `licm_on` enables invariant bound/step hoisting;
+/// `coarse` (`-O3`) lowers sync-free regions as coarse jump nests.
 pub fn lower_opt(
     mpmd: &MpmdKernel,
     memory: &MemoryPlan,
@@ -422,6 +442,7 @@ pub fn lower_opt(
     extra_base: usize,
     uniform: Option<&UniformInfo>,
     licm_on: bool,
+    coarse: Option<&SyncFreeInfo>,
 ) -> Result<LoweredProgram, LowerError> {
     let mut bs = HashSet::new();
     block_scope_regs(&mpmd.body, &mut bs);
@@ -445,6 +466,12 @@ pub fn lower_opt(
         licm: licm_on,
         types: ty,
         licm_hoisted: 0,
+        coarse_regions: coarse
+            .map(|c| c.regions.iter().map(|r| r.coarse).collect())
+            .unwrap_or_default(),
+        region_ix: 0,
+        in_coarse: false,
+        coarse_loops: Vec::new(),
     };
     for s in &mpmd.body {
         lw.stmt_block(s)?;
@@ -486,6 +513,25 @@ struct Lower<'a> {
     licm: bool,
     types: Option<types::Types>,
     licm_hoisted: usize,
+    /// `-O3`: per-region coarse verdicts (`passes::syncfree`), indexed
+    /// by the depth-first `ThreadLoop` ordinal; empty below `-O3`
+    coarse_regions: Vec<bool>,
+    /// next `ThreadLoop` ordinal (must mirror the syncfree walk order)
+    region_ix: usize,
+    /// currently lowering inside a coarse region (`Select` switches
+    /// from the mask diamond to a jump diamond)
+    in_coarse: bool,
+    /// enclosing coarse loops: `break`/`continue` jumps to backpatch
+    coarse_loops: Vec<CoarseLoop>,
+}
+
+/// Backpatch lists for one loop being lowered inside a coarse region:
+/// `break` jumps to the loop exit, `continue` to the For step / While
+/// head once those pcs are known.
+#[derive(Default)]
+struct CoarseLoop {
+    breaks: Vec<usize>,
+    continues: Vec<usize>,
 }
 
 impl<'a> Lower<'a> {
@@ -508,6 +554,7 @@ impl<'a> Lower<'a> {
             Inst::Jump { t }
             | Inst::JumpIfZero { t, .. }
             | Inst::RegionBegin { end: t, .. }
+            | Inst::CoarseBegin { end: t }
             | Inst::IfBegin { else_t: t, .. }
             | Inst::Else { end_t: t }
             | Inst::LoopTest { exit_t: t, .. } => {
@@ -636,12 +683,25 @@ impl<'a> Lower<'a> {
         self.emit(Inst::Acct { lanes: false });
         match s {
             Stmt::ThreadLoop { body, warp } => {
-                let rb = self.emit(Inst::RegionBegin { warp: warp.map(|r| r.0), end: 0 });
-                for st in body {
-                    self.stmt_thread(st)?;
+                let ordinal = self.region_ix;
+                self.region_ix += 1;
+                if self.coarse_regions.get(ordinal).copied().unwrap_or(false) && warp.is_none() {
+                    let cb = self.emit(Inst::CoarseBegin { end: 0 });
+                    self.in_coarse = true;
+                    for st in body {
+                        self.stmt_coarse(st)?;
+                    }
+                    self.in_coarse = false;
+                    let end = self.emit(Inst::CoarseEnd);
+                    self.patch_jump(cb, end as Pc)?;
+                } else {
+                    let rb = self.emit(Inst::RegionBegin { warp: warp.map(|r| r.0), end: 0 });
+                    for st in body {
+                        self.stmt_thread(st)?;
+                    }
+                    let end = self.emit(Inst::RegionEnd);
+                    self.patch_jump(rb, end as Pc)?;
                 }
-                let end = self.emit(Inst::RegionEnd);
-                self.patch_jump(rb, end as Pc)?;
             }
             Stmt::If { cond, then_, else_ } => {
                 let c = self.expr(cond)?;
@@ -840,6 +900,154 @@ impl<'a> Lower<'a> {
         Ok(())
     }
 
+    // ---------- coarse (sync-free, `-O3`) statements ----------
+
+    /// Lower a thread-scope statement inside a coarse region: the same
+    /// data instructions, register classes and per-statement
+    /// `Acct { lanes: true }` as [`Self::stmt_thread`] — the accounting
+    /// contract depends on the per-lane dynamic instruction sequence
+    /// being identical — but control flow uses real jumps instead of
+    /// mask instructions. The VM's coarse walker branches the whole
+    /// lane group together and splits it (no re-convergence) at a
+    /// mixed condition.
+    fn stmt_coarse(&mut self, s: &Stmt) -> Result<(), LowerError> {
+        self.reset_temps();
+        self.emit(Inst::Acct { lanes: true });
+        match s {
+            Stmt::Assign { dst, expr } => self.expr_to(expr, dst.0)?,
+            Stmt::Store { ptr, val, ty } => {
+                let p = self.expr(ptr)?;
+                let v = self.expr(val)?;
+                self.emit(Inst::Store { ptr: p, val: v, ty: *ty });
+            }
+            Stmt::If { cond, then_, else_ } => {
+                let c = self.expr(cond)?;
+                let j = self.emit(Inst::JumpIfZero { cond: c, t: 0 });
+                for st in then_ {
+                    self.stmt_coarse(st)?;
+                }
+                if else_.is_empty() {
+                    let end = self.here();
+                    self.patch_jump(j, end)?;
+                } else {
+                    let j2 = self.emit(Inst::Jump { t: 0 });
+                    let else_at = self.here();
+                    self.patch_jump(j, else_at)?;
+                    for st in else_ {
+                        self.stmt_coarse(st)?;
+                    }
+                    let end = self.here();
+                    self.patch_jump(j2, end)?;
+                }
+            }
+            Stmt::For { var, start, end, step, body } => {
+                // Same shape as the mask lowering minus LoopBegin/
+                // LoopTest/ContinueMerge/LoopEnd: the `Lt`/`Add` glue
+                // (flops-free) and the `Mov` into the loop register
+                // keep their scalar flags, so stats stay bit-identical.
+                let var_s = self.is_scalar(var.0);
+                let v = self.persist_c(var_s);
+                self.expr_to(start, v)?;
+                let assigned = self.licm.then(|| Self::loop_assigned(*var, body));
+                let e_h = self.hoist_bound(end, assigned.as_ref())?;
+                let s_h = self.hoist_bound(step, assigned.as_ref())?;
+                let head = self.here();
+                let e = match e_h {
+                    Some(r) => r,
+                    None => self.expr(end)?,
+                };
+                let cond_s = self.is_scalar(v) && self.is_scalar(e);
+                let c = self.temp_c(cond_s);
+                self.emit_s(
+                    Inst::Bin { op: BinOp::Lt, dst: c, a: v, b: e, flops: false },
+                    cond_s,
+                );
+                let jexit = self.emit(Inst::JumpIfZero { cond: c, t: 0 });
+                self.emit_s(Inst::Mov { dst: var.0, src: v }, var_s);
+                self.coarse_loops.push(CoarseLoop::default());
+                for st in body {
+                    self.stmt_coarse(st)?;
+                }
+                let cont_at = self.here();
+                self.reset_temps();
+                let stp = match s_h {
+                    Some(r) => r,
+                    None => self.expr(step)?,
+                };
+                let add_s = self.is_scalar(v) && self.is_scalar(stp);
+                self.emit_s(
+                    Inst::Bin { op: BinOp::Add, dst: v, a: v, b: stp, flops: false },
+                    add_s,
+                );
+                self.emit(Inst::Jump { t: head });
+                let exit = self.here();
+                self.patch_jump(jexit, exit)?;
+                let lp = self.coarse_loops.pop().expect("pushed above");
+                for j in lp.breaks {
+                    self.patch_jump(j, exit)?;
+                }
+                for j in lp.continues {
+                    self.patch_jump(j, cont_at)?;
+                }
+            }
+            Stmt::While { cond, body } => {
+                let head = self.here();
+                let c = self.expr(cond)?;
+                let jexit = self.emit(Inst::JumpIfZero { cond: c, t: 0 });
+                self.coarse_loops.push(CoarseLoop::default());
+                for st in body {
+                    self.stmt_coarse(st)?;
+                }
+                self.emit(Inst::Jump { t: head });
+                let exit = self.here();
+                self.patch_jump(jexit, exit)?;
+                let lp = self.coarse_loops.pop().expect("pushed above");
+                for j in lp.breaks {
+                    self.patch_jump(j, exit)?;
+                }
+                for j in lp.continues {
+                    self.patch_jump(j, head)?;
+                }
+            }
+            Stmt::Break => {
+                let j = self.emit(Inst::Jump { t: 0 });
+                match self.coarse_loops.last_mut() {
+                    Some(lp) => lp.breaks.push(j),
+                    None => return Err(LowerError::CoarseLoopStack("break")),
+                }
+            }
+            Stmt::Continue => {
+                let j = self.emit(Inst::Jump { t: 0 });
+                match self.coarse_loops.last_mut() {
+                    Some(lp) => lp.continues.push(j),
+                    None => return Err(LowerError::CoarseLoopStack("continue")),
+                }
+            }
+            Stmt::Return => {
+                self.emit(Inst::Return);
+            }
+            Stmt::AtomicRmw { op, ptr, val, ty, dst } => {
+                let p = self.expr(ptr)?;
+                let v = self.expr(val)?;
+                self.emit(Inst::AtomicRmw {
+                    op: *op,
+                    dst: dst.map(|r| r.0),
+                    ptr: p,
+                    val: v,
+                    ty: *ty,
+                });
+            }
+            // rejected by `passes::syncfree` — a coarse region cannot
+            // contain them, so reaching these arms is a compiler bug
+            Stmt::AtomicCas { .. } | Stmt::StoreExchange { .. } => {
+                return Err(LowerError::WarpCollectiveSurvivedFission)
+            }
+            Stmt::SyncThreads => return Err(LowerError::BarrierSurvivedFission),
+            other => return Err(LowerError::BlockStmtAtThreadScope(stmt_name(other))),
+        }
+        Ok(())
+    }
+
     // ---------- expressions ----------
 
     /// Lower `e`, returning the register holding its value. Plain
@@ -966,15 +1174,28 @@ impl<'a> Lower<'a> {
             Expr::Select { cond, then_, else_ } => {
                 // The interpreter evaluates only the taken side per
                 // lane (guarded loads!), so lower a full divergence
-                // diamond rather than evaluating both sides.
+                // diamond rather than evaluating both sides. Inside a
+                // coarse region the diamond uses real jumps: the
+                // walker splits the lane group at a mixed condition.
                 let rc = self.expr(cond)?;
-                let ib = self.emit(Inst::IfBegin { cond: rc, else_t: 0 });
-                self.expr_to(then_, dst)?;
-                let el = self.emit(Inst::Else { end_t: 0 });
-                self.patch_jump(ib, el as Pc)?;
-                self.expr_to(else_, dst)?;
-                let end = self.emit(Inst::IfEnd);
-                self.patch_jump(el, end as Pc)?;
+                if self.in_coarse {
+                    let j = self.emit(Inst::JumpIfZero { cond: rc, t: 0 });
+                    self.expr_to(then_, dst)?;
+                    let j2 = self.emit(Inst::Jump { t: 0 });
+                    let else_at = self.here();
+                    self.patch_jump(j, else_at)?;
+                    self.expr_to(else_, dst)?;
+                    let end = self.here();
+                    self.patch_jump(j2, end)?;
+                } else {
+                    let ib = self.emit(Inst::IfBegin { cond: rc, else_t: 0 });
+                    self.expr_to(then_, dst)?;
+                    let el = self.emit(Inst::Else { end_t: 0 });
+                    self.patch_jump(ib, el as Pc)?;
+                    self.expr_to(else_, dst)?;
+                    let end = self.emit(Inst::IfEnd);
+                    self.patch_jump(el, end as Pc)?;
+                }
             }
             Expr::Exchange { lane, .. } => {
                 let rl = self.expr(lane)?;
@@ -1083,6 +1304,8 @@ fn fmt_inst(i: &Inst) -> String {
             None => format!("region.begin end=@{end}"),
         },
         Inst::RegionEnd => "region.end".into(),
+        Inst::CoarseBegin { end } => format!("coarse.begin end=@{end}"),
+        Inst::CoarseEnd => "coarse.end".into(),
         Inst::IfBegin { cond, else_t } => format!("if.begin r{cond} else=@{else_t}"),
         Inst::Else { end_t } => format!("if.else end=@{end_t}"),
         Inst::IfEnd => "if.end".into(),
@@ -1130,6 +1353,7 @@ mod tests {
         let mut regions = 0i32;
         let mut ifs = 0i32;
         let mut loops = 0i32;
+        let mut coarse = 0i32;
         let reg_ok = |r: RegId| (r as usize) < p.num_regs;
         for (pc, inst) in p.insts.iter().enumerate() {
             match *inst {
@@ -1141,6 +1365,17 @@ mod tests {
                     }
                 }
                 Inst::RegionEnd => regions -= 1,
+                Inst::CoarseBegin { end } => {
+                    assert_eq!(coarse, 0, "nested coarse region");
+                    assert_eq!(regions, 0, "coarse region inside a mask region");
+                    assert!((end as usize) < p.insts.len());
+                    assert!(
+                        matches!(p.insts[end as usize], Inst::CoarseEnd),
+                        "coarse.begin must target coarse.end"
+                    );
+                    coarse += 1;
+                }
+                Inst::CoarseEnd => coarse -= 1,
                 Inst::IfBegin { cond, else_t } => {
                     ifs += 1;
                     assert!(else_t < n);
@@ -1226,11 +1461,39 @@ mod tests {
                 };
                 assert!(ok, "scalar-flagged inst touches vector regs: {inst:?}");
             }
-            assert!(regions >= 0 && ifs >= 0 && loops >= 0);
+            // no mask machinery may survive inside a coarse region —
+            // that is the whole point of `-O3`
+            if coarse > 0 && !matches!(inst, Inst::CoarseBegin { .. }) {
+                assert!(
+                    !matches!(
+                        inst,
+                        Inst::RegionBegin { .. }
+                            | Inst::RegionEnd
+                            | Inst::IfBegin { .. }
+                            | Inst::Else { .. }
+                            | Inst::IfEnd
+                            | Inst::LoopBegin
+                            | Inst::LoopTest { .. }
+                            | Inst::ContinueMerge
+                            | Inst::LoopEnd
+                            | Inst::Break
+                            | Inst::Continue
+                            | Inst::CmpLoopTest { .. }
+                            | Inst::CmpIfBegin { .. }
+                            | Inst::StoreExchange { .. }
+                            | Inst::ReadExchange { .. }
+                            | Inst::VoteResult { .. }
+                            | Inst::ReduceVote { .. }
+                    ),
+                    "mask/warp instruction inside a coarse region: {inst:?}"
+                );
+            }
+            assert!(regions >= 0 && ifs >= 0 && loops >= 0 && coarse >= 0);
         }
         assert_eq!(regions, 0, "unbalanced regions");
         assert_eq!(ifs, 0, "unbalanced lane ifs");
         assert_eq!(loops, 0, "unbalanced lane loops");
+        assert_eq!(coarse, 0, "unbalanced coarse regions");
     }
 
     #[test]
@@ -1249,13 +1512,25 @@ mod tests {
         for opt in OptLevel::ALL {
             let p = lowered_at(&k, opt);
             check_well_formed(&p);
-            // one region, one lane-if, loads/stores present (possibly
-            // fused into superinstructions at -O2)
-            assert!(p.insts.iter().any(|i| matches!(i, Inst::RegionBegin { .. })));
-            let has_if = p
-                .insts
-                .iter()
-                .any(|i| matches!(i, Inst::IfBegin { .. } | Inst::CmpIfBegin { .. }));
+            if opt >= OptLevel::O3 {
+                // barrier-free kernel: the whole region coarsens, the
+                // lane-if becomes a plain conditional jump
+                assert!(p.insts.iter().any(|i| matches!(i, Inst::CoarseBegin { .. })));
+                assert!(!p.insts.iter().any(|i| matches!(
+                    i,
+                    Inst::RegionBegin { .. } | Inst::IfBegin { .. } | Inst::CmpIfBegin { .. }
+                )));
+                assert!(p.insts.iter().any(|i| matches!(i, Inst::JumpIfZero { .. })));
+            } else {
+                // one region, one lane-if, loads/stores present
+                // (possibly fused into superinstructions at -O2)
+                assert!(!p.insts.iter().any(|i| matches!(i, Inst::CoarseBegin { .. })));
+                assert!(p.insts.iter().any(|i| matches!(i, Inst::RegionBegin { .. })));
+                assert!(p
+                    .insts
+                    .iter()
+                    .any(|i| matches!(i, Inst::IfBegin { .. } | Inst::CmpIfBegin { .. })));
+            }
             let has_load = p.insts.iter().any(|i| {
                 matches!(i, Inst::Load { .. } | Inst::IndexLoad { .. } | Inst::LoadBin { .. })
             });
@@ -1263,7 +1538,7 @@ mod tests {
                 .insts
                 .iter()
                 .any(|i| matches!(i, Inst::Store { .. } | Inst::IndexStore { .. }));
-            assert!(has_if && has_load && has_store);
+            assert!(has_load && has_store);
             // blockIdx/blockDim rewritten to hidden params → Geom reads
             assert!(p.insts.iter().any(|i| matches!(i, Inst::Geom { .. })));
         }
@@ -1320,6 +1595,38 @@ mod tests {
         assert!(p.insts.iter().any(|i| matches!(i, Inst::JumpIfZero { .. })));
         // the hoisted For's variable is scalar-class
         assert!(p.scalar_reg.iter().any(|&x| x));
+    }
+
+    /// Lane loops, breaks and Select diamonds inside a coarse region
+    /// all lower to plain jumps — no divergence-stack opcodes at all.
+    #[test]
+    fn coarse_lowering_handles_loops_breaks_and_selects() {
+        let mut b = KernelBuilder::new("coarse_cf");
+        let d = b.ptr_param("d", Ty::I32);
+        let n = b.scalar_param("n", Ty::I32);
+        let t = b.assign(tid_x());
+        let acc = b.assign(c_i32(0));
+        b.for_(c_i32(0), n.clone(), c_i32(1), |bl, i| {
+            bl.if_(lt(reg(t), reg(i)), |b2| b2.brk());
+            bl.set(acc, add(reg(acc), select(lt(reg(i), c_i32(2)), reg(i), c_i32(1))));
+        });
+        b.store_at(d.clone(), reg(t), reg(acc), Ty::I32);
+        let k = b.build();
+        let p3 = lowered_at(&k, OptLevel::O3);
+        check_well_formed(&p3);
+        assert!(p3.insts.iter().any(|i| matches!(i, Inst::CoarseBegin { .. })));
+        assert!(!p3.insts.iter().any(|i| matches!(
+            i,
+            Inst::RegionBegin { .. } | Inst::LoopBegin | Inst::Break | Inst::IfBegin { .. }
+        )));
+        // the break, the loop back-edge and the select both became
+        // plain jumps
+        assert!(p3.insts.iter().filter(|i| matches!(i, Inst::Jump { .. })).count() >= 3);
+        // same kernel still lowers with mask machinery below -O3
+        let p2 = lowered_at(&k, OptLevel::O2);
+        check_well_formed(&p2);
+        assert!(!p2.insts.iter().any(|i| matches!(i, Inst::CoarseBegin { .. })));
+        assert!(p2.insts.iter().any(|i| matches!(i, Inst::LoopBegin)));
     }
 
     #[test]

@@ -206,10 +206,29 @@ pub fn compile_kernel_cfg(kernel: &Kernel, cfg: CompileCfg) -> Result<CompiledKe
             format!("uniform {}/{} regs", u.count_uniform(), mpmd.num_regs),
         );
     }
+    // -O3: sync-free-region analysis — regions proven barrier-free and
+    // cross-lane independent lower as coarse jump nests. The report row
+    // names each region's verdict so coverage regressions are
+    // diagnosable straight from the `compile` dump.
+    let syncfree = match (&uniform, opt >= OptLevel::O3) {
+        (Some(u), true) => {
+            let info = passes::syncfree::analyze(&mpmd, u);
+            pm.record_mpmd("syncfree", &mpmd, info.summary());
+            Some(info)
+        }
+        _ => None,
+    };
     let licm = opt >= OptLevel::O2;
-    let mut lowered =
-        lower::lower_opt(&mpmd, &memory, &layout, ev.extra_base, uniform.as_ref(), licm)
-            .map_err(|err| CompileError::Lower { kernel: kernel.name.clone(), err })?;
+    let mut lowered = lower::lower_opt(
+        &mpmd,
+        &memory,
+        &layout,
+        ev.extra_base,
+        uniform.as_ref(),
+        licm,
+        syncfree.as_ref(),
+    )
+    .map_err(|err| CompileError::Lower { kernel: kernel.name.clone(), err })?;
     pm.record(
         "lower",
         lowered.insts.len(),

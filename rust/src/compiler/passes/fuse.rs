@@ -208,6 +208,7 @@ pub fn verify_lowered(p: &LoweredProgram) -> Result<(), Vec<String>> {
     let mut regions = 0i64;
     let mut ifs = 0i64;
     let mut loops = 0i64;
+    let mut coarse = 0i64;
     for (pc, inst) in p.insts.iter().enumerate() {
         let mut i = *inst;
         i.for_each_reg_mut(|r| {
@@ -226,11 +227,51 @@ pub fn verify_lowered(p: &LoweredProgram) -> Result<(), Vec<String>> {
         match inst {
             Inst::RegionBegin { .. } => regions += 1,
             Inst::RegionEnd => regions -= 1,
+            Inst::CoarseBegin { end } => {
+                if coarse > 0 {
+                    errs.push(format!("pc {pc}: nested coarse region"));
+                }
+                if regions > 0 {
+                    errs.push(format!("pc {pc}: coarse region inside a mask region"));
+                }
+                match p.insts.get(*end as usize) {
+                    Some(Inst::CoarseEnd) => {}
+                    _ => errs.push(format!("pc {pc}: coarse.begin must target a coarse.end")),
+                }
+                coarse += 1;
+            }
+            Inst::CoarseEnd => coarse -= 1,
             Inst::IfBegin { .. } | Inst::CmpIfBegin { .. } => ifs += 1,
             Inst::IfEnd => ifs -= 1,
             Inst::LoopBegin => loops += 1,
             Inst::LoopEnd => loops -= 1,
             _ => {}
+        }
+        // the `-O3` contract: no mask/warp machinery survives inside a
+        // coarse region (the walker has no divergence-frame stack)
+        if coarse > 0
+            && matches!(
+                inst,
+                Inst::RegionBegin { .. }
+                    | Inst::RegionEnd
+                    | Inst::IfBegin { .. }
+                    | Inst::Else { .. }
+                    | Inst::IfEnd
+                    | Inst::LoopBegin
+                    | Inst::LoopTest { .. }
+                    | Inst::ContinueMerge
+                    | Inst::LoopEnd
+                    | Inst::Break
+                    | Inst::Continue
+                    | Inst::CmpLoopTest { .. }
+                    | Inst::CmpIfBegin { .. }
+                    | Inst::StoreExchange { .. }
+                    | Inst::ReadExchange { .. }
+                    | Inst::VoteResult { .. }
+                    | Inst::ReduceVote { .. }
+            )
+        {
+            errs.push(format!("pc {pc}: mask/warp instruction inside a coarse region"));
         }
         let is_super = matches!(
             inst,
@@ -253,6 +294,9 @@ pub fn verify_lowered(p: &LoweredProgram) -> Result<(), Vec<String>> {
     }
     if loops != 0 {
         errs.push(format!("unbalanced lane loops ({loops})"));
+    }
+    if coarse != 0 {
+        errs.push(format!("unbalanced coarse regions ({coarse})"));
     }
     if errs.is_empty() {
         Ok(())
@@ -305,6 +349,20 @@ mod tests {
         let p = &ck.lowered;
         assert!(count_super(p) > 0, "vecadd has fusible pairs");
         assert!(p.insts.iter().any(|i| matches!(i, Inst::IndexStore { .. })));
+        verify_lowered(p).unwrap();
+    }
+
+    #[test]
+    fn o3_coarse_region_fuses_data_pairs_and_verifies() {
+        let ck = compile_kernel_opt(&vecadd(), OptLevel::O3).unwrap();
+        let p = &ck.lowered;
+        assert!(p.insts.iter().any(|i| matches!(i, Inst::CoarseBegin { .. })));
+        assert!(count_super(p) > 0, "data idioms still fuse inside a coarse nest");
+        // the branch glue became a plain jump, so no Cmp* control fused
+        assert!(!p
+            .insts
+            .iter()
+            .any(|i| matches!(i, Inst::IfBegin { .. } | Inst::CmpIfBegin { .. })));
         verify_lowered(p).unwrap();
     }
 

@@ -16,7 +16,12 @@
 //!     and accounting-transparent DCE ([`dce`]);
 //!   - `-O2` (default) — + loop-invariant bound hoisting ([`licm`]) and
 //!     uniformity-driven scalarization ([`uniformity`]) in the lowered
-//!     bytecode.
+//!     bytecode;
+//!   - `-O3` — + sync-free-region analysis ([`syncfree`]) and block
+//!     coarsening: regions proven free of barriers, warp collectives
+//!     and cross-lane shared-memory dependences are lowered as plain
+//!     jump-based loop nests executed group-lockstep with no
+//!     divergence-frame stack or mask bookkeeping.
 //!
 //! **The accounting contract.** Optimization must not be observable in
 //! `ExecStats` or memory traces: the differential suite asserts `-O0`
@@ -29,18 +34,20 @@ pub mod dce;
 pub mod fold;
 pub mod fuse;
 pub mod licm;
+pub mod syncfree;
 pub mod types;
 pub mod uniformity;
 
 use crate::ir::{Kernel, MpmdKernel, Stmt};
 
-/// Optimization level (CLI `--opt {0,1,2}`; default `-O2`).
+/// Optimization level (CLI `--opt {0,1,2,3}`; default `-O2`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub enum OptLevel {
     O0,
     O1,
     #[default]
     O2,
+    O3,
 }
 
 impl OptLevel {
@@ -49,20 +56,22 @@ impl OptLevel {
             OptLevel::O0 => "-O0",
             OptLevel::O1 => "-O1",
             OptLevel::O2 => "-O2",
+            OptLevel::O3 => "-O3",
         }
     }
 
-    /// Parse a CLI spelling: `0`/`1`/`2` or `O0`/`o1`/`-O2`.
+    /// Parse a CLI spelling: `0`/`1`/`2`/`3` or `O0`/`o1`/`-O2`.
     pub fn parse(s: &str) -> Option<OptLevel> {
         match s.trim_start_matches('-').trim_start_matches(['O', 'o']) {
             "0" => Some(OptLevel::O0),
             "1" => Some(OptLevel::O1),
             "2" => Some(OptLevel::O2),
+            "3" => Some(OptLevel::O3),
             _ => None,
         }
     }
 
-    pub const ALL: [OptLevel; 3] = [OptLevel::O0, OptLevel::O1, OptLevel::O2];
+    pub const ALL: [OptLevel; 4] = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
 }
 
 /// One row of the resolved pipeline report.
@@ -166,9 +175,11 @@ mod tests {
         assert_eq!(OptLevel::parse("0"), Some(OptLevel::O0));
         assert_eq!(OptLevel::parse("O1"), Some(OptLevel::O1));
         assert_eq!(OptLevel::parse("-O2"), Some(OptLevel::O2));
-        assert_eq!(OptLevel::parse("3"), None);
+        assert_eq!(OptLevel::parse("3"), Some(OptLevel::O3));
+        assert_eq!(OptLevel::parse("4"), None);
         assert!(OptLevel::O0 < OptLevel::O1 && OptLevel::O1 < OptLevel::O2);
-        assert_eq!(OptLevel::default(), OptLevel::O2);
+        assert!(OptLevel::O2 < OptLevel::O3);
+        assert_eq!(OptLevel::default(), OptLevel::O2, "coarsening stays opt-in");
     }
 
     #[test]

@@ -1,0 +1,563 @@
+//! Sync-free-region analysis (`-O3` block coarsening eligibility).
+//!
+//! Decides, per fissioned thread region, whether the lanes of a block
+//! can be executed as a plain coarse loop nest — group-lockstep with no
+//! divergence-frame stack and no mask bookkeeping — without becoming
+//! observable. "Observable" is held to the repo's accounting contract:
+//! outputs, `ExecStats` and `TraceRec` streams must stay bit-identical
+//! with `-O0`, so eligibility is strictly conservative.
+//!
+//! A region is **coarse-eligible** when it contains
+//!
+//! * no barrier (`__syncthreads` never survives fission, but the check
+//!   stays defensive), no warp collective (shuffle / vote / exchange)
+//!   and no NV intrinsic — these need all lanes at one program point;
+//! * no order-sensitive atomic: only integer `AtomicRmw` with a
+//!   commutative-associative op (`Add/Sub/Min/Max/And/Or/Xor`) and an
+//!   uncaptured old value is invariant under the lane-major reordering
+//!   coarsening introduces after a divergence split. Float atomics
+//!   (non-associative rounding), `Exch` and `atomicCAS` results are
+//!   rejected;
+//! * no cross-lane shared-memory dependence: a shared slab written in
+//!   the region must only be accessed through one structurally
+//!   identical, lane-injective index (`a*threadIdx.x + b` with a
+//!   non-zero constant `a` and block-uniform `b`, optionally plus
+//!   `c*threadIdx.y` row terms — cross-row collisions would already be
+//!   a data race in the CUDA source). Slabs that are only read, or
+//!   only updated atomically, are unconstrained;
+//! * no store through a pointer the analysis cannot root in a kernel
+//!   param or shared slab (a register-held pointer could alias
+//!   anything).
+//!
+//! Global (param-rooted) loads and stores are *not* constrained:
+//! CUDA's race-freedom guarantee — no two threads of a block touch the
+//! same location conflictingly between barriers — is exactly the
+//! license Polygeist-style coarsening needs, and the mask VM's
+//! group-lockstep coarse walker only reorders memory traffic across
+//! lanes that diverged (see `exec::bytecode`).
+//!
+//! Warp-level (COX warp-nested) kernels are rejected wholesale: their
+//! regions re-run per warp index and the warp register is only
+//! warp-uniform.
+
+use super::uniformity::{expr_varying, UniformInfo};
+use crate::ir::*;
+
+/// Verdict for one fissioned region, in deterministic lowering order
+/// (`ordinal` counts `ThreadLoop`s depth-first through the MPMD body —
+/// the same order `compiler::lower` encounters them).
+#[derive(Debug, Clone)]
+pub struct RegionReport {
+    pub ordinal: usize,
+    pub coarse: bool,
+    /// Human-readable rejection reason when `!coarse` (for the
+    /// `compile` pass-pipeline report).
+    pub reason: Option<String>,
+}
+
+/// Per-kernel analysis result consumed by `compiler::lower`.
+#[derive(Debug, Clone, Default)]
+pub struct SyncFreeInfo {
+    pub regions: Vec<RegionReport>,
+}
+
+impl SyncFreeInfo {
+    /// Is region `ordinal` eligible for coarse lowering?
+    pub fn is_coarse(&self, ordinal: usize) -> bool {
+        self.regions.get(ordinal).map(|r| r.coarse).unwrap_or(false)
+    }
+
+    pub fn coarse_count(&self) -> usize {
+        self.regions.iter().filter(|r| r.coarse).count()
+    }
+
+    /// One-line note for the pass-pipeline report: coverage plus every
+    /// rejection reason, so coverage regressions are diagnosable from
+    /// the `compile` dump.
+    pub fn summary(&self) -> String {
+        let total = self.regions.len();
+        let coarse = self.coarse_count();
+        let mut s = format!("coarse {coarse}/{total} regions");
+        let rejected: Vec<String> = self
+            .regions
+            .iter()
+            .filter(|r| !r.coarse)
+            .map(|r| {
+                format!(
+                    "region {}: {}",
+                    r.ordinal,
+                    r.reason.as_deref().unwrap_or("ineligible")
+                )
+            })
+            .collect();
+        if !rejected.is_empty() {
+            s.push_str(&format!(" ({})", rejected.join("; ")));
+        }
+        s
+    }
+}
+
+/// Run the analysis over every fissioned region of `m`.
+pub fn analyze(m: &MpmdKernel, uniform: &UniformInfo) -> SyncFreeInfo {
+    let varying: Vec<bool> = uniform.uniform.iter().map(|u| !u).collect();
+    let mut info = SyncFreeInfo::default();
+    walk_block(&m.body, m, &varying, &mut info);
+    info
+}
+
+fn walk_block(body: &[Stmt], m: &MpmdKernel, varying: &[bool], info: &mut SyncFreeInfo) {
+    for s in body {
+        match s {
+            Stmt::ThreadLoop { body, warp } => {
+                let ordinal = info.regions.len();
+                let verdict = if m.warp_level {
+                    Err("warp-level kernel (COX warp nests)".to_string())
+                } else if warp.is_some() {
+                    Err("warp-nested region".to_string())
+                } else {
+                    check_region(body, m, varying)
+                };
+                info.regions.push(RegionReport {
+                    ordinal,
+                    coarse: verdict.is_ok(),
+                    reason: verdict.err(),
+                });
+            }
+            Stmt::If { then_, else_, .. } => {
+                walk_block(then_, m, varying, info);
+                walk_block(else_, m, varying, info);
+            }
+            Stmt::For { body, .. } | Stmt::While { body, .. } => {
+                walk_block(body, m, varying, info);
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------- memory-access classification ----------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Root {
+    /// Param-rooted: global memory, covered by the CUDA data-race-
+    /// freedom assumption.
+    Global,
+    /// A statically declared `__shared__` slab.
+    Shared(usize),
+    /// The `extern __shared__` slab.
+    SharedDyn,
+    /// Register-held or otherwise unanalyzable pointer.
+    Opaque,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Load,
+    Store,
+    Atomic,
+}
+
+#[derive(Debug, Clone)]
+struct Access {
+    root: Root,
+    /// The top-level element index when the pointer is a direct
+    /// `Index` off its root; `None` means "too complex to compare".
+    idx: Option<Expr>,
+    kind: Kind,
+}
+
+fn root_of(e: &Expr) -> Root {
+    match e {
+        Expr::Param(_) => Root::Global,
+        Expr::SharedBase(k) => Root::Shared(*k),
+        Expr::DynSharedBase => Root::SharedDyn,
+        Expr::Index { base, .. } => root_of(base),
+        Expr::Cast(_, inner) => root_of(inner),
+        _ => Root::Opaque,
+    }
+}
+
+fn classify(ptr: &Expr) -> (Root, Option<Expr>) {
+    match ptr {
+        Expr::Index { base, idx, .. } => match root_of(base) {
+            Root::Shared(k) => {
+                // only a direct `shared[idx]` yields a comparable
+                // index; deeper chains (`(&s[a])[b]`) stay opaque to
+                // the identical-index test
+                if matches!(**base, Expr::SharedBase(_)) {
+                    (Root::Shared(k), Some((**idx).clone()))
+                } else {
+                    (Root::Shared(k), None)
+                }
+            }
+            Root::SharedDyn => {
+                if matches!(**base, Expr::DynSharedBase) {
+                    (Root::SharedDyn, Some((**idx).clone()))
+                } else {
+                    (Root::SharedDyn, None)
+                }
+            }
+            r => (r, None),
+        },
+        _ => (root_of(ptr), None),
+    }
+}
+
+// ---------- the per-region check ----------
+
+struct Scan {
+    accesses: Vec<Access>,
+    reject: Option<String>,
+}
+
+impl Scan {
+    fn fail(&mut self, why: impl Into<String>) {
+        if self.reject.is_none() {
+            self.reject = Some(why.into());
+        }
+    }
+}
+
+fn check_region(body: &[Stmt], m: &MpmdKernel, varying: &[bool]) -> Result<(), String> {
+    let mut sc = Scan { accesses: Vec::new(), reject: None };
+    scan_stmts(body, &mut sc);
+    if let Some(why) = sc.reject {
+        return Err(why);
+    }
+    // No store may go through a pointer we cannot root: it could alias
+    // a shared slab and carry a cross-lane dependence.
+    if sc.accesses.iter().any(|a| a.kind != Kind::Load && a.root == Root::Opaque) {
+        return Err("store through an unclassifiable pointer".into());
+    }
+    let opaque_load = sc.accesses.iter().any(|a| a.kind == Kind::Load && a.root == Root::Opaque);
+    // Per shared slab: written slabs demand the injective-index
+    // discipline; atomically-updated slabs must not mix with plain
+    // accesses (a plain store does not commute with an RMW).
+    let mut roots: Vec<Root> = sc
+        .accesses
+        .iter()
+        .filter(|a| matches!(a.root, Root::Shared(_) | Root::SharedDyn))
+        .map(|a| a.root)
+        .collect();
+    roots.sort_by_key(|r| match r {
+        Root::Shared(k) => *k as isize,
+        _ => -1,
+    });
+    roots.dedup();
+    for root in roots {
+        let slab = match root {
+            Root::Shared(k) => {
+                m.shared.get(k).map(|d| d.name.clone()).unwrap_or_else(|| format!("shared[{k}]"))
+            }
+            _ => "dynamic shared".to_string(),
+        };
+        let of = |k: Kind| sc.accesses.iter().filter(move |a| a.root == root && a.kind == k);
+        let nstores = of(Kind::Store).count();
+        let natomics = of(Kind::Atomic).count();
+        if natomics > 0 && (nstores > 0 || of(Kind::Load).count() > 0) {
+            return Err(format!("shared `{slab}` mixes atomics with plain accesses"));
+        }
+        if nstores == 0 {
+            continue; // read-only or atomic-only slab: order-invariant
+        }
+        let model = match of(Kind::Store).next().and_then(|a| a.idx.clone()) {
+            Some(e) => e,
+            None => return Err(format!("shared `{slab}` stored through a complex pointer")),
+        };
+        for a in sc.accesses.iter().filter(|a| a.root == root) {
+            if a.idx.as_ref() != Some(&model) {
+                return Err(format!("shared `{slab}` accessed through differing indices"));
+            }
+        }
+        if !lane_injective(&model, varying) {
+            return Err(format!("shared `{slab}` store index is not lane-injective"));
+        }
+        if opaque_load {
+            return Err(format!(
+                "opaque load may alias shared `{slab}` written in-region"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn scan_stmts(body: &[Stmt], sc: &mut Scan) {
+    for s in body {
+        match s {
+            Stmt::Assign { expr, .. } => scan_expr(expr, sc),
+            Stmt::Store { ptr, val, .. } => {
+                scan_expr(ptr, sc);
+                scan_expr(val, sc);
+                let (root, idx) = classify(ptr);
+                sc.accesses.push(Access { root, idx, kind: Kind::Store });
+            }
+            Stmt::SyncThreads => sc.fail("barrier survived fission"),
+            Stmt::If { cond, then_, else_ } => {
+                scan_expr(cond, sc);
+                scan_stmts(then_, sc);
+                scan_stmts(else_, sc);
+            }
+            Stmt::For { start, end, step, body, .. } => {
+                scan_expr(start, sc);
+                scan_expr(end, sc);
+                scan_expr(step, sc);
+                scan_stmts(body, sc);
+            }
+            Stmt::While { cond, body } => {
+                scan_expr(cond, sc);
+                scan_stmts(body, sc);
+            }
+            Stmt::Break | Stmt::Continue | Stmt::Return => {}
+            Stmt::AtomicRmw { op, ptr, val, ty, dst } => {
+                scan_expr(ptr, sc);
+                scan_expr(val, sc);
+                if dst.is_some() {
+                    sc.fail("atomic old-value capture is order-sensitive");
+                } else if *op == AtomicOp::Exch {
+                    sc.fail("atomicExch is order-sensitive");
+                } else if matches!(ty, Ty::F32 | Ty::F64) {
+                    sc.fail("floating-point atomic is order-sensitive");
+                }
+                let (root, idx) = classify(ptr);
+                sc.accesses.push(Access { root, idx, kind: Kind::Atomic });
+            }
+            Stmt::AtomicCas { .. } => sc.fail("atomicCAS is order-sensitive"),
+            Stmt::StoreExchange { .. } | Stmt::ReduceVote { .. } => {
+                sc.fail("warp collective needs all lanes in lockstep")
+            }
+            Stmt::ThreadLoop { .. } => sc.fail("nested thread region"),
+        }
+    }
+}
+
+fn scan_expr(e: &Expr, sc: &mut Scan) {
+    match e {
+        Expr::Load { ptr, .. } => {
+            scan_expr(ptr, sc);
+            let (root, idx) = classify(ptr);
+            sc.accesses.push(Access { root, idx, kind: Kind::Load });
+        }
+        Expr::Bin(_, a, b) => {
+            scan_expr(a, sc);
+            scan_expr(b, sc);
+        }
+        Expr::Un(_, a) | Expr::Cast(_, a) => scan_expr(a, sc),
+        Expr::Index { base, idx, .. } => {
+            scan_expr(base, sc);
+            scan_expr(idx, sc);
+        }
+        Expr::Select { cond, then_, else_ } => {
+            scan_expr(cond, sc);
+            scan_expr(then_, sc);
+            scan_expr(else_, sc);
+        }
+        Expr::WarpShfl { .. }
+        | Expr::WarpVote { .. }
+        | Expr::Exchange { .. }
+        | Expr::VoteResult => sc.fail("warp collective needs all lanes in lockstep"),
+        Expr::NvIntrinsic { .. } => sc.fail("NV intrinsic"),
+        Expr::Const(_)
+        | Expr::Reg(_)
+        | Expr::Special(_)
+        | Expr::Param(_)
+        | Expr::SharedBase(_)
+        | Expr::DynSharedBase => {}
+    }
+}
+
+// ---------- lane-injective index form ----------
+
+/// Accepts `±a*threadIdx.x ± (uniform | c*threadIdx.y)*` sums with a
+/// single non-zero-coefficient x term: two lanes of the same row can
+/// never collide, and a cross-row collision (same `a*x + c*y`) would
+/// already be an unordered write-write race in the CUDA source, which
+/// the data-race-freedom assumption excludes.
+fn lane_injective(e: &Expr, varying: &[bool]) -> bool {
+    let mut terms = Vec::new();
+    flatten_sum(e, &mut terms);
+    let mut x_terms = 0usize;
+    for t in &terms {
+        if is_tid_term(t, Special::ThreadIdxX) {
+            x_terms += 1;
+        } else if is_tid_term(t, Special::ThreadIdxY) {
+            // row term: allowed, see above
+        } else if !expr_varying(t, varying) {
+            // block-uniform offset
+        } else {
+            return false;
+        }
+    }
+    x_terms == 1
+}
+
+/// Flatten `Add`/`Sub` chains (casts are transparent: the widening
+/// casts the frontend emits preserve term structure).
+fn flatten_sum<'a>(e: &'a Expr, out: &mut Vec<&'a Expr>) {
+    match e {
+        Expr::Bin(BinOp::Add, a, b) | Expr::Bin(BinOp::Sub, a, b) => {
+            flatten_sum(a, out);
+            flatten_sum(b, out);
+        }
+        Expr::Cast(_, inner) => flatten_sum(inner, out),
+        _ => out.push(e),
+    }
+}
+
+/// `tid` or `c*tid` / `tid*c` with a non-zero integer constant.
+fn is_tid_term(e: &Expr, which: Special) -> bool {
+    match e {
+        Expr::Special(s) => *s == which,
+        Expr::Cast(_, inner) => is_tid_term(inner, which),
+        Expr::Bin(BinOp::Mul, a, b) => {
+            (is_tid_term(a, which) && nonzero_const(b))
+                || (nonzero_const(a) && is_tid_term(b, which))
+        }
+        _ => false,
+    }
+}
+
+fn nonzero_const(e: &Expr) -> bool {
+    match e {
+        Expr::Const(Const::I32(x)) => *x != 0,
+        Expr::Const(Const::I64(x)) => *x != 0,
+        Expr::Cast(_, inner) => nonzero_const(inner),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::uniformity;
+    use crate::compiler::{insert_extra_vars, plan_memory, spmd_to_mpmd};
+
+    fn analyze_kernel(k: &Kernel) -> SyncFreeInfo {
+        let _ = plan_memory(k);
+        let ev = insert_extra_vars(k.clone());
+        let m = spmd_to_mpmd(&ev.kernel).unwrap();
+        let u = uniformity::analyze(&m);
+        analyze(&m, &u)
+    }
+
+    #[test]
+    fn barrier_free_streaming_kernel_is_coarse() {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F32);
+        let o = b.ptr_param("o", Ty::F32);
+        let n = b.scalar_param("n", Ty::I32);
+        let id = b.assign(global_tid());
+        b.if_(lt(reg(id), n.clone()), |bl| {
+            bl.store_at(o.clone(), reg(id), at(a.clone(), reg(id), Ty::F32), Ty::F32);
+        });
+        let info = analyze_kernel(&b.build());
+        assert_eq!(info.regions.len(), 1);
+        assert!(info.is_coarse(0), "{:?}", info.regions[0].reason);
+        assert_eq!(info.summary(), "coarse 1/1 regions");
+    }
+
+    #[test]
+    fn barrier_splits_regions_and_private_shared_stays_coarse() {
+        let mut b = KernelBuilder::new("priv");
+        let p = b.ptr_param("p", Ty::I32);
+        let s = b.shared_array("scratch", Ty::I32, 256);
+        b.store_at(s.clone(), tid_x(), at(p.clone(), tid_x(), Ty::I32), Ty::I32);
+        b.sync_threads();
+        b.store_at(p.clone(), tid_x(), at(s.clone(), tid_x(), Ty::I32), Ty::I32);
+        let info = analyze_kernel(&b.build());
+        assert_eq!(info.regions.len(), 2);
+        assert!(info.is_coarse(0), "{:?}", info.regions[0].reason);
+        assert!(info.is_coarse(1), "{:?}", info.regions[1].reason);
+    }
+
+    #[test]
+    fn cross_lane_shared_read_rejected() {
+        let mut b = KernelBuilder::new("xlane");
+        let p = b.ptr_param("p", Ty::I32);
+        let s = b.shared_array("buf", Ty::I32, 256);
+        // store buf[tid], read buf[tid+1] in the same region: the
+        // neighbour read sees a value another lane wrote *this* region
+        b.store_at(s.clone(), tid_x(), at(p.clone(), tid_x(), Ty::I32), Ty::I32);
+        b.store_at(p.clone(), tid_x(), at(s.clone(), add(tid_x(), c_i32(1)), Ty::I32), Ty::I32);
+        let info = analyze_kernel(&b.build());
+        assert_eq!(info.regions.len(), 1);
+        assert!(!info.is_coarse(0));
+        let why = info.regions[0].reason.as_deref().unwrap();
+        assert!(why.contains("differing indices"), "{why}");
+    }
+
+    #[test]
+    fn non_injective_shared_store_rejected() {
+        let mut b = KernelBuilder::new("collide");
+        let p = b.ptr_param("p", Ty::I32);
+        let s = b.shared_array("acc", Ty::I32, 8);
+        // every lane stores acc[0]: a write-write collision whose
+        // winner depends on execution order
+        b.store_at(s.clone(), c_i32(0), at(p.clone(), tid_x(), Ty::I32), Ty::I32);
+        let info = analyze_kernel(&b.build());
+        assert!(!info.is_coarse(0));
+        assert!(info.regions[0].reason.as_deref().unwrap().contains("lane-injective"));
+    }
+
+    #[test]
+    fn integer_atomic_ok_float_atomic_rejected() {
+        let mut b = KernelBuilder::new("atomics");
+        let hist = b.ptr_param("hist", Ty::I32);
+        let v = b.assign(at(hist.clone(), tid_x(), Ty::I32));
+        b.atomic_rmw_void(AtomicOp::Add, index(hist.clone(), reg(v), Ty::I32), c_i32(1), Ty::I32);
+        let info = analyze_kernel(&b.build());
+        assert!(info.is_coarse(0), "{:?}", info.regions[0].reason);
+
+        let mut b = KernelBuilder::new("fatomic");
+        let acc = b.ptr_param("acc", Ty::F32);
+        b.atomic_rmw_void(AtomicOp::Add, acc.clone(), c_f32(1.0), Ty::F32);
+        let info = analyze_kernel(&b.build());
+        assert!(!info.is_coarse(0));
+        assert!(info.regions[0].reason.as_deref().unwrap().contains("floating-point"));
+    }
+
+    #[test]
+    fn captured_atomic_and_warp_collective_rejected() {
+        let mut b = KernelBuilder::new("cap");
+        let p = b.ptr_param("p", Ty::I32);
+        let old = b.atomic_rmw(AtomicOp::Add, p.clone(), c_i32(1), Ty::I32);
+        b.store_at(p.clone(), add(tid_x(), c_i32(1)), reg(old), Ty::I32);
+        let info = analyze_kernel(&b.build());
+        assert!(!info.is_coarse(0));
+        assert!(info.regions[0].reason.as_deref().unwrap().contains("old-value capture"));
+    }
+
+    #[test]
+    fn summary_names_rejected_regions() {
+        let mut b = KernelBuilder::new("mix");
+        let p = b.ptr_param("p", Ty::I32);
+        b.store_at(p.clone(), tid_x(), c_i32(1), Ty::I32);
+        b.sync_threads();
+        b.atomic_rmw_void(AtomicOp::Exch, p.clone(), c_i32(2), Ty::I32);
+        let info = analyze_kernel(&b.build());
+        assert_eq!(info.regions.len(), 2);
+        assert!(info.is_coarse(0));
+        assert!(!info.is_coarse(1));
+        let s = info.summary();
+        assert!(s.starts_with("coarse 1/2 regions"), "{s}");
+        assert!(s.contains("region 1: atomicExch"), "{s}");
+    }
+
+    #[test]
+    fn injective_index_forms() {
+        let varying = vec![false; 4];
+        let tid = tid_x();
+        assert!(lane_injective(&tid, &varying));
+        assert!(lane_injective(&add(tid.clone(), c_i32(7)), &varying));
+        assert!(lane_injective(&add(mul(c_i32(4), tid.clone()), reg(Reg(0))), &varying));
+        assert!(lane_injective(
+            &add(mul(Expr::Special(Special::ThreadIdxY), c_i32(16)), tid.clone()),
+            &varying
+        ));
+        // zero coefficient, missing tid, varying offset, double tid
+        assert!(!lane_injective(&mul(c_i32(0), tid.clone()), &varying));
+        assert!(!lane_injective(&c_i32(3), &varying));
+        assert!(!lane_injective(&add(tid.clone(), tid.clone()), &varying));
+        let varying_reg = vec![true; 1];
+        assert!(!lane_injective(&add(tid, reg(Reg(0))), &varying_reg));
+    }
+}

@@ -122,6 +122,7 @@ impl BlockFn for BytecodeBlockFn {
         };
         vm.exec();
 
+        scratch.stats.frame_pushes = scratch.vm.frame_pushes;
         if let Some(stats) = &self.stats {
             stats.flush(&scratch.stats);
         }
@@ -162,6 +163,9 @@ pub struct VmScratch {
     inset: Vec<bool>,
     /// per-lane trace buffers (sized only when tracing)
     lane_trace: Vec<Vec<TraceRec>>,
+    /// divergence frames pushed this run — the `-O3` acceptance
+    /// counter: a coarsened region pushes none
+    frame_pushes: u64,
 }
 
 impl VmScratch {
@@ -171,12 +175,14 @@ impl VmScratch {
         self.active.clear();
         self.active.push(0);
         self.nframes = 0;
+        self.frame_pushes = 0;
         if tracing && self.lane_trace.len() < block_size {
             self.lane_trace.resize_with(block_size, Vec::new);
         }
     }
 
     fn alloc_frame(&mut self, kind: FrameKind) -> usize {
+        self.frame_pushes += 1;
         if self.nframes == self.frames.len() {
             self.frames.push(Frame { kind, saved: Vec::new(), other: Vec::new() });
         } else {
@@ -719,6 +725,392 @@ impl<'a> Vm<'a> {
 
     // ---------- the dispatch loop ----------
 
+    /// Dispatch one **data** instruction (no pc change, no mask
+    /// bookkeeping) across the current active set. Shared verbatim by
+    /// the main mask-mode loop and the coarse walker so the two
+    /// execution modes cannot drift in value semantics or accounting —
+    /// the `-O3` transparency contract reduces to "both modes feed the
+    /// same lanes through this function in the same order".
+    fn data_step(&mut self, inst: Inst, once: bool) {
+        match inst {
+            Inst::Const { dst, val } => {
+                let dense = !once && !self.prog.scalar_reg[dst as usize];
+                if let (true, Some((lo, hi))) = (dense, self.dense_span()) {
+                    let d0 = dst as usize * self.block_size;
+                    self.scratch.thread_regs[d0 + lo..d0 + hi].fill(val);
+                } else {
+                    for i in 0..self.span(once) {
+                        let l = self.lane(i);
+                        self.wr(dst, l, val);
+                    }
+                }
+            }
+            Inst::Mov { dst, src } => {
+                let dense = !once
+                    && !self.prog.scalar_reg[dst as usize]
+                    && !self.prog.scalar_reg[src as usize];
+                if let (true, Some((lo, hi))) = (dense, self.dense_span()) {
+                    let bs = self.block_size;
+                    let (d0, s0) = (dst as usize * bs, src as usize * bs);
+                    self.scratch.thread_regs.copy_within(s0 + lo..s0 + hi, d0 + lo);
+                } else {
+                    for i in 0..self.span(once) {
+                        let l = self.lane(i);
+                        let v = self.rd(src, l);
+                        self.wr(dst, l, v);
+                    }
+                }
+            }
+            Inst::Broadcast { dst, src } => {
+                if self.nactive() > 0 {
+                    let v = self.rd(src, self.lane(0));
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        self.wr(dst, l, v);
+                    }
+                }
+            }
+            Inst::Param { dst, idx } => {
+                let v = self.arg(idx as usize);
+                for i in 0..self.span(once) {
+                    let l = self.lane(i);
+                    self.wr(dst, l, v);
+                }
+            }
+            Inst::Geom { dst, which } => {
+                let v = self.geom[which as usize];
+                for i in 0..self.span(once) {
+                    let l = self.lane(i);
+                    self.wr(dst, l, v);
+                }
+            }
+            Inst::Special { dst, sr } => {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let v = match sr {
+                        Special::ThreadIdxX => Value::I32((l % self.block_x) as i32),
+                        Special::ThreadIdxY => Value::I32((l / self.block_x) as i32),
+                        Special::LaneId => Value::I32((l % 32) as i32),
+                        Special::WarpId => Value::I32((l / 32) as i32),
+                        _ => {
+                            // translation rewrites block/grid
+                            // specials to `Geom`; nothing else
+                            // reaches lowering
+                            debug_assert!(false, "special {sr:?} not lowered to Geom");
+                            Value::I32(0)
+                        }
+                    };
+                    self.wr(dst, l, v);
+                }
+            }
+            Inst::Bin { op, dst, a, b, flops } => {
+                let fast = !once
+                    && match self.dense_span() {
+                        Some((lo, hi)) => self.bin_dense(op, dst, a, b, flops, lo, hi),
+                        None => false,
+                    };
+                if !fast {
+                    let mult = self.mult(once);
+                    for i in 0..self.span(once) {
+                        let l = self.lane(i);
+                        let x = self.rd(a, l);
+                        let y = self.rd(b, l);
+                        if flops && (x.is_float() || y.is_float()) {
+                            self.scratch.stats.flops += mult;
+                        }
+                        self.wr(dst, l, bin_op(op, x, y));
+                    }
+                }
+            }
+            Inst::Un { op, dst, a, flops } => {
+                let mult = self.mult(once);
+                for i in 0..self.span(once) {
+                    let l = self.lane(i);
+                    let x = self.rd(a, l);
+                    if flops && x.is_float() {
+                        self.scratch.stats.flops += mult;
+                    }
+                    self.wr(dst, l, un_op(op, x));
+                }
+            }
+            Inst::Cast { ty, dst, a } => {
+                for i in 0..self.span(once) {
+                    let l = self.lane(i);
+                    let v = self.rd(a, l).cast(ty);
+                    self.wr(dst, l, v);
+                }
+            }
+            Inst::Index { dst, base, idx, elem } => {
+                for i in 0..self.span(once) {
+                    let l = self.lane(i);
+                    let b = self.rd(base, l).as_ptr();
+                    let ix = self.rd(idx, l).as_i64();
+                    let p = b.wrapping_add((ix * elem.size() as i64) as u64);
+                    self.wr(dst, l, Value::Ptr(p));
+                }
+            }
+            Inst::Load { dst, ptr, ty } => {
+                if once {
+                    if self.nactive() > 0 {
+                        let l = self.lane(0);
+                        let addr = self.rd(ptr, l).as_ptr();
+                        let v = self.load_uniform(addr, ty);
+                        self.wr(dst, l, v);
+                    }
+                } else {
+                    for i in 0..self.nactive() {
+                        let l = self.lane(i);
+                        let addr = self.rd(ptr, l).as_ptr();
+                        let v = self.load(addr, ty, l);
+                        self.wr(dst, l, v);
+                    }
+                }
+            }
+            Inst::Store { ptr, val, ty } => {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let addr = self.rd(ptr, l).as_ptr();
+                    let v = self.rd(val, l);
+                    self.store(addr, v, ty, l);
+                }
+            }
+            // ----- superinstructions (passes::fuse) -----
+            // Never scalar-flagged: the fusion pass only forms
+            // vector-class pairs, so each arm runs both halves per
+            // active lane with the unfused read/write order.
+            Inst::FusedBin { op1, t, a, b, op2, dst, c, t_left, f1, f2 } => {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let x = self.rd(a, l);
+                    let y = self.rd(b, l);
+                    if f1 && (x.is_float() || y.is_float()) {
+                        self.scratch.stats.flops += 1;
+                    }
+                    let tv = bin_op(op1, x, y);
+                    self.wr(t, l, tv);
+                    let cv = self.rd(c, l);
+                    let (p, q) = if t_left { (tv, cv) } else { (cv, tv) };
+                    if f2 && (p.is_float() || q.is_float()) {
+                        self.scratch.stats.flops += 1;
+                    }
+                    self.wr(dst, l, bin_op(op2, p, q));
+                }
+            }
+            Inst::IndexLoad { t, base, idx, elem, dst, ty } => {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let bp = self.rd(base, l).as_ptr();
+                    let ix = self.rd(idx, l).as_i64();
+                    let p = bp.wrapping_add((ix * elem.size() as i64) as u64);
+                    self.wr(t, l, Value::Ptr(p));
+                    let v = self.load(p, ty, l);
+                    self.wr(dst, l, v);
+                }
+            }
+            Inst::IndexStore { t, base, idx, elem, val, ty } => {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let bp = self.rd(base, l).as_ptr();
+                    let ix = self.rd(idx, l).as_i64();
+                    let p = bp.wrapping_add((ix * elem.size() as i64) as u64);
+                    self.wr(t, l, Value::Ptr(p));
+                    let v = self.rd(val, l);
+                    self.store(p, v, ty, l);
+                }
+            }
+            Inst::LoadBin { t, ptr, lty, op, dst, c, t_left, f2 } => {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let addr = self.rd(ptr, l).as_ptr();
+                    let tv = self.load(addr, lty, l);
+                    self.wr(t, l, tv);
+                    let cv = self.rd(c, l);
+                    let (p, q) = if t_left { (tv, cv) } else { (cv, tv) };
+                    if f2 && (p.is_float() || q.is_float()) {
+                        self.scratch.stats.flops += 1;
+                    }
+                    self.wr(dst, l, bin_op(op, p, q));
+                }
+            }
+            Inst::AtomicRmw { op, dst, ptr, val, ty } => {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let addr = self.rd(ptr, l).as_ptr();
+                    let v = self.rd(val, l);
+                    let old = self.atomic(op, addr, v, ty, l);
+                    if let Some(d) = dst {
+                        self.wr(d, l, old);
+                    }
+                }
+            }
+            Inst::AtomicCas { dst, ptr, cmp, val, ty } => {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let addr = self.rd(ptr, l).as_ptr();
+                    let c = self.rd(cmp, l);
+                    let v = self.rd(val, l);
+                    let old = self.atomic_cas(addr, c, v, ty, l);
+                    if let Some(d) = dst {
+                        self.wr(d, l, old);
+                    }
+                }
+            }
+            Inst::StoreExchange { val } => {
+                // slot (l/32)*32 + l%32 is just l: the buffer is
+                // indexed directly by lane id
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let v = self.rd(val, l);
+                    self.scratch.exchange[l] = v;
+                }
+            }
+            Inst::ReadExchange { dst, lane } => {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let warp = l / 32;
+                    let src = self.rd(lane, l).as_i64();
+                    // CUDA: out-of-range source lane → own value
+                    let src = if (0..32).contains(&src) { src as usize } else { l % 32 };
+                    let v = self.scratch.exchange[warp * 32 + src];
+                    self.wr(dst, l, v);
+                }
+            }
+            Inst::VoteResult { dst } => {
+                for i in 0..self.nactive() {
+                    let l = self.lane(i);
+                    let v = self.scratch.votes[l / 32];
+                    self.wr(dst, l, v);
+                }
+            }
+            Inst::ReduceVote { kind } => self.reduce_votes(kind),
+            Inst::Acct { lanes } => {
+                self.scratch.stats.instructions += if lanes { self.nactive() as u64 } else { 1 };
+            }
+            // control instructions are dispatched by `exec` (mask
+            // mode) and `coarse_walk`, never routed here
+            Inst::Jump { .. }
+            | Inst::JumpIfZero { .. }
+            | Inst::RegionBegin { .. }
+            | Inst::RegionEnd
+            | Inst::CoarseBegin { .. }
+            | Inst::CoarseEnd
+            | Inst::IfBegin { .. }
+            | Inst::Else { .. }
+            | Inst::IfEnd
+            | Inst::LoopBegin
+            | Inst::LoopTest { .. }
+            | Inst::ContinueMerge
+            | Inst::LoopEnd
+            | Inst::Break
+            | Inst::Continue
+            | Inst::Return
+            | Inst::CmpLoopTest { .. }
+            | Inst::CmpIfBegin { .. } => {
+                debug_assert!(false, "control instruction {inst:?} dispatched as data");
+            }
+        }
+    }
+
+    /// Execute a coarse (sync-free, `-O3`) region group-lockstep: run
+    /// `group` through the jump-based nest at `[start, end)`.
+    ///
+    /// Data instructions dispatch across the whole group exactly like
+    /// the mask path — instruction-major, identical per-lane memory
+    /// order — so pre-divergence execution is bit-identical. At a
+    /// mixed per-lane branch the group **splits**: the jump-target
+    /// subgroup is parked with a snapshot of the scalar (block)
+    /// register file and walked afterwards; there is no re-convergence.
+    /// `passes::syncfree` only admits regions whose observable effects
+    /// are insensitive to cross-subgroup ordering (no barriers, no warp
+    /// collectives, no order-sensitive atomics, lane-injective shared
+    /// stores), stats are order-independent sums whose scalar-flagged
+    /// lane multipliers sum over subgroups to the full active count,
+    /// and traces land in per-lane buffers flushed in lane order — so
+    /// every observable stays bit-identical to mask mode.
+    ///
+    /// Scalar instructions re-execute per subgroup against the restored
+    /// snapshot; uniformity guarantees they recompute identical values,
+    /// and any scalar temp written under divergent control is dead past
+    /// its branch (user registers assigned there are taint-classified
+    /// vector), so the surviving scalar state is subgroup-independent.
+    fn coarse_walk(&mut self, start: usize, end: usize, group: Vec<u32>) {
+        let mut work: Vec<(usize, Vec<u32>, Option<Vec<Value>>)> = vec![(start, group, None)];
+        while let Some((mut pc, g, snap)) = work.pop() {
+            if let Some(s) = snap {
+                self.scratch.block_regs.copy_from_slice(&s);
+            }
+            self.scratch.vm.active = g;
+            while pc < end {
+                let inst = self.prog.insts[pc];
+                let once = self.prog.scalar[pc];
+                match inst {
+                    Inst::Jump { t } => {
+                        pc = t as usize;
+                        continue;
+                    }
+                    Inst::JumpIfZero { cond, t } => {
+                        if self.prog.scalar_reg[cond as usize] {
+                            // uniform condition: the whole group
+                            // branches together, no split possible
+                            if !self.rd(cond, 0).as_bool() {
+                                pc = t as usize;
+                                continue;
+                            }
+                        } else {
+                            let mut ntrue = 0usize;
+                            for i in 0..self.nactive() {
+                                let l = self.lane(i);
+                                let c = self.rd(cond, l).as_bool();
+                                self.scratch.vm.inset[l] = c;
+                                ntrue += c as usize;
+                            }
+                            if ntrue == self.nactive() {
+                                for i in 0..self.nactive() {
+                                    let l = self.lane(i);
+                                    self.scratch.vm.inset[l] = false;
+                                }
+                            } else if ntrue == 0 {
+                                for i in 0..self.nactive() {
+                                    let l = self.lane(i);
+                                    self.scratch.vm.inset[l] = false;
+                                }
+                                pc = t as usize;
+                                continue;
+                            } else {
+                                // mixed: split. The fall-through
+                                // subgroup runs first; the jump-target
+                                // subgroup is parked with a scalar-file
+                                // snapshot and walked after it.
+                                let scratch = &mut *self.scratch;
+                                let mut taken = Vec::with_capacity(ntrue);
+                                let mut not = Vec::new();
+                                for &l in &scratch.vm.active {
+                                    if scratch.vm.inset[l as usize] {
+                                        taken.push(l);
+                                    } else {
+                                        not.push(l);
+                                    }
+                                    scratch.vm.inset[l as usize] = false;
+                                }
+                                work.push((t as usize, not, Some(scratch.block_regs.clone())));
+                                scratch.vm.active = taken;
+                            }
+                        }
+                    }
+                    Inst::Return => {
+                        for i in 0..self.nactive() {
+                            let l = self.lane(i);
+                            self.scratch.retired[l] = true;
+                        }
+                        break;
+                    }
+                    other => self.data_step(other, once),
+                }
+                pc += 1;
+            }
+        }
+    }
+
     fn exec(&mut self) {
         let n = self.prog.insts.len();
         let mut pc = 0usize;
@@ -728,205 +1120,6 @@ impl<'a> Vm<'a> {
             // with lane-multiplied accounting
             let once = self.prog.scalar[pc];
             match inst {
-                Inst::Const { dst, val } => {
-                    let dense = !once && !self.prog.scalar_reg[dst as usize];
-                    if let (true, Some((lo, hi))) = (dense, self.dense_span()) {
-                        let d0 = dst as usize * self.block_size;
-                        self.scratch.thread_regs[d0 + lo..d0 + hi].fill(val);
-                    } else {
-                        for i in 0..self.span(once) {
-                            let l = self.lane(i);
-                            self.wr(dst, l, val);
-                        }
-                    }
-                }
-                Inst::Mov { dst, src } => {
-                    let dense = !once
-                        && !self.prog.scalar_reg[dst as usize]
-                        && !self.prog.scalar_reg[src as usize];
-                    if let (true, Some((lo, hi))) = (dense, self.dense_span()) {
-                        let bs = self.block_size;
-                        let (d0, s0) = (dst as usize * bs, src as usize * bs);
-                        self.scratch.thread_regs.copy_within(s0 + lo..s0 + hi, d0 + lo);
-                    } else {
-                        for i in 0..self.span(once) {
-                            let l = self.lane(i);
-                            let v = self.rd(src, l);
-                            self.wr(dst, l, v);
-                        }
-                    }
-                }
-                Inst::Broadcast { dst, src } => {
-                    if self.nactive() > 0 {
-                        let v = self.rd(src, self.lane(0));
-                        for i in 0..self.nactive() {
-                            let l = self.lane(i);
-                            self.wr(dst, l, v);
-                        }
-                    }
-                }
-                Inst::Param { dst, idx } => {
-                    let v = self.arg(idx as usize);
-                    for i in 0..self.span(once) {
-                        let l = self.lane(i);
-                        self.wr(dst, l, v);
-                    }
-                }
-                Inst::Geom { dst, which } => {
-                    let v = self.geom[which as usize];
-                    for i in 0..self.span(once) {
-                        let l = self.lane(i);
-                        self.wr(dst, l, v);
-                    }
-                }
-                Inst::Special { dst, sr } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let v = match sr {
-                            Special::ThreadIdxX => Value::I32((l % self.block_x) as i32),
-                            Special::ThreadIdxY => Value::I32((l / self.block_x) as i32),
-                            Special::LaneId => Value::I32((l % 32) as i32),
-                            Special::WarpId => Value::I32((l / 32) as i32),
-                            _ => {
-                                // translation rewrites block/grid
-                                // specials to `Geom`; nothing else
-                                // reaches lowering
-                                debug_assert!(false, "special {sr:?} not lowered to Geom");
-                                Value::I32(0)
-                            }
-                        };
-                        self.wr(dst, l, v);
-                    }
-                }
-                Inst::Bin { op, dst, a, b, flops } => {
-                    let fast = !once
-                        && match self.dense_span() {
-                            Some((lo, hi)) => self.bin_dense(op, dst, a, b, flops, lo, hi),
-                            None => false,
-                        };
-                    if !fast {
-                        let mult = self.mult(once);
-                        for i in 0..self.span(once) {
-                            let l = self.lane(i);
-                            let x = self.rd(a, l);
-                            let y = self.rd(b, l);
-                            if flops && (x.is_float() || y.is_float()) {
-                                self.scratch.stats.flops += mult;
-                            }
-                            self.wr(dst, l, bin_op(op, x, y));
-                        }
-                    }
-                }
-                Inst::Un { op, dst, a, flops } => {
-                    let mult = self.mult(once);
-                    for i in 0..self.span(once) {
-                        let l = self.lane(i);
-                        let x = self.rd(a, l);
-                        if flops && x.is_float() {
-                            self.scratch.stats.flops += mult;
-                        }
-                        self.wr(dst, l, un_op(op, x));
-                    }
-                }
-                Inst::Cast { ty, dst, a } => {
-                    for i in 0..self.span(once) {
-                        let l = self.lane(i);
-                        let v = self.rd(a, l).cast(ty);
-                        self.wr(dst, l, v);
-                    }
-                }
-                Inst::Index { dst, base, idx, elem } => {
-                    for i in 0..self.span(once) {
-                        let l = self.lane(i);
-                        let b = self.rd(base, l).as_ptr();
-                        let ix = self.rd(idx, l).as_i64();
-                        let p = b.wrapping_add((ix * elem.size() as i64) as u64);
-                        self.wr(dst, l, Value::Ptr(p));
-                    }
-                }
-                Inst::Load { dst, ptr, ty } => {
-                    if once {
-                        if self.nactive() > 0 {
-                            let l = self.lane(0);
-                            let addr = self.rd(ptr, l).as_ptr();
-                            let v = self.load_uniform(addr, ty);
-                            self.wr(dst, l, v);
-                        }
-                    } else {
-                        for i in 0..self.nactive() {
-                            let l = self.lane(i);
-                            let addr = self.rd(ptr, l).as_ptr();
-                            let v = self.load(addr, ty, l);
-                            self.wr(dst, l, v);
-                        }
-                    }
-                }
-                Inst::Store { ptr, val, ty } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let addr = self.rd(ptr, l).as_ptr();
-                        let v = self.rd(val, l);
-                        self.store(addr, v, ty, l);
-                    }
-                }
-                // ----- superinstructions (passes::fuse) -----
-                // Never scalar-flagged: the fusion pass only forms
-                // vector-class pairs, so each arm runs both halves per
-                // active lane with the unfused read/write order.
-                Inst::FusedBin { op1, t, a, b, op2, dst, c, t_left, f1, f2 } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let x = self.rd(a, l);
-                        let y = self.rd(b, l);
-                        if f1 && (x.is_float() || y.is_float()) {
-                            self.scratch.stats.flops += 1;
-                        }
-                        let tv = bin_op(op1, x, y);
-                        self.wr(t, l, tv);
-                        let cv = self.rd(c, l);
-                        let (p, q) = if t_left { (tv, cv) } else { (cv, tv) };
-                        if f2 && (p.is_float() || q.is_float()) {
-                            self.scratch.stats.flops += 1;
-                        }
-                        self.wr(dst, l, bin_op(op2, p, q));
-                    }
-                }
-                Inst::IndexLoad { t, base, idx, elem, dst, ty } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let bp = self.rd(base, l).as_ptr();
-                        let ix = self.rd(idx, l).as_i64();
-                        let p = bp.wrapping_add((ix * elem.size() as i64) as u64);
-                        self.wr(t, l, Value::Ptr(p));
-                        let v = self.load(p, ty, l);
-                        self.wr(dst, l, v);
-                    }
-                }
-                Inst::IndexStore { t, base, idx, elem, val, ty } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let bp = self.rd(base, l).as_ptr();
-                        let ix = self.rd(idx, l).as_i64();
-                        let p = bp.wrapping_add((ix * elem.size() as i64) as u64);
-                        self.wr(t, l, Value::Ptr(p));
-                        let v = self.rd(val, l);
-                        self.store(p, v, ty, l);
-                    }
-                }
-                Inst::LoadBin { t, ptr, lty, op, dst, c, t_left, f2 } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let addr = self.rd(ptr, l).as_ptr();
-                        let tv = self.load(addr, lty, l);
-                        self.wr(t, l, tv);
-                        let cv = self.rd(c, l);
-                        let (p, q) = if t_left { (tv, cv) } else { (cv, tv) };
-                        if f2 && (p.is_float() || q.is_float()) {
-                            self.scratch.stats.flops += 1;
-                        }
-                        self.wr(dst, l, bin_op(op, p, q));
-                    }
-                }
                 Inst::CmpLoopTest { op, a, b, dst, exit_t, f } => {
                     for i in 0..self.nactive() {
                         let l = self.lane(i);
@@ -962,61 +1155,6 @@ impl<'a> Vm<'a> {
                         pc = else_t as usize;
                         continue;
                     }
-                }
-                Inst::AtomicRmw { op, dst, ptr, val, ty } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let addr = self.rd(ptr, l).as_ptr();
-                        let v = self.rd(val, l);
-                        let old = self.atomic(op, addr, v, ty, l);
-                        if let Some(d) = dst {
-                            self.wr(d, l, old);
-                        }
-                    }
-                }
-                Inst::AtomicCas { dst, ptr, cmp, val, ty } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let addr = self.rd(ptr, l).as_ptr();
-                        let c = self.rd(cmp, l);
-                        let v = self.rd(val, l);
-                        let old = self.atomic_cas(addr, c, v, ty, l);
-                        if let Some(d) = dst {
-                            self.wr(d, l, old);
-                        }
-                    }
-                }
-                Inst::StoreExchange { val } => {
-                    // slot (l/32)*32 + l%32 is just l: the buffer is
-                    // indexed directly by lane id
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let v = self.rd(val, l);
-                        self.scratch.exchange[l] = v;
-                    }
-                }
-                Inst::ReadExchange { dst, lane } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let warp = l / 32;
-                        let src = self.rd(lane, l).as_i64();
-                        // CUDA: out-of-range source lane → own value
-                        let src = if (0..32).contains(&src) { src as usize } else { l % 32 };
-                        let v = self.scratch.exchange[warp * 32 + src];
-                        self.wr(dst, l, v);
-                    }
-                }
-                Inst::VoteResult { dst } => {
-                    for i in 0..self.nactive() {
-                        let l = self.lane(i);
-                        let v = self.scratch.votes[l / 32];
-                        self.wr(dst, l, v);
-                    }
-                }
-                Inst::ReduceVote { kind } => self.reduce_votes(kind),
-                Inst::Acct { lanes } => {
-                    self.scratch.stats.instructions +=
-                        if lanes { self.nactive() as u64 } else { 1 };
                 }
                 Inst::Jump { t } => {
                     pc = t as usize;
@@ -1063,6 +1201,40 @@ impl<'a> Vm<'a> {
                     }
                     self.in_region = false;
                     self.scratch.vm.set_uniform();
+                }
+                Inst::CoarseBegin { end } => {
+                    let end = end as usize;
+                    self.in_region = true;
+                    self.region_lo = 0;
+                    self.region_hi = self.block_size;
+                    let mut group: Vec<u32> = Vec::with_capacity(self.block_size);
+                    for l in 0..self.block_size {
+                        if !self.scratch.retired[l] {
+                            group.push(l as u32);
+                        }
+                    }
+                    if !group.is_empty() {
+                        self.coarse_walk(pc + 1, end, group);
+                    }
+                    // flush the per-lane trace buffers in lane order —
+                    // bit-identical to `RegionEnd`
+                    if self.tracing {
+                        let scratch = &mut *self.scratch;
+                        if let Some(t) = scratch.trace.as_mut() {
+                            for l in 0..self.block_size {
+                                t.append(&mut scratch.vm.lane_trace[l]);
+                            }
+                        }
+                    }
+                    self.in_region = false;
+                    self.scratch.vm.set_uniform();
+                    // land on CoarseEnd; the shared `pc += 1` steps past
+                    pc = end;
+                }
+                Inst::CoarseEnd => {
+                    // only reachable by falling through from the
+                    // `CoarseBegin` arm above, which already did the
+                    // region teardown — nothing left to do
                 }
                 Inst::IfBegin { cond, else_t } => {
                     if self.prog.scalar_reg[cond as usize] {
@@ -1122,6 +1294,7 @@ impl<'a> Vm<'a> {
                     }
                     self.scratch.vm.lane_return();
                 }
+                other => self.data_step(other, once),
             }
             pc += 1;
         }

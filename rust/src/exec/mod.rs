@@ -52,6 +52,12 @@ pub struct ExecStats {
     pub stores: AtomicU64,
     /// blocks executed
     pub blocks: AtomicU64,
+    /// divergence frames pushed by the bytecode VM's mask machinery.
+    /// Engine bookkeeping, not an architectural counter: it is
+    /// **excluded** from [`StatsSnapshot`] (whose equality is the
+    /// `-O0`-parity contract) and exists so the `-O3` coarsening tests
+    /// can assert a coarse region pushes none.
+    pub frame_pushes: AtomicU64,
 }
 
 impl ExecStats {
@@ -66,6 +72,13 @@ impl ExecStats {
         self.loads.fetch_add(l.loads, Ordering::Relaxed);
         self.stores.fetch_add(l.stores, Ordering::Relaxed);
         self.blocks.fetch_add(1, Ordering::Relaxed);
+        self.frame_pushes.fetch_add(l.frame_pushes, Ordering::Relaxed);
+    }
+
+    /// Divergence frames pushed so far (see the field doc — not part
+    /// of the parity snapshot).
+    pub fn frame_pushes(&self) -> u64 {
+        self.frame_pushes.load(Ordering::Relaxed)
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -110,6 +123,9 @@ pub struct LocalStats {
     pub bytes: u64,
     pub loads: u64,
     pub stores: u64,
+    /// VM divergence-frame pushes (engine bookkeeping, not in the
+    /// parity snapshot)
+    pub frame_pushes: u64,
 }
 
 /// Per-pool-thread reusable execution scratch: register files, the
@@ -272,7 +288,14 @@ mod tests {
     #[test]
     fn stats_flush_and_snapshot() {
         let s = ExecStats::new();
-        let l = LocalStats { instructions: 10, flops: 4, bytes: 32, loads: 2, stores: 1 };
+        let l = LocalStats {
+            instructions: 10,
+            flops: 4,
+            bytes: 32,
+            loads: 2,
+            stores: 1,
+            frame_pushes: 0,
+        };
         s.flush(&l);
         s.flush(&l);
         let snap = s.snapshot();

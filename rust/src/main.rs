@@ -71,8 +71,9 @@ fn print_help() {
            --emit E          cir|mpmd|bytecode — which form to print\n\
                              (default cir; bytecode = disassembled\n\
                              register-machine program)\n\
-           --opt N           optimization level 0|1|2 (default 2:\n\
+           --opt N           optimization level 0|1|2|3 (default 2:\n\
                              fold+DCE+LICM+uniformity scalarization;\n\
+                             3 adds sync-free block coarsening;\n\
                              also accepted by run/suite/dump)\n\
            --fuse F          on|off — superinstruction fusion +\n\
                              register-file compaction (default: on at\n\
@@ -138,7 +139,7 @@ fn parse_scale(args: &[String]) -> Scale {
 fn parse_opt(args: &[String]) -> OptLevel {
     match flag_value(args, "--opt") {
         Some(s) => OptLevel::parse(s).unwrap_or_else(|| {
-            eprintln!("unknown --opt `{s}` (0|1|2); using the default -O2");
+            eprintln!("unknown --opt `{s}` (0|1|2|3); using the default -O2");
             OptLevel::default()
         }),
         None => OptLevel::default(),
@@ -359,7 +360,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     if files.is_empty() {
         eprintln!(
             "usage: cupbop compile <file.cu> [more.cu ...] [--kernel NAME] \
-             [--emit cir|mpmd|bytecode] [--opt 0|1|2] [--fuse on|off]"
+             [--emit cir|mpmd|bytecode] [--opt 0|1|2|3] [--fuse on|off]"
         );
         return ExitCode::FAILURE;
     }

@@ -51,6 +51,9 @@ struct RefRun {
     arrays: Vec<Vec<u8>>,
     stats: StatsSnapshot,
     trace: Vec<TraceRec>,
+    /// bytecode-VM divergence-frame pushes (engine bookkeeping, always
+    /// 0 for the interpreter; the `-O3` coarse nest must not push any)
+    frame_pushes: u64,
 }
 
 fn run_reference_traced(built: &BuiltProgram, exec: ExecMode) -> RefRun {
@@ -61,7 +64,8 @@ fn run_reference_traced(built: &BuiltProgram, exec: ExecMode) -> RefRun {
         .with_tracing();
     run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
         .unwrap_or_else(|e| panic!("[{exec:?}] host exec: {e}"));
-    RefRun { arrays, stats: rt.stats.snapshot(), trace: rt.take_trace() }
+    let frame_pushes = rt.stats.frame_pushes();
+    RefRun { arrays, stats: rt.stats.snapshot(), trace: rt.take_trace(), frame_pushes }
 }
 
 /// Every `.cu` kernel in the corpus, synthesized into a host program:
@@ -145,12 +149,21 @@ fn corpus_o2_scalarizes_and_reports_pipeline() {
     }
 }
 
+struct BlockRun {
+    mem: Vec<i32>,
+    stats: StatsSnapshot,
+    trace: Vec<TraceRec>,
+    /// bytecode-VM divergence-frame pushes (0 for the interpreter)
+    frame_pushes: u64,
+}
+
 /// Run every block of `k` serially through the bytecode VM compiled at
-/// `opt` (or the `-O0` interpreter when `interp`). The kernel takes
-/// `(int* p, const int* q, int n)`: `p` is the mutated data buffer
-/// (returned), `q` a read-only side buffer (uniform-load bait — kept
-/// store-free so lane-serial interpretation and instruction-serial VM
-/// execution cannot legally observe different values).
+/// `opt` (or the `-O0` interpreter when `interp`), with tracing on. The
+/// kernel takes `(int* p, const int* q, int n)`: `p` is the mutated
+/// data buffer (returned), `q` a read-only side buffer (uniform-load
+/// bait — kept store-free so lane-serial interpretation and
+/// instruction-serial VM execution cannot legally observe different
+/// values).
 fn run_blocks(
     k: &Kernel,
     cfg: CompileCfg,
@@ -159,7 +172,7 @@ fn run_blocks(
     block: u32,
     init: &[i32],
     ro: &[i32],
-) -> (Vec<i32>, StatsSnapshot) {
+) -> BlockRun {
     let ck = Arc::new(compile_kernel_cfg(k, cfg).unwrap());
     let mem = DeviceMemory::with_capacity(1 << 18);
     let buf = mem.alloc(init.len().max(1) * 4);
@@ -177,10 +190,16 @@ fn run_blocks(
         Box::new(BytecodeBlockFn::with_stats(ck.clone(), stats.clone()))
     };
     let mut scratch = BlockScratch::new();
+    scratch.trace = Some(Vec::new());
     for b in 0..launch.total_blocks() {
         f.run(b, &launch, &mem, &mut scratch);
     }
-    (mem.read_vec_i32(buf, init.len()), stats.snapshot())
+    BlockRun {
+        mem: mem.read_vec_i32(buf, init.len()),
+        stats: stats.snapshot(),
+        trace: scratch.trace.take().unwrap_or_default(),
+        frame_pushes: stats.frame_pushes(),
+    }
 }
 
 /// Randomized kernels mixing uniform work (scalarization bait: loop
@@ -302,12 +321,13 @@ fn random_kernels_opt_levels_agree() {
         let init = rng.vec_i32(n, -30, 30);
         let ro = rng.vec_i32(n.max(1), -10, 10);
         let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: None };
-        let (base_mem, base_stats) = run_blocks(&k, base_cfg, true, grid, bs, &init, &ro);
+        let base = run_blocks(&k, base_cfg, true, grid, bs, &init, &ro);
         for opt in OptLevel::ALL {
             let cfg = CompileCfg { opt, fuse: None };
-            let (m, s) = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
-            assert_eq!(base_mem, m, "memory diverged at {opt:?}");
-            assert_eq!(base_stats, s, "ExecStats diverged at {opt:?}");
+            let r = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
+            assert_eq!(base.mem, r.mem, "memory diverged at {opt:?}");
+            assert_eq!(base.stats, r.stats, "ExecStats diverged at {opt:?}");
+            assert_eq!(base.trace, r.trace, "TraceRec stream diverged at {opt:?}");
         }
     });
 }
@@ -414,13 +434,14 @@ fn random_kernels_fused_unfused_agree() {
         let init = rng.vec_i32(n, -40, 40);
         let ro = rng.vec_i32(n.max(1), -10, 10);
         let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: Some(false) };
-        let (base_mem, base_stats) = run_blocks(&k, base_cfg, true, grid, bs, &init, &ro);
+        let base = run_blocks(&k, base_cfg, true, grid, bs, &init, &ro);
         for opt in [OptLevel::O0, OptLevel::O2] {
             for fuse in [false, true] {
                 let cfg = CompileCfg { opt, fuse: Some(fuse) };
-                let (m, s) = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
-                assert_eq!(base_mem, m, "memory diverged at {opt:?} fuse={fuse}");
-                assert_eq!(base_stats, s, "ExecStats diverged at {opt:?} fuse={fuse}");
+                let r = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
+                assert_eq!(base.mem, r.mem, "memory diverged at {opt:?} fuse={fuse}");
+                assert_eq!(base.stats, r.stats, "ExecStats diverged at {opt:?} fuse={fuse}");
+                assert_eq!(base.trace, r.trace, "TraceRec stream diverged at {opt:?} fuse={fuse}");
             }
         }
     });
@@ -461,6 +482,219 @@ fn corpus_fused_unfused_observably_identical() {
             }
         }
     }
+}
+
+/// The `-O3` coarsening fuzz: randomized kernels mixing coarse-eligible
+/// shapes (per-lane loops with breaks/continues, select diamonds,
+/// injective shared round-trips across barriers, integer atomics) with
+/// the order-sensitive shapes the sync-free analysis must keep masked
+/// (`atomicExch`). Every opt level must match the `-O0` interpreter bit
+/// for bit on memory, `ExecStats` AND the `TraceRec` stream; and when
+/// every region is coarse-eligible the `-O3` run must push zero
+/// divergence frames — the mask machinery is truly gone, not idle.
+#[test]
+fn random_sync_free_and_barriered_kernels_coarsen_transparently() {
+    use cupbop::ir::*;
+
+    #[derive(Clone, Copy)]
+    enum Op {
+        /// per-lane counted loop with a tid-dependent break — the
+        /// coarse jump nest's bread and butter
+        LaneLoopBreak { trips: i32, c: i32 },
+        /// `select()` lowers to a branch diamond inside the coarse nest
+        SelectMix { c: i32 },
+        /// divergent continue inside a varying-trip loop
+        DivergentContinue { modk: i32 },
+        /// `s[tid] = p[id]+c; __syncthreads(); p[id] = s[tid]` — both
+        /// fissioned regions stay coarse (injective private slot)
+        SharedRoundTrip { c: i32 },
+        /// order-insensitive integer atomic — coarse-eligible
+        AtomicAdd { c: i32 },
+        /// `atomicExch` is order-sensitive: its region must stay masked
+        Exchange { c: i32 },
+        Barrier,
+        EarlyReturn { cutoff: i32 },
+    }
+
+    fn build(ops: &[Op]) -> Kernel {
+        let mut b = KernelBuilder::new("rand_coarse");
+        let p = b.ptr_param("p", Ty::I32);
+        let q = b.ptr_param("q", Ty::I32);
+        let _n = b.scalar_param("n", Ty::I32);
+        let s = b.shared_array("slot", Ty::I32, 64);
+        let id = b.assign(global_tid());
+        let t = b.assign(tid_x());
+        for op in ops {
+            match *op {
+                Op::LaneLoopBreak { trips, c } => {
+                    let p = p.clone();
+                    b.for_(c_i32(0), c_i32(trips), c_i32(1), |bb, j| {
+                        bb.if_(lt(rem(reg(t), c_i32(3)), reg(j)), |bb2| bb2.brk());
+                        let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                        bb.store_at(
+                            p.clone(),
+                            reg(id),
+                            add(reg(v), add(reg(j), c_i32(c))),
+                            Ty::I32,
+                        );
+                    });
+                }
+                Op::SelectMix { c } => {
+                    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+                    let picked = select(
+                        eq(rem(reg(t), c_i32(2)), c_i32(0)),
+                        add(reg(v), c_i32(c)),
+                        sub(reg(v), c_i32(c)),
+                    );
+                    b.store_at(p.clone(), reg(id), picked, Ty::I32);
+                }
+                Op::DivergentContinue { modk } => {
+                    let p = p.clone();
+                    b.for_(c_i32(0), rem(reg(t), c_i32(modk)), c_i32(1), |bb, j| {
+                        bb.if_(eq(rem(reg(j), c_i32(2)), c_i32(1)), |bb2| bb2.cont());
+                        let v = bb.assign(at(p.clone(), reg(id), Ty::I32));
+                        bb.store_at(p.clone(), reg(id), add(reg(v), c_i32(1)), Ty::I32);
+                    });
+                }
+                Op::SharedRoundTrip { c } => {
+                    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+                    b.store_at(s.clone(), tid_x(), add(reg(v), c_i32(c)), Ty::I32);
+                    b.sync_threads();
+                    let w = b.assign(at(s.clone(), tid_x(), Ty::I32));
+                    let side = b.assign(at(q.clone(), reg(id), Ty::I32));
+                    b.store_at(p.clone(), reg(id), add(reg(w), reg(side)), Ty::I32);
+                }
+                Op::AtomicAdd { c } => {
+                    b.atomic_rmw_void(
+                        AtomicOp::Add,
+                        index(p.clone(), reg(id), Ty::I32),
+                        c_i32(c),
+                        Ty::I32,
+                    );
+                }
+                Op::Exchange { c } => {
+                    b.atomic_rmw_void(
+                        AtomicOp::Exch,
+                        index(p.clone(), reg(id), Ty::I32),
+                        c_i32(c),
+                        Ty::I32,
+                    );
+                }
+                Op::Barrier => b.sync_threads(),
+                Op::EarlyReturn { cutoff } => {
+                    b.if_(ge(reg(t), c_i32(cutoff)), |bb| bb.ret());
+                }
+            }
+        }
+        b.build()
+    }
+
+    for_random_cases(24, 0x0C0A25E1, |rng| {
+        let bs = rng.range_usize(1, 65) as u32;
+        let grid = rng.range_usize(1, 4) as u32;
+        let nops = rng.range_usize(1, 6);
+        let ops: Vec<Op> = (0..nops)
+            .map(|_| match rng.below(8) {
+                0 => Op::LaneLoopBreak {
+                    trips: rng.range_i64(1, 5) as i32,
+                    c: rng.range_i64(-3, 4) as i32,
+                },
+                1 => Op::SelectMix { c: rng.range_i64(1, 6) as i32 },
+                2 => Op::DivergentContinue { modk: rng.range_i64(2, 5) as i32 },
+                3 => Op::SharedRoundTrip { c: rng.range_i64(-4, 5) as i32 },
+                4 => Op::AtomicAdd { c: rng.range_i64(-5, 6) as i32 },
+                5 => Op::Exchange { c: rng.range_i64(-9, 10) as i32 },
+                6 => Op::Barrier,
+                _ => Op::EarlyReturn { cutoff: rng.range_i64(0, 65) as i32 },
+            })
+            .collect();
+        let all_eligible = !ops.iter().any(|o| matches!(o, Op::Exchange { .. }));
+        let k = build(&ops);
+        let n = (grid * bs) as usize;
+        let init = rng.vec_i32(n, -30, 30);
+        let ro = rng.vec_i32(n.max(1), -10, 10);
+        let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: None };
+        let base = run_blocks(&k, base_cfg, true, grid, bs, &init, &ro);
+        for opt in OptLevel::ALL {
+            let cfg = CompileCfg { opt, fuse: None };
+            let r = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
+            assert_eq!(base.mem, r.mem, "memory diverged at {opt:?}");
+            assert_eq!(base.stats, r.stats, "ExecStats diverged at {opt:?}");
+            assert_eq!(base.trace, r.trace, "TraceRec stream diverged at {opt:?}");
+            if opt == OptLevel::O3 && all_eligible {
+                assert_eq!(
+                    r.frame_pushes, 0,
+                    "every region is coarse-eligible yet -O3 pushed divergence frames"
+                );
+            }
+        }
+    });
+}
+
+/// ISSUE acceptance: every barrier-free bundled benchmark (no
+/// `__syncthreads`, warp collective, atomic or NV intrinsic in any
+/// kernel) must lower to the coarse nest at `-O3` — mask machinery
+/// fully gone — and every bundled benchmark, coarse or not, must stay
+/// observably identical to the `-O0` interpreter. Fully-coarse
+/// benchmarks must execute with zero divergence-frame pushes.
+#[test]
+fn barrier_free_benchmarks_coarsen_with_zero_frame_pushes() {
+    use cupbop::compiler::lower::Inst;
+    use cupbop::ir::Feature;
+
+    let blockers = [
+        Feature::SyncThreads,
+        Feature::WarpShuffle,
+        Feature::WarpVote,
+        Feature::AtomicRmw,
+        Feature::AtomicCas,
+        Feature::NvIntrinsic,
+    ];
+    let mut fully_coarse: Vec<&'static str> = Vec::new();
+    for b in spec::all_benchmarks() {
+        let Some(build) = b.build else { continue };
+        let prog = build(spec::Scale::Tiny);
+        let kernels: Vec<Kernel> = prog.kernels.clone();
+        let built = spec::build_prepared_opt(b.name, prog, OptLevel::O3);
+        let baseline = run_reference_traced(
+            &spec::build_prepared_opt(b.name, build(spec::Scale::Tiny), OptLevel::O0),
+            ExecMode::Interpret,
+        );
+        let mut all_coarse = true;
+        for (k, ck) in kernels.iter().zip(&built.compiled) {
+            let coarse = ck.lowered.insts.iter().any(|i| matches!(i, Inst::CoarseBegin { .. }));
+            let masked = ck.lowered.insts.iter().any(|i| matches!(i, Inst::RegionBegin { .. }));
+            let feats = detect_features(k);
+            if blockers.iter().all(|f| !feats.contains(f)) {
+                assert!(
+                    coarse && !masked,
+                    "{}/{}: barrier-free kernel kept mask machinery at -O3",
+                    b.name,
+                    k.name
+                );
+            }
+            all_coarse &= coarse && !masked;
+        }
+        let run = run_reference_traced(&built, ExecMode::Bytecode);
+        assert_eq!(baseline.arrays, run.arrays, "{}: arrays diverged at -O3", b.name);
+        assert_eq!(baseline.stats, run.stats, "{}: ExecStats diverged at -O3", b.name);
+        assert_eq!(baseline.trace, run.trace, "{}: TraceRec stream diverged at -O3", b.name);
+        if all_coarse {
+            assert_eq!(
+                run.frame_pushes, 0,
+                "{}: fully-coarse benchmark pushed divergence frames",
+                b.name
+            );
+            fully_coarse.push(b.name);
+        }
+    }
+    assert!(
+        fully_coarse.len() >= 8,
+        "only {} benchmarks fully coarsened at -O3: {fully_coarse:?}",
+        fully_coarse.len()
+    );
+    // the integer-atomic path coarsens too — hist is the canonical case
+    assert!(fully_coarse.contains(&"hist"), "hist (int atomics) should coarsen: {fully_coarse:?}");
 }
 
 /// `cupbop run --opt` surface: the backends accept every opt level on
