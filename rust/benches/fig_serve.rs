@@ -1,0 +1,269 @@
+//! fig_serve — serving-runtime throughput and latency: many client
+//! sessions bursting mixed benchmarks at mixed opt levels into one
+//! resident [`Server`], plus the Fig 11 storm shape served with launch
+//! coalescing off vs on.
+//!
+//! Reported figures:
+//!
+//! * **throughput** — completed requests per second for the burst
+//!   (submit everything paused, open the gate, time to drain);
+//! * **latency p50/p95/p99** — per-request submit→completion time,
+//!   the serving-quality distribution the ISSUE's contract names;
+//! * **cache hit rate** — the compiled-kernel cache in play (the mixed
+//!   opt levels guarantee both cold compiles and hits);
+//! * **coalescing** — launches/second draining barrier-free storms of
+//!   tiny single-block launches, uncoalesced vs coalesced, and the
+//!   speedup between them. Coalescing must win: it replaces per-launch
+//!   queue/condvar traffic with one fused dispatch per batch.
+//!
+//! Trajectory mode (CI): `--json PATH` writes the figures as a
+//! `BENCH_fig_serve.json` artifact; `--min-coalesce-speedup X` fails
+//! the run if coalescing stops beating uncoalesced dispatch by at
+//! least `X`; `--baseline PATH` fails if throughput or the coalesce
+//! speedup regresses below 90% of a previously committed artifact (a
+//! `null` value in the baseline — the placeholder — skips that
+//! check). `--sessions`, `--per-session` and `--samples` resize the
+//! workload.
+
+use cupbop::benchsuite::spec::Scale;
+use cupbop::compiler::{CompileCfg, OptLevel};
+use cupbop::serve::storm::storm_program;
+use cupbop::serve::{Request, ServeCfg, Server, Ticket};
+use std::process::ExitCode;
+use std::time::Instant;
+
+/// Fast-at-Tiny mix spanning both suites.
+const BENCHES: &[&str] = &["fir", "hist", "kmeans", "bs"];
+const STORM_LAUNCHES: usize = 400;
+const STORM_REQUESTS: usize = 4;
+
+fn arg_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+/// Pull a named figure out of a previously committed artifact with a
+/// plain string scan (no JSON crates in this offline environment). A
+/// missing file, a missing key or a `null` value all yield `None`.
+fn read_baseline(path: &str, key: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let pat = format!("\"{key}\":");
+    let i = text.find(&pat)? + pat.len();
+    let rest = text[i..].trim_start();
+    let end = rest.find([',', '}', '\n']).unwrap_or(rest.len());
+    rest[..end].trim().parse::<f64>().ok()
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn percentile(sorted: &[f64], k: usize) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    sorted[(sorted.len() - 1) * k / 100]
+}
+
+struct Round {
+    rps: f64,
+    /// ascending per-request submit→completion latencies, ms
+    lat_ms: Vec<f64>,
+    hit_rate: f64,
+}
+
+/// One burst: `sessions` clients × `per_session` requests submitted
+/// against a paused server, then timed gate-open → drain.
+fn serve_round(sessions: usize, per_session: usize) -> Round {
+    let srv = Server::new(ServeCfg {
+        executors: 4,
+        max_in_flight: 2,
+        start_paused: true,
+        ..ServeCfg::default()
+    });
+    let mut tickets: Vec<Ticket> = Vec::new();
+    for si in 0..sessions {
+        let s = srv.session();
+        for ri in 0..per_session {
+            let name = BENCHES[(si + ri) % BENCHES.len()];
+            let opt = OptLevel::ALL[(si * per_session + ri) % OptLevel::ALL.len()];
+            tickets.push(srv.submit(s, Request::bench(name, Scale::Tiny, CompileCfg::opt(opt))));
+        }
+    }
+    let t = Instant::now();
+    srv.resume();
+    srv.wait_all();
+    let elapsed = t.elapsed();
+    let mut lat_ms: Vec<f64> = tickets
+        .iter()
+        .map(|tk| {
+            let r = srv.wait(*tk);
+            r.check.as_ref().unwrap_or_else(|e| panic!("{}: {e}", r.name));
+            r.latency().as_secs_f64() * 1e3
+        })
+        .collect();
+    lat_ms.sort_by(f64::total_cmp);
+    Round {
+        rps: tickets.len() as f64 / elapsed.as_secs_f64().max(1e-12),
+        lat_ms,
+        hit_rate: srv.cache_stats().hit_rate(),
+    }
+}
+
+/// p50 launches-per-second serving barrier-free storms, with the
+/// compiled-kernel cache pre-warmed so the figure isolates dispatch.
+fn storm_lps(coalesce: bool, samples: usize) -> f64 {
+    let mut lps: Vec<f64> = (0..samples.max(1))
+        .map(|_| {
+            let srv = Server::new(ServeCfg { executors: 1, coalesce, ..ServeCfg::default() });
+            let s = srv.session();
+            let warm = srv.submit(
+                s,
+                Request::prepared("storm", storm_program(8, 8), CompileCfg::default()),
+            );
+            srv.wait(warm).check.as_ref().expect("storm warmup green");
+            let t = Instant::now();
+            let tickets: Vec<Ticket> = (0..STORM_REQUESTS)
+                .map(|_| {
+                    srv.submit(
+                        s,
+                        Request::prepared(
+                            "storm",
+                            storm_program(STORM_LAUNCHES, 8),
+                            CompileCfg::default(),
+                        ),
+                    )
+                })
+                .collect();
+            srv.wait_all();
+            let elapsed = t.elapsed();
+            for tk in &tickets {
+                assert!(srv.wait(*tk).ok(), "storm serves green");
+            }
+            let (absorbed, _) = srv.coalesce_counters();
+            assert_eq!(coalesce, absorbed > 0, "coalescing engaged iff enabled");
+            (STORM_REQUESTS * STORM_LAUNCHES) as f64 / elapsed.as_secs_f64().max(1e-12)
+        })
+        .collect();
+    lps.sort_by(f64::total_cmp);
+    lps[lps.len() / 2]
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    path: &str,
+    sessions: usize,
+    per_session: usize,
+    round: &Round,
+    p50: f64,
+    p95: f64,
+    p99: f64,
+    un_lps: f64,
+    co_lps: f64,
+    speedup: f64,
+) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"fig_serve\",\n");
+    s.push_str(&format!("  \"sessions\": {sessions},\n"));
+    s.push_str(&format!("  \"requests\": {},\n", sessions * per_session));
+    s.push_str(&format!("  \"throughput_rps\": {},\n", json_num(round.rps)));
+    s.push_str(&format!("  \"p50_ms\": {},\n", json_num(p50)));
+    s.push_str(&format!("  \"p95_ms\": {},\n", json_num(p95)));
+    s.push_str(&format!("  \"p99_ms\": {},\n", json_num(p99)));
+    s.push_str(&format!("  \"cache_hit_rate\": {},\n", json_num(round.hit_rate)));
+    s.push_str(&format!("  \"uncoalesced_lps\": {},\n", json_num(un_lps)));
+    s.push_str(&format!("  \"coalesced_lps\": {},\n", json_num(co_lps)));
+    s.push_str(&format!("  \"coalesce_speedup\": {}\n", json_num(speedup)));
+    s.push_str("}\n");
+    if let Err(e) = std::fs::write(path, s) {
+        eprintln!("fig_serve: cannot write {path}: {e}");
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sessions: usize =
+        arg_value(&args, "--sessions").and_then(|v| v.parse().ok()).unwrap_or(40).max(1);
+    let per_session: usize =
+        arg_value(&args, "--per-session").and_then(|v| v.parse().ok()).unwrap_or(3).max(1);
+    let samples: usize =
+        arg_value(&args, "--samples").and_then(|v| v.parse().ok()).unwrap_or(3).max(1);
+    let json_path = arg_value(&args, "--json");
+    let min_speedup =
+        arg_value(&args, "--min-coalesce-speedup").and_then(|v| v.parse::<f64>().ok());
+    let baseline_path = arg_value(&args, "--baseline");
+    let base_rps = baseline_path.as_ref().and_then(|p| read_baseline(p, "throughput_rps"));
+    let base_speedup =
+        baseline_path.as_ref().and_then(|p| read_baseline(p, "coalesce_speedup"));
+
+    println!(
+        "fig_serve — serving runtime: {sessions} sessions x {per_session} requests \
+         (mixed benchmarks x opt levels, Scale::Tiny)"
+    );
+    println!();
+
+    // Median-throughput round, its latency distribution as the figure.
+    let mut rounds: Vec<Round> = (0..samples).map(|_| serve_round(sessions, per_session)).collect();
+    rounds.sort_by(|a, b| a.rps.total_cmp(&b.rps));
+    let round = &rounds[rounds.len() / 2];
+    let p50 = percentile(&round.lat_ms, 50);
+    let p95 = percentile(&round.lat_ms, 95);
+    let p99 = percentile(&round.lat_ms, 99);
+    println!("throughput: {:.1} req/s over {} requests", round.rps, sessions * per_session);
+    println!("latency: p50 {p50:.3} ms, p95 {p95:.3} ms, p99 {p99:.3} ms");
+    println!("compiled-kernel cache hit rate: {:.1}%", round.hit_rate * 100.0);
+
+    let un_lps = storm_lps(false, samples);
+    let co_lps = storm_lps(true, samples);
+    let speedup = co_lps / un_lps.max(1e-12);
+    println!();
+    println!(
+        "storm dispatch ({} x {} single-block launches, barrier-free):",
+        STORM_REQUESTS, STORM_LAUNCHES
+    );
+    println!("  uncoalesced: {un_lps:.0} launches/s");
+    println!("  coalesced:   {co_lps:.0} launches/s  ({speedup:.2}x)");
+
+    if let Some(path) = &json_path {
+        write_json(path, sessions, per_session, round, p50, p95, p99, un_lps, co_lps, speedup);
+        println!("wrote {path}");
+    }
+    let mut ok = true;
+    if let Some(min) = min_speedup {
+        if speedup < min {
+            eprintln!("FAIL: coalesce speedup {speedup:.2}x below the floor {min:.2}x");
+            ok = false;
+        }
+    }
+    // 10% tolerance absorbs shared-runner timing noise while still
+    // catching real regressions against the committed artifact.
+    if let Some(base) = base_rps {
+        if round.rps < base * 0.9 {
+            eprintln!(
+                "FAIL: throughput {:.1} req/s regressed below 90% of the committed \
+                 baseline {base:.1} req/s",
+                round.rps
+            );
+            ok = false;
+        }
+    }
+    if let Some(base) = base_speedup {
+        if speedup < base * 0.9 {
+            eprintln!(
+                "FAIL: coalesce speedup {speedup:.2}x regressed below 90% of the committed \
+                 baseline {base:.2}x"
+            );
+            ok = false;
+        }
+    }
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

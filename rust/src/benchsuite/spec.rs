@@ -179,6 +179,26 @@ pub fn build_prepared_cfg(name: &str, prog: BenchProgram, cfg: CompileCfg) -> Bu
             Arc::new(compile_kernel_cfg(k, cfg).unwrap_or_else(|e| panic!("{}: {e}", k.name)))
         })
         .collect();
+    assemble_prepared(name, prog, compiled)
+}
+
+/// Assemble a [`BuiltProgram`] from kernels that are *already
+/// compiled* — the serving runtime's cache-hit path: a repeat
+/// submission reuses the cached [`CompiledKernel`]s and skips
+/// lex→sema→passes→lower entirely, paying only for the (cheap) host
+/// barrier pass and variant wiring, which depend on the submission's
+/// host program rather than the kernels alone. `compiled[i]` must be a
+/// translation of `prog.kernels[i]`.
+pub fn assemble_prepared(
+    name: &str,
+    prog: BenchProgram,
+    compiled: Vec<Arc<CompiledKernel>>,
+) -> BuiltProgram {
+    assert_eq!(
+        compiled.len(),
+        prog.kernels.len(),
+        "assemble_prepared: compiled kernels must line up with the program's kernels"
+    );
     let rw: Vec<KernelRw> = compiled
         .iter()
         .map(|ck| KernelRw { reads: ck.reads.clone(), writes: ck.writes.clone() })
@@ -207,8 +227,9 @@ pub fn build_prepared_cfg(name: &str, prog: BenchProgram, cfg: CompileCfg) -> Bu
     }
 }
 
-/// Which backend to run a built program on.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which backend to run a built program on. `Hash` because the
+/// serving runtime's compiled-kernel cache keys entries per backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Backend {
     CuPBoP,
     HipCpu,

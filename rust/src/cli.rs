@@ -1,0 +1,249 @@
+//! Shared CLI flag parsing.
+//!
+//! Every `cupbop` subcommand (`run`, `suite`, `compile`, `dump`,
+//! `serve`) accepts the same execution/compilation flags; before this
+//! module each command re-implemented the parsing in `main.rs` with
+//! slightly different error behaviour (some printed a warning and fell
+//! back to a default, some silently swallowed the bad value). The
+//! helpers here are the single source of truth: one spelling table per
+//! flag, one structured [`CliError`] whose `Display` text is golden-
+//! tested below, and hard errors instead of silent fallbacks — an
+//! unknown `--opt 9` now fails the command instead of quietly running
+//! at `-O2`.
+
+use crate::benchsuite::spec::{Backend, Scale};
+use crate::compiler::{CompileCfg, OptLevel};
+use crate::frameworks::{BackendCfg, ExecMode, PolicyMode, SchedKind};
+
+/// A flag whose value did not parse. `Display` renders the exact
+/// message the CLI prints (and the golden tests pin down).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError {
+    pub flag: &'static str,
+    pub got: String,
+    pub expected: &'static str,
+}
+
+impl CliError {
+    fn new(flag: &'static str, got: &str, expected: &'static str) -> Self {
+        CliError { flag, got: got.to_string(), expected }
+    }
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown {} `{}` (expected {})", self.flag, self.got, self.expected)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// The value following `name`, if present.
+pub fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+/// Is the bare flag `name` present?
+pub fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+/// `--scale tiny|small|paper` (default small).
+pub fn parse_scale(args: &[String]) -> Result<Scale, CliError> {
+    match flag_value(args, "--scale") {
+        None | Some("small") => Ok(Scale::Small),
+        Some("tiny") => Ok(Scale::Tiny),
+        Some("paper") => Ok(Scale::Paper),
+        Some(other) => Err(CliError::new("--scale", other, "tiny|small|paper")),
+    }
+}
+
+/// `--opt 0|1|2|3` (also `O2`/`-O2` spellings; default `-O2`).
+pub fn parse_opt(args: &[String]) -> Result<OptLevel, CliError> {
+    match flag_value(args, "--opt") {
+        None => Ok(OptLevel::default()),
+        Some(s) => OptLevel::parse(s).ok_or_else(|| CliError::new("--opt", s, "0|1|2|3")),
+    }
+}
+
+/// `--fuse on|off` (default: follow the opt level).
+pub fn parse_fuse(args: &[String]) -> Result<Option<bool>, CliError> {
+    match flag_value(args, "--fuse") {
+        None => Ok(None),
+        Some("on") | Some("1") | Some("true") => Ok(Some(true)),
+        Some("off") | Some("0") | Some("false") => Ok(Some(false)),
+        Some(other) => Err(CliError::new("--fuse", other, "on|off")),
+    }
+}
+
+/// `--opt` + `--fuse` combined into the compiler's knob struct.
+pub fn parse_compile_cfg(args: &[String]) -> Result<CompileCfg, CliError> {
+    Ok(CompileCfg { opt: parse_opt(args)?, fuse: parse_fuse(args)? })
+}
+
+/// `--backend cupbop|hipcpu|dpcpp|reference` (default cupbop).
+pub fn parse_backend(args: &[String]) -> Result<Backend, CliError> {
+    match flag_value(args, "--backend") {
+        None | Some("cupbop") => Ok(Backend::CuPBoP),
+        Some("hipcpu") => Ok(Backend::HipCpu),
+        Some("dpcpp") => Ok(Backend::Dpcpp),
+        Some("reference") => Ok(Backend::Reference),
+        Some(other) => Err(CliError::new("--backend", other, "cupbop|hipcpu|dpcpp|reference")),
+    }
+}
+
+/// `--exec interpret|bytecode|native` (default bytecode). The
+/// deprecated bare `--interpret` still maps to `interpret` with a
+/// warning on stderr.
+pub fn parse_exec(args: &[String]) -> Result<ExecMode, CliError> {
+    match flag_value(args, "--exec") {
+        Some("interpret") | Some("interp") => Ok(ExecMode::Interpret),
+        Some("native") => Ok(ExecMode::Native),
+        Some("bytecode") => Ok(ExecMode::Bytecode),
+        Some(other) => Err(CliError::new("--exec", other, "interpret|bytecode|native")),
+        None => {
+            if has_flag(args, "--interpret") {
+                eprintln!("warning: --interpret is deprecated; use --exec interpret");
+                Ok(ExecMode::Interpret)
+            } else {
+                Ok(ExecMode::Bytecode)
+            }
+        }
+    }
+}
+
+/// `--sched steal|mutex` (default steal).
+pub fn parse_sched(args: &[String]) -> Result<SchedKind, CliError> {
+    match flag_value(args, "--sched") {
+        None | Some("steal") => Ok(SchedKind::WorkStealing),
+        Some("mutex") => Ok(SchedKind::MutexQueue),
+        Some(other) => Err(CliError::new("--sched", other, "steal|mutex")),
+    }
+}
+
+/// `--grain avg|auto|<blocks per fetch>` (default auto).
+pub fn parse_grain(args: &[String]) -> Result<PolicyMode, CliError> {
+    match flag_value(args, "--grain") {
+        None | Some("auto") => Ok(PolicyMode::Auto),
+        Some("avg") => Ok(PolicyMode::Average),
+        Some(s) => match s.parse::<u64>() {
+            Ok(n) if n >= 1 => Ok(PolicyMode::Fixed(n)),
+            _ => Err(CliError::new("--grain", s, "avg|auto|<blocks per fetch>")),
+        },
+    }
+}
+
+/// A `--flag N` positive integer (e.g. `--pool`, `--streams`).
+pub fn parse_count(args: &[String], flag: &'static str) -> Result<Option<usize>, CliError> {
+    match flag_value(args, flag) {
+        None => Ok(None),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Some(n)),
+            _ => Err(CliError::new(flag, s, "a positive integer")),
+        },
+    }
+}
+
+/// The full backend configuration shared by `run`/`suite`/`serve`:
+/// `--pool`, `--grain`, `--exec` (+ deprecated `--interpret`),
+/// `--sched`, `--streams`.
+pub fn parse_backend_cfg(args: &[String]) -> Result<BackendCfg, CliError> {
+    let mut cfg = BackendCfg::default();
+    if let Some(p) = parse_count(args, "--pool")? {
+        cfg.pool_size = p;
+    }
+    cfg.policy = parse_grain(args)?;
+    cfg.exec = parse_exec(args)?;
+    cfg.sched = parse_sched(args)?;
+    if let Some(n) = parse_count(args, "--streams")? {
+        cfg.streams = n;
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_when_absent() {
+        let args = a(&[]);
+        assert_eq!(parse_scale(&args), Ok(Scale::Small));
+        assert_eq!(parse_opt(&args), Ok(OptLevel::O2));
+        assert_eq!(parse_fuse(&args), Ok(None));
+        assert_eq!(parse_backend(&args), Ok(Backend::CuPBoP));
+        assert_eq!(parse_exec(&args), Ok(ExecMode::Bytecode));
+        assert_eq!(parse_sched(&args), Ok(SchedKind::WorkStealing));
+        assert_eq!(parse_grain(&args), Ok(PolicyMode::Auto));
+        let cfg = parse_backend_cfg(&args).unwrap();
+        assert_eq!(cfg.streams, 1);
+    }
+
+    #[test]
+    fn valid_spellings() {
+        assert_eq!(parse_scale(&a(&["--scale", "paper"])), Ok(Scale::Paper));
+        assert_eq!(parse_opt(&a(&["--opt", "3"])), Ok(OptLevel::O3));
+        assert_eq!(parse_opt(&a(&["--opt", "-O1"])), Ok(OptLevel::O1));
+        assert_eq!(parse_fuse(&a(&["--fuse", "off"])), Ok(Some(false)));
+        assert_eq!(parse_fuse(&a(&["--fuse", "1"])), Ok(Some(true)));
+        assert_eq!(parse_backend(&a(&["--backend", "dpcpp"])), Ok(Backend::Dpcpp));
+        assert_eq!(parse_exec(&a(&["--exec", "interp"])), Ok(ExecMode::Interpret));
+        assert_eq!(parse_sched(&a(&["--sched", "mutex"])), Ok(SchedKind::MutexQueue));
+        assert_eq!(parse_grain(&a(&["--grain", "16"])), Ok(PolicyMode::Fixed(16)));
+        assert_eq!(parse_count(&a(&["--pool", "8"]), "--pool"), Ok(Some(8)));
+        let cfg = parse_backend_cfg(&a(&["--pool", "2", "--streams", "4"])).unwrap();
+        assert_eq!((cfg.pool_size, cfg.streams), (2, 4));
+    }
+
+    /// Golden error messages: the exact strings the CLI prints. Keep in
+    /// sync with README's flag table.
+    #[test]
+    fn golden_error_messages() {
+        let msg = |e: CliError| e.to_string();
+        assert_eq!(
+            parse_scale(&a(&["--scale", "huge"])).map_err(msg),
+            Err("unknown --scale `huge` (expected tiny|small|paper)".to_string())
+        );
+        assert_eq!(
+            parse_opt(&a(&["--opt", "9"])).map_err(msg),
+            Err("unknown --opt `9` (expected 0|1|2|3)".to_string())
+        );
+        assert_eq!(
+            parse_fuse(&a(&["--fuse", "maybe"])).map_err(msg),
+            Err("unknown --fuse `maybe` (expected on|off)".to_string())
+        );
+        assert_eq!(
+            parse_backend(&a(&["--backend", "cuda"])).map_err(msg),
+            Err("unknown --backend `cuda` (expected cupbop|hipcpu|dpcpp|reference)".to_string())
+        );
+        assert_eq!(
+            parse_exec(&a(&["--exec", "jit"])).map_err(msg),
+            Err("unknown --exec `jit` (expected interpret|bytecode|native)".to_string())
+        );
+        assert_eq!(
+            parse_sched(&a(&["--sched", "fifo"])).map_err(msg),
+            Err("unknown --sched `fifo` (expected steal|mutex)".to_string())
+        );
+        assert_eq!(
+            parse_grain(&a(&["--grain", "zero"])).map_err(msg),
+            Err("unknown --grain `zero` (expected avg|auto|<blocks per fetch>)".to_string())
+        );
+        assert_eq!(
+            parse_count(&a(&["--pool", "0"]), "--pool").map_err(msg),
+            Err("unknown --pool `0` (expected a positive integer)".to_string())
+        );
+        assert_eq!(
+            parse_count(&a(&["--streams", "-1"]), "--streams").map_err(msg),
+            Err("unknown --streams `-1` (expected a positive integer)".to_string())
+        );
+    }
+
+    #[test]
+    fn grain_zero_rejected() {
+        assert!(parse_grain(&a(&["--grain", "0"])).is_err());
+    }
+}

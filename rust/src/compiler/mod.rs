@@ -115,8 +115,10 @@ impl std::fmt::Display for CompileError {
 
 impl std::error::Error for CompileError {}
 
-/// Compilation knobs beyond the opt level.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// Compilation knobs beyond the opt level. `Hash`/`Eq` because the
+/// serving runtime's compiled-kernel cache (`crate::serve`) keys
+/// translations by `(source hash, CompileCfg, backend, ExecMode)`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
 pub struct CompileCfg {
     pub opt: OptLevel,
     /// Superinstruction fusion + register compaction (`passes::fuse`).
@@ -134,6 +136,27 @@ impl CompileCfg {
     pub fn fuse_enabled(&self) -> bool {
         self.fuse.unwrap_or(self.opt >= OptLevel::O2)
     }
+}
+
+/// Stable FNV-1a fingerprint of a kernel's source identity: its
+/// pretty-printed CIR listing (a lossless rendering of the IR the
+/// frontend produced) prefixed by the kernel name. Two submissions
+/// whose kernels print identically compile identically under the same
+/// [`CompileCfg`], which is exactly the property the serving runtime's
+/// compiled-kernel cache (`crate::serve::KernelCache`) needs from its
+/// source-hash key component.
+pub fn kernel_fingerprint(kernel: &Kernel) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for b in bytes {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+    };
+    eat(kernel.name.as_bytes());
+    eat(b"\0");
+    eat(crate::ir::pretty::kernel_to_string(kernel).as_bytes());
+    h
 }
 
 /// Run the full kernel compilation pipeline at the default opt level

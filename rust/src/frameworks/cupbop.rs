@@ -16,7 +16,7 @@
 //! round-robined over pre-created streams (safe for exactly the same
 //! reason: every cross-launch dependence already has a barrier).
 
-use super::{BackendCfg, ExecMode, KernelVariants, SchedKind};
+use super::{BackendCfg, ExecMode, KernelVariants, PolicyMode, SchedKind};
 use crate::compiler::{pack, ArgValue};
 use crate::exec::{ExecStats, LaunchInfo};
 use crate::host::{ResolvedLaunch, RuntimeApi};
@@ -123,27 +123,48 @@ impl CupbopRuntime {
     /// Resolve a launch into the queue/scheduler task structure
     /// (Listing 6), applying the grain policy (§IV-A).
     fn make_task(&self, l: &ResolvedLaunch) -> KernelTask {
-        let kv = &self.kernels[l.kernel];
-        let packed = Self::pack_args(kv, &l.args);
-        let launch =
-            Arc::new(LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed });
-        let total = launch.total_blocks();
-        // interpreter and bytecode VM both flush ExecStats; native
-        // closures do not (they model the compiled binary)
-        let stats = matches!(self.cfg.exec, ExecMode::Interpret | ExecMode::Bytecode)
-            .then(|| self.stats.clone());
-        let bpf = self
-            .cfg
-            .policy
-            .to_grain(kv.est_insts_per_block)
-            .block_per_fetch(total, self.cfg.pool_size as u64);
-        KernelTask {
-            start_routine: kv.block_fn(self.cfg.exec, stats),
-            launch,
-            total_blocks: total,
-            curr_block_id: 0,
-            block_per_fetch: bpf,
-        }
+        build_task(
+            &self.kernels,
+            l,
+            self.cfg.exec,
+            self.cfg.policy,
+            self.cfg.pool_size,
+            Some(self.stats.clone()),
+        )
+    }
+}
+
+/// Resolve a launch into the queue/scheduler task structure (Listing
+/// 6), applying the grain policy (§IV-A). Factored out of
+/// [`CupbopRuntime`] so the serving runtime's per-ticket adapters
+/// (`crate::serve`), which multiplex many client sessions onto one
+/// shared [`StealScheduler`] without owning a runtime each, build
+/// byte-identical tasks.
+pub fn build_task(
+    kernels: &[KernelVariants],
+    l: &ResolvedLaunch,
+    exec: ExecMode,
+    policy: PolicyMode,
+    pool_size: usize,
+    stats: Option<Arc<ExecStats>>,
+) -> KernelTask {
+    let kv = &kernels[l.kernel];
+    let packed = CupbopRuntime::pack_args(kv, &l.args);
+    let launch =
+        Arc::new(LaunchInfo { grid: l.grid, block: l.block, dyn_shmem: l.dyn_shmem, packed });
+    let total = launch.total_blocks();
+    // interpreter and bytecode VM both flush ExecStats; native
+    // closures do not (they model the compiled binary)
+    let stats = matches!(exec, ExecMode::Interpret | ExecMode::Bytecode)
+        .then_some(stats)
+        .flatten();
+    let bpf = policy.to_grain(kv.est_insts_per_block).block_per_fetch(total, pool_size as u64);
+    KernelTask {
+        start_routine: kv.block_fn(exec, stats),
+        launch,
+        total_blocks: total,
+        curr_block_id: 0,
+        block_per_fetch: bpf,
     }
 }
 

@@ -22,7 +22,7 @@ pub mod dpcpp;
 pub mod hipcpu;
 pub mod reference;
 
-pub use cupbop::CupbopRuntime;
+pub use cupbop::{build_task, CupbopRuntime};
 pub use dpcpp::DpcppRuntime;
 pub use hipcpu::HipCpuRuntime;
 pub use reference::ReferenceRuntime;
@@ -31,8 +31,9 @@ use crate::compiler::CompiledKernel;
 use crate::exec::{BlockFn, BytecodeBlockFn, CirBlockFn, ExecStats};
 use std::sync::Arc;
 
-/// How a framework executes block functions.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// How a framework executes block functions. `Hash` because the
+/// serving runtime's compiled-kernel cache keys entries per engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ExecMode {
     /// MPMD-CIR tree interpreter — compiler ground truth, slowest.
     Interpret,

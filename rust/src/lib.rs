@@ -27,6 +27,7 @@
 pub mod benchkit;
 pub mod benchsuite;
 pub mod cachesim;
+pub mod cli;
 pub mod compiler;
 pub mod exec;
 pub mod frameworks;
@@ -36,4 +37,5 @@ pub mod ir;
 pub mod report;
 pub mod roofline;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;

@@ -1,7 +1,7 @@
 //! `cupbop` — CLI for the CuPBoP-RS reproduction.
 //!
 //! Subcommands (hand-rolled parsing — no CLI crates in this offline
-//! environment):
+//! environment; the shared flag grammar lives in `cupbop::cli`):
 //!
 //! ```text
 //! cupbop list                               list benchmarks + features
@@ -13,21 +13,38 @@
 //! cupbop compile <file.cu> [...]           parse .cu → CIR listing +
 //!                                          features + Table II verdicts
 //! cupbop suite --suite rodinia|heteromark|crystal [..run flags]
+//! cupbop serve --script FILE.serve          persistent multi-session
+//!                                          serving runtime
 //! cupbop report table1|table2|table6|fig9|fig10   paper-style reports
 //! cupbop dump --bench <name>                print SPMD + MPMD CIR
 //! cupbop device --bench <name>              run the PJRT device path
 //! ```
 
-use cupbop::benchsuite::spec::{self, Backend, Scale};
+use cupbop::benchsuite::spec::{self, Scale};
+use cupbop::cli;
 use cupbop::compiler::{
     compile_kernel_cfg, detect_features, explain_unsupported, judge, lower, CompileCfg, Framework,
-    OptLevel, PassManager,
+    PassManager,
 };
-use cupbop::frameworks::{BackendCfg, ExecMode, PolicyMode, SchedKind};
 use cupbop::frontend::{self, harness};
 use cupbop::ir::pretty;
 use cupbop::report;
+use cupbop::serve::{self, ServeBackend, ServeCfg};
 use std::process::ExitCode;
+
+/// Unwrap a `cli::*` parse result or fail the command with the
+/// parser's golden error message.
+macro_rules! parse_or_fail {
+    ($e:expr) => {
+        match $e {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    };
+}
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -37,6 +54,7 @@ fn main() -> ExitCode {
         "run" => cmd_run(&args[1..]),
         "compile" => cmd_compile(&args[1..]),
         "suite" => cmd_suite(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
         "report" => cmd_report(&args[1..]),
         "dump" => cmd_dump(&args[1..]),
         "device" => cmd_device(&args[1..]),
@@ -56,7 +74,7 @@ fn print_help() {
     println!(
         "cupbop — CUDA for Parallelized and Broad-range Processors (reproduction)\n\
          \n\
-         USAGE: cupbop <list|run|compile|suite|report|dump|device> [flags]\n\
+         USAGE: cupbop <list|run|compile|suite|serve|report|dump|device> [flags]\n\
          \n\
          compile:\n\
            cupbop compile <file.cu> [more.cu ...]\n\
@@ -74,11 +92,11 @@ fn print_help() {
            --opt N           optimization level 0|1|2|3 (default 2:\n\
                              fold+DCE+LICM+uniformity scalarization;\n\
                              3 adds sync-free block coarsening;\n\
-                             also accepted by run/suite/dump)\n\
+                             also accepted by run/suite/dump/serve)\n\
            --fuse F          on|off — superinstruction fusion +\n\
                              register-file compaction (default: on at\n\
                              -O2, off below; also accepted by\n\
-                             run/suite/dump)\n\
+                             run/suite/dump/serve)\n\
          \n\
          run flags:\n\
            --bench NAME      benchmark to run (see `cupbop list`)\n\
@@ -102,12 +120,24 @@ fn print_help() {
                              (default bytecode: the lane-vectorized VM;\n\
                              native falls back to bytecode per kernel)\n\
            --interpret       deprecated alias for --exec interpret\n\
+         \n\
+         serve:\n\
+           cupbop serve --script FILE.serve\n\
+                             run a request script against the resident\n\
+                             multi-session serving runtime (compiled-\n\
+                             kernel cache + launch coalescing); see\n\
+                             examples/serve/\n\
+           --backend B       pool (shared work-stealing pool, default)\n\
+                             or cupbop|hipcpu|dpcpp|reference for a\n\
+                             fresh per-request runtime\n\
+           --pool N          shared pool width (default: cores)\n\
+           --executors N     request executor threads (default 4)\n\
+           --cache-cap N     compiled-kernel cache entries (default 64)\n\
+           --inflight N      per-session in-flight cap (default 2)\n\
+           --coalesce C      on|off small-launch coalescing (default on)\n\
+           --exec / --grain  as under run flags\n\
          report targets: table1 table2 table6 fig9 fig10"
     );
-}
-
-fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
 }
 
 /// Resolve `--kernel NAME` against a parsed translation unit: a
@@ -124,90 +154,6 @@ fn find_kernel<'a>(
     })
 }
 
-fn has_flag(args: &[String], name: &str) -> bool {
-    args.iter().any(|a| a == name)
-}
-
-fn parse_scale(args: &[String]) -> Scale {
-    match flag_value(args, "--scale") {
-        Some("tiny") => Scale::Tiny,
-        Some("paper") => Scale::Paper,
-        _ => Scale::Small,
-    }
-}
-
-fn parse_opt(args: &[String]) -> OptLevel {
-    match flag_value(args, "--opt") {
-        Some(s) => OptLevel::parse(s).unwrap_or_else(|| {
-            eprintln!("unknown --opt `{s}` (0|1|2|3); using the default -O2");
-            OptLevel::default()
-        }),
-        None => OptLevel::default(),
-    }
-}
-
-fn parse_fuse(args: &[String]) -> Option<bool> {
-    match flag_value(args, "--fuse") {
-        Some("on") | Some("1") | Some("true") => Some(true),
-        Some("off") | Some("0") | Some("false") => Some(false),
-        Some(other) => {
-            eprintln!("unknown --fuse `{other}` (on|off); using the -O default");
-            None
-        }
-        None => None,
-    }
-}
-
-fn parse_compile_cfg(args: &[String]) -> CompileCfg {
-    CompileCfg { opt: parse_opt(args), fuse: parse_fuse(args) }
-}
-
-fn parse_backend(args: &[String]) -> Backend {
-    match flag_value(args, "--backend") {
-        Some("hipcpu") => Backend::HipCpu,
-        Some("dpcpp") => Backend::Dpcpp,
-        Some("reference") => Backend::Reference,
-        _ => Backend::CuPBoP,
-    }
-}
-
-fn parse_cfg(args: &[String]) -> BackendCfg {
-    let mut cfg = BackendCfg::default();
-    if let Some(p) = flag_value(args, "--pool").and_then(|v| v.parse().ok()) {
-        cfg.pool_size = p;
-    }
-    cfg.policy = match flag_value(args, "--grain") {
-        Some("avg") => PolicyMode::Average,
-        Some("auto") | None => PolicyMode::Auto,
-        Some(n) => n.parse().map(PolicyMode::Fixed).unwrap_or(PolicyMode::Auto),
-    };
-    cfg.exec = match flag_value(args, "--exec") {
-        Some("interpret") | Some("interp") => ExecMode::Interpret,
-        Some("native") => ExecMode::Native,
-        Some("bytecode") => ExecMode::Bytecode,
-        Some(other) => {
-            eprintln!("unknown --exec `{other}` (interpret|bytecode|native); using bytecode");
-            ExecMode::Bytecode
-        }
-        None => {
-            if has_flag(args, "--interpret") {
-                eprintln!("warning: --interpret is deprecated; use --exec interpret");
-                ExecMode::Interpret
-            } else {
-                ExecMode::Bytecode
-            }
-        }
-    };
-    cfg.sched = match flag_value(args, "--sched") {
-        Some("mutex") => SchedKind::MutexQueue,
-        _ => SchedKind::WorkStealing,
-    };
-    if let Some(n) = flag_value(args, "--streams").and_then(|v| v.parse::<usize>().ok()) {
-        cfg.streams = n.max(1);
-    }
-    cfg
-}
-
 fn cmd_list() -> ExitCode {
     println!("{:<18} {:<12} {:<11} features", "benchmark", "suite", "status");
     for b in spec::all_benchmarks() {
@@ -219,10 +165,10 @@ fn cmd_list() -> ExitCode {
 }
 
 fn cmd_run(args: &[String]) -> ExitCode {
-    if let Some(path) = flag_value(args, "--cu") {
+    if let Some(path) = cli::flag_value(args, "--cu") {
         return cmd_run_cu(path, args);
     }
-    let Some(name) = flag_value(args, "--bench") else {
+    let Some(name) = cli::flag_value(args, "--bench") else {
         eprintln!("--bench NAME or --cu FILE.cu required");
         return ExitCode::FAILURE;
     };
@@ -234,9 +180,11 @@ fn cmd_run(args: &[String]) -> ExitCode {
         eprintln!("`{name}` is spec-only (unsupported feature row of Table II)");
         return ExitCode::FAILURE;
     }
-    let backend = parse_backend(args);
-    let cfg = parse_cfg(args);
-    let built = spec::build_program_cfg(&b, parse_scale(args), parse_compile_cfg(args));
+    let backend = parse_or_fail!(cli::parse_backend(args));
+    let cfg = parse_or_fail!(cli::parse_backend_cfg(args));
+    let scale = parse_or_fail!(cli::parse_scale(args));
+    let ccfg = parse_or_fail!(cli::parse_compile_cfg(args));
+    let built = spec::build_program_cfg(&b, scale, ccfg);
     let out = spec::run_on(&built, backend, cfg);
     match &out.check {
         Ok(()) => println!(
@@ -273,7 +221,7 @@ fn cmd_run_cu(path: &str, args: &[String]) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
-    let kernel = match flag_value(args, "--kernel") {
+    let kernel = match cli::flag_value(args, "--kernel") {
         Some(n) => match find_kernel(&kernels, n, path) {
             Ok(k) => k.clone(),
             Err(()) => return ExitCode::FAILURE,
@@ -281,13 +229,13 @@ fn cmd_run_cu(path: &str, args: &[String]) -> ExitCode {
         None => kernels[0].clone(),
     };
     let mut scfg = harness::SynthCfg::default();
-    if let Some(n) = flag_value(args, "--n").and_then(|v| v.parse().ok()) {
+    if let Some(n) = cli::flag_value(args, "--n").and_then(|v| v.parse().ok()) {
         scfg.n = n;
     }
-    if let Some(b) = flag_value(args, "--block").and_then(|v| v.parse().ok()) {
+    if let Some(b) = cli::flag_value(args, "--block").and_then(|v| v.parse().ok()) {
         scfg.block = b;
     }
-    if let Some(g) = flag_value(args, "--grid").and_then(|v| v.parse::<u32>().ok()) {
+    if let Some(g) = cli::flag_value(args, "--grid").and_then(|v| v.parse::<u32>().ok()) {
         scfg.grid = Some(g.max(1));
     }
     // Clamp exactly as the harness will, so the report prints the
@@ -301,9 +249,10 @@ fn cmd_run_cu(path: &str, args: &[String]) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
-    let backend = parse_backend(args);
-    let cfg = parse_cfg(args);
-    let built = spec::build_prepared_cfg(&kernel.name, prog, parse_compile_cfg(args));
+    let backend = parse_or_fail!(cli::parse_backend(args));
+    let cfg = parse_or_fail!(cli::parse_backend_cfg(args));
+    let ccfg = parse_or_fail!(cli::parse_compile_cfg(args));
+    let built = spec::build_prepared_cfg(&kernel.name, prog, ccfg);
     let (out, arrays) = spec::run_with_arrays(&built, backend, cfg);
     if let Err(e) = out.check {
         eprintln!("{} [{}] FAILED: {e}", kernel.name, backend.name());
@@ -364,17 +313,17 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         );
         return ExitCode::FAILURE;
     }
-    let emit = match flag_value(args, "--emit") {
+    let emit = match cli::flag_value(args, "--emit") {
         Some("cir") | None => EmitKind::Cir,
         Some("mpmd") => EmitKind::Mpmd,
         Some("bytecode") | Some("bc") => EmitKind::Bytecode,
         Some(other) => {
-            eprintln!("unknown --emit `{other}` (cir|mpmd|bytecode)");
+            eprintln!("unknown --emit `{other}` (expected cir|mpmd|bytecode)");
             return ExitCode::FAILURE;
         }
     };
-    let ccfg = parse_compile_cfg(args);
-    let only = flag_value(args, "--kernel");
+    let ccfg = parse_or_fail!(cli::parse_compile_cfg(args));
+    let only = cli::flag_value(args, "--kernel");
     let mut failed = false;
     for f in files {
         if compile_file(f, emit, ccfg, only).is_err() {
@@ -444,10 +393,11 @@ fn compile_file(path: &str, emit: EmitKind, cfg: CompileCfg, only: Option<&str>)
 }
 
 fn cmd_suite(args: &[String]) -> ExitCode {
-    let which = flag_value(args, "--suite").unwrap_or("all");
-    let backend = parse_backend(args);
-    let cfg = parse_cfg(args);
-    let scale = parse_scale(args);
+    let which = cli::flag_value(args, "--suite").unwrap_or("all");
+    let backend = parse_or_fail!(cli::parse_backend(args));
+    let cfg = parse_or_fail!(cli::parse_backend_cfg(args));
+    let scale = parse_or_fail!(cli::parse_scale(args));
+    let ccfg = parse_or_fail!(cli::parse_compile_cfg(args));
     let mut failed = 0;
     for b in spec::all_benchmarks() {
         let in_suite = match which {
@@ -459,7 +409,7 @@ fn cmd_suite(args: &[String]) -> ExitCode {
         if !in_suite || b.build.is_none() {
             continue;
         }
-        let built = spec::build_program_cfg(&b, scale, parse_compile_cfg(args));
+        let built = spec::build_program_cfg(&b, scale, ccfg);
         let out = spec::run_on(&built, backend, cfg);
         match out.check {
             Ok(()) => {
@@ -478,12 +428,84 @@ fn cmd_suite(args: &[String]) -> ExitCode {
     }
 }
 
+/// `cupbop serve --script FILE.serve` — run a request script against a
+/// resident serving runtime (sessions, compiled-kernel cache, launch
+/// coalescing). Non-zero exit when any served request fails.
+fn cmd_serve(args: &[String]) -> ExitCode {
+    let Some(path) = cli::flag_value(args, "--script") else {
+        eprintln!("--script FILE.serve required (see examples/serve/)");
+        return ExitCode::FAILURE;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read `{path}`: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let ops = match serve::script::parse_script(&text) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let backend = match cli::flag_value(args, "--backend") {
+        None | Some("pool") => ServeBackend::Pool,
+        Some(_) => ServeBackend::PerRequest(parse_or_fail!(cli::parse_backend(args))),
+    };
+    let coalesce = match cli::flag_value(args, "--coalesce") {
+        None | Some("on") => true,
+        Some("off") => false,
+        Some(other) => {
+            eprintln!("unknown --coalesce `{other}` (expected on|off)");
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut cfg = ServeCfg { backend, coalesce, ..ServeCfg::default() };
+    cfg.exec = parse_or_fail!(cli::parse_exec(args));
+    cfg.policy = parse_or_fail!(cli::parse_grain(args));
+    if let Some(p) = parse_or_fail!(cli::parse_count(args, "--pool")) {
+        cfg.pool_size = p;
+    }
+    if let Some(e) = parse_or_fail!(cli::parse_count(args, "--executors")) {
+        cfg.executors = e;
+    }
+    if let Some(c) = parse_or_fail!(cli::parse_count(args, "--cache-cap")) {
+        cfg.cache_capacity = c;
+    }
+    if let Some(i) = parse_or_fail!(cli::parse_count(args, "--inflight")) {
+        cfg.max_in_flight = i;
+    }
+    let srv = serve::Server::new(cfg);
+    let mut out = std::io::stdout();
+    let summary = match serve::script::run_script(&srv, &ops, &mut out) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: io error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let c = srv.cache_stats();
+    let (absorbed, fused) = srv.coalesce_counters();
+    println!(
+        "served {} request(s), {} failed; cache {} hit / {} miss; \
+         coalesced {absorbed} launches into {fused} dispatches",
+        summary.submitted, summary.failed, c.hits, c.misses
+    );
+    if summary.failed == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
 fn cmd_report(args: &[String]) -> ExitCode {
     match args.first().map(|s| s.as_str()) {
         Some("table1") => println!("{}", report::table1()),
         Some("table2") => println!("{}", report::table2()),
-        Some("table6") => println!("{}", report::table6(parse_scale(args))),
-        Some("fig9") => println!("{}", report::fig9(parse_scale(args))),
+        Some("table6") => println!("{}", report::table6(parse_or_fail!(cli::parse_scale(args)))),
+        Some("fig9") => println!("{}", report::fig9(parse_or_fail!(cli::parse_scale(args)))),
         Some("fig10") => println!("{}", report::fig10()),
         other => {
             eprintln!("unknown report {other:?}; targets: table1 table2 table6 fig9 fig10");
@@ -494,7 +516,7 @@ fn cmd_report(args: &[String]) -> ExitCode {
 }
 
 fn cmd_dump(args: &[String]) -> ExitCode {
-    let Some(name) = flag_value(args, "--bench") else {
+    let Some(name) = cli::flag_value(args, "--bench") else {
         eprintln!("--bench NAME required");
         return ExitCode::FAILURE;
     };
@@ -506,7 +528,8 @@ fn cmd_dump(args: &[String]) -> ExitCode {
         eprintln!("`{name}` is spec-only");
         return ExitCode::FAILURE;
     }
-    let built = spec::build_program_cfg(&b, Scale::Tiny, parse_compile_cfg(args));
+    let ccfg = parse_or_fail!(cli::parse_compile_cfg(args));
+    let built = spec::build_program_cfg(&b, Scale::Tiny, ccfg);
     for ck in &built.compiled {
         println!("// ===== {} =====", ck.mpmd.name);
         println!("{}", cupbop::ir::pretty::mpmd_to_string(&ck.mpmd));
@@ -515,7 +538,7 @@ fn cmd_dump(args: &[String]) -> ExitCode {
 }
 
 fn cmd_device(args: &[String]) -> ExitCode {
-    let Some(name) = flag_value(args, "--bench") else {
+    let Some(name) = cli::flag_value(args, "--bench") else {
         eprintln!("--bench NAME required");
         return ExitCode::FAILURE;
     };

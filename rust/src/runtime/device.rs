@@ -25,9 +25,25 @@ pub const NULL: u64 = 0;
 pub struct DeviceMemory {
     base: *mut u8,
     cap: usize,
-    next: std::sync::Mutex<usize>,
+    alloc: std::sync::Mutex<AllocState>,
     /// Keep the allocation alive.
     _slab: Box<[u8]>,
+}
+
+/// Allocator bookkeeping behind the heap mutex: the bump cursor plus
+/// size-bucketed free lists. One-shot programs never hit the free
+/// lists (their frees arrive at teardown); the long-lived serving
+/// runtime (`crate::serve`) recycles per-request buffers through them
+/// so a bounded heap serves an unbounded request stream.
+struct AllocState {
+    /// bump cursor — also the high-water mark reported by [`DeviceMemory::used`]
+    next: usize,
+    /// rounded size → addresses available for reuse
+    free: std::collections::HashMap<usize, Vec<u64>>,
+    /// live allocation sizes by address (consulted on `free`)
+    live: std::collections::HashMap<u64, usize>,
+    /// allocations served from a free list instead of the bump cursor
+    reused: u64,
 }
 
 // SAFETY: concurrent access mirrors CUDA global-memory semantics; all
@@ -41,7 +57,13 @@ impl DeviceMemory {
     pub fn with_capacity(cap: usize) -> Self {
         let mut slab = vec![0u8; cap].into_boxed_slice();
         let base = slab.as_mut_ptr();
-        DeviceMemory { base, cap, next: std::sync::Mutex::new(64), _slab: slab }
+        let alloc = AllocState {
+            next: 64,
+            free: std::collections::HashMap::new(),
+            live: std::collections::HashMap::new(),
+            reused: 0,
+        };
+        DeviceMemory { base, cap, alloc: std::sync::Mutex::new(alloc), _slab: slab }
     }
 
     /// Default 64 MiB heap — enough for every bundled benchmark size.
@@ -49,27 +71,53 @@ impl DeviceMemory {
         Self::with_capacity(64 << 20)
     }
 
-    /// `cudaMalloc`: bump-allocate `bytes` (8-byte aligned).
+    /// `cudaMalloc`: `bytes` rounded up to 8-byte granules, served from
+    /// the matching free list when a previous allocation of the same
+    /// rounded size was freed, from the bump cursor otherwise.
     pub fn alloc(&self, bytes: usize) -> u64 {
-        let mut next = self.next.lock().unwrap();
-        let addr = (*next + 7) / 8 * 8;
+        let size = ((bytes.max(1) + 7) / 8) * 8;
+        let mut st = self.alloc.lock().unwrap();
+        if let Some(addr) = st.free.get_mut(&size).and_then(|v| v.pop()) {
+            st.reused += 1;
+            st.live.insert(addr, size);
+            return addr;
+        }
+        let addr = (st.next + 7) / 8 * 8;
         assert!(
-            addr + bytes <= self.cap,
+            addr + size <= self.cap,
             "device OOM: want {bytes}B at {addr}, cap {}B — construct \
              DeviceMemory::with_capacity(..) larger",
             self.cap
         );
-        *next = addr + bytes;
+        st.next = addr + size;
+        st.live.insert(addr as u64, size);
         addr as u64
     }
 
-    /// `cudaFree` — the bump allocator does not reuse; matching CUDA's
-    /// cost model is not needed for any experiment, freeing is a no-op.
-    pub fn free(&self, _addr: u64) {}
+    /// `cudaFree`: recycle the allocation into its size bucket so a
+    /// later same-size `alloc` reuses it. NULL, double and foreign
+    /// frees are tolerated as no-ops (the historical behaviour —
+    /// one-shot host programs often never free at all).
+    pub fn free(&self, addr: u64) {
+        if addr == NULL {
+            return;
+        }
+        let mut st = self.alloc.lock().unwrap();
+        if let Some(size) = st.live.remove(&addr) {
+            st.free.entry(size).or_default().push(addr);
+        }
+    }
 
-    /// Bytes currently allocated (high-water mark).
+    /// Bytes ever bump-allocated (high-water mark; reuse through the
+    /// free lists does not move it).
     pub fn used(&self) -> usize {
-        *self.next.lock().unwrap()
+        self.alloc.lock().unwrap().next
+    }
+
+    /// Allocations served by free-list reuse rather than fresh slab
+    /// (the serving runtime's steady-state indicator).
+    pub fn reuse_count(&self) -> u64 {
+        self.alloc.lock().unwrap().reused
     }
 
     #[inline]
@@ -468,5 +516,47 @@ mod tests {
     fn oom_detected() {
         let m = DeviceMemory::with_capacity(128);
         let _ = m.alloc(256);
+    }
+
+    #[test]
+    fn free_list_reuses_same_size() {
+        let m = DeviceMemory::with_capacity(1 << 12);
+        let a = m.alloc(100);
+        let hw = m.used();
+        m.free(a);
+        let b = m.alloc(97); // same 8-byte-rounded size class (104)
+        assert_eq!(a, b, "freed slot is recycled");
+        assert_eq!(m.used(), hw, "reuse does not move the high-water mark");
+        assert_eq!(m.reuse_count(), 1);
+        // a different size class bump-allocates fresh space
+        let c = m.alloc(200);
+        assert!(c > a);
+    }
+
+    #[test]
+    fn double_and_foreign_free_are_noops() {
+        let m = DeviceMemory::with_capacity(1 << 12);
+        let a = m.alloc(16);
+        m.free(a);
+        m.free(a); // double free: ignored
+        m.free(NULL); // null free: ignored
+        m.free(0xdead0); // never allocated: ignored
+        let b = m.alloc(16);
+        assert_eq!(a, b);
+        let c = m.alloc(16); // the double free must not have stocked twice
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn bounded_heap_survives_alloc_free_storm() {
+        let m = DeviceMemory::with_capacity(4 << 10);
+        for _ in 0..10_000 {
+            let a = m.alloc(1 << 10);
+            let b = m.alloc(1 << 10);
+            m.free(a);
+            m.free(b);
+        }
+        assert!(m.used() <= 4 << 10);
+        assert!(m.reuse_count() >= 2 * 10_000 - 2);
     }
 }

@@ -1,0 +1,247 @@
+//! The compiled-kernel cache.
+//!
+//! A persistent serving process sees the same kernels over and over;
+//! re-running lex→sema→passes→lower per submission would make compile
+//! time the dominant cost for exactly the small-kernel traffic Fig 11
+//! says launch overhead already dominates. [`KernelCache`] memoizes
+//! whole translations keyed by everything that can change the compiled
+//! artifact:
+//!
+//! * the **source hash** — FNV-1a over every kernel's pretty-printed
+//!   CIR ([`crate::compiler::kernel_fingerprint`]), order-sensitive;
+//! * the **opt level** and **fusion toggle** ([`CompileCfg`]);
+//! * the **backend** the result will run on;
+//! * the **ExecMode** it will execute under.
+//!
+//! Backend and ExecMode do not change the `CompiledKernel` bytes today
+//! (engines resolve per launch), but they are part of the key by
+//! design: a future backend-specialised lowering must never alias a
+//! cached artifact compiled for a different target. Eviction is LRU
+//! with a fixed capacity; hits, misses and evictions are counted for
+//! the `serve` CLI's `stats` report and the `fig_serve` bench.
+
+use crate::benchsuite::spec::Backend;
+use crate::compiler::{
+    compile_kernel_cfg, kernel_fingerprint, CompileCfg, CompileError, CompiledKernel, OptLevel,
+};
+use crate::frameworks::ExecMode;
+use crate::ir::Kernel;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Everything a cached translation is keyed by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Combined fingerprint of the submission's kernels (source identity).
+    pub source: u64,
+    pub opt: OptLevel,
+    pub fuse: Option<bool>,
+    pub backend: Backend,
+    pub exec: ExecMode,
+}
+
+impl CacheKey {
+    pub fn new(kernels: &[Kernel], cfg: CompileCfg, backend: Backend, exec: ExecMode) -> Self {
+        CacheKey { source: source_hash(kernels), opt: cfg.opt, fuse: cfg.fuse, backend, exec }
+    }
+}
+
+/// Order-sensitive combination of per-kernel fingerprints — kernel
+/// indices are launch-site ABI in host programs, so a reordered kernel
+/// list is a different source.
+pub fn source_hash(kernels: &[Kernel]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for k in kernels {
+        for b in kernel_fingerprint(k).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Point-in-time cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Hits over lookups (0.0 on an untouched cache).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    compiled: Arc<Vec<Arc<CompiledKernel>>>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<CacheKey, Entry>,
+    /// logical clock for LRU ordering
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe LRU cache of whole-submission translations.
+pub struct KernelCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl KernelCache {
+    /// A cache holding at most `capacity` translations (min 1).
+    pub fn new(capacity: usize) -> Self {
+        KernelCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The cached translation for `key`, compiling `kernels` under
+    /// `cfg` on a miss. Returns the shared artifact plus whether this
+    /// lookup hit. Compilation runs *outside* the cache lock so a slow
+    /// `-O3` build cannot stall other sessions' hits; two racing
+    /// misses on one key both compile and both count as misses — the
+    /// later insert merely refreshes the entry.
+    pub fn get_or_compile(
+        &self,
+        key: CacheKey,
+        kernels: &[Kernel],
+        cfg: CompileCfg,
+    ) -> Result<(Arc<Vec<Arc<CompiledKernel>>>, bool), CompileError> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(e) = g.map.get_mut(&key) {
+                e.last_used = tick;
+                let compiled = e.compiled.clone();
+                g.hits += 1;
+                return Ok((compiled, true));
+            }
+        }
+        let compiled: Vec<Arc<CompiledKernel>> = kernels
+            .iter()
+            .map(|k| compile_kernel_cfg(k, cfg).map(Arc::new))
+            .collect::<Result<_, _>>()?;
+        let compiled = Arc::new(compiled);
+        let mut g = self.inner.lock().unwrap();
+        g.misses += 1;
+        g.tick += 1;
+        let tick = g.tick;
+        if !g.map.contains_key(&key) && g.map.len() >= self.capacity {
+            if let Some(victim) = g.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k) {
+                g.map.remove(&victim);
+                g.evictions += 1;
+            }
+        }
+        g.map.insert(key, Entry { compiled: compiled.clone(), last_used: tick });
+        Ok((compiled, false))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats { hits: g.hits, misses: g.misses, evictions: g.evictions, entries: g.map.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{c_i32, global_tid, KernelBuilder, Ty};
+
+    fn kernel(name: &str, val: i32) -> Kernel {
+        let mut b = KernelBuilder::new(name);
+        let p = b.ptr_param("p", Ty::I32);
+        b.store_at(p.clone(), global_tid(), c_i32(val), Ty::I32);
+        b.build()
+    }
+
+    fn key_for(ks: &[Kernel], cfg: CompileCfg) -> CacheKey {
+        CacheKey::new(ks, cfg, Backend::CuPBoP, ExecMode::Bytecode)
+    }
+
+    #[test]
+    fn hit_after_miss_shares_the_artifact() {
+        let cache = KernelCache::new(4);
+        let ks = vec![kernel("k", 1)];
+        let cfg = CompileCfg::default();
+        let (a, hit_a) = cache.get_or_compile(key_for(&ks, cfg), &ks, cfg).unwrap();
+        let (b, hit_b) = cache.get_or_compile(key_for(&ks, cfg), &ks, cfg).unwrap();
+        assert!(!hit_a);
+        assert!(hit_b);
+        assert!(Arc::ptr_eq(&a, &b), "a hit returns the same artifact, not a recompile");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.entries), (1, 1, 0, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_cfg_backend_exec_are_distinct_entries() {
+        let ks = vec![kernel("k", 1)];
+        let o0 = CompileCfg::opt(OptLevel::O0);
+        let o2 = CompileCfg::opt(OptLevel::O2);
+        let fused = CompileCfg { opt: OptLevel::O0, fuse: Some(true) };
+        let keys = [
+            key_for(&ks, o0),
+            key_for(&ks, o2),
+            key_for(&ks, fused),
+            CacheKey::new(&ks, o0, Backend::Reference, ExecMode::Bytecode),
+            CacheKey::new(&ks, o0, Backend::CuPBoP, ExecMode::Interpret),
+        ];
+        for (i, a) in keys.iter().enumerate() {
+            for b in &keys[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+        // different source → different hash
+        let other = vec![kernel("k", 2)];
+        assert_ne!(source_hash(&ks), source_hash(&other));
+        // kernel order matters (indices are launch-site ABI)
+        let ab = vec![kernel("a", 1), kernel("b", 1)];
+        let ba = vec![kernel("b", 1), kernel("a", 1)];
+        assert_ne!(source_hash(&ab), source_hash(&ba));
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let cache = KernelCache::new(2);
+        let cfg = CompileCfg::default();
+        let k1 = vec![kernel("k", 1)];
+        let k2 = vec![kernel("k", 2)];
+        let k3 = vec![kernel("k", 3)];
+        cache.get_or_compile(key_for(&k1, cfg), &k1, cfg).unwrap();
+        cache.get_or_compile(key_for(&k2, cfg), &k2, cfg).unwrap();
+        // touch k1 so k2 is the LRU victim
+        assert!(cache.get_or_compile(key_for(&k1, cfg), &k1, cfg).unwrap().1);
+        cache.get_or_compile(key_for(&k3, cfg), &k3, cfg).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.evictions, s.entries), (1, 2));
+        // k1 survived, k2 was evicted
+        assert!(cache.get_or_compile(key_for(&k1, cfg), &k1, cfg).unwrap().1);
+        assert!(!cache.get_or_compile(key_for(&k2, cfg), &k2, cfg).unwrap().1);
+    }
+}

@@ -1,0 +1,249 @@
+//! Small-launch coalescing.
+//!
+//! Fig 11's finding is that dispatch overhead dominates for small
+//! grids: a 2-block launch pays the same submit/release/steal
+//! machinery as a 2000-block one. A serving runtime sees *storms* of
+//! such launches — many clients repeatedly launching tiny grids of the
+//! same cached kernel — so the [`Coalescer`] batches consecutive tiny
+//! launches of one kernel into a single fused dispatch: one
+//! [`KernelTask`] whose block-id space is the concatenation of the
+//! batched launches' block-id spaces.
+//!
+//! Per-launch semantics are preserved exactly: [`CoalescedBlockFn`]
+//! maps each fused block id back to its segment's own [`LaunchInfo`]
+//! (original grid/block geometry, original packed args) before calling
+//! the shared inner block function, so a batched launch executes
+//! bit-identically to an unbatched one — only the number of scheduler
+//! push/release cycles changes.
+//!
+//! Batching rules (also documented in DESIGN.md):
+//! * only launches with `total_blocks <= max_blocks` are eligible;
+//! * only consecutive launches of the *same kernel index* batch;
+//! * a batch flushes when it reaches `max_batch`, when an ineligible
+//!   or different-kernel launch arrives, at every stream sync, and at
+//!   session teardown — so fusion never reorders a stream's FIFO
+//!   order, it only merges adjacent entries.
+
+use crate::exec::{BlockFn, BlockScratch, LaunchInfo};
+use crate::runtime::{DeviceMemory, KernelTask};
+use std::sync::Arc;
+
+/// Coalescing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct CoalesceCfg {
+    /// Max launches fused into one dispatch.
+    pub max_batch: usize,
+    /// Only launches with at most this many blocks are eligible.
+    pub max_blocks: u64,
+}
+
+impl Default for CoalesceCfg {
+    fn default() -> Self {
+        CoalesceCfg { max_batch: 64, max_blocks: 8 }
+    }
+}
+
+/// The fused `start_routine`: a binary search over segment start
+/// offsets recovers which batched launch a fused block id belongs to,
+/// then runs the shared inner block function with that launch's own
+/// geometry and packed args.
+struct CoalescedBlockFn {
+    name: String,
+    inner: Arc<dyn BlockFn>,
+    /// `starts[i]` = first fused block id of segment `i` (`starts[0] == 0`).
+    starts: Vec<u64>,
+    segs: Vec<Arc<LaunchInfo>>,
+}
+
+impl BlockFn for CoalescedBlockFn {
+    fn run(
+        &self,
+        block_id: u64,
+        _launch: &LaunchInfo,
+        mem: &DeviceMemory,
+        scratch: &mut BlockScratch,
+    ) {
+        let i = self.starts.partition_point(|&s| s <= block_id) - 1;
+        self.inner.run(block_id - self.starts[i], &self.segs[i], mem, scratch);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Buffers eligible tiny launches and emits fused dispatches.
+pub struct Coalescer {
+    cfg: CoalesceCfg,
+    /// kernel index the pending batch belongs to
+    kernel: usize,
+    pending: Vec<KernelTask>,
+    /// launches absorbed into fused dispatches (batch size >= 2)
+    pub absorbed: u64,
+    /// fused dispatches emitted
+    pub fused: u64,
+}
+
+impl Coalescer {
+    pub fn new(cfg: CoalesceCfg) -> Self {
+        Coalescer { cfg, kernel: usize::MAX, pending: Vec::new(), absorbed: 0, fused: 0 }
+    }
+
+    /// Offer a launch of `kernel`. Returns the tasks that must be
+    /// submitted *now*, in stream order: a flushed batch when this
+    /// launch closed one, plus the launch itself when it is not
+    /// eligible for batching.
+    pub fn add(&mut self, kernel: usize, task: KernelTask) -> Vec<KernelTask> {
+        let mut out = Vec::new();
+        if task.total_blocks > self.cfg.max_blocks {
+            out.extend(self.flush());
+            out.push(task);
+            return out;
+        }
+        if !self.pending.is_empty() && self.kernel != kernel {
+            out.extend(self.flush());
+        }
+        self.kernel = kernel;
+        self.pending.push(task);
+        if self.pending.len() >= self.cfg.max_batch {
+            out.extend(self.flush());
+        }
+        out
+    }
+
+    /// Launches currently buffered (not yet submitted).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Drain the pending batch into (at most) one fused task. A batch
+    /// of one is returned unwrapped — the indirection would buy
+    /// nothing.
+    pub fn flush(&mut self) -> Option<KernelTask> {
+        if self.pending.len() <= 1 {
+            return self.pending.pop();
+        }
+        let batch = std::mem::take(&mut self.pending);
+        let mut starts = Vec::with_capacity(batch.len());
+        let mut segs = Vec::with_capacity(batch.len());
+        let mut total = 0u64;
+        for t in &batch {
+            starts.push(total);
+            segs.push(t.launch.clone());
+            total += t.total_blocks;
+        }
+        let inner = batch[0].start_routine.clone();
+        // The fused task fetches with the coarsest grain of its parts:
+        // per-part grains were computed for tiny launches, and a
+        // coarser fetch is exactly what fusing exists to enable.
+        let bpf = batch.iter().map(|t| t.block_per_fetch).max().unwrap_or(1);
+        self.absorbed += batch.len() as u64;
+        self.fused += 1;
+        let name = format!("coalesced(x{} {})", batch.len(), inner.name());
+        // The fused LaunchInfo is scheduler-facing only; every block
+        // resolves its segment's real LaunchInfo before running.
+        let launch = Arc::new(LaunchInfo {
+            grid: (total as u32, 1),
+            block: batch[0].launch.block,
+            dyn_shmem: 0,
+            packed: Arc::new(Vec::new()),
+        });
+        Some(KernelTask {
+            start_routine: Arc::new(CoalescedBlockFn { name, inner, starts, segs }),
+            launch,
+            total_blocks: total,
+            curr_block_id: 0,
+            block_per_fetch: bpf,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::NativeBlockFn;
+    use std::sync::Mutex;
+
+    fn tiny_task(routine: Arc<dyn BlockFn>, blocks: u64, tag: u32) -> KernelTask {
+        KernelTask {
+            start_routine: routine,
+            launch: Arc::new(LaunchInfo {
+                grid: (blocks as u32, 1),
+                block: (tag, 1), // smuggle the launch tag through block.x
+                dyn_shmem: 0,
+                packed: Arc::new(vec![]),
+            }),
+            total_blocks: blocks,
+            curr_block_id: 0,
+            block_per_fetch: 1,
+        }
+    }
+
+    /// Fused block ids map back to (per-launch block id, per-launch
+    /// LaunchInfo) exactly.
+    #[test]
+    fn fused_blocks_see_their_own_launch() {
+        let log: Arc<Mutex<Vec<(u64, u32)>>> = Arc::new(Mutex::new(Vec::new()));
+        let l2 = log.clone();
+        let routine = NativeBlockFn::new("probe", move |b, l, _, _| {
+            l2.lock().unwrap().push((b, l.block.0));
+        });
+        let mut c = Coalescer::new(CoalesceCfg { max_batch: 8, max_blocks: 8 });
+        assert!(c.add(0, tiny_task(routine.clone(), 2, 100)).is_empty());
+        assert!(c.add(0, tiny_task(routine.clone(), 3, 200)).is_empty());
+        assert!(c.add(0, tiny_task(routine.clone(), 1, 300)).is_empty());
+        let fused = c.flush().expect("batch pending");
+        assert_eq!(fused.total_blocks, 6);
+        assert_eq!((c.absorbed, c.fused), (3, 1));
+        let mem = DeviceMemory::with_capacity(64);
+        let mut scratch = BlockScratch::new();
+        for b in 0..fused.total_blocks {
+            fused.start_routine.run(b, &fused.launch, &mem, &mut scratch);
+        }
+        assert_eq!(
+            *log.lock().unwrap(),
+            vec![(0, 100), (1, 100), (0, 200), (1, 200), (2, 200), (0, 300)]
+        );
+    }
+
+    #[test]
+    fn big_launch_flushes_and_passes_through() {
+        let routine = NativeBlockFn::new("noop", |_, _, _, _| {});
+        let mut c = Coalescer::new(CoalesceCfg { max_batch: 8, max_blocks: 8 });
+        assert!(c.add(0, tiny_task(routine.clone(), 2, 0)).is_empty());
+        assert!(c.add(0, tiny_task(routine.clone(), 2, 0)).is_empty());
+        let out = c.add(0, tiny_task(routine.clone(), 100, 0));
+        // flushed batch first (stream order), then the big launch
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].total_blocks, 4);
+        assert_eq!(out[1].total_blocks, 100);
+        assert_eq!(c.pending_len(), 0);
+    }
+
+    #[test]
+    fn kernel_switch_flushes() {
+        let routine = NativeBlockFn::new("noop", |_, _, _, _| {});
+        let mut c = Coalescer::new(CoalesceCfg::default());
+        assert!(c.add(0, tiny_task(routine.clone(), 2, 0)).is_empty());
+        let out = c.add(1, tiny_task(routine.clone(), 2, 0));
+        // the single-task batch is returned unwrapped, the kernel-1
+        // launch starts a new pending batch
+        assert_eq!(out.len(), 1);
+        assert_eq!(c.pending_len(), 1);
+        assert_eq!((c.absorbed, c.fused), (0, 0), "a batch of one is not a fusion");
+    }
+
+    #[test]
+    fn full_batch_auto_flushes() {
+        let routine = NativeBlockFn::new("noop", |_, _, _, _| {});
+        let mut c = Coalescer::new(CoalesceCfg { max_batch: 4, max_blocks: 8 });
+        for i in 0..3 {
+            assert!(c.add(0, tiny_task(routine.clone(), 1, i)).is_empty());
+        }
+        let out = c.add(0, tiny_task(routine.clone(), 1, 3));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].total_blocks, 4);
+        assert_eq!(c.pending_len(), 0);
+        assert!(c.flush().is_none());
+    }
+}

@@ -1,0 +1,868 @@
+//! Kernel-as-a-service: the persistent multi-tenant serving runtime.
+//!
+//! Everything else in the repo is one-shot — compile, launch, exit.
+//! This module keeps the stack resident and serves many client
+//! *sessions* concurrently, amortising exactly the two costs that
+//! dominate small-kernel traffic: per-request compilation (skipped via
+//! the [`KernelCache`]) and per-launch dispatch (batched via the
+//! [`Coalescer`]). The ROADMAP's production-scale north star, grown
+//! over PR 1's stream/event scheduler.
+//!
+//! Architecture:
+//!
+//! * One shared [`DeviceMemory`] heap (with free-list reuse) and one
+//!   shared work-stealing [`StealScheduler`] pool execute every
+//!   session's kernels ([`ServeBackend::Pool`]).
+//! * A session is an admission-control handle: submissions queue
+//!   per-session, and executor threads admit them **fair round-robin**
+//!   across sessions with at most [`ServeCfg::max_in_flight`] requests
+//!   of one session in service at once — a greedy client cannot starve
+//!   a light one.
+//! * Each admitted request ("ticket") gets its own CUDA stream on the
+//!   shared scheduler; its launches serialise among themselves (stream
+//!   FIFO) but interleave freely with other tickets' — and because a
+//!   request's buffers are private allocations, the per-ticket adapter
+//!   narrows `cudaDeviceSynchronize` to a stream sync without changing
+//!   semantics (the session-isolation invariant).
+//! * The client surface is asynchronous: [`Server::submit`] returns a
+//!   [`Ticket`] immediately; [`Server::poll`] / [`Server::wait`]
+//!   observe completion; [`Response`] carries the validator verdict,
+//!   output checksums, `ExecStats` and queue/service latency.
+//!
+//! The correctness contract — every served result bit-identical to a
+//! fresh one-shot `Reference` run — is enforced by
+//! `tests/serve_stress.rs` (hundreds of sessions, mixed benchmarks ×
+//! opt levels) and reported by the `fig_serve` bench.
+
+pub mod cache;
+pub mod coalesce;
+pub mod script;
+pub mod storm;
+
+pub use cache::{CacheKey, CacheStats, KernelCache};
+pub use coalesce::{CoalesceCfg, Coalescer};
+
+use crate::benchsuite::spec::{self, Backend, BenchProgram, BuiltProgram, Scale};
+use crate::compiler::CompileCfg;
+use crate::exec::{ExecStats, StatsSnapshot};
+use crate::frameworks::{
+    build_task, BackendCfg, ExecMode, PolicyMode, ReferenceRuntime, SchedKind,
+};
+use crate::frontend::harness::fnv1a;
+use crate::host::{run_host_program, ResolvedLaunch, RuntimeApi};
+use crate::runtime::{DeviceMemory, EventId, StealScheduler, StreamId};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// What executes served kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeBackend {
+    /// All sessions multiplexed onto one shared work-stealing pool via
+    /// per-ticket streams — the serving runtime proper.
+    Pool,
+    /// A fresh per-request runtime of the given framework model (the
+    /// compiled-kernel cache is still shared). `Reference` is the
+    /// differential oracle configuration.
+    PerRequest(Backend),
+}
+
+impl ServeBackend {
+    /// The backend component of the cache key.
+    pub fn cache_backend(self) -> Backend {
+        match self {
+            ServeBackend::Pool => Backend::CuPBoP,
+            ServeBackend::PerRequest(b) => b,
+        }
+    }
+}
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeCfg {
+    pub backend: ServeBackend,
+    /// shared pool width (`ServeBackend::Pool`)
+    pub pool_size: usize,
+    /// executor threads admitting + driving requests
+    pub executors: usize,
+    pub exec: ExecMode,
+    pub policy: PolicyMode,
+    /// shared device-heap bytes (`ServeBackend::Pool`)
+    pub mem_cap: usize,
+    /// compiled-kernel cache capacity (translations)
+    pub cache_capacity: usize,
+    /// per-session in-flight cap (admission control)
+    pub max_in_flight: usize,
+    /// batch tiny same-kernel launches into fused dispatches
+    pub coalesce: bool,
+    pub coalesce_max_batch: usize,
+    pub coalesce_max_blocks: u64,
+    /// retain final host arrays in every [`Response`] (differential
+    /// harnesses; per-request override via [`Request::with_arrays`])
+    pub keep_arrays: bool,
+    /// start with admission paused ([`Server::resume`] opens the gate)
+    /// — lets harnesses submit a full burst before service begins
+    pub start_paused: bool,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            backend: ServeBackend::Pool,
+            pool_size: crate::runtime::default_pool_size(),
+            executors: 4,
+            exec: ExecMode::Bytecode,
+            policy: PolicyMode::Auto,
+            mem_cap: 256 << 20,
+            cache_capacity: 64,
+            max_in_flight: 2,
+            coalesce: true,
+            coalesce_max_batch: 64,
+            coalesce_max_blocks: 8,
+            keep_arrays: false,
+            start_paused: false,
+        }
+    }
+}
+
+/// What a client submits: which program, at which compile knobs.
+pub enum RequestKind {
+    /// A bundled benchmark by registry name.
+    Bench { name: String, scale: Scale },
+    /// An already-constructed program (synthetic workloads, `--cu`
+    /// submissions).
+    Prepared { name: String, prog: BenchProgram },
+}
+
+/// One unit of client work.
+pub struct Request {
+    pub kind: RequestKind,
+    pub cfg: CompileCfg,
+    /// retain final host arrays in the response regardless of the
+    /// server default
+    pub keep_arrays: bool,
+}
+
+impl Request {
+    pub fn bench(name: &str, scale: Scale, cfg: CompileCfg) -> Self {
+        Request {
+            kind: RequestKind::Bench { name: name.to_string(), scale },
+            cfg,
+            keep_arrays: false,
+        }
+    }
+
+    pub fn prepared(name: &str, prog: BenchProgram, cfg: CompileCfg) -> Self {
+        Request { kind: RequestKind::Prepared { name: name.to_string(), prog }, cfg, keep_arrays: false }
+    }
+
+    /// Retain final host arrays in the response (differential tests).
+    pub fn with_arrays(mut self) -> Self {
+        self.keep_arrays = true;
+        self
+    }
+}
+
+/// Session handle (index into the server's session table).
+pub type SessionId = usize;
+
+/// Completion handle for one submitted request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    pub session: SessionId,
+    pub index: usize,
+}
+
+/// Lifecycle of a ticket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TicketStatus {
+    /// submitted, not yet admitted
+    Queued,
+    /// admitted, executing
+    Running,
+    /// finished, validator green
+    Done,
+    /// finished with a failure (unknown benchmark, compile error, host
+    /// exec error, validator red, or a panic converted to an error)
+    Failed,
+}
+
+/// The result of one served request.
+pub struct Response {
+    pub name: String,
+    /// validator verdict (or the failure that preempted validation)
+    pub check: Result<(), String>,
+    /// FNV-64 of every final host array (bit-identity fingerprints)
+    pub checksums: Vec<u64>,
+    /// final host arrays, when requested
+    pub arrays: Option<Vec<Vec<u8>>>,
+    /// `ExecStats` accumulated by this request's launches (Pool and
+    /// `PerRequest(Reference)` backends; zero elsewhere)
+    pub stats: StatsSnapshot,
+    /// whether the compiled-kernel cache hit for this request
+    pub cache_hit: bool,
+    /// submit → admission
+    pub queued: Duration,
+    /// admission → completion
+    pub service: Duration,
+}
+
+impl Response {
+    pub fn ok(&self) -> bool {
+        self.check.is_ok()
+    }
+
+    /// submit → completion.
+    pub fn latency(&self) -> Duration {
+        self.queued + self.service
+    }
+}
+
+/// Per-session fairness counters (tests + `stats` script op).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// highest concurrent in-service count observed (≤ `max_in_flight`)
+    pub max_in_flight: usize,
+}
+
+struct Session {
+    pending: VecDeque<usize>,
+    in_flight: usize,
+    stats: SessionStats,
+}
+
+struct Slot {
+    session: SessionId,
+    status: TicketStatus,
+    req: Option<Request>,
+    resp: Option<Arc<Response>>,
+    submitted: Instant,
+    admitted: Option<Instant>,
+}
+
+struct State {
+    sessions: Vec<Session>,
+    tickets: Vec<Slot>,
+    /// round-robin cursor: the session to consider first
+    rr: usize,
+    /// admission order (session ids) — the fairness tests' witness
+    admissions: Vec<SessionId>,
+    paused: bool,
+    shutdown: bool,
+}
+
+struct Inner {
+    cfg: ServeCfg,
+    state: Mutex<State>,
+    /// executors wait here for admissible work
+    work: Condvar,
+    /// clients wait here for completions
+    done: Condvar,
+    cache: KernelCache,
+    /// shared substrate (`ServeBackend::Pool`)
+    mem: Arc<DeviceMemory>,
+    sched: Option<Arc<StealScheduler>>,
+    /// aggregated coalescing counters across all tickets
+    coalesce_absorbed: std::sync::atomic::AtomicU64,
+    coalesce_fused: std::sync::atomic::AtomicU64,
+}
+
+/// The serving runtime. Dropping the server drains admitted and
+/// pending work (unless paused), then joins its executors.
+pub struct Server {
+    inner: Arc<Inner>,
+    executors: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn new(cfg: ServeCfg) -> Self {
+        let (mem, sched) = match cfg.backend {
+            ServeBackend::Pool => {
+                let mem = Arc::new(DeviceMemory::with_capacity(cfg.mem_cap));
+                let sched = Arc::new(StealScheduler::new(cfg.pool_size.max(1), mem.clone()));
+                (mem, Some(sched))
+            }
+            // per-request backends own their heaps; keep a token one
+            ServeBackend::PerRequest(_) => (Arc::new(DeviceMemory::with_capacity(1 << 16)), None),
+        };
+        let inner = Arc::new(Inner {
+            cfg,
+            state: Mutex::new(State {
+                sessions: Vec::new(),
+                tickets: Vec::new(),
+                rr: 0,
+                admissions: Vec::new(),
+                paused: cfg.start_paused,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            cache: KernelCache::new(cfg.cache_capacity),
+            mem,
+            sched,
+            coalesce_absorbed: std::sync::atomic::AtomicU64::new(0),
+            coalesce_fused: std::sync::atomic::AtomicU64::new(0),
+        });
+        let executors = (0..cfg.executors.max(1))
+            .map(|i| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-exec-{i}"))
+                    .spawn(move || executor_loop(&inner))
+                    .expect("spawn executor")
+            })
+            .collect();
+        Server { inner, executors }
+    }
+
+    /// Open a new client session.
+    pub fn session(&self) -> SessionId {
+        let mut st = self.inner.state.lock().unwrap();
+        st.sessions.push(Session {
+            pending: VecDeque::new(),
+            in_flight: 0,
+            stats: SessionStats::default(),
+        });
+        st.sessions.len() - 1
+    }
+
+    /// Submit a request on a session; returns immediately.
+    pub fn submit(&self, session: SessionId, req: Request) -> Ticket {
+        let mut st = self.inner.state.lock().unwrap();
+        assert!(session < st.sessions.len(), "submit on unknown session {session}");
+        let index = st.tickets.len();
+        st.tickets.push(Slot {
+            session,
+            status: TicketStatus::Queued,
+            req: Some(req),
+            resp: None,
+            submitted: Instant::now(),
+            admitted: None,
+        });
+        let s = &mut st.sessions[session];
+        s.pending.push_back(index);
+        s.stats.submitted += 1;
+        drop(st);
+        self.inner.work.notify_one();
+        Ticket { session, index }
+    }
+
+    /// Open the admission gate of a `start_paused` server.
+    pub fn resume(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.paused = false;
+        drop(st);
+        self.inner.work.notify_all();
+    }
+
+    /// Non-blocking status check.
+    pub fn poll(&self, t: Ticket) -> TicketStatus {
+        self.inner.state.lock().unwrap().tickets[t.index].status
+    }
+
+    /// The response, if the ticket already completed.
+    pub fn try_response(&self, t: Ticket) -> Option<Arc<Response>> {
+        self.inner.state.lock().unwrap().tickets[t.index].resp.clone()
+    }
+
+    /// Block until the ticket completes.
+    pub fn wait(&self, t: Ticket) -> Arc<Response> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.tickets[t.index].resp.clone() {
+                return r;
+            }
+            st = self.inner.done.wait(st).unwrap();
+        }
+    }
+
+    /// Block until every submitted ticket completed.
+    pub fn wait_all(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        while st.tickets.iter().any(|s| s.resp.is_none()) {
+            st = self.inner.done.wait(st).unwrap();
+        }
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.inner.cache.stats()
+    }
+
+    /// (launches absorbed into fused dispatches, fused dispatches).
+    pub fn coalesce_counters(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering;
+        (
+            self.inner.coalesce_absorbed.load(Ordering::Relaxed),
+            self.inner.coalesce_fused.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Device-heap allocations served by free-list reuse.
+    pub fn mem_reuse_count(&self) -> u64 {
+        self.inner.mem.reuse_count()
+    }
+
+    pub fn session_stats(&self, s: SessionId) -> SessionStats {
+        self.inner.state.lock().unwrap().sessions[s].stats
+    }
+
+    /// The admission order so far (fairness witness).
+    pub fn admission_log(&self) -> Vec<SessionId> {
+        self.inner.state.lock().unwrap().admissions.clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work.notify_all();
+        for h in self.executors.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pick the next admissible (session, ticket) fair round-robin:
+/// scan sessions starting at the cursor, admit the head of the first
+/// session that has pending work and headroom under the in-flight cap,
+/// and move the cursor past it.
+fn pick(st: &mut State, cap: usize) -> Option<(SessionId, usize)> {
+    let n = st.sessions.len();
+    for off in 0..n {
+        let sid = (st.rr + off) % n;
+        let s = &mut st.sessions[sid];
+        if s.in_flight < cap && !s.pending.is_empty() {
+            let ticket = s.pending.pop_front().unwrap();
+            s.in_flight += 1;
+            s.stats.max_in_flight = s.stats.max_in_flight.max(s.in_flight);
+            st.rr = (sid + 1) % n;
+            st.admissions.push(sid);
+            return Some((sid, ticket));
+        }
+    }
+    None
+}
+
+fn executor_loop(inner: &Inner) {
+    loop {
+        // admit
+        let (ticket, req, submitted) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if !st.paused {
+                    if let Some((_, ticket)) = pick(&mut st, inner.cfg.max_in_flight.max(1)) {
+                        let slot = &mut st.tickets[ticket];
+                        slot.status = TicketStatus::Running;
+                        slot.admitted = Some(Instant::now());
+                        let req = slot.req.take().expect("queued ticket has its request");
+                        break (ticket, req, slot.submitted);
+                    }
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = inner.work.wait(st).unwrap();
+            }
+        };
+        // serve (no state lock held)
+        let admitted = Instant::now();
+        let mut resp = execute(inner, req);
+        resp.queued = admitted.duration_since(submitted);
+        resp.service = admitted.elapsed();
+        // complete
+        let mut st = inner.state.lock().unwrap();
+        let slot = &mut st.tickets[ticket];
+        slot.status = if resp.ok() { TicketStatus::Done } else { TicketStatus::Failed };
+        let session = slot.session;
+        slot.resp = Some(Arc::new(resp));
+        let s = &mut st.sessions[session];
+        s.in_flight -= 1;
+        s.stats.completed += 1;
+        drop(st);
+        // an in-flight cap slot freed up and a completion landed
+        inner.work.notify_all();
+        inner.done.notify_all();
+    }
+}
+
+fn fail(name: &str, why: String) -> Response {
+    Response {
+        name: name.to_string(),
+        check: Err(why),
+        checksums: Vec::new(),
+        arrays: None,
+        stats: StatsSnapshot::default(),
+        cache_hit: false,
+        queued: Duration::ZERO,
+        service: Duration::ZERO,
+    }
+}
+
+/// Resolve, compile-or-hit, assemble, run, validate.
+fn execute(inner: &Inner, req: Request) -> Response {
+    let (name, prog) = match req.kind {
+        RequestKind::Prepared { name, prog } => (name, prog),
+        RequestKind::Bench { name, scale } => {
+            let Some(b) = spec::by_name(&name) else {
+                return fail(&name, format!("unknown benchmark `{name}`"));
+            };
+            let Some(builder) = b.build else {
+                return fail(&name, format!("`{name}` is spec-only"));
+            };
+            (name, builder(scale))
+        }
+    };
+    let key = CacheKey::new(
+        &prog.kernels,
+        req.cfg,
+        inner.cfg.backend.cache_backend(),
+        inner.cfg.exec,
+    );
+    let (compiled, cache_hit) = match inner.cache.get_or_compile(key, &prog.kernels, req.cfg) {
+        Ok(x) => x,
+        Err(e) => return fail(&name, format!("compile: {e}")),
+    };
+    let built = spec::assemble_prepared(&name, prog, (*compiled).clone());
+    let (check, arrays, stats) = match inner.cfg.backend {
+        ServeBackend::Pool => run_pooled(inner, &built),
+        ServeBackend::PerRequest(b) => run_per_request(b, &inner.cfg, &built),
+    };
+    let checksums = arrays.iter().map(|a| fnv1a(a)).collect();
+    let keep = inner.cfg.keep_arrays || req.keep_arrays;
+    Response {
+        name: built.name,
+        check,
+        checksums,
+        arrays: keep.then_some(arrays),
+        stats,
+        cache_hit,
+        queued: Duration::ZERO,
+        service: Duration::ZERO,
+    }
+}
+
+/// Run a built program on the shared pool behind a per-ticket stream.
+/// Panics during execution (e.g. device OOM on an oversized
+/// submission) are converted into a failed response; the ticket's
+/// stream is drained and its buffers freed either way, so one bad
+/// request cannot poison the server.
+fn run_pooled(
+    inner: &Inner,
+    built: &BuiltProgram,
+) -> (Result<(), String>, Vec<Vec<u8>>, StatsSnapshot) {
+    let sched = inner.sched.as_ref().expect("pool backend has a scheduler").clone();
+    let stats = ExecStats::new();
+    let mut rt = TicketRt::new(
+        inner.mem.clone(),
+        sched.clone(),
+        built.variants.clone(),
+        &inner.cfg,
+        stats.clone(),
+    );
+    let mut arrays = built.arrays.clone();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt)
+    }));
+    rt.finish(inner);
+    sched.stream_destroy(rt.stream);
+    let check = match res {
+        Ok(Ok(())) => (built.check)(&arrays),
+        Ok(Err(e)) => Err(format!("host exec: {e}")),
+        Err(p) => Err(format!("panic during execution: {}", panic_msg(p.as_ref()))),
+    };
+    (check, arrays, stats.snapshot())
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Run a built program on a fresh per-request framework runtime.
+fn run_per_request(
+    backend: Backend,
+    cfg: &ServeCfg,
+    built: &BuiltProgram,
+) -> (Result<(), String>, Vec<Vec<u8>>, StatsSnapshot) {
+    if backend == Backend::Reference {
+        // run manually (rather than via spec::run_with_arrays) to
+        // capture the oracle's ExecStats for the identity tests
+        let mut arrays = built.arrays.clone();
+        let mut rt = ReferenceRuntime::new(built.variants.clone(), built.mem_cap.max(1 << 20))
+            .with_exec(cfg.exec);
+        let res = run_host_program(&built.host, &mut arrays, built.num_bufs, &mut rt);
+        let check = match res {
+            Ok(()) => (built.check)(&arrays),
+            Err(e) => Err(format!("host exec: {e}")),
+        };
+        return (check, arrays, rt.stats.snapshot());
+    }
+    let bcfg = BackendCfg {
+        pool_size: cfg.pool_size,
+        policy: cfg.policy,
+        exec: cfg.exec,
+        sched: SchedKind::WorkStealing,
+        ..BackendCfg::default()
+    };
+    let (out, arrays) = spec::run_with_arrays(built, backend, bcfg);
+    (out.check, arrays, StatsSnapshot::default())
+}
+
+/// The per-ticket [`RuntimeApi`] adapter: allocations on the shared
+/// heap, launches (optionally coalesced) onto the ticket's own stream,
+/// and `cudaDeviceSynchronize` narrowed to a stream sync.
+///
+/// The narrowing is sound because of the **session-isolation
+/// invariant**: a request's device buffers are allocations it made
+/// itself, so the only work a barrier in *its* host program can order
+/// is its own — all on its stream. Other tickets' launches touch
+/// disjoint allocations and need no ordering against this one.
+struct TicketRt {
+    mem: Arc<DeviceMemory>,
+    sched: Arc<StealScheduler>,
+    variants: Vec<crate::frameworks::KernelVariants>,
+    exec: ExecMode,
+    policy: PolicyMode,
+    pool_size: usize,
+    stream: StreamId,
+    stats: Arc<ExecStats>,
+    coal: Option<Coalescer>,
+    /// live allocations — leftovers are freed at `finish` so the
+    /// shared heap's free lists sustain an unbounded request stream
+    /// (host programs frequently never `Free`)
+    live: Vec<u64>,
+}
+
+impl TicketRt {
+    fn new(
+        mem: Arc<DeviceMemory>,
+        sched: Arc<StealScheduler>,
+        variants: Vec<crate::frameworks::KernelVariants>,
+        cfg: &ServeCfg,
+        stats: Arc<ExecStats>,
+    ) -> Self {
+        let stream = sched.stream_create();
+        let coal = cfg.coalesce.then(|| {
+            Coalescer::new(CoalesceCfg {
+                max_batch: cfg.coalesce_max_batch.max(2),
+                max_blocks: cfg.coalesce_max_blocks.max(1),
+            })
+        });
+        TicketRt {
+            mem,
+            sched,
+            variants,
+            exec: cfg.exec,
+            policy: cfg.policy,
+            pool_size: cfg.pool_size,
+            stream,
+            stats,
+            coal,
+            live: Vec::new(),
+        }
+    }
+
+    fn flush_coalescer(&mut self) {
+        if let Some(c) = &mut self.coal {
+            if let Some(t) = c.flush() {
+                self.sched.submit_stream(t, self.stream);
+            }
+        }
+    }
+
+    /// Drain the ticket's stream and release its leftover allocations
+    /// (after the drain — in-flight blocks may still read them).
+    fn finish(&mut self, inner: &Inner) {
+        use std::sync::atomic::Ordering;
+        self.flush_coalescer();
+        self.sched.stream_sync(self.stream);
+        for addr in self.live.drain(..) {
+            self.mem.free(addr);
+        }
+        if let Some(c) = &self.coal {
+            inner.coalesce_absorbed.fetch_add(c.absorbed, Ordering::Relaxed);
+            inner.coalesce_fused.fetch_add(c.fused, Ordering::Relaxed);
+        }
+    }
+}
+
+impl RuntimeApi for TicketRt {
+    fn malloc(&mut self, bytes: usize) -> u64 {
+        let addr = self.mem.alloc(bytes);
+        self.live.push(addr);
+        addr
+    }
+
+    fn h2d(&mut self, dst: u64, src: &[u8]) {
+        // no flush needed: the host barrier pass already ordered any
+        // conflicting buffered launch behind a sync
+        self.mem.h2d(dst, src);
+    }
+
+    fn d2h(&mut self, dst: &mut [u8], src: u64) {
+        self.mem.d2h(dst, src);
+    }
+
+    fn launch(&mut self, l: ResolvedLaunch) {
+        let kernel = l.kernel;
+        let task = build_task(
+            &self.variants,
+            &l,
+            self.exec,
+            self.policy,
+            self.pool_size,
+            Some(self.stats.clone()),
+        );
+        match &mut self.coal {
+            Some(c) => {
+                for t in c.add(kernel, task) {
+                    self.sched.submit_stream(t, self.stream);
+                }
+            }
+            None => self.sched.submit_stream(task, self.stream),
+        }
+    }
+
+    fn sync(&mut self) {
+        // device sync narrowed to this ticket's stream — see the
+        // session-isolation invariant in the type docs
+        self.flush_coalescer();
+        self.sched.stream_sync(self.stream);
+    }
+
+    fn free(&mut self, addr: u64) {
+        // freeing while launches may still be in flight is a guest
+        // use-after-free on real CUDA too; the host programs in this
+        // repo only free after a sync, so recycle immediately
+        self.live.retain(|a| *a != addr);
+        self.mem.free(addr);
+    }
+
+    fn stream_create(&mut self) -> StreamId {
+        // nested streams degrade to the ticket stream: serialised,
+        // which is always a sound over-approximation
+        self.stream
+    }
+
+    fn launch_on(&mut self, l: ResolvedLaunch, _stream: StreamId) {
+        self.launch(l)
+    }
+
+    fn stream_sync(&mut self, _stream: StreamId) {
+        self.sync()
+    }
+
+    fn event_sync(&mut self, _event: EventId) {
+        self.sync()
+    }
+
+    fn stream_wait_event(&mut self, _stream: StreamId, _event: EventId) {
+        self.sync()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::OptLevel;
+
+    fn tiny_server(backend: ServeBackend) -> Server {
+        Server::new(ServeCfg {
+            backend,
+            pool_size: 2,
+            executors: 2,
+            keep_arrays: true,
+            ..ServeCfg::default()
+        })
+    }
+
+    #[test]
+    fn serve_one_bench_on_pool() {
+        let srv = tiny_server(ServeBackend::Pool);
+        let s = srv.session();
+        let t = srv.submit(s, Request::bench("fir", Scale::Tiny, CompileCfg::default()));
+        let r = srv.wait(t);
+        r.check.as_ref().expect("fir serves green");
+        assert!(!r.cache_hit);
+        assert!(r.stats.blocks > 0, "pool backend accumulates ExecStats");
+        // repeat submission hits the cache
+        let t2 = srv.submit(s, Request::bench("fir", Scale::Tiny, CompileCfg::default()));
+        let r2 = srv.wait(t2);
+        assert!(r2.cache_hit);
+        assert_eq!(r.checksums, r2.checksums, "served results are deterministic");
+        assert_eq!(srv.cache_stats().hits, 1);
+    }
+
+    #[test]
+    fn serve_storm_coalesced_matches_uncoalesced() {
+        let run = |coalesce: bool| {
+            let srv = Server::new(ServeCfg {
+                pool_size: 2,
+                executors: 1,
+                coalesce,
+                keep_arrays: true,
+                ..ServeCfg::default()
+            });
+            let s = srv.session();
+            let t = srv.submit(
+                s,
+                Request::prepared("storm", storm::storm_program(40, 8), CompileCfg::default()),
+            );
+            let r = srv.wait(t);
+            r.check.as_ref().expect("storm serves green");
+            let (absorbed, fused) = srv.coalesce_counters();
+            (r.checksums.clone(), r.stats, absorbed, fused)
+        };
+        let (sums_on, stats_on, absorbed, fused) = run(true);
+        let (sums_off, stats_off, absorbed_off, _) = run(false);
+        assert_eq!(sums_on, sums_off, "coalescing must not change results");
+        assert_eq!(stats_on, stats_off, "coalescing must not change ExecStats");
+        assert!(absorbed >= 2 && fused >= 1, "storm launches were actually fused");
+        assert_eq!(absorbed_off, 0);
+    }
+
+    #[test]
+    fn failures_are_responses_not_poison() {
+        let srv = tiny_server(ServeBackend::Pool);
+        let s = srv.session();
+        let bad = srv.submit(s, Request::bench("no-such-bench", Scale::Tiny, CompileCfg::default()));
+        let r = srv.wait(bad);
+        assert_eq!(srv.poll(bad), TicketStatus::Failed);
+        assert!(r.check.is_err());
+        // the server still serves after a failed ticket
+        let good =
+            srv.submit(s, Request::bench("fir", Scale::Tiny, CompileCfg::opt(OptLevel::O0)));
+        assert!(srv.wait(good).ok());
+    }
+
+    #[test]
+    fn per_request_reference_backend_serves() {
+        let srv = tiny_server(ServeBackend::PerRequest(Backend::Reference));
+        let s = srv.session();
+        let t = srv.submit(s, Request::bench("fir", Scale::Tiny, CompileCfg::default()));
+        let r = srv.wait(t);
+        r.check.as_ref().expect("reference serves green");
+        assert!(r.stats.blocks > 0);
+    }
+
+    #[test]
+    fn paused_server_admits_nothing_until_resume() {
+        let srv = Server::new(ServeCfg { start_paused: true, ..ServeCfg::default() });
+        let s = srv.session();
+        let t = srv.submit(s, Request::bench("fir", Scale::Tiny, CompileCfg::default()));
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(srv.poll(t), TicketStatus::Queued);
+        srv.resume();
+        assert!(srv.wait(t).ok());
+    }
+}

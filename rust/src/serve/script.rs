@@ -1,0 +1,272 @@
+//! The `serve` CLI's request-script format.
+//!
+//! A script is newline-delimited, `#` starts a comment:
+//!
+//! ```text
+//! session a                      # open a client session named `a`
+//! session b
+//! submit a kmeans --scale tiny   # async submit -> ticket t0
+//! submit b hist --scale tiny --opt 3
+//! submit a kmeans --scale tiny   # t2: repeat -> compiled-kernel cache hit
+//! wait t0                        # block on one ticket, print its result
+//! wait all                       # block on everything outstanding
+//! stats                          # cache / coalescing / session counters
+//! ```
+//!
+//! Tickets are named `t0, t1, …` in submission order (global across
+//! sessions). `submit` takes the shared CLI flags `--scale`, `--opt`
+//! and `--fuse` (parsed by [`crate::cli`], so spellings and error
+//! messages match `run`/`suite`). Scripts are validated up front —
+//! unknown ops, sessions, benchmarks-with-typos and out-of-range
+//! tickets fail with `script line N: …` before anything executes.
+
+use super::{Request, Server, Ticket};
+use crate::benchsuite::spec::Scale;
+use crate::cli;
+use crate::compiler::CompileCfg;
+use crate::frontend::harness::fnv1a;
+use std::io::Write;
+
+/// One validated script statement.
+pub enum ScriptOp {
+    Session { name: String },
+    Submit { session: usize, session_name: String, bench: String, scale: Scale, cfg: CompileCfg },
+    Wait(WaitTarget),
+    Stats,
+}
+
+pub enum WaitTarget {
+    All,
+    Ticket(usize),
+}
+
+/// Parse and validate a script. Session references, ticket references
+/// and flag values are all checked here, so [`run_script`] cannot fail
+/// on a parsed script.
+pub fn parse_script(text: &str) -> Result<Vec<ScriptOp>, String> {
+    let mut ops = Vec::new();
+    let mut sessions: Vec<String> = Vec::new();
+    let mut tickets = 0usize;
+    for (i, raw) in text.lines().enumerate() {
+        let n = i + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let toks: Vec<String> = line.split_whitespace().map(|s| s.to_string()).collect();
+        match toks[0].as_str() {
+            "session" => {
+                let [_, name] = toks.as_slice() else {
+                    return Err(format!("script line {n}: usage: session NAME"));
+                };
+                if sessions.contains(name) {
+                    return Err(format!("script line {n}: duplicate session `{name}`"));
+                }
+                sessions.push(name.clone());
+                ops.push(ScriptOp::Session { name: name.clone() });
+            }
+            "submit" => {
+                if toks.len() < 3 {
+                    return Err(format!(
+                        "script line {n}: usage: submit SESSION BENCH [--scale S] [--opt N] [--fuse on|off]"
+                    ));
+                }
+                let session_name = toks[1].clone();
+                let Some(session) = sessions.iter().position(|s| *s == session_name) else {
+                    return Err(format!("script line {n}: unknown session `{session_name}`"));
+                };
+                let bench = toks[2].clone();
+                let flags = &toks[3..];
+                let scale =
+                    cli::parse_scale(flags).map_err(|e| format!("script line {n}: {e}"))?;
+                let cfg =
+                    cli::parse_compile_cfg(flags).map_err(|e| format!("script line {n}: {e}"))?;
+                ops.push(ScriptOp::Submit { session, session_name, bench, scale, cfg });
+                tickets += 1;
+            }
+            "wait" => {
+                let [_, target] = toks.as_slice() else {
+                    return Err(format!("script line {n}: usage: wait all|tN"));
+                };
+                let target = if target == "all" {
+                    WaitTarget::All
+                } else if let Some(idx) =
+                    target.strip_prefix('t').and_then(|s| s.parse::<usize>().ok())
+                {
+                    if idx >= tickets {
+                        return Err(format!(
+                            "script line {n}: ticket t{idx} not submitted yet ({tickets} so far)"
+                        ));
+                    }
+                    WaitTarget::Ticket(idx)
+                } else {
+                    return Err(format!("script line {n}: usage: wait all|tN"));
+                };
+                ops.push(ScriptOp::Wait(target));
+            }
+            "stats" => ops.push(ScriptOp::Stats),
+            other => {
+                return Err(format!(
+                    "script line {n}: unknown op `{other}` (expected session|submit|wait|stats)"
+                ))
+            }
+        }
+    }
+    Ok(ops)
+}
+
+/// What a script run amounted to (the CLI's exit code looks at
+/// `failed`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScriptSummary {
+    pub submitted: usize,
+    pub failed: usize,
+}
+
+/// One checksum over all of a response's output arrays.
+fn combined_checksum(sums: &[u64]) -> u64 {
+    let bytes: Vec<u8> = sums.iter().flat_map(|s| s.to_le_bytes()).collect();
+    fnv1a(&bytes)
+}
+
+fn ms(d: std::time::Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn report(srv: &Server, t: Ticket, out: &mut dyn Write) -> std::io::Result<bool> {
+    let r = srv.wait(t);
+    match &r.check {
+        Ok(()) => writeln!(
+            out,
+            "t{} {} ok cache={} queued={:.2}ms service={:.2}ms out={:#018x}",
+            t.index,
+            r.name,
+            if r.cache_hit { "hit" } else { "miss" },
+            ms(r.queued),
+            ms(r.service),
+            combined_checksum(&r.checksums),
+        )?,
+        Err(e) => writeln!(out, "t{} {} FAILED: {e}", t.index, r.name)?,
+    }
+    Ok(r.check.is_ok())
+}
+
+/// Execute a validated script against a server, writing progress to
+/// `out`. At the end every submitted ticket is drained (scripts need
+/// not end with `wait all`) and failures are tallied.
+pub fn run_script(
+    srv: &Server,
+    ops: &[ScriptOp],
+    out: &mut dyn Write,
+) -> std::io::Result<ScriptSummary> {
+    let mut tickets: Vec<Ticket> = Vec::new();
+    let mut reported: Vec<bool> = Vec::new();
+    for op in ops {
+        match op {
+            ScriptOp::Session { name } => {
+                let id = srv.session();
+                writeln!(out, "session {name} = s{id}")?;
+            }
+            ScriptOp::Submit { session, session_name, bench, scale, cfg } => {
+                let t = srv.submit(*session, Request::bench(bench, *scale, *cfg));
+                writeln!(out, "t{} <- {session_name}: {bench} {}", t.index, cfg.opt.name())?;
+                tickets.push(t);
+                reported.push(false);
+            }
+            ScriptOp::Wait(WaitTarget::Ticket(i)) => {
+                report(srv, tickets[*i], out)?;
+                reported[*i] = true;
+            }
+            ScriptOp::Wait(WaitTarget::All) => {
+                for i in 0..tickets.len() {
+                    if !reported[i] {
+                        report(srv, tickets[i], out)?;
+                        reported[i] = true;
+                    }
+                }
+            }
+            ScriptOp::Stats => {
+                let c = srv.cache_stats();
+                writeln!(
+                    out,
+                    "cache: {} hits / {} misses / {} evictions / {} entries (hit rate {:.0}%)",
+                    c.hits,
+                    c.misses,
+                    c.evictions,
+                    c.entries,
+                    c.hit_rate() * 100.0
+                )?;
+                let (absorbed, fused) = srv.coalesce_counters();
+                writeln!(out, "coalesce: {absorbed} launches absorbed into {fused} dispatches")?;
+            }
+        }
+    }
+    // drain everything so the summary (and exit code) is complete
+    let mut failed = 0usize;
+    for (i, t) in tickets.iter().enumerate() {
+        let ok = if reported[i] { srv.wait(*t).check.is_ok() } else { report(srv, *t, out)? };
+        if !ok {
+            failed += 1;
+        }
+    }
+    Ok(ScriptSummary { submitted: tickets.len(), failed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{ServeCfg, Server};
+
+    #[test]
+    fn parse_rejects_bad_scripts() {
+        let cases = [
+            ("launch a fir", "unknown op `launch`"),
+            ("submit a fir", "unknown session `a`"),
+            ("session a\nsession a", "duplicate session"),
+            ("session a\nsubmit a fir --opt 9", "unknown --opt `9`"),
+            ("wait t0", "not submitted yet"),
+            ("session a\nsubmit a fir\nwait t1", "not submitted yet"),
+        ];
+        for (src, want) in cases {
+            let err = parse_script(src).err().unwrap_or_else(|| panic!("`{src}` must fail"));
+            assert!(err.contains(want), "`{src}` -> `{err}` (wanted `{want}`)");
+            assert!(err.starts_with("script line "), "`{err}` names its line");
+        }
+    }
+
+    #[test]
+    fn script_end_to_end() {
+        let src = "\
+# two sessions, a repeat submission for a cache hit
+session a
+session b
+submit a fir --scale tiny
+submit b fir --scale tiny --opt 0
+submit a fir --scale tiny
+wait t0
+wait all
+stats
+";
+        let ops = parse_script(src).expect("script parses");
+        let srv = Server::new(ServeCfg { pool_size: 2, executors: 2, ..ServeCfg::default() });
+        let mut out = Vec::new();
+        let summary = run_script(&srv, &ops, &mut out).expect("script runs");
+        assert_eq!(summary, ScriptSummary { submitted: 3, failed: 0 });
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("session a = s0"), "{text}");
+        assert!(text.contains("t0 fir ok cache=miss"), "{text}");
+        assert!(text.contains("cache=hit"), "{text}");
+        assert!(text.contains("cache: "), "{text}");
+    }
+
+    #[test]
+    fn failed_tickets_are_counted_and_drained_without_wait() {
+        let src = "session a\nsubmit a no-such-bench\n";
+        let ops = parse_script(src).expect("parses (bench names resolve at serve time)");
+        let srv = Server::new(ServeCfg { executors: 1, ..ServeCfg::default() });
+        let mut out = Vec::new();
+        let summary = run_script(&srv, &ops, &mut out).expect("script runs");
+        assert_eq!(summary, ScriptSummary { submitted: 1, failed: 1 });
+        assert!(String::from_utf8(out).unwrap().contains("FAILED"));
+    }
+}

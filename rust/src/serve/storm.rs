@@ -1,0 +1,96 @@
+//! Synthetic small-launch storm — the Fig 11 workload shape as a
+//! [`BenchProgram`].
+//!
+//! `launches` back-to-back single-block launches of one trivial
+//! kernel, each writing its **own** buffer. Disjoint buffers matter:
+//! the host barrier pass inserts `ImplicitSync` between conflicting
+//! launches, and a same-buffer storm would get one barrier per launch
+//! — which both serialises the device and forces the coalescer to
+//! flush after every submission. With disjoint buffers the storm is
+//! barrier-free until the first D2H, so the coalescer may batch
+//! freely; that makes this program the uncoalesced-vs-coalesced
+//! microbenchmark for `fig11_launch` and `fig_serve`, and the
+//! correctness fixture for the serving stress tests.
+
+use crate::benchsuite::spec::BenchProgram;
+use crate::host::{BufId, HostArg, HostArr, HostOp, HostProgram, LaunchOp};
+use crate::ir::{add, global_tid, reg, KernelBuilder, Ty};
+
+/// Build the storm: kernel `storm(p, seed): p[tid] = tid + seed`,
+/// launched `launches` times with grid `(1,1)` and block
+/// `(block, 1)`, launch `i` writing buffer `i` with seed `i`.
+pub fn storm_program(launches: usize, block: u32) -> BenchProgram {
+    assert!(launches >= 1 && block >= 1);
+    let mut b = KernelBuilder::new("storm");
+    let p = b.ptr_param("p", Ty::I32);
+    let seed = b.scalar_param("seed", Ty::I32);
+    let id = b.assign(global_tid());
+    b.store_at(p.clone(), reg(id), add(reg(id), seed.clone()), Ty::I32);
+    let kernel = b.build();
+
+    let bytes = block as usize * 4;
+    let mut ops = Vec::with_capacity(3 * launches);
+    for i in 0..launches {
+        ops.push(HostOp::Malloc { buf: BufId(i), bytes });
+        ops.push(HostOp::Launch(LaunchOp {
+            kernel: 0,
+            grid: (1, 1),
+            block: (block, 1),
+            dyn_shmem: 0,
+            args: vec![HostArg::Buf(BufId(i)), HostArg::I32(i as i32)],
+        }));
+    }
+    for i in 0..launches {
+        ops.push(HostOp::D2H { dst: HostArr(i), src: BufId(i) });
+    }
+    let arrays = vec![vec![0u8; bytes]; launches];
+    let check_block = block;
+    let check = Box::new(move |arrays: &[Vec<u8>]| -> Result<(), String> {
+        for (i, arr) in arrays.iter().enumerate() {
+            for t in 0..check_block as usize {
+                let got = i32::from_le_bytes(arr[t * 4..t * 4 + 4].try_into().unwrap());
+                let want = t as i32 + i as i32;
+                if got != want {
+                    return Err(format!("storm launch {i}, lane {t}: got {got}, want {want}"));
+                }
+            }
+        }
+        Ok(())
+    });
+    BenchProgram {
+        kernels: vec![kernel],
+        natives: vec![None],
+        vectorized: vec![None],
+        host: HostProgram::new(ops),
+        arrays,
+        num_bufs: launches,
+        check,
+        est_insts_per_block: vec![4 * block as u64],
+        mem_cap: launches * (bytes + 16) + 4096,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchsuite::spec::{self, Backend};
+    use crate::frameworks::BackendCfg;
+    use crate::host::HostOp;
+
+    /// Disjoint buffers really are barrier-free until the D2H phase —
+    /// the property the coalescer's batching window depends on.
+    #[test]
+    fn storm_has_one_implicit_sync() {
+        let built = spec::build_prepared("storm", storm_program(16, 8));
+        let syncs =
+            built.host.ops.iter().filter(|o| matches!(o, HostOp::ImplicitSync)).count();
+        assert_eq!(syncs, 1, "exactly one barrier, before the first conflicting D2H");
+    }
+
+    #[test]
+    fn storm_validates_on_reference() {
+        let built = spec::build_prepared("storm", storm_program(8, 4));
+        let out = spec::run_on(&built, Backend::Reference, BackendCfg::default());
+        out.check.expect("storm validates");
+    }
+}

@@ -6,12 +6,14 @@
 //! Every test arms a watchdog that aborts the process if the scheduler
 //! wedges — a deadlock must fail CI, not hang it.
 
-use cupbop::compiler::{compile_kernel, ArgValue};
+use cupbop::benchsuite::spec::Scale;
+use cupbop::compiler::{compile_kernel, ArgValue, CompileCfg};
 use cupbop::frameworks::{
     BackendCfg, CupbopRuntime, ExecMode, KernelVariants, ReferenceRuntime,
 };
 use cupbop::host::{ResolvedLaunch, RuntimeApi};
 use cupbop::ir::*;
+use cupbop::serve::{Request, ServeCfg, Server};
 use cupbop::testkit::{for_random_cases, Rng};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -394,4 +396,105 @@ fn round_robin_streams_complete() {
         rt.d2h(&mut out, buf);
         assert_eq!(i32::from_le_bytes(out), 1600, "streams={streams}");
     }
+}
+
+// ---- serving-runtime fairness --------------------------------------
+//
+// The `serve` subsystem multiplexes many client sessions onto this
+// scheduler. Its admission-control promises — strict round-robin, no
+// starvation by a greedy client, and the per-session in-flight cap —
+// are scheduler properties, so they are stressed here alongside the
+// stream/event mixes, using `admission_log()` as the witness.
+
+fn serve_request(name: &str) -> Request {
+    Request::bench(name, Scale::Tiny, CompileCfg::default())
+}
+
+/// With one executor the admission order is fully deterministic: the
+/// cursor must rotate through the sessions in strict `0,1,2,3,...`
+/// order as long as every session still has pending work.
+#[test]
+fn serve_admission_is_strict_round_robin() {
+    let _wd = Watchdog::arm("serve_admission_is_strict_round_robin", 300);
+    let srv = Server::new(ServeCfg {
+        pool_size: 2,
+        executors: 1,
+        start_paused: true,
+        ..ServeCfg::default()
+    });
+    let sessions: Vec<_> = (0..4).map(|_| srv.session()).collect();
+    for _round in 0..3 {
+        for &s in &sessions {
+            srv.submit(s, serve_request("fir"));
+        }
+    }
+    srv.resume();
+    srv.wait_all();
+    let want: Vec<usize> = (0..12).map(|i| i % sessions.len()).collect();
+    assert_eq!(srv.admission_log(), want, "single executor admits in strict rotation");
+}
+
+/// A greedy session with a deep queue cannot starve a light one: the
+/// light session's submissions are admitted within the first two
+/// rotations, and every session drains completely.
+#[test]
+fn serve_greedy_session_cannot_starve_light_one() {
+    let _wd = Watchdog::arm("serve_greedy_session_cannot_starve_light_one", 300);
+    let srv = Server::new(ServeCfg {
+        pool_size: 2,
+        executors: 2,
+        max_in_flight: 2,
+        start_paused: true,
+        ..ServeCfg::default()
+    });
+    let greedy = srv.session();
+    let light = srv.session();
+    for _ in 0..24 {
+        srv.submit(greedy, serve_request("fir"));
+    }
+    for _ in 0..2 {
+        srv.submit(light, serve_request("hist"));
+    }
+    srv.resume();
+    srv.wait_all();
+    let log = srv.admission_log();
+    let light_at: Vec<usize> =
+        log.iter().enumerate().filter(|(_, s)| **s == light).map(|(i, _)| i).collect();
+    assert_eq!(light_at.len(), 2);
+    assert!(
+        light_at[1] <= 3,
+        "light session admitted within two rotations despite the greedy queue, got {log:?}"
+    );
+    for s in [greedy, light] {
+        let st = srv.session_stats(s);
+        assert_eq!(st.completed, st.submitted, "session {s} drains");
+    }
+}
+
+/// The per-session in-flight cap binds even when more executors are
+/// available than the cap allows one session to occupy.
+#[test]
+fn serve_in_flight_cap_is_respected() {
+    let _wd = Watchdog::arm("serve_in_flight_cap_is_respected", 300);
+    let srv = Server::new(ServeCfg {
+        pool_size: 2,
+        executors: 4,
+        max_in_flight: 2,
+        start_paused: true,
+        ..ServeCfg::default()
+    });
+    let s = srv.session();
+    for _ in 0..16 {
+        srv.submit(s, serve_request("fir"));
+    }
+    srv.resume();
+    srv.wait_all();
+    let st = srv.session_stats(s);
+    assert_eq!(st.completed, 16);
+    assert!(st.max_in_flight >= 1);
+    assert!(
+        st.max_in_flight <= 2,
+        "4 executors must not push one session past its cap, saw {}",
+        st.max_in_flight
+    );
 }

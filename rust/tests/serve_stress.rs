@@ -1,0 +1,204 @@
+//! Differential stress for the serving runtime: hundreds of client
+//! sessions × mixed benchmarks × mixed compile knobs, every served
+//! result bit-compared against a fresh one-shot `Reference` run — the
+//! ISSUE's correctness contract for kernel-as-a-service. Also pins the
+//! cache-hit identity property (a hit returns bit-identical outputs
+//! *and* `ExecStats` to a cold compile, at every opt level) and the
+//! coalescing-is-invisible property on the Fig 11 storm shape.
+//!
+//! Every test arms a watchdog that aborts the process if the server
+//! wedges — an admission deadlock must fail CI, not hang it.
+
+use cupbop::benchsuite::spec::{self, Backend, Scale};
+use cupbop::compiler::{CompileCfg, OptLevel};
+use cupbop::frameworks::BackendCfg;
+use cupbop::serve::{storm, Request, ServeBackend, ServeCfg, Server, Ticket};
+use cupbop::testkit::Rng;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Aborts the process if not disarmed (dropped) within `secs`.
+struct Watchdog {
+    tx: mpsc::Sender<()>,
+}
+
+impl Watchdog {
+    fn arm(name: &'static str, secs: u64) -> Self {
+        let (tx, rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            if rx.recv_timeout(Duration::from_secs(secs)) == Err(mpsc::RecvTimeoutError::Timeout) {
+                eprintln!("watchdog: `{name}` still running after {secs}s — serving deadlock?");
+                std::process::abort();
+            }
+        });
+        Watchdog { tx }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        let _ = self.tx.send(());
+    }
+}
+
+/// Fast-at-Tiny benchmarks spanning both suites and several feature
+/// shapes (shared memory, atomics, multi-kernel host programs).
+const BENCHES: &[&str] = &["fir", "hist", "kmeans", "bs", "nn", "pathfinder"];
+
+/// The oracle: a fresh one-shot `Reference` run at the exact same
+/// compile knobs, arrays returned for bit-comparison.
+fn oracle_arrays(name: &str, cfg: CompileCfg) -> Vec<Vec<u8>> {
+    let b = spec::by_name(name).unwrap_or_else(|| panic!("unknown benchmark `{name}`"));
+    let built = spec::build_program_cfg(&b, Scale::Tiny, cfg);
+    let (out, arrays) = spec::run_with_arrays(&built, Backend::Reference, BackendCfg::default());
+    out.check.unwrap_or_else(|e| panic!("oracle {name} {cfg:?}: {e}"));
+    arrays
+}
+
+fn assert_bit_identical(served: &[Vec<u8>], want: &[Vec<u8>], what: &str) {
+    assert_eq!(served.len(), want.len(), "{what}: array count");
+    for (i, (g, w)) in served.iter().zip(want).enumerate() {
+        assert!(g == w, "{what}: array {i} differs from one-shot Reference");
+    }
+}
+
+/// The tentpole contract: ≥100 concurrent sessions submitting a random
+/// mix of benchmarks × opt levels × fusion toggles, every response
+/// validator-green and bit-identical to the Reference oracle, with the
+/// compiled-kernel cache demonstrably in play.
+#[test]
+fn hundred_sessions_bit_identical_to_reference() {
+    let _wd = Watchdog::arm("hundred_sessions_bit_identical_to_reference", 600);
+    let srv = Server::new(ServeCfg {
+        pool_size: 4,
+        executors: 4,
+        max_in_flight: 2,
+        // > 6 benches × 4 opts × 3 fuse states, so misses here are
+        // cold compiles, never evictions
+        cache_capacity: 128,
+        keep_arrays: true,
+        ..ServeCfg::default()
+    });
+    let mut rng = Rng::new(0x5e55_10f5);
+    let mut tickets: Vec<(Ticket, &str, CompileCfg)> = Vec::new();
+    let sessions: Vec<_> = (0..120).map(|_| srv.session()).collect();
+    for &s in &sessions {
+        for _ in 0..rng.range_usize(1, 4) {
+            let name = *rng.choose(BENCHES);
+            let opt = OptLevel::ALL[rng.range_usize(0, OptLevel::ALL.len())];
+            let fuse = match rng.below(3) {
+                0 => None,
+                1 => Some(false),
+                _ => Some(true),
+            };
+            let cfg = CompileCfg { opt, fuse };
+            tickets.push((srv.submit(s, Request::bench(name, Scale::Tiny, cfg)), name, cfg));
+        }
+    }
+    srv.wait_all();
+
+    let mut oracle: HashMap<(&str, CompileCfg), Vec<Vec<u8>>> = HashMap::new();
+    for (t, name, cfg) in &tickets {
+        let r = srv.wait(*t);
+        r.check.as_ref().unwrap_or_else(|e| panic!("{name} {cfg:?}: {e}"));
+        let served = r.arrays.as_ref().expect("keep_arrays retains outputs");
+        let want = oracle.entry((*name, *cfg)).or_insert_with(|| oracle_arrays(name, *cfg));
+        assert_bit_identical(served, want, &format!("{name} {cfg:?}"));
+    }
+
+    for &s in &sessions {
+        let st = srv.session_stats(s);
+        assert_eq!(st.completed, st.submitted, "session {s} drains");
+    }
+    let cs = srv.cache_stats();
+    assert!(cs.misses > 0, "cold compiles happened");
+    assert!(cs.hits > 0, "{} requests over {} distinct keys must hit", tickets.len(), cs.entries);
+    assert!(cs.hit_rate() > 0.0);
+    assert_eq!(cs.evictions, 0, "capacity covers the key space");
+    assert_eq!(cs.hits + cs.misses, tickets.len() as u64);
+}
+
+/// Satellite: a cache hit returns bit-identical outputs, checksums and
+/// `ExecStats` to the cold compile that populated the entry — at every
+/// opt level — and both match the one-shot Reference oracle.
+#[test]
+fn cache_hits_bit_identical_to_cold_compiles() {
+    let _wd = Watchdog::arm("cache_hits_bit_identical_to_cold_compiles", 600);
+    for opt in OptLevel::ALL {
+        let srv = Server::new(ServeCfg {
+            pool_size: 2,
+            executors: 1,
+            keep_arrays: true,
+            ..ServeCfg::default()
+        });
+        let s = srv.session();
+        let cfg = CompileCfg::opt(opt);
+        let cold = srv.wait(srv.submit(s, Request::bench("hist", Scale::Tiny, cfg)));
+        let hot = srv.wait(srv.submit(s, Request::bench("hist", Scale::Tiny, cfg)));
+        cold.check.as_ref().unwrap_or_else(|e| panic!("cold {}: {e}", opt.name()));
+        hot.check.as_ref().unwrap_or_else(|e| panic!("hot {}: {e}", opt.name()));
+        assert!(!cold.cache_hit, "{}: first submission compiles", opt.name());
+        assert!(hot.cache_hit, "{}: repeat submission hits", opt.name());
+        assert_eq!(cold.checksums, hot.checksums, "{}: checksums", opt.name());
+        assert_eq!(cold.stats, hot.stats, "{}: a hit must not change ExecStats", opt.name());
+        let cold_arrays = cold.arrays.as_ref().unwrap();
+        assert_bit_identical(hot.arrays.as_ref().unwrap(), cold_arrays, opt.name());
+        assert_bit_identical(cold_arrays, &oracle_arrays("hist", cfg), opt.name());
+    }
+}
+
+/// Satellite: coalescing is semantically invisible on the Fig 11 storm
+/// shape — served arrays bit-match the Reference oracle with batching
+/// on and off, and the counters prove batching actually engaged.
+#[test]
+fn coalesced_storm_matches_one_shot_reference() {
+    let _wd = Watchdog::arm("coalesced_storm_matches_one_shot_reference", 600);
+    let built = spec::build_prepared("storm", storm::storm_program(64, 8));
+    let (out, want) = spec::run_with_arrays(&built, Backend::Reference, BackendCfg::default());
+    out.check.expect("storm oracle green");
+    for coalesce in [false, true] {
+        let srv = Server::new(ServeCfg {
+            pool_size: 4,
+            executors: 2,
+            coalesce,
+            keep_arrays: true,
+            ..ServeCfg::default()
+        });
+        let s = srv.session();
+        let t = srv.submit(
+            s,
+            Request::prepared("storm", storm::storm_program(64, 8), CompileCfg::default()),
+        );
+        let r = srv.wait(t);
+        r.check.as_ref().unwrap_or_else(|e| panic!("coalesce={coalesce}: {e}"));
+        assert_bit_identical(r.arrays.as_ref().unwrap(), &want, "storm");
+        let (absorbed, fused) = srv.coalesce_counters();
+        if coalesce {
+            assert!(absorbed >= 2 && fused >= 1, "storm launches were actually batched");
+        } else {
+            assert_eq!((absorbed, fused), (0, 0));
+        }
+    }
+}
+
+/// Every per-request backend serves green through the same Server
+/// surface and cache, and matches the Reference oracle bit-for-bit.
+#[test]
+fn per_request_backends_serve_bit_identical() {
+    let _wd = Watchdog::arm("per_request_backends_serve_bit_identical", 600);
+    let want = oracle_arrays("fir", CompileCfg::default());
+    for backend in [Backend::Reference, Backend::CuPBoP, Backend::HipCpu, Backend::Dpcpp] {
+        let srv = Server::new(ServeCfg {
+            backend: ServeBackend::PerRequest(backend),
+            pool_size: 2,
+            executors: 2,
+            keep_arrays: true,
+            ..ServeCfg::default()
+        });
+        let s = srv.session();
+        let r = srv.wait(srv.submit(s, Request::bench("fir", Scale::Tiny, CompileCfg::default())));
+        r.check.as_ref().unwrap_or_else(|e| panic!("{}: {e}", backend.name()));
+        assert_bit_identical(r.arrays.as_ref().unwrap(), &want, backend.name());
+    }
+}
