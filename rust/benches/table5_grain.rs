@@ -6,6 +6,13 @@
 //! AES) are best at small grains (average fetching); HIST (atomics)
 //! tolerates bigger grains than HIST-no-atomic because fewer active
 //! threads contend on the bins.
+//!
+//! Two policy columns ride along after the fixed-grain sweep: `avg`
+//! (PolicyMode::Average — the paper's static CuPBoP default) and
+//! `model` (PolicyMode::Auto — grain picked by the compiler's static
+//! cost estimate against the cost-model threshold). The bottom line
+//! prints the geomean of avg/model per-benchmark time ratios; the
+//! model pick should be at least as good as Average (ratio >= 1).
 
 use cupbop::benchkit;
 use cupbop::benchsuite::spec::{self, Backend, Scale};
@@ -21,8 +28,10 @@ fn main() {
     for g in GRAINS {
         print!(" {g:>8}");
     }
+    print!(" {:>8} {:>8}", "avg", "model");
     println!("   #inst");
 
+    let mut ratios = Vec::new();
     for name in ["bs", "fir", "ga", "hist", "hist-no-atomic", "pr", "aes"] {
         let b = spec::by_name(name).unwrap();
         let built = spec::build_program(&b, scale);
@@ -35,29 +44,38 @@ fn main() {
                 .unwrap();
             rt.stats.snapshot().instructions
         };
-        print!("{name:<16}");
-        let mut best = (f64::MAX, 0u64);
-        for g in GRAINS {
+        let time_policy = |policy: PolicyMode| {
             let s = benchkit::bench(1, 3, || {
                 let out = spec::run_on(
                     &built,
                     Backend::CuPBoP,
                     BackendCfg {
                         pool_size: pool,
-                        policy: PolicyMode::Fixed(g),
+                        policy,
                         exec: ExecMode::Native,
                         ..Default::default()
                     },
                 );
-                assert!(out.check.is_ok(), "{name}@grain{g}");
+                assert!(out.check.is_ok(), "{name}@{policy:?}");
             });
-            let ms = s.mean.as_secs_f64() * 1e3;
+            s.mean.as_secs_f64() * 1e3
+        };
+        print!("{name:<16}");
+        let mut best = (f64::MAX, 0u64);
+        for g in GRAINS {
+            let ms = time_policy(PolicyMode::Fixed(g));
             if ms < best.0 {
                 best = (ms, g);
             }
             print!(" {ms:>8.3}");
         }
+        let avg_ms = time_policy(PolicyMode::Average);
+        let model_ms = time_policy(PolicyMode::Auto);
+        ratios.push(avg_ms / model_ms.max(1e-9));
+        print!(" {avg_ms:>8.3} {model_ms:>8.3}");
         println!("   {}k (best@{})", insts / 1000, best.1);
     }
-    println!("\n(red in the paper = average grain; green = best aggressive grain)");
+    let geo = (ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len().max(1) as f64).exp();
+    println!("\ngeomean avg/model time ratio: {geo:.2}x (>= 1.00x means the model pick wins)");
+    println!("(red in the paper = average grain; green = best aggressive grain)");
 }

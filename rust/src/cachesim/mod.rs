@@ -234,4 +234,50 @@ mod tests {
         assert_eq!(c.stats.loads, 2);
         assert_eq!(c.stats.load_misses, 2);
     }
+
+    /// Hand-computed exact counts, stride-1: `tiny(4096, 4)` is
+    /// 16 sets x 4 ways; 256 sequential 4-byte loads cover lines
+    /// 0..16, well within capacity. Each 64 B line takes 16 accesses:
+    /// one compulsory miss, then 15 hits.
+    #[test]
+    fn stride1_exact_counts() {
+        let trace: Vec<TraceRec> =
+            (0u64..256).map(|i| TraceRec { addr: i * 4, bytes: 4, is_write: false }).collect();
+        let s = simulate(&trace, CacheCfg::tiny(4096, 4));
+        assert_eq!(s, CacheStats { loads: 256, load_misses: 16, stores: 0, store_misses: 0 });
+    }
+
+    /// Hand-computed exact counts, conflict stride: a 1024-byte stride
+    /// on `tiny(4096, 4)` maps every line (addr/64 = 16*i) to set 0.
+    /// Eight distinct lines cycling through one 4-way LRU set thrash:
+    /// both passes miss on every access. Odd indices are stores, so
+    /// the per-class counters are pinned too.
+    #[test]
+    fn strided_conflict_exact_counts() {
+        let mut trace = Vec::new();
+        for _pass in 0..2 {
+            for i in 0..8u64 {
+                trace.push(TraceRec { addr: i * 1024, bytes: 8, is_write: i % 2 == 1 });
+            }
+        }
+        let s = simulate(&trace, CacheCfg::tiny(4096, 4));
+        assert_eq!(s, CacheStats { loads: 8, load_misses: 8, stores: 8, store_misses: 8 });
+    }
+
+    /// Hand-computed exact counts, pseudo-random: a glibc-constant LCG
+    /// has `a = 1 (mod 4)`, `c = 1 (mod 4)`, so `x % 4` walks every
+    /// residue; the 4 target lines exactly fill one 4-way set (256 B
+    /// cache). First touch of each line misses, every later access
+    /// hits regardless of order: 32 accesses, exactly 4 misses.
+    #[test]
+    fn random_trace_compulsory_misses_only() {
+        let mut x: u64 = 1;
+        let mut trace = Vec::new();
+        for _ in 0..32 {
+            x = (x * 1103515245 + 12345) % (1 << 31);
+            trace.push(TraceRec { addr: (x % 4) * 64, bytes: 4, is_write: false });
+        }
+        let s = simulate(&trace, CacheCfg { size_bytes: 256, ways: 4, line_bytes: 64 });
+        assert_eq!(s, CacheStats { loads: 32, load_misses: 4, stores: 0, store_misses: 0 });
+    }
 }

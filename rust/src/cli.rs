@@ -12,7 +12,7 @@
 //! at `-O2`.
 
 use crate::benchsuite::spec::{Backend, Scale};
-use crate::compiler::{CompileCfg, OptLevel};
+use crate::compiler::{CompileCfg, OptLevel, TuneCfg};
 use crate::frameworks::{BackendCfg, ExecMode, PolicyMode, SchedKind};
 
 /// A flag whose value did not parse. `Display` renders the exact
@@ -76,9 +76,21 @@ pub fn parse_fuse(args: &[String]) -> Result<Option<bool>, CliError> {
     }
 }
 
-/// `--opt` + `--fuse` combined into the compiler's knob struct.
+/// `--tune off|auto` (default off: every knob keeps its static
+/// default and the pipeline dump is byte-identical to previous
+/// releases).
+pub fn parse_tune(args: &[String]) -> Result<TuneCfg, CliError> {
+    match flag_value(args, "--tune") {
+        None | Some("off") => Ok(TuneCfg::Off),
+        Some("auto") => Ok(TuneCfg::Auto),
+        Some(other) => Err(CliError::new("--tune", other, "off|auto")),
+    }
+}
+
+/// `--opt` + `--fuse` + `--tune` combined into the compiler's knob
+/// struct.
 pub fn parse_compile_cfg(args: &[String]) -> Result<CompileCfg, CliError> {
-    Ok(CompileCfg { opt: parse_opt(args)?, fuse: parse_fuse(args)? })
+    Ok(CompileCfg { opt: parse_opt(args)?, fuse: parse_fuse(args)?, tune: parse_tune(args)? })
 }
 
 /// `--backend cupbop|hipcpu|dpcpp|reference` (default cupbop).
@@ -179,6 +191,8 @@ mod tests {
         assert_eq!(parse_exec(&args), Ok(ExecMode::Bytecode));
         assert_eq!(parse_sched(&args), Ok(SchedKind::WorkStealing));
         assert_eq!(parse_grain(&args), Ok(PolicyMode::Auto));
+        assert_eq!(parse_tune(&args), Ok(TuneCfg::Off));
+        assert_eq!(parse_compile_cfg(&args), Ok(CompileCfg::default()));
         let cfg = parse_backend_cfg(&args).unwrap();
         assert_eq!(cfg.streams, 1);
     }
@@ -194,6 +208,10 @@ mod tests {
         assert_eq!(parse_exec(&a(&["--exec", "interp"])), Ok(ExecMode::Interpret));
         assert_eq!(parse_sched(&a(&["--sched", "mutex"])), Ok(SchedKind::MutexQueue));
         assert_eq!(parse_grain(&a(&["--grain", "16"])), Ok(PolicyMode::Fixed(16)));
+        assert_eq!(parse_tune(&a(&["--tune", "auto"])), Ok(TuneCfg::Auto));
+        assert_eq!(parse_tune(&a(&["--tune", "off"])), Ok(TuneCfg::Off));
+        let cfg = parse_compile_cfg(&a(&["--opt", "3", "--tune", "auto"])).unwrap();
+        assert_eq!((cfg.opt, cfg.tune), (OptLevel::O3, TuneCfg::Auto));
         assert_eq!(parse_count(&a(&["--pool", "8"]), "--pool"), Ok(Some(8)));
         let cfg = parse_backend_cfg(&a(&["--pool", "2", "--streams", "4"])).unwrap();
         assert_eq!((cfg.pool_size, cfg.streams), (2, 4));
@@ -231,6 +249,10 @@ mod tests {
         assert_eq!(
             parse_grain(&a(&["--grain", "zero"])).map_err(msg),
             Err("unknown --grain `zero` (expected avg|auto|<blocks per fetch>)".to_string())
+        );
+        assert_eq!(
+            parse_tune(&a(&["--tune", "fast"])).map_err(msg),
+            Err("unknown --tune `fast` (expected off|auto)".to_string())
         );
         assert_eq!(
             parse_count(&a(&["--pool", "0"]), "--pool").map_err(msg),

@@ -1,0 +1,878 @@
+//! Static per-kernel cost model + per-ISA execution profiles (ROADMAP
+//! item 5): turn `roofline/platforms.rs` and `cachesim` from paper
+//! artifacts into a performance-prediction tool the optimizer and the
+//! runtime consult.
+//!
+//! Two halves:
+//!
+//! 1. **Instruction mix** ([`analyze`]) — a static walk over the MPMD
+//!    kernel classifying every operation as scalar vs vector (from the
+//!    `-O2` uniformity lattice: a lane-varying op inside a thread loop
+//!    executes once per thread, a block-uniform one once per block),
+//!    int vs float (from `passes::types`), load/store (with byte
+//!    volume), and divergence/mask machinery (varying branches, break/
+//!    continue/return, warp collectives). Loop trip counts come from
+//!    constant bounds where available, a fixed default otherwise, so
+//!    the result is an *estimate* of per-block dynamic counts, not an
+//!    exact replay.
+//! 2. **ISA profiles** ([`profile_for`]) — cycles-per-instruction-class
+//!    tables for the Table III platforms (x86 AVX2, AArch64 SVE,
+//!    scalar RISC-V, the Vortex RISC-V GPGPU warp, CUDA warps), plus an
+//!    LLC miss penalty. [`predict`] combines a [`KernelCost`] with a
+//!    profile and a miss rate (calibrated per platform by replaying the
+//!    engine's memory trace through `cachesim` at that platform's LLC
+//!    geometry — [`platform_miss_rate`]) into predicted cycles/block
+//!    and a memory- vs compute-bound verdict.
+//!
+//! The predictions drive `--tune auto` ([`TuneKnobs`], [`derive_knobs`]):
+//! the VM's lane-chunk width from the predicted vector-op share, the
+//! per-region -O2 vs -O3 coarsening decision from the predicted mask
+//! overhead, and `GrainPolicy::Auto`'s light-kernel threshold from the
+//! memory- vs compute-bound verdict. The serving runtime refines the
+//! same knobs from *observed* counters on cache hits
+//! ([`knobs_from_observed`]). Every knob is accounting-transparent:
+//! tuned and untuned runs produce bit-identical outputs, `ExecStats`
+//! and traces (enforced by `tests/opt_parity.rs`); only wall-clock
+//! moves.
+
+use crate::cachesim::{self, CacheCfg};
+use crate::exec::TraceRec;
+use crate::ir::{Const, Expr, MpmdKernel, Stmt};
+use crate::roofline::platforms::Platform;
+
+use super::passes::types::{self, Types};
+use super::passes::uniformity::{expr_varying, UniformInfo};
+
+/// Assumed trip count for loops whose bounds are not compile-time
+/// constants (data-dependent `for`/`while` heads).
+pub const DEFAULT_TRIP: f64 = 8.0;
+
+/// Nominal block size used when a cost ratio (vector share, mask
+/// share) is needed before the launch geometry is known.
+pub const NOMINAL_BLOCK: u64 = 256;
+
+/// Mask-machinery share above which a sync-free region is worth
+/// coarsening at `-O2` under `--tune auto` (and below which a region
+/// is left masked even at `-O3`): the coarse jump nest only pays for
+/// itself when divergence bookkeeping is a real fraction of the work.
+pub const COARSE_MASK_SHARE: f64 = 0.08;
+
+/// Estimated dynamic instruction counts for one kernel, split by
+/// execution frequency: `per_block` ops run once per block dispatch
+/// (block-uniform work — geometry math, loop heads, parameter reads),
+/// `per_thread` ops run once per thread (lane-varying work inside the
+/// fissioned thread loops). Counts are `f64` because branch
+/// probabilities and default trip counts make them fractional.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InstMix {
+    pub scalar_int: f64,
+    pub scalar_float: f64,
+    pub vector_int: f64,
+    pub vector_float: f64,
+    pub loads: f64,
+    pub stores: f64,
+    /// Global/shared memory traffic in bytes.
+    pub bytes: f64,
+    /// Divergence bookkeeping: mask pushes/pops for varying branches,
+    /// break/continue/return lowering, warp collectives.
+    pub mask_ops: f64,
+    pub atomics: f64,
+}
+
+impl InstMix {
+    pub fn total_ops(&self) -> f64 {
+        self.scalar_int
+            + self.scalar_float
+            + self.vector_int
+            + self.vector_float
+            + self.loads
+            + self.stores
+            + self.mask_ops
+            + self.atomics
+    }
+
+    pub fn vector_ops(&self) -> f64 {
+        self.vector_int + self.vector_float
+    }
+
+    pub fn float_ops(&self) -> f64 {
+        self.scalar_float + self.vector_float
+    }
+
+    pub fn add(&mut self, o: &InstMix) {
+        self.scalar_int += o.scalar_int;
+        self.scalar_float += o.scalar_float;
+        self.vector_int += o.vector_int;
+        self.vector_float += o.vector_float;
+        self.loads += o.loads;
+        self.stores += o.stores;
+        self.bytes += o.bytes;
+        self.mask_ops += o.mask_ops;
+        self.atomics += o.atomics;
+    }
+}
+
+/// The static cost estimate the pipeline attaches to every
+/// [`super::CompiledKernel`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KernelCost {
+    pub per_block: InstMix,
+    pub per_thread: InstMix,
+}
+
+impl KernelCost {
+    /// Combine two kernels' costs (program-level aggregation for the
+    /// cross-ISA prediction report).
+    pub fn merge(&mut self, o: &KernelCost) {
+        self.per_block.add(&o.per_block);
+        self.per_thread.add(&o.per_thread);
+    }
+
+    /// Estimated dynamic instructions for one block of `block_size`
+    /// threads — the quantity `GrainPolicy::Auto` weighs against its
+    /// light-kernel threshold (the paper's Table V `# inst` column,
+    /// normalized per block).
+    pub fn est_insts_per_block(&self, block_size: u64) -> u64 {
+        let b = block_size.max(1) as f64;
+        (self.per_block.total_ops() + b * self.per_thread.total_ops()).ceil() as u64
+    }
+
+    pub fn flops_per_block(&self, block_size: u64) -> f64 {
+        let b = block_size.max(1) as f64;
+        self.per_block.float_ops() + b * self.per_thread.float_ops()
+    }
+
+    pub fn bytes_per_block(&self, block_size: u64) -> f64 {
+        let b = block_size.max(1) as f64;
+        self.per_block.bytes + b * self.per_thread.bytes
+    }
+
+    /// Predicted arithmetic intensity (flops/byte) — comparable to a
+    /// platform's roofline ridge point.
+    pub fn arithmetic_intensity(&self, block_size: u64) -> f64 {
+        self.flops_per_block(block_size) / self.bytes_per_block(block_size).max(1.0)
+    }
+
+    /// Fraction of ops that are lane-vectorizable at a nominal block
+    /// size — drives the VM chunk-width knob.
+    pub fn vector_share(&self) -> f64 {
+        let b = NOMINAL_BLOCK as f64;
+        let total = self.per_block.total_ops() + b * self.per_thread.total_ops();
+        let vec = self.per_block.vector_ops() + b * self.per_thread.vector_ops();
+        vec / total.max(1.0)
+    }
+
+    /// Fraction of ops that are divergence/mask machinery at a nominal
+    /// block size — drives the per-region coarsening knob.
+    pub fn mask_share(&self) -> f64 {
+        let b = NOMINAL_BLOCK as f64;
+        let total = self.per_block.total_ops() + b * self.per_thread.total_ops();
+        let mask = self.per_block.mask_ops + b * self.per_thread.mask_ops;
+        mask / total.max(1.0)
+    }
+
+    /// The light-kernel threshold `GrainPolicy::Auto` should use on the
+    /// host: a memory-bound kernel tolerates coarser grains (threads
+    /// stall on the LLC either way, so idling some of them is cheap),
+    /// so its threshold doubles; compute-bound kernels keep the
+    /// measured Table V default.
+    pub fn grain_threshold(&self) -> u64 {
+        let light = crate::runtime::grain::LIGHT_KERNEL_INSTS_PER_BLOCK;
+        match predict(self, NOMINAL_BLOCK, &host_profile(), DEFAULT_MISS_RATE).bound {
+            Bound::Memory => light * 2,
+            Bound::Compute => light,
+        }
+    }
+}
+
+/// Walk one expression tree, charging `mult` executions of every op
+/// node to `mix`. `vector_ctx` is true inside a thread loop; an op is
+/// vector only if it is both in thread context *and* lane-varying.
+fn expr_cost(e: &Expr, t: &Types, varying: &[bool], mult: f64, vector_ctx: bool, mix: &mut InstMix) {
+    let vec = vector_ctx && expr_varying(e, varying);
+    let is_f = t.expr_ty(e).map(|v| v.is_float()).unwrap_or(false);
+    match e {
+        Expr::Bin(_, a, b) => {
+            add_op(mix, vec, is_f, mult);
+            expr_cost(a, t, varying, mult, vector_ctx, mix);
+            expr_cost(b, t, varying, mult, vector_ctx, mix);
+        }
+        Expr::Un(_, a) | Expr::Cast(_, a) => {
+            add_op(mix, vec, is_f, mult);
+            expr_cost(a, t, varying, mult, vector_ctx, mix);
+        }
+        Expr::Load { ptr, ty } => {
+            mix.loads += mult;
+            mix.bytes += mult * ty.size() as f64;
+            expr_cost(ptr, t, varying, mult, vector_ctx, mix);
+        }
+        Expr::Index { base, idx, .. } => {
+            // address arithmetic: one scale-and-add
+            add_op(mix, vec, false, mult);
+            expr_cost(base, t, varying, mult, vector_ctx, mix);
+            expr_cost(idx, t, varying, mult, vector_ctx, mix);
+        }
+        Expr::Select { cond, then_, else_ } => {
+            add_op(mix, vec, is_f, mult);
+            expr_cost(cond, t, varying, mult, vector_ctx, mix);
+            expr_cost(then_, t, varying, mult, vector_ctx, mix);
+            expr_cost(else_, t, varying, mult, vector_ctx, mix);
+        }
+        Expr::WarpShfl { val, lane, .. } => {
+            mix.mask_ops += mult;
+            expr_cost(val, t, varying, mult, vector_ctx, mix);
+            expr_cost(lane, t, varying, mult, vector_ctx, mix);
+        }
+        Expr::WarpVote { pred, .. } => {
+            mix.mask_ops += mult;
+            expr_cost(pred, t, varying, mult, vector_ctx, mix);
+        }
+        Expr::Exchange { lane, .. } => {
+            mix.mask_ops += mult;
+            expr_cost(lane, t, varying, mult, vector_ctx, mix);
+        }
+        Expr::NvIntrinsic { args, .. } => {
+            add_op(mix, vec, is_f, mult);
+            for a in args {
+                expr_cost(a, t, varying, mult, vector_ctx, mix);
+            }
+        }
+        // Const / Reg / Special / Param / SharedBase / DynSharedBase /
+        // VoteResult: register or immediate reads, free.
+        _ => {}
+    }
+}
+
+fn add_op(mix: &mut InstMix, vec: bool, is_float: bool, mult: f64) {
+    match (vec, is_float) {
+        (true, true) => mix.vector_float += mult,
+        (true, false) => mix.vector_int += mult,
+        (false, true) => mix.scalar_float += mult,
+        (false, false) => mix.scalar_int += mult,
+    }
+}
+
+fn const_i64(e: &Expr) -> Option<i64> {
+    match e {
+        Expr::Const(Const::I32(v)) => Some(*v as i64),
+        Expr::Const(Const::I64(v)) => Some(*v),
+        _ => None,
+    }
+}
+
+/// Estimated iterations of a `for` head; exact for constant bounds,
+/// [`DEFAULT_TRIP`] otherwise.
+fn trip_count(start: &Expr, end: &Expr, step: &Expr) -> f64 {
+    match (const_i64(start), const_i64(end), const_i64(step)) {
+        (Some(s), Some(e), _) if e <= s => 0.0,
+        (Some(s), Some(e), Some(st)) if st > 0 => (((e - s) + st - 1) / st) as f64,
+        _ => DEFAULT_TRIP,
+    }
+}
+
+fn stmt_cost(
+    s: &Stmt,
+    t: &Types,
+    varying: &[bool],
+    mult: f64,
+    in_thread: bool,
+    block: &mut InstMix,
+    thread: &mut InstMix,
+) {
+    match s {
+        Stmt::Assign { expr, .. } => {
+            let mix = if in_thread { &mut *thread } else { &mut *block };
+            let vec = in_thread && expr_varying(expr, varying);
+            let is_f = t.expr_ty(expr).map(|v| v.is_float()).unwrap_or(false);
+            add_op(mix, vec, is_f, mult);
+            expr_cost(expr, t, varying, mult, in_thread, mix);
+        }
+        Stmt::Store { ptr, val, ty } => {
+            let mix = if in_thread { &mut *thread } else { &mut *block };
+            mix.stores += mult;
+            mix.bytes += mult * ty.size() as f64;
+            expr_cost(ptr, t, varying, mult, in_thread, mix);
+            expr_cost(val, t, varying, mult, in_thread, mix);
+        }
+        Stmt::If { cond, then_, else_ } => {
+            {
+                let mix = if in_thread { &mut *thread } else { &mut *block };
+                expr_cost(cond, t, varying, mult, in_thread, mix);
+                if in_thread && expr_varying(cond, varying) {
+                    // mask push + pop per divergent branch
+                    mix.mask_ops += 2.0 * mult;
+                } else {
+                    add_op(mix, false, false, mult); // the compare/jump
+                }
+            }
+            // Without branch profiles both arms are taken half the time.
+            for st in then_ {
+                stmt_cost(st, t, varying, mult * 0.5, in_thread, block, thread);
+            }
+            for st in else_ {
+                stmt_cost(st, t, varying, mult * 0.5, in_thread, block, thread);
+            }
+        }
+        Stmt::For { start, end, step, body, .. } => {
+            let trips = trip_count(start, end, step);
+            {
+                let mix = if in_thread { &mut *thread } else { &mut *block };
+                expr_cost(start, t, varying, mult, in_thread, mix);
+                expr_cost(end, t, varying, mult, in_thread, mix);
+                expr_cost(step, t, varying, mult, in_thread, mix);
+                // per-iteration test + induction increment
+                add_op(mix, false, false, 2.0 * mult * trips.max(1.0));
+                if in_thread
+                    && (expr_varying(start, varying)
+                        || expr_varying(end, varying)
+                        || expr_varying(step, varying))
+                {
+                    mix.mask_ops += mult * trips.max(1.0);
+                }
+            }
+            for st in body {
+                stmt_cost(st, t, varying, mult * trips, in_thread, block, thread);
+            }
+        }
+        Stmt::While { cond, body } => {
+            let trips = DEFAULT_TRIP;
+            {
+                let mix = if in_thread { &mut *thread } else { &mut *block };
+                expr_cost(cond, t, varying, mult * trips, in_thread, mix);
+                if in_thread && expr_varying(cond, varying) {
+                    mix.mask_ops += mult * trips;
+                }
+            }
+            for st in body {
+                stmt_cost(st, t, varying, mult * trips, in_thread, block, thread);
+            }
+        }
+        Stmt::Break | Stmt::Continue | Stmt::Return => {
+            let mix = if in_thread { &mut *thread } else { &mut *block };
+            mix.mask_ops += mult;
+        }
+        Stmt::AtomicRmw { ptr, val, ty, .. } => {
+            let mix = if in_thread { &mut *thread } else { &mut *block };
+            mix.atomics += mult;
+            mix.loads += mult;
+            mix.stores += mult;
+            mix.bytes += 2.0 * mult * ty.size() as f64;
+            expr_cost(ptr, t, varying, mult, in_thread, mix);
+            expr_cost(val, t, varying, mult, in_thread, mix);
+        }
+        Stmt::AtomicCas { ptr, cmp, val, ty, .. } => {
+            let mix = if in_thread { &mut *thread } else { &mut *block };
+            mix.atomics += mult;
+            mix.loads += mult;
+            mix.stores += mult;
+            mix.bytes += 2.0 * mult * ty.size() as f64;
+            expr_cost(ptr, t, varying, mult, in_thread, mix);
+            expr_cost(cmp, t, varying, mult, in_thread, mix);
+            expr_cost(val, t, varying, mult, in_thread, mix);
+        }
+        Stmt::ThreadLoop { body, .. } => {
+            // Inside: each op runs once per *thread*. Warp-level nests
+            // are charged at full block width (a deliberate overcount;
+            // warp kernels are rare in the suite).
+            for st in body {
+                stmt_cost(st, t, varying, mult, true, block, thread);
+            }
+        }
+        Stmt::StoreExchange { val, .. } => {
+            let mix = if in_thread { &mut *thread } else { &mut *block };
+            mix.mask_ops += mult;
+            expr_cost(val, t, varying, mult, in_thread, mix);
+        }
+        Stmt::ReduceVote { .. } => {
+            let mix = if in_thread { &mut *thread } else { &mut *block };
+            mix.mask_ops += mult;
+        }
+        Stmt::SyncThreads => {}
+    }
+}
+
+/// Static instruction-mix analysis over the fissioned MPMD kernel.
+/// With the `-O2` uniformity lattice, block-uniform work is charged
+/// per block and lane-varying work per thread; without it (at `-O0`/
+/// `-O1`), every register is conservatively treated as varying.
+pub fn analyze(m: &MpmdKernel, uniform: Option<&UniformInfo>) -> KernelCost {
+    let t = types::infer(&m.params, &m.body);
+    let varying: Vec<bool> = match uniform {
+        Some(u) => u.uniform.iter().map(|x| !x).collect(),
+        None => vec![true; m.num_regs as usize],
+    };
+    let mut block = InstMix::default();
+    let mut thread = InstMix::default();
+    for s in &m.body {
+        stmt_cost(s, &t, &varying, 1.0, false, &mut block, &mut thread);
+    }
+    KernelCost { per_block: block, per_thread: thread }
+}
+
+/// Per-thread-loop mask-machinery share, one entry per region in the
+/// same depth-first order `passes::syncfree::analyze` assigns region
+/// ordinals — the per-region `-O2` vs `-O3` coarsening decision under
+/// `--tune auto` zips this against `SyncFreeInfo::regions`.
+pub fn region_mask_shares(m: &MpmdKernel, uniform: Option<&UniformInfo>) -> Vec<f64> {
+    let t = types::infer(&m.params, &m.body);
+    let varying: Vec<bool> = match uniform {
+        Some(u) => u.uniform.iter().map(|x| !x).collect(),
+        None => vec![true; m.num_regs as usize],
+    };
+    let mut out = Vec::new();
+    walk_regions(&m.body, &t, &varying, &mut out);
+    out
+}
+
+fn walk_regions(body: &[Stmt], t: &Types, varying: &[bool], out: &mut Vec<f64>) {
+    for s in body {
+        match s {
+            Stmt::ThreadLoop { body, .. } => {
+                let mut block = InstMix::default();
+                let mut thread = InstMix::default();
+                for st in body {
+                    stmt_cost(st, t, varying, 1.0, true, &mut block, &mut thread);
+                }
+                block.add(&thread);
+                out.push(block.mask_ops / block.total_ops().max(1.0));
+            }
+            Stmt::If { then_, else_, .. } => {
+                walk_regions(then_, t, varying, out);
+                walk_regions(else_, t, varying, out);
+            }
+            Stmt::For { body, .. } | Stmt::While { body, .. } => {
+                walk_regions(body, t, varying, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tuning knobs
+// ---------------------------------------------------------------------
+
+/// The resolved adaptive-execution knobs one compilation runs under.
+/// `Hash`/`Eq` because the serving runtime folds them into the
+/// compiled-kernel cache key (differently-tuned variants of the same
+/// source must not collide).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TuneKnobs {
+    /// Lanes per chunk of the bytecode VM's dense fast path (8/16/32).
+    pub lane_chunk: u8,
+    /// Allow sync-free block coarsening below `-O3`, gated per region
+    /// by [`COARSE_MASK_SHARE`].
+    pub coarse_regions: bool,
+    /// `GrainPolicy::Auto` light-kernel threshold (insts/block).
+    pub grain_threshold: u64,
+}
+
+impl Default for TuneKnobs {
+    /// The frozen pre-tuning heuristics: chunk 8, coarsening strictly
+    /// opt-level-driven, the measured Table V grain threshold.
+    fn default() -> Self {
+        TuneKnobs {
+            lane_chunk: 8,
+            coarse_regions: false,
+            grain_threshold: crate::runtime::grain::LIGHT_KERNEL_INSTS_PER_BLOCK,
+        }
+    }
+}
+
+/// Derive tuning knobs from the static cost model (`--tune auto` at
+/// compile time). Wider chunks only pay when most ops are lane-dense
+/// (chunk setup amortizes over real vector work); coarsening pays when
+/// mask bookkeeping is a real fraction of the kernel.
+pub fn derive_knobs(cost: &KernelCost) -> TuneKnobs {
+    let v = cost.vector_share();
+    let lane_chunk = if v > 0.65 {
+        32
+    } else if v > 0.35 {
+        16
+    } else {
+        8
+    };
+    TuneKnobs {
+        lane_chunk,
+        coarse_regions: cost.mask_share() > COARSE_MASK_SHARE,
+        grain_threshold: cost.grain_threshold(),
+    }
+}
+
+/// Refine tuning knobs from *observed* execution counters (the serving
+/// runtime's profile-guided re-tuning: the cache records `ExecStats`
+/// from a completed run and later submissions of the same source
+/// recompile with knobs grounded in measured behavior). The flop share
+/// proxies lane-density (float kernels vectorize densely in this VM);
+/// heavy divergence-frame traffic flags mask-bound kernels.
+pub fn knobs_from_observed(instructions: u64, flops: u64, frame_pushes: u64) -> TuneKnobs {
+    let insts = instructions.max(1) as f64;
+    let fshare = flops as f64 / insts;
+    let lane_chunk = if fshare > 0.40 {
+        32
+    } else if fshare > 0.15 {
+        16
+    } else {
+        8
+    };
+    TuneKnobs {
+        lane_chunk,
+        coarse_regions: frame_pushes as f64 * 64.0 > insts,
+        grain_threshold: crate::runtime::grain::LIGHT_KERNEL_INSTS_PER_BLOCK,
+    }
+}
+
+// ---------------------------------------------------------------------
+// ISA execution profiles + prediction
+// ---------------------------------------------------------------------
+
+/// Miss rate assumed when no memory trace is available to calibrate
+/// against (LLC-resident working sets hit most of the time).
+pub const DEFAULT_MISS_RATE: f64 = 0.05;
+
+/// Cycles-per-instruction-class table for one ISA. Values are
+/// per-core, steady-state estimates in the spirit of vendor
+/// optimization guides — coarse, but the *relative* spread between
+/// classes (and between ISAs) is what the verdicts need.
+#[derive(Debug, Clone, Copy)]
+pub struct IsaProfile {
+    pub isa: &'static str,
+    /// SIMD lanes a vector op covers per instruction (AVX2 = 8×f32,
+    /// SVE-512 = 16×f32, Vortex/CUDA = warp width).
+    pub simd_lanes: u32,
+    pub cpi_scalar_int: f64,
+    pub cpi_scalar_float: f64,
+    /// Per *vector instruction* (lane-batched), not per lane.
+    pub cpi_vector: f64,
+    /// L1-hit cost per memory access.
+    pub cpi_load: f64,
+    pub cpi_mask: f64,
+    pub cpi_atomic: f64,
+    /// Extra cycles per LLC miss.
+    pub miss_penalty: f64,
+    pub line_bytes: usize,
+}
+
+/// The profile for the machine the VM itself runs on (x86 AVX2) —
+/// what compile-time `--tune auto` calibrates against.
+pub fn host_profile() -> IsaProfile {
+    IsaProfile {
+        isa: "x86",
+        simd_lanes: 8,
+        cpi_scalar_int: 0.5,
+        cpi_scalar_float: 0.5,
+        cpi_vector: 1.0,
+        cpi_load: 0.5,
+        cpi_mask: 1.0,
+        cpi_atomic: 20.0,
+        miss_penalty: 200.0,
+        line_bytes: 64,
+    }
+}
+
+/// Map a Table III platform to its ISA execution profile.
+pub fn profile_for(p: &Platform) -> IsaProfile {
+    match (p.isa, p.is_gpu) {
+        ("x86", _) => host_profile(),
+        ("AArch64", _) => IsaProfile {
+            isa: "AArch64",
+            // A64FX-style 512-bit SVE
+            simd_lanes: 16,
+            cpi_scalar_int: 0.5,
+            cpi_scalar_float: 0.75,
+            cpi_vector: 1.5,
+            cpi_load: 0.75,
+            cpi_mask: 0.75, // predication is native in SVE
+            cpi_atomic: 25.0,
+            miss_penalty: 250.0,
+            line_bytes: 64,
+        },
+        ("RISC-V", true) => IsaProfile {
+            // Vortex GPGPU (Han et al., 2109.00673): warp-wide SIMT
+            isa: "RISC-V",
+            simd_lanes: 32,
+            cpi_scalar_int: 1.0,
+            cpi_scalar_float: 2.0,
+            cpi_vector: 2.0,
+            cpi_load: 2.0,
+            cpi_mask: 0.5, // hardware thread masks
+            cpi_atomic: 40.0,
+            miss_penalty: 100.0,
+            line_bytes: 64,
+        },
+        ("RISC-V", false) => IsaProfile {
+            // SiFive U74: dual-issue in-order scalar, no V extension
+            isa: "RISC-V",
+            simd_lanes: 1,
+            cpi_scalar_int: 0.75,
+            cpi_scalar_float: 2.0,
+            cpi_vector: 2.0,
+            cpi_load: 1.0,
+            cpi_mask: 1.5,
+            cpi_atomic: 30.0,
+            miss_penalty: 300.0,
+            line_bytes: 64,
+        },
+        ("cuda", _) => IsaProfile {
+            isa: "cuda",
+            simd_lanes: 32,
+            cpi_scalar_int: 1.0,
+            cpi_scalar_float: 1.0,
+            cpi_vector: 1.0,
+            cpi_load: 4.0,
+            cpi_mask: 0.25,
+            cpi_atomic: 30.0,
+            miss_penalty: 400.0,
+            line_bytes: 128,
+        },
+        _ => host_profile(),
+    }
+}
+
+/// Memory- vs compute-bound verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+}
+
+impl Bound {
+    pub fn name(self) -> &'static str {
+        match self {
+            Bound::Compute => "compute",
+            Bound::Memory => "memory",
+        }
+    }
+}
+
+/// Predicted per-block cost of one kernel on one ISA.
+#[derive(Debug, Clone, Copy)]
+pub struct Prediction {
+    pub compute_cycles: f64,
+    pub memory_cycles: f64,
+    pub bound: Bound,
+}
+
+impl Prediction {
+    /// Overlap model: compute and memory streams overlap perfectly, so
+    /// the block takes as long as the longer stream.
+    pub fn cycles_per_block(&self) -> f64 {
+        self.compute_cycles.max(self.memory_cycles)
+    }
+}
+
+/// Combine a static cost with an ISA profile and an LLC miss rate into
+/// predicted cycles/block and a bound verdict.
+pub fn predict(cost: &KernelCost, block_size: u64, prof: &IsaProfile, miss_rate: f64) -> Prediction {
+    let b = block_size.max(1) as f64;
+    let lanes = prof.simd_lanes.max(1) as f64;
+    let miss = miss_rate.clamp(0.0, 1.0);
+    let class = |mix: &InstMix, mult: f64| -> (f64, f64) {
+        let compute = mult
+            * (mix.scalar_int * prof.cpi_scalar_int
+                + mix.scalar_float * prof.cpi_scalar_float
+                + mix.vector_ops() * prof.cpi_vector / lanes
+                + mix.mask_ops * prof.cpi_mask
+                + mix.atomics * prof.cpi_atomic);
+        let memory = mult * (mix.loads + mix.stores) * (prof.cpi_load + miss * prof.miss_penalty);
+        (compute, memory)
+    };
+    let (cb, mb) = class(&cost.per_block, 1.0);
+    let (ct, mt) = class(&cost.per_thread, b);
+    let (compute_cycles, memory_cycles) = (cb + ct, mb + mt);
+    Prediction {
+        compute_cycles,
+        memory_cycles,
+        bound: if memory_cycles > compute_cycles { Bound::Memory } else { Bound::Compute },
+    }
+}
+
+/// Calibrate a platform's LLC miss rate by replaying an engine memory
+/// trace through `cachesim` at that platform's LLC geometry.
+pub fn platform_miss_rate(trace: &[TraceRec], p: &Platform) -> f64 {
+    if trace.is_empty() {
+        return DEFAULT_MISS_RATE;
+    }
+    let cfg = CacheCfg {
+        size_bytes: (p.llc_bytes as usize).max(4096),
+        ways: if p.is_gpu { 8 } else { 16 },
+        line_bytes: 64,
+    };
+    let s = cachesim::simulate(trace, cfg);
+    let total = s.loads + s.stores;
+    if total == 0 {
+        DEFAULT_MISS_RATE
+    } else {
+        s.total_misses() as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile_kernel_cfg, CompileCfg, OptLevel, TuneCfg};
+    use crate::ir::*;
+    use crate::roofline::platforms;
+
+    fn vec_add() -> Kernel {
+        let mut b = KernelBuilder::new("vecAdd");
+        let a = b.ptr_param("a", Ty::F64);
+        let bb = b.ptr_param("b", Ty::F64);
+        let c = b.ptr_param("c", Ty::F64);
+        let id = b.assign(global_tid());
+        let sum = add(at(a.clone(), reg(id), Ty::F64), at(bb.clone(), reg(id), Ty::F64));
+        b.store_at(c.clone(), reg(id), sum, Ty::F64);
+        b.build()
+    }
+
+    fn cost_of(k: &Kernel) -> KernelCost {
+        let ck = compile_kernel_cfg(k, CompileCfg::opt(OptLevel::O2)).unwrap();
+        ck.cost
+    }
+
+    #[test]
+    fn vec_add_is_float_heavy_and_scales_per_thread() {
+        let cost = cost_of(&vec_add());
+        // the add + the loads/stores all run once per thread
+        assert!(cost.per_thread.total_ops() > 0.0, "{cost:?}");
+        assert!(cost.per_thread.float_ops() >= 1.0, "{cost:?}");
+        // 2 loads + 1 store of f64 per thread = 24 bytes
+        assert!((cost.per_thread.bytes - 24.0).abs() < 1e-9, "{cost:?}");
+        // estimate grows linearly with block size
+        let e64 = cost.est_insts_per_block(64);
+        let e256 = cost.est_insts_per_block(256);
+        assert!(e256 > e64 * 3, "{e64} vs {e256}");
+    }
+
+    #[test]
+    fn uniform_work_is_charged_per_block_at_o2() {
+        // id = blockIdx (uniform) → loop bound math is per-block under
+        // the -O2 lattice, per-thread when the lattice is absent.
+        let cost = cost_of(&vec_add());
+        let mpmd = {
+            let ck = compile_kernel_cfg(&vec_add(), CompileCfg::opt(OptLevel::O0)).unwrap();
+            ck.mpmd
+        };
+        let cost_o0 = analyze(&mpmd, None);
+        assert!(
+            cost_o0.per_thread.total_ops() >= cost.per_thread.total_ops(),
+            "without uniformity everything is varying: {cost_o0:?} vs {cost:?}"
+        );
+    }
+
+    #[test]
+    fn memory_bound_verdict_for_pure_streaming() {
+        let cost = cost_of(&vec_add());
+        // vecAdd: 3 memory ops vs 1 flop per thread — memory-bound on
+        // every profile once misses cost anything.
+        let p = host_profile();
+        let pred = predict(&cost, 256, &p, 0.2);
+        assert_eq!(pred.bound, Bound::Memory, "{pred:?}");
+        assert!(pred.cycles_per_block() >= pred.compute_cycles);
+    }
+
+    #[test]
+    fn compute_bound_verdict_for_flop_loop() {
+        let mut b = KernelBuilder::new("flops");
+        let out = b.ptr_param("out", Ty::F64);
+        let id = b.assign(global_tid());
+        let acc = b.assign(c_f64(1.0));
+        b.for_(c_i32(0), c_i32(512), c_i32(1), |b, _i| {
+            b.set(acc, add(mul(reg(acc), c_f64(1.0000001)), c_f64(0.5)));
+        });
+        b.store_at(out.clone(), reg(id), reg(acc), Ty::F64);
+        let cost = cost_of(&b.build());
+        let pred = predict(&cost, 256, &host_profile(), 0.01);
+        assert_eq!(pred.bound, Bound::Compute, "{pred:?}");
+    }
+
+    #[test]
+    fn derive_knobs_widens_chunk_for_dense_float_kernels() {
+        let mut b = KernelBuilder::new("fma");
+        let out = b.ptr_param("out", Ty::F64);
+        let id = b.assign(global_tid());
+        let x = b.assign(cast(Ty::F64, reg(id)));
+        let mut e = reg(x);
+        for _ in 0..12 {
+            e = add(mul(e, c_f64(1.5)), c_f64(0.25));
+        }
+        b.store_at(out.clone(), reg(id), e, Ty::F64);
+        let knobs = derive_knobs(&cost_of(&b.build()));
+        assert!(knobs.lane_chunk >= 16, "{knobs:?}");
+        // the default stays at the frozen heuristics
+        assert_eq!(TuneKnobs::default().lane_chunk, 8);
+        assert_eq!(
+            TuneKnobs::default().grain_threshold,
+            crate::runtime::grain::LIGHT_KERNEL_INSTS_PER_BLOCK
+        );
+    }
+
+    #[test]
+    fn observed_knobs_track_flop_share_and_divergence() {
+        let hot = knobs_from_observed(1000, 500, 0);
+        assert_eq!(hot.lane_chunk, 32);
+        assert!(!hot.coarse_regions);
+        let cold = knobs_from_observed(1000, 10, 0);
+        assert_eq!(cold.lane_chunk, 8);
+        let divergent = knobs_from_observed(1000, 10, 100);
+        assert!(divergent.coarse_regions);
+    }
+
+    #[test]
+    fn region_shares_line_up_with_syncfree_ordinals() {
+        let k = vec_add();
+        let ck = compile_kernel_cfg(&k, CompileCfg::opt(OptLevel::O3)).unwrap();
+        let u = crate::compiler::passes::uniformity::analyze(&ck.mpmd);
+        let info = crate::compiler::passes::syncfree::analyze(&ck.mpmd, &u);
+        let shares = region_mask_shares(&ck.mpmd, Some(&u));
+        assert_eq!(shares.len(), info.regions.len(), "one share per region");
+        for s in &shares {
+            assert!((0.0..=1.0).contains(s), "{shares:?}");
+        }
+    }
+
+    #[test]
+    fn profiles_cover_every_table_iii_isa() {
+        let mut isas = std::collections::BTreeSet::new();
+        for p in platforms::PLATFORMS {
+            isas.insert(profile_for(p).isa);
+        }
+        assert!(isas.len() >= 3, "x86 + AArch64 + RISC-V + cuda: {isas:?}");
+        // Vortex (GPU RISC-V) runs warps; the U74 is scalar.
+        let vortex = platforms::by_name("Vortex-RV32").unwrap();
+        let u74 = platforms::by_name("Server-SiFive").unwrap();
+        assert_eq!(profile_for(vortex).simd_lanes, 32);
+        assert_eq!(profile_for(u74).simd_lanes, 1);
+    }
+
+    #[test]
+    fn miss_rate_calibration_reads_the_trace() {
+        // stride-1 over one line: first access misses, rest hit
+        let trace: Vec<crate::exec::TraceRec> = (0..8)
+            .map(|i| crate::exec::TraceRec { addr: i * 8, bytes: 8, is_write: false })
+            .collect();
+        let p = platforms::by_name("Server-Intel").unwrap();
+        let mr = platform_miss_rate(&trace, p);
+        assert!((mr - 0.125).abs() < 1e-9, "{mr}");
+        assert_eq!(platform_miss_rate(&[], p), DEFAULT_MISS_RATE);
+    }
+
+    #[test]
+    fn tune_auto_is_accounting_transparent_on_the_pipeline() {
+        // Identical lowered semantics: only knobs (chunk width, coarse
+        // gating, grain threshold) may differ; outputs are compared in
+        // tests/opt_parity.rs — here we pin that the cost/knob fields
+        // are populated and the default is untouched.
+        let k = vec_add();
+        let off = compile_kernel_cfg(&k, CompileCfg::opt(OptLevel::O2)).unwrap();
+        let auto = compile_kernel_cfg(
+            &k,
+            CompileCfg { opt: OptLevel::O2, fuse: None, tune: TuneCfg::Auto },
+        )
+        .unwrap();
+        assert_eq!(off.knobs, TuneKnobs::default());
+        assert_eq!(auto.knobs, derive_knobs(&auto.cost));
+        assert_eq!(off.cost, auto.cost, "the static estimate is tune-independent");
+        assert_eq!(off.lowered.insts.len(), auto.lowered.insts.len());
+    }
+}

@@ -338,6 +338,11 @@ pub struct LoweredProgram {
     pub arg_slots: Vec<SlotKind>,
     /// loop bounds/steps hoisted by LICM (pipeline reporting)
     pub licm_hoisted: usize,
+    /// Lanes per chunk of the VM's dense fast path. Lowering emits the
+    /// frozen default (8); `compile_kernel_cfg` overwrites it from the
+    /// resolved tuning knobs. Wall-clock only — flop accounting in
+    /// `exec::bytecode` is chunk-width-invariant.
+    pub lane_chunk: usize,
 }
 
 impl LoweredProgram {
@@ -489,6 +494,7 @@ pub fn lower_opt(
         scalar_reg,
         arg_slots: layout.slots.clone(),
         licm_hoisted: lw.licm_hoisted,
+        lane_chunk: crate::exec::bytecode::LANE_CHUNK,
     })
 }
 

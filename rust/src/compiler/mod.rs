@@ -28,6 +28,7 @@
 //! Host-side transformations (implicit barrier insertion, §III-C1) live
 //! in `crate::host` because they operate on host programs, not kernels.
 
+pub mod costmodel;
 pub mod coverage;
 pub mod extra_vars;
 pub mod fission;
@@ -36,6 +37,7 @@ pub mod memory_mapping;
 pub mod param_pack;
 pub mod passes;
 
+pub use costmodel::{KernelCost, TuneKnobs};
 pub use coverage::{coverage, detect_features, explain_unsupported, judge, Framework, Verdict};
 pub use extra_vars::{insert_extra_vars, ExtraVar, EXTRA_VARS};
 pub use fission::{spmd_to_mpmd, FissionError};
@@ -64,6 +66,13 @@ pub struct CompiledKernel {
     pub reads: Vec<usize>,
     /// Opt level this kernel was compiled at.
     pub opt: OptLevel,
+    /// Static cost-model estimate (instruction mix per block/thread) —
+    /// computed for every compilation; tune-independent.
+    pub cost: costmodel::KernelCost,
+    /// The adaptive-execution knobs this compilation resolved to
+    /// (defaults under `--tune off`, model-derived under `auto`,
+    /// explicit under the serving runtime's profile-guided re-tuning).
+    pub knobs: costmodel::TuneKnobs,
     /// The resolved pass pipeline (per-pass stmt/register deltas).
     pub pipeline: Vec<PassInfo>,
 }
@@ -115,21 +124,39 @@ impl std::fmt::Display for CompileError {
 
 impl std::error::Error for CompileError {}
 
+/// Adaptive-tuning mode (`--tune`). `Off` (the default) keeps the
+/// frozen heuristics; `Auto` derives [`costmodel::TuneKnobs`] from the
+/// static cost model; `Knobs` pins explicit knobs — the serving
+/// runtime's profile-guided re-tuning path resolves `Auto` into
+/// `Knobs` from observed counters. Every mode is
+/// accounting-transparent: only wall-clock may move.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum TuneCfg {
+    #[default]
+    Off,
+    Auto,
+    Knobs(costmodel::TuneKnobs),
+}
+
 /// Compilation knobs beyond the opt level. `Hash`/`Eq` because the
 /// serving runtime's compiled-kernel cache (`crate::serve`) keys
-/// translations by `(source hash, CompileCfg, backend, ExecMode)`.
+/// translations by `(source hash, CompileCfg, backend, ExecMode,
+/// grain policy)` — the tune mode is part of the key, so
+/// differently-tuned variants of the same source never collide.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
 pub struct CompileCfg {
     pub opt: OptLevel,
     /// Superinstruction fusion + register compaction (`passes::fuse`).
     /// `None` follows the opt level (on at `-O2`); `Some(_)` forces it.
     pub fuse: Option<bool>,
+    /// Cost-model-directed adaptive tuning (`--tune {off,auto}`).
+    pub tune: TuneCfg,
 }
 
 impl CompileCfg {
     /// The configuration implied by a bare opt level.
     pub fn opt(opt: OptLevel) -> Self {
-        CompileCfg { opt, fuse: None }
+        CompileCfg { opt, fuse: None, tune: TuneCfg::Off }
     }
 
     /// Is fusion enabled under this configuration?
@@ -229,13 +256,55 @@ pub fn compile_kernel_cfg(kernel: &Kernel, cfg: CompileCfg) -> Result<CompiledKe
             format!("uniform {}/{} regs", u.count_uniform(), mpmd.num_regs),
         );
     }
+    // Static cost model: instruction mix per block/thread from the
+    // types/uniformity analyses. Computed unconditionally (it is cheap
+    // and `GrainPolicy::Auto` consumes the estimate either way); the
+    // *knobs* only deviate from the frozen defaults under `--tune`.
+    let cost = costmodel::analyze(&mpmd, uniform.as_ref());
+    let knobs = match cfg.tune {
+        TuneCfg::Off => costmodel::TuneKnobs::default(),
+        TuneCfg::Auto => costmodel::derive_knobs(&cost),
+        TuneCfg::Knobs(k) => k,
+    };
+    if cfg.tune != TuneCfg::Off {
+        pm.record_mpmd(
+            "costmodel",
+            &mpmd,
+            format!(
+                "vec {:.0}%, mask {:.0}%, chunk {}, coarse {}, grain thr {}",
+                cost.vector_share() * 100.0,
+                cost.mask_share() * 100.0,
+                knobs.lane_chunk,
+                knobs.coarse_regions,
+                knobs.grain_threshold
+            ),
+        );
+    }
     // -O3: sync-free-region analysis — regions proven barrier-free and
     // cross-lane independent lower as coarse jump nests. The report row
     // names each region's verdict so coverage regressions are
-    // diagnosable straight from the `compile` dump.
-    let syncfree = match (&uniform, opt >= OptLevel::O3) {
+    // diagnosable straight from the `compile` dump. Under `--tune`,
+    // coarsening also engages below -O3 when the model predicts real
+    // mask overhead, and each region's -O2 vs -O3 decision is gated by
+    // its predicted mask share (a coarse nest only pays for itself
+    // when divergence bookkeeping is a real fraction of the work).
+    let coarse_enabled = opt >= OptLevel::O3 || knobs.coarse_regions;
+    let syncfree = match (&uniform, coarse_enabled) {
         (Some(u), true) => {
-            let info = passes::syncfree::analyze(&mpmd, u);
+            let mut info = passes::syncfree::analyze(&mpmd, u);
+            if cfg.tune != TuneCfg::Off {
+                let shares = costmodel::region_mask_shares(&mpmd, Some(u));
+                for (r, share) in info.regions.iter_mut().zip(shares.iter()) {
+                    if r.coarse && *share < costmodel::COARSE_MASK_SHARE {
+                        r.coarse = false;
+                        r.reason = Some(format!(
+                            "tuned out: predicted mask share {:.1}% below {:.0}%",
+                            share * 100.0,
+                            costmodel::COARSE_MASK_SHARE * 100.0
+                        ));
+                    }
+                }
+            }
             pm.record_mpmd("syncfree", &mpmd, info.summary());
             Some(info)
         }
@@ -252,6 +321,10 @@ pub fn compile_kernel_cfg(kernel: &Kernel, cfg: CompileCfg) -> Result<CompiledKe
         syncfree.as_ref(),
     )
     .map_err(|err| CompileError::Lower { kernel: kernel.name.clone(), err })?;
+    // Chunk width of the VM's dense fast path — purely a wall-clock
+    // knob (flop accounting is chunk-width-invariant; see
+    // `exec::bytecode::Vm::bin_dense`).
+    lowered.lane_chunk = (knobs.lane_chunk as usize).max(1);
     pm.record(
         "lower",
         lowered.insts.len(),
@@ -289,6 +362,8 @@ pub fn compile_kernel_cfg(kernel: &Kernel, cfg: CompileCfg) -> Result<CompiledKe
         writes,
         reads,
         opt,
+        cost,
+        knobs,
         pipeline: pm.passes,
     })
 }

@@ -368,7 +368,7 @@ mod tests {
 
     #[test]
     fn fuse_off_keeps_unfused_shape() {
-        let cfg = CompileCfg { opt: OptLevel::O2, fuse: Some(false) };
+        let cfg = CompileCfg { opt: OptLevel::O2, fuse: Some(false), ..Default::default() };
         let ck = compile_kernel_cfg(&vecadd(), cfg).unwrap();
         assert_eq!(count_super(&ck.lowered), 0);
         assert_eq!(ck.lowered.num_vec_regs, ck.lowered.num_regs);
@@ -389,7 +389,7 @@ mod tests {
 
     #[test]
     fn fuse_at_o0_is_well_formed() {
-        let cfg = CompileCfg { opt: OptLevel::O0, fuse: Some(true) };
+        let cfg = CompileCfg { opt: OptLevel::O0, fuse: Some(true), ..Default::default() };
         let ck = compile_kernel_cfg(&vecadd(), cfg).unwrap();
         assert!(count_super(&ck.lowered) > 0);
         verify_lowered(&ck.lowered).unwrap();

@@ -348,8 +348,11 @@ impl VmScratch {
     }
 }
 
-/// Lanes per chunk of the dense fast path: one homogeneity probe buys
-/// `LANE_CHUNK` iterations of a monomorphic inner loop.
+/// Default lanes per chunk of the dense fast path: one homogeneity
+/// probe buys a chunk of iterations of a monomorphic inner loop. The
+/// effective width is per-program (`LoweredProgram::lane_chunk`, 8/16/
+/// 32) — the cost model widens it for lane-dense kernels under
+/// `--tune auto`; this constant is the frozen `--tune off` value.
 pub const LANE_CHUNK: usize = 8;
 
 struct Vm<'a> {
@@ -467,9 +470,13 @@ impl<'a> Vm<'a> {
         let (d0, a0, b0) = (di * bs, ai * bs, bi * bs);
         let mut fl = 0u64;
         let tr = &mut self.scratch.thread_regs;
+        // Chunk width is per-program (the cost model widens it for
+        // lane-dense kernels under `--tune auto`); flop accounting
+        // below is chunk-width-invariant, so this is wall-clock only.
+        let chunk = self.prog.lane_chunk.max(1);
         let mut c0 = lo;
         while c0 < hi {
-            let c1 = (c0 + LANE_CHUNK).min(hi);
+            let c1 = (c0 + chunk).min(hi);
             let (mut all_i32, mut all_f32, mut all_f64) = (true, true, true);
             for l in c0..c1 {
                 match (tr[a0 + l], tr[b0 + l]) {

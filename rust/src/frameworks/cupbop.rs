@@ -158,7 +158,20 @@ pub fn build_task(
     let stats = matches!(exec, ExecMode::Interpret | ExecMode::Bytecode)
         .then_some(stats)
         .flatten();
-    let bpf = policy.to_grain(kv.est_insts_per_block).block_per_fetch(total, pool_size as u64);
+    // Grain selection: the registered nvprof-style estimate when
+    // present, else the compiler's static cost-model estimate; under
+    // `--tune auto` the Auto policy's light-kernel threshold comes from
+    // the kernel's resolved tuning knobs (memory-bound kernels tolerate
+    // coarser grains). Grain only changes scheduling, never accounting.
+    let est = kv.grain_estimate(launch.block_size());
+    let grain = match policy {
+        PolicyMode::Auto => crate::runtime::GrainPolicy::Auto {
+            est_insts_per_block: est,
+            threshold: kv.ck.knobs.grain_threshold,
+        },
+        _ => policy.to_grain(est),
+    };
+    let bpf = grain.block_per_fetch(total, pool_size as u64);
     KernelTask {
         start_routine: kv.block_fn(exec, stats),
         launch,

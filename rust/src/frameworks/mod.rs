@@ -67,13 +67,27 @@ pub struct KernelVariants {
     /// Vectorized closure — what DPC++ emits for EP/KMeans-style loops.
     pub vectorized: Option<Arc<dyn BlockFn>>,
     /// Estimated dynamic instructions per block (grain heuristic input;
-    /// the paper uses nvprof counts).
+    /// the paper uses nvprof counts). `u64::MAX` = unset — the grain
+    /// policy falls back to the compiler's static cost-model estimate
+    /// (see [`KernelVariants::grain_estimate`]).
     pub est_insts_per_block: u64,
 }
 
 impl KernelVariants {
     pub fn interp_only(ck: Arc<CompiledKernel>) -> Self {
         KernelVariants { ck, native: None, vectorized: None, est_insts_per_block: u64::MAX }
+    }
+
+    /// The per-block work estimate the grain heuristic weighs: the
+    /// benchmark-provided (nvprof-style) constant when one was
+    /// registered, otherwise the compiler's static cost-model estimate
+    /// at this launch's block size.
+    pub fn grain_estimate(&self, block_size: usize) -> u64 {
+        if self.est_insts_per_block != u64::MAX {
+            self.est_insts_per_block
+        } else {
+            self.ck.cost.est_insts_per_block(block_size as u64)
+        }
     }
 
     /// Resolve the block function for an exec mode, optionally wiring a
@@ -186,8 +200,9 @@ impl Default for BackendCfg {
     }
 }
 
-/// Launch-time grain selection mode.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Launch-time grain selection mode. `Hash` because the serving
+/// runtime folds the policy into its compiled-kernel cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PolicyMode {
     /// Always average coarse-grained fetching.
     Average,
@@ -202,7 +217,7 @@ impl PolicyMode {
         use crate::runtime::GrainPolicy;
         match self {
             PolicyMode::Average => GrainPolicy::Average,
-            PolicyMode::Auto => GrainPolicy::Auto { est_insts_per_block },
+            PolicyMode::Auto => GrainPolicy::auto(est_insts_per_block),
             PolicyMode::Fixed(n) => GrainPolicy::Fixed(n),
         }
     }

@@ -97,6 +97,10 @@ fn print_help() {
                              register-file compaction (default: on at\n\
                              -O2, off below; also accepted by\n\
                              run/suite/dump/serve)\n\
+           --tune T          off|auto — cost-model-driven knob tuning\n\
+                             (lane chunk width, coarsening, grain\n\
+                             threshold; default off; also accepted by\n\
+                             run/suite/dump/serve)\n\
          \n\
          run flags:\n\
            --bench NAME      benchmark to run (see `cupbop list`)\n\
@@ -299,7 +303,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
                 continue;
             }
             if a.starts_with("--") {
-                skip = matches!(a.as_str(), "--emit" | "--opt" | "--fuse" | "--kernel");
+                skip = matches!(a.as_str(), "--emit" | "--opt" | "--fuse" | "--tune" | "--kernel");
                 continue;
             }
             fs.push(a);
@@ -309,7 +313,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     if files.is_empty() {
         eprintln!(
             "usage: cupbop compile <file.cu> [more.cu ...] [--kernel NAME] \
-             [--emit cir|mpmd|bytecode] [--opt 0|1|2|3] [--fuse on|off]"
+             [--emit cir|mpmd|bytecode] [--opt 0|1|2|3] [--fuse on|off] [--tune off|auto]"
         );
         return ExitCode::FAILURE;
     }

@@ -117,6 +117,22 @@ pub static PLATFORMS: &[Platform] = &[
         is_gpu: false,
         isa: "RISC-V",
     },
+    // Not a Table III row: the companion Vortex work (Han et al.,
+    // 2109.00673) extends RISC-V with warp-wide SIMT execution. Carried
+    // here so the cost model (`compiler::costmodel`) has a RISC-V *GPU*
+    // profile to predict against; numbers are the 32-core FPGA
+    // configuration from that paper (200 MHz, 2 FLOP/cycle/core).
+    Platform {
+        name: "Vortex-RV32",
+        processor: "Vortex RISC-V GPGPU (32 cores @200MHz, FPGA)",
+        cores: 32,
+        peak_flops: 12.8e9,
+        memory_bytes: 8 << 30,
+        peak_bw_bytes_per_s: 16e9,
+        llc_bytes: 1 << 20,
+        is_gpu: true,
+        isa: "RISC-V",
+    },
 ];
 
 /// Look a platform up by its Table III name.
@@ -161,23 +177,27 @@ mod tests {
 
     #[test]
     fn table3_rows_present() {
-        assert_eq!(PLATFORMS.len(), 8);
+        // 8 Table III rows + the Vortex cost-model profile
+        assert_eq!(PLATFORMS.len(), 9);
         assert!(by_name("Server-Intel").is_some());
         assert!(by_name("Server-SiFive").is_some());
+        assert!(by_name("Vortex-RV32").is_some());
         assert!(by_name("nonexistent").is_none());
     }
 
     #[test]
     fn isa_grouping() {
         assert_eq!(by_isa("AArch64").len(), 2);
-        assert_eq!(by_isa("RISC-V").len(), 1);
+        assert_eq!(by_isa("RISC-V").len(), 2);
         assert_eq!(by_isa("cuda").len(), 2);
     }
 
     #[test]
     fn gpu_rows_flagged() {
         assert!(by_name("Server-AMD-A30-GPU").unwrap().is_gpu);
+        assert!(by_name("Vortex-RV32").unwrap().is_gpu);
         assert!(!by_name("Server-Arm1").unwrap().is_gpu);
+        assert!(!by_name("Server-SiFive").unwrap().is_gpu);
     }
 
     #[test]

@@ -23,8 +23,11 @@ pub enum GrainPolicy {
     /// Absolute blocks per fetch (Table V sweep).
     Fixed(u64),
     /// Heuristic keyed on the kernel's estimated per-block work
-    /// (dynamic instructions; the paper uses nvprof counts).
-    Auto { est_insts_per_block: u64 },
+    /// (dynamic instructions; the paper uses nvprof counts, the
+    /// compiler's cost model supplies a static estimate). Kernels
+    /// under `threshold` are "lightweight" and fetch aggressively;
+    /// the cost model raises the threshold for memory-bound kernels.
+    Auto { est_insts_per_block: u64, threshold: u64 },
 }
 
 /// Per-block instruction count below which a kernel is "lightweight"
@@ -33,6 +36,11 @@ pub enum GrainPolicy {
 pub const LIGHT_KERNEL_INSTS_PER_BLOCK: u64 = 4096;
 
 impl GrainPolicy {
+    /// The auto heuristic at the default light-kernel threshold.
+    pub fn auto(est_insts_per_block: u64) -> Self {
+        GrainPolicy::Auto { est_insts_per_block, threshold: LIGHT_KERNEL_INSTS_PER_BLOCK }
+    }
+
     /// Compute `block_per_fetch` for a launch of `grid_size` blocks on
     /// a pool of `pool_size` threads.
     pub fn block_per_fetch(self, grid_size: u64, pool_size: u64) -> u64 {
@@ -42,8 +50,8 @@ impl GrainPolicy {
             GrainPolicy::Average => average,
             GrainPolicy::Aggressive { factor } => (average * factor.max(1)).min(grid_size.max(1)),
             GrainPolicy::Fixed(n) => n.max(1),
-            GrainPolicy::Auto { est_insts_per_block } => {
-                if est_insts_per_block < LIGHT_KERNEL_INSTS_PER_BLOCK {
+            GrainPolicy::Auto { est_insts_per_block, threshold } => {
+                if est_insts_per_block < threshold.max(1) {
                     // lightweight kernel: halve the number of fetches
                     (average * 2).min(grid_size.max(1))
                 } else {
@@ -107,9 +115,61 @@ mod tests {
 
     #[test]
     fn auto_heuristic_switches_on_weight() {
-        let light = GrainPolicy::Auto { est_insts_per_block: 100 };
-        let heavy = GrainPolicy::Auto { est_insts_per_block: 1_000_000 };
+        let light = GrainPolicy::auto(100);
+        let heavy = GrainPolicy::auto(1_000_000);
         assert!(light.block_per_fetch(64, 8) > heavy.block_per_fetch(64, 8));
         assert_eq!(heavy.block_per_fetch(64, 8), 8);
+    }
+
+    /// The cost model raises the threshold for memory-bound kernels:
+    /// the same estimate flips from heavy to light.
+    #[test]
+    fn auto_threshold_is_tunable() {
+        let est = LIGHT_KERNEL_INSTS_PER_BLOCK + 1;
+        let default = GrainPolicy::auto(est);
+        let raised = GrainPolicy::Auto { est_insts_per_block: est, threshold: est * 2 };
+        assert_eq!(default.block_per_fetch(64, 8), 8, "at/above threshold → average");
+        assert_eq!(raised.block_per_fetch(64, 8), 16, "raised threshold → aggressive");
+        // boundary: est == threshold is NOT light
+        let edge = GrainPolicy::Auto { est_insts_per_block: 100, threshold: 100 };
+        assert_eq!(edge.block_per_fetch(64, 8), 8);
+    }
+
+    /// Fewer blocks than pool threads: every policy degrades to grain
+    /// 1 with one fetch per block.
+    #[test]
+    fn grid_smaller_than_pool() {
+        assert_eq!(GrainPolicy::Average.block_per_fetch(3, 8), 1);
+        assert_eq!(GrainPolicy::Average.num_fetches(3, 8), 3);
+        assert_eq!(GrainPolicy::Average.threads_utilized(3, 8), 3);
+        // aggressive grains clamp to the grid size
+        assert_eq!(GrainPolicy::Aggressive { factor: 4 }.block_per_fetch(3, 8), 3);
+        assert_eq!(GrainPolicy::auto(10).block_per_fetch(3, 8), 2);
+    }
+
+    /// Grain larger than the grid: a single fetch drains the launch.
+    #[test]
+    fn grain_larger_than_grid() {
+        let p = GrainPolicy::Fixed(64);
+        assert_eq!(p.block_per_fetch(12, 3), 64, "fixed grain is not clamped");
+        assert_eq!(p.num_fetches(12, 3), 1);
+        assert_eq!(p.threads_utilized(12, 3), 1);
+    }
+
+    /// Zero-size grid: `block_per_fetch`/`num_fetches` stay ≥ 1 so the
+    /// scheduler's division and its fetch loop are well-defined (the
+    /// single fetch finds the queue empty).
+    #[test]
+    fn zero_size_grid() {
+        for p in [
+            GrainPolicy::Average,
+            GrainPolicy::Aggressive { factor: 3 },
+            GrainPolicy::Fixed(5),
+            GrainPolicy::auto(1),
+        ] {
+            assert!(p.block_per_fetch(0, 8) >= 1, "{p:?}");
+            assert_eq!(p.num_fetches(0, 8), 1, "{p:?}");
+            assert_eq!(p.threads_utilized(0, 8), 1, "{p:?}");
+        }
     }
 }

@@ -9,41 +9,72 @@
 //!
 //! * the **source hash** — FNV-1a over every kernel's pretty-printed
 //!   CIR ([`crate::compiler::kernel_fingerprint`]), order-sensitive;
-//! * the **opt level** and **fusion toggle** ([`CompileCfg`]);
+//! * the full **[`CompileCfg`]** — opt level, fusion toggle *and* the
+//!   tune mode (including resolved [`crate::compiler::TuneKnobs`]: a
+//!   translation tuned to chunk 32 + coarse regions must never alias
+//!   one compiled at the frozen defaults — the knobs change the
+//!   lowered artifact);
 //! * the **backend** the result will run on;
-//! * the **ExecMode** it will execute under.
+//! * the **ExecMode** it will execute under;
+//! * the launch-time **grain policy** the entry will run under.
 //!
-//! Backend and ExecMode do not change the `CompiledKernel` bytes today
-//! (engines resolve per launch), but they are part of the key by
-//! design: a future backend-specialised lowering must never alias a
-//! cached artifact compiled for a different target. Eviction is LRU
-//! with a fixed capacity; hits, misses and evictions are counted for
-//! the `serve` CLI's `stats` report and the `fig_serve` bench.
+//! Backend, ExecMode and grain policy do not change the
+//! `CompiledKernel` bytes today (engines and grains resolve per
+//! launch), but they are part of the key by design: a future
+//! backend- or policy-specialised lowering must never alias a cached
+//! artifact compiled for a different target. Eviction is LRU with a
+//! fixed capacity; hits, misses and evictions are counted for the
+//! `serve` CLI's `stats` report and the `fig_serve` bench.
+//!
+//! The cache also keeps an [`ObservedProfile`] per source hash — the
+//! dynamic counters and wall-clock of the last completed run — which
+//! `serve`'s profile-guided re-tuning consults to refine `--tune auto`
+//! knobs on later submissions of the same source.
 
 use crate::benchsuite::spec::Backend;
 use crate::compiler::{
-    compile_kernel_cfg, kernel_fingerprint, CompileCfg, CompileError, CompiledKernel, OptLevel,
+    compile_kernel_cfg, kernel_fingerprint, CompileCfg, CompileError, CompiledKernel,
 };
-use crate::frameworks::ExecMode;
+use crate::frameworks::{ExecMode, PolicyMode};
 use crate::ir::Kernel;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Everything a cached translation is keyed by.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CacheKey {
     /// Combined fingerprint of the submission's kernels (source identity).
     pub source: u64,
-    pub opt: OptLevel,
-    pub fuse: Option<bool>,
+    /// Full compile knobs: opt, fuse, tune (with resolved knobs).
+    pub cfg: CompileCfg,
     pub backend: Backend,
     pub exec: ExecMode,
+    /// Launch-time grain selection the entry will run under.
+    pub policy: PolicyMode,
 }
 
 impl CacheKey {
-    pub fn new(kernels: &[Kernel], cfg: CompileCfg, backend: Backend, exec: ExecMode) -> Self {
-        CacheKey { source: source_hash(kernels), opt: cfg.opt, fuse: cfg.fuse, backend, exec }
+    pub fn new(
+        kernels: &[Kernel],
+        cfg: CompileCfg,
+        backend: Backend,
+        exec: ExecMode,
+        policy: PolicyMode,
+    ) -> Self {
+        CacheKey { source: source_hash(kernels), cfg, backend, exec, policy }
     }
+}
+
+/// Observed execution profile of one source (last completed run):
+/// the dynamic counters and wall-clock that ground profile-guided
+/// re-tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct ObservedProfile {
+    pub instructions: u64,
+    pub flops: u64,
+    pub frame_pushes: u64,
+    pub wall: Duration,
 }
 
 /// Order-sensitive combination of per-kernel fingerprints — kernel
@@ -99,6 +130,11 @@ struct Inner {
 pub struct KernelCache {
     capacity: usize,
     inner: Mutex<Inner>,
+    /// Observed execution profiles keyed by source hash (not by full
+    /// [`CacheKey`]: re-tuning wants the *behavior of the source*, and
+    /// the accounting-transparency contract makes the counters
+    /// identical across opt/tune variants anyway).
+    observed: Mutex<HashMap<u64, ObservedProfile>>,
 }
 
 impl KernelCache {
@@ -113,7 +149,18 @@ impl KernelCache {
                 misses: 0,
                 evictions: 0,
             }),
+            observed: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Record the observed profile of a completed run of `source`.
+    pub fn record_observed(&self, source: u64, p: ObservedProfile) {
+        self.observed.lock().unwrap().insert(source, p);
+    }
+
+    /// The last observed profile of `source`, if any run completed.
+    pub fn observed(&self, source: u64) -> Option<ObservedProfile> {
+        self.observed.lock().unwrap().get(&source).copied()
     }
 
     pub fn capacity(&self) -> usize {
@@ -171,6 +218,7 @@ impl KernelCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compiler::{OptLevel, TuneCfg, TuneKnobs};
     use crate::ir::{c_i32, global_tid, KernelBuilder, Ty};
 
     fn kernel(name: &str, val: i32) -> Kernel {
@@ -181,7 +229,7 @@ mod tests {
     }
 
     fn key_for(ks: &[Kernel], cfg: CompileCfg) -> CacheKey {
-        CacheKey::new(ks, cfg, Backend::CuPBoP, ExecMode::Bytecode)
+        CacheKey::new(ks, cfg, Backend::CuPBoP, ExecMode::Bytecode, PolicyMode::Auto)
     }
 
     #[test]
@@ -204,13 +252,25 @@ mod tests {
         let ks = vec![kernel("k", 1)];
         let o0 = CompileCfg::opt(OptLevel::O0);
         let o2 = CompileCfg::opt(OptLevel::O2);
-        let fused = CompileCfg { opt: OptLevel::O0, fuse: Some(true) };
+        let fused = CompileCfg { opt: OptLevel::O0, fuse: Some(true), ..Default::default() };
+        // Tuning knobs are part of the key: differently-tuned variants
+        // of the same source must never collide on a stale entry.
+        let tuned = CompileCfg { opt: OptLevel::O0, fuse: None, tune: TuneCfg::Auto };
+        let pinned = CompileCfg {
+            opt: OptLevel::O0,
+            fuse: None,
+            tune: TuneCfg::Knobs(TuneKnobs { lane_chunk: 32, ..Default::default() }),
+        };
         let keys = [
             key_for(&ks, o0),
             key_for(&ks, o2),
             key_for(&ks, fused),
-            CacheKey::new(&ks, o0, Backend::Reference, ExecMode::Bytecode),
-            CacheKey::new(&ks, o0, Backend::CuPBoP, ExecMode::Interpret),
+            key_for(&ks, tuned),
+            key_for(&ks, pinned),
+            CacheKey::new(&ks, o0, Backend::Reference, ExecMode::Bytecode, PolicyMode::Auto),
+            CacheKey::new(&ks, o0, Backend::CuPBoP, ExecMode::Interpret, PolicyMode::Auto),
+            CacheKey::new(&ks, o0, Backend::CuPBoP, ExecMode::Bytecode, PolicyMode::Average),
+            CacheKey::new(&ks, o0, Backend::CuPBoP, ExecMode::Bytecode, PolicyMode::Fixed(4)),
         ];
         for (i, a) in keys.iter().enumerate() {
             for b in &keys[i + 1..] {
@@ -243,5 +303,26 @@ mod tests {
         // k1 survived, k2 was evicted
         assert!(cache.get_or_compile(key_for(&k1, cfg), &k1, cfg).unwrap().1);
         assert!(!cache.get_or_compile(key_for(&k2, cfg), &k2, cfg).unwrap().1);
+    }
+
+    #[test]
+    fn observed_profiles_keyed_by_source() {
+        let cache = KernelCache::new(2);
+        let ks = vec![kernel("k", 1)];
+        let src = source_hash(&ks);
+        assert!(cache.observed(src).is_none());
+        let p = ObservedProfile {
+            instructions: 1000,
+            flops: 400,
+            frame_pushes: 2,
+            wall: Duration::from_micros(50),
+        };
+        cache.record_observed(src, p);
+        let got = cache.observed(src).unwrap();
+        assert_eq!((got.instructions, got.flops, got.frame_pushes), (1000, 400, 2));
+        // a later run overwrites (last completed run wins)
+        cache.record_observed(src, ObservedProfile { instructions: 900, ..p });
+        assert_eq!(cache.observed(src).unwrap().instructions, 900);
+        assert!(cache.observed(src ^ 1).is_none(), "other sources unaffected");
     }
 }

@@ -43,7 +43,7 @@ pub use cache::{CacheKey, CacheStats, KernelCache};
 pub use coalesce::{CoalesceCfg, Coalescer};
 
 use crate::benchsuite::spec::{self, Backend, BenchProgram, BuiltProgram, Scale};
-use crate::compiler::CompileCfg;
+use crate::compiler::{CompileCfg, TuneCfg};
 use crate::exec::{ExecStats, StatsSnapshot};
 use crate::frameworks::{
     build_task, BackendCfg, ExecMode, PolicyMode, ReferenceRuntime, SchedKind,
@@ -517,21 +517,53 @@ fn execute(inner: &Inner, req: Request) -> Response {
             (name, builder(scale))
         }
     };
+    // Profile-guided re-tuning: a `--tune auto` submission whose source
+    // has already completed a run recompiles with knobs grounded in the
+    // *observed* counters instead of the static model. The resolved
+    // knobs are part of the cache key, so the refined variant gets its
+    // own entry and the statically-tuned one is never aliased.
+    let source = cache::source_hash(&prog.kernels);
+    let mut cfg = req.cfg;
+    if cfg.tune == TuneCfg::Auto {
+        if let Some(obs) = inner.cache.observed(source) {
+            cfg.tune = TuneCfg::Knobs(crate::compiler::costmodel::knobs_from_observed(
+                obs.instructions,
+                obs.flops,
+                obs.frame_pushes,
+            ));
+        }
+    }
     let key = CacheKey::new(
         &prog.kernels,
-        req.cfg,
+        cfg,
         inner.cfg.backend.cache_backend(),
         inner.cfg.exec,
+        inner.cfg.policy,
     );
-    let (compiled, cache_hit) = match inner.cache.get_or_compile(key, &prog.kernels, req.cfg) {
+    let (compiled, cache_hit) = match inner.cache.get_or_compile(key, &prog.kernels, cfg) {
         Ok(x) => x,
         Err(e) => return fail(&name, format!("compile: {e}")),
     };
     let built = spec::assemble_prepared(&name, prog, (*compiled).clone());
-    let (check, arrays, stats) = match inner.cfg.backend {
+    let wall_start = Instant::now();
+    let (check, arrays, stats, frame_pushes) = match inner.cfg.backend {
         ServeBackend::Pool => run_pooled(inner, &built),
         ServeBackend::PerRequest(b) => run_per_request(b, &inner.cfg, &built),
     };
+    // Close the tuning loop: record what this run actually did so the
+    // next `--tune auto` submission of the same source refines on it.
+    // Failed runs are not recorded (their counters are partial).
+    if check.is_ok() && stats.instructions > 0 {
+        inner.cache.record_observed(
+            source,
+            cache::ObservedProfile {
+                instructions: stats.instructions,
+                flops: stats.flops,
+                frame_pushes,
+                wall: wall_start.elapsed(),
+            },
+        );
+    }
     let checksums = arrays.iter().map(|a| fnv1a(a)).collect();
     let keep = inner.cfg.keep_arrays || req.keep_arrays;
     Response {
@@ -554,7 +586,7 @@ fn execute(inner: &Inner, req: Request) -> Response {
 fn run_pooled(
     inner: &Inner,
     built: &BuiltProgram,
-) -> (Result<(), String>, Vec<Vec<u8>>, StatsSnapshot) {
+) -> (Result<(), String>, Vec<Vec<u8>>, StatsSnapshot, u64) {
     let sched = inner.sched.as_ref().expect("pool backend has a scheduler").clone();
     let stats = ExecStats::new();
     let mut rt = TicketRt::new(
@@ -575,7 +607,8 @@ fn run_pooled(
         Ok(Err(e)) => Err(format!("host exec: {e}")),
         Err(p) => Err(format!("panic during execution: {}", panic_msg(p.as_ref()))),
     };
-    (check, arrays, stats.snapshot())
+    let frames = stats.frame_pushes();
+    (check, arrays, stats.snapshot(), frames)
 }
 
 fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
@@ -593,7 +626,7 @@ fn run_per_request(
     backend: Backend,
     cfg: &ServeCfg,
     built: &BuiltProgram,
-) -> (Result<(), String>, Vec<Vec<u8>>, StatsSnapshot) {
+) -> (Result<(), String>, Vec<Vec<u8>>, StatsSnapshot, u64) {
     if backend == Backend::Reference {
         // run manually (rather than via spec::run_with_arrays) to
         // capture the oracle's ExecStats for the identity tests
@@ -605,7 +638,8 @@ fn run_per_request(
             Ok(()) => (built.check)(&arrays),
             Err(e) => Err(format!("host exec: {e}")),
         };
-        return (check, arrays, rt.stats.snapshot());
+        let frames = rt.stats.frame_pushes();
+        return (check, arrays, rt.stats.snapshot(), frames);
     }
     let bcfg = BackendCfg {
         pool_size: cfg.pool_size,
@@ -615,7 +649,7 @@ fn run_per_request(
         ..BackendCfg::default()
     };
     let (out, arrays) = spec::run_with_arrays(built, backend, bcfg);
-    (out.check, arrays, StatsSnapshot::default())
+    (out.check, arrays, StatsSnapshot::default(), 0)
 }
 
 /// The per-ticket [`RuntimeApi`] adapter: allocations on the shared

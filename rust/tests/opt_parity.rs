@@ -10,6 +10,7 @@ use cupbop::benchsuite::spec::{self, Backend, BuiltProgram};
 use cupbop::compiler::passes::{dce, fold};
 use cupbop::compiler::{
     compile_kernel_cfg, compile_kernel_opt, detect_features, pack, ArgValue, CompileCfg, OptLevel,
+    TuneCfg, TuneKnobs,
 };
 use cupbop::exec::{
     BlockFn, BlockScratch, BytecodeBlockFn, CirBlockFn, ExecStats, LaunchInfo, StatsSnapshot,
@@ -320,14 +321,29 @@ fn random_kernels_opt_levels_agree() {
         let n = (grid * bs) as usize;
         let init = rng.vec_i32(n, -30, 30);
         let ro = rng.vec_i32(n.max(1), -10, 10);
-        let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: None };
+        let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: None, ..Default::default() };
         let base = run_blocks(&k, base_cfg, true, grid, bs, &init, &ro);
+        // The cost-model tune variants ride the same sweep: `auto` and
+        // a deliberately-extreme pinned knob set (widest lane chunks,
+        // forced coarsening, tiny grain threshold) may re-time the
+        // kernel but must not move one observable bit at any level.
+        let tunes = [
+            TuneCfg::Off,
+            TuneCfg::Auto,
+            TuneCfg::Knobs(TuneKnobs {
+                lane_chunk: 32,
+                coarse_regions: true,
+                grain_threshold: 1,
+            }),
+        ];
         for opt in OptLevel::ALL {
-            let cfg = CompileCfg { opt, fuse: None };
-            let r = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
-            assert_eq!(base.mem, r.mem, "memory diverged at {opt:?}");
-            assert_eq!(base.stats, r.stats, "ExecStats diverged at {opt:?}");
-            assert_eq!(base.trace, r.trace, "TraceRec stream diverged at {opt:?}");
+            for tune in tunes {
+                let cfg = CompileCfg { opt, fuse: None, tune };
+                let r = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
+                assert_eq!(base.mem, r.mem, "memory diverged at {opt:?} {tune:?}");
+                assert_eq!(base.stats, r.stats, "ExecStats diverged at {opt:?} {tune:?}");
+                assert_eq!(base.trace, r.trace, "TraceRec stream diverged at {opt:?} {tune:?}");
+            }
         }
     });
 }
@@ -433,11 +449,11 @@ fn random_kernels_fused_unfused_agree() {
         let n = (grid * bs) as usize;
         let init = rng.vec_i32(n, -40, 40);
         let ro = rng.vec_i32(n.max(1), -10, 10);
-        let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: Some(false) };
+        let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: Some(false), ..Default::default() };
         let base = run_blocks(&k, base_cfg, true, grid, bs, &init, &ro);
         for opt in [OptLevel::O0, OptLevel::O2] {
             for fuse in [false, true] {
-                let cfg = CompileCfg { opt, fuse: Some(fuse) };
+                let cfg = CompileCfg { opt, fuse: Some(fuse), ..Default::default() };
                 let r = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
                 assert_eq!(base.mem, r.mem, "memory diverged at {opt:?} fuse={fuse}");
                 assert_eq!(base.stats, r.stats, "ExecStats diverged at {opt:?} fuse={fuse}");
@@ -458,7 +474,7 @@ fn corpus_fused_unfused_observably_identical() {
             let build = |fuse: bool| {
                 let (prog, _) = synth_program(&kernel, &cfg)
                     .unwrap_or_else(|e| panic!("{file}/{}: {e}", kernel.name));
-                let ccfg = CompileCfg { opt: OptLevel::O2, fuse: Some(fuse) };
+                let ccfg = CompileCfg { opt: OptLevel::O2, fuse: Some(fuse), ..Default::default() };
                 spec::build_prepared_cfg(&kernel.name, prog, ccfg)
             };
             let baseline = run_reference_traced(&build(false), ExecMode::Bytecode);
@@ -479,6 +495,54 @@ fn corpus_fused_unfused_observably_identical() {
                     "{file}/{}: TraceRec stream diverged fused [{exec:?}]",
                     kernel.name
                 );
+            }
+        }
+    }
+}
+
+/// Tuning at the reference-runtime level: `--tune auto` and a pinned
+/// extreme knob set re-built at `-O2` and `-O3` must stay observably
+/// identical — arrays, `ExecStats` and the `TraceRec` stream — to the
+/// untuned `-O2` bytecode run on every corpus kernel. The cost model
+/// may only move wall-clock, never accounting.
+#[test]
+fn corpus_tuned_untuned_observably_identical() {
+    let tunes = [
+        TuneCfg::Auto,
+        TuneCfg::Knobs(TuneKnobs { lane_chunk: 16, coarse_regions: true, grain_threshold: 1 }),
+    ];
+    for file in CORPUS {
+        for kernel in parse_file(file) {
+            let cfg = SynthCfg { n: 192, block: 64, grid: None };
+            let build = |ccfg: CompileCfg| {
+                let (prog, _) = synth_program(&kernel, &cfg)
+                    .unwrap_or_else(|e| panic!("{file}/{}: {e}", kernel.name));
+                spec::build_prepared_cfg(&kernel.name, prog, ccfg)
+            };
+            let baseline = run_reference_traced(
+                &build(CompileCfg { opt: OptLevel::O2, ..Default::default() }),
+                ExecMode::Bytecode,
+            );
+            for opt in [OptLevel::O2, OptLevel::O3] {
+                for tune in tunes {
+                    let ccfg = CompileCfg { opt, tune, ..Default::default() };
+                    let run = run_reference_traced(&build(ccfg), ExecMode::Bytecode);
+                    assert_eq!(
+                        baseline.arrays, run.arrays,
+                        "{file}/{}: arrays diverged at [{opt:?} {tune:?}]",
+                        kernel.name
+                    );
+                    assert_eq!(
+                        baseline.stats, run.stats,
+                        "{file}/{}: ExecStats diverged at [{opt:?} {tune:?}]",
+                        kernel.name
+                    );
+                    assert_eq!(
+                        baseline.trace, run.trace,
+                        "{file}/{}: TraceRec stream diverged at [{opt:?} {tune:?}]",
+                        kernel.name
+                    );
+                }
             }
         }
     }
@@ -613,10 +677,10 @@ fn random_sync_free_and_barriered_kernels_coarsen_transparently() {
         let n = (grid * bs) as usize;
         let init = rng.vec_i32(n, -30, 30);
         let ro = rng.vec_i32(n.max(1), -10, 10);
-        let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: None };
+        let base_cfg = CompileCfg { opt: OptLevel::O0, fuse: None, ..Default::default() };
         let base = run_blocks(&k, base_cfg, true, grid, bs, &init, &ro);
         for opt in OptLevel::ALL {
-            let cfg = CompileCfg { opt, fuse: None };
+            let cfg = CompileCfg { opt, fuse: None, ..Default::default() };
             let r = run_blocks(&k, cfg, false, grid, bs, &init, &ro);
             assert_eq!(base.mem, r.mem, "memory diverged at {opt:?}");
             assert_eq!(base.stats, r.stats, "ExecStats diverged at {opt:?}");

@@ -66,7 +66,7 @@ fn prop_grain_policy_covers_grid() {
             GrainPolicy::Average,
             GrainPolicy::Aggressive { factor: 2 },
             GrainPolicy::Fixed(fixed),
-            GrainPolicy::Auto { est_insts_per_block: auto_est },
+            GrainPolicy::auto(auto_est),
         ]);
         let bpf = policy.block_per_fetch(grid, pool);
         assert!(bpf >= 1);

@@ -10,7 +10,7 @@
 //! wedges — an admission deadlock must fail CI, not hang it.
 
 use cupbop::benchsuite::spec::{self, Backend, Scale};
-use cupbop::compiler::{CompileCfg, OptLevel};
+use cupbop::compiler::{CompileCfg, OptLevel, TuneCfg};
 use cupbop::frameworks::BackendCfg;
 use cupbop::serve::{storm, Request, ServeBackend, ServeCfg, Server, Ticket};
 use cupbop::testkit::Rng;
@@ -74,9 +74,11 @@ fn hundred_sessions_bit_identical_to_reference() {
         pool_size: 4,
         executors: 4,
         max_in_flight: 2,
-        // > 6 benches × 4 opts × 3 fuse states, so misses here are
-        // cold compiles, never evictions
-        cache_capacity: 128,
+        // > 6 benches × 4 opts × 3 fuse states × tune variants (off,
+        // auto, and the profile-refined knob pins auto resolves to on
+        // repeat submissions), so misses here are cold compiles, never
+        // evictions
+        cache_capacity: 512,
         keep_arrays: true,
         ..ServeCfg::default()
     });
@@ -92,7 +94,8 @@ fn hundred_sessions_bit_identical_to_reference() {
                 1 => Some(false),
                 _ => Some(true),
             };
-            let cfg = CompileCfg { opt, fuse };
+            let tune = if rng.below(2) == 0 { TuneCfg::Off } else { TuneCfg::Auto };
+            let cfg = CompileCfg { opt, fuse, tune };
             tickets.push((srv.submit(s, Request::bench(name, Scale::Tiny, cfg)), name, cfg));
         }
     }
@@ -146,6 +149,46 @@ fn cache_hits_bit_identical_to_cold_compiles() {
         assert_bit_identical(hot.arrays.as_ref().unwrap(), cold_arrays, opt.name());
         assert_bit_identical(cold_arrays, &oracle_arrays("hist", cfg), opt.name());
     }
+}
+
+/// Tuning is observationally invisible through the serving surface:
+/// mixed `--tune off` / `--tune auto` submissions of the same bench
+/// return identical checksums, `ExecStats` and arrays, while repeat
+/// auto submissions exercise the profile-guided re-tuning path (after
+/// the first run records an observed profile, auto resolves to pinned
+/// knobs and is keyed — and cached — as such).
+#[test]
+fn tuned_and_untuned_serves_observationally_identical() {
+    let _wd = Watchdog::arm("tuned_and_untuned_serves_observationally_identical", 600);
+    let srv = Server::new(ServeCfg {
+        pool_size: 2,
+        executors: 1,
+        keep_arrays: true,
+        ..ServeCfg::default()
+    });
+    let s = srv.session();
+    let off = CompileCfg { tune: TuneCfg::Off, ..Default::default() };
+    let auto = CompileCfg { tune: TuneCfg::Auto, ..Default::default() };
+    let base = srv.wait(srv.submit(s, Request::bench("hist", Scale::Tiny, off)));
+    base.check.as_ref().unwrap_or_else(|e| panic!("untuned: {e}"));
+    let mut hit_refined_entry = false;
+    for i in 0..4 {
+        let r = srv.wait(srv.submit(s, Request::bench("hist", Scale::Tiny, auto)));
+        r.check.as_ref().unwrap_or_else(|e| panic!("tuned #{i}: {e}"));
+        assert_eq!(base.checksums, r.checksums, "tuned #{i}: checksums");
+        assert_eq!(base.stats, r.stats, "tuned #{i}: a tuned run must not change ExecStats");
+        assert_bit_identical(
+            r.arrays.as_ref().unwrap(),
+            base.arrays.as_ref().unwrap(),
+            "tuned serve",
+        );
+        hit_refined_entry |= r.cache_hit;
+    }
+    // The observed counters are accounting-transparent, so refinement
+    // can only oscillate between at most two knob pins (the coarse
+    // flag follows the engine's frame-push bookkeeping of the previous
+    // run); four auto submissions must therefore reuse an entry.
+    assert!(hit_refined_entry, "profile-guided re-tuning never reused a cache entry");
 }
 
 /// Satellite: coalescing is semantically invisible on the Fig 11 storm
