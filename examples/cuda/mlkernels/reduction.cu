@@ -1,0 +1,25 @@
+// Grid-stride reductions: a double-precision full-array sum finished
+// with a device-wide atomicAdd (the one float atomic CUDA defines for
+// f64), and a predicate count finished with __reduce_add_sync.
+__global__ void reduce_sum(double* x, double* total, int n) {
+    double acc = 0.0;
+    for (int i = blockIdx.x * blockDim.x + threadIdx.x; i < n;
+         i += blockDim.x * gridDim.x) {
+        acc = acc + x[i];
+    }
+    atomicAdd(&total[0], acc);
+}
+
+__global__ void count_above(float* x, int* count, float cut, int n) {
+    int flag = 0;
+    for (int i = blockIdx.x * blockDim.x + threadIdx.x; i < n;
+         i += blockDim.x * gridDim.x) {
+        if (x[i] > cut) {
+            flag = flag + 1;
+        }
+    }
+    int wsum = __reduce_add_sync(0xffffffff, flag);
+    if (threadIdx.x % 32 == 0) {
+        atomicAdd(&count[0], wsum);
+    }
+}

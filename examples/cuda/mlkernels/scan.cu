@@ -1,0 +1,26 @@
+// Per-block inclusive prefix sum (Hillis-Steele) through shared memory.
+// The doubling step `off = off * 2` is deliberately non-canonical so the
+// frontend's for->while desugaring runs under barrier fission.
+__global__ void scan_block(float* x, float* y, int n) {
+    __shared__ float buf[64];
+    int t = threadIdx.x;
+    int gid = blockIdx.x * blockDim.x + t;
+    float v = 0.0f;
+    if (gid < n) {
+        v = x[gid];
+    }
+    buf[t] = v;
+    __syncthreads();
+    for (int off = 1; off < 64; off = off * 2) {
+        float w = 0.0f;
+        if (t >= off) {
+            w = buf[t - off];
+        }
+        __syncthreads();
+        buf[t] = buf[t] + w;
+        __syncthreads();
+    }
+    if (gid < n) {
+        y[gid] = buf[t];
+    }
+}

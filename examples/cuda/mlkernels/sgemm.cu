@@ -1,0 +1,24 @@
+// Grid-stride SGEMM over struct-described matrices: C = alpha * A * B.
+// Exercises POD struct parameters, a function-like indexing macro, and
+// the grid-stride loop idiom every CUDA ML kernel uses.
+#define IDX2(i, j, ld) ((i) * (ld) + (j))
+
+struct Mat {
+    float* data;
+    int rows;
+    int cols;
+};
+
+__global__ void sgemm(Mat a, Mat b, float* c, float alpha) {
+    int total = a.rows * b.cols;
+    for (int idx = blockIdx.x * blockDim.x + threadIdx.x; idx < total;
+         idx += blockDim.x * gridDim.x) {
+        int row = idx / b.cols;
+        int col = idx % b.cols;
+        float acc = 0.0f;
+        for (int k = 0; k < a.cols; k += 1) {
+            acc += a.data[IDX2(row, k, a.cols)] * b.data[IDX2(k, col, b.cols)];
+        }
+        c[idx] = alpha * acc;
+    }
+}

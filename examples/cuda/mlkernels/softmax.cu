@@ -1,0 +1,24 @@
+// Numerically-stable row softmax with a __constant__ per-column bias
+// (logits + BIAS, as in a classifier head with baked class priors).
+// One thread per row, grid-stride over rows; cols == 8 == len(BIAS).
+__constant__ float BIAS[8] = { 0.5f, -0.25f, 0.125f, 0.0f, 1.0f, -1.0f, 0.75f, -0.5f };
+
+__global__ void softmax(float* x, float* y, int rows, int cols) {
+    for (int row = blockIdx.x * blockDim.x + threadIdx.x; row < rows;
+         row += blockDim.x * gridDim.x) {
+        float mx = x[row * cols];
+        for (int j = 1; j < cols; j += 1) {
+            float v = x[row * cols + j];
+            if (v > mx) {
+                mx = v;
+            }
+        }
+        float sum = 0.0f;
+        for (int j = 0; j < cols; j += 1) {
+            sum += expf(x[row * cols + j] + BIAS[j] - mx);
+        }
+        for (int j = 0; j < cols; j += 1) {
+            y[row * cols + j] = expf(x[row * cols + j] + BIAS[j] - mx) / sum;
+        }
+    }
+}

@@ -6,11 +6,14 @@
 //! * [`heteromark`] — Table IV/V, Fig 7, Fig 9 (AES, BS, EP, FIR, GA,
 //!   HIST, KMEANS, PR, plus BST/KNN stubs),
 //! * [`crystal`] — Table II's 13 SSB queries (warp shuffle, atomicCAS),
-//! * [`cloverleaf`] — Fig 8's HPC mini-app.
+//! * [`cloverleaf`] — Fig 8's HPC mini-app,
+//! * [`mlkernels`] — grid-stride ML micro-kernels bundled as unmodified
+//!   `.cu` sources (frontend-acceptance suite).
 
 pub mod cloverleaf;
 pub mod crystal;
 pub mod heteromark;
+pub mod mlkernels;
 pub mod rodinia;
 pub mod spec;
 pub mod util;

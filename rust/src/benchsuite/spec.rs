@@ -25,6 +25,9 @@ pub enum Suite {
     HeteroMark,
     Crystal,
     CloverLeaf,
+    /// Bundled grid-stride ML micro-kernels (sgemm/softmax/scan/
+    /// reduction) — frontend acceptance suite, not a Table II row.
+    MlKernels,
 }
 
 impl Suite {
@@ -34,6 +37,7 @@ impl Suite {
             Suite::HeteroMark => "Hetero-Mark",
             Suite::Crystal => "Crystal",
             Suite::CloverLeaf => "CloverLeaf",
+            Suite::MlKernels => "ML-Kernels",
         }
     }
 }
@@ -149,10 +153,25 @@ pub fn build_program_opt(b: &Benchmark, scale: Scale, opt: OptLevel) -> BuiltPro
 
 /// Compile a benchmark's kernels with explicit compile knobs (opt level
 /// plus the fusion toggle — `fig_exec`'s trajectory mode measures
-/// fused vs unfused bytecode this way).
+/// fused vs unfused bytecode this way). Panics on spec-only rows and
+/// compile errors; fallible callers (the serving runtime, the CLI) use
+/// [`try_build_program_cfg`].
 pub fn build_program_cfg(b: &Benchmark, scale: Scale, cfg: CompileCfg) -> BuiltProgram {
-    let builder = b.build.unwrap_or_else(|| panic!("benchmark `{}` is spec-only", b.name));
-    build_prepared_cfg(b.name, builder(scale), cfg)
+    try_build_program_cfg(b, scale, cfg).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible variant of [`build_program_cfg`]: spec-only rows and kernel
+/// compile errors come back as values, so a hostile or unsupported
+/// submission cannot take down a server that builds on demand.
+pub fn try_build_program_cfg(
+    b: &Benchmark,
+    scale: Scale,
+    cfg: CompileCfg,
+) -> Result<BuiltProgram, String> {
+    let Some(builder) = b.build else {
+        return Err(format!("benchmark `{}` is spec-only", b.name));
+    };
+    try_build_prepared_cfg(b.name, builder(scale), cfg)
 }
 
 /// Compile an already-constructed [`BenchProgram`] at the default opt
@@ -170,16 +189,25 @@ pub fn build_prepared_opt(name: &str, prog: BenchProgram, opt: OptLevel) -> Buil
 }
 
 /// Compile an already-constructed [`BenchProgram`] with explicit
-/// compile knobs and run the host barrier pass.
+/// compile knobs and run the host barrier pass. Panics on compile
+/// errors; fallible callers use [`try_build_prepared_cfg`].
 pub fn build_prepared_cfg(name: &str, prog: BenchProgram, cfg: CompileCfg) -> BuiltProgram {
-    let compiled: Vec<Arc<CompiledKernel>> = prog
-        .kernels
-        .iter()
-        .map(|k| {
-            Arc::new(compile_kernel_cfg(k, cfg).unwrap_or_else(|e| panic!("{}: {e}", k.name)))
-        })
-        .collect();
-    assemble_prepared(name, prog, compiled)
+    try_build_prepared_cfg(name, prog, cfg).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible variant of [`build_prepared_cfg`]: a kernel that fails to
+/// compile (e.g. a rejected construct in a served submission) returns
+/// `Err` instead of panicking.
+pub fn try_build_prepared_cfg(
+    name: &str,
+    prog: BenchProgram,
+    cfg: CompileCfg,
+) -> Result<BuiltProgram, String> {
+    let mut compiled: Vec<Arc<CompiledKernel>> = Vec::with_capacity(prog.kernels.len());
+    for k in &prog.kernels {
+        compiled.push(Arc::new(compile_kernel_cfg(k, cfg).map_err(|e| format!("{}: {e}", k.name))?));
+    }
+    Ok(assemble_prepared(name, prog, compiled))
 }
 
 /// Assemble a [`BuiltProgram`] from kernels that are *already
@@ -346,6 +374,7 @@ pub fn all_benchmarks() -> Vec<Benchmark> {
     v.extend(super::heteromark::benchmarks());
     v.extend(super::crystal::benchmarks());
     v.push(super::cloverleaf::benchmark());
+    v.extend(super::mlkernels::benchmarks());
     v
 }
 

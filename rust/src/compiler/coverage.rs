@@ -18,6 +18,9 @@ pub fn detect_features(k: &Kernel) -> BTreeSet<Feature> {
     if k.dyn_shared_elem.is_some() {
         f.insert(Feature::DynSharedMem);
     }
+    if !k.constants.is_empty() {
+        f.insert(Feature::ConstantMemory);
+    }
     walk_stmts(&k.body, &mut f);
     f
 }
@@ -29,8 +32,8 @@ fn walk_expr(e: &Expr, f: &mut BTreeSet<Feature>) {
             walk_expr(val, f);
             walk_expr(lane, f);
         }
-        Expr::WarpVote { pred, .. } => {
-            f.insert(Feature::WarpVote);
+        Expr::WarpVote { kind, pred } => {
+            f.insert(if kind.is_reduce() { Feature::WarpReduce } else { Feature::WarpVote });
             walk_expr(pred, f);
         }
         Expr::NvIntrinsic { args, .. } => {
@@ -82,8 +85,16 @@ fn walk_stmts(body: &[Stmt], f: &mut BTreeSet<Feature>) {
                 walk_expr(cond, f);
                 walk_stmts(body, f);
             }
-            Stmt::AtomicRmw { ptr, val, .. } => {
+            Stmt::AtomicRmw { op, ptr, val, ty, .. } => {
                 f.insert(Feature::AtomicRmw);
+                // CUDA only defines atomicAdd/atomicExch on floating
+                // point; anything else is an FP-atomic extension no
+                // CPU framework provides (ir::verify rejects it too).
+                if matches!(ty, Ty::F32 | Ty::F64)
+                    && !matches!(op, AtomicOp::Add | AtomicOp::Exch)
+                {
+                    f.insert(Feature::FpAtomics);
+                }
                 walk_expr(ptr, f);
                 walk_expr(val, f);
             }
@@ -141,6 +152,7 @@ impl Framework {
             Framework::CuPBoP => !matches!(
                 feat,
                 TextureMemory | NvIntrinsic | SharedStruct | SystemAtomics | CudaLibrary
+                    | FpAtomics
             ),
             // Source-to-source translators see the *C++* intrinsic call
             // and translate it, so NvIntrinsic (NVVM-level) only blocks
@@ -157,6 +169,8 @@ impl Framework {
                     | SystemAtomics
                     | ComplexTemplate      // heartwall
                     | CudaLibrary
+                    | WarpReduce           // same lowering gap as WarpShuffle
+                    | FpAtomics
             ),
             Framework::Dpcpp => !matches!(
                 feat,
@@ -165,6 +179,7 @@ impl Framework {
                     | SystemAtomics
                     | SharedStruct         // dwt2d segfaults
                     | CudaLibrary
+                    | FpAtomics
             ),
         }
     }
@@ -277,6 +292,33 @@ mod tests {
         assert!(!Framework::CuPBoP.supports(NvIntrinsic));
         assert!(Framework::HipCpu.supports(NvIntrinsic));
         assert!(Framework::Dpcpp.supports(NvIntrinsic));
+        // __constant__ memory: everyone handles it.
+        for fw in [Framework::CuPBoP, Framework::HipCpu, Framework::Dpcpp] {
+            assert!(fw.supports(ConstantMemory));
+        }
+        // __reduce_*_sync: same lowering gap as shuffles for HIP-CPU.
+        assert!(Framework::CuPBoP.supports(WarpReduce));
+        assert!(!Framework::HipCpu.supports(WarpReduce));
+        assert!(Framework::Dpcpp.supports(WarpReduce));
+        // float atomicMin/Max: nobody provides them on a CPU.
+        for fw in [Framework::CuPBoP, Framework::HipCpu, Framework::Dpcpp] {
+            assert!(!fw.supports(FpAtomics));
+        }
+    }
+
+    #[test]
+    fn detects_constant_reduce_and_fp_atomics() {
+        let mut b = KernelBuilder::new("k");
+        let p = b.ptr_param("p", Ty::F32);
+        let _ = b.constant_array("lut", Ty::F32, vec![Const::F32(1.0)]);
+        let v = b.vote(VoteKind::ReduceAdd, c_i32(1));
+        b.store_at(p.clone(), reg(v), c_f32(0.0), Ty::F32);
+        b.atomic_rmw_void(AtomicOp::Min, p.clone(), c_f32(1.0), Ty::F32);
+        let f = detect_features(&b.build());
+        assert!(f.contains(&Feature::ConstantMemory));
+        assert!(f.contains(&Feature::WarpReduce));
+        assert!(!f.contains(&Feature::WarpVote));
+        assert!(f.contains(&Feature::FpAtomics));
     }
 
     #[test]

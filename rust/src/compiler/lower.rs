@@ -642,7 +642,11 @@ impl<'a> Lower<'a> {
             return false;
         }
         match e {
-            Expr::Const(_) | Expr::Param(_) | Expr::SharedBase(_) | Expr::DynSharedBase => true,
+            Expr::Const(_)
+            | Expr::Param(_)
+            | Expr::SharedBase(_)
+            | Expr::ConstBase(_)
+            | Expr::DynSharedBase => true,
             Expr::Reg(r) => self.is_scalar(r.0),
             Expr::Special(s) => !super::passes::uniformity::is_lane_special(*s),
             Expr::Bin(_, a, b) => self.expr_uniform(a) && self.expr_uniform(b),
@@ -1079,6 +1083,7 @@ impl<'a> Lower<'a> {
                 | Expr::Param(_)
                 | Expr::Special(_)
                 | Expr::SharedBase(_)
+                | Expr::ConstBase(_)
                 | Expr::DynSharedBase
         )
     }
@@ -1149,6 +1154,12 @@ impl<'a> Lower<'a> {
             },
             Expr::SharedBase(i) => {
                 let off = self.memory.slots[*i].offset as u64;
+                self.emit_s(Inst::Const { dst, val: Value::Ptr(SHARED_TAG | off) }, scalar);
+            }
+            Expr::ConstBase(i) => {
+                // constant data lives in the slab like static shared;
+                // the engines copy `const_image` there for every block
+                let off = self.memory.const_slots[*i].offset as u64;
                 self.emit_s(Inst::Const { dst, val: Value::Ptr(SHARED_TAG | off) }, scalar);
             }
             Expr::DynSharedBase => {

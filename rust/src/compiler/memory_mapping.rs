@@ -29,15 +29,24 @@ pub struct SharedSlot {
     pub offset: usize,
 }
 
-/// The concrete layout of a block's shared slab.
+/// The concrete layout of a block's shared slab:
+/// `[static shared][__constant__ image][dynamic segment]`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MemoryPlan {
     pub slots: Vec<SharedSlot>,
     /// Total bytes of *static* shared memory.
     pub static_bytes: usize,
+    /// Placement of each `__constant__` array inside the slab (offsets
+    /// are absolute slab offsets, like `slots`).
+    pub const_slots: Vec<SharedSlot>,
+    /// Offset at which the `__constant__` region begins (= `static_bytes`).
+    pub const_offset: usize,
+    /// The baked bytes of the `__constant__` region, laid out to match
+    /// `const_slots`. Engines copy this into the slab for every block.
+    pub const_image: Vec<u8>,
     /// Element type of the dynamic segment, when `extern __shared__` is
-    /// used. The dynamic segment is placed after the static slots, at
-    /// `static_bytes` (aligned), with its size supplied at launch.
+    /// used. The dynamic segment is placed after the static slots and
+    /// the constant region, with its size supplied at launch.
     pub dyn_elem: Option<Ty>,
     /// Offset at which the dynamic segment begins.
     pub dyn_offset: usize,
@@ -57,11 +66,62 @@ pub fn plan_memory(kernel: &Kernel) -> MemoryPlan {
         offset += d.elem.size() * d.len;
     }
     let static_bytes = align_up(offset, SHARED_ALIGN);
+    // __constant__ arrays live right after the static region; their
+    // initializer bytes are baked little-endian into `const_image` at
+    // plan time (matching `exec::interp::read_slab`) so both engines
+    // can copy one flat image per block.
+    let const_offset = static_bytes;
+    let mut coff = const_offset;
+    let mut const_slots = Vec::with_capacity(kernel.constants.len());
+    let mut const_image = Vec::new();
+    for d in &kernel.constants {
+        coff = align_up(coff, SHARED_ALIGN);
+        const_image.resize(coff - const_offset, 0u8);
+        const_slots.push(SharedSlot {
+            name: d.name.clone(),
+            elem: d.elem,
+            len: d.data.len(),
+            offset: coff,
+        });
+        for c in &d.data {
+            push_const_le(&mut const_image, d.elem, *c);
+        }
+        coff += d.elem.size() * d.data.len();
+    }
     MemoryPlan {
         slots,
         static_bytes,
+        const_slots,
+        const_offset,
+        const_image,
         dyn_elem: kernel.dyn_shared_elem,
-        dyn_offset: static_bytes,
+        dyn_offset: align_up(coff, SHARED_ALIGN),
+    }
+}
+
+/// Append one constant, adopted to the array's element type, as
+/// little-endian bytes (the slab convention).
+fn push_const_le(out: &mut Vec<u8>, elem: Ty, c: Const) {
+    let as_i = match c {
+        Const::I32(v) => v as i64,
+        Const::I64(v) => v,
+        Const::F32(v) => v as i64,
+        Const::F64(v) => v as i64,
+        Const::Bool(v) => v as i64,
+    };
+    let as_f = match c {
+        Const::I32(v) => v as f64,
+        Const::I64(v) => v as f64,
+        Const::F32(v) => v as f64,
+        Const::F64(v) => v,
+        Const::Bool(v) => v as i32 as f64,
+    };
+    match elem {
+        Ty::I32 => out.extend_from_slice(&(as_i as i32).to_le_bytes()),
+        Ty::I64 => out.extend_from_slice(&as_i.to_le_bytes()),
+        Ty::F32 => out.extend_from_slice(&(as_f as f32).to_le_bytes()),
+        Ty::F64 => out.extend_from_slice(&as_f.to_le_bytes()),
+        Ty::Bool => out.push((as_i != 0) as u8),
     }
 }
 
@@ -115,6 +175,41 @@ mod tests {
         assert_eq!(slab_bytes(&p, 64 * 4), 256);
         // No dynamic request → empty slab.
         assert_eq!(slab_bytes(&p, 0), 0);
+    }
+
+    #[test]
+    fn constants_placed_between_static_and_dyn() {
+        let mut b = KernelBuilder::new("k");
+        let _ = b.shared_array("tile", Ty::I32, 3); // 12 → static 16
+        let _ = b.constant_array(
+            "lut",
+            Ty::F32,
+            vec![Const::F32(1.0), Const::F32(2.0), Const::F32(3.0)],
+        ); // 12 bytes @16
+        let _ = b.constant_array("k2", Ty::I64, vec![Const::I64(7)]); // @32 (aligned)
+        let _ = b.dyn_shared(Ty::I32);
+        let p = plan_memory(&b.build());
+        assert_eq!(p.static_bytes, 16);
+        assert_eq!(p.const_offset, 16);
+        assert_eq!(p.const_slots[0].offset, 16);
+        assert_eq!(p.const_slots[1].offset, 32);
+        assert_eq!(p.dyn_offset, 40);
+        // image spans [16, 40): 12 data + 4 pad + 8 data
+        assert_eq!(p.const_image.len(), 24);
+        assert_eq!(p.const_image[0..4], 1.0f32.to_le_bytes());
+        assert_eq!(p.const_image[16..24], 7i64.to_le_bytes());
+        assert_eq!(slab_bytes(&p, 8), 48);
+    }
+
+    #[test]
+    fn no_constants_layout_unchanged() {
+        let mut b = KernelBuilder::new("k");
+        let _ = b.shared_array("a", Ty::F32, 3);
+        let p = plan_memory(&b.build());
+        assert!(p.const_slots.is_empty());
+        assert!(p.const_image.is_empty());
+        assert_eq!(p.const_offset, p.static_bytes);
+        assert_eq!(p.dyn_offset, p.static_bytes);
     }
 
     #[test]

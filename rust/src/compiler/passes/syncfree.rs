@@ -361,6 +361,7 @@ fn scan_expr(e: &Expr, sc: &mut Scan) {
         | Expr::Special(_)
         | Expr::Param(_)
         | Expr::SharedBase(_)
+        | Expr::ConstBase(_)
         | Expr::DynSharedBase => {}
     }
 }

@@ -112,7 +112,9 @@ impl Types {
                 ParamTy::Ptr(_, _) => Some(VTy::Ptr),
             },
             Expr::Special(_) => Some(VTy::Scalar(Ty::I32)),
-            Expr::SharedBase(_) | Expr::DynSharedBase | Expr::Index { .. } => Some(VTy::Ptr),
+            Expr::SharedBase(_) | Expr::ConstBase(_) | Expr::DynSharedBase | Expr::Index { .. } => {
+                Some(VTy::Ptr)
+            }
             Expr::Load { ty, .. } => Some(VTy::Scalar(*ty)),
             Expr::Cast(ty, _) => Some(VTy::Scalar(*ty)),
             Expr::Bin(op, a, b) => {
@@ -170,6 +172,7 @@ impl Types {
             | Expr::Param(_)
             | Expr::Special(_)
             | Expr::SharedBase(_)
+            | Expr::ConstBase(_)
             | Expr::DynSharedBase => true,
             Expr::Load { .. } => false,
             Expr::Bin(_, a, b) => {

@@ -67,7 +67,11 @@ pub fn is_lane_special(s: Special) -> bool {
 /// varying set?
 pub fn expr_varying(e: &Expr, varying: &[bool]) -> bool {
     match e {
-        Expr::Const(_) | Expr::Param(_) | Expr::SharedBase(_) | Expr::DynSharedBase => false,
+        Expr::Const(_)
+        | Expr::Param(_)
+        | Expr::SharedBase(_)
+        | Expr::ConstBase(_)
+        | Expr::DynSharedBase => false,
         Expr::Reg(r) => varying.get(r.0 as usize).copied().unwrap_or(true),
         Expr::Special(s) => is_lane_special(*s),
         Expr::Bin(_, a, b) => expr_varying(a, varying) || expr_varying(b, varying),

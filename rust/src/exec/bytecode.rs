@@ -91,6 +91,13 @@ impl BlockFn for BytecodeBlockFn {
         let shared_bytes = compiler::slab_bytes(&ck.memory, launch.dyn_shmem);
         scratch.prepare_cols(prog.num_vec_regs, prog.num_regs, block_size, shared_bytes);
         scratch.stats = Default::default();
+        // materialise the __constant__ image — the slab is reused
+        // across blocks (and kernels), so refresh it every run
+        if !ck.memory.const_image.is_empty() {
+            let at = ck.memory.const_offset;
+            scratch.shared[at..at + ck.memory.const_image.len()]
+                .copy_from_slice(&ck.memory.const_image);
+        }
         let tracing = scratch.trace.is_some();
         scratch.vm.prepare(block_size, tracing);
 
@@ -716,6 +723,15 @@ impl<'a> Vm<'a> {
             let v = match kind {
                 VoteKind::Any => Value::I32(slots.iter().any(|v| v.as_bool()) as i32),
                 VoteKind::All => Value::I32(slots.iter().all(|v| v.as_bool()) as i32),
+                VoteKind::ReduceAdd => {
+                    Value::I32(slots.iter().fold(0i32, |a, v| a.wrapping_add(v.as_i32())))
+                }
+                VoteKind::ReduceMin => {
+                    Value::I32(slots.iter().map(|v| v.as_i32()).min().unwrap_or(0))
+                }
+                VoteKind::ReduceMax => {
+                    Value::I32(slots.iter().map(|v| v.as_i32()).max().unwrap_or(0))
+                }
                 VoteKind::Ballot => {
                     let mut m = 0i32;
                     for (i, v) in slots.iter().enumerate() {

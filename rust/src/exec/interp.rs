@@ -62,6 +62,13 @@ impl BlockFn for CirBlockFn {
         let shared_bytes = compiler::slab_bytes(&ck.memory, launch.dyn_shmem);
         scratch.prepare(ck.mpmd.num_regs as usize, block_size, shared_bytes);
         scratch.stats = Default::default();
+        // materialise the __constant__ image — the slab is reused
+        // across blocks (and kernels), so refresh it every run
+        if !ck.memory.const_image.is_empty() {
+            let at = ck.memory.const_offset;
+            scratch.shared[at..at + ck.memory.const_image.len()]
+                .copy_from_slice(&ck.memory.const_image);
+        }
 
         // ---- kernel prologue: unpack the packed argument object ----
         let mut args = compiler::unpack(&ck.layout, &launch.packed)
@@ -201,6 +208,9 @@ impl<'a> Interp<'a> {
             Expr::Param(i) => self.args[*i],
             Expr::Special(s) => self.special(*s, tid),
             Expr::SharedBase(i) => Value::Ptr(SHARED_TAG | self.ck.memory.slots[*i].offset as u64),
+            Expr::ConstBase(i) => {
+                Value::Ptr(SHARED_TAG | self.ck.memory.const_slots[*i].offset as u64)
+            }
             Expr::DynSharedBase => Value::Ptr(SHARED_TAG | self.ck.memory.dyn_offset as u64),
             Expr::Bin(op, a, b) => {
                 let x = self.eval(a, tid);
@@ -242,11 +252,22 @@ impl<'a> Interp<'a> {
                 self.scratch.exchange[warp * 32 + src]
             }
             Expr::VoteResult => self.scratch.votes[tid / 32],
-            Expr::WarpShfl { .. } | Expr::WarpVote { .. } => {
-                panic!("warp collective reached the interpreter — fission must legalize it")
+            // Statically unreachable: `verify_mpmd` rejects surviving
+            // warp collectives and `compile_kernel` rejects NVIDIA
+            // intrinsics (CompileError) before an interpreter is ever
+            // built. Keep a total fallback so a hostile input that
+            // somehow slipped through cannot abort a serving host.
+            Expr::WarpShfl { val, .. } => {
+                debug_assert!(false, "warp collective reached the interpreter");
+                self.eval(val, tid)
+            }
+            Expr::WarpVote { pred, .. } => {
+                debug_assert!(false, "warp collective reached the interpreter");
+                self.eval(pred, tid)
             }
             Expr::NvIntrinsic { name, .. } => {
-                panic!("NVIDIA intrinsic `{name}` has no CPU semantics (Table II dwt2d case)")
+                debug_assert!(false, "NVIDIA intrinsic `{name}` has no CPU semantics");
+                Value::zero()
             }
         }
     }
@@ -319,7 +340,10 @@ impl<'a> Interp<'a> {
                     }
                 }
                 Stmt::ReduceVote { kind } => self.reduce_votes(*kind),
-                other => panic!("thread-level stmt at block scope: {other:?}"),
+                // unreachable past verify_mpmd — skip rather than abort
+                other => {
+                    debug_assert!(false, "thread-level stmt at block scope: {other:?}");
+                }
             }
         }
     }
@@ -340,6 +364,15 @@ impl<'a> Interp<'a> {
                         }
                     }
                     Value::I32(m)
+                }
+                VoteKind::ReduceAdd => {
+                    Value::I32(slots.iter().fold(0i32, |a, v| a.wrapping_add(v.as_i32())))
+                }
+                VoteKind::ReduceMin => {
+                    Value::I32(slots.iter().map(|v| v.as_i32()).min().unwrap_or(0))
+                }
+                VoteKind::ReduceMax => {
+                    Value::I32(slots.iter().map(|v| v.as_i32()).max().unwrap_or(0))
                 }
             };
             self.scratch.votes[w] = v;
@@ -423,10 +456,14 @@ impl<'a> Interp<'a> {
                     let warp = tid / 32;
                     self.scratch.exchange[warp * 32 + tid % 32] = v;
                 }
+                // unreachable past verify_mpmd (fission removes barriers
+                // and scopes every statement) — skip rather than abort
                 Stmt::SyncThreads => {
-                    panic!("__syncthreads survived fission — compiler bug")
+                    debug_assert!(false, "__syncthreads survived fission — compiler bug");
                 }
-                other => panic!("block-scope stmt at thread scope: {other:?}"),
+                other => {
+                    debug_assert!(false, "block-scope stmt at thread scope: {other:?}");
+                }
             }
         }
         Flow::Normal

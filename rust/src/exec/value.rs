@@ -119,30 +119,13 @@ pub fn bin_op(op: BinOp, a: Value, b: Value) -> Value {
     use BinOp::*;
     // comparisons produce Bool
     if matches!(op, Eq | Ne | Lt | Le | Gt | Ge) {
-        let r = if a.is_float() || b.is_float() {
-            let (x, y) = (a.as_f64(), b.as_f64());
-            match op {
-                Eq => x == y,
-                Ne => x != y,
-                Lt => x < y,
-                Le => x <= y,
-                Gt => x > y,
-                Ge => x >= y,
-                _ => unreachable!(),
-            }
+        let ord = if a.is_float() || b.is_float() {
+            // `None` is the IEEE unordered case (a NaN operand)
+            a.as_f64().partial_cmp(&b.as_f64())
         } else {
-            let (x, y) = (a.as_i64(), b.as_i64());
-            match op {
-                Eq => x == y,
-                Ne => x != y,
-                Lt => x < y,
-                Le => x <= y,
-                Gt => x > y,
-                Ge => x >= y,
-                _ => unreachable!(),
-            }
+            Some(a.as_i64().cmp(&b.as_i64()))
         };
-        return Value::Bool(r);
+        return Value::Bool(cmp_holds(op, ord));
     }
     let rank = a.rank().max(b.rank());
     match rank {
@@ -196,6 +179,23 @@ pub fn bin_op(op: BinOp, a: Value, b: Value) -> Value {
             let (x, y) = (a.as_i32(), b.as_i32());
             Value::I32(int_op32(op, x, y))
         }
+    }
+}
+
+/// Decide a comparison from an ordering. Total by construction: the
+/// unordered case (`None`, i.e. a NaN operand) satisfies only `!=`,
+/// matching C/IEEE-754 semantics; non-comparison operators never reach
+/// here because `bin_op` dispatches them to the arithmetic arms.
+fn cmp_holds(op: BinOp, ord: Option<std::cmp::Ordering>) -> bool {
+    use std::cmp::Ordering::*;
+    match (op, ord) {
+        (BinOp::Eq, Some(Equal)) => true,
+        (BinOp::Ne, o) => o != Some(Equal),
+        (BinOp::Lt, Some(Less)) => true,
+        (BinOp::Le, Some(Less | Equal)) => true,
+        (BinOp::Gt, Some(Greater)) => true,
+        (BinOp::Ge, Some(Greater | Equal)) => true,
+        _ => false,
     }
 }
 
@@ -371,10 +371,21 @@ mod tests {
         assert_eq!(un_op(UnOp::Sqrt, Value::F64(9.0)), Value::F64(3.0));
         assert_eq!(un_op(UnOp::Abs, Value::I32(-4)), Value::I32(4));
         assert_eq!(un_op(UnOp::Not, Value::Bool(false)), Value::Bool(true));
-        match un_op(UnOp::Rsqrt, Value::F32(4.0)) {
-            Value::F32(v) => assert!((v - 0.5).abs() < 1e-6),
-            _ => panic!(),
+        // rsqrt(4.0) is exact in binary floating point
+        assert_eq!(un_op(UnOp::Rsqrt, Value::F32(4.0)), Value::F32(0.5));
+    }
+
+    #[test]
+    fn nan_comparisons_are_ieee_unordered() {
+        // every ordered comparison against NaN is false; only != holds
+        let nan = Value::F64(f64::NAN);
+        for op in [BinOp::Eq, BinOp::Lt, BinOp::Le, BinOp::Gt, BinOp::Ge] {
+            assert_eq!(bin_op(op, nan, Value::F64(1.0)), Value::Bool(false));
+            assert_eq!(bin_op(op, Value::F64(1.0), nan), Value::Bool(false));
+            assert_eq!(bin_op(op, nan, nan), Value::Bool(false));
         }
+        assert_eq!(bin_op(BinOp::Ne, nan, nan), Value::Bool(true));
+        assert_eq!(bin_op(BinOp::Ne, Value::F32(f32::NAN), Value::F32(0.0)), Value::Bool(true));
     }
 
     #[test]

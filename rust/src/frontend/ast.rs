@@ -96,6 +96,9 @@ pub enum ExprAst {
     Call { name: String, args: Vec<ExprAst>, span: Span },
     Cast { ty: CTy, arg: Box<ExprAst>, span: Span },
     Ternary { cond: Box<ExprAst>, then_: Box<ExprAst>, else_: Box<ExprAst>, span: Span },
+    /// `s.field` — struct member access; dissolved by the SROA pass
+    /// (`frontend::structs`) before sema ever sees it.
+    Member { base: Box<ExprAst>, field: String, span: Span },
 }
 
 impl ExprAst {
@@ -110,7 +113,8 @@ impl ExprAst {
             | ExprAst::Index { span, .. }
             | ExprAst::Call { span, .. }
             | ExprAst::Cast { span, .. }
-            | ExprAst::Ternary { span, .. } => *span,
+            | ExprAst::Ternary { span, .. }
+            | ExprAst::Member { span, .. } => *span,
         }
     }
 }
@@ -118,6 +122,9 @@ impl ExprAst {
 #[derive(Debug, Clone, PartialEq)]
 pub enum StmtAst {
     Decl { ty: CTy, name: String, init: Option<ExprAst>, span: Span },
+    /// `StructName name;` — a POD struct local, dissolved into
+    /// per-field scalar `Decl`s by `frontend::structs`.
+    StructDecl { struct_name: String, name: String, span: Span },
     /// `__shared__ T name[N];` / `__shared__ T name[R][C];` /
     /// `extern __shared__ T name[];` — `cols` is `Some` for the 2-D
     /// form (`len` then counts rows; storage is flattened row-major).
@@ -155,6 +162,10 @@ pub struct ParamAst {
     pub ty: CTy,
     pub is_ptr: bool,
     pub name: String,
+    /// `Some(struct_name)` when the parameter is a by-value POD struct
+    /// (`ty`/`is_ptr` are then placeholders until `frontend::structs`
+    /// expands it into one scalar/pointer parameter per field).
+    pub sname: Option<String>,
     pub span: Span,
 }
 
@@ -181,10 +192,43 @@ pub struct DeviceFnAst {
     pub span: Span,
 }
 
-/// A parsed translation unit: `__device__` helpers + `__global__`
-/// kernels, in source order.
+/// One field of a POD `struct` definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FieldAst {
+    pub ty: CTy,
+    pub is_ptr: bool,
+    pub name: String,
+    pub span: Span,
+}
+
+/// A top-level `struct Name { … };` definition (POD only: scalar and
+/// pointer fields, no nesting, no methods).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StructDef {
+    pub name: String,
+    pub fields: Vec<FieldAst>,
+    pub span: Span,
+}
+
+/// A module-scope `__constant__ T name[N] = { … };` declaration. Data
+/// is baked at compile time; every kernel in the unit sees all
+/// constants in declaration order (CUDA module-scope semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConstantAst {
+    pub elem: CTy,
+    pub name: String,
+    pub data: Vec<ExprAst>,
+    /// Declared length (data is zero-padded up to it).
+    pub len: usize,
+    pub span: Span,
+}
+
+/// A parsed translation unit: `struct` defs, `__constant__` arrays,
+/// `__device__` helpers + `__global__` kernels, in source order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct UnitAst {
+    pub structs: Vec<StructDef>,
+    pub constants: Vec<ConstantAst>,
     pub device_fns: Vec<DeviceFnAst>,
     pub kernels: Vec<KernelAst>,
 }

@@ -17,14 +17,24 @@ use crate::ir::{
     VoteKind,
 };
 
-/// Lower one parsed kernel to verified CIR.
-pub fn emit_kernel(src: &str, k: &KernelAst) -> Result<Kernel, Diagnostic> {
+/// Lower one parsed kernel to verified CIR. `constants` carries every
+/// module-scope `__constant__` array of the translation unit, in
+/// declaration order (CUDA module-scope semantics: each kernel sees
+/// them all).
+pub fn emit_kernel(
+    src: &str,
+    k: &KernelAst,
+    constants: &[ir::ConstantDecl],
+) -> Result<Kernel, Diagnostic> {
     let mut em = Emitter {
         sema: Sema::new(src),
         shared: Vec::new(),
         dyn_shared: None,
         params: Vec::new(),
     };
+    for (index, c) in constants.iter().enumerate() {
+        em.sema.declare(&c.name, Sym::ConstArr { index, elem: c.elem }, k.span)?;
+    }
     for (i, p) in k.params.iter().enumerate() {
         let t = p.ty.to_ir();
         let (vty, pty) = if p.is_ptr {
@@ -44,6 +54,7 @@ pub fn emit_kernel(src: &str, k: &KernelAst) -> Result<Kernel, Diagnostic> {
         params: em.params,
         shared: em.shared,
         dyn_shared_elem: em.dyn_shared,
+        constants: constants.to_vec(),
         body,
         num_regs: em.sema.num_regs(),
     };
@@ -101,6 +112,13 @@ impl<'a> Emitter<'a> {
                 }
                 Ok(())
             }
+            // Struct locals are dissolved into per-field scalar `Decl`s
+            // by `frontend::structs` before emission; one reaching here
+            // means the caller skipped that pass.
+            StmtAst::StructDecl { name, span, .. } => Err(self.sema.diag(
+                format!("struct local `{name}` was not dissolved before emission"),
+                *span,
+            )),
             StmtAst::Decl { ty, name, init, span } => {
                 let t = ty.to_ir();
                 let reg = self.sema.alloc_reg();
@@ -194,7 +212,8 @@ impl<'a> Emitter<'a> {
             if let Some(kind) = vote_kind(name) {
                 let (e, vt) = self.sema.lower_vote(kind, args, *span)?;
                 if vt != dst_ty {
-                    let want = if kind == VoteKind::Ballot { "int" } else { "bool" };
+                    let want =
+                        if kind == VoteKind::Ballot || kind.is_reduce() { "int" } else { "bool" };
                     return Err(self.sema.diag(
                         format!("`{name}` result must be assigned to a `{want}` variable"),
                         *span,
@@ -250,10 +269,21 @@ impl<'a> Emitter<'a> {
                         ),
                         *tspan,
                     )),
+                    Sym::ConstArr { .. } => Err(self.sema.diag(
+                        format!("cannot assign to `__constant__` array `{name}`; \
+                                 `__constant__` memory is read-only on the device"),
+                        *tspan,
+                    )),
                 }
             }
             ExprAst::Index { .. } => {
                 let (ptr, elem) = self.sema.lower_place(target)?;
+                if ir::verify::rooted_in_constant(&ptr) {
+                    return Err(self.sema.diag(
+                        "cannot write to `__constant__` memory; it is read-only on the device",
+                        span,
+                    ));
+                }
                 let val = if let Some(op) = op {
                     let rhs = self.sema.lower_typed(value, elem)?;
                     let o = self.sema.map_arith(op, elem, span)?;
@@ -290,6 +320,12 @@ impl<'a> Emitter<'a> {
             ));
         }
         let (ptr, elem) = self.sema.lower_place(&args[0])?;
+        if ir::verify::rooted_in_constant(&ptr) {
+            return Err(self.sema.diag(
+                format!("`{name}` cannot target `__constant__` memory; it is read-only"),
+                span,
+            ));
+        }
         if elem == Ty::Bool {
             // no bool atomic exists on any target; rejecting here (and
             // re-checking in `ir::verify`) is what lets the engines
@@ -335,6 +371,20 @@ impl<'a> Emitter<'a> {
         if int_only && !matches!(elem, Ty::I32 | Ty::I64) {
             return Err(self.sema.diag(
                 format!("`{name}` requires an integer location"),
+                span,
+            ));
+        }
+        // CUDA defines float atomics only for add/exch; everything else
+        // (min/max/sub) is integer-only. Rejecting here (re-checked in
+        // `ir::verify`) keeps the runtime's float-atomic arms
+        // unreachable from any `.cu` input.
+        if matches!(elem, Ty::F32 | Ty::F64) && !matches!(op, AtomicOp::Add | AtomicOp::Exch) {
+            return Err(self.sema.diag(
+                format!(
+                    "`{name}` on a `{}` location is not supported: \
+                     CUDA defines only `atomicAdd`/`atomicExch` for floating point",
+                    elem.c_name()
+                ),
                 span,
             ));
         }
@@ -713,6 +763,229 @@ mod tests {
         )
         .unwrap_err();
         assert_eq!(e.msg, "2-D shared array `tile` must be indexed as `tile[i][j]`");
+    }
+
+    /// Regression: float atomics other than add/exch used to reach
+    /// `runtime::device` panics; they must die here with a spanned
+    /// diagnostic instead.
+    #[test]
+    fn float_atomic_min_rejected_with_diagnostic() {
+        let e = parse_kernels(
+            "__global__ void k(float* p) {\n\
+             atomicMin(&p[0], 1.0f);\n\
+             }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("`atomicMin` on a `float` location"), "{}", e.msg);
+        assert!(e.msg.contains("atomicAdd"), "{}", e.msg);
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn double_atomic_max_rejected_with_diagnostic() {
+        let e = parse_kernels(
+            "__global__ void k(double* p) {\n\
+             atomicMax(&p[0], 1.0);\n\
+             }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("`atomicMax` on a `double` location"), "{}", e.msg);
+    }
+
+    #[test]
+    fn float_atomic_add_still_accepted() {
+        let k = one(
+            "__global__ void k(float* p) {\n\
+             atomicAdd(&p[0], 1.0f);\n\
+             }",
+        );
+        assert!(matches!(k.body[0], Stmt::AtomicRmw { op: AtomicOp::Add, ty: Ty::F32, .. }));
+    }
+
+    #[test]
+    fn constant_read_matches_hand_built_cir() {
+        let parsed = one(
+            "__constant__ float W[4] = { 1.0f, 2.0f, 3.0f, 4.0f };\n\
+             __global__ void k(float* out) {\n\
+             out[threadIdx.x] = W[threadIdx.x];\n\
+             }",
+        );
+        let mut b = KernelBuilder::new("k");
+        let w = b.constant_array(
+            "W",
+            Ty::F32,
+            vec![Const::F32(1.0), Const::F32(2.0), Const::F32(3.0), Const::F32(4.0)],
+        );
+        let out = b.ptr_param("out", Ty::F32);
+        b.store_at(out.clone(), tid_x(), at(w, tid_x(), Ty::F32), Ty::F32);
+        assert_eq!(parsed, b.build());
+    }
+
+    /// `= { … }` with fewer elements than the declared length
+    /// zero-pads the tail (C aggregate-initializer semantics).
+    #[test]
+    fn constant_initializer_zero_pads() {
+        let k = one(
+            "__constant__ int T[5] = { 7, -2 };\n\
+             __global__ void k(int* out) { out[0] = T[4]; }",
+        );
+        assert_eq!(k.constants.len(), 1);
+        assert_eq!(
+            k.constants[0].data,
+            vec![Const::I32(7), Const::I32(-2), Const::I32(0), Const::I32(0), Const::I32(0)]
+        );
+    }
+
+    #[test]
+    fn constant_store_rejected_with_diagnostic() {
+        let e = parse_kernels(
+            "__constant__ int T[2] = { 1, 2 };\n\
+             __global__ void k(int* p) { T[0] = 3; }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("cannot write to `__constant__` memory"), "{}", e.msg);
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn constant_array_assign_rejected() {
+        let e = parse_kernels(
+            "__constant__ int T[2] = { 1, 2 };\n\
+             __global__ void k(int* p) { T = 3; }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("cannot assign to `__constant__` array `T`"), "{}", e.msg);
+    }
+
+    #[test]
+    fn constant_atomic_rejected() {
+        let e = parse_kernels(
+            "__constant__ int T[2] = { 1, 2 };\n\
+             __global__ void k(int* p) { atomicAdd(&T[0], 1); }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("cannot target `__constant__` memory"), "{}", e.msg);
+    }
+
+    /// The grid-stride idiom must canonicalise to `Stmt::For` — the
+    /// form the SPMD→MPMD fission pass reasons about.
+    #[test]
+    fn grid_stride_loop_lowers_to_stmt_for() {
+        let k = one(
+            "__global__ void k(float* x, int n) {\n\
+             for (int i = blockIdx.x * blockDim.x + threadIdx.x; i < n;\n\
+             \x20    i += blockDim.x * gridDim.x) {\n\
+             x[i] = 2.0f * x[i];\n\
+             }\n\
+             }",
+        );
+        match &k.body[0] {
+            Stmt::For { start, end, step, .. } => {
+                assert_eq!(*start, add(mul(bid_x(), bdim_x()), tid_x()));
+                assert_eq!(*end, param(1));
+                assert_eq!(*step, mul(bdim_x(), special(Special::GridDimX)));
+            }
+            other => panic!("expected For, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reduce_add_sync_lowers_to_warp_vote() {
+        let k = one(
+            "__global__ void k(int* p) {\n\
+             int v = p[threadIdx.x];\n\
+             int s = __reduce_add_sync(0xffffffff, v);\n\
+             p[0] = s;\n\
+             }",
+        );
+        match &k.body[1] {
+            Stmt::Assign { expr: Expr::WarpVote { kind: VoteKind::ReduceAdd, .. }, .. } => {}
+            other => panic!("expected reduce vote, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reduce_sync_result_must_be_int() {
+        let e = parse_kernels(
+            "__global__ void k(int* p) {\n\
+             bool s = __reduce_max_sync(0xffffffff, p[0]);\n\
+             }",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("must be assigned to a `int` variable"), "{}", e.msg);
+    }
+
+    /// A by-value POD struct param dissolves to per-field params —
+    /// identical CIR to writing the fields out by hand.
+    #[test]
+    fn struct_param_matches_hand_built_cir() {
+        let parsed = one(
+            "struct Tensor { float* data; int n; };\n\
+             __global__ void scale(Tensor t, float s) {\n\
+             int i = threadIdx.x + blockIdx.x * blockDim.x;\n\
+             if (i < t.n) { t.data[i] = t.data[i] * s; }\n\
+             }",
+        );
+        let mut b = KernelBuilder::new("scale");
+        let data = b.ptr_param("t_data", Ty::F32);
+        let n = b.scalar_param("t_n", Ty::I32);
+        let s = b.scalar_param("s", Ty::F32);
+        let i = b.assign(global_tid());
+        b.if_(lt(reg(i), n.clone()), |bl| {
+            bl.store_at(
+                data.clone(),
+                reg(i),
+                mul(at(data.clone(), reg(i), Ty::F32), s.clone()),
+                Ty::F32,
+            );
+        });
+        assert_eq!(parsed, b.build());
+    }
+
+    #[test]
+    fn struct_local_dissolves_to_scalar_decls() {
+        let k = one(
+            "struct Acc { float sum; int cnt; };\n\
+             __global__ void k(float* out) {\n\
+             Acc a;\n\
+             a.sum = 0.0f;\n\
+             a.cnt = 0;\n\
+             a.sum = a.sum + out[0];\n\
+             out[1] = a.sum;\n\
+             }",
+        );
+        assert_eq!(k.num_regs, 2);
+        assert!(matches!(k.body[0], Stmt::Assign { .. }));
+    }
+
+    /// Function-like macro expansion happens at lex time, so the
+    /// parsed kernel is identical to writing the expansion by hand.
+    #[test]
+    fn function_like_macro_matches_expanded_source() {
+        let via_macro = one(
+            "#define IDX2(i, j, ld) ((i) * (ld) + (j))\n\
+             __global__ void k(float* a, int ld) {\n\
+             a[IDX2(threadIdx.y, threadIdx.x, ld)] = 0.0f;\n\
+             }",
+        );
+        let expanded = one(
+            "__global__ void k(float* a, int ld) {\n\
+             a[((threadIdx.y) * (ld) + (threadIdx.x))] = 0.0f;\n\
+             }",
+        );
+        assert_eq!(via_macro, expanded);
+    }
+
+    #[test]
+    fn double_params_and_arith_lower() {
+        let k = one(
+            "__global__ void k(double* x, double alpha, int n) {\n\
+             int i = threadIdx.x + blockIdx.x * blockDim.x;\n\
+             if (i < n) { x[i] = alpha * x[i] + 1.0; }\n\
+             }",
+        );
+        assert_eq!(k.params[0].ty, ParamTy::Ptr(AddrSpace::Global, Ty::F64));
+        assert_eq!(k.params[1].ty, ParamTy::Scalar(Ty::F64));
     }
 
     #[test]

@@ -104,7 +104,10 @@ fn expand_stmt(
             init: init.as_ref().map(&ex).transpose()?,
             span: *span,
         },
-        StmtAst::SharedDecl { .. } | StmtAst::Break { .. } | StmtAst::Continue { .. }
+        StmtAst::SharedDecl { .. }
+        | StmtAst::StructDecl { .. }
+        | StmtAst::Break { .. }
+        | StmtAst::Continue { .. }
         | StmtAst::Return { .. } => s.clone(),
         StmtAst::Assign { target, op, value, span } => StmtAst::Assign {
             target: ex(target)?,
@@ -185,6 +188,12 @@ fn expand_expr(
             cond: Box::new(expand_expr(cond, fns, active, src)?),
             then_: Box::new(expand_expr(then_, fns, active, src)?),
             else_: Box::new(expand_expr(else_, fns, active, src)?),
+            span: *span,
+        },
+        // Dissolved before inlining (frontend::structs); kept total.
+        ExprAst::Member { base, field, span } => ExprAst::Member {
+            base: Box::new(expand_expr(base, fns, active, src)?),
+            field: field.clone(),
             span: *span,
         },
         ExprAst::Call { name, args, span } => {
@@ -270,6 +279,11 @@ fn subst(e: &ExprAst, map: &HashMap<&str, &ExprAst>) -> ExprAst {
             cond: Box::new(subst(cond, map)),
             then_: Box::new(subst(then_, map)),
             else_: Box::new(subst(else_, map)),
+            span: *span,
+        },
+        ExprAst::Member { base, field, span } => ExprAst::Member {
+            base: Box::new(subst(base, map)),
+            field: field.clone(),
             span: *span,
         },
         ExprAst::Call { name, args, span } => ExprAst::Call {

@@ -1,11 +1,20 @@
 //! CUDA-C lexer: source text → tokens with 1-based line/col spans.
 //!
-//! Object-like `#define NAME tokens…` constants are collected and
-//! expanded at use sites (recursively, with cycle rejection), and
-//! `#undef` removes them; every other preprocessor line (`#include`,
-//! `#ifdef`, …) is skipped whole so real-world `.cu` headers tokenize.
-//! Function-like macros (`#define F(x) …`) are diagnosed, not silently
-//! dropped.
+//! Object-like `#define NAME tokens…` constants and function-like
+//! `#define F(a, b) tokens…` macros are collected and expanded at use
+//! sites (recursively, with cycle rejection), and `#undef` removes
+//! them; every other preprocessor line (`#include`, `#ifdef`, …) is
+//! skipped whole so real-world `.cu` headers tokenize.
+//!
+//! Expansion is *run-based*: raw tokens accumulate between directives
+//! and are flushed through the expander with the macro table as of
+//! that point, so a use before its `#define` stays a literal
+//! identifier (C semantics). Function-like macros follow C as well: a
+//! use without an immediately following `(` is a plain identifier,
+//! arguments are balanced-paren token lists split on top-level commas,
+//! each argument is fully expanded before substitution, and the
+//! substituted body is rescanned with an active-macro stack so
+//! recursion is rejected instead of looping.
 
 use super::Diagnostic;
 use std::collections::HashMap;
@@ -50,10 +59,20 @@ const PUNCTS: &[&str] = &[
     "(", ")", "{", "}", "[", "]", ";", ",", "?", ":", ".",
 ];
 
+/// One `#define`: `params` is `None` for object-like macros and
+/// `Some(names)` for function-like ones (possibly empty for `F()`).
+struct MacroDef {
+    params: Option<Vec<String>>,
+    body: Vec<Tok>,
+}
+
 pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, Diagnostic> {
     let chars: Vec<char> = src.chars().collect();
     let mut toks = Vec::new();
-    let mut defines: HashMap<String, Vec<Tok>> = HashMap::new();
+    // Raw tokens lexed since the last directive; flushed through the
+    // expander with the `defines` table as of the flush point.
+    let mut pending: Vec<(Tok, Span)> = Vec::new();
+    let mut defines: HashMap<String, MacroDef> = HashMap::new();
     let mut cond_depth = 0u32;
     let mut i = 0usize;
     let mut line = 1u32;
@@ -74,6 +93,10 @@ pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, Diagnostic> {
         // Preprocessor directive: `#define`/`#undef` are interpreted
         // (object-like only); every other directive line is skipped.
         if c == '#' {
+            // Flush tokens lexed so far *before* applying the
+            // directive, so `#define`/`#undef` only affect later uses.
+            expand_run(&mut toks, &pending, &defines, &mut Vec::new(), src)?;
+            pending.clear();
             let start = i;
             let start_col = col;
             while i < chars.len() && chars[i] != '\n' {
@@ -119,15 +142,14 @@ pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, Diagnostic> {
                 col += 1;
             }
             let s: String = chars[start..i].iter().collect();
-            let mut active = Vec::new();
-            expand_ident(&mut toks, &s, span, &defines, &mut active, src)?;
+            pending.push((Tok::Ident(s), span));
             continue;
         }
         if c.is_ascii_digit() {
             let (tok, ni, ncol) = lex_number(&chars, i, col, span, src)?;
             i = ni;
             col = ncol;
-            toks.push((tok, span));
+            pending.push((tok, span));
             continue;
         }
         if c == '"' {
@@ -144,14 +166,14 @@ pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, Diagnostic> {
             let s: String = chars[start..i].iter().collect();
             i += 1;
             col += 1;
-            toks.push((Tok::Str(s), span));
+            pending.push((Tok::Str(s), span));
             continue;
         }
         let mut matched = false;
         for p in PUNCTS {
             // PUNCTS are ASCII, so byte length == char count.
             if punct_at(&chars, i, p) {
-                toks.push((Tok::Punct(p), span));
+                pending.push((Tok::Punct(p), span));
                 i += p.len();
                 col += p.len() as u32;
                 matched = true;
@@ -162,6 +184,7 @@ pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, Diagnostic> {
             return Err(Diagnostic::at(format!("unexpected character `{c}`"), span, src));
         }
     }
+    expand_run(&mut toks, &pending, &defines, &mut Vec::new(), src)?;
     toks.push((Tok::Eof, Span { line, col }));
     Ok(toks)
 }
@@ -177,7 +200,7 @@ fn directive(
     chars: &[char],
     line: u32,
     start_col: u32,
-    defines: &mut HashMap<String, Vec<Tok>>,
+    defines: &mut HashMap<String, MacroDef>,
     cond_depth: &mut u32,
     src: &str,
 ) -> Result<(), Diagnostic> {
@@ -240,15 +263,52 @@ fn directive(
         defines.remove(&name);
         return Ok(());
     }
+    // Function-like form: `(` must *immediately* follow the name
+    // (after whitespace it is part of the replacement, per C).
+    let mut params = None;
     if chars.get(j) == Some(&'(') {
-        return Err(Diagnostic::at(
-            format!(
-                "function-like macro `{name}(…)` is not supported \
-                 (only object-like `#define NAME tokens`)"
-            ),
-            name_span,
-            src,
-        ));
+        j += 1;
+        let mut names = Vec::new();
+        loop {
+            while j < chars.len() && (chars[j] == ' ' || chars[j] == '\t') {
+                j += 1;
+            }
+            if names.is_empty() && chars.get(j) == Some(&')') {
+                j += 1;
+                break; // zero-parameter macro `F()`
+            }
+            let p_start = j;
+            while j < chars.len() && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            let p: String = chars[p_start..j].iter().collect();
+            if p.is_empty() || p.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+                return Err(Diagnostic::at(
+                    format!("expected a parameter name in macro `{name}(…)`"),
+                    Span { line, col: col_at(p_start) },
+                    src,
+                ));
+            }
+            names.push(p);
+            while j < chars.len() && (chars[j] == ' ' || chars[j] == '\t') {
+                j += 1;
+            }
+            match chars.get(j) {
+                Some(&',') => j += 1,
+                Some(&')') => {
+                    j += 1;
+                    break;
+                }
+                _ => {
+                    return Err(Diagnostic::at(
+                        format!("expected `,` or `)` in parameter list of macro `{name}(…)`"),
+                        Span { line, col: col_at(j) },
+                        src,
+                    ));
+                }
+            }
+        }
+        params = Some(names);
     }
     // Lex the replacement token list by reusing the main lexer on the
     // remainder of the line (it cannot itself contain a directive).
@@ -259,40 +319,129 @@ fn directive(
         .map(|(t, _)| t)
         .filter(|t| !matches!(t, Tok::Eof))
         .collect();
-    defines.insert(name, body);
+    defines.insert(name, MacroDef { params, body });
     Ok(())
 }
 
-/// Push identifier `name` at `span`, expanding it (recursively) when it
-/// names an object-like macro. `active` carries the expansion stack so
-/// cycles are rejected instead of looping.
-fn expand_ident(
-    toks: &mut Vec<(Tok, Span)>,
-    name: &str,
-    span: Span,
-    defines: &HashMap<String, Vec<Tok>>,
+/// Expand one run of raw tokens into `out`. Object-like macro uses
+/// splice their body (rescanned) at the use-site span; function-like
+/// uses additionally collect a balanced-paren argument list, expand
+/// each argument, substitute, and rescan. `active` carries the
+/// expansion stack so cycles are rejected instead of looping.
+fn expand_run(
+    out: &mut Vec<(Tok, Span)>,
+    toks: &[(Tok, Span)],
+    defines: &HashMap<String, MacroDef>,
     active: &mut Vec<String>,
     src: &str,
 ) -> Result<(), Diagnostic> {
-    let Some(body) = defines.get(name) else {
-        toks.push((Tok::Ident(name.to_string()), span));
-        return Ok(());
-    };
-    if active.iter().any(|n| n == name) {
-        return Err(Diagnostic::at(
-            format!("recursive expansion of macro `{name}`"),
-            span,
-            src,
-        ));
-    }
-    active.push(name.to_string());
-    for t in body {
-        match t {
-            Tok::Ident(inner) => expand_ident(toks, inner, span, defines, active, src)?,
-            other => toks.push((other.clone(), span)),
+    let mut i = 0usize;
+    while i < toks.len() {
+        let (t, span) = &toks[i];
+        let Tok::Ident(name) = t else {
+            out.push((t.clone(), *span));
+            i += 1;
+            continue;
+        };
+        let Some(def) = defines.get(name) else {
+            out.push((t.clone(), *span));
+            i += 1;
+            continue;
+        };
+        // A function-like macro name *not* followed by `(` is an
+        // ordinary identifier (C semantics) — check before the
+        // recursion guard so `#define F(F) …` oddities stay literal.
+        let called = matches!(toks.get(i + 1), Some((Tok::Punct("("), _)));
+        if def.params.is_some() && !called {
+            out.push((t.clone(), *span));
+            i += 1;
+            continue;
         }
+        if active.iter().any(|n| n == name) {
+            return Err(Diagnostic::at(
+                format!("recursive expansion of macro `{name}`"),
+                *span,
+                src,
+            ));
+        }
+        let Some(params) = &def.params else {
+            // Object-like: body tokens adopt the use-site span, rescan.
+            let body: Vec<(Tok, Span)> =
+                def.body.iter().map(|bt| (bt.clone(), *span)).collect();
+            active.push(name.clone());
+            expand_run(out, &body, defines, active, src)?;
+            active.pop();
+            i += 1;
+            continue;
+        };
+        // Collect arguments: balanced parens, split on top-level commas.
+        let mut args: Vec<Vec<(Tok, Span)>> = vec![Vec::new()];
+        let mut depth = 1u32;
+        let mut j = i + 2; // past `name (`
+        loop {
+            let Some((at, asp)) = toks.get(j) else {
+                return Err(Diagnostic::at(
+                    format!("unterminated argument list for macro `{name}(…)`"),
+                    *span,
+                    src,
+                ));
+            };
+            match at {
+                Tok::Punct("(") => depth += 1,
+                Tok::Punct(")") => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                Tok::Punct(",") if depth == 1 => {
+                    args.push(Vec::new());
+                    j += 1;
+                    continue;
+                }
+                _ => {}
+            }
+            args.last_mut().unwrap().push((at.clone(), *asp));
+            j += 1;
+        }
+        if params.is_empty() && args.len() == 1 && args[0].is_empty() {
+            args.clear(); // `F()` — zero arguments, not one empty one
+        }
+        if args.len() != params.len() {
+            return Err(Diagnostic::at(
+                format!(
+                    "macro `{name}` expects {} argument(s), got {}",
+                    params.len(),
+                    args.len()
+                ),
+                *span,
+                src,
+            ));
+        }
+        // Arguments are fully expanded *before* substitution (so the
+        // macro itself is not yet on the active stack for them).
+        let mut xargs: Vec<Vec<(Tok, Span)>> = Vec::with_capacity(args.len());
+        for a in &args {
+            let mut v = Vec::new();
+            expand_run(&mut v, a, defines, active, src)?;
+            xargs.push(v);
+        }
+        // Substitute parameters, then rescan with this macro active.
+        let mut sub: Vec<(Tok, Span)> = Vec::new();
+        for bt in &def.body {
+            if let Tok::Ident(id) = bt {
+                if let Some(pi) = params.iter().position(|p| p == id) {
+                    sub.extend(xargs[pi].iter().cloned());
+                    continue;
+                }
+            }
+            sub.push((bt.clone(), *span));
+        }
+        active.push(name.clone());
+        expand_run(out, &sub, defines, active, src)?;
+        active.pop();
+        i = j + 1;
     }
-    active.pop();
     Ok(())
 }
 
@@ -503,14 +652,115 @@ mod tests {
     }
 
     #[test]
-    fn function_like_macro_diagnosed() {
-        let e = lex("#define SQ(x) ((x) * (x))\n").unwrap_err();
+    fn function_like_macro_expands_with_substitution() {
+        let t = kinds("#define SQ(x) ((x) * (x))\nSQ(a + 1)");
+        let want: Vec<Tok> = vec![
+            Tok::Punct("("),
+            Tok::Punct("("),
+            Tok::Ident("a".into()),
+            Tok::Punct("+"),
+            Tok::Int { value: 1, long: false },
+            Tok::Punct(")"),
+            Tok::Punct("*"),
+            Tok::Punct("("),
+            Tok::Ident("a".into()),
+            Tok::Punct("+"),
+            Tok::Int { value: 1, long: false },
+            Tok::Punct(")"),
+            Tok::Punct(")"),
+            Tok::Eof,
+        ];
+        assert_eq!(t, want);
+    }
+
+    #[test]
+    fn function_like_macro_args_expand_and_nest() {
+        // Arguments are themselves macro-expanded, nested calls work,
+        // and inner commas inside parens do not split arguments.
+        let t = kinds("#define N 4\n#define ADD(a, b) ((a) + (b))\nADD(N, ADD(1, 2))");
+        let want: Vec<Tok> = vec![
+            Tok::Punct("("),
+            Tok::Punct("("),
+            Tok::Int { value: 4, long: false },
+            Tok::Punct(")"),
+            Tok::Punct("+"),
+            Tok::Punct("("),
+            Tok::Punct("("),
+            Tok::Punct("("),
+            Tok::Int { value: 1, long: false },
+            Tok::Punct(")"),
+            Tok::Punct("+"),
+            Tok::Punct("("),
+            Tok::Int { value: 2, long: false },
+            Tok::Punct(")"),
+            Tok::Punct(")"),
+            Tok::Punct(")"),
+            Tok::Punct(")"),
+            Tok::Eof,
+        ];
+        assert_eq!(t, want);
+    }
+
+    #[test]
+    fn function_like_macro_without_call_is_literal_ident() {
+        // C semantics: the name without `(` is an ordinary identifier.
+        let t = kinds("#define F(x) (x)\nF + F(2)");
         assert_eq!(
-            e.msg,
-            "function-like macro `SQ(…)` is not supported \
-             (only object-like `#define NAME tokens`)"
+            t,
+            vec![
+                Tok::Ident("F".into()),
+                Tok::Punct("+"),
+                Tok::Punct("("),
+                Tok::Int { value: 2, long: false },
+                Tok::Punct(")"),
+                Tok::Eof,
+            ]
         );
-        assert_eq!((e.line, e.col), (1, 9));
+    }
+
+    #[test]
+    fn zero_parameter_function_like_macro() {
+        let t = kinds("#define LANES() (warpSize)\nLANES()");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Punct("("),
+                Tok::Ident("warpSize".into()),
+                Tok::Punct(")"),
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn function_like_macro_arity_mismatch_diagnosed() {
+        let e = lex("#define ADD(a, b) a + b\nADD(1)").unwrap_err();
+        assert_eq!(e.msg, "macro `ADD` expects 2 argument(s), got 1");
+        assert_eq!((e.line, e.col), (2, 1));
+    }
+
+    #[test]
+    fn function_like_macro_unterminated_args_diagnosed() {
+        let e = lex("#define F(x) x\nF(1 + 2").unwrap_err();
+        assert_eq!(e.msg, "unterminated argument list for macro `F(…)`");
+        assert_eq!((e.line, e.col), (2, 1));
+    }
+
+    #[test]
+    fn recursive_function_like_macro_diagnosed() {
+        let e = lex("#define F(x) F(x)\nF(1)").unwrap_err();
+        assert_eq!(e.msg, "recursive expansion of macro `F`");
+        assert_eq!((e.line, e.col), (2, 1));
+    }
+
+    #[test]
+    fn macro_use_spans_survive_expansion() {
+        let toks = lex("#define SQ(x) ((x) * (x))\n  SQ(v)").unwrap();
+        // body tokens adopt the use-site span; substituted argument
+        // tokens keep their own source spans (better diagnostics)
+        assert_eq!(toks[0], (Tok::Punct("("), Span { line: 2, col: 3 }));
+        assert_eq!(toks[2], (Tok::Ident("v".into()), Span { line: 2, col: 6 }));
+        assert_eq!(toks[6], (Tok::Ident("v".into()), Span { line: 2, col: 6 }));
     }
 
     #[test]

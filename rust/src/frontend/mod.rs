@@ -31,6 +31,7 @@ pub mod lex;
 pub mod parse;
 pub mod printer;
 pub mod sema;
+pub mod structs;
 
 use lex::Span;
 use std::fmt;
@@ -78,12 +79,73 @@ impl fmt::Display for Diagnostic {
 impl std::error::Error for Diagnostic {}
 
 /// Parse every `__global__` kernel in `src` into verified CIR:
-/// lex (with `#define` expansion) → parse → `__device__` helper
-/// validation + inlining → sema/emit → `ir::verify`.
+/// lex (with object- and function-like `#define` expansion) → parse →
+/// struct dissolution (SROA) → `__constant__` folding → `__device__`
+/// helper validation + inlining → sema/emit → `ir::verify`.
 pub fn parse_kernels(src: &str) -> Result<Vec<crate::ir::Kernel>, Diagnostic> {
     let unit = parse::parse_translation_unit(src)?;
+    let unit = structs::dissolve_unit(&unit, src)?;
+    let constants = fold_constants(&unit.constants, src)?;
     let kernels = inline::expand_unit(&unit, src)?;
-    kernels.iter().map(|k| emit::emit_kernel(src, k)).collect()
+    kernels.iter().map(|k| emit::emit_kernel(src, k, &constants)).collect()
+}
+
+/// Fold each `__constant__` initializer to baked [`crate::ir::Const`]
+/// data, zero-padded up to the declared length (C aggregate-initializer
+/// semantics). Initializer elements must be literals — `__constant__`
+/// data is a compile-time image, so there is nothing to evaluate at
+/// run time.
+fn fold_constants(
+    decls: &[ast::ConstantAst],
+    src: &str,
+) -> Result<Vec<crate::ir::ConstantDecl>, Diagnostic> {
+    use crate::ir::{Const, ConstantDecl};
+    let mut out = Vec::with_capacity(decls.len());
+    for d in decls {
+        let elem = d.elem.to_ir();
+        let mut data = Vec::with_capacity(d.len);
+        for e in &d.data {
+            let folded = fold_literal(e).and_then(|c| sema::retype_const(c, elem));
+            match folded {
+                Some(c) => data.push(c),
+                None => {
+                    return Err(Diagnostic::at(
+                        format!(
+                            "`__constant__ {}` initializer elements must be \
+                             numeric literals",
+                            d.name
+                        ),
+                        e.span(),
+                        src,
+                    ))
+                }
+            }
+        }
+        let zero = sema::retype_const(Const::I32(0), elem)
+            .expect("constant element types are numeric");
+        data.resize(d.len, zero);
+        out.push(ConstantDecl { name: d.name.clone(), elem, data });
+    }
+    Ok(out)
+}
+
+/// `42`, `1.5f`, `-3` → the literal's natural [`crate::ir::Const`].
+fn fold_literal(e: &ast::ExprAst) -> Option<crate::ir::Const> {
+    use crate::ir::Const;
+    match e {
+        ast::ExprAst::Int { value, long: false, .. } => Some(Const::I32(*value as i32)),
+        ast::ExprAst::Int { value, long: true, .. } => Some(Const::I64(*value)),
+        ast::ExprAst::Float { value, f32: true, .. } => Some(Const::F32(*value as f32)),
+        ast::ExprAst::Float { value, f32: false, .. } => Some(Const::F64(*value)),
+        ast::ExprAst::Un { op: ast::CUnOp::Neg, arg, .. } => Some(match fold_literal(arg)? {
+            Const::I32(v) => Const::I32(v.wrapping_neg()),
+            Const::I64(v) => Const::I64(v.wrapping_neg()),
+            Const::F32(v) => Const::F32(-v),
+            Const::F64(v) => Const::F64(-v),
+            Const::Bool(_) => return None,
+        }),
+        _ => None,
+    }
 }
 
 #[cfg(test)]

@@ -15,14 +15,23 @@ use super::lex::{lex, Span, Tok};
 use super::Diagnostic;
 use crate::ir::Special;
 
-/// Parse a whole `.cu` source into `__device__` helper + kernel ASTs.
+/// Parse a whole `.cu` source into struct / constant / `__device__`
+/// helper / kernel ASTs.
 pub fn parse_translation_unit(src: &str) -> Result<UnitAst, Diagnostic> {
     let toks = lex(src)?;
-    let mut p = Parser { toks, pos: 0, src };
+    let mut p = Parser { toks, pos: 0, src, struct_names: Vec::new() };
+    let mut structs = Vec::new();
+    let mut constants = Vec::new();
     let mut device_fns = Vec::new();
     let mut kernels = Vec::new();
     while !p.at_eof() {
-        if p.is_ident("__device__") {
+        if p.is_ident("struct") {
+            let s = p.struct_def()?;
+            p.struct_names.push(s.name.clone());
+            structs.push(s);
+        } else if p.is_ident("__constant__") {
+            constants.push(p.constant_decl()?);
+        } else if p.is_ident("__device__") {
             device_fns.push(p.device_fn()?);
         } else {
             kernels.push(p.kernel()?);
@@ -35,7 +44,7 @@ pub fn parse_translation_unit(src: &str) -> Result<UnitAst, Diagnostic> {
             src,
         ));
     }
-    Ok(UnitAst { device_fns, kernels })
+    Ok(UnitAst { structs, constants, device_fns, kernels })
 }
 
 fn is_type_name(s: &str) -> bool {
@@ -64,6 +73,8 @@ struct Parser<'a> {
     toks: Vec<(Tok, Span)>,
     pos: usize,
     src: &'a str,
+    /// Names of `struct` definitions seen so far (define-before-use).
+    struct_names: Vec<String>,
 }
 
 impl<'a> Parser<'a> {
@@ -259,7 +270,126 @@ impl<'a> Parser<'a> {
         Ok(DeviceFnAst { name, params, ret, body, span })
     }
 
+    /// `struct Name { T field; U* ptr; … };` — POD only.
+    fn struct_def(&mut self) -> Result<StructDef, Diagnostic> {
+        let span = self.span();
+        self.bump(); // `struct`
+        let (name, _) = self.expect_any_ident("a struct name")?;
+        self.expect_punct("{", "to open the struct body")?;
+        let mut fields: Vec<FieldAst> = Vec::new();
+        loop {
+            if self.eat_punct("}") {
+                break;
+            }
+            if self.at_eof() {
+                return Err(self.err(
+                    format!("unterminated struct `{name}`: missing `}}`"),
+                    span,
+                ));
+            }
+            let fspan = self.span();
+            let (ty, _) = self.parse_type()?;
+            let is_ptr = self.eat_punct("*");
+            if self.is_punct("*") {
+                return Err(
+                    self.err("pointer-to-pointer struct fields are not supported", self.span())
+                );
+            }
+            let (fname, nspan) = self.expect_any_ident("a field name")?;
+            if self.is_punct("[") {
+                return Err(self.err("array struct fields are not supported", self.span()));
+            }
+            if fields.iter().any(|f| f.name == fname) {
+                return Err(self.err(
+                    format!("duplicate field `{fname}` in struct `{name}`"),
+                    nspan,
+                ));
+            }
+            self.expect_punct(";", "after the struct field")?;
+            fields.push(FieldAst { ty, is_ptr, name: fname, span: fspan });
+        }
+        self.expect_punct(";", "after the struct definition")?;
+        if fields.is_empty() {
+            return Err(self.err(format!("struct `{name}` has no fields"), span));
+        }
+        Ok(StructDef { name, fields, span })
+    }
+
+    /// `__constant__ T name[N] = { literal, … };`
+    fn constant_decl(&mut self) -> Result<ConstantAst, Diagnostic> {
+        let span = self.span();
+        self.bump(); // `__constant__`
+        let (elem, tspan) = self.parse_type()?;
+        if elem == CTy::Bool {
+            return Err(self.err("`__constant__` arrays of `bool` are not supported", tspan));
+        }
+        let (name, _) = self.expect_any_ident("a constant array name")?;
+        self.expect_punct("[", "after the constant array name")?;
+        let lspan = self.span();
+        let len = match self.bump().0 {
+            Tok::Int { value, .. } if value > 0 => value as usize,
+            t => {
+                return Err(self.err(
+                    format!("expected a positive constant array length, found {t}"),
+                    lspan,
+                ))
+            }
+        };
+        self.expect_punct("]", "after the array length")?;
+        if !self.eat_punct("=") {
+            return Err(self.err(
+                format!("`__constant__ {name}` must have a `= {{ … }}` initializer"),
+                self.span(),
+            ));
+        }
+        self.expect_punct("{", "to open the initializer list")?;
+        let mut data = Vec::new();
+        if !self.is_punct("}") {
+            loop {
+                data.push(self.expr()?);
+                if !self.eat_punct(",") {
+                    break;
+                }
+            }
+        }
+        self.expect_punct("}", "after the initializer list")?;
+        self.expect_punct(";", "after the `__constant__` declaration")?;
+        if data.len() > len {
+            return Err(self.err(
+                format!(
+                    "`{name}` initializer has {} elements but the declared length is {len}",
+                    data.len()
+                ),
+                span,
+            ));
+        }
+        Ok(ConstantAst { elem, name, data, len, span })
+    }
+
     fn param(&mut self) -> Result<ParamAst, Diagnostic> {
+        // A by-value POD struct parameter: `Params p` (expanded into
+        // per-field parameters by `frontend::structs`).
+        if let Tok::Ident(s) = self.peek() {
+            if self.struct_names.iter().any(|n| n == s) {
+                let tspan = self.span();
+                let sname = s.clone();
+                self.bump();
+                if self.is_punct("*") {
+                    return Err(self.err(
+                        "pointer-to-struct parameters are not supported; pass the struct by value",
+                        self.span(),
+                    ));
+                }
+                let (name, _) = self.expect_any_ident("a parameter name")?;
+                return Ok(ParamAst {
+                    ty: CTy::Int,
+                    is_ptr: false,
+                    name,
+                    sname: Some(sname),
+                    span: tspan,
+                });
+            }
+        }
         let (ty, tspan) = self.parse_type()?;
         let mut is_ptr = false;
         if self.eat_punct("*") {
@@ -271,7 +401,7 @@ impl<'a> Parser<'a> {
         }
         self.eat_ident("__restrict__");
         let (name, _) = self.expect_any_ident("a parameter name")?;
-        Ok(ParamAst { ty, is_ptr, name, span: tspan })
+        Ok(ParamAst { ty, is_ptr, name, sname: None, span: tspan })
     }
 
     // -- statements ---------------------------------------------------
@@ -327,6 +457,12 @@ impl<'a> Parser<'a> {
             self.expect_punct(";", "after the declaration")?;
             return Ok(d);
         }
+        // `StructName name;` — a POD struct local.
+        if let Tok::Ident(a) = self.peek() {
+            if self.struct_names.iter().any(|n| n == a) {
+                return self.struct_local();
+            }
+        }
         // `ident ident …` at statement position can only be a
         // declaration whose type we don't know.
         if let (Tok::Ident(a), Tok::Ident(_)) = (self.peek(), self.peek2()) {
@@ -337,6 +473,24 @@ impl<'a> Parser<'a> {
         let s = self.simple_stmt()?;
         self.expect_punct(";", "after the statement")?;
         Ok(s)
+    }
+
+    /// `StructName name;` (initializers are per-field assignments).
+    fn struct_local(&mut self) -> Result<StmtAst, Diagnostic> {
+        let span = self.span();
+        let (struct_name, _) = self.expect_any_ident("a struct name")?;
+        if self.is_punct("*") {
+            return Err(self.err("pointer-typed locals are not supported", self.span()));
+        }
+        let (name, _) = self.expect_any_ident("a variable name")?;
+        if self.is_punct("=") {
+            return Err(self.err(
+                format!("struct locals cannot use `=` initializers; assign `{name}.field` individually"),
+                self.span(),
+            ));
+        }
+        self.expect_punct(";", "after the declaration")?;
+        Ok(StmtAst::StructDecl { struct_name, name, span })
     }
 
     fn decl(&mut self) -> Result<StmtAst, Diagnostic> {
@@ -603,14 +757,24 @@ impl<'a> Parser<'a> {
 
     fn postfix(&mut self) -> Result<ExprAst, Diagnostic> {
         let mut e = self.primary()?;
-        while self.is_punct("[") {
-            let span = self.span();
-            self.bump();
-            let idx = self.expr()?;
-            self.expect_punct("]", "after the index expression")?;
-            e = ExprAst::Index { base: Box::new(e), idx: Box::new(idx), span };
+        loop {
+            if self.is_punct("[") {
+                let span = self.span();
+                self.bump();
+                let idx = self.expr()?;
+                self.expect_punct("]", "after the index expression")?;
+                e = ExprAst::Index { base: Box::new(e), idx: Box::new(idx), span };
+            } else if self.is_punct(".") {
+                // geometry builtins (`threadIdx.x`) consume their `.`
+                // in primary(), so this is struct member access
+                let span = self.span();
+                self.bump();
+                let (field, _) = self.expect_any_ident("a field name after `.`")?;
+                e = ExprAst::Member { base: Box::new(e), field, span };
+            } else {
+                return Ok(e);
+            }
         }
-        Ok(e)
     }
 
     fn primary(&mut self) -> Result<ExprAst, Diagnostic> {
@@ -840,6 +1004,75 @@ mod tests {
             ks[0].body[0],
             StmtAst::SharedDecl { len: 16, cols: Some(17), dynamic: false, .. }
         ));
+    }
+
+    #[test]
+    fn struct_def_param_local_and_member_access() {
+        let unit = parse_translation_unit(
+            "struct Pair { int lo; float* buf; };\n\
+             __global__ void k(Pair p, int n) {\n\
+             Pair q;\n\
+             q.lo = p.lo + 1;\n\
+             p.buf[0] = 1.0f;\n}",
+        )
+        .unwrap();
+        assert_eq!(unit.structs.len(), 1);
+        assert_eq!(unit.structs[0].name, "Pair");
+        assert_eq!(unit.structs[0].fields.len(), 2);
+        assert!(unit.structs[0].fields[1].is_ptr);
+        let k = &unit.kernels[0];
+        assert_eq!(k.params[0].sname.as_deref(), Some("Pair"));
+        assert_eq!(k.params[1].sname, None);
+        assert!(matches!(&k.body[0], StmtAst::StructDecl { struct_name, name, .. }
+            if struct_name == "Pair" && name == "q"));
+        let StmtAst::Assign { target, .. } = &k.body[1] else { panic!() };
+        assert!(matches!(target, ExprAst::Member { field, .. } if field == "lo"));
+        // p.buf[0] — member then index
+        let StmtAst::Assign { target, .. } = &k.body[2] else { panic!() };
+        let ExprAst::Index { base, .. } = target else { panic!("{target:?}") };
+        assert!(matches!(&**base, ExprAst::Member { field, .. } if field == "buf"));
+    }
+
+    #[test]
+    fn struct_duplicate_field_rejected() {
+        let e = parse_translation_unit(
+            "struct S { int a; int a; };\n__global__ void k(int* p) { p[0] = 1; }",
+        )
+        .unwrap_err();
+        assert_eq!(e.msg, "duplicate field `a` in struct `S`");
+    }
+
+    #[test]
+    fn constant_decl_parses_with_length_and_initializer() {
+        let unit = parse_translation_unit(
+            "__constant__ float lut[4] = { 1.0f, -2.0f, 3.0f };\n\
+             __global__ void k(float* p) { p[0] = lut[0]; }",
+        )
+        .unwrap();
+        assert_eq!(unit.constants.len(), 1);
+        let c = &unit.constants[0];
+        assert_eq!(c.name, "lut");
+        assert_eq!(c.elem, CTy::Float);
+        assert_eq!(c.len, 4);
+        assert_eq!(c.data.len(), 3);
+    }
+
+    #[test]
+    fn constant_without_initializer_rejected() {
+        let e = parse_translation_unit(
+            "__constant__ int t[8];\n__global__ void k(int* p) { p[0] = t[0]; }",
+        )
+        .unwrap_err();
+        assert_eq!(e.msg, "`__constant__ t` must have a `= { … }` initializer");
+    }
+
+    #[test]
+    fn constant_overlong_initializer_rejected() {
+        let e = parse_translation_unit(
+            "__constant__ int t[2] = { 1, 2, 3 };\n__global__ void k(int* p) { p[0] = t[0]; }",
+        )
+        .unwrap_err();
+        assert_eq!(e.msg, "`t` initializer has 3 elements but the declared length is 2");
     }
 
     #[test]

@@ -42,6 +42,21 @@ pub fn kernel_to_cuda(k: &Kernel) -> Result<String, String> {
     p.scan_stmts(&k.body)?;
 
     let mut out = String::new();
+    // Module-scope `__constant__` arrays print before the kernel; the
+    // re-parse attaches every unit constant to the kernel in
+    // declaration order, matching `Kernel::constants`.
+    for c in &k.constants {
+        let data: Vec<String> =
+            c.data.iter().map(Printer::const_str).collect::<Result<_, String>>()?;
+        let _ = writeln!(
+            out,
+            "__constant__ {} {}[{}] = {{ {} }};",
+            c.elem.c_name(),
+            c.name,
+            c.data.len(),
+            data.join(", ")
+        );
+    }
     let params: Vec<String> = k
         .params
         .iter()
@@ -189,8 +204,13 @@ impl<'a> Printer<'a> {
             Expr::Select { then_, .. } => VK::S(self.scalar_ty(then_)?),
             Expr::WarpShfl { val, .. } => VK::S(self.scalar_ty(val)?),
             Expr::WarpVote { kind, .. } => {
-                VK::S(if *kind == VoteKind::Ballot { Ty::I32 } else { Ty::Bool })
+                VK::S(if *kind == VoteKind::Ballot || kind.is_reduce() {
+                    Ty::I32
+                } else {
+                    Ty::Bool
+                })
             }
+            Expr::ConstBase(i) => VK::P(self.k.constants[*i].elem),
             other => return Err(format!("unprintable expression: {other:?}")),
         })
     }
@@ -211,6 +231,7 @@ impl<'a> Printer<'a> {
         match e {
             Expr::Param(i) => Ok(self.k.params[*i].name.clone()),
             Expr::SharedBase(i) => Ok(self.k.shared[*i].name.clone()),
+            Expr::ConstBase(i) => Ok(self.k.constants[*i].name.clone()),
             Expr::DynSharedBase => Ok("dyn_shared".into()),
             other => Err(format!("unprintable pointer base: {other:?}")),
         }
@@ -223,7 +244,7 @@ impl<'a> Printer<'a> {
             Expr::Index { base, idx, .. } => {
                 Ok(format!("{}[{}]", self.base(base)?, self.expr(idx)?))
             }
-            Expr::Param(_) | Expr::SharedBase(_) | Expr::DynSharedBase => {
+            Expr::Param(_) | Expr::SharedBase(_) | Expr::ConstBase(_) | Expr::DynSharedBase => {
                 Ok(format!("{}[0]", self.base(ptr)?))
             }
             other => Err(format!("unprintable address: {other:?}")),
@@ -365,6 +386,9 @@ impl<'a> Printer<'a> {
                             VoteKind::Any => "__any_sync",
                             VoteKind::All => "__all_sync",
                             VoteKind::Ballot => "__ballot_sync",
+                            VoteKind::ReduceAdd => "__reduce_add_sync",
+                            VoteKind::ReduceMin => "__reduce_min_sync",
+                            VoteKind::ReduceMax => "__reduce_max_sync",
                         };
                         format!("{f}(0xffffffff, {})", self.expr(pred)?)
                     }
@@ -534,6 +558,35 @@ mod tests {
         b.atomic_rmw_void(AtomicOp::Add, index(p.clone(), c_i32(0), Ty::I32), reg(acc), Ty::I32);
         let k = b.build();
         let src = kernel_to_cuda(&k).unwrap();
+        let re = parse_kernels(&src).unwrap_or_else(|d| panic!("{}\n{src}", d.render("rt.cu")));
+        assert_eq!(re[0], k, "round-tripped CIR differs:\n{src}");
+    }
+
+    /// `__constant__` data survives the print → reparse trip bit-equal
+    /// (the printed initializer re-folds to the identical image).
+    #[test]
+    fn constants_round_trip() {
+        let mut b = KernelBuilder::new("c");
+        let w = b.constant_array("w", Ty::F32, vec![Const::F32(0.5), Const::F32(-1.25)]);
+        let p = b.ptr_param("p", Ty::F32);
+        b.store_at(p.clone(), tid_x(), at(w, tid_x(), Ty::F32), Ty::F32);
+        let k = b.build();
+        let src = kernel_to_cuda(&k).unwrap();
+        assert!(src.contains("__constant__ float w[2]"), "{src}");
+        let re = parse_kernels(&src).unwrap_or_else(|d| panic!("{}\n{src}", d.render("rt.cu")));
+        assert_eq!(re[0], k, "round-tripped CIR differs:\n{src}");
+    }
+
+    #[test]
+    fn reduce_vote_round_trips() {
+        let mut b = KernelBuilder::new("r");
+        let p = b.ptr_param("p", Ty::I32);
+        let v = b.assign(at(p.clone(), tid_x(), Ty::I32));
+        let s = b.vote(VoteKind::ReduceAdd, reg(v));
+        b.store_at(p.clone(), c_i32(0), reg(s), Ty::I32);
+        let k = b.build();
+        let src = kernel_to_cuda(&k).unwrap();
+        assert!(src.contains("__reduce_add_sync"), "{src}");
         let re = parse_kernels(&src).unwrap_or_else(|d| panic!("{}\n{src}", d.render("rt.cu")));
         assert_eq!(re[0], k, "round-tripped CIR differs:\n{src}");
     }

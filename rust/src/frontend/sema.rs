@@ -41,6 +41,8 @@ pub enum Sym {
     /// `__shared__ T a[R][C]` form (flattened row-major at emit).
     SharedArr { index: usize, elem: Ty, cols: Option<u32> },
     DynShared { elem: Ty },
+    /// Module-scope `__constant__` array (index into `Kernel::constants`).
+    ConstArr { index: usize, elem: Ty },
 }
 
 pub struct Sema<'a> {
@@ -61,7 +63,7 @@ fn rank(t: Ty) -> u32 {
 
 /// Re-type a constant to `to` exactly (no cast node). `None` when the
 /// conversion crosses the bool/number boundary.
-fn retype_const(c: Const, to: Ty) -> Option<Const> {
+pub(crate) fn retype_const(c: Const, to: Ty) -> Option<Const> {
     let v: f64 = match c {
         Const::I32(v) => v as f64,
         Const::I64(v) => v as f64,
@@ -233,6 +235,7 @@ impl<'a> Sema<'a> {
                     Ok((Expr::SharedBase(index), VTy::Ptr(elem)))
                 }
                 Sym::DynShared { elem } => Ok((Expr::DynSharedBase, VTy::Ptr(elem))),
+                Sym::ConstArr { index, elem } => Ok((Expr::ConstBase(index), VTy::Ptr(elem))),
             };
         }
         // Builtin constants (usable unless shadowed).
@@ -617,7 +620,9 @@ impl<'a> Sema<'a> {
         Ok((Expr::WarpShfl { kind, val: Box::new(val), lane: Box::new(lane) }, vt))
     }
 
-    /// Lower a warp vote call; caller guarantees `vote_kind` matched.
+    /// Lower a warp vote/reduce call; caller guarantees `vote_kind`
+    /// matched. Votes take a predicate; `__reduce_*_sync` take an
+    /// integer value (CUDA's cooperative-groups warp reduce).
     pub fn lower_vote(
         &mut self,
         kind: VoteKind,
@@ -625,11 +630,19 @@ impl<'a> Sema<'a> {
         span: Span,
     ) -> Result<(Expr, Ty), Diagnostic> {
         if args.len() != 2 {
-            return Err(self.diag("warp votes take (mask, predicate) — two arguments", span));
+            let what = if kind.is_reduce() { "(mask, value)" } else { "(mask, predicate)" };
+            return Err(self.diag(
+                format!("warp votes/reduces take {what} — two arguments"),
+                span,
+            ));
         }
         let _ = self.lower_scalar(&args[0], span)?;
-        let pred = self.lower_cond(&args[1])?;
-        let ty = if kind == VoteKind::Ballot { Ty::I32 } else { Ty::Bool };
+        let pred = if kind.is_reduce() {
+            self.lower_typed(&args[1], Ty::I32)?
+        } else {
+            self.lower_cond(&args[1])?
+        };
+        let ty = if kind == VoteKind::Ballot || kind.is_reduce() { Ty::I32 } else { Ty::Bool };
         Ok((Expr::WarpVote { kind, pred: Box::new(pred) }, ty))
     }
 }
@@ -691,6 +704,9 @@ pub fn vote_kind(name: &str) -> Option<VoteKind> {
         "__any_sync" => VoteKind::Any,
         "__all_sync" => VoteKind::All,
         "__ballot_sync" => VoteKind::Ballot,
+        "__reduce_add_sync" => VoteKind::ReduceAdd,
+        "__reduce_min_sync" => VoteKind::ReduceMin,
+        "__reduce_max_sync" => VoteKind::ReduceMax,
         _ => return None,
     })
 }

@@ -1,0 +1,395 @@
+//! POD-struct dissolution (frontend-only SROA).
+//!
+//! CIR has no aggregate types, and it doesn't need them for the
+//! real-world kernels we accept: CUDA codebases pass small parameter
+//! blocks (`struct Params { int n; float* in; … }`) by value and read
+//! fields. This pass runs between parse and `__device__` inlining and
+//! *dissolves* every struct into scalars:
+//!
+//! * a struct **parameter** `S p` expands to one parameter per field,
+//!   named `p_field` (pointer fields become pointer parameters);
+//! * a struct **local** `S v;` expands to one scalar `Decl` per field
+//!   (pointer fields are rejected — CIR has no pointer-typed locals);
+//! * every member access `v.f` rewrites to the identifier `v_f`.
+//!
+//! Downstream (inline → sema → emit) never sees `Member`/`StructDecl`
+//! nodes, so the emitted CIR is bit-identical to hand-written scalar
+//! code — the property the conformance sweep's ExecStats equality
+//! relies on.
+
+use super::ast::*;
+use super::Diagnostic;
+use std::collections::HashMap;
+
+/// Dissolve every struct parameter, local and member access in the
+/// unit's kernels. `__device__` helpers cannot take struct parameters
+/// (inlining substitutes expressions, not bindings).
+pub fn dissolve_unit(unit: &UnitAst, src: &str) -> Result<UnitAst, Diagnostic> {
+    let defs: HashMap<&str, &StructDef> =
+        unit.structs.iter().map(|s| (s.name.as_str(), s)).collect();
+    for f in &unit.device_fns {
+        if let Some(p) = f.params.iter().find(|p| p.sname.is_some()) {
+            return Err(Diagnostic::at(
+                format!(
+                    "`__device__` function `{}` cannot take struct parameter `{}`; \
+                     pass the fields individually",
+                    f.name, p.name
+                ),
+                p.span,
+                src,
+            ));
+        }
+    }
+    let mut kernels = Vec::with_capacity(unit.kernels.len());
+    for k in &unit.kernels {
+        kernels.push(dissolve_kernel(k, &defs, src)?);
+    }
+    Ok(UnitAst {
+        structs: unit.structs.clone(),
+        constants: unit.constants.clone(),
+        device_fns: unit.device_fns.clone(),
+        kernels,
+    })
+}
+
+/// Lexically scoped struct-variable bindings (name → definition).
+struct Scope<'a> {
+    frames: Vec<HashMap<String, &'a StructDef>>,
+}
+
+impl<'a> Scope<'a> {
+    fn lookup(&self, name: &str) -> Option<&'a StructDef> {
+        self.frames.iter().rev().find_map(|f| f.get(name).copied())
+    }
+
+    fn bind(&mut self, name: &str, def: &'a StructDef) {
+        self.frames.last_mut().unwrap().insert(name.to_string(), def);
+    }
+}
+
+fn dissolve_kernel(
+    k: &KernelAst,
+    defs: &HashMap<&str, &StructDef>,
+    src: &str,
+) -> Result<KernelAst, Diagnostic> {
+    let mut sc = Scope { frames: vec![HashMap::new()] };
+    let mut params = Vec::new();
+    for p in &k.params {
+        let Some(sn) = &p.sname else {
+            params.push(p.clone());
+            continue;
+        };
+        let def = defs.get(sn.as_str()).ok_or_else(|| {
+            Diagnostic::at(format!("unknown struct `{sn}`"), p.span, src)
+        })?;
+        sc.bind(&p.name, def);
+        for f in &def.fields {
+            params.push(ParamAst {
+                ty: f.ty,
+                is_ptr: f.is_ptr,
+                name: format!("{}_{}", p.name, f.name),
+                sname: None,
+                span: p.span,
+            });
+        }
+    }
+    let body = dissolve_stmts(&k.body, defs, &mut sc, src)?;
+    Ok(KernelAst { name: k.name.clone(), params, body, span: k.span })
+}
+
+/// Dissolve a statement list in a fresh scope frame. `StructDecl`
+/// flattens to several `Decl`s, everything else maps one-to-one.
+fn dissolve_stmts<'a>(
+    body: &[StmtAst],
+    defs: &HashMap<&str, &'a StructDef>,
+    sc: &mut Scope<'a>,
+    src: &str,
+) -> Result<Vec<StmtAst>, Diagnostic> {
+    sc.frames.push(HashMap::new());
+    let mut out = Vec::with_capacity(body.len());
+    for s in body {
+        if let StmtAst::StructDecl { struct_name, name, span } = s {
+            let def = defs.get(struct_name.as_str()).ok_or_else(|| {
+                Diagnostic::at(format!("unknown struct `{struct_name}`"), *span, src)
+            })?;
+            if let Some(f) = def.fields.iter().find(|f| f.is_ptr) {
+                return Err(Diagnostic::at(
+                    format!(
+                        "struct local `{name}` has pointer field `{}`; pointer-typed \
+                         locals are not supported — pass `{struct_name}` as a kernel \
+                         parameter instead",
+                        f.name
+                    ),
+                    *span,
+                    src,
+                ));
+            }
+            sc.bind(name, def);
+            for f in &def.fields {
+                out.push(StmtAst::Decl {
+                    ty: f.ty,
+                    name: format!("{name}_{}", f.name),
+                    init: None,
+                    span: *span,
+                });
+            }
+            continue;
+        }
+        out.push(dissolve_one(s, defs, sc, src)?);
+    }
+    sc.frames.pop();
+    Ok(out)
+}
+
+fn dissolve_one<'a>(
+    s: &StmtAst,
+    defs: &HashMap<&str, &'a StructDef>,
+    sc: &mut Scope<'a>,
+    src: &str,
+) -> Result<StmtAst, Diagnostic> {
+    Ok(match s {
+        // Intercepted by dissolve_stmts; reaching it here means a
+        // context where one statement must stay one statement.
+        StmtAst::StructDecl { span, .. } => {
+            return Err(Diagnostic::at(
+                "struct locals are not supported in `for` headers",
+                *span,
+                src,
+            ));
+        }
+        StmtAst::Decl { ty, name, init, span } => StmtAst::Decl {
+            ty: *ty,
+            name: name.clone(),
+            init: init.as_ref().map(|e| rewrite(e, sc, src)).transpose()?,
+            span: *span,
+        },
+        StmtAst::SharedDecl { .. } | StmtAst::Break { .. } | StmtAst::Continue { .. }
+        | StmtAst::Return { .. } => s.clone(),
+        StmtAst::Assign { target, op, value, span } => StmtAst::Assign {
+            target: rewrite(target, sc, src)?,
+            op: *op,
+            value: rewrite(value, sc, src)?,
+            span: *span,
+        },
+        StmtAst::Call { call, span } => {
+            StmtAst::Call { call: rewrite(call, sc, src)?, span: *span }
+        }
+        StmtAst::If { cond, then_, else_, span } => StmtAst::If {
+            cond: rewrite(cond, sc, src)?,
+            then_: dissolve_stmts(then_, defs, sc, src)?,
+            else_: dissolve_stmts(else_, defs, sc, src)?,
+            span: *span,
+        },
+        StmtAst::For { init, cond, step, body, span } => StmtAst::For {
+            init: init
+                .as_deref()
+                .map(|s| dissolve_one(s, defs, sc, src))
+                .transpose()?
+                .map(Box::new),
+            cond: cond.as_ref().map(|e| rewrite(e, sc, src)).transpose()?,
+            step: step
+                .as_deref()
+                .map(|s| dissolve_one(s, defs, sc, src))
+                .transpose()?
+                .map(Box::new),
+            body: dissolve_stmts(body, defs, sc, src)?,
+            span: *span,
+        },
+        StmtAst::While { cond, body, span } => StmtAst::While {
+            cond: rewrite(cond, sc, src)?,
+            body: dissolve_stmts(body, defs, sc, src)?,
+            span: *span,
+        },
+        StmtAst::Block { body, span } => {
+            StmtAst::Block { body: dissolve_stmts(body, defs, sc, src)?, span: *span }
+        }
+    })
+}
+
+/// Rewrite `v.f` → `v_f` and reject struct values in scalar position.
+fn rewrite(e: &ExprAst, sc: &Scope<'_>, src: &str) -> Result<ExprAst, Diagnostic> {
+    Ok(match e {
+        ExprAst::Member { base, field, span } => {
+            let ExprAst::Ident { name, span: bspan } = &**base else {
+                return Err(Diagnostic::at(
+                    format!("`.{field}`: member access requires a struct variable"),
+                    *span,
+                    src,
+                ));
+            };
+            let Some(def) = sc.lookup(name) else {
+                return Err(Diagnostic::at(
+                    format!("`{name}` is not a struct variable"),
+                    *bspan,
+                    src,
+                ));
+            };
+            if !def.fields.iter().any(|f| &f.name == field) {
+                return Err(Diagnostic::at(
+                    format!("struct `{}` has no field `{field}`", def.name),
+                    *span,
+                    src,
+                ));
+            }
+            ExprAst::Ident { name: format!("{name}_{field}"), span: *span }
+        }
+        ExprAst::Ident { name, span } => {
+            if let Some(def) = sc.lookup(name) {
+                return Err(Diagnostic::at(
+                    format!(
+                        "struct `{}` value `{name}` cannot be used as a scalar; \
+                         access its fields (`{name}.field`)",
+                        def.name
+                    ),
+                    *span,
+                    src,
+                ));
+            }
+            e.clone()
+        }
+        ExprAst::Int { .. } | ExprAst::Float { .. } | ExprAst::Special { .. } => e.clone(),
+        ExprAst::Bin { op, lhs, rhs, span } => ExprAst::Bin {
+            op: *op,
+            lhs: Box::new(rewrite(lhs, sc, src)?),
+            rhs: Box::new(rewrite(rhs, sc, src)?),
+            span: *span,
+        },
+        ExprAst::Un { op, arg, span } => {
+            ExprAst::Un { op: *op, arg: Box::new(rewrite(arg, sc, src)?), span: *span }
+        }
+        ExprAst::Index { base, idx, span } => ExprAst::Index {
+            base: Box::new(rewrite(base, sc, src)?),
+            idx: Box::new(rewrite(idx, sc, src)?),
+            span: *span,
+        },
+        ExprAst::Cast { ty, arg, span } => {
+            ExprAst::Cast { ty: *ty, arg: Box::new(rewrite(arg, sc, src)?), span: *span }
+        }
+        ExprAst::Ternary { cond, then_, else_, span } => ExprAst::Ternary {
+            cond: Box::new(rewrite(cond, sc, src)?),
+            then_: Box::new(rewrite(then_, sc, src)?),
+            else_: Box::new(rewrite(else_, sc, src)?),
+            span: *span,
+        },
+        ExprAst::Call { name, args, span } => ExprAst::Call {
+            name: name.clone(),
+            args: args.iter().map(|a| rewrite(a, sc, src)).collect::<Result<_, _>>()?,
+            span: *span,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse::parse_translation_unit;
+    use super::*;
+
+    fn dissolve(src: &str) -> Result<UnitAst, Diagnostic> {
+        dissolve_unit(&parse_translation_unit(src).unwrap(), src)
+    }
+
+    #[test]
+    fn struct_param_expands_to_per_field_params() {
+        let unit = dissolve(
+            "struct Args { int n; float* in; float* out; };\n\
+             __global__ void k(Args a) {\n\
+             \x20   int id = threadIdx.x;\n\
+             \x20   if (id < a.n) { a.out[id] = a.in[id]; }\n\
+             }",
+        )
+        .unwrap();
+        let k = &unit.kernels[0];
+        let names: Vec<&str> = k.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["a_n", "a_in", "a_out"]);
+        assert!(!k.params[0].is_ptr);
+        assert!(k.params[1].is_ptr && k.params[2].is_ptr);
+        // the member accesses are gone
+        fn no_members(b: &[StmtAst]) {
+            for s in b {
+                assert!(!matches!(s, StmtAst::StructDecl { .. }));
+                if let StmtAst::If { then_, else_, .. } = s {
+                    no_members(then_);
+                    no_members(else_);
+                }
+            }
+        }
+        no_members(&k.body);
+    }
+
+    #[test]
+    fn struct_local_expands_to_scalar_decls() {
+        let unit = dissolve(
+            "struct Acc { float sum; int cnt; };\n\
+             __global__ void k(float* p) {\n\
+             \x20   Acc acc;\n\
+             \x20   acc.sum = 0.0f;\n\
+             \x20   acc.cnt = 0;\n\
+             \x20   p[0] = acc.sum;\n\
+             }",
+        )
+        .unwrap();
+        let k = &unit.kernels[0];
+        assert!(matches!(&k.body[0], StmtAst::Decl { name, ty: CTy::Float, .. } if name == "acc_sum"));
+        assert!(matches!(&k.body[1], StmtAst::Decl { name, ty: CTy::Int, .. } if name == "acc_cnt"));
+        let StmtAst::Assign { target, .. } = &k.body[2] else { panic!() };
+        assert!(matches!(target, ExprAst::Ident { name, .. } if name == "acc_sum"));
+    }
+
+    #[test]
+    fn pointer_field_on_local_rejected() {
+        let e = dissolve(
+            "struct S { float* p; };\n\
+             __global__ void k(float* a) { S s; a[0] = 1.0f; }",
+        )
+        .unwrap_err();
+        assert_eq!(
+            e.msg,
+            "struct local `s` has pointer field `p`; pointer-typed locals are not \
+             supported — pass `S` as a kernel parameter instead"
+        );
+    }
+
+    #[test]
+    fn unknown_field_rejected() {
+        let e = dissolve(
+            "struct S { int a; };\n\
+             __global__ void k(S s, int* p) { p[0] = s.b; }",
+        )
+        .unwrap_err();
+        assert_eq!(e.msg, "struct `S` has no field `b`");
+    }
+
+    #[test]
+    fn struct_value_in_scalar_position_rejected() {
+        let e = dissolve(
+            "struct S { int a; };\n\
+             __global__ void k(S s, int* p) { p[0] = s + 1; }",
+        )
+        .unwrap_err();
+        assert_eq!(
+            e.msg,
+            "struct `S` value `s` cannot be used as a scalar; access its fields (`s.field`)"
+        );
+    }
+
+    #[test]
+    fn device_fn_struct_param_rejected() {
+        let e = dissolve(
+            "struct S { int a; };\n\
+             __device__ int f(S s) { return 1; }\n\
+             __global__ void k(int* p) { p[0] = f(1); }",
+        )
+        .unwrap_err();
+        assert_eq!(
+            e.msg,
+            "`__device__` function `f` cannot take struct parameter `s`; \
+             pass the fields individually"
+        );
+    }
+
+    #[test]
+    fn member_on_non_struct_rejected() {
+        let e = dissolve("__global__ void k(int* p, int n) { p[0] = n.x; }").unwrap_err();
+        assert_eq!(e.msg, "`n` is not a struct variable");
+    }
+}

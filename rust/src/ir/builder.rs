@@ -11,6 +11,7 @@ pub struct KernelBuilder {
     name: String,
     params: Vec<ParamDecl>,
     shared: Vec<SharedDecl>,
+    constants: Vec<ConstantDecl>,
     dyn_shared_elem: Option<Ty>,
     next_reg: u32,
     /// Stack of open statement blocks; index 0 is the kernel body.
@@ -32,6 +33,7 @@ impl KernelBuilder {
             name: name.to_string(),
             params: Vec::new(),
             shared: Vec::new(),
+            constants: Vec::new(),
             dyn_shared_elem: None,
             next_reg: 0,
             blocks: vec![Vec::new()],
@@ -61,6 +63,14 @@ impl KernelBuilder {
         let i = self.shared.len();
         self.shared.push(SharedDecl { name: name.to_string(), elem, len });
         Expr::SharedBase(i)
+    }
+
+    /// Declare an initialized `__constant__` array; returns its base expr.
+    /// Read-only: stores/atomics through it are rejected by `verify`.
+    pub fn constant_array(&mut self, name: &str, elem: Ty, data: Vec<Const>) -> Expr {
+        let i = self.constants.len();
+        self.constants.push(ConstantDecl { name: name.to_string(), elem, data });
+        Expr::ConstBase(i)
     }
 
     /// Declare `extern __shared__ T s[]` (dynamic shared memory).
@@ -242,6 +252,7 @@ impl KernelBuilder {
             name: self.name,
             params: self.params,
             shared: self.shared,
+            constants: self.constants,
             dyn_shared_elem: self.dyn_shared_elem,
             body: self.blocks.pop().unwrap(),
             num_regs: self.next_reg,

@@ -147,13 +147,29 @@ pub enum ShflKind {
     Xor,
 }
 
-/// Warp vote flavours.
+/// Warp vote / reduce flavours. The reduce kinds (`__reduce_*_sync`,
+/// CC 8.0) take an i32 *value* per lane rather than a predicate, but
+/// legalize through exactly the same exchange-buffer fission as votes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum VoteKind {
     Any,
     All,
     /// `__ballot_sync` — 32-bit lane mask as i32.
     Ballot,
+    /// `__reduce_add_sync` — warp-wide i32 sum.
+    ReduceAdd,
+    /// `__reduce_min_sync` — warp-wide i32 minimum.
+    ReduceMin,
+    /// `__reduce_max_sync` — warp-wide i32 maximum.
+    ReduceMax,
+}
+
+impl VoteKind {
+    /// True for the CC 8.0 `__reduce_*_sync` family (value-reducing,
+    /// not predicate-voting).
+    pub fn is_reduce(self) -> bool {
+        matches!(self, VoteKind::ReduceAdd | VoteKind::ReduceMin | VoteKind::ReduceMax)
+    }
 }
 
 /// Atomic read-modify-write ops on global or shared memory.
@@ -202,6 +218,11 @@ pub enum Expr {
     Param(usize),
     /// Base address of statically-sized shared array `shared[i]`.
     SharedBase(usize),
+    /// Base address of `__constant__` array `constants[i]` — read-only
+    /// module-scope data baked into the memory plan (`const_image`) and
+    /// materialised in the per-block slab right after the static shared
+    /// region. Stores/atomics rooted here are rejected by `verify`.
+    ConstBase(usize),
     /// Base address of the dynamic shared memory segment (`extern __shared__`).
     DynSharedBase,
     Bin(BinOp, Box<Expr>, Box<Expr>),
@@ -293,12 +314,25 @@ pub struct SharedDecl {
     pub len: usize,
 }
 
+/// Module-scope `__constant__` array declaration with its initializer.
+/// CUDA fills constant memory host-side via `cudaMemcpyToSymbol`; our
+/// frontend accepts the common initialized-at-definition form and bakes
+/// the data into the kernel so the memory-mapping pass can place it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConstantDecl {
+    pub name: String,
+    pub elem: Ty,
+    pub data: Vec<Const>,
+}
+
 /// A CUDA `__global__` kernel in CIR.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Kernel {
     pub name: String,
     pub params: Vec<ParamDecl>,
     pub shared: Vec<SharedDecl>,
+    /// `__constant__` arrays referenced by the kernel body.
+    pub constants: Vec<ConstantDecl>,
     /// Uses `extern __shared__` (size supplied at launch).
     pub dyn_shared_elem: Option<Ty>,
     pub body: Vec<Stmt>,
@@ -349,6 +383,13 @@ pub enum Feature {
     DriverApi,
     /// CUDA library dependence (cuBLAS/cuDNN) — future-work section
     CudaLibrary,
+    /// `__constant__` memory (module-scope read-only arrays)
+    ConstantMemory,
+    /// `__reduce_add/min/max_sync` warp reduction (CC 8.0)
+    WarpReduce,
+    /// atomicMin/Max/Sub/bitwise on float — undefined in CUDA itself;
+    /// no framework executes them (drives `explain_unsupported`)
+    FpAtomics,
 }
 
 impl fmt::Display for Feature {
@@ -369,6 +410,9 @@ impl fmt::Display for Feature {
             Feature::ComplexTemplate => "complex template",
             Feature::DriverApi => "cuGetErrorName",
             Feature::CudaLibrary => "CUDA library",
+            Feature::ConstantMemory => "constant memory",
+            Feature::WarpReduce => "warp reduce",
+            Feature::FpAtomics => "float atomic min/max",
         };
         f.write_str(s)
     }

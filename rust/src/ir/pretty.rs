@@ -30,6 +30,7 @@ pub fn expr_to_string(e: &Expr) -> String {
         },
         Expr::Param(i) => format!("arg{i}"),
         Expr::SharedBase(i) => format!("shared{i}"),
+        Expr::ConstBase(i) => format!("constant{i}"),
         Expr::DynSharedBase => "dynamic_shared_memory".into(),
         Expr::Bin(op, a, b) => {
             let o = match op {
@@ -99,6 +100,9 @@ pub fn expr_to_string(e: &Expr) -> String {
                 VoteKind::Any => "__any_sync",
                 VoteKind::All => "__all_sync",
                 VoteKind::Ballot => "__ballot_sync",
+                VoteKind::ReduceAdd => "__reduce_add_sync",
+                VoteKind::ReduceMin => "__reduce_min_sync",
+                VoteKind::ReduceMax => "__reduce_max_sync",
             };
             format!("{k}(FULL_MASK, {})", expr_to_string(pred))
         }
@@ -255,6 +259,10 @@ fn param_to_string(p: &ParamDecl) -> String {
 pub fn kernel_to_string(k: &Kernel) -> String {
     let mut out = String::new();
     let params: Vec<_> = k.params.iter().map(param_to_string).collect();
+    for c in &k.constants {
+        let _ =
+            writeln!(out, "__constant__ {} {}[{}];", c.elem.c_name(), c.name, c.data.len());
+    }
     let _ = writeln!(out, "__global__ void {}({}) {{", k.name, params.join(", "));
     for sh in &k.shared {
         let _ = writeln!(out, "  __shared__ {} {}[{}];", sh.elem.c_name(), sh.name, sh.len);

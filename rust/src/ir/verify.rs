@@ -35,6 +35,13 @@ pub enum VerifyError {
     /// `atomicCAS` on a non-integer element type (CUDA only defines
     /// integer CAS; float emulation goes through `AtomicOp` RMW).
     AtomicCasNonInt(Ty),
+    /// `__constant__` array index out of range.
+    ConstOutOfRange(usize),
+    /// Store or atomic through a pointer rooted at `__constant__` data.
+    WriteToConstant,
+    /// Atomic RMW on a float element with an operator CUDA does not
+    /// define there (only atomicAdd/atomicExch exist on float/double).
+    FloatAtomicUnsupported { op: AtomicOp, ty: Ty },
 }
 
 impl std::fmt::Display for VerifyError {
@@ -59,11 +66,39 @@ impl std::fmt::Display for VerifyError {
             VerifyError::AtomicCasNonInt(ty) => {
                 write!(f, "atomicCAS on non-integer element type {ty:?}")
             }
+            VerifyError::ConstOutOfRange(i) => {
+                write!(f, "constant array index {i} out of range")
+            }
+            VerifyError::WriteToConstant => {
+                write!(f, "store or atomic through read-only __constant__ memory")
+            }
+            VerifyError::FloatAtomicUnsupported { op, ty } => {
+                write!(
+                    f,
+                    "atomic {op:?} on {} — CUDA defines only atomicAdd/atomicExch on floating point",
+                    ty.c_name()
+                )
+            }
         }
     }
 }
 
 impl std::error::Error for VerifyError {}
+
+/// Walk a pointer expression to its roots; true when any root is a
+/// `__constant__` array base — writes through such pointers are illegal.
+pub fn rooted_in_constant(e: &Expr) -> bool {
+    match e {
+        Expr::ConstBase(_) => true,
+        Expr::Index { base, .. } => rooted_in_constant(base),
+        Expr::Cast(_, a) | Expr::Un(_, a) => rooted_in_constant(a),
+        Expr::Bin(_, a, b) => rooted_in_constant(a) || rooted_in_constant(b),
+        Expr::Select { then_, else_, .. } => {
+            rooted_in_constant(then_) || rooted_in_constant(else_)
+        }
+        _ => false,
+    }
+}
 
 /// True when the expression's value can differ between threads of a block.
 pub fn is_thread_dependent(e: &Expr, thread_dep_regs: &HashSet<Reg>) -> bool {
@@ -71,6 +106,7 @@ pub fn is_thread_dependent(e: &Expr, thread_dep_regs: &HashSet<Reg>) -> bool {
         Expr::Const(_)
         | Expr::Param(_)
         | Expr::SharedBase(_)
+        | Expr::ConstBase(_)
         | Expr::DynSharedBase
         | Expr::VoteResult => false,
         Expr::Reg(r) => thread_dep_regs.contains(r),
@@ -129,6 +165,11 @@ impl<'k> Verifier<'k> {
                     self.errors.push(VerifyError::SharedOutOfRange(*i));
                 }
             }
+            Expr::ConstBase(i) => {
+                if *i >= self.kernel.constants.len() {
+                    self.errors.push(VerifyError::ConstOutOfRange(*i));
+                }
+            }
             Expr::Exchange { .. } | Expr::VoteResult => {
                 self.errors.push(VerifyError::MpmdConstructInSpmd("Exchange/VoteResult"));
             }
@@ -180,6 +221,9 @@ impl<'k> Verifier<'k> {
                 Stmt::Store { ptr, val, .. } => {
                     self.expr(ptr);
                     self.expr(val);
+                    if rooted_in_constant(ptr) {
+                        self.errors.push(VerifyError::WriteToConstant);
+                    }
                 }
                 Stmt::SyncThreads => self.barrier_here("syncthreads"),
                 Stmt::If { cond, then_, else_ } => {
@@ -228,11 +272,20 @@ impl<'k> Verifier<'k> {
                     }
                 }
                 Stmt::Return => {}
-                Stmt::AtomicRmw { ptr, val, dst, ty, .. } => {
+                Stmt::AtomicRmw { op, ptr, val, dst, ty } => {
                     self.expr(ptr);
                     self.expr(val);
                     if *ty == Ty::Bool {
                         self.errors.push(VerifyError::AtomicOnBool);
+                    }
+                    if matches!(ty, Ty::F32 | Ty::F64)
+                        && !matches!(op, AtomicOp::Add | AtomicOp::Exch)
+                    {
+                        self.errors
+                            .push(VerifyError::FloatAtomicUnsupported { op: *op, ty: *ty });
+                    }
+                    if rooted_in_constant(ptr) {
+                        self.errors.push(VerifyError::WriteToConstant);
                     }
                     if let Some(d) = dst {
                         self.thread_dep.insert(*d);
@@ -245,6 +298,9 @@ impl<'k> Verifier<'k> {
                     self.expr(val);
                     if !matches!(ty, Ty::I32 | Ty::I64) {
                         self.errors.push(VerifyError::AtomicCasNonInt(*ty));
+                    }
+                    if rooted_in_constant(ptr) {
+                        self.errors.push(VerifyError::WriteToConstant);
                     }
                     if let Some(d) = dst {
                         self.thread_dep.insert(*d);
@@ -518,6 +574,7 @@ mod tests {
             name: "u".into(),
             params: vec![],
             shared: vec![],
+            constants: vec![],
             dyn_shared_elem: None,
             body: vec![Stmt::Store { ptr: reg(Reg(3)), val: c_i32(0), ty: Ty::I32 }],
             num_regs: 0,
@@ -532,6 +589,7 @@ mod tests {
             name: "m".into(),
             params: vec![],
             shared: vec![],
+            constants: vec![],
             dyn_shared_elem: None,
             body: vec![Stmt::ThreadLoop { body: vec![], warp: None }],
             num_regs: 0,
@@ -548,6 +606,7 @@ mod tests {
             name: "b".into(),
             params: vec![],
             shared: vec![],
+            constants: vec![],
             dyn_shared_elem: None,
             body: vec![Stmt::Break],
             num_regs: 0,
@@ -573,6 +632,7 @@ mod tests {
             name: "bad".into(),
             params: vec![],
             shared: vec![],
+            constants: vec![],
             dyn_shared_elem: None,
             body: vec![
                 Stmt::SyncThreads,
@@ -601,6 +661,7 @@ mod tests {
                 ty: ParamTy::Ptr(AddrSpace::Global, Ty::Bool),
             }],
             shared: vec![],
+            constants: vec![],
             dyn_shared_elem: None,
             body: vec![
                 Stmt::AtomicRmw {
@@ -631,10 +692,69 @@ mod tests {
             name: "p".into(),
             params: vec![],
             shared: vec![],
+            constants: vec![],
             dyn_shared_elem: None,
             body: vec![Stmt::Store { ptr: param(2), val: c_i32(0), ty: Ty::I32 }],
             num_regs: 0,
         };
         assert!(verify(&k).unwrap_err().contains(&VerifyError::ParamOutOfRange(2)));
+    }
+
+    /// `atomicMin(float*)` is undefined in CUDA — the verifier rejects it
+    /// before it can reach the runtime's float-atomic CAS loop.
+    #[test]
+    fn float_atomic_min_rejected() {
+        let mut b = KernelBuilder::new("fmin");
+        let p = b.ptr_param("p", Ty::F32);
+        b.atomic_rmw_void(AtomicOp::Min, p.clone(), c_f32(1.0), Ty::F32);
+        let errs = verify(&b.build()).unwrap_err();
+        assert!(errs.contains(&VerifyError::FloatAtomicUnsupported {
+            op: AtomicOp::Min,
+            ty: Ty::F32
+        }));
+        // atomicAdd on double stays legal
+        let mut b = KernelBuilder::new("fadd");
+        let p = b.ptr_param("p", Ty::F64);
+        b.atomic_rmw_void(AtomicOp::Add, p.clone(), c_f64(1.0), Ty::F64);
+        assert!(verify(&b.build()).is_ok());
+    }
+
+    /// Stores and atomics through `__constant__` memory are rejected;
+    /// reads are fine and thread-uniform.
+    #[test]
+    fn constant_memory_is_read_only() {
+        let mut b = KernelBuilder::new("cro");
+        let c = b.constant_array("lut", Ty::I32, vec![Const::I32(1), Const::I32(2)]);
+        let d = b.ptr_param("d", Ty::I32);
+        let t = b.assign(tid_x());
+        b.store_at(d.clone(), reg(t), at(c.clone(), reg(t), Ty::I32), Ty::I32);
+        assert!(verify(&b.build()).is_ok());
+
+        let mut b = KernelBuilder::new("cw");
+        let c = b.constant_array("lut", Ty::I32, vec![Const::I32(1)]);
+        b.store_at(c.clone(), c_i32(0), c_i32(9), Ty::I32);
+        assert!(verify(&b.build()).unwrap_err().contains(&VerifyError::WriteToConstant));
+
+        let mut b = KernelBuilder::new("ca");
+        let c = b.constant_array("lut", Ty::I32, vec![Const::I32(1)]);
+        b.atomic_rmw_void(AtomicOp::Add, c.clone(), c_i32(1), Ty::I32);
+        assert!(verify(&b.build()).unwrap_err().contains(&VerifyError::WriteToConstant));
+    }
+
+    #[test]
+    fn constant_index_out_of_range_caught() {
+        let k = Kernel {
+            name: "c".into(),
+            params: vec![],
+            shared: vec![],
+            constants: vec![],
+            dyn_shared_elem: None,
+            body: vec![Stmt::Assign {
+                dst: Reg(0),
+                expr: at(Expr::ConstBase(3), c_i32(0), Ty::I32),
+            }],
+            num_regs: 1,
+        };
+        assert!(verify(&k).unwrap_err().contains(&VerifyError::ConstOutOfRange(3)));
     }
 }

@@ -12,7 +12,7 @@
 //!            [--grid G] [..run flags]      run a parsed CUDA-C kernel
 //! cupbop compile <file.cu> [...]           parse .cu → CIR listing +
 //!                                          features + Table II verdicts
-//! cupbop suite --suite rodinia|heteromark|crystal [..run flags]
+//! cupbop suite --suite rodinia|heteromark|crystal|mlkernels [..run flags]
 //! cupbop serve --script FILE.serve          persistent multi-session
 //!                                          serving runtime
 //! cupbop report table1|table2|table6|fig9|fig10   paper-style reports
@@ -408,6 +408,7 @@ fn cmd_suite(args: &[String]) -> ExitCode {
             "rodinia" => b.suite == spec::Suite::Rodinia,
             "heteromark" => b.suite == spec::Suite::HeteroMark,
             "crystal" => b.suite == spec::Suite::Crystal,
+            "mlkernels" => b.suite == spec::Suite::MlKernels,
             _ => true,
         };
         if !in_suite || b.build.is_none() {

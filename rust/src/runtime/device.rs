@@ -264,7 +264,13 @@ impl DeviceMemory {
                     AtomicOp::Min => cur.min(val),
                     AtomicOp::Max => cur.max(val),
                     AtomicOp::Exch => val,
-                    _ => panic!("unsupported f32 atomic {op:?}"),
+                    // bitwise RMW on float is rejected at ir::verify /
+                    // sema; keep the cell unchanged so a guest program
+                    // can never abort the host
+                    _ => {
+                        debug_assert!(false, "unsupported f32 atomic {op:?}");
+                        cur
+                    }
                 };
                 Some(new.to_bits())
             })
@@ -284,7 +290,11 @@ impl DeviceMemory {
                     AtomicOp::Min => cur.min(val),
                     AtomicOp::Max => cur.max(val),
                     AtomicOp::Exch => val,
-                    _ => panic!("unsupported f64 atomic {op:?}"),
+                    // see atomic_rmw_f32: unreachable past verification
+                    _ => {
+                        debug_assert!(false, "unsupported f64 atomic {op:?}");
+                        cur
+                    }
                 };
                 Some(new.to_bits())
             })

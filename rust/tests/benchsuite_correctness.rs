@@ -463,4 +463,9 @@ diff_tests! {
     q43 => "q43",
     // CloverLeaf
     cloverleaf => "cloverleaf",
+    // ML kernels (frontend-acceptance suite)
+    sgemm => "sgemm",
+    softmax => "softmax",
+    scan => "scan",
+    reduction => "reduction",
 }

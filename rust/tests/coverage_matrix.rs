@@ -121,6 +121,37 @@ fn cupbop_coverage_dominates_rivals() {
     assert!(rodinia(Framework::CuPBoP) > rodinia(Framework::HipCpu));
 }
 
+/// ML-kernels suite coverage, from the live registry: CuPBoP runs all
+/// four (100%), HIP-CPU loses the warp-reduce reduction (75%), and the
+/// new suite *strictly widens* CuPBoP's full-registry lead over
+/// HIP-CPU rather than merely preserving it.
+#[test]
+fn mlkernels_improve_cupbop_coverage() {
+    let ml = |fw| {
+        verdicts(Suite::MlKernels, fw).into_iter().map(|(_, v)| v).collect::<Vec<_>>()
+    };
+    assert_eq!(ml(Framework::CuPBoP).len(), 4);
+    assert!((coverage(&ml(Framework::CuPBoP)) - 100.0).abs() < 0.1);
+    assert!((coverage(&ml(Framework::HipCpu)) - 75.0).abs() < 0.1);
+    assert!((coverage(&ml(Framework::Dpcpp)) - 100.0).abs() < 0.1);
+
+    // Correct-count margin over HIP-CPU: +4 vs +3 from this suite, so
+    // CuPBoP's absolute lead grows by exactly one benchmark.
+    let correct = |fw: Framework, with_ml: bool| {
+        spec::all_benchmarks()
+            .iter()
+            .filter(|b| with_ml || b.suite != Suite::MlKernels)
+            .filter(|b| {
+                let f: BTreeSet<_> = b.features.iter().copied().collect();
+                judge(fw, &f, b.incorrect_on) == Verdict::Correct
+            })
+            .count() as i64
+    };
+    let lead_without = correct(Framework::CuPBoP, false) - correct(Framework::HipCpu, false);
+    let lead_with = correct(Framework::CuPBoP, true) - correct(Framework::HipCpu, true);
+    assert_eq!(lead_with, lead_without + 1, "reduction's warp reduce widens the margin");
+}
+
 /// Table I content is queryable.
 #[test]
 fn table1_requirements() {

@@ -1,6 +1,6 @@
-//! Full-suite `.cu` conformance: every bundled Rodinia and Hetero-Mark
-//! benchmark compiles from *real CUDA source* and is differentially
-//! verified against its hand-built CIR spec.
+//! Full-suite `.cu` conformance: every bundled Rodinia, Hetero-Mark
+//! and ML-kernel benchmark compiles from *real CUDA source* and is
+//! differentially verified against its hand-built CIR spec.
 //!
 //! For each benchmark with a [`FrontendSource`] twin the sweep
 //! compiles the `.cu` through the frontend, asserts per-kernel
@@ -115,7 +115,9 @@ fn conform(name: &str) {
 #[test]
 fn every_implemented_benchmark_has_a_source_twin() {
     for b in spec::all_benchmarks() {
-        if matches!(b.suite, Suite::Rodinia | Suite::HeteroMark) && b.build.is_some() {
+        if matches!(b.suite, Suite::Rodinia | Suite::HeteroMark | Suite::MlKernels)
+            && b.build.is_some()
+        {
             let fs = b.frontend_source.unwrap_or_else(|| {
                 panic!("implemented benchmark `{}` has no .cu source twin", b.name)
             });
@@ -269,4 +271,78 @@ fn conform_kmeans() {
 #[test]
 fn conform_pr() {
     conform("pr");
+}
+
+// ---- ML kernels ---------------------------------------------------
+//
+// The real-world acceptance suite: struct params + function-like
+// macros (sgemm), `__constant__` memory (softmax), barrier fission
+// over a desugared doubling loop (scan), f64 atomics + warp reduce
+// (reduction) — all from unmodified `.cu` sources.
+
+#[test]
+fn conform_sgemm() {
+    conform("sgemm");
+}
+
+#[test]
+fn conform_softmax() {
+    conform("softmax");
+}
+
+#[test]
+fn conform_scan() {
+    conform("scan");
+}
+
+#[test]
+fn conform_reduction() {
+    conform("reduction");
+}
+
+/// The deep sweep the mlkernels suite exists for: parsed-source and
+/// hand-built programs stay bit-equal (arrays **and** ExecStats) at
+/// every opt level, under both CIR engines, with fusion forced both
+/// off and on.
+#[test]
+fn mlkernels_full_matrix_conformance() {
+    use cupbop::compiler::CompileCfg;
+    for name in ["sgemm", "softmax", "scan", "reduction"] {
+        let b = spec::by_name(name).unwrap();
+        let build = b.build.unwrap();
+        let parsed = parse_twin(&b);
+        for opt in OptLevel::ALL {
+            for fuse in [false, true] {
+                let mut cfg = CompileCfg::opt(opt);
+                cfg.fuse = Some(fuse);
+                let hand_built = spec::build_prepared_cfg(b.name, build(Scale::Tiny), cfg);
+                let mut swapped = build(Scale::Tiny);
+                for k in swapped.kernels.iter_mut() {
+                    *k = parsed[&k.name].clone();
+                }
+                for nat in swapped.natives.iter_mut() {
+                    *nat = None;
+                }
+                for v in swapped.vectorized.iter_mut() {
+                    *v = None;
+                }
+                let parsed_built = spec::build_prepared_cfg(b.name, swapped, cfg);
+                for exec in [ExecMode::Interpret, ExecMode::Bytecode] {
+                    let h = run_reference(&hand_built, exec);
+                    let p = run_reference(&parsed_built, exec);
+                    assert_eq!(
+                        h.arrays, p.arrays,
+                        "{name} [{opt:?} fuse={fuse} {exec:?}]: output arrays differ"
+                    );
+                    assert_eq!(
+                        h.stats, p.stats,
+                        "{name} [{opt:?} fuse={fuse} {exec:?}]: ExecStats differ"
+                    );
+                }
+                let p = run_reference(&parsed_built, ExecMode::Bytecode);
+                (parsed_built.check)(&p.arrays)
+                    .unwrap_or_else(|e| panic!("{name} [{opt:?} fuse={fuse}]: checker: {e}"));
+            }
+        }
+    }
 }

@@ -144,14 +144,10 @@ fn golden_recursive_device_fn() {
 }
 
 #[test]
-fn golden_function_like_macro() {
-    let d = err("#define SQ(x) ((x) * (x))\n__global__ void k(int* p) { p[0] = 1; }");
-    assert_eq!(
-        d.msg,
-        "function-like macro `SQ(…)` is not supported \
-         (only object-like `#define NAME tokens`)"
-    );
-    assert_eq!((d.line, d.col), (1, 9));
+fn golden_function_like_macro_arity() {
+    let d = err("#define ADD(a, b) ((a) + (b))\n__global__ void k(int* p) { p[0] = ADD(1); }");
+    assert_eq!(d.msg, "macro `ADD` expects 2 argument(s), got 1");
+    assert_eq!((d.line, d.col), (2, 36));
 }
 
 #[test]

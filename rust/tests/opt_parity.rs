@@ -228,6 +228,13 @@ fn random_kernels_opt_levels_agree() {
         UniformLoopTidBreak,
         Barrier,
         EarlyReturn { cutoff: i32 },
+        /// grid-stride sweep over the whole buffer — the ML-kernel loop
+        /// shape (`i += blockDim.x * gridDim.x`), exact coverage of [0, n)
+        GridStrideAdd { c: i32 },
+        /// read from the kernel's `__constant__` table, indexed by tid
+        ConstLutAdd,
+        /// round-trip through f64: p[id] = (int)((double)p[id] * c + 0.5)
+        DoubleRound { c: f64 },
     }
 
     fn build(ops: &[Op]) -> Kernel {
@@ -235,6 +242,11 @@ fn random_kernels_opt_levels_agree() {
         let p = b.ptr_param("p", Ty::I32);
         let q = b.ptr_param("q", Ty::I32);
         let n = b.scalar_param("n", Ty::I32);
+        let lut = b.constant_array(
+            "LUT",
+            Ty::I32,
+            vec![Const::I32(3), Const::I32(-1), Const::I32(7), Const::I32(2)],
+        );
         let id = b.assign(global_tid());
         let t = b.assign(tid_x());
         for op in ops {
@@ -290,6 +302,31 @@ fn random_kernels_opt_levels_agree() {
                 Op::EarlyReturn { cutoff } => {
                     b.if_(ge(reg(t), c_i32(cutoff)), |bb| bb.ret());
                 }
+                Op::GridStrideAdd { c } => {
+                    let p = p.clone();
+                    b.for_(
+                        add(mul(bid_x(), bdim_x()), tid_x()),
+                        n.clone(),
+                        mul(bdim_x(), gdim_x()),
+                        |bb, i| {
+                            let v = bb.assign(at(p.clone(), reg(i), Ty::I32));
+                            bb.store_at(p.clone(), reg(i), add(reg(v), c_i32(c)), Ty::I32);
+                        },
+                    );
+                }
+                Op::ConstLutAdd => {
+                    let w = b.assign(at(lut.clone(), rem(reg(t), c_i32(4)), Ty::I32));
+                    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+                    b.store_at(p.clone(), reg(id), add(reg(v), reg(w)), Ty::I32);
+                }
+                Op::DoubleRound { c } => {
+                    let v = b.assign(at(p.clone(), reg(id), Ty::I32));
+                    let dv = b.assign(add(
+                        mul(cast(Ty::F64, reg(v)), c_f64(c)),
+                        c_f64(0.5),
+                    ));
+                    b.store_at(p.clone(), reg(id), cast(Ty::I32, reg(dv)), Ty::I32);
+                }
             }
         }
         b.build()
@@ -300,7 +337,7 @@ fn random_kernels_opt_levels_agree() {
         let grid = rng.range_usize(1, 4) as u32;
         let nops = rng.range_usize(1, 6);
         let ops: Vec<Op> = (0..nops)
-            .map(|_| match rng.below(8) {
+            .map(|_| match rng.below(11) {
                 0 => Op::UniformLoopAdd { c: rng.range_i64(-3, 4) as i32 },
                 1 => Op::UniformLoadAdd,
                 2 => Op::UniformGuard {
@@ -314,7 +351,12 @@ fn random_kernels_opt_levels_agree() {
                 4 => Op::DivergentLoop { modk: rng.range_i64(2, 5) as i32 },
                 5 => Op::UniformLoopTidBreak,
                 6 => Op::Barrier,
-                _ => Op::EarlyReturn { cutoff: rng.range_i64(0, 33) as i32 },
+                7 => Op::EarlyReturn { cutoff: rng.range_i64(0, 33) as i32 },
+                8 => Op::GridStrideAdd { c: rng.range_i64(-4, 5) as i32 },
+                9 => Op::ConstLutAdd,
+                _ => Op::DoubleRound {
+                    c: (rng.range_i64(1, 5) as f64) / 2.0,
+                },
             })
             .collect();
         let k = build(&ops);

@@ -481,7 +481,15 @@ fn prop_frontend_roundtrip() {
         let mut b = KernelBuilder::new("fuzzed");
         let a = b.ptr_param("a", Ty::F32);
         let q = b.ptr_param("q", Ty::I32);
+        let d = b.ptr_param("d", Ty::F64);
         let n = b.scalar_param("n", Ty::I32);
+        // every fuzzed kernel carries a __constant__ table so the
+        // declaration/read syntax round-trips even when unused
+        let lut = b.constant_array(
+            "LUT",
+            Ty::F32,
+            vec![Const::F32(0.5), Const::F32(-1.25), Const::F32(2.0), Const::F32(0.125)],
+        );
         let gid = b.assign(global_tid());
         let nsteps = rng.range_usize(1, 8);
         // pre-draw the random step recipe so no RNG call happens inside
@@ -496,9 +504,12 @@ fn prop_frontend_roundtrip() {
             Branch(i32, f32),
             Loop(i32),
             Sel(f32),
+            DAdd(f64),
+            LutAdd,
+            GridLoop,
         }
         let steps: Vec<St> = (0..nsteps)
-            .map(|_| match rng.below(8) {
+            .map(|_| match rng.below(11) {
                 0 => St::FAdd((rng.below(100) as f32) / 10.0 + 0.5),
                 1 => St::FMul((rng.below(50) as f32) / 25.0 + 0.25),
                 2 => St::FSqrtAbs,
@@ -506,12 +517,16 @@ fn prop_frontend_roundtrip() {
                 4 => St::IRem(rng.range_i64(2, 9) as i32),
                 5 => St::Branch(rng.range_i64(-20, 20) as i32, (rng.below(40) as f32) / 8.0),
                 6 => St::Loop(rng.range_i64(1, 5) as i32),
-                _ => St::Sel((rng.below(60) as f32) / 6.0),
+                7 => St::Sel((rng.below(60) as f32) / 6.0),
+                8 => St::DAdd((rng.below(160) as f64) / 16.0 + 0.25),
+                9 => St::LutAdd,
+                _ => St::GridLoop,
             })
             .collect();
         b.if_(lt(reg(gid), n.clone()), |b| {
             let f = b.assign(at(a.clone(), reg(gid), Ty::F32));
             let x = b.assign(at(q.clone(), reg(gid), Ty::I32));
+            let g = b.assign(at(d.clone(), reg(gid), Ty::F64));
             for st in &steps {
                 match *st {
                     St::FAdd(c) => b.set(f, add(reg(f), c_f32(c))),
@@ -536,10 +551,23 @@ fn prop_frontend_roundtrip() {
                             reg(f),
                         ),
                     ),
+                    St::DAdd(c) => b.set(g, add(reg(g), c_f64(c))),
+                    St::LutAdd => {
+                        b.set(f, add(reg(f), at(lut.clone(), rem(reg(gid), c_i32(4)), Ty::F32)))
+                    }
+                    St::GridLoop => b.for_(
+                        add(mul(bid_x(), bdim_x()), tid_x()),
+                        n.clone(),
+                        mul(bdim_x(), gdim_x()),
+                        |bb, _i| {
+                            bb.set(g, mul(reg(g), c_f64(1.0625)));
+                        },
+                    ),
                 }
             }
             b.store_at(a.clone(), reg(gid), reg(f), Ty::F32);
             b.store_at(q.clone(), reg(gid), reg(x), Ty::I32);
+            b.store_at(d.clone(), reg(gid), reg(g), Ty::F64);
         });
         let k = b.build();
 

@@ -225,6 +225,47 @@ fn coalesced_storm_matches_one_shot_reference() {
     }
 }
 
+/// A submission whose kernel the compiler rejects (here: a store
+/// through `__constant__` memory, caught by `ir::verify`).
+fn hostile_program() -> spec::BenchProgram {
+    use cupbop::benchsuite::util::ProgBuilder;
+    use cupbop::ir::{self, Const, KernelBuilder, Ty};
+    let mut b = KernelBuilder::new("hostile");
+    let lut = b.constant_array("lut", Ty::I32, vec![Const::I32(1), Const::I32(2)]);
+    b.store_at(lut, ir::tid_x(), ir::c_i32(0), Ty::I32);
+    let mut pb = ProgBuilder::new();
+    let k = pb.kernel(b.build());
+    pb.launch(k, (1, 1), (32, 1), vec![]);
+    pb.finish(Box::new(|_| Ok(())))
+}
+
+/// Satellite: a rejected kernel yields a structured compile-error
+/// response — no panic, no poisoned state — and the same server and
+/// session keep serving green, bit-identical results afterwards.
+#[test]
+fn rejected_kernel_cannot_poison_the_server() {
+    let _wd = Watchdog::arm("rejected_kernel_cannot_poison_the_server", 600);
+    let srv = Server::new(ServeCfg {
+        pool_size: 2,
+        executors: 2,
+        keep_arrays: true,
+        ..ServeCfg::default()
+    });
+    let s = srv.session();
+    let bad =
+        srv.wait(srv.submit(s, Request::prepared("hostile", hostile_program(), CompileCfg::default())));
+    let err = bad.check.as_ref().expect_err("hostile kernel must be rejected");
+    assert!(err.starts_with("compile:"), "structured compile failure, got: {err}");
+    assert!(err.contains("__constant__"), "names the rejected construct, got: {err}");
+
+    let want = oracle_arrays("fir", CompileCfg::default());
+    let good = srv.wait(srv.submit(s, Request::bench("fir", Scale::Tiny, CompileCfg::default())));
+    good.check.as_ref().unwrap_or_else(|e| panic!("server poisoned by rejected kernel: {e}"));
+    assert_bit_identical(good.arrays.as_ref().unwrap(), &want, "post-rejection serve");
+    let st = srv.session_stats(s);
+    assert_eq!(st.completed, st.submitted, "both tickets drain");
+}
+
 /// Every per-request backend serves green through the same Server
 /// surface and cache, and matches the Reference oracle bit-for-bit.
 #[test]
